@@ -1,0 +1,174 @@
+//! E8 — the end-to-end driver: the paper's motivating workload, full stack.
+//!
+//!     cargo run --release --example clustering_pipeline [--xla] [--n N] [--d D]
+//!
+//! Pipeline (all layers composing):
+//!   1. synthesize "neural embeddings" (Gaussian mixture on a low-dim latent
+//!      manifold, rotated into D dims + noise) — the paper's target data;
+//!   2. distributed exact EMST via distance decomposition (Algorithm 1),
+//!      thread-per-rank workers, simulated network with byte accounting —
+//!      with `--xla`, each worker drives the AOT-compiled Pallas kernel
+//!      through PJRT (the full three-layer stack);
+//!   3. exactness verification against the independent SLINK O(n²) oracle;
+//!   4. MST → single-linkage dendrogram → flat clusters vs ground truth;
+//!   5. headline metrics: exactness, work overhead vs monolithic, comm
+//!      bytes (gather vs reduce), wallclock + speedup vs single worker.
+//!
+//! The run recorded in EXPERIMENTS.md §E8 used:
+//!     cargo run --release --example clustering_pipeline -- --xla
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{embedding_like, EmbeddingSpec};
+use demst::dense::{DenseMst, PrimDense};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::MetricKind;
+use demst::mst::total_weight;
+use demst::report::Table;
+use demst::slink::{mst_to_dendrogram, slink};
+use demst::util::prng::Pcg64;
+use demst::util::timer::Stopwatch;
+use std::time::Duration;
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let use_xla = std::env::args().any(|a| a == "--xla");
+    let n = arg_usize("--n", 4096);
+    let d = arg_usize("--d", 256);
+    let parts = arg_usize("--parts", 8);
+    let workers = arg_usize("--workers", 8);
+    let k_true = 24;
+
+    println!("=== E8 end-to-end clustering pipeline ===");
+    let spec = EmbeddingSpec { n, d, latent: 8, k: k_true, cluster_std: 0.35, noise: 0.01 };
+    let sw = Stopwatch::start();
+    let (ds, truth) = embedding_like(&spec, Pcg64::seeded(2024));
+    println!(
+        "[1] embeddings: n={} d={} latent={} clusters={} ({:.1}ms)",
+        ds.n, ds.d, spec.latent, k_true, sw.elapsed_ms()
+    );
+
+    let kernel_choice = if use_xla {
+        let dir = std::path::PathBuf::from("artifacts");
+        if !demst::runtime::Engine::artifacts_available(&dir) {
+            anyhow::bail!("--xla requires artifacts/ — run `make artifacts` first");
+        }
+        KernelChoice::BoruvkaXla
+    } else {
+        KernelChoice::BoruvkaRust
+    };
+
+    // [2] distributed decomposed EMST
+    let mut cfg = RunConfig {
+        parts,
+        workers,
+        kernel: kernel_choice.clone(),
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg)?;
+    println!(
+        "[2] distributed EMST ({}, |P|={}, {} jobs, {} workers): weight {:.4}, wall {:?}",
+        kernel_choice.name(),
+        parts,
+        out.metrics.jobs,
+        out.workers,
+        total_weight(&out.mst),
+        out.metrics.wall
+    );
+    println!("    {}", out.metrics.summary());
+
+    // Speedup: modeled LPT makespan from per-job times measured in a
+    // sequential (workers=1) pass — multi-worker job times on a box with
+    // fewer cores than workers are inflated by time-slicing; see
+    // RunMetrics::modeled_makespan.
+    cfg.workers = 1;
+    let seq = run_distributed(&ds, &cfg)?;
+    let total_compute = seq.metrics.total_compute();
+    let makespan_w = seq.metrics.modeled_makespan(workers);
+    let makespan_p = seq.metrics.modeled_makespan(seq.metrics.jobs as usize);
+    let speedup = total_compute.as_secs_f64() / makespan_w.as_secs_f64();
+
+    // Monolithic single-node d-MST work baseline (E2's denominator).
+    let mono = PrimDense::sq_euclid();
+    let (mono_tree, mono_wall) = demst::util::timer::timed(|| mono.mst(&ds));
+    let work_ratio = out.metrics.dist_evals as f64 / mono.dist_evals() as f64;
+
+    // Reduce-tree gather ablation.
+    cfg.workers = workers;
+    cfg.reduce_tree = true;
+    let reduced = run_distributed(&ds, &cfg)?;
+
+    // [3] exactness: against monolithic Prim AND slink
+    let w_mono = total_weight(&mono_tree);
+    let w_dist = total_weight(&out.mst);
+    anyhow::ensure!(
+        (w_mono - w_dist).abs() < 1e-4 * (1.0 + w_mono),
+        "exactness violated: mono={w_mono} dist={w_dist}"
+    );
+    let sw3 = Stopwatch::start();
+    let slink_dendro = slink(&ds, &PlainMetric(MetricKind::SqEuclid));
+    let slink_wall = sw3.elapsed();
+    println!("[3] exact: matches monolithic d-MST weight {:.4} (SLINK oracle built in {:?})", w_mono, slink_wall);
+
+    // [4] dendrogram + flat clusters
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let labels = dendro.cut_to_k(k_true);
+    let slink_labels = slink_dendro.cut_to_k(k_true);
+    let vs_slink = agreement(&labels, &slink_labels);
+    let vs_truth = agreement(&labels, &truth);
+    println!(
+        "[4] single-linkage k={}: agreement vs SLINK {:.2}%, vs ground truth {:.2}%",
+        k_true,
+        vs_slink * 100.0,
+        vs_truth * 100.0
+    );
+    anyhow::ensure!(vs_slink > 0.999, "distributed dendrogram must match SLINK");
+
+    // [5] headline table
+    let mut t = Table::new("E8 headline metrics", &["metric", "value"]);
+    let fmt_d = |d: Duration| format!("{:.3}s", d.as_secs_f64());
+    t.push_row(&["points x dims".to_string(), format!("{} x {}", ds.n, ds.d)]);
+    t.push_row(&["kernel".to_string(), kernel_choice.name().to_string()]);
+    t.push_row(&["pair jobs (p)".to_string(), out.metrics.jobs.to_string()]);
+    t.push_row(&["workers".to_string(), out.workers.to_string()]);
+    t.push_row(&["wall (measured, this host)".to_string(), fmt_d(out.metrics.wall)]);
+    t.push_row(&["total kernel compute".to_string(), fmt_d(total_compute)]);
+    t.push_row(&[format!("modeled makespan ({workers} ranks)"), fmt_d(makespan_w)]);
+    t.push_row(&[format!("modeled makespan (p={} ranks)", out.metrics.jobs), fmt_d(makespan_p)]);
+    t.push_row(&[format!("modeled speedup ({workers} ranks)"), format!("{speedup:.2}x")]);
+    t.push_row(&["wall (monolithic prim)".to_string(), fmt_d(mono_wall)]);
+    t.push_row(&["work ratio vs monolithic".to_string(), format!("{work_ratio:.3} (paper: 2(|P|-1)/|P| = {:.3})", 2.0 * (parts as f64 - 1.0) / parts as f64)]);
+    t.push_row(&["scatter bytes".to_string(), demst::util::human_bytes(out.metrics.scatter_bytes)]);
+    t.push_row(&["gather bytes (gather mode)".to_string(), demst::util::human_bytes(out.metrics.gather_bytes)]);
+    t.push_row(&["gather bytes (reduce mode)".to_string(), demst::util::human_bytes(reduced.metrics.gather_bytes)]);
+    t.push_row(&["union edges gathered".to_string(), out.metrics.union_edges.to_string()]);
+    t.push_row(&["parallel efficiency".to_string(), format!("{:.2}", out.metrics.busy_efficiency())]);
+    t.push_row(&["dendrogram vs SLINK".to_string(), format!("{:.3}%", vs_slink * 100.0)]);
+    t.print();
+    println!("pipeline OK");
+    Ok(())
+}
+
+/// Sampled Rand index between two labelings.
+fn agreement(a: &[u32], b: &[u32]) -> f64 {
+    let mut rng = Pcg64::seeded(99);
+    let n = a.len();
+    let samples = 50_000u64;
+    let mut agree = 0u64;
+    for _ in 0..samples {
+        let i = rng.next_bounded(n as u64) as usize;
+        let j = rng.next_bounded(n as u64) as usize;
+        if (a[i] == a[j]) == (b[i] == b[j]) {
+            agree += 1;
+        }
+    }
+    agree as f64 / samples as f64
+}

@@ -1,0 +1,74 @@
+//! Dendrogram explorer: the MST ↔ single-linkage duality on a dataset where
+//! single linkage shines (concentric shells — non-convex clusters k-means
+//! cannot separate).
+//!
+//!     cargo run --release --example dendrogram_explorer
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::concentric_shells;
+use demst::report::Table;
+use demst::slink::mst_to_dendrogram;
+use demst::util::prng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // Two concentric shells in 3-D. (Deliberately low-dimensional: single
+    // linkage separates the shells only while the within-shell
+    // nearest-neighbor distance stays below the shell gap — on a
+    // high-dimensional sphere a few hundred points are too sparse for that,
+    // which is itself a nice illustration of the curse of dimensionality.)
+    let (ds, truth) = concentric_shells(800, 3, 1.0, 4.0, 0.02, Pcg64::seeded(11));
+    println!("concentric shells: n={} d={} (radii 1 and 4)", ds.n, ds.d);
+
+    let cfg = RunConfig {
+        parts: 4,
+        kernel: KernelChoice::BoruvkaRust,
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg)?;
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+
+    // The top merge height is the shell gap; everything below is intra-shell.
+    let heights = dendro.heights();
+    let top = *heights.last().unwrap();
+    let p95 = heights[(heights.len() as f64 * 0.95) as usize];
+    println!("merge heights: top={top:.3} p95={p95:.3} (gap ratio {:.1}x)", top / p95);
+
+    // Cut profile: cluster count and largest-cluster share vs height.
+    let mut t = Table::new("cut profile", &["height", "clusters", "largest_share"]);
+    for frac in [0.25, 0.5, 0.75, 0.9, 0.99, 1.01] {
+        let h = top * frac as f32;
+        let labels = dendro.cut_at_height(h);
+        let k = labels.iter().copied().max().unwrap() as usize + 1;
+        let mut sizes = vec![0usize; k];
+        for &l in &labels {
+            sizes[l as usize] += 1;
+        }
+        let largest = *sizes.iter().max().unwrap();
+        t.push_row(&[
+            format!("{h:.3}"),
+            k.to_string(),
+            format!("{:.2}", largest as f64 / ds.n as f64),
+        ]);
+    }
+    t.print();
+
+    // k=2 must recover the two shells exactly (single linkage's specialty).
+    let labels = dendro.cut_to_k(2);
+    let mut agree = 0usize;
+    // labels may be permuted; check both orientations
+    let direct = labels.iter().zip(&truth).filter(|(a, b)| *a == *b).count();
+    let flipped = labels.iter().zip(&truth).filter(|(a, b)| **a == 1 - **b).count();
+    agree += direct.max(flipped);
+    println!("k=2 shell recovery: {}/{} points", agree, ds.n);
+    anyhow::ensure!(agree == ds.n, "single linkage must separate the shells");
+
+    // Round-trip: dendrogram -> MST -> dendrogram preserves the hierarchy.
+    let back = mst_to_dendrogram(ds.n, &dendro.to_mst());
+    anyhow::ensure!(back.heights() == dendro.heights(), "round-trip heights");
+    for k in [2usize, 5, 20] {
+        anyhow::ensure!(back.cut_to_k(k) == dendro.cut_to_k(k), "round-trip cut k={k}");
+    }
+    println!("dendrogram -> MST -> dendrogram round-trip OK");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Quickstart: exact distributed EMST + single-linkage clustering in ~40
+//! lines of library calls.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Generates clustered synthetic embeddings, runs the paper's decomposed
+//! EMST (Algorithm 1) distributed over worker threads, converts the tree to
+//! a single-linkage dendrogram, cuts flat clusters, and verifies everything
+//! against the independent SLINK oracle.
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{gaussian_blobs_labeled, BlobSpec};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::MetricKind;
+use demst::mst::total_weight;
+use demst::slink::{mst_to_dendrogram, slink_mst};
+use demst::util::prng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset: 8 Gaussian blobs in 32 dimensions.
+    let spec = BlobSpec { n: 1000, d: 32, k: 8, std: 0.4, spread: 10.0 };
+    let (ds, truth) = gaussian_blobs_labeled(&spec, Pcg64::seeded(42));
+    println!("dataset: {} points, {} dims, {} true clusters", ds.n, ds.d, spec.k);
+
+    // 2. Distributed exact EMST: |P| = 5 subsets -> 10 pair jobs on 4 workers.
+    let cfg = RunConfig {
+        parts: 5,
+        workers: 4,
+        kernel: KernelChoice::BoruvkaRust,
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg)?;
+    println!(
+        "emst: {} edges, weight {:.4}",
+        out.mst.len(),
+        total_weight(&out.mst)
+    );
+    println!("metrics: {}", out.metrics.summary());
+
+    // 3. Verify exactness against the independent SLINK oracle (Theorem 1).
+    let oracle = slink_mst(&ds, &PlainMetric(MetricKind::SqEuclid));
+    let (a, b) = (total_weight(&oracle), total_weight(&out.mst));
+    assert!((a - b).abs() < 1e-5 * (1.0 + a), "oracle={a} got={b}");
+    println!("verified: matches SLINK oracle weight {a:.4}");
+
+    // 4. MST -> single-linkage dendrogram -> flat clusters.
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let labels = dendro.cut_to_k(8);
+    let accuracy = cluster_agreement(&labels, &truth);
+    println!("single-linkage k=8 vs ground truth agreement: {:.1}%", accuracy * 100.0);
+    assert!(accuracy > 0.99, "well-separated blobs must be recovered");
+    Ok(())
+}
+
+/// Fraction of pairs on which two labelings agree (Rand index, sampled).
+fn cluster_agreement(a: &[u32], b: &[u32]) -> f64 {
+    let mut rng = Pcg64::seeded(7);
+    let n = a.len();
+    let mut agree = 0u64;
+    let samples = 20_000;
+    for _ in 0..samples {
+        let i = rng.next_bounded(n as u64) as usize;
+        let j = rng.next_bounded(n as u64) as usize;
+        if (a[i] == a[j]) == (b[i] == b[j]) {
+            agree += 1;
+        }
+    }
+    agree as f64 / samples as f64
+}

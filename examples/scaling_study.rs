@@ -1,0 +1,87 @@
+//! Scaling study (E4): wallclock and efficiency vs worker count, plus the
+//! partition-count trade-off (more parts = more parallelism but ≈2× work).
+//!
+//!     cargo run --release --example scaling_study [--n N] [--d D]
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{embedding_like, EmbeddingSpec};
+use demst::decomp::pair_count;
+use demst::report::Table;
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = arg_usize("--n", 2048);
+    let d = arg_usize("--d", 64);
+    let spec = EmbeddingSpec { n, d, latent: 8, k: 16, cluster_std: 0.3, noise: 0.02 };
+    let (ds, _) = embedding_like(&spec, demst::util::prng::Pcg64::seeded(7));
+    println!("scaling study on n={} d={}", ds.n, ds.d);
+
+    // --- strong scaling: fixed |P|=8 (28 jobs), modeled makespan ---
+    // One measured pass collects per-job kernel CPU times; LPT scheduling of
+    // those times models the makespan for any rank count. (This testbed may
+    // have fewer cores than ranks — see RunMetrics::modeled_makespan.)
+    let cfg = RunConfig {
+        parts: 8,
+        workers: 1,
+        kernel: KernelChoice::BoruvkaRust,
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg)?;
+    let total = out.metrics.total_compute().as_secs_f64();
+    let mut t = Table::new(
+        format!(
+            "E4 strong scaling (|P|=8, 28 pair jobs, modeled from measured per-job CPU; total compute {:.3}s)",
+            total
+        ),
+        &["workers", "makespan_s", "speedup", "efficiency"],
+    );
+    for workers in [1usize, 2, 4, 8, 16, 28] {
+        let mk = out.metrics.modeled_makespan(workers).as_secs_f64();
+        t.push_row(&[
+            workers.to_string(),
+            format!("{mk:.3}"),
+            format!("{:.2}x", total / mk),
+            format!("{:.2}", total / mk / workers as f64),
+        ]);
+    }
+    t.print();
+
+    // --- partition sweep: workers = cores, sweep |P| ---
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+    let mut t2 = Table::new(
+        format!("partition sweep ({cores} workers)"),
+        &["|P|", "jobs", "wall_s", "dist_evals", "work_ratio", "gather_bytes"],
+    );
+    let mono_evals = (ds.n * (ds.n - 1) / 2) as f64;
+    for parts in [2usize, 4, 8, 12, 16] {
+        let cfg = RunConfig {
+            parts,
+            workers: cores,
+            kernel: KernelChoice::BoruvkaRust,
+            ..Default::default()
+        };
+        let out = run_distributed(&ds, &cfg)?;
+        t2.push_row(&[
+            parts.to_string(),
+            pair_count(parts).to_string(),
+            format!("{:.3}", out.metrics.wall.as_secs_f64()),
+            demst::util::human_count(out.metrics.dist_evals),
+            format!("{:.2}x", out.metrics.dist_evals as f64 / mono_evals),
+            demst::util::human_bytes(out.metrics.gather_bytes),
+        ]);
+    }
+    t2.print();
+    println!("note: Borůvka evals are per-round n², so the work ratio differs from");
+    println!("the Prim-kernel formula 2(|P|-1)/|P| by the round count; see bench e2");
+    println!("for the exact-formula reproduction with the Prim kernel.");
+    Ok(())
+}

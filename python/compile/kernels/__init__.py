@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered AOT to HLO text).
+
+- ``pairwise``      — tiled (N, N) squared-Euclidean distance matrix
+- ``cheapest_edge`` — Borůvka step: per-vertex nearest other-component vertex
+- ``ref``           — pure-jnp oracles both kernels are tested against
+"""
+
+from . import cheapest_edge, pairwise, ref  # noqa: F401

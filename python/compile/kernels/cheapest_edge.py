@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: the Borůvka cheapest-edge step — the paper's d-MST
+compute hot-spot.
+
+For points (N, D) and component labels comps (N,) int32 (−1 = padding), find
+for every valid row the squared distance and index of the nearest vertex in a
+*different* component. One call performs the full O(N²D) masked
+nearest-other-component reduction; the Rust coordinator loops ≤ log₂N such
+calls with a union-find between them.
+
+Grid layout: (row_tiles, col_tiles). The col axis is a *reduction* axis —
+the output BlockSpec maps every (i, j) step to row block i, and the kernel
+accumulates a running (min, argmin) pair across j steps in the output refs
+(init at j == 0). Strictly-less comparisons keep the smallest column index on
+exact ties, matching the Rust providers' tie-break contract (which in turn
+matches the crate's strict (w, u, v) edge order — see
+`demst::dense::step`).
+
+VMEM per step (f32): row tile bm·D + col tile bn·D + (bm, bn) distance tile
++ O(bm) accumulators — e.g. D=768, 64×64 tiles: ~0.5 MiB, comfortably inside
+a 16 MiB VMEM with double buffering. The cross term is one MXU matmul.
+interpret=True for CPU-PJRT executability (see pairwise.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _cheapest_edge_kernel(x_ref, cx_ref, y_ref, cy_ref, dist_ref, idx_ref, *, bn):
+    j = pl.program_id(1)
+    x = x_ref[...]      # (bm, d)  row tile
+    cx = cx_ref[...]    # (bm,)
+    y = y_ref[...]      # (bn, d)  col tile
+    cy = cy_ref[...]    # (bn,)
+
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1)[None, :]
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    d2 = jnp.maximum(xx + yy - 2.0 * xy, 0.0)                 # (bm, bn)
+
+    valid = (cx[:, None] >= 0) & (cy[None, :] >= 0) & (cx[:, None] != cy[None, :])
+    d2 = jnp.where(valid, d2, jnp.inf)
+
+    local_idx = jnp.argmin(d2, axis=1)                        # first-min = smallest j
+    local_min = jnp.min(d2, axis=1)
+    global_idx = (j * bn + local_idx).astype(jnp.int32)
+    global_idx = jnp.where(jnp.isinf(local_min), jnp.int32(-1), global_idx)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_ref[...] = local_min
+        idx_ref[...] = global_idx
+
+    @pl.when(j > 0)
+    def _accum():
+        prev = dist_ref[...]
+        prev_idx = idx_ref[...]
+        better = local_min < prev  # strict: earlier col tile wins ties
+        dist_ref[...] = jnp.where(better, local_min, prev)
+        idx_ref[...] = jnp.where(better, global_idx, prev_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "col_block"))
+def cheapest_edge(points, comps, *, row_block=None, col_block=None):
+    """Masked nearest-other-component (dist, idx) per row.
+
+    points: (n, d) f32; comps: (n,) i32, −1 marks padding.
+    Returns (dist (n,) f32 with +inf for isolated/padded rows,
+             idx (n,) i32 with −1 for isolated/padded rows).
+    """
+    n, d = points.shape
+    assert comps.shape == (n,)
+    bm = row_block or min(n, shapes.ROW_BLOCK)
+    bn = col_block or min(n, shapes.COL_BLOCK)
+    assert n % bm == 0 and n % bn == 0, f"n={n} not a multiple of blocks ({bm},{bn})"
+    grid = (n // bm, n // bn)
+    kernel = functools.partial(_cheapest_edge_kernel, bn=bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(points, comps, points, comps)

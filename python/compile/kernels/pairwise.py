@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: tiled (N, N) squared-Euclidean distance matrix.
+
+TPU-shaped structure (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output matrix; each step keeps an (bm, d) row tile and (bn, d) column tile
+resident in VMEM and computes the cross term with one MXU matmul
+(`x @ y.T`), adding the row/col norms lane-wise on the VPU. interpret=True —
+the CPU PJRT client cannot execute Mosaic custom-calls; on a real TPU the
+same BlockSpecs lower to Mosaic unchanged.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import shapes
+
+
+def _pairwise_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]  # (bm, d) row tile
+    y = y_ref[...]  # (bn, d) col tile
+    xx = jnp.sum(x * x, axis=1, keepdims=True)            # (bm, 1)
+    yy = jnp.sum(y * y, axis=1)[None, :]                  # (1, bn)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # MXU
+    # clamp catastrophic-cancellation negatives to 0
+    o_ref[...] = jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pairwise(x, *, block=None):
+    """Full (n, n) squared-Euclidean distance matrix of row-major points."""
+    n, d = x.shape
+    bm = block or min(n, shapes.ROW_BLOCK)
+    assert n % bm == 0, f"n={n} must be a multiple of the block {bm}"
+    grid = (n // bm, n // bm)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: simple, unfused, obviously-right
+formulations that pytest compares the kernels against across a shape/dtype
+sweep (and that the Rust side's blocked routines mirror).
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_ref(x):
+    """(n, d) -> (n, n) squared Euclidean distances, matmul form, clamped."""
+    xx = jnp.sum(x * x, axis=1)
+    d2 = xx[:, None] + xx[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def pairwise_direct_ref(x):
+    """(n, d) -> (n, n) via explicit differences (no cancellation)."""
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def cheapest_edge_ref(points, comps):
+    """Reference Borůvka cheapest-edge step.
+
+    For each valid vertex i (comps[i] >= 0): the squared distance and index
+    of the nearest j with comps[j] >= 0 and comps[j] != comps[i]; ties break
+    to the smallest j (jnp.argmin convention). Invalid/isolated rows report
+    (+inf, -1).
+    """
+    d2 = pairwise_ref(points)
+    valid = (comps[None, :] >= 0) & (comps[:, None] >= 0) & (
+        comps[None, :] != comps[:, None]
+    )
+    masked = jnp.where(valid, d2, jnp.inf)
+    idx = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    dist = jnp.take_along_axis(masked, idx[:, None], axis=1)[:, 0]
+    idx = jnp.where(jnp.isinf(dist), jnp.int32(-1), idx)
+    return dist, idx

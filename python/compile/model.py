@@ -1,0 +1,29 @@
+"""L2: the jax compute graph the Rust coordinator drives.
+
+For this paper the "model" is the dense-MST compute: the Borůvka
+cheapest-edge step (the d-MST subkernel's O(N²D) hot-spot, calling the L1
+Pallas kernel) and the pairwise block used by baselines/benches. Each
+function here is a pure jax function lowered once per shape bucket by
+``aot.py``; nothing in this package runs at serve time.
+
+Outputs are tuples because the AOT path lowers with return_tuple=True and
+the Rust side unwraps with to_tupleN (see /opt/xla-example/README.md).
+"""
+
+from .kernels import cheapest_edge as ce
+from .kernels import pairwise as pw
+
+
+def boruvka_step(points, comps):
+    """One Borůvka round's cheapest-edge query.
+
+    points: (N, D) f32, comps: (N,) i32 (−1 padding).
+    Returns (dist (N,) f32, idx (N,) i32).
+    """
+    dist, idx = ce.cheapest_edge(points, comps)
+    return dist, idx
+
+
+def pairwise_matrix(points):
+    """Full (N, N) squared-Euclidean distance matrix; 1-tuple output."""
+    return (pw.pairwise(points),)

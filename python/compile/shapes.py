@@ -1,0 +1,40 @@
+"""Shape buckets shared between the AOT compiler and the Rust runtime.
+
+Executables are compiled for fixed (N, D) buckets; the Rust runtime pads a
+logical (n, d) problem up to the smallest fitting bucket (rows masked with
+comp = -1, feature dims zero-padded — both distance-preserving).
+
+Keep this list in sync with nothing: the Rust side discovers buckets from
+artifacts/manifest.txt, which aot.py generates from these tables.
+"""
+
+# Row-capacity buckets (powers of two: Borůvka pads rows, and power-of-two
+# tiles keep the Pallas grid even).
+CHEAPEST_EDGE_NS = [64, 128, 256, 512, 1024, 2048]
+# Feature-dim buckets: cover small synthetic dims through BERT-ish 768.
+CHEAPEST_EDGE_DS = [8, 32, 128, 768]
+
+# The pairwise kernel is used by benches/tests at smaller scale.
+PAIRWISE_NS = [64, 256, 1024]
+PAIRWISE_DS = [8, 32, 128, 768]
+
+# Pallas block sizes (rows per tile), clamped to min(n, BLOCK) per call —
+# every N bucket is a power of two ≥ 64, so the clamp always divides n.
+#
+# Perf note (EXPERIMENTS.md §Perf L1): 256×256 tiles raise the modeled TPU
+# arithmetic intensity of the cheapest-edge step from ~32 flop/byte (64×64)
+# to ~128 flop/byte (row tile resident per grid row; col tiles streamed:
+# intensity ≈ ROW_BLOCK/2), past the MXU roofline knee for bf16/f32, while
+# VMEM stays comfortable: at D=768, row tile + col tile (2×768 KiB) +
+# 256×256 distance tile (256 KiB) + accumulators ≈ 1.8 MiB, double-buffered
+# < 4 MiB of a 16 MiB VMEM. Also 16× fewer grid steps than 64×64.
+ROW_BLOCK = 256
+COL_BLOCK = 256
+
+
+def cheapest_edge_buckets():
+    return [(n, d) for n in CHEAPEST_EDGE_NS for d in CHEAPEST_EDGE_DS]
+
+
+def pairwise_buckets():
+    return [(n, d) for n in PAIRWISE_NS for d in PAIRWISE_DS]

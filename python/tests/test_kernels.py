@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compiled artifacts — the same
+jitted functions tested here are what aot.py lowers to HLO text for the Rust
+runtime. Hypothesis sweeps shapes, block sizes, component labelings, and
+degenerate inputs.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import cheapest_edge as ce
+from compile.kernels import pairwise as pw
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand_points(seed, n, d, scale=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((n, d), dtype=np.float32) - 0.5) * 2 * scale)
+
+
+# ---------------------------------------------------------------- pairwise
+
+
+@pytest.mark.parametrize("n,d", [(64, 8), (64, 32), (128, 16), (256, 8), (64, 768)])
+def test_pairwise_matches_ref(n, d):
+    x = rand_points(n * 31 + d, n, d)
+    got = pw.pairwise(x)
+    want = ref.pairwise_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_pairwise_matches_direct_form():
+    # matmul form vs explicit differences (loose tol: cancellation)
+    x = rand_points(7, 64, 16)
+    got = pw.pairwise(x)
+    want = ref.pairwise_direct_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_pairwise_diagonal_and_symmetry():
+    x = rand_points(3, 128, 32)
+    m = np.asarray(pw.pairwise(x))
+    assert np.all(np.abs(np.diag(m)) <= 1e-3)
+    np.testing.assert_allclose(m, m.T, rtol=0, atol=1e-4)
+    assert np.all(m >= 0.0), "clamped non-negative"
+
+
+@given(st.sampled_from([64, 128, 256]), st.sampled_from([1, 3, 8, 33]))
+def test_pairwise_shape_sweep(n, d):
+    x = rand_points(n + d, n, d)
+    got = pw.pairwise(x)
+    assert got.shape == (n, n)
+    np.testing.assert_allclose(got, ref.pairwise_ref(x), rtol=1e-5, atol=1e-4)
+
+
+def test_pairwise_block_invariance():
+    # different tilings must agree (same arithmetic per tile)
+    x = rand_points(11, 128, 8)
+    a = pw.pairwise(x, block=32)
+    b = pw.pairwise(x, block=64)
+    c = pw.pairwise(x, block=128)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(b, c, rtol=1e-6, atol=1e-5)
+
+
+def test_pairwise_rejects_indivisible_block():
+    x = rand_points(1, 100, 4)
+    with pytest.raises(AssertionError):
+        pw.pairwise(x, block=64)
+
+
+# ------------------------------------------------------------ cheapest edge
+
+
+def check_cheapest_edge(x, comps, **kw):
+    got_d, got_i = ce.cheapest_edge(x, comps, **kw)
+    want_d, want_i = ref.cheapest_edge_ref(x, comps)
+    got_d, got_i = np.asarray(got_d), np.asarray(got_i)
+    want_d, want_i = np.asarray(want_d), np.asarray(want_i)
+    # indices must match exactly (tie-break contract)...
+    np.testing.assert_array_equal(got_i, want_i)
+    # ...distances to float tolerance, inf patterns exactly
+    np.testing.assert_array_equal(np.isinf(got_d), np.isinf(want_d))
+    fin = ~np.isinf(want_d)
+    np.testing.assert_allclose(got_d[fin], want_d[fin], rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d", [(64, 8), (128, 32), (256, 8), (64, 768)])
+def test_cheapest_edge_matches_ref(n, d):
+    x = rand_points(n * 7 + d, n, d)
+    comps = jnp.asarray((np.arange(n) % 7).astype(np.int32))
+    check_cheapest_edge(x, comps)
+
+
+def test_cheapest_edge_with_padding_rows():
+    n, d = 128, 16
+    x = rand_points(5, n, d)
+    comps = (np.arange(n) % 4).astype(np.int32)
+    comps[10:30] = -1  # padding block
+    comps[n - 1] = -1
+    check_cheapest_edge(x, jnp.asarray(comps))
+    # padded rows report (inf, -1) and are never selected
+    got_d, got_i = ce.cheapest_edge(x, jnp.asarray(comps))
+    got_d, got_i = np.asarray(got_d), np.asarray(got_i)
+    assert np.all(np.isinf(got_d[10:30])) and np.all(got_i[10:30] == -1)
+    valid = got_i >= 0
+    assert np.all(~np.isin(got_i[valid], np.arange(10, 30)))
+
+
+def test_cheapest_edge_single_component_isolated():
+    n, d = 64, 4
+    x = rand_points(9, n, d)
+    comps = jnp.zeros((n,), jnp.int32)
+    got_d, got_i = ce.cheapest_edge(x, comps)
+    assert bool(jnp.all(jnp.isinf(got_d)))
+    assert bool(jnp.all(got_i == -1))
+
+
+def test_cheapest_edge_two_singletons_point_at_each_other():
+    n, d = 64, 2
+    x = np.zeros((n, d), np.float32)
+    x[0] = [0.0, 0.0]
+    x[1] = [3.0, 4.0]
+    comps = np.full((n,), -1, np.int32)
+    comps[0], comps[1] = 0, 1
+    got_d, got_i = ce.cheapest_edge(jnp.asarray(x), jnp.asarray(comps))
+    assert float(got_d[0]) == pytest.approx(25.0)
+    assert int(got_i[0]) == 1 and int(got_i[1]) == 0
+
+
+def test_cheapest_edge_tie_breaks_to_smallest_index():
+    # vertices 1 and 2 exactly equidistant from 0; cross-tile tie too
+    n, d = 128, 2
+    x = np.zeros((n, d), np.float32)
+    x[1] = [1.0, 0.0]
+    x[2] = [0.0, 1.0]
+    x[64] = [1.0, 0.0]  # exact duplicate of x[1] in the second col tile
+    comps = np.full((n,), -1, np.int32)
+    comps[0], comps[1], comps[2], comps[64] = 0, 1, 1, 1
+    _, got_i = ce.cheapest_edge(jnp.asarray(x), jnp.asarray(comps))
+    assert int(got_i[0]) == 1, "smallest index wins the tie, within and across tiles"
+
+
+@given(
+    st.sampled_from([64, 128]),
+    st.sampled_from([2, 5, 17]),
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_cheapest_edge_hypothesis_sweep(n, d, ncomp, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    comps = rng.integers(-1, ncomp, size=n).astype(np.int32)
+    check_cheapest_edge(x, jnp.asarray(comps))
+
+
+def test_cheapest_edge_block_invariance():
+    n, d = 128, 8
+    x = rand_points(21, n, d)
+    comps = jnp.asarray((np.arange(n) % 3).astype(np.int32))
+    a = ce.cheapest_edge(x, comps, row_block=32, col_block=32)
+    b = ce.cheapest_edge(x, comps, row_block=64, col_block=128)
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]), rtol=1e-6, atol=1e-5)

@@ -1,0 +1,113 @@
+//! E1 — Theorem 1 exactness: the decomposed MST equals the exact MST across
+//! dataset kinds, sizes, dimensions, partition counts, and strategies, and
+//! passes the independent cut/cycle-property verifiers.
+//!
+//! Regenerates the exactness table: one row per configuration with the
+//! weight difference (must be 0 within float tolerance) and verifier status.
+
+use demst::data::generators::{embedding_like, gaussian_blobs, uniform, BlobSpec, EmbeddingSpec};
+use demst::data::Dataset;
+use demst::decomp::{decomposed_mst, DecompConfig, PartitionStrategy};
+use demst::dense::{DenseMst, PrimDense};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::{Metric, MetricKind};
+use demst::graph::Edge;
+use demst::mst::{kruskal, normalize_tree, total_weight, verify_cycle_property};
+use demst::report::Table;
+use demst::util::prng::Pcg64;
+
+fn complete_edges(ds: &Dataset) -> Vec<Edge> {
+    let m = PlainMetric(MetricKind::SqEuclid);
+    let mut edges = Vec::with_capacity(ds.n * (ds.n - 1) / 2);
+    for i in 0..ds.n {
+        for j in (i + 1)..ds.n {
+            edges.push(Edge::new(i as u32, j as u32, m.dist(ds.row(i), ds.row(j))));
+        }
+    }
+    edges
+}
+
+fn dataset(kind: &str, n: usize, d: usize, seed: u64) -> Dataset {
+    match kind {
+        "uniform" => uniform(n, d, 1.0, Pcg64::seeded(seed)),
+        "blobs" => gaussian_blobs(
+            &BlobSpec { n, d, k: 8.min(n / 4).max(1), std: 0.3, spread: 8.0 },
+            Pcg64::seeded(seed),
+        ),
+        "embedding" => {
+            embedding_like(
+                &EmbeddingSpec {
+                    n,
+                    d,
+                    latent: 8.min(d),
+                    k: 8.min(n / 4).max(1),
+                    cluster_std: 0.3,
+                    noise: 0.02,
+                },
+                Pcg64::seeded(seed),
+            )
+            .0
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let mut table = Table::new(
+        "E1 exactness: decomposed vs exact MST (identical edge sets + verifiers)",
+        &["dataset", "n", "d", "|P|", "strategy", "weight", "Δweight", "tree==", "cycle-prop"],
+    );
+    let configs: Vec<(&str, usize, usize)> = if fast {
+        vec![("uniform", 96, 8), ("blobs", 128, 32), ("embedding", 128, 64)]
+    } else {
+        vec![
+            ("uniform", 64, 4),
+            ("uniform", 256, 16),
+            ("blobs", 256, 64),
+            ("blobs", 512, 128),
+            ("embedding", 256, 256),
+            ("embedding", 512, 768),
+        ]
+    };
+    let mut all_ok = true;
+    for (kind, n, d) in configs {
+        let ds = dataset(kind, n, d, 0xE1);
+        let exact = kruskal(ds.n, &complete_edges(&ds));
+        let exact_w = total_weight(&exact);
+        let parts_list: &[usize] = if fast { &[2, 4] } else { &[2, 4, 8, 12] };
+        for &parts in parts_list {
+            for strategy in PartitionStrategy::ALL {
+                let cfg = DecompConfig { parts, strategy, seed: 7, keep_pair_trees: false };
+                let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+                let w = total_weight(&out.mst);
+                let same = normalize_tree(&exact) == normalize_tree(&out.mst);
+                // the O(m·n) cycle verifier is belt-and-braces on top of the
+                // identical-edge-set check; cap it to small n for bench time
+                let cyc = ds.n > 256
+                    || verify_cycle_property(ds.n, &out.mst, &complete_edges(&ds)).is_ok();
+                all_ok &= same && cyc;
+                table.push_row(&[
+                    kind.to_string(),
+                    n.to_string(),
+                    d.to_string(),
+                    parts.to_string(),
+                    strategy.name().to_string(),
+                    format!("{w:.4}"),
+                    format!("{:.2e}", (w - exact_w).abs()),
+                    if same { "yes".into() } else { "NO".to_string() },
+                    if ds.n > 256 {
+                        "(skipped)".to_string()
+                    } else if cyc {
+                        "ok".into()
+                    } else {
+                        "FAIL".to_string()
+                    },
+                ]);
+            }
+        }
+    }
+    table.print();
+    assert!(all_ok, "E1 exactness violated");
+    println!("E1: all configurations exact (paper Theorem 1 reproduced)");
+}

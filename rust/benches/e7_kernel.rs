@@ -1,0 +1,87 @@
+//! E7 — the d-MST kernel hot-spot: the cheapest-edge step across providers
+//! (naive Rust, blocked Rust, AOT Pallas/XLA via PJRT), shape sweep.
+//!
+//! This regenerates the kernel-level table that backs the paper's "exploit
+//! existing high performance kernels" claim: the XLA executable is the
+//! stand-in for a vendor kernel, driven unmodified from the coordinator.
+//! Reports effective GFLOP/s (2·N²·D flops per step call) and the XLA
+//! speedup over the blocked Rust provider.
+
+use demst::bench_util::Bench;
+use demst::dense::step::{CheapestEdgeStep, NaiveStep, RustStep};
+use demst::report::Table;
+use demst::runtime::{Engine, XlaStep};
+use demst::util::prng::Pcg64;
+use std::path::PathBuf;
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    let have_xla = Engine::artifacts_available(&artifacts);
+    if !have_xla {
+        eprintln!("NOTE: artifacts/ missing — XLA rows skipped; run `make artifacts`");
+    }
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+
+    let shapes: &[(usize, usize)] = if fast {
+        &[(256, 32), (512, 128)]
+    } else {
+        &[(256, 32), (512, 128), (1024, 128), (1024, 768), (2048, 256)]
+    };
+
+    let mut t = Table::new(
+        "E7 cheapest-edge step: provider comparison (median of samples)",
+        &["N", "D", "provider", "ms", "GFLOP/s", "vs rust-blocked"],
+    );
+    let mut bench = Bench::from_env();
+    for &(n, d) in shapes {
+        let mut rng = Pcg64::seeded(0xE7 ^ (n * d) as u64);
+        let points: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let comps: Vec<i32> = (0..n).map(|i| (i % 17) as i32).collect();
+        let flops = 2.0 * (n as f64) * (n as f64) * (d as f64);
+
+        let mut rust_ms = f64::NAN;
+        // naive only at small shapes (it's O(n²d) with poor constants)
+        if n <= 512 {
+            let m = bench.run(format!("naive {n}x{d}"), || {
+                NaiveStep.step(&points, n, d, &comps)
+            });
+            let ms = m.median_secs() * 1e3;
+            t.push_row(&row(n, d, "naive", ms, flops, None));
+        }
+        {
+            let step = RustStep::default();
+            let m = bench.run(format!("rust-blocked {n}x{d}"), || {
+                step.step(&points, n, d, &comps)
+            });
+            rust_ms = m.median_secs() * 1e3;
+            t.push_row(&row(n, d, "rust-blocked", rust_ms, flops, None));
+        }
+        if have_xla {
+            let engine = Engine::load(&artifacts).unwrap();
+            let step = XlaStep::new(engine);
+            // warm the executable cache outside the timed region
+            let _ = step.step(&points, n, d, &comps);
+            let m = bench.run(format!("pallas-xla {n}x{d}"), || {
+                step.step(&points, n, d, &comps)
+            });
+            let ms = m.median_secs() * 1e3;
+            t.push_row(&row(n, d, "pallas-xla", ms, flops, Some(rust_ms / ms)));
+        }
+    }
+    t.print();
+    println!(
+        "E7: the XLA executable is the vendor-kernel stand-in; on real TPU the same\n\
+         HLO lowers to Mosaic (MXU matmul) — see DESIGN.md §Perf for the roofline estimate."
+    );
+}
+
+fn row(n: usize, d: usize, provider: &str, ms: f64, flops: f64, speedup: Option<f64>) -> Vec<String> {
+    vec![
+        n.to_string(),
+        d.to_string(),
+        provider.to_string(),
+        format!("{ms:.2}"),
+        format!("{:.2}", flops / (ms / 1e3) / 1e9),
+        speedup.map_or("-".to_string(), |s| format!("{s:.2}x")),
+    ]
+}

@@ -1,0 +1,78 @@
+//! E8 — end-to-end: embeddings → distributed exact EMST → single-linkage
+//! dendrogram, with the headline metrics (exactness, work ratio, comm bytes,
+//! modeled speedup). Bench-sized twin of examples/clustering_pipeline.rs
+//! (which is the full-size driver recorded in EXPERIMENTS.md).
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{embedding_like, EmbeddingSpec};
+use demst::dense::{DenseMst, PrimDense};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::MetricKind;
+use demst::mst::total_weight;
+use demst::report::Table;
+use demst::slink::{mst_to_dendrogram, slink};
+use demst::util::prng::Pcg64;
+
+fn main() {
+    let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let (n, d) = if fast { (512, 64) } else { (2048, 256) };
+    let parts = 8;
+    let spec = EmbeddingSpec { n, d, latent: 8, k: 16, cluster_std: 0.35, noise: 0.01 };
+    let (ds, _) = embedding_like(&spec, Pcg64::seeded(0xE8));
+
+    let use_xla = demst::runtime::Engine::artifacts_available(std::path::Path::new("artifacts"));
+    let kernel = if use_xla { KernelChoice::BoruvkaXla } else { KernelChoice::BoruvkaRust };
+    // workers = 1 so per-job times are oversubscription-free for the
+    // makespan model (this testbed may expose a single core).
+    let mut cfg = RunConfig { parts, workers: 1, kernel: kernel.clone(), ..Default::default() };
+    let out = run_distributed(&ds, &cfg).unwrap();
+
+    // exactness
+    let mono = PrimDense::sq_euclid();
+    let exact = mono.mst(&ds);
+    let (we, wg) = (total_weight(&exact), total_weight(&out.mst));
+    assert!((we - wg).abs() < 1e-4 * (1.0 + we), "exactness: {we} vs {wg}");
+
+    // dendrogram equivalence
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let oracle = slink(&ds, &PlainMetric(MetricKind::SqEuclid));
+    let dh = dendro
+        .heights()
+        .iter()
+        .zip(oracle.heights())
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    assert!(dh < 1e-3, "dendrogram heights match SLINK (max diff {dh})");
+
+    // reduce-mode comm ablation
+    cfg.reduce_tree = true;
+    let reduced = run_distributed(&ds, &cfg).unwrap();
+
+    let mut t = Table::new(
+        format!("E8 end-to-end (n={n}, d={d}, |P|={parts}, kernel={})", kernel.name()),
+        &["metric", "value"],
+    );
+    t.push_row(&["exact (weight match)".to_string(), "yes".to_string()]);
+    t.push_row(&["dendrogram max height diff".to_string(), format!("{dh:.2e}")]);
+    t.push_row(&["pair jobs".to_string(), out.metrics.jobs.to_string()]);
+    t.push_row(&["dist evals".to_string(), demst::util::human_count(out.metrics.dist_evals)]);
+    t.push_row(&[
+        "work ratio vs monolithic prim".to_string(),
+        format!("{:.2}x", out.metrics.dist_evals as f64 / mono.dist_evals() as f64),
+    ]);
+    t.push_row(&["scatter".to_string(), demst::util::human_bytes(out.metrics.scatter_bytes)]);
+    t.push_row(&["gather".to_string(), demst::util::human_bytes(out.metrics.gather_bytes)]);
+    t.push_row(&["gather (reduce mode)".to_string(), demst::util::human_bytes(reduced.metrics.gather_bytes)]);
+    t.push_row(&[
+        "modeled speedup (p ranks)".to_string(),
+        format!(
+            "{:.2}x",
+            out.metrics.total_compute().as_secs_f64()
+                / out.metrics.modeled_makespan(out.metrics.jobs as usize).as_secs_f64()
+        ),
+    ]);
+    t.push_row(&["wall (this host)".to_string(), format!("{:?}", out.metrics.wall)]);
+    t.print();
+    println!("E8: full pipeline exact end-to-end");
+}

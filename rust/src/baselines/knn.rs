@@ -1,0 +1,146 @@
+//! kNN-graph MST baseline (approximate EMST).
+//!
+//! Builds the exact k-nearest-neighbor graph by brute force (`O(n²d)` once),
+//! then runs a sparse MST on it. If the kNN graph is connected and contains
+//! all EMST edges, the result is exact; otherwise it is a forest and/or
+//! heavier than the true EMST. Experiment E6 sweeps `k` and dimension to map
+//! where that happens.
+
+use crate::data::Dataset;
+use crate::geometry::blocked::{pairwise_block, self_norms};
+use crate::graph::Edge;
+use crate::mst::kruskal;
+
+/// Result of the kNN-MST baseline with accuracy diagnostics.
+#[derive(Clone, Debug)]
+pub struct KnnResult {
+    /// MSF of the kNN graph
+    pub forest: Vec<Edge>,
+    /// connected components of the kNN graph (1 = possibly exact)
+    pub components: usize,
+    /// distance evaluations used (n*n for brute-force kNN)
+    pub dist_evals: u64,
+    /// k used
+    pub k: usize,
+}
+
+/// Exact (brute-force) kNN edge list: for each point its k nearest others,
+/// deduplicated as undirected edges. Squared Euclidean weights.
+pub fn knn_graph(ds: &Dataset, k: usize) -> Vec<Edge> {
+    assert!(k >= 1 && k < ds.n, "k={k} out of range for n={}", ds.n);
+    let n = ds.n;
+    let d = ds.d;
+    let norms = self_norms(ds.as_slice(), n, d);
+    let block = 128usize;
+    let mut edges: Vec<Edge> = Vec::with_capacity(n * k);
+    let mut tile = vec![0.0f32; block * n];
+    // per row: partial-select the k smallest (excluding self)
+    let mut cand: Vec<(f32, u32)> = Vec::with_capacity(n);
+    for i0 in (0..n).step_by(block) {
+        let im = (i0 + block).min(n) - i0;
+        pairwise_block(
+            &ds.as_slice()[i0 * d..(i0 + im) * d],
+            &norms[i0..i0 + im],
+            im,
+            ds.as_slice(),
+            &norms,
+            n,
+            d,
+            &mut tile[..im * n],
+        );
+        for ii in 0..im {
+            let i = i0 + ii;
+            cand.clear();
+            for (j, &w) in tile[ii * n..(ii + 1) * n].iter().enumerate() {
+                if j != i {
+                    cand.push((w, j as u32));
+                }
+            }
+            // partial selection of k smallest by (w, j)
+            cand.select_nth_unstable_by(k - 1, |a, b| {
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
+            });
+            for &(w, j) in &cand[..k] {
+                edges.push(Edge::new(i as u32, j, w));
+            }
+        }
+    }
+    crate::graph::edge::dedup_edges(&edges)
+}
+
+/// kNN-graph MST baseline.
+pub fn knn_boruvka(ds: &Dataset, k: usize) -> KnnResult {
+    let graph = knn_graph(ds, k);
+    let forest = kruskal(ds.n, &graph);
+    let components = ds.n - forest.len();
+    KnnResult { forest, components, dist_evals: (ds.n * ds.n) as u64, k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_blobs, uniform, BlobSpec};
+    use crate::dense::{DenseMst, PrimDense};
+    use crate::mst::{normalize_tree, total_weight};
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn knn_graph_degrees() {
+        let ds = uniform(40, 3, 1.0, Pcg64::seeded(500));
+        let k = 5;
+        let g = knn_graph(&ds, k);
+        // undirected dedup: between nk/2 and nk edges
+        assert!(g.len() >= ds.n * k / 2 && g.len() <= ds.n * k);
+        // every vertex has degree >= k (its own k neighbors at least)
+        let mut deg = vec![0usize; ds.n];
+        for e in &g {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        assert!(deg.iter().all(|&x| x >= k));
+    }
+
+    #[test]
+    fn large_k_recovers_exact_mst() {
+        // Integer coordinates: the kNN path computes matmul-form distances;
+        // integer coords make them bit-exact vs PrimDense's direct form.
+        let mut rng = Pcg64::seeded(501);
+        let data: Vec<f32> = (0..30 * 4).map(|_| rng.next_bounded(32) as f32 - 16.0).collect();
+        let ds = crate::data::Dataset::new(30, 4, data);
+        let exact = PrimDense::sq_euclid().mst(&ds);
+        let r = knn_boruvka(&ds, 29); // complete graph
+        assert_eq!(r.components, 1);
+        assert_eq!(normalize_tree(&exact), normalize_tree(&r.forest));
+    }
+
+    #[test]
+    fn small_k_on_separated_blobs_disconnects() {
+        // Tight, far-apart blobs: with k smaller than blob size, no
+        // cross-blob edge exists in the kNN graph => forest.
+        let spec = BlobSpec { n: 60, d: 8, k: 3, std: 0.05, spread: 50.0 };
+        let ds = gaussian_blobs(&spec, Pcg64::seeded(502));
+        let r = knn_boruvka(&ds, 3);
+        assert!(r.components > 1, "expected disconnection, got {} components", r.components);
+        assert!(r.forest.len() < ds.n - 1);
+    }
+
+    #[test]
+    fn knn_weight_never_below_exact() {
+        // On its connected subgraph the kNN-MST weight >= exact MST weight
+        // restricted appropriately; for connected cases compare directly.
+        let ds = uniform(50, 6, 1.0, Pcg64::seeded(503));
+        let exact_w = total_weight(&PrimDense::sq_euclid().mst(&ds));
+        let r = knn_boruvka(&ds, 12);
+        if r.components == 1 {
+            let w = total_weight(&r.forest);
+            assert!(w >= exact_w - 1e-5, "knn={w} exact={exact_w}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn k_bounds_checked() {
+        let ds = uniform(10, 2, 1.0, Pcg64::seeded(504));
+        knn_graph(&ds, 10);
+    }
+}

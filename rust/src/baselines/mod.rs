@@ -1,0 +1,40 @@
+//! Baselines the paper's evaluation positions against:
+//!
+//! - [`single_node`] — the undecomposed monolithic d-MST: the work/bandwidth
+//!   reference point of the paper's cost analysis.
+//! - [`knn_boruvka`] — a kNN-graph + sparse-MST method in the spirit of
+//!   Arefin et al.'s kNN-Borůvka (the GPU comparator the paper cites):
+//!   asymptotically less distance work but **approximate** — it can return a
+//!   disconnected forest or a heavier tree when `k` is too small for the
+//!   data's structure, which is exactly the failure mode that motivates the
+//!   paper's exact method for high-dimensional embeddings (E6).
+
+pub mod knn;
+
+pub use knn::{knn_boruvka, knn_graph, KnnResult};
+
+use crate::data::Dataset;
+use crate::dense::DenseMst;
+use crate::graph::Edge;
+
+/// Monolithic single-node d-MST over the whole dataset.
+pub fn single_node(ds: &Dataset, kernel: &dyn DenseMst) -> Vec<Edge> {
+    kernel.mst(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::uniform;
+    use crate::dense::PrimDense;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn single_node_is_kernel_passthrough() {
+        let ds = uniform(30, 4, 1.0, Pcg64::seeded(1));
+        let k = PrimDense::sq_euclid();
+        let a = single_node(&ds, &k);
+        let b = k.mst(&ds);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,144 @@
+//! Micro/macro benchmark harness for the `harness = false` bench targets
+//! (criterion is not in the offline vendor set).
+//!
+//! Methodology: warmup runs, then `samples` timed runs; report median with
+//! p10/p90 spread. Deterministic workloads + median keep noise manageable in
+//! shared-CPU environments.
+
+use crate::util::timer::fmt_duration;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        percentile(&self.samples, 0.5)
+    }
+
+    pub fn p10(&self) -> Duration {
+        percentile(&self.samples, 0.1)
+    }
+
+    pub fn p90(&self) -> Duration {
+        percentile(&self.samples, 0.9)
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median().as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} median {:>10}  p10 {:>10}  p90 {:>10}  ({} samples)",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.p10()),
+            fmt_duration(self.p90()),
+            self.samples.len()
+        )
+    }
+}
+
+fn percentile(samples: &[Duration], q: f64) -> Duration {
+    assert!(!samples.is_empty());
+    let mut s = samples.to_vec();
+    s.sort();
+    let idx = ((s.len() - 1) as f64 * q).round() as usize;
+    s[idx]
+}
+
+/// Benchmark runner with warmup.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 1, samples: 5, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        assert!(samples >= 1);
+        Self { warmup, samples, results: Vec::new() }
+    }
+
+    /// Quick-mode constructor honoring `DEMST_BENCH_FAST=1` (used by CI and
+    /// `make bench-fast` to keep runtimes short).
+    pub fn from_env() -> Self {
+        if std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1") {
+            Self::new(0, 2)
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which must return something observable to prevent DCE; the
+    /// value is black-boxed.
+    pub fn run<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &Measurement {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            black_box(f());
+            samples.push(t.elapsed());
+        }
+        let m = Measurement { name, samples };
+        eprintln!("{}", m.summary());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper; keeps call sites tidy).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_records() {
+        let mut b = Bench::new(0, 3);
+        let m = b.run("noop-ish", || (0..1000).sum::<u64>());
+        assert_eq!(m.samples.len(), 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: (1..=9).map(|i| Duration::from_millis(i * 10)).collect(),
+        };
+        assert!(m.p10() <= m.median());
+        assert!(m.median() <= m.p90());
+        assert_eq!(m.median(), Duration::from_millis(50));
+    }
+
+    #[test]
+    fn fast_env_small_samples() {
+        std::env::set_var("DEMST_BENCH_FAST", "1");
+        let b = Bench::from_env();
+        assert_eq!(b.samples, 2);
+        std::env::remove_var("DEMST_BENCH_FAST");
+    }
+}

@@ -1,0 +1,154 @@
+//! A small hand-rolled CLI argument parser (no clap in the offline vendor
+//! set). Supports `--flag`, `--key value`, `--key=value`, positional args,
+//! and generates usage text.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse(name)?.unwrap_or(default))
+    }
+}
+
+/// Parse `argv` (without the program/subcommand) against specs.
+pub fn parse_args(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(body) = arg.strip_prefix("--") {
+            let (name, inline_value) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow!("unknown option --{name}\n{}", usage(specs)))?;
+            if spec.takes_value {
+                let value = match inline_value {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| anyhow!("--{name} requires a value"))?
+                        .clone(),
+                };
+                out.opts.insert(name.to_string(), value);
+            } else {
+                if inline_value.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                out.flags.push(name.to_string());
+            }
+        } else {
+            out.positional.push(arg.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Render usage text for a spec list.
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for spec in specs {
+        let arg = if spec.takes_value {
+            format!("--{} <value>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        s.push_str(&format!("  {:<28} {}\n", arg, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", takes_value: true, help: "points" },
+            OptSpec { name: "verbose", takes_value: false, help: "chatty" },
+            OptSpec { name: "kind", takes_value: true, help: "dataset kind" },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_flag_positional() {
+        let a = parse_args(&sv(&["--n", "100", "--verbose", "pos1", "--kind=blobs"]), &specs())
+            .unwrap();
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("kind"), Some("blobs"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 100);
+        assert_eq!(a.get_or("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let e = parse_args(&sv(&["--bogus"]), &specs()).unwrap_err();
+        assert!(e.to_string().contains("unknown option"));
+        assert!(e.to_string().contains("--n <value>"), "usage included");
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse_args(&sv(&["--n"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse_args(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_parse_reported() {
+        let a = parse_args(&sv(&["--n", "abc"]), &specs()).unwrap();
+        assert!(a.get_or("n", 0usize).is_err());
+    }
+}

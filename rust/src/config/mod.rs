@@ -1,0 +1,8 @@
+//! Configuration: a hand-rolled TOML-subset parser (no serde offline) plus
+//! the typed run configuration the CLI and launcher consume.
+
+pub mod toml_lite;
+pub mod run_config;
+
+pub use run_config::{DataConfig, KernelChoice, NetConfig, RunConfig};
+pub use toml_lite::{parse_toml, TomlValue};

@@ -1,0 +1,368 @@
+//! Typed run configuration assembled from a TOML-lite document + CLI
+//! overrides. This is the "real config system" a launcher consumes.
+
+use super::toml_lite::{parse_toml, TomlDoc, TomlValue};
+use crate::decomp::PartitionStrategy;
+use crate::geometry::MetricKind;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which d-MST kernel workers run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// pure-Rust dense Prim
+    PrimDense,
+    /// dense Borůvka with the pure-Rust blocked step
+    BoruvkaRust,
+    /// dense Borůvka with the AOT-compiled Pallas/XLA step
+    BoruvkaXla,
+}
+
+impl KernelChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelChoice::PrimDense => "prim-dense",
+            KernelChoice::BoruvkaRust => "boruvka-rust",
+            KernelChoice::BoruvkaXla => "boruvka-xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "prim-dense" | "prim" => Some(Self::PrimDense),
+            "boruvka-rust" | "rust" => Some(Self::BoruvkaRust),
+            "boruvka-xla" | "xla" => Some(Self::BoruvkaXla),
+            _ => None,
+        }
+    }
+}
+
+/// Simulated network model parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    /// charge latency/bandwidth sleep time (off = count bytes only)
+    pub simulate_delays: bool,
+    /// one-way message latency, microseconds
+    pub latency_us: u64,
+    /// link bandwidth, bytes/second
+    pub bandwidth: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        // 25 GbE-ish defaults when delay simulation is on
+        Self { simulate_delays: false, latency_us: 20, bandwidth: 3.0e9 }
+    }
+}
+
+/// Dataset source configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataConfig {
+    /// "blobs" | "uniform" | "embedding" | "shells" | "npy"
+    pub kind: String,
+    pub n: usize,
+    pub d: usize,
+    /// generator-specific knobs
+    pub clusters: usize,
+    pub std: f32,
+    pub spread: f32,
+    pub latent: usize,
+    pub noise: f32,
+    /// for kind = "npy"
+    pub path: Option<PathBuf>,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        Self {
+            kind: "embedding".into(),
+            n: 1024,
+            d: 128,
+            clusters: 16,
+            std: 0.3,
+            spread: 8.0,
+            latent: 8,
+            noise: 0.02,
+            path: None,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub data: DataConfig,
+    /// |P| — partition count
+    pub parts: usize,
+    pub strategy: PartitionStrategy,
+    pub metric: MetricKind,
+    pub kernel: KernelChoice,
+    /// worker threads (simulated ranks); 0 = one per pair job, capped at cores
+    pub workers: usize,
+    pub seed: u64,
+    /// gather (paper default) vs tree-reduction variant
+    pub reduce_tree: bool,
+    pub net: NetConfig,
+    /// artifacts dir for the XLA kernel
+    pub artifacts_dir: PathBuf,
+    /// verify the result against an independent oracle after the run
+    pub verify: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            data: DataConfig::default(),
+            parts: 4,
+            strategy: PartitionStrategy::RandomShuffle,
+            metric: MetricKind::SqEuclid,
+            kernel: KernelChoice::BoruvkaRust,
+            workers: 0,
+            seed: 42,
+            reduce_tree: false,
+            net: NetConfig::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            verify: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-lite file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML-lite text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let mut cfg = Self::default();
+        apply_doc(&mut cfg, &doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check invariants; call after all overrides are applied.
+    pub fn validate(&self) -> Result<()> {
+        if self.parts == 0 {
+            bail!("parts must be >= 1");
+        }
+        if self.data.n == 0 || self.data.d == 0 {
+            bail!("data.n and data.d must be positive");
+        }
+        if self.parts > self.data.n {
+            bail!("parts ({}) cannot exceed n ({})", self.parts, self.data.n);
+        }
+        if self.data.kind == "npy" && self.data.path.is_none() {
+            bail!("data.kind = \"npy\" requires data.path");
+        }
+        if self.kernel == KernelChoice::BoruvkaXla
+            && !matches!(self.metric, MetricKind::SqEuclid | MetricKind::Euclid)
+        {
+            bail!("the XLA kernel computes (squared) Euclidean distances only");
+        }
+        if self.net.bandwidth <= 0.0 {
+            bail!("net.bandwidth must be positive");
+        }
+        Ok(())
+    }
+}
+
+fn apply_doc(cfg: &mut RunConfig, doc: &TomlDoc) -> Result<()> {
+    for (section, kv) in doc {
+        for (key, value) in kv {
+            apply_kv(cfg, section, key, value)
+                .with_context(|| format!("config key [{section}] {key}"))?;
+        }
+    }
+    Ok(())
+}
+
+fn get_usize(v: &TomlValue) -> Result<usize> {
+    let i = v.as_int().ok_or_else(|| anyhow!("expected integer"))?;
+    usize::try_from(i).map_err(|_| anyhow!("expected non-negative integer"))
+}
+
+fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Result<()> {
+    let need_str = || v.as_str().ok_or_else(|| anyhow!("expected string"));
+    let need_f32 = || v.as_float().map(|f| f as f32).ok_or_else(|| anyhow!("expected number"));
+    match (section, key) {
+        ("", "name") => cfg.name = need_str()?.to_string(),
+        ("", "parts") => cfg.parts = get_usize(v)?,
+        ("", "workers") => cfg.workers = get_usize(v)?,
+        ("", "seed") => cfg.seed = get_usize(v)? as u64,
+        ("", "reduce_tree") => {
+            cfg.reduce_tree = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
+        ("", "strategy") => {
+            cfg.strategy = PartitionStrategy::parse(need_str()?)
+                .ok_or_else(|| anyhow!("unknown strategy"))?
+        }
+        ("", "metric") => {
+            cfg.metric =
+                MetricKind::parse(need_str()?).ok_or_else(|| anyhow!("unknown metric"))?
+        }
+        ("", "kernel") => {
+            cfg.kernel =
+                KernelChoice::parse(need_str()?).ok_or_else(|| anyhow!("unknown kernel"))?
+        }
+        ("", "artifacts_dir") => cfg.artifacts_dir = PathBuf::from(need_str()?),
+        ("data", "kind") => cfg.data.kind = need_str()?.to_string(),
+        ("data", "n") => cfg.data.n = get_usize(v)?,
+        ("data", "d") => cfg.data.d = get_usize(v)?,
+        ("data", "clusters") => cfg.data.clusters = get_usize(v)?,
+        ("data", "latent") => cfg.data.latent = get_usize(v)?,
+        ("data", "std") => cfg.data.std = need_f32()?,
+        ("data", "spread") => cfg.data.spread = need_f32()?,
+        ("data", "noise") => cfg.data.noise = need_f32()?,
+        ("data", "path") => cfg.data.path = Some(PathBuf::from(need_str()?)),
+        ("net", "simulate_delays") => {
+            cfg.net.simulate_delays = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("net", "latency_us") => cfg.net.latency_us = get_usize(v)? as u64,
+        ("net", "bandwidth") => {
+            cfg.net.bandwidth = v.as_float().ok_or_else(|| anyhow!("expected number"))?
+        }
+        _ => bail!("unknown config key"),
+    }
+    Ok(())
+}
+
+/// Build the dataset described by the config.
+pub fn build_dataset(cfg: &RunConfig) -> Result<(crate::data::Dataset, Option<Vec<u32>>)> {
+    use crate::data::generators as g;
+    use crate::util::prng::Pcg64;
+    let rng = Pcg64::seeded(cfg.seed);
+    let dc = &cfg.data;
+    Ok(match dc.kind.as_str() {
+        "blobs" => {
+            let (ds, labels) = g::gaussian_blobs_labeled(
+                &g::BlobSpec { n: dc.n, d: dc.d, k: dc.clusters, std: dc.std, spread: dc.spread },
+                rng,
+            );
+            (ds, Some(labels))
+        }
+        "uniform" => (g::uniform(dc.n, dc.d, dc.spread, rng), None),
+        "embedding" => {
+            let (ds, labels) = g::embedding_like(
+                &g::EmbeddingSpec {
+                    n: dc.n,
+                    d: dc.d,
+                    latent: dc.latent,
+                    k: dc.clusters,
+                    cluster_std: dc.std,
+                    noise: dc.noise,
+                },
+                rng,
+            );
+            (ds, Some(labels))
+        }
+        "shells" => {
+            let (ds, labels) =
+                g::concentric_shells(dc.n, dc.d, dc.spread * 0.2, dc.spread, dc.noise, rng);
+            (ds, Some(labels))
+        }
+        "npy" => {
+            let path = dc.path.as_ref().expect("validated");
+            (crate::data::npy::read_npy(path)?, None)
+        }
+        "csv" => {
+            let path = dc
+                .path
+                .as_ref()
+                .ok_or_else(|| anyhow!("data.kind = \"csv\" requires data.path"))?;
+            (crate::data::csv::read_csv(path)?, None)
+        }
+        other => bail!("unknown data.kind {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_toml_roundtrip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+name = "exp1"
+parts = 6
+workers = 4
+seed = 7
+strategy = "block"
+metric = "euclid"
+kernel = "prim-dense"
+reduce_tree = true
+verify = true
+
+[data]
+kind = "blobs"
+n = 500
+d = 32
+clusters = 5
+std = 0.25
+spread = 4.0
+
+[net]
+simulate_delays = true
+latency_us = 100
+bandwidth = 1e9
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "exp1");
+        assert_eq!(cfg.parts, 6);
+        assert_eq!(cfg.strategy, PartitionStrategy::Block);
+        assert_eq!(cfg.metric, MetricKind::Euclid);
+        assert_eq!(cfg.kernel, KernelChoice::PrimDense);
+        assert!(cfg.reduce_tree && cfg.verify);
+        assert_eq!(cfg.data.n, 500);
+        assert_eq!(cfg.net.latency_us, 100);
+        assert_eq!(cfg.net.bandwidth, 1e9);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(RunConfig::from_toml("bogus_key = 3").is_err());
+        assert!(RunConfig::from_toml("[bogus]\nx = 3").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_combinations() {
+        assert!(RunConfig::from_toml("parts = 0").is_err());
+        let r = RunConfig::from_toml("kernel = \"xla\"\nmetric = \"cosine\"");
+        assert!(r.is_err(), "xla kernel + cosine must be rejected");
+        let r = RunConfig::from_toml("[data]\nkind = \"npy\"");
+        assert!(r.is_err(), "npy without path must be rejected");
+    }
+
+    #[test]
+    fn build_dataset_kinds() {
+        for kind in ["blobs", "uniform", "embedding", "shells"] {
+            let mut cfg = RunConfig::default();
+            cfg.data.kind = kind.into();
+            cfg.data.n = 64;
+            cfg.data.d = 16;
+            cfg.data.latent = 4;
+            cfg.data.clusters = 4;
+            let (ds, _) = build_dataset(&cfg).unwrap();
+            assert_eq!((ds.n, ds.d), (64, 16), "{kind}");
+        }
+    }
+
+    #[test]
+    fn parts_exceeding_n_rejected() {
+        let r = RunConfig::from_toml("parts = 100\n[data]\nkind = \"uniform\"\nn = 10\nd = 2");
+        assert!(r.is_err());
+    }
+}

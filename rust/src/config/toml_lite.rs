@@ -1,0 +1,237 @@
+//! A TOML-subset parser sufficient for run configuration files.
+//!
+//! Supported: `[section]` headers (one level), `key = value` with string
+//! (`"..."`), integer, float, boolean, and flat arrays of those; `#`
+//! comments; blank lines. Unsupported (rejected with errors): nested tables,
+//! inline tables, multi-line strings, dotted keys, datetimes.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML-lite value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map; keys before any section land under `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-lite document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                bail!("line {}: unsupported section name {name:?}", lineno + 1);
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || key.contains('.') || key.contains(' ') {
+            bail!("line {}: unsupported key {key:?}", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            bail!("trailing garbage after string");
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p)?);
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split on commas not inside strings (arrays of scalars only, no nesting).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse_toml(
+            r#"
+# run configuration
+name = "demo"
+
+[data]
+n = 1024
+d = 256
+std = 0.5          # cluster std
+kinds = ["blobs", "uniform"]
+
+[net]
+enabled = true
+latency_us = 50
+bandwidth = 1.5e9
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("demo".into()));
+        assert_eq!(doc["data"]["n"], TomlValue::Int(1024));
+        assert_eq!(doc["data"]["std"], TomlValue::Float(0.5));
+        assert_eq!(
+            doc["data"]["kinds"],
+            TomlValue::Array(vec![TomlValue::Str("blobs".into()), TomlValue::Str("uniform".into())])
+        );
+        assert_eq!(doc["net"]["enabled"], TomlValue::Bool(true));
+        assert_eq!(doc["net"]["bandwidth"].as_float(), Some(1.5e9));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = parse_toml("x = 1_000_000 # one million\ny = \"a # not comment\"").unwrap();
+        assert_eq!(doc[""]["x"], TomlValue::Int(1_000_000));
+        assert_eq!(doc[""]["y"], TomlValue::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn rejects_nested_sections() {
+        assert!(parse_toml("[a.b]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_toml("just a line").is_err());
+        assert!(parse_toml("x = ").is_err());
+        assert!(parse_toml("x = \"unterminated").is_err());
+        assert!(parse_toml("[unclosed").is_err());
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let doc = parse_toml("a = 3\nb = 3.0").unwrap();
+        assert_eq!(doc[""]["a"].as_int(), Some(3));
+        assert_eq!(doc[""]["a"].as_float(), Some(3.0)); // int coerces to float
+        assert_eq!(doc[""]["b"].as_int(), None);
+        assert_eq!(doc[""]["b"].as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = parse_toml("a = []").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Array(vec![]));
+    }
+}

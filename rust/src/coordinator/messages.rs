@@ -1,0 +1,100 @@
+//! Typed messages between leader and workers, with wire-size accounting.
+//!
+//! Wire sizes model a compact binary encoding: fixed 16-byte header per
+//! message (type tag, ids, lengths) + payload. The netsim charges these
+//! sizes; nothing is actually serialized (threads share memory), which keeps
+//! the simulation honest *and* fast.
+
+use crate::data::Dataset;
+use crate::decomp::PairJob;
+use crate::graph::Edge;
+use std::time::Duration;
+
+/// Message header bytes (tag + routing + length fields).
+pub const HEADER_BYTES: u64 = 16;
+
+/// Leader ↔ worker messages.
+#[derive(Debug)]
+pub enum Message {
+    /// Leader → worker: compute d-MST(S_i ∪ S_j). Carries the actual vectors
+    /// (the scatter) and the local→global index map.
+    Job { job: PairJob, global_ids: Vec<u32>, points: Dataset },
+    /// Worker → leader (gather mode): one pair-tree, reindexed to global
+    /// ids, plus the job's kernel compute time (used to model makespans on
+    /// machines with fewer cores than ranks — see `metrics::modeled_makespan`).
+    Result { job_id: u32, worker: usize, edges: Vec<Edge>, compute: Duration },
+    /// Worker → leader (final): locally ⊕-combined tree (reduce mode only)
+    /// plus work/timing stats.
+    WorkerDone {
+        worker: usize,
+        local_tree: Option<Vec<Edge>>,
+        dist_evals: u64,
+        busy: Duration,
+        jobs_run: u32,
+    },
+    /// Leader → worker: drain and report.
+    Shutdown,
+}
+
+impl Message {
+    /// Bytes this message would occupy on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Message::Job { global_ids, points, .. } => {
+                HEADER_BYTES + global_ids.len() as u64 * 4 + points.payload_bytes()
+            }
+            Message::Result { edges, .. } => {
+                HEADER_BYTES + edges.len() as u64 * Edge::WIRE_BYTES as u64
+            }
+            Message::WorkerDone { local_tree, .. } => {
+                HEADER_BYTES
+                    + 16 // stats
+                    + local_tree.as_ref().map_or(0, |t| t.len() as u64 * Edge::WIRE_BYTES as u64)
+            }
+            Message::Shutdown => HEADER_BYTES,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_bytes_dominated_by_vectors() {
+        let points = Dataset::zeros(100, 64);
+        let msg = Message::Job {
+            job: PairJob { id: 0, i: 0, j: 1 },
+            global_ids: (0..100).collect(),
+            points,
+        };
+        assert_eq!(msg.wire_bytes(), 16 + 400 + 100 * 64 * 4);
+    }
+
+    #[test]
+    fn result_bytes_linear_in_edges() {
+        let edges = vec![Edge::new(0, 1, 1.0); 99];
+        let msg = Message::Result { job_id: 3, worker: 0, edges, compute: Duration::ZERO };
+        assert_eq!(msg.wire_bytes(), 16 + 99 * 12);
+    }
+
+    #[test]
+    fn done_with_and_without_tree() {
+        let a = Message::WorkerDone {
+            worker: 0,
+            local_tree: None,
+            dist_evals: 10,
+            busy: Duration::ZERO,
+            jobs_run: 1,
+        };
+        let b = Message::WorkerDone {
+            worker: 0,
+            local_tree: Some(vec![Edge::new(0, 1, 1.0); 5]),
+            dist_evals: 10,
+            busy: Duration::ZERO,
+            jobs_run: 1,
+        };
+        assert_eq!(a.wire_bytes(), 32);
+        assert_eq!(b.wire_bytes(), 32 + 60);
+    }
+}

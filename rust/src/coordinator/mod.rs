@@ -1,0 +1,24 @@
+//! The distributed runtime: a leader and thread-per-rank workers exchanging
+//! typed messages over a simulated network with exact byte accounting.
+//!
+//! This realizes the paper's execution model — `p = |P|(|P|-1)/2` independent
+//! d-MST jobs, a scatter of vector subsets, **zero** mid-compute
+//! communication, and a final gather of tree edges (or the `⊕`-reduction
+//! variant) — on a single machine, faithfully enough that the communication
+//! *measurements* (E3) are exact counts, not estimates.
+//!
+//! Workers are OS threads, each owning its own d-MST kernel instance
+//! (including, for `KernelChoice::BoruvkaXla`, its own PJRT client and
+//! compiled executables: PJRT handles are thread-local by construction in
+//! the `xla` crate, which conveniently mirrors per-rank process memory).
+
+pub mod messages;
+pub mod netsim;
+pub mod metrics;
+pub mod worker;
+pub mod leader;
+
+pub use leader::{run_distributed, DistOutput};
+pub use messages::Message;
+pub use metrics::RunMetrics;
+pub use netsim::{NetCounters, NetSim};

@@ -1,0 +1,154 @@
+//! Simulated network: byte/message accounting plus an optional latency +
+//! bandwidth delay model.
+//!
+//! Every leader↔worker send goes through [`NetSim::send`], which (a) adds the
+//! message's wire size to the right direction counter and (b) if
+//! `simulate_delays` is set, sleeps `latency + bytes/bandwidth` *in the
+//! sending thread* before delivery — modelling a blocking rendezvous send on
+//! a full-duplex link, good enough to surface the `O(|V||P|)` vs `O(|V|)`
+//! gather asymmetry as wallclock, not just counters.
+
+use super::messages::Message;
+use crate::config::NetConfig;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Traffic direction, for the per-phase accounting the paper's cost model
+/// distinguishes (scatter of vectors vs gather of tree edges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Scatter,
+    Gather,
+    Control,
+}
+
+/// Shared traffic counters.
+#[derive(Debug, Default)]
+pub struct NetCounters {
+    pub scatter_bytes: AtomicU64,
+    pub gather_bytes: AtomicU64,
+    pub control_bytes: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl NetCounters {
+    pub fn total_bytes(&self) -> u64 {
+        self.scatter_bytes.load(Ordering::Relaxed)
+            + self.gather_bytes.load(Ordering::Relaxed)
+            + self.control_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.scatter_bytes.load(Ordering::Relaxed),
+            self.gather_bytes.load(Ordering::Relaxed),
+            self.control_bytes.load(Ordering::Relaxed),
+            self.messages.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The simulated network fabric (shared by all endpoints).
+#[derive(Clone)]
+pub struct NetSim {
+    cfg: NetConfig,
+    counters: Arc<NetCounters>,
+}
+
+impl NetSim {
+    pub fn new(cfg: NetConfig) -> Self {
+        Self { cfg, counters: Arc::new(NetCounters::default()) }
+    }
+
+    pub fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// Transfer delay for `bytes` under the configured link model.
+    pub fn model_delay(&self, bytes: u64) -> Duration {
+        Duration::from_micros(self.cfg.latency_us)
+            + Duration::from_secs_f64(bytes as f64 / self.cfg.bandwidth)
+    }
+
+    /// Account for and (optionally) delay a message, then deliver it.
+    /// Returns `Err` if the receiving endpoint hung up.
+    pub fn send(
+        &self,
+        tx: &Sender<Message>,
+        msg: Message,
+        dir: Direction,
+    ) -> Result<(), std::sync::mpsc::SendError<Message>> {
+        let bytes = msg.wire_bytes();
+        let ctr = match dir {
+            Direction::Scatter => &self.counters.scatter_bytes,
+            Direction::Gather => &self.counters.gather_bytes,
+            Direction::Control => &self.counters.control_bytes,
+        };
+        ctr.fetch_add(bytes, Ordering::Relaxed);
+        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+        if self.cfg.simulate_delays {
+            std::thread::sleep(self.model_delay(bytes));
+        }
+        tx.send(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::decomp::PairJob;
+    use std::sync::mpsc::channel;
+
+    fn job_msg(n: usize, d: usize) -> Message {
+        Message::Job {
+            job: PairJob { id: 0, i: 0, j: 1 },
+            global_ids: (0..n as u32).collect(),
+            points: Dataset::zeros(n, d),
+        }
+    }
+
+    #[test]
+    fn counters_accumulate_by_direction() {
+        let net = NetSim::new(NetConfig::default());
+        let (tx, rx) = channel();
+        net.send(&tx, job_msg(10, 4), Direction::Scatter).unwrap();
+        net.send(&tx, Message::Shutdown, Direction::Control).unwrap();
+        let (s, g, c, m) = net.counters().snapshot();
+        assert_eq!(s, 16 + 40 + 160);
+        assert_eq!(g, 0);
+        assert_eq!(c, 16);
+        assert_eq!(m, 2);
+        drop(rx);
+    }
+
+    #[test]
+    fn delay_model_scales_with_bytes() {
+        let cfg = NetConfig { simulate_delays: false, latency_us: 100, bandwidth: 1e6 };
+        let net = NetSim::new(cfg);
+        let d1 = net.model_delay(0);
+        let d2 = net.model_delay(1_000_000);
+        assert_eq!(d1, Duration::from_micros(100));
+        assert_eq!(d2, Duration::from_micros(100) + Duration::from_secs(1));
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_errors() {
+        let net = NetSim::new(NetConfig::default());
+        let (tx, rx) = channel();
+        drop(rx);
+        assert!(net.send(&tx, Message::Shutdown, Direction::Control).is_err());
+    }
+
+    #[test]
+    fn simulated_delay_actually_sleeps() {
+        let cfg = NetConfig { simulate_delays: true, latency_us: 2000, bandwidth: 1e12 };
+        let net = NetSim::new(cfg);
+        let (tx, _rx) = channel();
+        let t = std::time::Instant::now();
+        net.send(&tx, Message::Shutdown, Direction::Control).unwrap();
+        assert!(t.elapsed() >= Duration::from_micros(1500));
+    }
+}

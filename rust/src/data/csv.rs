@@ -1,0 +1,129 @@
+//! Minimal CSV reader/writer for numeric matrices (embedding exports from
+//! pandas / spreadsheets). Auto-detects and skips a single header row;
+//! accepts comma / semicolon / tab separators; rejects ragged rows.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Read a numeric CSV as a dataset. A first row that fails to parse as
+/// numbers is treated as a header and skipped.
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Parse CSV text into a dataset.
+pub fn parse_csv(text: &str) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let sep = detect_sep(line);
+        let cells: Vec<&str> = line.split(sep).map(str::trim).collect();
+        let parsed: std::result::Result<Vec<f32>, _> =
+            cells.iter().map(|c| c.parse::<f32>()).collect();
+        match parsed {
+            Ok(vals) => {
+                if let Some(w) = width {
+                    if vals.len() != w {
+                        bail!(
+                            "line {}: ragged row ({} fields, expected {w})",
+                            lineno + 1,
+                            vals.len()
+                        );
+                    }
+                } else {
+                    width = Some(vals.len());
+                }
+                rows.push(vals);
+            }
+            Err(_) if rows.is_empty() && width.is_none() => {
+                // header row — skip
+                continue;
+            }
+            Err(e) => bail!("line {}: non-numeric cell ({e})", lineno + 1),
+        }
+    }
+    let d = width.context("empty CSV")?;
+    if d == 0 {
+        bail!("zero-width CSV");
+    }
+    let n = rows.len();
+    let mut data = Vec::with_capacity(n * d);
+    for r in rows {
+        data.extend_from_slice(&r);
+    }
+    Ok(Dataset::new(n, d, data))
+}
+
+fn detect_sep(line: &str) -> char {
+    for sep in [',', ';', '\t'] {
+        if line.contains(sep) {
+            return sep;
+        }
+    }
+    ',' // single column
+}
+
+/// Write a dataset as plain comma-separated values (no header).
+pub fn write_csv(path: &Path, ds: &Dataset) -> Result<()> {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(ds.n * ds.d * 8);
+    for i in 0..ds.n {
+        for (j, v) in ds.row(i).iter().enumerate() {
+            if j > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{v}");
+        }
+        s.push('\n');
+    }
+    std::fs::write(path, s).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_csv() {
+        let ds = parse_csv("1.0,2.0\n3.5,-4\n").unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(1), &[3.5, -4.0]);
+    }
+
+    #[test]
+    fn skips_header_and_comments() {
+        let ds = parse_csv("x,y,z\n# comment\n1,2,3\n4,5,6\n").unwrap();
+        assert_eq!((ds.n, ds.d), (2, 3));
+    }
+
+    #[test]
+    fn handles_semicolon_and_tab() {
+        assert_eq!(parse_csv("1;2;3\n").unwrap().d, 3);
+        assert_eq!(parse_csv("1\t2\n").unwrap().d, 2);
+        assert_eq!(parse_csv("7\n8\n").unwrap(), Dataset::new(2, 1, vec![7.0, 8.0]));
+    }
+
+    #[test]
+    fn rejects_ragged_and_garbage() {
+        assert!(parse_csv("1,2\n3\n").is_err());
+        assert!(parse_csv("1,2\n3,abc\n").is_err());
+        assert!(parse_csv("").is_err());
+        assert!(parse_csv("only,header,row\n").is_err(), "header but no data");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset::new(3, 2, vec![1.5, -2.0, 0.0, 4.25, 1e6, -1e-3]);
+        let p = std::env::temp_dir().join("demst_csv_roundtrip.csv");
+        write_csv(&p, &ds).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(ds, back);
+    }
+}

@@ -1,0 +1,108 @@
+//! Row-major f32 point sets: the vector-per-vertex representation the
+//! paper's graph `G = (V, E)` is built over.
+
+/// `n` points in `d` dimensions, row-major contiguous.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "data length {} != n*d = {}", data.len(), n * d);
+        Self { n, d, data }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Self { n, d, data: vec![0.0; n * d] }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.n);
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.n);
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Gather rows by index into a new dataset. Used to materialize the
+    /// partition subsets `S_i` (and `S_i ∪ S_j` unions) that are shipped to
+    /// workers — this models the scatter of vectors in the distributed
+    /// setting, so its size is what the netsim charges for.
+    pub fn gather(&self, idx: &[u32]) -> Dataset {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i as usize));
+        }
+        Dataset::new(idx.len(), self.d, data)
+    }
+
+    /// Bytes occupied by the raw vector payload (netsim accounting).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.n * self.d * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Per-coordinate mean (for centering / reporting).
+    pub fn mean(&self) -> Vec<f32> {
+        let mut m = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                m[j] += x as f64;
+            }
+        }
+        m.iter().map(|&s| (s / self.n.max(1) as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_index_correctly() {
+        let ds = Dataset::new(3, 2, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ds.row(0), &[0.0, 1.0]);
+        assert_eq!(ds.row(2), &[4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Dataset::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let ds = Dataset::new(4, 2, (0..8).map(|i| i as f32).collect());
+        let g = ds.gather(&[3, 1]);
+        assert_eq!(g.n, 2);
+        assert_eq!(g.row(0), &[6.0, 7.0]);
+        assert_eq!(g.row(1), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn payload_bytes_counts_f32() {
+        let ds = Dataset::zeros(10, 7);
+        assert_eq!(ds.payload_bytes(), 10 * 7 * 4);
+    }
+
+    #[test]
+    fn mean_is_columnwise() {
+        let ds = Dataset::new(2, 2, vec![0.0, 4.0, 2.0, 8.0]);
+        assert_eq!(ds.mean(), vec![1.0, 6.0]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Synthetic dataset generators.
+//!
+//! The paper's motivating workload is "high dimensional embeddings produced by
+//! neural networks". Real embeddings aren't shippable here, so
+//! `embedding_like` synthesizes the relevant structure: points drawn from a
+//! Gaussian mixture in a low-dimensional latent space, embedded into D
+//! dimensions through a random orthogonal-ish rotation, plus small ambient
+//! noise — i.e. cluster structure on a low intrinsic-dimension manifold inside
+//! a high-dimensional space, which is what makes single-linkage on embeddings
+//! meaningful and what defeats low-dimensional (k-d tree / WSPD) EMST methods.
+
+use super::Dataset;
+use crate::util::prng::Pcg64;
+
+/// Parameters for isotropic Gaussian blobs.
+#[derive(Clone, Debug)]
+pub struct BlobSpec {
+    pub n: usize,
+    pub d: usize,
+    /// number of clusters
+    pub k: usize,
+    /// per-cluster standard deviation
+    pub std: f32,
+    /// scale of the box cluster centers are drawn from
+    pub spread: f32,
+}
+
+/// Isotropic Gaussian blobs around `k` uniform-random centers.
+/// Returns the dataset; ground-truth labels via [`gaussian_blobs_labeled`].
+pub fn gaussian_blobs(spec: &BlobSpec, rng: Pcg64) -> Dataset {
+    gaussian_blobs_labeled(spec, rng).0
+}
+
+/// Blobs + ground-truth cluster labels (for cluster-recovery checks).
+pub fn gaussian_blobs_labeled(spec: &BlobSpec, mut rng: Pcg64) -> (Dataset, Vec<u32>) {
+    assert!(spec.k >= 1 && spec.n >= spec.k);
+    let centers: Vec<f32> =
+        (0..spec.k * spec.d).map(|_| (rng.next_f32() - 0.5) * 2.0 * spec.spread).collect();
+    let mut data = Vec::with_capacity(spec.n * spec.d);
+    let mut labels = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let c = i % spec.k; // balanced assignment
+        labels.push(c as u32);
+        for j in 0..spec.d {
+            data.push(centers[c * spec.d + j] + spec.std * rng.next_gaussian() as f32);
+        }
+    }
+    (Dataset::new(spec.n, spec.d, data), labels)
+}
+
+/// Uniform points in `[-scale, scale)^d` — the unstructured worst case.
+pub fn uniform(n: usize, d: usize, scale: f32, mut rng: Pcg64) -> Dataset {
+    let data = (0..n * d).map(|_| (rng.next_f32() - 0.5) * 2.0 * scale).collect();
+    Dataset::new(n, d, data)
+}
+
+/// Parameters for the neural-embedding-like generator.
+#[derive(Clone, Debug)]
+pub struct EmbeddingSpec {
+    pub n: usize,
+    /// ambient (embedding) dimension, e.g. 256 or 768
+    pub d: usize,
+    /// latent (intrinsic) dimension, e.g. 8
+    pub latent: usize,
+    /// number of semantic clusters
+    pub k: usize,
+    /// latent per-cluster std
+    pub cluster_std: f32,
+    /// ambient isotropic noise std
+    pub noise: f32,
+}
+
+impl Default for EmbeddingSpec {
+    fn default() -> Self {
+        Self { n: 1024, d: 256, latent: 8, k: 16, cluster_std: 0.3, noise: 0.02 }
+    }
+}
+
+/// Synthetic "neural embedding" point cloud: Gaussian mixture in a
+/// `latent`-dim space, pushed through a random rotation-like map into `d`
+/// dims (rows of a random Gaussian matrix, orthonormalized by modified
+/// Gram–Schmidt), plus ambient noise.
+pub fn embedding_like(spec: &EmbeddingSpec, mut rng: Pcg64) -> (Dataset, Vec<u32>) {
+    assert!(spec.latent <= spec.d, "latent {} > ambient {}", spec.latent, spec.d);
+    assert!(spec.k >= 1 && spec.n >= spec.k);
+    // Random semi-orthogonal map latent -> d (columns orthonormal).
+    let basis = random_semi_orthogonal(spec.d, spec.latent, &mut rng);
+    // Latent cluster centers on a sphere of radius ~4*cluster_std*sqrt(latent)
+    // so clusters are well separated but not trivially so.
+    let radius = 4.0 * spec.cluster_std * (spec.latent as f32).sqrt();
+    let mut centers = vec![0.0f32; spec.k * spec.latent];
+    for c in 0..spec.k {
+        let mut norm = 0.0f32;
+        for j in 0..spec.latent {
+            let g = rng.next_gaussian() as f32;
+            centers[c * spec.latent + j] = g;
+            norm += g * g;
+        }
+        let norm = norm.sqrt().max(1e-6);
+        for j in 0..spec.latent {
+            centers[c * spec.latent + j] *= radius / norm;
+        }
+    }
+    let mut data = vec![0.0f32; spec.n * spec.d];
+    let mut labels = Vec::with_capacity(spec.n);
+    let mut latent_pt = vec![0.0f32; spec.latent];
+    for i in 0..spec.n {
+        let c = i % spec.k;
+        labels.push(c as u32);
+        for j in 0..spec.latent {
+            latent_pt[j] =
+                centers[c * spec.latent + j] + spec.cluster_std * rng.next_gaussian() as f32;
+        }
+        let row = &mut data[i * spec.d..(i + 1) * spec.d];
+        // row = basis * latent_pt  (basis is d x latent, column-major by construction)
+        for (j, r) in row.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (l, &lp) in latent_pt.iter().enumerate() {
+                s += basis[l * spec.d + j] * lp;
+            }
+            *r = s + spec.noise * rng.next_gaussian() as f32;
+        }
+    }
+    (Dataset::new(spec.n, spec.d, data), labels)
+}
+
+/// `cols` orthonormal vectors in R^`rows` (stored row-per-vector: shape
+/// `(cols, rows)` row-major), via Gaussian init + modified Gram–Schmidt.
+fn random_semi_orthogonal(rows: usize, cols: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let mut m: Vec<f32> = (0..cols * rows).map(|_| rng.next_gaussian() as f32).collect();
+    for c in 0..cols {
+        // subtract projections onto previous vectors
+        for p in 0..c {
+            let (head, tail) = m.split_at_mut(c * rows);
+            let prev = &head[p * rows..(p + 1) * rows];
+            let cur = &mut tail[..rows];
+            let dot: f32 = prev.iter().zip(cur.iter()).map(|(a, b)| a * b).sum();
+            for (cu, pr) in cur.iter_mut().zip(prev) {
+                *cu -= dot * pr;
+            }
+        }
+        let cur = &mut m[c * rows..(c + 1) * rows];
+        let norm: f32 = cur.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        for x in cur.iter_mut() {
+            *x /= norm;
+        }
+    }
+    m
+}
+
+/// Two concentric d-dimensional shells ("moons-in-D"): a non-convex shape
+/// single linkage separates but k-means-style methods cannot. Used in the
+/// dendrogram example.
+pub fn concentric_shells(n: usize, d: usize, r_inner: f32, r_outer: f32, noise: f32, mut rng: Pcg64) -> (Dataset, Vec<u32>) {
+    assert!(d >= 2 && n >= 2);
+    let mut data = vec![0.0f32; n * d];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let shell = (i % 2) as u32;
+        labels.push(shell);
+        let r = if shell == 0 { r_inner } else { r_outer };
+        // random direction on the sphere
+        let row = &mut data[i * d..(i + 1) * d];
+        let mut norm = 0.0f32;
+        for x in row.iter_mut() {
+            let g = rng.next_gaussian() as f32;
+            *x = g;
+            norm += g * g;
+        }
+        let norm = norm.sqrt().max(1e-9);
+        for x in row.iter_mut() {
+            *x = *x / norm * r + noise * rng.next_gaussian() as f32;
+        }
+    }
+    (Dataset::new(n, d, data), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::metric::sq_euclid;
+
+    #[test]
+    fn blobs_shape_and_labels() {
+        let spec = BlobSpec { n: 100, d: 8, k: 5, std: 0.1, spread: 10.0 };
+        let (ds, labels) = gaussian_blobs_labeled(&spec, Pcg64::seeded(1));
+        assert_eq!(ds.n, 100);
+        assert_eq!(ds.d, 8);
+        assert_eq!(labels.len(), 100);
+        assert_eq!(*labels.iter().max().unwrap(), 4);
+        // balanced: each cluster has 20
+        for c in 0..5u32 {
+            assert_eq!(labels.iter().filter(|&&l| l == c).count(), 20);
+        }
+    }
+
+    #[test]
+    fn blobs_are_deterministic() {
+        let spec = BlobSpec { n: 32, d: 4, k: 2, std: 0.5, spread: 3.0 };
+        let a = gaussian_blobs(&spec, Pcg64::seeded(7));
+        let b = gaussian_blobs(&spec, Pcg64::seeded(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn blobs_intra_closer_than_inter() {
+        // With tight std and wide spread, same-cluster pairs should be far
+        // closer than cross-cluster pairs on average.
+        let spec = BlobSpec { n: 60, d: 16, k: 3, std: 0.05, spread: 20.0 };
+        let (ds, labels) = gaussian_blobs_labeled(&spec, Pcg64::seeded(3));
+        let (mut intra, mut inter, mut ni, mut nx) = (0.0f64, 0.0f64, 0u64, 0u64);
+        for i in 0..ds.n {
+            for j in (i + 1)..ds.n {
+                let dist = sq_euclid(ds.row(i), ds.row(j)) as f64;
+                if labels[i] == labels[j] {
+                    intra += dist;
+                    ni += 1;
+                } else {
+                    inter += dist;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f64 * 10.0 < inter / nx as f64);
+    }
+
+    #[test]
+    fn semi_orthogonal_is_orthonormal() {
+        let mut rng = Pcg64::seeded(5);
+        let (rows, cols) = (32, 6);
+        let m = random_semi_orthogonal(rows, cols, &mut rng);
+        for a in 0..cols {
+            for b in a..cols {
+                let dot: f32 = (0..rows).map(|r| m[a * rows + r] * m[b * rows + r]).sum();
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-4, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_preserves_latent_distances() {
+        // With zero ambient noise, pairwise distances in ambient space must
+        // equal latent distances (semi-orthogonal map is an isometry on the
+        // latent subspace).
+        let spec = EmbeddingSpec { n: 40, d: 64, latent: 4, k: 4, cluster_std: 0.5, noise: 0.0 };
+        let (ds, _) = embedding_like(&spec, Pcg64::seeded(9));
+        // All points lie in a 4-dim subspace: distances must behave; sanity
+        // check that the data is not degenerate and is deterministic.
+        let (ds2, _) = embedding_like(&spec, Pcg64::seeded(9));
+        assert_eq!(ds, ds2);
+        let d01 = sq_euclid(ds.row(0), ds.row(1));
+        assert!(d01 > 0.0);
+    }
+
+    #[test]
+    fn shells_radii() {
+        let (ds, labels) = concentric_shells(64, 8, 1.0, 5.0, 0.0, Pcg64::seeded(2));
+        for i in 0..ds.n {
+            let r: f32 = ds.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let expect = if labels[i] == 0 { 1.0 } else { 5.0 };
+            assert!((r - expect).abs() < 1e-3, "i={i} r={r} expect={expect}");
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Datasets: row-major f32 point sets, synthetic generators, and `.npy` IO.
+
+pub mod dataset;
+pub mod generators;
+pub mod npy;
+pub mod csv;
+
+pub use dataset::Dataset;

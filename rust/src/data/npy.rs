@@ -1,0 +1,204 @@
+//! Minimal NumPy `.npy` (format version 1.0) reader/writer for f32 matrices.
+//!
+//! Lets users bring real embedding matrices exported from Python
+//! (`np.save("emb.npy", X.astype(np.float32))`) into the CLI, and lets the
+//! examples persist datasets. Only little-endian f32, C-order, 1-D or 2-D.
+
+use super::Dataset;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// Write a dataset as a 2-D f32 `.npy` file.
+pub fn write_npy(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let header_body = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({}, {}), }}",
+        ds.n, ds.d
+    );
+    // Pad with spaces so magic(6)+ver(2)+len(2)+header is a multiple of 64,
+    // ending in \n, per the format spec.
+    let base = 6 + 2 + 2;
+    let unpadded = base + header_body.len() + 1;
+    let padded = (unpadded + 63) / 64 * 64;
+    let pad = padded - base - header_body.len() - 1;
+    let header = format!("{}{}\n", header_body, " ".repeat(pad));
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(ds.n * ds.d * 4);
+    for &v in ds.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a 1-D or 2-D little-endian f32 `.npy` file (1-D becomes `(n, 1)`).
+pub fn read_npy(path: &Path) -> Result<Dataset> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 6];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a .npy file (bad magic)", path.display());
+    }
+    let mut ver = [0u8; 2];
+    f.read_exact(&mut ver)?;
+    let header_len = match ver[0] {
+        1 => {
+            let mut l = [0u8; 2];
+            f.read_exact(&mut l)?;
+            u16::from_le_bytes(l) as usize
+        }
+        2 | 3 => {
+            let mut l = [0u8; 4];
+            f.read_exact(&mut l)?;
+            u32::from_le_bytes(l) as usize
+        }
+        v => bail!("unsupported .npy version {v}"),
+    };
+    let mut header = vec![0u8; header_len];
+    f.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header not utf-8")?;
+    let descr = dict_str_value(&header, "descr").ok_or_else(|| anyhow!("no descr in header"))?;
+    if descr != "<f4" {
+        bail!("unsupported dtype {descr:?} (only little-endian f32 '<f4')");
+    }
+    if header.contains("'fortran_order': True") {
+        bail!("fortran_order arrays unsupported (save with C order)");
+    }
+    let shape = parse_shape(&header)?;
+    let (n, d) = match shape.len() {
+        1 => (shape[0], 1),
+        2 => (shape[0], shape[1]),
+        k => bail!("only 1-D/2-D arrays supported, got {k}-D"),
+    };
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() < n * d * 4 {
+        bail!("truncated .npy: need {} bytes, have {}", n * d * 4, raw.len());
+    }
+    let data: Vec<f32> = raw[..n * d * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Dataset::new(n, d, data))
+}
+
+/// Extract `'key': 'value'` from the header dict (string values only).
+fn dict_str_value<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat)? + pat.len();
+    let rest = header[at..].trim_start();
+    let quote = rest.chars().next()?;
+    if quote != '\'' && quote != '"' {
+        return None;
+    }
+    let inner = &rest[1..];
+    let end = inner.find(quote)?;
+    Some(&inner[..end])
+}
+
+/// Parse `'shape': (a, b)` from the header dict.
+fn parse_shape(header: &str) -> Result<Vec<usize>> {
+    let at = header.find("'shape':").ok_or_else(|| anyhow!("no shape in header"))? + 8;
+    let rest = header[at..].trim_start();
+    if !rest.starts_with('(') {
+        bail!("malformed shape");
+    }
+    let end = rest.find(')').ok_or_else(|| anyhow!("unterminated shape tuple"))?;
+    let inner = &rest[1..end];
+    let mut dims = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        dims.push(p.parse::<usize>().with_context(|| format!("bad dim {p:?}"))?);
+    }
+    if dims.is_empty() {
+        bail!("scalar .npy unsupported");
+    }
+    Ok(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("demst_npy_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seeded(4);
+        let ds = Dataset::new(17, 5, (0..17 * 5).map(|_| rng.next_f32()).collect());
+        let p = tmp("roundtrip.npy");
+        write_npy(&p, &ds).unwrap();
+        let back = read_npy(&p).unwrap();
+        assert_eq!(ds, back);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let ds = Dataset::zeros(3, 3);
+        let p = tmp("aligned.npy");
+        write_npy(&p, &ds).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+        assert_eq!(bytes[10 + header_len - 1], b'\n');
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.npy");
+        std::fs::write(&p, b"not numpy at all").unwrap();
+        assert!(read_npy(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        // hand-craft an f64 header
+        let p = tmp("f64.npy");
+        let body = "{'descr': '<f8', 'fortran_order': False, 'shape': (1, 1), }";
+        let header = format!("{}\n", body);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&0f64.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = read_npy(&p).unwrap_err().to_string();
+        assert!(err.contains("unsupported dtype"), "{err}");
+    }
+
+    #[test]
+    fn reads_1d_as_column() {
+        let p = tmp("onedim.npy");
+        let body = "{'descr': '<f4', 'fortran_order': False, 'shape': (3,), }";
+        let header = format!("{}\n", body);
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in [1.0f32, 2.0, 3.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let ds = read_npy(&p).unwrap();
+        assert_eq!((ds.n, ds.d), (3, 1));
+        assert_eq!(ds.as_slice(), &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,260 @@
+//! Serial reference implementation of Algorithm 1 (the distributed execution
+//! with real worker threads + communication accounting is in
+//! [`crate::coordinator`]; both must produce the identical tree).
+
+use super::pairs::PairSchedule;
+use super::partition::{partition_indices, PartitionStrategy};
+use crate::data::Dataset;
+use crate::dense::DenseMst;
+use crate::graph::Edge;
+use crate::mst::kruskal;
+
+/// Configuration for the decomposed EMST.
+#[derive(Clone, Debug)]
+pub struct DecompConfig {
+    /// `|P|` — number of subsets in the partition
+    pub parts: usize,
+    pub strategy: PartitionStrategy,
+    pub seed: u64,
+    /// Also retain per-pair outputs (for analysis / benches).
+    pub keep_pair_trees: bool,
+}
+
+impl Default for DecompConfig {
+    fn default() -> Self {
+        Self { parts: 4, strategy: PartitionStrategy::RandomShuffle, seed: 0, keep_pair_trees: false }
+    }
+}
+
+/// Result of the decomposed algorithm, with the analysis counters the
+/// paper's cost model talks about.
+#[derive(Clone, Debug)]
+pub struct DecompOutput {
+    /// the exact global MSF
+    pub mst: Vec<Edge>,
+    /// total edges gathered from all pair jobs before the final sparse MST —
+    /// the `O(|V|·|P|)` gather payload
+    pub union_edges: usize,
+    /// d-MST kernel distance evaluations (work measure for E2)
+    pub dist_evals: u64,
+    /// number of pair jobs executed (`|P|(|P|-1)/2`)
+    pub jobs: usize,
+    /// per-pair trees in schedule order, if `keep_pair_trees`
+    pub pair_trees: Vec<Vec<Edge>>,
+    /// sizes of each subset
+    pub part_sizes: Vec<usize>,
+}
+
+/// Run Algorithm 1 serially: partition, d-MST per pair, union, sparse MST.
+///
+/// The returned tree is the exact MSF of the complete graph over `ds` under
+/// the kernel's metric (Theorem 1). Counters on `kernel` are reset first so
+/// `dist_evals` reflects only this invocation.
+pub fn decomposed_mst(ds: &Dataset, cfg: &DecompConfig, kernel: &dyn DenseMst) -> DecompOutput {
+    let parts = partition_indices(ds, cfg.parts, cfg.strategy, cfg.seed);
+    let schedule = PairSchedule::new(cfg.parts);
+    kernel.reset_counters();
+
+    let mut union_edges: Vec<Edge> = Vec::new();
+    let mut pair_trees = Vec::new();
+    if cfg.parts == 1 {
+        // Degenerate case: the paper's double loop is empty; the d-MST of the
+        // single subset is the answer.
+        let tree = run_pair(ds, &parts[0], &[], kernel);
+        union_edges.extend_from_slice(&tree);
+        if cfg.keep_pair_trees {
+            pair_trees.push(tree);
+        }
+    } else {
+        for job in &schedule.jobs {
+            let tree = run_pair(ds, &parts[job.i as usize], &parts[job.j as usize], kernel);
+            union_edges.extend_from_slice(&tree);
+            if cfg.keep_pair_trees {
+                pair_trees.push(tree);
+            }
+        }
+    }
+
+    let union_count = union_edges.len();
+    let mst = kruskal(ds.n, &union_edges);
+    DecompOutput {
+        mst,
+        union_edges: union_count,
+        dist_evals: kernel.dist_evals(),
+        jobs: schedule.len().max(1),
+        pair_trees,
+        part_sizes: parts.iter().map(|p| p.len()).collect(),
+    }
+}
+
+/// d-MST over `S_i ∪ S_j`, reindexed back to global vertex ids.
+///
+/// This is the "reindexing the vertices ... to respect the global vector
+/// indexing upon return of each d-MST" the paper notes an implementation
+/// must do — with one strengthening: the union is sorted by **global id**
+/// before the kernel runs, so the local index order is a strictly increasing
+/// map of the global order. The dense kernels break distance ties by index,
+/// hence sorted reindexing makes every subproblem agree with the global
+/// strict `(w, u, v)` edge order, and the decomposition returns the unique
+/// canonical MSF even when the true MSF is *not* unique (duplicate points /
+/// tied distances) — a case the paper excludes by assumption.
+pub fn run_pair(ds: &Dataset, si: &[u32], sj: &[u32], kernel: &dyn DenseMst) -> Vec<Edge> {
+    let local_to_global = merge_sorted_ids(si, sj);
+    let sub = ds.gather(&local_to_global);
+    let local_tree = kernel.mst(&sub);
+    local_tree
+        .iter()
+        .map(|e| Edge::new(local_to_global[e.u as usize], local_to_global[e.v as usize], e.w))
+        .collect()
+}
+
+/// Merge two ascending id lists into one ascending list (the subsets of a
+/// partition are disjoint and kept sorted by the partitioners).
+pub fn merge_sorted_ids(si: &[u32], sj: &[u32]) -> Vec<u32> {
+    debug_assert!(si.windows(2).all(|w| w[0] < w[1]));
+    debug_assert!(sj.windows(2).all(|w| w[0] < w[1]));
+    let mut out = Vec::with_capacity(si.len() + sj.len());
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < si.len() && b < sj.len() {
+        if si[a] < sj[b] {
+            out.push(si[a]);
+            a += 1;
+        } else {
+            out.push(sj[b]);
+            b += 1;
+        }
+    }
+    out.extend_from_slice(&si[a..]);
+    out.extend_from_slice(&sj[b..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_blobs, uniform, BlobSpec};
+    use crate::dense::PrimDense;
+    use crate::graph::components::is_spanning_tree;
+    use crate::mst::{normalize_tree, total_weight};
+    use crate::util::prng::Pcg64;
+
+    fn exact_mst(ds: &Dataset) -> Vec<Edge> {
+        PrimDense::sq_euclid().mst(ds)
+    }
+
+    #[test]
+    fn theorem1_exactness_small() {
+        let ds = uniform(60, 5, 1.0, Pcg64::seeded(200));
+        let expect = exact_mst(&ds);
+        for parts in [1usize, 2, 3, 4, 6, 10] {
+            let cfg = DecompConfig { parts, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+            assert!(is_spanning_tree(ds.n, &out.mst), "parts={parts}");
+            assert_eq!(
+                normalize_tree(&expect),
+                normalize_tree(&out.mst),
+                "parts={parts}: Theorem 1 exactness"
+            );
+        }
+    }
+
+    #[test]
+    fn exactness_across_strategies() {
+        let ds = gaussian_blobs(
+            &BlobSpec { n: 80, d: 10, k: 5, std: 0.4, spread: 6.0 },
+            Pcg64::seeded(201),
+        );
+        let expect = exact_mst(&ds);
+        for strategy in PartitionStrategy::ALL {
+            let cfg = DecompConfig { parts: 5, strategy, seed: 9, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+            assert_eq!(
+                normalize_tree(&expect),
+                normalize_tree(&out.mst),
+                "strategy {strategy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn union_is_superset_of_mst() {
+        // Lemma 1 consequence: every global MST edge appears in the union.
+        let ds = uniform(50, 3, 1.0, Pcg64::seeded(202));
+        let cfg = DecompConfig { parts: 5, keep_pair_trees: true, ..Default::default() };
+        let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+        let union: Vec<Edge> = out.pair_trees.iter().flatten().copied().collect();
+        let union_norm = crate::graph::edge::dedup_edges(&union);
+        for e in normalize_tree(&out.mst) {
+            assert!(
+                union_norm
+                    .binary_search_by(|u| u.u.cmp(&e.u).then(u.v.cmp(&e.v)))
+                    .is_ok(),
+                "MST edge ({},{}) missing from union",
+                e.u,
+                e.v
+            );
+        }
+    }
+
+    #[test]
+    fn union_edge_count_bound() {
+        // Each pair tree has |S_i ∪ S_j| - 1 edges; total ≈ |V|(|P|-1) — the
+        // O(|V||P|) gather the paper reports.
+        let ds = uniform(96, 4, 1.0, Pcg64::seeded(203));
+        for parts in [2usize, 4, 8] {
+            let cfg = DecompConfig { parts, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+            let expect: usize = {
+                // sum over pairs of (|S_i| + |S_j| - 1)
+                let sizes = &out.part_sizes;
+                let mut s = 0usize;
+                for j in 1..parts {
+                    for i in 0..j {
+                        s += sizes[i] + sizes[j] - 1;
+                    }
+                }
+                s
+            };
+            assert_eq!(out.union_edges, expect, "parts={parts}");
+            assert!(out.union_edges <= ds.n * parts, "O(|V||P|) bound");
+        }
+    }
+
+    #[test]
+    fn work_overhead_matches_formula() {
+        // Even partition, PrimDense does exactly m(m-1)/2 evals for m points:
+        // total = p(p-1)/2 * (2n/p)(2n/p - 1)/2. Ratio to n(n-1)/2 approaches
+        // 2(p-1)/p.
+        let n = 120usize;
+        let ds = uniform(n, 3, 1.0, Pcg64::seeded(204));
+        let base = PrimDense::sq_euclid();
+        base.mst(&ds);
+        let base_evals = base.dist_evals() as f64;
+        for parts in [2usize, 3, 4, 6] {
+            let cfg =
+                DecompConfig { parts, strategy: PartitionStrategy::Block, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+            let m = 2 * n / parts;
+            let expected = (parts * (parts - 1) / 2 * (m * (m - 1) / 2)) as u64;
+            assert_eq!(out.dist_evals, expected, "parts={parts}");
+            let ratio = out.dist_evals as f64 / base_evals;
+            let formula = 2.0 * (parts as f64 - 1.0) / parts as f64;
+            // (m-1) vs n-1 second-order terms make it slightly below formula
+            assert!(
+                (ratio - formula).abs() < 0.05,
+                "parts={parts}: ratio={ratio:.3} formula={formula:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_equals_exact_for_many_seeds() {
+        for seed in 0..8 {
+            let ds = uniform(40, 7, 1.0, Pcg64::seeded(300 + seed));
+            let expect = total_weight(&exact_mst(&ds));
+            let cfg = DecompConfig { parts: 4, seed, ..Default::default() };
+            let got = total_weight(&decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid()).mst);
+            assert!((expect - got).abs() < 1e-6 * (1.0 + expect), "seed={seed}");
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's contribution: distance-decomposed distributed EMST
+//! (Algorithm 1) and its analysis counters.
+//!
+//! ```text
+//! P = {S_i}          <- partition of vectors (vertices) V
+//! TreeEdges <- ∅
+//! for j in 2..=|P|, i in 1..j-1:
+//!     TreeEdges <- TreeEdges ∪ d-MST(S_i ∪ S_j)
+//! TreeEdges <- MST(TreeEdges)
+//! ```
+//!
+//! Correctness (Theorem 1): the union of pairwise-subset MSTs is a superset
+//! of the global MST because, per Lemma 1, `MSF(G)[S] ⊆ MSF(G[S])` — every
+//! global tree edge with both endpoints in `S_i ∪ S_j` survives in that
+//! subproblem's MST. Every global edge has its endpoints in *some* pair.
+//!
+//! This module contains the serial reference implementation plus the
+//! partitioners and pair schedule; the multi-threaded distributed execution
+//! with communication accounting lives in [`crate::coordinator`].
+
+pub mod partition;
+pub mod pairs;
+pub mod algorithm;
+pub mod reduction;
+
+pub use algorithm::{decomposed_mst, DecompConfig, DecompOutput};
+pub use pairs::{pair_count, PairJob, PairSchedule};
+pub use partition::{partition_indices, PartitionStrategy};

@@ -1,0 +1,107 @@
+//! The pair schedule: one job per unordered partition pair `(S_i, S_j)`.
+//!
+//! `|P|(|P|-1)/2` jobs — the paper's process count `p`. Jobs are independent
+//! (zero communication between them), which is the whole point.
+
+/// One d-MST job over `S_i ∪ S_j`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PairJob {
+    /// job id in schedule order
+    pub id: u32,
+    pub i: u32,
+    pub j: u32,
+}
+
+/// `p = |P|(|P|-1)/2` — the number of pair jobs / processes.
+pub fn pair_count(parts: usize) -> usize {
+    parts * parts.saturating_sub(1) / 2
+}
+
+/// All unordered pairs in the paper's loop order (`j` outer from 2, `i`
+/// inner), which interleaves subsets across early jobs.
+#[derive(Clone, Debug)]
+pub struct PairSchedule {
+    pub parts: usize,
+    pub jobs: Vec<PairJob>,
+}
+
+impl PairSchedule {
+    pub fn new(parts: usize) -> Self {
+        let mut jobs = Vec::with_capacity(pair_count(parts));
+        let mut id = 0u32;
+        for j in 1..parts as u32 {
+            for i in 0..j {
+                jobs.push(PairJob { id, i, j });
+                id += 1;
+            }
+        }
+        Self { parts, jobs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// How many jobs touch each subset (= |P| - 1 for all subsets).
+    pub fn touches_per_subset(&self) -> Vec<usize> {
+        let mut t = vec![0usize; self.parts];
+        for job in &self.jobs {
+            t[job.i as usize] += 1;
+            t[job.j as usize] += 1;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(pair_count(1), 0);
+        assert_eq!(pair_count(2), 1);
+        assert_eq!(pair_count(4), 6);
+        assert_eq!(pair_count(16), 120);
+    }
+
+    #[test]
+    fn schedule_enumerates_all_pairs_once() {
+        let s = PairSchedule::new(5);
+        assert_eq!(s.len(), 10);
+        let mut seen = std::collections::HashSet::new();
+        for job in &s.jobs {
+            assert!(job.i < job.j, "canonical order");
+            assert!(seen.insert((job.i, job.j)), "duplicate pair");
+        }
+        // ids are schedule positions
+        for (pos, job) in s.jobs.iter().enumerate() {
+            assert_eq!(job.id as usize, pos);
+        }
+    }
+
+    #[test]
+    fn paper_loop_order() {
+        let s = PairSchedule::new(4);
+        let pairs: Vec<(u32, u32)> = s.jobs.iter().map(|j| (j.i, j.j)).collect();
+        assert_eq!(pairs, vec![(0, 1), (0, 2), (1, 2), (0, 3), (1, 3), (2, 3)]);
+    }
+
+    #[test]
+    fn every_subset_touched_p_minus_1_times() {
+        for parts in [2usize, 3, 7, 12] {
+            let s = PairSchedule::new(parts);
+            assert!(s.touches_per_subset().iter().all(|&t| t == parts - 1));
+        }
+    }
+
+    #[test]
+    fn single_part_empty_schedule() {
+        let s = PairSchedule::new(1);
+        assert!(s.is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Dense Prim: `O(n²)` time, `O(n)` memory MST of the complete graph.
+//!
+//! The textbook dense formulation: keep, for every vertex not yet in the
+//! tree, its cheapest edge into the tree; each round admit the global
+//! cheapest frontier vertex and relax the rest with one distance evaluation
+//! per vertex. Exactly `n(n-1)/2` distance evaluations — the work unit that
+//! experiment E2's `2(|P|-1)/|P|` overhead ratio is measured in.
+
+use super::DenseMst;
+use crate::data::Dataset;
+use crate::geometry::{CountingMetric, Metric, MetricKind};
+use crate::graph::Edge;
+use crate::util::fkey::edge_cmp;
+
+/// Pure-Rust dense Prim d-MST kernel over any metric.
+pub struct PrimDense {
+    metric: CountingMetric,
+}
+
+impl PrimDense {
+    pub fn new(kind: MetricKind) -> Self {
+        Self { metric: CountingMetric::new(kind) }
+    }
+
+    /// Squared-Euclidean kernel (the high-dimensional-embedding default; the
+    /// monotone map x→x² preserves the MST vs true Euclidean).
+    pub fn sq_euclid() -> Self {
+        Self::new(MetricKind::SqEuclid)
+    }
+
+    /// Share this kernel's metric counter (e.g. to aggregate across workers).
+    pub fn metric(&self) -> &CountingMetric {
+        &self.metric
+    }
+}
+
+impl DenseMst for PrimDense {
+    fn mst(&self, ds: &Dataset) -> Vec<Edge> {
+        let n = ds.n;
+        let mut tree = Vec::with_capacity(n.saturating_sub(1));
+        if n <= 1 {
+            return tree;
+        }
+        // best[i] = (weight, tree-endpoint) of i's cheapest edge into the tree
+        let mut best_w = vec![f32::INFINITY; n];
+        let mut best_to = vec![0u32; n];
+        let mut in_tree = vec![false; n];
+        in_tree[0] = true;
+        for i in 1..n {
+            best_w[i] = self.metric.dist(ds.row(0), ds.row(i));
+            best_to[i] = 0;
+        }
+        for _round in 1..n {
+            // pick frontier vertex with min (w, u, v) strict edge order
+            let mut pick = usize::MAX;
+            for i in 0..n {
+                if in_tree[i] {
+                    continue;
+                }
+                if pick == usize::MAX
+                    || edge_cmp(
+                        best_w[i],
+                        best_to[i].min(i as u32),
+                        best_to[i].max(i as u32),
+                        best_w[pick],
+                        best_to[pick].min(pick as u32),
+                        best_to[pick].max(pick as u32),
+                    ) == std::cmp::Ordering::Less
+                {
+                    pick = i;
+                }
+            }
+            debug_assert_ne!(pick, usize::MAX);
+            in_tree[pick] = true;
+            tree.push(Edge::new(best_to[pick], pick as u32, best_w[pick]));
+            // relax
+            let prow = ds.row(pick);
+            for i in 0..n {
+                if in_tree[i] {
+                    continue;
+                }
+                let w = self.metric.dist(prow, ds.row(i));
+                if edge_cmp(
+                    w,
+                    (pick as u32).min(i as u32),
+                    (pick as u32).max(i as u32),
+                    best_w[i],
+                    best_to[i].min(i as u32),
+                    best_to[i].max(i as u32),
+                ) == std::cmp::Ordering::Less
+                {
+                    best_w[i] = w;
+                    best_to[i] = pick as u32;
+                }
+            }
+        }
+        tree
+    }
+
+    fn name(&self) -> &'static str {
+        "prim-dense"
+    }
+
+    fn dist_evals(&self) -> u64 {
+        self.metric.evals()
+    }
+
+    fn reset_counters(&self) {
+        self.metric.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::uniform;
+    use crate::graph::components::is_spanning_tree;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn trivial_sizes() {
+        let k = PrimDense::sq_euclid();
+        assert!(k.mst(&Dataset::zeros(0, 3)).is_empty());
+        assert!(k.mst(&Dataset::zeros(1, 3)).is_empty());
+        let two = Dataset::new(2, 1, vec![0.0, 3.0]);
+        let t = k.mst(&two);
+        assert_eq!(t, vec![Edge::new(0, 1, 9.0)]);
+    }
+
+    #[test]
+    fn spanning_and_deterministic() {
+        let ds = uniform(60, 8, 1.0, Pcg64::seeded(8));
+        let k = PrimDense::sq_euclid();
+        let t1 = k.mst(&ds);
+        let t2 = k.mst(&ds);
+        assert!(is_spanning_tree(ds.n, &t1));
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn collinear_points_chain() {
+        // Points on a line: MST must be the consecutive chain.
+        let ds = Dataset::new(5, 1, vec![0.0, 10.0, 1.0, 11.0, 2.0]);
+        let k = PrimDense::sq_euclid();
+        let t = k.mst(&ds);
+        let mut ws: Vec<f32> = t.iter().map(|e| e.w).collect();
+        ws.sort_by(f32::total_cmp);
+        // consecutive gaps: (0,2)=1, (2,4)=1, (1,3)=1, (4,1)=64 -> sq weights 1,1,1,64
+        assert_eq!(ws, vec![1.0, 1.0, 1.0, 64.0]);
+    }
+
+    #[test]
+    fn work_count_is_exactly_n_choose_2_plus_frontier() {
+        // n-1 initial + sum_{k=1}^{n-1} (n-1-k) relaxations
+        // = (n-1) + (n-1)(n-2)/2 = n(n-1)/2
+        let n = 33;
+        let ds = uniform(n, 4, 1.0, Pcg64::seeded(12));
+        let k = PrimDense::sq_euclid();
+        k.mst(&ds);
+        assert_eq!(k.dist_evals(), (n * (n - 1) / 2) as u64);
+        k.reset_counters();
+        assert_eq!(k.dist_evals(), 0);
+    }
+
+    #[test]
+    fn other_metrics_give_spanning_trees() {
+        let ds = uniform(24, 5, 1.0, Pcg64::seeded(14));
+        for kind in [MetricKind::Euclid, MetricKind::Cosine, MetricKind::Manhattan] {
+            let k = PrimDense::new(kind);
+            let t = k.mst(&ds);
+            assert!(is_spanning_tree(ds.n, &t), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn euclid_and_sqeuclid_same_structure() {
+        let ds = uniform(40, 6, 2.0, Pcg64::seeded(15));
+        let a = PrimDense::new(MetricKind::Euclid).mst(&ds);
+        let b = PrimDense::new(MetricKind::SqEuclid).mst(&ds);
+        let ea: Vec<(u32, u32)> = crate::mst::normalize_tree(&a).iter().map(|e| (e.u, e.v)).collect();
+        let eb: Vec<(u32, u32)> = crate::mst::normalize_tree(&b).iter().map(|e| (e.u, e.v)).collect();
+        assert_eq!(ea, eb, "monotone transform preserves MST structure");
+    }
+}

@@ -1,0 +1,193 @@
+//! The Borůvka cheapest-edge step: the `O(N²D)` compute hot-spot.
+//!
+//! `step(points, comps)` returns, for every valid vertex `i`, the squared
+//! Euclidean distance and index of the closest vertex in a *different*
+//! component. Vertices with `comps[i] < 0` are padding and ignored (they
+//! report `(+inf, -1)` and never appear as neighbors).
+//!
+//! Tie-break contract: among equal distances the **smallest index j** wins.
+//! As proven in `boruvka_dense::tests::smallest_j_matches_strict_order`, this
+//! per-row rule coincides with the crate's strict `(w, u, v)` edge order, so
+//! any provider honoring it yields the unique MST.
+//!
+//! Providers:
+//! - [`RustStep`] — blocked matmul-form pairwise distances, pure Rust.
+//! - `runtime::XlaStep` — the AOT-compiled Pallas kernel via PJRT.
+
+use crate::geometry::blocked::self_norms;
+
+/// Provider of the cheapest-edge step. Not `Send`/`Sync` — the XLA provider
+/// owns thread-local PJRT handles; build one per worker thread.
+pub trait CheapestEdgeStep {
+    /// `points`: row-major `(n, d)`. `comps[i] < 0` marks padding.
+    /// Returns `(dist, idx)` of length `n` each: for valid `i`, the closest
+    /// `j` with `comps[j] >= 0 && comps[j] != comps[i]` (smallest `j` on
+    /// ties), or `(+inf, -1)` if no such `j` (single component / padding).
+    fn step(&self, points: &[f32], n: usize, d: usize, comps: &[i32]) -> (Vec<f32>, Vec<i32>);
+
+    /// Name for reporting.
+    fn name(&self) -> &'static str;
+
+    /// Distance evaluations charged per call (for E2 work accounting):
+    /// valid_n², since the kernel computes the full masked matrix.
+    fn evals_per_call(&self, valid_n: u64) -> u64 {
+        valid_n * valid_n
+    }
+}
+
+/// Pure-Rust provider using blocked matmul-form pairwise distances.
+pub struct RustStep {
+    /// row-block size for the pairwise tiles
+    pub block: usize,
+}
+
+impl Default for RustStep {
+    fn default() -> Self {
+        Self { block: 64 }
+    }
+}
+
+impl CheapestEdgeStep for RustStep {
+    fn step(&self, points: &[f32], n: usize, d: usize, comps: &[i32]) -> (Vec<f32>, Vec<i32>) {
+        debug_assert_eq!(points.len(), n * d);
+        debug_assert_eq!(comps.len(), n);
+        let norms = self_norms(points, n, d);
+        let mut dist = vec![f32::INFINITY; n];
+        let mut idx = vec![-1i32; n];
+        let b = self.block.max(1);
+        // Perf note (EXPERIMENTS.md §Perf): fusing the min-scan into the dot
+        // loop (instead of materializing a (bm, bn) tile via pairwise_block
+        // and re-scanning it) avoids the tile write+read and the per-cell
+        // mask branch on the re-scan. Column blocking is kept so the b-rows
+        // tile stays cache-resident across the i loop.
+        for j0 in (0..n).step_by(b) {
+            let jm = (j0 + b).min(n);
+            for i in 0..n {
+                let ci = comps[i];
+                if ci < 0 {
+                    continue;
+                }
+                let arow = &points[i * d..(i + 1) * d];
+                let nai = norms[i];
+                let (mut bd, mut bj) = (dist[i], idx[i]);
+                for j in j0..jm {
+                    let cj = comps[j];
+                    if cj < 0 || cj == ci {
+                        continue;
+                    }
+                    let v = nai + norms[j]
+                        - 2.0 * crate::geometry::blocked::dot_unrolled(arow, &points[j * d..(j + 1) * d]);
+                    let v = if v < 0.0 { 0.0 } else { v };
+                    // strictly-less keeps the smallest j on ties because j
+                    // increases monotonically within and across blocks
+                    if v < bd {
+                        bd = v;
+                        bj = j as i32;
+                    }
+                }
+                dist[i] = bd;
+                idx[i] = bj;
+            }
+        }
+        (dist, idx)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-blocked"
+    }
+}
+
+/// Reference (unblocked, direct) provider used only in tests to validate the
+/// blocked/XLA providers.
+pub struct NaiveStep;
+
+impl CheapestEdgeStep for NaiveStep {
+    fn step(&self, points: &[f32], n: usize, d: usize, comps: &[i32]) -> (Vec<f32>, Vec<i32>) {
+        use crate::geometry::metric::sq_euclid;
+        let mut dist = vec![f32::INFINITY; n];
+        let mut idx = vec![-1i32; n];
+        for i in 0..n {
+            if comps[i] < 0 {
+                continue;
+            }
+            for j in 0..n {
+                if comps[j] < 0 || comps[j] == comps[i] {
+                    continue;
+                }
+                let w = sq_euclid(&points[i * d..(i + 1) * d], &points[j * d..(j + 1) * d]);
+                if w < dist[i] {
+                    dist[i] = w;
+                    idx[i] = j as i32;
+                }
+            }
+        }
+        (dist, idx)
+    }
+
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    /// Integer-valued coordinates so matmul-form distances are exact and the
+    /// blocked provider must agree with naive bit-for-bit.
+    fn int_points(rng: &mut Pcg64, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.next_bounded(17) as f32 - 8.0).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Pcg64::seeded(31);
+        for &(n, d, block) in &[(10usize, 3usize, 4usize), (33, 7, 8), (65, 2, 64), (20, 5, 100)] {
+            let pts = int_points(&mut rng, n, d);
+            let comps: Vec<i32> = (0..n).map(|i| (i % 5) as i32).collect();
+            let (d1, i1) = NaiveStep.step(&pts, n, d, &comps);
+            let (d2, i2) = RustStep { block }.step(&pts, n, d, &comps);
+            assert_eq!(i1, i2, "n={n} d={d} block={block}");
+            assert_eq!(d1, d2);
+        }
+    }
+
+    #[test]
+    fn padding_rows_ignored() {
+        let mut rng = Pcg64::seeded(32);
+        let (n, d) = (12, 4);
+        let pts = int_points(&mut rng, n, d);
+        let mut comps: Vec<i32> = (0..n).map(|i| (i % 3) as i32).collect();
+        comps[3] = -1;
+        comps[7] = -1;
+        let (dist, idx) = RustStep::default().step(&pts, n, d, &comps);
+        assert_eq!(dist[3], f32::INFINITY);
+        assert_eq!(idx[3], -1);
+        assert!(idx.iter().all(|&j| j != 3 && j != 7), "padding never selected");
+    }
+
+    #[test]
+    fn single_component_reports_inf() {
+        let pts = vec![0.0, 1.0, 2.0, 3.0];
+        let comps = vec![0, 0];
+        let (dist, idx) = RustStep::default().step(&pts, 2, 2, &comps);
+        assert_eq!(dist, vec![f32::INFINITY; 2]);
+        assert_eq!(idx, vec![-1; 2]);
+    }
+
+    #[test]
+    fn smallest_j_on_exact_ties() {
+        // Vertex 0 at origin; vertices 1 and 2 equidistant.
+        let pts = vec![
+            0.0, 0.0, // v0, comp 0
+            1.0, 0.0, // v1, comp 1
+            0.0, 1.0, // v2, comp 1
+        ];
+        let comps = vec![0, 1, 1];
+        for provider in [&NaiveStep as &dyn CheapestEdgeStep, &RustStep::default()] {
+            let (_, idx) = provider.step(&pts, 3, 2, &comps);
+            assert_eq!(idx[0], 1, "{}: smallest j wins tie", provider.name());
+        }
+    }
+}

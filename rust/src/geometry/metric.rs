@@ -1,0 +1,240 @@
+//! Symmetric binary distance functions between vectors.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The distance functions supported by the generalized geometric MST.
+///
+/// All are symmetric; `SqEuclid` is not a metric (no triangle inequality) but
+/// induces the same MST as `Euclid` (monotone transform), which is why the
+/// hot path uses it — one `sqrt` per *reported* edge instead of per pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MetricKind {
+    SqEuclid,
+    Euclid,
+    Cosine,
+    Manhattan,
+}
+
+impl MetricKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::SqEuclid => "sqeuclid",
+            MetricKind::Euclid => "euclid",
+            MetricKind::Cosine => "cosine",
+            MetricKind::Manhattan => "manhattan",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sqeuclid" | "sq_euclid" | "l2sq" => Some(MetricKind::SqEuclid),
+            "euclid" | "euclidean" | "l2" => Some(MetricKind::Euclid),
+            "cosine" | "cos" => Some(MetricKind::Cosine),
+            "manhattan" | "l1" | "cityblock" => Some(MetricKind::Manhattan),
+            _ => None,
+        }
+    }
+}
+
+/// A symmetric binary distance function.
+pub trait Metric: Send + Sync {
+    /// Distance between two equal-length vectors.
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Which kind this is (used for kernel selection and reporting).
+    fn kind(&self) -> MetricKind;
+
+    /// Number of distance evaluations performed so far, if counted.
+    fn evals(&self) -> u64 {
+        0
+    }
+}
+
+/// Plain (uncounted) metric implementation.
+#[derive(Clone, Copy, Debug)]
+pub struct PlainMetric(pub MetricKind);
+
+#[inline]
+pub fn sq_euclid(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than the naive loop on
+    // the pure-Rust d-MST baseline, and deterministic.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+#[inline]
+pub fn manhattan(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        // Zero vectors: define distance 1 (orthogonal-like), symmetric.
+        return 1.0;
+    }
+    1.0 - dot / (na.sqrt() * nb.sqrt())
+}
+
+impl Metric for PlainMetric {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        match self.0 {
+            MetricKind::SqEuclid => sq_euclid(a, b),
+            MetricKind::Euclid => sq_euclid(a, b).sqrt(),
+            MetricKind::Cosine => cosine(a, b),
+            MetricKind::Manhattan => manhattan(a, b),
+        }
+    }
+
+    fn kind(&self) -> MetricKind {
+        self.0
+    }
+}
+
+/// Metric wrapper that counts distance evaluations — the work measure used by
+/// experiment E2 (work-overhead ratio `2(|P|-1)/|P|`).
+#[derive(Clone)]
+pub struct CountingMetric {
+    inner: PlainMetric,
+    count: Arc<AtomicU64>,
+}
+
+impl CountingMetric {
+    pub fn new(kind: MetricKind) -> Self {
+        Self { inner: PlainMetric(kind), count: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Share the same counter across clones/threads.
+    pub fn counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.count)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+
+    /// Record `n` evaluations done externally (e.g. inside an XLA kernel,
+    /// where each cheapest-edge call performs N·N distance evaluations).
+    pub fn add_external(&self, n: u64) {
+        self.count.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+impl Metric for CountingMetric {
+    #[inline]
+    fn dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.dist(a, b)
+    }
+
+    fn kind(&self) -> MetricKind {
+        self.inner.kind()
+    }
+
+    fn evals(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A: [f32; 5] = [1.0, 2.0, 3.0, 4.0, 5.0];
+    const B: [f32; 5] = [2.0, 2.0, 1.0, 4.0, 7.0];
+
+    #[test]
+    fn sq_euclid_matches_manual() {
+        // diffs: -1, 0, 2, 0, -2 -> 1 + 4 + 4 = 9
+        assert_eq!(sq_euclid(&A, &B), 9.0);
+        assert_eq!(PlainMetric(MetricKind::Euclid).dist(&A, &B), 3.0);
+    }
+
+    #[test]
+    fn sq_euclid_unroll_tail() {
+        // length 5 exercises the tail (chunks*4 = 4).
+        let a = [0.0, 0.0, 0.0, 0.0, 3.0];
+        let b = [0.0, 0.0, 0.0, 0.0, 0.0];
+        assert_eq!(sq_euclid(&a, &b), 9.0);
+        // length < 4 entirely in tail
+        assert_eq!(sq_euclid(&[1.0, 2.0], &[2.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn manhattan_matches_manual() {
+        assert_eq!(manhattan(&A, &B), 1.0 + 0.0 + 2.0 + 0.0 + 2.0);
+    }
+
+    #[test]
+    fn cosine_props() {
+        let x = [1.0, 0.0];
+        let y = [0.0, 1.0];
+        assert!((cosine(&x, &y) - 1.0).abs() < 1e-6, "orthogonal -> 1");
+        assert!(cosine(&x, &x).abs() < 1e-6, "self -> 0");
+        let z = [-1.0, 0.0];
+        assert!((cosine(&x, &z) - 2.0).abs() < 1e-6, "opposite -> 2");
+        assert_eq!(cosine(&[0.0, 0.0], &x), 1.0, "zero vector convention");
+    }
+
+    #[test]
+    fn symmetry_all_kinds() {
+        for k in [MetricKind::SqEuclid, MetricKind::Euclid, MetricKind::Cosine, MetricKind::Manhattan] {
+            let m = PlainMetric(k);
+            assert_eq!(m.dist(&A, &B), m.dist(&B, &A), "{k:?} symmetric");
+            if k != MetricKind::Cosine {
+                assert_eq!(m.dist(&A, &A), 0.0, "{k:?} identity");
+            }
+        }
+    }
+
+    #[test]
+    fn counting_metric_counts() {
+        let m = CountingMetric::new(MetricKind::SqEuclid);
+        assert_eq!(m.evals(), 0);
+        m.dist(&A, &B);
+        m.dist(&A, &B);
+        assert_eq!(m.evals(), 2);
+        m.add_external(100);
+        assert_eq!(m.evals(), 102);
+        m.reset();
+        assert_eq!(m.evals(), 0);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [MetricKind::SqEuclid, MetricKind::Euclid, MetricKind::Cosine, MetricKind::Manhattan] {
+            assert_eq!(MetricKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(MetricKind::parse("l2"), Some(MetricKind::Euclid));
+        assert_eq!(MetricKind::parse("bogus"), None);
+    }
+}

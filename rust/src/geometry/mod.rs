@@ -1,0 +1,13 @@
+//! Distance functions ("generalized geometric" metrics per the paper) and
+//! blocked distance routines.
+//!
+//! The paper's graph weights are `w({x,y}) = d(x⃗, y⃗)` for a symmetric binary
+//! distance function. Everything downstream (MST, decomposition, dendrogram)
+//! is metric-agnostic; high-performance paths specialize squared Euclidean
+//! because the L1 Pallas kernel computes it in matmul form.
+
+pub mod metric;
+pub mod blocked;
+
+pub use metric::{CountingMetric, Metric, MetricKind};
+pub use blocked::{pairwise_block, self_norms};

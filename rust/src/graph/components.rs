@@ -1,0 +1,86 @@
+//! Connected components of an edge list (via union-find).
+
+use super::{Edge, UnionFind};
+
+/// Dense component labels (`0..k`) for `n` vertices under `edges`.
+pub fn component_labels(n: usize, edges: &[Edge]) -> Vec<u32> {
+    let mut uf = UnionFind::new(n);
+    for e in edges {
+        uf.union(e.u, e.v);
+    }
+    uf.dense_labels()
+}
+
+/// Number of connected components of `n` vertices under `edges`.
+pub fn num_components(n: usize, edges: &[Edge]) -> usize {
+    let mut uf = UnionFind::new(n);
+    for e in edges {
+        uf.union(e.u, e.v);
+    }
+    uf.components()
+}
+
+/// True iff `edges` form a spanning tree of `n` vertices: exactly `n-1`
+/// edges, one component, no duplicate pairs.
+pub fn is_spanning_tree(n: usize, edges: &[Edge]) -> bool {
+    if n == 0 {
+        return edges.is_empty();
+    }
+    if edges.len() != n - 1 {
+        return false;
+    }
+    let mut uf = UnionFind::new(n);
+    for e in edges {
+        if (e.u as usize) >= n || (e.v as usize) >= n || e.u == e.v {
+            return false;
+        }
+        if !uf.union(e.u, e.v) {
+            return false; // cycle
+        }
+    }
+    uf.components() == 1
+}
+
+/// True iff `edges` form a spanning forest (acyclic; any component count).
+pub fn is_forest(n: usize, edges: &[Edge]) -> bool {
+    let mut uf = UnionFind::new(n);
+    edges.iter().all(|e| {
+        (e.u as usize) < n && (e.v as usize) < n && e.u != e.v && uf.union(e.u, e.v)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(u: u32, v: u32) -> Edge {
+        Edge::new(u, v, 1.0)
+    }
+
+    #[test]
+    fn labels_and_counts() {
+        let edges = vec![e(0, 1), e(2, 3), e(3, 4)];
+        assert_eq!(num_components(6, &edges), 3);
+        let l = component_labels(6, &edges);
+        assert_eq!(l[0], l[1]);
+        assert_eq!(l[2], l[4]);
+        assert_ne!(l[0], l[2]);
+        assert_ne!(l[5], l[0]);
+    }
+
+    #[test]
+    fn spanning_tree_checks() {
+        assert!(is_spanning_tree(4, &[e(0, 1), e(1, 2), e(2, 3)]));
+        assert!(!is_spanning_tree(4, &[e(0, 1), e(1, 2)]), "too few edges");
+        assert!(!is_spanning_tree(4, &[e(0, 1), e(1, 2), e(0, 2)]), "cycle");
+        assert!(is_spanning_tree(1, &[]));
+        assert!(is_spanning_tree(0, &[]));
+    }
+
+    #[test]
+    fn forest_checks() {
+        assert!(is_forest(5, &[e(0, 1), e(2, 3)]));
+        assert!(!is_forest(5, &[e(0, 1), e(1, 2), e(0, 2)]));
+        assert!(is_forest(5, &[]));
+    }
+}

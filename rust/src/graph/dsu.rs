@@ -1,0 +1,197 @@
+//! Union-find (disjoint-set union) with union by rank and path halving.
+//!
+//! Used by Kruskal, sparse/dense Borůvka, SLINK→dendrogram conversion, and
+//! flat-cluster extraction. Amortized `O(α(n))` per op.
+
+/// Disjoint-set union over `0..n`.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+    components: usize,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "UnionFind supports up to 2^32-1 elements");
+        Self {
+            parent: (0..n as u32).collect(),
+            rank: vec![0; n],
+            components: n,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Number of disjoint components remaining.
+    #[inline]
+    pub fn components(&self) -> usize {
+        self.components
+    }
+
+    /// Find with path halving (iterative, no recursion).
+    #[inline]
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        debug_assert!((x as usize) < self.parent.len());
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            let gp = self.parent[p as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+    }
+
+    /// Read-only find (no compression) — usable with `&self`.
+    #[inline]
+    pub fn find_const(&self, mut x: u32) -> u32 {
+        loop {
+            let p = self.parent[x as usize];
+            if p == x {
+                return x;
+            }
+            x = p;
+        }
+    }
+
+    /// Union by rank; returns `true` if a merge happened.
+    #[inline]
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        self.components -= 1;
+        true
+    }
+
+    #[inline]
+    pub fn same(&mut self, a: u32, b: u32) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    /// Root label for every element (compresses everything).
+    pub fn labels(&mut self) -> Vec<u32> {
+        (0..self.parent.len() as u32).map(|i| self.find(i)).collect()
+    }
+
+    /// Root labels renumbered densely to `0..k` in first-appearance order.
+    pub fn dense_labels(&mut self) -> Vec<u32> {
+        let roots = self.labels();
+        let mut map = vec![u32::MAX; self.parent.len()];
+        let mut next = 0u32;
+        let mut out = Vec::with_capacity(roots.len());
+        for r in roots {
+            if map[r as usize] == u32::MAX {
+                map[r as usize] = next;
+                next += 1;
+            }
+            out.push(map[r as usize]);
+        }
+        out
+    }
+
+    /// Reset to n singletons without reallocating.
+    pub fn reset(&mut self) {
+        for (i, p) in self.parent.iter_mut().enumerate() {
+            *p = i as u32;
+        }
+        self.rank.fill(0);
+        self.components = self.parent.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singletons_initially() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.components(), 5);
+        for i in 0..5 {
+            assert_eq!(uf.find(i), i);
+        }
+    }
+
+    #[test]
+    fn union_merges_and_counts() {
+        let mut uf = UnionFind::new(6);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0), "already merged");
+        assert_eq!(uf.components(), 4);
+        assert!(uf.same(0, 1));
+        assert!(!uf.same(0, 2));
+        assert!(uf.union(0, 2));
+        assert!(uf.same(1, 3));
+        assert_eq!(uf.components(), 3);
+    }
+
+    #[test]
+    fn chain_compresses() {
+        let mut uf = UnionFind::new(100);
+        for i in 0..99 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.components(), 1);
+        let r = uf.find(0);
+        for i in 0..100 {
+            assert_eq!(uf.find(i), r);
+        }
+    }
+
+    #[test]
+    fn dense_labels_are_dense() {
+        let mut uf = UnionFind::new(7);
+        uf.union(1, 2);
+        uf.union(4, 5);
+        uf.union(5, 6);
+        let l = uf.dense_labels();
+        assert_eq!(l[1], l[2]);
+        assert_eq!(l[4], l[5]);
+        assert_eq!(l[5], l[6]);
+        assert_ne!(l[0], l[1]);
+        let max = *l.iter().max().unwrap() as usize;
+        assert_eq!(max + 1, uf.components());
+        assert_eq!(l[0], 0, "first-appearance order starts at 0");
+    }
+
+    #[test]
+    fn find_const_agrees_with_find() {
+        let mut uf = UnionFind::new(32);
+        for i in (0..31).step_by(2) {
+            uf.union(i, i + 1);
+        }
+        for i in 0..32 {
+            assert_eq!(uf.find_const(i), uf.clone().find(i));
+        }
+    }
+
+    #[test]
+    fn reset_restores_singletons() {
+        let mut uf = UnionFind::new(8);
+        uf.union(0, 7);
+        uf.union(1, 2);
+        uf.reset();
+        assert_eq!(uf.components(), 8);
+        assert!(!uf.same(0, 7));
+    }
+}

@@ -1,0 +1,138 @@
+//! Weighted undirected edges with the crate-wide canonical strict order.
+
+use crate::util::fkey::edge_cmp;
+use std::cmp::Ordering;
+
+/// An undirected weighted edge. Canonical form keeps `u < v`.
+///
+/// The strict total order `(w, u, v)` (weights via IEEE total_cmp) makes the
+/// minimum spanning forest unique even under weight ties, which is the
+/// uniqueness assumption the paper's Theorem 1 relies on.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+    pub w: f32,
+}
+
+impl Edge {
+    /// Construct in canonical form (`u < v`). Panics on self-loops in debug.
+    #[inline]
+    pub fn new(u: u32, v: u32, w: f32) -> Self {
+        debug_assert!(u != v, "self-loop edge ({u},{v})");
+        debug_assert!(!w.is_nan(), "NaN edge weight");
+        if u < v {
+            Self { u, v, w }
+        } else {
+            Self { u: v, v: u, w }
+        }
+    }
+
+    /// The endpoint other than `x` (debug-asserts `x` is an endpoint).
+    #[inline]
+    pub fn other(&self, x: u32) -> u32 {
+        debug_assert!(x == self.u || x == self.v);
+        if x == self.u {
+            self.v
+        } else {
+            self.u
+        }
+    }
+
+    /// Strict total order: `(w, u, v)` lexicographic.
+    #[inline]
+    pub fn cmp_strict(&self, other: &Self) -> Ordering {
+        edge_cmp(self.w, self.u, self.v, other.w, other.u, other.v)
+    }
+
+    /// Serialized wire size in bytes (u32 + u32 + f32): used by the netsim
+    /// byte accounting.
+    pub const WIRE_BYTES: usize = 12;
+}
+
+impl Eq for Edge {}
+
+impl PartialOrd for Edge {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp_strict(other))
+    }
+}
+
+impl Ord for Edge {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.cmp_strict(other)
+    }
+}
+
+/// Sort edges by the canonical strict order.
+pub fn sort_edges(edges: &mut [Edge]) {
+    edges.sort_unstable();
+}
+
+/// Canonicalize endpoint order on every edge (u < v), preserving weights.
+pub fn canonical_edges(edges: &[Edge]) -> Vec<Edge> {
+    edges.iter().map(|e| Edge::new(e.u, e.v, e.w)).collect()
+}
+
+/// Sort + remove duplicate `(u, v)` pairs, keeping the smallest weight for
+/// each pair. Inputs need not be canonical. Used when unioning pairwise
+/// d-MSTs before the final sparse MST — the same global edge appears in up to
+/// `|P|-1` subproblem trees.
+pub fn dedup_edges(edges: &[Edge]) -> Vec<Edge> {
+    let mut es = canonical_edges(edges);
+    // Order by (u, v, w) so equal pairs are adjacent, cheapest first.
+    es.sort_unstable_by(|a, b| {
+        a.u.cmp(&b.u).then(a.v.cmp(&b.v)).then(a.w.total_cmp(&b.w))
+    });
+    es.dedup_by(|next, prev| next.u == prev.u && next.v == prev.v);
+    es
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_orientation() {
+        let e = Edge::new(5, 2, 1.5);
+        assert_eq!((e.u, e.v, e.w), (2, 5, 1.5));
+        assert_eq!(e.other(2), 5);
+        assert_eq!(e.other(5), 2);
+    }
+
+    #[test]
+    fn strict_order_ties_broken_by_endpoints() {
+        let a = Edge::new(0, 1, 1.0);
+        let b = Edge::new(0, 2, 1.0);
+        let c = Edge::new(1, 2, 0.5);
+        let mut v = vec![b, a, c];
+        sort_edges(&mut v);
+        assert_eq!(v, vec![c, a, b]);
+    }
+
+    #[test]
+    fn dedup_keeps_min_weight() {
+        let es = vec![
+            Edge { u: 3, v: 1, w: 2.0 }, // non-canonical on purpose
+            Edge::new(1, 3, 1.0),
+            Edge::new(1, 3, 3.0),
+            Edge::new(0, 1, 0.5),
+        ];
+        let d = dedup_edges(&es);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0], Edge::new(0, 1, 0.5));
+        assert_eq!(d[1], Edge::new(1, 3, 1.0));
+    }
+
+    #[test]
+    fn dedup_empty() {
+        assert!(dedup_edges(&[]).is_empty());
+    }
+
+    #[test]
+    fn wire_bytes_matches_fields() {
+        assert_eq!(Edge::WIRE_BYTES, 4 + 4 + 4);
+    }
+}

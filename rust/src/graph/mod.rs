@@ -1,0 +1,9 @@
+//! Graph primitives: weighted edges, union-find, connected components.
+
+pub mod edge;
+pub mod dsu;
+pub mod components;
+
+pub use dsu::UnionFind;
+pub use edge::{canonical_edges, dedup_edges, sort_edges, Edge};
+pub use components::{component_labels, num_components};

@@ -1,0 +1,69 @@
+//! # demst — Distributed Euclidean-MST / Single-Linkage Dendrograms via Distance Decomposition
+//!
+//! A production-oriented reproduction of
+//! *"A Surprisingly Simple Method for Distributed Euclidean-Minimum Spanning Tree /
+//! Single Linkage Dendrogram Construction from High Dimensional Embeddings via
+//! Distance Decomposition"* (R. Lettich, LBNL, 2024).
+//!
+//! The library implements the paper's Algorithm 1: partition the vertex set
+//! (vectors) into `|P|` subsets, compute a *dense* MST (`d-MST`) over each of the
+//! `|P|(|P|-1)/2` pairwise unions in parallel, gather the edge union, and take a
+//! sparse MST of the union to recover the **exact** global Euclidean MST
+//! (Theorem 1). The MST converts to/from a single-linkage dendrogram in
+//! `O(n α(n))` / `O(n)`.
+//!
+//! ## Architecture
+//!
+//! Three layers; Python is never on the request path:
+//!
+//! - **L3 (this crate)** — coordinator: partitioners, pair scheduling, a
+//!   thread-per-rank worker pool with a simulated network (byte-accounted),
+//!   gather + sparse MST, dendrogram construction, CLI/config/metrics.
+//! - **L2/L1 (python/, build time)** — JAX model + Pallas kernels for the
+//!   `O(N²D)` cheapest-edge step of dense Borůvka, AOT-lowered to HLO text in
+//!   `artifacts/` by `make artifacts`.
+//! - **runtime** — loads the HLO artifacts through the PJRT CPU client
+//!   (`xla` crate) and executes them from the Rust hot path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use demst::prelude::*;
+//!
+//! let ds = demst::data::generators::gaussian_blobs(
+//!     &demst::data::generators::BlobSpec { n: 512, d: 32, k: 8, std: 0.4, spread: 8.0 },
+//!     demst::util::prng::Pcg64::seeded(42),
+//! );
+//! let cfg = DecompConfig { parts: 4, ..Default::default() };
+//! let out = demst::decomp::decomposed_mst(&ds, &cfg, &demst::dense::PrimDense::sq_euclid());
+//! let dendro = demst::slink::mst_to_dendrogram(ds.n, &out.mst);
+//! let labels = dendro.cut_to_k(8);
+//! assert_eq!(labels.len(), ds.n);
+//! ```
+
+pub mod util;
+pub mod config;
+pub mod cli;
+pub mod data;
+pub mod geometry;
+pub mod graph;
+pub mod mst;
+pub mod dense;
+pub mod slink;
+pub mod decomp;
+pub mod coordinator;
+pub mod runtime;
+pub mod baselines;
+pub mod report;
+pub mod bench_util;
+
+/// Common imports for downstream users.
+pub mod prelude {
+    pub use crate::data::Dataset;
+    pub use crate::decomp::{decomposed_mst, DecompConfig, PartitionStrategy};
+    pub use crate::dense::{DenseMst, PrimDense};
+    pub use crate::geometry::Metric;
+    pub use crate::graph::{Edge, UnionFind};
+    pub use crate::mst::{kruskal, total_weight};
+    pub use crate::slink::{mst_to_dendrogram, Dendrogram};
+}

@@ -1,0 +1,336 @@
+//! `demst` — launcher CLI for the distributed EMST / single-linkage system.
+//!
+//! Subcommands:
+//!   run       distributed EMST + optional dendrogram on a dataset
+//!   gen       generate a synthetic dataset to .npy
+//!   info      inspect an artifact directory
+//!   selftest  quick end-to-end correctness check (all kernels available)
+//!
+//! Examples:
+//!   demst run --data embedding --n 2048 --d 128 --parts 6 --workers 4 --verify
+//!   demst run --config examples/configs/embedding.toml --kernel xla
+//!   demst gen --kind blobs --n 1000 --d 64 --out /tmp/blobs.npy
+//!   demst info --artifacts artifacts
+
+use anyhow::{bail, Context, Result};
+use demst::cli::{parse_args, Args, OptSpec};
+use demst::config::run_config::build_dataset;
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::decomp::PartitionStrategy;
+use demst::geometry::MetricKind;
+use demst::report::Table;
+use demst::slink::mst_to_dendrogram;
+use demst::util::human_bytes;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match real_main(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "gen" => cmd_gen(rest),
+        "info" => cmd_info(rest),
+        "selftest" => cmd_selftest(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `demst help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "demst — distributed Euclidean-MST / single-linkage dendrograms via distance decomposition
+
+USAGE: demst <run|gen|info|selftest|help> [options]
+
+run       distributed EMST (+ dendrogram) on a generated or .npy dataset
+gen       write a synthetic dataset to .npy
+info      list AOT artifacts and check they compile
+selftest  quick correctness check across kernels
+"
+    );
+}
+
+fn run_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "TOML config file (defaults applied first)" },
+        OptSpec { name: "data", takes_value: true, help: "blobs|uniform|embedding|shells|npy" },
+        OptSpec { name: "path", takes_value: true, help: ".npy file when --data npy" },
+        OptSpec { name: "n", takes_value: true, help: "points" },
+        OptSpec { name: "d", takes_value: true, help: "dimensions" },
+        OptSpec { name: "clusters", takes_value: true, help: "generator clusters" },
+        OptSpec { name: "parts", takes_value: true, help: "|P| partition subsets" },
+        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
+        OptSpec { name: "strategy", takes_value: true, help: "block|round-robin|random|kmeans-lite" },
+        OptSpec { name: "metric", takes_value: true, help: "sqeuclid|euclid|cosine|manhattan" },
+        OptSpec { name: "kernel", takes_value: true, help: "prim-dense|boruvka-rust|boruvka-xla" },
+        OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
+        OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
+        OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
+        OptSpec { name: "simulate-net", takes_value: false, help: "sleep for modeled latency/bandwidth" },
+        OptSpec { name: "verify", takes_value: false, help: "check result against SLINK oracle (O(n^2))" },
+        OptSpec { name: "k", takes_value: true, help: "also cut dendrogram into k flat clusters" },
+        OptSpec { name: "min-cluster-size", takes_value: true, help: "HDBSCAN-style stability extraction with this min size" },
+        OptSpec { name: "out-mst", takes_value: true, help: "write MST edges as CSV" },
+        OptSpec { name: "out-labels", takes_value: true, help: "write flat cluster labels as CSV (needs --k)" },
+    ]
+}
+
+fn build_run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = args.get("data") {
+        cfg.data.kind = v.to_string();
+    }
+    if let Some(v) = args.get("path") {
+        cfg.data.path = Some(v.into());
+    }
+    if let Some(v) = args.get_parse::<usize>("n")? {
+        cfg.data.n = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("d")? {
+        cfg.data.d = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("clusters")? {
+        cfg.data.clusters = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("parts")? {
+        cfg.parts = v;
+    }
+    if let Some(v) = args.get_parse::<usize>("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_parse::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get("strategy") {
+        cfg.strategy =
+            PartitionStrategy::parse(v).with_context(|| format!("unknown strategy {v:?}"))?;
+    }
+    if let Some(v) = args.get("metric") {
+        cfg.metric = MetricKind::parse(v).with_context(|| format!("unknown metric {v:?}"))?;
+    }
+    if let Some(v) = args.get("kernel") {
+        cfg.kernel = KernelChoice::parse(v).with_context(|| format!("unknown kernel {v:?}"))?;
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.into();
+    }
+    if args.has_flag("reduce-tree") {
+        cfg.reduce_tree = true;
+    }
+    if args.has_flag("simulate-net") {
+        cfg.net.simulate_delays = true;
+    }
+    if args.has_flag("verify") {
+        cfg.verify = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let specs = run_specs();
+    let args = parse_args(argv, &specs)?;
+    let cfg = build_run_config(&args)?;
+
+    // npy datasets override n/d from the file
+    let (ds, _truth) = build_dataset(&cfg)?;
+    println!(
+        "dataset: kind={} n={} d={} | parts={} strategy={} kernel={} workers={}",
+        cfg.data.kind,
+        ds.n,
+        ds.d,
+        cfg.parts,
+        cfg.strategy.name(),
+        cfg.kernel.name(),
+        demst::coordinator::leader::resolve_workers(&cfg),
+    );
+
+    let out = run_distributed(&ds, &cfg)?;
+    println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
+    println!("metrics: {}", out.metrics.summary());
+
+    if cfg.verify {
+        let metric = demst::geometry::metric::PlainMetric(cfg.metric);
+        let oracle = demst::slink::slink_mst(&ds, &metric);
+        let (a, b) =
+            (demst::mst::total_weight(&oracle), demst::mst::total_weight(&out.mst));
+        if (a - b).abs() > 1e-5 * (1.0 + a.abs()) {
+            bail!("VERIFY FAILED: slink oracle weight {a} != distributed weight {b}");
+        }
+        println!("verify: OK (slink oracle weight matches: {a:.6})");
+    }
+
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let heights = dendro.heights();
+    if !heights.is_empty() {
+        println!(
+            "dendrogram: {} merges, height range [{:.4}, {:.4}]",
+            dendro.merges.len(),
+            heights.first().unwrap(),
+            heights.last().unwrap()
+        );
+    }
+
+    if let Some(k) = args.get_parse::<usize>("k")? {
+        let labels = dendro.cut_to_k(k);
+        let sizes = cluster_sizes(&labels);
+        println!("flat clustering k={k}: sizes {sizes:?}");
+        if let Some(path) = args.get("out-labels") {
+            let mut t = Table::new("", &["index", "label"]);
+            for (i, l) in labels.iter().enumerate() {
+                t.push_row(&[i.to_string(), l.to_string()]);
+            }
+            t.write_csv(std::path::Path::new(path))?;
+            println!("labels written to {path}");
+        }
+    }
+
+    if let Some(mcs) = args.get_parse::<usize>("min-cluster-size")? {
+        let stable = demst::slink::extract_stable_clusters(&dendro, mcs);
+        let k = stable.stabilities.len();
+        let noise = stable.labels.iter().filter(|&&l| l == demst::slink::NOISE).count();
+        let mut sizes = vec![0usize; k];
+        for &l in &stable.labels {
+            if l != demst::slink::NOISE {
+                sizes[l as usize] += 1;
+            }
+        }
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        println!(
+            "stable clusters (min size {mcs}): {k} clusters, sizes {sizes:?}, {noise} noise points"
+        );
+    }
+
+    if let Some(path) = args.get("out-mst") {
+        let mut t = Table::new("", &["u", "v", "weight"]);
+        for e in &out.mst {
+            t.push_row(&[e.u.to_string(), e.v.to_string(), format!("{}", e.w)]);
+        }
+        t.write_csv(std::path::Path::new(path))?;
+        println!("mst written to {path}");
+    }
+    Ok(())
+}
+
+fn cluster_sizes(labels: &[u32]) -> Vec<usize> {
+    let k = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l as usize] += 1;
+    }
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    sizes
+}
+
+fn cmd_gen(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "kind", takes_value: true, help: "blobs|uniform|embedding|shells" },
+        OptSpec { name: "n", takes_value: true, help: "points" },
+        OptSpec { name: "d", takes_value: true, help: "dimensions" },
+        OptSpec { name: "clusters", takes_value: true, help: "generator clusters" },
+        OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
+        OptSpec { name: "out", takes_value: true, help: "output .npy path (required)" },
+    ];
+    let args = parse_args(argv, &specs)?;
+    let mut cfg = RunConfig::default();
+    cfg.data.kind = args.get("kind").unwrap_or("blobs").to_string();
+    cfg.data.n = args.get_or("n", 1024usize)?;
+    cfg.data.d = args.get_or("d", 64usize)?;
+    cfg.data.clusters = args.get_or("clusters", 8usize)?;
+    cfg.seed = args.get_or("seed", 42u64)?;
+    cfg.parts = 1;
+    let out = args.get("out").context("--out is required")?;
+    let (ds, _) = build_dataset(&cfg)?;
+    demst::data::npy::write_npy(std::path::Path::new(out), &ds)?;
+    println!("wrote {} ({} x {}, {})", out, ds.n, ds.d, human_bytes(ds.payload_bytes()));
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
+        OptSpec { name: "compile", takes_value: false, help: "also compile every artifact" },
+    ];
+    let args = parse_args(argv, &specs)?;
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let engine = demst::runtime::Engine::load(&dir)?;
+    let mut t = Table::new(format!("artifacts in {}", dir.display()), &["kernel", "N", "D", "file", "status"]);
+    for a in engine.manifest().artifacts.clone() {
+        let status = if args.has_flag("compile") {
+            match engine.executable(&a) {
+                Ok(_) => "compiles".to_string(),
+                Err(e) => format!("ERROR: {e}"),
+            }
+        } else {
+            let present = engine.manifest().path_of(&a).is_file();
+            if present { "present".into() } else { "MISSING".into() }
+        };
+        t.push_row(&[a.kernel.clone(), a.n.to_string(), a.d.to_string(), a.file.clone(), status]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_selftest(argv: &[String]) -> Result<()> {
+    let specs = vec![OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir" }];
+    let args = parse_args(argv, &specs)?;
+    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+
+    let mut cfg = RunConfig::default();
+    cfg.data.kind = "blobs".into();
+    cfg.data.n = 200;
+    cfg.data.d = 16;
+    cfg.data.clusters = 5;
+    cfg.parts = 4;
+    cfg.artifacts_dir = artifacts.clone();
+    let (ds, _) = build_dataset(&cfg)?;
+    let metric = demst::geometry::metric::PlainMetric(cfg.metric);
+    let oracle = demst::mst::total_weight(&demst::slink::slink_mst(&ds, &metric));
+
+    let mut kernels = vec![KernelChoice::PrimDense, KernelChoice::BoruvkaRust];
+    if demst::runtime::Engine::artifacts_available(&artifacts) {
+        kernels.push(KernelChoice::BoruvkaXla);
+    } else {
+        println!("(artifacts missing at {} — skipping boruvka-xla; run `make artifacts`)", artifacts.display());
+    }
+    let mut t = Table::new("selftest", &["kernel", "weight", "status"]);
+    for kernel in kernels {
+        cfg.kernel = kernel.clone();
+        let out = run_distributed(&ds, &cfg)?;
+        let w = demst::mst::total_weight(&out.mst);
+        let ok = (w - oracle).abs() < 1e-5 * (1.0 + oracle.abs());
+        t.push_row(&[
+            kernel.name().to_string(),
+            format!("{w:.6}"),
+            if ok { "OK".into() } else { format!("MISMATCH vs oracle {oracle:.6}") },
+        ]);
+        if !ok {
+            t.print();
+            bail!("selftest failed for kernel {}", kernel.name());
+        }
+    }
+    t.print();
+    println!("selftest passed (oracle weight {oracle:.6})");
+    Ok(())
+}

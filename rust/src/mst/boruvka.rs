@@ -1,0 +1,118 @@
+//! Borůvka's algorithm on sparse edge lists.
+//!
+//! Third independent MST oracle, and the sparse twin of the dense Borůvka
+//! loop in `crate::dense::BoruvkaXla` — both select each component's
+//! minimum outgoing edge per round, so this module is also where that
+//! selection logic is tested in isolation.
+
+use crate::graph::{Edge, UnionFind};
+use crate::util::fkey::edge_cmp;
+
+/// Minimum spanning forest via Borůvka rounds.
+pub fn boruvka_sparse(n: usize, edges: &[Edge]) -> Vec<Edge> {
+    let mut uf = UnionFind::new(n);
+    let mut tree: Vec<Edge> = Vec::with_capacity(n.saturating_sub(1));
+    if n == 0 || edges.is_empty() {
+        return tree;
+    }
+    // best candidate edge index per component root, rebuilt each round
+    let mut best: Vec<u32> = vec![u32::MAX; n];
+    loop {
+        let mut any = false;
+        for slot in best.iter_mut() {
+            *slot = u32::MAX;
+        }
+        for (idx, e) in edges.iter().enumerate() {
+            let (ru, rv) = (uf.find(e.u), uf.find(e.v));
+            if ru == rv {
+                continue;
+            }
+            any = true;
+            for r in [ru, rv] {
+                let cur = best[r as usize];
+                if cur == u32::MAX || better(e, &edges[cur as usize]) {
+                    best[r as usize] = idx as u32;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        let mut merged = false;
+        // Deterministic merge order: iterate roots ascending.
+        for r in 0..n {
+            let b = best[r];
+            if b == u32::MAX {
+                continue;
+            }
+            let e = edges[b as usize];
+            if uf.union(e.u, e.v) {
+                tree.push(Edge::new(e.u, e.v, e.w));
+                merged = true;
+            }
+        }
+        if !merged {
+            break;
+        }
+        if uf.components() == 1 {
+            break;
+        }
+    }
+    tree
+}
+
+#[inline]
+fn better(a: &Edge, b: &Edge) -> bool {
+    edge_cmp(a.w, a.u, a.v, b.w, b.u, b.v) == std::cmp::Ordering::Less
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mst::{kruskal, normalize_tree};
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn matches_kruskal_with_ties() {
+        let mut rng = Pcg64::seeded(33);
+        for trial in 0..30 {
+            let n = 2 + rng.next_bounded(50) as usize;
+            let m = 1 + rng.next_bounded((2 * n) as u64) as usize;
+            let mut edges = Vec::with_capacity(m);
+            for _ in 0..m {
+                let u = rng.next_bounded(n as u64) as u32;
+                let mut v = rng.next_bounded(n as u64) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                let w = (rng.next_bounded(4) as f32) + 1.0; // heavy ties
+                edges.push(Edge::new(u, v, w));
+            }
+            let k = kruskal(n, &edges);
+            let b = boruvka_sparse(n, &edges);
+            assert_eq!(normalize_tree(&k), normalize_tree(&b), "trial {trial} (n={n} m={m})");
+        }
+    }
+
+    #[test]
+    fn single_edge() {
+        let t = boruvka_sparse(2, &[Edge::new(0, 1, 3.0)]);
+        assert_eq!(t, vec![Edge::new(0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn terminates_on_disconnected() {
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(2, 3, 1.0)];
+        let t = boruvka_sparse(5, &edges);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn rounds_are_logarithmic_path() {
+        // Path graph: Borůvka still terminates quickly and exactly.
+        let n = 128;
+        let edges: Vec<Edge> = (0..n - 1).map(|i| Edge::new(i, i + 1, (i % 3) as f32 + 1.0)).collect();
+        let t = boruvka_sparse(n as usize, &edges);
+        assert_eq!(t.len(), (n - 1) as usize);
+    }
+}

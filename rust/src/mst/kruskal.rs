@@ -1,0 +1,103 @@
+//! Kruskal's algorithm: sort + union-find. The workhorse sparse MST used by
+//! the coordinator's gather step (edge count there is `O(|V|·|P|)`, so the
+//! sort dominates at `O(|V||P| log(|V||P|))` — cheap relative to d-MST work).
+
+use crate::graph::{Edge, UnionFind};
+
+/// Minimum spanning forest of `n` vertices over `edges`.
+/// Returns edges in the order they were admitted (ascending strict order).
+pub fn kruskal(n: usize, edges: &[Edge]) -> Vec<Edge> {
+    let mut es: Vec<Edge> = edges.iter().map(|e| Edge::new(e.u, e.v, e.w)).collect();
+    es.sort_unstable(); // strict (w, u, v) order => unique MSF under ties
+    kruskal_presorted(n, &es)
+}
+
+/// Kruskal over edges already sorted in strict order (skips the sort).
+pub fn kruskal_presorted(n: usize, sorted_edges: &[Edge]) -> Vec<Edge> {
+    let mut uf = UnionFind::new(n);
+    let mut tree = Vec::with_capacity(n.saturating_sub(1));
+    for &e in sorted_edges {
+        if uf.union(e.u, e.v) {
+            tree.push(e);
+            if uf.components() == 1 {
+                break;
+            }
+        }
+    }
+    tree
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components::is_spanning_tree;
+    use crate::mst::total_weight;
+
+    fn sample_graph() -> (usize, Vec<Edge>) {
+        // CLRS-style example, unique weights.
+        let edges = vec![
+            Edge::new(0, 1, 4.0),
+            Edge::new(0, 7, 8.0),
+            Edge::new(1, 7, 11.0),
+            Edge::new(1, 2, 8.0),
+            Edge::new(7, 8, 7.0),
+            Edge::new(7, 6, 1.0),
+            Edge::new(2, 8, 2.0),
+            Edge::new(8, 6, 6.0),
+            Edge::new(2, 3, 7.0),
+            Edge::new(2, 5, 4.0),
+            Edge::new(6, 5, 2.0),
+            Edge::new(3, 5, 14.0),
+            Edge::new(3, 4, 9.0),
+            Edge::new(5, 4, 10.0),
+        ];
+        (9, edges)
+    }
+
+    #[test]
+    fn clrs_example_weight() {
+        let (n, edges) = sample_graph();
+        let t = kruskal(n, &edges);
+        assert!(is_spanning_tree(n, &t));
+        assert_eq!(total_weight(&t), 37.0);
+    }
+
+    #[test]
+    fn disconnected_graph_gives_forest() {
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(2, 3, 2.0)];
+        let t = kruskal(5, &edges);
+        assert_eq!(t.len(), 2, "two components joined internally; vertex 4 isolated");
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(kruskal(0, &[]).is_empty());
+        assert!(kruskal(1, &[]).is_empty());
+    }
+
+    #[test]
+    fn parallel_edges_pick_cheapest() {
+        let edges = vec![
+            Edge::new(0, 1, 5.0),
+            Edge::new(0, 1, 1.0),
+            Edge::new(0, 1, 3.0),
+        ];
+        let t = kruskal(2, &edges);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].w, 1.0);
+    }
+
+    #[test]
+    fn tie_break_deterministic() {
+        // Square with all-equal weights: unique MSF under (w,u,v) order is
+        // the 3 lexicographically-smallest edges that stay acyclic.
+        let edges = vec![
+            Edge::new(0, 1, 1.0),
+            Edge::new(1, 2, 1.0),
+            Edge::new(2, 3, 1.0),
+            Edge::new(0, 3, 1.0),
+        ];
+        let t = kruskal(4, &edges);
+        assert_eq!(t, vec![Edge::new(0, 1, 1.0), Edge::new(0, 3, 1.0), Edge::new(1, 2, 1.0)]);
+    }
+}

@@ -1,0 +1,54 @@
+//! Sparse minimum-spanning-tree/forest algorithms over explicit edge lists.
+//!
+//! These implement the paper's outer `MST(TreeEdges)` step — the cheap sparse
+//! pass over the `O(|V|·|P|)` union of pairwise d-MST edges — plus two
+//! independent algorithms used as cross-checking oracles in tests.
+//!
+//! All algorithms break weight ties with the crate-wide strict edge order
+//! `(w, u, v)`, so the MSF is unique and all of them (plus the dense kernels
+//! and the decomposed algorithm) return *identical* edge sets, not just equal
+//! weights.
+
+pub mod kruskal;
+pub mod prim;
+pub mod boruvka;
+pub mod validate;
+
+pub use boruvka::boruvka_sparse;
+pub use kruskal::kruskal;
+pub use prim::prim_sparse;
+pub use validate::{assert_same_tree, verify_cut_property, verify_cycle_property};
+
+use crate::graph::Edge;
+
+/// Sum of edge weights (f64 accumulator for stability).
+pub fn total_weight(edges: &[Edge]) -> f64 {
+    edges.iter().map(|e| e.w as f64).sum()
+}
+
+/// Canonically sorted copy of an MSF edge list, for equality comparisons.
+pub fn normalize_tree(edges: &[Edge]) -> Vec<Edge> {
+    let mut es: Vec<Edge> = edges.iter().map(|e| Edge::new(e.u, e.v, e.w)).collect();
+    es.sort_unstable_by(|a, b| a.u.cmp(&b.u).then(a.v.cmp(&b.v)));
+    es
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_weight_sums() {
+        let es = vec![Edge::new(0, 1, 1.5), Edge::new(1, 2, 2.5)];
+        assert_eq!(total_weight(&es), 4.0);
+        assert_eq!(total_weight(&[]), 0.0);
+    }
+
+    #[test]
+    fn normalize_sorts_by_endpoints() {
+        let es = vec![Edge::new(5, 2, 1.0), Edge::new(0, 1, 9.0)];
+        let n = normalize_tree(&es);
+        assert_eq!(n[0], Edge::new(0, 1, 9.0));
+        assert_eq!(n[1], Edge::new(2, 5, 1.0));
+    }
+}

@@ -1,0 +1,135 @@
+//! Prim's algorithm with a binary heap over an adjacency list.
+//! Used as an independent oracle against Kruskal/Borůvka in tests.
+
+use crate::graph::Edge;
+use crate::util::fkey::edge_cmp;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: candidate edge into the tree. Min-heap via reversed order;
+/// tie-broken with the strict edge order so the MSF matches Kruskal's exactly.
+struct Cand {
+    w: f32,
+    u: u32,
+    v: u32,
+    /// vertex this candidate would add
+    add: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap
+        edge_cmp(other.w, other.u, other.v, self.w, self.u, self.v)
+    }
+}
+
+/// Minimum spanning forest via Prim (restarted per component).
+pub fn prim_sparse(n: usize, edges: &[Edge]) -> Vec<Edge> {
+    // adjacency list
+    let mut deg = vec![0u32; n];
+    for e in edges {
+        deg[e.u as usize] += 1;
+        deg[e.v as usize] += 1;
+    }
+    let mut start = vec![0usize; n + 1];
+    for i in 0..n {
+        start[i + 1] = start[i] + deg[i] as usize;
+    }
+    let mut adj = vec![(0u32, 0f32); edges.len() * 2];
+    let mut fill = start.clone();
+    for e in edges {
+        adj[fill[e.u as usize]] = (e.v, e.w);
+        fill[e.u as usize] += 1;
+        adj[fill[e.v as usize]] = (e.u, e.w);
+        fill[e.v as usize] += 1;
+    }
+
+    let mut in_tree = vec![false; n];
+    let mut tree = Vec::with_capacity(n.saturating_sub(1));
+    let mut heap = BinaryHeap::new();
+
+    for root in 0..n as u32 {
+        if in_tree[root as usize] {
+            continue;
+        }
+        in_tree[root as usize] = true;
+        push_neighbors(&adj, &start, root, &in_tree, &mut heap);
+        while let Some(c) = heap.pop() {
+            if in_tree[c.add as usize] {
+                continue;
+            }
+            in_tree[c.add as usize] = true;
+            tree.push(Edge::new(c.u, c.v, c.w));
+            push_neighbors(&adj, &start, c.add, &in_tree, &mut heap);
+        }
+    }
+    tree
+}
+
+fn push_neighbors(
+    adj: &[(u32, f32)],
+    start: &[usize],
+    v: u32,
+    in_tree: &[bool],
+    heap: &mut BinaryHeap<Cand>,
+) {
+    for &(to, w) in &adj[start[v as usize]..start[v as usize + 1]] {
+        if !in_tree[to as usize] {
+            let (a, b) = if v < to { (v, to) } else { (to, v) };
+            heap.push(Cand { w, u: a, v: b, add: to });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components::is_forest;
+    use crate::mst::{kruskal, normalize_tree, total_weight};
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn matches_kruskal_on_random_graphs() {
+        let mut rng = Pcg64::seeded(21);
+        for trial in 0..30 {
+            let n = 2 + (rng.next_bounded(40) as usize);
+            let m = rng.next_bounded((n * (n - 1) / 2 + 1) as u64) as usize;
+            let mut edges = Vec::with_capacity(m);
+            for _ in 0..m {
+                let u = rng.next_bounded(n as u64) as u32;
+                let mut v = rng.next_bounded(n as u64) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                // small weight alphabet to force plenty of ties
+                let w = (rng.next_bounded(8) as f32) * 0.5;
+                edges.push(Edge::new(u, v, w));
+            }
+            let k = kruskal(n, &edges);
+            let p = prim_sparse(n, &edges);
+            assert!(is_forest(n, &p));
+            assert_eq!(
+                normalize_tree(&k),
+                normalize_tree(&p),
+                "trial {trial}: identical MSF expected (n={n}, m={m})"
+            );
+            assert_eq!(total_weight(&k), total_weight(&p));
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        assert!(prim_sparse(4, &[]).is_empty());
+    }
+}

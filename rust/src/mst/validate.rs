@@ -1,0 +1,216 @@
+//! MST validation helpers: structural checks and the cut/cycle properties.
+//! Used in tests and by the `--verify` CLI flag.
+
+use crate::graph::{components::is_forest, Edge, UnionFind};
+use crate::mst::normalize_tree;
+use crate::util::fkey::edge_cmp;
+
+/// Panic unless two MSFs are the identical edge set (canonical order).
+pub fn assert_same_tree(expected: &[Edge], got: &[Edge], context: &str) {
+    let e = normalize_tree(expected);
+    let g = normalize_tree(got);
+    if e != g {
+        let only_e: Vec<_> = e.iter().filter(|x| !g.contains(x)).collect();
+        let only_g: Vec<_> = g.iter().filter(|x| !e.contains(x)).collect();
+        panic!(
+            "{context}: trees differ\n  expected {} edges, got {}\n  missing: {only_e:?}\n  extra:   {only_g:?}",
+            e.len(),
+            g.len()
+        );
+    }
+}
+
+/// Verify the cycle property: for every non-tree edge `e` of `graph_edges`,
+/// `e` must not be strictly smaller than the maximum tree edge on the path
+/// between its endpoints. O(m·n) — test-sized graphs only.
+pub fn verify_cycle_property(n: usize, tree: &[Edge], graph_edges: &[Edge]) -> Result<(), String> {
+    if !is_forest(n, tree) {
+        return Err("tree is not a forest".into());
+    }
+    // adjacency over tree edges
+    let mut adj: Vec<Vec<(u32, f32, u32, u32)>> = vec![Vec::new(); n];
+    for e in tree {
+        adj[e.u as usize].push((e.v, e.w, e.u, e.v));
+        adj[e.v as usize].push((e.u, e.w, e.u, e.v));
+    }
+    let tree_norm = normalize_tree(tree);
+    for ge in graph_edges {
+        let ge = Edge::new(ge.u, ge.v, ge.w);
+        if tree_norm.binary_search_by(|t| t.u.cmp(&ge.u).then(t.v.cmp(&ge.v))).is_ok() {
+            continue; // tree edge
+        }
+        // max-weight edge on the tree path u -> v (BFS)
+        if let Some((mw, mu, mv)) = path_max(&adj, n, ge.u, ge.v) {
+            // strict order: non-tree edge must NOT be smaller than path max
+            if edge_cmp(ge.w, ge.u, ge.v, mw, mu, mv) == std::cmp::Ordering::Less {
+                return Err(format!(
+                    "cycle property violated: non-tree edge ({},{},w={}) < path max ({},{},w={})",
+                    ge.u, ge.v, ge.w, mu, mv, mw
+                ));
+            }
+        }
+        // endpoints in different forest components: edge connects two trees —
+        // that's a violation too (forest should have used it)
+        else {
+            return Err(format!(
+                "forest is not maximal: edge ({},{}) connects two components",
+                ge.u, ge.v
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Verify the cut property on sampled cuts: for `k` random bipartitions, the
+/// lightest crossing edge of the graph must be in the tree.
+pub fn verify_cut_property(
+    n: usize,
+    tree: &[Edge],
+    graph_edges: &[Edge],
+    samples: usize,
+    seed: u64,
+) -> Result<(), String> {
+    use crate::util::prng::Pcg64;
+    let mut rng = Pcg64::seeded(seed);
+    let tree_norm = normalize_tree(tree);
+    // Only sample cuts that respect connectivity: we put each vertex on a
+    // random side; lightest crossing edge within a connected component must
+    // be a tree edge.
+    let mut uf = UnionFind::new(n);
+    for e in graph_edges {
+        uf.union(e.u, e.v);
+    }
+    for _ in 0..samples {
+        let side: Vec<bool> = (0..n).map(|_| rng.next_f64() < 0.5).collect();
+        // lightest crossing edge per component root
+        let mut best: Vec<Option<Edge>> = vec![None; n];
+        for e in graph_edges {
+            if side[e.u as usize] != side[e.v as usize] {
+                let r = uf.find(e.u) as usize;
+                let replace = match &best[r] {
+                    None => true,
+                    Some(b) => edge_cmp(e.w, e.u, e.v, b.w, b.u, b.v) == std::cmp::Ordering::Less,
+                };
+                if replace {
+                    best[r] = Some(Edge::new(e.u, e.v, e.w));
+                }
+            }
+        }
+        for b in best.into_iter().flatten() {
+            if tree_norm.binary_search_by(|t| t.u.cmp(&b.u).then(t.v.cmp(&b.v))).is_err() {
+                return Err(format!(
+                    "cut property violated: lightest crossing edge ({},{},w={}) not in tree",
+                    b.u, b.v, b.w
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Max-weight edge (in strict order) on the tree path between a and b, or
+/// None if disconnected. BFS with parent tracking.
+fn path_max(
+    adj: &[Vec<(u32, f32, u32, u32)>],
+    n: usize,
+    a: u32,
+    b: u32,
+) -> Option<(f32, u32, u32)> {
+    let mut prev: Vec<Option<(u32, f32, u32, u32)>> = vec![None; n];
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    visited[a as usize] = true;
+    queue.push_back(a);
+    while let Some(x) = queue.pop_front() {
+        if x == b {
+            break;
+        }
+        for &(to, w, eu, ev) in &adj[x as usize] {
+            if !visited[to as usize] {
+                visited[to as usize] = true;
+                prev[to as usize] = Some((x, w, eu, ev));
+                queue.push_back(to);
+            }
+        }
+    }
+    if !visited[b as usize] {
+        return None;
+    }
+    let mut cur = b;
+    let mut best: Option<(f32, u32, u32)> = None;
+    while cur != a {
+        let (p, w, eu, ev) = prev[cur as usize].unwrap();
+        let replace = match best {
+            None => true,
+            Some((bw, bu, bv)) => edge_cmp(w, eu, ev, bw, bu, bv) == std::cmp::Ordering::Greater,
+        };
+        if replace {
+            best = Some((w, eu, ev));
+        }
+        cur = p;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mst::kruskal;
+    use crate::util::prng::Pcg64;
+
+    fn random_graph(seed: u64, n: usize, m: usize) -> Vec<Edge> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..m)
+            .map(|_| {
+                let u = rng.next_bounded(n as u64) as u32;
+                let mut v = rng.next_bounded(n as u64) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                Edge::new(u, v, rng.next_f32() * 10.0)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kruskal_passes_both_properties() {
+        for seed in 0..5 {
+            let n = 30;
+            let edges = random_graph(seed, n, 120);
+            let t = kruskal(n, &edges);
+            verify_cycle_property(n, &t, &edges).unwrap();
+            verify_cut_property(n, &t, &edges, 20, seed).unwrap();
+        }
+    }
+
+    #[test]
+    fn detects_bad_tree() {
+        // Replace the lightest edge with a heavy detour: must fail.
+        let edges = vec![
+            Edge::new(0, 1, 1.0),
+            Edge::new(1, 2, 2.0),
+            Edge::new(0, 2, 10.0),
+        ];
+        let bad_tree = vec![Edge::new(0, 2, 10.0), Edge::new(1, 2, 2.0)];
+        assert!(verify_cycle_property(3, &bad_tree, &edges).is_err());
+    }
+
+    #[test]
+    fn assert_same_tree_passes_on_equal() {
+        let t = vec![Edge::new(0, 1, 1.0)];
+        assert_same_tree(&t, &t.clone(), "self");
+    }
+
+    #[test]
+    #[should_panic(expected = "trees differ")]
+    fn assert_same_tree_panics_on_diff() {
+        assert_same_tree(&[Edge::new(0, 1, 1.0)], &[Edge::new(0, 2, 1.0)], "diff");
+    }
+
+    #[test]
+    fn detects_non_maximal_forest() {
+        let edges = vec![Edge::new(0, 1, 1.0), Edge::new(1, 2, 1.0)];
+        let incomplete = vec![Edge::new(0, 1, 1.0)];
+        assert!(verify_cycle_property(3, &incomplete, &edges).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Reporting: fixed-width console tables (the bench harness prints the
+//! paper-style rows through this) and CSV output.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience: add a row of displayable items.
+    pub fn push_row<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                widths[c] = widths[c].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "## {}", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for c in 0..cols {
+                if c > 0 {
+                    s.push_str("  ");
+                }
+                let w = widths[c];
+                let cell = &cells[c];
+                // right-align numerics, left-align text
+                if cell.parse::<f64>().is_ok() || cell.ends_with('%') || cell.ends_with('x') {
+                    let pad = w.saturating_sub(cell.chars().count());
+                    s.push_str(&" ".repeat(pad));
+                    s.push_str(cell);
+                } else {
+                    s.push_str(cell);
+                    let pad = w.saturating_sub(cell.chars().count());
+                    s.push_str(&" ".repeat(pad));
+                }
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write as CSV.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut s = String::new();
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Format a ratio as `1.87x`.
+pub fn ratio(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+/// Format a float with 3 significant decimals.
+pub fn f3(x: f64) -> String {
+    format!("{:.3}", x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.push_row(&["alpha".to_string(), "1.5".to_string()]);
+        t.push_row(&["b".to_string(), "100.25".to_string()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // all rows same width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("c", &["a", "b"]);
+        t.push_row(&["has,comma".to_string(), "has\"quote".to_string()]);
+        let p = std::env::temp_dir().join("demst_report_test.csv");
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"has,comma\""));
+        assert!(s.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(ratio(1.875), "1.88x");
+        assert_eq!(f3(0.12349), "0.123");
+    }
+}

@@ -1,0 +1,78 @@
+//! The XLA-backed cheapest-edge step: pads inputs into the artifact's shape
+//! bucket, executes the AOT-compiled Pallas kernel, and unpads the result.
+
+use super::engine::Engine;
+use crate::dense::step::CheapestEdgeStep;
+use anyhow::{anyhow, Result};
+
+pub const KERNEL_NAME: &str = "cheapest_edge";
+
+/// [`CheapestEdgeStep`] provider backed by the AOT Pallas/XLA kernel.
+pub struct XlaStep {
+    engine: Engine,
+}
+
+impl XlaStep {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn step_impl(
+        &self,
+        points: &[f32],
+        n: usize,
+        d: usize,
+        comps: &[i32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let bucket = self.engine.bucket_for(KERNEL_NAME, n, d)?;
+        let (bn, bd) = (bucket.n, bucket.d);
+        // Pad rows with zeros (masked out via comp = -1) and feature dims
+        // with zeros (adds 0 to every squared distance).
+        let mut pts = vec![0.0f32; bn * bd];
+        for i in 0..n {
+            pts[i * bd..i * bd + d].copy_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        let mut cs = vec![-1i32; bn];
+        cs[..n].copy_from_slice(comps);
+
+        let exe = self.engine.executable(&bucket)?;
+        let x = xla::Literal::vec1(&pts)
+            .reshape(&[bn as i64, bd as i64])
+            .map_err(|e| anyhow!("reshaping points literal: {e:?}"))?;
+        let c = xla::Literal::vec1(&cs);
+        let out = self.engine.run(&exe, &[x, c])?;
+        let (dist_l, idx_l) =
+            out.to_tuple2().map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
+        let mut dist = dist_l.to_vec::<f32>().map_err(|e| anyhow!("dist to_vec: {e:?}"))?;
+        let mut idx = idx_l.to_vec::<i32>().map_err(|e| anyhow!("idx to_vec: {e:?}"))?;
+        dist.truncate(n);
+        idx.truncate(n);
+        // Sanity: padded rows can never be selected as neighbors.
+        debug_assert!(idx.iter().all(|&j| j < n as i32));
+        Ok((dist, idx))
+    }
+}
+
+impl CheapestEdgeStep for XlaStep {
+    fn step(&self, points: &[f32], n: usize, d: usize, comps: &[i32]) -> (Vec<f32>, Vec<i32>) {
+        self.step_impl(points, n, d, comps)
+            .expect("XLA cheapest-edge execution failed (rebuild artifacts with `make artifacts`)")
+    }
+
+    fn name(&self) -> &'static str {
+        "pallas-xla"
+    }
+
+    /// The kernel computes the full padded `N²` matrix — charge the bucket,
+    /// not the logical size (honest hardware work for E2/E7).
+    fn evals_per_call(&self, valid_n: u64) -> u64 {
+        match self.engine.manifest().find_bucket(KERNEL_NAME, valid_n as usize, 1) {
+            Some(a) => (a.n * a.n) as u64,
+            None => valid_n * valid_n,
+        }
+    }
+}

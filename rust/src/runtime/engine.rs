@@ -1,0 +1,95 @@
+//! The PJRT engine: one CPU client + a cache of compiled executables keyed
+//! by artifact. One engine per worker thread (PJRT handles are raw pointers,
+//! deliberately thread-local — see `crate::coordinator`).
+
+use super::manifest::{Artifact, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// PJRT client + compiled-executable cache over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<(String, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True iff an artifact directory looks usable (manifest present).
+    pub fn artifacts_available(artifacts_dir: &Path) -> bool {
+        artifacts_dir.join("manifest.txt").is_file()
+    }
+
+    /// Smallest bucket fitting `(n, d)` for `kernel`, or an error listing
+    /// what's available.
+    pub fn bucket_for(&self, kernel: &str, n: usize, d: usize) -> Result<Artifact> {
+        self.manifest.find_bucket(kernel, n, d).cloned().ok_or_else(|| {
+            let have: Vec<String> = self
+                .manifest
+                .artifacts
+                .iter()
+                .filter(|a| a.kernel == kernel)
+                .map(|a| format!("({},{})", a.n, a.d))
+                .collect();
+            anyhow!(
+                "no artifact bucket fits kernel={kernel} n={n} d={d}; available: [{}] — \
+                 regenerate with `make artifacts` after extending python/compile/shapes.py",
+                have.join(", ")
+            )
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, a: &Artifact) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = (a.kernel.clone(), a.n, a.d);
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(Rc::clone(exe));
+        }
+        let path = self.manifest.path_of(a);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(key, Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute a compiled artifact with literal inputs; returns the
+    /// (possibly tuple) output literal.
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing artifact: {e:?}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result literal: {e:?}"))
+            .context("device-to-host transfer")
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,136 @@
+//! The artifact manifest: which HLO files exist for which kernel and shape
+//! bucket. Written by `aot.py` as a line-based text file (one artifact per
+//! line: `kernel N D filename`), deliberately trivial to parse in both
+//! languages.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    pub kernel: String,
+    /// row-capacity of the bucket
+    pub n: usize,
+    /// feature-dim capacity of the bucket
+    pub d: usize,
+    pub file: String,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text. Lines: `kernel N D filename`; `#` comments.
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 4 {
+                bail!("manifest line {}: expected `kernel N D file`, got {raw:?}", lineno + 1);
+            }
+            artifacts.push(Artifact {
+                kernel: fields[0].to_string(),
+                n: fields[1].parse().with_context(|| format!("line {}: bad N", lineno + 1))?,
+                d: fields[2].parse().with_context(|| format!("line {}: bad D", lineno + 1))?,
+                file: fields[3].to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest in {} lists no artifacts", dir.display());
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Smallest bucket that fits `(n, d)` for `kernel`: minimize `N`, then
+    /// `D`, subject to `N >= n && D >= d`.
+    pub fn find_bucket(&self, kernel: &str, n: usize, d: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel && a.n >= n && a.d >= d)
+            .min_by_key(|a| (a.n, a.d))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// All distinct kernels in the manifest.
+    pub fn kernels(&self) -> Vec<&str> {
+        let mut ks: Vec<&str> = self.artifacts.iter().map(|a| a.kernel.as_str()).collect();
+        ks.sort_unstable();
+        ks.dedup();
+        ks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kernel N D file
+cheapest_edge 64 8 ce_n64_d8.hlo.txt
+cheapest_edge 64 32 ce_n64_d32.hlo.txt
+cheapest_edge 256 8 ce_n256_d8.hlo.txt
+cheapest_edge 256 32 ce_n256_d32.hlo.txt
+pairwise 64 8 pw_n64_d8.hlo.txt
+";
+
+    fn sample() -> Manifest {
+        Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parse_and_kernels() {
+        let m = sample();
+        assert_eq!(m.artifacts.len(), 5);
+        assert_eq!(m.kernels(), vec!["cheapest_edge", "pairwise"]);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = sample();
+        let a = m.find_bucket("cheapest_edge", 50, 8).unwrap();
+        assert_eq!((a.n, a.d), (64, 8));
+        let a = m.find_bucket("cheapest_edge", 64, 9).unwrap();
+        assert_eq!((a.n, a.d), (64, 32));
+        let a = m.find_bucket("cheapest_edge", 65, 4).unwrap();
+        assert_eq!((a.n, a.d), (256, 8));
+        assert!(m.find_bucket("cheapest_edge", 257, 8).is_none());
+        assert!(m.find_bucket("nonexistent", 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("/x"), "cheapest_edge 64 8").is_err());
+        assert!(Manifest::parse(Path::new("/x"), "k sixty 8 f").is_err());
+        assert!(Manifest::parse(Path::new("/x"), "# only comments\n").is_err());
+    }
+
+    #[test]
+    fn path_join() {
+        let m = sample();
+        assert_eq!(
+            m.path_of(&m.artifacts[0]),
+            PathBuf::from("/tmp/a/ce_n64_d8.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange format is **HLO text** (`HloModuleProto::from_text_file`),
+//! not serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Artifacts are compiled for fixed `(N, D)` shape buckets; inputs are
+//! padded (rows: `comp = -1` masked inside the kernel; feature dims: zeros,
+//! distance-preserving) up to the smallest fitting bucket, and compiled
+//! executables are cached per bucket for the life of the engine.
+
+pub mod manifest;
+pub mod engine;
+pub mod cheapest_edge;
+pub mod pairwise;
+
+pub use cheapest_edge::XlaStep;
+pub use engine::Engine;
+pub use manifest::{Artifact, Manifest};
+pub use pairwise::XlaPairwise;

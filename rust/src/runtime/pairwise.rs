@@ -1,0 +1,54 @@
+//! The XLA-backed pairwise-distance block: full `(N, N)` squared-Euclidean
+//! matrix for a padded point set. Used by the E7 kernel bench and as a
+//! cross-check of the Rust blocked routines against the Pallas kernel.
+
+use super::engine::Engine;
+use anyhow::{anyhow, Result};
+
+pub const KERNEL_NAME: &str = "pairwise";
+
+/// Executor for the AOT pairwise-distance kernel.
+pub struct XlaPairwise {
+    engine: Engine,
+}
+
+impl XlaPairwise {
+    pub fn new(engine: Engine) -> Self {
+        Self { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Full `(n, n)` squared-Euclidean distance matrix (row-major), computed
+    /// by the AOT kernel in the smallest fitting `(N, D)` bucket.
+    ///
+    /// Padding note: padded rows are zero vectors, so their distances are
+    /// meaningless but sliced away before returning.
+    pub fn matrix(&self, points: &[f32], n: usize, d: usize) -> Result<Vec<f32>> {
+        assert_eq!(points.len(), n * d);
+        let bucket = self.engine.bucket_for(KERNEL_NAME, n, d)?;
+        let (bn, bd) = (bucket.n, bucket.d);
+        let mut pts = vec![0.0f32; bn * bd];
+        for i in 0..n {
+            pts[i * bd..i * bd + d].copy_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        let exe = self.engine.executable(&bucket)?;
+        let x = xla::Literal::vec1(&pts)
+            .reshape(&[bn as i64, bd as i64])
+            .map_err(|e| anyhow!("reshaping points literal: {e:?}"))?;
+        let out = self.engine.run(&exe, &[x])?;
+        let full = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("matrix to_vec: {e:?}"))?;
+        // slice the (n, n) top-left block out of the (bn, bn) padded matrix
+        let mut m = Vec::with_capacity(n * n);
+        for i in 0..n {
+            m.extend_from_slice(&full[i * bn..i * bn + n]);
+        }
+        Ok(m)
+    }
+}

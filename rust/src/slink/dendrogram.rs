@@ -1,0 +1,304 @@
+//! Single-linkage dendrograms (scipy `linkage`-style merge lists) and the
+//! MST → dendrogram conversion.
+
+use crate::graph::{Edge, UnionFind};
+
+/// One agglomerative merge. Cluster ids: leaves are `0..n`; the i-th merge
+/// creates cluster `n + i` (scipy convention).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Merge {
+    pub a: u32,
+    pub b: u32,
+    /// linkage distance at which `a` and `b` merge
+    pub height: f32,
+    /// size of the merged cluster
+    pub size: u32,
+}
+
+/// A single-linkage dendrogram over `n` leaves. For disconnected inputs the
+/// merge list is shorter than `n-1` (a forest of dendrograms).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dendrogram {
+    pub n: usize,
+    pub merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Merge heights in merge order (non-decreasing for single linkage).
+    pub fn heights(&self) -> Vec<f32> {
+        self.merges.iter().map(|m| m.height).collect()
+    }
+
+    /// Parent cluster id of every cluster id (`u32::MAX` for roots).
+    pub fn parents(&self) -> Vec<u32> {
+        let total = self.n + self.merges.len();
+        let mut parent = vec![u32::MAX; total];
+        for (i, m) in self.merges.iter().enumerate() {
+            let id = (self.n + i) as u32;
+            parent[m.a as usize] = id;
+            parent[m.b as usize] = id;
+        }
+        parent
+    }
+
+    /// Cophenetic distance: the height at which leaves `i` and `j` first
+    /// share a cluster (`+inf` if they never merge). `O(depth)` per query.
+    pub fn cophenetic(&self, i: u32, j: u32) -> f32 {
+        assert!((i as usize) < self.n && (j as usize) < self.n);
+        if i == j {
+            return 0.0;
+        }
+        let parent = self.parents();
+        // Collect i's ancestor set with the height each ancestor was made at.
+        let total = self.n + self.merges.len();
+        let mut anc = vec![false; total];
+        let mut cur = i;
+        loop {
+            anc[cur as usize] = true;
+            let p = parent[cur as usize];
+            if p == u32::MAX {
+                break;
+            }
+            cur = p;
+        }
+        let mut cur = j;
+        loop {
+            if anc[cur as usize] {
+                // cur is a cluster created by merge (cur - n), unless leaf j==i
+                if (cur as usize) < self.n {
+                    return 0.0; // unreachable: i != j leaves
+                }
+                return self.merges[cur as usize - self.n].height;
+            }
+            let p = parent[cur as usize];
+            if p == u32::MAX {
+                return f32::INFINITY;
+            }
+            cur = p;
+        }
+    }
+
+    /// Flat clusters cutting at `height` (merges with `height <= h` applied).
+    pub fn cut_at_height(&self, h: f32) -> Vec<u32> {
+        cut_at_height(self, h)
+    }
+
+    /// Flat clusters with exactly `k` clusters (or the max possible for a
+    /// forest with more than `k` roots).
+    pub fn cut_to_k(&self, k: usize) -> Vec<u32> {
+        cut_to_k(self, k)
+    }
+
+    /// Convert back to a spanning tree of the ultrametric: for each merge,
+    /// connect representative leaves of its two children at the merge height.
+    /// The result is a valid MST of the single-linkage ultrametric, i.e.
+    /// `mst_to_dendrogram(to_mst())` reproduces the same merge heights —
+    /// the paper's "can be converted between each other efficiently".
+    pub fn to_mst(&self) -> Vec<Edge> {
+        let total = self.n + self.merges.len();
+        // representative leaf of every cluster id
+        let mut rep: Vec<u32> = (0..total as u32).collect();
+        for (i, m) in self.merges.iter().enumerate() {
+            let id = self.n + i;
+            rep[id] = rep[m.a as usize].min(rep[m.b as usize]);
+        }
+        self.merges
+            .iter()
+            .map(|m| Edge::new(rep[m.a as usize], rep[m.b as usize], m.height))
+            .collect()
+    }
+}
+
+/// Build the single-linkage dendrogram from an MST/MSF: sort edges ascending
+/// (strict order) and merge with a union-find. `O(n log n)` beyond the MST.
+pub fn mst_to_dendrogram(n: usize, mst: &[Edge]) -> Dendrogram {
+    let mut edges: Vec<Edge> = mst.to_vec();
+    edges.sort_unstable();
+    let mut uf = UnionFind::new(n);
+    // cluster id and size currently associated with each union-find root
+    let mut cluster: Vec<u32> = (0..n as u32).collect();
+    let mut size: Vec<u32> = vec![1; n];
+    let mut merges = Vec::with_capacity(edges.len());
+    for e in &edges {
+        let (ru, rv) = (uf.find(e.u), uf.find(e.v));
+        assert_ne!(ru, rv, "input contains a cycle: not a forest");
+        let (ca, cb) = (cluster[ru as usize], cluster[rv as usize]);
+        let sz = size[ru as usize] + size[rv as usize];
+        let id = (n + merges.len()) as u32;
+        merges.push(Merge { a: ca.min(cb), b: ca.max(cb), height: e.w, size: sz });
+        uf.union(ru, rv);
+        let r = uf.find(ru);
+        cluster[r as usize] = id;
+        size[r as usize] = sz;
+    }
+    Dendrogram { n, merges }
+}
+
+/// Flat clusters cutting at `height`: dense labels `0..k`.
+pub fn cut_at_height(d: &Dendrogram, h: f32) -> Vec<u32> {
+    let mut uf = UnionFind::new(d.n + d.merges.len());
+    for (i, m) in d.merges.iter().enumerate() {
+        if m.height <= h {
+            let id = (d.n + i) as u32;
+            uf.union(m.a, id);
+            uf.union(m.b, id);
+        }
+    }
+    dense_leaf_labels(d.n, &mut uf)
+}
+
+/// Flat clusters with exactly `k` clusters by applying merges ascending until
+/// `k` remain. (Single-linkage heights are non-decreasing in merge order, so
+/// this equals cutting between the `(n-k)`-th and `(n-k+1)`-th heights.)
+pub fn cut_to_k(d: &Dendrogram, k: usize) -> Vec<u32> {
+    assert!(k >= 1);
+    let mut uf = UnionFind::new(d.n + d.merges.len());
+    // Applying t merges leaves n - t clusters, so t = n - k (clamped to the
+    // number of available merges — a forest may not reach k=1).
+    let take = d.n.saturating_sub(k).min(d.merges.len());
+    for (i, m) in d.merges.iter().take(take).enumerate() {
+        let id = (d.n + i) as u32;
+        uf.union(m.a, id);
+        uf.union(m.b, id);
+    }
+    dense_leaf_labels(d.n, &mut uf)
+}
+
+fn dense_leaf_labels(n: usize, uf: &mut UnionFind) -> Vec<u32> {
+    let mut map: Vec<u32> = vec![u32::MAX; uf.len()];
+    let mut next = 0u32;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n as u32 {
+        let r = uf.find(i);
+        if map[r as usize] == u32::MAX {
+            map[r as usize] = next;
+            next += 1;
+        }
+        out.push(map[r as usize]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// chain 0-1 (w=1), 1-2 (w=2), plus far pair 3-4 (w=0.5) and bridge 2-3 (w=10)
+    fn sample_tree() -> (usize, Vec<Edge>) {
+        (
+            5,
+            vec![
+                Edge::new(0, 1, 1.0),
+                Edge::new(1, 2, 2.0),
+                Edge::new(3, 4, 0.5),
+                Edge::new(2, 3, 10.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn heights_sorted_and_match_weights() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        assert_eq!(d.heights(), vec![0.5, 1.0, 2.0, 10.0]);
+        assert_eq!(d.merges.len(), n - 1);
+        assert_eq!(d.merges.last().unwrap().size, 5);
+    }
+
+    #[test]
+    fn merge_structure_correct() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        // first merge: leaves 3,4 at 0.5 -> cluster 5
+        assert_eq!(d.merges[0], Merge { a: 3, b: 4, height: 0.5, size: 2 });
+        // second: leaves 0,1 at 1.0 -> cluster 6
+        assert_eq!(d.merges[1], Merge { a: 0, b: 1, height: 1.0, size: 2 });
+        // third: cluster 6 with leaf 2 at 2.0 -> cluster 7
+        assert_eq!(d.merges[2], Merge { a: 2, b: 6, height: 2.0, size: 3 });
+        // fourth: clusters 5 and 7 at 10.0
+        assert_eq!(d.merges[3], Merge { a: 5, b: 7, height: 10.0, size: 5 });
+    }
+
+    #[test]
+    fn cut_at_height_levels() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        assert_eq!(cut_at_height(&d, 0.0), vec![0, 1, 2, 3, 4]);
+        let at1 = cut_at_height(&d, 1.0);
+        assert_eq!(at1[0], at1[1]);
+        assert_ne!(at1[1], at1[2]);
+        assert_eq!(at1[3], at1[4]);
+        let all = cut_at_height(&d, 100.0);
+        assert!(all.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn cut_to_k_counts() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        for k in 1..=5 {
+            let labels = cut_to_k(&d, k);
+            let mut u = labels.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), k, "k={k}");
+        }
+        // k=2 must split at the big bridge: {0,1,2} vs {3,4}
+        let l2 = cut_to_k(&d, 2);
+        assert_eq!(l2[0], l2[1]);
+        assert_eq!(l2[1], l2[2]);
+        assert_eq!(l2[3], l2[4]);
+        assert_ne!(l2[0], l2[3]);
+    }
+
+    #[test]
+    fn cophenetic_heights() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        assert_eq!(d.cophenetic(0, 1), 1.0);
+        assert_eq!(d.cophenetic(0, 2), 2.0);
+        assert_eq!(d.cophenetic(3, 4), 0.5);
+        assert_eq!(d.cophenetic(0, 4), 10.0);
+        assert_eq!(d.cophenetic(2, 2), 0.0);
+    }
+
+    #[test]
+    fn mst_roundtrip_preserves_heights_and_clusters() {
+        let (n, t) = sample_tree();
+        let d = mst_to_dendrogram(n, &t);
+        let back = d.to_mst();
+        assert_eq!(back.len(), t.len());
+        let d2 = mst_to_dendrogram(n, &back);
+        assert_eq!(d.heights(), d2.heights());
+        // flat clusterings agree at every height
+        for h in [0.4, 0.6, 1.5, 5.0, 11.0] {
+            assert_eq!(cut_at_height(&d, h), cut_at_height(&d2, h), "h={h}");
+        }
+    }
+
+    #[test]
+    fn forest_input_gives_partial_dendrogram() {
+        let t = vec![Edge::new(0, 1, 1.0)]; // 3 leaves, one edge
+        let d = mst_to_dendrogram(3, &t);
+        assert_eq!(d.merges.len(), 1);
+        assert_eq!(d.cophenetic(0, 2), f32::INFINITY);
+        let labels = cut_at_height(&d, 100.0);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[0], labels[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_input_panics() {
+        let t = vec![Edge::new(0, 1, 1.0), Edge::new(1, 2, 1.0), Edge::new(0, 2, 1.0)];
+        mst_to_dendrogram(3, &t);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let d = mst_to_dendrogram(0, &[]);
+        assert!(d.merges.is_empty());
+        let d1 = mst_to_dendrogram(1, &[]);
+        assert_eq!(cut_to_k(&d1, 1), vec![0]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Single-linkage clustering: dendrograms, the MST ↔ dendrogram conversions
+//! the paper motivates, and the SLINK exact baseline.
+//!
+//! Key classical facts exercised here (and verified in tests):
+//! - The single-linkage dendrogram's merge heights are exactly the MST edge
+//!   weights; building the dendrogram from the MST is a sort + union-find
+//!   (`mst_to_dendrogram`, `O(n log n)`).
+//! - SLINK's pointer representation `(π, λ)` *is* a minimum spanning tree
+//!   (edges `{i, π(i)}` with weight `λ(i)`), giving the reverse conversion
+//!   and an independent `O(n²)` exact baseline.
+
+pub mod dendrogram;
+pub mod slink_algo;
+pub mod stability;
+
+pub use dendrogram::{cut_at_height, cut_to_k, mst_to_dendrogram, Dendrogram, Merge};
+pub use slink_algo::{slink, slink_mst};
+pub use stability::{extract_stable_clusters, StableClusters, NOISE};

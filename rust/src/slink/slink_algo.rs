@@ -1,0 +1,161 @@
+//! SLINK (Sibson 1973): optimal `O(n²)` time / `O(n)` space single-linkage.
+//!
+//! Independent of every MST code path in this crate, which makes it the
+//! gold-standard oracle for experiment E5: the dendrogram built from the
+//! *decomposed distributed* MST must equal SLINK's output.
+//!
+//! The pointer representation `(π, λ)` — `λ(i)` is the height at which `i`
+//! last joins a cluster containing a higher-indexed object, `π(i)` that
+//! object — reads as a spanning tree: edges `{i, π(i)}` with weight `λ(i)`.
+//! That tree is **weight-equivalent** to the MST (its weight multiset equals
+//! the MST edge weights — both equal the single-linkage merge heights) and
+//! induces the identical dendrogram, but its *edge set* generally differs
+//! from the MST's (π points at a cluster representative, not necessarily the
+//! nearest point). `slink_mst` exposes that tree; `mst_to_dendrogram` of it
+//! equals `mst_to_dendrogram` of the true MST.
+
+use crate::data::Dataset;
+use crate::geometry::Metric;
+use crate::graph::Edge;
+use crate::slink::dendrogram::{mst_to_dendrogram, Dendrogram};
+
+/// Pointer representation of the single-linkage hierarchy.
+pub struct SlinkPointers {
+    /// π: for each i, the "parent" object it points to
+    pub pi: Vec<u32>,
+    /// λ: the height at which i joins π(i)'s cluster (λ(n-1) = +inf)
+    pub lambda: Vec<f32>,
+}
+
+/// Run SLINK over the dataset with the given metric.
+pub fn slink_pointers(ds: &Dataset, metric: &dyn Metric) -> SlinkPointers {
+    let n = ds.n;
+    let mut pi = vec![0u32; n];
+    let mut lambda = vec![f32::INFINITY; n];
+    let mut m = vec![0.0f32; n];
+    for i in 0..n {
+        pi[i] = i as u32;
+        lambda[i] = f32::INFINITY;
+        for j in 0..i {
+            m[j] = metric.dist(ds.row(j), ds.row(i));
+        }
+        for j in 0..i {
+            let pj = pi[j] as usize;
+            if lambda[j] >= m[j] {
+                if lambda[j] < m[pj] {
+                    m[pj] = lambda[j];
+                }
+                lambda[j] = m[j];
+                pi[j] = i as u32;
+            } else if m[j] < m[pj] {
+                m[pj] = m[j];
+            }
+        }
+        for j in 0..i {
+            if lambda[j] >= lambda[pi[j] as usize] {
+                pi[j] = i as u32;
+            }
+        }
+    }
+    SlinkPointers { pi, lambda }
+}
+
+/// The spanning tree hidden in SLINK's pointer representation: edges
+/// `{i, π(i), λ(i)}` for all `i` with finite λ. Weight-equivalent to the MST
+/// (identical weight multiset and dendrogram; edge set may differ) — this is
+/// the dendrogram → tree direction of the paper's "converted between each
+/// other efficiently".
+pub fn slink_mst(ds: &Dataset, metric: &dyn Metric) -> Vec<Edge> {
+    let p = slink_pointers(ds, metric);
+    (0..ds.n)
+        .filter(|&i| p.lambda[i].is_finite())
+        .map(|i| Edge::new(i as u32, p.pi[i], p.lambda[i]))
+        .collect()
+}
+
+/// Exact single-linkage dendrogram via SLINK.
+pub fn slink(ds: &Dataset, metric: &dyn Metric) -> Dendrogram {
+    mst_to_dendrogram(ds.n, &slink_mst(ds, metric))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_blobs_labeled, uniform, BlobSpec};
+    use crate::dense::{DenseMst, PrimDense};
+    use crate::geometry::metric::PlainMetric;
+    use crate::geometry::MetricKind;
+    use crate::graph::components::is_spanning_tree;
+    use crate::mst::total_weight;
+    use crate::util::prng::Pcg64;
+
+    fn metric() -> PlainMetric {
+        PlainMetric(MetricKind::SqEuclid)
+    }
+
+    #[test]
+    fn slink_tree_is_an_mst() {
+        let ds = uniform(50, 6, 1.0, Pcg64::seeded(100));
+        let t = slink_mst(&ds, &metric());
+        assert!(is_spanning_tree(ds.n, &t));
+        let prim = PrimDense::sq_euclid().mst(&ds);
+        let (a, b) = (total_weight(&t), total_weight(&prim));
+        assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "slink={a} prim={b}");
+    }
+
+    #[test]
+    fn slink_heights_equal_mst_weights() {
+        let ds = uniform(40, 4, 1.0, Pcg64::seeded(101));
+        let d = slink(&ds, &metric());
+        let mut heights = d.heights();
+        heights.sort_by(f32::total_cmp);
+        let mut weights: Vec<f32> =
+            PrimDense::sq_euclid().mst(&ds).iter().map(|e| e.w).collect();
+        weights.sort_by(f32::total_cmp);
+        assert_eq!(heights.len(), weights.len());
+        for (h, w) in heights.iter().zip(&weights) {
+            assert!((h - w).abs() < 1e-5 * (1.0 + w.abs()), "h={h} w={w}");
+        }
+    }
+
+    #[test]
+    fn dendrogram_from_mst_matches_slink_clusters() {
+        let spec = BlobSpec { n: 64, d: 8, k: 4, std: 0.2, spread: 8.0 };
+        let (ds, truth) = gaussian_blobs_labeled(&spec, Pcg64::seeded(102));
+        let via_slink = slink(&ds, &metric());
+        let via_mst = mst_to_dendrogram(ds.n, &PrimDense::sq_euclid().mst(&ds));
+        let a = via_slink.cut_to_k(4);
+        let b = via_mst.cut_to_k(4);
+        // identical partitions (up to label permutation)
+        assert!(same_partition(&a, &b), "slink vs mst cut disagree");
+        // and with well-separated blobs, both recover ground truth
+        assert!(same_partition(&a, &truth), "4 tight blobs should be exactly recovered");
+    }
+
+    #[test]
+    fn two_points() {
+        let ds = Dataset::new(2, 1, vec![0.0, 2.0]);
+        let d = slink(&ds, &metric());
+        assert_eq!(d.merges.len(), 1);
+        assert_eq!(d.merges[0].height, 4.0);
+    }
+
+    /// Same partition up to label renaming.
+    pub(crate) fn same_partition(a: &[u32], b: &[u32]) -> bool {
+        if a.len() != b.len() {
+            return false;
+        }
+        use std::collections::HashMap;
+        let mut fwd: HashMap<u32, u32> = HashMap::new();
+        let mut bwd: HashMap<u32, u32> = HashMap::new();
+        for (&x, &y) in a.iter().zip(b) {
+            if *fwd.entry(x).or_insert(y) != y {
+                return false;
+            }
+            if *bwd.entry(y).or_insert(x) != x {
+                return false;
+            }
+        }
+        true
+    }
+}

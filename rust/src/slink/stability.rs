@@ -1,0 +1,367 @@
+//! Stability-based flat-cluster extraction (HDBSCAN-style "excess of mass")
+//! from a single-linkage dendrogram.
+//!
+//! Extension feature: the paper motivates EMST/SL dendrograms for clustering
+//! neural embeddings, where a single global cut height (`cut_at_height`) is
+//! often wrong — clusters live at different density scales. This module
+//! condenses the dendrogram (dropping micro-splits below `min_cluster_size`)
+//! and selects the set of clusters maximizing total *stability*
+//!
+//! ```text
+//! stability(C) = Σ_{x ∈ C} (λ_leave(x) − λ_birth(C)),   λ = 1 / height
+//! ```
+//!
+//! subject to selected clusters being disjoint — exactly the HDBSCAN "eom"
+//! rule (Campello et al. 2013), computable in one bottom-up pass.
+//! Noise points (those split off below the size threshold) get label
+//! `NOISE`.
+
+use super::dendrogram::Dendrogram;
+
+/// Label for points not assigned to any stable cluster.
+pub const NOISE: u32 = u32::MAX;
+
+/// A node of the condensed tree.
+#[derive(Clone, Debug)]
+struct CNode {
+    /// λ at which this cluster was born (parent split)
+    birth_lambda: f64,
+    /// accumulated stability Σ (λ_leave − λ_birth)
+    stability: f64,
+    /// child condensed clusters (post-split survivors)
+    children: Vec<usize>,
+    /// leaves directly owned (fell out below min size or at split points)
+    points: Vec<u32>,
+}
+
+/// Result of stability extraction.
+#[derive(Clone, Debug)]
+pub struct StableClusters {
+    /// per-leaf labels, dense `0..k`, or [`NOISE`]
+    pub labels: Vec<u32>,
+    /// stability score per returned cluster
+    pub stabilities: Vec<f64>,
+}
+
+/// Extract stable flat clusters from a single-linkage dendrogram.
+///
+/// `min_cluster_size >= 2`. Heights must be non-negative (distances);
+/// `λ = 1 / height` with `height = 0` treated as `λ = +big`.
+pub fn extract_stable_clusters(d: &Dendrogram, min_cluster_size: usize) -> StableClusters {
+    assert!(min_cluster_size >= 2, "min_cluster_size must be >= 2");
+    let n = d.n;
+    if n == 0 {
+        return StableClusters { labels: vec![], stabilities: vec![] };
+    }
+    // Build children lists of the raw dendrogram (cluster ids 0..n+m).
+    let m = d.merges.len();
+    let total = n + m;
+    let mut kids: Vec<[u32; 2]> = vec![[u32::MAX; 2]; total];
+    let mut sizes: Vec<u32> = vec![1; total];
+    for (i, mg) in d.merges.iter().enumerate() {
+        kids[n + i] = [mg.a, mg.b];
+        sizes[n + i] = mg.size;
+    }
+    let lambda_of = |height: f32| -> f64 {
+        if height <= 0.0 {
+            1e12
+        } else {
+            1.0 / height as f64
+        }
+    };
+    // Roots of the raw forest.
+    let parent = d.parents();
+    let roots: Vec<u32> =
+        (0..total as u32).filter(|&c| parent[c as usize] == u32::MAX).collect();
+
+    // Condense: walk down from each root. A split into two children both of
+    // size >= min_cluster_size creates two new condensed clusters; otherwise
+    // the undersized side's points "fall out" of the current cluster at
+    // that λ and the run continues into the surviving side.
+    let mut nodes: Vec<CNode> = Vec::new();
+    let mut leaf_owner: Vec<(usize, f64)> = vec![(usize::MAX, 0.0); n]; // (condensed node, λ_leave)
+    // stack: (raw cluster id, condensed node idx)
+    let mut stack: Vec<(u32, usize)> = Vec::new();
+    for &root in &roots {
+        let idx = nodes.len();
+        nodes.push(CNode {
+            birth_lambda: 0.0,
+            stability: 0.0,
+            children: vec![],
+            points: vec![],
+        });
+        stack.push((root, idx));
+    }
+    while let Some((raw, cnode)) = stack.pop() {
+        if (raw as usize) < n {
+            // single leaf cluster: the point leaves at its own death... a
+            // lone leaf reaching here means it owns the whole condensed node
+            let lam = nodes[cnode].birth_lambda;
+            nodes[cnode].points.push(raw);
+            leaf_owner[raw as usize] = (cnode, lam);
+            continue;
+        }
+        let merge = &d.merges[raw as usize - n];
+        let lam = lambda_of(merge.height);
+        let [a, b] = kids[raw as usize];
+        let (sa, sb) = (sizes[a as usize] as usize, sizes[b as usize] as usize);
+        let both_big = sa >= min_cluster_size && sb >= min_cluster_size;
+        if both_big {
+            // true split: two new condensed children born at λ
+            for &child in &[a, b] {
+                let idx = nodes.len();
+                nodes.push(CNode {
+                    birth_lambda: lam,
+                    stability: 0.0,
+                    children: vec![],
+                    points: vec![],
+                });
+                nodes[cnode].children.push(idx);
+                stack.push((child, idx));
+            }
+        } else {
+            // the smaller side(s) fall out of cnode at λ; recurse into the
+            // bigger side within the same condensed cluster
+            for &child in &[a, b] {
+                let cs = sizes[child as usize] as usize;
+                if cs >= min_cluster_size {
+                    stack.push((child, cnode));
+                } else {
+                    // all leaves under `child` leave cnode at λ
+                    drop_out_leaves(child, n, &kids, cnode, lam, &mut leaf_owner, &mut nodes);
+                }
+            }
+        }
+    }
+    // Accumulate stability: each leaf contributes (λ_leave − λ_birth(owner)).
+    for (pt, &(owner, lam_leave)) in leaf_owner.iter().enumerate() {
+        debug_assert!(owner != usize::MAX, "leaf {pt} unassigned");
+        let birth = nodes[owner].birth_lambda;
+        nodes[owner].stability += (lam_leave - birth).max(0.0);
+    }
+    // Points in internal condensed nodes also bound children's lifetimes:
+    // standard eom adds, for each selected cluster, its own stability vs sum
+    // of children's. Bottom-up selection:
+    let order = topo_bottom_up(&nodes);
+    let mut selected = vec![false; nodes.len()];
+    let mut subtree_stability = vec![0.0f64; nodes.len()];
+    for &i in &order {
+        let child_sum: f64 = nodes[i].children.iter().map(|&c| subtree_stability[c]).sum();
+        if nodes[i].children.is_empty() || nodes[i].stability >= child_sum {
+            subtree_stability[i] = nodes[i].stability;
+            selected[i] = true;
+            // deselect descendants
+            let mut st = nodes[i].children.clone();
+            while let Some(c) = st.pop() {
+                selected[c] = false;
+                st.extend_from_slice(&nodes[c].children);
+            }
+        } else {
+            subtree_stability[i] = child_sum;
+        }
+    }
+    // Roots that are "everything in one cluster" with no competition stay
+    // selected — that's correct eom behaviour for unclustered data.
+
+    // Label points by their owning selected ancestor (walking up through the
+    // condensed node of their owner); noise if none.
+    // Build condensed parent pointers.
+    let mut cparent = vec![usize::MAX; nodes.len()];
+    for (i, node) in nodes.iter().enumerate() {
+        for &c in &node.children {
+            cparent[c] = i;
+        }
+    }
+    let mut cluster_label = vec![u32::MAX; nodes.len()];
+    let mut stabilities = Vec::new();
+    let mut next = 0u32;
+    for (i, sel) in selected.iter().enumerate() {
+        if *sel {
+            cluster_label[i] = next;
+            stabilities.push(nodes[i].stability);
+            next += 1;
+        }
+    }
+    let mut labels = vec![NOISE; n];
+    for (pt, &(owner, _)) in leaf_owner.iter().enumerate() {
+        let mut cur = owner;
+        let mut lab = NOISE;
+        loop {
+            if cluster_label[cur] != u32::MAX {
+                lab = cluster_label[cur];
+                break;
+            }
+            if cparent[cur] == usize::MAX {
+                break;
+            }
+            cur = cparent[cur];
+        }
+        labels[pt] = lab;
+    }
+    StableClusters { labels, stabilities }
+}
+
+/// All leaves under raw cluster `raw` leave condensed node `cnode` at `lam`.
+fn drop_out_leaves(
+    raw: u32,
+    n: usize,
+    kids: &[[u32; 2]],
+    cnode: usize,
+    lam: f64,
+    leaf_owner: &mut [(usize, f64)],
+    nodes: &mut [CNode],
+) {
+    let mut st = vec![raw];
+    while let Some(c) = st.pop() {
+        if (c as usize) < n {
+            nodes[cnode].points.push(c);
+            leaf_owner[c as usize] = (cnode, lam);
+        } else {
+            st.extend_from_slice(&kids[c as usize]);
+        }
+    }
+}
+
+/// Children-before-parents order.
+fn topo_bottom_up(nodes: &[CNode]) -> Vec<usize> {
+    let mut order = Vec::with_capacity(nodes.len());
+    let mut cparent = vec![usize::MAX; nodes.len()];
+    for (i, node) in nodes.iter().enumerate() {
+        for &c in &node.children {
+            cparent[c] = i;
+        }
+    }
+    // depth sort: deeper first
+    let mut depth = vec![0usize; nodes.len()];
+    for i in 0..nodes.len() {
+        let mut d = 0;
+        let mut cur = i;
+        while cparent[cur] != usize::MAX {
+            cur = cparent[cur];
+            d += 1;
+        }
+        depth[i] = d;
+    }
+    let mut idx: Vec<usize> = (0..nodes.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(depth[i]));
+    order.extend(idx);
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::{gaussian_blobs_labeled, BlobSpec};
+    use crate::dense::{DenseMst, PrimDense};
+    use crate::slink::mst_to_dendrogram;
+    use crate::util::prng::Pcg64;
+
+    fn labels_match(a: &[u32], b: &[u32], ignore_noise: bool) -> f64 {
+        // sampled pair agreement, optionally skipping noise
+        let mut rng = Pcg64::seeded(1);
+        let n = a.len();
+        let (mut agree, mut tot) = (0u64, 0u64);
+        for _ in 0..20_000 {
+            let i = rng.next_bounded(n as u64) as usize;
+            let j = rng.next_bounded(n as u64) as usize;
+            if ignore_noise && (a[i] == NOISE || a[j] == NOISE) {
+                continue;
+            }
+            tot += 1;
+            if (a[i] == a[j]) == (b[i] == b[j]) {
+                agree += 1;
+            }
+        }
+        agree as f64 / tot.max(1) as f64
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let spec = BlobSpec { n: 300, d: 12, k: 5, std: 0.25, spread: 12.0 };
+        let (ds, truth) = gaussian_blobs_labeled(&spec, Pcg64::seeded(10));
+        let mst = PrimDense::sq_euclid().mst(&ds);
+        let dendro = mst_to_dendrogram(ds.n, &mst);
+        let out = extract_stable_clusters(&dendro, 10);
+        let k = out.stabilities.len();
+        assert_eq!(k, 5, "five stable clusters, got {k}");
+        let agreement = labels_match(&out.labels, &truth, true);
+        assert!(agreement > 0.99, "agreement {agreement}");
+        // few noise points for tight blobs
+        let noise = out.labels.iter().filter(|&&l| l == NOISE).count();
+        assert!(noise < ds.n / 10, "noise {noise}");
+    }
+
+    #[test]
+    fn variable_density_clusters_found_without_global_cut() {
+        // One tight blob + one diffuse blob + scatter: no single height
+        // separates both, but stability extraction finds both.
+        let mut rng = Pcg64::seeded(11);
+        let mut data = Vec::new();
+        let n_tight = 80;
+        let n_loose = 80;
+        let n_noise = 20;
+        for _ in 0..n_tight {
+            data.push(0.0 + 0.05 * rng.next_gaussian() as f32);
+            data.push(0.0 + 0.05 * rng.next_gaussian() as f32);
+        }
+        for _ in 0..n_loose {
+            data.push(20.0 + 1.5 * rng.next_gaussian() as f32);
+            data.push(0.0 + 1.5 * rng.next_gaussian() as f32);
+        }
+        for _ in 0..n_noise {
+            data.push((rng.next_f32() - 0.5) * 80.0);
+            data.push((rng.next_f32() - 0.5) * 80.0);
+        }
+        let n = n_tight + n_loose + n_noise;
+        let ds = crate::data::Dataset::new(n, 2, data);
+        let dendro = mst_to_dendrogram(n, &PrimDense::sq_euclid().mst(&ds));
+        let out = extract_stable_clusters(&dendro, 15);
+        assert!(out.stabilities.len() >= 2, "found {} clusters", out.stabilities.len());
+        // tight blob points share a label; loose blob points share another
+        let tight_label = out.labels[0];
+        assert_ne!(tight_label, NOISE);
+        let tight_frac = out.labels[..n_tight].iter().filter(|&&l| l == tight_label).count();
+        assert!(tight_frac > n_tight * 9 / 10);
+        let loose_label = out.labels[n_tight + n_loose / 2];
+        assert_ne!(loose_label, NOISE);
+        assert_ne!(tight_label, loose_label);
+    }
+
+    #[test]
+    fn uniform_data_output_is_well_formed() {
+        // Uniform noise has random density fluctuations, so eom may return a
+        // handful of weak clusters (as real HDBSCAN does); assert structure,
+        // not a specific count.
+        let ds = crate::data::generators::uniform(150, 3, 1.0, Pcg64::seeded(12));
+        let dendro = mst_to_dendrogram(ds.n, &PrimDense::sq_euclid().mst(&ds));
+        let out = extract_stable_clusters(&dendro, 8);
+        let k = out.stabilities.len();
+        assert!(k >= 1 && k <= 15, "got {k}");
+        // labels dense or NOISE; every non-noise cluster has >= min size
+        let mut counts = vec![0usize; k];
+        for &l in &out.labels {
+            if l != NOISE {
+                assert!((l as usize) < k);
+                counts[l as usize] += 1;
+            }
+        }
+        assert!(counts.iter().all(|&c| c >= 8), "cluster sizes {counts:?}");
+        assert!(out.stabilities.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let d0 = mst_to_dendrogram(0, &[]);
+        assert!(extract_stable_clusters(&d0, 2).labels.is_empty());
+        let d1 = mst_to_dendrogram(1, &[]);
+        let out = extract_stable_clusters(&d1, 2);
+        assert_eq!(out.labels.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "min_cluster_size")]
+    fn rejects_min_size_one() {
+        let d = mst_to_dendrogram(2, &[crate::graph::Edge::new(0, 1, 1.0)]);
+        extract_stable_clusters(&d, 1);
+    }
+}

@@ -1,0 +1,72 @@
+//! Total ordering for `f32` edge weights.
+//!
+//! MST uniqueness (assumed by the paper) requires a strict total order on
+//! edges. We order lexicographically by `(weight, u, v)` with weights compared
+//! via IEEE-754 `total_cmp`, so equal-weight edges are still strictly ordered
+//! and every algorithm in the crate (Kruskal / Prim / Borůvka / SLINK /
+//! decomposed) agrees on the same unique MSF.
+
+use std::cmp::Ordering;
+
+/// A non-NaN f32 wrapper with total order. Constructing from NaN panics —
+/// distances in this crate are always finite or `+inf` sentinels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct F32Key(pub f32);
+
+impl F32Key {
+    #[inline]
+    pub fn new(v: f32) -> Self {
+        debug_assert!(!v.is_nan(), "NaN edge weight");
+        Self(v)
+    }
+}
+
+impl Eq for F32Key {}
+
+impl PartialOrd for F32Key {
+    #[inline]
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for F32Key {
+    #[inline]
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Compare two `(w, u, v)` triples lexicographically: the canonical strict
+/// edge order used across the crate.
+#[inline]
+pub fn edge_cmp(w1: f32, u1: u32, v1: u32, w2: f32, u2: u32, v2: u32) -> Ordering {
+    w1.total_cmp(&w2).then(u1.cmp(&u2)).then(v1.cmp(&v2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_order_handles_equal_weights() {
+        assert_eq!(edge_cmp(1.0, 0, 1, 1.0, 0, 2), Ordering::Less);
+        assert_eq!(edge_cmp(1.0, 2, 1, 1.0, 0, 2), Ordering::Greater);
+        assert_eq!(edge_cmp(1.0, 0, 1, 1.0, 0, 1), Ordering::Equal);
+        assert_eq!(edge_cmp(0.5, 9, 9, 1.0, 0, 0), Ordering::Less);
+    }
+
+    #[test]
+    fn f32key_sorts_with_infinity() {
+        let mut ks = vec![F32Key::new(f32::INFINITY), F32Key::new(0.0), F32Key::new(-1.0)];
+        ks.sort();
+        assert_eq!(ks[0].0, -1.0);
+        assert_eq!(ks[2].0, f32::INFINITY);
+    }
+
+    #[test]
+    fn negative_zero_ordered_before_positive_zero() {
+        // total_cmp: -0.0 < +0.0 — fine for determinism, just document it.
+        assert_eq!(F32Key::new(-0.0).cmp(&F32Key::new(0.0)), Ordering::Less);
+    }
+}

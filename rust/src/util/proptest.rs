@@ -1,0 +1,136 @@
+//! A small property-based testing harness (the vendor set has no `proptest`).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use demst::util::proptest::{Runner, Gen};
+//! let mut r = Runner::new("vec reverse twice is identity", 0xDEADBEEF, 100);
+//! r.run(|g| {
+//!     let xs = g.vec_u32(0..64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+//!
+//! Each case gets a deterministic child PRNG; on failure the harness reports
+//! the case index and seed so the exact case can be replayed with
+//! `Runner::replay`.
+
+use super::prng::Pcg64;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi)`.
+    pub fn usize_in(&mut self, r: std::ops::Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.next_bounded((r.end - r.start) as u64) as usize
+    }
+
+    /// f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    /// Vector of `len` u32 values each in `range`.
+    pub fn vec_u32(&mut self, range: std::ops::Range<u32>, len: usize) -> Vec<u32> {
+        (0..len)
+            .map(|_| range.start + self.rng.next_bounded((range.end - range.start) as u64) as u32)
+            .collect()
+    }
+
+    /// Vector of `len` f32 values in `[lo, hi)`.
+    pub fn vec_f32(&mut self, lo: f32, hi: f32, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A random point set: `n` points in `d` dims, coords in [-scale, scale).
+    pub fn points(&mut self, n: usize, d: usize, scale: f32) -> Vec<f32> {
+        self.vec_f32(-scale, scale, n * d)
+    }
+
+    /// Random boolean with probability `p` of true.
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+}
+
+/// Drives `cases` executions of a property with deterministic seeds.
+pub struct Runner {
+    name: &'static str,
+    seed: u64,
+    cases: u32,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, seed: u64, cases: u32) -> Self {
+        Self { name, seed, cases }
+    }
+
+    /// Run the property across all cases; panics (with replay info) on the
+    /// first failing case.
+    pub fn run(&mut self, mut prop: impl FnMut(&mut Gen)) {
+        for case in 0..self.cases {
+            let mut root = Pcg64::seeded(self.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut g = Gen { rng: root.split() };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{}' failed at case {}/{} (seed=0x{:X}); replay with Runner::replay(name, 0x{:X}, {})",
+                    self.name, case, self.cases, self.seed, self.seed, case
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+
+    /// Re-run a single failing case.
+    pub fn replay(name: &'static str, seed: u64, case: u32, mut prop: impl FnMut(&mut Gen)) {
+        let mut r = Runner { name, seed, cases: 1 };
+        let _ = &mut r;
+        let mut root = Pcg64::seeded(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: root.split() };
+        prop(&mut g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_runs_all_cases() {
+        let mut count = 0;
+        Runner::new("count", 1, 25).run(|_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        Runner::new("ranges", 2, 50).run(|g| {
+            let u = g.usize_in(3..9);
+            assert!((3..9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u32(5..7, 10);
+            assert!(v.iter().all(|&x| x == 5 || x == 6));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        Runner::new("fail", 3, 10).run(|g| {
+            let v = g.usize_in(0..100);
+            assert!(v < 90, "expected failure somewhere in 10 cases");
+        });
+    }
+}

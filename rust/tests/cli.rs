@@ -1,0 +1,137 @@
+//! CLI-level tests: drive the built `demst` binary end-to-end.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn demst() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_demst"))
+}
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join("demst_cli_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = demst().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["run", "gen", "info", "selftest"] {
+        assert!(text.contains(cmd), "help mentions {cmd}");
+    }
+}
+
+#[test]
+fn no_args_prints_help_and_succeeds() {
+    let out = demst().output().unwrap();
+    assert!(out.status.success());
+}
+
+#[test]
+fn unknown_subcommand_fails_with_message() {
+    let out = demst().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown subcommand"), "{err}");
+}
+
+#[test]
+fn unknown_option_shows_usage() {
+    let out = demst().args(["run", "--bogus-flag"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown option"), "{err}");
+    assert!(err.contains("--parts"), "usage listed: {err}");
+}
+
+#[test]
+fn gen_then_run_roundtrip() {
+    let npy = tmpdir().join("cli_points.npy");
+    let out = demst()
+        .args(["gen", "--kind", "blobs", "--n", "120", "--d", "8", "--clusters", "4", "--out"])
+        .arg(&npy)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(npy.is_file());
+
+    let mst_csv = tmpdir().join("cli_mst.csv");
+    let labels_csv = tmpdir().join("cli_labels.csv");
+    let out = demst()
+        .args(["run", "--data", "npy", "--kernel", "prim-dense", "--parts", "3", "--verify", "--k", "4"])
+        .arg("--path")
+        .arg(&npy)
+        .arg("--out-mst")
+        .arg(&mst_csv)
+        .arg("--out-labels")
+        .arg(&labels_csv)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+    assert!(stdout.contains("mst: 119 edges"), "{stdout}");
+    // outputs written and well-formed
+    let mst = std::fs::read_to_string(&mst_csv).unwrap();
+    assert_eq!(mst.lines().count(), 120, "header + 119 edges");
+    let labels = std::fs::read_to_string(&labels_csv).unwrap();
+    assert_eq!(labels.lines().count(), 121, "header + 120 labels");
+}
+
+#[test]
+fn run_with_config_file_and_override() {
+    let cfg = tmpdir().join("cli_cfg.toml");
+    std::fs::write(
+        &cfg,
+        r#"
+parts = 3
+workers = 2
+kernel = "prim-dense"
+verify = true
+
+[data]
+kind = "blobs"
+n = 90
+d = 6
+clusters = 3
+"#,
+    )
+    .unwrap();
+    let out = demst()
+        .args(["run", "--config"])
+        .arg(&cfg)
+        .args(["--parts", "5"]) // CLI overrides file
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("parts=5"), "override applied: {stdout}");
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+}
+
+#[test]
+fn run_rejects_invalid_config_combination() {
+    let out = demst()
+        .args(["run", "--kernel", "xla", "--metric", "cosine", "--n", "64", "--d", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("Euclidean"), "{err}");
+}
+
+#[test]
+fn info_reports_artifacts_when_present() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").is_file() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let out = demst().args(["info", "--artifacts"]).arg(&dir).output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("cheapest_edge"), "{stdout}");
+    assert!(stdout.contains("present"), "{stdout}");
+}

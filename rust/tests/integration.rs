@@ -1,0 +1,241 @@
+//! Cross-module integration tests: the paper's pipeline glued end-to-end
+//! through the public API (no XLA required — see runtime_e2e.rs for that).
+
+use demst::config::run_config::build_dataset;
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{embedding_like, gaussian_blobs_labeled, BlobSpec, EmbeddingSpec};
+use demst::data::Dataset;
+use demst::decomp::{decomposed_mst, DecompConfig, PartitionStrategy};
+use demst::dense::{BoruvkaDense, DenseMst, PrimDense};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::MetricKind;
+use demst::graph::components::is_spanning_tree;
+use demst::mst::{kruskal, normalize_tree, prim_sparse, total_weight, boruvka_sparse};
+use demst::slink::{mst_to_dendrogram, slink, slink_mst};
+use demst::util::prng::Pcg64;
+
+/// The one big invariant: every route to the MST yields the identical tree.
+#[test]
+fn all_roads_lead_to_the_same_mst() {
+    // integer-ish coordinates so every arithmetic path is exact
+    let mut rng = Pcg64::seeded(1000);
+    let (n, d) = (150, 12);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(41) as f32 / 2.0 - 10.0).collect();
+    let ds = Dataset::new(n, d, data);
+    let metric = PlainMetric(MetricKind::SqEuclid);
+
+    // 1. dense Prim
+    let t1 = PrimDense::sq_euclid().mst(&ds);
+    // 2. dense Borůvka (blocked step)
+    let t2 = BoruvkaDense::new_rust(MetricKind::SqEuclid).mst(&ds);
+    // 3. sparse algorithms over the complete graph
+    let complete: Vec<demst::graph::Edge> = (0..n as u32)
+        .flat_map(|i| {
+            let ds = &ds;
+            let metric = &metric;
+            ((i + 1)..n as u32).map(move |j| {
+                use demst::geometry::Metric;
+                demst::graph::Edge::new(i, j, metric.dist(ds.row(i as usize), ds.row(j as usize)))
+            })
+        })
+        .collect();
+    let t3 = kruskal(n, &complete);
+    let t4 = prim_sparse(n, &complete);
+    let t5 = boruvka_sparse(n, &complete);
+    // 4. serial decomposed (the paper), several partitionings
+    let t7 = decomposed_mst(
+        &ds,
+        &DecompConfig { parts: 6, strategy: PartitionStrategy::RandomShuffle, seed: 3, keep_pair_trees: false },
+        &PrimDense::sq_euclid(),
+    )
+    .mst;
+    // 5. distributed decomposed
+    let t8 = run_distributed(
+        &ds,
+        &RunConfig { parts: 5, workers: 3, kernel: KernelChoice::BoruvkaRust, ..Default::default() },
+    )
+    .unwrap()
+    .mst;
+
+    let expect = normalize_tree(&t1);
+    for (name, t) in [
+        ("boruvka-dense", &t2),
+        ("kruskal", &t3),
+        ("prim-sparse", &t4),
+        ("boruvka-sparse", &t5),
+        ("decomposed-serial", &t7),
+        ("decomposed-distributed", &t8),
+    ] {
+        assert!(is_spanning_tree(n, t), "{name} spanning");
+        assert_eq!(expect, normalize_tree(t), "{name} != prim-dense");
+    }
+
+    // SLINK's pointer-representation tree is weight-equivalent to the MST
+    // (same weight multiset => same dendrogram) but its edge set may differ.
+    let t6 = slink_mst(&ds, &metric);
+    assert!(is_spanning_tree(n, &t6), "slink spanning");
+    let mut wa: Vec<f32> = t1.iter().map(|e| e.w).collect();
+    let mut wb: Vec<f32> = t6.iter().map(|e| e.w).collect();
+    wa.sort_by(f32::total_cmp);
+    wb.sort_by(f32::total_cmp);
+    assert_eq!(wa, wb, "slink weight multiset equals MST weights");
+    assert_eq!(
+        mst_to_dendrogram(n, &t1).heights(),
+        mst_to_dendrogram(n, &t6).heights(),
+        "identical dendrogram heights"
+    );
+}
+
+#[test]
+fn dendrogram_from_distributed_equals_slink() {
+    let spec = EmbeddingSpec { n: 300, d: 48, latent: 6, k: 10, cluster_std: 0.3, noise: 0.01 };
+    let (ds, _) = embedding_like(&spec, Pcg64::seeded(1001));
+    let out = run_distributed(
+        &ds,
+        &RunConfig { parts: 4, workers: 2, kernel: KernelChoice::BoruvkaRust, ..Default::default() },
+    )
+    .unwrap();
+    let dist_dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let slink_dendro = slink(&ds, &PlainMetric(MetricKind::SqEuclid));
+    // merge heights identical (to float tolerance)
+    let (ha, hb) = (dist_dendro.heights(), slink_dendro.heights());
+    assert_eq!(ha.len(), hb.len());
+    for (a, b) in ha.iter().zip(&hb) {
+        assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "height {a} vs {b}");
+    }
+    // identical flat clusterings at several k
+    for k in [2usize, 5, 10, 25] {
+        let la = dist_dendro.cut_to_k(k);
+        let lb = slink_dendro.cut_to_k(k);
+        assert!(same_partition(&la, &lb), "k={k}");
+    }
+}
+
+#[test]
+fn config_file_to_run_pipeline() {
+    let toml = r#"
+name = "integration"
+parts = 3
+workers = 2
+kernel = "prim-dense"
+seed = 5
+
+[data]
+kind = "blobs"
+n = 90
+d = 8
+clusters = 3
+std = 0.2
+spread = 9.0
+"#;
+    let cfg = RunConfig::from_toml(toml).unwrap();
+    let (ds, truth) = build_dataset(&cfg).unwrap();
+    let out = run_distributed(&ds, &cfg).unwrap();
+    assert!(is_spanning_tree(ds.n, &out.mst));
+    let labels = mst_to_dendrogram(ds.n, &out.mst).cut_to_k(3);
+    assert!(same_partition(&labels, &truth.unwrap()), "3 tight blobs recovered");
+}
+
+#[test]
+fn npy_roundtrip_through_pipeline() {
+    let dir = std::env::temp_dir().join("demst_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("points.npy");
+    let (ds, _) = gaussian_blobs_labeled(
+        &BlobSpec { n: 80, d: 6, k: 4, std: 0.3, spread: 8.0 },
+        Pcg64::seeded(1002),
+    );
+    demst::data::npy::write_npy(&path, &ds).unwrap();
+
+    let mut cfg = RunConfig::default();
+    cfg.data.kind = "npy".into();
+    cfg.data.path = Some(path);
+    cfg.parts = 4;
+    cfg.kernel = KernelChoice::PrimDense;
+    let (loaded, _) = build_dataset(&cfg).unwrap();
+    assert_eq!(loaded, ds);
+    let out = run_distributed(&loaded, &cfg).unwrap();
+    let expect = PrimDense::sq_euclid().mst(&ds);
+    assert_eq!(normalize_tree(&expect), normalize_tree(&out.mst));
+}
+
+#[test]
+fn net_simulation_delays_increase_wall_not_result() {
+    let (ds, _) = gaussian_blobs_labeled(
+        &BlobSpec { n: 100, d: 8, k: 4, std: 0.3, spread: 6.0 },
+        Pcg64::seeded(1003),
+    );
+    let mut cfg = RunConfig { parts: 4, workers: 2, kernel: KernelChoice::PrimDense, ..Default::default() };
+    let fast = run_distributed(&ds, &cfg).unwrap();
+    cfg.net.simulate_delays = true;
+    cfg.net.latency_us = 3000; // 3ms per message, 13 messages minimum
+    let slow = run_distributed(&ds, &cfg).unwrap();
+    assert_eq!(normalize_tree(&fast.mst), normalize_tree(&slow.mst));
+    assert!(
+        slow.metrics.wall > fast.metrics.wall,
+        "latency model must show up in wallclock: fast={:?} slow={:?}",
+        fast.metrics.wall,
+        slow.metrics.wall
+    );
+    assert_eq!(fast.metrics.scatter_bytes, slow.metrics.scatter_bytes, "same traffic");
+}
+
+#[test]
+fn metrics_account_scatter_exactly() {
+    // strategy-independent invariant: scatter bytes = Σ_jobs (16 + |S|*4 + |S|*d*4)
+    let (ds, _) = gaussian_blobs_labeled(
+        &BlobSpec { n: 120, d: 10, k: 4, std: 0.3, spread: 6.0 },
+        Pcg64::seeded(1004),
+    );
+    for parts in [2usize, 3, 5] {
+        let cfg = RunConfig {
+            parts,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            strategy: PartitionStrategy::RoundRobin,
+            ..Default::default()
+        };
+        let out = run_distributed(&ds, &cfg).unwrap();
+        let sizes = demst::decomp::partition_indices(&ds, parts, cfg.strategy, cfg.seed);
+        let mut expect = 0u64;
+        for j in 1..parts {
+            for i in 0..j {
+                let m = (sizes[i].len() + sizes[j].len()) as u64;
+                expect += 16 + m * 4 + m * ds.d as u64 * 4;
+            }
+        }
+        assert_eq!(out.metrics.scatter_bytes, expect, "parts={parts}");
+    }
+}
+
+#[test]
+fn cosine_metric_pipeline() {
+    // generalized geometric MST: cosine distance end-to-end
+    let spec = EmbeddingSpec { n: 120, d: 32, latent: 5, k: 6, cluster_std: 0.3, noise: 0.01 };
+    let (ds, _) = embedding_like(&spec, Pcg64::seeded(1005));
+    let cfg = RunConfig {
+        parts: 4,
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        metric: MetricKind::Cosine,
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg).unwrap();
+    assert!(is_spanning_tree(ds.n, &out.mst));
+    let oracle = slink_mst(&ds, &PlainMetric(MetricKind::Cosine));
+    let (a, b) = (total_weight(&oracle), total_weight(&out.mst));
+    assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "cosine: slink={a} dist={b}");
+}
+
+/// Same partition up to label renaming.
+fn same_partition(a: &[u32], b: &[u32]) -> bool {
+    use std::collections::HashMap;
+    if a.len() != b.len() {
+        return false;
+    }
+    let (mut fwd, mut bwd) = (HashMap::new(), HashMap::new());
+    a.iter().zip(b).all(|(&x, &y)| {
+        *fwd.entry(x).or_insert(y) == y && *bwd.entry(y).or_insert(x) == x
+    })
+}

@@ -1,0 +1,264 @@
+//! Property-based tests (hand-rolled harness in `demst::util::proptest`) on
+//! the system's core invariants: Lemma 1, Theorem 1, MST uniqueness across
+//! algorithms, dendrogram laws, union-find laws, and serialization
+//! round-trips — over randomized inputs with deterministic replay seeds.
+
+use demst::data::Dataset;
+use demst::decomp::{decomposed_mst, DecompConfig, PartitionStrategy};
+use demst::dense::{BoruvkaDense, DenseMst, PrimDense};
+use demst::geometry::metric::PlainMetric;
+use demst::geometry::{Metric, MetricKind};
+use demst::graph::components::{is_forest, is_spanning_tree};
+use demst::graph::{Edge, UnionFind};
+use demst::mst::{boruvka_sparse, kruskal, normalize_tree, prim_sparse};
+use demst::slink::mst_to_dendrogram;
+use demst::util::proptest::{Gen, Runner};
+
+/// Random integer-valued point set (exact arithmetic across code paths).
+fn int_points(g: &mut Gen, n: usize, d: usize) -> Dataset {
+    let data: Vec<f32> = (0..n * d)
+        .map(|_| g.rng().next_bounded(33) as f32 - 16.0)
+        .collect();
+    Dataset::new(n, d, data)
+}
+
+fn complete_edges(ds: &Dataset) -> Vec<Edge> {
+    let m = PlainMetric(MetricKind::SqEuclid);
+    let mut edges = Vec::with_capacity(ds.n * (ds.n - 1) / 2);
+    for i in 0..ds.n {
+        for j in (i + 1)..ds.n {
+            edges.push(Edge::new(i as u32, j as u32, m.dist(ds.row(i), ds.row(j))));
+        }
+    }
+    edges
+}
+
+#[test]
+fn prop_three_sparse_algorithms_agree() {
+    Runner::new("sparse MST agreement", 0xA1, 40).run(|g| {
+        let n = g.usize_in(2..40);
+        let m = g.usize_in(1..n * 3);
+        let edges: Vec<Edge> = (0..m)
+            .map(|_| {
+                let u = g.usize_in(0..n) as u32;
+                let mut v = g.usize_in(0..n) as u32;
+                if u == v {
+                    v = (v + 1) % n as u32;
+                }
+                // coarse weights force ties
+                Edge::new(u, v, g.usize_in(0..6) as f32)
+            })
+            .collect();
+        let a = kruskal(n, &edges);
+        let b = prim_sparse(n, &edges);
+        let c = boruvka_sparse(n, &edges);
+        assert!(is_forest(n, &a));
+        assert_eq!(normalize_tree(&a), normalize_tree(&b));
+        assert_eq!(normalize_tree(&a), normalize_tree(&c));
+    });
+}
+
+#[test]
+fn prop_lemma1_optimal_substructure() {
+    // MSF(G)[S] ⊆ MSF(G[S]) for random S — the paper's Lemma 1 verbatim.
+    Runner::new("lemma 1", 0xA2, 30).run(|g| {
+        let n = g.usize_in(4..30);
+        let d = g.usize_in(1..6);
+        let ds = int_points(g, n, d);
+        let full = complete_edges(&ds);
+        let msf = kruskal(n, &full);
+        // random vertex subset S (at least 2 vertices)
+        let mut s: Vec<u32> = (0..n as u32).filter(|_| g.bool_p(0.5)).collect();
+        if s.len() < 2 {
+            s = vec![0, (n - 1) as u32];
+        }
+        let in_s = {
+            let mut m = vec![false; n];
+            for &v in &s {
+                m[v as usize] = true;
+            }
+            m
+        };
+        // induced subgraph MSF
+        let induced: Vec<Edge> = full
+            .iter()
+            .filter(|e| in_s[e.u as usize] && in_s[e.v as usize])
+            .copied()
+            .collect();
+        let sub_msf = normalize_tree(&kruskal(n, &induced));
+        // every MSF(G) edge inside S must appear in MSF(G[S])
+        for e in &msf {
+            if in_s[e.u as usize] && in_s[e.v as usize] {
+                assert!(
+                    sub_msf
+                        .binary_search_by(|t| t.u.cmp(&e.u).then(t.v.cmp(&e.v)))
+                        .is_ok(),
+                    "edge ({},{}) in MSF(G)[S] but not in MSF(G[S])",
+                    e.u,
+                    e.v
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_theorem1_decomposition_exact() {
+    Runner::new("theorem 1", 0xA3, 25).run(|g| {
+        let n = g.usize_in(6..60);
+        let d = g.usize_in(1..8);
+        let ds = int_points(g, n, d);
+        let parts = g.usize_in(2..(n / 2).max(3).min(8));
+        let strategy = match g.usize_in(0..4) {
+            0 => PartitionStrategy::Block,
+            1 => PartitionStrategy::RoundRobin,
+            2 => PartitionStrategy::RandomShuffle,
+            _ => PartitionStrategy::KMeansLite,
+        };
+        let cfg = DecompConfig {
+            parts,
+            strategy,
+            seed: g.rng().next_u64(),
+            keep_pair_trees: false,
+        };
+        let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+        let expect = kruskal(n, &complete_edges(&ds));
+        assert!(is_spanning_tree(n, &out.mst));
+        assert_eq!(normalize_tree(&expect), normalize_tree(&out.mst), "{strategy:?} parts={parts}");
+    });
+}
+
+#[test]
+fn prop_dense_boruvka_equals_dense_prim() {
+    Runner::new("dense kernels agree", 0xA4, 20).run(|g| {
+        let n = g.usize_in(2..80);
+        let d = g.usize_in(1..10);
+        let ds = int_points(g, n, d);
+        let a = PrimDense::sq_euclid().mst(&ds);
+        let b = BoruvkaDense::new_rust(MetricKind::SqEuclid).mst(&ds);
+        assert_eq!(normalize_tree(&a), normalize_tree(&b), "n={n} d={d}");
+    });
+}
+
+#[test]
+fn prop_union_find_laws() {
+    Runner::new("union-find", 0xA5, 50).run(|g| {
+        let n = g.usize_in(1..200);
+        let mut uf = UnionFind::new(n);
+        let mut naive: Vec<usize> = (0..n).collect(); // naive labels
+        for _ in 0..g.usize_in(0..300) {
+            let a = g.usize_in(0..n) as u32;
+            let b = g.usize_in(0..n) as u32;
+            let merged = uf.union(a, b);
+            let (la, lb) = (naive[a as usize], naive[b as usize]);
+            assert_eq!(merged, la != lb);
+            if la != lb {
+                for l in naive.iter_mut() {
+                    if *l == lb {
+                        *l = la;
+                    }
+                }
+            }
+        }
+        // same-set relation matches the naive model
+        for _ in 0..50 {
+            let a = g.usize_in(0..n) as u32;
+            let b = g.usize_in(0..n) as u32;
+            assert_eq!(uf.same(a, b), naive[a as usize] == naive[b as usize]);
+        }
+        let distinct: std::collections::HashSet<usize> = naive.iter().copied().collect();
+        assert_eq!(uf.components(), distinct.len());
+    });
+}
+
+#[test]
+fn prop_dendrogram_laws() {
+    Runner::new("dendrogram", 0xA6, 25).run(|g| {
+        let n = g.usize_in(2..60);
+        let d = g.usize_in(1..5);
+        let ds = int_points(g, n, d);
+        let mst = PrimDense::sq_euclid().mst(&ds);
+        let dendro = mst_to_dendrogram(n, &mst);
+        // heights non-decreasing
+        let h = dendro.heights();
+        assert!(h.windows(2).all(|w| w[0] <= w[1]), "monotone heights");
+        // heights are exactly the MST weights (sorted)
+        let mut ws: Vec<f32> = mst.iter().map(|e| e.w).collect();
+        ws.sort_by(f32::total_cmp);
+        assert_eq!(h, ws);
+        // cut_to_k produces exactly k clusters for all k ≤ n
+        for k in [1usize, 2, n / 2, n] {
+            let k = k.max(1);
+            let labels = dendro.cut_to_k(k);
+            let distinct: std::collections::HashSet<u32> = labels.iter().copied().collect();
+            assert_eq!(distinct.len(), k.min(n), "k={k}");
+        }
+        // cophenetic distance is an ultrametric: d(i,k) <= max(d(i,j), d(j,k))
+        for _ in 0..20 {
+            let i = g.usize_in(0..n) as u32;
+            let j = g.usize_in(0..n) as u32;
+            let k = g.usize_in(0..n) as u32;
+            let dij = dendro.cophenetic(i, j);
+            let djk = dendro.cophenetic(j, k);
+            let dik = dendro.cophenetic(i, k);
+            assert!(
+                dik <= dij.max(djk) + 1e-5,
+                "ultrametric violated: d({i},{k})={dik} > max({dij},{djk})"
+            );
+        }
+        // round-trip preserves heights
+        let back = mst_to_dendrogram(n, &dendro.to_mst());
+        assert_eq!(back.heights(), dendro.heights());
+    });
+}
+
+#[test]
+fn prop_npy_roundtrip() {
+    Runner::new("npy", 0xA7, 20).run(|g| {
+        let n = g.usize_in(1..50);
+        let d = g.usize_in(1..20);
+        let data = g.vec_f32(-1e6, 1e6, n * d);
+        let ds = Dataset::new(n, d, data);
+        let dir = std::env::temp_dir().join("demst_prop_npy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("t{}.npy", g.rng().next_u64()));
+        demst::data::npy::write_npy(&path, &ds).unwrap();
+        let back = demst::data::npy::read_npy(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(ds, back);
+    });
+}
+
+#[test]
+fn prop_toml_numbers_roundtrip() {
+    Runner::new("toml numbers", 0xA8, 30).run(|g| {
+        let i = g.rng().next_u64() as i64 / 2;
+        let doc = demst::config::parse_toml(&format!("x = {i}\n")).unwrap();
+        assert_eq!(doc[""]["x"].as_int(), Some(i));
+        let f = g.f32_in(-1e6, 1e6) as f64;
+        let text = format!("y = {f:?}\n");
+        let doc = demst::config::parse_toml(&text).unwrap();
+        let got = doc[""]["y"].as_float().unwrap();
+        assert!((got - f).abs() <= 1e-9 * (1.0 + f.abs()), "{f} -> {got}");
+    });
+}
+
+#[test]
+fn prop_knn_weight_dominates_exact() {
+    // For any connected kNN result, weight(knn-MST) >= weight(exact MST);
+    // equality iff the kNN graph contains the MST.
+    Runner::new("knn dominance", 0xA9, 15).run(|g| {
+        let n = g.usize_in(10..60);
+        let d = g.usize_in(2..8);
+        let ds = int_points(g, n, d);
+        let k = g.usize_in(2..n - 1);
+        let exact = demst::mst::total_weight(&PrimDense::sq_euclid().mst(&ds));
+        let r = demst::baselines::knn_boruvka(&ds, k);
+        if r.components == 1 {
+            let w = demst::mst::total_weight(&r.forest);
+            assert!(w >= exact - 1e-3, "knn={w} < exact={exact}");
+        } else {
+            assert!(r.forest.len() < n - 1);
+        }
+    });
+}

@@ -1,0 +1,169 @@
+//! End-to-end tests of the PJRT runtime path: HLO artifacts → compile →
+//! execute → exact agreement with the pure-Rust providers.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` has not
+//! been built yet — run `make artifacts` (or `make artifacts-quick`) first.
+
+use demst::config::{KernelChoice, RunConfig};
+use demst::coordinator::run_distributed;
+use demst::data::generators::{gaussian_blobs, BlobSpec};
+use demst::data::Dataset;
+use demst::dense::step::{CheapestEdgeStep, NaiveStep};
+use demst::dense::{BoruvkaDense, DenseMst, PrimDense};
+use demst::geometry::MetricKind;
+use demst::graph::components::is_spanning_tree;
+use demst::mst::normalize_tree;
+use demst::runtime::{Engine, XlaPairwise, XlaStep};
+use demst::util::prng::Pcg64;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if Engine::artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts` first", dir.display());
+        None
+    }
+}
+
+/// Integer coordinates: matmul-form distances are exact, so XLA and Rust
+/// paths must agree bit-for-bit (including tie-breaks).
+fn int_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(25) as f32 - 12.0).collect();
+    Dataset::new(n, d, data)
+}
+
+#[test]
+fn xla_step_matches_naive_exact_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let step = XlaStep::new(engine);
+    let (n, d) = (64, 8); // exact bucket, no padding
+    let ds = int_dataset(1, n, d);
+    let comps: Vec<i32> = (0..n as i32).map(|i| i % 5).collect();
+    let (xd, xi) = step.step(ds.as_slice(), n, d, &comps);
+    let (rd, ri) = NaiveStep.step(ds.as_slice(), n, d, &comps);
+    assert_eq!(xi, ri, "indices identical (tie-break contract)");
+    assert_eq!(xd, rd, "integer coords: distances bit-exact");
+}
+
+#[test]
+fn xla_step_pads_rows_and_dims() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let step = XlaStep::new(engine);
+    // n=50 pads to 64 rows; d=5 pads to 8 dims (quick bucket set)
+    let (n, d) = (50, 5);
+    let ds = int_dataset(2, n, d);
+    let comps: Vec<i32> = (0..n as i32).map(|i| i % 3).collect();
+    let (xd, xi) = step.step(ds.as_slice(), n, d, &comps);
+    let (rd, ri) = NaiveStep.step(ds.as_slice(), n, d, &comps);
+    assert_eq!(xi, ri);
+    assert_eq!(xd, rd);
+    assert_eq!(xd.len(), n, "outputs unpadded");
+}
+
+#[test]
+fn xla_step_handles_padding_labels_inside_problem() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let step = XlaStep::new(engine);
+    let (n, d) = (64, 8);
+    let ds = int_dataset(3, n, d);
+    let mut comps: Vec<i32> = (0..n as i32).map(|i| i % 4).collect();
+    comps[7] = -1;
+    comps[40] = -1;
+    let (xd, xi) = step.step(ds.as_slice(), n, d, &comps);
+    let (rd, ri) = NaiveStep.step(ds.as_slice(), n, d, &comps);
+    assert_eq!(xi, ri);
+    assert_eq!(xd, rd);
+    assert_eq!(xi[7], -1);
+    assert!(xd[7].is_infinite());
+}
+
+#[test]
+fn boruvka_xla_matches_prim_dense() {
+    let Some(dir) = artifacts_dir() else { return };
+    for (seed, n, d) in [(10u64, 40usize, 6usize), (11, 64, 8), (12, 100, 16), (13, 128, 32)] {
+        let ds = int_dataset(seed, n, d);
+        let expect = PrimDense::sq_euclid().mst(&ds);
+        let engine = Engine::load(&dir).unwrap();
+        let kernel = BoruvkaDense::new(
+            std::sync::Arc::new(XlaStep::new(engine)),
+            MetricKind::SqEuclid,
+        );
+        let got = kernel.mst(&ds);
+        assert!(is_spanning_tree(ds.n, &got), "n={n}");
+        assert_eq!(normalize_tree(&expect), normalize_tree(&got), "seed={seed} n={n} d={d}");
+    }
+}
+
+#[test]
+fn xla_pairwise_matches_rust_blocked() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let pw = XlaPairwise::new(engine);
+    let (n, d) = (60, 20); // pads to (64, 32)
+    let ds = int_dataset(20, n, d);
+    let got = pw.matrix(ds.as_slice(), n, d).unwrap();
+    let want = demst::geometry::blocked::pairwise_self(ds.as_slice(), n, d);
+    assert_eq!(got.len(), n * n);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() <= 1e-4 * (1.0 + w), "entry {i}: xla={g} rust={w}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let step = XlaStep::new(engine);
+    let ds = int_dataset(30, 64, 8);
+    let comps: Vec<i32> = (0..64).map(|i| (i % 2) as i32).collect();
+    let _ = step.step(ds.as_slice(), 64, 8, &comps);
+    assert_eq!(step.engine().cached_executables(), 1);
+    let _ = step.step(ds.as_slice(), 64, 8, &comps);
+    assert_eq!(step.engine().cached_executables(), 1, "second call hits cache");
+    // different bucket compiles a second executable
+    let ds2 = int_dataset(31, 100, 8);
+    let comps2: Vec<i32> = (0..100).map(|i| (i % 2) as i32).collect();
+    let _ = step.step(ds2.as_slice(), 100, 8, &comps2);
+    assert_eq!(step.engine().cached_executables(), 2);
+}
+
+#[test]
+fn distributed_run_with_xla_kernel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let spec = BlobSpec { n: 120, d: 8, k: 4, std: 0.3, spread: 6.0 };
+    let raw = gaussian_blobs(&spec, Pcg64::seeded(40));
+    // quantize for cross-path exactness
+    let data: Vec<f32> = raw.as_slice().iter().map(|x| (x * 4.0).round() / 4.0).collect();
+    let ds = Dataset::new(raw.n, raw.d, data);
+
+    let mut cfg = RunConfig::default();
+    cfg.parts = 4;
+    cfg.workers = 2;
+    cfg.artifacts_dir = dir;
+    cfg.kernel = KernelChoice::BoruvkaXla;
+    let xla_out = run_distributed(&ds, &cfg).unwrap();
+
+    cfg.kernel = KernelChoice::PrimDense;
+    let rust_out = run_distributed(&ds, &cfg).unwrap();
+
+    assert_eq!(
+        normalize_tree(&rust_out.mst),
+        normalize_tree(&xla_out.mst),
+        "three-layer stack reproduces the pure-Rust tree"
+    );
+}
+
+#[test]
+fn missing_bucket_reports_helpful_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let err = engine.bucket_for("cheapest_edge", 1 << 20, 8).unwrap_err().to_string();
+    assert!(err.contains("no artifact bucket fits"), "{err}");
+    assert!(err.contains("make artifacts"), "{err}");
+}
