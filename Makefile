@@ -1,0 +1,25 @@
+# Convenience targets. The Rust build needs no artifacts; `make artifacts`
+# requires a python environment with jax (the AOT layer is optional).
+
+.PHONY: build test artifacts artifacts-quick bench-fast fmt
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# AOT-lower the Pallas kernels to HLO text for the PJRT runtime
+# (used by `--kernel boruvka-xla` in builds with --features backend-xla).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+artifacts-quick:
+	cd python && python -m compile.aot --out-dir ../artifacts --quick
+
+# Quick benchmark sweep (reduced shapes/samples); e7 writes BENCH_e7.json.
+bench-fast:
+	DEMST_BENCH_FAST=1 cargo bench --bench e7_kernel
+
+fmt:
+	cargo fmt --all

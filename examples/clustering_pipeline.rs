@@ -57,8 +57,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     let kernel_choice = if use_xla {
+        if !demst::runtime::backend_xla_compiled() {
+            anyhow::bail!("--xla requires a build with --features backend-xla");
+        }
         let dir = std::path::PathBuf::from("artifacts");
-        if !demst::runtime::Engine::artifacts_available(&dir) {
+        if !demst::runtime::artifacts_available(&dir) {
             anyhow::bail!("--xla requires artifacts/ — run `make artifacts` first");
         }
         KernelChoice::BoruvkaXla

@@ -5,12 +5,16 @@ lowered computation computes the same thing the eager path does.
 import pathlib
 import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from compile import aot, model, shapes
+# Optional AOT layer: skip (not fail) when jax/Pallas is unavailable, like
+# the `backend-xla` feature gate on the Rust side.
+jax = pytest.importorskip("jax", reason="jax/Pallas unavailable — AOT layer is optional")
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile import aot, model, shapes  # noqa: E402
 
 
 def test_boruvka_step_shapes_and_dtypes():

@@ -1,27 +1,40 @@
-//! E7 — the d-MST kernel hot-spot: the cheapest-edge step across providers
-//! (naive Rust, blocked Rust, AOT Pallas/XLA via PJRT), shape sweep.
+//! E7 — the d-MST kernel hot-spot, two levels:
 //!
-//! This regenerates the kernel-level table that backs the paper's "exploit
-//! existing high performance kernels" claim: the XLA executable is the
-//! stand-in for a vendor kernel, driven unmodified from the coordinator.
-//! Reports effective GFLOP/s (2·N²·D flops per step call) and the XLA
-//! speedup over the blocked Rust provider.
+//! 1. The Borůvka cheapest-edge step across providers (naive Rust, blocked
+//!    Rust, and — with `--features backend-xla` + artifacts — the AOT
+//!    Pallas/XLA executable), shape sweep. Reports effective GFLOP/s
+//!    (2·N²·D flops per step call).
+//! 2. The dense-Prim kernel: blocked `DistanceBlock` rows vs the scalar
+//!    `Metric::dist` formulation — the refactor's headline speedup, which
+//!    must hold at d ≥ 64.
+//!
+//! Results are printed as tables and written to `BENCH_e7.json` (override
+//! the path with `DEMST_BENCH_OUT`) so perf trajectories are diffable
+//! across PRs.
 
 use demst::bench_util::Bench;
+use demst::data::Dataset;
 use demst::dense::step::{CheapestEdgeStep, NaiveStep, RustStep};
+use demst::dense::{DenseMst, PrimDense, PrimScalar};
 use demst::report::Table;
-use demst::runtime::{Engine, XlaStep};
 use demst::util::prng::Pcg64;
-use std::path::PathBuf;
+
+#[derive(Clone)]
+struct JsonRow {
+    section: &'static str,
+    n: usize,
+    d: usize,
+    provider: String,
+    ms: f64,
+    gflops: f64,
+    speedup: Option<f64>,
+}
 
 fn main() {
-    let artifacts = PathBuf::from("artifacts");
-    let have_xla = Engine::artifacts_available(&artifacts);
-    if !have_xla {
-        eprintln!("NOTE: artifacts/ missing — XLA rows skipped; run `make artifacts`");
-    }
     let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
+    let mut json_rows: Vec<JsonRow> = Vec::new();
 
+    // ---------------------------------------------------- cheapest-edge step
     let shapes: &[(usize, usize)] = if fast {
         &[(256, 32), (512, 128)]
     } else {
@@ -29,7 +42,7 @@ fn main() {
     };
 
     let mut t = Table::new(
-        "E7 cheapest-edge step: provider comparison (median of samples)",
+        "E7a cheapest-edge step: provider comparison (median of samples)",
         &["N", "D", "provider", "ms", "GFLOP/s", "vs rust-blocked"],
     );
     let mut bench = Bench::from_env();
@@ -39,7 +52,6 @@ fn main() {
         let comps: Vec<i32> = (0..n).map(|i| (i % 17) as i32).collect();
         let flops = 2.0 * (n as f64) * (n as f64) * (d as f64);
 
-        let mut rust_ms = f64::NAN;
         // naive only at small shapes (it's O(n²d) with poor constants)
         if n <= 512 {
             let m = bench.run(format!("naive {n}x{d}"), || {
@@ -47,7 +59,17 @@ fn main() {
             });
             let ms = m.median_secs() * 1e3;
             t.push_row(&row(n, d, "naive", ms, flops, None));
+            json_rows.push(JsonRow {
+                section: "cheapest_edge",
+                n,
+                d,
+                provider: "naive".into(),
+                ms,
+                gflops: flops / (ms / 1e3) / 1e9,
+                speedup: None,
+            });
         }
+        let rust_ms;
         {
             let step = RustStep::default();
             let m = bench.run(format!("rust-blocked {n}x{d}"), || {
@@ -55,20 +77,96 @@ fn main() {
             });
             rust_ms = m.median_secs() * 1e3;
             t.push_row(&row(n, d, "rust-blocked", rust_ms, flops, None));
-        }
-        if have_xla {
-            let engine = Engine::load(&artifacts).unwrap();
-            let step = XlaStep::new(engine);
-            // warm the executable cache outside the timed region
-            let _ = step.step(&points, n, d, &comps);
-            let m = bench.run(format!("pallas-xla {n}x{d}"), || {
-                step.step(&points, n, d, &comps)
+            json_rows.push(JsonRow {
+                section: "cheapest_edge",
+                n,
+                d,
+                provider: "rust-blocked".into(),
+                ms: rust_ms,
+                gflops: flops / (rust_ms / 1e3) / 1e9,
+                speedup: None,
             });
-            let ms = m.median_secs() * 1e3;
-            t.push_row(&row(n, d, "pallas-xla", ms, flops, Some(rust_ms / ms)));
+        }
+        #[cfg(feature = "backend-xla")]
+        {
+            let artifacts = std::path::PathBuf::from("artifacts");
+            if demst::runtime::artifacts_available(&artifacts) {
+                let engine = demst::runtime::Engine::load(&artifacts).unwrap();
+                let step = demst::runtime::XlaStep::new(engine);
+                // warm the executable cache outside the timed region
+                let _ = step.step(&points, n, d, &comps);
+                let m = bench.run(format!("pallas-xla {n}x{d}"), || {
+                    step.step(&points, n, d, &comps)
+                });
+                let ms = m.median_secs() * 1e3;
+                t.push_row(&row(n, d, "pallas-xla", ms, flops, Some(rust_ms / ms)));
+                json_rows.push(JsonRow {
+                    section: "cheapest_edge",
+                    n,
+                    d,
+                    provider: "pallas-xla".into(),
+                    ms,
+                    gflops: flops / (ms / 1e3) / 1e9,
+                    speedup: Some(rust_ms / ms),
+                });
+            } else {
+                eprintln!("NOTE: artifacts/ missing — XLA rows skipped; run `make artifacts`");
+            }
         }
     }
     t.print();
+
+    // -------------------------------------------- dense Prim: blocked vs scalar
+    // The refactor's acceptance bar: blocked rows beat the scalar path at
+    // d >= 64 (norm precompute halves flops; no per-pair virtual dispatch).
+    let prim_shapes: &[(usize, usize)] =
+        if fast { &[(384, 64), (384, 256)] } else { &[(512, 64), (512, 256), (768, 768)] };
+    let mut t2 = Table::new(
+        "E7b dense Prim d-MST: blocked DistanceBlock rows vs scalar Metric::dist",
+        &["N", "D", "kernel", "ms", "GFLOP/s", "blocked speedup"],
+    );
+    for &(n, d) in prim_shapes {
+        let mut rng = Pcg64::seeded(0x9E7 ^ (n + d) as u64);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let ds = Dataset::new(n, d, data);
+        // n(n-1)/2 distance evals, ~2d flops each in Gram form
+        let flops = (n * (n - 1) / 2) as f64 * 2.0 * d as f64;
+
+        let scalar = PrimScalar::sq_euclid();
+        let m = bench.run(format!("prim-scalar {n}x{d}"), || scalar.mst(&ds));
+        let scalar_ms = m.median_secs() * 1e3;
+        t2.push_row(&row(n, d, "prim-scalar", scalar_ms, flops, None));
+        json_rows.push(JsonRow {
+            section: "prim_dense",
+            n,
+            d,
+            provider: "prim-scalar".into(),
+            ms: scalar_ms,
+            gflops: flops / (scalar_ms / 1e3) / 1e9,
+            speedup: None,
+        });
+
+        let blocked = PrimDense::sq_euclid();
+        let m = bench.run(format!("prim-blocked {n}x{d}"), || blocked.mst(&ds));
+        let blocked_ms = m.median_secs() * 1e3;
+        t2.push_row(&row(n, d, "prim-blocked", blocked_ms, flops, Some(scalar_ms / blocked_ms)));
+        json_rows.push(JsonRow {
+            section: "prim_dense",
+            n,
+            d,
+            provider: "prim-blocked".into(),
+            ms: blocked_ms,
+            gflops: flops / (blocked_ms / 1e3) / 1e9,
+            speedup: Some(scalar_ms / blocked_ms),
+        });
+    }
+    t2.print();
+
+    let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e7.json".into());
+    match std::fs::write(&out_path, to_json(&json_rows, fast)) {
+        Ok(()) => println!("E7: wrote {out_path}"),
+        Err(e) => eprintln!("E7: could not write {out_path}: {e}"),
+    }
     println!(
         "E7: the XLA executable is the vendor-kernel stand-in; on real TPU the same\n\
          HLO lowers to Mosaic (MXU matmul) — see DESIGN.md §Perf for the roofline estimate."
@@ -84,4 +182,33 @@ fn row(n: usize, d: usize, provider: &str, ms: f64, flops: f64, speedup: Option<
         format!("{:.2}", flops / (ms / 1e3) / 1e9),
         speedup.map_or("-".to_string(), |s| format!("{s:.2}x")),
     ]
+}
+
+/// Hand-rolled JSON (no serde in the offline vendor set).
+fn to_json(rows: &[JsonRow], fast: bool) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"e7_kernel\",\n");
+    s.push_str(&format!("  \"fast_mode\": {fast},\n"));
+    s.push_str(&format!(
+        "  \"features\": {{\"backend_xla\": {}}},\n",
+        demst::runtime::backend_xla_compiled()
+    ));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let speedup = r.speedup.map_or("null".to_string(), |v| format!("{v:.4}"));
+        s.push_str(&format!(
+            "    {{\"section\": \"{}\", \"n\": {}, \"d\": {}, \"provider\": \"{}\", \
+             \"ms\": {:.4}, \"gflops\": {:.4}, \"speedup_vs_baseline\": {}}}{}\n",
+            r.section,
+            r.n,
+            r.d,
+            r.provider,
+            r.ms,
+            r.gflops,
+            speedup,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }

@@ -21,7 +21,8 @@ fn main() {
     let spec = EmbeddingSpec { n, d, latent: 8, k: 16, cluster_std: 0.35, noise: 0.01 };
     let (ds, _) = embedding_like(&spec, Pcg64::seeded(0xE8));
 
-    let use_xla = demst::runtime::Engine::artifacts_available(std::path::Path::new("artifacts"));
+    let use_xla = demst::runtime::backend_xla_compiled()
+        && demst::runtime::artifacts_available(std::path::Path::new("artifacts"));
     let kernel = if use_xla { KernelChoice::BoruvkaXla } else { KernelChoice::BoruvkaRust };
     // workers = 1 so per-job times are oversubscription-free for the
     // makespan model (this testbed may expose a single core).

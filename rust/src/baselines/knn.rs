@@ -7,7 +7,8 @@
 //! where that happens.
 
 use crate::data::Dataset;
-use crate::geometry::blocked::{pairwise_block, self_norms};
+use crate::geometry::blocked::distance_block;
+use crate::geometry::MetricKind;
 use crate::graph::Edge;
 use crate::mst::kruskal;
 
@@ -27,10 +28,20 @@ pub struct KnnResult {
 /// Exact (brute-force) kNN edge list: for each point its k nearest others,
 /// deduplicated as undirected edges. Squared Euclidean weights.
 pub fn knn_graph(ds: &Dataset, k: usize) -> Vec<Edge> {
+    knn_graph_metric(ds, k, MetricKind::SqEuclid)
+}
+
+/// Metric-generic exact kNN edge list via the blocked
+/// [`DistanceBlock`](crate::geometry::DistanceBlock) kernels: for each point
+/// its k nearest others under `metric`, deduplicated as undirected edges.
+pub fn knn_graph_metric(ds: &Dataset, k: usize, metric: MetricKind) -> Vec<Edge> {
     assert!(k >= 1 && k < ds.n, "k={k} out of range for n={}", ds.n);
     let n = ds.n;
     let d = ds.d;
-    let norms = self_norms(ds.as_slice(), n, d);
+    let blk = distance_block(metric);
+    let sqrt_at_emit = blk.compare_form_is_squared();
+    let aux = blk.prepare(ds.as_slice(), n, d);
+    let all: Vec<u32> = (0..n as u32).collect();
     let block = 128usize;
     let mut edges: Vec<Edge> = Vec::with_capacity(n * k);
     let mut tile = vec![0.0f32; block * n];
@@ -38,16 +49,7 @@ pub fn knn_graph(ds: &Dataset, k: usize) -> Vec<Edge> {
     let mut cand: Vec<(f32, u32)> = Vec::with_capacity(n);
     for i0 in (0..n).step_by(block) {
         let im = (i0 + block).min(n) - i0;
-        pairwise_block(
-            &ds.as_slice()[i0 * d..(i0 + im) * d],
-            &norms[i0..i0 + im],
-            im,
-            ds.as_slice(),
-            &norms,
-            n,
-            d,
-            &mut tile[..im * n],
-        );
+        blk.block(ds.as_slice(), d, &aux, &all[i0..i0 + im], &all, &mut tile[..im * n]);
         for ii in 0..im {
             let i = i0 + ii;
             cand.clear();
@@ -61,6 +63,7 @@ pub fn knn_graph(ds: &Dataset, k: usize) -> Vec<Edge> {
                 a.0.total_cmp(&b.0).then(a.1.cmp(&b.1))
             });
             for &(w, j) in &cand[..k] {
+                let w = if sqrt_at_emit { w.sqrt() } else { w };
                 edges.push(Edge::new(i as u32, j, w));
             }
         }
@@ -68,9 +71,14 @@ pub fn knn_graph(ds: &Dataset, k: usize) -> Vec<Edge> {
     crate::graph::edge::dedup_edges(&edges)
 }
 
-/// kNN-graph MST baseline.
+/// kNN-graph MST baseline (squared Euclidean).
 pub fn knn_boruvka(ds: &Dataset, k: usize) -> KnnResult {
-    let graph = knn_graph(ds, k);
+    knn_boruvka_metric(ds, k, MetricKind::SqEuclid)
+}
+
+/// Metric-generic kNN-graph MST baseline.
+pub fn knn_boruvka_metric(ds: &Dataset, k: usize, metric: MetricKind) -> KnnResult {
+    let graph = knn_graph_metric(ds, k, metric);
     let forest = kruskal(ds.n, &graph);
     let components = ds.n - forest.len();
     KnnResult { forest, components, dist_evals: (ds.n * ds.n) as u64, k }
@@ -142,5 +150,29 @@ mod tests {
     fn k_bounds_checked() {
         let ds = uniform(10, 2, 1.0, Pcg64::seeded(504));
         knn_graph(&ds, 10);
+    }
+
+    #[test]
+    fn metric_generic_knn_recovers_metric_mst_at_full_k() {
+        // Integer coordinates: blocked and scalar paths are float-exact, so
+        // kNN with k = n-1 (the complete graph) must reproduce the exact MST
+        // under every metric.
+        let mut rng = Pcg64::seeded(505);
+        let (n, d) = (26, 5);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(13) as f32 - 6.0).collect();
+        let ds = crate::data::Dataset::new(n, d, data);
+        for kind in [
+            crate::geometry::MetricKind::Cosine,
+            crate::geometry::MetricKind::Manhattan,
+        ] {
+            let exact = crate::dense::PrimScalar::new(kind).mst(&ds);
+            let r = knn_boruvka_metric(&ds, n - 1, kind);
+            assert_eq!(r.components, 1, "{kind:?}");
+            assert_eq!(
+                normalize_tree(&exact),
+                normalize_tree(&r.forest),
+                "{kind:?}"
+            );
+        }
     }
 }

@@ -51,6 +51,8 @@ pub fn run_distributed(ds: &Dataset, cfg: &RunConfig) -> anyhow::Result<DistOutp
     let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
     let mut metrics = RunMetrics::default();
     metrics.worker_busy = vec![std::time::Duration::ZERO; n_workers];
+    metrics.kernel = crate::runtime::resolved_kernel_name(cfg).to_string();
+    metrics.kernel_fallback = crate::runtime::kernel_fallback_note(cfg);
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
         // Spawn workers.

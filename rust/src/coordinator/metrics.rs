@@ -27,6 +27,12 @@ pub struct RunMetrics {
     pub final_mst: Duration,
     /// per-job kernel compute times (gather mode), in completion order
     pub job_times: Vec<Duration>,
+    /// d-MST kernel the workers actually ran (after backend resolution)
+    pub kernel: String,
+    /// set when the requested kernel was unavailable in this build and the
+    /// backend resolver substituted another (e.g. `boruvka-xla` without
+    /// `--features backend-xla`)
+    pub kernel_fallback: Option<String>,
 }
 
 impl RunMetrics {
@@ -93,7 +99,7 @@ impl RunMetrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         use crate::util::{human_bytes, human_count};
-        format!(
+        let mut s = format!(
             "wall={:?} jobs={} dist_evals={} scatter={} gather={} msgs={} union_edges={} eff={:.2} imb={:.2}",
             self.wall,
             self.jobs,
@@ -104,7 +110,14 @@ impl RunMetrics {
             self.union_edges,
             self.busy_efficiency(),
             self.imbalance(),
-        )
+        );
+        if !self.kernel.is_empty() {
+            s.push_str(&format!(" kernel={}", self.kernel));
+        }
+        if let Some(note) = &self.kernel_fallback {
+            s.push_str(&format!(" (fallback: {note})"));
+        }
+        s
     }
 }
 
@@ -148,5 +161,18 @@ mod tests {
         assert_eq!(m.busy_efficiency(), 0.0);
         assert_eq!(m.imbalance(), 1.0);
         assert!(m.summary().contains("jobs=0"));
+        assert!(!m.summary().contains("kernel="), "empty kernel omitted");
+    }
+
+    #[test]
+    fn summary_reports_kernel_and_fallback() {
+        let m = RunMetrics {
+            kernel: "boruvka-rust".into(),
+            kernel_fallback: Some("backend-xla not compiled".into()),
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("kernel=boruvka-rust"), "{s}");
+        assert!(s.contains("fallback: backend-xla not compiled"), "{s}");
     }
 }

@@ -2,27 +2,22 @@
 
 use super::messages::Message;
 use super::netsim::{Direction, NetSim};
-use crate::config::{KernelChoice, RunConfig};
+use crate::config::RunConfig;
 use crate::decomp::reduction::tree_merge;
-use crate::dense::{BoruvkaDense, DenseMst, PrimDense};
+use crate::dense::DenseMst;
 use crate::graph::Edge;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
 
-/// Build this worker's kernel. Called *inside* the worker thread so PJRT
-/// handles (not `Send`) stay thread-local, like per-rank process memory.
+/// Build this worker's kernel via the backend resolver. Called *inside* the
+/// worker thread so PJRT handles (not `Send`) stay thread-local, like
+/// per-rank process memory. When the requested kernel is not compiled into
+/// this build (e.g. `boruvka-xla` without `--features backend-xla`), the
+/// resolver substitutes the blocked Rust provider; the leader reports the
+/// substitution in `RunMetrics::kernel_fallback`.
 pub fn build_kernel(cfg: &RunConfig) -> anyhow::Result<Box<dyn DenseMst>> {
-    Ok(match cfg.kernel {
-        KernelChoice::PrimDense => Box::new(PrimDense::new(cfg.metric)),
-        KernelChoice::BoruvkaRust => Box::new(BoruvkaDense::new_rust(cfg.metric)),
-        KernelChoice::BoruvkaXla => {
-            let engine = crate::runtime::Engine::load(&cfg.artifacts_dir)?;
-            Box::new(BoruvkaDense::new(
-                std::sync::Arc::new(crate::runtime::XlaStep::new(engine)),
-                cfg.metric,
-            ))
-        }
-    })
+    let (kernel, _fallback) = crate::runtime::build_dense_kernel(cfg)?;
+    Ok(kernel)
 }
 
 /// Worker main loop.

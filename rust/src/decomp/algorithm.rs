@@ -247,6 +247,94 @@ mod tests {
         }
     }
 
+    /// Complete-graph edges via the scalar `PlainMetric` — the
+    /// metric-generic brute oracle.
+    fn complete_edges_metric(ds: &Dataset, kind: crate::geometry::MetricKind) -> Vec<Edge> {
+        use crate::geometry::metric::PlainMetric;
+        use crate::geometry::Metric;
+        let m = PlainMetric(kind);
+        let mut edges = Vec::with_capacity(ds.n * (ds.n - 1) / 2);
+        for i in 0..ds.n {
+            for j in (i + 1)..ds.n {
+                edges.push(Edge::new(i as u32, j as u32, m.dist(ds.row(i), ds.row(j))));
+            }
+        }
+        edges
+    }
+
+    /// Integer coordinates keep the blocked Gram-form kernels float-exact
+    /// against the scalar metrics (sums below 2^24), so tree comparisons can
+    /// be equality, not tolerance.
+    fn int_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(15) as f32 - 7.0).collect();
+        Dataset::new(n, d, data)
+    }
+
+    #[test]
+    fn theorem1_exactness_cosine_blocked_vs_scalar_oracle() {
+        let ds = int_dataset(210, 64, 6);
+        let kind = crate::geometry::MetricKind::Cosine;
+        let expect = crate::mst::kruskal(ds.n, &complete_edges_metric(&ds, kind));
+        for parts in [1usize, 2, 4, 6] {
+            let cfg = DecompConfig { parts, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::new(kind));
+            assert!(is_spanning_tree(ds.n, &out.mst), "parts={parts}");
+            assert_eq!(
+                normalize_tree(&expect),
+                normalize_tree(&out.mst),
+                "parts={parts}: cosine decomposition must match the scalar oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_exactness_manhattan_blocked_vs_scalar_oracle() {
+        let ds = int_dataset(211, 72, 5);
+        let kind = crate::geometry::MetricKind::Manhattan;
+        let expect = crate::mst::kruskal(ds.n, &complete_edges_metric(&ds, kind));
+        for parts in [1usize, 3, 4, 8] {
+            let cfg = DecompConfig { parts, ..Default::default() };
+            let out = decomposed_mst(&ds, &cfg, &PrimDense::new(kind));
+            assert!(is_spanning_tree(ds.n, &out.mst), "parts={parts}");
+            assert_eq!(
+                normalize_tree(&expect),
+                normalize_tree(&out.mst),
+                "parts={parts}: manhattan decomposition must match the scalar oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn nonmetric_decomposition_across_strategies_and_kernels() {
+        // Cosine + Manhattan through every partition strategy, with both the
+        // blocked Prim kernel and the Borůvka blocked-step kernel, against
+        // the scalar-Prim oracle.
+        use crate::dense::{BoruvkaDense, PrimScalar};
+        for kind in [
+            crate::geometry::MetricKind::Cosine,
+            crate::geometry::MetricKind::Manhattan,
+        ] {
+            let ds = int_dataset(212, 48, 4);
+            let expect = PrimScalar::new(kind).mst(&ds);
+            for strategy in PartitionStrategy::ALL {
+                let cfg = DecompConfig { parts: 4, strategy, seed: 3, ..Default::default() };
+                let a = decomposed_mst(&ds, &cfg, &PrimDense::new(kind));
+                let b = decomposed_mst(&ds, &cfg, &BoruvkaDense::new_rust(kind));
+                assert_eq!(
+                    normalize_tree(&expect),
+                    normalize_tree(&a.mst),
+                    "{kind:?} {strategy:?} prim-blocked"
+                );
+                assert_eq!(
+                    normalize_tree(&expect),
+                    normalize_tree(&b.mst),
+                    "{kind:?} {strategy:?} boruvka-blocked"
+                );
+            }
+        }
+    }
+
     #[test]
     fn weight_equals_exact_for_many_seeds() {
         for seed in 0..8 {

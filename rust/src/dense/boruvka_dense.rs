@@ -1,10 +1,11 @@
 //! Dense Borůvka d-MST: ≤⌈log₂n⌉ rounds of the cheapest-edge step.
 //!
 //! Each round delegates the `O(n²d)` distance work to a
-//! [`CheapestEdgeStep`] provider (pure Rust or the AOT-compiled Pallas/XLA
-//! kernel) and keeps only the `O(n)` select-merge bookkeeping here, which is
-//! the structure that makes the paper's "exploit existing high performance
-//! kernels without adjustment" claim concrete.
+//! [`CheapestEdgeStep`] provider (the metric-generic blocked Rust kernels,
+//! or the AOT-compiled Pallas/XLA kernel behind `backend-xla`) and keeps
+//! only the `O(n)` select-merge bookkeeping here, which is the structure
+//! that makes the paper's "exploit existing high performance kernels
+//! without adjustment" claim concrete.
 
 use super::step::{CheapestEdgeStep, RustStep};
 use super::DenseMst;
@@ -24,19 +25,23 @@ pub struct BoruvkaDense {
 }
 
 impl BoruvkaDense {
-    /// With the given provider. Only `SqEuclid`/`Euclid` are supported (the
-    /// step providers compute squared Euclidean).
+    /// With the given provider. The provider must compute distances for the
+    /// same metric family: providers advertise their metric via
+    /// [`CheapestEdgeStep::metric`], and for `Euclid` the comparison form is
+    /// squared (weights are `sqrt`ed at edge emission).
     pub fn new(step: Arc<dyn CheapestEdgeStep>, metric: MetricKind) -> Self {
+        let provided = step.metric();
+        let compatible = provided == metric || provided == metric.compare_form();
         assert!(
-            matches!(metric, MetricKind::SqEuclid | MetricKind::Euclid),
-            "BoruvkaDense step providers compute (squared) Euclidean distances; got {metric:?}"
+            compatible,
+            "step provider computes {provided:?} distances but the kernel metric is {metric:?}"
         );
         Self { step, metric, evals: AtomicU64::new(0), rounds: AtomicU64::new(0) }
     }
 
-    /// Pure-Rust blocked provider.
+    /// Pure-Rust blocked provider for any metric.
     pub fn new_rust(metric: MetricKind) -> Self {
-        Self::new(Arc::new(RustStep::default()), metric)
+        Self::new(Arc::new(RustStep::new(metric.compare_form())), metric)
     }
 
     /// Borůvka rounds executed so far (across all `mst` calls since reset).
@@ -132,6 +137,7 @@ impl DenseMst for BoruvkaDense {
 mod tests {
     use super::*;
     use crate::data::generators::{gaussian_blobs, uniform, BlobSpec};
+    use crate::dense::prim_dense::PrimScalar;
     use crate::graph::components::is_spanning_tree;
     use crate::mst::normalize_tree;
     use crate::util::prng::Pcg64;
@@ -171,9 +177,26 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "squared")]
-    fn rejects_non_euclidean() {
-        BoruvkaDense::new_rust(MetricKind::Cosine);
+    fn cosine_and_manhattan_match_scalar_prim() {
+        // The generalized step providers must reproduce the scalar-metric
+        // oracle tree exactly on integer coordinates (float-exact paths).
+        let mut rng = Pcg64::seeded(77);
+        let (n, d) = (60, 8);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(15) as f32 - 7.0).collect();
+        let ds = Dataset::new(n, d, data);
+        for kind in [MetricKind::Cosine, MetricKind::Manhattan] {
+            let oracle = PrimScalar::new(kind).mst(&ds);
+            let got = BoruvkaDense::new_rust(kind).mst(&ds);
+            assert!(is_spanning_tree(n, &got), "{kind:?}");
+            assert_eq!(normalize_tree(&oracle), normalize_tree(&got), "{kind:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "step provider computes")]
+    fn rejects_mismatched_provider_metric() {
+        // A cosine provider cannot back a Manhattan kernel.
+        BoruvkaDense::new(Arc::new(RustStep::new(MetricKind::Cosine)), MetricKind::Manhattan);
     }
 
     #[test]
@@ -194,9 +217,9 @@ mod tests {
         let ds = gaussian_blobs(&spec, Pcg64::seeded(44));
         let a = crate::dense::PrimDense::sq_euclid().mst(&ds);
         let b = BoruvkaDense::new_rust(MetricKind::SqEuclid).mst(&ds);
-        // Continuous data: the blocked matmul-form step and Prim's direct
-        // evaluation differ by float ulps, so compare structure exactly and
-        // weights with a relative tolerance.
+        // Continuous data: both paths compute matmul-form distances, so the
+        // trees agree exactly; weights compared with a relative tolerance as
+        // belt-and-braces.
         let (na, nb) = (normalize_tree(&a), normalize_tree(&b));
         let ea: Vec<(u32, u32)> = na.iter().map(|e| (e.u, e.v)).collect();
         let eb: Vec<(u32, u32)> = nb.iter().map(|e| (e.u, e.v)).collect();

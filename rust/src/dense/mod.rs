@@ -1,14 +1,19 @@
 //! Dense ("d-MST") kernels: exact MSTs of the *complete* graph over a vector
 //! set, the subkernel the paper's Algorithm 1 calls per partition pair.
 //!
-//! Two independent algorithms:
-//! - [`PrimDense`] — classic `O(n²)` dense Prim, pure Rust, any [`Metric`].
-//!   Simple, allocation-light, and the exactness oracle for everything else.
+//! Three implementations:
+//! - [`PrimDense`] — `O(n²)` dense Prim whose relaxation consumes blocked
+//!   distance rows from the metric-generic
+//!   [`DistanceBlock`](crate::geometry::DistanceBlock) kernels. The default
+//!   hot path for every metric.
+//! - [`PrimScalar`] — the scalar-`Metric` Prim formulation: the bit-exact
+//!   oracle for the blocked path and the E7 baseline.
 //! - [`BoruvkaDense`] — Borůvka rounds where the `O(n²d)` cheapest-edge step
 //!   is delegated to a [`CheapestEdgeStep`] provider: the pure-Rust blocked
-//!   provider here, or the XLA executable provider in [`crate::runtime`]
-//!   (the L1 Pallas kernel lowered AOT). This is the paper's "existing high
-//!   performance kernel ... without adjustment" slot.
+//!   provider here, or (with `--features backend-xla`) the XLA executable
+//!   provider in [`crate::runtime`] — the L1 Pallas kernel lowered AOT. This
+//!   is the paper's "existing high performance kernel ... without
+//!   adjustment" slot.
 //!
 //! All implementations observe the crate-wide strict edge order, so they all
 //! produce the identical unique MST (Theorem 1's uniqueness assumption).
@@ -18,7 +23,7 @@ pub mod step;
 pub mod boruvka_dense;
 
 pub use boruvka_dense::BoruvkaDense;
-pub use prim_dense::PrimDense;
+pub use prim_dense::{PrimDense, PrimScalar};
 pub use step::{CheapestEdgeStep, RustStep};
 
 use crate::data::Dataset;

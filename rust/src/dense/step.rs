@@ -1,9 +1,10 @@
 //! The Borůvka cheapest-edge step: the `O(N²D)` compute hot-spot.
 //!
-//! `step(points, comps)` returns, for every valid vertex `i`, the squared
-//! Euclidean distance and index of the closest vertex in a *different*
-//! component. Vertices with `comps[i] < 0` are padding and ignored (they
-//! report `(+inf, -1)` and never appear as neighbors).
+//! `step(points, comps)` returns, for every valid vertex `i`, the distance
+//! (in the metric's *comparison form* — squared for (sq-)Euclidean) and index
+//! of the closest vertex in a *different* component. Vertices with
+//! `comps[i] < 0` are padding and ignored (they report `(+inf, -1)` and
+//! never appear as neighbors).
 //!
 //! Tie-break contract: among equal distances the **smallest index j** wins.
 //! As proven in `boruvka_dense::tests::smallest_j_matches_strict_order`, this
@@ -11,10 +12,13 @@
 //! any provider honoring it yields the unique MST.
 //!
 //! Providers:
-//! - [`RustStep`] — blocked matmul-form pairwise distances, pure Rust.
-//! - `runtime::XlaStep` — the AOT-compiled Pallas kernel via PJRT.
+//! - [`RustStep`] — blocked distance rows via the metric-generic
+//!   [`DistanceBlock`] kernels (Gram/dot form, pure Rust); any metric.
+//! - `runtime::XlaStep` — the AOT-compiled Pallas kernel via PJRT
+//!   (`backend-xla` feature; squared Euclidean only).
 
-use crate::geometry::blocked::self_norms;
+use crate::geometry::blocked::{distance_block, DistanceBlock};
+use crate::geometry::MetricKind;
 
 /// Provider of the cheapest-edge step. Not `Send`/`Sync` — the XLA provider
 /// owns thread-local PJRT handles; build one per worker thread.
@@ -28,6 +32,11 @@ pub trait CheapestEdgeStep {
     /// Name for reporting.
     fn name(&self) -> &'static str;
 
+    /// Metric whose comparison form the distances are in.
+    fn metric(&self) -> MetricKind {
+        MetricKind::SqEuclid
+    }
+
     /// Distance evaluations charged per call (for E2 work accounting):
     /// valid_n², since the kernel computes the full masked matrix.
     fn evals_per_call(&self, valid_n: u64) -> u64 {
@@ -35,15 +44,30 @@ pub trait CheapestEdgeStep {
     }
 }
 
-/// Pure-Rust provider using blocked matmul-form pairwise distances.
+/// Pure-Rust provider: consumes blocked `(row × tile)` distance rows from
+/// the metric-generic [`DistanceBlock`] kernels.
 pub struct RustStep {
-    /// row-block size for the pairwise tiles
+    /// column-block size for the distance tiles
     pub block: usize,
+    metric: MetricKind,
+    dist: Box<dyn DistanceBlock>,
+}
+
+impl RustStep {
+    /// Blocked provider for any metric (default tile width).
+    pub fn new(metric: MetricKind) -> Self {
+        Self::with_block(metric, 64)
+    }
+
+    /// Blocked provider with an explicit column-tile width.
+    pub fn with_block(metric: MetricKind, block: usize) -> Self {
+        Self { block: block.max(1), metric, dist: distance_block(metric) }
+    }
 }
 
 impl Default for RustStep {
     fn default() -> Self {
-        Self { block: 64 }
+        Self::new(MetricKind::SqEuclid)
     }
 }
 
@@ -51,33 +75,33 @@ impl CheapestEdgeStep for RustStep {
     fn step(&self, points: &[f32], n: usize, d: usize, comps: &[i32]) -> (Vec<f32>, Vec<i32>) {
         debug_assert_eq!(points.len(), n * d);
         debug_assert_eq!(comps.len(), n);
-        let norms = self_norms(points, n, d);
+        let aux = self.dist.prepare(points, n, d);
         let mut dist = vec![f32::INFINITY; n];
         let mut idx = vec![-1i32; n];
-        let b = self.block.max(1);
-        // Perf note (EXPERIMENTS.md §Perf): fusing the min-scan into the dot
-        // loop (instead of materializing a (bm, bn) tile via pairwise_block
-        // and re-scanning it) avoids the tile write+read and the per-cell
-        // mask branch on the re-scan. Column blocking is kept so the b-rows
-        // tile stays cache-resident across the i loop.
+        let b = self.block;
+        // Perf note (EXPERIMENTS.md §Perf): column blocking keeps the b-rows
+        // tile cache-resident across the i loop; the mask is applied on the
+        // scan of the computed row (like the masked Pallas kernel computes
+        // the full matrix), keeping the inner distance loop branch-free.
+        let mut js: Vec<u32> = Vec::with_capacity(b);
+        let mut row = vec![0.0f32; b];
         for j0 in (0..n).step_by(b) {
             let jm = (j0 + b).min(n);
+            js.clear();
+            js.extend(j0 as u32..jm as u32);
             for i in 0..n {
                 let ci = comps[i];
                 if ci < 0 {
                     continue;
                 }
-                let arow = &points[i * d..(i + 1) * d];
-                let nai = norms[i];
+                self.dist.row(points, d, &aux, i, &js, &mut row[..js.len()]);
                 let (mut bd, mut bj) = (dist[i], idx[i]);
-                for j in j0..jm {
-                    let cj = comps[j];
+                for (k, &j) in js.iter().enumerate() {
+                    let cj = comps[j as usize];
                     if cj < 0 || cj == ci {
                         continue;
                     }
-                    let v = nai + norms[j]
-                        - 2.0 * crate::geometry::blocked::dot_unrolled(arow, &points[j * d..(j + 1) * d]);
-                    let v = if v < 0.0 { 0.0 } else { v };
+                    let v = row[k];
                     // strictly-less keeps the smallest j on ties because j
                     // increases monotonically within and across blocks
                     if v < bd {
@@ -95,10 +119,14 @@ impl CheapestEdgeStep for RustStep {
     fn name(&self) -> &'static str {
         "rust-blocked"
     }
+
+    fn metric(&self) -> MetricKind {
+        self.metric
+    }
 }
 
 /// Reference (unblocked, direct) provider used only in tests to validate the
-/// blocked/XLA providers.
+/// blocked/XLA providers. Squared Euclidean.
 pub struct NaiveStep;
 
 impl CheapestEdgeStep for NaiveStep {
@@ -132,6 +160,7 @@ impl CheapestEdgeStep for NaiveStep {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geometry::metric::{cosine, manhattan};
     use crate::util::prng::Pcg64;
 
     /// Integer-valued coordinates so matmul-form distances are exact and the
@@ -147,7 +176,7 @@ mod tests {
             let pts = int_points(&mut rng, n, d);
             let comps: Vec<i32> = (0..n).map(|i| (i % 5) as i32).collect();
             let (d1, i1) = NaiveStep.step(&pts, n, d, &comps);
-            let (d2, i2) = RustStep { block }.step(&pts, n, d, &comps);
+            let (d2, i2) = RustStep::with_block(MetricKind::SqEuclid, block).step(&pts, n, d, &comps);
             assert_eq!(i1, i2, "n={n} d={d} block={block}");
             assert_eq!(d1, d2);
         }
@@ -189,5 +218,47 @@ mod tests {
             let (_, idx) = provider.step(&pts, 3, 2, &comps);
             assert_eq!(idx[0], 1, "{}: smallest j wins tie", provider.name());
         }
+    }
+
+    #[test]
+    fn metric_generic_step_matches_direct_scan() {
+        // For cosine and manhattan, compare the blocked provider to a direct
+        // O(n²) scan using the scalar distance functions (integer coords:
+        // both paths are float-exact).
+        let mut rng = Pcg64::seeded(33);
+        let (n, d) = (40, 6);
+        let pts = int_points(&mut rng, n, d);
+        let comps: Vec<i32> = (0..n).map(|i| (i % 4) as i32).collect();
+        for kind in [MetricKind::Cosine, MetricKind::Manhattan] {
+            let (gd, gi) = RustStep::with_block(kind, 16).step(&pts, n, d, &comps);
+            let mut wd = vec![f32::INFINITY; n];
+            let mut wi = vec![-1i32; n];
+            for i in 0..n {
+                for j in 0..n {
+                    if comps[j] == comps[i] {
+                        continue;
+                    }
+                    let w = match kind {
+                        MetricKind::Cosine => {
+                            cosine(&pts[i * d..(i + 1) * d], &pts[j * d..(j + 1) * d])
+                        }
+                        _ => manhattan(&pts[i * d..(i + 1) * d], &pts[j * d..(j + 1) * d]),
+                    };
+                    if w < wd[i] {
+                        wd[i] = w;
+                        wi[i] = j as i32;
+                    }
+                }
+            }
+            assert_eq!(gi, wi, "{kind:?} indices");
+            assert_eq!(gd, wd, "{kind:?} distances");
+        }
+    }
+
+    #[test]
+    fn step_reports_its_metric() {
+        assert_eq!(RustStep::default().metric(), MetricKind::SqEuclid);
+        assert_eq!(RustStep::new(MetricKind::Cosine).metric(), MetricKind::Cosine);
+        assert_eq!(NaiveStep.metric(), MetricKind::SqEuclid);
     }
 }

@@ -1,8 +1,13 @@
-//! Blocked pairwise-distance routines (pure Rust).
+//! Blocked pairwise-distance routines (pure Rust), metric-generic.
 //!
 //! Mirrors the matmul-form decomposition the L1 Pallas kernel uses:
-//! `‖x−y‖² = ‖x‖² + ‖y‖² − 2·x·y`. Used by the Rust cheapest-edge fallback,
-//! the kNN baseline, and as a cross-check for the XLA pairwise executable.
+//! `‖x−y‖² = ‖x‖² + ‖y‖² − 2·x·y`. The [`DistanceBlock`] trait generalizes
+//! that structure to every [`MetricKind`]: squared Euclidean and cosine share
+//! the Gram/dot form with precomputed per-row norms; Manhattan uses a tiled
+//! direct loop. Consumers: the blocked dense-Prim hot path, the Borůvka
+//! cheapest-edge fallback, the kNN baseline, and the XLA cross-checks.
+
+use super::metric::MetricKind;
 
 /// Squared L2 norm of each row of a row-major `(n, d)` matrix.
 pub fn self_norms(data: &[f32], n: usize, d: usize) -> Vec<f32> {
@@ -76,6 +81,27 @@ pub fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// 4-way unrolled Manhattan (L1) distance of two contiguous rows.
+#[inline]
+pub fn manhattan_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += (a[j] - b[j]).abs();
+        s1 += (a[j + 1] - b[j + 1]).abs();
+        s2 += (a[j + 2] - b[j + 2]).abs();
+        s3 += (a[j + 3] - b[j + 3]).abs();
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        s += (a[j] - b[j]).abs();
+    }
+    s
+}
+
 /// Convenience: full `(n, n)` self-distance matrix (squared Euclidean).
 pub fn pairwise_self(data: &[f32], n: usize, d: usize) -> Vec<f32> {
     let norms = self_norms(data, n, d);
@@ -84,10 +110,159 @@ pub fn pairwise_self(data: &[f32], n: usize, d: usize) -> Vec<f32> {
     out
 }
 
+/// Metric-generic blocked distance computation over one shared row-major
+/// point matrix.
+///
+/// The protocol is two-phase: [`prepare`](DistanceBlock::prepare) computes
+/// per-row auxiliary values once (norms for the Gram-form metrics, nothing
+/// for Manhattan), then [`row`](DistanceBlock::row) produces a distance row
+/// from a pivot to an arbitrary index list — the shape the blocked dense-Prim
+/// hot loop and the cheapest-edge step both consume. All implementations
+/// preserve the value-level conventions of the scalar [`super::Metric`]
+/// path (clamping, the cosine zero-vector rule), so the strict `(w, u, v)`
+/// edge order downstream sees the same comparisons.
+pub trait DistanceBlock: Send + Sync {
+    /// Which metric this block computes. For `Euclid` the *comparison* form
+    /// is still squared (monotone-equivalent); see [`compare_form_is_squared`].
+    fn kind(&self) -> MetricKind;
+
+    /// True when [`row`](DistanceBlock::row) emits squared-Euclidean values
+    /// that callers must `sqrt` before reporting `Euclid` edge weights.
+    fn compare_form_is_squared(&self) -> bool {
+        false
+    }
+
+    /// Per-row auxiliary values over the `(n, d)` matrix (may be empty).
+    fn prepare(&self, data: &[f32], n: usize, d: usize) -> Vec<f32>;
+
+    /// Distances from row `i` to each row in `js`, written to
+    /// `out[..js.len()]`. `aux` is the result of [`prepare`](Self::prepare)
+    /// over the same matrix.
+    fn row(&self, data: &[f32], d: usize, aux: &[f32], i: usize, js: &[u32], out: &mut [f32]);
+
+    /// Dense `(is.len(), js.len())` block, row-major. Default: one
+    /// [`row`](Self::row) call per pivot.
+    fn block(
+        &self,
+        data: &[f32],
+        d: usize,
+        aux: &[f32],
+        is: &[u32],
+        js: &[u32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), is.len() * js.len());
+        let w = js.len();
+        for (k, &i) in is.iter().enumerate() {
+            self.row(data, d, aux, i as usize, js, &mut out[k * w..(k + 1) * w]);
+        }
+    }
+}
+
+/// Gram/dot-form squared Euclidean (optionally `sqrt`ed to true Euclidean at
+/// emission time — comparisons stay in squared form either way).
+pub struct SqEuclidBlock {
+    /// Report `Euclid` as the metric kind (weights get `sqrt` at edge
+    /// emission by the kernels; `row` output stays squared).
+    pub euclid: bool,
+}
+
+impl DistanceBlock for SqEuclidBlock {
+    fn kind(&self) -> MetricKind {
+        if self.euclid {
+            MetricKind::Euclid
+        } else {
+            MetricKind::SqEuclid
+        }
+    }
+
+    fn compare_form_is_squared(&self) -> bool {
+        self.euclid
+    }
+
+    fn prepare(&self, data: &[f32], n: usize, d: usize) -> Vec<f32> {
+        self_norms(data, n, d)
+    }
+
+    fn row(&self, data: &[f32], d: usize, aux: &[f32], i: usize, js: &[u32], out: &mut [f32]) {
+        debug_assert!(out.len() >= js.len());
+        let arow = &data[i * d..(i + 1) * d];
+        let nai = aux[i];
+        for (k, &j) in js.iter().enumerate() {
+            let j = j as usize;
+            let v = nai + aux[j] - 2.0 * dot_unrolled(arow, &data[j * d..(j + 1) * d]);
+            out[k] = if v < 0.0 { 0.0 } else { v };
+        }
+    }
+}
+
+/// Gram/dot-form cosine distance with precomputed L2 norms:
+/// `1 − x·y / (‖x‖‖y‖)`; zero vectors are at distance 1 from everything
+/// (matching the scalar [`super::metric::cosine`] convention).
+pub struct CosineBlock;
+
+impl DistanceBlock for CosineBlock {
+    fn kind(&self) -> MetricKind {
+        MetricKind::Cosine
+    }
+
+    fn prepare(&self, data: &[f32], n: usize, d: usize) -> Vec<f32> {
+        self_norms(data, n, d).into_iter().map(f32::sqrt).collect()
+    }
+
+    fn row(&self, data: &[f32], d: usize, aux: &[f32], i: usize, js: &[u32], out: &mut [f32]) {
+        debug_assert!(out.len() >= js.len());
+        let arow = &data[i * d..(i + 1) * d];
+        let ni = aux[i];
+        for (k, &j) in js.iter().enumerate() {
+            let j = j as usize;
+            let nj = aux[j];
+            out[k] = if ni == 0.0 || nj == 0.0 {
+                1.0
+            } else {
+                1.0 - dot_unrolled(arow, &data[j * d..(j + 1) * d]) / (ni * nj)
+            };
+        }
+    }
+}
+
+/// Tiled direct Manhattan (L1): no useful Gram form exists, so this is a
+/// cache-friendly unrolled direct loop.
+pub struct ManhattanBlock;
+
+impl DistanceBlock for ManhattanBlock {
+    fn kind(&self) -> MetricKind {
+        MetricKind::Manhattan
+    }
+
+    fn prepare(&self, _data: &[f32], _n: usize, _d: usize) -> Vec<f32> {
+        Vec::new()
+    }
+
+    fn row(&self, data: &[f32], d: usize, _aux: &[f32], i: usize, js: &[u32], out: &mut [f32]) {
+        debug_assert!(out.len() >= js.len());
+        let arow = &data[i * d..(i + 1) * d];
+        for (k, &j) in js.iter().enumerate() {
+            let j = j as usize;
+            out[k] = manhattan_unrolled(arow, &data[j * d..(j + 1) * d]);
+        }
+    }
+}
+
+/// Factory: the blocked implementation for a metric kind.
+pub fn distance_block(kind: MetricKind) -> Box<dyn DistanceBlock> {
+    match kind {
+        MetricKind::SqEuclid => Box::new(SqEuclidBlock { euclid: false }),
+        MetricKind::Euclid => Box::new(SqEuclidBlock { euclid: true }),
+        MetricKind::Cosine => Box::new(CosineBlock),
+        MetricKind::Manhattan => Box::new(ManhattanBlock),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::geometry::metric::sq_euclid;
+    use crate::geometry::metric::{cosine, manhattan, sq_euclid, Metric, PlainMetric};
     use crate::util::prng::Pcg64;
 
     #[test]
@@ -129,6 +304,110 @@ mod tests {
             for j in 0..n {
                 assert!((m[i * n + j] - m[j * n + i]).abs() <= 1e-5);
                 assert!(m[i * n + j] >= 0.0, "non-negative after clamp");
+            }
+        }
+    }
+
+    /// Integer coordinates keep every arithmetic path exact in f32, so the
+    /// blocked rows must agree with the scalar metrics bit-for-bit
+    /// (sq-euclid, manhattan) or to float-identical operation order (cosine,
+    /// whose norms/dot are exact on integer inputs).
+    #[test]
+    fn distance_block_rows_match_scalar_metrics() {
+        let mut rng = Pcg64::seeded(3);
+        let (n, d) = (23, 9);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(17) as f32 - 8.0).collect();
+        let js: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0.0f32; n];
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let blk = distance_block(kind);
+            assert_eq!(blk.kind(), kind);
+            let aux = blk.prepare(&data, n, d);
+            for i in 0..n {
+                blk.row(&data, d, &aux, i, &js, &mut out);
+                for j in 0..n {
+                    let a = &data[i * d..(i + 1) * d];
+                    let b = &data[j * d..(j + 1) * d];
+                    let want = match kind {
+                        MetricKind::SqEuclid | MetricKind::Euclid => sq_euclid(a, b),
+                        MetricKind::Cosine => cosine(a, b),
+                        MetricKind::Manhattan => manhattan(a, b),
+                    };
+                    assert_eq!(out[j], want, "{kind:?} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn euclid_block_is_squared_compare_form() {
+        let blk = distance_block(MetricKind::Euclid);
+        assert!(blk.compare_form_is_squared());
+        assert_eq!(blk.kind(), MetricKind::Euclid);
+        assert!(!distance_block(MetricKind::SqEuclid).compare_form_is_squared());
+        assert!(!distance_block(MetricKind::Cosine).compare_form_is_squared());
+    }
+
+    #[test]
+    fn cosine_block_zero_vector_convention() {
+        // row 0 is the zero vector; scalar convention says distance 1.
+        let data = vec![0.0, 0.0, 1.0, 2.0, 3.0, -1.0];
+        let blk = CosineBlock;
+        let aux = blk.prepare(&data, 3, 2);
+        let js = [0u32, 1, 2];
+        let mut out = [0.0f32; 3];
+        blk.row(&data, 2, &aux, 0, &js, &mut out);
+        assert_eq!(out, [1.0, 1.0, 1.0]);
+        blk.row(&data, 2, &aux, 1, &js, &mut out);
+        assert_eq!(out[0], 1.0, "against the zero vector");
+        assert!(out[1].abs() < 1e-6, "self distance ~0");
+    }
+
+    #[test]
+    fn block_default_impl_matches_rows() {
+        let mut rng = Pcg64::seeded(4);
+        let (n, d) = (11, 6);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let blk = distance_block(MetricKind::SqEuclid);
+        let aux = blk.prepare(&data, n, d);
+        let is: Vec<u32> = vec![2, 5, 7];
+        let js: Vec<u32> = (0..n as u32).collect();
+        let mut tile = vec![0.0f32; is.len() * n];
+        blk.block(&data, d, &aux, &is, &js, &mut tile);
+        let mut row = vec![0.0f32; n];
+        for (k, &i) in is.iter().enumerate() {
+            blk.row(&data, d, &aux, i as usize, &js, &mut row);
+            assert_eq!(&tile[k * n..(k + 1) * n], row.as_slice(), "pivot {i}");
+        }
+    }
+
+    #[test]
+    fn blocked_rows_consistent_with_plain_metric_tolerance() {
+        // Continuous data: dot-form vs diff-form agree to relative tolerance.
+        let mut rng = Pcg64::seeded(5);
+        let (n, d) = (16, 24);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let js: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0.0f32; n];
+        for kind in [MetricKind::SqEuclid, MetricKind::Cosine, MetricKind::Manhattan] {
+            let blk = distance_block(kind);
+            let aux = blk.prepare(&data, n, d);
+            let scalar = PlainMetric(kind);
+            for i in 0..n {
+                blk.row(&data, d, &aux, i, &js, &mut out);
+                for j in 0..n {
+                    let want = scalar.dist(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]);
+                    assert!(
+                        (out[j] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "{kind:?} ({i},{j}): blocked={} scalar={want}",
+                        out[j]
+                    );
+                }
             }
         }
     }

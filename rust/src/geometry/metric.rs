@@ -26,8 +26,21 @@ impl MetricKind {
         }
     }
 
+    /// The metric whose values this kind *compares* in on the blocked hot
+    /// paths: `Euclid` compares in squared form (monotone-equivalent, one
+    /// `sqrt` per reported edge instead of per pair); everything else
+    /// compares in its own form.
+    pub fn compare_form(self) -> Self {
+        match self {
+            MetricKind::Euclid => MetricKind::SqEuclid,
+            other => other,
+        }
+    }
+
+    /// Parse a metric name. Case-insensitive and whitespace-tolerant, so
+    /// config files and CLI flags accept `"L2"`, `" cosine "`, etc.
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "sqeuclid" | "sq_euclid" | "l2sq" => Some(MetricKind::SqEuclid),
             "euclid" | "euclidean" | "l2" => Some(MetricKind::Euclid),
             "cosine" | "cos" => Some(MetricKind::Cosine),
@@ -236,5 +249,24 @@ mod tests {
         }
         assert_eq!(MetricKind::parse("l2"), Some(MetricKind::Euclid));
         assert_eq!(MetricKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn compare_form_squares_only_euclid() {
+        assert_eq!(MetricKind::Euclid.compare_form(), MetricKind::SqEuclid);
+        for k in [MetricKind::SqEuclid, MetricKind::Cosine, MetricKind::Manhattan] {
+            assert_eq!(k.compare_form(), k);
+        }
+    }
+
+    #[test]
+    fn kind_parse_case_and_whitespace_insensitive() {
+        assert_eq!(MetricKind::parse("L2"), Some(MetricKind::Euclid));
+        assert_eq!(MetricKind::parse(" cosine "), Some(MetricKind::Cosine));
+        assert_eq!(MetricKind::parse("MANHATTAN"), Some(MetricKind::Manhattan));
+        assert_eq!(MetricKind::parse("\tSqEuclid\n"), Some(MetricKind::SqEuclid));
+        assert_eq!(MetricKind::parse("Euclidean"), Some(MetricKind::Euclid));
+        assert_eq!(MetricKind::parse("  "), None);
+        assert_eq!(MetricKind::parse("l2 sq"), None);
     }
 }

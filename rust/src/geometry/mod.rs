@@ -3,11 +3,14 @@
 //!
 //! The paper's graph weights are `w({x,y}) = d(x⃗, y⃗)` for a symmetric binary
 //! distance function. Everything downstream (MST, decomposition, dendrogram)
-//! is metric-agnostic; high-performance paths specialize squared Euclidean
-//! because the L1 Pallas kernel computes it in matmul form.
+//! is metric-agnostic. The high-performance paths run through the
+//! [`DistanceBlock`] trait: a metric-generic blocked kernel family in the
+//! same Gram/dot form the L1 Pallas kernel computes (squared Euclidean and
+//! cosine via precomputed norms + dot products, Manhattan via a tiled direct
+//! loop), so every metric gets the cache-blocked hot path.
 
 pub mod metric;
 pub mod blocked;
 
+pub use blocked::{distance_block, pairwise_block, self_norms, DistanceBlock};
 pub use metric::{CountingMetric, Metric, MetricKind};
-pub use blocked::{pairwise_block, self_norms};

@@ -14,16 +14,30 @@
 //!
 //! ## Architecture
 //!
-//! Three layers; Python is never on the request path:
+//! The crate builds as a Cargo workspace rooted at the repository top level
+//! (`cargo build --release` just works, offline). Three layers; Python is
+//! never on the request path:
 //!
 //! - **L3 (this crate)** — coordinator: partitioners, pair scheduling, a
 //!   thread-per-rank worker pool with a simulated network (byte-accounted),
 //!   gather + sparse MST, dendrogram construction, CLI/config/metrics.
+//! - **compute backends ([`runtime`])** — kernels are selected through the
+//!   [`runtime::ComputeBackend`] abstraction:
+//!   - the default, always-available **Rust backend**: metric-generic
+//!     blocked distance kernels ([`geometry::DistanceBlock`]) in the same
+//!     Gram/dot form the Pallas kernel uses — squared Euclidean and cosine
+//!     via precomputed norms, Manhattan via a tiled direct loop — feeding
+//!     the blocked dense Prim and the Borůvka cheapest-edge step;
+//!   - the **PJRT/XLA backend** (`--features backend-xla`): loads the HLO
+//!     artifacts through the PJRT CPU client (`xla` crate) and executes
+//!     them from the Rust hot path. Off by default so the standard build is
+//!     pure-Rust and offline-capable; a config requesting `boruvka-xla` in
+//!     a default build falls back to the Rust backend and reports it in
+//!     `RunMetrics::kernel_fallback`.
 //! - **L2/L1 (python/, build time)** — JAX model + Pallas kernels for the
 //!   `O(N²D)` cheapest-edge step of dense Borůvka, AOT-lowered to HLO text in
-//!   `artifacts/` by `make artifacts`.
-//! - **runtime** — loads the HLO artifacts through the PJRT CPU client
-//!   (`xla` crate) and executes them from the Rust hot path.
+//!   `artifacts/` by `make artifacts`. Optional: the tests skip when
+//!   jax/Pallas is unavailable, mirroring the `backend-xla` gate in Rust.
 //!
 //! ## Quickstart
 //!

@@ -167,6 +167,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     );
 
     let out = run_distributed(&ds, &cfg)?;
+    if let Some(note) = &out.metrics.kernel_fallback {
+        println!("kernel fallback: {note}");
+    }
     println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
     println!("metrics: {}", out.metrics.summary());
 
@@ -175,7 +178,9 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         let oracle = demst::slink::slink_mst(&ds, &metric);
         let (a, b) =
             (demst::mst::total_weight(&oracle), demst::mst::total_weight(&out.mst));
-        if (a - b).abs() > 1e-5 * (1.0 + a.abs()) {
+        // 1e-4 relative: the blocked kernels compute Gram-form distances,
+        // which differ from the scalar SLINK oracle by float rounding.
+        if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
             bail!("VERIFY FAILED: slink oracle weight {a} != distributed weight {b}");
         }
         println!("verify: OK (slink oracle weight matches: {a:.6})");
@@ -270,25 +275,43 @@ fn cmd_gen(argv: &[String]) -> Result<()> {
 fn cmd_info(argv: &[String]) -> Result<()> {
     let specs = vec![
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir" },
-        OptSpec { name: "compile", takes_value: false, help: "also compile every artifact" },
+        OptSpec { name: "compile", takes_value: false, help: "also compile every artifact (needs backend-xla)" },
     ];
     let args = parse_args(argv, &specs)?;
     let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
-    let engine = demst::runtime::Engine::load(&dir)?;
+    // Manifest parsing needs no PJRT, so `info` works in every build; only
+    // the --compile probe requires the backend-xla feature.
+    let manifest = demst::runtime::Manifest::load(&dir)?;
+    if args.has_flag("compile") && !demst::runtime::backend_xla_compiled() {
+        bail!("--compile requires a build with --features backend-xla");
+    }
     let mut t = Table::new(format!("artifacts in {}", dir.display()), &["kernel", "N", "D", "file", "status"]);
-    for a in engine.manifest().artifacts.clone() {
-        let status = if args.has_flag("compile") {
+    #[cfg(feature = "backend-xla")]
+    let engine = if args.has_flag("compile") { Some(demst::runtime::Engine::load(&dir)?) } else { None };
+    for a in manifest.artifacts.clone() {
+        #[cfg(feature = "backend-xla")]
+        let status = if let Some(engine) = &engine {
             match engine.executable(&a) {
                 Ok(_) => "compiles".to_string(),
                 Err(e) => format!("ERROR: {e}"),
             }
+        } else if manifest.path_of(&a).is_file() {
+            "present".to_string()
         } else {
-            let present = engine.manifest().path_of(&a).is_file();
-            if present { "present".into() } else { "MISSING".into() }
+            "MISSING".to_string()
+        };
+        #[cfg(not(feature = "backend-xla"))]
+        let status = if manifest.path_of(&a).is_file() {
+            "present".to_string()
+        } else {
+            "MISSING".to_string()
         };
         t.push_row(&[a.kernel.clone(), a.n.to_string(), a.d.to_string(), a.file.clone(), status]);
     }
     t.print();
+    if !demst::runtime::backend_xla_compiled() {
+        println!("(metadata only: this build has no PJRT runtime — rebuild with --features backend-xla to execute artifacts)");
+    }
     Ok(())
 }
 
@@ -309,7 +332,9 @@ fn cmd_selftest(argv: &[String]) -> Result<()> {
     let oracle = demst::mst::total_weight(&demst::slink::slink_mst(&ds, &metric));
 
     let mut kernels = vec![KernelChoice::PrimDense, KernelChoice::BoruvkaRust];
-    if demst::runtime::Engine::artifacts_available(&artifacts) {
+    if !demst::runtime::backend_xla_compiled() {
+        println!("(backend-xla not compiled — skipping boruvka-xla; rebuild with --features backend-xla)");
+    } else if demst::runtime::artifacts_available(&artifacts) {
         kernels.push(KernelChoice::BoruvkaXla);
     } else {
         println!("(artifacts missing at {} — skipping boruvka-xla; run `make artifacts`)", artifacts.display());
@@ -319,7 +344,8 @@ fn cmd_selftest(argv: &[String]) -> Result<()> {
         cfg.kernel = kernel.clone();
         let out = run_distributed(&ds, &cfg)?;
         let w = demst::mst::total_weight(&out.mst);
-        let ok = (w - oracle).abs() < 1e-5 * (1.0 + oracle.abs());
+        // 1e-4 relative: blocked Gram-form kernels vs the scalar SLINK oracle.
+        let ok = (w - oracle).abs() < 1e-4 * (1.0 + oracle.abs());
         t.push_row(&[
             kernel.name().to_string(),
             format!("{w:.6}"),

@@ -1,0 +1,297 @@
+//! The pluggable compute backend: where d-MST kernels get their distance
+//! engines from.
+//!
+//! A [`ComputeBackend`] is a factory for the hot-path primitives — the
+//! Borůvka cheapest-edge step provider and full pairwise blocks — so the
+//! coordinator, CLI, and benches select *what computes distances* separately
+//! from *which MST algorithm runs*. Two backends exist:
+//!
+//! - [`RustBackend`] — the metric-generic blocked kernels
+//!   ([`crate::geometry::DistanceBlock`]); always available, any metric.
+//! - `XlaBackend` — the AOT-compiled Pallas kernels through PJRT; only
+//!   compiled with `--features backend-xla`, squared-Euclidean only, and
+//!   only usable when an artifact directory is present.
+//!
+//! Kernel resolution ([`build_dense_kernel`]) is where graceful degradation
+//! lives: a config requesting `boruvka-xla` in a build without the feature
+//! falls back to the blocked Rust provider and reports why (the
+//! `kernel_fallback` field in [`crate::coordinator::RunMetrics`]); in a
+//! build *with* the feature, a missing/unusable artifact directory stays a
+//! hard error — the operator explicitly asked for that engine.
+
+use crate::config::{KernelChoice, RunConfig};
+use crate::dense::step::CheapestEdgeStep;
+use crate::dense::{BoruvkaDense, DenseMst, PrimDense, RustStep};
+use crate::geometry::blocked::distance_block;
+use crate::geometry::MetricKind;
+use anyhow::Result;
+use std::path::Path;
+#[cfg(feature = "backend-xla")]
+use std::sync::Arc;
+
+/// Which backend family an implementation belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust blocked kernels (always available).
+    Rust,
+    /// PJRT-executed AOT artifacts (`backend-xla` feature).
+    Xla,
+}
+
+/// A factory for distance-compute primitives.
+pub trait ComputeBackend {
+    /// Short name for reporting ("rust-blocked", "pjrt-xla").
+    fn name(&self) -> &'static str;
+
+    fn kind(&self) -> BackendKind;
+
+    /// Build a cheapest-edge step provider for `metric`. Errors when the
+    /// backend cannot serve the metric or its runtime is unavailable.
+    fn cheapest_edge_step(&self, metric: MetricKind) -> Result<Box<dyn CheapestEdgeStep>>;
+
+    /// Full `(n, n)` distance matrix under `metric` (benches/cross-checks).
+    fn pairwise_matrix(
+        &self,
+        points: &[f32],
+        n: usize,
+        d: usize,
+        metric: MetricKind,
+    ) -> Result<Vec<f32>>;
+}
+
+/// The always-available pure-Rust blocked backend.
+pub struct RustBackend;
+
+impl ComputeBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust-blocked"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Rust
+    }
+
+    fn cheapest_edge_step(&self, metric: MetricKind) -> Result<Box<dyn CheapestEdgeStep>> {
+        // Euclid compares in squared form; the kernels sqrt at emission.
+        Ok(Box::new(RustStep::new(metric.compare_form())))
+    }
+
+    fn pairwise_matrix(
+        &self,
+        points: &[f32],
+        n: usize,
+        d: usize,
+        metric: MetricKind,
+    ) -> Result<Vec<f32>> {
+        let blk = distance_block(metric);
+        let aux = blk.prepare(points, n, d);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut out = vec![0.0f32; n * n];
+        blk.block(points, d, &aux, &ids, &ids, &mut out);
+        if blk.compare_form_is_squared() {
+            for v in &mut out {
+                *v = v.sqrt();
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT backend over an AOT artifact directory.
+#[cfg(feature = "backend-xla")]
+pub struct XlaBackend {
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+#[cfg(feature = "backend-xla")]
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-xla"
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Xla
+    }
+
+    fn cheapest_edge_step(&self, metric: MetricKind) -> Result<Box<dyn CheapestEdgeStep>> {
+        anyhow::ensure!(
+            matches!(metric, MetricKind::SqEuclid | MetricKind::Euclid),
+            "the XLA kernel computes (squared) Euclidean distances only; got {metric:?}"
+        );
+        let engine = super::engine::Engine::load(&self.artifacts_dir)?;
+        Ok(Box::new(super::cheapest_edge::XlaStep::new(engine)))
+    }
+
+    fn pairwise_matrix(
+        &self,
+        points: &[f32],
+        n: usize,
+        d: usize,
+        metric: MetricKind,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            matches!(metric, MetricKind::SqEuclid | MetricKind::Euclid),
+            "the XLA pairwise kernel computes (squared) Euclidean distances only; got {metric:?}"
+        );
+        let engine = super::engine::Engine::load(&self.artifacts_dir)?;
+        let mut m = super::pairwise::XlaPairwise::new(engine).matrix(points, n, d)?;
+        if metric == MetricKind::Euclid {
+            for v in &mut m {
+                *v = v.sqrt();
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Whether this build compiled the PJRT/XLA path.
+pub const fn backend_xla_compiled() -> bool {
+    cfg!(feature = "backend-xla")
+}
+
+/// True iff an artifact directory looks usable (manifest present). Works in
+/// every build; executing artifacts additionally needs `backend-xla`.
+pub fn artifacts_available(artifacts_dir: &Path) -> bool {
+    artifacts_dir.join("manifest.txt").is_file()
+}
+
+/// The fallback note for a config, if its kernel request cannot be honored
+/// by this build. Pure function of (config, compiled features) so the
+/// leader can report it without asking workers.
+pub fn kernel_fallback_note(cfg: &RunConfig) -> Option<String> {
+    if cfg.kernel == KernelChoice::BoruvkaXla && !backend_xla_compiled() {
+        Some(
+            "backend-xla not compiled into this build; boruvka-xla fell back to \
+             boruvka-rust (rebuild with --features backend-xla to execute artifacts)"
+                .to_string(),
+        )
+    } else {
+        None
+    }
+}
+
+/// The kernel name workers actually run for this config in this build.
+pub fn resolved_kernel_name(cfg: &RunConfig) -> &'static str {
+    if cfg.kernel == KernelChoice::BoruvkaXla && !backend_xla_compiled() {
+        KernelChoice::BoruvkaRust.name()
+    } else {
+        cfg.kernel.name()
+    }
+}
+
+/// Build the d-MST kernel a worker rank runs for this config.
+///
+/// Called *inside* the worker thread so PJRT handles (not `Send`) stay
+/// thread-local, mirroring per-rank process memory. Returns the kernel plus
+/// the fallback note (if the requested kernel was unavailable in this
+/// build).
+pub fn build_dense_kernel(cfg: &RunConfig) -> Result<(Box<dyn DenseMst>, Option<String>)> {
+    let fallback = kernel_fallback_note(cfg);
+    let kernel: Box<dyn DenseMst> = match cfg.kernel {
+        KernelChoice::PrimDense => Box::new(PrimDense::new(cfg.metric)),
+        KernelChoice::BoruvkaRust => Box::new(BoruvkaDense::new_rust(cfg.metric)),
+        KernelChoice::BoruvkaXla => {
+            #[cfg(feature = "backend-xla")]
+            {
+                let backend = XlaBackend { artifacts_dir: cfg.artifacts_dir.clone() };
+                let step = backend.cheapest_edge_step(cfg.metric)?;
+                Box::new(BoruvkaDense::new(Arc::from(step), cfg.metric))
+            }
+            #[cfg(not(feature = "backend-xla"))]
+            {
+                Box::new(BoruvkaDense::new_rust(cfg.metric))
+            }
+        }
+    };
+    Ok((kernel, fallback))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::uniform;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn rust_backend_serves_every_metric() {
+        let backend = RustBackend;
+        assert_eq!(backend.kind(), BackendKind::Rust);
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let step = backend.cheapest_edge_step(kind).unwrap();
+            // Euclid compares in squared form via the SqEuclid provider.
+            let expect =
+                if kind == MetricKind::Euclid { MetricKind::SqEuclid } else { kind };
+            assert_eq!(step.metric(), expect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn rust_backend_pairwise_matches_blocked_self() {
+        let ds = uniform(20, 6, 1.0, Pcg64::seeded(9));
+        let m = RustBackend
+            .pairwise_matrix(ds.as_slice(), ds.n, ds.d, MetricKind::SqEuclid)
+            .unwrap();
+        let want = crate::geometry::blocked::pairwise_self(ds.as_slice(), ds.n, ds.d);
+        assert_eq!(m, want);
+        let e = RustBackend
+            .pairwise_matrix(ds.as_slice(), ds.n, ds.d, MetricKind::Euclid)
+            .unwrap();
+        for (a, b) in e.iter().zip(&want) {
+            assert_eq!(*a, b.sqrt());
+        }
+    }
+
+    #[test]
+    fn fallback_note_only_for_unavailable_xla() {
+        let mut cfg = RunConfig::default();
+        assert!(kernel_fallback_note(&cfg).is_none());
+        assert_eq!(resolved_kernel_name(&cfg), "boruvka-rust");
+        cfg.kernel = KernelChoice::BoruvkaXla;
+        if backend_xla_compiled() {
+            assert!(kernel_fallback_note(&cfg).is_none());
+            assert_eq!(resolved_kernel_name(&cfg), "boruvka-xla");
+        } else {
+            let note = kernel_fallback_note(&cfg).expect("fallback note");
+            assert!(note.contains("backend-xla"), "{note}");
+            assert_eq!(resolved_kernel_name(&cfg), "boruvka-rust");
+        }
+    }
+
+    #[test]
+    fn build_kernel_resolves_all_choices() {
+        let ds = uniform(24, 4, 1.0, Pcg64::seeded(10));
+        let mut cfg = RunConfig::default();
+        for choice in [KernelChoice::PrimDense, KernelChoice::BoruvkaRust] {
+            cfg.kernel = choice;
+            let (kernel, fallback) = build_dense_kernel(&cfg).unwrap();
+            assert!(fallback.is_none());
+            let tree = kernel.mst(&ds);
+            assert_eq!(tree.len(), ds.n - 1);
+        }
+        // boruvka-xla without the feature: silently-but-reportedly rust
+        #[cfg(not(feature = "backend-xla"))]
+        {
+            cfg.kernel = KernelChoice::BoruvkaXla;
+            let (kernel, fallback) = build_dense_kernel(&cfg).unwrap();
+            assert!(fallback.is_some());
+            let tree = kernel.mst(&ds);
+            assert_eq!(tree.len(), ds.n - 1);
+        }
+    }
+
+    #[test]
+    fn artifacts_available_checks_manifest() {
+        assert!(!artifacts_available(Path::new("/definitely/not/here")));
+        let dir = std::env::temp_dir().join("demst_backend_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(!artifacts_available(&dir));
+        std::fs::write(dir.join("manifest.txt"), "cheapest_edge 64 8 f.hlo.txt\n").unwrap();
+        assert!(artifacts_available(&dir));
+        std::fs::remove_file(dir.join("manifest.txt")).ok();
+    }
+}

@@ -1,5 +1,18 @@
-//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Runtime layer: the pluggable [`ComputeBackend`] plus (behind the
+//! `backend-xla` feature) the PJRT engine that loads the AOT-compiled HLO
+//! artifacts produced by `python/compile/aot.py` and executes them from the
+//! Rust hot path.
+//!
+//! Always compiled:
+//! - [`backend`] — backend selection, kernel resolution with graceful
+//!   fallback, artifact-directory probing.
+//! - [`manifest`] — the artifact manifest format (pure text parsing; no
+//!   PJRT dependency), so `demst info` and preflight checks work in every
+//!   build.
+//!
+//! Only with `--features backend-xla`:
+//! - [`engine`] / [`cheapest_edge`] / [`pairwise`] — the PJRT CPU client,
+//!   executable cache, and the kernel executors.
 //!
 //! Interchange format is **HLO text** (`HloModuleProto::from_text_file`),
 //! not serialized protos: jax ≥ 0.5 emits 64-bit instruction ids that the
@@ -10,12 +23,29 @@
 //! distance-preserving) up to the smallest fitting bucket, and compiled
 //! executables are cached per bucket for the life of the engine.
 
+pub mod backend;
 pub mod manifest;
+
+#[cfg(feature = "backend-xla")]
 pub mod engine;
+
+#[cfg(feature = "backend-xla")]
 pub mod cheapest_edge;
+
+#[cfg(feature = "backend-xla")]
 pub mod pairwise;
 
-pub use cheapest_edge::XlaStep;
-pub use engine::Engine;
+pub use backend::{
+    artifacts_available, backend_xla_compiled, build_dense_kernel, kernel_fallback_note,
+    resolved_kernel_name, BackendKind, ComputeBackend, RustBackend,
+};
 pub use manifest::{Artifact, Manifest};
+
+#[cfg(feature = "backend-xla")]
+pub use backend::XlaBackend;
+#[cfg(feature = "backend-xla")]
+pub use cheapest_edge::XlaStep;
+#[cfg(feature = "backend-xla")]
+pub use engine::Engine;
+#[cfg(feature = "backend-xla")]
 pub use pairwise::XlaPairwise;

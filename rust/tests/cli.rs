@@ -122,6 +122,38 @@ fn run_rejects_invalid_config_combination() {
     assert!(err.contains("Euclidean"), "{err}");
 }
 
+#[cfg(not(feature = "backend-xla"))]
+#[test]
+fn run_with_xla_kernel_falls_back_and_reports() {
+    // Default build has no PJRT: requesting boruvka-xla degrades to the
+    // blocked Rust provider and says so on stdout.
+    let out = demst()
+        .args(["run", "--kernel", "xla", "--data", "blobs", "--n", "80", "--d", "6", "--parts", "2"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("kernel fallback:"), "{stdout}");
+    assert!(stdout.contains("backend-xla"), "{stdout}");
+    assert!(stdout.contains("mst: 79 edges"), "{stdout}");
+}
+
+#[test]
+fn run_supports_manhattan_metric_end_to_end() {
+    // The metric-generic blocked kernels serve non-Euclidean metrics through
+    // the same distributed path, with verification against the SLINK oracle.
+    let out = demst()
+        .args([
+            "run", "--kernel", "boruvka-rust", "--metric", "Manhattan", "--data", "blobs",
+            "--n", "90", "--d", "5", "--parts", "3", "--verify",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+}
+
 #[test]
 fn info_reports_artifacts_when_present() {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

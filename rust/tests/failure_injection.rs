@@ -1,13 +1,25 @@
 //! Failure injection: corrupted artifacts, missing files, bad manifests,
 //! worker kernel-init failure — every failure must surface as a clear error,
 //! never as a wrong tree.
+//!
+//! Engine-level tests (PJRT compile/execute failure paths) only compile with
+//! `--features backend-xla`; manifest, config, and npy failure paths run in
+//! every build.
 
-use demst::config::{KernelChoice, RunConfig};
-use demst::coordinator::run_distributed;
-use demst::data::generators::uniform;
-use demst::runtime::{Engine, Manifest};
-use demst::util::prng::Pcg64;
+use demst::config::RunConfig;
+use demst::runtime::Manifest;
 use std::path::{Path, PathBuf};
+
+#[cfg(feature = "backend-xla")]
+use demst::config::KernelChoice;
+#[cfg(feature = "backend-xla")]
+use demst::coordinator::run_distributed;
+#[cfg(feature = "backend-xla")]
+use demst::data::generators::uniform;
+#[cfg(feature = "backend-xla")]
+use demst::runtime::Engine;
+#[cfg(feature = "backend-xla")]
+use demst::util::prng::Pcg64;
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join("demst_failures").join(name);
@@ -15,6 +27,7 @@ fn tmpdir(name: &str) -> PathBuf {
     dir
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn corrupt_hlo_text_fails_to_parse_with_context() {
     let dir = tmpdir("corrupt");
@@ -26,6 +39,7 @@ fn corrupt_hlo_text_fails_to_parse_with_context() {
     assert!(err.contains("bad.hlo.txt"), "error names the file: {err}");
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn missing_artifact_file_fails_cleanly() {
     let dir = tmpdir("missing_file");
@@ -36,11 +50,21 @@ fn missing_artifact_file_fails_cleanly() {
     assert!(err.contains("ghost.hlo.txt"), "{err}");
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn missing_manifest_dir_fails_at_load() {
     let err = Engine::load(Path::new("/nonexistent/artifacts")).err().expect("must fail").to_string();
     assert!(err.contains("manifest"), "{err}");
     assert!(!Engine::artifacts_available(Path::new("/nonexistent/artifacts")));
+}
+
+#[test]
+fn missing_manifest_dir_fails_manifest_load() {
+    // Feature-independent twin of the Engine-level check: the manifest layer
+    // and the artifact probe work in every build.
+    let err = Manifest::load(Path::new("/nonexistent/artifacts")).unwrap_err().to_string();
+    assert!(err.contains("manifest"), "{err}");
+    assert!(!demst::runtime::artifacts_available(Path::new("/nonexistent/artifacts")));
 }
 
 #[test]
@@ -56,6 +80,7 @@ fn malformed_manifests_rejected() {
     }
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn worker_kernel_init_failure_surfaces_as_error_not_wrong_tree() {
     // XLA kernel pointed at a directory with a manifest whose buckets are
@@ -92,6 +117,7 @@ fn worker_kernel_init_failure_surfaces_as_error_not_wrong_tree() {
     }
 }
 
+#[cfg(feature = "backend-xla")]
 #[test]
 fn nonexistent_artifacts_dir_with_xla_kernel_errors() {
     let ds = uniform(32, 4, 1.0, Pcg64::seeded(2));
@@ -104,6 +130,28 @@ fn nonexistent_artifacts_dir_with_xla_kernel_errors() {
     };
     let out = run_distributed(&ds, &cfg);
     assert!(out.is_err(), "missing artifacts must error");
+}
+
+#[cfg(not(feature = "backend-xla"))]
+#[test]
+fn xla_kernel_without_feature_falls_back_with_report() {
+    // In a default (no-PJRT) build the same request degrades gracefully: the
+    // blocked Rust provider runs and the metrics say why.
+    use demst::config::KernelChoice;
+    let ds = demst::data::generators::uniform(32, 4, 1.0, demst::util::prng::Pcg64::seeded(2));
+    let cfg = RunConfig {
+        parts: 2,
+        workers: 1,
+        kernel: KernelChoice::BoruvkaXla,
+        artifacts_dir: PathBuf::from("/definitely/not/here"),
+        ..Default::default()
+    };
+    let out = demst::coordinator::run_distributed(&ds, &cfg).expect("fallback must succeed");
+    assert_eq!(out.mst.len(), ds.n - 1);
+    assert_eq!(out.metrics.kernel, "boruvka-rust");
+    let note = out.metrics.kernel_fallback.expect("fallback note");
+    assert!(note.contains("backend-xla"), "{note}");
+    assert!(out.metrics.summary().contains("fallback"), "{}", out.metrics.summary());
 }
 
 #[test]

@@ -3,6 +3,10 @@
 //!
 //! These tests are skipped (with a loud message) when `artifacts/` has not
 //! been built yet — run `make artifacts` (or `make artifacts-quick`) first.
+//! The whole file only compiles with `--features backend-xla`; the default
+//! build has no PJRT runtime.
+
+#![cfg(feature = "backend-xla")]
 
 use demst::config::{KernelChoice, RunConfig};
 use demst::coordinator::run_distributed;

@@ -1,0 +1,245 @@
+//! A vendored, API-compatible subset of the `anyhow` crate.
+//!
+//! This workspace builds fully offline (no crates.io access), so the error
+//! type the codebase leans on is provided here as a small local crate with
+//! the same surface the code actually uses:
+//!
+//! - [`Error`] / [`Result`] with context chains
+//! - [`anyhow!`], [`bail!`], [`ensure!`]
+//! - [`Context`] for `Result<T, E: std::error::Error>`, `Result<T, Error>`,
+//!   and `Option<T>`
+//! - `Display` prints the outermost message; `{:#}` prints the full chain
+//!   colon-separated; `Debug` prints the message plus a `Caused by:` list —
+//!   all matching upstream `anyhow` conventions.
+//!
+//! If the build ever regains registry access, deleting this crate and
+//! pointing the workspace at `anyhow = "1"` is a drop-in change.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a chain of context frames (outermost first).
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first; the last entry is the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            frames.push(s.to_string());
+            source = s.source();
+        }
+        Self { frames }
+    }
+}
+
+/// Conversion into [`Error`] — implemented for std errors and for `Error`
+/// itself (mirrors anyhow's internal `ext::StdError`), so [`Context`] works
+/// on both `Result<T, E: std::error::Error>` and `Result<T, Error>`.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Attach context to errors (and convert `Option` to `Result`).
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($args:tt)*) => {
+        return Err($crate::anyhow!($($args)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($args:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($args)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: file gone");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("layer one")
+            .context("layer two")
+            .unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("layer two"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("file gone"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_format() {
+        fn fails(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails with {}", 42)
+        }
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(fails(true).unwrap_err().to_string(), "always fails with 42");
+        let e = anyhow!("literal");
+        assert_eq!(e.to_string(), "literal");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("17").unwrap(), 17);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn result_error_context_chains() {
+        fn inner() -> Result<()> {
+            bail!("root cause")
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+        assert_eq!(e.root_cause(), "root cause");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

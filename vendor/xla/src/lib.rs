@@ -1,0 +1,183 @@
+//! Offline **API stub** of the `xla` crate (PJRT bindings over
+//! `xla_extension`), exposing exactly the surface `demst::runtime` consumes.
+//!
+//! Why a stub: this workspace must compile with `--features backend-xla` in a
+//! container with no crates.io access and no `xla_extension` shared library.
+//! The stub keeps the PJRT code path *compiling* (types, signatures, error
+//! plumbing) while every operation that would require the real runtime
+//! returns a descriptive error. Deployments with the real library swap the
+//! `[dependencies] xla` path in the workspace `Cargo.toml` for the actual
+//! crate — no demst source change needed, the API is signature-compatible.
+//!
+//! Behavior contract the stub honors (relied on by `demst` failure-path
+//! tests):
+//! - `PjRtClient::cpu()` succeeds (creating a client allocates nothing).
+//! - `HloModuleProto::from_text_file` reads the file (so missing-file errors
+//!   name the path) and then fails parsing with a "stub" error.
+//! - Everything downstream of a successful parse is unreachable offline.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; `Debug`-formatted into `anyhow` messages by callers.
+pub struct XlaError(String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+const STUB_NOTE: &str =
+    "xla stub: PJRT runtime not linked (vendor/xla is an offline API stub; \
+     point the workspace at the real `xla` crate to execute artifacts)";
+
+/// PJRT client handle (stub: no device behind it).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client. Succeeds in the stub so that artifact
+    /// *metadata* paths (manifest listing, bucket selection, parse-failure
+    /// reporting) behave identically with and without the real runtime.
+    pub fn cpu() -> Result<Self, XlaError> {
+        Ok(Self { _private: () })
+    }
+
+    /// Compile a computation. Unreachable offline (parsing fails first);
+    /// errors defensively if reached.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+}
+
+/// Parsed HLO module proto (stub: never successfully constructed).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Read and "parse" an HLO text file. The read is real — missing files
+    /// produce errors naming the path — the parse always fails in the stub.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self, XlaError> {
+        let path = path.as_ref();
+        match std::fs::read_to_string(path) {
+            Ok(_) => Err(XlaError(format!("cannot parse {}: {STUB_NOTE}", path.display()))),
+            Err(e) => Err(XlaError(format!("reading {}: {e}", path.display()))),
+        }
+    }
+}
+
+/// An XLA computation built from a module proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled executable (stub: never constructed offline).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments, returning per-device output buffers.
+    pub fn execute<T: BufferArgument>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+}
+
+/// Types accepted as executable arguments.
+pub trait BufferArgument {}
+
+impl BufferArgument for Literal {}
+
+/// Element types a literal can be read back as.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// Host-side literal (stub: shape metadata only, no data plane).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Self {
+        Self { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Self { _private: () })
+    }
+
+    /// Destructure a 1-tuple output.
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+
+    /// Destructure a 2-tuple output.
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal), XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, XlaError> {
+        Err(XlaError(STUB_NOTE.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creates_and_parse_fails_with_path() {
+        let _client = PjRtClient::cpu().unwrap();
+        let err = HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("x.hlo.txt"), "{msg}");
+    }
+
+    #[test]
+    fn existing_file_fails_as_stub_parse() {
+        let dir = std::env::temp_dir().join("xla_stub_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, "HloModule m").unwrap();
+        let err = HloModuleProto::from_text_file(&path).unwrap_err();
+        let msg = format!("{err:?}");
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("m.hlo.txt"), "{msg}");
+    }
+}
