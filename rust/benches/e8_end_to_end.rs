@@ -2,8 +2,12 @@
 //! dendrogram, with the headline metrics (exactness, work ratio, comm bytes,
 //! modeled speedup). Bench-sized twin of examples/clustering_pipeline.rs
 //! (which is the full-size driver recorded in EXPERIMENTS.md).
+//!
+//! Also records the dense-pair-kernel vs bipartite-merge-kernel ablation
+//! (wall, distance evals, per-phase split) and writes `BENCH_e8.json`
+//! (override the path with `DEMST_BENCH_OUT`).
 
-use demst::config::{KernelChoice, RunConfig};
+use demst::config::{KernelChoice, PairKernelChoice, RunConfig};
 use demst::coordinator::run_distributed;
 use demst::data::generators::{embedding_like, EmbeddingSpec};
 use demst::dense::{DenseMst, PrimDense};
@@ -75,5 +79,107 @@ fn main() {
     ]);
     t.push_row(&["wall (this host)".to_string(), format!("{:?}", out.metrics.wall)]);
     t.print();
+
+    // ------------------------- pair-kernel ablation: dense vs bipartite-merge
+    cfg.reduce_tree = false;
+    cfg.kernel = KernelChoice::PrimDense;
+    let mut t2 = Table::new(
+        format!("E8b pair kernels (n={n}, d={d}, |P|={parts}, workers=1)"),
+        &["pair kernel", "wall ms", "dist evals", "local-mst", "pairs", "reduce", "vs dense"],
+    );
+    let mut rows: Vec<JsonRow> = Vec::new();
+    let mut dense_ms = 0.0f64;
+    for (pair_kernel, stream) in [
+        (PairKernelChoice::Dense, false),
+        (PairKernelChoice::BipartiteMerge, false),
+        (PairKernelChoice::BipartiteMerge, true),
+    ] {
+        cfg.pair_kernel = pair_kernel;
+        cfg.stream_reduce = stream;
+        let run = run_distributed(&ds, &cfg).unwrap();
+        assert_eq!(
+            demst::mst::normalize_tree(&exact),
+            demst::mst::normalize_tree(&run.mst),
+            "pair kernel {} must stay exact",
+            pair_kernel.name()
+        );
+        let ms = run.metrics.wall.as_secs_f64() * 1e3;
+        let name = if stream {
+            format!("{} + stream-reduce", pair_kernel.name())
+        } else {
+            pair_kernel.name().to_string()
+        };
+        let speedup = if pair_kernel == PairKernelChoice::Dense && !stream {
+            dense_ms = ms;
+            None
+        } else {
+            Some(dense_ms / ms)
+        };
+        t2.push_row(&[
+            name.clone(),
+            format!("{ms:.1}"),
+            demst::util::human_count(run.metrics.dist_evals),
+            format!("{:?}", run.metrics.phase_local_mst),
+            format!("{:?}", run.metrics.phase_pair),
+            format!("{:?}", run.metrics.phase_reduce),
+            speedup.map_or("-".to_string(), |s| format!("{s:.2}x")),
+        ]);
+        rows.push(JsonRow {
+            section: "pair_kernel",
+            provider: name,
+            ms,
+            dist_evals: run.metrics.dist_evals,
+            local_mst_ms: run.metrics.phase_local_mst.as_secs_f64() * 1e3,
+            pair_ms: run.metrics.phase_pair.as_secs_f64() * 1e3,
+            reduce_ms: run.metrics.phase_reduce.as_secs_f64() * 1e3,
+            speedup,
+        });
+    }
+    t2.print();
+
+    let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e8.json".into());
+    match std::fs::write(&out_path, to_json(&rows, n, d, parts, fast)) {
+        Ok(()) => println!("E8: wrote {out_path}"),
+        Err(e) => eprintln!("E8: could not write {out_path}: {e}"),
+    }
     println!("E8: full pipeline exact end-to-end");
+}
+
+struct JsonRow {
+    section: &'static str,
+    provider: String,
+    ms: f64,
+    dist_evals: u64,
+    local_mst_ms: f64,
+    pair_ms: f64,
+    reduce_ms: f64,
+    speedup: Option<f64>,
+}
+
+/// Hand-rolled JSON (no serde in the offline vendor set).
+fn to_json(rows: &[JsonRow], n: usize, d: usize, parts: usize, fast: bool) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"e8_end_to_end\",\n");
+    s.push_str(&format!("  \"fast_mode\": {fast},\n"));
+    s.push_str(&format!("  \"shape\": {{\"n\": {n}, \"d\": {d}, \"parts\": {parts}}},\n"));
+    s.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let speedup = r.speedup.map_or("null".to_string(), |v| format!("{v:.4}"));
+        s.push_str(&format!(
+            "    {{\"section\": \"{}\", \"provider\": \"{}\", \"ms\": {:.4}, \
+             \"dist_evals\": {}, \"local_mst_ms\": {:.4}, \"pair_ms\": {:.4}, \
+             \"reduce_ms\": {:.4}, \"speedup_vs_dense\": {}}}{}\n",
+            r.section,
+            r.provider,
+            r.ms,
+            r.dist_evals,
+            r.local_mst_ms,
+            r.pair_ms,
+            r.reduce_ms,
+            speedup,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
 }

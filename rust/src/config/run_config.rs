@@ -37,6 +37,36 @@ impl KernelChoice {
     }
 }
 
+/// How each pair job `d-MST(S_i ∪ S_j)` is solved by the exec engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairKernelChoice {
+    /// full dense d-MST over the gathered union (the paper-literal path and
+    /// the exactness oracle); re-solves each subset's internal structure in
+    /// every pair it appears in
+    Dense,
+    /// cycle-property kernel: cached per-partition local MSTs + filtered
+    /// Prim over `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`; exactly
+    /// `n(n-1)/2` distance evaluations per run
+    BipartiteMerge,
+}
+
+impl PairKernelChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PairKernelChoice::Dense => "dense",
+            PairKernelChoice::BipartiteMerge => "bipartite-merge",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "dense" | "pair-dense" => Some(Self::Dense),
+            "bipartite-merge" | "bipartite" | "merge" => Some(Self::BipartiteMerge),
+            _ => None,
+        }
+    }
+}
+
 /// Simulated network model parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetConfig {
@@ -103,6 +133,12 @@ pub struct RunConfig {
     pub seed: u64,
     /// gather (paper default) vs tree-reduction variant
     pub reduce_tree: bool,
+    /// pair-job kernel: dense oracle vs cached-local-MST bipartite merge
+    pub pair_kernel: PairKernelChoice,
+    /// streaming ⊕-reduction at the leader: fold each arriving tree into a
+    /// bounded (≤ |V|-1 edge) running MSF instead of buffering the full
+    /// `O(|V|·|P|)` union for one final Kruskal
+    pub stream_reduce: bool,
     pub net: NetConfig,
     /// artifacts dir for the XLA kernel
     pub artifacts_dir: PathBuf,
@@ -122,6 +158,8 @@ impl Default for RunConfig {
             workers: 0,
             seed: 42,
             reduce_tree: false,
+            pair_kernel: PairKernelChoice::Dense,
+            stream_reduce: false,
             net: NetConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             verify: false,
@@ -197,6 +235,13 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         ("", "seed") => cfg.seed = get_usize(v)? as u64,
         ("", "reduce_tree") => {
             cfg.reduce_tree = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "stream_reduce") => {
+            cfg.stream_reduce = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "pair_kernel") => {
+            cfg.pair_kernel = PairKernelChoice::parse(need_str()?)
+                .ok_or_else(|| anyhow!("unknown pair kernel"))?
         }
         ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
         ("", "strategy") => {
@@ -329,6 +374,25 @@ bandwidth = 1e9
         assert_eq!(cfg.data.n, 500);
         assert_eq!(cfg.net.latency_us, 100);
         assert_eq!(cfg.net.bandwidth, 1e9);
+    }
+
+    #[test]
+    fn pair_kernel_and_stream_reduce_keys() {
+        let cfg = RunConfig::from_toml("pair_kernel = \"bipartite-merge\"\nstream_reduce = true")
+            .unwrap();
+        assert_eq!(cfg.pair_kernel, PairKernelChoice::BipartiteMerge);
+        assert!(cfg.stream_reduce);
+        assert_eq!(RunConfig::default().pair_kernel, PairKernelChoice::Dense);
+        assert!(!RunConfig::default().stream_reduce);
+        for (s, want) in [
+            ("dense", PairKernelChoice::Dense),
+            ("bipartite", PairKernelChoice::BipartiteMerge),
+            (" Merge ", PairKernelChoice::BipartiteMerge),
+        ] {
+            assert_eq!(PairKernelChoice::parse(s), Some(want), "{s:?}");
+        }
+        assert_eq!(PairKernelChoice::parse("bogus"), None);
+        assert!(RunConfig::from_toml("pair_kernel = \"bogus\"").is_err());
     }
 
     #[test]

@@ -1,17 +1,16 @@
-//! Leader: partition → scatter jobs → gather/reduce → final sparse MST.
+//! Leader front-end: a thin wrapper over the shared [`crate::exec`] engine.
+//!
+//! Everything that used to live here — the scatter deal, the worker loop,
+//! the gather, the final sparse MST — is now the engine's single
+//! implementation ([`crate::exec::execute_pooled`]), shared with the serial
+//! reference path. This module keeps the distributed-run entry point, the
+//! worker-count policy, and the [`DistOutput`] surface.
 
-use super::messages::Message;
-use super::metrics::RunMetrics;
-use super::netsim::{Direction, NetSim};
-use super::worker::worker_main;
+use super::netsim::NetSim;
 use crate::config::RunConfig;
+use crate::coordinator::metrics::RunMetrics;
 use crate::data::Dataset;
-use crate::decomp::reduction::reduce_trees;
-use crate::decomp::{pair_count, partition_indices, PairSchedule};
 use crate::graph::Edge;
-use crate::mst::kruskal;
-use std::sync::mpsc::channel;
-use std::time::Instant;
 
 /// Output of a distributed run.
 #[derive(Clone, Debug)]
@@ -26,149 +25,18 @@ pub struct DistOutput {
 /// Resolve the worker count: explicit, else one per pair job capped at the
 /// machine's parallelism.
 pub fn resolve_workers(cfg: &RunConfig) -> usize {
-    let jobs = pair_count(cfg.parts).max(1);
-    if cfg.workers > 0 {
-        cfg.workers.min(jobs)
-    } else {
-        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-        jobs.min(cores)
-    }
+    crate::exec::resolve_workers(cfg)
 }
 
-/// Run the paper's Algorithm 1 distributed: thread-per-rank workers, jobs
-/// dealt round-robin, gather (default) or local-⊕ + tree reduction
-/// (`cfg.reduce_tree`). Returns the exact MSF plus measured metrics.
+/// Run the paper's Algorithm 1 distributed: thread-per-rank workers pulling
+/// jobs from the cost-LPT queue, gather (default) or local-⊕ + tree
+/// reduction (`cfg.reduce_tree`), optionally folding arriving trees into a
+/// bounded running MSF (`cfg.stream_reduce`). Returns the exact MSF plus
+/// measured metrics.
 pub fn run_distributed(ds: &Dataset, cfg: &RunConfig) -> anyhow::Result<DistOutput> {
-    let t_start = Instant::now();
-    let parts = partition_indices(ds, cfg.parts, cfg.strategy, cfg.seed);
-    let schedule = PairSchedule::new(cfg.parts);
-    let n_workers = resolve_workers(cfg);
     let net = NetSim::new(cfg.net.clone());
-    let counters = net.counters();
-
-    let (tx_leader, rx_leader) = channel::<Message>();
-    let mut union_edges: Vec<Edge> = Vec::new();
-    let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
-    let mut metrics = RunMetrics::default();
-    metrics.worker_busy = vec![std::time::Duration::ZERO; n_workers];
-    metrics.kernel = crate::runtime::resolved_kernel_name(cfg).to_string();
-    metrics.kernel_fallback = crate::runtime::kernel_fallback_note(cfg);
-
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        // Spawn workers.
-        let mut to_workers = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let (tx_w, rx_w) = channel::<Message>();
-            to_workers.push(tx_w);
-            let tx_leader = tx_leader.clone();
-            let net = net.clone();
-            let cfg_ref = &*cfg;
-            let n_global = ds.n;
-            scope.spawn(move || {
-                worker_main(w, n_global, cfg_ref, &net, rx_w, tx_leader, cfg_ref.reduce_tree);
-            });
-        }
-        drop(tx_leader); // leader keeps only rx
-
-        // Scatter: deal jobs round-robin. Each job ships S_i ∪ S_j vectors.
-        if cfg.parts == 1 {
-            // Degenerate: single subset, one "pair" job of the whole set.
-            let ids: Vec<u32> = parts[0].clone();
-            let points = ds.gather(&ids);
-            net.send(
-                &to_workers[0],
-                Message::Job {
-                    job: crate::decomp::PairJob { id: 0, i: 0, j: 0 },
-                    global_ids: ids,
-                    points,
-                },
-                Direction::Scatter,
-            )
-            .map_err(|_| anyhow::anyhow!("worker 0 hung up during scatter"))?;
-        } else {
-            for job in &schedule.jobs {
-                let si = &parts[job.i as usize];
-                let sj = &parts[job.j as usize];
-                // sorted union: keeps local tie-breaks aligned with the
-                // global strict edge order (see decomp::algorithm::run_pair)
-                let ids = crate::decomp::algorithm::merge_sorted_ids(si, sj);
-                let points = ds.gather(&ids);
-                let w = (job.id as usize) % n_workers;
-                net.send(
-                    &to_workers[w],
-                    Message::Job { job: *job, global_ids: ids, points },
-                    Direction::Scatter,
-                )
-                .map_err(|_| anyhow::anyhow!("worker {w} hung up during scatter"))?;
-            }
-        }
-        for tx in &to_workers {
-            let _ = net.send(tx, Message::Shutdown, Direction::Control);
-        }
-
-        // Gather.
-        let mut done = 0usize;
-        while done < n_workers {
-            let msg = rx_leader.recv().expect("all workers hung up");
-            match msg {
-                Message::Result { edges, compute, .. } => {
-                    metrics.jobs += 1;
-                    metrics.job_times.push(compute);
-                    union_edges.extend_from_slice(&edges);
-                }
-                Message::WorkerDone { worker, local_tree, dist_evals, busy, jobs_run } => {
-                    metrics.dist_evals += dist_evals;
-                    metrics.worker_busy[worker] = busy;
-                    if cfg.reduce_tree {
-                        metrics.jobs += jobs_run;
-                    }
-                    if let Some(t) = local_tree {
-                        worker_trees.push(t);
-                    }
-                    done += 1;
-                }
-                other => anyhow::bail!("leader received unexpected message {other:?}"),
-            }
-        }
-        Ok(())
-    })?;
-
-    let expected_jobs = if cfg.parts == 1 { 1 } else { schedule.len() as u32 };
-    if metrics.jobs != expected_jobs {
-        anyhow::bail!(
-            "job count mismatch: expected {expected_jobs}, completed {} (worker failure?)",
-            metrics.jobs
-        );
-    }
-
-    // Final sparse MST. (Perf note: deduplicating (u,v) pairs first was
-    // tried and reverted — dedup itself sorts the full union, so it only
-    // adds work; Kruskal handles parallel edges natively and the whole step
-    // is < 10 ms at E8 scale.)
-    let t_mst = Instant::now();
-    let mst = if cfg.reduce_tree {
-        // Workers already ⊕-combined locally; finish the reduction tree at
-        // the leader (the inter-worker hops were charged on WorkerDone).
-        let (tree, _stats) = reduce_trees(ds.n, &worker_trees);
-        tree
-    } else {
-        kruskal(ds.n, &union_edges)
-    };
-    metrics.union_edges = if cfg.reduce_tree {
-        worker_trees.iter().map(|t| t.len()).sum()
-    } else {
-        union_edges.len()
-    };
-    metrics.final_mst = t_mst.elapsed();
-
-    let (s, g, c, m) = counters.snapshot();
-    metrics.scatter_bytes = s;
-    metrics.gather_bytes = g;
-    metrics.control_bytes = c;
-    metrics.messages = m;
-    metrics.wall = t_start.elapsed();
-
-    Ok(DistOutput { mst, metrics, workers: n_workers })
+    let run = crate::exec::execute_pooled(ds, cfg, &net)?;
+    Ok(DistOutput { mst: run.mst, metrics: run.metrics, workers: run.workers })
 }
 
 #[cfg(test)]

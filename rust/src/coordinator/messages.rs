@@ -36,6 +36,14 @@ pub enum Message {
     Shutdown,
 }
 
+/// Wire bytes of a pair-job scatter shipping `ids` vectors of dimension `d`
+/// (header + global-id map + vector payload). The pull-based exec scheduler
+/// charges this without materializing a [`Message::Job`]; kept next to
+/// [`Message::wire_bytes`] so the two models cannot drift.
+pub fn job_wire_bytes(ids: usize, d: usize) -> u64 {
+    HEADER_BYTES + ids as u64 * 4 + (ids * d) as u64 * 4
+}
+
 impl Message {
     /// Bytes this message would occupy on the wire.
     pub fn wire_bytes(&self) -> u64 {
@@ -69,6 +77,7 @@ mod tests {
             points,
         };
         assert_eq!(msg.wire_bytes(), 16 + 400 + 100 * 64 * 4);
+        assert_eq!(job_wire_bytes(100, 64), msg.wire_bytes(), "models agree");
     }
 
     #[test]

@@ -33,6 +33,23 @@ pub struct RunMetrics {
     /// backend resolver substituted another (e.g. `boruvka-xla` without
     /// `--features backend-xla`)
     pub kernel_fallback: Option<String>,
+    /// pair-job kernel the exec engine ran ("dense" | "bipartite-merge")
+    pub pair_kernel: String,
+    /// whether the leader folded trees into a running MSF as they arrived
+    pub stream_reduce: bool,
+    /// wall time of the local-MST phase (bipartite-merge kernel only)
+    pub phase_local_mst: Duration,
+    /// wall time of the pair-job phase (scatter → solve → gather)
+    pub phase_pair: Duration,
+    /// leader time spent ⊕-reducing / final sparse MST (streaming merges +
+    /// the final pass)
+    pub phase_reduce: Duration,
+    /// distance evaluations spent building the local-MST cache
+    /// (`Σ_k |S_k|(|S_k|-1)/2`; zero for the dense pair kernel)
+    pub local_mst_evals: u64,
+    /// distance evaluations spent inside pair jobs (the bipartite blocks
+    /// for the merge kernel; everything for the dense kernel)
+    pub pair_evals: u64,
 }
 
 impl RunMetrics {
@@ -114,10 +131,30 @@ impl RunMetrics {
         if !self.kernel.is_empty() {
             s.push_str(&format!(" kernel={}", self.kernel));
         }
+        if !self.pair_kernel.is_empty() {
+            s.push_str(&format!(" pair_kernel={}", self.pair_kernel));
+        }
+        if self.stream_reduce {
+            s.push_str(" stream_reduce");
+        }
         if let Some(note) = &self.kernel_fallback {
             s.push_str(&format!(" (fallback: {note})"));
         }
         s
+    }
+
+    /// Per-phase breakdown (local-MST / pair / reduce timing and eval
+    /// split) — the measurement surface for the bipartite-merge kernel.
+    pub fn phase_summary(&self) -> String {
+        use crate::util::human_count;
+        format!(
+            "local_mst={:?} ({} evals) pairs={:?} ({} evals) reduce={:?}",
+            self.phase_local_mst,
+            human_count(self.local_mst_evals),
+            self.phase_pair,
+            human_count(self.pair_evals),
+            self.phase_reduce,
+        )
     }
 }
 
@@ -162,6 +199,23 @@ mod tests {
         assert_eq!(m.imbalance(), 1.0);
         assert!(m.summary().contains("jobs=0"));
         assert!(!m.summary().contains("kernel="), "empty kernel omitted");
+    }
+
+    #[test]
+    fn summary_and_phase_breakdown_report_pair_kernel() {
+        let m = RunMetrics {
+            pair_kernel: "bipartite-merge".into(),
+            stream_reduce: true,
+            local_mst_evals: 1200,
+            pair_evals: 3400,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("pair_kernel=bipartite-merge"), "{s}");
+        assert!(s.contains("stream_reduce"), "{s}");
+        let p = m.phase_summary();
+        assert!(p.contains("local_mst="), "{p}");
+        assert!(p.contains("1.20K evals"), "{p}");
     }
 
     #[test]

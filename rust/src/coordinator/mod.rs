@@ -1,5 +1,5 @@
-//! The distributed runtime: a leader and thread-per-rank workers exchanging
-//! typed messages over a simulated network with exact byte accounting.
+//! The distributed runtime front-end: typed messages, the simulated network
+//! with exact byte accounting, run metrics, and the per-rank kernel factory.
 //!
 //! This realizes the paper's execution model — `p = |P|(|P|-1)/2` independent
 //! d-MST jobs, a scatter of vector subsets, **zero** mid-compute
@@ -7,10 +7,14 @@
 //! variant) — on a single machine, faithfully enough that the communication
 //! *measurements* (E3) are exact counts, not estimates.
 //!
-//! Workers are OS threads, each owning its own d-MST kernel instance
-//! (including, for `KernelChoice::BoruvkaXla`, its own PJRT client and
-//! compiled executables: PJRT handles are thread-local by construction in
-//! the `xla` crate, which conveniently mirrors per-rank process memory).
+//! The execution itself (worker pool, cost-LPT job dealing with idle
+//! stealing, streaming ⊕-reduction) is the shared [`crate::exec`] engine;
+//! [`run_distributed`] is a thin wrapper that provides the [`NetSim`]
+//! fabric and returns [`RunMetrics`]. Workers are OS threads, each owning
+//! its own d-MST kernel instance (including, for
+//! `KernelChoice::BoruvkaXla`, its own PJRT client and compiled
+//! executables: PJRT handles are thread-local by construction in the `xla`
+//! crate, which conveniently mirrors per-rank process memory).
 
 pub mod messages;
 pub mod netsim;

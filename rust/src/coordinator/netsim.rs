@@ -72,15 +72,12 @@ impl NetSim {
             + Duration::from_secs_f64(bytes as f64 / self.cfg.bandwidth)
     }
 
-    /// Account for and (optionally) delay a message, then deliver it.
-    /// Returns `Err` if the receiving endpoint hung up.
-    pub fn send(
-        &self,
-        tx: &Sender<Message>,
-        msg: Message,
-        dir: Direction,
-    ) -> Result<(), std::sync::mpsc::SendError<Message>> {
-        let bytes = msg.wire_bytes();
+    /// Account for (and, with `simulate_delays`, sleep for) a message of
+    /// `bytes` that is *modeled* but not physically delivered — used by the
+    /// pull-based exec scheduler, where workers claim jobs from a shared
+    /// queue instead of receiving them over a channel, yet the scatter of
+    /// the job payload must still be charged to the link.
+    pub fn charge(&self, bytes: u64, dir: Direction) {
         let ctr = match dir {
             Direction::Scatter => &self.counters.scatter_bytes,
             Direction::Gather => &self.counters.gather_bytes,
@@ -91,6 +88,17 @@ impl NetSim {
         if self.cfg.simulate_delays {
             std::thread::sleep(self.model_delay(bytes));
         }
+    }
+
+    /// Account for and (optionally) delay a message, then deliver it.
+    /// Returns `Err` if the receiving endpoint hung up.
+    pub fn send(
+        &self,
+        tx: &Sender<Message>,
+        msg: Message,
+        dir: Direction,
+    ) -> Result<(), std::sync::mpsc::SendError<Message>> {
+        self.charge(msg.wire_bytes(), dir);
         tx.send(msg)
     }
 }

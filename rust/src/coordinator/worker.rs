@@ -1,114 +1,21 @@
-//! Worker rank: owns a d-MST kernel, executes pair jobs, reports results.
+//! Worker-rank kernel construction.
+//!
+//! The worker *loop* (claim job → solve → report) lives in the shared exec
+//! engine ([`crate::exec::engine`]); what remains here is the per-rank
+//! kernel factory, kept in the coordinator because its contract is about
+//! rank-local state, not scheduling.
 
-use super::messages::Message;
-use super::netsim::{Direction, NetSim};
 use crate::config::RunConfig;
-use crate::decomp::reduction::tree_merge;
 use crate::dense::DenseMst;
-use crate::graph::Edge;
-use std::sync::mpsc::{Receiver, Sender};
-use std::time::{Duration, Instant};
 
-/// Build this worker's kernel via the backend resolver. Called *inside* the
-/// worker thread so PJRT handles (not `Send`) stay thread-local, like
-/// per-rank process memory. When the requested kernel is not compiled into
-/// this build (e.g. `boruvka-xla` without `--features backend-xla`), the
-/// resolver substitutes the blocked Rust provider; the leader reports the
-/// substitution in `RunMetrics::kernel_fallback`.
+/// Build this worker's d-MST kernel via the backend resolver. Called
+/// *inside* the worker thread so PJRT handles (not `Send`) stay
+/// thread-local, like per-rank process memory. When the requested kernel is
+/// not compiled into this build (e.g. `boruvka-xla` without
+/// `--features backend-xla`), the resolver substitutes the blocked Rust
+/// provider; the leader reports the substitution in
+/// `RunMetrics::kernel_fallback`.
 pub fn build_kernel(cfg: &RunConfig) -> anyhow::Result<Box<dyn DenseMst>> {
     let (kernel, _fallback) = crate::runtime::build_dense_kernel(cfg)?;
     Ok(kernel)
-}
-
-/// Worker main loop.
-///
-/// Gather mode (`local_reduce = false`): each pair tree is sent back
-/// immediately (`O(|V||P|)` aggregate gather traffic).
-/// Reduce mode (`local_reduce = true`): pair trees are ⊕-combined locally
-/// and a single ≤`|V|-1`-edge tree is sent at shutdown (`O(|V|)` per worker).
-pub fn worker_main(
-    worker_id: usize,
-    n_global: usize,
-    cfg: &RunConfig,
-    net: &NetSim,
-    rx: Receiver<Message>,
-    tx_leader: Sender<Message>,
-    local_reduce: bool,
-) {
-    let kernel = match build_kernel(cfg) {
-        Ok(k) => k,
-        Err(e) => {
-            // Report failure as an empty done message; the leader surfaces
-            // the error when results are missing.
-            eprintln!("worker {worker_id}: kernel init failed: {e:#}");
-            let _ = net.send(
-                &tx_leader,
-                Message::WorkerDone {
-                    worker: worker_id,
-                    local_tree: None,
-                    dist_evals: 0,
-                    busy: Duration::ZERO,
-                    jobs_run: 0,
-                },
-                Direction::Gather,
-            );
-            return;
-        }
-    };
-    let mut busy = Duration::ZERO;
-    let mut jobs_run = 0u32;
-    let mut local_tree: Option<Vec<Edge>> = None;
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Message::Job { job, global_ids, points } => {
-                let t = Instant::now();
-                let local = kernel.mst(&points);
-                let tree: Vec<Edge> = local
-                    .iter()
-                    .map(|e| {
-                        Edge::new(
-                            global_ids[e.u as usize],
-                            global_ids[e.v as usize],
-                            e.w,
-                        )
-                    })
-                    .collect();
-                let compute = t.elapsed();
-                busy += compute;
-                jobs_run += 1;
-                if local_reduce {
-                    let t2 = Instant::now();
-                    local_tree = Some(match local_tree.take() {
-                        None => tree,
-                        Some(prev) => tree_merge(n_global, &prev, &tree),
-                    });
-                    busy += t2.elapsed();
-                } else if net
-                    .send(
-                        &tx_leader,
-                        Message::Result { job_id: job.id, worker: worker_id, edges: tree, compute },
-                        Direction::Gather,
-                    )
-                    .is_err()
-                {
-                    return; // leader gone
-                }
-            }
-            Message::Shutdown => break,
-            other => {
-                debug_assert!(false, "worker received unexpected message {other:?}");
-            }
-        }
-    }
-    let _ = net.send(
-        &tx_leader,
-        Message::WorkerDone {
-            worker: worker_id,
-            local_tree,
-            dist_evals: kernel.dist_evals(),
-            busy,
-            jobs_run,
-        },
-        Direction::Gather,
-    );
 }

@@ -1,13 +1,15 @@
-//! Serial reference implementation of Algorithm 1 (the distributed execution
-//! with real worker threads + communication accounting is in
-//! [`crate::coordinator`]; both must produce the identical tree).
+//! Serial reference front-end of Algorithm 1: a thin wrapper over the
+//! shared [`crate::exec`] engine ([`crate::exec::run_serial`] driving a
+//! [`crate::exec::DensePairSolver`]). The distributed execution with real
+//! worker threads + communication accounting is the *other* thin wrapper,
+//! [`crate::coordinator::run_distributed`]; both must produce the identical
+//! tree because they share one plan/solve/reduce implementation.
 
-use super::pairs::PairSchedule;
-use super::partition::{partition_indices, PartitionStrategy};
+use super::partition::PartitionStrategy;
 use crate::data::Dataset;
 use crate::dense::DenseMst;
+use crate::exec::{run_serial, DensePairSolver, ExecPlan};
 use crate::graph::Edge;
-use crate::mst::kruskal;
 
 /// Configuration for the decomposed EMST.
 #[derive(Clone, Debug)]
@@ -51,39 +53,17 @@ pub struct DecompOutput {
 /// the kernel's metric (Theorem 1). Counters on `kernel` are reset first so
 /// `dist_evals` reflects only this invocation.
 pub fn decomposed_mst(ds: &Dataset, cfg: &DecompConfig, kernel: &dyn DenseMst) -> DecompOutput {
-    let parts = partition_indices(ds, cfg.parts, cfg.strategy, cfg.seed);
-    let schedule = PairSchedule::new(cfg.parts);
+    let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
     kernel.reset_counters();
-
-    let mut union_edges: Vec<Edge> = Vec::new();
-    let mut pair_trees = Vec::new();
-    if cfg.parts == 1 {
-        // Degenerate case: the paper's double loop is empty; the d-MST of the
-        // single subset is the answer.
-        let tree = run_pair(ds, &parts[0], &[], kernel);
-        union_edges.extend_from_slice(&tree);
-        if cfg.keep_pair_trees {
-            pair_trees.push(tree);
-        }
-    } else {
-        for job in &schedule.jobs {
-            let tree = run_pair(ds, &parts[job.i as usize], &parts[job.j as usize], kernel);
-            union_edges.extend_from_slice(&tree);
-            if cfg.keep_pair_trees {
-                pair_trees.push(tree);
-            }
-        }
-    }
-
-    let union_count = union_edges.len();
-    let mst = kruskal(ds.n, &union_edges);
+    let mut solver = DensePairSolver::borrowed(ds, kernel);
+    let run = run_serial(ds.n, &plan, &mut solver, cfg.keep_pair_trees);
     DecompOutput {
-        mst,
-        union_edges: union_count,
+        mst: run.mst,
+        union_edges: run.union_edges,
         dist_evals: kernel.dist_evals(),
-        jobs: schedule.len().max(1),
-        pair_trees,
-        part_sizes: parts.iter().map(|p| p.len()).collect(),
+        jobs: run.jobs,
+        pair_trees: run.pair_trees,
+        part_sizes: plan.part_sizes(),
     }
 }
 

@@ -14,9 +14,11 @@
 //! global tree edge with both endpoints in `S_i ∪ S_j` survives in that
 //! subproblem's MST. Every global edge has its endpoints in *some* pair.
 //!
-//! This module contains the serial reference implementation plus the
-//! partitioners and pair schedule; the multi-threaded distributed execution
-//! with communication accounting lives in [`crate::coordinator`].
+//! This module contains the serial reference front-end plus the
+//! partitioners, pair schedule, and ⊕-reduction primitives; the actual
+//! partition → schedule → solve → reduce loop is the shared [`crate::exec`]
+//! engine, and the multi-threaded distributed execution with communication
+//! accounting is its other front-end, [`crate::coordinator`].
 
 pub mod partition;
 pub mod pairs;

@@ -18,6 +18,50 @@ pub fn tree_merge(n: usize, t1: &[Edge], t2: &[Edge]) -> Vec<Edge> {
     kruskal(n, &union)
 }
 
+/// Streaming ⊕-accumulator: fold pair trees into a bounded running MSF as
+/// they arrive, instead of buffering the full `O(|V|·|P|)` union for one
+/// final Kruskal. ⊕ is associative and commutative on the canonical strict
+/// order, so the arrival order (which is nondeterministic under the pooled
+/// scheduler) never changes the result, and the leader's working set stays
+/// ≤ `|V| - 1` edges at all times.
+#[derive(Clone, Debug)]
+pub struct StreamReducer {
+    n: usize,
+    forest: Vec<Edge>,
+    /// trees folded in so far
+    pub merges: usize,
+    /// total edges received across all pushes
+    pub edges_seen: u64,
+}
+
+impl StreamReducer {
+    pub fn new(n: usize) -> Self {
+        Self { n, forest: Vec::new(), merges: 0, edges_seen: 0 }
+    }
+
+    /// Fold one arriving tree into the running MSF.
+    pub fn push(&mut self, tree: &[Edge]) {
+        self.edges_seen += tree.len() as u64;
+        self.merges += 1;
+        self.forest = tree_merge(self.n, &self.forest, tree);
+        debug_assert!(self.n == 0 || self.forest.len() < self.n, "bounded running MSF");
+    }
+
+    /// Edges currently held (≤ `n - 1`).
+    pub fn len(&self) -> usize {
+        self.forest.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.forest.is_empty()
+    }
+
+    /// The final MSF (ascending strict order).
+    pub fn finish(self) -> Vec<Edge> {
+        self.forest
+    }
+}
+
 /// Statistics from a reduction run.
 #[derive(Clone, Debug, Default)]
 pub struct ReductionStats {
@@ -122,6 +166,39 @@ mod tests {
         assert_eq!(r.len(), 1);
         assert_eq!(s.levels, 0);
         assert_eq!(s.edges_transmitted, 1);
+    }
+
+    #[test]
+    fn stream_reducer_equals_batch_kruskal_any_order() {
+        let ds = uniform(56, 4, 1.0, Pcg64::seeded(402));
+        let cfg = DecompConfig { parts: 7, keep_pair_trees: true, ..Default::default() };
+        let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+        let union: Vec<Edge> = out.pair_trees.iter().flatten().copied().collect();
+        let batch = crate::mst::kruskal(ds.n, &union);
+        // forward and reversed arrival orders give the identical MSF
+        for reversed in [false, true] {
+            let mut r = StreamReducer::new(ds.n);
+            let mut trees: Vec<&Vec<Edge>> = out.pair_trees.iter().collect();
+            if reversed {
+                trees.reverse();
+            }
+            for t in trees {
+                r.push(t);
+                assert!(r.len() < ds.n, "bounded at every step");
+            }
+            assert_eq!(r.merges, out.pair_trees.len());
+            assert_eq!(r.edges_seen as usize, out.union_edges);
+            assert_eq!(normalize_tree(&batch), normalize_tree(&r.finish()), "rev={reversed}");
+        }
+    }
+
+    #[test]
+    fn stream_reducer_empty_and_single() {
+        let mut r = StreamReducer::new(4);
+        assert!(r.is_empty());
+        r.push(&[Edge::new(0, 1, 1.0), Edge::new(0, 1, 2.0)]);
+        assert_eq!(r.len(), 1, "parallel edges collapse immediately");
+        assert_eq!(r.finish(), vec![Edge::new(0, 1, 1.0)]);
     }
 
     #[test]

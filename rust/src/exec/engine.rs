@@ -1,0 +1,558 @@
+//! The pair-job execution engine: the single owner of
+//! partition → schedule → solve → reduce for *both* front-ends.
+//!
+//! [`run_serial`] drives a [`PairSolver`] on the calling thread in the
+//! paper's schedule order (the `decomp::decomposed_mst` reference path);
+//! [`execute_pooled`] drives a `std::thread` worker pool with cost-LPT
+//! dealing + idle stealing over the same plan, with every scatter/gather
+//! charged to the [`NetSim`] byte model (the `coordinator::run_distributed`
+//! path). Per-phase timings and evaluation counters land in [`RunMetrics`].
+//!
+//! Pooled flow, bipartite-merge kernel:
+//!
+//! ```text
+//! phase local-MST:  pool over partitions   — MST(S_k) once each, cached
+//! phase pair:       pool over pair jobs    — filtered Prim per (S_i, S_j)
+//! phase reduce:     leader                 — streaming ⊕ or batch Kruskal
+//! ```
+//!
+//! The dense kernel skips the first phase and solves each pair with a full
+//! d-MST over the gathered union, exactly as before the refactor.
+
+use super::pair_kernel::{
+    subset_mst, BipartiteCtx, BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver,
+};
+use super::plan::ExecPlan;
+use super::scheduler::JobQueue;
+use crate::config::{PairKernelChoice, RunConfig};
+use crate::coordinator::messages::{job_wire_bytes, Message, HEADER_BYTES};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::netsim::{Direction, NetSim};
+use crate::data::Dataset;
+use crate::decomp::reduction::{reduce_trees, tree_merge, StreamReducer};
+use crate::decomp::{pair_count, DecompConfig, DecompOutput, PairJob};
+use crate::geometry::CountingMetric;
+use crate::graph::Edge;
+use crate::mst::kruskal;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Resolve the worker count: explicit, else one per pair job capped at the
+/// machine's parallelism.
+pub fn resolve_workers(cfg: &RunConfig) -> usize {
+    let jobs = pair_count(cfg.parts).max(1);
+    if cfg.workers > 0 {
+        cfg.workers.min(jobs)
+    } else {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        jobs.min(cores)
+    }
+}
+
+/// Output of a serial engine run.
+pub struct SerialRun {
+    /// the exact global MSF
+    pub mst: Vec<Edge>,
+    /// total edges across all pair trees (the `O(|V|·|P|)` gather payload)
+    pub union_edges: usize,
+    /// per-pair trees in schedule order, if requested
+    pub pair_trees: Vec<Vec<Edge>>,
+    /// pair jobs executed
+    pub jobs: usize,
+}
+
+/// Drive `solver` over the plan's jobs on the calling thread (schedule
+/// order), then take the sparse MST of the union.
+pub fn run_serial(
+    n: usize,
+    plan: &ExecPlan,
+    solver: &mut dyn PairSolver,
+    keep_pair_trees: bool,
+) -> SerialRun {
+    let mut union_edges: Vec<Edge> = Vec::new();
+    let mut pair_trees = Vec::new();
+    for job in &plan.jobs {
+        let tree = solver.solve(plan, job);
+        union_edges.extend_from_slice(&tree);
+        if keep_pair_trees {
+            pair_trees.push(tree);
+        }
+    }
+    let union_count = union_edges.len();
+    let mst = kruskal(n, &union_edges);
+    SerialRun { mst, union_edges: union_count, pair_trees, jobs: plan.n_jobs() }
+}
+
+/// Serial decomposed MST with the bipartite-merge pair kernel: local MSTs
+/// cached once, pair jobs solved by filtered Prim. Returns the same
+/// [`DecompOutput`] as the dense reference path, with `dist_evals` =
+/// `Σ_k |S_k|(|S_k|-1)/2 + Σ_{i<j} |S_i|·|S_j| = n(n-1)/2` exactly.
+pub fn decomposed_mst_bipartite(
+    ds: &Dataset,
+    cfg: &DecompConfig,
+    kind: crate::geometry::MetricKind,
+) -> DecompOutput {
+    let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
+    let ctx = BipartiteCtx::new(ds, kind);
+    let cache = LocalMstCache::build_serial(ds, &ctx, &plan.parts);
+    let mut solver = BipartitePairSolver::new(ds, &ctx, &cache);
+    let run = run_serial(ds.n, &plan, &mut solver, cfg.keep_pair_trees);
+    DecompOutput {
+        mst: run.mst,
+        union_edges: run.union_edges,
+        dist_evals: cache.evals + solver.dist_evals(),
+        jobs: run.jobs,
+        pair_trees: run.pair_trees,
+        part_sizes: plan.part_sizes(),
+    }
+}
+
+/// Output of a pooled engine run.
+pub struct PooledRun {
+    pub mst: Vec<Edge>,
+    pub metrics: RunMetrics,
+    pub workers: usize,
+}
+
+/// The pooled engine: worker threads claim jobs from a shared cost-LPT
+/// queue; the leader gathers trees (streaming or buffered) and finishes the
+/// reduction. All traffic is charged to `net`.
+pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Result<PooledRun> {
+    let t_start = Instant::now();
+    let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
+    let n_workers = resolve_workers(cfg);
+    let counters = net.counters();
+
+    let mut metrics = RunMetrics {
+        worker_busy: vec![Duration::ZERO; n_workers],
+        kernel: crate::runtime::exec_kernel_label(cfg),
+        kernel_fallback: crate::runtime::kernel_fallback_note(cfg),
+        pair_kernel: cfg.pair_kernel.name().to_string(),
+        stream_reduce: cfg.stream_reduce,
+        ..Default::default()
+    };
+
+    // Phase 1 (bipartite-merge only): every partition's local MST, once,
+    // through the same worker pool.
+    let bip: Option<(BipartiteCtx, LocalMstCache)> = match cfg.pair_kernel {
+        PairKernelChoice::Dense => None,
+        PairKernelChoice::BipartiteMerge => {
+            let t = Instant::now();
+            let ctx = BipartiteCtx::new(ds, cfg.metric);
+            let (cache, phase_busy) = build_cache_pooled(ds, &ctx, &plan, n_workers, net);
+            for (w, b) in phase_busy.into_iter().enumerate() {
+                metrics.worker_busy[w] += b;
+            }
+            metrics.phase_local_mst = t.elapsed();
+            Some((ctx, cache))
+        }
+    };
+
+    // Phase 2: pair jobs over the pool, LPT deal + idle stealing.
+    let t_pairs = Instant::now();
+    let queue = JobQueue::new(plan.lpt_order.clone());
+    let (tx_leader, rx_leader) = channel::<Message>();
+    let mut union_edges: Vec<Edge> = Vec::new();
+    let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
+    let mut stream = if cfg.stream_reduce { Some(StreamReducer::new(ds.n)) } else { None };
+    let mut reduce_time = Duration::ZERO;
+
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let plan_ref = &plan;
+        let queue_ref = &queue;
+        let bip_ref = bip.as_ref();
+        for w in 0..n_workers {
+            let tx = tx_leader.clone();
+            scope.spawn(move || pooled_worker(w, ds, plan_ref, queue_ref, cfg, net, bip_ref, tx));
+        }
+        drop(tx_leader); // leader keeps only rx
+
+        let mut done = 0usize;
+        while done < n_workers {
+            let msg = rx_leader.recv().expect("all workers hung up");
+            match msg {
+                Message::Result { edges, compute, .. } => {
+                    metrics.jobs += 1;
+                    metrics.job_times.push(compute);
+                    metrics.union_edges += edges.len();
+                    if let Some(r) = &mut stream {
+                        let t = Instant::now();
+                        r.push(&edges);
+                        reduce_time += t.elapsed();
+                    } else {
+                        union_edges.extend_from_slice(&edges);
+                    }
+                }
+                Message::WorkerDone { worker, local_tree, dist_evals, busy, jobs_run } => {
+                    metrics.dist_evals += dist_evals;
+                    // += : the local-MST phase already deposited its share
+                    metrics.worker_busy[worker] += busy;
+                    if cfg.reduce_tree {
+                        metrics.jobs += jobs_run;
+                    }
+                    if let Some(t) = local_tree {
+                        metrics.union_edges += t.len();
+                        if let Some(r) = &mut stream {
+                            let t0 = Instant::now();
+                            r.push(&t);
+                            reduce_time += t0.elapsed();
+                        } else {
+                            worker_trees.push(t);
+                        }
+                    }
+                    done += 1;
+                }
+                other => anyhow::bail!("leader received unexpected message {other:?}"),
+            }
+        }
+        Ok(())
+    })?;
+
+    let expected_jobs = plan.n_jobs() as u32;
+    if metrics.jobs != expected_jobs {
+        anyhow::bail!(
+            "job count mismatch: expected {expected_jobs}, completed {} (worker failure?)",
+            metrics.jobs
+        );
+    }
+    // Streaming folds ran inside the gather loop; carve them out of the
+    // pair phase so the three phases stay (approximately) additive.
+    metrics.phase_pair = t_pairs.elapsed().saturating_sub(reduce_time);
+
+    // Final reduction. (Perf note inherited from the pre-exec leader:
+    // deduplicating (u,v) pairs before the batch Kruskal was tried and
+    // reverted — dedup itself sorts the full union, so it only adds work.)
+    let t_mst = Instant::now();
+    let mst = if let Some(r) = stream {
+        r.finish()
+    } else if cfg.reduce_tree {
+        let (tree, _stats) = reduce_trees(ds.n, &worker_trees);
+        tree
+    } else {
+        kruskal(ds.n, &union_edges)
+    };
+    metrics.final_mst = t_mst.elapsed();
+    metrics.phase_reduce = reduce_time + metrics.final_mst;
+
+    metrics.pair_evals = metrics.dist_evals;
+    if let Some((_, cache)) = &bip {
+        metrics.local_mst_evals = cache.evals;
+        metrics.dist_evals += cache.evals;
+    }
+
+    let (s, g, c, m) = counters.snapshot();
+    metrics.scatter_bytes = s;
+    metrics.gather_bytes = g;
+    metrics.control_bytes = c;
+    metrics.messages = m;
+    metrics.wall = t_start.elapsed();
+
+    Ok(PooledRun { mst, metrics, workers: n_workers })
+}
+
+/// One pooled worker: claim jobs until the queue drains, charging the
+/// scatter for each claimed job and shipping each pair tree (or a locally
+/// ⊕-combined tree) back through the simulated network.
+fn pooled_worker(
+    worker_id: usize,
+    ds: &Dataset,
+    plan: &ExecPlan,
+    queue: &JobQueue,
+    cfg: &RunConfig,
+    net: &NetSim,
+    bip: Option<&(BipartiteCtx, LocalMstCache)>,
+    tx_leader: Sender<Message>,
+) {
+    let mut solver: Box<dyn PairSolver + '_> = match bip {
+        Some((ctx, cache)) => Box::new(BipartitePairSolver::new(ds, ctx, cache)),
+        None => match crate::coordinator::worker::build_kernel(cfg) {
+            Ok(kernel) => Box::new(DensePairSolver::owned(ds, kernel)),
+            Err(e) => {
+                // Report failure as an empty done message; the leader
+                // surfaces the error when the job count comes up short.
+                eprintln!("worker {worker_id}: kernel init failed: {e:#}");
+                let _ = net.send(
+                    &tx_leader,
+                    Message::WorkerDone {
+                        worker: worker_id,
+                        local_tree: None,
+                        dist_evals: 0,
+                        busy: Duration::ZERO,
+                        jobs_run: 0,
+                    },
+                    Direction::Gather,
+                );
+                return;
+            }
+        },
+    };
+    let local_reduce = cfg.reduce_tree;
+    let mut busy = Duration::ZERO;
+    let mut jobs_run = 0u32;
+    let mut local_tree: Option<Vec<Edge>> = None;
+    while let Some(job_idx) = queue.pop() {
+        let job = &plan.jobs[job_idx];
+        // Model the leader→worker scatter of this job's payload.
+        net.charge(job_scatter_bytes(plan, job, ds.d, bip.map(|(_, c)| c)), Direction::Scatter);
+        let t = Instant::now();
+        let tree = solver.solve(plan, job);
+        let compute = t.elapsed();
+        busy += compute;
+        jobs_run += 1;
+        if local_reduce {
+            let t2 = Instant::now();
+            local_tree = Some(match local_tree.take() {
+                None => tree,
+                Some(prev) => tree_merge(ds.n, &prev, &tree),
+            });
+            busy += t2.elapsed();
+        } else if net
+            .send(
+                &tx_leader,
+                Message::Result { job_id: job.id, worker: worker_id, edges: tree, compute },
+                Direction::Gather,
+            )
+            .is_err()
+        {
+            return; // leader gone
+        }
+    }
+    // Queue drained: model the shutdown control message, then report.
+    net.charge(HEADER_BYTES, Direction::Control);
+    let _ = net.send(
+        &tx_leader,
+        Message::WorkerDone {
+            worker: worker_id,
+            local_tree,
+            dist_evals: solver.dist_evals(),
+            busy,
+            jobs_run,
+        },
+        Direction::Gather,
+    );
+}
+
+/// Scatter bytes for one pair job: header + id map + vector payload, plus —
+/// for the bipartite-merge kernel — the two cached local trees the job
+/// consumes instead of recomputing. The degenerate self-pair job under the
+/// bipartite kernel only consumes the cached tree (its vectors were already
+/// charged by the local-MST phase), so only the tree travels.
+fn job_scatter_bytes(
+    plan: &ExecPlan,
+    job: &PairJob,
+    d: usize,
+    cache: Option<&LocalMstCache>,
+) -> u64 {
+    let si = plan.parts[job.i as usize].len();
+    if job.i == job.j {
+        return match cache {
+            Some(c) => {
+                HEADER_BYTES + c.trees[job.i as usize].len() as u64 * Edge::WIRE_BYTES as u64
+            }
+            None => job_wire_bytes(si, d),
+        };
+    }
+    let m = si + plan.parts[job.j as usize].len();
+    let mut bytes = job_wire_bytes(m, d);
+    if let Some(c) = cache {
+        let tree_edges = c.trees[job.i as usize].len() + c.trees[job.j as usize].len();
+        bytes += tree_edges as u64 * Edge::WIRE_BYTES as u64;
+    }
+    bytes
+}
+
+/// Build the local-MST cache through the worker pool: one job per
+/// partition, heaviest first. Scatter charges each subset's vectors once;
+/// gather charges each returned local tree once. Also returns each pool
+/// worker's busy time so the engine can attribute this phase's compute to
+/// `RunMetrics::worker_busy`.
+fn build_cache_pooled(
+    ds: &Dataset,
+    ctx: &BipartiteCtx,
+    plan: &ExecPlan,
+    n_workers: usize,
+    net: &NetSim,
+) -> (LocalMstCache, Vec<Duration>) {
+    let t = Instant::now();
+    let p = plan.parts.len();
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| plan.parts[b].len().cmp(&plan.parts[a].len()).then(a.cmp(&b)));
+    let queue = JobQueue::new(order);
+    let counter = CountingMetric::new(ctx.kind);
+    let slots: Vec<Mutex<Option<Vec<Edge>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    let busy: Vec<Mutex<Duration>> =
+        (0..n_workers.min(p)).map(|_| Mutex::new(Duration::ZERO)).collect();
+    std::thread::scope(|scope| {
+        let queue_ref = &queue;
+        let counter_ref = &counter;
+        let slots_ref = &slots;
+        for busy_slot in &busy {
+            scope.spawn(move || {
+                while let Some(k) = queue_ref.pop() {
+                    let ids = &plan.parts[k];
+                    net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
+                    let t_job = Instant::now();
+                    let tree = subset_mst(
+                        ds.as_slice(),
+                        ds.d,
+                        ctx.block.as_ref(),
+                        &ctx.aux,
+                        counter_ref,
+                        ids,
+                    );
+                    *busy_slot.lock().unwrap() += t_job.elapsed();
+                    net.charge(
+                        HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
+                        Direction::Gather,
+                    );
+                    *slots_ref[k].lock().unwrap() = Some(tree);
+                }
+            });
+        }
+    });
+    let trees: Vec<Vec<Edge>> = slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("local MST computed"))
+        .collect();
+    let busy: Vec<Duration> = busy.into_iter().map(|b| b.into_inner().unwrap()).collect();
+    (LocalMstCache { trees, evals: counter.evals(), build_time: t.elapsed() }, busy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::KernelChoice;
+    use crate::data::generators::uniform;
+    use crate::decomp::decomposed_mst;
+    use crate::dense::PrimDense;
+    use crate::geometry::MetricKind;
+    use crate::mst::normalize_tree;
+    use crate::util::prng::Pcg64;
+
+    fn int_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(25) as f32 - 12.0).collect();
+        Dataset::new(n, d, data)
+    }
+
+    #[test]
+    fn bipartite_serial_matches_dense_serial() {
+        let ds = int_dataset(500, 70, 6);
+        for parts in [1usize, 2, 3, 5, 7] {
+            let cfg = DecompConfig { parts, ..Default::default() };
+            let dense = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+            let bip = decomposed_mst_bipartite(&ds, &cfg, MetricKind::SqEuclid);
+            assert_eq!(
+                normalize_tree(&dense.mst),
+                normalize_tree(&bip.mst),
+                "parts={parts}"
+            );
+            let n = ds.n as u64;
+            assert_eq!(bip.dist_evals, n * (n - 1) / 2, "parts={parts}: exactly C(n,2)");
+            if parts >= 3 {
+                assert!(
+                    bip.dist_evals < dense.dist_evals,
+                    "parts={parts}: bipartite {} !< dense {}",
+                    bip.dist_evals,
+                    dense.dist_evals
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_bipartite_matches_pooled_dense_all_worker_counts() {
+        let ds = int_dataset(501, 80, 5);
+        let mut cfg = RunConfig {
+            parts: 4,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let dense = execute_pooled(&ds, &cfg, &net).unwrap();
+        cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+        for workers in [1usize, 3, 6] {
+            cfg.workers = workers;
+            let net = NetSim::new(cfg.net.clone());
+            let bip = execute_pooled(&ds, &cfg, &net).unwrap();
+            assert_eq!(
+                normalize_tree(&dense.mst),
+                normalize_tree(&bip.mst),
+                "workers={workers}"
+            );
+            let n = ds.n as u64;
+            assert_eq!(bip.metrics.dist_evals, n * (n - 1) / 2, "workers={workers}");
+            assert_eq!(
+                bip.metrics.local_mst_evals + bip.metrics.pair_evals,
+                bip.metrics.dist_evals
+            );
+            assert!(bip.metrics.local_mst_evals > 0);
+        }
+    }
+
+    #[test]
+    fn stream_reduce_matches_batch() {
+        let ds = int_dataset(502, 60, 4);
+        let mut cfg = RunConfig {
+            parts: 5,
+            workers: 3,
+            kernel: KernelChoice::PrimDense,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let batch = execute_pooled(&ds, &cfg, &net).unwrap();
+        cfg.stream_reduce = true;
+        let net = NetSim::new(cfg.net.clone());
+        let streamed = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert_eq!(normalize_tree(&batch.mst), normalize_tree(&streamed.mst));
+        assert_eq!(batch.metrics.union_edges, streamed.metrics.union_edges);
+        assert!(streamed.metrics.stream_reduce);
+        // streaming also composes with worker-local ⊕-reduction
+        cfg.reduce_tree = true;
+        let net = NetSim::new(cfg.net.clone());
+        let both = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert_eq!(normalize_tree(&batch.mst), normalize_tree(&both.mst));
+    }
+
+    #[test]
+    fn lpt_scatter_bytes_match_dense_model() {
+        // The pull-based scheduler must charge the identical per-job scatter
+        // the eager round-robin leader charged.
+        let ds = uniform(96, 7, 1.0, Pcg64::seeded(503));
+        let cfg = RunConfig {
+            parts: 4,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            strategy: crate::decomp::PartitionStrategy::Block,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let out = execute_pooled(&ds, &cfg, &net).unwrap();
+        let m = 2 * 96 / 4;
+        let per_job = 16 + m as u64 * 4 + (m * 7) as u64 * 4;
+        assert_eq!(out.metrics.scatter_bytes, 6 * per_job);
+    }
+
+    #[test]
+    fn bipartite_phase_metrics_populated() {
+        let ds = int_dataset(504, 64, 4);
+        let cfg = RunConfig {
+            parts: 4,
+            workers: 2,
+            pair_kernel: PairKernelChoice::BipartiteMerge,
+            strategy: crate::decomp::PartitionStrategy::Block,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let out = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert_eq!(out.metrics.pair_kernel, "bipartite-merge");
+        assert!(out.metrics.kernel.contains("bipartite-merge"), "{}", out.metrics.kernel);
+        assert!(out.metrics.phase_local_mst > Duration::ZERO);
+        assert!(out.metrics.phase_pair > Duration::ZERO);
+        // 4 partitions of 16: cache = 4 * C(16,2), pairs = 6 * 16 * 16
+        assert_eq!(out.metrics.local_mst_evals, 4 * (16 * 15 / 2));
+        assert_eq!(out.metrics.pair_evals, 6 * 16 * 16);
+    }
+}

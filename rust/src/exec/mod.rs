@@ -1,0 +1,35 @@
+//! The pair-job execution engine — the single implementation of
+//! partition → schedule → solve → reduce that *both* front-ends are thin
+//! wrappers over:
+//!
+//! - [`crate::decomp::decomposed_mst`] — serial reference: [`run_serial`]
+//!   over a [`DensePairSolver`] borrowing the caller's kernel;
+//! - [`crate::coordinator::run_distributed`] — distributed:
+//!   [`execute_pooled`] with `std::thread` workers, cost-LPT dealing with
+//!   idle stealing ([`JobQueue`]), [`NetSim`](crate::coordinator::NetSim)
+//!   byte accounting, and optional streaming ⊕-reduction at the leader.
+//!
+//! The layer's pieces:
+//! - [`plan`] — [`ExecPlan`]: partition subsets + pair jobs + the
+//!   `|S_i|·|S_j|` cost model (degenerate `|P| = 1` folded in);
+//! - [`scheduler`] — [`JobQueue`]: atomic LPT deal, workers steal when idle;
+//! - [`pair_kernel`] — the two pair kernels behind [`PairSolver`]: the
+//!   dense oracle and the cycle-property [`BipartitePairSolver`] with
+//!   cached local MSTs ([`LocalMstCache`]) + filtered Prim over one
+//!   bipartite block;
+//! - [`engine`] — the serial and pooled drivers plus per-phase metrics.
+
+pub mod engine;
+pub mod pair_kernel;
+pub mod plan;
+pub mod scheduler;
+
+pub use engine::{
+    decomposed_mst_bipartite, execute_pooled, resolve_workers, run_serial, PooledRun, SerialRun,
+};
+pub use pair_kernel::{
+    bipartite_filtered_prim, emit_tree, subset_mst, BipartiteCtx, BipartitePairSolver,
+    DensePairSolver, LocalMstCache, PairSolver,
+};
+pub use plan::ExecPlan;
+pub use scheduler::JobQueue;

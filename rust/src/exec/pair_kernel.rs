@@ -1,0 +1,572 @@
+//! Pair-job solvers: how one `d-MST(S_i ∪ S_j)` job gets computed.
+//!
+//! Two interchangeable kernels sit behind [`PairSolver`]:
+//!
+//! - [`DensePairSolver`] — the paper-literal path: gather the union, run a
+//!   full dense d-MST kernel ([`DenseMst`]) over it. Every pair re-solves
+//!   both subsets' internal distance structure, so each subset's internal
+//!   work is repeated `|P| - 1` times. Kept as the selectable oracle.
+//! - [`BipartitePairSolver`] — the cycle-property kernel: each subset's
+//!   local MST is computed **exactly once** (the [`LocalMstCache`]), and a
+//!   pair job runs a *filtered Prim* over the sparse graph
+//!   `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`. Only the bipartite block
+//!   is evaluated fresh, one [`DistanceBlock`] row per admitted vertex, so a
+//!   full run performs exactly `n(n-1)/2` distance evaluations *total* —
+//!   the same as a monolithic dense MST — versus the dense pair path's
+//!   `≈ 2(|P|-1)/|P| · n(n-1)/2`.
+//!
+//! Exactness of the filter (cycle property under the strict `(w, u, v)`
+//! order): an edge internal to `S_i` that is not in `MST(S_i)` closes a
+//! cycle inside `S_i` on which it is the strict maximum; that cycle also
+//! exists in `S_i ∪ S_j`, so the edge cannot be in `MST(S_i ∪ S_j)`. Hence
+//! `MST(S_i ∪ S_j) ⊆ MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i, S_j)` and the
+//! filtered Prim returns the identical canonical tree as the dense kernel
+//! (both consume bit-identical [`DistanceBlock`] arithmetic).
+//!
+//! All merge-path comparisons happen in the metric's *compare form*
+//! (squared for Euclid); weights are mapped to emission form only on the
+//! returned pair tree, exactly where the dense kernels do it.
+
+use super::plan::ExecPlan;
+use crate::data::Dataset;
+use crate::decomp::algorithm::{merge_sorted_ids, run_pair};
+use crate::decomp::PairJob;
+use crate::dense::DenseMst;
+use crate::geometry::blocked::{distance_block, DistanceBlock};
+use crate::geometry::{CountingMetric, MetricKind};
+use crate::graph::Edge;
+use crate::util::fkey::edge_cmp;
+use std::cmp::Ordering;
+use std::time::{Duration, Instant};
+
+/// A solver for one pair job. `job.i == job.j` is the degenerate
+/// single-subset job (`|P| = 1`). Returned edges carry global vertex ids and
+/// emission-form weights.
+pub trait PairSolver {
+    fn solve(&mut self, plan: &ExecPlan, job: &PairJob) -> Vec<Edge>;
+
+    /// Distance evaluations performed by *this solver* so far (for the
+    /// bipartite kernel this excludes the shared local-MST cache build,
+    /// which is accounted separately by the engine).
+    fn dist_evals(&self) -> u64;
+}
+
+/// The dense pair kernel: `d-MST(S_i ∪ S_j)` via a full [`DenseMst`] run
+/// over the gathered union (the paper's literal Algorithm 1 inner loop).
+pub struct DensePairSolver<'a> {
+    ds: &'a Dataset,
+    kernel: KernelRef<'a>,
+}
+
+enum KernelRef<'a> {
+    Owned(Box<dyn DenseMst>),
+    Borrowed(&'a dyn DenseMst),
+}
+
+impl<'a> DensePairSolver<'a> {
+    /// Solver owning its kernel (pooled execution: one kernel per worker).
+    pub fn owned(ds: &'a Dataset, kernel: Box<dyn DenseMst>) -> Self {
+        Self { ds, kernel: KernelRef::Owned(kernel) }
+    }
+
+    /// Solver borrowing the caller's kernel (serial execution keeps the
+    /// caller's eval counters observable).
+    pub fn borrowed(ds: &'a Dataset, kernel: &'a dyn DenseMst) -> Self {
+        Self { ds, kernel: KernelRef::Borrowed(kernel) }
+    }
+
+    fn kernel(&self) -> &dyn DenseMst {
+        match &self.kernel {
+            KernelRef::Owned(k) => k.as_ref(),
+            KernelRef::Borrowed(k) => *k,
+        }
+    }
+}
+
+impl PairSolver for DensePairSolver<'_> {
+    fn solve(&mut self, plan: &ExecPlan, job: &PairJob) -> Vec<Edge> {
+        let si = &plan.parts[job.i as usize];
+        let sj: &[u32] = if job.i == job.j { &[] } else { &plan.parts[job.j as usize] };
+        run_pair(self.ds, si, sj, self.kernel())
+    }
+
+    fn dist_evals(&self) -> u64 {
+        self.kernel().dist_evals()
+    }
+}
+
+/// Shared per-run context for the bipartite-merge kernel: the blocked
+/// distance implementation plus its per-row auxiliary values (norms)
+/// prepared **once** over the full matrix and reused by every local-MST and
+/// bipartite-row computation.
+pub struct BipartiteCtx {
+    pub kind: MetricKind,
+    pub block: Box<dyn DistanceBlock>,
+    pub aux: Vec<f32>,
+    /// weights compare in squared form and need a `sqrt` at emission
+    pub sqrt_at_emit: bool,
+}
+
+impl BipartiteCtx {
+    pub fn new(ds: &Dataset, kind: MetricKind) -> Self {
+        let block = distance_block(kind);
+        let aux = block.prepare(ds.as_slice(), ds.n, ds.d);
+        let sqrt_at_emit = block.compare_form_is_squared();
+        Self { kind, block, aux, sqrt_at_emit }
+    }
+}
+
+/// Each partition's local MST, computed exactly once per run. Trees carry
+/// global vertex ids and **compare-form** weights (the cache is internal to
+/// the merge path; emission happens on pair-tree return).
+pub struct LocalMstCache {
+    pub trees: Vec<Vec<Edge>>,
+    /// distance evaluations spent building the cache:
+    /// `Σ_k |S_k|(|S_k|-1)/2`
+    pub evals: u64,
+    /// wall time spent building the cache (serial builds only; pooled
+    /// builds are timed by the engine)
+    pub build_time: Duration,
+}
+
+impl LocalMstCache {
+    /// Build the cache on the calling thread (the serial path; the pooled
+    /// engine builds it through the worker pool instead).
+    pub fn build_serial(ds: &Dataset, ctx: &BipartiteCtx, parts: &[Vec<u32>]) -> Self {
+        let t = Instant::now();
+        let counter = CountingMetric::new(ctx.kind);
+        let trees = parts
+            .iter()
+            .map(|ids| subset_mst(ds.as_slice(), ds.d, ctx.block.as_ref(), &ctx.aux, &counter, ids))
+            .collect();
+        Self { trees, evals: counter.evals(), build_time: t.elapsed() }
+    }
+}
+
+/// The bipartite-merge pair kernel: filtered Prim over
+/// `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)` with cached local MSTs.
+pub struct BipartitePairSolver<'a> {
+    ds: &'a Dataset,
+    ctx: &'a BipartiteCtx,
+    cache: &'a LocalMstCache,
+    counter: CountingMetric,
+}
+
+impl<'a> BipartitePairSolver<'a> {
+    pub fn new(ds: &'a Dataset, ctx: &'a BipartiteCtx, cache: &'a LocalMstCache) -> Self {
+        Self { ds, ctx, cache, counter: CountingMetric::new(ctx.kind) }
+    }
+}
+
+impl PairSolver for BipartitePairSolver<'_> {
+    fn solve(&mut self, plan: &ExecPlan, job: &PairJob) -> Vec<Edge> {
+        if job.i == job.j {
+            // Degenerate |P| = 1: the cached local MST *is* the pair tree.
+            return emit_tree(self.ctx, &self.cache.trees[job.i as usize]);
+        }
+        let si = &plan.parts[job.i as usize];
+        let sj = &plan.parts[job.j as usize];
+        let tree = bipartite_filtered_prim(
+            self.ds,
+            self.ctx,
+            si,
+            sj,
+            &self.cache.trees[job.i as usize],
+            &self.cache.trees[job.j as usize],
+            &self.counter,
+        );
+        emit_tree(self.ctx, &tree)
+    }
+
+    fn dist_evals(&self) -> u64 {
+        self.counter.evals()
+    }
+}
+
+/// Index into `active` of the vertex with the strict-minimum frontier edge
+/// under the canonical `(w, min(id, to), max(id, to))` order — the Prim pick
+/// shared by [`subset_mst`] and [`bipartite_filtered_prim`], factored out so
+/// the exactness-critical tie-break lives in exactly one place.
+///
+/// `active` holds positions into `ids`; `best_w`/`best_to` are indexed by
+/// position, with `best_to` carrying the *global* id of the tree endpoint.
+/// `active` must be non-empty.
+fn pick_min(active: &[u32], ids: &[u32], best_w: &[f32], best_to: &[u32]) -> usize {
+    debug_assert!(!active.is_empty());
+    let mut pick_at = 0usize;
+    for k in 1..active.len() {
+        let p = active[k] as usize;
+        let q = active[pick_at] as usize;
+        let (gp, gq) = (ids[p], ids[q]);
+        if edge_cmp(
+            best_w[p],
+            best_to[p].min(gp),
+            best_to[p].max(gp),
+            best_w[q],
+            best_to[q].min(gq),
+            best_to[q].max(gq),
+        ) == Ordering::Less
+        {
+            pick_at = k;
+        }
+    }
+    pick_at
+}
+
+/// Map a compare-form tree to emission form (`sqrt` weights for Euclid).
+pub fn emit_tree(ctx: &BipartiteCtx, tree: &[Edge]) -> Vec<Edge> {
+    if ctx.sqrt_at_emit {
+        tree.iter().map(|e| Edge::new(e.u, e.v, e.w.sqrt())).collect()
+    } else {
+        tree.to_vec()
+    }
+}
+
+/// Canonical MST of the complete graph over the subset `ids` (ascending
+/// global ids), using blocked distance rows over the **full** point matrix
+/// (no gather). Edges carry global endpoints and compare-form weights.
+///
+/// This is the blocked dense Prim restructured to run in place: identical
+/// arithmetic (same rows, same [`DistanceBlock`] dot/norm path) and the
+/// identical strict `(w, u, v)` tie-break in global ids — the subset's
+/// ascending-id order makes local and global strict order agree, exactly as
+/// the gathered-and-sorted dense path does.
+pub fn subset_mst(
+    data: &[f32],
+    d: usize,
+    block: &dyn DistanceBlock,
+    aux: &[f32],
+    counter: &CountingMetric,
+    ids: &[u32],
+) -> Vec<Edge> {
+    let m = ids.len();
+    let mut tree = Vec::with_capacity(m.saturating_sub(1));
+    if m <= 1 {
+        return tree;
+    }
+    let mut best_w = vec![f32::INFINITY; m];
+    let mut best_to = vec![0u32; m]; // global id of the tree endpoint
+    // positions into `ids` not yet admitted
+    let mut active: Vec<u32> = (1..m as u32).collect();
+    let mut js_buf: Vec<u32> = Vec::with_capacity(m);
+    let mut row = vec![0.0f32; m];
+
+    // Initial row: root ids[0] to everything else.
+    js_buf.clear();
+    js_buf.extend(active.iter().map(|&p| ids[p as usize]));
+    block.row(data, d, aux, ids[0] as usize, &js_buf, &mut row);
+    counter.add_external(active.len() as u64);
+    for (k, &p) in active.iter().enumerate() {
+        best_w[p as usize] = row[k];
+        best_to[p as usize] = ids[0];
+    }
+
+    for _round in 1..m {
+        let pick_at = pick_min(&active, ids, &best_w, &best_to);
+        let pick = active.swap_remove(pick_at) as usize;
+        let gpick = ids[pick];
+        tree.push(Edge::new(best_to[pick], gpick, best_w[pick]));
+        if active.is_empty() {
+            break;
+        }
+        js_buf.clear();
+        js_buf.extend(active.iter().map(|&p| ids[p as usize]));
+        block.row(data, d, aux, gpick as usize, &js_buf, &mut row);
+        counter.add_external(active.len() as u64);
+        for (k, &p) in active.iter().enumerate() {
+            let p = p as usize;
+            let gp = ids[p];
+            let w = row[k];
+            if edge_cmp(
+                w,
+                gpick.min(gp),
+                gpick.max(gp),
+                best_w[p],
+                best_to[p].min(gp),
+                best_to[p].max(gp),
+            ) == Ordering::Less
+            {
+                best_w[p] = w;
+                best_to[p] = gpick;
+            }
+        }
+    }
+    tree
+}
+
+/// Filtered Prim over the sparse pair graph
+/// `G' = MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`.
+///
+/// Same-side non-tree edges are never touched (weight +∞ in `G'`); each
+/// admitted vertex relaxes one blocked distance row against the *active
+/// cross-side* vertices only, so every bipartite pair is evaluated exactly
+/// once: `|S_i|·|S_j|` evaluations per job, and per-job memory is `O(m)`
+/// plus one distance row — not the `(|S_i|+|S_j|)²` evaluation volume of
+/// the dense kernel. Input trees and the returned tree are in compare-form
+/// weights with global ids.
+pub fn bipartite_filtered_prim(
+    ds: &Dataset,
+    ctx: &BipartiteCtx,
+    si: &[u32],
+    sj: &[u32],
+    tree_i: &[Edge],
+    tree_j: &[Edge],
+    counter: &CountingMetric,
+) -> Vec<Edge> {
+    let ids = merge_sorted_ids(si, sj);
+    let m = ids.len();
+    let mut tree = Vec::with_capacity(m.saturating_sub(1));
+    if m <= 1 {
+        return tree;
+    }
+    let pos_of = |g: u32| -> usize {
+        ids.binary_search(&g).expect("tree endpoint outside the pair union")
+    };
+    // side flag per position: true = S_i
+    let in_side_i: Vec<bool> = ids.iter().map(|g| si.binary_search(g).is_ok()).collect();
+    // adjacency of the two local trees, in positions
+    let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); m];
+    for e in tree_i.iter().chain(tree_j.iter()) {
+        let (pu, pv) = (pos_of(e.u), pos_of(e.v));
+        adj[pu].push((pv as u32, e.w));
+        adj[pv].push((pu as u32, e.w));
+    }
+
+    let data = ds.as_slice();
+    let mut best_w = vec![f32::INFINITY; m];
+    // global id of the tree endpoint; u32::MAX = no G'-edge seen yet
+    let mut best_to = vec![u32::MAX; m];
+    let mut in_tree = vec![false; m];
+    let mut active: Vec<u32> = (1..m as u32).collect();
+    let mut cross_pos: Vec<u32> = Vec::with_capacity(m);
+    let mut cross_ids: Vec<u32> = Vec::with_capacity(m);
+    let mut row = vec![0.0f32; m];
+
+    in_tree[0] = true;
+    relax_from(
+        0, &ids, &in_side_i, &adj, data, ds.d, ctx, counter, &active, &in_tree, &mut best_w,
+        &mut best_to, &mut cross_pos, &mut cross_ids, &mut row,
+    );
+
+    for _round in 1..m {
+        let pick_at = pick_min(&active, &ids, &best_w, &best_to);
+        let pick = active.swap_remove(pick_at) as usize;
+        debug_assert!(best_w[pick].is_finite(), "G' is connected; frontier must be finite");
+        in_tree[pick] = true;
+        tree.push(Edge::new(best_to[pick], ids[pick], best_w[pick]));
+        if active.is_empty() {
+            break;
+        }
+        relax_from(
+            pick, &ids, &in_side_i, &adj, data, ds.d, ctx, counter, &active, &in_tree,
+            &mut best_w, &mut best_to, &mut cross_pos, &mut cross_ids, &mut row,
+        );
+    }
+    tree
+}
+
+/// One Prim relaxation round in `G'`: a bipartite distance row against the
+/// active cross-side vertices, plus the pivot's incident local-tree edges.
+fn relax_from(
+    pivot: usize,
+    ids: &[u32],
+    in_side_i: &[bool],
+    adj: &[Vec<(u32, f32)>],
+    data: &[f32],
+    d: usize,
+    ctx: &BipartiteCtx,
+    counter: &CountingMetric,
+    active: &[u32],
+    in_tree: &[bool],
+    best_w: &mut [f32],
+    best_to: &mut [u32],
+    cross_pos: &mut Vec<u32>,
+    cross_ids: &mut Vec<u32>,
+    row: &mut [f32],
+) {
+    let gpivot = ids[pivot];
+    let pivot_in_i = in_side_i[pivot];
+    cross_pos.clear();
+    cross_ids.clear();
+    for &p in active {
+        if in_side_i[p as usize] != pivot_in_i {
+            cross_pos.push(p);
+            cross_ids.push(ids[p as usize]);
+        }
+    }
+    if !cross_ids.is_empty() {
+        ctx.block.row(data, d, &ctx.aux, gpivot as usize, cross_ids, row);
+        counter.add_external(cross_ids.len() as u64);
+        for (k, &p) in cross_pos.iter().enumerate() {
+            let p = p as usize;
+            let g = ids[p];
+            let w = row[k];
+            if edge_cmp(
+                w,
+                gpivot.min(g),
+                gpivot.max(g),
+                best_w[p],
+                best_to[p].min(g),
+                best_to[p].max(g),
+            ) == Ordering::Less
+            {
+                best_w[p] = w;
+                best_to[p] = gpivot;
+            }
+        }
+    }
+    for &(q, w) in &adj[pivot] {
+        let q = q as usize;
+        if in_tree[q] {
+            continue;
+        }
+        let g = ids[q];
+        if edge_cmp(
+            w,
+            gpivot.min(g),
+            gpivot.max(g),
+            best_w[q],
+            best_to[q].min(g),
+            best_to[q].max(g),
+        ) == Ordering::Less
+        {
+            best_w[q] = w;
+            best_to[q] = gpivot;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::{DenseMst, PrimDense};
+    use crate::mst::normalize_tree;
+    use crate::util::prng::Pcg64;
+
+    fn int_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(19) as f32 - 9.0).collect();
+        Dataset::new(n, d, data)
+    }
+
+    fn float_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+        Dataset::new(n, d, data)
+    }
+
+    #[test]
+    fn subset_mst_matches_dense_prim_on_gathered_subset() {
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            // float data: the arithmetic must be bit-identical, not just close
+            let ds = float_dataset(11, 40, 7);
+            let ctx = BipartiteCtx::new(&ds, kind);
+            let ids: Vec<u32> = (0..40u32).filter(|i| i % 3 != 1).collect();
+            let counter = CountingMetric::new(kind);
+            let sub =
+                subset_mst(ds.as_slice(), ds.d, ctx.block.as_ref(), &ctx.aux, &counter, &ids);
+            let m = ids.len() as u64;
+            assert_eq!(counter.evals(), m * (m - 1) / 2, "{kind:?} eval count");
+
+            let gathered = ds.gather(&ids);
+            let dense = PrimDense::new(kind).mst(&gathered);
+            let dense_global: Vec<Edge> = dense
+                .iter()
+                .map(|e| Edge::new(ids[e.u as usize], ids[e.v as usize], e.w))
+                .collect();
+            // compare in emission form: sqrt of the identical squared value
+            // is bit-exact, squaring the sqrt is not
+            assert_eq!(
+                normalize_tree(&dense_global),
+                normalize_tree(&emit_tree(&ctx, &sub)),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn filtered_prim_matches_dense_pair_kernel() {
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let ds = float_dataset(12, 60, 5);
+            let ctx = BipartiteCtx::new(&ds, kind);
+            let si: Vec<u32> = (0..60u32).filter(|i| i % 2 == 0).collect();
+            let sj: Vec<u32> = (0..60u32).filter(|i| i % 2 == 1).collect();
+            let counter = CountingMetric::new(kind);
+            let blk = ctx.block.as_ref();
+            let ti = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &si);
+            let tj = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &sj);
+            counter.reset();
+            let merged = bipartite_filtered_prim(&ds, &ctx, &si, &sj, &ti, &tj, &counter);
+            assert_eq!(
+                counter.evals(),
+                (si.len() * sj.len()) as u64,
+                "{kind:?}: exactly |Si|·|Sj| bipartite evaluations"
+            );
+
+            let dense = run_pair(&ds, &si, &sj, &PrimDense::new(kind));
+            assert_eq!(
+                normalize_tree(&dense),
+                normalize_tree(&emit_tree(&ctx, &merged)),
+                "{kind:?}: filtered Prim == dense pair kernel"
+            );
+        }
+    }
+
+    #[test]
+    fn filtered_prim_uneven_and_tiny_sides() {
+        let ds = int_dataset(13, 30, 4);
+        let ctx = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        for (si_len, sj_len) in [(1usize, 29usize), (2, 5), (29, 1)] {
+            let si: Vec<u32> = (0..si_len as u32).collect();
+            let sj: Vec<u32> = (si_len as u32..(si_len + sj_len) as u32).collect();
+            let counter = CountingMetric::new(MetricKind::SqEuclid);
+            let blk = ctx.block.as_ref();
+            let ti = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &si);
+            let tj = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &sj);
+            let merged = bipartite_filtered_prim(&ds, &ctx, &si, &sj, &ti, &tj, &counter);
+            let dense = run_pair(&ds, &si, &sj, &PrimDense::sq_euclid());
+            assert_eq!(
+                normalize_tree(&dense),
+                normalize_tree(&merged),
+                "sides {si_len}/{sj_len}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_cache_counts_internal_work_once() {
+        let ds = int_dataset(14, 48, 3);
+        let ctx = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        let parts: Vec<Vec<u32>> = vec![
+            (0..16u32).collect(),
+            (16..32u32).collect(),
+            (32..48u32).collect(),
+        ];
+        let cache = LocalMstCache::build_serial(&ds, &ctx, &parts);
+        assert_eq!(cache.trees.len(), 3);
+        assert_eq!(cache.evals, 3 * (16 * 15 / 2), "Σ_k |S_k|(|S_k|-1)/2");
+        for t in &cache.trees {
+            assert_eq!(t.len(), 15);
+        }
+    }
+
+    #[test]
+    fn emit_tree_sqrt_only_for_euclid() {
+        let ds = int_dataset(15, 8, 2);
+        let sq = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        let eu = BipartiteCtx::new(&ds, MetricKind::Euclid);
+        let t = vec![Edge::new(0, 1, 9.0)];
+        assert_eq!(emit_tree(&sq, &t)[0].w, 9.0);
+        assert_eq!(emit_tree(&eu, &t)[0].w, 3.0);
+    }
+}

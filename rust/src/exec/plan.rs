@@ -1,0 +1,119 @@
+//! The execution plan: partition + pair schedule + per-job cost estimates.
+//!
+//! One plan serves every execution mode (serial, pooled, distributed): it
+//! fixes *what* gets computed — the partition subsets and the pair jobs —
+//! while the engine decides *where* and *in what order*. The degenerate
+//! `|P| = 1` case is folded in as a single self-pair job (`i == j`), so the
+//! engines have no special cases.
+
+use crate::data::Dataset;
+use crate::decomp::{partition_indices, PairJob, PairSchedule, PartitionStrategy};
+
+/// Partition, schedule, and cost model for one decomposed-MST execution.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    /// the partition subsets, each sorted ascending by global id
+    pub parts: Vec<Vec<u32>>,
+    /// pair jobs in the paper's schedule order; for `|P| = 1` a single
+    /// degenerate self-pair job `{id: 0, i: 0, j: 0}`
+    pub jobs: Vec<PairJob>,
+    /// job indices sorted by descending cost estimate (LPT deal order);
+    /// ties keep schedule order
+    pub lpt_order: Vec<usize>,
+}
+
+impl ExecPlan {
+    /// Partition `ds` and lay out the pair jobs with their cost estimates.
+    pub fn new(ds: &Dataset, parts: usize, strategy: PartitionStrategy, seed: u64) -> Self {
+        let part_ids = partition_indices(ds, parts, strategy, seed);
+        let jobs: Vec<PairJob> = if parts == 1 {
+            vec![PairJob { id: 0, i: 0, j: 0 }]
+        } else {
+            PairSchedule::new(parts).jobs
+        };
+        let costs: Vec<u64> = jobs.iter().map(|j| job_cost(&part_ids, j)).collect();
+        let mut lpt_order: Vec<usize> = (0..jobs.len()).collect();
+        lpt_order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then(a.cmp(&b)));
+        Self { parts: part_ids, jobs, lpt_order }
+    }
+
+    /// Number of pair jobs (≥ 1; the degenerate single-subset job counts).
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// The cost estimate used to deal `job`: `|S_i|·|S_j|` — the size of the
+    /// bipartite distance block, which dominates both pair kernels' work.
+    pub fn job_cost(&self, job: &PairJob) -> u64 {
+        job_cost(&self.parts, job)
+    }
+
+    /// Sizes of the partition subsets.
+    pub fn part_sizes(&self) -> Vec<usize> {
+        self.parts.iter().map(|p| p.len()).collect()
+    }
+}
+
+fn job_cost(parts: &[Vec<u32>], job: &PairJob) -> u64 {
+    let si = parts[job.i as usize].len() as u64;
+    if job.i == job.j {
+        si * si
+    } else {
+        si * parts[job.j as usize].len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generators::uniform;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn degenerate_single_part_has_one_self_job() {
+        let ds = uniform(20, 3, 1.0, Pcg64::seeded(1));
+        let plan = ExecPlan::new(&ds, 1, PartitionStrategy::Block, 0);
+        assert_eq!(plan.n_jobs(), 1);
+        assert_eq!((plan.jobs[0].i, plan.jobs[0].j), (0, 0));
+        assert_eq!(plan.job_cost(&plan.jobs[0]), 400);
+    }
+
+    #[test]
+    fn lpt_order_is_cost_descending_and_complete() {
+        let ds = uniform(50, 2, 1.0, Pcg64::seeded(2));
+        let plan = ExecPlan::new(&ds, 5, PartitionStrategy::Block, 0);
+        assert_eq!(plan.n_jobs(), 10);
+        assert_eq!(plan.lpt_order.len(), 10);
+        let mut seen = vec![false; 10];
+        let mut prev = u64::MAX;
+        for &k in &plan.lpt_order {
+            assert!(!seen[k], "job {k} dealt twice");
+            seen[k] = true;
+            let c = plan.job_cost(&plan.jobs[k]);
+            assert!(c <= prev, "not cost-descending");
+            prev = c;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn cost_ties_keep_schedule_order() {
+        // Block partition of 40 into 4 equal subsets: all 6 pair costs equal,
+        // so the LPT order must fall back to schedule (id) order.
+        let ds = uniform(40, 2, 1.0, Pcg64::seeded(3));
+        let plan = ExecPlan::new(&ds, 4, PartitionStrategy::Block, 0);
+        assert_eq!(plan.lpt_order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn parts_are_sorted_and_partition_everything() {
+        let ds = uniform(33, 2, 1.0, Pcg64::seeded(4));
+        let plan = ExecPlan::new(&ds, 4, PartitionStrategy::RandomShuffle, 7);
+        let mut all: Vec<u32> = plan.parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..33).collect::<Vec<u32>>());
+        for p in &plan.parts {
+            assert!(p.windows(2).all(|w| w[0] < w[1]), "subset sorted");
+        }
+    }
+}

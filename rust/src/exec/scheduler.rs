@@ -1,0 +1,88 @@
+//! Cost-aware job dealing: a lock-free central queue that workers pull from.
+//!
+//! Jobs are enqueued in LPT (longest-processing-time-first) order by the
+//! plan's `|S_i|·|S_j|` cost estimate; each idle worker atomically claims the
+//! next-heaviest unclaimed job. This is the classical self-scheduling /
+//! work-stealing-from-one-deck arrangement: the deal adapts to observed
+//! speed (a slow worker simply claims fewer jobs), replacing the fixed
+//! round-robin deal that pinned jobs to ranks regardless of load.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// A shared, immutable job order with an atomic claim cursor.
+#[derive(Debug)]
+pub struct JobQueue {
+    order: Vec<usize>,
+    next: AtomicUsize,
+}
+
+impl JobQueue {
+    /// Queue over `order` (typically [`ExecPlan::lpt_order`]). Each element
+    /// is handed out exactly once across all threads.
+    ///
+    /// [`ExecPlan::lpt_order`]: crate::exec::ExecPlan
+    pub fn new(order: Vec<usize>) -> Self {
+        Self { order, next: AtomicUsize::new(0) }
+    }
+
+    /// Claim the next unclaimed job index, or `None` when drained.
+    pub fn pop(&self) -> Option<usize> {
+        let k = self.next.fetch_add(1, Ordering::Relaxed);
+        self.order.get(k).copied()
+    }
+
+    /// Total jobs in the queue (claimed or not).
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    #[test]
+    fn pops_in_order_then_drains() {
+        let q = JobQueue::new(vec![4, 2, 7]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None, "stays drained");
+    }
+
+    #[test]
+    fn empty_queue() {
+        let q = JobQueue::new(Vec::new());
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn concurrent_claims_are_exactly_once() {
+        let q = JobQueue::new((0..500).collect());
+        let claimed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    while let Some(j) = q.pop() {
+                        local.push(j);
+                    }
+                    claimed.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let got = claimed.into_inner().unwrap();
+        assert_eq!(got.len(), 500);
+        let distinct: HashSet<usize> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 500, "every job claimed exactly once");
+    }
+}

@@ -18,9 +18,19 @@
 //! (`cargo build --release` just works, offline). Three layers; Python is
 //! never on the request path:
 //!
-//! - **L3 (this crate)** — coordinator: partitioners, pair scheduling, a
-//!   thread-per-rank worker pool with a simulated network (byte-accounted),
-//!   gather + sparse MST, dendrogram construction, CLI/config/metrics.
+//! - **L3 (this crate)** — the [`exec`] pair-job engine plus its two thin
+//!   front-ends: `decomp::decomposed_mst` (serial reference) and
+//!   `coordinator::run_distributed` (thread-per-rank workers over a
+//!   simulated, byte-accounted network). The engine owns
+//!   partition → schedule → solve → reduce once: an [`exec::ExecPlan`]
+//!   with `|S_i|·|S_j|` job costs, a cost-LPT queue with idle stealing,
+//!   two selectable pair kernels — the **dense** oracle (full d-MST per
+//!   gathered union) and the **bipartite-merge** kernel (each partition's
+//!   local MST cached once, pair jobs solved by filtered Prim over
+//!   `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`, exactly `n(n-1)/2`
+//!   distance evaluations per run) — and gather-side reduction, optionally
+//!   streaming (`⊕`-folding each arriving tree into a bounded running
+//!   MSF). Plus partitioners, dendrogram construction, CLI/config/metrics.
 //! - **compute backends ([`runtime`])** — kernels are selected through the
 //!   [`runtime::ComputeBackend`] abstraction:
 //!   - the default, always-available **Rust backend**: metric-generic
@@ -64,6 +74,7 @@ pub mod graph;
 pub mod mst;
 pub mod dense;
 pub mod slink;
+pub mod exec;
 pub mod decomp;
 pub mod coordinator;
 pub mod runtime;

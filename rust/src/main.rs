@@ -1,22 +1,25 @@
 //! `demst` — launcher CLI for the distributed EMST / single-linkage system.
 //!
 //! Subcommands:
-//!   run       distributed EMST + optional dendrogram on a dataset
-//!   gen       generate a synthetic dataset to .npy
-//!   info      inspect an artifact directory
-//!   selftest  quick end-to-end correctness check (all kernels available)
+//!   run         distributed EMST + optional dendrogram on a dataset
+//!   dendrogram  decomposed MST → single-linkage dendrogram → CSV outputs
+//!   gen         generate a synthetic dataset to .npy
+//!   info        inspect an artifact directory
+//!   selftest    quick end-to-end correctness check (all kernels available)
 //!
 //! Examples:
 //!   demst run --data embedding --n 2048 --d 128 --parts 6 --workers 4 --verify
 //!   demst run --config examples/configs/embedding.toml --kernel xla
+//!   demst run --pair-kernel bipartite --stream-reduce --n 4096 --parts 8
+//!   demst dendrogram --data blobs --n 1000 --d 32 --out-merges merges.csv
 //!   demst gen --kind blobs --n 1000 --d 64 --out /tmp/blobs.npy
 //!   demst info --artifacts artifacts
 
 use anyhow::{bail, Context, Result};
 use demst::cli::{parse_args, Args, OptSpec};
 use demst::config::run_config::build_dataset;
-use demst::config::{KernelChoice, RunConfig};
-use demst::coordinator::run_distributed;
+use demst::config::{KernelChoice, PairKernelChoice, RunConfig};
+use demst::coordinator::{run_distributed, RunMetrics};
 use demst::decomp::PartitionStrategy;
 use demst::geometry::MetricKind;
 use demst::report::Table;
@@ -43,6 +46,7 @@ fn real_main(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "dendrogram" => cmd_dendrogram(rest),
         "gen" => cmd_gen(rest),
         "info" => cmd_info(rest),
         "selftest" => cmd_selftest(rest),
@@ -58,12 +62,13 @@ fn print_help() {
     println!(
         "demst — distributed Euclidean-MST / single-linkage dendrograms via distance decomposition
 
-USAGE: demst <run|gen|info|selftest|help> [options]
+USAGE: demst <run|dendrogram|gen|info|selftest|help> [options]
 
-run       distributed EMST (+ dendrogram) on a generated or .npy dataset
-gen       write a synthetic dataset to .npy
-info      list AOT artifacts and check they compile
-selftest  quick correctness check across kernels
+run         distributed EMST (+ dendrogram) on a generated or .npy dataset
+dendrogram  decomposed MST -> dendrogram; write merge heights and cluster labels as CSV
+gen         write a synthetic dataset to .npy
+info        list AOT artifacts and check they compile
+selftest    quick correctness check across kernels
 "
     );
 }
@@ -81,9 +86,11 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "strategy", takes_value: true, help: "block|round-robin|random|kmeans-lite" },
         OptSpec { name: "metric", takes_value: true, help: "sqeuclid|euclid|cosine|manhattan" },
         OptSpec { name: "kernel", takes_value: true, help: "prim-dense|boruvka-rust|boruvka-xla" },
+        OptSpec { name: "pair-kernel", takes_value: true, help: "dense|bipartite-merge pair-job kernel" },
         OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
+        OptSpec { name: "stream-reduce", takes_value: false, help: "fold trees into a bounded running MSF at the leader" },
         OptSpec { name: "simulate-net", takes_value: false, help: "sleep for modeled latency/bandwidth" },
         OptSpec { name: "verify", takes_value: false, help: "check result against SLINK oracle (O(n^2))" },
         OptSpec { name: "k", takes_value: true, help: "also cut dendrogram into k flat clusters" },
@@ -132,11 +139,18 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("kernel") {
         cfg.kernel = KernelChoice::parse(v).with_context(|| format!("unknown kernel {v:?}"))?;
     }
+    if let Some(v) = args.get("pair-kernel") {
+        cfg.pair_kernel =
+            PairKernelChoice::parse(v).with_context(|| format!("unknown pair kernel {v:?}"))?;
+    }
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
     }
     if args.has_flag("reduce-tree") {
         cfg.reduce_tree = true;
+    }
+    if args.has_flag("stream-reduce") {
+        cfg.stream_reduce = true;
     }
     if args.has_flag("simulate-net") {
         cfg.net.simulate_delays = true;
@@ -172,18 +186,10 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     }
     println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
     println!("metrics: {}", out.metrics.summary());
+    print_phases_and_workers(&out.metrics);
 
     if cfg.verify {
-        let metric = demst::geometry::metric::PlainMetric(cfg.metric);
-        let oracle = demst::slink::slink_mst(&ds, &metric);
-        let (a, b) =
-            (demst::mst::total_weight(&oracle), demst::mst::total_weight(&out.mst));
-        // 1e-4 relative: the blocked kernels compute Gram-form distances,
-        // which differ from the scalar SLINK oracle by float rounding.
-        if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
-            bail!("VERIFY FAILED: slink oracle weight {a} != distributed weight {b}");
-        }
-        println!("verify: OK (slink oracle weight matches: {a:.6})");
+        verify_against_slink(&ds, cfg.metric, &out.mst)?;
     }
 
     let dendro = mst_to_dendrogram(ds.n, &out.mst);
@@ -228,12 +234,129 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     }
 
     if let Some(path) = args.get("out-mst") {
-        let mut t = Table::new("", &["u", "v", "weight"]);
-        for e in &out.mst {
-            t.push_row(&[e.u.to_string(), e.v.to_string(), format!("{}", e.w)]);
+        write_mst_csv(path, &out.mst)?;
+    }
+    Ok(())
+}
+
+/// Check the computed MSF's total weight against the independent `O(n²)`
+/// SLINK oracle. 1e-4 relative: the blocked kernels compute Gram-form
+/// distances, which differ from the scalar SLINK oracle by float rounding.
+fn verify_against_slink(
+    ds: &demst::data::Dataset,
+    metric: MetricKind,
+    mst: &[demst::graph::Edge],
+) -> Result<()> {
+    let metric = demst::geometry::metric::PlainMetric(metric);
+    let oracle = demst::slink::slink_mst(ds, &metric);
+    let (a, b) = (demst::mst::total_weight(&oracle), demst::mst::total_weight(mst));
+    if (a - b).abs() > 1e-4 * (1.0 + a.abs()) {
+        bail!("VERIFY FAILED: slink oracle weight {a} != distributed weight {b}");
+    }
+    println!("verify: OK (slink oracle weight matches: {a:.6})");
+    Ok(())
+}
+
+fn write_mst_csv(path: &str, mst: &[demst::graph::Edge]) -> Result<()> {
+    let mut t = Table::new("", &["u", "v", "weight"]);
+    for e in mst {
+        t.push_row(&[e.u.to_string(), e.v.to_string(), format!("{}", e.w)]);
+    }
+    t.write_csv(std::path::Path::new(path))?;
+    println!("mst written to {path}");
+    Ok(())
+}
+
+/// Per-phase timings + per-worker busy utilization, so scheduler skew is
+/// visible straight from the CLI.
+fn print_phases_and_workers(m: &RunMetrics) {
+    println!("phases: {}", m.phase_summary());
+    if m.worker_busy.is_empty() {
+        return;
+    }
+    let wall = m.wall.as_secs_f64().max(1e-9);
+    let per_worker = m
+        .worker_busy
+        .iter()
+        .enumerate()
+        .map(|(w, b)| format!("w{w} {:.0}% ({:.1?})", 100.0 * b.as_secs_f64() / wall, b))
+        .collect::<Vec<_>>()
+        .join("  ");
+    println!(
+        "workers: {per_worker}  | busy efficiency {:.2}, imbalance {:.2}",
+        m.busy_efficiency(),
+        m.imbalance()
+    );
+}
+
+fn cmd_dendrogram(argv: &[String]) -> Result<()> {
+    let mut specs = run_specs();
+    specs.push(OptSpec {
+        name: "out-merges",
+        takes_value: true,
+        help: "write dendrogram merges (a, b, height, size) as CSV (required)",
+    });
+    specs.push(OptSpec {
+        name: "out-stable",
+        takes_value: true,
+        help: "write HDBSCAN-style stable-cluster labels as CSV (needs --min-cluster-size)",
+    });
+    let args = parse_args(argv, &specs)?;
+    let cfg = build_run_config(&args)?;
+    let merges_path = args.get("out-merges").context("--out-merges is required")?;
+
+    let (ds, _) = build_dataset(&cfg)?;
+    let out = run_distributed(&ds, &cfg)?;
+    if cfg.verify {
+        verify_against_slink(&ds, cfg.metric, &out.mst)?;
+    }
+    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    println!(
+        "dendrogram: n={} merges={} (kernel={}, pair_kernel={})",
+        ds.n,
+        dendro.merges.len(),
+        out.metrics.kernel,
+        out.metrics.pair_kernel
+    );
+
+    let mut t = Table::new("", &["cluster_a", "cluster_b", "height", "size"]);
+    for m in &dendro.merges {
+        let height = format!("{}", m.height);
+        t.push_row(&[m.a.to_string(), m.b.to_string(), height, m.size.to_string()]);
+    }
+    t.write_csv(std::path::Path::new(merges_path))?;
+    println!("merges written to {merges_path}");
+
+    if let Some(k) = args.get_parse::<usize>("k")? {
+        let labels = dendro.cut_to_k(k);
+        println!("flat clustering k={k}: sizes {:?}", cluster_sizes(&labels));
+        if let Some(path) = args.get("out-labels") {
+            let mut t = Table::new("", &["index", "label"]);
+            for (i, l) in labels.iter().enumerate() {
+                t.push_row(&[i.to_string(), l.to_string()]);
+            }
+            t.write_csv(std::path::Path::new(path))?;
+            println!("labels written to {path}");
         }
-        t.write_csv(std::path::Path::new(path))?;
-        println!("mst written to {path}");
+    }
+
+    if let Some(mcs) = args.get_parse::<usize>("min-cluster-size")? {
+        let stable = demst::slink::extract_stable_clusters(&dendro, mcs);
+        let k = stable.stabilities.len();
+        let noise = stable.labels.iter().filter(|&&l| l == demst::slink::NOISE).count();
+        println!("stable clusters (min size {mcs}): {k} clusters, {noise} noise points");
+        if let Some(path) = args.get("out-stable") {
+            let mut t = Table::new("", &["index", "label"]);
+            for (i, &l) in stable.labels.iter().enumerate() {
+                let label = if l == demst::slink::NOISE { "-1".into() } else { l.to_string() };
+                t.push_row(&[i.to_string(), label]);
+            }
+            t.write_csv(std::path::Path::new(path))?;
+            println!("stable labels written to {path}");
+        }
+    }
+    if let Some(path) = args.get("out-mst") {
+        write_mst_csv(path, &out.mst)?;
     }
     Ok(())
 }

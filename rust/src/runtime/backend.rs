@@ -156,9 +156,24 @@ pub fn artifacts_available(artifacts_dir: &Path) -> bool {
 }
 
 /// The fallback note for a config, if its kernel request cannot be honored
-/// by this build. Pure function of (config, compiled features) so the
-/// leader can report it without asking workers.
+/// by this build **or** by the selected pair kernel. Pure function of
+/// (config, compiled features) so the leader can report it without asking
+/// workers.
 pub fn kernel_fallback_note(cfg: &RunConfig) -> Option<String> {
+    if cfg.pair_kernel == crate::config::PairKernelChoice::BipartiteMerge {
+        // The bipartite-merge pair kernel always runs the blocked Rust
+        // local/bipartite kernels; an explicit XLA request would otherwise
+        // be dropped silently.
+        if cfg.kernel == KernelChoice::BoruvkaXla {
+            return Some(
+                "pair_kernel bipartite-merge runs the blocked Rust kernels; the requested \
+                 boruvka-xla d-MST kernel is not used (select pair_kernel dense to execute \
+                 XLA artifacts)"
+                    .to_string(),
+            );
+        }
+        return None;
+    }
     if cfg.kernel == KernelChoice::BoruvkaXla && !backend_xla_compiled() {
         Some(
             "backend-xla not compiled into this build; boruvka-xla fell back to \
@@ -176,6 +191,19 @@ pub fn resolved_kernel_name(cfg: &RunConfig) -> &'static str {
         KernelChoice::BoruvkaRust.name()
     } else {
         cfg.kernel.name()
+    }
+}
+
+/// The kernel label the exec engine reports in `RunMetrics::kernel`,
+/// covering both pair-kernel families: the dense path resolves through the
+/// backend (with fallback), the bipartite-merge path always runs the
+/// blocked-Prim local/bipartite kernels of the Rust backend.
+pub fn exec_kernel_label(cfg: &RunConfig) -> String {
+    match cfg.pair_kernel {
+        crate::config::PairKernelChoice::Dense => resolved_kernel_name(cfg).to_string(),
+        crate::config::PairKernelChoice::BipartiteMerge => {
+            format!("bipartite-merge[prim-blocked/{}]", cfg.metric.name())
+        }
     }
 }
 
@@ -260,6 +288,27 @@ mod tests {
             assert!(note.contains("backend-xla"), "{note}");
             assert_eq!(resolved_kernel_name(&cfg), "boruvka-rust");
         }
+    }
+
+    #[test]
+    fn exec_kernel_label_covers_both_pair_kernels() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(exec_kernel_label(&cfg), "boruvka-rust");
+        cfg.pair_kernel = crate::config::PairKernelChoice::BipartiteMerge;
+        let label = exec_kernel_label(&cfg);
+        assert!(label.starts_with("bipartite-merge"), "{label}");
+        assert!(label.contains("sqeuclid"), "{label}");
+    }
+
+    #[test]
+    fn bipartite_merge_notes_ignored_xla_kernel_request() {
+        let mut cfg = RunConfig::default();
+        cfg.pair_kernel = crate::config::PairKernelChoice::BipartiteMerge;
+        assert!(kernel_fallback_note(&cfg).is_none(), "rust kernels: nothing to report");
+        cfg.kernel = KernelChoice::BoruvkaXla;
+        let note = kernel_fallback_note(&cfg).expect("explicit xla request must be flagged");
+        assert!(note.contains("bipartite-merge"), "{note}");
+        assert!(note.contains("boruvka-xla"), "{note}");
     }
 
     #[test]

@@ -36,8 +36,8 @@ pub mod cheapest_edge;
 pub mod pairwise;
 
 pub use backend::{
-    artifacts_available, backend_xla_compiled, build_dense_kernel, kernel_fallback_note,
-    resolved_kernel_name, BackendKind, ComputeBackend, RustBackend,
+    artifacts_available, backend_xla_compiled, build_dense_kernel, exec_kernel_label,
+    kernel_fallback_note, resolved_kernel_name, BackendKind, ComputeBackend, RustBackend,
 };
 pub use manifest::{Artifact, Manifest};
 

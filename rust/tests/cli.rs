@@ -18,9 +18,69 @@ fn help_lists_subcommands() {
     let out = demst().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["run", "gen", "info", "selftest"] {
+    for cmd in ["run", "dendrogram", "gen", "info", "selftest"] {
         assert!(text.contains(cmd), "help mentions {cmd}");
     }
+}
+
+#[test]
+fn dendrogram_subcommand_writes_merges_and_stable_labels() {
+    let merges_csv = tmpdir().join("dendro_merges.csv");
+    let stable_csv = tmpdir().join("dendro_stable.csv");
+    let labels_csv = tmpdir().join("dendro_k_labels.csv");
+    let out = demst()
+        .args([
+            "dendrogram", "--data", "blobs", "--n", "90", "--d", "6", "--clusters", "3",
+            "--parts", "3", "--pair-kernel", "bipartite-merge", "--k", "3",
+            "--min-cluster-size", "5", "--verify",
+        ])
+        .arg("--out-merges")
+        .arg(&merges_csv)
+        .arg("--out-labels")
+        .arg(&labels_csv)
+        .arg("--out-stable")
+        .arg(&stable_csv)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+    assert!(stdout.contains("merges written to"), "{stdout}");
+    assert!(stdout.contains("stable clusters"), "{stdout}");
+    let merges = std::fs::read_to_string(&merges_csv).unwrap();
+    assert_eq!(merges.lines().count(), 90, "header + 89 merges");
+    assert!(merges.starts_with("cluster_a,cluster_b,height,size"), "{merges}");
+    let labels = std::fs::read_to_string(&labels_csv).unwrap();
+    assert_eq!(labels.lines().count(), 91, "header + 90 labels");
+    let stable = std::fs::read_to_string(&stable_csv).unwrap();
+    assert_eq!(stable.lines().count(), 91, "header + 90 stable labels");
+}
+
+#[test]
+fn dendrogram_requires_out_merges() {
+    let out =
+        demst().args(["dendrogram", "--data", "blobs", "--n", "40", "--d", "4"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("out-merges"), "{err}");
+}
+
+#[test]
+fn run_bipartite_stream_reduce_end_to_end() {
+    let out = demst()
+        .args([
+            "run", "--data", "blobs", "--n", "100", "--d", "8", "--parts", "4",
+            "--pair-kernel", "bipartite", "--stream-reduce", "--verify",
+        ])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("verify: OK"), "{stdout}");
+    assert!(stdout.contains("pair_kernel=bipartite-merge"), "{stdout}");
+    assert!(stdout.contains("stream_reduce"), "{stdout}");
+    assert!(stdout.contains("phases:"), "{stdout}");
+    assert!(stdout.contains("workers:"), "{stdout}");
 }
 
 #[test]

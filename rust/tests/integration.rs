@@ -228,6 +228,63 @@ fn cosine_metric_pipeline() {
     assert!((a - b).abs() < 1e-5 * (1.0 + a.abs()), "cosine: slink={a} dist={b}");
 }
 
+#[test]
+fn bipartite_pair_kernel_exact_across_metrics_with_fewer_evals() {
+    // Acceptance bar for the bipartite-merge kernel: identical MSF as the
+    // dense pair kernel AND the scalar-Prim oracle on sq-Euclid, cosine,
+    // and Manhattan; strictly fewer distance evaluations than the dense
+    // pair path for |P| >= 3 (the cycle-property filter computes each
+    // subset's internal structure once instead of |P|-1 times).
+    use demst::config::PairKernelChoice;
+    use demst::dense::PrimScalar;
+
+    // integer coordinates: every arithmetic path is float-exact
+    let mut rng = Pcg64::seeded(2000);
+    let (n, d) = (96, 6);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_bounded(31) as f32 - 15.0).collect();
+    let ds = Dataset::new(n, d, data);
+
+    for metric in [MetricKind::SqEuclid, MetricKind::Cosine, MetricKind::Manhattan] {
+        let oracle = PrimScalar::new(metric).mst(&ds);
+        for parts in [2usize, 3, 4, 6] {
+            let mut cfg = RunConfig {
+                parts,
+                workers: 2,
+                kernel: KernelChoice::PrimDense,
+                metric,
+                ..Default::default()
+            };
+            let dense = run_distributed(&ds, &cfg).unwrap();
+            cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+            let bip = run_distributed(&ds, &cfg).unwrap();
+            assert_eq!(
+                normalize_tree(&oracle),
+                normalize_tree(&bip.mst),
+                "{metric:?} parts={parts}: bipartite vs scalar oracle"
+            );
+            assert_eq!(
+                normalize_tree(&dense.mst),
+                normalize_tree(&bip.mst),
+                "{metric:?} parts={parts}: bipartite vs dense pair kernel"
+            );
+            let nn = ds.n as u64;
+            assert_eq!(
+                bip.metrics.dist_evals,
+                nn * (nn - 1) / 2,
+                "{metric:?} parts={parts}: bipartite run costs exactly C(n,2) evals"
+            );
+            if parts >= 3 {
+                assert!(
+                    bip.metrics.dist_evals < dense.metrics.dist_evals,
+                    "{metric:?} parts={parts}: {} !< {}",
+                    bip.metrics.dist_evals,
+                    dense.metrics.dist_evals
+                );
+            }
+        }
+    }
+}
+
 /// Same partition up to label renaming.
 fn same_partition(a: &[u32], b: &[u32]) -> bool {
     use std::collections::HashMap;

@@ -141,6 +141,81 @@ fn prop_dense_boruvka_equals_dense_prim() {
 }
 
 #[test]
+fn prop_exec_paths_and_pair_kernels_agree() {
+    // The one engine, every route: serial dense decomp, pooled dense,
+    // pooled bipartite-merge, and streamed-reduction runs must all produce
+    // the identical MSF (edge set AND total weight) as the scalar-Prim
+    // oracle, across metrics, partition strategies, and worker counts.
+    use demst::config::{KernelChoice, PairKernelChoice, RunConfig};
+    use demst::coordinator::run_distributed;
+    use demst::dense::PrimScalar;
+    use demst::mst::total_weight;
+
+    Runner::new("exec paths agree", 0xAA, 12).run(|g| {
+        let n = g.usize_in(8..56);
+        let d = g.usize_in(1..7);
+        let ds = int_points(g, n, d);
+        // all four kinds, including Euclid's sqrt-at-emission path (int
+        // coords this small have collision-free f32 sqrts, so the scalar
+        // oracle still matches bit-for-bit)
+        let metric = match g.usize_in(0..4) {
+            0 => MetricKind::SqEuclid,
+            1 => MetricKind::Euclid,
+            2 => MetricKind::Cosine,
+            _ => MetricKind::Manhattan,
+        };
+        let strategy = match g.usize_in(0..4) {
+            0 => PartitionStrategy::Block,
+            1 => PartitionStrategy::RoundRobin,
+            2 => PartitionStrategy::RandomShuffle,
+            _ => PartitionStrategy::KMeansLite,
+        };
+        let parts = g.usize_in(1..(n / 2).max(2).min(7));
+        let seed = g.rng().next_u64();
+
+        let oracle = PrimScalar::new(metric).mst(&ds);
+        let expect = normalize_tree(&oracle);
+        let expect_w = total_weight(&oracle);
+
+        let serial = decomposed_mst(
+            &ds,
+            &DecompConfig { parts, strategy, seed, keep_pair_trees: false },
+            &demst::dense::PrimDense::new(metric),
+        );
+        assert_eq!(expect, normalize_tree(&serial.mst), "serial {metric:?} {strategy:?}");
+
+        let mut cfg = RunConfig {
+            parts,
+            strategy,
+            seed,
+            metric,
+            workers: g.usize_in(1..4),
+            kernel: KernelChoice::PrimDense,
+            ..Default::default()
+        };
+        let pooled = run_distributed(&ds, &cfg).unwrap();
+        assert_eq!(expect, normalize_tree(&pooled.mst), "pooled-dense {metric:?}");
+
+        cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+        cfg.stream_reduce = g.bool_p(0.5);
+        cfg.reduce_tree = g.bool_p(0.3);
+        let bip = run_distributed(&ds, &cfg).unwrap();
+        assert_eq!(
+            expect,
+            normalize_tree(&bip.mst),
+            "pooled-bipartite {metric:?} stream={} reduce={}",
+            cfg.stream_reduce,
+            cfg.reduce_tree
+        );
+        let got_w = total_weight(&bip.mst);
+        assert!(
+            (expect_w - got_w).abs() <= 1e-9 * (1.0 + expect_w.abs()),
+            "weights: {expect_w} vs {got_w}"
+        );
+    });
+}
+
+#[test]
 fn prop_union_find_laws() {
     Runner::new("union-find", 0xA5, 50).run(|g| {
         let n = g.usize_in(1..200);
