@@ -1,7 +1,7 @@
 # Convenience targets. The Rust build needs no artifacts; `make artifacts`
 # requires a python environment with jax (the AOT layer is optional).
 
-.PHONY: build test artifacts artifacts-quick bench-fast fmt
+.PHONY: build test artifacts artifacts-quick bench bench-fast fmt
 
 build:
 	cargo build --release
@@ -16,6 +16,14 @@ artifacts:
 
 artifacts-quick:
 	cd python && python -m compile.aot --out-dir ../artifacts --quick
+
+# Run both recorded bench binaries (fast shapes) and verify no bench
+# section disappeared from the BENCH_e7/e8 JSON schemas. CI runs the same
+# sequence in the bench-smoke job.
+bench:
+	DEMST_BENCH_FAST=1 cargo bench --bench e7_kernel
+	DEMST_BENCH_FAST=1 cargo bench --bench e8_end_to_end
+	python3 scripts/check_bench_schema.py BENCH_e7.json BENCH_e8.json
 
 # Quick benchmark sweep (reduced shapes/samples); e7 writes BENCH_e7.json.
 bench-fast:

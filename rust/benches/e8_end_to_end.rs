@@ -4,12 +4,16 @@
 //! (which is the full-size driver recorded in EXPERIMENTS.md).
 //!
 //! Also records the dense-pair-kernel vs bipartite-merge-kernel ablation
-//! (wall, distance evals, per-phase split) and writes `BENCH_e8.json`
-//! (override the path with `DEMST_BENCH_OUT`).
+//! (wall, distance evals, per-phase split) and the stream-reduce fold
+//! micro-bench (re-sorting Kruskal folds vs the incremental merge-join
+//! reducer, folds/sec + fold cost), and writes `BENCH_e8.json` (override
+//! the path with `DEMST_BENCH_OUT`).
 
 use demst::config::{KernelChoice, PairKernelChoice, RunConfig};
 use demst::coordinator::run_distributed;
 use demst::data::generators::{embedding_like, EmbeddingSpec};
+use demst::decomp::reduction::{tree_merge, StreamReducer};
+use demst::decomp::{decomposed_mst, DecompConfig};
 use demst::dense::{DenseMst, PrimDense};
 use demst::geometry::metric::PlainMetric;
 use demst::geometry::MetricKind;
@@ -17,6 +21,7 @@ use demst::mst::total_weight;
 use demst::report::Table;
 use demst::slink::{mst_to_dendrogram, slink};
 use demst::util::prng::Pcg64;
+use std::time::Instant;
 
 fn main() {
     let fast = std::env::var("DEMST_BENCH_FAST").as_deref() == Ok("1");
@@ -132,13 +137,108 @@ fn main() {
             local_mst_ms: run.metrics.phase_local_mst.as_secs_f64() * 1e3,
             pair_ms: run.metrics.phase_pair.as_secs_f64() * 1e3,
             reduce_ms: run.metrics.phase_reduce.as_secs_f64() * 1e3,
+            scatter_saved_bytes: run.metrics.scatter_saved_bytes,
+            panel_hit_rate: run.metrics.panel_hit_rate(),
             speedup,
         });
     }
     t2.print();
 
+    // ------------- stream-reduce fold micro-bench: re-sort vs merge-join.
+    // Folding the same |P|(|P|-1)/2 pair trees repeatedly; the baseline is
+    // the pre-incremental reducer (a full Kruskal — i.e. a re-sort of
+    // forest ∪ tree — per push), the contender the presorted merge-join
+    // StreamReducer.
+    let trees = decomposed_mst(
+        &ds,
+        &DecompConfig { parts, keep_pair_trees: true, ..Default::default() },
+        &PrimDense::sq_euclid(),
+    )
+    .pair_trees;
+    let rounds = if fast { 15usize } else { 40 };
+    let folds_per_round = trees.len();
+
+    let t0 = Instant::now();
+    let mut resort_forest = Vec::new();
+    for _ in 0..rounds {
+        resort_forest = Vec::new();
+        for t in &trees {
+            resort_forest = tree_merge(ds.n, &resort_forest, t);
+        }
+    }
+    let resort_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t1 = Instant::now();
+    let mut merge_forest = Vec::new();
+    let mut fold_edges = 0u64;
+    for _ in 0..rounds {
+        let mut r = StreamReducer::new(ds.n);
+        for t in &trees {
+            r.push(t);
+        }
+        fold_edges = r.fold_edges;
+        merge_forest = r.finish();
+    }
+    let merge_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(
+        demst::mst::normalize_tree(&exact),
+        demst::mst::normalize_tree(&merge_forest),
+        "merge-join reducer must stay exact"
+    );
+    assert_eq!(
+        demst::mst::normalize_tree(&resort_forest),
+        demst::mst::normalize_tree(&merge_forest),
+        "both fold strategies agree"
+    );
+    // Acceptance witness: the incremental reducer performs no full re-sort —
+    // every fold scans at most |forest| + |tree| ≤ 2(|V|-1) edges.
+    assert!(
+        fold_edges <= folds_per_round as u64 * 2 * (ds.n as u64 - 1),
+        "fold cost {fold_edges} exceeds the O(|V|)-per-fold bound"
+    );
+
+    let total_folds = (rounds * folds_per_round) as f64;
+    let resort_fps = total_folds / (resort_ms / 1e3).max(1e-9);
+    let merge_fps = total_folds / (merge_ms / 1e3).max(1e-9);
+    let mut t3 = Table::new(
+        format!("E8c stream-reduce folds ({} trees x {rounds} rounds)", folds_per_round),
+        &["fold strategy", "ms", "folds/s", "fold edges/round", "vs resort"],
+    );
+    t3.push_row(&[
+        "resort-kruskal".into(),
+        format!("{resort_ms:.1}"),
+        format!("{resort_fps:.0}"),
+        "-".into(),
+        "-".into(),
+    ]);
+    t3.push_row(&[
+        "merge-join".into(),
+        format!("{merge_ms:.1}"),
+        format!("{merge_fps:.0}"),
+        fold_edges.to_string(),
+        format!("{:.2}x", resort_ms / merge_ms.max(1e-9)),
+    ]);
+    t3.print();
+    let stream_rows = vec![
+        StreamRow {
+            provider: "resort-kruskal",
+            ms: resort_ms,
+            folds_per_sec: resort_fps,
+            fold_edges: None,
+            speedup: None,
+        },
+        StreamRow {
+            provider: "merge-join",
+            ms: merge_ms,
+            folds_per_sec: merge_fps,
+            fold_edges: Some(fold_edges),
+            speedup: Some(resort_ms / merge_ms.max(1e-9)),
+        },
+    ];
+
     let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e8.json".into());
-    match std::fs::write(&out_path, to_json(&rows, n, d, parts, fast)) {
+    match std::fs::write(&out_path, to_json(&rows, &stream_rows, n, d, parts, fast)) {
         Ok(()) => println!("E8: wrote {out_path}"),
         Err(e) => eprintln!("E8: could not write {out_path}: {e}"),
     }
@@ -153,33 +253,57 @@ struct JsonRow {
     local_mst_ms: f64,
     pair_ms: f64,
     reduce_ms: f64,
+    scatter_saved_bytes: u64,
+    panel_hit_rate: f64,
+    speedup: Option<f64>,
+}
+
+struct StreamRow {
+    provider: &'static str,
+    ms: f64,
+    folds_per_sec: f64,
+    fold_edges: Option<u64>,
     speedup: Option<f64>,
 }
 
 /// Hand-rolled JSON (no serde in the offline vendor set).
-fn to_json(rows: &[JsonRow], n: usize, d: usize, parts: usize, fast: bool) -> String {
+fn to_json(
+    rows: &[JsonRow],
+    stream_rows: &[StreamRow],
+    n: usize,
+    d: usize,
+    parts: usize,
+    fast: bool,
+) -> String {
     let mut s = String::from("{\n");
     s.push_str("  \"bench\": \"e8_end_to_end\",\n");
     s.push_str(&format!("  \"fast_mode\": {fast},\n"));
     s.push_str(&format!("  \"shape\": {{\"n\": {n}, \"d\": {d}, \"parts\": {parts}}},\n"));
     s.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
+    // collect-then-join so the separator stays correct no matter which
+    // sections a future edit drops or reorders
+    let mut row_strs: Vec<String> = Vec::new();
+    for r in rows {
         let speedup = r.speedup.map_or("null".to_string(), |v| format!("{v:.4}"));
-        s.push_str(&format!(
+        row_strs.push(format!(
             "    {{\"section\": \"{}\", \"provider\": \"{}\", \"ms\": {:.4}, \
              \"dist_evals\": {}, \"local_mst_ms\": {:.4}, \"pair_ms\": {:.4}, \
-             \"reduce_ms\": {:.4}, \"speedup_vs_dense\": {}}}{}\n",
-            r.section,
-            r.provider,
-            r.ms,
-            r.dist_evals,
-            r.local_mst_ms,
-            r.pair_ms,
-            r.reduce_ms,
-            speedup,
-            if i + 1 < rows.len() { "," } else { "" }
+             \"reduce_ms\": {:.4}, \"scatter_saved_bytes\": {}, \
+             \"panel_hit_rate\": {:.4}, \"speedup_vs_dense\": {}}}",
+            r.section, r.provider, r.ms, r.dist_evals, r.local_mst_ms, r.pair_ms, r.reduce_ms,
+            r.scatter_saved_bytes, r.panel_hit_rate, speedup,
         ));
     }
-    s.push_str("  ]\n}\n");
+    for r in stream_rows {
+        let speedup = r.speedup.map_or("null".to_string(), |v| format!("{v:.4}"));
+        let fold_edges = r.fold_edges.map_or("null".to_string(), |v| v.to_string());
+        row_strs.push(format!(
+            "    {{\"section\": \"stream_fold\", \"provider\": \"{}\", \"ms\": {:.4}, \
+             \"folds_per_sec\": {:.2}, \"fold_edges\": {}, \"speedup_vs_resort\": {}}}",
+            r.provider, r.ms, r.folds_per_sec, fold_edges, speedup,
+        ));
+    }
+    s.push_str(&row_strs.join(",\n"));
+    s.push_str("\n  ]\n}\n");
     s
 }

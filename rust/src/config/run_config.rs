@@ -135,6 +135,12 @@ pub struct RunConfig {
     pub reduce_tree: bool,
     /// pair-job kernel: dense oracle vs cached-local-MST bipartite merge
     pub pair_kernel: PairKernelChoice,
+    /// subset-affinity scheduling (default on): jobs route to the anchor
+    /// worker of their larger subset (per-worker decks, idle stealing), and
+    /// the scatter model charges only subsets/trees the executing worker
+    /// does not already hold. `false` restores the shared LPT queue and the
+    /// dense ship-`S_i ∪ S_j`-every-job byte model, byte-for-byte.
+    pub affinity: bool,
     /// streaming ⊕-reduction at the leader: fold each arriving tree into a
     /// bounded (≤ |V|-1 edge) running MSF instead of buffering the full
     /// `O(|V|·|P|)` union for one final Kruskal
@@ -159,6 +165,7 @@ impl Default for RunConfig {
             seed: 42,
             reduce_tree: false,
             pair_kernel: PairKernelChoice::Dense,
+            affinity: true,
             stream_reduce: false,
             net: NetConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -242,6 +249,9 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         ("", "pair_kernel") => {
             cfg.pair_kernel = PairKernelChoice::parse(need_str()?)
                 .ok_or_else(|| anyhow!("unknown pair kernel"))?
+        }
+        ("", "affinity") => {
+            cfg.affinity = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
         }
         ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
         ("", "strategy") => {
@@ -374,6 +384,14 @@ bandwidth = 1e9
         assert_eq!(cfg.data.n, 500);
         assert_eq!(cfg.net.latency_us, 100);
         assert_eq!(cfg.net.bandwidth, 1e9);
+    }
+
+    #[test]
+    fn affinity_key_defaults_on_and_parses() {
+        assert!(RunConfig::default().affinity, "affinity routing is the default");
+        let cfg = RunConfig::from_toml("affinity = false").unwrap();
+        assert!(!cfg.affinity);
+        assert!(RunConfig::from_toml("affinity = 3").is_err());
     }
 
     #[test]

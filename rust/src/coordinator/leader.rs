@@ -126,17 +126,42 @@ mod tests {
 
     #[test]
     fn scatter_bytes_match_model() {
-        // Block partition, even sizes: scatter = sum over jobs of
-        // header + ids*4 + vectors*4*d, with |S_i ∪ S_j| = 2n/|P|.
+        // Dense byte model (affinity routing off): scatter = sum over jobs
+        // of header + ids*4 + vectors*4*d, with |S_i ∪ S_j| = 2n/|P|.
         let n = 96usize;
         let d = 7usize;
         let ds = uniform(n, d, 1.0, Pcg64::seeded(604));
         let mut cfg = base_cfg(4, 2);
         cfg.strategy = crate::decomp::PartitionStrategy::Block;
+        cfg.affinity = false;
         let out = run_distributed(&ds, &cfg).unwrap();
         let m = 2 * n / 4;
         let per_job = 16 + m as u64 * 4 + (m * d) as u64 * 4;
         assert_eq!(out.metrics.scatter_bytes, 6 * per_job);
+    }
+
+    #[test]
+    fn affinity_routing_ships_fewer_scatter_bytes() {
+        // Default (affinity on) vs the dense model: same tree, strictly
+        // fewer bytes for parts >= 4 with few workers, and the saved
+        // counter accounts for the difference exactly.
+        let ds = uniform(96, 7, 1.0, Pcg64::seeded(605));
+        let mut cfg = base_cfg(4, 2);
+        cfg.affinity = false;
+        let dense = run_distributed(&ds, &cfg).unwrap();
+        cfg.affinity = true;
+        let aff = run_distributed(&ds, &cfg).unwrap();
+        assert_eq!(normalize_tree(&dense.mst), normalize_tree(&aff.mst));
+        assert!(
+            aff.metrics.scatter_bytes < dense.metrics.scatter_bytes,
+            "affinity {} !< dense {}",
+            aff.metrics.scatter_bytes,
+            dense.metrics.scatter_bytes
+        );
+        assert_eq!(
+            aff.metrics.scatter_bytes + aff.metrics.scatter_saved_bytes,
+            dense.metrics.scatter_bytes
+        );
     }
 
     #[test]

@@ -24,13 +24,19 @@ pub enum Message {
     /// machines with fewer cores than ranks — see `metrics::modeled_makespan`).
     Result { job_id: u32, worker: usize, edges: Vec<Edge>, compute: Duration },
     /// Worker → leader (final): locally ⊕-combined tree (reduce mode only)
-    /// plus work/timing stats.
+    /// plus work/timing/locality stats.
     WorkerDone {
         worker: usize,
         local_tree: Option<Vec<Edge>>,
         dist_evals: u64,
         busy: Duration,
         jobs_run: u32,
+        /// pair jobs this worker claimed from another worker's affinity deck
+        jobs_stolen: u32,
+        /// subset-panel cache hits (bipartite-merge kernel only)
+        panel_hits: u64,
+        /// subset-panel cache misses (bipartite-merge kernel only)
+        panel_misses: u64,
     },
     /// Leader → worker: drain and report.
     Shutdown,
@@ -55,8 +61,10 @@ impl Message {
                 HEADER_BYTES + edges.len() as u64 * Edge::WIRE_BYTES as u64
             }
             Message::WorkerDone { local_tree, .. } => {
+                // stats block: dist_evals u64 + busy u64 + jobs_run u32 +
+                // jobs_stolen u32 + panel_hits u64 + panel_misses u64
                 HEADER_BYTES
-                    + 16 // stats
+                    + 40
                     + local_tree.as_ref().map_or(0, |t| t.len() as u64 * Edge::WIRE_BYTES as u64)
             }
             Message::Shutdown => HEADER_BYTES,
@@ -95,6 +103,9 @@ mod tests {
             dist_evals: 10,
             busy: Duration::ZERO,
             jobs_run: 1,
+            jobs_stolen: 0,
+            panel_hits: 0,
+            panel_misses: 0,
         };
         let b = Message::WorkerDone {
             worker: 0,
@@ -102,8 +113,11 @@ mod tests {
             dist_evals: 10,
             busy: Duration::ZERO,
             jobs_run: 1,
+            jobs_stolen: 2,
+            panel_hits: 7,
+            panel_misses: 3,
         };
-        assert_eq!(a.wire_bytes(), 32);
-        assert_eq!(b.wire_bytes(), 32 + 60);
+        assert_eq!(a.wire_bytes(), 56, "header 16 + 40-byte stats block");
+        assert_eq!(b.wire_bytes(), 56 + 60);
     }
 }

@@ -50,6 +50,21 @@ pub struct RunMetrics {
     /// distance evaluations spent inside pair jobs (the bipartite blocks
     /// for the merge kernel; everything for the dense kernel)
     pub pair_evals: u64,
+    /// scatter bytes the subset-affinity resident-set model avoided shipping
+    /// versus the dense `S_i ∪ S_j`-per-job model (0 with affinity off:
+    /// the dense model is then charged byte-for-byte)
+    pub scatter_saved_bytes: u64,
+    /// pair jobs a worker claimed from another worker's affinity deck
+    pub jobs_stolen: u32,
+    /// subset-panel cache hits across workers (bipartite-merge kernel)
+    pub panel_hits: u64,
+    /// subset-panel cache misses across workers (bipartite-merge kernel)
+    pub panel_misses: u64,
+    /// streaming ⊕-folds performed at the leader (`stream_reduce` only)
+    pub reduce_folds: u32,
+    /// total edges scanned by the streaming merge-join folds — bounded by
+    /// `reduce_folds · 2(|V|-1)`, the no-full-re-sort witness
+    pub reduce_fold_edges: u64,
 }
 
 impl RunMetrics {
@@ -143,6 +158,47 @@ impl RunMetrics {
         s
     }
 
+    /// Fraction of panel-cache probes that hit (0.0 when the bipartite
+    /// kernel did not run).
+    pub fn panel_hit_rate(&self) -> f64 {
+        let probes = self.panel_hits + self.panel_misses;
+        if probes == 0 {
+            0.0
+        } else {
+            self.panel_hits as f64 / probes as f64
+        }
+    }
+
+    /// Locality line: affinity scatter savings, panel-cache hit rate, deck
+    /// steals, and streaming-fold cost. Empty string when nothing applies
+    /// (dense scatter model, dense pair kernel, no streaming).
+    pub fn locality_summary(&self) -> String {
+        use crate::util::human_bytes;
+        let mut parts: Vec<String> = Vec::new();
+        if self.scatter_saved_bytes > 0 {
+            parts.push(format!("scatter_saved={}", human_bytes(self.scatter_saved_bytes)));
+        }
+        let probes = self.panel_hits + self.panel_misses;
+        if probes > 0 {
+            parts.push(format!(
+                "panel_cache={}/{} hits ({:.0}%)",
+                self.panel_hits,
+                probes,
+                100.0 * self.panel_hit_rate()
+            ));
+        }
+        if self.jobs_stolen > 0 {
+            parts.push(format!("stolen={}", self.jobs_stolen));
+        }
+        if self.reduce_folds > 0 {
+            parts.push(format!(
+                "folds={} fold_edges={}",
+                self.reduce_folds, self.reduce_fold_edges
+            ));
+        }
+        parts.join(" ")
+    }
+
     /// Per-phase breakdown (local-MST / pair / reduce timing and eval
     /// split) — the measurement surface for the bipartite-merge kernel.
     pub fn phase_summary(&self) -> String {
@@ -216,6 +272,27 @@ mod tests {
         let p = m.phase_summary();
         assert!(p.contains("local_mst="), "{p}");
         assert!(p.contains("1.20K evals"), "{p}");
+    }
+
+    #[test]
+    fn locality_summary_composes_and_omits_empty() {
+        assert_eq!(RunMetrics::default().locality_summary(), "");
+        assert_eq!(RunMetrics::default().panel_hit_rate(), 0.0);
+        let m = RunMetrics {
+            scatter_saved_bytes: 2048,
+            panel_hits: 9,
+            panel_misses: 3,
+            jobs_stolen: 2,
+            reduce_folds: 6,
+            reduce_fold_edges: 420,
+            ..Default::default()
+        };
+        assert!((m.panel_hit_rate() - 0.75).abs() < 1e-9);
+        let s = m.locality_summary();
+        assert!(s.contains("scatter_saved=2.00 KiB"), "{s}");
+        assert!(s.contains("panel_cache=9/12 hits (75%)"), "{s}");
+        assert!(s.contains("stolen=2"), "{s}");
+        assert!(s.contains("folds=6 fold_edges=420"), "{s}");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! changes the communication bound from `O(|V|√p)` to `O(|V|)`; experiment
 //! E3 measures both.
 
-use crate::graph::Edge;
+use crate::graph::{Edge, UnionFind};
 use crate::mst::kruskal;
+use std::cmp::Ordering;
 
 /// `⊕(T1, T2) = MST(T1 ∪ T2)` over `n` global vertices.
 pub fn tree_merge(n: usize, t1: &[Edge], t2: &[Edge]) -> Vec<Edge> {
@@ -24,27 +25,88 @@ pub fn tree_merge(n: usize, t1: &[Edge], t2: &[Edge]) -> Vec<Edge> {
 /// order, so the arrival order (which is nondeterministic under the pooled
 /// scheduler) never changes the result, and the leader's working set stays
 /// ≤ `|V| - 1` edges at all times.
+///
+/// Folds are **incremental**: the running forest is kept presorted in the
+/// strict `(w, u, v)` order, each arriving tree is sorted once (it is at
+/// most `|V| - 1` edges), and the fold is a merge-join of the two sorted
+/// streams through a reusable union-find — `O(|V|)` work per fold after the
+/// arrival sort, with no per-push allocation and **no re-sort of the
+/// running forest** (the old implementation re-ran a full Kruskal, i.e.
+/// re-sorted up to `2(|V|-1)` edges, on every push). The merge of two
+/// sorted streams visits edges in exactly the order the re-sorting Kruskal
+/// did, so the admitted set — and therefore the result — is identical.
 #[derive(Clone, Debug)]
 pub struct StreamReducer {
     n: usize,
+    /// running MSF, presorted ascending in the strict `(w, u, v)` order
     forest: Vec<Edge>,
+    /// scratch: the arriving tree, canonicalized + sorted (reused)
+    incoming: Vec<Edge>,
+    /// scratch: the next forest being assembled (reused, swapped in)
+    scratch: Vec<Edge>,
+    /// reusable union-find, reset (not reallocated) per fold
+    uf: UnionFind,
     /// trees folded in so far
     pub merges: usize,
     /// total edges received across all pushes
     pub edges_seen: u64,
+    /// total edges scanned by the merge-join folds — bounded by
+    /// `Σ (|forest| + |tree|) ≤ merges · 2(|V|-1)`, the witness that no
+    /// fold re-sorted the running union
+    pub fold_edges: u64,
 }
 
 impl StreamReducer {
     pub fn new(n: usize) -> Self {
-        Self { n, forest: Vec::new(), merges: 0, edges_seen: 0 }
+        Self {
+            n,
+            forest: Vec::new(),
+            incoming: Vec::new(),
+            scratch: Vec::new(),
+            uf: UnionFind::new(n),
+            merges: 0,
+            edges_seen: 0,
+            fold_edges: 0,
+        }
     }
 
-    /// Fold one arriving tree into the running MSF.
+    /// Fold one arriving tree into the running MSF (merge-join, `O(|V|)`).
     pub fn push(&mut self, tree: &[Edge]) {
         self.edges_seen += tree.len() as u64;
         self.merges += 1;
-        self.forest = tree_merge(self.n, &self.forest, tree);
+        self.incoming.clear();
+        self.incoming.extend(tree.iter().map(|e| Edge::new(e.u, e.v, e.w)));
+        self.incoming.sort_unstable();
+        self.fold_edges += (self.forest.len() + self.incoming.len()) as u64;
+        self.uf.reset();
+        self.scratch.clear();
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.forest.len() || b < self.incoming.len() {
+            let take_forest = match (self.forest.get(a), self.incoming.get(b)) {
+                (Some(x), Some(y)) => x.cmp_strict(y) != Ordering::Greater,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            let e = if take_forest {
+                a += 1;
+                self.forest[a - 1]
+            } else {
+                b += 1;
+                self.incoming[b - 1]
+            };
+            if self.uf.union(e.u, e.v) {
+                self.scratch.push(e);
+                if self.uf.components() == 1 {
+                    break; // spanning: every further edge closes a cycle
+                }
+            }
+        }
+        std::mem::swap(&mut self.forest, &mut self.scratch);
         debug_assert!(self.n == 0 || self.forest.len() < self.n, "bounded running MSF");
+        debug_assert!(
+            self.forest.windows(2).all(|w| w[0].cmp_strict(&w[1]) != Ordering::Greater),
+            "running forest stays presorted"
+        );
     }
 
     /// Edges currently held (≤ `n - 1`).
@@ -78,7 +140,26 @@ pub struct ReductionStats {
 
 /// Binary-tree reduction of per-pair MSTs. Returns the global MSF and the
 /// communication statistics.
+///
+/// The final result's hop to the leader **is charged** into
+/// `edges_transmitted` — the model where the last merge happens on some
+/// worker and the result still has to travel. When the reduction itself
+/// runs *at* the leader (the exec engine's gather path, where NetSim
+/// already charged each worker tree's arrival), use
+/// [`reduce_trees_with`]`(n, trees, false)` so that hop is not counted a
+/// second time.
 pub fn reduce_trees(n: usize, trees: &[Vec<Edge>]) -> (Vec<Edge>, ReductionStats) {
+    reduce_trees_with(n, trees, true)
+}
+
+/// [`reduce_trees`] with the final leader hop made explicit:
+/// `final_hop_to_leader = false` models a reduction running at the leader
+/// (no trailing transfer), `true` a reduction finishing on a worker.
+pub fn reduce_trees_with(
+    n: usize,
+    trees: &[Vec<Edge>],
+    final_hop_to_leader: bool,
+) -> (Vec<Edge>, ReductionStats) {
     let mut stats = ReductionStats::default();
     if trees.is_empty() {
         return (Vec::new(), stats);
@@ -102,10 +183,11 @@ pub fn reduce_trees(n: usize, trees: &[Vec<Edge>]) -> (Vec<Edge>, ReductionStats
         }
         layer = next;
     }
-    // final result travels to the leader once
     let result = layer.pop().unwrap();
-    stats.edges_transmitted += result.len() as u64;
-    stats.max_step_edges = stats.max_step_edges.max(result.len());
+    if final_hop_to_leader {
+        stats.edges_transmitted += result.len() as u64;
+        stats.max_step_edges = stats.max_step_edges.max(result.len());
+    }
     (result, stats)
 }
 
@@ -190,6 +272,78 @@ mod tests {
             assert_eq!(r.edges_seen as usize, out.union_edges);
             assert_eq!(normalize_tree(&batch), normalize_tree(&r.finish()), "rev={reversed}");
         }
+    }
+
+    #[test]
+    fn stream_reducer_equals_batch_under_random_permutations() {
+        // beyond forward/reverse: commutativity under arbitrary arrival
+        // orders, exactly the nondeterminism the pooled scheduler produces
+        let ds = uniform(48, 4, 1.0, Pcg64::seeded(403));
+        let cfg = DecompConfig { parts: 6, keep_pair_trees: true, ..Default::default() };
+        let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+        let union: Vec<Edge> = out.pair_trees.iter().flatten().copied().collect();
+        let batch = crate::mst::kruskal(ds.n, &union);
+        let mut rng = Pcg64::seeded(77);
+        for round in 0..12 {
+            let mut order: Vec<usize> = (0..out.pair_trees.len()).collect();
+            rng.shuffle(&mut order);
+            let mut r = StreamReducer::new(ds.n);
+            for &k in &order {
+                r.push(&out.pair_trees[k]);
+                assert!(r.len() < ds.n, "bounded at every step");
+            }
+            assert_eq!(r.merges, out.pair_trees.len());
+            assert_eq!(
+                normalize_tree(&batch),
+                normalize_tree(&r.finish()),
+                "round {round}: order {order:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_reducer_folds_are_linear_not_resorted() {
+        // fold_edges ≤ merges · 2(|V|-1): every fold is a merge-join over
+        // the bounded forest + one tree, never a re-sort of the full union.
+        let ds = uniform(64, 5, 1.0, Pcg64::seeded(404));
+        let cfg = DecompConfig { parts: 8, keep_pair_trees: true, ..Default::default() };
+        let out = decomposed_mst(&ds, &cfg, &PrimDense::sq_euclid());
+        let mut r = StreamReducer::new(ds.n);
+        for t in &out.pair_trees {
+            r.push(t);
+        }
+        let folds = r.merges as u64;
+        assert!(folds > 0);
+        assert!(
+            r.fold_edges <= folds * 2 * (ds.n as u64 - 1),
+            "fold cost {} exceeds the O(|V|)-per-fold bound",
+            r.fold_edges
+        );
+        // strictly cheaper than re-sorting the accumulated union each fold
+        assert!(r.fold_edges < r.edges_seen * folds, "sanity: not quadratic in the union");
+    }
+
+    #[test]
+    fn reduce_trees_final_hop_gating() {
+        // At-the-leader reductions must not charge the final result's trip.
+        let one = vec![vec![Edge::new(0, 1, 1.0)]];
+        let (r, s) = reduce_trees_with(5, &one, false);
+        assert_eq!(r.len(), 1);
+        assert_eq!(s.edges_transmitted, 0, "no merge, no final hop: nothing travels");
+        let (_, with_hop) = reduce_trees_with(5, &one, true);
+        assert_eq!(with_hop.edges_transmitted, 1);
+        // with merges, the two models differ by exactly the result size
+        let trees = vec![
+            vec![Edge::new(0, 1, 1.0)],
+            vec![Edge::new(1, 2, 2.0)],
+            vec![Edge::new(2, 3, 3.0)],
+        ];
+        let (result, at_leader) = reduce_trees_with(5, &trees, false);
+        let (_, on_worker) = reduce_trees_with(5, &trees, true);
+        assert_eq!(
+            on_worker.edges_transmitted,
+            at_leader.edges_transmitted + result.len() as u64
+        );
     }
 
     #[test]

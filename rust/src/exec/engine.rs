@@ -22,18 +22,19 @@
 use super::pair_kernel::{
     subset_mst, BipartiteCtx, BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver,
 };
-use super::plan::ExecPlan;
+use super::plan::{AffinityPlan, ExecPlan};
 use super::scheduler::JobQueue;
 use crate::config::{PairKernelChoice, RunConfig};
 use crate::coordinator::messages::{job_wire_bytes, Message, HEADER_BYTES};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::netsim::{Direction, NetSim};
 use crate::data::Dataset;
-use crate::decomp::reduction::{reduce_trees, tree_merge, StreamReducer};
+use crate::decomp::reduction::{reduce_trees_with, tree_merge, StreamReducer};
 use crate::decomp::{pair_count, DecompConfig, DecompOutput, PairJob};
 use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::mst::kruskal;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -115,14 +116,28 @@ pub struct PooledRun {
     pub workers: usize,
 }
 
-/// The pooled engine: worker threads claim jobs from a shared cost-LPT
-/// queue; the leader gathers trees (streaming or buffered) and finishes the
-/// reduction. All traffic is charged to `net`.
+/// The pooled engine: worker threads claim jobs from per-worker affinity
+/// decks (cost-LPT within each deck, idle stealing as fallback; one shared
+/// LPT queue when `cfg.affinity` is off); the leader gathers trees
+/// (streaming or buffered) and finishes the reduction. All traffic is
+/// charged to `net` — under the resident-set model only payload the
+/// executing worker is missing, with the dense model's difference recorded
+/// in `RunMetrics::scatter_saved_bytes`.
 pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Result<PooledRun> {
     let t_start = Instant::now();
     let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
     let n_workers = resolve_workers(cfg);
     let counters = net.counters();
+
+    // Subset-affinity routing + resident-set byte model (cfg.affinity):
+    // each subset gets an anchor worker, jobs land on the anchor of their
+    // larger subset, and each worker remembers which subsets (vectors +
+    // cached tree) it already holds — residency persists from the local-MST
+    // phase into the pair phase, and only the *missing* payload is charged.
+    let affinity: Option<AffinityPlan> = cfg.affinity.then(|| plan.affinity(n_workers));
+    let residents: Vec<Mutex<Vec<bool>>> =
+        (0..n_workers).map(|_| Mutex::new(vec![false; plan.parts.len()])).collect();
+    let scatter_saved = AtomicU64::new(0);
 
     let mut metrics = RunMetrics {
         worker_busy: vec![Duration::ZERO; n_workers],
@@ -134,13 +149,15 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
     };
 
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
-    // through the same worker pool.
+    // through the same worker pool — at its anchor when affinity is on, so
+    // the anchor already holds the subset when the pair phase starts.
     let bip: Option<(BipartiteCtx, LocalMstCache)> = match cfg.pair_kernel {
         PairKernelChoice::Dense => None,
         PairKernelChoice::BipartiteMerge => {
             let t = Instant::now();
             let ctx = BipartiteCtx::new(ds, cfg.metric);
-            let (cache, phase_busy) = build_cache_pooled(ds, &ctx, &plan, n_workers, net);
+            let (cache, phase_busy) =
+                build_cache_pooled(ds, &ctx, &plan, n_workers, net, affinity.as_ref(), &residents);
             for (w, b) in phase_busy.into_iter().enumerate() {
                 metrics.worker_busy[w] += b;
             }
@@ -149,9 +166,13 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
         }
     };
 
-    // Phase 2: pair jobs over the pool, LPT deal + idle stealing.
+    // Phase 2: pair jobs over the pool — per-worker affinity decks with
+    // idle stealing, or the shared LPT deal when affinity is off.
     let t_pairs = Instant::now();
-    let queue = JobQueue::new(plan.lpt_order.clone());
+    let queue = match &affinity {
+        Some(aff) => JobQueue::with_decks(aff.decks.clone()),
+        None => JobQueue::new(plan.lpt_order.clone()),
+    };
     let (tx_leader, rx_leader) = channel::<Message>();
     let mut union_edges: Vec<Edge> = Vec::new();
     let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
@@ -162,9 +183,25 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
         let plan_ref = &plan;
         let queue_ref = &queue;
         let bip_ref = bip.as_ref();
-        for w in 0..n_workers {
+        let saved_ref = &scatter_saved;
+        let use_affinity = affinity.is_some();
+        for (w, resident) in residents.iter().enumerate() {
             let tx = tx_leader.clone();
-            scope.spawn(move || pooled_worker(w, ds, plan_ref, queue_ref, cfg, net, bip_ref, tx));
+            scope.spawn(move || {
+                pooled_worker(
+                    w,
+                    ds,
+                    plan_ref,
+                    queue_ref,
+                    cfg,
+                    net,
+                    bip_ref,
+                    use_affinity,
+                    resident,
+                    saved_ref,
+                    tx,
+                )
+            });
         }
         drop(tx_leader); // leader keeps only rx
 
@@ -184,10 +221,22 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
                         union_edges.extend_from_slice(&edges);
                     }
                 }
-                Message::WorkerDone { worker, local_tree, dist_evals, busy, jobs_run } => {
+                Message::WorkerDone {
+                    worker,
+                    local_tree,
+                    dist_evals,
+                    busy,
+                    jobs_run,
+                    jobs_stolen,
+                    panel_hits,
+                    panel_misses,
+                } => {
                     metrics.dist_evals += dist_evals;
                     // += : the local-MST phase already deposited its share
                     metrics.worker_busy[worker] += busy;
+                    metrics.jobs_stolen += jobs_stolen;
+                    metrics.panel_hits += panel_hits;
+                    metrics.panel_misses += panel_misses;
                     if cfg.reduce_tree {
                         metrics.jobs += jobs_run;
                     }
@@ -225,15 +274,20 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
     // reverted — dedup itself sorts the full union, so it only adds work.)
     let t_mst = Instant::now();
     let mst = if let Some(r) = stream {
+        metrics.reduce_folds = r.merges as u32;
+        metrics.reduce_fold_edges = r.fold_edges;
         r.finish()
     } else if cfg.reduce_tree {
-        let (tree, _stats) = reduce_trees(ds.n, &worker_trees);
+        // reduction runs at the leader; NetSim already charged each worker
+        // tree's gather, so the final hop must not be counted again
+        let (tree, _stats) = reduce_trees_with(ds.n, &worker_trees, false);
         tree
     } else {
         kruskal(ds.n, &union_edges)
     };
     metrics.final_mst = t_mst.elapsed();
     metrics.phase_reduce = reduce_time + metrics.final_mst;
+    metrics.scatter_saved_bytes = scatter_saved.load(Ordering::Relaxed);
 
     metrics.pair_evals = metrics.dist_evals;
     if let Some((_, cache)) = &bip {
@@ -251,9 +305,11 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
     Ok(PooledRun { mst, metrics, workers: n_workers })
 }
 
-/// One pooled worker: claim jobs until the queue drains, charging the
-/// scatter for each claimed job and shipping each pair tree (or a locally
-/// ⊕-combined tree) back through the simulated network.
+/// One pooled worker: claim jobs until the decks drain (own deck first,
+/// then stealing), charging the scatter for each claimed job — under the
+/// resident-set model only the payload this worker does not yet hold — and
+/// shipping each pair tree (or a locally ⊕-combined tree) back through the
+/// simulated network.
 fn pooled_worker(
     worker_id: usize,
     ds: &Dataset,
@@ -262,6 +318,9 @@ fn pooled_worker(
     cfg: &RunConfig,
     net: &NetSim,
     bip: Option<&(BipartiteCtx, LocalMstCache)>,
+    use_affinity: bool,
+    resident: &Mutex<Vec<bool>>,
+    scatter_saved: &AtomicU64,
     tx_leader: Sender<Message>,
 ) {
     let mut solver: Box<dyn PairSolver + '_> = match bip {
@@ -280,6 +339,9 @@ fn pooled_worker(
                         dist_evals: 0,
                         busy: Duration::ZERO,
                         jobs_run: 0,
+                        jobs_stolen: 0,
+                        panel_hits: 0,
+                        panel_misses: 0,
                     },
                     Direction::Gather,
                 );
@@ -288,13 +350,26 @@ fn pooled_worker(
         },
     };
     let local_reduce = cfg.reduce_tree;
+    let cache = bip.map(|(_, c)| c);
     let mut busy = Duration::ZERO;
     let mut jobs_run = 0u32;
+    let mut jobs_stolen = 0u32;
     let mut local_tree: Option<Vec<Edge>> = None;
-    while let Some(job_idx) = queue.pop() {
+    while let Some((job_idx, stolen)) = queue.pop_for(worker_id) {
         let job = &plan.jobs[job_idx];
         // Model the leader→worker scatter of this job's payload.
-        net.charge(job_scatter_bytes(plan, job, ds.d, bip.map(|(_, c)| c)), Direction::Scatter);
+        let dense_bytes = job_scatter_bytes(plan, job, ds.d, cache);
+        let bytes = if use_affinity {
+            let mut res = resident.lock().unwrap();
+            affinity_scatter_bytes(plan, job, ds.d, cache, res.as_mut_slice())
+        } else {
+            dense_bytes
+        };
+        net.charge(bytes, Direction::Scatter);
+        scatter_saved.fetch_add(dense_bytes - bytes, Ordering::Relaxed);
+        if stolen {
+            jobs_stolen += 1;
+        }
         let t = Instant::now();
         let tree = solver.solve(plan, job);
         let compute = t.elapsed();
@@ -320,6 +395,7 @@ fn pooled_worker(
     }
     // Queue drained: model the shutdown control message, then report.
     net.charge(HEADER_BYTES, Direction::Control);
+    let (panel_hits, panel_misses) = solver.panel_stats();
     let _ = net.send(
         &tx_leader,
         Message::WorkerDone {
@@ -328,16 +404,20 @@ fn pooled_worker(
             dist_evals: solver.dist_evals(),
             busy,
             jobs_run,
+            jobs_stolen,
+            panel_hits,
+            panel_misses,
         },
         Direction::Gather,
     );
 }
 
-/// Scatter bytes for one pair job: header + id map + vector payload, plus —
-/// for the bipartite-merge kernel — the two cached local trees the job
-/// consumes instead of recomputing. The degenerate self-pair job under the
-/// bipartite kernel only consumes the cached tree (its vectors were already
-/// charged by the local-MST phase), so only the tree travels.
+/// Scatter bytes for one pair job under the **dense** model: header + id
+/// map + vector payload, plus — for the bipartite-merge kernel — the two
+/// cached local trees the job consumes instead of recomputing. The
+/// degenerate self-pair job under the bipartite kernel only consumes the
+/// cached tree (its vectors were already charged by the local-MST phase),
+/// so only the tree travels.
 fn job_scatter_bytes(
     plan: &ExecPlan,
     job: &PairJob,
@@ -362,10 +442,58 @@ fn job_scatter_bytes(
     bytes
 }
 
+/// Scatter bytes for one pair job under the **resident-set** model: the
+/// same per-subset payload as [`job_scatter_bytes`], but charged only for
+/// subsets the executing worker does not already hold, and marked resident
+/// afterwards. Per job this is ≤ the dense model by construction (the
+/// per-subset terms are identical), so total affinity scatter can never
+/// exceed the dense model.
+fn affinity_scatter_bytes(
+    plan: &ExecPlan,
+    job: &PairJob,
+    d: usize,
+    cache: Option<&LocalMstCache>,
+    resident: &mut [bool],
+) -> u64 {
+    let (i, j) = (job.i as usize, job.j as usize);
+    let mut bytes = HEADER_BYTES;
+    if i == j {
+        if !resident[i] {
+            resident[i] = true;
+            bytes += match cache {
+                Some(c) => c.trees[i].len() as u64 * Edge::WIRE_BYTES as u64,
+                None => subset_payload_bytes(plan, i, d),
+            };
+        }
+        return bytes;
+    }
+    for k in [i, j] {
+        if !resident[k] {
+            resident[k] = true;
+            bytes += subset_payload_bytes(plan, k, d);
+            if let Some(c) = cache {
+                bytes += c.trees[k].len() as u64 * Edge::WIRE_BYTES as u64;
+            }
+        }
+    }
+    bytes
+}
+
+/// One subset's share of a pair-job scatter: global-id map + vectors.
+/// `job_wire_bytes(|S_i| + |S_j|, d) = HEADER_BYTES + Σ` of these, which is
+/// what keeps the dense and resident-set models consistent per subset.
+fn subset_payload_bytes(plan: &ExecPlan, k: usize, d: usize) -> u64 {
+    let ids = plan.parts[k].len() as u64;
+    ids * 4 + ids * d as u64 * 4
+}
+
 /// Build the local-MST cache through the worker pool: one job per
-/// partition, heaviest first. Scatter charges each subset's vectors once;
-/// gather charges each returned local tree once. Also returns each pool
-/// worker's busy time so the engine can attribute this phase's compute to
+/// partition, heaviest first — at its anchor worker when affinity is on
+/// (idle stealing as fallback), in which case the builder marks the subset
+/// resident so the pair phase's byte model does not re-ship it. Scatter
+/// charges each subset's vectors exactly once either way; gather charges
+/// each returned local tree once. Also returns each pool worker's busy time
+/// so the engine can attribute this phase's compute to
 /// `RunMetrics::worker_busy`.
 fn build_cache_pooled(
     ds: &Dataset,
@@ -373,25 +501,38 @@ fn build_cache_pooled(
     plan: &ExecPlan,
     n_workers: usize,
     net: &NetSim,
+    affinity: Option<&AffinityPlan>,
+    residents: &[Mutex<Vec<bool>>],
 ) -> (LocalMstCache, Vec<Duration>) {
     let t = Instant::now();
     let p = plan.parts.len();
-    let mut order: Vec<usize> = (0..p).collect();
-    order.sort_by(|&a, &b| plan.parts[b].len().cmp(&plan.parts[a].len()).then(a.cmp(&b)));
-    let queue = JobQueue::new(order);
+    let queue = match affinity {
+        Some(aff) => JobQueue::with_decks(aff.local_decks.clone()),
+        None => {
+            let mut order: Vec<usize> = (0..p).collect();
+            order.sort_by(|&a, &b| plan.parts[b].len().cmp(&plan.parts[a].len()).then(a.cmp(&b)));
+            JobQueue::new(order)
+        }
+    };
     let counter = CountingMetric::new(ctx.kind);
     let slots: Vec<Mutex<Option<Vec<Edge>>>> = (0..p).map(|_| Mutex::new(None)).collect();
-    let busy: Vec<Mutex<Duration>> =
-        (0..n_workers.min(p)).map(|_| Mutex::new(Duration::ZERO)).collect();
+    let n_spawn = n_workers.min(p);
+    let busy: Vec<Mutex<Duration>> = (0..n_spawn).map(|_| Mutex::new(Duration::ZERO)).collect();
     std::thread::scope(|scope| {
         let queue_ref = &queue;
         let counter_ref = &counter;
         let slots_ref = &slots;
-        for busy_slot in &busy {
+        for (w, busy_slot) in busy.iter().enumerate() {
+            let resident = &residents[w];
             scope.spawn(move || {
-                while let Some(k) = queue_ref.pop() {
+                while let Some((k, _stolen)) = queue_ref.pop_for(w) {
                     let ids = &plan.parts[k];
                     net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
+                    if affinity.is_some() {
+                        // this worker now holds the subset's vectors (and
+                        // will hold its tree): seed the pair-phase model
+                        resident.lock().unwrap()[k] = true;
+                    }
                     let t_job = Instant::now();
                     let tree = subset_mst(
                         ds.as_slice(),
@@ -518,14 +659,16 @@ mod tests {
 
     #[test]
     fn lpt_scatter_bytes_match_dense_model() {
-        // The pull-based scheduler must charge the identical per-job scatter
-        // the eager round-robin leader charged.
+        // With affinity routing off, the pull-based scheduler must charge
+        // the identical per-job scatter the eager round-robin leader
+        // charged — the dense model stays available byte-for-byte.
         let ds = uniform(96, 7, 1.0, Pcg64::seeded(503));
         let cfg = RunConfig {
             parts: 4,
             workers: 2,
             kernel: KernelChoice::PrimDense,
             strategy: crate::decomp::PartitionStrategy::Block,
+            affinity: false,
             ..Default::default()
         };
         let net = NetSim::new(cfg.net.clone());
@@ -533,6 +676,117 @@ mod tests {
         let m = 2 * 96 / 4;
         let per_job = 16 + m as u64 * 4 + (m * 7) as u64 * 4;
         assert_eq!(out.metrics.scatter_bytes, 6 * per_job);
+        assert_eq!(out.metrics.scatter_saved_bytes, 0, "dense model saves nothing");
+        assert_eq!(out.metrics.jobs_stolen, 0, "single shared deck: nothing counts as stolen");
+    }
+
+    /// The resident-set invariant that makes the affinity model auditable:
+    /// per job, charged + saved equals the dense model exactly, so for any
+    /// seed/strategy/worker count `affinity.scatter + affinity.saved ==
+    /// dense.scatter` — and the tree is unchanged.
+    #[test]
+    fn affinity_scatter_plus_saved_equals_dense_model() {
+        let ds = int_dataset(505, 90, 6);
+        for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+            for workers in [1usize, 2, 4] {
+                let mut cfg = RunConfig {
+                    parts: 5,
+                    workers,
+                    kernel: KernelChoice::PrimDense,
+                    pair_kernel,
+                    ..Default::default()
+                };
+                cfg.affinity = false;
+                let net = NetSim::new(cfg.net.clone());
+                let dense = execute_pooled(&ds, &cfg, &net).unwrap();
+                cfg.affinity = true;
+                let net = NetSim::new(cfg.net.clone());
+                let aff = execute_pooled(&ds, &cfg, &net).unwrap();
+                assert_eq!(
+                    normalize_tree(&dense.mst),
+                    normalize_tree(&aff.mst),
+                    "{pair_kernel:?} workers={workers}: affinity must not change the tree"
+                );
+                assert_eq!(
+                    aff.metrics.scatter_bytes + aff.metrics.scatter_saved_bytes,
+                    dense.metrics.scatter_bytes,
+                    "{pair_kernel:?} workers={workers}: charged + saved == dense model"
+                );
+                assert!(
+                    aff.metrics.scatter_bytes <= dense.metrics.scatter_bytes,
+                    "{pair_kernel:?} workers={workers}: affinity can never charge more"
+                );
+                assert_eq!(aff.metrics.dist_evals, dense.metrics.dist_evals);
+            }
+        }
+    }
+
+    /// parts ≥ 4 with few workers: by pigeonhole some worker runs more pair
+    /// jobs than a maximum matching over the subsets, so at least one job
+    /// must share a subset with an earlier job on that worker — the
+    /// resident-set model saves strictly positive bytes, for both kernels.
+    #[test]
+    fn affinity_saves_strictly_for_parts_ge_4() {
+        let ds = int_dataset(506, 80, 5);
+        for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+            for workers in [1usize, 2] {
+                let cfg = RunConfig {
+                    parts: 4,
+                    workers,
+                    kernel: KernelChoice::PrimDense,
+                    pair_kernel,
+                    ..Default::default()
+                };
+                let net = NetSim::new(cfg.net.clone());
+                let out = execute_pooled(&ds, &cfg, &net).unwrap();
+                assert!(
+                    out.metrics.scatter_saved_bytes > 0,
+                    "{pair_kernel:?} workers={workers}: expected strict scatter savings"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bipartite_panel_cache_metrics_populated() {
+        let ds = int_dataset(507, 64, 4);
+        let cfg = RunConfig {
+            parts: 4,
+            workers: 2,
+            pair_kernel: PairKernelChoice::BipartiteMerge,
+            strategy: crate::decomp::PartitionStrategy::Block,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let out = execute_pooled(&ds, &cfg, &net).unwrap();
+        // 6 cross jobs × 2 panel probes, however they land on the workers
+        assert_eq!(out.metrics.panel_hits + out.metrics.panel_misses, 12);
+        // 2 workers, 6 jobs: some worker ran ≥ 3 jobs over 4 subsets, which
+        // cannot be pairwise disjoint — at least one probe hit
+        assert!(out.metrics.panel_hits > 0, "panel cache never hit");
+        assert!(out.metrics.panel_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn stream_reduce_fold_metrics_populated() {
+        let ds = int_dataset(508, 60, 4);
+        let cfg = RunConfig {
+            parts: 5,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            stream_reduce: true,
+            ..Default::default()
+        };
+        let net = NetSim::new(cfg.net.clone());
+        let out = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert_eq!(out.metrics.reduce_folds, 10, "one fold per pair tree");
+        assert!(out.metrics.reduce_fold_edges > 0);
+        assert!(
+            out.metrics.reduce_fold_edges <= out.metrics.reduce_folds as u64 * 2 * (ds.n as u64 - 1),
+            "streaming folds stay O(|V|) each: {} edges over {} folds",
+            out.metrics.reduce_fold_edges,
+            out.metrics.reduce_folds
+        );
     }
 
     #[test]

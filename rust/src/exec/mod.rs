@@ -11,13 +11,20 @@
 //!
 //! The layer's pieces:
 //! - [`plan`] — [`ExecPlan`]: partition subsets + pair jobs + the
-//!   `|S_i|·|S_j|` cost model (degenerate `|P| = 1` folded in);
-//! - [`scheduler`] — [`JobQueue`]: atomic LPT deal, workers steal when idle;
+//!   `|S_i|·|S_j|` cost model (degenerate `|P| = 1` folded in), plus the
+//!   [`AffinityPlan`]: an anchor worker per subset (LPT over each subset's
+//!   total pair-job cost) with jobs routed to their larger subset's anchor;
+//! - [`scheduler`] — [`JobQueue`]: per-worker affinity decks (or one shared
+//!   LPT deck), atomic claims, idle workers steal from other decks;
 //! - [`pair_kernel`] — the two pair kernels behind [`PairSolver`]: the
 //!   dense oracle and the cycle-property [`BipartitePairSolver`] with
 //!   cached local MSTs ([`LocalMstCache`]) + filtered Prim over one
-//!   bipartite block;
-//! - [`engine`] — the serial and pooled drivers plus per-phase metrics.
+//!   bipartite block, computed as an `S_i × S_j` panel product from a
+//!   per-worker [`PanelCache`];
+//! - [`engine`] — the serial and pooled drivers, the resident-set scatter
+//!   model (charge only what the executing worker doesn't hold; the dense
+//!   model stays byte-for-byte behind `affinity = false`), and per-phase
+//!   metrics.
 
 pub mod engine;
 pub mod pair_kernel;
@@ -28,8 +35,8 @@ pub use engine::{
     decomposed_mst_bipartite, execute_pooled, resolve_workers, run_serial, PooledRun, SerialRun,
 };
 pub use pair_kernel::{
-    bipartite_filtered_prim, emit_tree, subset_mst, BipartiteCtx, BipartitePairSolver,
-    DensePairSolver, LocalMstCache, PairSolver,
+    bipartite_filtered_prim, bipartite_filtered_prim_blocked, emit_tree, subset_mst, BipartiteCtx,
+    BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver, PanelCache, SubsetPanel,
 };
-pub use plan::ExecPlan;
+pub use plan::{AffinityPlan, ExecPlan};
 pub use scheduler::JobQueue;

@@ -10,10 +10,12 @@
 //!   local MST is computed **exactly once** (the [`LocalMstCache`]), and a
 //!   pair job runs a *filtered Prim* over the sparse graph
 //!   `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`. Only the bipartite block
-//!   is evaluated fresh, one [`DistanceBlock`] row per admitted vertex, so a
-//!   full run performs exactly `n(n-1)/2` distance evaluations *total* —
-//!   the same as a monolithic dense MST — versus the dense pair path's
-//!   `≈ 2(|P|-1)/|P| · n(n-1)/2`.
+//!   is evaluated fresh — computed as **one `S_i × S_j` panel product**
+//!   ([`DistanceBlock::panel_block`] over packed [`SubsetPanel`]s served
+//!   from a per-worker [`PanelCache`], so jobs sharing a subset reuse its
+//!   packed rows and norms) — and a full run performs exactly `n(n-1)/2`
+//!   distance evaluations *total* — the same as a monolithic dense MST —
+//!   versus the dense pair path's `≈ 2(|P|-1)/|P| · n(n-1)/2`.
 //!
 //! Exactness of the filter (cycle property under the strict `(w, u, v)`
 //! order): an edge internal to `S_i` that is not in `MST(S_i)` closes a
@@ -49,6 +51,12 @@ pub trait PairSolver {
     /// bipartite kernel this excludes the shared local-MST cache build,
     /// which is accounted separately by the engine).
     fn dist_evals(&self) -> u64;
+
+    /// `(hits, misses)` of this solver's subset-panel cache; `(0, 0)` for
+    /// solvers without one (the dense kernel).
+    fn panel_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// The dense pair kernel: `d-MST(S_i ∪ S_j)` via a full [`DenseMst`] run
@@ -143,18 +151,115 @@ impl LocalMstCache {
     }
 }
 
+/// One subset's packed operand for blocked `S_i × S_j` distance panels: the
+/// subset's rows gathered contiguously, plus the matching slice of the
+/// per-row auxiliary values (norms). Copies of the prepared full-matrix
+/// values, so panel arithmetic stays bit-identical to the row path.
+pub struct SubsetPanel {
+    pub data: Vec<f32>,
+    pub aux: Vec<f32>,
+    pub rows: usize,
+}
+
+impl SubsetPanel {
+    fn build(ds: &Dataset, ctx: &BipartiteCtx, ids: &[u32]) -> Self {
+        let d = ds.d;
+        let src = ds.as_slice();
+        let mut data = Vec::with_capacity(ids.len() * d);
+        for &g in ids {
+            let g = g as usize;
+            data.extend_from_slice(&src[g * d..(g + 1) * d]);
+        }
+        let aux: Vec<f32> = if ctx.aux.is_empty() {
+            Vec::new()
+        } else {
+            ids.iter().map(|&g| ctx.aux[g as usize]).collect()
+        };
+        Self { data, aux, rows: ids.len() }
+    }
+}
+
+/// A small per-worker LRU of [`SubsetPanel`]s keyed by subset id. Affinity
+/// routing sends consecutive jobs sharing a subset to the same worker, so a
+/// handful of slots is enough for high hit rates — the anchor subset stays
+/// resident while its partners rotate through.
+pub struct PanelCache {
+    /// LRU order: most recently used last
+    slots: Vec<(u32, SubsetPanel)>,
+    cap: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PanelCache {
+    /// `cap` is clamped to ≥ 2 so both panels of one pair job always fit.
+    pub fn new(cap: usize) -> Self {
+        Self { slots: Vec::new(), cap: cap.max(2), hits: 0, misses: 0 }
+    }
+
+    fn ensure(&mut self, ds: &Dataset, ctx: &BipartiteCtx, subset: u32, ids: &[u32]) {
+        if let Some(pos) = self.slots.iter().position(|(k, _)| *k == subset) {
+            self.hits += 1;
+            let entry = self.slots.remove(pos);
+            self.slots.push(entry);
+            return;
+        }
+        self.misses += 1;
+        if self.slots.len() == self.cap {
+            self.slots.remove(0);
+        }
+        self.slots.push((subset, SubsetPanel::build(ds, ctx, ids)));
+    }
+
+    /// Fetch-or-build both panels of a pair job (`i != j`). With `cap ≥ 2`
+    /// the second `ensure` can never evict the first (it is most recent).
+    pub fn pair(
+        &mut self,
+        ds: &Dataset,
+        ctx: &BipartiteCtx,
+        i: u32,
+        si: &[u32],
+        j: u32,
+        sj: &[u32],
+    ) -> (&SubsetPanel, &SubsetPanel) {
+        debug_assert_ne!(i, j);
+        self.ensure(ds, ctx, i, si);
+        self.ensure(ds, ctx, j, sj);
+        let pi = self.slots.iter().position(|(k, _)| *k == i).expect("just ensured");
+        let pj = self.slots.iter().position(|(k, _)| *k == j).expect("just ensured");
+        (&self.slots[pi].1, &self.slots[pj].1)
+    }
+}
+
 /// The bipartite-merge pair kernel: filtered Prim over
 /// `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)` with cached local MSTs.
+///
+/// The bipartite block is computed **as one `S_i × S_j` panel product**
+/// through [`DistanceBlock::panel_block`] — the Gram/dot path over two
+/// packed panels served from a per-worker [`PanelCache`] — instead of
+/// row-at-a-time queries inside the Prim loop. Same `|S_i|·|S_j|`
+/// evaluation count, same bit-identical values, far better locality: jobs
+/// sharing a subset reuse its packed rows and precomputed norms.
 pub struct BipartitePairSolver<'a> {
     ds: &'a Dataset,
     ctx: &'a BipartiteCtx,
     cache: &'a LocalMstCache,
     counter: CountingMetric,
+    panels: PanelCache,
+    /// reusable `|S_i| × |S_j|` distance-block buffer
+    blk: Vec<f32>,
 }
 
 impl<'a> BipartitePairSolver<'a> {
     pub fn new(ds: &'a Dataset, ctx: &'a BipartiteCtx, cache: &'a LocalMstCache) -> Self {
-        Self { ds, ctx, cache, counter: CountingMetric::new(ctx.kind) }
+        Self {
+            ds,
+            ctx,
+            cache,
+            counter: CountingMetric::new(ctx.kind),
+            panels: PanelCache::new(4),
+            blk: Vec::new(),
+        }
     }
 }
 
@@ -166,20 +271,35 @@ impl PairSolver for BipartitePairSolver<'_> {
         }
         let si = &plan.parts[job.i as usize];
         let sj = &plan.parts[job.j as usize];
-        let tree = bipartite_filtered_prim(
-            self.ds,
-            self.ctx,
+        let (pi, pj) = self.panels.pair(self.ds, self.ctx, job.i, si, job.j, sj);
+        self.blk.resize(si.len() * sj.len(), 0.0);
+        self.ctx.block.panel_block(
+            &pi.data,
+            &pi.aux,
+            si.len(),
+            &pj.data,
+            &pj.aux,
+            sj.len(),
+            self.ds.d,
+            &mut self.blk,
+        );
+        self.counter.add_external((si.len() * sj.len()) as u64);
+        let tree = bipartite_filtered_prim_blocked(
             si,
             sj,
             &self.cache.trees[job.i as usize],
             &self.cache.trees[job.j as usize],
-            &self.counter,
+            &self.blk,
         );
         emit_tree(self.ctx, &tree)
     }
 
     fn dist_evals(&self) -> u64 {
         self.counter.evals()
+    }
+
+    fn panel_stats(&self) -> (u64, u64) {
+        (self.panels.hits, self.panels.misses)
     }
 }
 
@@ -436,6 +556,148 @@ fn relax_from(
     }
 }
 
+/// Filtered Prim over the sparse pair graph, consuming a **precomputed**
+/// row-major `|S_i| × |S_j|` bipartite distance block (compare-form values,
+/// e.g. from [`DistanceBlock::panel_block`] over two [`SubsetPanel`]s)
+/// instead of issuing row queries per admitted vertex.
+///
+/// Returns the identical tree as [`bipartite_filtered_prim`] when `blk`
+/// holds the same per-pair values: both run the same relaxations under the
+/// same strict `(w, u, v)` order — only where the distances come from
+/// differs. Distance evaluations are accounted by whoever computed `blk`.
+pub fn bipartite_filtered_prim_blocked(
+    si: &[u32],
+    sj: &[u32],
+    tree_i: &[Edge],
+    tree_j: &[Edge],
+    blk: &[f32],
+) -> Vec<Edge> {
+    debug_assert_eq!(blk.len(), si.len() * sj.len());
+    let ids = merge_sorted_ids(si, sj);
+    let m = ids.len();
+    let nj = sj.len();
+    let mut tree = Vec::with_capacity(m.saturating_sub(1));
+    if m <= 1 {
+        return tree;
+    }
+    let pos_of = |g: u32| -> usize {
+        ids.binary_search(&g).expect("tree endpoint outside the pair union")
+    };
+    // per position: which side, and the rank within that side (the row /
+    // column index into `blk`)
+    let mut in_side_i = vec![false; m];
+    let mut rank = vec![0u32; m];
+    {
+        let (mut a, mut b) = (0usize, 0usize);
+        for (pos, &g) in ids.iter().enumerate() {
+            if a < si.len() && si[a] == g {
+                in_side_i[pos] = true;
+                rank[pos] = a as u32;
+                a += 1;
+            } else {
+                debug_assert_eq!(sj[b], g, "merged ids must interleave si and sj");
+                rank[pos] = b as u32;
+                b += 1;
+            }
+        }
+    }
+    // adjacency of the two local trees, in positions
+    let mut adj: Vec<Vec<(u32, f32)>> = vec![Vec::new(); m];
+    for e in tree_i.iter().chain(tree_j.iter()) {
+        let (pu, pv) = (pos_of(e.u), pos_of(e.v));
+        adj[pu].push((pv as u32, e.w));
+        adj[pv].push((pu as u32, e.w));
+    }
+
+    let mut best_w = vec![f32::INFINITY; m];
+    let mut best_to = vec![u32::MAX; m];
+    let mut in_tree = vec![false; m];
+    let mut active: Vec<u32> = (1..m as u32).collect();
+
+    in_tree[0] = true;
+    relax_from_blocked(
+        0, &ids, &in_side_i, &rank, nj, blk, &adj, &active, &in_tree, &mut best_w, &mut best_to,
+    );
+
+    for _round in 1..m {
+        let pick_at = pick_min(&active, &ids, &best_w, &best_to);
+        let pick = active.swap_remove(pick_at) as usize;
+        debug_assert!(best_w[pick].is_finite(), "G' is connected; frontier must be finite");
+        in_tree[pick] = true;
+        tree.push(Edge::new(best_to[pick], ids[pick], best_w[pick]));
+        if active.is_empty() {
+            break;
+        }
+        relax_from_blocked(
+            pick, &ids, &in_side_i, &rank, nj, blk, &adj, &active, &in_tree, &mut best_w,
+            &mut best_to,
+        );
+    }
+    tree
+}
+
+/// One Prim relaxation round in `G'`, reading the precomputed bipartite
+/// block for cross-side candidates and the pivot's local-tree edges.
+fn relax_from_blocked(
+    pivot: usize,
+    ids: &[u32],
+    in_side_i: &[bool],
+    rank: &[u32],
+    nj: usize,
+    blk: &[f32],
+    adj: &[Vec<(u32, f32)>],
+    active: &[u32],
+    in_tree: &[bool],
+    best_w: &mut [f32],
+    best_to: &mut [u32],
+) {
+    let gpivot = ids[pivot];
+    let pivot_in_i = in_side_i[pivot];
+    for &p in active {
+        let p = p as usize;
+        if in_side_i[p] == pivot_in_i {
+            continue;
+        }
+        let w = if pivot_in_i {
+            blk[rank[pivot] as usize * nj + rank[p] as usize]
+        } else {
+            blk[rank[p] as usize * nj + rank[pivot] as usize]
+        };
+        let g = ids[p];
+        if edge_cmp(
+            w,
+            gpivot.min(g),
+            gpivot.max(g),
+            best_w[p],
+            best_to[p].min(g),
+            best_to[p].max(g),
+        ) == Ordering::Less
+        {
+            best_w[p] = w;
+            best_to[p] = gpivot;
+        }
+    }
+    for &(q, w) in &adj[pivot] {
+        let q = q as usize;
+        if in_tree[q] {
+            continue;
+        }
+        let g = ids[q];
+        if edge_cmp(
+            w,
+            gpivot.min(g),
+            gpivot.max(g),
+            best_w[q],
+            best_to[q].min(g),
+            best_to[q].max(g),
+        ) == Ordering::Less
+        {
+            best_w[q] = w;
+            best_to[q] = gpivot;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,6 +803,79 @@ mod tests {
                 "sides {si_len}/{sj_len}"
             );
         }
+    }
+
+    /// The panel-block path through the blocked filtered Prim must return
+    /// the bit-identical tree as the row-at-a-time oracle, on float data,
+    /// across every metric.
+    #[test]
+    fn blocked_filtered_prim_bit_identical_to_row_path() {
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let ds = float_dataset(16, 54, 6);
+            let ctx = BipartiteCtx::new(&ds, kind);
+            let si: Vec<u32> = (0..54u32).filter(|i| i % 3 != 2).collect();
+            let sj: Vec<u32> = (0..54u32).filter(|i| i % 3 == 2).collect();
+            let counter = CountingMetric::new(kind);
+            let blk = ctx.block.as_ref();
+            let ti = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &si);
+            let tj = subset_mst(ds.as_slice(), ds.d, blk, &ctx.aux, &counter, &sj);
+            let row_path = bipartite_filtered_prim(&ds, &ctx, &si, &sj, &ti, &tj, &counter);
+
+            let pi = SubsetPanel::build(&ds, &ctx, &si);
+            let pj = SubsetPanel::build(&ds, &ctx, &sj);
+            let mut tile = vec![0.0f32; si.len() * sj.len()];
+            ctx.block.panel_block(
+                &pi.data, &pi.aux, si.len(), &pj.data, &pj.aux, sj.len(), ds.d, &mut tile,
+            );
+            let panel_path = bipartite_filtered_prim_blocked(&si, &sj, &ti, &tj, &tile);
+            assert_eq!(row_path, panel_path, "{kind:?}: trees must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn panel_cache_lru_hits_and_eviction() {
+        let ds = int_dataset(17, 40, 3);
+        let ctx = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        let subsets: Vec<Vec<u32>> =
+            (0..5u32).map(|k| (k * 8..(k + 1) * 8).collect()).collect();
+        let mut cache = PanelCache::new(2);
+        // (0,1): two misses
+        cache.pair(&ds, &ctx, 0, &subsets[0], 1, &subsets[1]);
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        // (0,2): hit on 0; miss on 2 evicts the LRU entry (1)
+        cache.pair(&ds, &ctx, 0, &subsets[0], 2, &subsets[2]);
+        assert_eq!((cache.hits, cache.misses), (1, 3));
+        // (0,2) again: both hit
+        cache.pair(&ds, &ctx, 0, &subsets[0], 2, &subsets[2]);
+        assert_eq!((cache.hits, cache.misses), (3, 3));
+        // (1,3): 1 was evicted — both miss
+        cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
+        assert_eq!((cache.hits, cache.misses), (3, 5));
+        // panels carry the right geometry
+        let (p1, p3) = cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
+        assert_eq!(p1.rows, 8);
+        assert_eq!(p3.data.len(), 8 * ds.d);
+        assert_eq!(p1.aux.len(), 8, "sq-euclid panels carry norms");
+    }
+
+    #[test]
+    fn solver_panel_stats_track_subset_reuse() {
+        // Jobs (0,1), (0,2), (1,2) on one solver: 6 ensures, 3 distinct
+        // subsets -> exactly 3 misses, 3 hits with an adequate cap.
+        let ds = int_dataset(18, 36, 4);
+        let plan = ExecPlan::new(&ds, 3, crate::decomp::PartitionStrategy::Block, 0);
+        let ctx = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        let cache = LocalMstCache::build_serial(&ds, &ctx, &plan.parts);
+        let mut solver = BipartitePairSolver::new(&ds, &ctx, &cache);
+        for job in &plan.jobs {
+            solver.solve(&plan, job);
+        }
+        assert_eq!(solver.panel_stats(), (3, 3));
     }
 
     #[test]

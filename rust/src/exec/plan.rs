@@ -52,6 +52,68 @@ impl ExecPlan {
     pub fn part_sizes(&self) -> Vec<usize> {
         self.parts.iter().map(|p| p.len()).collect()
     }
+
+    /// Build the subset-affinity schedule for `n_workers` workers.
+    ///
+    /// Anchor assignment is LPT over each subset's *total* pair-job cost
+    /// (the sum of `|S_i|·|S_j|` over every job touching it): subsets are
+    /// taken heaviest-first and each lands on the least-loaded worker, so
+    /// the per-worker anchored work is balanced up to one subset. Every pair
+    /// job is then routed to the anchor of its **larger** subset (ties: the
+    /// lower subset index, i.e. `i`), which maximizes the bytes a resident
+    /// subset saves, and each deck keeps the cost-descending LPT order so
+    /// in-deck self-scheduling still takes heaviest-first.
+    pub fn affinity(&self, n_workers: usize) -> AffinityPlan {
+        assert!(n_workers >= 1, "affinity schedule needs at least one worker");
+        let p = self.parts.len();
+        let mut subset_cost = vec![0u64; p];
+        for job in &self.jobs {
+            let c = job_cost(&self.parts, job);
+            subset_cost[job.i as usize] += c;
+            if job.j != job.i {
+                subset_cost[job.j as usize] += c;
+            }
+        }
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by(|&a, &b| subset_cost[b].cmp(&subset_cost[a]).then(a.cmp(&b)));
+        let mut load = vec![0u64; n_workers];
+        let mut anchor = vec![0usize; p];
+        for k in order {
+            let w = (0..n_workers).min_by_key(|&w| (load[w], w)).expect("n_workers >= 1");
+            anchor[k] = w;
+            load[w] += subset_cost[k];
+        }
+        let mut decks = vec![Vec::new(); n_workers];
+        for &idx in &self.lpt_order {
+            let job = &self.jobs[idx];
+            let (i, j) = (job.i as usize, job.j as usize);
+            let home = if self.parts[j].len() > self.parts[i].len() { anchor[j] } else { anchor[i] };
+            decks[home].push(idx);
+        }
+        let mut local_decks = vec![Vec::new(); n_workers];
+        let mut by_size: Vec<usize> = (0..p).collect();
+        by_size.sort_by(|&a, &b| self.parts[b].len().cmp(&self.parts[a].len()).then(a.cmp(&b)));
+        for k in by_size {
+            local_decks[anchor[k]].push(k);
+        }
+        AffinityPlan { anchor, decks, local_decks }
+    }
+}
+
+/// The subset-affinity schedule: an anchor worker per subset plus per-worker
+/// job decks. Produced by [`ExecPlan::affinity`]; consumed by the deck-based
+/// [`super::JobQueue`] and the engine's resident-set scatter model.
+#[derive(Clone, Debug)]
+pub struct AffinityPlan {
+    /// subset index → anchor worker
+    pub anchor: Vec<usize>,
+    /// worker → pair-job indices, cost-descending within each deck; a job
+    /// sits in the deck of its larger subset's anchor
+    pub decks: Vec<Vec<usize>>,
+    /// worker → subset indices for the local-MST phase (bipartite kernel),
+    /// size-descending; each subset is built at its anchor so its vectors
+    /// are already resident when the pair phase starts
+    pub local_decks: Vec<Vec<usize>>,
 }
 
 fn job_cost(parts: &[Vec<u32>], job: &PairJob) -> u64 {
@@ -103,6 +165,59 @@ mod tests {
         let ds = uniform(40, 2, 1.0, Pcg64::seeded(3));
         let plan = ExecPlan::new(&ds, 4, PartitionStrategy::Block, 0);
         assert_eq!(plan.lpt_order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn affinity_decks_partition_jobs_and_route_to_larger_subsets_anchor() {
+        let ds = uniform(60, 3, 1.0, Pcg64::seeded(5));
+        let plan = ExecPlan::new(&ds, 5, PartitionStrategy::RandomShuffle, 11);
+        for n_workers in [1usize, 2, 3, 7] {
+            let aff = plan.affinity(n_workers);
+            assert_eq!(aff.decks.len(), n_workers);
+            assert_eq!(aff.local_decks.len(), n_workers);
+            assert_eq!(aff.anchor.len(), 5);
+            assert!(aff.anchor.iter().all(|&w| w < n_workers));
+            // every pair job dealt exactly once, in its larger subset's deck
+            let mut seen = vec![false; plan.n_jobs()];
+            for (w, deck) in aff.decks.iter().enumerate() {
+                let mut prev = u64::MAX;
+                for &idx in deck {
+                    assert!(!seen[idx], "job {idx} dealt twice");
+                    seen[idx] = true;
+                    let job = &plan.jobs[idx];
+                    let (i, j) = (job.i as usize, job.j as usize);
+                    let big =
+                        if plan.parts[j].len() > plan.parts[i].len() { j } else { i };
+                    assert_eq!(aff.anchor[big], w, "job {idx} off its anchor deck");
+                    let c = plan.job_cost(job);
+                    assert!(c <= prev, "deck {w} not cost-descending");
+                    prev = c;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "workers={n_workers}");
+            // every subset built exactly once, at its anchor
+            let mut built = vec![false; 5];
+            for (w, deck) in aff.local_decks.iter().enumerate() {
+                for &k in deck {
+                    assert!(!built[k]);
+                    built[k] = true;
+                    assert_eq!(aff.anchor[k], w);
+                }
+            }
+            assert!(built.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn affinity_anchors_spread_over_workers() {
+        // Equal-size subsets, workers >= subsets: LPT puts one subset per
+        // worker (lowest indices first).
+        let ds = uniform(40, 2, 1.0, Pcg64::seeded(6));
+        let plan = ExecPlan::new(&ds, 4, PartitionStrategy::Block, 0);
+        let aff = plan.affinity(6);
+        let mut anchors = aff.anchor.clone();
+        anchors.sort_unstable();
+        assert_eq!(anchors, vec![0, 1, 2, 3]);
     }
 
     #[test]

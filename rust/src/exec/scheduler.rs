@@ -1,43 +1,75 @@
-//! Cost-aware job dealing: a lock-free central queue that workers pull from.
+//! Cost-aware job dealing: per-worker affinity decks with idle stealing.
 //!
-//! Jobs are enqueued in LPT (longest-processing-time-first) order by the
-//! plan's `|S_i|·|S_j|` cost estimate; each idle worker atomically claims the
-//! next-heaviest unclaimed job. This is the classical self-scheduling /
-//! work-stealing-from-one-deck arrangement: the deal adapts to observed
-//! speed (a slow worker simply claims fewer jobs), replacing the fixed
-//! round-robin deal that pinned jobs to ranks regardless of load.
+//! Two shapes behind one type:
+//!
+//! - [`JobQueue::new`] — a single shared deck in LPT (longest-processing-
+//!   time-first) order; every worker claims the next-heaviest unclaimed job
+//!   (the classical self-scheduling arrangement, kept for the no-affinity
+//!   path and the local-MST build).
+//! - [`JobQueue::with_decks`] — one deck per worker (typically
+//!   [`AffinityPlan::decks`](super::plan::AffinityPlan)): a worker drains
+//!   its own deck first and only then steals round-robin from the others,
+//!   so jobs run at their subset's anchor whenever the load allows and the
+//!   deal still adapts to observed speed (an idle worker never waits while
+//!   any deck holds work).
+//!
+//! Claims are atomic per-deck cursors: every job index is handed out exactly
+//! once across all threads regardless of interleaving.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// A shared, immutable job order with an atomic claim cursor.
+/// A shared, immutable set of job decks with atomic claim cursors.
 #[derive(Debug)]
 pub struct JobQueue {
-    order: Vec<usize>,
-    next: AtomicUsize,
+    decks: Vec<Vec<usize>>,
+    cursors: Vec<AtomicUsize>,
 }
 
 impl JobQueue {
-    /// Queue over `order` (typically [`ExecPlan::lpt_order`]). Each element
-    /// is handed out exactly once across all threads.
+    /// Single shared deck over `order` (typically [`ExecPlan::lpt_order`]).
+    /// Each element is handed out exactly once across all threads.
     ///
     /// [`ExecPlan::lpt_order`]: crate::exec::ExecPlan
     pub fn new(order: Vec<usize>) -> Self {
-        Self { order, next: AtomicUsize::new(0) }
+        Self::with_decks(vec![order])
     }
 
-    /// Claim the next unclaimed job index, or `None` when drained.
+    /// One deck per worker; worker `w` owns `decks[w]` and steals from the
+    /// rest when its own deck drains.
+    pub fn with_decks(decks: Vec<Vec<usize>>) -> Self {
+        assert!(!decks.is_empty(), "JobQueue needs at least one deck");
+        let cursors = decks.iter().map(|_| AtomicUsize::new(0)).collect();
+        Self { decks, cursors }
+    }
+
+    /// Claim the next unclaimed job index from the first deck (the shared-
+    /// deck view), or `None` when everything is drained.
     pub fn pop(&self) -> Option<usize> {
-        let k = self.next.fetch_add(1, Ordering::Relaxed);
-        self.order.get(k).copied()
+        self.pop_for(0).map(|(job, _)| job)
     }
 
-    /// Total jobs in the queue (claimed or not).
+    /// Claim for `worker`: own deck first, then steal round-robin from the
+    /// other decks. Returns the job index and whether it was stolen.
+    pub fn pop_for(&self, worker: usize) -> Option<(usize, bool)> {
+        let n = self.decks.len();
+        let home = worker % n;
+        for step in 0..n {
+            let v = (home + step) % n;
+            let k = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+            if let Some(&job) = self.decks[v].get(k) {
+                return Some((job, step != 0));
+            }
+        }
+        None
+    }
+
+    /// Total jobs across all decks (claimed or not).
     pub fn len(&self) -> usize {
-        self.order.len()
+        self.decks.iter().map(|d| d.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.order.is_empty()
+        self.len() == 0
     }
 }
 
@@ -66,6 +98,27 @@ mod tests {
     }
 
     #[test]
+    fn own_deck_first_then_steals() {
+        let q = JobQueue::with_decks(vec![vec![0, 1], vec![2], vec![]]);
+        assert_eq!(q.len(), 3);
+        // worker 1 drains its own deck, then steals from deck 2 (empty) and 0
+        assert_eq!(q.pop_for(1), Some((2, false)));
+        assert_eq!(q.pop_for(1), Some((0, true)));
+        // worker 0 takes what's left of its own deck — no steal flag
+        assert_eq!(q.pop_for(0), Some((1, false)));
+        assert_eq!(q.pop_for(0), None);
+        assert_eq!(q.pop_for(2), None);
+    }
+
+    #[test]
+    fn worker_index_wraps_past_deck_count() {
+        let q = JobQueue::with_decks(vec![vec![9], vec![8]]);
+        // worker 3 homes on deck 3 % 2 = 1
+        assert_eq!(q.pop_for(3), Some((8, false)));
+        assert_eq!(q.pop_for(3), Some((9, true)));
+    }
+
+    #[test]
     fn concurrent_claims_are_exactly_once() {
         let q = JobQueue::new((0..500).collect());
         let claimed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
@@ -84,5 +137,29 @@ mod tests {
         assert_eq!(got.len(), 500);
         let distinct: HashSet<usize> = got.iter().copied().collect();
         assert_eq!(distinct.len(), 500, "every job claimed exactly once");
+    }
+
+    #[test]
+    fn concurrent_deck_claims_with_stealing_are_exactly_once() {
+        let decks: Vec<Vec<usize>> = (0..4).map(|w| (w * 100..(w + 1) * 100).collect()).collect();
+        let q = JobQueue::with_decks(decks);
+        let claimed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            let q = &q;
+            let claimed = &claimed;
+            for w in 0..6usize {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some((j, _stolen)) = q.pop_for(w) {
+                        local.push(j);
+                    }
+                    claimed.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let got = claimed.into_inner().unwrap();
+        assert_eq!(got.len(), 400);
+        let distinct: HashSet<usize> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 400, "every job claimed exactly once under stealing");
     }
 }

@@ -157,6 +157,44 @@ pub trait DistanceBlock: Send + Sync {
             self.row(data, d, aux, i as usize, js, &mut out[k * w..(k + 1) * w]);
         }
     }
+
+    /// Dense `(m, n)` block between two *packed panels* — rows gathered
+    /// contiguously out of one prepared matrix, with `aux_a`/`aux_b` the
+    /// matching slices of that matrix's [`prepare`](Self::prepare) output.
+    /// Written row-major into `out`.
+    ///
+    /// Contract: each element must be **value-identical** to what
+    /// [`row`](Self::row) computes for the same underlying pair (same
+    /// arithmetic, same operation order, same clamping), so kernels may mix
+    /// the row and panel paths without perturbing the strict `(w, u, v)`
+    /// edge order. The default implementation stacks the two panels into a
+    /// temporary matrix and reuses `row`; the concrete blocks override it
+    /// with fused loops that skip the copy.
+    fn panel_block(
+        &self,
+        a: &[f32],
+        aux_a: &[f32],
+        m: usize,
+        b: &[f32],
+        aux_b: &[f32],
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(a.len(), m * d);
+        debug_assert_eq!(b.len(), n * d);
+        debug_assert_eq!(out.len(), m * n);
+        let mut data = Vec::with_capacity((m + n) * d);
+        data.extend_from_slice(a);
+        data.extend_from_slice(b);
+        let mut aux = Vec::with_capacity(aux_a.len() + aux_b.len());
+        aux.extend_from_slice(aux_a);
+        aux.extend_from_slice(aux_b);
+        let js: Vec<u32> = (m as u32..(m + n) as u32).collect();
+        for i in 0..m {
+            self.row(&data, d, &aux, i, &js, &mut out[i * n..(i + 1) * n]);
+        }
+    }
 }
 
 /// Gram/dot-form squared Euclidean (optionally `sqrt`ed to true Euclidean at
@@ -194,6 +232,22 @@ impl DistanceBlock for SqEuclidBlock {
             out[k] = if v < 0.0 { 0.0 } else { v };
         }
     }
+
+    fn panel_block(
+        &self,
+        a: &[f32],
+        aux_a: &[f32],
+        m: usize,
+        b: &[f32],
+        aux_b: &[f32],
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        // pairwise_block computes `na + nb - 2·dot` with the same clamp as
+        // `row`, so the panel path is value-identical per element.
+        pairwise_block(a, aux_a, m, b, aux_b, n, d, out);
+    }
 }
 
 /// Gram/dot-form cosine distance with precomputed L2 norms:
@@ -224,6 +278,33 @@ impl DistanceBlock for CosineBlock {
             };
         }
     }
+
+    fn panel_block(
+        &self,
+        a: &[f32],
+        aux_a: &[f32],
+        m: usize,
+        b: &[f32],
+        aux_b: &[f32],
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * d..(i + 1) * d];
+            let ni = aux_a[i];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let nj = aux_b[j];
+                *o = if ni == 0.0 || nj == 0.0 {
+                    1.0
+                } else {
+                    1.0 - dot_unrolled(arow, &b[j * d..(j + 1) * d]) / (ni * nj)
+                };
+            }
+        }
+    }
 }
 
 /// Tiled direct Manhattan (L1): no useful Gram form exists, so this is a
@@ -245,6 +326,27 @@ impl DistanceBlock for ManhattanBlock {
         for (k, &j) in js.iter().enumerate() {
             let j = j as usize;
             out[k] = manhattan_unrolled(arow, &data[j * d..(j + 1) * d]);
+        }
+    }
+
+    fn panel_block(
+        &self,
+        a: &[f32],
+        _aux_a: &[f32],
+        m: usize,
+        b: &[f32],
+        _aux_b: &[f32],
+        n: usize,
+        d: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * d..(i + 1) * d];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = manhattan_unrolled(arow, &b[j * d..(j + 1) * d]);
+            }
         }
     }
 }
@@ -383,6 +485,49 @@ mod tests {
         for (k, &i) in is.iter().enumerate() {
             blk.row(&data, d, &aux, i as usize, &js, &mut row);
             assert_eq!(&tile[k * n..(k + 1) * n], row.as_slice(), "pivot {i}");
+        }
+    }
+
+    /// The panel path must be bit-identical to the row path — float data on
+    /// purpose, so any drift in operation order or clamping fails loudly.
+    #[test]
+    fn panel_block_bit_identical_to_rows() {
+        let mut rng = Pcg64::seeded(6);
+        let (n, d) = (26, 11);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let is: Vec<u32> = (0..n as u32).filter(|i| i % 3 == 0).collect();
+        let js: Vec<u32> = (0..n as u32).filter(|i| i % 3 != 0).collect();
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let blk = distance_block(kind);
+            let aux = blk.prepare(&data, n, d);
+            // pack the two panels
+            let pack = |ids: &[u32]| -> (Vec<f32>, Vec<f32>) {
+                let mut p = Vec::with_capacity(ids.len() * d);
+                for &g in ids {
+                    p.extend_from_slice(&data[g as usize * d..(g as usize + 1) * d]);
+                }
+                let a: Vec<f32> =
+                    if aux.is_empty() { Vec::new() } else { ids.iter().map(|&g| aux[g as usize]).collect() };
+                (p, a)
+            };
+            let (pa, aa) = pack(&is);
+            let (pb, ab) = pack(&js);
+            let mut tile = vec![0.0f32; is.len() * js.len()];
+            blk.panel_block(&pa, &aa, is.len(), &pb, &ab, js.len(), d, &mut tile);
+            let mut row = vec![0.0f32; js.len()];
+            for (k, &i) in is.iter().enumerate() {
+                blk.row(&data, d, &aux, i as usize, &js, &mut row);
+                assert_eq!(
+                    &tile[k * js.len()..(k + 1) * js.len()],
+                    row.as_slice(),
+                    "{kind:?} pivot {i}: panel path must be bit-identical"
+                );
+            }
         }
     }
 

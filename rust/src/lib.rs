@@ -23,14 +23,22 @@
 //!   `coordinator::run_distributed` (thread-per-rank workers over a
 //!   simulated, byte-accounted network). The engine owns
 //!   partition → schedule → solve → reduce once: an [`exec::ExecPlan`]
-//!   with `|S_i|·|S_j|` job costs, a cost-LPT queue with idle stealing,
-//!   two selectable pair kernels — the **dense** oracle (full d-MST per
-//!   gathered union) and the **bipartite-merge** kernel (each partition's
-//!   local MST cached once, pair jobs solved by filtered Prim over
-//!   `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)`, exactly `n(n-1)/2`
-//!   distance evaluations per run) — and gather-side reduction, optionally
-//!   streaming (`⊕`-folding each arriving tree into a bounded running
-//!   MSF). Plus partitioners, dendrogram construction, CLI/config/metrics.
+//!   with `|S_i|·|S_j|` job costs, **subset-affinity scheduling** (each
+//!   subset anchored to a worker by LPT over its total pair-job cost, jobs
+//!   routed to their larger subset's anchor deck, idle stealing as
+//!   fallback) with a **resident-set byte model** (NetSim charged only for
+//!   payload the executing worker is missing; the dense model stays
+//!   byte-for-byte behind `affinity = false`), two selectable pair
+//!   kernels — the **dense** oracle (full d-MST per gathered union) and
+//!   the **bipartite-merge** kernel (each partition's local MST cached
+//!   once, pair jobs solved by filtered Prim over
+//!   `MST(S_i) ∪ MST(S_j) ∪ bipartite(S_i × S_j)` with the bipartite block
+//!   computed as an `S_i × S_j` panel product from a per-worker
+//!   [`exec::PanelCache`], exactly `n(n-1)/2` distance evaluations per
+//!   run) — and gather-side reduction, optionally streaming (`⊕`-folding
+//!   each arriving tree into a bounded running MSF by an O(|V|)-per-fold
+//!   presorted merge-join). Plus partitioners, dendrogram construction,
+//!   CLI/config/metrics.
 //! - **compute backends ([`runtime`])** — kernels are selected through the
 //!   [`runtime::ComputeBackend`] abstraction:
 //!   - the default, always-available **Rust backend**: metric-generic

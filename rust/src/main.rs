@@ -87,6 +87,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "metric", takes_value: true, help: "sqeuclid|euclid|cosine|manhattan" },
         OptSpec { name: "kernel", takes_value: true, help: "prim-dense|boruvka-rust|boruvka-xla" },
         OptSpec { name: "pair-kernel", takes_value: true, help: "dense|bipartite-merge pair-job kernel" },
+        OptSpec { name: "no-affinity", takes_value: false, help: "disable subset-affinity routing; ship S_i ∪ S_j for every job (dense byte model)" },
         OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
@@ -145,6 +146,9 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
+    }
+    if args.has_flag("no-affinity") {
+        cfg.affinity = false;
     }
     if args.has_flag("reduce-tree") {
         cfg.reduce_tree = true;
@@ -267,10 +271,15 @@ fn write_mst_csv(path: &str, mst: &[demst::graph::Edge]) -> Result<()> {
     Ok(())
 }
 
-/// Per-phase timings + per-worker busy utilization, so scheduler skew is
-/// visible straight from the CLI.
+/// Per-phase timings, locality wins (affinity scatter savings, panel-cache
+/// hit rate, streaming-fold cost), and per-worker busy utilization, so
+/// scheduler skew is visible straight from the CLI.
 fn print_phases_and_workers(m: &RunMetrics) {
     println!("phases: {}", m.phase_summary());
+    let locality = m.locality_summary();
+    if !locality.is_empty() {
+        println!("locality: {locality}");
+    }
     if m.worker_busy.is_empty() {
         return;
     }

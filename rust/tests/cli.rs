@@ -80,7 +80,22 @@ fn run_bipartite_stream_reduce_end_to_end() {
     assert!(stdout.contains("pair_kernel=bipartite-merge"), "{stdout}");
     assert!(stdout.contains("stream_reduce"), "{stdout}");
     assert!(stdout.contains("phases:"), "{stdout}");
+    // bipartite + streaming always has panel probes and folds to report
+    assert!(stdout.contains("locality:"), "{stdout}");
+    assert!(stdout.contains("panel_cache="), "{stdout}");
+    assert!(stdout.contains("folds="), "{stdout}");
     assert!(stdout.contains("workers:"), "{stdout}");
+}
+
+#[test]
+fn run_no_affinity_flag_accepted() {
+    let out = demst()
+        .args(["run", "--data", "blobs", "--n", "60", "--d", "4", "--parts", "3", "--no-affinity"])
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(!stdout.contains("scatter_saved="), "dense model saves nothing: {stdout}");
 }
 
 #[test]

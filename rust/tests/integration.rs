@@ -166,7 +166,15 @@ fn net_simulation_delays_increase_wall_not_result() {
         &BlobSpec { n: 100, d: 8, k: 4, std: 0.3, spread: 6.0 },
         Pcg64::seeded(1003),
     );
-    let mut cfg = RunConfig { parts: 4, workers: 2, kernel: KernelChoice::PrimDense, ..Default::default() };
+    // affinity off: the dense byte model is deterministic, so the two runs
+    // must charge identical traffic regardless of scheduling interleavings
+    let mut cfg = RunConfig {
+        parts: 4,
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        affinity: false,
+        ..Default::default()
+    };
     let fast = run_distributed(&ds, &cfg).unwrap();
     cfg.net.simulate_delays = true;
     cfg.net.latency_us = 3000; // 3ms per message, 13 messages minimum
@@ -183,7 +191,8 @@ fn net_simulation_delays_increase_wall_not_result() {
 
 #[test]
 fn metrics_account_scatter_exactly() {
-    // strategy-independent invariant: scatter bytes = Σ_jobs (16 + |S|*4 + |S|*d*4)
+    // dense-model (affinity off) strategy-independent invariant:
+    // scatter bytes = Σ_jobs (16 + |S|*4 + |S|*d*4)
     let (ds, _) = gaussian_blobs_labeled(
         &BlobSpec { n: 120, d: 10, k: 4, std: 0.3, spread: 6.0 },
         Pcg64::seeded(1004),
@@ -194,6 +203,7 @@ fn metrics_account_scatter_exactly() {
             workers: 2,
             kernel: KernelChoice::PrimDense,
             strategy: PartitionStrategy::RoundRobin,
+            affinity: false,
             ..Default::default()
         };
         let out = run_distributed(&ds, &cfg).unwrap();

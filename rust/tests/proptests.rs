@@ -212,6 +212,137 @@ fn prop_exec_paths_and_pair_kernels_agree() {
             (expect_w - got_w).abs() <= 1e-9 * (1.0 + expect_w.abs()),
             "weights: {expect_w} vs {got_w}"
         );
+
+        // Locality-aware path (affinity is the default above): the same
+        // tree as the dense byte model, never more scatter, and the saved
+        // counter reconciles the two models byte-for-byte.
+        assert!(cfg.affinity, "affinity routing must be the default");
+        let mut dense_cfg = cfg.clone();
+        dense_cfg.affinity = false;
+        let dense_model = run_distributed(&ds, &dense_cfg).unwrap();
+        assert_eq!(expect, normalize_tree(&dense_model.mst), "dense-model {metric:?}");
+        assert_eq!(
+            bip.metrics.scatter_bytes + bip.metrics.scatter_saved_bytes,
+            dense_model.metrics.scatter_bytes,
+            "charged + saved == dense model ({metric:?} parts={parts})"
+        );
+        assert!(bip.metrics.scatter_bytes <= dense_model.metrics.scatter_bytes);
+        if cfg.stream_reduce {
+            // incremental reducer: merge-join folds, O(|V|) each — never a
+            // full re-sort of the running union
+            assert!(bip.metrics.reduce_folds > 0);
+            assert!(
+                bip.metrics.reduce_fold_edges
+                    <= bip.metrics.reduce_folds as u64 * 2 * (n as u64 - 1)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_affinity_decks_claim_every_job_exactly_once() {
+    // JobQueue-level invariant: under concurrent stealing from per-worker
+    // affinity decks, every pair job is claimed exactly once, and jobs only
+    // count as stolen when popped off a foreign deck.
+    use demst::exec::{ExecPlan, JobQueue};
+    use std::sync::Mutex;
+
+    Runner::new("affinity queue exactly-once", 0xAB, 20).run(|g| {
+        let n = g.usize_in(12..80);
+        let d = g.usize_in(1..5);
+        let ds = int_points(g, n, d);
+        let parts = g.usize_in(2..9).min(n / 2);
+        let strategy = match g.usize_in(0..4) {
+            0 => PartitionStrategy::Block,
+            1 => PartitionStrategy::RoundRobin,
+            2 => PartitionStrategy::RandomShuffle,
+            _ => PartitionStrategy::KMeansLite,
+        };
+        let plan = ExecPlan::new(&ds, parts, strategy, g.rng().next_u64());
+        let n_workers = g.usize_in(1..7);
+        let aff = plan.affinity(n_workers);
+        let queue = JobQueue::with_decks(aff.decks.clone());
+        assert_eq!(queue.len(), plan.n_jobs());
+        let claimed: Mutex<Vec<(usize, usize, bool)>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            let queue = &queue;
+            let claimed = &claimed;
+            for w in 0..n_workers {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some((job, stolen)) = queue.pop_for(w) {
+                        local.push((w, job, stolen));
+                    }
+                    claimed.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let got = claimed.into_inner().unwrap();
+        assert_eq!(got.len(), plan.n_jobs(), "every job claimed");
+        let mut seen = vec![false; plan.n_jobs()];
+        for &(w, job, stolen) in &got {
+            assert!(!seen[job], "job {job} claimed twice");
+            seen[job] = true;
+            let on_own_deck = aff.decks[w % aff.decks.len()].contains(&job);
+            if !stolen {
+                assert!(on_own_deck, "worker {w} popped job {job} unstolen off a foreign deck");
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    });
+}
+
+#[test]
+fn prop_affinity_scatter_never_exceeds_dense_model() {
+    // Engine-level invariant, any seed/parts/workers/kernel: total charged
+    // scatter under affinity routing is ≤ the dense model, the saved
+    // counter accounts for the difference exactly, and for parts ≥ 4 with
+    // few workers the saving is strict (pigeonhole: some worker must run
+    // two jobs sharing a subset).
+    use demst::config::{KernelChoice, PairKernelChoice, RunConfig};
+    use demst::coordinator::run_distributed;
+
+    Runner::new("affinity scatter bound", 0xAC, 10).run(|g| {
+        let n = g.usize_in(16..64);
+        let d = g.usize_in(1..6);
+        let ds = int_points(g, n, d);
+        let parts = g.usize_in(4..8).min(n / 4);
+        let strict = parts >= 4 && g.bool_p(0.5);
+        let workers = if strict { g.usize_in(1..3) } else { g.usize_in(1..6) };
+        let mut cfg = RunConfig {
+            parts,
+            workers,
+            seed: g.rng().next_u64(),
+            kernel: KernelChoice::PrimDense,
+            pair_kernel: if g.bool_p(0.5) {
+                PairKernelChoice::BipartiteMerge
+            } else {
+                PairKernelChoice::Dense
+            },
+            ..Default::default()
+        };
+        cfg.affinity = false;
+        let dense = run_distributed(&ds, &cfg).unwrap();
+        cfg.affinity = true;
+        let aff = run_distributed(&ds, &cfg).unwrap();
+        assert_eq!(normalize_tree(&dense.mst), normalize_tree(&aff.mst));
+        assert!(
+            aff.metrics.scatter_bytes <= dense.metrics.scatter_bytes,
+            "affinity {} > dense {} (parts={parts} workers={workers})",
+            aff.metrics.scatter_bytes,
+            dense.metrics.scatter_bytes
+        );
+        assert_eq!(
+            aff.metrics.scatter_bytes + aff.metrics.scatter_saved_bytes,
+            dense.metrics.scatter_bytes,
+            "saved counter must reconcile the models (parts={parts} workers={workers})"
+        );
+        if strict {
+            assert!(
+                aff.metrics.scatter_bytes < dense.metrics.scatter_bytes,
+                "parts={parts} workers={workers}: saving must be strict"
+            );
+        }
     });
 }
 

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Bench-schema guard: fail if a BENCH_e*.json lost a section or key.
+
+Run after the bench binaries (``make bench`` or the CI bench-smoke job)
+against the freshly written JSON files. A bench section silently
+disappearing — e.g. a refactor dropping the ``stream_fold`` micro-bench —
+is exactly the regression this catches: CI goes red instead of the
+measurement quietly vanishing from the record.
+
+Usage: check_bench_schema.py BENCH_e7.json BENCH_e8.json ...
+"""
+
+import json
+import sys
+
+# Required row sections per bench id. Keep in sync with the bench binaries
+# (rust/benches/e7_kernel.rs, rust/benches/e8_end_to_end.rs); a new section
+# should be added here in the same PR that starts recording it.
+REQUIRED_SECTIONS = {
+    "e7_kernel": {"cheapest_edge", "prim_dense"},
+    "e8_end_to_end": {"pair_kernel", "stream_fold"},
+}
+REQUIRED_TOP_KEYS = {"bench", "rows"}
+
+
+def check(path):
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    for key in sorted(REQUIRED_TOP_KEYS):
+        if key not in doc:
+            errors.append(f"{path}: missing top-level key {key!r}")
+    bench = doc.get("bench")
+    required = REQUIRED_SECTIONS.get(bench)
+    if required is None:
+        errors.append(f"{path}: unknown bench id {bench!r} "
+                      f"(known: {sorted(REQUIRED_SECTIONS)})")
+        return errors
+    rows = doc.get("rows") or []
+    if not rows:
+        errors.append(f"{path}: no recorded rows — did the bench run?")
+        return errors
+    got = {row.get("section") for row in rows}
+    missing = required - got
+    if missing:
+        errors.append(f"{path}: bench sections disappeared: {sorted(missing)} "
+                      f"(present: {sorted(s for s in got if s)})")
+    return errors
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_bench_schema.py BENCH_e7.json BENCH_e8.json ...",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in argv:
+        errors.extend(check(path))
+    for err in errors:
+        print(f"SCHEMA ERROR: {err}", file=sys.stderr)
+    if not errors:
+        print(f"bench schema OK: {', '.join(argv)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
