@@ -1,7 +1,7 @@
 # Convenience targets. The Rust build needs no artifacts; `make artifacts`
 # requires a python environment with jax (the AOT layer is optional).
 
-.PHONY: build test artifacts artifacts-quick bench bench-fast fmt
+.PHONY: build test artifacts artifacts-quick bench bench-fast tcp-smoke fmt
 
 build:
 	cargo build --release
@@ -17,13 +17,20 @@ artifacts:
 artifacts-quick:
 	cd python && python -m compile.aot --out-dir ../artifacts --quick
 
-# Run both recorded bench binaries (fast shapes) and verify no bench
-# section disappeared from the BENCH_e7/e8 JSON schemas. CI runs the same
-# sequence in the bench-smoke job.
+# Run both recorded bench binaries (fast shapes), verify no bench section
+# disappeared from the BENCH_e7/e8 JSON schemas, and run the multi-process
+# loopback smoke. CI runs the same sequence in the bench-smoke + tcp-smoke
+# jobs.
 bench:
 	DEMST_BENCH_FAST=1 cargo bench --bench e7_kernel
 	DEMST_BENCH_FAST=1 cargo bench --bench e8_end_to_end
 	python3 scripts/check_bench_schema.py BENCH_e7.json BENCH_e8.json
+	$(MAKE) tcp-smoke
+
+# Loopback multi-process smoke: leader + 2 `demst worker` processes on
+# 127.0.0.1, asserting exit 0 and a sim-identical MST checksum.
+tcp-smoke: build
+	./scripts/tcp_smoke.sh
 
 # Quick benchmark sweep (reduced shapes/samples); e7 writes BENCH_e7.json.
 bench-fast:

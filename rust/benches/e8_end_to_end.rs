@@ -144,6 +144,79 @@ fn main() {
     }
     t2.print();
 
+    // --------- transport ablation: simulated fabric vs loopback TCP.
+    // Same seed/shape/kernel, 2 workers; the tcp run drives real `net::worker`
+    // endpoints over loopback sockets, so its byte counters are actual
+    // encoded frame sizes — and must reconcile with the simulated charges
+    // through the resident-set invariant (charged + saved is schedule-
+    // independent).
+    use demst::config::TransportChoice;
+    use std::net::TcpListener;
+
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    cfg.stream_reduce = false;
+    cfg.workers = 2;
+    let sim2 = run_distributed(&ds, &cfg).unwrap();
+    let sim2_ms = sim2.metrics.wall.as_secs_f64() * 1e3;
+
+    let mut tcfg = cfg.clone();
+    tcfg.transport = TransportChoice::Tcp;
+    tcfg.listen = Some("127.0.0.1:0".into());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let endpoints: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(move || {
+                demst::net::worker::run(&addr.to_string(), std::time::Duration::from_secs(30))
+            })
+        })
+        .collect();
+    let tcp = demst::net::launch::serve(&ds, &tcfg, &listener).unwrap();
+    for h in endpoints {
+        h.join().unwrap().unwrap();
+    }
+    let tcp_ms = tcp.metrics.wall.as_secs_f64() * 1e3;
+    assert_eq!(
+        demst::mst::normalize_tree(&exact),
+        demst::mst::normalize_tree(&tcp.mst),
+        "loopback tcp must stay exact"
+    );
+    assert_eq!(
+        tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
+        sim2.metrics.scatter_bytes + sim2.metrics.scatter_saved_bytes,
+        "tcp frame bytes + savings must reconcile with the simulated model"
+    );
+    let mut t4 = Table::new(
+        format!("E8d transport (n={n}, d={d}, |P|={parts}, workers=2, bipartite-merge)"),
+        &["transport", "wall ms", "scatter", "gather", "msgs", "vs sim"],
+    );
+    let transport_rows = [
+        ("sim", &sim2.metrics, sim2_ms, None),
+        ("tcp-loopback", &tcp.metrics, tcp_ms, Some(sim2_ms / tcp_ms.max(1e-9))),
+    ];
+    for (name, m, ms, speedup) in &transport_rows {
+        t4.push_row(&[
+            name.to_string(),
+            format!("{ms:.1}"),
+            demst::util::human_bytes(m.scatter_bytes),
+            demst::util::human_bytes(m.gather_bytes),
+            m.messages.to_string(),
+            speedup.map_or("-".to_string(), |s| format!("{s:.2}x")),
+        ]);
+    }
+    t4.print();
+    let transport_json: Vec<TransportRow> = transport_rows
+        .iter()
+        .map(|&(name, m, ms, speedup)| TransportRow {
+            provider: name,
+            ms,
+            scatter_bytes: m.scatter_bytes,
+            gather_bytes: m.gather_bytes,
+            messages: m.messages,
+            speedup,
+        })
+        .collect();
+
     // ------------- stream-reduce fold micro-bench: re-sort vs merge-join.
     // Folding the same |P|(|P|-1)/2 pair trees repeatedly; the baseline is
     // the pre-incremental reducer (a full Kruskal — i.e. a re-sort of
@@ -238,7 +311,7 @@ fn main() {
     ];
 
     let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e8.json".into());
-    match std::fs::write(&out_path, to_json(&rows, &stream_rows, n, d, parts, fast)) {
+    match std::fs::write(&out_path, to_json(&rows, &stream_rows, &transport_json, n, d, parts, fast)) {
         Ok(()) => println!("E8: wrote {out_path}"),
         Err(e) => eprintln!("E8: could not write {out_path}: {e}"),
     }
@@ -266,10 +339,20 @@ struct StreamRow {
     speedup: Option<f64>,
 }
 
+struct TransportRow {
+    provider: &'static str,
+    ms: f64,
+    scatter_bytes: u64,
+    gather_bytes: u64,
+    messages: u64,
+    speedup: Option<f64>,
+}
+
 /// Hand-rolled JSON (no serde in the offline vendor set).
 fn to_json(
     rows: &[JsonRow],
     stream_rows: &[StreamRow],
+    transport_rows: &[TransportRow],
     n: usize,
     d: usize,
     parts: usize,
@@ -301,6 +384,15 @@ fn to_json(
             "    {{\"section\": \"stream_fold\", \"provider\": \"{}\", \"ms\": {:.4}, \
              \"folds_per_sec\": {:.2}, \"fold_edges\": {}, \"speedup_vs_resort\": {}}}",
             r.provider, r.ms, r.folds_per_sec, fold_edges, speedup,
+        ));
+    }
+    for r in transport_rows {
+        let speedup = r.speedup.map_or("null".to_string(), |v| format!("{v:.4}"));
+        row_strs.push(format!(
+            "    {{\"section\": \"transport\", \"provider\": \"{}\", \"ms\": {:.4}, \
+             \"scatter_bytes\": {}, \"gather_bytes\": {}, \"messages\": {}, \
+             \"speedup_vs_sim\": {}}}",
+            r.provider, r.ms, r.scatter_bytes, r.gather_bytes, r.messages, speedup,
         ));
     }
     s.push_str(&row_strs.join(",\n"));

@@ -4,5 +4,7 @@
 pub mod toml_lite;
 pub mod run_config;
 
-pub use run_config::{DataConfig, KernelChoice, NetConfig, PairKernelChoice, RunConfig};
+pub use run_config::{
+    DataConfig, KernelChoice, NetConfig, PairKernelChoice, RunConfig, TransportChoice,
+};
 pub use toml_lite::{parse_toml, TomlValue};

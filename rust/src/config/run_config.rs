@@ -67,6 +67,34 @@ impl PairKernelChoice {
     }
 }
 
+/// Which transport moves leader↔worker bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportChoice {
+    /// in-process simulated fabric: worker threads share memory, the byte
+    /// model charges what the wire encoding *would* occupy
+    Sim,
+    /// real multi-process transport: one blocking TCP socket per
+    /// leader↔worker link, counters fed by actual encoded frame sizes
+    Tcp,
+}
+
+impl TransportChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportChoice::Sim => "sim",
+            TransportChoice::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" | "simulated" | "netsim" => Some(Self::Sim),
+            "tcp" => Some(Self::Tcp),
+            _ => None,
+        }
+    }
+}
+
 /// Simulated network model parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetConfig {
@@ -145,6 +173,17 @@ pub struct RunConfig {
     /// bounded (≤ |V|-1 edge) running MSF instead of buffering the full
     /// `O(|V|·|P|)` union for one final Kruskal
     pub stream_reduce: bool,
+    /// `sim` (default) or `tcp` — which transport carries leader↔worker
+    /// traffic; `tcp` runs the identical engine against remote
+    /// `demst worker` processes
+    pub transport: TransportChoice,
+    /// leader bind address for `transport = tcp` (e.g. "127.0.0.1:7000";
+    /// port 0 picks a free port)
+    pub listen: Option<String>,
+    /// with `transport = tcp`: the leader spawns the `demst worker`
+    /// processes itself (on this host, against the bound address) instead
+    /// of waiting for externally started workers to connect
+    pub spawn_workers: bool,
     pub net: NetConfig,
     /// artifacts dir for the XLA kernel
     pub artifacts_dir: PathBuf,
@@ -167,6 +206,9 @@ impl Default for RunConfig {
             pair_kernel: PairKernelChoice::Dense,
             affinity: true,
             stream_reduce: false,
+            transport: TransportChoice::Sim,
+            listen: None,
+            spawn_workers: false,
             net: NetConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             verify: false,
@@ -213,6 +255,44 @@ impl RunConfig {
         if self.net.bandwidth <= 0.0 {
             bail!("net.bandwidth must be positive");
         }
+        if self.transport == TransportChoice::Tcp {
+            // Catch distributed-run misconfigurations up front with one-line
+            // errors instead of panics, hangs, or silently auto-sized fleets.
+            if self.listen.is_none() {
+                bail!("transport tcp requires --listen <addr> on the leader (workers connect with `demst worker --connect <addr>`)");
+            }
+            if self.workers == 0 {
+                bail!("transport tcp requires an explicit worker count (--workers N): a remote fleet cannot be auto-sized from local cores");
+            }
+            if self.parts < 2 {
+                bail!("transport tcp requires parts >= 2 (a single-subset run has nothing to distribute)");
+            }
+            // The engine caps workers at the pair-job count; accepting more
+            // connections than it will drive would strand real worker
+            // processes in their handshake timeout.
+            let jobs = crate::decomp::pair_count(self.parts);
+            if self.workers > jobs {
+                bail!(
+                    "transport tcp with parts = {} has only {jobs} pair jobs; --workers {} would leave {} worker processes unused (reduce --workers or raise --parts)",
+                    self.parts,
+                    self.workers,
+                    self.workers - jobs
+                );
+            }
+            // v1 wire limits (see net::wire): u16 subset indices / dimension,
+            // u8 worker ids in per-job Result routing.
+            if self.parts > u16::MAX as usize {
+                bail!("transport tcp supports at most {} parts (wire v1 limit)", u16::MAX);
+            }
+            if self.data.d > u16::MAX as usize {
+                bail!("transport tcp supports at most d = {} (wire v1 limit)", u16::MAX);
+            }
+            if self.workers > u8::MAX as usize {
+                bail!("transport tcp supports at most {} workers (wire v1 limit)", u8::MAX);
+            }
+        } else if self.spawn_workers {
+            bail!("--spawn-workers only applies to --transport tcp");
+        }
         Ok(())
     }
 }
@@ -252,6 +332,14 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         }
         ("", "affinity") => {
             cfg.affinity = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "transport") => {
+            cfg.transport = TransportChoice::parse(need_str()?)
+                .ok_or_else(|| anyhow!("unknown transport (sim|tcp)"))?
+        }
+        ("", "listen") => cfg.listen = Some(need_str()?.to_string()),
+        ("", "spawn_workers") => {
+            cfg.spawn_workers = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
         }
         ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
         ("", "strategy") => {
@@ -411,6 +499,47 @@ bandwidth = 1e9
         }
         assert_eq!(PairKernelChoice::parse("bogus"), None);
         assert!(RunConfig::from_toml("pair_kernel = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn transport_keys_parse_and_validate_early() {
+        assert_eq!(RunConfig::default().transport, TransportChoice::Sim);
+        // a complete tcp leader config parses
+        let cfg = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nspawn_workers = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportChoice::Tcp);
+        assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:0"));
+        assert!(cfg.spawn_workers);
+        // each missing/invalid piece fails with a clear one-line error
+        let e = RunConfig::from_toml("transport = \"tcp\"\nworkers = 2").unwrap_err();
+        assert!(e.to_string().contains("--listen"), "{e:#}");
+        let e = RunConfig::from_toml("transport = \"tcp\"\nlisten = \"127.0.0.1:0\"")
+            .unwrap_err();
+        assert!(e.to_string().contains("worker count"), "{e:#}");
+        let e = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 1",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("parts >= 2"), "{e:#}");
+        let e = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 300\nparts = 300",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("wire v1"), "{e:#}");
+        // more workers than pair jobs would strand real processes
+        let e = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 2",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("pair jobs"), "{e:#}");
+        assert!(RunConfig::from_toml("transport = \"carrier-pigeon\"").is_err());
+        // sim configs are untouched by the tcp-only requirements
+        let sim = RunConfig::from_toml("workers = 0").unwrap();
+        assert_eq!(sim.workers, 0, "workers = 0 still means auto under sim");
+        let e = RunConfig::from_toml("spawn_workers = true").unwrap_err();
+        assert!(e.to_string().contains("spawn-workers"), "{e:#}");
     }
 
     #[test]

@@ -6,11 +6,11 @@
 //! reference path. This module keeps the distributed-run entry point, the
 //! worker-count policy, and the [`DistOutput`] surface.
 
-use super::netsim::NetSim;
-use crate::config::RunConfig;
+use crate::config::{RunConfig, TransportChoice};
 use crate::coordinator::metrics::RunMetrics;
 use crate::data::Dataset;
 use crate::graph::Edge;
+use crate::net::NetSim;
 
 /// Output of a distributed run.
 #[derive(Clone, Debug)]
@@ -28,14 +28,23 @@ pub fn resolve_workers(cfg: &RunConfig) -> usize {
     crate::exec::resolve_workers(cfg)
 }
 
-/// Run the paper's Algorithm 1 distributed: thread-per-rank workers pulling
-/// jobs from the cost-LPT queue, gather (default) or local-⊕ + tree
-/// reduction (`cfg.reduce_tree`), optionally folding arriving trees into a
-/// bounded running MSF (`cfg.stream_reduce`). Returns the exact MSF plus
+/// Run the paper's Algorithm 1 distributed: rank workers pulling jobs from
+/// the cost-LPT queue, gather (default) or local-⊕ + tree reduction
+/// (`cfg.reduce_tree`), optionally folding arriving trees into a bounded
+/// running MSF (`cfg.stream_reduce`). Under `transport = sim` (default)
+/// ranks are threads over the byte-modeled [`NetSim`]; under
+/// `transport = tcp` the identical engine drives remote `demst worker`
+/// processes over real sockets ([`crate::net::launch`]), with the byte
+/// counters fed by actual encoded frames. Returns the exact MSF plus
 /// measured metrics.
 pub fn run_distributed(ds: &Dataset, cfg: &RunConfig) -> anyhow::Result<DistOutput> {
-    let net = NetSim::new(cfg.net.clone());
-    let run = crate::exec::execute_pooled(ds, cfg, &net)?;
+    let run = match cfg.transport {
+        TransportChoice::Sim => {
+            let net = NetSim::new(cfg.net.clone());
+            crate::exec::execute_pooled(ds, cfg, &net)?
+        }
+        TransportChoice::Tcp => crate::net::launch::run_leader(ds, cfg)?,
+    };
     Ok(DistOutput { mst: run.mst, metrics: run.metrics, workers: run.workers })
 }
 

@@ -1,28 +1,59 @@
 //! Typed messages between leader and workers, with wire-size accounting.
 //!
-//! Wire sizes model a compact binary encoding: fixed 16-byte header per
-//! message (type tag, ids, lengths) + payload. The netsim charges these
-//! sizes; nothing is actually serialized (threads share memory), which keeps
-//! the simulation honest *and* fast.
+//! Wire sizes are computed from the **real binary encoding** in
+//! [`crate::net::wire`] — a fixed 16-byte framed header (length prefix, type
+//! tag, ids, lengths) + payload. Under the simulated transport nothing is
+//! serialized (threads share memory) but the charged sizes are exactly what
+//! the TCP transport puts on the socket, which keeps the simulation honest:
+//! `encode(msg).len() == msg.wire_bytes()` for every variant (pinned by a
+//! proptest in `tests/proptests.rs`).
 
 use crate::data::Dataset;
 use crate::decomp::PairJob;
 use crate::graph::Edge;
 use std::time::Duration;
 
-/// Message header bytes (tag + routing + length fields).
+/// Message header bytes (length prefix + tag + routing + length fields).
 pub const HEADER_BYTES: u64 = 16;
 
+/// One subset's share of a pair-job scatter under the resident-set model:
+/// the vectors (with their global-id map) and/or the cached local MST,
+/// shipped only when the executing worker does not already hold them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubsetShip {
+    /// partition subset index
+    pub part: u32,
+    /// global-id map + the subset's rows (`ids.len() == points.n`)
+    pub vectors: Option<(Vec<u32>, Dataset)>,
+    /// the subset's cached local MST, compare-form weights
+    /// (bipartite-merge kernel only); always `|S_k| - 1` edges
+    pub tree: Option<Vec<Edge>>,
+}
+
 /// Leader ↔ worker messages.
-#[derive(Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Leader → worker: compute d-MST(S_i ∪ S_j). Carries the actual vectors
     /// (the scatter) and the local→global index map.
     Job { job: PairJob, global_ids: Vec<u32>, points: Dataset },
+    /// Leader → worker: one pair job under the resident-set model — only
+    /// the subsets (vectors and/or cached trees) the worker is missing ride
+    /// along; everything else is already resident from earlier jobs. The
+    /// wire size is exactly the engine's per-job scatter charge.
+    PairAssign { job: PairJob, ships: Vec<SubsetShip> },
+    /// Leader → worker: build the local MST of one partition subset
+    /// (bipartite-merge phase 1) and keep the subset resident.
+    LocalJob { part: u32, global_ids: Vec<u32>, points: Dataset },
+    /// Worker → leader: one subset's local MST (global ids, compare-form
+    /// weights) plus the build time.
+    LocalDone { part: u32, edges: Vec<Edge>, compute: Duration },
     /// Worker → leader (gather mode): one pair-tree, reindexed to global
     /// ids, plus the job's kernel compute time (used to model makespans on
     /// machines with fewer cores than ranks — see `metrics::modeled_makespan`).
     Result { job_id: u32, worker: usize, edges: Vec<Edge>, compute: Duration },
+    /// Worker → leader (reduce mode): job folded into the worker-local tree;
+    /// nothing to gather yet. Lets the leader's rendezvous loop advance.
+    Ack { job_id: u32 },
     /// Worker → leader (final): locally ⊕-combined tree (reduce mode only)
     /// plus work/timing/locality stats.
     WorkerDone {
@@ -44,31 +75,18 @@ pub enum Message {
 
 /// Wire bytes of a pair-job scatter shipping `ids` vectors of dimension `d`
 /// (header + global-id map + vector payload). The pull-based exec scheduler
-/// charges this without materializing a [`Message::Job`]; kept next to
-/// [`Message::wire_bytes`] so the two models cannot drift.
+/// charges this without materializing a [`Message::Job`]; it delegates to
+/// the same [`crate::net::wire`] size arithmetic the encoder uses, so the
+/// two models cannot drift.
 pub fn job_wire_bytes(ids: usize, d: usize) -> u64 {
-    HEADER_BYTES + ids as u64 * 4 + (ids * d) as u64 * 4
+    crate::net::wire::vectors_payload_bytes(ids, d) + HEADER_BYTES
 }
 
 impl Message {
-    /// Bytes this message would occupy on the wire.
+    /// Bytes this message occupies on the wire: the exact length of its
+    /// [`crate::net::wire`] encoding (header + payload).
     pub fn wire_bytes(&self) -> u64 {
-        match self {
-            Message::Job { global_ids, points, .. } => {
-                HEADER_BYTES + global_ids.len() as u64 * 4 + points.payload_bytes()
-            }
-            Message::Result { edges, .. } => {
-                HEADER_BYTES + edges.len() as u64 * Edge::WIRE_BYTES as u64
-            }
-            Message::WorkerDone { local_tree, .. } => {
-                // stats block: dist_evals u64 + busy u64 + jobs_run u32 +
-                // jobs_stolen u32 + panel_hits u64 + panel_misses u64
-                HEADER_BYTES
-                    + 40
-                    + local_tree.as_ref().map_or(0, |t| t.len() as u64 * Edge::WIRE_BYTES as u64)
-            }
-            Message::Shutdown => HEADER_BYTES,
-        }
+        crate::net::wire::encoded_len(self)
     }
 }
 
@@ -119,5 +137,42 @@ mod tests {
         };
         assert_eq!(a.wire_bytes(), 56, "header 16 + 40-byte stats block");
         assert_eq!(b.wire_bytes(), 56 + 60);
+    }
+
+    #[test]
+    fn local_job_matches_job_wire_model() {
+        let msg = Message::LocalJob {
+            part: 2,
+            global_ids: (0..30).collect(),
+            points: Dataset::zeros(30, 8),
+        };
+        assert_eq!(msg.wire_bytes(), job_wire_bytes(30, 8));
+    }
+
+    #[test]
+    fn local_done_and_ack_sizes() {
+        let done = Message::LocalDone {
+            part: 1,
+            edges: vec![Edge::new(0, 1, 1.0); 29],
+            compute: Duration::ZERO,
+        };
+        assert_eq!(done.wire_bytes(), 16 + 29 * 12);
+        assert_eq!(Message::Ack { job_id: 7 }.wire_bytes(), 16);
+        assert_eq!(Message::Shutdown.wire_bytes(), 16);
+    }
+
+    #[test]
+    fn pair_assign_charges_only_whats_shipped() {
+        // header only (everything resident)
+        let bare = Message::PairAssign { job: PairJob { id: 0, i: 0, j: 1 }, ships: vec![] };
+        assert_eq!(bare.wire_bytes(), 16);
+        // one subset's vectors + tree
+        let ship = SubsetShip {
+            part: 1,
+            vectors: Some(((0..10).collect(), Dataset::zeros(10, 4))),
+            tree: Some(vec![Edge::new(0, 1, 1.0); 9]),
+        };
+        let msg = Message::PairAssign { job: PairJob { id: 0, i: 0, j: 1 }, ships: vec![ship] };
+        assert_eq!(msg.wire_bytes(), 16 + (10 * 4 + 10 * 4 * 4) + 9 * 12);
     }
 }

@@ -37,6 +37,9 @@ pub struct RunMetrics {
     pub pair_kernel: String,
     /// whether the leader folded trees into a running MSF as they arrived
     pub stream_reduce: bool,
+    /// which transport carried the run's bytes: "sim" (modeled charges) or
+    /// "tcp" (counters fed by actual encoded frames on the sockets)
+    pub transport: String,
     /// wall time of the local-MST phase (bipartite-merge kernel only)
     pub phase_local_mst: Duration,
     /// wall time of the pair-job phase (scatter → solve → gather)
@@ -152,6 +155,9 @@ impl RunMetrics {
         if self.stream_reduce {
             s.push_str(" stream_reduce");
         }
+        if !self.transport.is_empty() {
+            s.push_str(&format!(" transport={}", self.transport));
+        }
         if let Some(note) = &self.kernel_fallback {
             s.push_str(&format!(" (fallback: {note})"));
         }
@@ -262,6 +268,7 @@ mod tests {
         let m = RunMetrics {
             pair_kernel: "bipartite-merge".into(),
             stream_reduce: true,
+            transport: "tcp".into(),
             local_mst_evals: 1200,
             pair_evals: 3400,
             ..Default::default()
@@ -269,6 +276,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("pair_kernel=bipartite-merge"), "{s}");
         assert!(s.contains("stream_reduce"), "{s}");
+        assert!(s.contains("transport=tcp"), "{s}");
         let p = m.phase_summary();
         assert!(p.contains("local_mst="), "{p}");
         assert!(p.contains("1.20K evals"), "{p}");

@@ -9,15 +9,20 @@
 //!
 //! The execution itself (worker pool, cost-LPT job dealing with idle
 //! stealing, streaming ⊕-reduction) is the shared [`crate::exec`] engine;
-//! [`run_distributed`] is a thin wrapper that provides the [`NetSim`]
-//! fabric and returns [`RunMetrics`]. Workers are OS threads, each owning
-//! its own d-MST kernel instance (including, for
+//! [`run_distributed`] is a thin wrapper that provides the transport
+//! fabric — the simulated [`NetSim`] by default, or real TCP links against
+//! `demst worker` processes for `transport = tcp` (see [`crate::net`]) —
+//! and returns [`RunMetrics`]. Under the simulated fabric, workers are OS
+//! threads, each owning its own d-MST kernel instance (including, for
 //! `KernelChoice::BoruvkaXla`, its own PJRT client and compiled
 //! executables: PJRT handles are thread-local by construction in the `xla`
 //! crate, which conveniently mirrors per-rank process memory).
+//!
+//! The simulated network itself now lives in [`crate::net::sim`] (this
+//! module re-exports it under its old names); its byte model and counters
+//! are unchanged.
 
 pub mod messages;
-pub mod netsim;
 pub mod metrics;
 pub mod worker;
 pub mod leader;
@@ -25,4 +30,4 @@ pub mod leader;
 pub use leader::{run_distributed, DistOutput};
 pub use messages::Message;
 pub use metrics::RunMetrics;
-pub use netsim::{NetCounters, NetSim};
+pub use crate::net::{NetCounters, NetSim};

@@ -5,8 +5,12 @@
 //! paper's schedule order (the `decomp::decomposed_mst` reference path);
 //! [`execute_pooled`] drives a `std::thread` worker pool with cost-LPT
 //! dealing + idle stealing over the same plan, with every scatter/gather
-//! charged to the [`NetSim`] byte model (the `coordinator::run_distributed`
-//! path). Per-phase timings and evaluation counters land in [`RunMetrics`].
+//! charged to a [`Transport`] (the `coordinator::run_distributed` path —
+//! the simulated [`NetSim`](crate::net::NetSim) byte model by default, or
+//! real TCP links via [`execute_pooled_remote`], where each pool thread
+//! proxies its jobs to a remote `demst worker` process through a
+//! [`RemoteSolver`] and the counters are fed by actual frame sizes).
+//! Per-phase timings and evaluation counters land in [`RunMetrics`].
 //!
 //! Pooled flow, bipartite-merge kernel:
 //!
@@ -21,14 +25,16 @@
 
 use super::pair_kernel::{
     subset_mst, BipartiteCtx, BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver,
+    Shipment, SolverFinal,
 };
 use super::plan::{AffinityPlan, ExecPlan};
 use super::scheduler::JobQueue;
 use crate::config::{PairKernelChoice, RunConfig};
 use crate::coordinator::messages::{job_wire_bytes, Message, HEADER_BYTES};
 use crate::coordinator::metrics::RunMetrics;
-use crate::coordinator::netsim::{Direction, NetSim};
 use crate::data::Dataset;
+use crate::net::remote::RemoteSolver;
+use crate::net::{Direction, TcpTransport, Transport};
 use crate::decomp::reduction::{reduce_trees_with, tree_merge, StreamReducer};
 use crate::decomp::{pair_count, DecompConfig, DecompOutput, PairJob};
 use crate::geometry::CountingMetric;
@@ -123,10 +129,54 @@ pub struct PooledRun {
 /// charged to `net` — under the resident-set model only payload the
 /// executing worker is missing, with the dense model's difference recorded
 /// in `RunMetrics::scatter_saved_bytes`.
-pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Result<PooledRun> {
-    let t_start = Instant::now();
+pub fn execute_pooled(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    net: &dyn Transport,
+) -> anyhow::Result<PooledRun> {
     let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
+    execute_pooled_inner(ds, cfg, net, None, plan)
+}
+
+/// The identical pooled engine run against **remote worker processes**:
+/// pool thread `w` proxies every job it claims (same decks, same resident-
+/// set model, same stealing) to remote worker `w` through a
+/// [`RemoteSolver`] over `tcp`'s socket. [`Transport::charge`] no-ops on
+/// the TCP transport — the counters are fed by the actual encoded frames
+/// the proxies and the local-MST phase put on the wire, which equal the
+/// modeled charges byte-for-byte because [`Message::wire_bytes`] is
+/// computed from the real wire encoding.
+///
+/// `plan` is the **same plan the handshake announced**: the caller
+/// ([`crate::net::launch::serve`]) partitions once, tells every worker the
+/// partition layout in its `Setup` frame, and hands the identical plan
+/// here — so the section lengths workers derive for `PairAssign` frames
+/// can never drift from the jobs the engine actually ships.
+pub fn execute_pooled_remote(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    tcp: &TcpTransport,
+    plan: ExecPlan,
+) -> anyhow::Result<PooledRun> {
+    execute_pooled_inner(ds, cfg, tcp, Some(tcp), plan)
+}
+
+fn execute_pooled_inner(
+    ds: &Dataset,
+    cfg: &RunConfig,
+    net: &dyn Transport,
+    remote: Option<&TcpTransport>,
+    plan: ExecPlan,
+) -> anyhow::Result<PooledRun> {
+    let t_start = Instant::now();
     let n_workers = resolve_workers(cfg);
+    if let Some(tcp) = remote {
+        anyhow::ensure!(
+            tcp.len() == n_workers,
+            "transport holds {} worker links but the plan resolves to {n_workers} workers",
+            tcp.len()
+        );
+    }
     let counters = net.counters();
 
     // Subset-affinity routing + resident-set byte model (cfg.affinity):
@@ -145,6 +195,7 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
         kernel_fallback: crate::runtime::kernel_fallback_note(cfg),
         pair_kernel: cfg.pair_kernel.name().to_string(),
         stream_reduce: cfg.stream_reduce,
+        transport: if remote.is_some() { "tcp" } else { "sim" }.to_string(),
         ..Default::default()
     };
 
@@ -156,8 +207,16 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
         PairKernelChoice::BipartiteMerge => {
             let t = Instant::now();
             let ctx = BipartiteCtx::new(ds, cfg.metric);
-            let (cache, phase_busy) =
-                build_cache_pooled(ds, &ctx, &plan, n_workers, net, affinity.as_ref(), &residents);
+            let (cache, phase_busy) = build_cache_pooled(
+                ds,
+                &ctx,
+                &plan,
+                n_workers,
+                net,
+                affinity.as_ref(),
+                &residents,
+                remote,
+            )?;
             for (w, b) in phase_busy.into_iter().enumerate() {
                 metrics.worker_busy[w] += b;
             }
@@ -178,12 +237,14 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
     let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
     let mut stream = if cfg.stream_reduce { Some(StreamReducer::new(ds.n)) } else { None };
     let mut reduce_time = Duration::ZERO;
+    let worker_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
         let plan_ref = &plan;
         let queue_ref = &queue;
         let bip_ref = bip.as_ref();
         let saved_ref = &scatter_saved;
+        let errors_ref = &worker_errors;
         let use_affinity = affinity.is_some();
         for (w, resident) in residents.iter().enumerate() {
             let tx = tx_leader.clone();
@@ -195,10 +256,12 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
                     queue_ref,
                     cfg,
                     net,
+                    remote,
                     bip_ref,
                     use_affinity,
                     resident,
                     saved_ref,
+                    errors_ref,
                     tx,
                 )
             });
@@ -258,6 +321,10 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
         Ok(())
     })?;
 
+    let worker_errors = worker_errors.into_inner().unwrap();
+    if !worker_errors.is_empty() {
+        anyhow::bail!("distributed run failed: {}", worker_errors.join("; "));
+    }
     let expected_jobs = plan.n_jobs() as u32;
     if metrics.jobs != expected_jobs {
         anyhow::bail!(
@@ -308,62 +375,77 @@ pub fn execute_pooled(ds: &Dataset, cfg: &RunConfig, net: &NetSim) -> anyhow::Re
 /// One pooled worker: claim jobs until the decks drain (own deck first,
 /// then stealing), charging the scatter for each claimed job — under the
 /// resident-set model only the payload this worker does not yet hold — and
-/// shipping each pair tree (or a locally ⊕-combined tree) back through the
-/// simulated network.
+/// shipping each pair tree (or a locally ⊕-combined tree) back to the
+/// leader. In-process solvers share the leader's memory (the charge is the
+/// byte *model*); under [`execute_pooled_remote`] the solver is a
+/// [`RemoteSolver`] that puts exactly the computed [`Shipment`] on its
+/// worker's socket, so the modeled and measured bytes agree per job.
 fn pooled_worker(
     worker_id: usize,
     ds: &Dataset,
     plan: &ExecPlan,
     queue: &JobQueue,
     cfg: &RunConfig,
-    net: &NetSim,
+    net: &dyn Transport,
+    remote: Option<&TcpTransport>,
     bip: Option<&(BipartiteCtx, LocalMstCache)>,
     use_affinity: bool,
     resident: &Mutex<Vec<bool>>,
     scatter_saved: &AtomicU64,
+    errors: &Mutex<Vec<String>>,
     tx_leader: Sender<Message>,
 ) {
-    let mut solver: Box<dyn PairSolver + '_> = match bip {
-        Some((ctx, cache)) => Box::new(BipartitePairSolver::new(ds, ctx, cache)),
-        None => match crate::coordinator::worker::build_kernel(cfg) {
-            Ok(kernel) => Box::new(DensePairSolver::owned(ds, kernel)),
-            Err(e) => {
-                // Report failure as an empty done message; the leader
-                // surfaces the error when the job count comes up short.
-                eprintln!("worker {worker_id}: kernel init failed: {e:#}");
-                let _ = net.send(
-                    &tx_leader,
-                    Message::WorkerDone {
-                        worker: worker_id,
-                        local_tree: None,
-                        dist_evals: 0,
-                        busy: Duration::ZERO,
-                        jobs_run: 0,
-                        jobs_stolen: 0,
-                        panel_hits: 0,
-                        panel_misses: 0,
-                    },
-                    Direction::Gather,
-                );
-                return;
-            }
-        },
+    let cache = bip.map(|(_, c)| c);
+    let mut solver: Box<dyn PairSolver + '_> = if let Some(tcp) = remote {
+        Box::new(RemoteSolver::new(tcp, worker_id, ds, cache, cfg.reduce_tree))
+    } else {
+        match bip {
+            Some((ctx, cache)) => Box::new(BipartitePairSolver::new(ds, ctx, cache)),
+            None => match crate::coordinator::worker::build_kernel(cfg) {
+                Ok(kernel) => Box::new(DensePairSolver::owned(ds, kernel)),
+                Err(e) => {
+                    // Report failure as an empty done message; the leader
+                    // surfaces the recorded error after the gather loop.
+                    errors
+                        .lock()
+                        .unwrap()
+                        .push(format!("worker {worker_id}: kernel init failed: {e:#}"));
+                    let _ = net.send(
+                        &tx_leader,
+                        Message::WorkerDone {
+                            worker: worker_id,
+                            local_tree: None,
+                            dist_evals: 0,
+                            busy: Duration::ZERO,
+                            jobs_run: 0,
+                            jobs_stolen: 0,
+                            panel_hits: 0,
+                            panel_misses: 0,
+                        },
+                        Direction::Gather,
+                    );
+                    return;
+                }
+            },
+        }
     };
     let local_reduce = cfg.reduce_tree;
-    let cache = bip.map(|(_, c)| c);
     let mut busy = Duration::ZERO;
     let mut jobs_run = 0u32;
     let mut jobs_stolen = 0u32;
     let mut local_tree: Option<Vec<Edge>> = None;
     while let Some((job_idx, stolen)) = queue.pop_for(worker_id) {
         let job = &plan.jobs[job_idx];
-        // Model the leader→worker scatter of this job's payload.
-        let dense_bytes = job_scatter_bytes(plan, job, ds.d, cache);
-        let bytes = if use_affinity {
+        // The leader→worker scatter of this job's payload: what the dense
+        // model would ship, minus what this worker already holds.
+        let full = dense_shipment(job, cache.is_some());
+        let dense_bytes = shipment_bytes(plan, job, ds.d, cache, &full);
+        let (bytes, ship) = if use_affinity {
             let mut res = resident.lock().unwrap();
-            affinity_scatter_bytes(plan, job, ds.d, cache, res.as_mut_slice())
+            let ship = residual_shipment(job, cache.is_some(), res.as_mut_slice());
+            (shipment_bytes(plan, job, ds.d, cache, &ship), ship)
         } else {
-            dense_bytes
+            (dense_bytes, full)
         };
         net.charge(bytes, Direction::Scatter);
         scatter_saved.fetch_add(dense_bytes - bytes, Ordering::Relaxed);
@@ -371,21 +453,40 @@ fn pooled_worker(
             jobs_stolen += 1;
         }
         let t = Instant::now();
-        let tree = solver.solve(plan, job);
-        let compute = t.elapsed();
+        let solved = match solver.solve_shipped(plan, job, &ship) {
+            Ok(s) => s,
+            Err(e) => {
+                errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("worker {worker_id}: pair job {} failed: {e:#}", job.id));
+                break;
+            }
+        };
+        let compute = solved.compute.unwrap_or_else(|| t.elapsed());
         busy += compute;
         jobs_run += 1;
         if local_reduce {
-            let t2 = Instant::now();
-            local_tree = Some(match local_tree.take() {
-                None => tree,
-                Some(prev) => tree_merge(ds.n, &prev, &tree),
-            });
-            busy += t2.elapsed();
+            // A remote solver ⊕-folds on the far side of the wire (its Ack
+            // carries nothing); folding its empty returns again would be a
+            // second reduction.
+            if !solver.folds_remotely() {
+                let t2 = Instant::now();
+                local_tree = Some(match local_tree.take() {
+                    None => solved.edges,
+                    Some(prev) => tree_merge(ds.n, &prev, &solved.edges),
+                });
+                busy += t2.elapsed();
+            }
         } else if net
             .send(
                 &tx_leader,
-                Message::Result { job_id: job.id, worker: worker_id, edges: tree, compute },
+                Message::Result {
+                    job_id: job.id,
+                    worker: worker_id,
+                    edges: solved.edges,
+                    compute,
+                },
                 Direction::Gather,
             )
             .is_err()
@@ -393,88 +494,113 @@ fn pooled_worker(
             return; // leader gone
         }
     }
-    // Queue drained: model the shutdown control message, then report.
+    // Queue drained (or aborted): model the shutdown control message, then
+    // drain the solver — for the remote proxy this is the shutdown
+    // rendezvous that collects the worker process's final stats (and its
+    // remotely ⊕-folded tree in reduce mode) — and report.
     net.charge(HEADER_BYTES, Direction::Control);
-    let (panel_hits, panel_misses) = solver.panel_stats();
+    let fin = match solver.finish() {
+        Ok(f) => f,
+        Err(e) => {
+            errors
+                .lock()
+                .unwrap()
+                .push(format!("worker {worker_id}: shutdown rendezvous failed: {e:#}"));
+            SolverFinal::default()
+        }
+    };
     let _ = net.send(
         &tx_leader,
         Message::WorkerDone {
             worker: worker_id,
-            local_tree,
-            dist_evals: solver.dist_evals(),
-            busy,
+            local_tree: fin.local_tree.or(local_tree),
+            dist_evals: fin.dist_evals,
+            busy: fin.busy.unwrap_or(busy),
             jobs_run,
             jobs_stolen,
-            panel_hits,
-            panel_misses,
+            panel_hits: fin.panel_hits,
+            panel_misses: fin.panel_misses,
         },
         Direction::Gather,
     );
 }
 
-/// Scatter bytes for one pair job under the **dense** model: header + id
-/// map + vector payload, plus — for the bipartite-merge kernel — the two
-/// cached local trees the job consumes instead of recomputing. The
-/// degenerate self-pair job under the bipartite kernel only consumes the
-/// cached tree (its vectors were already charged by the local-MST phase),
-/// so only the tree travels.
-fn job_scatter_bytes(
-    plan: &ExecPlan,
-    job: &PairJob,
-    d: usize,
-    cache: Option<&LocalMstCache>,
-) -> u64 {
-    let si = plan.parts[job.i as usize].len();
+/// The dense-model shipment: everything the job consumes travels, every
+/// time. The degenerate self-pair job (`|P| = 1`) under the bipartite
+/// kernel consumes only the cached tree (its vectors were already shipped
+/// by the local-MST phase); under the dense kernel it consumes the
+/// subset's vectors. `pub(crate)` so the remote proxy's bare `solve` path
+/// shares this decision instead of re-deriving it.
+pub(crate) fn dense_shipment(job: &PairJob, has_cache: bool) -> Shipment {
     if job.i == job.j {
-        return match cache {
-            Some(c) => {
-                HEADER_BYTES + c.trees[job.i as usize].len() as u64 * Edge::WIRE_BYTES as u64
-            }
-            None => job_wire_bytes(si, d),
-        };
+        if has_cache {
+            Shipment { tree_i: true, ..Default::default() }
+        } else {
+            Shipment { vec_i: true, ..Default::default() }
+        }
+    } else {
+        Shipment { vec_i: true, vec_j: true, tree_i: has_cache, tree_j: has_cache }
     }
-    let m = si + plan.parts[job.j as usize].len();
-    let mut bytes = job_wire_bytes(m, d);
-    if let Some(c) = cache {
-        let tree_edges = c.trees[job.i as usize].len() + c.trees[job.j as usize].len();
-        bytes += tree_edges as u64 * Edge::WIRE_BYTES as u64;
-    }
-    bytes
 }
 
-/// Scatter bytes for one pair job under the **resident-set** model: the
-/// same per-subset payload as [`job_scatter_bytes`], but charged only for
-/// subsets the executing worker does not already hold, and marked resident
-/// afterwards. Per job this is ≤ the dense model by construction (the
-/// per-subset terms are identical), so total affinity scatter can never
-/// exceed the dense model.
-fn affinity_scatter_bytes(
-    plan: &ExecPlan,
-    job: &PairJob,
-    d: usize,
-    cache: Option<&LocalMstCache>,
-    resident: &mut [bool],
-) -> u64 {
+/// The resident-set shipment: the same per-subset payload as
+/// [`dense_shipment`], restricted to subsets the executing worker does not
+/// already hold, which are marked resident afterwards. Per job this is ≤
+/// the dense model by construction (the per-subset terms are identical),
+/// so total affinity scatter can never exceed the dense model.
+fn residual_shipment(job: &PairJob, has_cache: bool, resident: &mut [bool]) -> Shipment {
     let (i, j) = (job.i as usize, job.j as usize);
-    let mut bytes = HEADER_BYTES;
+    let mut ship = Shipment::default();
     if i == j {
         if !resident[i] {
             resident[i] = true;
-            bytes += match cache {
-                Some(c) => c.trees[i].len() as u64 * Edge::WIRE_BYTES as u64,
-                None => subset_payload_bytes(plan, i, d),
-            };
-        }
-        return bytes;
-    }
-    for k in [i, j] {
-        if !resident[k] {
-            resident[k] = true;
-            bytes += subset_payload_bytes(plan, k, d);
-            if let Some(c) = cache {
-                bytes += c.trees[k].len() as u64 * Edge::WIRE_BYTES as u64;
+            if has_cache {
+                ship.tree_i = true;
+            } else {
+                ship.vec_i = true;
             }
         }
+        return ship;
+    }
+    if !resident[i] {
+        resident[i] = true;
+        ship.vec_i = true;
+        ship.tree_i = has_cache;
+    }
+    if !resident[j] {
+        resident[j] = true;
+        ship.vec_j = true;
+        ship.tree_j = has_cache;
+    }
+    ship
+}
+
+/// Wire bytes of one pair-job scatter under `ship`: exactly the length of
+/// the `PairAssign` frame the remote proxy encodes for it (header + the
+/// shipped sections) — the arithmetic delegates to [`crate::net::wire`], so
+/// the modeled charge and the measured frame cannot drift.
+fn shipment_bytes(
+    plan: &ExecPlan,
+    job: &PairJob,
+    d: usize,
+    cache: Option<&LocalMstCache>,
+    ship: &Shipment,
+) -> u64 {
+    let tree_bytes = |k: usize| {
+        cache.map_or(0, |c| c.trees[k].len() as u64 * Edge::WIRE_BYTES as u64)
+    };
+    let mut bytes = HEADER_BYTES;
+    if ship.vec_i {
+        bytes += subset_payload_bytes(plan, job.i as usize, d);
+    }
+    if ship.tree_i {
+        bytes += tree_bytes(job.i as usize);
+    }
+    if ship.vec_j {
+        bytes += subset_payload_bytes(plan, job.j as usize, d);
+    }
+    if ship.tree_j {
+        bytes += tree_bytes(job.j as usize);
     }
     bytes
 }
@@ -483,8 +609,7 @@ fn affinity_scatter_bytes(
 /// `job_wire_bytes(|S_i| + |S_j|, d) = HEADER_BYTES + Σ` of these, which is
 /// what keeps the dense and resident-set models consistent per subset.
 fn subset_payload_bytes(plan: &ExecPlan, k: usize, d: usize) -> u64 {
-    let ids = plan.parts[k].len() as u64;
-    ids * 4 + ids * d as u64 * 4
+    crate::net::wire::vectors_payload_bytes(plan.parts[k].len(), d)
 }
 
 /// Build the local-MST cache through the worker pool: one job per
@@ -492,18 +617,25 @@ fn subset_payload_bytes(plan: &ExecPlan, k: usize, d: usize) -> u64 {
 /// (idle stealing as fallback), in which case the builder marks the subset
 /// resident so the pair phase's byte model does not re-ship it. Scatter
 /// charges each subset's vectors exactly once either way; gather charges
-/// each returned local tree once. Also returns each pool worker's busy time
-/// so the engine can attribute this phase's compute to
-/// `RunMetrics::worker_busy`.
+/// each returned local tree once. Under a remote transport, pool thread `w`
+/// ships the subset as a `LocalJob` frame to remote worker `w` — which
+/// keeps it resident and computes the tree over the gathered rows
+/// (bit-identical, see [`crate::exec::pair_kernel::subset_mst_gathered`]) —
+/// and the `LocalJob`/`LocalDone` frame sizes are exactly the modeled
+/// scatter/gather charges. Also returns each pool worker's busy time so
+/// the engine can attribute this phase's compute to
+/// `RunMetrics::worker_busy` (remote compute is the worker-measured time
+/// from the `LocalDone` frame, not the round-trip).
 fn build_cache_pooled(
     ds: &Dataset,
     ctx: &BipartiteCtx,
     plan: &ExecPlan,
     n_workers: usize,
-    net: &NetSim,
+    net: &dyn Transport,
     affinity: Option<&AffinityPlan>,
     residents: &[Mutex<Vec<bool>>],
-) -> (LocalMstCache, Vec<Duration>) {
+    remote: Option<&TcpTransport>,
+) -> anyhow::Result<(LocalMstCache, Vec<Duration>)> {
     let t = Instant::now();
     let p = plan.parts.len();
     let queue = match affinity {
@@ -516,12 +648,14 @@ fn build_cache_pooled(
     };
     let counter = CountingMetric::new(ctx.kind);
     let slots: Vec<Mutex<Option<Vec<Edge>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let n_spawn = n_workers.min(p);
     let busy: Vec<Mutex<Duration>> = (0..n_spawn).map(|_| Mutex::new(Duration::ZERO)).collect();
     std::thread::scope(|scope| {
         let queue_ref = &queue;
         let counter_ref = &counter;
         let slots_ref = &slots;
+        let errors_ref = &errors;
         for (w, busy_slot) in busy.iter().enumerate() {
             let resident = &residents[w];
             scope.spawn(move || {
@@ -533,16 +667,48 @@ fn build_cache_pooled(
                         // will hold its tree): seed the pair-phase model
                         resident.lock().unwrap()[k] = true;
                     }
-                    let t_job = Instant::now();
-                    let tree = subset_mst(
-                        ds.as_slice(),
-                        ds.d,
-                        ctx.block.as_ref(),
-                        &ctx.aux,
-                        counter_ref,
-                        ids,
-                    );
-                    *busy_slot.lock().unwrap() += t_job.elapsed();
+                    let tree = if let Some(tcp) = remote {
+                        let msg = Message::LocalJob {
+                            part: k as u32,
+                            global_ids: ids.clone(),
+                            points: ds.gather(ids),
+                        };
+                        let reply = tcp
+                            .send_to(w, &msg, Direction::Scatter)
+                            .and_then(|_| tcp.recv_from(w));
+                        match reply {
+                            Ok(Message::LocalDone { part, edges, compute })
+                                if part as usize == k =>
+                            {
+                                *busy_slot.lock().unwrap() += compute;
+                                edges
+                            }
+                            Ok(other) => {
+                                errors_ref.lock().unwrap().push(format!(
+                                    "worker {w}: expected LocalDone for subset {k}, got {other:?}"
+                                ));
+                                return;
+                            }
+                            Err(e) => {
+                                errors_ref.lock().unwrap().push(format!(
+                                    "worker {w}: local-MST job for subset {k} failed: {e:#}"
+                                ));
+                                return;
+                            }
+                        }
+                    } else {
+                        let t_job = Instant::now();
+                        let tree = subset_mst(
+                            ds.as_slice(),
+                            ds.d,
+                            ctx.block.as_ref(),
+                            &ctx.aux,
+                            counter_ref,
+                            ids,
+                        );
+                        *busy_slot.lock().unwrap() += t_job.elapsed();
+                        tree
+                    };
                     net.charge(
                         HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
                         Direction::Gather,
@@ -552,12 +718,35 @@ fn build_cache_pooled(
             });
         }
     });
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        anyhow::bail!("local-MST phase failed: {}", errors.join("; "));
+    }
     let trees: Vec<Vec<Edge>> = slots
         .into_iter()
-        .map(|s| s.into_inner().unwrap().expect("local MST computed"))
-        .collect();
+        .enumerate()
+        .map(|(k, s)| {
+            s.into_inner()
+                .unwrap()
+                .ok_or_else(|| anyhow::anyhow!("subset {k} local MST missing (worker failure?)"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    // The remote workers did the cache evaluations; the count is exact from
+    // the partition shape (Prim over m points is always C(m, 2) pairs) —
+    // identical to what the in-process CountingMetric records.
+    let evals = if remote.is_some() {
+        plan.parts
+            .iter()
+            .map(|p| {
+                let m = p.len() as u64;
+                m * m.saturating_sub(1) / 2
+            })
+            .sum()
+    } else {
+        counter.evals()
+    };
     let busy: Vec<Duration> = busy.into_iter().map(|b| b.into_inner().unwrap()).collect();
-    (LocalMstCache { trees, evals: counter.evals(), build_time: t.elapsed() }, busy)
+    Ok((LocalMstCache { trees, evals, build_time: t.elapsed() }, busy))
 }
 
 #[cfg(test)]
@@ -565,6 +754,7 @@ mod tests {
     use super::*;
     use crate::config::KernelChoice;
     use crate::data::generators::uniform;
+    use crate::net::NetSim;
     use crate::decomp::decomposed_mst;
     use crate::dense::PrimDense;
     use crate::geometry::MetricKind;

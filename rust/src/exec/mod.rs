@@ -6,8 +6,13 @@
 //!   over a [`DensePairSolver`] borrowing the caller's kernel;
 //! - [`crate::coordinator::run_distributed`] — distributed:
 //!   [`execute_pooled`] with `std::thread` workers, cost-LPT dealing with
-//!   idle stealing ([`JobQueue`]), [`NetSim`](crate::coordinator::NetSim)
-//!   byte accounting, and optional streaming ⊕-reduction at the leader.
+//!   idle stealing ([`JobQueue`]), byte accounting against a
+//!   [`Transport`](crate::net::Transport) — the simulated
+//!   [`NetSim`](crate::net::NetSim), or (via [`execute_pooled_remote`])
+//!   real TCP links with each pool thread proxying its jobs to a remote
+//!   `demst worker` process through a
+//!   [`RemoteSolver`](crate::net::remote::RemoteSolver) — and optional
+//!   streaming ⊕-reduction at the leader.
 //!
 //! The layer's pieces:
 //! - [`plan`] — [`ExecPlan`]: partition subsets + pair jobs + the
@@ -32,11 +37,14 @@ pub mod plan;
 pub mod scheduler;
 
 pub use engine::{
-    decomposed_mst_bipartite, execute_pooled, resolve_workers, run_serial, PooledRun, SerialRun,
+    decomposed_mst_bipartite, execute_pooled, execute_pooled_remote, resolve_workers, run_serial,
+    PooledRun, SerialRun,
 };
 pub use pair_kernel::{
-    bipartite_filtered_prim, bipartite_filtered_prim_blocked, emit_tree, subset_mst, BipartiteCtx,
-    BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver, PanelCache, SubsetPanel,
+    bipartite_filtered_prim, bipartite_filtered_prim_blocked, emit_tree, subset_mst,
+    subset_mst_gathered, BipartiteCtx, BipartitePairSolver, DensePairSolver, KeyedLru,
+    LocalMstCache, PairSolver, PanelCache, Shipment, Solved, SolverFinal, SubsetPanel,
+    PANEL_CACHE_CAP,
 };
 pub use plan::{AffinityPlan, ExecPlan};
 pub use scheduler::JobQueue;

@@ -41,11 +41,70 @@ use crate::util::fkey::edge_cmp;
 use std::cmp::Ordering;
 use std::time::{Duration, Instant};
 
+/// Which parts of a pair job's payload travel to the executing worker: the
+/// two subsets' vectors and (bipartite-merge kernel) their cached local
+/// MSTs. The engine computes this once per job from the resident-set model,
+/// charges exactly its byte size, and hands it to the solver — in-process
+/// solvers ignore it (they share memory), the remote proxy ships precisely
+/// these sections, which is what keeps the modeled and measured scatter
+/// byte-for-byte equal.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Shipment {
+    pub vec_i: bool,
+    pub vec_j: bool,
+    pub tree_i: bool,
+    pub tree_j: bool,
+}
+
+/// One solved pair job. `compute` is the remotely measured kernel time when
+/// the solve happened in another process (the engine's own stopwatch would
+/// otherwise fold wire time into the compute metrics); `None` means "use
+/// the caller's local measurement".
+#[derive(Clone, Debug)]
+pub struct Solved {
+    pub edges: Vec<Edge>,
+    pub compute: Option<Duration>,
+}
+
+/// End-of-run stats a solver reports when its queue drains. For in-process
+/// solvers this is just the counters; the remote proxy fills it from the
+/// worker process's final `WorkerDone` frame (including the remotely
+/// ⊕-folded tree in reduce mode and the remotely measured busy time).
+#[derive(Clone, Debug, Default)]
+pub struct SolverFinal {
+    pub dist_evals: u64,
+    pub panel_hits: u64,
+    pub panel_misses: u64,
+    /// remote-measured kernel busy time, when the compute happened in
+    /// another process (overrides the proxy's round-trip measurement)
+    pub busy: Option<Duration>,
+    /// remotely ⊕-folded worker tree (reduce mode on a remote solver)
+    pub local_tree: Option<Vec<Edge>>,
+}
+
 /// A solver for one pair job. `job.i == job.j` is the degenerate
 /// single-subset job (`|P| = 1`). Returned edges carry global vertex ids and
 /// emission-form weights.
 pub trait PairSolver {
     fn solve(&mut self, plan: &ExecPlan, job: &PairJob) -> Vec<Edge>;
+
+    /// Solve with an explicit payload shipment (the pooled engine's entry
+    /// point). In-process solvers share the leader's memory and ignore the
+    /// shipment; the remote proxy overrides this to put it on the wire.
+    fn solve_shipped(
+        &mut self,
+        plan: &ExecPlan,
+        job: &PairJob,
+        _ship: &Shipment,
+    ) -> anyhow::Result<Solved> {
+        Ok(Solved { edges: self.solve(plan, job), compute: None })
+    }
+
+    /// True when this solver ⊕-folds pair trees on the far side of a wire
+    /// (reduce mode): the engine must not fold its per-job returns again.
+    fn folds_remotely(&self) -> bool {
+        false
+    }
 
     /// Distance evaluations performed by *this solver* so far (for the
     /// bipartite kernel this excludes the shared local-MST cache build,
@@ -56,6 +115,19 @@ pub trait PairSolver {
     /// solvers without one (the dense kernel).
     fn panel_stats(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Drain-time stats. The remote proxy's override performs the shutdown
+    /// rendezvous with its worker process.
+    fn finish(&mut self) -> anyhow::Result<SolverFinal> {
+        let (panel_hits, panel_misses) = self.panel_stats();
+        Ok(SolverFinal {
+            dist_evals: self.dist_evals(),
+            panel_hits,
+            panel_misses,
+            busy: None,
+            local_tree: None,
+        })
     }
 }
 
@@ -179,40 +251,69 @@ impl SubsetPanel {
     }
 }
 
-/// A small per-worker LRU of [`SubsetPanel`]s keyed by subset id. Affinity
-/// routing sends consecutive jobs sharing a subset to the same worker, so a
-/// handful of slots is enough for high hit rates — the anchor subset stays
-/// resident while its partners rotate through.
-pub struct PanelCache {
+/// A small keyed LRU (most recently used last) with hit/miss counters —
+/// **the** panel-reuse policy, shared by the in-process [`PanelCache`]
+/// (values are built [`SubsetPanel`]s) and the remote worker's stats-only
+/// mirror (`KeyedLru<()>`, the subset data is already resident there), so
+/// panel metrics mean the same thing on both transports.
+pub struct KeyedLru<V> {
     /// LRU order: most recently used last
-    slots: Vec<(u32, SubsetPanel)>,
+    slots: Vec<(u32, V)>,
     cap: usize,
     pub hits: u64,
     pub misses: u64,
 }
 
-impl PanelCache {
-    /// `cap` is clamped to ≥ 2 so both panels of one pair job always fit.
+impl<V> KeyedLru<V> {
+    /// `cap` is clamped to ≥ 2 so both entries of one pair job always fit.
     pub fn new(cap: usize) -> Self {
         Self { slots: Vec::new(), cap: cap.max(2), hits: 0, misses: 0 }
     }
 
-    fn ensure(&mut self, ds: &Dataset, ctx: &BipartiteCtx, subset: u32, ids: &[u32]) {
-        if let Some(pos) = self.slots.iter().position(|(k, _)| *k == subset) {
+    /// Probe `key`: a hit moves it to most-recent, a miss builds the value
+    /// (evicting the least-recent entry at capacity). Returns whether it
+    /// hit.
+    pub fn ensure_with(&mut self, key: u32, build: impl FnOnce() -> V) -> bool {
+        if let Some(pos) = self.slots.iter().position(|(k, _)| *k == key) {
             self.hits += 1;
             let entry = self.slots.remove(pos);
             self.slots.push(entry);
-            return;
+            true
+        } else {
+            self.misses += 1;
+            if self.slots.len() == self.cap {
+                self.slots.remove(0);
+            }
+            self.slots.push((key, build()));
+            false
         }
-        self.misses += 1;
-        if self.slots.len() == self.cap {
-            self.slots.remove(0);
-        }
-        self.slots.push((subset, SubsetPanel::build(ds, ctx, ids)));
+    }
+
+    pub fn get(&self, key: u32) -> Option<&V> {
+        self.slots.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+}
+
+/// Panel-cache capacity, identical on both transports.
+pub const PANEL_CACHE_CAP: usize = 4;
+
+/// A small per-worker LRU of [`SubsetPanel`]s keyed by subset id. Affinity
+/// routing sends consecutive jobs sharing a subset to the same worker, so a
+/// handful of slots is enough for high hit rates — the anchor subset stays
+/// resident while its partners rotate through. The replacement policy and
+/// counters live in [`KeyedLru`].
+pub struct PanelCache {
+    lru: KeyedLru<SubsetPanel>,
+}
+
+impl PanelCache {
+    /// `cap` is clamped to ≥ 2 so both panels of one pair job always fit.
+    pub fn new(cap: usize) -> Self {
+        Self { lru: KeyedLru::new(cap) }
     }
 
     /// Fetch-or-build both panels of a pair job (`i != j`). With `cap ≥ 2`
-    /// the second `ensure` can never evict the first (it is most recent).
+    /// the second probe can never evict the first (it is most recent).
     pub fn pair(
         &mut self,
         ds: &Dataset,
@@ -223,11 +324,16 @@ impl PanelCache {
         sj: &[u32],
     ) -> (&SubsetPanel, &SubsetPanel) {
         debug_assert_ne!(i, j);
-        self.ensure(ds, ctx, i, si);
-        self.ensure(ds, ctx, j, sj);
-        let pi = self.slots.iter().position(|(k, _)| *k == i).expect("just ensured");
-        let pj = self.slots.iter().position(|(k, _)| *k == j).expect("just ensured");
-        (&self.slots[pi].1, &self.slots[pj].1)
+        self.lru.ensure_with(i, || SubsetPanel::build(ds, ctx, si));
+        self.lru.ensure_with(j, || SubsetPanel::build(ds, ctx, sj));
+        let pi = self.lru.get(i).expect("just ensured");
+        let pj = self.lru.get(j).expect("just ensured");
+        (pi, pj)
+    }
+
+    /// `(hits, misses)` across all probes.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.lru.hits, self.lru.misses)
     }
 }
 
@@ -257,7 +363,7 @@ impl<'a> BipartitePairSolver<'a> {
             ctx,
             cache,
             counter: CountingMetric::new(ctx.kind),
-            panels: PanelCache::new(4),
+            panels: PanelCache::new(PANEL_CACHE_CAP),
             blk: Vec::new(),
         }
     }
@@ -299,7 +405,7 @@ impl PairSolver for BipartitePairSolver<'_> {
     }
 
     fn panel_stats(&self) -> (u64, u64) {
-        (self.panels.hits, self.panels.misses)
+        self.panels.stats()
     }
 }
 
@@ -412,6 +518,33 @@ pub fn subset_mst(
         }
     }
     tree
+}
+
+/// [`subset_mst`] over a *gathered* subset matrix: `points` holds the
+/// subset's rows packed in ascending-global-id order, `global_ids[k]` is row
+/// `k`'s global id. Used by the remote worker, which holds only the subsets
+/// it was shipped — never the full matrix.
+///
+/// Bit-identical to [`subset_mst`] over the full matrix: per-pair distance
+/// arithmetic is independent of the surrounding rows (same [`DistanceBlock`]
+/// dot/norm path over the same two rows and per-row aux values), and the
+/// ascending-id packing makes local index order a strictly monotone map of
+/// global id order, so every `(w, u, v)` tie-break compares identically.
+/// Returned edges carry global endpoints, compare-form weights.
+pub fn subset_mst_gathered(
+    points: &Dataset,
+    block: &dyn DistanceBlock,
+    aux: &[f32],
+    counter: &CountingMetric,
+    global_ids: &[u32],
+) -> Vec<Edge> {
+    debug_assert_eq!(points.n, global_ids.len());
+    debug_assert!(global_ids.windows(2).all(|w| w[0] < w[1]), "ids must ascend");
+    let local: Vec<u32> = (0..points.n as u32).collect();
+    let tree = subset_mst(points.as_slice(), points.d, block, aux, counter, &local);
+    tree.iter()
+        .map(|e| Edge::new(global_ids[e.u as usize], global_ids[e.v as usize], e.w))
+        .collect()
 }
 
 /// Filtered Prim over the sparse pair graph
@@ -751,6 +884,34 @@ mod tests {
         }
     }
 
+    /// The remote worker computes subset MSTs over *gathered* rows (it never
+    /// holds the full matrix); the result must be bit-identical to the
+    /// full-matrix path across every metric, on float data.
+    #[test]
+    fn subset_mst_gathered_bit_identical_to_full_matrix() {
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let ds = float_dataset(19, 44, 5);
+            let ctx = BipartiteCtx::new(&ds, kind);
+            let ids: Vec<u32> = (0..44u32).filter(|i| i % 4 != 1).collect();
+            let counter = CountingMetric::new(kind);
+            let full =
+                subset_mst(ds.as_slice(), ds.d, ctx.block.as_ref(), &ctx.aux, &counter, &ids);
+
+            let gathered = ds.gather(&ids);
+            let aux = ctx.block.prepare(gathered.as_slice(), gathered.n, gathered.d);
+            let counter2 = CountingMetric::new(kind);
+            let got =
+                subset_mst_gathered(&gathered, ctx.block.as_ref(), &aux, &counter2, &ids);
+            assert_eq!(full, got, "{kind:?}: gathered path must be bit-identical");
+            assert_eq!(counter.evals(), counter2.evals());
+        }
+    }
+
     #[test]
     fn filtered_prim_matches_dense_pair_kernel() {
         for kind in [
@@ -846,16 +1007,16 @@ mod tests {
         let mut cache = PanelCache::new(2);
         // (0,1): two misses
         cache.pair(&ds, &ctx, 0, &subsets[0], 1, &subsets[1]);
-        assert_eq!((cache.hits, cache.misses), (0, 2));
+        assert_eq!(cache.stats(), (0, 2));
         // (0,2): hit on 0; miss on 2 evicts the LRU entry (1)
         cache.pair(&ds, &ctx, 0, &subsets[0], 2, &subsets[2]);
-        assert_eq!((cache.hits, cache.misses), (1, 3));
+        assert_eq!(cache.stats(), (1, 3));
         // (0,2) again: both hit
         cache.pair(&ds, &ctx, 0, &subsets[0], 2, &subsets[2]);
-        assert_eq!((cache.hits, cache.misses), (3, 3));
+        assert_eq!(cache.stats(), (3, 3));
         // (1,3): 1 was evicted — both miss
         cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
-        assert_eq!((cache.hits, cache.misses), (3, 5));
+        assert_eq!(cache.stats(), (3, 5));
         // panels carry the right geometry
         let (p1, p3) = cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
         assert_eq!(p1.rows, 8);

@@ -20,8 +20,8 @@
 //!
 //! - **L3 (this crate)** — the [`exec`] pair-job engine plus its two thin
 //!   front-ends: `decomp::decomposed_mst` (serial reference) and
-//!   `coordinator::run_distributed` (thread-per-rank workers over a
-//!   simulated, byte-accounted network). The engine owns
+//!   `coordinator::run_distributed` (worker ranks over a byte-accounted
+//!   [`net::Transport`]). The engine owns
 //!   partition → schedule → solve → reduce once: an [`exec::ExecPlan`]
 //!   with `|S_i|·|S_j|` job costs, **subset-affinity scheduling** (each
 //!   subset anchored to a worker by LPT over its total pair-job cost, jobs
@@ -39,6 +39,18 @@
 //!   each arriving tree into a bounded running MSF by an O(|V|)-per-fold
 //!   presorted merge-join). Plus partitioners, dendrogram construction,
 //!   CLI/config/metrics.
+//! - **network layer ([`net`])** — one charge/send [`net::Transport`]
+//!   interface, two implementations: [`net::NetSim`] (in-process simulated
+//!   fabric: threads share memory, bytes are modeled) and
+//!   [`net::TcpTransport`] (real multi-process: one blocking TCP socket per
+//!   leader↔worker link, length-prefixed [`net::wire`] frames with a
+//!   versioned handshake, counters fed by actual encoded frame sizes).
+//!   `Message::wire_bytes` is computed from the real wire encoding, so the
+//!   simulated charges and the measured frames are the same number by
+//!   construction. `run --transport tcp` drives the unmodified exec engine
+//!   through [`net::remote::RemoteSolver`] proxies against `demst worker
+//!   --connect` processes ([`net::worker`]), bound/spawned/awaited by
+//!   [`net::launch`].
 //! - **compute backends ([`runtime`])** — kernels are selected through the
 //!   [`runtime::ComputeBackend`] abstraction:
 //!   - the default, always-available **Rust backend**: metric-generic
@@ -84,6 +96,7 @@ pub mod dense;
 pub mod slink;
 pub mod exec;
 pub mod decomp;
+pub mod net;
 pub mod coordinator;
 pub mod runtime;
 pub mod baselines;

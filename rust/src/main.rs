@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run         distributed EMST + optional dendrogram on a dataset
+//!   worker      remote worker process for a `run --transport tcp` leader
 //!   dendrogram  decomposed MST → single-linkage dendrogram → CSV outputs
 //!   gen         generate a synthetic dataset to .npy
 //!   info        inspect an artifact directory
@@ -11,6 +12,8 @@
 //!   demst run --data embedding --n 2048 --d 128 --parts 6 --workers 4 --verify
 //!   demst run --config examples/configs/embedding.toml --kernel xla
 //!   demst run --pair-kernel bipartite --stream-reduce --n 4096 --parts 8
+//!   demst run --transport tcp --listen 127.0.0.1:7000 --workers 2 --n 4096
+//!   demst worker --connect 127.0.0.1:7000
 //!   demst dendrogram --data blobs --n 1000 --d 32 --out-merges merges.csv
 //!   demst gen --kind blobs --n 1000 --d 64 --out /tmp/blobs.npy
 //!   demst info --artifacts artifacts
@@ -46,6 +49,7 @@ fn real_main(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "worker" => cmd_worker(rest),
         "dendrogram" => cmd_dendrogram(rest),
         "gen" => cmd_gen(rest),
         "info" => cmd_info(rest),
@@ -62,9 +66,10 @@ fn print_help() {
     println!(
         "demst — distributed Euclidean-MST / single-linkage dendrograms via distance decomposition
 
-USAGE: demst <run|dendrogram|gen|info|selftest|help> [options]
+USAGE: demst <run|worker|dendrogram|gen|info|selftest|help> [options]
 
 run         distributed EMST (+ dendrogram) on a generated or .npy dataset
+worker      remote worker process: connect to a `run --transport tcp` leader
 dendrogram  decomposed MST -> dendrogram; write merge heights and cluster labels as CSV
 gen         write a synthetic dataset to .npy
 info        list AOT artifacts and check they compile
@@ -89,6 +94,9 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "pair-kernel", takes_value: true, help: "dense|bipartite-merge pair-job kernel" },
         OptSpec { name: "no-affinity", takes_value: false, help: "disable subset-affinity routing; ship S_i ∪ S_j for every job (dense byte model)" },
         OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
+        OptSpec { name: "transport", takes_value: true, help: "sim (default) | tcp multi-process transport" },
+        OptSpec { name: "listen", takes_value: true, help: "leader bind address for --transport tcp (port 0 = auto)" },
+        OptSpec { name: "spawn-workers", takes_value: false, help: "tcp: spawn the `demst worker` processes locally instead of awaiting external connects" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
         OptSpec { name: "stream-reduce", takes_value: false, help: "fold trees into a bounded running MSF at the leader" },
@@ -147,6 +155,16 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("artifacts") {
         cfg.artifacts_dir = v.into();
     }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = demst::config::TransportChoice::parse(v)
+            .with_context(|| format!("unknown transport {v:?} (sim|tcp)"))?;
+    }
+    if let Some(v) = args.get("listen") {
+        cfg.listen = Some(v.to_string());
+    }
+    if args.has_flag("spawn-workers") {
+        cfg.spawn_workers = true;
+    }
     if args.has_flag("no-affinity") {
         cfg.affinity = false;
     }
@@ -174,7 +192,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     // npy datasets override n/d from the file
     let (ds, _truth) = build_dataset(&cfg)?;
     println!(
-        "dataset: kind={} n={} d={} | parts={} strategy={} kernel={} workers={}",
+        "dataset: kind={} n={} d={} | parts={} strategy={} kernel={} workers={} transport={}",
         cfg.data.kind,
         ds.n,
         ds.d,
@@ -182,6 +200,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         cfg.strategy.name(),
         cfg.kernel.name(),
         demst::coordinator::leader::resolve_workers(&cfg),
+        cfg.transport.name(),
     );
 
     let out = run_distributed(&ds, &cfg)?;
@@ -296,6 +315,33 @@ fn print_phases_and_workers(m: &RunMetrics) {
         m.busy_efficiency(),
         m.imbalance()
     );
+}
+
+/// `demst worker --connect <addr>`: one remote worker rank. Connects (with
+/// retries — workers routinely start before the leader finishes binding),
+/// handshakes, serves job frames until the leader's Shutdown, then prints a
+/// one-line report and exits 0.
+fn cmd_worker(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "connect", takes_value: true, help: "leader address (host:port) — required" },
+        OptSpec { name: "retry-ms", takes_value: true, help: "keep retrying the connect for this long (default 10000)" },
+    ];
+    let args = parse_args(argv, &specs)?;
+    let addr = args
+        .get("connect")
+        .context("demst worker requires --connect <addr> (the leader's --listen address)")?;
+    let retry = std::time::Duration::from_millis(args.get_or("retry-ms", 10_000u64)?);
+    let report = demst::net::worker::run(addr, retry)?;
+    println!(
+        "worker {}: {} pair jobs + {} local-MST jobs, {} dist evals, rx {}, tx {}",
+        report.worker_id,
+        report.jobs,
+        report.local_jobs,
+        report.dist_evals,
+        human_bytes(report.bytes_rx),
+        human_bytes(report.bytes_tx),
+    );
+    Ok(())
 }
 
 fn cmd_dendrogram(argv: &[String]) -> Result<()> {

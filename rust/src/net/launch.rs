@@ -1,0 +1,184 @@
+//! Leader-side lifecycle of a multi-process run: bind the listener,
+//! optionally spawn the local worker processes, accept + handshake the
+//! worker set, run the unmodified exec engine over the [`TcpTransport`],
+//! and shut everything down with errors propagated.
+//!
+//! Two entry points:
+//! - [`run_leader`] — the `demst run --transport tcp` path: binds
+//!   `cfg.listen`, spawns `demst worker --connect <addr>` children when
+//!   `cfg.spawn_workers` is set (otherwise awaits externally started
+//!   workers), runs, and reaps the children with exit-status checks.
+//! - [`serve`] — the library path over an already-bound listener (used by
+//!   tests and benches, whose workers are in-process threads driving
+//!   [`super::worker::serve`] over loopback connections).
+
+use super::tcp::TcpTransport;
+use super::wire::{self, Setup, WIRE_VERSION};
+use super::Direction;
+use crate::config::RunConfig;
+use crate::coordinator::messages::Message;
+use crate::data::Dataset;
+use crate::exec::{execute_pooled_remote, resolve_workers, ExecPlan, PooledRun};
+use anyhow::{bail, Context, Result};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// How long the leader waits for the full worker set to connect and
+/// handshake before failing the run.
+pub const ACCEPT_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Run one distributed EMST over real TCP links: bind, (maybe) spawn,
+/// accept, execute, reap. This is what `coordinator::run_distributed`
+/// dispatches to for `transport = tcp`.
+pub fn run_leader(ds: &Dataset, cfg: &RunConfig) -> Result<PooledRun> {
+    // Library callers reach this without the CLI's pre-flight check; the
+    // tcp-specific invariants (listen set, explicit workers, parts >= 2,
+    // wire v1 limits) must still fail as one-liners, not mid-run.
+    cfg.validate()?;
+    let listen = cfg
+        .listen
+        .as_deref()
+        .context("transport tcp requires --listen <addr> on the leader")?;
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("binding leader listener on {listen}"))?;
+    let addr = listener.local_addr().context("resolving the bound leader address")?;
+    let n_workers = resolve_workers(cfg);
+    let children = if cfg.spawn_workers {
+        let spawned = spawn_worker_processes(&addr.to_string(), n_workers)?;
+        println!("leader: listening on {addr}; spawned {n_workers} local `demst worker` processes");
+        spawned
+    } else {
+        println!(
+            "leader: listening on {addr}; awaiting {n_workers} x `demst worker --connect {addr}`"
+        );
+        Vec::new()
+    };
+    let result = serve(ds, cfg, &listener);
+    reap(children, result)
+}
+
+/// Accept + handshake `resolve_workers(cfg)` connections on an
+/// already-bound listener, then drive the exec engine over them. On engine
+/// failure, healthy workers are released with a best-effort `Shutdown` so
+/// they exit instead of blocking on a dead socket.
+pub fn serve(ds: &Dataset, cfg: &RunConfig, listener: &TcpListener) -> Result<PooledRun> {
+    let n_workers = resolve_workers(cfg);
+    // Partition exactly once: this plan is announced to every worker in
+    // its Setup frame (part_sizes drive PairAssign section decoding) and
+    // then handed to the engine, so the wire layout and the executed jobs
+    // cannot drift.
+    let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
+    let setup = Setup {
+        version: WIRE_VERSION,
+        worker_id: 0, // stamped per accepted link
+        n: u32::try_from(ds.n).context("n exceeds the u32 wire limit")?,
+        d: u16::try_from(ds.d).context("d exceeds the u16 wire limit")?,
+        metric: wire::metric_code(cfg.metric),
+        kernel: wire::kernel_code(&cfg.kernel),
+        pair_kernel: wire::pair_kernel_code(cfg.pair_kernel),
+        reduce_tree: cfg.reduce_tree,
+        part_sizes: plan.parts.iter().map(|p| p.len() as u32).collect(),
+        artifacts_dir: cfg.artifacts_dir.display().to_string(),
+    };
+    let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
+    let run = execute_pooled_remote(ds, cfg, &tcp, plan);
+    if run.is_err() {
+        // The engine aborts without draining every link (e.g. a phase-1
+        // failure); release whoever is still serving.
+        for w in 0..tcp.len() {
+            let _ = tcp.send_to(w, &Message::Shutdown, Direction::Control);
+        }
+    }
+    run
+}
+
+/// Spawn `n` local `demst worker --connect <addr>` processes. The worker
+/// binary defaults to the current executable; `DEMST_WORKER_EXE` overrides
+/// it (tests and non-CLI embedders).
+fn spawn_worker_processes(addr: &str, n: usize) -> Result<Vec<Child>> {
+    let exe = match std::env::var_os("DEMST_WORKER_EXE") {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe()
+            .context("resolving the demst executable for --spawn-workers")?,
+    };
+    (0..n)
+        .map(|w| {
+            Command::new(&exe)
+                .args(["worker", "--connect", addr])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null()) // keep the leader's stdout clean
+                .stderr(Stdio::inherit())
+                .spawn()
+                .with_context(|| format!("spawning worker process {w} ({})", exe.display()))
+        })
+        .collect()
+}
+
+/// Await the spawned worker set. A clean engine run hands every worker a
+/// `Shutdown`, so nonzero exits are real failures and surface even when the
+/// leader's own result was fine; after an engine error the children are
+/// killed rather than awaited (they may be blocked on a dead link).
+fn reap(children: Vec<Child>, result: Result<PooledRun>) -> Result<PooledRun> {
+    let engine_failed = result.is_err();
+    let mut failures = Vec::new();
+    for (w, mut child) in children.into_iter().enumerate() {
+        if engine_failed {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() || engine_failed => {}
+            Ok(status) => failures.push(format!("worker process {w} exited with {status}")),
+            Err(e) => failures.push(format!("worker process {w} could not be reaped: {e}")),
+        }
+    }
+    let run = result?;
+    if !failures.is_empty() {
+        bail!("run completed but {}", failures.join("; "));
+    }
+    Ok(run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{KernelChoice, PairKernelChoice, TransportChoice};
+    use crate::data::generators::uniform;
+    use crate::mst::normalize_tree;
+    use crate::net::worker;
+    use crate::util::prng::Pcg64;
+
+    /// End-to-end over loopback with in-thread workers: `serve` must return
+    /// the identical tree as the simulated transport.
+    #[test]
+    fn serve_matches_sim_transport() {
+        let ds = uniform(72, 5, 1.0, Pcg64::seeded(700));
+        let mut cfg = RunConfig {
+            parts: 4,
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            pair_kernel: PairKernelChoice::BipartiteMerge,
+            ..Default::default()
+        };
+        let sim = crate::coordinator::run_distributed(&ds, &cfg).unwrap();
+
+        cfg.transport = TransportChoice::Tcp;
+        cfg.listen = Some("127.0.0.1:0".into());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    worker::run(&addr.to_string(), Duration::from_secs(10))
+                })
+            })
+            .collect();
+        let tcp = serve(&ds, &cfg, &listener).unwrap();
+        for h in workers {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(normalize_tree(&sim.mst), normalize_tree(&tcp.mst));
+        assert_eq!(tcp.metrics.transport, "tcp");
+    }
+}

@@ -1,54 +1,19 @@
 //! Simulated network: byte/message accounting plus an optional latency +
-//! bandwidth delay model.
+//! bandwidth delay model. This is the `sim` implementation of
+//! [`Transport`]; the byte model and counters are unchanged from its
+//! pre-`net/` life as `coordinator::netsim`.
 //!
-//! Every leader↔worker send goes through [`NetSim::send`], which (a) adds the
-//! message's wire size to the right direction counter and (b) if
+//! Every leader↔worker send goes through [`Transport::send`], which (a) adds
+//! the message's wire size to the right direction counter and (b) if
 //! `simulate_delays` is set, sleeps `latency + bytes/bandwidth` *in the
 //! sending thread* before delivery — modelling a blocking rendezvous send on
 //! a full-duplex link, good enough to surface the `O(|V||P|)` vs `O(|V|)`
 //! gather asymmetry as wallclock, not just counters.
 
-use super::messages::Message;
+use super::{Direction, NetCounters, Transport};
 use crate::config::NetConfig;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
-
-/// Traffic direction, for the per-phase accounting the paper's cost model
-/// distinguishes (scatter of vectors vs gather of tree edges).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Direction {
-    Scatter,
-    Gather,
-    Control,
-}
-
-/// Shared traffic counters.
-#[derive(Debug, Default)]
-pub struct NetCounters {
-    pub scatter_bytes: AtomicU64,
-    pub gather_bytes: AtomicU64,
-    pub control_bytes: AtomicU64,
-    pub messages: AtomicU64,
-}
-
-impl NetCounters {
-    pub fn total_bytes(&self) -> u64 {
-        self.scatter_bytes.load(Ordering::Relaxed)
-            + self.gather_bytes.load(Ordering::Relaxed)
-            + self.control_bytes.load(Ordering::Relaxed)
-    }
-
-    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
-        (
-            self.scatter_bytes.load(Ordering::Relaxed),
-            self.gather_bytes.load(Ordering::Relaxed),
-            self.control_bytes.load(Ordering::Relaxed),
-            self.messages.load(Ordering::Relaxed),
-        )
-    }
-}
 
 /// The simulated network fabric (shared by all endpoints).
 #[derive(Clone)]
@@ -62,14 +27,16 @@ impl NetSim {
         Self { cfg, counters: Arc::new(NetCounters::default()) }
     }
 
-    pub fn counters(&self) -> Arc<NetCounters> {
-        Arc::clone(&self.counters)
-    }
-
     /// Transfer delay for `bytes` under the configured link model.
     pub fn model_delay(&self, bytes: u64) -> Duration {
         Duration::from_micros(self.cfg.latency_us)
             + Duration::from_secs_f64(bytes as f64 / self.cfg.bandwidth)
+    }
+}
+
+impl Transport for NetSim {
+    fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
     }
 
     /// Account for (and, with `simulate_delays`, sleep for) a message of
@@ -77,35 +44,18 @@ impl NetSim {
     /// pull-based exec scheduler, where workers claim jobs from a shared
     /// queue instead of receiving them over a channel, yet the scatter of
     /// the job payload must still be charged to the link.
-    pub fn charge(&self, bytes: u64, dir: Direction) {
-        let ctr = match dir {
-            Direction::Scatter => &self.counters.scatter_bytes,
-            Direction::Gather => &self.counters.gather_bytes,
-            Direction::Control => &self.counters.control_bytes,
-        };
-        ctr.fetch_add(bytes, Ordering::Relaxed);
-        self.counters.messages.fetch_add(1, Ordering::Relaxed);
+    fn charge(&self, bytes: u64, dir: Direction) {
+        self.counters.add(bytes, dir);
         if self.cfg.simulate_delays {
             std::thread::sleep(self.model_delay(bytes));
         }
-    }
-
-    /// Account for and (optionally) delay a message, then deliver it.
-    /// Returns `Err` if the receiving endpoint hung up.
-    pub fn send(
-        &self,
-        tx: &Sender<Message>,
-        msg: Message,
-        dir: Direction,
-    ) -> Result<(), std::sync::mpsc::SendError<Message>> {
-        self.charge(msg.wire_bytes(), dir);
-        tx.send(msg)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::messages::Message;
     use crate::data::Dataset;
     use crate::decomp::PairJob;
     use std::sync::mpsc::channel;

@@ -1,0 +1,286 @@
+//! The real transport: one blocking TCP socket per leader↔worker link.
+//!
+//! [`TcpTransport`] is the leader-side fabric: it owns every accepted link
+//! and implements [`Transport`] so the unmodified exec engine can run over
+//! it. Its byte counters are populated from the **actual encoded frame
+//! sizes** as frames cross the socket — which is why
+//! [`Transport::charge`] no-ops here: the engine's modeled charges would
+//! double-count the frames the proxy solvers really send. The two
+//! accountings agree because [`wire::encoded_len`] is the single source of
+//! truth for both.
+//!
+//! Direction attribution mirrors the simulated fabric: frames the leader
+//! writes are `Scatter` (jobs) or `Control` (shutdown/handshake); frames it
+//! reads are `Gather` (results, trees, final stats) or `Control` (acks).
+//! The handshake itself is control-plane traffic the simulation does not
+//! model, so `control_bytes` differs between transports by design while
+//! scatter/gather match exactly.
+
+use super::wire::{self, Setup};
+use super::{Direction, NetCounters, Transport};
+use crate::coordinator::messages::Message;
+use anyhow::{bail, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One accepted, handshaken leader↔worker link.
+struct Link {
+    stream: TcpStream,
+}
+
+/// The leader-side multi-process fabric: `links[w]` is worker `w`'s socket.
+/// Each link is driven by exactly one proxy thread (the engine's pooled
+/// worker for that rank), in strict request→response rendezvous.
+pub struct TcpTransport {
+    links: Vec<Mutex<Link>>,
+    counters: Arc<NetCounters>,
+}
+
+impl Transport for TcpTransport {
+    fn counters(&self) -> Arc<NetCounters> {
+        Arc::clone(&self.counters)
+    }
+
+    /// No-op: real frames are counted at the socket boundary.
+    fn charge(&self, _bytes: u64, _dir: Direction) {}
+}
+
+impl TcpTransport {
+    /// Number of worker links.
+    pub fn len(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.links.is_empty()
+    }
+
+    /// Accept, verify, and set up `n` worker connections on `listener`.
+    /// Worker ids are assigned in accept order; `setup` is completed with
+    /// each worker's id. `deadline` bounds the whole accept+handshake phase
+    /// so a missing worker fails the run instead of hanging it. A
+    /// connection that fails the handshake (port scanner, health check,
+    /// version-mismatched worker) is logged and dropped — it must not kill
+    /// the accept phase while the real workers are still connecting.
+    pub fn accept_workers(
+        listener: &TcpListener,
+        n: usize,
+        setup: &Setup,
+        deadline: Duration,
+    ) -> Result<Self> {
+        let counters = Arc::new(NetCounters::default());
+        let t0 = Instant::now();
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let mut links = Vec::with_capacity(n);
+        while links.len() < n {
+            // Checked every iteration, not only when the queue is empty: a
+            // stream of connecting-but-stalling peers (each burning its
+            // handshake read timeout) must not extend the phase forever.
+            if t0.elapsed() > deadline {
+                bail!(
+                    "accepted {}/{} workers within {deadline:?} — are the `demst worker --connect` processes running?",
+                    links.len(),
+                    n
+                );
+            }
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let w = links.len();
+                    match handshake_leader(&stream, w, setup, &counters) {
+                        Ok(()) => links.push(Mutex::new(Link { stream })),
+                        Err(e) => {
+                            eprintln!("leader: rejected connection from {peer}: {e:#}");
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting worker connection"),
+            }
+        }
+        Ok(Self { links, counters })
+    }
+
+    /// Send one message frame to worker `w`, counting its actual encoded
+    /// size under `dir`. Returns the frame length.
+    pub fn send_to(&self, w: usize, msg: &Message, dir: Direction) -> Result<u64> {
+        let frame = wire::encode(msg)?;
+        let mut link = self.links[w].lock().unwrap();
+        wire::write_frame(&mut link.stream, &frame)
+            .with_context(|| format!("sending to worker {w}"))?;
+        self.counters.add(frame.len() as u64, dir);
+        Ok(frame.len() as u64)
+    }
+
+    /// Receive one message frame from worker `w`, counting its actual size
+    /// under the direction implied by its type (results/trees/stats =
+    /// gather, acks = control).
+    pub fn recv_from(&self, w: usize) -> Result<Message> {
+        let frame = {
+            let mut link = self.links[w].lock().unwrap();
+            wire::read_frame(&mut link.stream)
+                .with_context(|| format!("receiving from worker {w}"))?
+        };
+        let msg = wire::decode(&frame, None)
+            .with_context(|| format!("decoding frame from worker {w}"))?;
+        let dir = match &msg {
+            Message::Result { .. } | Message::WorkerDone { .. } | Message::LocalDone { .. } => {
+                Direction::Gather
+            }
+            Message::Ack { .. } => Direction::Control,
+            other => bail!("worker {w} sent an unexpected {other:?}"),
+        };
+        self.counters.add(frame.len() as u64, dir);
+        Ok(msg)
+    }
+
+    /// Blocking rendezvous: send `msg`, then read the worker's reply.
+    pub fn request(&self, w: usize, msg: &Message, dir: Direction) -> Result<Message> {
+        self.send_to(w, msg, dir)?;
+        self.recv_from(w)
+    }
+}
+
+/// Leader side of the per-connection handshake: expect `Hello`, answer with
+/// the run `Setup` (stamped with this link's worker id), confirm the ack.
+/// Handshake frames are counted as control traffic.
+fn handshake_leader(
+    stream: &TcpStream,
+    worker_id: usize,
+    setup: &Setup,
+    counters: &NetCounters,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .context("setting handshake timeout")?;
+    let mut stream = stream;
+    let hello_frame = wire::read_frame(&mut stream).context("reading Hello")?;
+    wire::decode_hello(&hello_frame)?;
+    counters.add(hello_frame.len() as u64, Direction::Control);
+
+    let setup = Setup { worker_id: worker_id as u16, ..setup.clone() };
+    let setup_frame = wire::encode_setup(&setup)?;
+    wire::write_frame(&mut stream, &setup_frame).context("sending Setup")?;
+    counters.add(setup_frame.len() as u64, Direction::Control);
+
+    let ack_frame = wire::read_frame(&mut stream).context("reading SetupAck")?;
+    let ack = wire::decode_setup_ack(&ack_frame)?;
+    if ack.worker_id != worker_id as u16 {
+        bail!("worker acked id {} but was assigned {worker_id}", ack.worker_id);
+    }
+    counters.add(ack_frame.len() as u64, Direction::Control);
+    // Job frames can take arbitrarily long to produce answers.
+    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{Hello, SetupAck, WIRE_VERSION};
+    use std::net::TcpStream as ClientStream;
+
+    fn test_setup() -> Setup {
+        Setup {
+            version: WIRE_VERSION,
+            worker_id: 0,
+            n: 10,
+            d: 2,
+            metric: 0,
+            kernel: 0,
+            pair_kernel: 0,
+            reduce_tree: false,
+            part_sizes: vec![5, 5],
+            artifacts_dir: String::new(),
+        }
+    }
+
+    /// A minimal in-test worker endpoint: handshake, then echo one frame.
+    fn fake_worker(addr: std::net::SocketAddr) -> std::thread::JoinHandle<Message> {
+        std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(&mut s, &wire::encode_hello(&Hello { version: WIRE_VERSION }))
+                .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            let frame = wire::read_frame(&mut s).unwrap();
+            let msg = wire::decode(&frame, None).unwrap();
+            let reply = Message::Ack { job_id: 42 };
+            wire::write_frame(&mut s, &wire::encode(&reply).unwrap()).unwrap();
+            msg
+        })
+    }
+
+    #[test]
+    fn accept_handshake_and_rendezvous_count_real_bytes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = fake_worker(addr);
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
+                .unwrap();
+        assert_eq!(fab.len(), 1);
+        let (_, _, c_after_handshake, m) = fab.counters().snapshot();
+        assert!(c_after_handshake > 0, "handshake counted as control");
+        assert_eq!(m, 3, "hello + setup + ack");
+
+        let msg = Message::Shutdown;
+        let reply = fab.request(0, &msg, Direction::Control).unwrap();
+        assert_eq!(reply, Message::Ack { job_id: 42 });
+        assert_eq!(worker.join().unwrap(), Message::Shutdown);
+        let (s, g, c, m) = fab.counters().snapshot();
+        assert_eq!(s, 0);
+        assert_eq!(g, 0, "ack is control, not gather");
+        assert_eq!(c, c_after_handshake + 16 + 16, "both 16-byte frames counted");
+        assert_eq!(m, 5);
+        // charge() must not touch real-transport counters
+        fab.charge(1_000_000, Direction::Scatter);
+        assert_eq!(fab.counters().snapshot().0, 0);
+    }
+
+    /// A stray connection speaking garbage must be rejected without
+    /// aborting the accept phase: the real worker behind it still gets in.
+    #[test]
+    fn stray_connection_does_not_kill_accept_phase() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stray = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            // a complete frame with a bogus tag — decode_hello rejects it
+            let mut junk = vec![0u8; 16];
+            junk[4] = 200;
+            use std::io::Write;
+            s.write_all(&junk).unwrap();
+            s
+        });
+        let _stray_stream = stray.join().unwrap();
+        let worker = fake_worker(addr);
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(20))
+                .unwrap();
+        assert_eq!(fab.len(), 1, "real worker accepted after the stray was dropped");
+        let reply = fab.request(0, &Message::Shutdown, Direction::Control).unwrap();
+        assert_eq!(reply, Message::Ack { job_id: 42 });
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn accept_times_out_with_actionable_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = TcpTransport::accept_workers(
+            &listener,
+            2,
+            &test_setup(),
+            Duration::from_millis(80),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("0/2 workers"), "{err:#}");
+    }
+}

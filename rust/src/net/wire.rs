@@ -1,0 +1,941 @@
+//! Length-prefixed binary framing for [`Message`], plus the versioned
+//! connection handshake. **This module is the single source of truth for
+//! wire sizes**: [`Message::wire_bytes`] delegates to [`encoded_len`], and
+//! [`encode`] produces exactly that many bytes — so the simulated
+//! transport's charges and the TCP transport's measured frames are the same
+//! number by construction (`tests/proptests.rs` pins
+//! `encode(m).len() == m.wire_bytes()` and `decode(encode(m)) == m` for
+//! every variant).
+//!
+//! ## Frame layout
+//!
+//! Every frame is a fixed 16-byte header followed by `payload_len` bytes.
+//! All integers are little-endian.
+//!
+//! ```text
+//! [0..4]  payload_len: u32        (bytes after the header)
+//! [4]     tag: u8                 (message type)
+//! [5..16] per-tag routing/length fields (see the encoders below)
+//! ```
+//!
+//! Variable-size payloads avoid embedded length fields wherever the length
+//! is derivable — `Job`/`LocalJob` derive the id count from
+//! `payload_len / (4 + 4d)`, and `PairAssign` derives every section length
+//! from the handshake-announced partition sizes (a subset's local MST always
+//! has exactly `|S_k| - 1` edges) — which is what lets the frame sizes equal
+//! the engine's modeled scatter charges byte-for-byte.
+//!
+//! ## Wire limits (v1)
+//!
+//! `parts ≤ 65535`, `d ≤ 65535`, `workers ≤ 255` (per-job `Result` routing),
+//! durations saturate at 2⁴⁸−1 ns (~3.2 days per job). [`RunConfig`]
+//! validation rejects TCP configurations outside these bounds up front.
+//!
+//! [`RunConfig`]: crate::config::RunConfig
+
+use crate::config::{KernelChoice, PairKernelChoice};
+use crate::coordinator::messages::{Message, SubsetShip, HEADER_BYTES};
+use crate::data::Dataset;
+use crate::decomp::PairJob;
+use crate::geometry::MetricKind;
+use crate::graph::Edge;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Protocol version, checked during the handshake.
+pub const WIRE_VERSION: u16 = 1;
+/// Handshake magic ("DMST").
+pub const MAGIC: u32 = 0x444D_5354;
+/// Refuse to allocate frames beyond this payload size (corrupt peer guard).
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_SETUP: u8 = 2;
+const TAG_JOB: u8 = 3;
+const TAG_RESULT: u8 = 4;
+const TAG_WORKER_DONE: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+const TAG_LOCAL_JOB: u8 = 7;
+const TAG_LOCAL_DONE: u8 = 8;
+const TAG_PAIR_ASSIGN: u8 = 9;
+const TAG_ACK: u8 = 10;
+const TAG_SETUP_ACK: u8 = 11;
+
+const EDGE_BYTES: u64 = Edge::WIRE_BYTES as u64;
+const STATS_BYTES: u64 = 40;
+const MAX_U48: u64 = (1 << 48) - 1;
+
+/// Bytes of one vectors section: global-id map + row-major f32 rows.
+pub fn vectors_payload_bytes(ids: usize, d: usize) -> u64 {
+    ids as u64 * 4 + (ids * d) as u64 * 4
+}
+
+/// Exact frame length (header + payload) of `msg`'s encoding. This is the
+/// arithmetic [`Message::wire_bytes`] reports and [`encode`] realizes.
+pub fn encoded_len(msg: &Message) -> u64 {
+    HEADER_BYTES
+        + match msg {
+            Message::Job { global_ids, points, .. } => {
+                vectors_payload_bytes(global_ids.len(), points.d)
+            }
+            Message::LocalJob { global_ids, points, .. } => {
+                vectors_payload_bytes(global_ids.len(), points.d)
+            }
+            Message::PairAssign { ships, .. } => ships
+                .iter()
+                .map(|s| {
+                    s.vectors
+                        .as_ref()
+                        .map_or(0, |(ids, pts)| vectors_payload_bytes(ids.len(), pts.d))
+                        + s.tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
+                })
+                .sum::<u64>(),
+            Message::LocalDone { edges, .. } => edges.len() as u64 * EDGE_BYTES,
+            Message::Result { edges, .. } => edges.len() as u64 * EDGE_BYTES,
+            Message::WorkerDone { local_tree, .. } => {
+                STATS_BYTES
+                    + local_tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
+            }
+            Message::Ack { .. } | Message::Shutdown => 0,
+        }
+}
+
+/// Decode context for leader→worker frames whose payload lengths are
+/// derived from the handshake-announced partition layout.
+#[derive(Clone, Debug)]
+pub struct WireCtx {
+    pub d: usize,
+    pub part_sizes: Vec<u32>,
+}
+
+// ---------------------------------------------------------------- encoding
+
+struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    fn new(tag: u8, payload_len: u64) -> Result<Self> {
+        if payload_len > MAX_PAYLOAD as u64 {
+            bail!("frame payload {payload_len} exceeds wire limit {MAX_PAYLOAD}");
+        }
+        let mut buf = Vec::with_capacity(HEADER_BYTES as usize + payload_len as usize);
+        buf.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        buf.push(tag);
+        buf.resize(HEADER_BYTES as usize, 0);
+        Ok(Self { buf })
+    }
+
+    fn set_u8(&mut self, at: usize, v: u8) {
+        self.buf[at] = v;
+    }
+
+    fn set_u16(&mut self, at: usize, v: u16) {
+        self.buf[at..at + 2].copy_from_slice(&v.to_le_bytes());
+    }
+
+    fn set_u32(&mut self, at: usize, v: u32) {
+        self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    /// 48-bit duration in nanoseconds (saturating), at `at..at+6`.
+    fn set_dur48(&mut self, at: usize, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX).min(MAX_U48);
+        self.buf[at..at + 6].copy_from_slice(&ns.to_le_bytes()[..6]);
+    }
+
+    fn push_u32s(&mut self, vals: &[u32]) {
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn push_f32s(&mut self, vals: &[f32]) {
+        for v in vals {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn push_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn push_edges(&mut self, edges: &[Edge]) {
+        for e in edges {
+            self.buf.extend_from_slice(&e.u.to_le_bytes());
+            self.buf.extend_from_slice(&e.v.to_le_bytes());
+            self.buf.extend_from_slice(&e.w.to_le_bytes());
+        }
+    }
+}
+
+fn need_u16(v: usize, what: &str) -> Result<u16> {
+    u16::try_from(v).map_err(|_| anyhow!("{what} {v} exceeds wire limit 65535"))
+}
+
+fn need_u8(v: usize, what: &str) -> Result<u8> {
+    u8::try_from(v).map_err(|_| anyhow!("{what} {v} exceeds wire limit 255"))
+}
+
+fn push_vectors(f: &mut FrameBuf, ids: &[u32], points: &Dataset, what: &str) -> Result<()> {
+    if ids.len() != points.n {
+        bail!("{what}: id map length {} != point rows {}", ids.len(), points.n);
+    }
+    f.push_u32s(ids);
+    f.push_f32s(points.as_slice());
+    Ok(())
+}
+
+/// Encode one message into a complete frame (header + payload). The result
+/// is exactly [`encoded_len`] bytes long.
+pub fn encode(msg: &Message) -> Result<Vec<u8>> {
+    let total = encoded_len(msg);
+    let payload = total - HEADER_BYTES;
+    let mut f = match msg {
+        Message::Job { job, global_ids, points } => {
+            let mut f = FrameBuf::new(TAG_JOB, payload)?;
+            f.set_u16(6, need_u16(points.d, "dimension d")?);
+            f.set_u32(8, job.id);
+            f.set_u16(12, need_u16(job.i as usize, "subset index i")?);
+            f.set_u16(14, need_u16(job.j as usize, "subset index j")?);
+            push_vectors(&mut f, global_ids, points, "Job")?;
+            f
+        }
+        Message::LocalJob { part, global_ids, points } => {
+            let mut f = FrameBuf::new(TAG_LOCAL_JOB, payload)?;
+            f.set_u16(6, need_u16(points.d, "dimension d")?);
+            f.set_u32(8, *part);
+            push_vectors(&mut f, global_ids, points, "LocalJob")?;
+            f
+        }
+        Message::PairAssign { job, ships } => {
+            let mut f = FrameBuf::new(TAG_PAIR_ASSIGN, payload)?;
+            let mut flags = 0u8;
+            let mut d = 0usize;
+            // Payload order is fixed: subset i's vectors, subset i's tree,
+            // then subset j's — the flag bits say which sections exist and
+            // the handshake-announced sizes say how long each one is.
+            let slots: &[u32] = if job.i == job.j { &[job.i] } else { &[job.i, job.j] };
+            if ships.len() > slots.len() {
+                bail!("PairAssign carries {} ships for a {}-subset job", ships.len(), slots.len());
+            }
+            let mut at = 0usize;
+            for ship in ships {
+                let slot = slots[at..]
+                    .iter()
+                    .position(|&k| k == ship.part)
+                    .ok_or_else(|| {
+                        anyhow!("PairAssign ship for subset {} not in job ({}, {})", ship.part, job.i, job.j)
+                    })?;
+                at += slot + 1;
+                let bit = at - 1; // 0 = subset i, 1 = subset j
+                if ship.vectors.is_none() && ship.tree.is_none() {
+                    bail!("PairAssign ship for subset {} is empty", ship.part);
+                }
+                if let Some((ids, pts)) = &ship.vectors {
+                    flags |= 1 << bit;
+                    d = pts.d;
+                    push_vectors(&mut f, ids, pts, "PairAssign")?;
+                }
+                if let Some(tree) = &ship.tree {
+                    flags |= 1 << (2 + bit);
+                    f.push_edges(tree);
+                }
+            }
+            f.set_u8(5, flags);
+            f.set_u16(6, need_u16(d, "dimension d")?);
+            f.set_u32(8, job.id);
+            f.set_u16(12, need_u16(job.i as usize, "subset index i")?);
+            f.set_u16(14, need_u16(job.j as usize, "subset index j")?);
+            f
+        }
+        Message::LocalDone { part, edges, compute } => {
+            let mut f = FrameBuf::new(TAG_LOCAL_DONE, payload)?;
+            f.set_dur48(6, *compute);
+            f.set_u32(12, *part);
+            f.push_edges(edges);
+            f
+        }
+        Message::Result { job_id, worker, edges, compute } => {
+            let mut f = FrameBuf::new(TAG_RESULT, payload)?;
+            f.set_u8(5, need_u8(*worker, "worker id")?);
+            f.set_dur48(6, *compute);
+            f.set_u32(12, *job_id);
+            f.push_edges(edges);
+            f
+        }
+        Message::Ack { job_id } => {
+            let mut f = FrameBuf::new(TAG_ACK, payload)?;
+            f.set_u32(8, *job_id);
+            f
+        }
+        Message::WorkerDone {
+            worker,
+            local_tree,
+            dist_evals,
+            busy,
+            jobs_run,
+            jobs_stolen,
+            panel_hits,
+            panel_misses,
+        } => {
+            let mut f = FrameBuf::new(TAG_WORKER_DONE, payload)?;
+            f.set_u8(5, local_tree.is_some() as u8);
+            f.set_u16(6, need_u16(*worker, "worker id")?);
+            f.push_u64(*dist_evals);
+            f.push_u64(u64::try_from(busy.as_nanos()).unwrap_or(u64::MAX));
+            f.push_u32s(&[*jobs_run, *jobs_stolen]);
+            f.push_u64(*panel_hits);
+            f.push_u64(*panel_misses);
+            if let Some(tree) = local_tree {
+                f.push_edges(tree);
+            }
+            f
+        }
+        Message::Shutdown => FrameBuf::new(TAG_SHUTDOWN, payload)?,
+    };
+    debug_assert_eq!(f.buf.len() as u64, total, "encoder drifted from encoded_len");
+    f.buf.truncate(total as usize); // defensive; lengths asserted above
+    Ok(f.buf)
+}
+
+// ---------------------------------------------------------------- decoding
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).filter(|&e| e <= self.buf.len());
+        let end = end.ok_or_else(|| {
+            anyhow!("frame truncated: wanted {n} bytes at offset {}, have {}", self.at, self.buf.len())
+        })?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8_at(&self, at: usize) -> u8 {
+        self.buf[at]
+    }
+
+    fn u16_at(&self, at: usize) -> u16 {
+        u16::from_le_bytes(self.buf[at..at + 2].try_into().unwrap())
+    }
+
+    fn u32_at(&self, at: usize) -> u32 {
+        u32::from_le_bytes(self.buf[at..at + 4].try_into().unwrap())
+    }
+
+    fn dur48_at(&self, at: usize) -> Duration {
+        let mut b = [0u8; 8];
+        b[..6].copy_from_slice(&self.buf[at..at + 6]);
+        Duration::from_nanos(u64::from_le_bytes(b))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Everything left in the payload (trailing variable-length sections).
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.at..];
+        self.at = self.buf.len();
+        s
+    }
+
+    fn edges(&mut self, n: usize) -> Result<Vec<Edge>> {
+        let raw = self.take(n * 12)?;
+        Ok(raw
+            .chunks_exact(12)
+            .map(|c| Edge {
+                u: u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                v: u32::from_le_bytes(c[4..8].try_into().unwrap()),
+                w: f32::from_le_bytes(c[8..12].try_into().unwrap()),
+            })
+            .collect())
+    }
+
+    fn vectors(&mut self, rows: usize, d: usize) -> Result<(Vec<u32>, Dataset)> {
+        let ids = self.u32s(rows)?;
+        let data = self.f32s(rows * d)?;
+        Ok((ids, Dataset::new(rows, d, data)))
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{what}: {} trailing bytes after payload", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+/// Id count of a vectors-only payload (`Job` / `LocalJob`): the payload is
+/// `ids·4 + ids·d·4` bytes, so `ids = payload / (4 + 4d)`.
+fn derive_rows(payload: usize, d: usize, what: &str) -> Result<usize> {
+    let per = 4 + 4 * d;
+    if payload % per != 0 {
+        bail!("{what}: payload {payload} not a multiple of per-row {per} (d = {d})");
+    }
+    Ok(payload / per)
+}
+
+/// Decode one complete frame back into a [`Message`]. `ctx` (the
+/// handshake-announced partition layout) is required for `PairAssign`
+/// frames, whose section lengths are derived rather than embedded.
+pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
+    if frame.len() < HEADER_BYTES as usize {
+        bail!("short frame: {} bytes", frame.len());
+    }
+    let r0 = Reader::new(frame);
+    let payload_len = r0.u32_at(0) as usize;
+    if frame.len() != HEADER_BYTES as usize + payload_len {
+        bail!(
+            "frame length {} != header-declared {}",
+            frame.len(),
+            HEADER_BYTES as usize + payload_len
+        );
+    }
+    let tag = r0.u8_at(4);
+    let mut r = Reader::new(&frame[HEADER_BYTES as usize..]);
+    let msg = match tag {
+        TAG_JOB => {
+            let d = r0.u16_at(6) as usize;
+            let rows = derive_rows(payload_len, d, "Job")?;
+            let (global_ids, points) = r.vectors(rows, d)?;
+            Message::Job {
+                job: PairJob {
+                    id: r0.u32_at(8),
+                    i: r0.u16_at(12) as u32,
+                    j: r0.u16_at(14) as u32,
+                },
+                global_ids,
+                points,
+            }
+        }
+        TAG_LOCAL_JOB => {
+            let d = r0.u16_at(6) as usize;
+            let rows = derive_rows(payload_len, d, "LocalJob")?;
+            let (global_ids, points) = r.vectors(rows, d)?;
+            Message::LocalJob { part: r0.u32_at(8), global_ids, points }
+        }
+        TAG_PAIR_ASSIGN => {
+            let ctx = ctx.ok_or_else(|| anyhow!("PairAssign frame needs a decode context"))?;
+            let flags = r0.u8_at(5);
+            let d = r0.u16_at(6) as usize;
+            let job = PairJob {
+                id: r0.u32_at(8),
+                i: r0.u16_at(12) as u32,
+                j: r0.u16_at(14) as u32,
+            };
+            let slots: &[u32] = if job.i == job.j { &[job.i] } else { &[job.i, job.j] };
+            let mut ships = Vec::new();
+            for (bit, &part) in slots.iter().enumerate() {
+                let size = *ctx
+                    .part_sizes
+                    .get(part as usize)
+                    .ok_or_else(|| anyhow!("PairAssign subset {part} outside partition"))?
+                    as usize;
+                let vectors = if flags & (1 << bit) != 0 {
+                    Some(r.vectors(size, d)?)
+                } else {
+                    None
+                };
+                let tree = if flags & (1 << (2 + bit)) != 0 {
+                    Some(r.edges(size.saturating_sub(1))?)
+                } else {
+                    None
+                };
+                if vectors.is_some() || tree.is_some() {
+                    ships.push(SubsetShip { part, vectors, tree });
+                }
+            }
+            r.done("PairAssign")?;
+            Message::PairAssign { job, ships }
+        }
+        TAG_LOCAL_DONE => Message::LocalDone {
+            part: r0.u32_at(12),
+            compute: r0.dur48_at(6),
+            edges: r.edges(derive_edges(payload_len, "LocalDone")?)?,
+        },
+        TAG_RESULT => Message::Result {
+            job_id: r0.u32_at(12),
+            worker: r0.u8_at(5) as usize,
+            compute: r0.dur48_at(6),
+            edges: r.edges(derive_edges(payload_len, "Result")?)?,
+        },
+        TAG_ACK => Message::Ack { job_id: r0.u32_at(8) },
+        TAG_WORKER_DONE => {
+            let has_tree = r0.u8_at(5) & 1 != 0;
+            let worker = r0.u16_at(6) as usize;
+            let tree_bytes = payload_len
+                .checked_sub(STATS_BYTES as usize)
+                .ok_or_else(|| anyhow!("WorkerDone payload {payload_len} < stats block"))?;
+            let dist_evals = r.u64()?;
+            let busy = Duration::from_nanos(r.u64()?);
+            let jobs_run = r.u32()?;
+            let jobs_stolen = r.u32()?;
+            let panel_hits = r.u64()?;
+            let panel_misses = r.u64()?;
+            let local_tree = if has_tree {
+                Some(r.edges(derive_edges(tree_bytes, "WorkerDone tree")?)?)
+            } else {
+                None
+            };
+            Message::WorkerDone {
+                worker,
+                local_tree,
+                dist_evals,
+                busy,
+                jobs_run,
+                jobs_stolen,
+                panel_hits,
+                panel_misses,
+            }
+        }
+        TAG_SHUTDOWN => Message::Shutdown,
+        other => bail!("unknown frame tag {other}"),
+    };
+    r.done("frame")?;
+    Ok(msg)
+}
+
+/// Edge count of an edges-only payload section (12 bytes per edge).
+fn derive_edges(bytes: usize, what: &str) -> Result<usize> {
+    if bytes % Edge::WIRE_BYTES != 0 {
+        bail!("{what}: {bytes} bytes is not a whole number of {}-byte edges", Edge::WIRE_BYTES);
+    }
+    Ok(bytes / Edge::WIRE_BYTES)
+}
+
+// ----------------------------------------------------------- enum codes
+
+/// Stable wire codes for the run-shaping enums carried by [`Setup`]. These
+/// are protocol constants — reordering a Rust enum must not change them.
+pub fn metric_code(kind: MetricKind) -> u8 {
+    match kind {
+        MetricKind::SqEuclid => 0,
+        MetricKind::Euclid => 1,
+        MetricKind::Cosine => 2,
+        MetricKind::Manhattan => 3,
+    }
+}
+
+pub fn metric_from_code(code: u8) -> Result<MetricKind> {
+    Ok(match code {
+        0 => MetricKind::SqEuclid,
+        1 => MetricKind::Euclid,
+        2 => MetricKind::Cosine,
+        3 => MetricKind::Manhattan,
+        other => bail!("unknown metric wire code {other}"),
+    })
+}
+
+pub fn kernel_code(kernel: &KernelChoice) -> u8 {
+    match kernel {
+        KernelChoice::PrimDense => 0,
+        KernelChoice::BoruvkaRust => 1,
+        KernelChoice::BoruvkaXla => 2,
+    }
+}
+
+pub fn kernel_from_code(code: u8) -> Result<KernelChoice> {
+    Ok(match code {
+        0 => KernelChoice::PrimDense,
+        1 => KernelChoice::BoruvkaRust,
+        2 => KernelChoice::BoruvkaXla,
+        other => bail!("unknown kernel wire code {other}"),
+    })
+}
+
+pub fn pair_kernel_code(pk: PairKernelChoice) -> u8 {
+    match pk {
+        PairKernelChoice::Dense => 0,
+        PairKernelChoice::BipartiteMerge => 1,
+    }
+}
+
+pub fn pair_kernel_from_code(code: u8) -> Result<PairKernelChoice> {
+    Ok(match code {
+        0 => PairKernelChoice::Dense,
+        1 => PairKernelChoice::BipartiteMerge,
+        other => bail!("unknown pair-kernel wire code {other}"),
+    })
+}
+
+// --------------------------------------------------------------- handshake
+
+/// First frame on every connection, worker → leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u16,
+}
+
+/// Leader → worker: everything a remote rank needs to decode job frames and
+/// run them — identity, the run's shape, kernels, the partition layout, and
+/// the artifacts directory (so a `boruvka-xla` worker resolves the same AOT
+/// artifacts the leader validated, instead of silently falling back against
+/// its own cwd).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Setup {
+    pub version: u16,
+    pub worker_id: u16,
+    pub n: u32,
+    pub d: u16,
+    pub metric: u8,
+    pub kernel: u8,
+    pub pair_kernel: u8,
+    pub reduce_tree: bool,
+    pub part_sizes: Vec<u32>,
+    /// leader-side artifacts dir, UTF-8 (trailing variable-length section)
+    pub artifacts_dir: String,
+}
+
+/// Worker → leader: handshake complete, ready for job frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SetupAck {
+    pub worker_id: u16,
+}
+
+pub fn encode_hello(h: &Hello) -> Vec<u8> {
+    let mut f = FrameBuf::new(TAG_HELLO, 0).expect("fixed frame");
+    f.set_u16(6, h.version);
+    f.set_u32(8, MAGIC);
+    f.buf
+}
+
+pub fn decode_hello(frame: &[u8]) -> Result<Hello> {
+    expect_tag(frame, TAG_HELLO, "Hello")?;
+    let r = Reader::new(frame);
+    if r.u32_at(8) != MAGIC {
+        bail!("handshake magic mismatch: peer is not a demst worker");
+    }
+    let version = r.u16_at(6);
+    if version != WIRE_VERSION {
+        bail!("wire protocol version mismatch: peer v{version}, this build v{WIRE_VERSION}");
+    }
+    Ok(Hello { version })
+}
+
+pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
+    let parts = need_u16(s.part_sizes.len(), "partition count")?;
+    let dir = s.artifacts_dir.as_bytes();
+    let payload = 8 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
+    let mut f = FrameBuf::new(TAG_SETUP, payload)?;
+    f.set_u8(5, s.reduce_tree as u8);
+    f.set_u16(6, s.version);
+    f.set_u16(8, s.worker_id);
+    f.set_u16(10, s.d);
+    f.set_u16(12, parts);
+    f.set_u8(14, s.metric);
+    f.set_u8(15, s.pair_kernel);
+    f.buf.push(s.kernel);
+    f.buf.extend_from_slice(&[0u8; 3]);
+    f.push_u32s(&[s.n]);
+    f.push_u32s(&s.part_sizes);
+    f.buf.extend_from_slice(dir);
+    Ok(f.buf)
+}
+
+pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
+    expect_tag(frame, TAG_SETUP, "Setup")?;
+    let r0 = Reader::new(frame);
+    let version = r0.u16_at(6);
+    if version != WIRE_VERSION {
+        bail!("wire protocol version mismatch: leader v{version}, this build v{WIRE_VERSION}");
+    }
+    let parts = r0.u16_at(12) as usize;
+    let mut r = Reader::new(&frame[HEADER_BYTES as usize..]);
+    let kernel = r.take(4)?[0];
+    let n = r.u32()?;
+    let part_sizes = r.u32s(parts)?;
+    let artifacts_dir = String::from_utf8(r.rest().to_vec())
+        .map_err(|_| anyhow!("Setup artifacts_dir is not UTF-8"))?;
+    r.done("Setup")?;
+    Ok(Setup {
+        version,
+        worker_id: r0.u16_at(8),
+        n,
+        d: r0.u16_at(10),
+        metric: r0.u8_at(14),
+        kernel,
+        pair_kernel: r0.u8_at(15),
+        reduce_tree: r0.u8_at(5) & 1 != 0,
+        part_sizes,
+        artifacts_dir,
+    })
+}
+
+pub fn encode_setup_ack(a: &SetupAck) -> Vec<u8> {
+    let mut f = FrameBuf::new(TAG_SETUP_ACK, 0).expect("fixed frame");
+    f.set_u16(8, a.worker_id);
+    f.buf
+}
+
+pub fn decode_setup_ack(frame: &[u8]) -> Result<SetupAck> {
+    expect_tag(frame, TAG_SETUP_ACK, "SetupAck")?;
+    Ok(SetupAck { worker_id: Reader::new(frame).u16_at(8) })
+}
+
+fn expect_tag(frame: &[u8], tag: u8, what: &str) -> Result<()> {
+    if frame.len() < HEADER_BYTES as usize {
+        bail!("short {what} frame: {} bytes", frame.len());
+    }
+    let got = frame[4];
+    if got != tag {
+        bail!("expected {what} frame (tag {tag}), got tag {got}");
+    }
+    let declared = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+    if frame.len() != HEADER_BYTES as usize + declared {
+        bail!("{what} frame length {} != declared {}", frame.len(), HEADER_BYTES as usize + declared);
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ framed IO
+
+/// Write one already-encoded frame.
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(frame)?;
+    w.flush()
+}
+
+/// Read one complete frame (16-byte header + declared payload).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; HEADER_BYTES as usize];
+    r.read_exact(&mut head).context("reading frame header")?;
+    let payload_len = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if payload_len > MAX_PAYLOAD {
+        bail!("peer declared a {payload_len}-byte payload (limit {MAX_PAYLOAD}); refusing");
+    }
+    let mut frame = vec![0u8; HEADER_BYTES as usize + payload_len as usize];
+    frame[..HEADER_BYTES as usize].copy_from_slice(&head);
+    r.read_exact(&mut frame[HEADER_BYTES as usize..]).context("reading frame payload")?;
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Message, ctx: Option<&WireCtx>) -> Message {
+        let frame = encode(msg).unwrap();
+        assert_eq!(frame.len() as u64, msg.wire_bytes(), "encode length == wire_bytes");
+        decode(&frame, ctx).unwrap()
+    }
+
+    #[test]
+    fn job_roundtrips_and_matches_model() {
+        let msg = Message::Job {
+            job: PairJob { id: 9, i: 1, j: 3 },
+            global_ids: vec![2, 5, 7],
+            points: Dataset::new(3, 2, vec![0.5, -1.0, 2.25, 3.5, f32::MIN_POSITIVE, 0.0]),
+        };
+        assert_eq!(roundtrip(&msg, None), msg);
+    }
+
+    #[test]
+    fn pair_assign_roundtrips_via_ctx() {
+        let ctx = WireCtx { d: 2, part_sizes: vec![3, 2, 4] };
+        let ship_i = SubsetShip {
+            part: 0,
+            vectors: Some((vec![0, 4, 8], Dataset::new(3, 2, vec![1.0; 6]))),
+            tree: Some(vec![Edge::new(0, 4, 1.5), Edge::new(4, 8, 0.25)]),
+        };
+        let ship_j = SubsetShip {
+            part: 2,
+            vectors: None,
+            tree: Some(vec![Edge::new(1, 2, 0.5), Edge::new(2, 3, 1.0), Edge::new(3, 5, 2.0)]),
+        };
+        for ships in [vec![], vec![ship_i.clone()], vec![ship_j.clone()], vec![ship_i, ship_j]] {
+            let msg = Message::PairAssign { job: PairJob { id: 4, i: 0, j: 2 }, ships };
+            assert_eq!(roundtrip(&msg, Some(&ctx)), msg);
+        }
+    }
+
+    #[test]
+    fn self_pair_assign_tree_only() {
+        let ctx = WireCtx { d: 3, part_sizes: vec![2] };
+        let msg = Message::PairAssign {
+            job: PairJob { id: 0, i: 0, j: 0 },
+            ships: vec![SubsetShip {
+                part: 0,
+                vectors: None,
+                tree: Some(vec![Edge::new(0, 1, 4.0)]),
+            }],
+        };
+        assert_eq!(msg.wire_bytes(), 16 + 12);
+        assert_eq!(roundtrip(&msg, Some(&ctx)), msg);
+    }
+
+    #[test]
+    fn result_and_done_roundtrip() {
+        let msg = Message::Result {
+            job_id: 17,
+            worker: 200,
+            edges: vec![Edge::new(3, 9, 0.125)],
+            compute: Duration::from_nanos(123_456_789),
+        };
+        assert_eq!(roundtrip(&msg, None), msg);
+        let done = Message::WorkerDone {
+            worker: 60000,
+            local_tree: Some(vec![]),
+            dist_evals: u64::MAX,
+            busy: Duration::from_nanos(42),
+            jobs_run: 7,
+            jobs_stolen: 2,
+            panel_hits: 11,
+            panel_misses: 3,
+        };
+        assert_eq!(roundtrip(&done, None), done);
+        // None vs Some(vec![]) is preserved by the has-tree flag
+        let bare = Message::WorkerDone {
+            worker: 0,
+            local_tree: None,
+            dist_evals: 0,
+            busy: Duration::ZERO,
+            jobs_run: 0,
+            jobs_stolen: 0,
+            panel_hits: 0,
+            panel_misses: 0,
+        };
+        assert_eq!(roundtrip(&bare, None), bare);
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        assert_eq!(roundtrip(&Message::Shutdown, None), Message::Shutdown);
+        assert_eq!(roundtrip(&Message::Ack { job_id: 3 }, None), Message::Ack { job_id: 3 });
+        let ld = Message::LocalDone {
+            part: 5,
+            edges: vec![Edge::new(0, 1, 1.0)],
+            compute: Duration::from_micros(77),
+        };
+        assert_eq!(roundtrip(&ld, None), ld);
+    }
+
+    #[test]
+    fn encode_rejects_out_of_range() {
+        let msg = Message::Result { job_id: 0, worker: 256, edges: vec![], compute: Duration::ZERO };
+        assert!(encode(&msg).is_err(), "worker > 255 must not encode");
+        let msg = Message::Job {
+            job: PairJob { id: 0, i: 70_000, j: 70_001 },
+            global_ids: vec![0],
+            points: Dataset::zeros(1, 1),
+        };
+        assert!(encode(&msg).is_err(), "subset index > 65535 must not encode");
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_frames() {
+        let good = encode(&Message::Ack { job_id: 1 }).unwrap();
+        assert!(decode(&good[..10], None).is_err(), "short frame");
+        let mut bad_tag = good.clone();
+        bad_tag[4] = 200;
+        assert!(decode(&bad_tag, None).is_err(), "unknown tag");
+        let mut bad_len = good;
+        bad_len[0] = 99;
+        assert!(decode(&bad_len, None).is_err(), "length mismatch");
+        // PairAssign without a context is refused, not mis-parsed
+        let pa = encode(&Message::PairAssign {
+            job: PairJob { id: 0, i: 0, j: 1 },
+            ships: vec![],
+        })
+        .unwrap();
+        assert!(decode(&pa, None).is_err());
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_version_check() {
+        let hello = Hello { version: WIRE_VERSION };
+        assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+        let mut wrong = encode_hello(&hello);
+        wrong[6] = WIRE_VERSION as u8 + 1;
+        assert!(decode_hello(&wrong).is_err(), "version mismatch rejected");
+        let mut not_demst = encode_hello(&hello);
+        not_demst[8] = 0;
+        assert!(decode_hello(&not_demst).is_err(), "magic mismatch rejected");
+
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: 3,
+            n: 1000,
+            d: 128,
+            metric: 2,
+            kernel: 1,
+            pair_kernel: 1,
+            reduce_tree: true,
+            part_sizes: vec![250, 250, 300, 200],
+            artifacts_dir: "/opt/aot artifacts".into(),
+        };
+        assert_eq!(decode_setup(&encode_setup(&setup).unwrap()).unwrap(), setup);
+        let bare = Setup { artifacts_dir: String::new(), ..setup.clone() };
+        assert_eq!(decode_setup(&encode_setup(&bare).unwrap()).unwrap(), bare);
+        let ack = SetupAck { worker_id: 3 };
+        assert_eq!(decode_setup_ack(&encode_setup_ack(&ack)).unwrap(), ack);
+    }
+
+    #[test]
+    fn enum_codes_roundtrip_and_reject_unknown() {
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            assert_eq!(metric_from_code(metric_code(kind)).unwrap(), kind);
+        }
+        for kernel in
+            [KernelChoice::PrimDense, KernelChoice::BoruvkaRust, KernelChoice::BoruvkaXla]
+        {
+            assert_eq!(kernel_from_code(kernel_code(&kernel)).unwrap(), kernel);
+        }
+        for pk in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+            assert_eq!(pair_kernel_from_code(pair_kernel_code(pk)).unwrap(), pk);
+        }
+        assert!(metric_from_code(200).is_err());
+        assert!(kernel_from_code(200).is_err());
+        assert!(pair_kernel_from_code(200).is_err());
+    }
+
+    #[test]
+    fn framed_io_roundtrip() {
+        let msg = Message::Result {
+            job_id: 1,
+            worker: 0,
+            edges: vec![Edge::new(0, 1, 2.0); 3],
+            compute: Duration::ZERO,
+        };
+        let frame = encode(&msg).unwrap();
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &frame).unwrap();
+        let mut cursor = &buf[..];
+        let back = read_frame(&mut cursor).unwrap();
+        assert_eq!(back, frame);
+        assert_eq!(decode(&back, None).unwrap(), msg);
+        // truncated stream errors instead of hanging or mis-framing
+        let mut short = &buf[..buf.len() - 1];
+        assert!(read_frame(&mut short).is_err());
+    }
+}

@@ -1,0 +1,519 @@
+//! The `demst worker` process: the far end of one leader↔worker TCP link.
+//!
+//! A worker connects, handshakes (`Hello` → `Setup` → `SetupAck`), then
+//! serves frames until `Shutdown`:
+//!
+//! - `LocalJob` — compute one partition subset's local MST over the shipped
+//!   rows (bipartite-merge phase 1), reply `LocalDone`, and keep the subset
+//!   **resident** (vectors, per-row aux values, tree);
+//! - `PairAssign` — absorb whatever subsets ride along (the leader ships
+//!   exactly what this worker is missing under its resident-set model),
+//!   solve the pair job with the configured kernel, and reply `Result`
+//!   (gather mode) or fold into the worker-local ⊕-tree and reply `Ack`
+//!   (reduce mode);
+//! - `Job` — the paper-literal full-union scatter: solve the shipped union
+//!   with the dense kernel directly (kept for wire completeness; the
+//!   engine's proxies always use `PairAssign`);
+//! - `Shutdown` — reply the final `WorkerDone` (busy time, distance
+//!   evaluations, panel stats, and the folded tree in reduce mode) and
+//!   exit.
+//!
+//! Exactness: the worker never holds the full matrix, only gathered
+//! subsets — and every kernel it runs is bit-identical to the leader's
+//! in-process path over those rows ([`subset_mst_gathered`],
+//! [`bipartite_filtered_prim_blocked`] over a [`DistanceBlock::panel_block`]
+//! panel, the dense kernels over the merged union), because per-pair
+//! distance arithmetic is independent of the surrounding rows and all
+//! tie-breaks compare global ids.
+
+use super::wire::{self, Hello, SetupAck, WireCtx, WIRE_VERSION};
+use crate::config::{PairKernelChoice, RunConfig};
+use crate::coordinator::messages::Message;
+use crate::data::Dataset;
+use crate::decomp::reduction::tree_merge;
+use crate::decomp::PairJob;
+use crate::dense::DenseMst;
+use crate::exec::{
+    bipartite_filtered_prim_blocked, subset_mst_gathered, KeyedLru, PANEL_CACHE_CAP,
+};
+use crate::geometry::blocked::{distance_block, DistanceBlock};
+use crate::geometry::CountingMetric;
+use crate::graph::Edge;
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// What one worker process did, for the `demst worker` exit report.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerReport {
+    pub worker_id: u16,
+    /// pair jobs solved
+    pub jobs: u32,
+    /// local-MST (phase 1) jobs solved
+    pub local_jobs: u32,
+    pub dist_evals: u64,
+    /// actual frame bytes received / sent on the socket
+    pub bytes_rx: u64,
+    pub bytes_tx: u64,
+}
+
+/// One resident partition subset: rows packed in ascending-global-id order,
+/// the matching per-row aux values (norms), and — once known — the subset's
+/// local MST in compare-form weights.
+struct Slot {
+    ids: Vec<u32>,
+    points: Dataset,
+    aux: Vec<f32>,
+    tree: Option<Vec<Edge>>,
+}
+
+/// Connect to a leader with retries (the leader may still be binding), then
+/// serve until shutdown.
+pub fn run(addr: &str, retry: Duration) -> Result<WorkerReport> {
+    serve(connect_with_retry(addr, retry)?)
+}
+
+/// Retry-connect loop: workers are routinely started before (or racing) the
+/// leader's bind, so a refused connection is retried until `window` lapses.
+pub fn connect_with_retry(addr: &str, window: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if t0.elapsed() >= window {
+                    return Err(anyhow!(e)).with_context(|| {
+                        format!("could not connect to leader at {addr} within {window:?}")
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Serve one handshaken connection until `Shutdown`.
+pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
+    stream.set_nodelay(true).ok();
+    // Bound the handshake so connecting to a silent peer fails instead of
+    // hanging; job frames afterwards may legitimately take arbitrarily long.
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .context("setting handshake timeout")?;
+    wire::write_frame(&mut stream, &wire::encode_hello(&Hello { version: WIRE_VERSION }))
+        .context("sending Hello")?;
+    let setup_frame =
+        wire::read_frame(&mut stream).context("reading Setup (is the peer a demst leader?)")?;
+    let setup = wire::decode_setup(&setup_frame)?;
+    wire::write_frame(
+        &mut stream,
+        &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+    )
+    .context("sending SetupAck")?;
+    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+
+    let kind = wire::metric_from_code(setup.metric)?;
+    let pair_kernel = wire::pair_kernel_from_code(setup.pair_kernel)?;
+    let kernel_choice = wire::kernel_from_code(setup.kernel)?;
+    let block = distance_block(kind);
+    let sqrt_at_emit = block.compare_form_is_squared();
+    let n = setup.n as usize;
+    let ctx = WireCtx { d: setup.d as usize, part_sizes: setup.part_sizes.clone() };
+
+    let mut store: Vec<Option<Slot>> = Vec::new();
+    store.resize_with(setup.part_sizes.len(), || None);
+    // Built on first dense union solve; carries its own eval counter.
+    let mut dense_kernel: Option<Box<dyn DenseMst>> = None;
+    let counter = CountingMetric::new(kind);
+    // Panel-reuse bookkeeping: the in-process PanelCache's exact policy
+    // (shared KeyedLru), stats-only — the subset rows and aux values are
+    // already resident here, so there is nothing to rebuild on a miss.
+    let mut panel_lru: KeyedLru<()> = KeyedLru::new(PANEL_CACHE_CAP);
+
+    let mut report = WorkerReport { worker_id: setup.worker_id, ..Default::default() };
+    let mut pair_evals = 0u64;
+    let mut busy = Duration::ZERO;
+    let mut folded: Option<Vec<Edge>> = None;
+
+    loop {
+        let frame = wire::read_frame(&mut stream).context("reading job frame")?;
+        report.bytes_rx += frame.len() as u64;
+        let msg = wire::decode(&frame, Some(&ctx))?;
+        let reply = match msg {
+            Message::LocalJob { part, global_ids, points } => {
+                let t = Instant::now();
+                let aux = block.prepare(points.as_slice(), points.n, points.d);
+                let tree =
+                    subset_mst_gathered(&points, block.as_ref(), &aux, &counter, &global_ids);
+                let compute = t.elapsed();
+                report.local_jobs += 1;
+                let k = part as usize;
+                if k >= store.len() {
+                    bail!("LocalJob for subset {k} outside the {}-part run", store.len());
+                }
+                store[k] =
+                    Some(Slot { ids: global_ids, points, aux, tree: Some(tree.clone()) });
+                Message::LocalDone { part, edges: tree, compute }
+            }
+            Message::PairAssign { job, ships } => {
+                for ship in ships {
+                    absorb(&mut store, block.as_ref(), ship)?;
+                }
+                let t = Instant::now();
+                let (tree, evals) = match pair_kernel {
+                    PairKernelChoice::BipartiteMerge => solve_bipartite(
+                        &store,
+                        &job,
+                        block.as_ref(),
+                        sqrt_at_emit,
+                        &mut panel_lru,
+                    )?,
+                    PairKernelChoice::Dense => {
+                        let kernel = dense_kernel_mut(
+                            &mut dense_kernel,
+                            &kernel_choice,
+                            kind,
+                            &setup.artifacts_dir,
+                        )?;
+                        solve_dense_union(&store, &job, ctx.d, kernel)?
+                    }
+                };
+                pair_evals += evals;
+                report.jobs += 1;
+                if setup.reduce_tree {
+                    folded = Some(match folded.take() {
+                        None => tree,
+                        Some(prev) => tree_merge(n, &prev, &tree),
+                    });
+                    busy += t.elapsed();
+                    Message::Ack { job_id: job.id }
+                } else {
+                    let compute = t.elapsed();
+                    busy += compute;
+                    Message::Result {
+                        job_id: job.id,
+                        worker: setup.worker_id as usize,
+                        edges: tree,
+                        compute,
+                    }
+                }
+            }
+            Message::Job { job, global_ids, points } => {
+                // Paper-literal union scatter: the dense kernel over the
+                // pre-gathered union, ids mapped back to global.
+                let kernel = dense_kernel_mut(
+                    &mut dense_kernel,
+                    &kernel_choice,
+                    kind,
+                    &setup.artifacts_dir,
+                )?;
+                let before = kernel.dist_evals();
+                let t = Instant::now();
+                let local = kernel.mst(&points);
+                let compute = t.elapsed();
+                pair_evals += kernel.dist_evals() - before;
+                busy += compute;
+                report.jobs += 1;
+                let edges = local
+                    .iter()
+                    .map(|e| {
+                        Edge::new(global_ids[e.u as usize], global_ids[e.v as usize], e.w)
+                    })
+                    .collect();
+                Message::Result {
+                    job_id: job.id,
+                    worker: setup.worker_id as usize,
+                    edges,
+                    compute,
+                }
+            }
+            Message::Shutdown => {
+                // Wire contract (mirrors the in-process WorkerDone):
+                // dist_evals covers the *pair phase* only — the leader
+                // accounts the local-MST cache build separately. The human
+                // exit report totals everything this process computed.
+                report.dist_evals = pair_evals + counter.evals();
+                let done = Message::WorkerDone {
+                    worker: setup.worker_id as usize,
+                    local_tree: folded.take(),
+                    dist_evals: pair_evals,
+                    busy,
+                    jobs_run: report.jobs,
+                    jobs_stolen: 0,
+                    panel_hits: panel_lru.hits,
+                    panel_misses: panel_lru.misses,
+                };
+                let frame = wire::encode(&done)?;
+                // Best-effort: a leader that already gave up must not turn a
+                // clean drain into a worker error.
+                if wire::write_frame(&mut stream, &frame).is_ok() {
+                    report.bytes_tx += frame.len() as u64;
+                }
+                return Ok(report);
+            }
+            other => bail!("unexpected frame from leader: {other:?}"),
+        };
+        let frame = wire::encode(&reply)?;
+        wire::write_frame(&mut stream, &frame).context("sending reply")?;
+        report.bytes_tx += frame.len() as u64;
+    }
+}
+
+/// Integrate one shipped subset section into the resident store.
+fn absorb(store: &mut [Option<Slot>], block: &dyn DistanceBlock, ship: crate::coordinator::messages::SubsetShip) -> Result<()> {
+    let k = ship.part as usize;
+    if k >= store.len() {
+        bail!("shipped subset {k} outside the {}-part run", store.len());
+    }
+    match (ship.vectors, ship.tree) {
+        (Some((ids, points)), tree) => {
+            let aux = block.prepare(points.as_slice(), points.n, points.d);
+            store[k] = Some(Slot { ids, points, aux, tree });
+        }
+        (None, Some(tree)) => match &mut store[k] {
+            Some(slot) => slot.tree = Some(tree),
+            None => bail!("subset {k}: tree shipped before its vectors"),
+        },
+        (None, None) => bail!("subset {k}: empty ship section"),
+    }
+    Ok(())
+}
+
+fn resident<'a>(store: &'a [Option<Slot>], k: u32, what: &str) -> Result<&'a Slot> {
+    store
+        .get(k as usize)
+        .and_then(|s| s.as_ref())
+        .ok_or_else(|| anyhow!("{what}: subset {k} is not resident (leader ship model bug?)"))
+}
+
+/// The bipartite-merge pair kernel over resident subsets: one
+/// `|S_i| × |S_j|` panel product + filtered Prim, exactly the in-process
+/// [`crate::exec::BipartitePairSolver`] arithmetic. Returns the
+/// emission-form tree and the distance evaluations performed.
+fn solve_bipartite(
+    store: &[Option<Slot>],
+    job: &PairJob,
+    block: &dyn DistanceBlock,
+    sqrt_at_emit: bool,
+    panel_lru: &mut KeyedLru<()>,
+) -> Result<(Vec<Edge>, u64)> {
+    if job.i == job.j {
+        // Degenerate self-pair: the cached local MST is the pair tree.
+        let slot = resident(store, job.i, "self-pair job")?;
+        let tree = slot
+            .tree
+            .as_ref()
+            .ok_or_else(|| anyhow!("self-pair job: subset {} has no tree", job.i))?;
+        return Ok((emit(tree, sqrt_at_emit), 0));
+    }
+    for part in [job.i, job.j] {
+        panel_lru.ensure_with(part, || ());
+    }
+    let a = resident(store, job.i, "pair job")?;
+    let b = resident(store, job.j, "pair job")?;
+    let (ti, tj) = match (&a.tree, &b.tree) {
+        (Some(ti), Some(tj)) => (ti, tj),
+        _ => bail!("pair job ({}, {}): local MST missing on a resident subset", job.i, job.j),
+    };
+    let d = a.points.d;
+    let mut blk = vec![0.0f32; a.points.n * b.points.n];
+    block.panel_block(
+        a.points.as_slice(),
+        &a.aux,
+        a.points.n,
+        b.points.as_slice(),
+        &b.aux,
+        b.points.n,
+        d,
+        &mut blk,
+    );
+    let tree = bipartite_filtered_prim_blocked(&a.ids, &b.ids, ti, tj, &blk);
+    Ok((emit(&tree, sqrt_at_emit), (a.points.n * b.points.n) as u64))
+}
+
+/// The dense pair kernel over resident subsets: merge the two gathered
+/// subsets into one ascending-global-id union (the same packing
+/// `decomp::algorithm::run_pair` produces from the full matrix) and run the
+/// configured dense d-MST kernel over it.
+fn solve_dense_union(
+    store: &[Option<Slot>],
+    job: &PairJob,
+    d: usize,
+    kernel: &dyn DenseMst,
+) -> Result<(Vec<Edge>, u64)> {
+    let a = resident(store, job.i, "dense pair job")?;
+    let (ids, union) = if job.i == job.j {
+        (a.ids.clone(), a.points.clone())
+    } else {
+        let b = resident(store, job.j, "dense pair job")?;
+        merge_slots(a, b, d)
+    };
+    let before = kernel.dist_evals();
+    let local = kernel.mst(&union);
+    let evals = kernel.dist_evals() - before;
+    let edges = local
+        .iter()
+        .map(|e| Edge::new(ids[e.u as usize], ids[e.v as usize], e.w))
+        .collect();
+    Ok((edges, evals))
+}
+
+/// Merge two resident subsets into one ascending-id packed union.
+fn merge_slots(a: &Slot, b: &Slot, d: usize) -> (Vec<u32>, Dataset) {
+    let m = a.ids.len() + b.ids.len();
+    let mut ids = Vec::with_capacity(m);
+    let mut data = Vec::with_capacity(m * d);
+    let (mut x, mut y) = (0usize, 0usize);
+    while x < a.ids.len() || y < b.ids.len() {
+        let take_a = match (a.ids.get(x), b.ids.get(y)) {
+            (Some(&ga), Some(&gb)) => ga < gb,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_a {
+            ids.push(a.ids[x]);
+            data.extend_from_slice(a.points.row(x));
+            x += 1;
+        } else {
+            ids.push(b.ids[y]);
+            data.extend_from_slice(b.points.row(y));
+            y += 1;
+        }
+    }
+    (ids, Dataset::new(m, d, data))
+}
+
+/// Compare-form → emission-form weights (`sqrt` for Euclid), matching the
+/// in-process `emit_tree`.
+fn emit(tree: &[Edge], sqrt_at_emit: bool) -> Vec<Edge> {
+    if sqrt_at_emit {
+        tree.iter().map(|e| Edge::new(e.u, e.v, e.w.sqrt())).collect()
+    } else {
+        tree.to_vec()
+    }
+}
+
+/// Build the worker's dense kernel on first use, resolving artifacts
+/// against the handshake-announced directory (the leader's `--artifacts`
+/// path) so both sides see the same AOT set. A `boruvka-xla` request in a
+/// build without the backend still degrades to the blocked Rust provider,
+/// exactly like the leader's resolver does.
+fn dense_kernel_mut<'a>(
+    slot: &'a mut Option<Box<dyn DenseMst>>,
+    choice: &crate::config::KernelChoice,
+    kind: crate::geometry::MetricKind,
+    artifacts_dir: &str,
+) -> Result<&'a dyn DenseMst> {
+    if slot.is_none() {
+        let cfg = RunConfig {
+            kernel: choice.clone(),
+            metric: kind,
+            artifacts_dir: std::path::PathBuf::from(artifacts_dir),
+            ..Default::default()
+        };
+        *slot = Some(crate::coordinator::worker::build_kernel(&cfg)?);
+    }
+    Ok(slot.as_ref().expect("just built").as_ref())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{BipartiteCtx, BipartitePairSolver, LocalMstCache, PairSolver};
+    use crate::exec::ExecPlan;
+    use crate::geometry::MetricKind;
+    use crate::net::wire::Setup;
+    use crate::util::prng::Pcg64;
+    use std::net::TcpListener;
+
+    fn float_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        Dataset::new(n, d, data)
+    }
+
+    /// Drive one worker over a real loopback socket with a hand-rolled
+    /// leader: LocalJob both subsets, a resident-only PairAssign, Shutdown —
+    /// and check the pair tree is bit-identical to the in-process solver.
+    #[test]
+    fn worker_serves_bipartite_pair_bit_identical() {
+        let ds = float_dataset(31, 40, 5);
+        let plan = ExecPlan::new(&ds, 2, crate::decomp::PartitionStrategy::Block, 0);
+        let part_sizes: Vec<u32> = plan.parts.iter().map(|p| p.len() as u32).collect();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || run(&addr.to_string(), Duration::from_secs(5)));
+
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nodelay(true).ok();
+        // leader side of the handshake
+        wire::decode_hello(&wire::read_frame(&mut s).unwrap()).unwrap();
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: 0,
+            n: ds.n as u32,
+            d: ds.d as u16,
+            metric: wire::metric_code(MetricKind::Euclid),
+            kernel: 0,
+            pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
+            reduce_tree: false,
+            part_sizes: part_sizes.clone(),
+            artifacts_dir: String::new(),
+        };
+        wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
+        let ack = wire::decode_setup_ack(&wire::read_frame(&mut s).unwrap()).unwrap();
+        assert_eq!(ack.worker_id, 0);
+
+        // phase 1: both subsets
+        for (k, ids) in plan.parts.iter().enumerate() {
+            let msg = Message::LocalJob {
+                part: k as u32,
+                global_ids: ids.clone(),
+                points: ds.gather(ids),
+            };
+            wire::write_frame(&mut s, &wire::encode(&msg).unwrap()).unwrap();
+            match wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap() {
+                Message::LocalDone { part, edges, .. } => {
+                    assert_eq!(part as usize, k);
+                    assert_eq!(edges.len(), ids.len() - 1);
+                }
+                other => panic!("expected LocalDone, got {other:?}"),
+            }
+        }
+        // phase 2: everything resident — a bare PairAssign
+        let job = PairJob { id: 0, i: 0, j: 1 };
+        let pa = Message::PairAssign { job, ships: vec![] };
+        assert_eq!(pa.wire_bytes(), 16, "resident job ships nothing");
+        wire::write_frame(&mut s, &wire::encode(&pa).unwrap()).unwrap();
+        let ctx = WireCtx { d: ds.d, part_sizes: part_sizes.clone() };
+        let remote_tree =
+            match wire::decode(&wire::read_frame(&mut s).unwrap(), Some(&ctx)).unwrap() {
+                Message::Result { job_id, edges, .. } => {
+                    assert_eq!(job_id, 0);
+                    edges
+                }
+                other => panic!("expected Result, got {other:?}"),
+            };
+        wire::write_frame(&mut s, &wire::encode(&Message::Shutdown).unwrap()).unwrap();
+        match wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap() {
+            Message::WorkerDone { dist_evals, .. } => {
+                // pair phase only — the local-MST builds are accounted by
+                // the leader's cache, exactly like the in-process path
+                let expect = (plan.parts[0].len() * plan.parts[1].len()) as u64;
+                assert_eq!(dist_evals, expect, "exactly one bipartite block");
+            }
+            other => panic!("expected WorkerDone, got {other:?}"),
+        }
+        let report = worker.join().unwrap().unwrap();
+        assert_eq!((report.jobs, report.local_jobs), (1, 2));
+        assert!(report.bytes_rx > 0 && report.bytes_tx > 0);
+
+        // in-process oracle over the full matrix
+        let bctx = BipartiteCtx::new(&ds, MetricKind::Euclid);
+        let cache = LocalMstCache::build_serial(&ds, &bctx, &plan.parts);
+        let mut solver = BipartitePairSolver::new(&ds, &bctx, &cache);
+        let local_tree = solver.solve(&plan, &job);
+        assert_eq!(local_tree, remote_tree, "remote pair tree must be bit-identical");
+    }
+}

@@ -18,7 +18,7 @@ fn help_lists_subcommands() {
     let out = demst().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["run", "dendrogram", "gen", "info", "selftest"] {
+    for cmd in ["run", "worker", "dendrogram", "gen", "info", "selftest"] {
         assert!(text.contains(cmd), "help mentions {cmd}");
     }
 }
@@ -96,6 +96,87 @@ fn run_no_affinity_flag_accepted() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     assert!(!stdout.contains("scatter_saved="), "dense model saves nothing: {stdout}");
+}
+
+#[test]
+fn run_transport_tcp_misconfigurations_fail_with_one_line_errors() {
+    // tcp without --listen
+    let out = demst()
+        .args(["run", "--transport", "tcp", "--workers", "2", "--n", "64", "--d", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--listen"), "{err}");
+    // tcp without an explicit worker count
+    let out = demst()
+        .args(["run", "--transport", "tcp", "--listen", "127.0.0.1:0", "--n", "64", "--d", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("worker count"), "{err}");
+    // tcp with a single partition subset
+    let out = demst()
+        .args([
+            "run", "--transport", "tcp", "--listen", "127.0.0.1:0", "--workers", "2",
+            "--parts", "1", "--n", "64", "--d", "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("parts >= 2"), "{err}");
+    // unknown transport name
+    let out = demst()
+        .args(["run", "--transport", "quic", "--n", "64", "--d", "4"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown transport"), "{err}");
+}
+
+#[test]
+fn worker_requires_connect() {
+    let out = demst().arg("worker").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--connect"), "{err}");
+}
+
+/// The acceptance-criterion run: `demst run --transport tcp` against two
+/// spawned `demst worker` processes on loopback returns the identical MST
+/// (same CSV, byte for byte) as `--transport sim` for the same seed.
+#[test]
+fn run_transport_tcp_loopback_matches_sim_mst() {
+    let tcp_csv = tmpdir().join("transport_tcp_mst.csv");
+    let sim_csv = tmpdir().join("transport_sim_mst.csv");
+    let data_args = [
+        "--data", "blobs", "--n", "120", "--d", "6", "--clusters", "4", "--parts", "4",
+        "--workers", "2", "--seed", "9", "--pair-kernel", "bipartite",
+    ];
+    let out = demst()
+        .arg("run")
+        .args(data_args)
+        .args(["--transport", "tcp", "--listen", "127.0.0.1:0", "--spawn-workers"])
+        .arg("--out-mst")
+        .arg(&tcp_csv)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("transport=tcp"), "{stdout}");
+    assert!(stdout.contains("spawned 2 local"), "{stdout}");
+
+    let out = demst().arg("run").args(data_args).arg("--out-mst").arg(&sim_csv).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let (tcp, sim) = (
+        std::fs::read_to_string(&tcp_csv).unwrap(),
+        std::fs::read_to_string(&sim_csv).unwrap(),
+    );
+    assert_eq!(tcp, sim, "tcp and sim MST CSVs must be byte-identical");
+    assert_eq!(tcp.lines().count(), 120, "header + 119 edges");
 }
 
 #[test]

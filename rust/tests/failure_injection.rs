@@ -109,7 +109,9 @@ fn worker_kernel_init_failure_surfaces_as_error_not_wrong_tree() {
         Ok(Err(e)) => {
             let msg = e.to_string();
             assert!(
-                msg.contains("job count mismatch") || msg.contains("hung up"),
+                msg.contains("job count mismatch")
+                    || msg.contains("hung up")
+                    || msg.contains("distributed run failed"),
                 "unexpected error: {msg}"
             );
         }

@@ -347,6 +347,121 @@ fn prop_affinity_scatter_never_exceeds_dense_model() {
 }
 
 #[test]
+fn prop_wire_encoding_roundtrips_bit_identically() {
+    // The net/wire codec is the single source of truth for Message sizes:
+    // for every variant, `encode(m).len() == m.wire_bytes()` and
+    // `decode(encode(m)) == m` bit-for-bit — which is what makes the
+    // simulated byte charges equal the TCP transport's measured frames.
+    use demst::coordinator::messages::{Message, SubsetShip};
+    use demst::decomp::PairJob;
+    use demst::net::wire::{self, WireCtx};
+    use std::time::Duration;
+
+    fn check(msg: &Message, ctx: Option<&WireCtx>) {
+        let frame = wire::encode(msg).unwrap();
+        assert_eq!(
+            frame.len() as u64,
+            msg.wire_bytes(),
+            "encoded length != wire_bytes for {msg:?}"
+        );
+        assert_eq!(&wire::decode(&frame, ctx).unwrap(), msg, "decode(encode) drifted");
+    }
+
+    Runner::new("wire roundtrip", 0xAD, 40).run(|g| {
+        let parts = g.usize_in(2..6);
+        let d = g.usize_in(1..9);
+        let part_sizes: Vec<u32> = (0..parts).map(|_| g.usize_in(1..9) as u32).collect();
+        let ctx = WireCtx { d, part_sizes: part_sizes.clone() };
+        // 48-bit wire durations; full-u64 nanos for WorkerDone busy
+        let dur48 = Duration::from_nanos(g.rng().next_u64() & ((1 << 48) - 1));
+        let busy = Duration::from_nanos(g.rng().next_u64() >> 1);
+
+        let n_ids = g.usize_in(1..12);
+        let points = Dataset::new(n_ids, d, g.vec_f32(-1e3, 1e3, n_ids * d));
+        let global_ids: Vec<u32> = (0..n_ids as u32).map(|k| k * 3 + 1).collect();
+        let job = PairJob {
+            id: g.rng().next_u64() as u32,
+            i: g.usize_in(0..parts) as u32,
+            j: g.usize_in(0..parts) as u32,
+        };
+        check(
+            &Message::Job { job, global_ids: global_ids.clone(), points: points.clone() },
+            None,
+        );
+        check(
+            &Message::LocalJob { part: g.usize_in(0..parts) as u32, global_ids, points },
+            None,
+        );
+
+        // PairAssign: section lengths are derived from the handshake layout,
+        // so vectors/trees must carry exactly |S_k| rows / |S_k|-1 edges.
+        let (i, j) = {
+            let a = g.usize_in(0..parts - 1);
+            (a as u32, g.usize_in(a + 1..parts) as u32)
+        };
+        let mut ships = Vec::new();
+        for part in [i, j] {
+            let size = part_sizes[part as usize] as usize;
+            let vectors = g.bool_p(0.6).then(|| {
+                (
+                    (0..size as u32).map(|k| k * 7 + part).collect::<Vec<u32>>(),
+                    Dataset::new(size, d, g.vec_f32(-10.0, 10.0, size * d)),
+                )
+            });
+            let tree = (g.bool_p(0.5) || vectors.is_none()).then(|| {
+                (0..size.saturating_sub(1))
+                    .map(|k| Edge::new(2 * k as u32, 2 * k as u32 + 1, g.f32_in(0.0, 9.0)))
+                    .collect::<Vec<Edge>>()
+            });
+            if g.bool_p(0.75) {
+                ships.push(SubsetShip { part, vectors, tree });
+            }
+        }
+        check(
+            &Message::PairAssign { job: PairJob { id: 7, i, j }, ships },
+            Some(&ctx),
+        );
+
+        let n_edges = g.usize_in(0..10);
+        let edges: Vec<Edge> = (0..n_edges)
+            .map(|k| Edge::new(2 * k as u32, 2 * k as u32 + 1, g.f32_in(-3.0, 50.0)))
+            .collect();
+        check(
+            &Message::LocalDone {
+                part: g.usize_in(0..parts) as u32,
+                edges: edges.clone(),
+                compute: dur48,
+            },
+            None,
+        );
+        check(
+            &Message::Result {
+                job_id: g.rng().next_u64() as u32,
+                worker: g.usize_in(0..256),
+                edges: edges.clone(),
+                compute: dur48,
+            },
+            None,
+        );
+        check(&Message::Ack { job_id: g.rng().next_u64() as u32 }, None);
+        check(
+            &Message::WorkerDone {
+                worker: g.usize_in(0..65536),
+                local_tree: g.bool_p(0.5).then_some(edges),
+                dist_evals: g.rng().next_u64(),
+                busy,
+                jobs_run: g.rng().next_u64() as u32,
+                jobs_stolen: g.rng().next_u64() as u32,
+                panel_hits: g.rng().next_u64(),
+                panel_misses: g.rng().next_u64(),
+            },
+            None,
+        );
+        check(&Message::Shutdown, None);
+    });
+}
+
+#[test]
 fn prop_union_find_laws() {
     Runner::new("union-find", 0xA5, 50).run(|g| {
         let n = g.usize_in(1..200);

@@ -1,0 +1,210 @@
+//! Transport parity: the real TCP transport must be byte- and
+//! tree-equivalent to the simulated fabric.
+//!
+//! For a fixed seed/dataset, a loopback `tcp` run returns the bit-identical
+//! MST edge list as `sim`; its scatter/gather counters — fed by **actual
+//! encoded frame sizes** on the sockets — equal the simulated charges
+//! (exactly, where the claim schedule is deterministic; via the
+//! `charged + saved == dense model` invariant under concurrent stealing);
+//! and the handshake appears only as control-plane traffic, which the
+//! simulation deliberately does not model.
+
+use demst::config::{KernelChoice, PairKernelChoice, RunConfig, TransportChoice};
+use demst::coordinator::run_distributed;
+use demst::data::Dataset;
+use demst::exec::PooledRun;
+use demst::geometry::MetricKind;
+use demst::mst::normalize_tree;
+use demst::net::{launch, worker};
+use demst::util::prng::Pcg64;
+use std::net::TcpListener;
+use std::time::Duration;
+
+fn float_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+    Dataset::new(n, d, data)
+}
+
+fn base_cfg(parts: usize, workers: usize) -> RunConfig {
+    RunConfig { parts, workers, kernel: KernelChoice::PrimDense, ..Default::default() }
+}
+
+/// Run `cfg` over real loopback sockets with in-thread workers serving the
+/// far ends (the same `net::worker::serve` loop `demst worker` runs).
+fn tcp_run(ds: &Dataset, cfg: &RunConfig) -> PooledRun {
+    let mut cfg = cfg.clone();
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let n = demst::exec::resolve_workers(&cfg);
+    let handles: Vec<_> = (0..n)
+        .map(|_| {
+            std::thread::spawn(move || worker::run(&addr.to_string(), Duration::from_secs(10)))
+        })
+        .collect();
+    let run = launch::serve(ds, &cfg, &listener).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    run
+}
+
+/// Single worker: the claim schedule is deterministic, so sim and tcp must
+/// agree **exactly** — bit-identical trees and equal scatter/gather byte
+/// counters — for both pair kernels across every metric.
+#[test]
+fn tcp_matches_sim_bit_identical_trees_and_counters() {
+    for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+        for metric in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            let ds = float_dataset(900, 48, 5);
+            let mut cfg = base_cfg(4, 1);
+            cfg.pair_kernel = pair_kernel;
+            cfg.metric = metric;
+            let sim = run_distributed(&ds, &cfg).unwrap();
+            let tcp = tcp_run(&ds, &cfg);
+            let tag = format!("{pair_kernel:?} {metric:?}");
+            assert_eq!(
+                normalize_tree(&sim.mst),
+                normalize_tree(&tcp.mst),
+                "{tag}: trees must be bit-identical"
+            );
+            assert_eq!(
+                sim.metrics.scatter_bytes, tcp.metrics.scatter_bytes,
+                "{tag}: sim charges == tcp frame bytes (scatter)"
+            );
+            assert_eq!(
+                sim.metrics.gather_bytes, tcp.metrics.gather_bytes,
+                "{tag}: sim charges == tcp frame bytes (gather)"
+            );
+            assert_eq!(
+                sim.metrics.scatter_saved_bytes, tcp.metrics.scatter_saved_bytes,
+                "{tag}: resident-set savings agree"
+            );
+            assert_eq!(sim.metrics.dist_evals, tcp.metrics.dist_evals, "{tag}");
+            assert_eq!(tcp.metrics.transport, "tcp");
+            // the handshake is real control traffic the simulation does not
+            // model — strictly more control bytes on the wire
+            assert!(
+                tcp.metrics.control_bytes > sim.metrics.control_bytes,
+                "{tag}: handshake counted as control"
+            );
+        }
+    }
+}
+
+/// Two workers, dense byte model (affinity off): per-job payloads are fixed
+/// regardless of which worker claims what, so the counters must still match
+/// exactly under a nondeterministic schedule.
+#[test]
+fn tcp_dense_model_counters_exact_under_two_workers() {
+    let ds = float_dataset(901, 60, 6);
+    let mut cfg = base_cfg(4, 2);
+    cfg.affinity = false;
+    let sim = run_distributed(&ds, &cfg).unwrap();
+    let tcp = tcp_run(&ds, &cfg);
+    assert_eq!(normalize_tree(&sim.mst), normalize_tree(&tcp.mst));
+    assert_eq!(sim.metrics.scatter_bytes, tcp.metrics.scatter_bytes);
+    assert_eq!(sim.metrics.gather_bytes, tcp.metrics.gather_bytes);
+    assert_eq!(tcp.metrics.scatter_saved_bytes, 0, "dense model saves nothing");
+}
+
+/// Two workers with affinity: the claim schedule (and hence the residency
+/// history) is racy, but the resident-set invariant must hold on the real
+/// wire too: actual frame bytes + modeled savings == the dense model.
+#[test]
+fn tcp_affinity_invariant_holds_on_the_wire() {
+    let ds = float_dataset(902, 64, 5);
+    for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+        let mut cfg = base_cfg(4, 2);
+        cfg.pair_kernel = pair_kernel;
+        cfg.affinity = false;
+        let dense_model = run_distributed(&ds, &cfg).unwrap();
+        cfg.affinity = true;
+        let tcp = tcp_run(&ds, &cfg);
+        assert_eq!(
+            normalize_tree(&dense_model.mst),
+            normalize_tree(&tcp.mst),
+            "{pair_kernel:?}"
+        );
+        assert_eq!(
+            tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
+            dense_model.metrics.scatter_bytes,
+            "{pair_kernel:?}: charged frames + saved == dense model"
+        );
+        assert!(tcp.metrics.scatter_bytes <= dense_model.metrics.scatter_bytes);
+    }
+}
+
+/// Reduce + streaming modes compose with the remote transport: the worker
+/// processes ⊕-fold locally (Ack per job, folded tree in the final
+/// WorkerDone) and the tree is unchanged.
+#[test]
+fn tcp_reduce_and_stream_modes_match_sim() {
+    let ds = float_dataset(903, 56, 4);
+    for (reduce, stream) in [(true, false), (false, true), (true, true)] {
+        let mut cfg = base_cfg(4, 2);
+        cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+        cfg.reduce_tree = reduce;
+        cfg.stream_reduce = stream;
+        let sim = run_distributed(&ds, &cfg).unwrap();
+        let tcp = tcp_run(&ds, &cfg);
+        assert_eq!(
+            normalize_tree(&sim.mst),
+            normalize_tree(&tcp.mst),
+            "reduce={reduce} stream={stream}"
+        );
+    }
+}
+
+/// Real `demst worker` **processes** (not threads) against a library-side
+/// leader: the acceptance-criterion shape, minus the CLI front-end (covered
+/// in tests/cli.rs).
+#[test]
+fn tcp_with_spawned_worker_processes() {
+    let ds = float_dataset(904, 52, 4);
+    let mut cfg = base_cfg(4, 2);
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    let sim = run_distributed(&ds, &cfg).unwrap();
+
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let children: Vec<_> = (0..2)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+                .args(["worker", "--connect", &addr])
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let tcp = launch::serve(&ds, &cfg, &listener).unwrap();
+    for mut child in children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "worker process exited with {status}");
+    }
+    assert_eq!(normalize_tree(&sim.mst), normalize_tree(&tcp.mst));
+    assert_eq!(sim.metrics.scatter_bytes + sim.metrics.scatter_saved_bytes,
+               tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
+               "both residency histories reconcile to the same dense model");
+}
+
+/// A worker pointed at a dead address fails with an actionable error once
+/// its retry window lapses (instead of hanging).
+#[test]
+fn worker_connect_retry_times_out() {
+    // bind-then-drop: the port is (very likely) closed again
+    let port = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().port()
+    };
+    let err = worker::run(&format!("127.0.0.1:{port}"), Duration::from_millis(300)).unwrap_err();
+    assert!(err.to_string().contains("could not connect"), "{err:#}");
+}

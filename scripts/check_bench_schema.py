@@ -18,7 +18,7 @@ import sys
 # should be added here in the same PR that starts recording it.
 REQUIRED_SECTIONS = {
     "e7_kernel": {"cheapest_edge", "prim_dense"},
-    "e8_end_to_end": {"pair_kernel", "stream_fold"},
+    "e8_end_to_end": {"pair_kernel", "stream_fold", "transport"},
 }
 REQUIRED_TOP_KEYS = {"bench", "rows"}
 

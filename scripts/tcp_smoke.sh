@@ -1,0 +1,55 @@
+#!/usr/bin/env bash
+# Loopback multi-process smoke: one `demst run --transport tcp` leader plus
+# two externally started `demst worker` processes on 127.0.0.1, small
+# dataset, asserting (a) every process exits 0 and (b) the MST CSV is
+# byte-identical to a `--transport sim` run of the same seed (checksum
+# printed). Run by `make tcp-smoke` / `make bench` and the CI tcp-smoke job.
+#
+# The leader binds port 0 (kernel-assigned, no fixed-port collisions); the
+# workers read the actual address from the leader's "listening on" line.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${DEMST_BIN:-target/release/demst}
+OUT=${TMPDIR:-/tmp}
+ARGS=(--data blobs --n 160 --d 8 --clusters 4 --parts 4 --workers 2 --seed 7
+      --pair-kernel bipartite)
+
+if [ ! -x "$BIN" ]; then
+    echo "tcp-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 2
+fi
+
+LOG="$OUT/demst_smoke_leader.log"
+: > "$LOG"
+"$BIN" run "${ARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+    --out-mst "$OUT/demst_smoke_tcp.csv" > "$LOG" 2>&1 &
+LEADER=$!
+
+ADDR=""
+for _ in $(seq 1 150); do
+    ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "tcp-smoke: leader never reported its bound address" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+
+"$BIN" worker --connect "$ADDR" --retry-ms 15000 &
+W1=$!
+"$BIN" worker --connect "$ADDR" --retry-ms 15000 &
+W2=$!
+
+wait "$LEADER" || { echo "tcp-smoke: leader failed" >&2; cat "$LOG" >&2; exit 1; }
+wait "$W1" || { echo "tcp-smoke: worker 1 failed" >&2; exit 1; }
+wait "$W2" || { echo "tcp-smoke: worker 2 failed" >&2; exit 1; }
+cat "$LOG"
+
+"$BIN" run "${ARGS[@]}" --out-mst "$OUT/demst_smoke_sim.csv" > /dev/null
+
+cmp "$OUT/demst_smoke_tcp.csv" "$OUT/demst_smoke_sim.csv" \
+    || { echo "tcp-smoke: tcp and sim MSTs differ" >&2; exit 1; }
+sha256sum "$OUT/demst_smoke_tcp.csv" | awk '{print "tcp-smoke: OK, mst checksum " $1}'
