@@ -1,7 +1,7 @@
 # Convenience targets. The Rust build needs no artifacts; `make artifacts`
 # requires a python environment with jax (the AOT layer is optional).
 
-.PHONY: build test artifacts artifacts-quick bench bench-fast tcp-smoke fmt
+.PHONY: build test artifacts artifacts-quick bench bench-fast tcp-smoke chaos-smoke fmt
 
 build:
 	cargo build --release
@@ -26,11 +26,18 @@ bench:
 	DEMST_BENCH_FAST=1 cargo bench --bench e8_end_to_end
 	python3 scripts/check_bench_schema.py BENCH_e7.json BENCH_e8.json
 	$(MAKE) tcp-smoke
+	$(MAKE) chaos-smoke
 
 # Loopback multi-process smoke: leader + 2 `demst worker` processes on
 # 127.0.0.1, asserting exit 0 and a sim-identical MST checksum.
 tcp-smoke: build
 	./scripts/tcp_smoke.sh
+
+# Elastic failover smoke: 2 workers, one dies abruptly (SIGKILL-style, via
+# the DEMST_CHAOS_EXIT_AFTER_JOBS hook) around 50% of its deck; asserts
+# exit 0, a sim-identical MST checksum, and a reported reassignment.
+chaos-smoke: build
+	./scripts/chaos_smoke.sh
 
 # Quick benchmark sweep (reduced shapes/samples); e7 writes BENCH_e7.json.
 bench-fast:

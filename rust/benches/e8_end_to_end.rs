@@ -159,40 +159,54 @@ fn main() {
     let sim2 = run_distributed(&ds, &cfg).unwrap();
     let sim2_ms = sim2.metrics.wall.as_secs_f64() * 1e3;
 
-    let mut tcfg = cfg.clone();
-    tcfg.transport = TransportChoice::Tcp;
-    tcfg.listen = Some("127.0.0.1:0".into());
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    let endpoints: Vec<_> = (0..2)
-        .map(|_| {
-            std::thread::spawn(move || {
-                demst::net::worker::run(&addr.to_string(), std::time::Duration::from_secs(30))
+    // Two loopback-TCP ablations: window=1 (strict rendezvous) vs window=2
+    // (pipelined dispatch — the next PairAssign leaves before the previous
+    // reply is read). Bytes must be identical; only wall time may move.
+    let mut tcp_runs = Vec::new();
+    for window in [1usize, 2] {
+        let mut tcfg = cfg.clone();
+        tcfg.transport = TransportChoice::Tcp;
+        tcfg.listen = Some("127.0.0.1:0".into());
+        tcfg.pipeline_window = window;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let endpoints: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    demst::net::worker::run(&addr.to_string(), std::time::Duration::from_secs(30))
+                })
             })
-        })
-        .collect();
-    let tcp = demst::net::launch::serve(&ds, &tcfg, &listener).unwrap();
-    for h in endpoints {
-        h.join().unwrap().unwrap();
+            .collect();
+        let tcp = demst::net::launch::serve(&ds, &tcfg, &listener).unwrap();
+        for h in endpoints {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(
+            demst::mst::normalize_tree(&exact),
+            demst::mst::normalize_tree(&tcp.mst),
+            "loopback tcp (window={window}) must stay exact"
+        );
+        assert_eq!(
+            tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
+            sim2.metrics.scatter_bytes + sim2.metrics.scatter_saved_bytes,
+            "tcp frame bytes + savings must reconcile with the simulated model (window={window})"
+        );
+        tcp_runs.push(tcp);
     }
-    let tcp_ms = tcp.metrics.wall.as_secs_f64() * 1e3;
     assert_eq!(
-        demst::mst::normalize_tree(&exact),
-        demst::mst::normalize_tree(&tcp.mst),
-        "loopback tcp must stay exact"
+        tcp_runs[0].metrics.scatter_bytes, tcp_runs[1].metrics.scatter_bytes,
+        "the window moves frames earlier, never changes them"
     );
-    assert_eq!(
-        tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
-        sim2.metrics.scatter_bytes + sim2.metrics.scatter_saved_bytes,
-        "tcp frame bytes + savings must reconcile with the simulated model"
-    );
+    let win1_ms = tcp_runs[0].metrics.wall.as_secs_f64() * 1e3;
+    let win2_ms = tcp_runs[1].metrics.wall.as_secs_f64() * 1e3;
     let mut t4 = Table::new(
         format!("E8d transport (n={n}, d={d}, |P|={parts}, workers=2, bipartite-merge)"),
         &["transport", "wall ms", "scatter", "gather", "msgs", "vs sim"],
     );
     let transport_rows = [
         ("sim", &sim2.metrics, sim2_ms, None),
-        ("tcp-loopback", &tcp.metrics, tcp_ms, Some(sim2_ms / tcp_ms.max(1e-9))),
+        ("tcp-win1", &tcp_runs[0].metrics, win1_ms, Some(sim2_ms / win1_ms.max(1e-9))),
+        ("tcp-win2", &tcp_runs[1].metrics, win2_ms, Some(sim2_ms / win2_ms.max(1e-9))),
     ];
     for (name, m, ms, speedup) in &transport_rows {
         t4.push_row(&[

@@ -184,6 +184,17 @@ pub struct RunConfig {
     /// processes itself (on this host, against the bound address) instead
     /// of waiting for externally started workers to connect
     pub spawn_workers: bool,
+    /// sharded run: plan from this shard manifest (`demst partition`
+    /// output) instead of a leader-resident dataset — workers hold the
+    /// vectors (`demst worker --shard`), the leader never ingests them.
+    /// Forces `transport = tcp`; overrides `parts`/`metric`/`data.{n,d}`
+    /// from the manifest.
+    pub shard_manifest: Option<PathBuf>,
+    /// max pair jobs in flight per worker link before the leader awaits a
+    /// reply (tcp only; 1 = strict rendezvous). Overlaps scatter with
+    /// remote compute; replies stay FIFO per link, so the window cannot
+    /// change which bytes travel — only when.
+    pub pipeline_window: usize,
     pub net: NetConfig,
     /// artifacts dir for the XLA kernel
     pub artifacts_dir: PathBuf,
@@ -209,6 +220,8 @@ impl Default for RunConfig {
             transport: TransportChoice::Sim,
             listen: None,
             spawn_workers: false,
+            shard_manifest: None,
+            pipeline_window: 2,
             net: NetConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             verify: false,
@@ -241,7 +254,9 @@ impl RunConfig {
         if self.data.n == 0 || self.data.d == 0 {
             bail!("data.n and data.d must be positive");
         }
-        if self.parts > self.data.n {
+        if self.parts > self.data.n && self.shard_manifest.is_none() {
+            // sharded runs take parts and n from the manifest (a validated
+            // partition of 0..n), not from these CLI/config defaults
             bail!("parts ({}) cannot exceed n ({})", self.parts, self.data.n);
         }
         if self.data.kind == "npy" && self.data.path.is_none() {
@@ -264,34 +279,64 @@ impl RunConfig {
             if self.workers == 0 {
                 bail!("transport tcp requires an explicit worker count (--workers N): a remote fleet cannot be auto-sized from local cores");
             }
-            if self.parts < 2 {
-                bail!("transport tcp requires parts >= 2 (a single-subset run has nothing to distribute)");
-            }
-            // The engine caps workers at the pair-job count; accepting more
-            // connections than it will drive would strand real worker
-            // processes in their handshake timeout.
-            let jobs = crate::decomp::pair_count(self.parts);
-            if self.workers > jobs {
-                bail!(
-                    "transport tcp with parts = {} has only {jobs} pair jobs; --workers {} would leave {} worker processes unused (reduce --workers or raise --parts)",
-                    self.parts,
-                    self.workers,
-                    self.workers - jobs
-                );
-            }
-            // v1 wire limits (see net::wire): u16 subset indices / dimension,
-            // u8 worker ids in per-job Result routing.
-            if self.parts > u16::MAX as usize {
-                bail!("transport tcp supports at most {} parts (wire v1 limit)", u16::MAX);
-            }
-            if self.data.d > u16::MAX as usize {
-                bail!("transport tcp supports at most d = {} (wire v1 limit)", u16::MAX);
-            }
             if self.workers > u8::MAX as usize {
-                bail!("transport tcp supports at most {} workers (wire v1 limit)", u8::MAX);
+                bail!("transport tcp supports at most {} workers (wire v2 limit)", u8::MAX);
+            }
+            // Shape-dependent checks run against the shape that will
+            // actually execute: the CLI/config one here, or the manifest's
+            // (which overrides parts/d) inside `serve_sharded`.
+            if self.shard_manifest.is_none() {
+                self.validate_tcp_shape()?;
             }
         } else if self.spawn_workers {
             bail!("--spawn-workers only applies to --transport tcp");
+        }
+        if self.pipeline_window == 0 || self.pipeline_window > 64 {
+            bail!("pipeline window must be in 1..=64 (got {})", self.pipeline_window);
+        }
+        if self.shard_manifest.is_some() {
+            // Sharded runs only make sense across process boundaries, and
+            // the engine's capability scheduling rides on affinity decks.
+            if self.transport != TransportChoice::Tcp {
+                bail!("--shard requires --transport tcp (a sharded dataset lives on the worker hosts)");
+            }
+            if !self.affinity {
+                bail!("--shard requires affinity scheduling (drop --no-affinity): sharded jobs must run where their subsets are resident");
+            }
+            if self.spawn_workers {
+                bail!("--shard cannot be combined with --spawn-workers: start each worker with its own --shard-ids on the host holding those shard files");
+            }
+        }
+        Ok(())
+    }
+
+    /// The `parts`/`d`-dependent tcp checks. `validate` runs them for
+    /// leader-resident runs; sharded leaders call this again after
+    /// overriding `parts`/`data.d` from the manifest (the CLI defaults
+    /// they start from say nothing about the manifest's real shape).
+    pub fn validate_tcp_shape(&self) -> Result<()> {
+        if self.parts < 2 {
+            bail!("transport tcp requires parts >= 2 (a single-subset run has nothing to distribute)");
+        }
+        // The engine caps workers at the pair-job count; accepting more
+        // connections than it will drive would strand real worker
+        // processes in their handshake timeout.
+        let jobs = crate::decomp::pair_count(self.parts);
+        if self.workers > jobs {
+            bail!(
+                "transport tcp with parts = {} has only {jobs} pair jobs; --workers {} would leave {} worker processes unused (reduce --workers or raise --parts)",
+                self.parts,
+                self.workers,
+                self.workers - jobs
+            );
+        }
+        // v2 wire limits (see net::wire): u16 subset indices / dimension,
+        // u8 worker ids in per-job Result routing.
+        if self.parts > u16::MAX as usize {
+            bail!("transport tcp supports at most {} parts (wire v2 limit)", u16::MAX);
+        }
+        if self.data.d > u16::MAX as usize {
+            bail!("transport tcp supports at most d = {} (wire v2 limit)", u16::MAX);
         }
         Ok(())
     }
@@ -341,6 +386,8 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         ("", "spawn_workers") => {
             cfg.spawn_workers = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
         }
+        ("", "shard_manifest") => cfg.shard_manifest = Some(PathBuf::from(need_str()?)),
+        ("", "pipeline_window") => cfg.pipeline_window = get_usize(v)?,
         ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
         ("", "strategy") => {
             cfg.strategy = PartitionStrategy::parse(need_str()?)
@@ -527,7 +574,7 @@ bandwidth = 1e9
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 300\nparts = 300",
         )
         .unwrap_err();
-        assert!(e.to_string().contains("wire v1"), "{e:#}");
+        assert!(e.to_string().contains("wire v2"), "{e:#}");
         // more workers than pair jobs would strand real processes
         let e = RunConfig::from_toml(
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 2",
@@ -539,6 +586,51 @@ bandwidth = 1e9
         let sim = RunConfig::from_toml("workers = 0").unwrap();
         assert_eq!(sim.workers, 0, "workers = 0 still means auto under sim");
         let e = RunConfig::from_toml("spawn_workers = true").unwrap_err();
+        assert!(e.to_string().contains("spawn-workers"), "{e:#}");
+    }
+
+    #[test]
+    fn shard_and_window_keys_validate_early() {
+        assert_eq!(RunConfig::default().pipeline_window, 2, "window defaults to 2");
+        assert!(RunConfig::default().shard_manifest.is_none());
+        let cfg = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nshard_manifest = \"emb.manifest.toml\"\npipeline_window = 1",
+        )
+        .unwrap();
+        assert_eq!(cfg.shard_manifest.as_deref(), Some(std::path::Path::new("emb.manifest.toml")));
+        assert_eq!(cfg.pipeline_window, 1);
+        // window bounds
+        for bad in ["pipeline_window = 0", "pipeline_window = 65"] {
+            let e = RunConfig::from_toml(bad).unwrap_err();
+            assert!(e.to_string().contains("pipeline window"), "{e:#}");
+        }
+        // a sharded config defers the parts-dependent checks to the
+        // manifest's shape: a fleet larger than the *default* parts' pair
+        // count must still parse (the manifest may have many more shards)
+        let big = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 64\nshard_manifest = \"m.toml\"",
+        )
+        .unwrap();
+        assert_eq!(big.workers, 64);
+        // ... and the deferred check still fires once the real shape is in
+        let mut shaped = big.clone();
+        shaped.parts = 8; // pair_count = 28 < 64 workers
+        let e = shaped.validate_tcp_shape().unwrap_err();
+        assert!(e.to_string().contains("pair jobs"), "{e:#}");
+        shaped.parts = 64; // 2016 jobs: fine
+        shaped.validate_tcp_shape().unwrap();
+        // sharding requires tcp, affinity, and external workers
+        let e = RunConfig::from_toml("shard_manifest = \"m.toml\"").unwrap_err();
+        assert!(e.to_string().contains("--transport tcp"), "{e:#}");
+        let e = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nshard_manifest = \"m.toml\"\naffinity = false",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("affinity"), "{e:#}");
+        let e = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nshard_manifest = \"m.toml\"\nspawn_workers = true",
+        )
+        .unwrap_err();
         assert!(e.to_string().contains("spawn-workers"), "{e:#}");
     }
 

@@ -38,6 +38,10 @@ pub fn resolve_workers(cfg: &RunConfig) -> usize {
 /// counters fed by actual encoded frames. Returns the exact MSF plus
 /// measured metrics.
 pub fn run_distributed(ds: &Dataset, cfg: &RunConfig) -> anyhow::Result<DistOutput> {
+    anyhow::ensure!(
+        cfg.shard_manifest.is_none(),
+        "run_distributed takes a leader-resident dataset; sharded runs go through run_sharded"
+    );
     let run = match cfg.transport {
         TransportChoice::Sim => {
             let net = NetSim::new(cfg.net.clone());
@@ -45,6 +49,15 @@ pub fn run_distributed(ds: &Dataset, cfg: &RunConfig) -> anyhow::Result<DistOutp
         }
         TransportChoice::Tcp => crate::net::launch::run_leader(ds, cfg)?,
     };
+    Ok(DistOutput { mst: run.mst, metrics: run.metrics, workers: run.workers })
+}
+
+/// Run a **sharded** distributed EMST: the leader plans from
+/// `cfg.shard_manifest` alone and never materializes subset vectors — the
+/// worker fleet loads them from local shard files
+/// (`demst worker --shard ... --shard-ids ...`). Always `transport = tcp`.
+pub fn run_sharded(cfg: &RunConfig) -> anyhow::Result<DistOutput> {
+    let run = crate::net::launch::run_leader_sharded(cfg)?;
     Ok(DistOutput { mst: run.mst, metrics: run.metrics, workers: run.workers })
 }
 

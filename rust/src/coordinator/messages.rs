@@ -44,6 +44,10 @@ pub enum Message {
     /// Leader → worker: build the local MST of one partition subset
     /// (bipartite-merge phase 1) and keep the subset resident.
     LocalJob { part: u32, global_ids: Vec<u32>, points: Dataset },
+    /// Leader → worker (sharded runs): build the local MST of a subset the
+    /// worker already holds from its shard files — phase 1 without any
+    /// vectors on the wire (the frame is its 16-byte header).
+    LocalAssign { part: u32 },
     /// Worker → leader: one subset's local MST (global ids, compare-form
     /// weights) plus the build time.
     LocalDone { part: u32, edges: Vec<Edge>, compute: Duration },
@@ -158,6 +162,7 @@ mod tests {
         };
         assert_eq!(done.wire_bytes(), 16 + 29 * 12);
         assert_eq!(Message::Ack { job_id: 7 }.wire_bytes(), 16);
+        assert_eq!(Message::LocalAssign { part: 3 }.wire_bytes(), 16);
         assert_eq!(Message::Shutdown.wire_bytes(), 16);
     }
 

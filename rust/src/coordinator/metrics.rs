@@ -68,6 +68,24 @@ pub struct RunMetrics {
     /// total edges scanned by the streaming merge-join folds — bounded by
     /// `reduce_folds · 2(|V|-1)`, the no-full-re-sort witness
     pub reduce_fold_edges: u64,
+    /// max pair jobs in flight per worker link before the leader awaits a
+    /// reply (1 = strict rendezvous; sim runs report 1)
+    pub pipeline_window: u32,
+    /// whether the run was sharded: the plan came from a shard manifest
+    /// and the leader never held subset vectors
+    pub sharded: bool,
+    /// vector-section bytes that passed through the leader (scattered
+    /// subset payloads, modeled or real) — the leader-bottleneck witness,
+    /// **0 by construction on a sharded run**
+    pub leader_ingest_bytes: u64,
+    /// vector payload the worker fleet loaded from local shard files
+    /// (summed per resident copy); 0 on unsharded runs
+    pub shard_local_bytes: u64,
+    /// worker links that died mid-run and were failed over
+    pub worker_failures: u32,
+    /// pair jobs returned to the deck by a failed worker and re-run on the
+    /// surviving fleet (each still recorded exactly once at the leader)
+    pub jobs_reassigned: u32,
 }
 
 impl RunMetrics {
@@ -158,10 +176,36 @@ impl RunMetrics {
         if !self.transport.is_empty() {
             s.push_str(&format!(" transport={}", self.transport));
         }
+        if self.pipeline_window > 1 {
+            s.push_str(&format!(" window={}", self.pipeline_window));
+        }
+        if self.sharded {
+            s.push_str(" sharded");
+        }
+        if self.worker_failures > 0 {
+            s.push_str(&format!(
+                " failures={} reassigned={}",
+                self.worker_failures, self.jobs_reassigned
+            ));
+        }
         if let Some(note) = &self.kernel_fallback {
             s.push_str(&format!(" (fallback: {note})"));
         }
         s
+    }
+
+    /// Sharding line: where the vector payload actually lived. Empty on
+    /// unsharded runs.
+    pub fn sharding_summary(&self) -> String {
+        use crate::util::human_bytes;
+        if !self.sharded {
+            return String::new();
+        }
+        format!(
+            "leader_ingest={} shard_local={}",
+            human_bytes(self.leader_ingest_bytes),
+            human_bytes(self.shard_local_bytes)
+        )
     }
 
     /// Fraction of panel-cache probes that hit (0.0 when the bipartite
@@ -271,15 +315,36 @@ mod tests {
             transport: "tcp".into(),
             local_mst_evals: 1200,
             pair_evals: 3400,
+            pipeline_window: 2,
+            sharded: true,
+            worker_failures: 1,
+            jobs_reassigned: 3,
             ..Default::default()
         };
         let s = m.summary();
         assert!(s.contains("pair_kernel=bipartite-merge"), "{s}");
         assert!(s.contains("stream_reduce"), "{s}");
         assert!(s.contains("transport=tcp"), "{s}");
+        assert!(s.contains("window=2"), "{s}");
+        assert!(s.contains("sharded"), "{s}");
+        assert!(s.contains("failures=1 reassigned=3"), "{s}");
         let p = m.phase_summary();
         assert!(p.contains("local_mst="), "{p}");
         assert!(p.contains("1.20K evals"), "{p}");
+    }
+
+    #[test]
+    fn sharding_summary_reports_payload_residency() {
+        assert_eq!(RunMetrics::default().sharding_summary(), "");
+        let m = RunMetrics {
+            sharded: true,
+            leader_ingest_bytes: 0,
+            shard_local_bytes: 4096,
+            ..Default::default()
+        };
+        let s = m.sharding_summary();
+        assert!(s.contains("leader_ingest=0 B"), "{s}");
+        assert!(s.contains("shard_local=4.00 KiB"), "{s}");
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod metrics;
 pub mod worker;
 pub mod leader;
 
-pub use leader::{run_distributed, DistOutput};
+pub use leader::{run_distributed, run_sharded, DistOutput};
 pub use messages::Message;
 pub use metrics::RunMetrics;
 pub use crate::net::{NetCounters, NetSim};

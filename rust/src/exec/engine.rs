@@ -8,9 +8,9 @@
 //! charged to a [`Transport`] (the `coordinator::run_distributed` path —
 //! the simulated [`NetSim`](crate::net::NetSim) byte model by default, or
 //! real TCP links via [`execute_pooled_remote`], where each pool thread
-//! proxies its jobs to a remote `demst worker` process through a
-//! [`RemoteSolver`] and the counters are fed by actual frame sizes).
-//! Per-phase timings and evaluation counters land in [`RunMetrics`].
+//! drives a remote `demst worker` process through a
+//! [`RemoteLink`]). Per-phase timings and evaluation counters land in
+//! [`RunMetrics`].
 //!
 //! Pooled flow, bipartite-merge kernel:
 //!
@@ -22,6 +22,36 @@
 //!
 //! The dense kernel skips the first phase and solves each pair with a full
 //! d-MST over the gathered union, exactly as before the refactor.
+//!
+//! ## Remote execution: pipelined and elastic
+//!
+//! The remote driver ([`execute_pooled_remote`]) keeps up to
+//! `cfg.pipeline_window` `PairAssign` frames outstanding per link before
+//! reading the matching replies, overlapping scatter with remote compute
+//! (window 1 restores the strict rendezvous; frames per link stay FIFO, so
+//! window size cannot change which bytes travel — only when).
+//!
+//! When a worker's link dies mid-run, its claimed-but-undelivered jobs
+//! (the in-flight window, plus — in reduce mode — every job folded into
+//! its never-gathered local tree) go back to the [`JobQueue`]'s return
+//! lane, its unclaimed deck is abandoned to the lane, and the surviving
+//! fleet drains the lane; every pair job is still *recorded exactly once*
+//! at the leader, so the final tree is bit-identical to a failure-free
+//! run. `RunMetrics::{worker_failures, jobs_reassigned}` witness the
+//! recovery.
+//!
+//! ## Sharded execution: the leader never holds vectors
+//!
+//! Under [`execute_pooled_sharded`] the engine runs with **no dataset at
+//! all**: the plan comes from a shard manifest, every subset's vectors are
+//! resident on the workers that loaded them from local shard files
+//! (advertised in the v2 handshake, seeding the resident-set model), and
+//! scheduling is restricted to workers holding *both* subsets of a job
+//! ([`ExecPlan::affinity_for_holders`]). Phase 1 dispatches header-only
+//! `LocalAssign` frames; pair scatter ships at most cached local *trees*
+//! (edges, never vectors). `RunMetrics::leader_ingest_bytes` — the vector
+//! payload that passed through the leader — is 0 by construction, with
+//! `shard_local_bytes` accounting what the fleet loaded from disk instead.
 
 use super::pair_kernel::{
     subset_mst, BipartiteCtx, BipartitePairSolver, DensePairSolver, LocalMstCache, PairSolver,
@@ -33,14 +63,15 @@ use crate::config::{PairKernelChoice, RunConfig};
 use crate::coordinator::messages::{job_wire_bytes, Message, HEADER_BYTES};
 use crate::coordinator::metrics::RunMetrics;
 use crate::data::Dataset;
-use crate::net::remote::RemoteSolver;
-use crate::net::{Direction, TcpTransport, Transport};
 use crate::decomp::reduction::{reduce_trees_with, tree_merge, StreamReducer};
 use crate::decomp::{pair_count, DecompConfig, DecompOutput, PairJob};
 use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::mst::kruskal;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::net::remote::RemoteLink;
+use crate::net::{Direction, TcpTransport, Transport};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -122,30 +153,96 @@ pub struct PooledRun {
     pub workers: usize,
 }
 
-/// The pooled engine: worker threads claim jobs from per-worker affinity
-/// decks (cost-LPT within each deck, idle stealing as fallback; one shared
-/// LPT queue when `cfg.affinity` is off); the leader gathers trees
-/// (streaming or buffered) and finishes the reduction. All traffic is
-/// charged to `net` — under the resident-set model only payload the
-/// executing worker is missing, with the dense model's difference recorded
-/// in `RunMetrics::scatter_saved_bytes`.
+/// What of one subset the executing worker already holds under the
+/// resident-set model. On leader-resident runs vectors and cached tree
+/// always travel (and are marked) together, reproducing the historical
+/// single-flag model byte-for-byte; on sharded runs vectors are seeded
+/// from the handshake advertisements while trees become resident only
+/// where phase 1 built (or later shipped) them.
+#[derive(Clone, Copy, Debug, Default)]
+struct Held {
+    vecs: bool,
+    tree: bool,
+}
+
+/// Shared elastic-fleet bookkeeping: which links died, how many jobs were
+/// recorded at the leader, and the run-level abort latch.
+struct Fleet {
+    dead: Vec<AtomicBool>,
+    /// reduce mode: worker's shutdown rendezvous succeeded — its remotely
+    /// ⊕-folded results are durably at the leader
+    finished: Vec<AtomicBool>,
+    done_jobs: AtomicUsize,
+    expected_jobs: usize,
+    failures: AtomicU32,
+    reassigned: AtomicU32,
+    abort: AtomicBool,
+}
+
+impl Fleet {
+    fn new(workers: usize, expected_jobs: usize) -> Self {
+        Self {
+            dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            finished: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            done_jobs: AtomicUsize::new(0),
+            expected_jobs,
+            failures: AtomicU32::new(0),
+            reassigned: AtomicU32::new(0),
+            abort: AtomicBool::new(false),
+        }
+    }
+
+    // Coordination flags use SeqCst: the elastic gates (`complete`,
+    // `lower_all_settled`, `stranded`) read *combinations* of these
+    // atomics, and a relaxed reordering between e.g. `done_jobs -= k` and
+    // `dead[w] = true` would let a peer observe "complete and settled"
+    // mid-failover and disperse with recoverable jobs stranded.
+
+    fn alive(&self) -> Vec<bool> {
+        self.dead.iter().map(|d| !d.load(Ordering::SeqCst)).collect()
+    }
+
+    fn complete(&self) -> bool {
+        self.done_jobs.load(Ordering::SeqCst) >= self.expected_jobs
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.load(Ordering::SeqCst)
+    }
+
+    /// Mark `w` dead. Call only **after** every recovery side effect of
+    /// the failure (done-count rollback, return-lane pushes) is in place:
+    /// peers treat a dead worker as settled, so the flag must be the last
+    /// thing they can observe.
+    fn fail_worker(&self, w: usize) {
+        self.dead[w].store(true, Ordering::SeqCst);
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The pooled engine over the simulated transport: worker threads claim
+/// jobs from per-worker affinity decks (cost-LPT within each deck, idle
+/// stealing as fallback; one shared LPT queue when `cfg.affinity` is off);
+/// the leader gathers trees (streaming or buffered) and finishes the
+/// reduction. All traffic is charged to `net` — under the resident-set
+/// model only payload the executing worker is missing, with the dense
+/// model's difference recorded in `RunMetrics::scatter_saved_bytes`.
 pub fn execute_pooled(
     ds: &Dataset,
     cfg: &RunConfig,
     net: &dyn Transport,
 ) -> anyhow::Result<PooledRun> {
     let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
-    execute_pooled_inner(ds, cfg, net, None, plan)
+    execute_pooled_inner(Some(ds), ds.n, ds.d, cfg, net, None, plan)
 }
 
 /// The identical pooled engine run against **remote worker processes**:
-/// pool thread `w` proxies every job it claims (same decks, same resident-
-/// set model, same stealing) to remote worker `w` through a
-/// [`RemoteSolver`] over `tcp`'s socket. [`Transport::charge`] no-ops on
-/// the TCP transport — the counters are fed by the actual encoded frames
-/// the proxies and the local-MST phase put on the wire, which equal the
-/// modeled charges byte-for-byte because [`Message::wire_bytes`] is
-/// computed from the real wire encoding.
+/// pool thread `w` drives remote worker `w` through a [`RemoteLink`] over
+/// `tcp`'s socket, with up to `cfg.pipeline_window` jobs in flight per
+/// link. [`Transport::charge`] no-ops on the TCP transport — the counters
+/// are fed by the actual encoded frames, which equal the modeled charges
+/// byte-for-byte because [`Message::wire_bytes`] is computed from the real
+/// wire encoding.
 ///
 /// `plan` is the **same plan the handshake announced**: the caller
 /// ([`crate::net::launch::serve`]) partitions once, tells every worker the
@@ -158,17 +255,36 @@ pub fn execute_pooled_remote(
     tcp: &TcpTransport,
     plan: ExecPlan,
 ) -> anyhow::Result<PooledRun> {
-    execute_pooled_inner(ds, cfg, tcp, Some(tcp), plan)
+    execute_pooled_inner(Some(ds), ds.n, ds.d, cfg, tcp, Some(tcp), plan)
+}
+
+/// The sharded pooled engine: same remote execution, but the leader holds
+/// **no vectors** — `plan` comes from a shard manifest (`n`/`d` likewise)
+/// and every subset is resident on the workers whose handshake advertised
+/// it. Scheduling is restricted to workers holding both subsets of a job;
+/// pair scatter ships at most cached local trees.
+pub fn execute_pooled_sharded(
+    cfg: &RunConfig,
+    tcp: &TcpTransport,
+    plan: ExecPlan,
+    n: usize,
+    d: usize,
+) -> anyhow::Result<PooledRun> {
+    execute_pooled_inner(None, n, d, cfg, tcp, Some(tcp), plan)
 }
 
 fn execute_pooled_inner(
-    ds: &Dataset,
+    ds: Option<&Dataset>,
+    n: usize,
+    d: usize,
     cfg: &RunConfig,
     net: &dyn Transport,
     remote: Option<&TcpTransport>,
     plan: ExecPlan,
 ) -> anyhow::Result<PooledRun> {
     let t_start = Instant::now();
+    let sharded = ds.is_none();
+    debug_assert!(!sharded || remote.is_some(), "sharded runs are remote by definition");
     let n_workers = resolve_workers(cfg);
     if let Some(tcp) = remote {
         anyhow::ensure!(
@@ -178,16 +294,63 @@ fn execute_pooled_inner(
         );
     }
     let counters = net.counters();
+    let p = plan.parts.len();
+
+    // Sharded residency: which subsets each worker's handshake advertised,
+    // and the vector payload the fleet loaded from local shard files
+    // instead of receiving over the wire (per worker copy — replicated
+    // shards count once per replica, they were each read from disk).
+    let holders: Option<Vec<Vec<bool>>> = if sharded {
+        let tcp = remote.expect("sharded implies remote");
+        let mut holders = vec![vec![false; p]; n_workers];
+        for (w, row) in holders.iter_mut().enumerate() {
+            for &k in tcp.advertised(w) {
+                let k = k as usize;
+                anyhow::ensure!(
+                    k < p,
+                    "worker {w} advertised shard {k} but the manifest has {p} shards"
+                );
+                row[k] = true;
+            }
+        }
+        Some(holders)
+    } else {
+        None
+    };
+    let shard_local_bytes: u64 = holders.as_ref().map_or(0, |h| {
+        h.iter()
+            .flat_map(|row| row.iter().enumerate())
+            .filter(|&(_, &held)| held)
+            .map(|(k, _)| crate::net::wire::vectors_payload_bytes(plan.parts[k].len(), d))
+            .sum()
+    });
 
     // Subset-affinity routing + resident-set byte model (cfg.affinity):
     // each subset gets an anchor worker, jobs land on the anchor of their
     // larger subset, and each worker remembers which subsets (vectors +
     // cached tree) it already holds — residency persists from the local-MST
     // phase into the pair phase, and only the *missing* payload is charged.
-    let affinity: Option<AffinityPlan> = cfg.affinity.then(|| plan.affinity(n_workers));
-    let residents: Vec<Mutex<Vec<bool>>> =
-        (0..n_workers).map(|_| Mutex::new(vec![false; plan.parts.len()])).collect();
+    // Sharded runs use the holder-constrained variant and a capability mask.
+    let (affinity, caps): (Option<AffinityPlan>, Option<Vec<Vec<bool>>>) =
+        if let Some(h) = &holders {
+            let (aff, caps) = plan.affinity_for_holders(h)?;
+            (Some(aff), Some(caps))
+        } else {
+            (cfg.affinity.then(|| plan.affinity(n_workers)), None)
+        };
+    let residents: Vec<Mutex<Vec<Held>>> =
+        (0..n_workers).map(|_| Mutex::new(vec![Held::default(); p])).collect();
+    if let Some(h) = &holders {
+        for (w, row) in h.iter().enumerate() {
+            let mut res = residents[w].lock().unwrap();
+            for (k, &held) in row.iter().enumerate() {
+                res[k].vecs = held;
+            }
+        }
+    }
     let scatter_saved = AtomicU64::new(0);
+    let leader_ingest = AtomicU64::new(0);
+    let fleet = Fleet::new(n_workers, plan.n_jobs());
 
     let mut metrics = RunMetrics {
         worker_busy: vec![Duration::ZERO; n_workers],
@@ -196,26 +359,34 @@ fn execute_pooled_inner(
         pair_kernel: cfg.pair_kernel.name().to_string(),
         stream_reduce: cfg.stream_reduce,
         transport: if remote.is_some() { "tcp" } else { "sim" }.to_string(),
+        pipeline_window: if remote.is_some() { cfg.pipeline_window.max(1) as u32 } else { 1 },
+        shard_local_bytes,
+        sharded,
         ..Default::default()
     };
 
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
     // through the same worker pool — at its anchor when affinity is on, so
     // the anchor already holds the subset when the pair phase starts.
-    let bip: Option<(BipartiteCtx, LocalMstCache)> = match cfg.pair_kernel {
+    let bip: Option<(Option<BipartiteCtx>, LocalMstCache)> = match cfg.pair_kernel {
         PairKernelChoice::Dense => None,
         PairKernelChoice::BipartiteMerge => {
             let t = Instant::now();
-            let ctx = BipartiteCtx::new(ds, cfg.metric);
+            let ctx = ds.map(|ds| BipartiteCtx::new(ds, cfg.metric));
             let (cache, phase_busy) = build_cache_pooled(
                 ds,
-                &ctx,
+                d,
+                ctx.as_ref(),
                 &plan,
                 n_workers,
+                cfg,
                 net,
                 affinity.as_ref(),
+                holders.as_deref(),
                 &residents,
                 remote,
+                &fleet,
+                &leader_ingest,
             )?;
             for (w, b) in phase_busy.into_iter().enumerate() {
                 metrics.worker_busy[w] += b;
@@ -226,16 +397,18 @@ fn execute_pooled_inner(
     };
 
     // Phase 2: pair jobs over the pool — per-worker affinity decks with
-    // idle stealing, or the shared LPT deal when affinity is off.
+    // idle stealing (capability-confined claims on sharded runs), or the
+    // shared LPT deal when affinity is off.
     let t_pairs = Instant::now();
-    let queue = match &affinity {
-        Some(aff) => JobQueue::with_decks(aff.decks.clone()),
-        None => JobQueue::new(plan.lpt_order.clone()),
+    let queue = match (&affinity, caps) {
+        (Some(aff), Some(caps)) => JobQueue::with_decks_capped(aff.decks.clone(), caps),
+        (Some(aff), None) => JobQueue::with_decks(aff.decks.clone()),
+        (None, _) => JobQueue::new(plan.lpt_order.clone()),
     };
     let (tx_leader, rx_leader) = channel::<Message>();
     let mut union_edges: Vec<Edge> = Vec::new();
     let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
-    let mut stream = if cfg.stream_reduce { Some(StreamReducer::new(ds.n)) } else { None };
+    let mut stream = if cfg.stream_reduce { Some(StreamReducer::new(n)) } else { None };
     let mut reduce_time = Duration::ZERO;
     let worker_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
 
@@ -244,27 +417,57 @@ fn execute_pooled_inner(
         let queue_ref = &queue;
         let bip_ref = bip.as_ref();
         let saved_ref = &scatter_saved;
+        let ingest_ref = &leader_ingest;
         let errors_ref = &worker_errors;
+        let fleet_ref = &fleet;
         let use_affinity = affinity.is_some();
         for (w, resident) in residents.iter().enumerate() {
             let tx = tx_leader.clone();
-            scope.spawn(move || {
-                pooled_worker(
-                    w,
-                    ds,
-                    plan_ref,
-                    queue_ref,
-                    cfg,
-                    net,
-                    remote,
-                    bip_ref,
-                    use_affinity,
-                    resident,
-                    saved_ref,
-                    errors_ref,
-                    tx,
-                )
-            });
+            match remote {
+                Some(tcp) => {
+                    let cache = bip_ref.map(|(_, c)| c);
+                    scope.spawn(move || {
+                        pooled_worker_remote(
+                            w,
+                            ds,
+                            d,
+                            plan_ref,
+                            queue_ref,
+                            cfg,
+                            net,
+                            tcp,
+                            cache,
+                            use_affinity,
+                            resident,
+                            saved_ref,
+                            ingest_ref,
+                            fleet_ref,
+                            errors_ref,
+                            tx,
+                        )
+                    });
+                }
+                None => {
+                    let ds = ds.expect("in-process execution holds the dataset");
+                    scope.spawn(move || {
+                        pooled_worker_local(
+                            w,
+                            ds,
+                            plan_ref,
+                            queue_ref,
+                            cfg,
+                            net,
+                            bip_ref,
+                            use_affinity,
+                            resident,
+                            saved_ref,
+                            ingest_ref,
+                            errors_ref,
+                            tx,
+                        )
+                    });
+                }
+            }
         }
         drop(tx_leader); // leader keeps only rx
 
@@ -325,11 +528,14 @@ fn execute_pooled_inner(
     if !worker_errors.is_empty() {
         anyhow::bail!("distributed run failed: {}", worker_errors.join("; "));
     }
+    metrics.worker_failures = fleet.failures.load(Ordering::Relaxed);
+    metrics.jobs_reassigned = fleet.reassigned.load(Ordering::Relaxed);
     let expected_jobs = plan.n_jobs() as u32;
     if metrics.jobs != expected_jobs {
         anyhow::bail!(
-            "job count mismatch: expected {expected_jobs}, completed {} (worker failure?)",
-            metrics.jobs
+            "job count mismatch: expected {expected_jobs}, completed {} ({} worker link(s) failed; the surviving fleet could not finish the deck)",
+            metrics.jobs,
+            metrics.worker_failures
         );
     }
     // Streaming folds ran inside the gather loop; carve them out of the
@@ -347,14 +553,15 @@ fn execute_pooled_inner(
     } else if cfg.reduce_tree {
         // reduction runs at the leader; NetSim already charged each worker
         // tree's gather, so the final hop must not be counted again
-        let (tree, _stats) = reduce_trees_with(ds.n, &worker_trees, false);
+        let (tree, _stats) = reduce_trees_with(n, &worker_trees, false);
         tree
     } else {
-        kruskal(ds.n, &union_edges)
+        kruskal(n, &union_edges)
     };
     metrics.final_mst = t_mst.elapsed();
     metrics.phase_reduce = reduce_time + metrics.final_mst;
     metrics.scatter_saved_bytes = scatter_saved.load(Ordering::Relaxed);
+    metrics.leader_ingest_bytes = leader_ingest.load(Ordering::Relaxed);
 
     metrics.pair_evals = metrics.dist_evals;
     if let Some((_, cache)) = &bip {
@@ -372,62 +579,59 @@ fn execute_pooled_inner(
     Ok(PooledRun { mst, metrics, workers: n_workers })
 }
 
-/// One pooled worker: claim jobs until the decks drain (own deck first,
-/// then stealing), charging the scatter for each claimed job — under the
-/// resident-set model only the payload this worker does not yet hold — and
-/// shipping each pair tree (or a locally ⊕-combined tree) back to the
-/// leader. In-process solvers share the leader's memory (the charge is the
-/// byte *model*); under [`execute_pooled_remote`] the solver is a
-/// [`RemoteSolver`] that puts exactly the computed [`Shipment`] on its
-/// worker's socket, so the modeled and measured bytes agree per job.
-fn pooled_worker(
+/// One in-process pooled worker: claim jobs until the decks drain (own
+/// deck first, then stealing), charging the scatter for each claimed job —
+/// under the resident-set model only the payload this worker does not yet
+/// hold — and shipping each pair tree (or a locally ⊕-combined tree) back
+/// to the leader. In-process solvers share the leader's memory; the charge
+/// is the byte *model* of what the wire encoding would occupy.
+fn pooled_worker_local(
     worker_id: usize,
     ds: &Dataset,
     plan: &ExecPlan,
     queue: &JobQueue,
     cfg: &RunConfig,
     net: &dyn Transport,
-    remote: Option<&TcpTransport>,
-    bip: Option<&(BipartiteCtx, LocalMstCache)>,
+    bip: Option<&(Option<BipartiteCtx>, LocalMstCache)>,
     use_affinity: bool,
-    resident: &Mutex<Vec<bool>>,
+    resident: &Mutex<Vec<Held>>,
     scatter_saved: &AtomicU64,
+    leader_ingest: &AtomicU64,
     errors: &Mutex<Vec<String>>,
     tx_leader: Sender<Message>,
 ) {
     let cache = bip.map(|(_, c)| c);
-    let mut solver: Box<dyn PairSolver + '_> = if let Some(tcp) = remote {
-        Box::new(RemoteSolver::new(tcp, worker_id, ds, cache, cfg.reduce_tree))
-    } else {
-        match bip {
-            Some((ctx, cache)) => Box::new(BipartitePairSolver::new(ds, ctx, cache)),
-            None => match crate::coordinator::worker::build_kernel(cfg) {
-                Ok(kernel) => Box::new(DensePairSolver::owned(ds, kernel)),
-                Err(e) => {
-                    // Report failure as an empty done message; the leader
-                    // surfaces the recorded error after the gather loop.
-                    errors
-                        .lock()
-                        .unwrap()
-                        .push(format!("worker {worker_id}: kernel init failed: {e:#}"));
-                    let _ = net.send(
-                        &tx_leader,
-                        Message::WorkerDone {
-                            worker: worker_id,
-                            local_tree: None,
-                            dist_evals: 0,
-                            busy: Duration::ZERO,
-                            jobs_run: 0,
-                            jobs_stolen: 0,
-                            panel_hits: 0,
-                            panel_misses: 0,
-                        },
-                        Direction::Gather,
-                    );
-                    return;
-                }
-            },
+    let mut solver: Box<dyn PairSolver + '_> = match bip {
+        Some((ctx, cache)) => {
+            let ctx = ctx.as_ref().expect("in-process bipartite runs carry their context");
+            Box::new(BipartitePairSolver::new(ds, ctx, cache))
         }
+        None => match crate::coordinator::worker::build_kernel(cfg) {
+            Ok(kernel) => Box::new(DensePairSolver::owned(ds, kernel)),
+            Err(e) => {
+                // Report failure as an empty done message; the leader
+                // surfaces the recorded error after the gather loop.
+                errors
+                    .lock()
+                    .unwrap()
+                    .push(format!("worker {worker_id}: kernel init failed: {e:#}"));
+                let _ = net.send(
+                    &tx_leader,
+                    Message::WorkerDone {
+                        worker: worker_id,
+                        local_tree: None,
+                        dist_evals: 0,
+                        busy: Duration::ZERO,
+                        jobs_run: 0,
+                        jobs_stolen: 0,
+                        panel_hits: 0,
+                        panel_misses: 0,
+                    },
+                    Direction::Gather,
+                );
+                return;
+            }
+        },
     };
     let local_reduce = cfg.reduce_tree;
     let mut busy = Duration::ZERO;
@@ -436,19 +640,17 @@ fn pooled_worker(
     let mut local_tree: Option<Vec<Edge>> = None;
     while let Some((job_idx, stolen)) = queue.pop_for(worker_id) {
         let job = &plan.jobs[job_idx];
-        // The leader→worker scatter of this job's payload: what the dense
-        // model would ship, minus what this worker already holds.
-        let full = dense_shipment(job, cache.is_some());
-        let dense_bytes = shipment_bytes(plan, job, ds.d, cache, &full);
-        let (bytes, ship) = if use_affinity {
-            let mut res = resident.lock().unwrap();
-            let ship = residual_shipment(job, cache.is_some(), res.as_mut_slice());
-            (shipment_bytes(plan, job, ds.d, cache, &ship), ship)
-        } else {
-            (dense_bytes, full)
-        };
-        net.charge(bytes, Direction::Scatter);
-        scatter_saved.fetch_add(dense_bytes - bytes, Ordering::Relaxed);
+        let ship = charge_job_scatter(
+            plan,
+            job,
+            ds.d,
+            cache,
+            use_affinity,
+            resident,
+            net,
+            scatter_saved,
+            leader_ingest,
+        );
         if stolen {
             jobs_stolen += 1;
         }
@@ -467,17 +669,12 @@ fn pooled_worker(
         busy += compute;
         jobs_run += 1;
         if local_reduce {
-            // A remote solver ⊕-folds on the far side of the wire (its Ack
-            // carries nothing); folding its empty returns again would be a
-            // second reduction.
-            if !solver.folds_remotely() {
-                let t2 = Instant::now();
-                local_tree = Some(match local_tree.take() {
-                    None => solved.edges,
-                    Some(prev) => tree_merge(ds.n, &prev, &solved.edges),
-                });
-                busy += t2.elapsed();
-            }
+            let t2 = Instant::now();
+            local_tree = Some(match local_tree.take() {
+                None => solved.edges,
+                Some(prev) => tree_merge(ds.n, &prev, &solved.edges),
+            });
+            busy += t2.elapsed();
         } else if net
             .send(
                 &tx_leader,
@@ -495,9 +692,7 @@ fn pooled_worker(
         }
     }
     // Queue drained (or aborted): model the shutdown control message, then
-    // drain the solver — for the remote proxy this is the shutdown
-    // rendezvous that collects the worker process's final stats (and its
-    // remotely ⊕-folded tree in reduce mode) — and report.
+    // drain the solver and report.
     net.charge(HEADER_BYTES, Direction::Control);
     let fin = match solver.finish() {
         Ok(f) => f,
@@ -525,12 +720,313 @@ fn pooled_worker(
     );
 }
 
+/// Mutable state of one remote link's drive loop, shared with the failure
+/// handler so a dead link can return exactly the jobs it lost.
+struct RemoteDrive {
+    /// claimed job indices whose replies have not arrived (FIFO)
+    inflight: VecDeque<usize>,
+    /// reduce mode: jobs folded into the worker's never-yet-gathered tree
+    acked: Vec<usize>,
+    /// jobs whose results were durably recorded at the leader
+    delivered: u32,
+    jobs_stolen: u32,
+    busy: Duration,
+    fin: Option<SolverFinal>,
+}
+
+/// One remote pooled worker: drive worker `w`'s link with a bounded
+/// in-flight window, and on link death hand every undelivered job back to
+/// the queue's return lane for the surviving fleet.
+fn pooled_worker_remote(
+    worker_id: usize,
+    ds: Option<&Dataset>,
+    d: usize,
+    plan: &ExecPlan,
+    queue: &JobQueue,
+    cfg: &RunConfig,
+    net: &dyn Transport,
+    tcp: &TcpTransport,
+    cache: Option<&LocalMstCache>,
+    use_affinity: bool,
+    resident: &Mutex<Vec<Held>>,
+    scatter_saved: &AtomicU64,
+    leader_ingest: &AtomicU64,
+    fleet: &Fleet,
+    errors: &Mutex<Vec<String>>,
+    tx_leader: Sender<Message>,
+) {
+    let mut st = RemoteDrive {
+        inflight: VecDeque::new(),
+        acked: Vec::new(),
+        delivered: 0,
+        jobs_stolen: 0,
+        busy: Duration::ZERO,
+        fin: None,
+    };
+    let outcome = if fleet.dead[worker_id].load(Ordering::SeqCst) {
+        // Link already died in phase 1: free this deck for the survivors
+        // (nothing was claimed, so nothing counts as reassigned).
+        queue.abandon_deck(worker_id);
+        Ok(())
+    } else {
+        let link = RemoteLink::new(tcp, worker_id, ds, cache, cfg.reduce_tree);
+        drive_remote_link(
+            worker_id,
+            &link,
+            plan,
+            queue,
+            cfg,
+            net,
+            cache,
+            d,
+            use_affinity,
+            resident,
+            scatter_saved,
+            leader_ingest,
+            fleet,
+            errors,
+            &tx_leader,
+            &mut st,
+        )
+    };
+    let (jobs_run, fin) = match outcome {
+        Ok(()) => {
+            let fin = st.fin.take().unwrap_or_default();
+            (st.delivered, fin)
+        }
+        Err(e) => {
+            // Everything claimed but not durably recorded goes back: the
+            // in-flight window, plus (reduce mode) every job whose result
+            // lives only in the worker's never-gathered local fold. The
+            // dead flag is stored LAST — a peer that observes it must
+            // already be able to see the rolled-back done count and the
+            // returned jobs, or it could disperse mid-failover.
+            let refolded = st.acked.len();
+            let mut lost: Vec<usize> = st.inflight.drain(..).collect();
+            lost.append(&mut st.acked);
+            fleet.done_jobs.fetch_sub(refolded, Ordering::SeqCst);
+            fleet.reassigned.fetch_add(lost.len() as u32, Ordering::Relaxed);
+            queue.push_returned(&lost);
+            queue.abandon_deck(worker_id);
+            fleet.fail_worker(worker_id);
+            eprintln!(
+                "leader: worker {worker_id} link failed mid-run ({e:#}); returned {} job(s) to the deck",
+                lost.len()
+            );
+            (st.delivered - refolded as u32, SolverFinal::default())
+        }
+    };
+    let _ = net.send(
+        &tx_leader,
+        Message::WorkerDone {
+            worker: worker_id,
+            local_tree: fin.local_tree,
+            dist_evals: fin.dist_evals,
+            busy: fin.busy.unwrap_or(st.busy),
+            jobs_run,
+            jobs_stolen: st.jobs_stolen,
+            panel_hits: fin.panel_hits,
+            panel_misses: fin.panel_misses,
+        },
+        Direction::Gather,
+    );
+}
+
+/// The windowed drive loop of one healthy link. Returns `Err` on a link
+/// failure (socket death, protocol violation) — the caller turns the
+/// undelivered state into return-lane entries.
+fn drive_remote_link(
+    worker_id: usize,
+    link: &RemoteLink<'_>,
+    plan: &ExecPlan,
+    queue: &JobQueue,
+    cfg: &RunConfig,
+    net: &dyn Transport,
+    cache: Option<&LocalMstCache>,
+    d: usize,
+    use_affinity: bool,
+    resident: &Mutex<Vec<Held>>,
+    scatter_saved: &AtomicU64,
+    leader_ingest: &AtomicU64,
+    fleet: &Fleet,
+    errors: &Mutex<Vec<String>>,
+    tx_leader: &Sender<Message>,
+    st: &mut RemoteDrive,
+) -> anyhow::Result<()> {
+    let window = cfg.pipeline_window.max(1);
+    loop {
+        // Top up the in-flight window: send the next claimed job before
+        // awaiting the previous reply — scatter overlaps remote compute.
+        while st.inflight.len() < window {
+            let Some((job_idx, stolen)) = queue.pop_for(worker_id) else { break };
+            let job = &plan.jobs[job_idx];
+            let planned = plan_job_scatter(plan, job, d, cache, use_affinity, resident);
+            if stolen {
+                st.jobs_stolen += 1;
+            }
+            // Push before sending: a failed send means the job is lost in
+            // flight and must be returned.
+            st.inflight.push_back(job_idx);
+            link.send_pair(plan, job, &planned.ship)?;
+            // Counters only after the frame left: a failed send returns
+            // the job unaccounted, and the survivor's re-send is the one
+            // (and only) transfer the witnesses record.
+            account_job_scatter(&planned, net, scatter_saved, leader_ingest);
+        }
+        if st.inflight.is_empty() {
+            if fleet.complete() || fleet.aborted() {
+                // Reduce mode: an acked fold is durable only once its
+                // worker's shutdown rendezvous gathers the folded tree, so
+                // shut links down in worker-id order — if a lower-id
+                // peer's rendezvous fails, its acked jobs return to the
+                // lane, `complete()` flips back off, and this still-open
+                // link picks them up instead of having already dispersed.
+                // (Only a failure at the very last live rendezvous has no
+                // fleet left to recover on; that aborts loudly with a job
+                // count mismatch — exactness is never at risk.)
+                if cfg.reduce_tree && !fleet.aborted() {
+                    let lower_all_settled = (0..worker_id).all(|v| {
+                        fleet.dead[v].load(Ordering::SeqCst)
+                            || fleet.finished[v].load(Ordering::SeqCst)
+                    });
+                    if !lower_all_settled {
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
+                    // Settled observed — now re-read completion. A failing
+                    // peer rolls its done count back *before* raising its
+                    // dead flag, so a completion glimpsed before that
+                    // rollback is caught here and the loop resumes
+                    // claiming the returned jobs instead of dispersing.
+                    if !fleet.complete() {
+                        continue;
+                    }
+                }
+                break;
+            }
+            // Idle but the run is not done: a peer may yet fail and return
+            // jobs this worker can run. Fail fast if returned work can no
+            // longer run anywhere.
+            if let Some(job_idx) = queue.stranded_job(&fleet.alive()) {
+                errors.lock().unwrap().push(format!(
+                    "pair job {} lost: every worker capable of running it has failed",
+                    plan.jobs[job_idx].id
+                ));
+                fleet.abort.store(true, Ordering::SeqCst);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        // Await the oldest in-flight reply (frames are FIFO per link).
+        let front_idx = *st.inflight.front().expect("checked non-empty");
+        let job = &plan.jobs[front_idx];
+        let solved = link.recv_pair_reply(job)?;
+        st.inflight.pop_front();
+        st.delivered += 1;
+        fleet.done_jobs.fetch_add(1, Ordering::SeqCst);
+        if cfg.reduce_tree {
+            // folded remotely; only durable once the final tree is gathered
+            st.acked.push(front_idx);
+        } else {
+            let compute = solved.compute.unwrap_or_default();
+            st.busy += compute;
+            if tx_leader
+                .send(Message::Result {
+                    job_id: job.id,
+                    worker: worker_id,
+                    edges: solved.edges,
+                    compute,
+                })
+                .is_err()
+            {
+                anyhow::bail!("leader gather channel closed");
+            }
+        }
+    }
+    // Drained (or aborted with an empty window): shutdown rendezvous —
+    // collects the worker's stats and, in reduce mode, its ⊕-folded tree.
+    st.fin = Some(link.finish()?);
+    // Folds gathered: peers waiting on the ordered shutdown may proceed.
+    fleet.finished[worker_id].store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// One planned pair-job scatter: the shipment decision plus the byte
+/// quantities its accounting needs. Splitting *planning* (claim time, under
+/// the residency lock) from *accounting* (after the frame actually leaves)
+/// keeps the witness counters honest on elastic runs: a job whose send
+/// fails is returned and re-planned by a survivor, and only payload that
+/// really traveled is ever counted.
+struct PlannedScatter {
+    ship: Shipment,
+    bytes: u64,
+    dense_bytes: u64,
+    vector_bytes: u64,
+}
+
+/// Decide one claimed job's shipment under the configured byte model and
+/// mark the claimed sections held (no counters touched yet).
+fn plan_job_scatter(
+    plan: &ExecPlan,
+    job: &PairJob,
+    d: usize,
+    cache: Option<&LocalMstCache>,
+    use_affinity: bool,
+    resident: &Mutex<Vec<Held>>,
+) -> PlannedScatter {
+    let full = dense_shipment(job, cache.is_some());
+    let dense_bytes = shipment_bytes(plan, job, d, cache, &full);
+    let (bytes, ship) = if use_affinity {
+        let mut res = resident.lock().unwrap();
+        let ship = residual_shipment(job, cache.is_some(), res.as_mut_slice());
+        (shipment_bytes(plan, job, d, cache, &ship), ship)
+    } else {
+        (dense_bytes, full)
+    };
+    let vector_bytes = ship_vector_bytes(plan, job, d, &ship);
+    PlannedScatter { ship, bytes, dense_bytes, vector_bytes }
+}
+
+/// Account one planned scatter that actually traveled (or, in-process, is
+/// modeled as traveling): the transport charge, the bytes the resident-set
+/// model avoided vs the dense ship-everything model, and the
+/// vector-section bytes that passed through the leader
+/// (`leader_ingest_bytes` — zero on sharded runs by construction).
+fn account_job_scatter(
+    planned: &PlannedScatter,
+    net: &dyn Transport,
+    scatter_saved: &AtomicU64,
+    leader_ingest: &AtomicU64,
+) {
+    net.charge(planned.bytes, Direction::Scatter);
+    scatter_saved.fetch_add(planned.dense_bytes - planned.bytes, Ordering::Relaxed);
+    leader_ingest.fetch_add(planned.vector_bytes, Ordering::Relaxed);
+}
+
+/// Plan + account in one step — the in-process path, where the "transfer"
+/// is the model itself and cannot fail.
+fn charge_job_scatter(
+    plan: &ExecPlan,
+    job: &PairJob,
+    d: usize,
+    cache: Option<&LocalMstCache>,
+    use_affinity: bool,
+    resident: &Mutex<Vec<Held>>,
+    net: &dyn Transport,
+    scatter_saved: &AtomicU64,
+    leader_ingest: &AtomicU64,
+) -> Shipment {
+    let planned = plan_job_scatter(plan, job, d, cache, use_affinity, resident);
+    account_job_scatter(&planned, net, scatter_saved, leader_ingest);
+    planned.ship
+}
+
 /// The dense-model shipment: everything the job consumes travels, every
 /// time. The degenerate self-pair job (`|P| = 1`) under the bipartite
 /// kernel consumes only the cached tree (its vectors were already shipped
 /// by the local-MST phase); under the dense kernel it consumes the
-/// subset's vectors. `pub(crate)` so the remote proxy's bare `solve` path
-/// shares this decision instead of re-deriving it.
+/// subset's vectors.
 pub(crate) fn dense_shipment(job: &PairJob, has_cache: bool) -> Shipment {
     if job.i == job.j {
         if has_cache {
@@ -544,39 +1040,49 @@ pub(crate) fn dense_shipment(job: &PairJob, has_cache: bool) -> Shipment {
 }
 
 /// The resident-set shipment: the same per-subset payload as
-/// [`dense_shipment`], restricted to subsets the executing worker does not
-/// already hold, which are marked resident afterwards. Per job this is ≤
-/// the dense model by construction (the per-subset terms are identical),
-/// so total affinity scatter can never exceed the dense model.
-fn residual_shipment(job: &PairJob, has_cache: bool, resident: &mut [bool]) -> Shipment {
+/// [`dense_shipment`], restricted to the sections the executing worker
+/// does not already hold, which are marked held afterwards. Per job this
+/// is ≤ the dense model by construction (the per-section terms are
+/// identical), so total affinity scatter can never exceed the dense model.
+/// On leader-resident runs vectors and trees toggle together, reproducing
+/// the historical one-flag model; on sharded runs vectors are pre-held
+/// everywhere they were advertised and only cached trees ever ship.
+fn residual_shipment(job: &PairJob, has_cache: bool, held: &mut [Held]) -> Shipment {
     let (i, j) = (job.i as usize, job.j as usize);
     let mut ship = Shipment::default();
     if i == j {
-        if !resident[i] {
-            resident[i] = true;
-            if has_cache {
+        if has_cache {
+            if !held[i].tree {
+                held[i].tree = true;
                 ship.tree_i = true;
-            } else {
-                ship.vec_i = true;
             }
+        } else if !held[i].vecs {
+            held[i].vecs = true;
+            ship.vec_i = true;
         }
         return ship;
     }
-    if !resident[i] {
-        resident[i] = true;
+    if !held[i].vecs {
+        held[i].vecs = true;
         ship.vec_i = true;
-        ship.tree_i = has_cache;
     }
-    if !resident[j] {
-        resident[j] = true;
+    if has_cache && !held[i].tree {
+        held[i].tree = true;
+        ship.tree_i = true;
+    }
+    if !held[j].vecs {
+        held[j].vecs = true;
         ship.vec_j = true;
-        ship.tree_j = has_cache;
+    }
+    if has_cache && !held[j].tree {
+        held[j].tree = true;
+        ship.tree_j = true;
     }
     ship
 }
 
 /// Wire bytes of one pair-job scatter under `ship`: exactly the length of
-/// the `PairAssign` frame the remote proxy encodes for it (header + the
+/// the `PairAssign` frame the remote link encodes for it (header + the
 /// shipped sections) — the arithmetic delegates to [`crate::net::wire`], so
 /// the modeled charge and the measured frame cannot drift.
 fn shipment_bytes(
@@ -605,6 +1111,19 @@ fn shipment_bytes(
     bytes
 }
 
+/// Vector-section bytes of one shipment — the part of the scatter that is
+/// leader-held vector payload (zero whenever only cached trees travel).
+fn ship_vector_bytes(plan: &ExecPlan, job: &PairJob, d: usize, ship: &Shipment) -> u64 {
+    let mut bytes = 0;
+    if ship.vec_i {
+        bytes += subset_payload_bytes(plan, job.i as usize, d);
+    }
+    if ship.vec_j {
+        bytes += subset_payload_bytes(plan, job.j as usize, d);
+    }
+    bytes
+}
+
 /// One subset's share of a pair-job scatter: global-id map + vectors.
 /// `job_wire_bytes(|S_i| + |S_j|, d) = HEADER_BYTES + Σ` of these, which is
 /// what keeps the dense and resident-set models consistent per subset.
@@ -620,101 +1139,167 @@ fn subset_payload_bytes(plan: &ExecPlan, k: usize, d: usize) -> u64 {
 /// each returned local tree once. Under a remote transport, pool thread `w`
 /// ships the subset as a `LocalJob` frame to remote worker `w` — which
 /// keeps it resident and computes the tree over the gathered rows
-/// (bit-identical, see [`crate::exec::pair_kernel::subset_mst_gathered`]) —
-/// and the `LocalJob`/`LocalDone` frame sizes are exactly the modeled
-/// scatter/gather charges. Also returns each pool worker's busy time so
-/// the engine can attribute this phase's compute to
-/// `RunMetrics::worker_busy` (remote compute is the worker-measured time
-/// from the `LocalDone` frame, not the round-trip).
+/// (bit-identical, see [`crate::exec::pair_kernel::subset_mst_gathered`]).
+/// On *sharded* runs the vectors are already worker-resident, so the frame
+/// degenerates to a header-only `LocalAssign` and the capability mask
+/// confines each subset to its holders. A worker whose link dies here is
+/// marked dead, its subsets return to the lane, and the surviving holders
+/// rebuild them. Also returns each pool worker's busy time so the engine
+/// can attribute this phase's compute to `RunMetrics::worker_busy` (remote
+/// compute is the worker-measured time from the `LocalDone` frame, not the
+/// round-trip).
 fn build_cache_pooled(
-    ds: &Dataset,
-    ctx: &BipartiteCtx,
+    ds: Option<&Dataset>,
+    d: usize,
+    ctx: Option<&BipartiteCtx>,
     plan: &ExecPlan,
     n_workers: usize,
+    cfg: &RunConfig,
     net: &dyn Transport,
     affinity: Option<&AffinityPlan>,
-    residents: &[Mutex<Vec<bool>>],
+    holders: Option<&[Vec<bool>]>,
+    residents: &[Mutex<Vec<Held>>],
     remote: Option<&TcpTransport>,
+    fleet: &Fleet,
+    leader_ingest: &AtomicU64,
 ) -> anyhow::Result<(LocalMstCache, Vec<Duration>)> {
     let t = Instant::now();
     let p = plan.parts.len();
-    let queue = match affinity {
-        Some(aff) => JobQueue::with_decks(aff.local_decks.clone()),
-        None => {
+    let queue = match (affinity, holders) {
+        (Some(aff), Some(h)) => {
+            JobQueue::with_decks_capped(aff.local_decks.clone(), h.to_vec())
+        }
+        (Some(aff), None) => JobQueue::with_decks(aff.local_decks.clone()),
+        (None, _) => {
             let mut order: Vec<usize> = (0..p).collect();
             order.sort_by(|&a, &b| plan.parts[b].len().cmp(&plan.parts[a].len()).then(a.cmp(&b)));
             JobQueue::new(order)
         }
     };
-    let counter = CountingMetric::new(ctx.kind);
+    let counter = CountingMetric::new(cfg.metric);
     let slots: Vec<Mutex<Option<Vec<Edge>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    let built = AtomicUsize::new(0);
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
-    let n_spawn = n_workers.min(p);
+    let n_spawn = if remote.is_some() { n_workers } else { n_workers.min(p) };
     let busy: Vec<Mutex<Duration>> = (0..n_spawn).map(|_| Mutex::new(Duration::ZERO)).collect();
     std::thread::scope(|scope| {
         let queue_ref = &queue;
         let counter_ref = &counter;
         let slots_ref = &slots;
+        let built_ref = &built;
         let errors_ref = &errors;
         for (w, busy_slot) in busy.iter().enumerate() {
             let resident = &residents[w];
-            scope.spawn(move || {
-                while let Some((k, _stolen)) = queue_ref.pop_for(w) {
-                    let ids = &plan.parts[k];
-                    net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
-                    if affinity.is_some() {
-                        // this worker now holds the subset's vectors (and
-                        // will hold its tree): seed the pair-phase model
-                        resident.lock().unwrap()[k] = true;
+            scope.spawn(move || loop {
+                let claimed = queue_ref.pop_for(w);
+                let Some((k, _stolen)) = claimed else {
+                    match remote {
+                        None => return, // in-process: a drained queue is final
+                        Some(_) => {
+                            if built_ref.load(Ordering::SeqCst) >= p || fleet.aborted() {
+                                return;
+                            }
+                            if let Some(k) = queue_ref.stranded_job(&fleet.alive()) {
+                                errors_ref.lock().unwrap().push(format!(
+                                    "subset {k}: every worker holding it has failed"
+                                ));
+                                fleet.abort.store(true, Ordering::SeqCst);
+                                return;
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
+                            continue;
+                        }
                     }
-                    let tree = if let Some(tcp) = remote {
-                        let msg = Message::LocalJob {
+                };
+                let ids = &plan.parts[k];
+                let sharded = ds.is_none();
+                let tree = if let Some(tcp) = remote {
+                    let msg = if sharded {
+                        Message::LocalAssign { part: k as u32 }
+                    } else {
+                        Message::LocalJob {
                             part: k as u32,
                             global_ids: ids.clone(),
-                            points: ds.gather(ids),
-                        };
-                        let reply = tcp
-                            .send_to(w, &msg, Direction::Scatter)
-                            .and_then(|_| tcp.recv_from(w));
-                        match reply {
-                            Ok(Message::LocalDone { part, edges, compute })
-                                if part as usize == k =>
-                            {
-                                *busy_slot.lock().unwrap() += compute;
-                                edges
-                            }
-                            Ok(other) => {
-                                errors_ref.lock().unwrap().push(format!(
-                                    "worker {w}: expected LocalDone for subset {k}, got {other:?}"
-                                ));
-                                return;
-                            }
-                            Err(e) => {
-                                errors_ref.lock().unwrap().push(format!(
-                                    "worker {w}: local-MST job for subset {k} failed: {e:#}"
-                                ));
-                                return;
-                            }
+                            points: ds.expect("unsharded remote holds the dataset").gather(ids),
                         }
-                    } else {
-                        let t_job = Instant::now();
-                        let tree = subset_mst(
-                            ds.as_slice(),
-                            ds.d,
-                            ctx.block.as_ref(),
-                            &ctx.aux,
-                            counter_ref,
-                            ids,
-                        );
-                        *busy_slot.lock().unwrap() += t_job.elapsed();
-                        tree
                     };
-                    net.charge(
-                        HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
-                        Direction::Gather,
+                    // Ingest accounted only after the frame actually left:
+                    // a failed send returns the subset to the lane and the
+                    // survivor's re-send is the transfer that counts.
+                    let reply = tcp.send_to(w, &msg, Direction::Scatter).and_then(|_| {
+                        if let Some(ds) = ds {
+                            leader_ingest.fetch_add(
+                                crate::net::wire::vectors_payload_bytes(ids.len(), ds.d),
+                                Ordering::Relaxed,
+                            );
+                        }
+                        tcp.recv_from(w)
+                    });
+                    match reply {
+                        Ok(Message::LocalDone { part, edges, compute })
+                            if part as usize == k =>
+                        {
+                            *busy_slot.lock().unwrap() += compute;
+                            edges
+                        }
+                        Ok(other) => {
+                            // recovery state first, dead flag last (see
+                            // Fleet::fail_worker)
+                            queue_ref.push_returned(&[k]);
+                            queue_ref.abandon_deck(w);
+                            fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                            fleet.fail_worker(w);
+                            eprintln!(
+                                "leader: worker {w} answered subset {k} with {other:?}; treating the link as failed"
+                            );
+                            return;
+                        }
+                        Err(e) => {
+                            queue_ref.push_returned(&[k]);
+                            queue_ref.abandon_deck(w);
+                            fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                            fleet.fail_worker(w);
+                            eprintln!(
+                                "leader: worker {w} link failed on subset {k} ({e:#}); returned it to the deck"
+                            );
+                            return;
+                        }
+                    }
+                } else {
+                    let ds = ds.expect("in-process phase 1 holds the dataset");
+                    let ctx = ctx.expect("in-process phase 1 carries the bipartite context");
+                    // the modeled scatter of this subset's vectors (the
+                    // in-process "transfer" is the model and cannot fail)
+                    net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
+                    leader_ingest.fetch_add(
+                        crate::net::wire::vectors_payload_bytes(ids.len(), ds.d),
+                        Ordering::Relaxed,
                     );
-                    *slots_ref[k].lock().unwrap() = Some(tree);
+                    let t_job = Instant::now();
+                    let tree = subset_mst(
+                        ds.as_slice(),
+                        ds.d,
+                        ctx.block.as_ref(),
+                        &ctx.aux,
+                        counter_ref,
+                        ids,
+                    );
+                    *busy_slot.lock().unwrap() += t_job.elapsed();
+                    tree
+                };
+                net.charge(
+                    HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
+                    Direction::Gather,
+                );
+                {
+                    // the claiming worker now holds the subset's vectors
+                    // (already true on sharded runs) and its cached tree
+                    let mut res = resident.lock().unwrap();
+                    res[k].vecs = true;
+                    res[k].tree = true;
                 }
+                *slots_ref[k].lock().unwrap() = Some(tree);
+                built_ref.fetch_add(1, Ordering::SeqCst);
             });
         }
     });
@@ -754,11 +1339,11 @@ mod tests {
     use super::*;
     use crate::config::KernelChoice;
     use crate::data::generators::uniform;
-    use crate::net::NetSim;
     use crate::decomp::decomposed_mst;
     use crate::dense::PrimDense;
     use crate::geometry::MetricKind;
     use crate::mst::normalize_tree;
+    use crate::net::NetSim;
     use crate::util::prng::Pcg64;
 
     fn int_dataset(seed: u64, n: usize, d: usize) -> Dataset {
@@ -868,6 +1453,11 @@ mod tests {
         assert_eq!(out.metrics.scatter_bytes, 6 * per_job);
         assert_eq!(out.metrics.scatter_saved_bytes, 0, "dense model saves nothing");
         assert_eq!(out.metrics.jobs_stolen, 0, "single shared deck: nothing counts as stolen");
+        // every scattered byte above is leader-held vector payload + header
+        assert_eq!(out.metrics.leader_ingest_bytes, 6 * (per_job - 16));
+        assert_eq!(out.metrics.worker_failures, 0);
+        assert_eq!(out.metrics.jobs_reassigned, 0);
+        assert!(!out.metrics.sharded);
     }
 
     /// The resident-set invariant that makes the affinity model auditable:
@@ -998,5 +1588,35 @@ mod tests {
         // 4 partitions of 16: cache = 4 * C(16,2), pairs = 6 * 16 * 16
         assert_eq!(out.metrics.local_mst_evals, 4 * (16 * 15 / 2));
         assert_eq!(out.metrics.pair_evals, 6 * 16 * 16);
+    }
+
+    /// The split-flag resident model must reproduce the historical
+    /// one-flag shipments on every leader-resident sequence: vectors and
+    /// trees always travel (and are marked) together.
+    #[test]
+    fn residual_shipment_marks_vectors_and_trees_together() {
+        let mut held = vec![Held::default(); 3];
+        let job01 = PairJob { id: 0, i: 0, j: 1 };
+        let job12 = PairJob { id: 1, i: 1, j: 2 };
+        let s = residual_shipment(&job01, true, &mut held);
+        assert_eq!(
+            s,
+            Shipment { vec_i: true, vec_j: true, tree_i: true, tree_j: true }
+        );
+        let s = residual_shipment(&job12, true, &mut held);
+        assert_eq!(
+            s,
+            Shipment { vec_j: true, tree_j: true, ..Default::default() },
+            "subset 1 already fully held"
+        );
+        // sharded seeding: vectors pre-held, only trees ship
+        let mut held = vec![Held { vecs: true, tree: false }; 3];
+        let s = residual_shipment(&job01, true, &mut held);
+        assert_eq!(s, Shipment { tree_i: true, tree_j: true, ..Default::default() });
+        let s = residual_shipment(&job01, true, &mut held);
+        assert_eq!(s, Shipment::default(), "everything held on repeat");
+        // dense kernel on a sharded run ships nothing at all
+        let mut held = vec![Held { vecs: true, tree: false }; 3];
+        assert_eq!(residual_shipment(&job01, false, &mut held), Shipment::default());
     }
 }

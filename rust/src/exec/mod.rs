@@ -9,10 +9,15 @@
 //!   idle stealing ([`JobQueue`]), byte accounting against a
 //!   [`Transport`](crate::net::Transport) — the simulated
 //!   [`NetSim`](crate::net::NetSim), or (via [`execute_pooled_remote`])
-//!   real TCP links with each pool thread proxying its jobs to a remote
-//!   `demst worker` process through a
-//!   [`RemoteSolver`](crate::net::remote::RemoteSolver) — and optional
-//!   streaming ⊕-reduction at the leader.
+//!   real TCP links with each pool thread driving a remote `demst worker`
+//!   process through a windowed, elastic
+//!   [`RemoteLink`](crate::net::remote::RemoteLink) (up to
+//!   `pipeline_window` jobs in flight per link; a dead link's jobs return
+//!   to the deck and the surviving fleet finishes the run) — and optional
+//!   streaming ⊕-reduction at the leader. [`execute_pooled_sharded`] runs
+//!   the same engine with **no leader-resident vectors at all**: the plan
+//!   comes from a shard manifest and scheduling is confined to workers
+//!   whose local shard files hold both subsets of each job.
 //!
 //! The layer's pieces:
 //! - [`plan`] — [`ExecPlan`]: partition subsets + pair jobs + the
@@ -37,8 +42,8 @@ pub mod plan;
 pub mod scheduler;
 
 pub use engine::{
-    decomposed_mst_bipartite, execute_pooled, execute_pooled_remote, resolve_workers, run_serial,
-    PooledRun, SerialRun,
+    decomposed_mst_bipartite, execute_pooled, execute_pooled_remote, execute_pooled_sharded,
+    resolve_workers, run_serial, PooledRun, SerialRun,
 };
 pub use pair_kernel::{
     bipartite_filtered_prim, bipartite_filtered_prim_blocked, emit_tree, subset_mst,

@@ -100,12 +100,6 @@ pub trait PairSolver {
         Ok(Solved { edges: self.solve(plan, job), compute: None })
     }
 
-    /// True when this solver ⊕-folds pair trees on the far side of a wire
-    /// (reduce mode): the engine must not fold its per-job returns again.
-    fn folds_remotely(&self) -> bool {
-        false
-    }
-
     /// Distance evaluations performed by *this solver* so far (for the
     /// bipartite kernel this excludes the shared local-MST cache build,
     /// which is accounted separately by the engine).

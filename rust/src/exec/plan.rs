@@ -25,7 +25,15 @@ pub struct ExecPlan {
 impl ExecPlan {
     /// Partition `ds` and lay out the pair jobs with their cost estimates.
     pub fn new(ds: &Dataset, parts: usize, strategy: PartitionStrategy, seed: u64) -> Self {
-        let part_ids = partition_indices(ds, parts, strategy, seed);
+        Self::from_layout(partition_indices(ds, parts, strategy, seed))
+    }
+
+    /// Lay out the pair jobs over an already-fixed partition — the sharded
+    /// leader's entry point, where the layout comes from a shard manifest
+    /// and the vectors never reach the leader at all.
+    pub fn from_layout(part_ids: Vec<Vec<u32>>) -> Self {
+        let parts = part_ids.len();
+        assert!(parts >= 1, "a plan needs at least one subset");
         let jobs: Vec<PairJob> = if parts == 1 {
             vec![PairJob { id: 0, i: 0, j: 0 }]
         } else {
@@ -97,6 +105,105 @@ impl ExecPlan {
             local_decks[anchor[k]].push(k);
         }
         AffinityPlan { anchor, decks, local_decks }
+    }
+
+    /// Build the residency-constrained schedule of a sharded run, where
+    /// worker `w` may only execute jobs whose *both* subsets it holds from
+    /// local shard files (`holders[w][k]`).
+    ///
+    /// - each subset is anchored to the least-loaded **holder** (heaviest
+    ///   subsets placed first, load = total routed pair-job cost);
+    /// - job `(i, j)` lands on its larger subset's anchor when that worker
+    ///   holds both, otherwise on the least-loaded capable worker;
+    /// - errors if some subset has no holder or some pair of subsets is
+    ///   co-resident nowhere — the shard assignment cannot cover the run
+    ///   (see `shard::suggest_assignment` for a covering layout).
+    ///
+    /// Also returns the per-worker capability mask over the job list, which
+    /// [`super::JobQueue::with_decks_capped`] uses to confine claims (and
+    /// failure-returned jobs) to capable workers.
+    pub fn affinity_for_holders(
+        &self,
+        holders: &[Vec<bool>],
+    ) -> anyhow::Result<(AffinityPlan, Vec<Vec<bool>>)> {
+        let n_workers = holders.len();
+        anyhow::ensure!(n_workers >= 1, "sharded schedule needs at least one worker");
+        let p = self.parts.len();
+        for (w, h) in holders.iter().enumerate() {
+            anyhow::ensure!(h.len() == p, "holder mask of worker {w} has wrong length");
+        }
+        for k in 0..p {
+            anyhow::ensure!(
+                holders.iter().any(|h| h[k]),
+                "subset {k} is resident on no worker — start a worker with --shard-ids including {k}"
+            );
+        }
+        let caps: Vec<Vec<bool>> = holders
+            .iter()
+            .map(|h| {
+                self.jobs
+                    .iter()
+                    .map(|job| h[job.i as usize] && h[job.j as usize])
+                    .collect()
+            })
+            .collect();
+        for (idx, job) in self.jobs.iter().enumerate() {
+            anyhow::ensure!(
+                caps.iter().any(|c| c[idx]),
+                "pair job ({}, {}) has no worker holding both subsets — the shard assignment must co-locate every subset pair (try the layout `demst partition` suggests)",
+                job.i,
+                job.j
+            );
+        }
+
+        let mut subset_cost = vec![0u64; p];
+        for job in &self.jobs {
+            let c = job_cost(&self.parts, job);
+            subset_cost[job.i as usize] += c;
+            if job.j != job.i {
+                subset_cost[job.j as usize] += c;
+            }
+        }
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by(|&a, &b| subset_cost[b].cmp(&subset_cost[a]).then(a.cmp(&b)));
+        let mut load = vec![0u64; n_workers];
+        let mut anchor = vec![0usize; p];
+        for k in order {
+            let w = (0..n_workers)
+                .filter(|&w| holders[w][k])
+                .min_by_key(|&w| (load[w], w))
+                .expect("checked: every subset has a holder");
+            anchor[k] = w;
+            load[w] += subset_cost[k];
+        }
+        // Route jobs: larger subset's anchor when capable, else the least
+        // job-loaded capable worker (tracked separately from the anchor
+        // load so the fallback spreads instead of piling on one host).
+        let mut deck_load = vec![0u64; n_workers];
+        let mut decks = vec![Vec::new(); n_workers];
+        for &idx in &self.lpt_order {
+            let job = &self.jobs[idx];
+            let (i, j) = (job.i as usize, job.j as usize);
+            let big = if self.parts[j].len() > self.parts[i].len() { j } else { i };
+            let preferred = anchor[big];
+            let home = if caps[preferred][idx] {
+                preferred
+            } else {
+                (0..n_workers)
+                    .filter(|&w| caps[w][idx])
+                    .min_by_key(|&w| (deck_load[w], w))
+                    .expect("checked: every job has a capable worker")
+            };
+            deck_load[home] += job_cost(&self.parts, job);
+            decks[home].push(idx);
+        }
+        let mut local_decks = vec![Vec::new(); n_workers];
+        let mut by_size: Vec<usize> = (0..p).collect();
+        by_size.sort_by(|&a, &b| self.parts[b].len().cmp(&self.parts[a].len()).then(a.cmp(&b)));
+        for k in by_size {
+            local_decks[anchor[k]].push(k);
+        }
+        Ok((AffinityPlan { anchor, decks, local_decks }, caps))
     }
 }
 
@@ -218,6 +325,64 @@ mod tests {
         let mut anchors = aff.anchor.clone();
         anchors.sort_unstable();
         assert_eq!(anchors, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn from_layout_matches_new() {
+        let ds = uniform(48, 3, 1.0, Pcg64::seeded(8));
+        let a = ExecPlan::new(&ds, 4, PartitionStrategy::RandomShuffle, 3);
+        let b = ExecPlan::from_layout(a.parts.clone());
+        assert_eq!(a.parts, b.parts);
+        assert_eq!(a.jobs, b.jobs);
+        assert_eq!(a.lpt_order, b.lpt_order);
+    }
+
+    #[test]
+    fn holders_schedule_routes_only_to_capable_workers() {
+        let ds = uniform(60, 3, 1.0, Pcg64::seeded(9));
+        let plan = ExecPlan::new(&ds, 4, PartitionStrategy::Block, 0);
+        // worker 0 holds everything, worker 1 holds {2, 3}
+        let holders = vec![vec![true; 4], vec![false, false, true, true]];
+        let (aff, caps) = plan.affinity_for_holders(&holders).unwrap();
+        assert_eq!(aff.decks.len(), 2);
+        let mut seen = vec![false; plan.n_jobs()];
+        for (w, deck) in aff.decks.iter().enumerate() {
+            for &idx in deck {
+                assert!(!seen[idx]);
+                seen[idx] = true;
+                let job = &plan.jobs[idx];
+                assert!(
+                    holders[w][job.i as usize] && holders[w][job.j as usize],
+                    "job {idx} routed to worker {w} missing a subset"
+                );
+                assert!(caps[w][idx]);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // every subset built at a holder
+        for (k, &a) in aff.anchor.iter().enumerate() {
+            assert!(holders[a][k], "subset {k} anchored off-holder");
+        }
+        // worker 1 cannot run jobs touching subsets 0/1
+        for (idx, job) in plan.jobs.iter().enumerate() {
+            if job.i < 2 || job.j < 2 {
+                assert!(!caps[1][idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn holders_schedule_rejects_uncovered_layouts() {
+        let ds = uniform(40, 2, 1.0, Pcg64::seeded(10));
+        let plan = ExecPlan::new(&ds, 4, PartitionStrategy::Block, 0);
+        // subset 3 resident nowhere
+        let holders = vec![vec![true, true, true, false]];
+        let err = plan.affinity_for_holders(&holders).unwrap_err().to_string();
+        assert!(err.contains("subset 3"), "{err}");
+        // all subsets covered, but pair (0, 3) co-resident nowhere
+        let holders = vec![vec![true, true, true, false], vec![false, false, true, true]];
+        let err = plan.affinity_for_holders(&holders).unwrap_err().to_string();
+        assert!(err.contains("no worker holding both"), "{err}");
     }
 
     #[test]

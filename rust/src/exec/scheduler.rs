@@ -1,6 +1,8 @@
-//! Cost-aware job dealing: per-worker affinity decks with idle stealing.
+//! Cost-aware job dealing: per-worker affinity decks with idle stealing,
+//! a return lane for jobs lost to worker failures, and optional
+//! capability masks for sharded residency.
 //!
-//! Two shapes behind one type:
+//! Three shapes behind one type:
 //!
 //! - [`JobQueue::new`] — a single shared deck in LPT (longest-processing-
 //!   time-first) order; every worker claims the next-heaviest unclaimed job
@@ -12,17 +14,40 @@
 //!   so jobs run at their subset's anchor whenever the load allows and the
 //!   deal still adapts to observed speed (an idle worker never waits while
 //!   any deck holds work).
+//! - [`JobQueue::with_decks_capped`] — decks plus a per-worker capability
+//!   mask (`caps[w][job]`): only capable workers may claim a job. Used by
+//!   sharded runs, where job `(i, j)` can only execute on a worker whose
+//!   local shard files hold both subsets — cross-deck stealing is disabled
+//!   (a steal would claim a job the thief may be unable to run), so load
+//!   adaptation happens through the deal and the return lane only.
 //!
-//! Claims are atomic per-deck cursors: every job index is handed out exactly
-//! once across all threads regardless of interleaving.
+//! **Elastic return lane**: when a remote worker dies mid-run, its claimed
+//! but unfinished jobs are [returned](JobQueue::push_returned) and handed
+//! out again by [`JobQueue::pop_for`] — to any worker under open decks, to
+//! capable workers under masks. Combined with the atomic per-deck claim
+//! cursors this keeps every job *recorded exactly once at the leader*: a
+//! job is returned only when its claimant provably never delivered a
+//! result, and re-claims go through the same exactly-once lane.
+//!
+//! Claims are atomic per-deck cursors: every job index is handed out at
+//! most once per claim generation regardless of interleaving.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
-/// A shared, immutable set of job decks with atomic claim cursors.
+/// A shared, immutable set of job decks with atomic claim cursors, a
+/// mutex-guarded return lane, and optional capability masks.
 #[derive(Debug)]
 pub struct JobQueue {
     decks: Vec<Vec<usize>>,
     cursors: Vec<AtomicUsize>,
+    /// jobs returned after a worker failure, awaiting re-claim
+    returned: Mutex<Vec<usize>>,
+    /// cheap fast-path guard so `pop_for` skips the lock while empty
+    has_returned: AtomicBool,
+    /// `caps[w][job]` — whether worker `w` can run `job`. `None` = every
+    /// worker can run everything (and cross-deck stealing is allowed).
+    caps: Option<Vec<Vec<bool>>>,
 }
 
 impl JobQueue {
@@ -37,9 +62,40 @@ impl JobQueue {
     /// One deck per worker; worker `w` owns `decks[w]` and steals from the
     /// rest when its own deck drains.
     pub fn with_decks(decks: Vec<Vec<usize>>) -> Self {
+        Self::build(decks, None)
+    }
+
+    /// Decks plus capability masks (`caps[w][job]`); stealing disabled.
+    /// Every deck entry must be runnable by the deck's owner.
+    pub fn with_decks_capped(decks: Vec<Vec<usize>>, caps: Vec<Vec<bool>>) -> Self {
+        assert_eq!(decks.len(), caps.len(), "one capability row per deck");
+        for (w, deck) in decks.iter().enumerate() {
+            debug_assert!(
+                deck.iter().all(|&j| caps[w][j]),
+                "deck {w} holds a job its owner cannot run"
+            );
+        }
+        Self::build(decks, Some(caps))
+    }
+
+    fn build(decks: Vec<Vec<usize>>, caps: Option<Vec<Vec<bool>>>) -> Self {
         assert!(!decks.is_empty(), "JobQueue needs at least one deck");
         let cursors = decks.iter().map(|_| AtomicUsize::new(0)).collect();
-        Self { decks, cursors }
+        Self {
+            decks,
+            cursors,
+            returned: Mutex::new(Vec::new()),
+            has_returned: AtomicBool::new(false),
+            caps,
+        }
+    }
+
+    /// Whether worker `w` may run `job` under the capability masks.
+    pub fn capable(&self, w: usize, job: usize) -> bool {
+        match &self.caps {
+            None => true,
+            Some(c) => c[w][job],
+        }
     }
 
     /// Claim the next unclaimed job index from the first deck (the shared-
@@ -48,12 +104,18 @@ impl JobQueue {
         self.pop_for(0).map(|(job, _)| job)
     }
 
-    /// Claim for `worker`: own deck first, then steal round-robin from the
-    /// other decks. Returns the job index and whether it was stolen.
+    /// Claim for `worker`: the return lane first (jobs lost to a failed
+    /// worker, capability-filtered), then its own deck, then — without
+    /// capability masks — steal round-robin from the other decks. Returns
+    /// the job index and whether it was claimed off another worker's deck.
     pub fn pop_for(&self, worker: usize) -> Option<(usize, bool)> {
+        if let Some(job) = self.pop_returned(worker) {
+            return Some((job, false));
+        }
         let n = self.decks.len();
         let home = worker % n;
-        for step in 0..n {
+        let reach = if self.caps.is_some() { 1 } else { n };
+        for step in 0..reach {
             let v = (home + step) % n;
             let k = self.cursors[v].fetch_add(1, Ordering::Relaxed);
             if let Some(&job) = self.decks[v].get(k) {
@@ -61,6 +123,62 @@ impl JobQueue {
             }
         }
         None
+    }
+
+    /// Take one runnable job off the return lane, if any.
+    fn pop_returned(&self, worker: usize) -> Option<usize> {
+        if !self.has_returned.load(Ordering::Acquire) {
+            return None;
+        }
+        let mut lane = self.returned.lock().unwrap();
+        let at = lane.iter().position(|&job| self.capable(worker, job))?;
+        let job = lane.swap_remove(at);
+        if lane.is_empty() {
+            self.has_returned.store(false, Ordering::Release);
+        }
+        Some(job)
+    }
+
+    /// Return jobs whose claimant died before delivering their results;
+    /// they become claimable again through [`Self::pop_for`].
+    pub fn push_returned(&self, jobs: &[usize]) {
+        if jobs.is_empty() {
+            return;
+        }
+        let mut lane = self.returned.lock().unwrap();
+        lane.extend_from_slice(jobs);
+        self.has_returned.store(true, Ordering::Release);
+    }
+
+    /// Drain every unclaimed job from `worker`'s own deck into the return
+    /// lane (used when the worker's link dies: under capability masks no
+    /// one can steal from its deck, and even with stealing the survivors
+    /// would race a dead cursor).
+    pub fn abandon_deck(&self, worker: usize) {
+        let n = self.decks.len();
+        let home = worker % n;
+        let mut moved = Vec::new();
+        loop {
+            let k = self.cursors[home].fetch_add(1, Ordering::Relaxed);
+            match self.decks[home].get(k) {
+                Some(&job) => moved.push(job),
+                None => break,
+            }
+        }
+        self.push_returned(&moved);
+    }
+
+    /// A returned job that no worker in `alive` can run, if any — the
+    /// stranded-work check an idle elastic fleet uses to fail fast instead
+    /// of waiting for jobs that can never complete.
+    pub fn stranded_job(&self, alive: &[bool]) -> Option<usize> {
+        if !self.has_returned.load(Ordering::Acquire) {
+            return None;
+        }
+        let lane = self.returned.lock().unwrap();
+        lane.iter()
+            .copied()
+            .find(|&job| !alive.iter().enumerate().any(|(w, &a)| a && self.capable(w, job)))
     }
 
     /// Total jobs across all decks (claimed or not).
@@ -77,7 +195,6 @@ impl JobQueue {
 mod tests {
     use super::*;
     use std::collections::HashSet;
-    use std::sync::Mutex;
 
     #[test]
     fn pops_in_order_then_drains() {
@@ -116,6 +233,60 @@ mod tests {
         // worker 3 homes on deck 3 % 2 = 1
         assert_eq!(q.pop_for(3), Some((8, false)));
         assert_eq!(q.pop_for(3), Some((9, true)));
+    }
+
+    #[test]
+    fn returned_jobs_are_reclaimed_first() {
+        let q = JobQueue::with_decks(vec![vec![0], vec![1]]);
+        assert_eq!(q.pop_for(0), Some((0, false)));
+        q.push_returned(&[0]);
+        // the returned job outranks worker 1's own deck
+        assert_eq!(q.pop_for(1), Some((0, false)));
+        assert_eq!(q.pop_for(1), Some((1, false)));
+        assert_eq!(q.pop_for(1), None);
+    }
+
+    #[test]
+    fn caps_disable_stealing_and_filter_returns() {
+        // jobs 0,1 runnable by worker 0; job 2 by both; job 1 also by w1
+        let caps = vec![vec![true, true, true], vec![false, true, true]];
+        let q = JobQueue::with_decks_capped(vec![vec![0, 2], vec![1]], caps);
+        // worker 1 cannot steal worker 0's deck
+        assert_eq!(q.pop_for(1), Some((1, false)));
+        assert_eq!(q.pop_for(1), None, "no stealing under capability masks");
+        // a returned job only goes to a capable worker
+        q.push_returned(&[0]);
+        assert_eq!(q.pop_for(1), None, "worker 1 cannot run job 0");
+        assert_eq!(q.pop_for(0), Some((0, false)));
+        assert_eq!(q.pop_for(0), Some((2, false)));
+        assert_eq!(q.pop_for(0), None);
+    }
+
+    #[test]
+    fn abandon_deck_moves_unclaimed_jobs_to_the_return_lane() {
+        let caps = vec![vec![true; 3], vec![true; 3]];
+        let q = JobQueue::with_decks_capped(vec![vec![0, 1, 2], vec![]], caps);
+        assert_eq!(q.pop_for(0), Some((0, false)));
+        q.abandon_deck(0);
+        // worker 1 (which cannot steal) now sees the abandoned jobs
+        assert_eq!(q.pop_for(1), Some((1, false)));
+        assert_eq!(q.pop_for(1), Some((2, false)));
+        assert_eq!(q.pop_for(1), None);
+    }
+
+    #[test]
+    fn stranded_job_detection() {
+        let caps = vec![vec![true, false], vec![false, true]];
+        let q = JobQueue::with_decks_capped(vec![vec![0], vec![1]], caps);
+        assert_eq!(q.stranded_job(&[true, true]), None, "nothing returned yet");
+        q.push_returned(&[1]);
+        assert_eq!(q.stranded_job(&[true, true]), None, "worker 1 can still run it");
+        assert_eq!(q.stranded_job(&[true, false]), Some(1), "only holder is dead");
+        // open decks: anyone alive can run anything
+        let open = JobQueue::with_decks(vec![vec![0], vec![1]]);
+        open.push_returned(&[0]);
+        assert_eq!(open.stranded_job(&[false, true]), None);
+        assert_eq!(open.stranded_job(&[false, false]), Some(0));
     }
 
     #[test]
@@ -161,5 +332,37 @@ mod tests {
         assert_eq!(got.len(), 400);
         let distinct: HashSet<usize> = got.iter().copied().collect();
         assert_eq!(distinct.len(), 400, "every job claimed exactly once under stealing");
+    }
+
+    #[test]
+    fn concurrent_returns_stay_exactly_once() {
+        // Claim 200 jobs, return half of them once, drain concurrently:
+        // the returned half must come out exactly once more, the rest not.
+        let q = JobQueue::new((0..200).collect());
+        let mut first: Vec<usize> = Vec::new();
+        while let Some(j) = q.pop() {
+            first.push(j);
+        }
+        let lost: Vec<usize> = first.iter().copied().filter(|j| j % 2 == 0).collect();
+        q.push_returned(&lost);
+        let claimed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            let q = &q;
+            let claimed = &claimed;
+            for w in 0..4usize {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some((j, _)) = q.pop_for(w) {
+                        local.push(j);
+                    }
+                    claimed.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut got = claimed.into_inner().unwrap();
+        got.sort_unstable();
+        let mut want = lost.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "each returned job reclaimed exactly once");
     }
 }

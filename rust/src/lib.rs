@@ -48,9 +48,23 @@
 //!   `Message::wire_bytes` is computed from the real wire encoding, so the
 //!   simulated charges and the measured frames are the same number by
 //!   construction. `run --transport tcp` drives the unmodified exec engine
-//!   through [`net::remote::RemoteSolver`] proxies against `demst worker
-//!   --connect` processes ([`net::worker`]), bound/spawned/awaited by
-//!   [`net::launch`].
+//!   through windowed, elastic [`net::remote::RemoteLink`] drivers (up to
+//!   `pipeline_window` jobs in flight per link; a link that dies mid-run
+//!   hands its undelivered jobs back to the deck and the surviving fleet
+//!   finishes the bit-identical tree) against `demst worker --connect`
+//!   processes ([`net::worker`]), bound/spawned/awaited by [`net::launch`].
+//! - **sharded residency ([`shard`])** — `demst partition` cuts a dataset
+//!   into per-subset binary shard files (checksummed, FNV-1a 64) plus a
+//!   TOML-lite manifest (run shape, partition layout as compact id
+//!   ranges, per-shard digests, 64-bit fingerprint). `demst worker
+//!   --shard` loads its subsets from local disk and advertises them in
+//!   the v2 handshake; `demst run --shard` plans from the manifest alone
+//!   and schedules each pair job onto a worker holding **both** subsets
+//!   ([`exec::ExecPlan::affinity_for_holders`]) — so subset vectors never
+//!   pass through the leader (`RunMetrics::leader_ingest_bytes == 0` on a
+//!   sharded run; phase 1 is a header-only `LocalAssign`, pair scatter
+//!   ships at most cached local trees). [`shard::suggest_assignment`]
+//!   produces a pair-covering shard placement for a given fleet size.
 //! - **compute backends ([`runtime`])** — kernels are selected through the
 //!   [`runtime::ComputeBackend`] abstraction:
 //!   - the default, always-available **Rust backend**: metric-generic
@@ -97,6 +111,7 @@ pub mod slink;
 pub mod exec;
 pub mod decomp;
 pub mod net;
+pub mod shard;
 pub mod coordinator;
 pub mod runtime;
 pub mod baselines;

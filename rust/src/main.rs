@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run         distributed EMST + optional dendrogram on a dataset
 //!   worker      remote worker process for a `run --transport tcp` leader
+//!   partition   split a dataset into checksummed shard files + manifest
 //!   dendrogram  decomposed MST → single-linkage dendrogram → CSV outputs
 //!   gen         generate a synthetic dataset to .npy
 //!   info        inspect an artifact directory
@@ -14,6 +15,11 @@
 //!   demst run --pair-kernel bipartite --stream-reduce --n 4096 --parts 8
 //!   demst run --transport tcp --listen 127.0.0.1:7000 --workers 2 --n 4096
 //!   demst worker --connect 127.0.0.1:7000
+//!   demst partition --data embedding --n 65536 --d 128 --parts 8 --out-dir shards/
+//!   demst run --shard shards/embedding.manifest.toml --transport tcp \
+//!       --listen 0.0.0.0:7000 --workers 3
+//!   demst worker --connect leader:7000 --shard shards/embedding.manifest.toml \
+//!       --shard-ids 0-3,6
 //!   demst dendrogram --data blobs --n 1000 --d 32 --out-merges merges.csv
 //!   demst gen --kind blobs --n 1000 --d 64 --out /tmp/blobs.npy
 //!   demst info --artifacts artifacts
@@ -50,6 +56,7 @@ fn real_main(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "worker" => cmd_worker(rest),
+        "partition" => cmd_partition(rest),
         "dendrogram" => cmd_dendrogram(rest),
         "gen" => cmd_gen(rest),
         "info" => cmd_info(rest),
@@ -68,8 +75,9 @@ fn print_help() {
 
 USAGE: demst <run|worker|dendrogram|gen|info|selftest|help> [options]
 
-run         distributed EMST (+ dendrogram) on a generated or .npy dataset
+run         distributed EMST (+ dendrogram) on a generated, .npy, or sharded dataset
 worker      remote worker process: connect to a `run --transport tcp` leader
+partition   split a dataset into per-subset shard files + a TOML manifest
 dendrogram  decomposed MST -> dendrogram; write merge heights and cluster labels as CSV
 gen         write a synthetic dataset to .npy
 info        list AOT artifacts and check they compile
@@ -97,6 +105,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "transport", takes_value: true, help: "sim (default) | tcp multi-process transport" },
         OptSpec { name: "listen", takes_value: true, help: "leader bind address for --transport tcp (port 0 = auto)" },
         OptSpec { name: "spawn-workers", takes_value: false, help: "tcp: spawn the `demst worker` processes locally instead of awaiting external connects" },
+        OptSpec { name: "shard", takes_value: true, help: "sharded run: plan from this `demst partition` manifest; workers hold the vectors" },
+        OptSpec { name: "window", takes_value: true, help: "tcp: pair jobs in flight per worker link (default 2; 1 = strict rendezvous)" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
         OptSpec { name: "stream-reduce", takes_value: false, help: "fold trees into a bounded running MSF at the leader" },
@@ -165,6 +175,12 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if args.has_flag("spawn-workers") {
         cfg.spawn_workers = true;
     }
+    if let Some(v) = args.get("shard") {
+        cfg.shard_manifest = Some(v.into());
+    }
+    if let Some(v) = args.get_parse::<usize>("window")? {
+        cfg.pipeline_window = v;
+    }
     if args.has_flag("no-affinity") {
         cfg.affinity = false;
     }
@@ -189,21 +205,43 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     let args = parse_args(argv, &specs)?;
     let cfg = build_run_config(&args)?;
 
-    // npy datasets override n/d from the file
-    let (ds, _truth) = build_dataset(&cfg)?;
-    println!(
-        "dataset: kind={} n={} d={} | parts={} strategy={} kernel={} workers={} transport={}",
-        cfg.data.kind,
-        ds.n,
-        ds.d,
-        cfg.parts,
-        cfg.strategy.name(),
-        cfg.kernel.name(),
-        demst::coordinator::leader::resolve_workers(&cfg),
-        cfg.transport.name(),
-    );
-
-    let out = run_distributed(&ds, &cfg)?;
+    let (out, ds, n) = if let Some(manifest_path) = &cfg.shard_manifest {
+        // Sharded: the leader plans from the manifest and never holds the
+        // vectors, so there is no dataset (and no O(n²) oracle) here.
+        if cfg.verify {
+            bail!("--verify needs leader-resident vectors; a sharded leader has none (run the oracle on a host holding the full dataset)");
+        }
+        let manifest = demst::shard::Manifest::load(manifest_path)?;
+        println!(
+            "dataset: shard manifest {} (n={} d={} metric={} parts={}) | kernel={} workers={} transport=tcp window={}",
+            manifest_path.display(),
+            manifest.n,
+            manifest.d,
+            manifest.metric.name(),
+            manifest.parts(),
+            cfg.kernel.name(),
+            cfg.workers,
+            cfg.pipeline_window,
+        );
+        let n = manifest.n;
+        (demst::coordinator::run_sharded(&cfg)?, None, n)
+    } else {
+        // npy datasets override n/d from the file
+        let (ds, _truth) = build_dataset(&cfg)?;
+        println!(
+            "dataset: kind={} n={} d={} | parts={} strategy={} kernel={} workers={} transport={}",
+            cfg.data.kind,
+            ds.n,
+            ds.d,
+            cfg.parts,
+            cfg.strategy.name(),
+            cfg.kernel.name(),
+            demst::coordinator::leader::resolve_workers(&cfg),
+            cfg.transport.name(),
+        );
+        let n = ds.n;
+        (run_distributed(&ds, &cfg)?, Some(ds), n)
+    };
     if let Some(note) = &out.metrics.kernel_fallback {
         println!("kernel fallback: {note}");
     }
@@ -212,10 +250,11 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     print_phases_and_workers(&out.metrics);
 
     if cfg.verify {
-        verify_against_slink(&ds, cfg.metric, &out.mst)?;
+        let ds = ds.as_ref().expect("verify rejected on sharded runs above");
+        verify_against_slink(ds, cfg.metric, &out.mst)?;
     }
 
-    let dendro = mst_to_dendrogram(ds.n, &out.mst);
+    let dendro = mst_to_dendrogram(n, &out.mst);
     let heights = dendro.heights();
     if !heights.is_empty() {
         println!(
@@ -299,6 +338,16 @@ fn print_phases_and_workers(m: &RunMetrics) {
     if !locality.is_empty() {
         println!("locality: {locality}");
     }
+    let sharding = m.sharding_summary();
+    if !sharding.is_empty() {
+        println!("sharding: {sharding}");
+    }
+    if m.worker_failures > 0 {
+        println!(
+            "elastic: {} worker link(s) failed, {} job(s) reassigned to the surviving fleet",
+            m.worker_failures, m.jobs_reassigned
+        );
+    }
     if m.worker_busy.is_empty() {
         return;
     }
@@ -317,29 +366,158 @@ fn print_phases_and_workers(m: &RunMetrics) {
     );
 }
 
-/// `demst worker --connect <addr>`: one remote worker rank. Connects (with
-/// retries — workers routinely start before the leader finishes binding),
-/// handshakes, serves job frames until the leader's Shutdown, then prints a
-/// one-line report and exits 0.
+/// `demst worker --connect <addr>`: one remote worker rank. Optionally
+/// loads shard files first (`--shard` + `--shard-ids`), connects (with
+/// bounded-backoff retries — workers routinely start before the leader
+/// finishes binding), handshakes, serves job frames until the leader's
+/// Shutdown, then prints a one-line report and exits 0.
 fn cmd_worker(argv: &[String]) -> Result<()> {
     let specs = vec![
         OptSpec { name: "connect", takes_value: true, help: "leader address (host:port) — required" },
-        OptSpec { name: "retry-ms", takes_value: true, help: "keep retrying the connect for this long (default 10000)" },
+        OptSpec { name: "connect-timeout", takes_value: true, help: "keep retrying the connect for this many ms (default 10000)" },
+        OptSpec { name: "connect-backoff-ms", takes_value: true, help: "initial retry backoff in ms, doubling up to 2 s (default 100)" },
+        OptSpec { name: "retry-ms", takes_value: true, help: "deprecated alias of --connect-timeout" },
+        OptSpec { name: "shard", takes_value: true, help: "load subsets from this shard manifest before connecting" },
+        OptSpec { name: "shard-ids", takes_value: true, help: "which shards to load, e.g. 0,2-4 (default: all in the manifest)" },
     ];
     let args = parse_args(argv, &specs)?;
     let addr = args
         .get("connect")
         .context("demst worker requires --connect <addr> (the leader's --listen address)")?;
-    let retry = std::time::Duration::from_millis(args.get_or("retry-ms", 10_000u64)?);
-    let report = demst::net::worker::run(addr, retry)?;
+    let timeout_ms = match args.get_parse::<u64>("connect-timeout")? {
+        Some(v) => v,
+        None => args.get_or("retry-ms", 10_000u64)?,
+    };
+    let shards = match args.get("shard") {
+        Some(manifest) => {
+            let ids = match args.get("shard-ids") {
+                Some(spec) => demst::shard::decode_id_ranges(spec)
+                    .with_context(|| format!("parsing --shard-ids {spec:?}"))?,
+                None => Vec::new(), // empty = all shards in the manifest
+            };
+            Some((std::path::PathBuf::from(manifest), ids))
+        }
+        None => {
+            if args.get("shard-ids").is_some() {
+                bail!("--shard-ids requires --shard <manifest>");
+            }
+            None
+        }
+    };
+    let opts = demst::net::worker::WorkerOptions {
+        connect_timeout: std::time::Duration::from_millis(timeout_ms),
+        connect_backoff: std::time::Duration::from_millis(args.get_or("connect-backoff-ms", 100u64)?),
+        shards,
+    };
+    let report = demst::net::worker::run_with(addr, &opts)?;
+    let shard_note = if report.shards_loaded > 0 {
+        format!(
+            ", {} shards held locally ({})",
+            report.shards_loaded,
+            human_bytes(report.shard_local_bytes)
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "worker {}: {} pair jobs + {} local-MST jobs, {} dist evals, rx {}, tx {}",
+        "worker {}: {} pair jobs + {} local-MST jobs, {} dist evals, rx {}, tx {}{}",
         report.worker_id,
         report.jobs,
         report.local_jobs,
         report.dist_evals,
         human_bytes(report.bytes_rx),
         human_bytes(report.bytes_tx),
+        shard_note,
+    );
+    Ok(())
+}
+
+/// `demst partition`: split a dataset into per-subset shard files plus a
+/// manifest, ready to place on worker hosts for a sharded run. Also prints
+/// a pair-covering `--shard-ids` assignment for the requested fleet size.
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let specs = vec![
+        OptSpec { name: "data", takes_value: true, help: "blobs|uniform|embedding|shells|npy" },
+        OptSpec { name: "path", takes_value: true, help: ".npy file when --data npy" },
+        OptSpec { name: "n", takes_value: true, help: "points" },
+        OptSpec { name: "d", takes_value: true, help: "dimensions" },
+        OptSpec { name: "clusters", takes_value: true, help: "generator clusters" },
+        OptSpec { name: "parts", takes_value: true, help: "|P| partition subsets (= shards)" },
+        OptSpec { name: "strategy", takes_value: true, help: "block|round-robin|random|kmeans-lite" },
+        OptSpec { name: "metric", takes_value: true, help: "sqeuclid|euclid|cosine|manhattan" },
+        OptSpec { name: "seed", takes_value: true, help: "PRNG seed" },
+        OptSpec { name: "out-dir", takes_value: true, help: "directory for shard files + manifest (required)" },
+        OptSpec { name: "name", takes_value: true, help: "shard set name (default: the data kind)" },
+        OptSpec { name: "plan-workers", takes_value: true, help: "also print a pair-covering --shard-ids assignment for this many workers" },
+    ];
+    let args = parse_args(argv, &specs)?;
+    let mut cfg = RunConfig::default();
+    if let Some(v) = args.get("data") {
+        cfg.data.kind = v.to_string();
+    }
+    if let Some(v) = args.get("path") {
+        cfg.data.path = Some(v.into());
+    }
+    cfg.data.n = args.get_or("n", cfg.data.n)?;
+    cfg.data.d = args.get_or("d", cfg.data.d)?;
+    cfg.data.clusters = args.get_or("clusters", cfg.data.clusters)?;
+    cfg.parts = args.get_or("parts", 8usize)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    if let Some(v) = args.get("strategy") {
+        cfg.strategy =
+            PartitionStrategy::parse(v).with_context(|| format!("unknown strategy {v:?}"))?;
+    }
+    if let Some(v) = args.get("metric") {
+        cfg.metric = MetricKind::parse(v).with_context(|| format!("unknown metric {v:?}"))?;
+    }
+    let out_dir = std::path::PathBuf::from(args.get("out-dir").context("--out-dir is required")?);
+    let name = args.get("name").unwrap_or(cfg.data.kind.as_str()).to_string();
+    if cfg.data.kind == "npy" && cfg.data.path.is_none() {
+        bail!("--data npy requires --path <file.npy>");
+    }
+
+    let (ds, _) = build_dataset(&cfg)?;
+    if cfg.parts > ds.n {
+        bail!("--parts {} exceeds the dataset's n = {}", cfg.parts, ds.n);
+    }
+    let (manifest, manifest_path) = demst::shard::write_dataset_shards(
+        &out_dir, &name, &ds, cfg.parts, cfg.strategy, cfg.seed, cfg.metric,
+    )?;
+    println!(
+        "partitioned n={} d={} metric={} into {} shards ({} vectors total) under {}",
+        manifest.n,
+        manifest.d,
+        manifest.metric.name(),
+        manifest.parts(),
+        human_bytes(ds.payload_bytes()),
+        out_dir.display(),
+    );
+    println!("manifest: {} (fingerprint {:#018x})", manifest_path.display(), manifest.fingerprint());
+    for e in &manifest.shards {
+        println!(
+            "  shard {}: {} rows, {}, digest {:#018x}",
+            e.part,
+            e.ids.len(),
+            e.file,
+            e.digest
+        );
+    }
+    if let Some(w) = args.get_parse::<usize>("plan-workers")? {
+        if w == 0 {
+            bail!("--plan-workers must be >= 1");
+        }
+        println!("\npair-covering assignment for {w} workers (every subset pair co-resident):");
+        for (i, ids) in demst::shard::suggest_assignment(cfg.parts, w).iter().enumerate() {
+            println!(
+                "  worker {i}: demst worker --connect <leader> --shard {} --shard-ids {}",
+                manifest_path.display(),
+                demst::shard::encode_id_ranges(ids)
+            );
+        }
+    }
+    println!(
+        "\nrun the leader with: demst run --shard {} --transport tcp --listen <addr> --workers <N>",
+        manifest_path.display()
     );
     Ok(())
 }
@@ -358,6 +536,9 @@ fn cmd_dendrogram(argv: &[String]) -> Result<()> {
     });
     let args = parse_args(argv, &specs)?;
     let cfg = build_run_config(&args)?;
+    if cfg.shard_manifest.is_some() {
+        bail!("demst dendrogram runs leader-resident; for sharded data use `demst run --shard ... --out-mst <csv>` and post-process the MST");
+    }
     let merges_path = args.get("out-merges").context("--out-merges is required")?;
 
     let (ds, _) = build_dataset(&cfg)?;

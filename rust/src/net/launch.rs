@@ -18,7 +18,10 @@ use super::Direction;
 use crate::config::RunConfig;
 use crate::coordinator::messages::Message;
 use crate::data::Dataset;
-use crate::exec::{execute_pooled_remote, resolve_workers, ExecPlan, PooledRun};
+use crate::exec::{
+    execute_pooled_remote, execute_pooled_sharded, resolve_workers, ExecPlan, PooledRun,
+};
+use crate::shard::Manifest;
 use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
 use std::path::PathBuf;
@@ -35,7 +38,7 @@ pub const ACCEPT_DEADLINE: Duration = Duration::from_secs(60);
 pub fn run_leader(ds: &Dataset, cfg: &RunConfig) -> Result<PooledRun> {
     // Library callers reach this without the CLI's pre-flight check; the
     // tcp-specific invariants (listen set, explicit workers, parts >= 2,
-    // wire v1 limits) must still fail as one-liners, not mid-run.
+    // wire v2 limits) must still fail as one-liners, not mid-run.
     cfg.validate()?;
     let listen = cfg
         .listen
@@ -59,6 +62,33 @@ pub fn run_leader(ds: &Dataset, cfg: &RunConfig) -> Result<PooledRun> {
     reap(children, result)
 }
 
+/// Run one **sharded** distributed EMST: load the manifest, bind, await
+/// the shard-resident workers, execute with zero leader-held vectors.
+/// Workers are always external here (`--spawn-workers` is rejected by
+/// validation: a spawned local fleet would need per-worker `--shard-ids`,
+/// which only the operator can place on the right hosts).
+pub fn run_leader_sharded(cfg: &RunConfig) -> Result<PooledRun> {
+    cfg.validate()?;
+    let manifest_path = cfg
+        .shard_manifest
+        .as_deref()
+        .context("sharded run requires --shard <manifest>")?;
+    let manifest = Manifest::load(manifest_path)?;
+    let listen = cfg
+        .listen
+        .as_deref()
+        .context("transport tcp requires --listen <addr> on the leader")?;
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("binding leader listener on {listen}"))?;
+    let addr = listener.local_addr().context("resolving the bound leader address")?;
+    let n_workers = resolve_workers(&RunConfig { parts: manifest.parts(), ..cfg.clone() });
+    println!(
+        "leader: listening on {addr} (sharded, manifest {:#018x}); awaiting {n_workers} x `demst worker --connect {addr} --shard <manifest> --shard-ids ...`",
+        manifest.fingerprint()
+    );
+    serve_sharded(&manifest, cfg, &listener)
+}
+
 /// Accept + handshake `resolve_workers(cfg)` connections on an
 /// already-bound listener, then drive the exec engine over them. On engine
 /// failure, healthy workers are released with a best-effort `Shutdown` so
@@ -70,20 +100,58 @@ pub fn serve(ds: &Dataset, cfg: &RunConfig, listener: &TcpListener) -> Result<Po
     // then handed to the engine, so the wire layout and the executed jobs
     // cannot drift.
     let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
-    let setup = Setup {
+    let setup = make_setup(cfg, ds.n, ds.d, 0, &plan)?;
+    let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
+    let run = execute_pooled_remote(ds, cfg, &tcp, plan);
+    release_on_error(&tcp, run)
+}
+
+/// The sharded twin of [`serve`]: the leader holds **no dataset** — the
+/// plan (and `n`, `d`, the metric) come from the shard manifest, workers
+/// load their subsets from local shard files and advertise them in the
+/// handshake, and the engine runs with vectors never passing through this
+/// process (`RunMetrics::leader_ingest_bytes == 0`).
+pub fn serve_sharded(
+    manifest: &Manifest,
+    cfg: &RunConfig,
+    listener: &TcpListener,
+) -> Result<PooledRun> {
+    let mut cfg = cfg.clone();
+    // The manifest is authoritative for the data shape: the shard files
+    // were cut under its metric and layout.
+    cfg.metric = manifest.metric;
+    cfg.parts = manifest.parts();
+    cfg.data.n = manifest.n;
+    cfg.data.d = manifest.d;
+    cfg.validate()?;
+    // The shape-dependent tcp checks deferred by `validate` on sharded
+    // configs, now against the shape that will actually execute.
+    cfg.validate_tcp_shape()?;
+    let n_workers = resolve_workers(&cfg);
+    let plan = ExecPlan::from_layout(manifest.layout());
+    let setup = make_setup(&cfg, manifest.n, manifest.d, manifest.fingerprint(), &plan)?;
+    let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
+    let run = execute_pooled_sharded(&cfg, &tcp, plan, manifest.n, manifest.d);
+    release_on_error(&tcp, run)
+}
+
+fn make_setup(cfg: &RunConfig, n: usize, d: usize, manifest: u64, plan: &ExecPlan) -> Result<Setup> {
+    Ok(Setup {
         version: WIRE_VERSION,
         worker_id: 0, // stamped per accepted link
-        n: u32::try_from(ds.n).context("n exceeds the u32 wire limit")?,
-        d: u16::try_from(ds.d).context("d exceeds the u16 wire limit")?,
+        n: u32::try_from(n).context("n exceeds the u32 wire limit")?,
+        d: u16::try_from(d).context("d exceeds the u16 wire limit")?,
         metric: wire::metric_code(cfg.metric),
         kernel: wire::kernel_code(&cfg.kernel),
         pair_kernel: wire::pair_kernel_code(cfg.pair_kernel),
         reduce_tree: cfg.reduce_tree,
+        manifest,
         part_sizes: plan.parts.iter().map(|p| p.len() as u32).collect(),
         artifacts_dir: cfg.artifacts_dir.display().to_string(),
-    };
-    let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
-    let run = execute_pooled_remote(ds, cfg, &tcp, plan);
+    })
+}
+
+fn release_on_error(tcp: &TcpTransport, run: Result<PooledRun>) -> Result<PooledRun> {
     if run.is_err() {
         // The engine aborts without draining every link (e.g. a phase-1
         // failure); release whoever is still serving.

@@ -18,11 +18,13 @@
 //!   deterministic configurations (see `tests/transport_tcp.rs`).
 //!
 //! The remaining modules put the wire to work: [`remote`] is the
-//! leader-side proxy solver that ships pair jobs to a remote worker through
-//! the unmodified exec engine (affinity decks, resident-set model, panel
-//! cache, and streaming reduction all inherited), [`worker`] is the
-//! `demst worker` process loop on the other end, and [`launch`] binds,
-//! spawns, handshakes, and awaits the worker set around one engine run.
+//! leader-side link driver that ships pair jobs to a remote worker for the
+//! unmodified exec engine (affinity decks, resident-set model, panel
+//! cache, and streaming reduction all inherited) with a bounded in-flight
+//! window per link, [`worker`] is the `demst worker` process loop on the
+//! other end (optionally serving subsets it loaded from local shard
+//! files), and [`launch`] binds, spawns, handshakes, and awaits the worker
+//! set around one engine run.
 
 pub mod launch;
 pub mod remote;

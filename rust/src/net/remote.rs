@@ -1,17 +1,24 @@
-//! The leader-side remote proxy solver: one [`RemoteSolver`] per pool
-//! thread, shipping the jobs that thread claims to its remote worker
-//! process over the [`TcpTransport`] link.
+//! The leader-side remote link driver: one [`RemoteLink`] per pool thread,
+//! shipping the pair jobs that thread claims to its remote worker process
+//! over the [`TcpTransport`].
 //!
-//! The engine stays unmodified above this type: affinity decks, idle
-//! stealing, the resident-set byte model, and streaming reduction all run
-//! at the leader exactly as under the simulated transport — the proxy just
-//! realizes the engine's computed [`Shipment`] as a `PairAssign` frame
-//! (whose encoded length *is* the engine's modeled scatter charge) and
-//! turns the worker's `Result`/`Ack` replies back into solver returns. The
-//! shutdown rendezvous ([`PairSolver::finish`]) collects the worker
-//! process's final `WorkerDone` stats: remotely measured busy time,
-//! distance evaluations, panel-cache hits, and — in reduce mode — the
-//! remotely ⊕-folded worker tree.
+//! The engine stays unmodified above this type: affinity decks, the
+//! resident-set byte model, and streaming reduction all run at the leader
+//! exactly as under the simulated transport — the link just realizes the
+//! engine's computed [`Shipment`] as a `PairAssign` frame (whose encoded
+//! length *is* the engine's modeled scatter charge) and turns the worker's
+//! `Result`/`Ack` replies back into [`Solved`] values.
+//!
+//! Unlike the pre-pipelining rendezvous proxy, send and receive are
+//! **decoupled**: the engine's remote driver keeps up to `pipeline_window`
+//! `PairAssign` frames outstanding per link before reading the matching
+//! replies, overlapping scatter with remote compute. Workers serve frames
+//! strictly in order, so replies are FIFO per link and
+//! [`RemoteLink::recv_pair_reply`] always checks against the oldest
+//! in-flight job. The shutdown rendezvous ([`RemoteLink::finish`]) drains
+//! the link and collects the worker process's final `WorkerDone` stats:
+//! remotely measured busy time, distance evaluations, panel-cache hits,
+//! and — in reduce mode — the remotely ⊕-folded worker tree.
 
 use super::tcp::TcpTransport;
 use super::Direction;
@@ -19,27 +26,28 @@ use crate::coordinator::messages::{Message, SubsetShip};
 use crate::data::Dataset;
 use crate::decomp::PairJob;
 use crate::exec::plan::ExecPlan;
-use crate::exec::{LocalMstCache, PairSolver, Shipment, Solved, SolverFinal};
-use crate::graph::Edge;
-use anyhow::bail;
+use crate::exec::{LocalMstCache, Shipment, Solved, SolverFinal};
+use anyhow::{bail, Result};
 
-/// Proxy solver for one leader↔worker link (strict request→response
-/// rendezvous; the link's mutex is never contended because exactly one pool
-/// thread drives each worker).
-pub struct RemoteSolver<'a> {
+/// Driver for one leader↔worker link (frames strictly FIFO; the link's
+/// mutex is never contended because exactly one pool thread drives each
+/// worker).
+pub struct RemoteLink<'a> {
     tcp: &'a TcpTransport,
     worker: usize,
-    ds: &'a Dataset,
+    /// the leader's vectors — `None` on sharded runs, where every vector
+    /// is worker-resident and shipping one would be a scheduling bug
+    ds: Option<&'a Dataset>,
     cache: Option<&'a LocalMstCache>,
     /// reduce mode: the worker ⊕-folds pair trees locally and replies `Ack`
     reduce: bool,
 }
 
-impl<'a> RemoteSolver<'a> {
+impl<'a> RemoteLink<'a> {
     pub fn new(
         tcp: &'a TcpTransport,
         worker: usize,
-        ds: &'a Dataset,
+        ds: Option<&'a Dataset>,
         cache: Option<&'a LocalMstCache>,
         reduce: bool,
     ) -> Self {
@@ -47,77 +55,77 @@ impl<'a> RemoteSolver<'a> {
     }
 
     /// Materialize the engine's shipment decision for one subset slot.
-    fn ship_subset(&self, plan: &ExecPlan, part: u32, vectors: bool, tree: bool) -> SubsetShip {
-        let ids = &plan.parts[part as usize];
-        SubsetShip {
-            part,
-            vectors: if vectors { Some((ids.clone(), self.ds.gather(ids))) } else { None },
-            tree: if tree {
-                Some(self.cache.expect("tree ship requires the local-MST cache").trees
-                    [part as usize]
-                    .clone())
-            } else {
-                None
-            },
-        }
-    }
-}
-
-impl PairSolver for RemoteSolver<'_> {
-    /// The engine's pooled path always goes through [`Self::solve_shipped`];
-    /// a bare `solve` means "ship everything" — exactly the engine's dense
-    /// model, shared so the two cannot drift.
-    fn solve(&mut self, plan: &ExecPlan, job: &PairJob) -> Vec<Edge> {
-        let full = crate::exec::engine::dense_shipment(job, self.cache.is_some());
-        self.solve_shipped(plan, job, &full)
-            .expect("remote solve failed (use solve_shipped for recoverable errors)")
-            .edges
-    }
-
-    fn solve_shipped(
-        &mut self,
+    fn ship_subset(
+        &self,
         plan: &ExecPlan,
-        job: &PairJob,
-        ship: &Shipment,
-    ) -> anyhow::Result<Solved> {
+        part: u32,
+        vectors: bool,
+        tree: bool,
+    ) -> Result<SubsetShip> {
+        let ids = &plan.parts[part as usize];
+        let vectors = if vectors {
+            let ds = match self.ds {
+                Some(ds) => ds,
+                None => bail!(
+                    "subset {part}: vectors requested from a sharded leader that holds none (resident-set seeding bug)"
+                ),
+            };
+            Some((ids.clone(), ds.gather(ids)))
+        } else {
+            None
+        };
+        let tree = if tree {
+            Some(
+                self.cache.expect("tree ship requires the local-MST cache").trees
+                    [part as usize]
+                    .clone(),
+            )
+        } else {
+            None
+        };
+        Ok(SubsetShip { part, vectors, tree })
+    }
+
+    /// Put one pair job on the wire (does **not** wait for the reply —
+    /// that is [`Self::recv_pair_reply`]'s job, window frames later).
+    pub fn send_pair(&self, plan: &ExecPlan, job: &PairJob, ship: &Shipment) -> Result<()> {
         let mut ships = Vec::new();
         if ship.vec_i || ship.tree_i {
-            ships.push(self.ship_subset(plan, job.i, ship.vec_i, ship.tree_i));
+            ships.push(self.ship_subset(plan, job.i, ship.vec_i, ship.tree_i)?);
         }
         if job.j != job.i && (ship.vec_j || ship.tree_j) {
-            ships.push(self.ship_subset(plan, job.j, ship.vec_j, ship.tree_j));
+            ships.push(self.ship_subset(plan, job.j, ship.vec_j, ship.tree_j)?);
         }
         let msg = Message::PairAssign { job: *job, ships };
         self.tcp.send_to(self.worker, &msg, Direction::Scatter)?;
+        Ok(())
+    }
+
+    /// Read the reply of the **oldest** outstanding pair job (`expect` —
+    /// FIFO per link). Gather mode returns the pair tree; reduce mode
+    /// returns an empty `Solved` once the worker's `Ack` confirms the fold.
+    pub fn recv_pair_reply(&self, expect: &PairJob) -> Result<Solved> {
         match self.tcp.recv_from(self.worker)? {
-            Message::Result { job_id, edges, compute, .. } if job_id == job.id => {
+            Message::Result { job_id, edges, compute, .. } if job_id == expect.id => {
                 Ok(Solved { edges, compute: Some(compute) })
             }
-            Message::Ack { job_id } if self.reduce && job_id == job.id => {
+            Message::Ack { job_id } if self.reduce && job_id == expect.id => {
                 // folded into the worker-local tree; collected at finish()
                 Ok(Solved { edges: Vec::new(), compute: None })
             }
             other => bail!(
-                "worker {} replied {:?} to pair job {} (reduce = {})",
+                "worker {} replied {:?} while pair job {} was the oldest in flight (reduce = {})",
                 self.worker,
                 other,
-                job.id,
+                expect.id,
                 self.reduce
             ),
         }
     }
 
-    fn folds_remotely(&self) -> bool {
-        self.reduce
-    }
-
-    /// Per-job evaluation counts live in the worker process; they arrive
-    /// with the final `WorkerDone` (see [`Self::finish`]).
-    fn dist_evals(&self) -> u64 {
-        0
-    }
-
-    fn finish(&mut self) -> anyhow::Result<SolverFinal> {
+    /// Shutdown rendezvous: ask the worker process to drain and report.
+    /// Must only be called with no pair jobs in flight.
+    pub fn finish(&self) -> Result<SolverFinal> {
         self.tcp.send_to(self.worker, &Message::Shutdown, Direction::Control)?;
         match self.tcp.recv_from(self.worker)? {
             Message::WorkerDone {

@@ -31,9 +31,13 @@ struct Link {
 
 /// The leader-side multi-process fabric: `links[w]` is worker `w`'s socket.
 /// Each link is driven by exactly one proxy thread (the engine's pooled
-/// worker for that rank), in strict request→response rendezvous.
+/// worker for that rank); frames on a link are strictly FIFO, with up to
+/// `pipeline_window` requests outstanding before their replies are read.
 pub struct TcpTransport {
     links: Vec<Mutex<Link>>,
+    /// shard ids advertised by each worker during the v2 handshake
+    /// (empty on unsharded workers)
+    advertised: Vec<Vec<u32>>,
     counters: Arc<NetCounters>,
 }
 
@@ -73,6 +77,7 @@ impl TcpTransport {
         let t0 = Instant::now();
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let mut links = Vec::with_capacity(n);
+        let mut advertised = Vec::with_capacity(n);
         while links.len() < n {
             // Checked every iteration, not only when the queue is empty: a
             // stream of connecting-but-stalling peers (each burning its
@@ -88,7 +93,10 @@ impl TcpTransport {
                 Ok((stream, peer)) => {
                     let w = links.len();
                     match handshake_leader(&stream, w, setup, &counters) {
-                        Ok(()) => links.push(Mutex::new(Link { stream })),
+                        Ok(shard_ids) => {
+                            links.push(Mutex::new(Link { stream }));
+                            advertised.push(shard_ids);
+                        }
                         Err(e) => {
                             eprintln!("leader: rejected connection from {peer}: {e:#}");
                         }
@@ -100,7 +108,13 @@ impl TcpTransport {
                 Err(e) => return Err(e).context("accepting worker connection"),
             }
         }
-        Ok(Self { links, counters })
+        Ok(Self { links, advertised, counters })
+    }
+
+    /// Shard ids worker `w` advertised during the handshake (subsets it
+    /// loaded from local shard files; empty for unsharded workers).
+    pub fn advertised(&self, w: usize) -> &[u32] {
+        &self.advertised[w]
     }
 
     /// Send one message frame to worker `w`, counting its actual encoded
@@ -144,14 +158,16 @@ impl TcpTransport {
 }
 
 /// Leader side of the per-connection handshake: expect `Hello`, answer with
-/// the run `Setup` (stamped with this link's worker id), confirm the ack.
-/// Handshake frames are counted as control traffic.
+/// the run `Setup` (stamped with this link's worker id), confirm the ack,
+/// then read the worker's `ShardAdvertise` (its locally loaded subset ids —
+/// empty for unsharded workers). Handshake frames are counted as control
+/// traffic. Returns the advertised shard ids.
 fn handshake_leader(
     stream: &TcpStream,
     worker_id: usize,
     setup: &Setup,
     counters: &NetCounters,
-) -> Result<()> {
+) -> Result<Vec<u32>> {
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(Duration::from_secs(10)))
@@ -172,9 +188,16 @@ fn handshake_leader(
         bail!("worker acked id {} but was assigned {worker_id}", ack.worker_id);
     }
     counters.add(ack_frame.len() as u64, Direction::Control);
+
+    let adv_frame = wire::read_frame(&mut stream).context("reading ShardAdvertise")?;
+    let adv = wire::decode_shard_advertise(&adv_frame)?;
+    if adv.worker_id != worker_id as u16 {
+        bail!("worker advertised as id {} but was assigned {worker_id}", adv.worker_id);
+    }
+    counters.add(adv_frame.len() as u64, Direction::Control);
     // Job frames can take arbitrarily long to produce answers.
     stream.set_read_timeout(None).context("clearing handshake timeout")?;
-    Ok(())
+    Ok(adv.shard_ids)
 }
 
 #[cfg(test)]
@@ -193,12 +216,14 @@ mod tests {
             kernel: 0,
             pair_kernel: 0,
             reduce_tree: false,
+            manifest: 0,
             part_sizes: vec![5, 5],
             artifacts_dir: String::new(),
         }
     }
 
-    /// A minimal in-test worker endpoint: handshake, then echo one frame.
+    /// A minimal in-test worker endpoint: handshake (advertising shard 1),
+    /// then echo one frame.
     fn fake_worker(addr: std::net::SocketAddr) -> std::thread::JoinHandle<Message> {
         std::thread::spawn(move || {
             let mut s = ClientStream::connect(addr).unwrap();
@@ -208,6 +233,15 @@ mod tests {
             wire::write_frame(
                 &mut s,
                 &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![1],
+                })
+                .unwrap(),
             )
             .unwrap();
             let frame = wire::read_frame(&mut s).unwrap();
@@ -227,9 +261,10 @@ mod tests {
             TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
                 .unwrap();
         assert_eq!(fab.len(), 1);
+        assert_eq!(fab.advertised(0), &[1], "handshake captured the shard advertisement");
         let (_, _, c_after_handshake, m) = fab.counters().snapshot();
         assert!(c_after_handshake > 0, "handshake counted as control");
-        assert_eq!(m, 3, "hello + setup + ack");
+        assert_eq!(m, 4, "hello + setup + ack + shard advertise");
 
         let msg = Message::Shutdown;
         let reply = fab.request(0, &msg, Direction::Control).unwrap();
@@ -239,7 +274,7 @@ mod tests {
         assert_eq!(s, 0);
         assert_eq!(g, 0, "ack is control, not gather");
         assert_eq!(c, c_after_handshake + 16 + 16, "both 16-byte frames counted");
-        assert_eq!(m, 5);
+        assert_eq!(m, 6);
         // charge() must not touch real-transport counters
         fab.charge(1_000_000, Direction::Scatter);
         assert_eq!(fab.counters().snapshot().0, 0);

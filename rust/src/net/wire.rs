@@ -25,11 +25,27 @@
 //! has exactly `|S_k| - 1` edges) — which is what lets the frame sizes equal
 //! the engine's modeled scatter charges byte-for-byte.
 //!
-//! ## Wire limits (v1)
+//! ## Wire limits (v2)
 //!
 //! `parts ≤ 65535`, `d ≤ 65535`, `workers ≤ 255` (per-job `Result` routing),
 //! durations saturate at 2⁴⁸−1 ns (~3.2 days per job). [`RunConfig`]
 //! validation rejects TCP configurations outside these bounds up front.
+//!
+//! ## v2 additions (sharded residency + pipelined dispatch)
+//!
+//! - [`Setup`] carries the leader's shard-manifest fingerprint (0 on
+//!   unsharded runs) so a worker that loaded shards cut from a different
+//!   partition fails the handshake instead of computing a wrong tree.
+//! - The handshake ends with a worker → leader [`ShardAdvertise`] frame
+//!   naming the subset ids the worker loaded from local shard files
+//!   (empty when unsharded) — the seed of the leader's resident-set model.
+//! - `LocalAssign` (header-only) tells a sharded worker to build one
+//!   resident subset's local MST without any vectors on the wire.
+//! - Dispatch is windowed: the leader may put up to `pipeline_window`
+//!   `PairAssign` frames on a link before reading the matching
+//!   `Result`/`Ack` replies, which double as the window credits. Workers
+//!   serve frames strictly in order, so replies stay FIFO per link and no
+//!   new ack frame type is needed.
 //!
 //! [`RunConfig`]: crate::config::RunConfig
 
@@ -44,7 +60,7 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 1;
+pub const WIRE_VERSION: u16 = 2;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
@@ -61,6 +77,8 @@ const TAG_LOCAL_DONE: u8 = 8;
 const TAG_PAIR_ASSIGN: u8 = 9;
 const TAG_ACK: u8 = 10;
 const TAG_SETUP_ACK: u8 = 11;
+const TAG_SHARD_ADVERTISE: u8 = 12;
+const TAG_LOCAL_ASSIGN: u8 = 13;
 
 const EDGE_BYTES: u64 = Edge::WIRE_BYTES as u64;
 const STATS_BYTES: u64 = 40;
@@ -97,7 +115,7 @@ pub fn encoded_len(msg: &Message) -> u64 {
                 STATS_BYTES
                     + local_tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
             }
-            Message::Ack { .. } | Message::Shutdown => 0,
+            Message::Ack { .. } | Message::LocalAssign { .. } | Message::Shutdown => 0,
         }
 }
 
@@ -268,6 +286,11 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
         Message::Ack { job_id } => {
             let mut f = FrameBuf::new(TAG_ACK, payload)?;
             f.set_u32(8, *job_id);
+            f
+        }
+        Message::LocalAssign { part } => {
+            let mut f = FrameBuf::new(TAG_LOCAL_ASSIGN, payload)?;
+            f.set_u32(8, *part);
             f
         }
         Message::WorkerDone {
@@ -486,6 +509,7 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
             edges: r.edges(derive_edges(payload_len, "Result")?)?,
         },
         TAG_ACK => Message::Ack { job_id: r0.u32_at(8) },
+        TAG_LOCAL_ASSIGN => Message::LocalAssign { part: r0.u32_at(8) },
         TAG_WORKER_DONE => {
             let has_tree = r0.u8_at(5) & 1 != 0;
             let worker = r0.u16_at(6) as usize;
@@ -607,6 +631,10 @@ pub struct Setup {
     pub kernel: u8,
     pub pair_kernel: u8,
     pub reduce_tree: bool,
+    /// shard-manifest fingerprint of a sharded run, 0 when unsharded; a
+    /// worker whose loaded manifest fingerprints differently must refuse
+    /// the run (its shard files were cut from another partition)
+    pub manifest: u64,
     pub part_sizes: Vec<u32>,
     /// leader-side artifacts dir, UTF-8 (trailing variable-length section)
     pub artifacts_dir: String,
@@ -641,7 +669,7 @@ pub fn decode_hello(frame: &[u8]) -> Result<Hello> {
 pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     let parts = need_u16(s.part_sizes.len(), "partition count")?;
     let dir = s.artifacts_dir.as_bytes();
-    let payload = 8 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
+    let payload = 16 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
     let mut f = FrameBuf::new(TAG_SETUP, payload)?;
     f.set_u8(5, s.reduce_tree as u8);
     f.set_u16(6, s.version);
@@ -653,6 +681,7 @@ pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     f.buf.push(s.kernel);
     f.buf.extend_from_slice(&[0u8; 3]);
     f.push_u32s(&[s.n]);
+    f.push_u64(s.manifest);
     f.push_u32s(&s.part_sizes);
     f.buf.extend_from_slice(dir);
     Ok(f.buf)
@@ -669,6 +698,7 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
     let mut r = Reader::new(&frame[HEADER_BYTES as usize..]);
     let kernel = r.take(4)?[0];
     let n = r.u32()?;
+    let manifest = r.u64()?;
     let part_sizes = r.u32s(parts)?;
     let artifacts_dir = String::from_utf8(r.rest().to_vec())
         .map_err(|_| anyhow!("Setup artifacts_dir is not UTF-8"))?;
@@ -682,6 +712,7 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
         kernel,
         pair_kernel: r0.u8_at(15),
         reduce_tree: r0.u8_at(5) & 1 != 0,
+        manifest,
         part_sizes,
         artifacts_dir,
     })
@@ -696,6 +727,36 @@ pub fn encode_setup_ack(a: &SetupAck) -> Vec<u8> {
 pub fn decode_setup_ack(frame: &[u8]) -> Result<SetupAck> {
     expect_tag(frame, TAG_SETUP_ACK, "SetupAck")?;
     Ok(SetupAck { worker_id: Reader::new(frame).u16_at(8) })
+}
+
+/// Final handshake frame, worker → leader: the partition subset ids this
+/// worker loaded from local shard files (empty on unsharded workers). This
+/// is what seeds the leader's resident-set model and its capability-aware
+/// scheduling on a sharded run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardAdvertise {
+    pub worker_id: u16,
+    pub shard_ids: Vec<u32>,
+}
+
+pub fn encode_shard_advertise(a: &ShardAdvertise) -> Result<Vec<u8>> {
+    let mut f = FrameBuf::new(TAG_SHARD_ADVERTISE, 4 * a.shard_ids.len() as u64)?;
+    f.set_u16(6, a.worker_id);
+    f.push_u32s(&a.shard_ids);
+    Ok(f.buf)
+}
+
+pub fn decode_shard_advertise(frame: &[u8]) -> Result<ShardAdvertise> {
+    expect_tag(frame, TAG_SHARD_ADVERTISE, "ShardAdvertise")?;
+    let payload = frame.len() - HEADER_BYTES as usize;
+    if payload % 4 != 0 {
+        bail!("ShardAdvertise payload {payload} is not a whole number of u32 ids");
+    }
+    let r0 = Reader::new(frame);
+    let mut r = Reader::new(&frame[HEADER_BYTES as usize..]);
+    let shard_ids = r.u32s(payload / 4)?;
+    r.done("ShardAdvertise")?;
+    Ok(ShardAdvertise { worker_id: r0.u16_at(6), shard_ids })
 }
 
 fn expect_tag(frame: &[u8], tag: u8, what: &str) -> Result<()> {
@@ -827,6 +888,9 @@ mod tests {
     fn control_frames_roundtrip() {
         assert_eq!(roundtrip(&Message::Shutdown, None), Message::Shutdown);
         assert_eq!(roundtrip(&Message::Ack { job_id: 3 }, None), Message::Ack { job_id: 3 });
+        let la = Message::LocalAssign { part: 9 };
+        assert_eq!(la.wire_bytes(), 16, "LocalAssign ships no vectors");
+        assert_eq!(roundtrip(&la, None), la);
         let ld = Message::LocalDone {
             part: 5,
             edges: vec![Edge::new(0, 1, 1.0)],
@@ -886,14 +950,28 @@ mod tests {
             kernel: 1,
             pair_kernel: 1,
             reduce_tree: true,
+            manifest: 0xfeed_beef_cafe_f00d,
             part_sizes: vec![250, 250, 300, 200],
             artifacts_dir: "/opt/aot artifacts".into(),
         };
         assert_eq!(decode_setup(&encode_setup(&setup).unwrap()).unwrap(), setup);
-        let bare = Setup { artifacts_dir: String::new(), ..setup.clone() };
+        let bare = Setup { artifacts_dir: String::new(), manifest: 0, ..setup.clone() };
         assert_eq!(decode_setup(&encode_setup(&bare).unwrap()).unwrap(), bare);
         let ack = SetupAck { worker_id: 3 };
         assert_eq!(decode_setup_ack(&encode_setup_ack(&ack)).unwrap(), ack);
+    }
+
+    #[test]
+    fn shard_advertise_roundtrip() {
+        for ids in [vec![], vec![0u32], vec![3, 1, 7, 65000]] {
+            let adv = ShardAdvertise { worker_id: 9, shard_ids: ids };
+            let frame = encode_shard_advertise(&adv).unwrap();
+            assert_eq!(frame.len(), 16 + 4 * adv.shard_ids.len());
+            assert_eq!(decode_shard_advertise(&frame).unwrap(), adv);
+        }
+        // a non-advertise frame is refused
+        let ack = encode(&Message::Ack { job_id: 0 }).unwrap();
+        assert!(decode_shard_advertise(&ack).is_err());
     }
 
     #[test]

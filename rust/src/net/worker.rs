@@ -1,11 +1,17 @@
 //! The `demst worker` process: the far end of one leader↔worker TCP link.
 //!
-//! A worker connects, handshakes (`Hello` → `Setup` → `SetupAck`), then
-//! serves frames until `Shutdown`:
+//! A worker connects (with bounded-backoff retries), optionally **loads
+//! shard files first** (`--shard <manifest> --shard-ids ...`: subsets read
+//! and digest-verified from local disk, so their vectors never touch the
+//! leader), handshakes (`Hello` → `Setup` → `SetupAck` →
+//! `ShardAdvertise`), then serves frames until `Shutdown`:
 //!
 //! - `LocalJob` — compute one partition subset's local MST over the shipped
 //!   rows (bipartite-merge phase 1), reply `LocalDone`, and keep the subset
 //!   **resident** (vectors, per-row aux values, tree);
+//! - `LocalAssign` — the sharded twin: same local MST, but over a subset
+//!   this worker already holds from its shard files (the frame is 16
+//!   bytes — no vectors on the wire);
 //! - `PairAssign` — absorb whatever subsets ride along (the leader ships
 //!   exactly what this worker is missing under its resident-set model),
 //!   solve the pair job with the configured kernel, and reply `Result`
@@ -26,7 +32,7 @@
 //! distance arithmetic is independent of the surrounding rows and all
 //! tie-breaks compare global ids.
 
-use super::wire::{self, Hello, SetupAck, WireCtx, WIRE_VERSION};
+use super::wire::{self, Hello, SetupAck, ShardAdvertise, WireCtx, WIRE_VERSION};
 use crate::config::{PairKernelChoice, RunConfig};
 use crate::coordinator::messages::Message;
 use crate::data::Dataset;
@@ -39,9 +45,18 @@ use crate::exec::{
 use crate::geometry::blocked::{distance_block, DistanceBlock};
 use crate::geometry::CountingMetric;
 use crate::graph::Edge;
+use crate::shard::{Manifest, Shard};
 use anyhow::{anyhow, bail, Context, Result};
 use std::net::TcpStream;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Chaos hook (failure-injection tests and `scripts/chaos_smoke.sh`): when
+/// this env var is set to `N`, the worker process exits abruptly — sockets
+/// torn down by the OS, no shutdown handshake, exactly like a SIGKILL —
+/// upon receiving its `(N+1)`-th pair job. Leaves one job dead in flight,
+/// which the leader must reassign.
+pub const CHAOS_EXIT_ENV: &str = "DEMST_CHAOS_EXIT_AFTER_JOBS";
 
 /// What one worker process did, for the `demst worker` exit report.
 #[derive(Clone, Debug, Default)]
@@ -55,6 +70,32 @@ pub struct WorkerReport {
     /// actual frame bytes received / sent on the socket
     pub bytes_rx: u64,
     pub bytes_tx: u64,
+    /// subsets loaded from local shard files before connecting
+    pub shards_loaded: u32,
+    /// vector payload bytes those shards kept off the wire
+    pub shard_local_bytes: u64,
+}
+
+/// How a worker process connects and what it serves.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// keep retrying the connect for this long (leaders routinely bind
+    /// after their workers start)
+    pub connect_timeout: Duration,
+    /// initial retry backoff; doubles per attempt, capped at 2 s
+    pub connect_backoff: Duration,
+    /// shard residency: manifest plus the subset ids to load locally
+    pub shards: Option<(std::path::PathBuf, Vec<u32>)>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(10),
+            connect_backoff: Duration::from_millis(100),
+            shards: None,
+        }
+    }
 }
 
 /// One resident partition subset: rows packed in ascending-global-id order,
@@ -68,15 +109,53 @@ struct Slot {
 }
 
 /// Connect to a leader with retries (the leader may still be binding), then
-/// serve until shutdown.
+/// serve until shutdown. Unsharded shorthand for [`run_with`].
 pub fn run(addr: &str, retry: Duration) -> Result<WorkerReport> {
-    serve(connect_with_retry(addr, retry)?)
+    run_with(addr, &WorkerOptions { connect_timeout: retry, ..Default::default() })
+}
+
+/// Full worker lifecycle: load (and digest-verify) any requested shards
+/// from local disk, connect with bounded-backoff retries, serve until
+/// shutdown.
+pub fn run_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport> {
+    let loaded = match &opts.shards {
+        Some((manifest_path, ids)) => Some(load_shards(manifest_path, ids)?),
+        None => None,
+    };
+    let stream = connect_with_retry(addr, opts.connect_timeout, opts.connect_backoff)?;
+    serve_with(stream, loaded)
+}
+
+/// A worker's locally loaded shard set, verified against its manifest.
+pub struct LoadedShards {
+    pub fingerprint: u64,
+    pub shards: Vec<Shard>,
+}
+
+/// Read the manifest and the requested shard files (digest-verified).
+/// An empty `ids` list means "all shards in the manifest".
+pub fn load_shards(manifest_path: &Path, ids: &[u32]) -> Result<LoadedShards> {
+    let manifest = Manifest::load(manifest_path)?;
+    let all: Vec<u32>;
+    let ids = if ids.is_empty() {
+        all = (0..manifest.parts() as u32).collect();
+        &all[..]
+    } else {
+        ids
+    };
+    let shards = crate::shard::load_worker_shards(&manifest, ids)?;
+    Ok(LoadedShards { fingerprint: manifest.fingerprint(), shards })
 }
 
 /// Retry-connect loop: workers are routinely started before (or racing) the
-/// leader's bind, so a refused connection is retried until `window` lapses.
-pub fn connect_with_retry(addr: &str, window: Duration) -> Result<TcpStream> {
+/// leader's bind, so a refused connection is retried until `window` lapses,
+/// with the sleep between attempts starting at `backoff` and doubling up to
+/// a 2 s cap (bounded backoff — cheap while racing a bind, polite while a
+/// leader restarts).
+pub fn connect_with_retry(addr: &str, window: Duration, backoff: Duration) -> Result<TcpStream> {
+    const BACKOFF_CAP: Duration = Duration::from_secs(2);
     let t0 = Instant::now();
+    let mut pause = backoff.max(Duration::from_millis(1)).min(BACKOFF_CAP);
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
@@ -86,14 +165,21 @@ pub fn connect_with_retry(addr: &str, window: Duration) -> Result<TcpStream> {
                         format!("could not connect to leader at {addr} within {window:?}")
                     });
                 }
-                std::thread::sleep(Duration::from_millis(100));
+                std::thread::sleep(pause.min(window.saturating_sub(t0.elapsed())));
+                pause = (pause * 2).min(BACKOFF_CAP);
             }
         }
     }
 }
 
-/// Serve one handshaken connection until `Shutdown`.
-pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
+/// Serve one handshaken connection until `Shutdown` (unsharded).
+pub fn serve(stream: TcpStream) -> Result<WorkerReport> {
+    serve_with(stream, None)
+}
+
+/// Serve one connection until `Shutdown`, optionally with pre-loaded
+/// shard residency.
+pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result<WorkerReport> {
     stream.set_nodelay(true).ok();
     // Bound the handshake so connecting to a silent peer fails instead of
     // hanging; job frames afterwards may legitimately take arbitrarily long.
@@ -105,11 +191,40 @@ pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
     let setup_frame =
         wire::read_frame(&mut stream).context("reading Setup (is the peer a demst leader?)")?;
     let setup = wire::decode_setup(&setup_frame)?;
+    // Sharded-vs-unsharded agreement must fail HERE, before any job frame:
+    // a worker whose shard files were cut from a different partition (or
+    // that has none at all for a sharded leader) would otherwise compute
+    // over wrong resident data.
+    match (&loaded, setup.manifest) {
+        (Some(_), 0) => bail!(
+            "this worker loaded shards but the leader's run is not sharded — drop --shard or start the leader with `demst run --shard <manifest>`"
+        ),
+        (Some(l), fp) if l.fingerprint != fp => bail!(
+            "shard manifest mismatch: worker loaded {:#018x}, leader announced {fp:#018x} — the shard files were cut from a different `demst partition` run",
+            l.fingerprint
+        ),
+        (None, fp) if fp != 0 => bail!(
+            "the leader runs sharded (manifest {fp:#018x}) but this worker loaded no shards — restart it with --shard <manifest> --shard-ids ..."
+        ),
+        _ => {}
+    }
     wire::write_frame(
         &mut stream,
         &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
     )
     .context("sending SetupAck")?;
+    let shard_ids: Vec<u32> = match &loaded {
+        Some(l) => l.shards.iter().map(|s| s.part).collect(),
+        None => Vec::new(),
+    };
+    wire::write_frame(
+        &mut stream,
+        &wire::encode_shard_advertise(&ShardAdvertise {
+            worker_id: setup.worker_id,
+            shard_ids,
+        })?,
+    )
+    .context("sending ShardAdvertise")?;
     stream.set_read_timeout(None).context("clearing handshake timeout")?;
 
     let kind = wire::metric_from_code(setup.metric)?;
@@ -119,9 +234,30 @@ pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
     let sqrt_at_emit = block.compare_form_is_squared();
     let n = setup.n as usize;
     let ctx = WireCtx { d: setup.d as usize, part_sizes: setup.part_sizes.clone() };
+    let chaos_exit_after: Option<u32> = std::env::var(CHAOS_EXIT_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse().ok());
 
     let mut store: Vec<Option<Slot>> = Vec::new();
     store.resize_with(setup.part_sizes.len(), || None);
+    let mut shard_report = (0u32, 0u64);
+    if let Some(l) = loaded {
+        for shard in l.shards {
+            let k = shard.part as usize;
+            if k >= store.len() {
+                bail!("loaded shard {k} outside the {}-part run", store.len());
+            }
+            if shard.points.d != setup.d as usize
+                || shard.ids.len() != setup.part_sizes[k] as usize
+            {
+                bail!("shard {k} shape disagrees with the leader's Setup");
+            }
+            shard_report.0 += 1;
+            shard_report.1 += shard.local_payload_bytes();
+            let aux = block.prepare(shard.points.as_slice(), shard.points.n, shard.points.d);
+            store[k] = Some(Slot { ids: shard.ids, points: shard.points, aux, tree: None });
+        }
+    }
     // Built on first dense union solve; carries its own eval counter.
     let mut dense_kernel: Option<Box<dyn DenseMst>> = None;
     let counter = CountingMetric::new(kind);
@@ -130,7 +266,12 @@ pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
     // already resident here, so there is nothing to rebuild on a miss.
     let mut panel_lru: KeyedLru<()> = KeyedLru::new(PANEL_CACHE_CAP);
 
-    let mut report = WorkerReport { worker_id: setup.worker_id, ..Default::default() };
+    let mut report = WorkerReport {
+        worker_id: setup.worker_id,
+        shards_loaded: shard_report.0,
+        shard_local_bytes: shard_report.1,
+        ..Default::default()
+    };
     let mut pair_evals = 0u64;
     let mut busy = Duration::ZERO;
     let mut folded: Option<Vec<Edge>> = None;
@@ -155,7 +296,36 @@ pub fn serve(mut stream: TcpStream) -> Result<WorkerReport> {
                     Some(Slot { ids: global_ids, points, aux, tree: Some(tree.clone()) });
                 Message::LocalDone { part, edges: tree, compute }
             }
+            Message::LocalAssign { part } => {
+                // Sharded phase 1: the subset is already resident from a
+                // local shard file — only the tree needs computing.
+                let slot = resident(&store, part, "LocalAssign")?;
+                let t = Instant::now();
+                let tree = subset_mst_gathered(
+                    &slot.points,
+                    block.as_ref(),
+                    &slot.aux,
+                    &counter,
+                    &slot.ids,
+                );
+                let compute = t.elapsed();
+                report.local_jobs += 1;
+                let k = part as usize;
+                store[k].as_mut().expect("resident checked").tree = Some(tree.clone());
+                Message::LocalDone { part, edges: tree, compute }
+            }
             Message::PairAssign { job, ships } => {
+                if let Some(limit) = chaos_exit_after {
+                    if report.jobs >= limit {
+                        // Chaos hook: die like a SIGKILL — no reply, no
+                        // shutdown handshake, socket torn down by the OS.
+                        eprintln!(
+                            "worker {}: {CHAOS_EXIT_ENV}={limit} reached — exiting abruptly",
+                            setup.worker_id
+                        );
+                        std::process::exit(113);
+                    }
+                }
                 for ship in ships {
                     absorb(&mut store, block.as_ref(), ship)?;
                 }
@@ -458,12 +628,15 @@ mod tests {
             kernel: 0,
             pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
             reduce_tree: false,
+            manifest: 0,
             part_sizes: part_sizes.clone(),
             artifacts_dir: String::new(),
         };
         wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
         let ack = wire::decode_setup_ack(&wire::read_frame(&mut s).unwrap()).unwrap();
         assert_eq!(ack.worker_id, 0);
+        let adv = wire::decode_shard_advertise(&wire::read_frame(&mut s).unwrap()).unwrap();
+        assert!(adv.shard_ids.is_empty(), "unsharded worker advertises nothing");
 
         // phase 1: both subsets
         for (k, ids) in plan.parts.iter().enumerate() {
@@ -515,5 +688,141 @@ mod tests {
         let mut solver = BipartitePairSolver::new(&ds, &bctx, &cache);
         let local_tree = solver.solve(&plan, &job);
         assert_eq!(local_tree, remote_tree, "remote pair tree must be bit-identical");
+    }
+
+    /// Sharded worker: subsets come from local shard files, phase 1 is a
+    /// 16-byte `LocalAssign`, the pair job ships nothing — and the tree is
+    /// bit-identical to the in-process solver over the full matrix.
+    #[test]
+    fn sharded_worker_serves_from_local_files_bit_identical() {
+        let dir = std::env::temp_dir().join("demst_worker_shard_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = float_dataset(77, 36, 4);
+        let (manifest, manifest_path) = crate::shard::write_dataset_shards(
+            &dir,
+            "wtest",
+            &ds,
+            2,
+            crate::decomp::PartitionStrategy::Block,
+            0,
+            MetricKind::SqEuclid,
+        )
+        .unwrap();
+        let plan = ExecPlan::from_layout(manifest.layout());
+        let part_sizes: Vec<u32> = plan.parts.iter().map(|p| p.len() as u32).collect();
+        let fingerprint = manifest.fingerprint();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = WorkerOptions {
+            shards: Some((manifest_path, vec![0, 1])),
+            ..Default::default()
+        };
+        let worker =
+            std::thread::spawn(move || run_with(&addr.to_string(), &opts));
+
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nodelay(true).ok();
+        wire::decode_hello(&wire::read_frame(&mut s).unwrap()).unwrap();
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: 0,
+            n: ds.n as u32,
+            d: ds.d as u16,
+            metric: wire::metric_code(MetricKind::SqEuclid),
+            kernel: 0,
+            pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
+            reduce_tree: false,
+            manifest: fingerprint,
+            part_sizes: part_sizes.clone(),
+            artifacts_dir: String::new(),
+        };
+        wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
+        wire::decode_setup_ack(&wire::read_frame(&mut s).unwrap()).unwrap();
+        let adv = wire::decode_shard_advertise(&wire::read_frame(&mut s).unwrap()).unwrap();
+        assert_eq!(adv.shard_ids, vec![0, 1], "both shards advertised");
+
+        // phase 1: header-only assigns — no vectors cross the wire
+        for k in 0..2u32 {
+            let la = Message::LocalAssign { part: k };
+            assert_eq!(la.wire_bytes(), 16);
+            wire::write_frame(&mut s, &wire::encode(&la).unwrap()).unwrap();
+            match wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap() {
+                Message::LocalDone { part, edges, .. } => {
+                    assert_eq!(part, k);
+                    assert_eq!(edges.len(), part_sizes[k as usize] as usize - 1);
+                }
+                other => panic!("expected LocalDone, got {other:?}"),
+            }
+        }
+        // phase 2: everything resident — a bare PairAssign
+        let job = PairJob { id: 0, i: 0, j: 1 };
+        wire::write_frame(
+            &mut s,
+            &wire::encode(&Message::PairAssign { job, ships: vec![] }).unwrap(),
+        )
+        .unwrap();
+        let ctx = WireCtx { d: ds.d, part_sizes };
+        let remote_tree =
+            match wire::decode(&wire::read_frame(&mut s).unwrap(), Some(&ctx)).unwrap() {
+                Message::Result { edges, .. } => edges,
+                other => panic!("expected Result, got {other:?}"),
+            };
+        wire::write_frame(&mut s, &wire::encode(&Message::Shutdown).unwrap()).unwrap();
+        wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap();
+        let report = worker.join().unwrap().unwrap();
+        assert_eq!(report.shards_loaded, 2);
+        assert!(report.shard_local_bytes > 0);
+
+        let bctx = BipartiteCtx::new(&ds, MetricKind::SqEuclid);
+        let cache = LocalMstCache::build_serial(&ds, &bctx, &plan.parts);
+        let mut solver = BipartitePairSolver::new(&ds, &bctx, &cache);
+        assert_eq!(solver.solve(&plan, &job), remote_tree, "bit-identical from shard files");
+    }
+
+    /// A worker whose shards fingerprint differently from the leader's
+    /// manifest must refuse the run during the handshake.
+    #[test]
+    fn manifest_fingerprint_mismatch_fails_handshake() {
+        let dir = std::env::temp_dir().join("demst_worker_shard_mismatch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = float_dataset(78, 24, 3);
+        let (_, manifest_path) = crate::shard::write_dataset_shards(
+            &dir,
+            "mismatch",
+            &ds,
+            2,
+            crate::decomp::PartitionStrategy::Block,
+            0,
+            MetricKind::SqEuclid,
+        )
+        .unwrap();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = WorkerOptions {
+            shards: Some((manifest_path, vec![])),
+            ..Default::default()
+        };
+        let worker = std::thread::spawn(move || run_with(&addr.to_string(), &opts));
+
+        let (mut s, _) = listener.accept().unwrap();
+        wire::decode_hello(&wire::read_frame(&mut s).unwrap()).unwrap();
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: 0,
+            n: ds.n as u32,
+            d: ds.d as u16,
+            metric: 0,
+            kernel: 0,
+            pair_kernel: 0,
+            reduce_tree: false,
+            manifest: 0xdead_0000_0000_0001, // some other partition run
+            part_sizes: vec![12, 12],
+            artifacts_dir: String::new(),
+        };
+        wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
+        let err = worker.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("manifest mismatch"), "{err}");
     }
 }

@@ -1,0 +1,70 @@
+//! FNV-1a 64-bit digests for shard payload integrity.
+//!
+//! Not cryptographic — the threat model is bit rot, truncated copies, and
+//! mismatched manifest/shard pairs across hosts, where a fast incremental
+//! 64-bit checksum is the right tool. The same function fingerprints whole
+//! manifests so the leader's `Setup` frame can refuse a worker that loaded
+//! shards cut from a different partition run.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64: fold `bytes` into `state` and return the new
+/// state. Start from [`FNV_OFFSET`].
+#[inline]
+pub fn fnv1a64_update(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+/// One-shot FNV-1a 64 of `bytes`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET, bytes)
+}
+
+/// Render a digest the way manifests store it (`0x`-prefixed hex).
+pub fn digest_hex(d: u64) -> String {
+    format!("0x{d:016x}")
+}
+
+/// Parse a manifest digest string (with or without the `0x` prefix).
+pub fn parse_digest_hex(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let hex = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")).unwrap_or(s);
+    u64::from_str_radix(hex, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let whole = fnv1a64(b"hello world");
+        let mut s = FNV_OFFSET;
+        s = fnv1a64_update(s, b"hello ");
+        s = fnv1a64_update(s, b"world");
+        assert_eq!(whole, s);
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        for d in [0u64, 1, u64::MAX, 0xdead_beef_0123_4567] {
+            assert_eq!(parse_digest_hex(&digest_hex(d)), Some(d));
+        }
+        assert_eq!(parse_digest_hex("cbf29ce484222325"), Some(FNV_OFFSET));
+        assert_eq!(parse_digest_hex("zz"), None);
+    }
+}

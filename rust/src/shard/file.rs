@@ -1,0 +1,202 @@
+//! The binary shard file: one partition subset's global-id map and vector
+//! rows, checksummed, loadable by a worker without touching the leader.
+//!
+//! ## Layout (little-endian)
+//!
+//! ```text
+//! [0..4]   magic "DMSH"
+//! [4..6]   format version (u16, = 1)
+//! [6..8]   reserved (0)
+//! [8..12]  part: u32        (partition subset index)
+//! [12..16] rows: u32        (|S_k|)
+//! [16..20] d: u32           (dimensions)
+//! [20..24] reserved (0)
+//! [24..]   ids:  rows × u32 (ascending global ids)
+//!          data: rows × d × f32 (row-major vectors)
+//! [-8..]   fnv1a64 over every preceding byte
+//! ```
+//!
+//! The trailing digest doubles as the manifest's per-shard digest, so a
+//! worker can verify both "this file is intact" and "this file is the one
+//! the manifest describes" with a single pass.
+
+use super::digest::fnv1a64;
+use crate::data::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DMSH";
+const FORMAT_VERSION: u16 = 1;
+const HEADER_BYTES: usize = 24;
+
+/// One shard loaded from disk: the subset index, its ascending global-id
+/// map, and the gathered rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub part: u32,
+    pub ids: Vec<u32>,
+    pub points: Dataset,
+}
+
+impl Shard {
+    /// Bytes of vector payload this shard keeps worker-local (id map +
+    /// rows) — the quantity [`RunMetrics::shard_local_bytes`] aggregates.
+    ///
+    /// [`RunMetrics::shard_local_bytes`]: crate::coordinator::RunMetrics
+    pub fn local_payload_bytes(&self) -> u64 {
+        crate::net::wire::vectors_payload_bytes(self.ids.len(), self.points.d)
+    }
+}
+
+/// Serialize one shard to its binary form (including the digest trailer).
+/// Returns `(bytes, digest)`.
+pub fn encode_shard(part: u32, ids: &[u32], points: &Dataset) -> Result<(Vec<u8>, u64)> {
+    if ids.len() != points.n {
+        bail!("shard {part}: id map length {} != rows {}", ids.len(), points.n);
+    }
+    let mut buf =
+        Vec::with_capacity(HEADER_BYTES + ids.len() * 4 + points.n * points.d * 4 + 8);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 2]);
+    buf.extend_from_slice(&part.to_le_bytes());
+    buf.extend_from_slice(&u32::try_from(ids.len()).context("shard rows exceed u32")?.to_le_bytes());
+    buf.extend_from_slice(&u32::try_from(points.d).context("shard d exceeds u32")?.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]);
+    for &g in ids {
+        buf.extend_from_slice(&g.to_le_bytes());
+    }
+    for &v in points.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let digest = fnv1a64(&buf);
+    buf.extend_from_slice(&digest.to_le_bytes());
+    Ok((buf, digest))
+}
+
+/// Write one shard file; returns its content digest.
+pub fn write_shard(path: &Path, part: u32, ids: &[u32], points: &Dataset) -> Result<u64> {
+    let (buf, digest) = encode_shard(part, ids, points)?;
+    std::fs::write(path, &buf).with_context(|| format!("writing shard {}", path.display()))?;
+    Ok(digest)
+}
+
+/// Decode a shard from its binary form, verifying the checksum.
+pub fn decode_shard(buf: &[u8]) -> Result<Shard> {
+    if buf.len() < HEADER_BYTES + 8 {
+        bail!("shard file truncated: {} bytes", buf.len());
+    }
+    if &buf[0..4] != MAGIC {
+        bail!("not a demst shard file (bad magic)");
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        bail!("unsupported shard format version {version} (this build reads v{FORMAT_VERSION})");
+    }
+    let body = &buf[..buf.len() - 8];
+    let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    let computed = fnv1a64(body);
+    if stored != computed {
+        bail!(
+            "shard checksum mismatch: file says {stored:#018x}, content hashes to {computed:#018x} (corrupt or truncated copy?)"
+        );
+    }
+    let part = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+    let rows = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    let d = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+    let need = HEADER_BYTES + rows * 4 + rows * d * 4;
+    if body.len() != need {
+        bail!("shard payload length {} != header-declared {need}", body.len());
+    }
+    let mut at = HEADER_BYTES;
+    let ids: Vec<u32> = buf[at..at + rows * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    at += rows * 4;
+    let data: Vec<f32> = buf[at..at + rows * d * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if !ids.windows(2).all(|w| w[0] < w[1]) {
+        bail!("shard {part}: global ids are not strictly ascending");
+    }
+    Ok(Shard { part, ids, points: Dataset::new(rows, d, data) })
+}
+
+/// Read and verify one shard file.
+pub fn read_shard(path: &Path) -> Result<Shard> {
+    let buf = std::fs::read(path).with_context(|| format!("reading shard {}", path.display()))?;
+    decode_shard(&buf).with_context(|| format!("decoding shard {}", path.display()))
+}
+
+/// Digest of an already-encoded shard file's contents (what `write_shard`
+/// recorded), recomputed from the stored trailer for cross-checks.
+pub fn shard_digest(buf: &[u8]) -> Result<u64> {
+    if buf.len() < 8 {
+        bail!("shard file truncated");
+    }
+    Ok(u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("demst_shard_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample(seed: u64, rows: usize, d: usize) -> (Vec<u32>, Dataset) {
+        let mut rng = Pcg64::seeded(seed);
+        let ids: Vec<u32> = (0..rows as u32).map(|i| i * 3 + 1).collect();
+        let data: Vec<f32> = (0..rows * d).map(|_| rng.next_f32() * 8.0 - 4.0).collect();
+        (ids, Dataset::new(rows, d, data))
+    }
+
+    #[test]
+    fn roundtrip_bit_identical() {
+        let (ids, points) = sample(1, 13, 5);
+        let p = tmp("roundtrip.bin");
+        let digest = write_shard(&p, 7, &ids, &points).unwrap();
+        let shard = read_shard(&p).unwrap();
+        assert_eq!(shard.part, 7);
+        assert_eq!(shard.ids, ids);
+        assert_eq!(shard.points, points);
+        assert_eq!(shard_digest(&std::fs::read(&p).unwrap()).unwrap(), digest);
+        assert_eq!(shard.local_payload_bytes(), 13 * 4 + 13 * 5 * 4);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let (ids, points) = sample(2, 9, 3);
+        let p = tmp("corrupt.bin");
+        write_shard(&p, 0, &ids, &points).unwrap();
+        let mut buf = std::fs::read(&p).unwrap();
+        let at = buf.len() / 2;
+        buf[at] ^= 0x40;
+        let err = decode_shard(&buf).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // truncation is also caught
+        assert!(decode_shard(&buf[..buf.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_and_malformed() {
+        assert!(decode_shard(b"not a shard").is_err());
+        let (ids, points) = sample(3, 4, 2);
+        let (mut buf, _) = encode_shard(1, &ids, &points).unwrap();
+        buf[4] = 99; // version check precedes the digest check
+        let err = decode_shard(&buf).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_id_map_rejected_at_encode() {
+        let (_, points) = sample(4, 4, 2);
+        assert!(encode_shard(0, &[1, 2], &points).is_err());
+    }
+}

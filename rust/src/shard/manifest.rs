@@ -1,0 +1,430 @@
+//! The shard manifest: the small, host-portable description of one
+//! partitioned dataset — everything a leader needs to *plan* a sharded run
+//! and everything a worker needs to *verify* the shard files it loaded.
+//!
+//! The manifest is TOML-lite (the same dialect as run configs) so it is
+//! human-inspectable and parseable by the existing `config::toml_lite`
+//! machinery. It records the run shape (`n`, `d`, `metric`), the partition
+//! provenance (`strategy`, `seed`), and per shard: the file name, row
+//! count, the subset's global ids (compact ascending ranges), and the
+//! FNV-1a 64 digest of the shard file's contents.
+//!
+//! Crucially the manifest carries **ids, never vectors**: a leader planning
+//! from a manifest holds the full partition layout while the vector payload
+//! stays on the worker hosts — which is what lets a sharded run assert
+//! `leader_ingest_bytes == 0`.
+//!
+//! [`Manifest::fingerprint`] is a 64-bit digest over the layout and shard
+//! digests; the leader announces it in the v2 `Setup` frame so a worker
+//! that loaded shards cut from a *different* partition run fails the
+//! handshake loudly instead of computing a wrong tree.
+
+use super::digest::{digest_hex, fnv1a64_update, parse_digest_hex, FNV_OFFSET};
+use crate::config::toml_lite::{parse_toml, TomlValue};
+use crate::decomp::PartitionStrategy;
+use crate::geometry::MetricKind;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest format version.
+pub const MANIFEST_VERSION: i64 = 1;
+
+/// One shard's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardEntry {
+    /// partition subset index
+    pub part: u32,
+    /// shard file name, relative to the manifest's directory
+    pub file: String,
+    /// ascending global ids of the subset
+    pub ids: Vec<u32>,
+    /// FNV-1a 64 digest of the shard file's full contents
+    pub digest: u64,
+}
+
+/// A parsed (or freshly written) shard manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub metric: MetricKind,
+    pub strategy: PartitionStrategy,
+    pub seed: u64,
+    pub shards: Vec<ShardEntry>,
+    /// directory the manifest was loaded from (shard files resolve against
+    /// it); empty for freshly built, not-yet-written manifests
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// The partition layout: per-subset ascending global-id lists, indexed
+    /// by subset — exactly the `ExecPlan::parts` shape.
+    pub fn layout(&self) -> Vec<Vec<u32>> {
+        self.shards.iter().map(|s| s.ids.clone()).collect()
+    }
+
+    /// Number of partition subsets.
+    pub fn parts(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Resolve shard `k`'s file path against the manifest directory.
+    pub fn shard_path(&self, k: usize) -> PathBuf {
+        self.dir.join(&self.shards[k].file)
+    }
+
+    /// 64-bit fingerprint over the run shape, layout, and shard digests.
+    /// Two manifests fingerprint equal iff they describe the same partition
+    /// of the same data. Announced in the v2 `Setup` frame (0 = unsharded).
+    pub fn fingerprint(&self) -> u64 {
+        let mut s = FNV_OFFSET;
+        s = fnv1a64_update(s, &(self.n as u64).to_le_bytes());
+        s = fnv1a64_update(s, &(self.d as u64).to_le_bytes());
+        s = fnv1a64_update(s, &[crate::net::wire::metric_code(self.metric)]);
+        s = fnv1a64_update(s, &(self.shards.len() as u64).to_le_bytes());
+        for e in &self.shards {
+            s = fnv1a64_update(s, &e.part.to_le_bytes());
+            s = fnv1a64_update(s, &(e.ids.len() as u64).to_le_bytes());
+            for &g in &e.ids {
+                s = fnv1a64_update(s, &g.to_le_bytes());
+            }
+            s = fnv1a64_update(s, &e.digest.to_le_bytes());
+        }
+        // reserve 0 as the "unsharded" sentinel
+        s.max(1)
+    }
+
+    /// Structural checks: every id appears exactly once across shards,
+    /// subsets are ascending and non-empty, counts match `n`.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards.is_empty() {
+            bail!("manifest has no shards");
+        }
+        if self.n == 0 || self.d == 0 {
+            bail!("manifest n and d must be positive");
+        }
+        let mut seen = vec![false; self.n];
+        for (k, e) in self.shards.iter().enumerate() {
+            if e.part as usize != k {
+                bail!("shard entries out of order: slot {k} holds part {}", e.part);
+            }
+            if e.ids.is_empty() {
+                bail!("shard {k} is empty");
+            }
+            if !e.ids.windows(2).all(|w| w[0] < w[1]) {
+                bail!("shard {k}: ids not strictly ascending");
+            }
+            for &g in &e.ids {
+                let g = g as usize;
+                if g >= self.n {
+                    bail!("shard {k}: id {g} outside n = {}", self.n);
+                }
+                if seen[g] {
+                    bail!("id {g} appears in more than one shard");
+                }
+                seen[g] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|&s| !s) {
+            bail!("id {missing} is in no shard (layout does not cover 0..n)");
+        }
+        Ok(())
+    }
+
+    /// Serialize to manifest TOML-lite text.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str("# demst shard manifest — written by `demst partition`\n");
+        s.push_str(&format!("version = {MANIFEST_VERSION}\n"));
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("n = {}\n", self.n));
+        s.push_str(&format!("d = {}\n", self.d));
+        s.push_str(&format!("parts = {}\n", self.shards.len()));
+        s.push_str(&format!("metric = \"{}\"\n", self.metric.name()));
+        s.push_str(&format!("strategy = \"{}\"\n", self.strategy.name()));
+        // quoted: seeds are u64 and TOML-lite integers are i64 — a seed
+        // >= 2^63 written bare would not parse back
+        s.push_str(&format!("seed = \"{}\"\n", self.seed));
+        s.push_str(&format!("fingerprint = \"{}\"\n", digest_hex(self.fingerprint())));
+        for e in &self.shards {
+            s.push_str(&format!("\n[shard{}]\n", e.part));
+            s.push_str(&format!("file = \"{}\"\n", e.file));
+            s.push_str(&format!("rows = {}\n", e.ids.len()));
+            s.push_str(&format!("ids = \"{}\"\n", encode_id_ranges(&e.ids)));
+            s.push_str(&format!("digest = \"{}\"\n", digest_hex(e.digest)));
+        }
+        s
+    }
+
+    /// Write the manifest into `dir` as `<name>.manifest.toml`; returns the
+    /// written path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("{}.manifest.toml", self.name));
+        std::fs::write(&path, self.to_toml())
+            .with_context(|| format!("writing manifest {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load and validate a manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard manifest {}", path.display()))?;
+        let mut m = Self::from_toml(&text)
+            .with_context(|| format!("parsing shard manifest {}", path.display()))?;
+        m.dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Ok(m)
+    }
+
+    /// Parse manifest TOML-lite text (no directory attached).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        let root = doc.get("").ok_or_else(|| anyhow!("empty manifest"))?;
+        let get = |key: &str| root.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"));
+        let get_usize = |key: &str| -> Result<usize> {
+            let v = get(key)?.as_int().ok_or_else(|| anyhow!("manifest key {key:?} must be an integer"))?;
+            usize::try_from(v).map_err(|_| anyhow!("manifest key {key:?} must be non-negative"))
+        };
+        let get_str = |key: &str| -> Result<&str> {
+            get(key)?.as_str().ok_or_else(|| anyhow!("manifest key {key:?} must be a string"))
+        };
+        let version = get("version")?.as_int().unwrap_or(-1);
+        if version != MANIFEST_VERSION {
+            bail!("unsupported manifest version {version} (this build reads v{MANIFEST_VERSION})");
+        }
+        let parts = get_usize("parts")?;
+        let metric = MetricKind::parse(get_str("metric")?)
+            .ok_or_else(|| anyhow!("unknown manifest metric"))?;
+        let strategy = PartitionStrategy::parse(get_str("strategy")?)
+            .ok_or_else(|| anyhow!("unknown manifest strategy"))?;
+        let mut shards = Vec::with_capacity(parts);
+        for k in 0..parts {
+            let sec = doc
+                .get(&format!("shard{k}"))
+                .ok_or_else(|| anyhow!("manifest missing [shard{k}] section"))?;
+            let sget = |key: &str| {
+                sec.get(key).ok_or_else(|| anyhow!("[shard{k}] missing key {key:?}"))
+            };
+            let file = sget("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("[shard{k}] file must be a string"))?
+                .to_string();
+            let rows = sget("rows")?
+                .as_int()
+                .ok_or_else(|| anyhow!("[shard{k}] rows must be an integer"))?;
+            let ids = decode_id_ranges(
+                sget("ids")?.as_str().ok_or_else(|| anyhow!("[shard{k}] ids must be a string"))?,
+            )
+            .with_context(|| format!("[shard{k}] ids"))?;
+            if ids.len() as i64 != rows {
+                bail!("[shard{k}] rows = {rows} but ids decode to {} entries", ids.len());
+            }
+            let digest = sget("digest")?
+                .as_str()
+                .and_then(parse_digest_hex)
+                .ok_or_else(|| anyhow!("[shard{k}] digest must be a hex string"))?;
+            shards.push(ShardEntry { part: k as u32, file, ids, digest });
+        }
+        let seed = match get("seed")? {
+            TomlValue::Int(i) if *i >= 0 => *i as u64,
+            TomlValue::Str(s) => s
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| anyhow!("manifest seed {s:?} is not a u64"))?,
+            _ => bail!("manifest key \"seed\" must be a non-negative integer (possibly quoted)"),
+        };
+        let m = Self {
+            name: get_str("name")?.to_string(),
+            n: get_usize("n")?,
+            d: get_usize("d")?,
+            metric,
+            strategy,
+            seed,
+            shards,
+            dir: PathBuf::new(),
+        };
+        m.validate()?;
+        if let Some(TomlValue::Str(fp)) = root.get("fingerprint") {
+            let recorded = parse_digest_hex(fp)
+                .ok_or_else(|| anyhow!("manifest fingerprint is not a hex digest"))?;
+            let actual = m.fingerprint();
+            if recorded != actual {
+                bail!(
+                    "manifest fingerprint mismatch: recorded {recorded:#018x}, layout hashes to {actual:#018x} (hand-edited manifest?)"
+                );
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Encode an ascending id list as compact ranges: `0-4,9,12-20`.
+pub fn encode_id_ranges(ids: &[u32]) -> String {
+    let mut out = String::new();
+    let mut i = 0;
+    while i < ids.len() {
+        let start = ids[i];
+        let mut end = start;
+        while i + 1 < ids.len() && ids[i + 1] == end + 1 {
+            i += 1;
+            end = ids[i];
+        }
+        if !out.is_empty() {
+            out.push(',');
+        }
+        if end == start {
+            out.push_str(&start.to_string());
+        } else {
+            out.push_str(&format!("{start}-{end}"));
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Decode a `0-4,9,12-20` range string back to the ascending id list.
+/// Rejects descending ranges, overlaps, and garbage.
+pub fn decode_id_ranges(s: &str) -> Result<Vec<u32>> {
+    let mut ids = Vec::new();
+    for piece in s.split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        let (lo, hi) = match piece.split_once('-') {
+            Some((a, b)) => (
+                a.trim().parse::<u32>().with_context(|| format!("bad range start {a:?}"))?,
+                b.trim().parse::<u32>().with_context(|| format!("bad range end {b:?}"))?,
+            ),
+            None => {
+                let v = piece.parse::<u32>().with_context(|| format!("bad id {piece:?}"))?;
+                (v, v)
+            }
+        };
+        if hi < lo {
+            bail!("descending range {piece:?}");
+        }
+        if let Some(&last) = ids.last() {
+            if lo <= last {
+                bail!("ranges must be ascending and non-overlapping (at {piece:?})");
+            }
+        }
+        ids.extend(lo..=hi);
+    }
+    if ids.is_empty() {
+        bail!("empty id list");
+    }
+    Ok(ids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        Manifest {
+            name: "t".into(),
+            n: 10,
+            d: 3,
+            metric: MetricKind::Euclid,
+            strategy: PartitionStrategy::Block,
+            seed: 42,
+            shards: vec![
+                ShardEntry { part: 0, file: "t.shard0.bin".into(), ids: vec![0, 1, 2, 3, 4], digest: 7 },
+                ShardEntry { part: 1, file: "t.shard1.bin".into(), ids: vec![5, 7, 9], digest: 8 },
+                ShardEntry { part: 2, file: "t.shard2.bin".into(), ids: vec![6, 8], digest: 9 },
+            ],
+            dir: PathBuf::new(),
+        }
+    }
+
+    #[test]
+    fn id_ranges_roundtrip() {
+        for ids in [
+            vec![0u32, 1, 2, 3],
+            vec![5],
+            vec![0, 2, 4, 6],
+            vec![1, 2, 3, 7, 9, 10, 11, 40],
+        ] {
+            let enc = encode_id_ranges(&ids);
+            assert_eq!(decode_id_ranges(&enc).unwrap(), ids, "{enc}");
+        }
+        assert_eq!(encode_id_ranges(&[0, 1, 2, 3]), "0-3");
+        assert_eq!(encode_id_ranges(&[1, 3, 4, 5, 9]), "1,3-5,9");
+        assert!(decode_id_ranges("5-2").is_err());
+        assert!(decode_id_ranges("1,1").is_err());
+        assert!(decode_id_ranges("x").is_err());
+        assert!(decode_id_ranges("").is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip_preserves_everything() {
+        let m = sample_manifest();
+        let text = m.to_toml();
+        let back = Manifest::from_toml(&text).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.fingerprint(), m.fingerprint());
+        assert_eq!(back.layout(), vec![vec![0, 1, 2, 3, 4], vec![5, 7, 9], vec![6, 8]]);
+    }
+
+    #[test]
+    fn seed_roundtrips_past_i64_range() {
+        // u64 seeds beyond i64::MAX must survive the TOML-lite round trip
+        // (written quoted); bare non-negative integers stay accepted.
+        let mut m = sample_manifest();
+        m.seed = u64::MAX - 7;
+        let back = Manifest::from_toml(&m.to_toml()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 7);
+        let bare = m.to_toml().replace(&format!("seed = \"{}\"", m.seed), "seed = 42");
+        assert_eq!(Manifest::from_toml(&bare).unwrap().seed, 42);
+        let bad = m.to_toml().replace(&format!("seed = \"{}\"", m.seed), "seed = \"nope\"");
+        assert!(Manifest::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_layouts() {
+        let mut m = sample_manifest();
+        m.shards[1].ids = vec![5, 7]; // id 9 now missing
+        assert!(m.validate().unwrap_err().to_string().contains("no shard"));
+        let mut m = sample_manifest();
+        m.shards[2].ids = vec![6, 8, 9]; // 9 duplicated
+        assert!(m.validate().unwrap_err().to_string().contains("more than one"));
+        let mut m = sample_manifest();
+        m.shards[0].ids = vec![0, 0, 1, 2, 3];
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_layout_and_digests() {
+        let a = sample_manifest();
+        let mut b = sample_manifest();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.shards[1].digest = 1234;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = sample_manifest();
+        c.shards[1].ids = vec![5, 7, 8];
+        c.shards[2].ids = vec![6, 9];
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), 0, "0 is reserved for unsharded");
+    }
+
+    #[test]
+    fn tampered_fingerprint_rejected() {
+        let m = sample_manifest();
+        let text = m.to_toml().replace(&digest_hex(m.fingerprint()), &digest_hex(12345));
+        let err = Manifest::from_toml(&text).unwrap_err().to_string();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+    }
+
+    #[test]
+    fn write_and_load() {
+        let dir = std::env::temp_dir().join("demst_manifest_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample_manifest();
+        let path = m.write(&dir).unwrap();
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(back.dir, dir);
+        assert_eq!(back.shards, m.shards);
+        assert_eq!(back.shard_path(1), dir.join("t.shard1.bin"));
+    }
+}

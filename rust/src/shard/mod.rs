@@ -1,0 +1,244 @@
+//! Sharded dataset residency: the subsystem that moves vector payload off
+//! the leader and onto the worker hosts.
+//!
+//! `demst partition` splits a dataset into per-subset **shard files**
+//! ([`file`]: binary, checksummed) described by a **manifest**
+//! ([`manifest`]: TOML-lite — run shape, partition layout as id ranges,
+//! per-shard digests, and a 64-bit fingerprint). Each `demst worker
+//! --shard <manifest> --shard-ids ...` process loads its shards from local
+//! disk at startup ([`load_worker_shards`]) and advertises the resident
+//! subset ids during the v2 handshake; the leader plans the run from the
+//! manifest alone ([`Manifest::layout`]), treats advertised subsets as
+//! already-held in its resident-set `Shipment` model, and restricts
+//! scheduling to workers that hold both subsets of a pair job — so subset
+//! vectors never pass through the leader (`RunMetrics::leader_ingest_bytes
+//! == 0` on a sharded run, `shard_local_bytes` accounts what the fleet
+//! loaded locally instead).
+//!
+//! Because every pair job `(i, j)` needs both subsets co-resident
+//! somewhere, a shard assignment must cover all `|P|(|P|-1)/2` pairs;
+//! [`suggest_assignment`] produces a covering layout (the classic
+//! group-pair scheme from the MPC literature) that `demst partition`
+//! prints as ready-to-paste `--shard-ids` flags.
+
+pub mod digest;
+pub mod file;
+pub mod manifest;
+
+pub use digest::{digest_hex, fnv1a64, parse_digest_hex};
+pub use file::{read_shard, write_shard, Shard};
+pub use manifest::{decode_id_ranges, encode_id_ranges, Manifest, ShardEntry};
+
+use crate::data::Dataset;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Split `ds` with the given partitioner and write one shard file per
+/// subset plus the manifest into `dir`. Returns the manifest (with `dir`
+/// attached) and the manifest file path.
+pub fn write_dataset_shards(
+    dir: &Path,
+    name: &str,
+    ds: &Dataset,
+    parts: usize,
+    strategy: crate::decomp::PartitionStrategy,
+    seed: u64,
+    metric: crate::geometry::MetricKind,
+) -> Result<(Manifest, std::path::PathBuf)> {
+    if name.is_empty() || name.contains(['/', '\\', '"']) {
+        bail!("shard set name {name:?} must be a plain file stem");
+    }
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard directory {}", dir.display()))?;
+    let layout = crate::decomp::partition_indices(ds, parts, strategy, seed);
+    let mut shards = Vec::with_capacity(parts);
+    for (k, ids) in layout.iter().enumerate() {
+        let file_name = format!("{name}.shard{k}.bin");
+        let digest =
+            file::write_shard(&dir.join(&file_name), k as u32, ids, &ds.gather(ids))?;
+        shards.push(ShardEntry { part: k as u32, file: file_name, ids: ids.clone(), digest });
+    }
+    let m = Manifest {
+        name: name.to_string(),
+        n: ds.n,
+        d: ds.d,
+        metric,
+        strategy,
+        seed,
+        shards,
+        dir: dir.to_path_buf(),
+    };
+    m.validate()?;
+    let path = m.write(dir)?;
+    Ok((m, path))
+}
+
+/// Load (and digest-verify) the shards a worker was asked to hold. `ids`
+/// must name valid subsets of the manifest; each shard file must match the
+/// manifest's recorded digest, row count, ids, and dimensions.
+pub fn load_worker_shards(m: &Manifest, ids: &[u32]) -> Result<Vec<Shard>> {
+    let mut sorted: Vec<u32> = ids.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let mut out = Vec::with_capacity(sorted.len());
+    for &k in &sorted {
+        let entry = m
+            .shards
+            .get(k as usize)
+            .ok_or_else(|| anyhow::anyhow!("--shard-ids names subset {k} but the manifest has {} shards", m.parts()))?;
+        let path = m.shard_path(k as usize);
+        let shard = file::read_shard(&path)?;
+        if shard.part != k {
+            bail!("{}: file says part {}, manifest slot is {k}", path.display(), shard.part);
+        }
+        let raw = std::fs::read(&path)?;
+        let actual = file::shard_digest(&raw)?;
+        if actual != entry.digest {
+            bail!(
+                "{}: digest {actual:#018x} does not match the manifest's {:#018x} — stale or foreign shard file",
+                path.display(),
+                entry.digest
+            );
+        }
+        if shard.ids != entry.ids || shard.points.d != m.d {
+            bail!("{}: shard contents disagree with the manifest layout", path.display());
+        }
+        out.push(shard);
+    }
+    Ok(out)
+}
+
+/// Suggest a pair-covering shard assignment for `workers` hosts: subsets
+/// are split round-robin into `g` groups (the largest `g` with
+/// `g(g+1)/2 <= workers`), worker `w` holds the union of group pair `w`
+/// (enumerating unordered pairs `(a, b)`, `a <= b`); extra workers repeat
+/// pairs round-robin. Every subset pair lands co-resident on at least one
+/// worker, so any pair job is schedulable — the structure the MPC
+/// literature uses to co-locate all pairwise blocks without replication to
+/// every host.
+pub fn suggest_assignment(parts: usize, workers: usize) -> Vec<Vec<u32>> {
+    assert!(parts >= 1 && workers >= 1);
+    let mut g = 1usize;
+    while (g + 1) * (g + 2) / 2 <= workers {
+        g += 1;
+    }
+    let g = g.min(parts); // no point in more groups than subsets
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); g];
+    for k in 0..parts {
+        groups[k % g].push(k as u32);
+    }
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for a in 0..g {
+        for b in a..g {
+            pairs.push((a, b));
+        }
+    }
+    (0..workers)
+        .map(|w| {
+            let (a, b) = pairs[w % pairs.len()];
+            let mut ids = groups[a].clone();
+            if b != a {
+                ids.extend_from_slice(&groups[b]);
+            }
+            ids.sort_unstable();
+            ids
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::PartitionStrategy;
+    use crate::geometry::MetricKind;
+    use crate::util::prng::Pcg64;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("demst_shard_mod_tests").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_ds(seed: u64, n: usize, d: usize) -> Dataset {
+        let mut rng = Pcg64::seeded(seed);
+        Dataset::new(n, d, (0..n * d).map(|_| rng.next_f32() * 2.0 - 1.0).collect())
+    }
+
+    #[test]
+    fn partition_write_load_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let ds = sample_ds(11, 37, 4);
+        let (m, path) = write_dataset_shards(
+            &dir,
+            "t",
+            &ds,
+            4,
+            PartitionStrategy::RandomShuffle,
+            9,
+            MetricKind::Cosine,
+        )
+        .unwrap();
+        let loaded = Manifest::load(&path).unwrap();
+        assert_eq!(loaded.fingerprint(), m.fingerprint());
+        assert_eq!(loaded.layout(), crate::decomp::partition_indices(
+            &ds,
+            4,
+            PartitionStrategy::RandomShuffle,
+            9
+        ));
+        // every shard loads, verifies, and is bit-identical to the gather
+        let shards = load_worker_shards(&loaded, &[0, 1, 2, 3]).unwrap();
+        for s in &shards {
+            assert_eq!(s.points, ds.gather(&s.ids));
+        }
+        // a worker loading a subset of the shards gets exactly those
+        let some = load_worker_shards(&loaded, &[2, 0, 2]).unwrap();
+        assert_eq!(some.iter().map(|s| s.part).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn stale_shard_file_rejected() {
+        let dir = tmpdir("stale");
+        let ds = sample_ds(12, 20, 3);
+        let (_, path) =
+            write_dataset_shards(&dir, "t", &ds, 2, PartitionStrategy::Block, 0, MetricKind::SqEuclid)
+                .unwrap();
+        // overwrite shard 1 with a shard cut from different data
+        let other = sample_ds(99, 20, 3);
+        let ids: Vec<u32> = (10..20).collect();
+        file::write_shard(&dir.join("t.shard1.bin"), 1, &ids, &other.gather(&ids)).unwrap();
+        let m = Manifest::load(&path).unwrap();
+        let err = load_worker_shards(&m, &[1]).unwrap_err().to_string();
+        assert!(err.contains("does not match the manifest"), "{err}");
+    }
+
+    #[test]
+    fn unknown_shard_id_rejected() {
+        let dir = tmpdir("unknown");
+        let ds = sample_ds(13, 12, 2);
+        let (m, _) =
+            write_dataset_shards(&dir, "t", &ds, 3, PartitionStrategy::Block, 0, MetricKind::SqEuclid)
+                .unwrap();
+        assert!(load_worker_shards(&m, &[7]).is_err());
+    }
+
+    #[test]
+    fn suggested_assignment_covers_every_pair() {
+        for parts in [2usize, 4, 5, 9] {
+            for workers in [1usize, 2, 3, 6, 10] {
+                let assign = suggest_assignment(parts, workers);
+                assert_eq!(assign.len(), workers);
+                for i in 0..parts as u32 {
+                    for j in (i + 1)..parts as u32 {
+                        assert!(
+                            assign.iter().any(|a| a.contains(&i) && a.contains(&j)),
+                            "parts={parts} workers={workers}: pair ({i},{j}) not co-resident"
+                        );
+                    }
+                }
+            }
+        }
+        // single worker: must hold everything
+        assert_eq!(suggest_assignment(5, 1)[0], vec![0, 1, 2, 3, 4]);
+    }
+}

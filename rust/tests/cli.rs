@@ -18,9 +18,125 @@ fn help_lists_subcommands() {
     let out = demst().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["run", "worker", "dendrogram", "gen", "info", "selftest"] {
+    for cmd in ["run", "worker", "partition", "dendrogram", "gen", "info", "selftest"] {
         assert!(text.contains(cmd), "help mentions {cmd}");
     }
+}
+
+/// `demst partition` writes shard files + a loadable manifest, prints a
+/// pair-covering assignment, and a sharded CLI run over real worker
+/// processes returns the byte-identical MST CSV as `--transport sim`.
+#[test]
+fn partition_then_sharded_run_matches_sim() {
+    let dir = tmpdir().join("cli_shards");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data_args = [
+        "--data", "blobs", "--n", "96", "--d", "5", "--clusters", "3", "--parts", "4",
+        "--seed", "11", "--strategy", "block",
+    ];
+    let out = demst()
+        .arg("partition")
+        .args(data_args)
+        .args(["--name", "clitest", "--plan-workers", "2"])
+        .arg("--out-dir")
+        .arg(&dir)
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout.contains("4 shards"), "{stdout}");
+    assert!(stdout.contains("--shard-ids"), "prints the covering assignment: {stdout}");
+    let manifest = dir.join("clitest.manifest.toml");
+    assert!(manifest.is_file());
+    for k in 0..4 {
+        assert!(dir.join(format!("clitest.shard{k}.bin")).is_file());
+    }
+
+    // sim reference of the same dataset/partition
+    let sim_csv = tmpdir().join("cli_shard_sim.csv");
+    let out = demst()
+        .arg("run")
+        .args(data_args)
+        .args(["--workers", "2", "--pair-kernel", "bipartite"])
+        .arg("--out-mst")
+        .arg(&sim_csv)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    // sharded leader + 2 external shard-resident workers on loopback
+    let tcp_csv = tmpdir().join("cli_shard_tcp.csv");
+    let mut leader = demst()
+        .arg("run")
+        .args(["--workers", "2", "--pair-kernel", "bipartite"])
+        .args(["--transport", "tcp", "--listen", "127.0.0.1:0"])
+        .arg("--shard")
+        .arg(&manifest)
+        .arg("--out-mst")
+        .arg(&tcp_csv)
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    // scrape the bound address from the leader's first line
+    let addr = {
+        use std::io::{BufRead, BufReader};
+        let stdout = leader.stdout.take().unwrap();
+        let mut reader = BufReader::new(stdout);
+        let mut addr = None;
+        let mut line = String::new();
+        while reader.read_line(&mut line).unwrap() > 0 {
+            if let Some(at) = line.find("listening on ") {
+                let rest = &line[at + "listening on ".len()..];
+                addr = Some(rest.split_whitespace().next().unwrap().to_string());
+                break;
+            }
+            line.clear();
+        }
+        // keep draining in the background so the leader never blocks on a
+        // full stdout pipe
+        std::thread::spawn(move || {
+            let mut sink = String::new();
+            loop {
+                sink.clear();
+                if reader.read_line(&mut sink).unwrap_or(0) == 0 {
+                    break;
+                }
+            }
+        });
+        addr.expect("leader printed its bound address")
+    };
+    let workers: Vec<_> = [["0", "1", "2", "3"].join(","), ["2", "3"].join(",")]
+        .into_iter()
+        .map(|ids| {
+            demst()
+                .args(["worker", "--connect", &addr])
+                .arg("--shard")
+                .arg(&manifest)
+                .arg("--shard-ids")
+                .arg(&ids)
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let status = leader.wait().unwrap();
+    assert!(status.success(), "sharded leader failed");
+    for mut w in workers {
+        assert!(w.wait().unwrap().success(), "worker failed");
+    }
+    let sim = std::fs::read(&sim_csv).unwrap();
+    let tcp = std::fs::read(&tcp_csv).unwrap();
+    assert_eq!(sim, tcp, "sharded tcp MST CSV must be byte-identical to sim");
+}
+
+#[test]
+fn worker_rejects_shard_ids_without_manifest() {
+    let out = demst()
+        .args(["worker", "--connect", "127.0.0.1:1", "--shard-ids", "0,1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--shard-ids requires --shard"), "{err}");
 }
 
 #[test]

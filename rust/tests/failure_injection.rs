@@ -156,6 +156,71 @@ fn xla_kernel_without_feature_falls_back_with_report() {
     assert!(out.metrics.summary().contains("fallback"), "{}", out.metrics.summary());
 }
 
+/// Elastic fleet under real process death: two spawned `demst worker`
+/// processes on loopback, one rigged (chaos env hook) to exit abruptly —
+/// no reply, no shutdown handshake, exactly like a SIGKILL — upon
+/// receiving its third pair job. The run must complete on the survivor
+/// with a bit-identical MST vs the sim transport, `worker_failures == 1`,
+/// and `jobs_reassigned > 0`; the exactly-once claim/return lane
+/// guarantees no job is recorded twice.
+#[test]
+fn killed_worker_mid_run_completes_with_bit_identical_tree() {
+    use demst::config::{KernelChoice, PairKernelChoice, TransportChoice};
+    use demst::coordinator::run_distributed;
+    use demst::data::generators::uniform;
+    use demst::mst::normalize_tree;
+    use demst::net::launch;
+    use demst::net::worker::CHAOS_EXIT_ENV;
+    use demst::util::prng::Pcg64;
+    use std::net::TcpListener;
+
+    let ds = uniform(120, 6, 1.0, Pcg64::seeded(9100));
+    for reduce_tree in [false, true] {
+        let mut cfg = RunConfig {
+            parts: 6, // 15 pair jobs: plenty left when the chaos worker dies
+            workers: 2,
+            kernel: KernelChoice::PrimDense,
+            pair_kernel: PairKernelChoice::BipartiteMerge,
+            reduce_tree,
+            ..Default::default()
+        };
+        let sim = run_distributed(&ds, &cfg).unwrap();
+
+        cfg.transport = TransportChoice::Tcp;
+        cfg.listen = Some("127.0.0.1:0".into());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut healthy = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+            .args(["worker", "--connect", &addr])
+            .spawn()
+            .unwrap();
+        let mut chaotic = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+            .args(["worker", "--connect", &addr])
+            .env(CHAOS_EXIT_ENV, "2")
+            .spawn()
+            .unwrap();
+
+        let run = launch::serve(&ds, &cfg, &listener)
+            .unwrap_or_else(|e| panic!("reduce={reduce_tree}: run failed: {e:#}"));
+        assert_eq!(
+            normalize_tree(&sim.mst),
+            normalize_tree(&run.mst),
+            "reduce={reduce_tree}: tree must be bit-identical despite the mid-run death"
+        );
+        assert_eq!(run.metrics.worker_failures, 1, "reduce={reduce_tree}");
+        assert!(
+            run.metrics.jobs_reassigned > 0,
+            "reduce={reduce_tree}: the dead worker's claimed jobs must be reassigned"
+        );
+        assert_eq!(run.metrics.jobs, 15, "reduce={reduce_tree}: every job recorded exactly once");
+
+        let healthy_status = healthy.wait().unwrap();
+        assert!(healthy_status.success(), "survivor must exit 0: {healthy_status}");
+        let chaotic_status = chaotic.wait().unwrap();
+        assert_eq!(chaotic_status.code(), Some(113), "chaos exit code");
+    }
+}
+
 #[test]
 fn truncated_npy_rejected() {
     let dir = tmpdir("npy");

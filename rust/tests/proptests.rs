@@ -444,6 +444,7 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
             None,
         );
         check(&Message::Ack { job_id: g.rng().next_u64() as u32 }, None);
+        check(&Message::LocalAssign { part: g.usize_in(0..parts) as u32 }, None);
         check(
             &Message::WorkerDone {
                 worker: g.usize_in(0..65536),
@@ -547,6 +548,69 @@ fn prop_npy_roundtrip() {
         let back = demst::data::npy::read_npy(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(ds, back);
+    });
+}
+
+#[test]
+fn prop_shard_manifest_and_files_roundtrip_bit_identically() {
+    // The sharded-residency contract: for arbitrary partitions, metrics,
+    // and dimensions within wire limits, `demst partition`'s output —
+    // manifest (layout as compact ranges, per-shard digests, fingerprint)
+    // plus binary shard files — reloads bit-identically: same layout, same
+    // digests, and every shard's id map and vector rows equal to the
+    // gather from the original matrix. Flipping any payload byte is caught
+    // by the checksum.
+    use demst::decomp::PartitionStrategy;
+    use demst::geometry::MetricKind;
+    use demst::shard;
+
+    Runner::new("shard roundtrip", 0xB1, 15).run(|g| {
+        let n = g.usize_in(4..80);
+        let d = g.usize_in(1..12);
+        let parts = g.usize_in(2..6).min(n);
+        let metric = [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ][g.usize_in(0..4)];
+        let strategy = PartitionStrategy::ALL[g.usize_in(0..PartitionStrategy::ALL.len())];
+        let seed = g.rng().next_u64();
+        let ds = Dataset::new(n, d, g.vec_f32(-1e3, 1e3, n * d));
+        let dir = std::env::temp_dir()
+            .join("demst_prop_shard")
+            .join(format!("case{}", g.rng().next_u64()));
+        let (manifest, path) =
+            shard::write_dataset_shards(&dir, "p", &ds, parts, strategy, seed, metric).unwrap();
+
+        let loaded = shard::Manifest::load(&path).unwrap();
+        assert_eq!(loaded.fingerprint(), manifest.fingerprint());
+        assert_eq!(
+            loaded.layout(),
+            demst::decomp::partition_indices(&ds, parts, strategy, seed),
+            "manifest layout == the partitioner's output"
+        );
+        assert_eq!(loaded.metric, metric);
+        assert_eq!((loaded.n, loaded.d), (n, d));
+
+        let shards = shard::load_worker_shards(&loaded, &(0..parts as u32).collect::<Vec<_>>())
+            .unwrap();
+        for s in &shards {
+            assert_eq!(s.ids, loaded.shards[s.part as usize].ids);
+            assert_eq!(s.points, ds.gather(&s.ids), "shard rows bit-identical to gather");
+        }
+
+        // corrupt one byte of one shard file: the digest check must fire
+        let victim = loaded.shard_path(g.usize_in(0..parts));
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let at = g.usize_in(0..bytes.len());
+        bytes[at] ^= 0x20;
+        std::fs::write(&victim, &bytes).unwrap();
+        assert!(
+            shard::load_worker_shards(&loaded, &(0..parts as u32).collect::<Vec<_>>()).is_err(),
+            "flipped byte at {at} went undetected"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     });
 }
 

@@ -15,9 +15,11 @@ use demst::data::Dataset;
 use demst::exec::PooledRun;
 use demst::geometry::MetricKind;
 use demst::mst::normalize_tree;
+use demst::net::worker::WorkerOptions;
 use demst::net::{launch, worker};
 use demst::util::prng::Pcg64;
 use std::net::TcpListener;
+use std::path::PathBuf;
 use std::time::Duration;
 
 fn float_dataset(seed: u64, n: usize, d: usize) -> Dataset {
@@ -197,7 +199,9 @@ fn tcp_with_spawned_worker_processes() {
 }
 
 /// A worker pointed at a dead address fails with an actionable error once
-/// its retry window lapses (instead of hanging).
+/// its retry window lapses (instead of hanging) — and the error names the
+/// unreachable address. The backoff is configurable and bounded: even a
+/// large initial backoff cannot stretch the wait past the window.
 #[test]
 fn worker_connect_retry_times_out() {
     // bind-then-drop: the port is (very likely) closed again
@@ -205,6 +209,202 @@ fn worker_connect_retry_times_out() {
         let l = TcpListener::bind("127.0.0.1:0").unwrap();
         l.local_addr().unwrap().port()
     };
-    let err = worker::run(&format!("127.0.0.1:{port}"), Duration::from_millis(300)).unwrap_err();
+    let addr = format!("127.0.0.1:{port}");
+    let err = worker::run(&addr, Duration::from_millis(300)).unwrap_err();
     assert!(err.to_string().contains("could not connect"), "{err:#}");
+    assert!(err.to_string().contains(&addr), "error names the address: {err:#}");
+
+    // custom timeout + backoff through WorkerOptions: the sleep is clamped
+    // to the remaining window, so this returns in ~200 ms, not 5 s
+    let t0 = std::time::Instant::now();
+    let opts = WorkerOptions {
+        connect_timeout: Duration::from_millis(200),
+        connect_backoff: Duration::from_secs(5),
+        shards: None,
+    };
+    let err = worker::run_with(&addr, &opts).unwrap_err();
+    assert!(err.to_string().contains(&addr), "{err:#}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(3),
+        "bounded backoff must not overshoot the window: {:?}",
+        t0.elapsed()
+    );
+}
+
+/// Write a shard set for `ds` into a fresh temp dir; returns the manifest
+/// path and the manifest.
+fn write_shards(tag: &str, ds: &Dataset, parts: usize) -> (demst::shard::Manifest, PathBuf) {
+    let dir = std::env::temp_dir().join("demst_transport_shards").join(tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    demst::shard::write_dataset_shards(
+        &dir,
+        tag,
+        ds,
+        parts,
+        demst::decomp::PartitionStrategy::Block,
+        0,
+        MetricKind::SqEuclid,
+    )
+    .unwrap()
+}
+
+/// Run a sharded leader over loopback with in-thread workers, each loading
+/// the given shard subsets from disk.
+fn sharded_run(
+    cfg: &RunConfig,
+    manifest: &demst::shard::Manifest,
+    manifest_path: &PathBuf,
+    assignments: &[Vec<u32>],
+) -> PooledRun {
+    let mut cfg = cfg.clone();
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    cfg.shard_manifest = Some(manifest_path.clone());
+    cfg.workers = assignments.len();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handles: Vec<_> = assignments
+        .iter()
+        .map(|ids| {
+            let opts = WorkerOptions {
+                shards: Some((manifest_path.clone(), ids.clone())),
+                ..Default::default()
+            };
+            std::thread::spawn(move || worker::run_with(&addr.to_string(), &opts))
+        })
+        .collect();
+    let run = launch::serve_sharded(manifest, &cfg, &listener).unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    run
+}
+
+/// The acceptance-criterion core: on a sharded tcp run the leader never
+/// materializes subset vectors (`leader_ingest_bytes == 0`), the worker
+/// fleet holds the full payload locally, and the resulting MST is
+/// bit-identical to the sim transport — across both pair kernels.
+#[test]
+fn tcp_sharded_leader_never_ships_vectors_and_stays_exact() {
+    let ds = float_dataset(905, 64, 5);
+    let (manifest, manifest_path) = write_shards("exact", &ds, 4);
+    for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+        let mut cfg = base_cfg(4, 2);
+        cfg.strategy = demst::decomp::PartitionStrategy::Block;
+        cfg.pair_kernel = pair_kernel;
+        let sim = run_distributed(&ds, &cfg).unwrap();
+        // worker 0 holds everything; worker 1 holds {2, 3} — all 6 pairs
+        // are co-resident somewhere, so the run is schedulable
+        let shard_run = sharded_run(
+            &cfg,
+            &manifest,
+            &manifest_path,
+            &[vec![0, 1, 2, 3], vec![2, 3]],
+        );
+        assert_eq!(
+            normalize_tree(&sim.mst),
+            normalize_tree(&shard_run.mst),
+            "{pair_kernel:?}: sharded tree must be bit-identical to sim"
+        );
+        assert_eq!(
+            shard_run.metrics.leader_ingest_bytes, 0,
+            "{pair_kernel:?}: subset vectors must never pass through the leader"
+        );
+        assert!(shard_run.metrics.sharded);
+        // the fleet loaded the full payload (plus the replicated shards)
+        let full: u64 = (0..4)
+            .map(|k| {
+                let m = manifest.shards[k].ids.len();
+                (m * 4 + m * ds.d * 4) as u64
+            })
+            .sum();
+        let replicated: u64 = [2usize, 3]
+            .iter()
+            .map(|&k| {
+                let m = manifest.shards[k].ids.len();
+                (m * 4 + m * ds.d * 4) as u64
+            })
+            .sum();
+        assert_eq!(shard_run.metrics.shard_local_bytes, full + replicated);
+        // scatter may carry cached trees (bipartite) and frame headers but
+        // no vector payload — far below the leader-resident byte model
+        assert!(
+            shard_run.metrics.scatter_bytes < sim.metrics.scatter_bytes,
+            "{pair_kernel:?}: sharded scatter {} should undercut leader-resident {}",
+            shard_run.metrics.scatter_bytes,
+            sim.metrics.scatter_bytes
+        );
+        assert_eq!(shard_run.metrics.worker_failures, 0);
+    }
+}
+
+/// An uncovered shard assignment (some subset pair co-resident nowhere)
+/// must fail with an actionable error, not hang or mis-schedule.
+#[test]
+fn tcp_sharded_uncovered_assignment_fails_loudly() {
+    let ds = float_dataset(906, 48, 4);
+    let (manifest, manifest_path) = write_shards("uncovered", &ds, 4);
+    let mut cfg = base_cfg(4, 2);
+    cfg.strategy = demst::decomp::PartitionStrategy::Block;
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    cfg.shard_manifest = Some(manifest_path.clone());
+    cfg.workers = 2;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // pair (0, 3) is co-resident nowhere
+    let handles: Vec<_> = [vec![0u32, 1, 2], vec![1, 2, 3]]
+        .into_iter()
+        .map(|ids| {
+            let opts = WorkerOptions {
+                shards: Some((manifest_path.clone(), ids)),
+                ..Default::default()
+            };
+            std::thread::spawn(move || worker::run_with(&addr.to_string(), &opts))
+        })
+        .collect();
+    let err = launch::serve_sharded(&manifest, &cfg, &listener).unwrap_err();
+    assert!(err.to_string().contains("no worker holding both"), "{err:#}");
+    for h in handles {
+        // workers are released by the error path's shutdown broadcast
+        let _ = h.join().unwrap();
+    }
+}
+
+/// Pipelined dispatch parity: window 1 (strict rendezvous) and window 2
+/// (the default overlap) must move exactly the same bytes and produce the
+/// bit-identical tree — the window changes *when* frames travel, never
+/// which.
+#[test]
+fn tcp_pipeline_window_does_not_change_bytes_or_tree() {
+    let ds = float_dataset(907, 56, 5);
+    let mut cfg = base_cfg(4, 1);
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    let sim = run_distributed(&ds, &cfg).unwrap();
+    let mut runs = Vec::new();
+    for window in [1usize, 2, 4] {
+        cfg.pipeline_window = window;
+        let run = tcp_run(&ds, &cfg);
+        assert_eq!(
+            normalize_tree(&sim.mst),
+            normalize_tree(&run.mst),
+            "window={window}: tree must stay bit-identical"
+        );
+        assert_eq!(run.metrics.pipeline_window, window as u32);
+        runs.push(run);
+    }
+    for run in &runs[1..] {
+        assert_eq!(
+            runs[0].metrics.scatter_bytes, run.metrics.scatter_bytes,
+            "window must not change scatter bytes"
+        );
+        assert_eq!(
+            runs[0].metrics.gather_bytes, run.metrics.gather_bytes,
+            "window must not change gather bytes"
+        );
+        assert_eq!(runs[0].metrics.messages, run.metrics.messages);
+    }
+    // and the single-worker window-1 run still matches the sim charges
+    assert_eq!(sim.metrics.scatter_bytes, runs[0].metrics.scatter_bytes);
+    assert_eq!(sim.metrics.gather_bytes, runs[0].metrics.gather_bytes);
 }

@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# Chaos smoke: elastic-worker failover on a real multi-process run.
+#
+# One `demst run --transport tcp` leader plus two externally started
+# `demst worker` processes on 127.0.0.1. Worker 1 is rigged through the
+# DEMST_CHAOS_EXIT_AFTER_JOBS hook to die abruptly — no reply, no shutdown
+# handshake, sockets torn down by the OS, exactly like a SIGKILL — upon
+# receiving its pair job after the halfway mark. Asserts:
+#   (a) the leader exits 0 (run completed on the surviving worker),
+#   (b) the MST CSV is byte-identical to a `--transport sim` run of the
+#       same seed (checksum printed),
+#   (c) the leader reports the failover (reassigned jobs > 0).
+#
+# Run by `make chaos-smoke` / `make bench` and the CI chaos-smoke job.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${DEMST_BIN:-target/release/demst}
+OUT=${TMPDIR:-/tmp}
+# parts=6 -> 15 pair jobs across 2 workers (~7-8 each); the chaos worker
+# dies on receiving its 4th job, i.e. around 50% of its deck.
+ARGS=(--data blobs --n 180 --d 8 --clusters 4 --parts 6 --workers 2 --seed 13
+      --pair-kernel bipartite)
+
+if [ ! -x "$BIN" ]; then
+    echo "chaos-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 2
+fi
+
+LOG="$OUT/demst_chaos_leader.log"
+: > "$LOG"
+"$BIN" run "${ARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+    --out-mst "$OUT/demst_chaos_tcp.csv" > "$LOG" 2>&1 &
+LEADER=$!
+
+ADDR=""
+for _ in $(seq 1 150); do
+    ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "chaos-smoke: leader never reported its bound address" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+
+DEMST_CHAOS_EXIT_AFTER_JOBS=3 "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+W1=$!
+"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+W2=$!
+
+wait "$LEADER" || { echo "chaos-smoke: leader failed" >&2; cat "$LOG" >&2; exit 1; }
+# the chaos worker must have died nonzero; the survivor must exit 0
+if wait "$W1"; then
+    echo "chaos-smoke: chaos worker exited 0 — the failure was never injected" >&2
+    exit 1
+fi
+wait "$W2" || { echo "chaos-smoke: surviving worker failed" >&2; exit 1; }
+cat "$LOG"
+
+grep -q "reassigned" "$LOG" \
+    || { echo "chaos-smoke: leader log reports no reassignment" >&2; exit 1; }
+
+"$BIN" run "${ARGS[@]}" --out-mst "$OUT/demst_chaos_sim.csv" > /dev/null
+
+cmp "$OUT/demst_chaos_tcp.csv" "$OUT/demst_chaos_sim.csv" \
+    || { echo "chaos-smoke: post-failover MST differs from sim" >&2; exit 1; }
+sha256sum "$OUT/demst_chaos_tcp.csv" | awk '{print "chaos-smoke: OK, mst checksum " $1}'

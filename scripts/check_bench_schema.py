@@ -20,6 +20,12 @@ REQUIRED_SECTIONS = {
     "e7_kernel": {"cheapest_edge", "prim_dense"},
     "e8_end_to_end": {"pair_kernel", "stream_fold", "transport"},
 }
+# Rows that must exist *within* a section. The transport section must keep
+# both pipelined-dispatch ablation rows (window=1 rendezvous vs window=2
+# overlap) next to the simulated baseline.
+REQUIRED_PROVIDERS = {
+    "e8_end_to_end": {"transport": {"sim", "tcp-win1", "tcp-win2"}},
+}
 REQUIRED_TOP_KEYS = {"bench", "rows"}
 
 
@@ -48,6 +54,14 @@ def check(path):
     if missing:
         errors.append(f"{path}: bench sections disappeared: {sorted(missing)} "
                       f"(present: {sorted(s for s in got if s)})")
+    for section, providers in REQUIRED_PROVIDERS.get(bench, {}).items():
+        present = {row.get("provider") for row in rows
+                   if row.get("section") == section}
+        lost = providers - present
+        if lost:
+            errors.append(f"{path}: section {section!r} lost rows: "
+                          f"{sorted(lost)} (present: "
+                          f"{sorted(p for p in present if p)})")
     return errors
 
 

@@ -38,9 +38,9 @@ if [ -z "$ADDR" ]; then
     exit 1
 fi
 
-"$BIN" worker --connect "$ADDR" --retry-ms 15000 &
+"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
 W1=$!
-"$BIN" worker --connect "$ADDR" --retry-ms 15000 &
+"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
 W2=$!
 
 wait "$LEADER" || { echo "tcp-smoke: leader failed" >&2; cat "$LOG" >&2; exit 1; }
