@@ -16,6 +16,8 @@ use demst::bench_util::Bench;
 use demst::data::Dataset;
 use demst::dense::step::{CheapestEdgeStep, NaiveStep, RustStep};
 use demst::dense::{DenseMst, PrimDense, PrimScalar};
+use demst::geometry::simd::{self, PanelSettings};
+use demst::geometry::{distance_block_with, Isa, MetricKind};
 use demst::report::Table;
 use demst::util::prng::Pcg64;
 
@@ -161,6 +163,87 @@ fn main() {
         });
     }
     t2.print();
+
+    // ------------------------------------- panel kernels: scalar vs SIMD vs MT
+    // The register-tiled SIMD micro-kernels behind `DistanceBlock::panel_block`.
+    // All three providers produce bit-identical outputs (shared canonical
+    // accumulation order); the rows quantify what the dispatch buys.
+    let panel_dims: &[usize] = if fast { &[64, 256] } else { &[16, 64, 256, 1024] };
+    let (pm, pn) = (192usize, 192usize);
+    let detected = PanelSettings::detect();
+    let mt_threads = detected.threads.max(2);
+    let mut t3 = Table::new(
+        "E7c bipartite panel kernels (sqeuclid, 192x192 block): scalar vs SIMD dispatch",
+        &["N", "D", "provider", "ms", "GFLOP/s", "vs panel-scalar"],
+    );
+    let mut simd_speedup_d256: Option<f64> = None;
+    for &d in panel_dims {
+        let mut rng = Pcg64::seeded(0xC7 ^ d as u64);
+        let a: Vec<f32> = (0..pm * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let b: Vec<f32> = (0..pn * d).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let (pa, stride) = simd::pad_rows(&a, pm, d);
+        let (pb, _) = simd::pad_rows(&b, pn, d);
+        let kind = MetricKind::SqEuclid;
+        let flops = simd::panel_flops(kind, pm, pn, d) as f64;
+        let mut out = vec![0.0f32; pm * pn];
+
+        let providers: [(&str, PanelSettings); 3] = [
+            ("panel-scalar", PanelSettings::scalar()),
+            ("panel-simd", PanelSettings { threads: 1, ..detected }),
+            ("panel-simd-mt", PanelSettings { threads: mt_threads, ..detected }),
+        ];
+        let mut scalar_ms = 0.0f64;
+        for (provider, settings) in providers {
+            let block = distance_block_with(kind, settings);
+            let aux_a = block.prepare(&a, pm, d);
+            let aux_b = block.prepare(&b, pn, d);
+            let m = bench.run(format!("{provider} {pm}x{d}"), || {
+                block.panel_block(&pa, &aux_a, pm, &pb, &aux_b, pn, d, stride, &mut out);
+                out[0]
+            });
+            let ms = m.median_secs() * 1e3;
+            let speedup = if provider == "panel-scalar" {
+                scalar_ms = ms;
+                None
+            } else {
+                Some(scalar_ms / ms)
+            };
+            if provider == "panel-simd" && d == 256 {
+                simd_speedup_d256 = Some(scalar_ms / ms);
+            }
+            t3.push_row(&row(pm, d, provider, ms, flops, speedup));
+            json_rows.push(JsonRow {
+                section: "panel_simd",
+                n: pm,
+                d,
+                provider: provider.into(),
+                ms,
+                gflops: flops / (ms / 1e3) / 1e9,
+                speedup,
+            });
+        }
+    }
+    t3.print();
+
+    // Smoke-level perf gate: the SIMD dispatch must beat the canonical scalar
+    // kernel by >= 1.5x at d = 256 whenever a vector ISA was detected. Opt-in
+    // via env so `target-cpu=native` runs (where the autovectorized scalar
+    // build can close the gap) and odd machines don't flake CI.
+    let assert_simd = std::env::var("DEMST_BENCH_ASSERT_SIMD").as_deref() == Ok("1");
+    match (assert_simd, detected.isa, simd_speedup_d256) {
+        (true, Isa::Scalar, _) => {
+            println!("E7c: no vector ISA detected — SIMD speedup assert skipped");
+        }
+        (true, _, Some(s)) => {
+            assert!(
+                s >= 1.5,
+                "panel-simd speedup {s:.2}x at d=256 below the 1.5x floor (isa={})",
+                detected.isa.label()
+            );
+            println!("E7c: panel-simd speedup {s:.2}x at d=256 (floor 1.5x) — OK");
+        }
+        _ => {}
+    }
 
     let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e7.json".into());
     match std::fs::write(&out_path, to_json(&json_rows, fast)) {

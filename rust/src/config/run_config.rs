@@ -195,6 +195,16 @@ pub struct RunConfig {
     /// remote compute; replies stay FIFO per link, so the window cannot
     /// change which bytes travel — only when.
     pub pipeline_window: usize,
+    /// SIMD dispatch for the bipartite panel kernels (default on). `false`
+    /// forces the canonical scalar path — bit-identical output, used by the
+    /// exactness tests and the CI scalar leg (`DEMST_SIMD=off` is the env
+    /// equivalent and wins over this flag).
+    pub panel_simd: bool,
+    /// intra-job threads for one bipartite panel: 0 = all available cores
+    /// at the worker (the default), else 1..=256. Bands are deterministic,
+    /// so any count is bit-identical — this is purely a speed/oversubscribe
+    /// knob.
+    pub panel_threads: usize,
     pub net: NetConfig,
     /// artifacts dir for the XLA kernel
     pub artifacts_dir: PathBuf,
@@ -222,6 +232,8 @@ impl Default for RunConfig {
             spawn_workers: false,
             shard_manifest: None,
             pipeline_window: 2,
+            panel_simd: true,
+            panel_threads: 0,
             net: NetConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             verify: false,
@@ -244,6 +256,13 @@ impl RunConfig {
         apply_doc(&mut cfg, &doc)?;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The SIMD panel-kernel settings this config resolves to: runtime ISA
+    /// detection unless `panel_simd = false` (or `DEMST_SIMD=off` in the
+    /// environment), thread count from `panel_threads` (0 = all cores).
+    pub fn panel_settings(&self) -> crate::geometry::PanelSettings {
+        crate::geometry::PanelSettings::from_config(self.panel_simd, self.panel_threads)
     }
 
     /// Check invariants; call after all overrides are applied.
@@ -280,7 +299,7 @@ impl RunConfig {
                 bail!("transport tcp requires an explicit worker count (--workers N): a remote fleet cannot be auto-sized from local cores");
             }
             if self.workers > u8::MAX as usize {
-                bail!("transport tcp supports at most {} workers (wire v2 limit)", u8::MAX);
+                bail!("transport tcp supports at most {} workers (wire v3 limit)", u8::MAX);
             }
             // Shape-dependent checks run against the shape that will
             // actually execute: the CLI/config one here, or the manifest's
@@ -293,6 +312,12 @@ impl RunConfig {
         }
         if self.pipeline_window == 0 || self.pipeline_window > 64 {
             bail!("pipeline window must be in 1..=64 (got {})", self.pipeline_window);
+        }
+        if self.panel_threads > 256 {
+            bail!(
+                "panel_threads must be in 1..=256, or 0 for all available cores (got {})",
+                self.panel_threads
+            );
         }
         if self.shard_manifest.is_some() {
             // Sharded runs only make sense across process boundaries, and
@@ -330,13 +355,13 @@ impl RunConfig {
                 self.workers - jobs
             );
         }
-        // v2 wire limits (see net::wire): u16 subset indices / dimension,
+        // v3 wire limits (see net::wire): u16 subset indices / dimension,
         // u8 worker ids in per-job Result routing.
         if self.parts > u16::MAX as usize {
-            bail!("transport tcp supports at most {} parts (wire v2 limit)", u16::MAX);
+            bail!("transport tcp supports at most {} parts (wire v3 limit)", u16::MAX);
         }
         if self.data.d > u16::MAX as usize {
-            bail!("transport tcp supports at most d = {} (wire v2 limit)", u16::MAX);
+            bail!("transport tcp supports at most d = {} (wire v3 limit)", u16::MAX);
         }
         Ok(())
     }
@@ -388,6 +413,10 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         }
         ("", "shard_manifest") => cfg.shard_manifest = Some(PathBuf::from(need_str()?)),
         ("", "pipeline_window") => cfg.pipeline_window = get_usize(v)?,
+        ("", "panel_simd") => {
+            cfg.panel_simd = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "panel_threads") => cfg.panel_threads = get_usize(v)?,
         ("", "verify") => cfg.verify = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
         ("", "strategy") => {
             cfg.strategy = PartitionStrategy::parse(need_str()?)
@@ -574,7 +603,7 @@ bandwidth = 1e9
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 300\nparts = 300",
         )
         .unwrap_err();
-        assert!(e.to_string().contains("wire v2"), "{e:#}");
+        assert!(e.to_string().contains("wire v3"), "{e:#}");
         // more workers than pair jobs would strand real processes
         let e = RunConfig::from_toml(
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 2",
@@ -587,6 +616,25 @@ bandwidth = 1e9
         assert_eq!(sim.workers, 0, "workers = 0 still means auto under sim");
         let e = RunConfig::from_toml("spawn_workers = true").unwrap_err();
         assert!(e.to_string().contains("spawn-workers"), "{e:#}");
+    }
+
+    #[test]
+    fn panel_keys_parse_and_validate_early() {
+        let def = RunConfig::default();
+        assert!(def.panel_simd, "SIMD panels are on by default");
+        assert_eq!(def.panel_threads, 0, "0 means all available cores");
+        let cfg = RunConfig::from_toml("panel_simd = false\npanel_threads = 4").unwrap();
+        assert!(!cfg.panel_simd);
+        assert_eq!(cfg.panel_threads, 4);
+        // boundary values: 256 is the cap, 0 means auto
+        RunConfig::from_toml("panel_threads = 256").unwrap();
+        RunConfig::from_toml("panel_threads = 0").unwrap();
+        let e = RunConfig::from_toml("panel_threads = 257").unwrap_err();
+        assert!(e.to_string().contains("1..=256"), "{e:#}");
+        // the resolved settings honour the off switch regardless of env
+        let off = RunConfig::from_toml("panel_simd = false").unwrap();
+        assert_eq!(off.panel_settings().isa, crate::geometry::Isa::Scalar);
+        assert!(off.panel_settings().threads >= 1);
     }
 
     #[test]

@@ -72,6 +72,14 @@ pub enum Message {
         panel_hits: u64,
         /// subset-panel cache misses (bipartite-merge kernel only)
         panel_misses: u64,
+        /// distance-kernel floating-point ops spent in `panel_block` calls
+        panel_flops: u64,
+        /// wall time spent inside `panel_block` calls
+        panel_time: Duration,
+        /// max threads a single panel call fanned out to (0 = no panels ran)
+        panel_threads: u32,
+        /// [`crate::geometry::Isa`] wire code of the panel path (0 = none)
+        panel_isa: u8,
     },
     /// Leader → worker: drain and report.
     Shutdown,
@@ -128,6 +136,10 @@ mod tests {
             jobs_stolen: 0,
             panel_hits: 0,
             panel_misses: 0,
+            panel_flops: 0,
+            panel_time: Duration::ZERO,
+            panel_threads: 0,
+            panel_isa: 0,
         };
         let b = Message::WorkerDone {
             worker: 0,
@@ -138,9 +150,13 @@ mod tests {
             jobs_stolen: 2,
             panel_hits: 7,
             panel_misses: 3,
+            panel_flops: 1 << 20,
+            panel_time: Duration::from_micros(500),
+            panel_threads: 4,
+            panel_isa: 2,
         };
-        assert_eq!(a.wire_bytes(), 56, "header 16 + 40-byte stats block");
-        assert_eq!(b.wire_bytes(), 56 + 60);
+        assert_eq!(a.wire_bytes(), 80, "header 16 + 64-byte stats block");
+        assert_eq!(b.wire_bytes(), 80 + 60);
     }
 
     #[test]

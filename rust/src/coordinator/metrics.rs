@@ -86,6 +86,22 @@ pub struct RunMetrics {
     /// pair jobs returned to the deck by a failed worker and re-run on the
     /// surviving fleet (each still recorded exactly once at the leader)
     pub jobs_reassigned: u32,
+    /// SIMD ISA label of the panel kernels ("scalar" | "avx2" | "neon");
+    /// remote workers report theirs over the wire and override this. Empty
+    /// when the bipartite panel path did not run.
+    pub panel_isa: String,
+    /// SIMD lane width of the panel kernels (1 for scalar)
+    pub panel_lanes: u32,
+    /// why the panel path fell back to scalar, when it did (config off,
+    /// env off, ISA not detected) — mirrors `kernel_fallback`
+    pub panel_fallback: Option<String>,
+    /// distance-kernel floating-point ops inside `panel_block`, summed
+    /// over workers
+    pub panel_flops: u64,
+    /// wall time inside `panel_block`, summed over workers
+    pub panel_time: Duration,
+    /// max threads a single panel call fanned out to across the fleet
+    pub panel_threads_used: u32,
 }
 
 impl RunMetrics {
@@ -249,6 +265,38 @@ impl RunMetrics {
         parts.join(" ")
     }
 
+    /// Aggregate panel-kernel throughput in GFLOP/s (0.0 when no panel
+    /// time was measured). Summed flops over summed wall time — a fleet
+    /// average, not a single-core peak.
+    pub fn panel_gflops(&self) -> f64 {
+        let secs = self.panel_time.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.panel_flops as f64 / secs / 1e9
+        }
+    }
+
+    /// Kernel line: which SIMD path the bipartite panel kernels ran, their
+    /// lane width, thread fan-out, and measured throughput. Empty when the
+    /// panel path never ran (dense pair kernel, or no bipartite blocks).
+    pub fn kernel_summary(&self) -> String {
+        if self.panel_isa.is_empty() {
+            return String::new();
+        }
+        let mut s = format!("isa={} lanes={}", self.panel_isa, self.panel_lanes);
+        if self.panel_threads_used > 0 {
+            s.push_str(&format!(" threads={}", self.panel_threads_used));
+        }
+        if self.panel_time > Duration::ZERO {
+            s.push_str(&format!(" panel_gflops={:.2}", self.panel_gflops()));
+        }
+        if let Some(note) = &self.panel_fallback {
+            s.push_str(&format!(" (fallback: {note})"));
+        }
+        s
+    }
+
     /// Per-phase breakdown (local-MST / pair / reduce timing and eval
     /// split) — the measurement surface for the bipartite-merge kernel.
     pub fn phase_summary(&self) -> String {
@@ -366,6 +414,35 @@ mod tests {
         assert!(s.contains("panel_cache=9/12 hits (75%)"), "{s}");
         assert!(s.contains("stolen=2"), "{s}");
         assert!(s.contains("folds=6 fold_edges=420"), "{s}");
+    }
+
+    #[test]
+    fn kernel_summary_reports_isa_threads_and_gflops() {
+        assert_eq!(RunMetrics::default().kernel_summary(), "", "no panels, no line");
+        let m = RunMetrics {
+            panel_isa: "avx2".into(),
+            panel_lanes: 8,
+            panel_threads_used: 4,
+            panel_flops: 2_000_000_000,
+            panel_time: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((m.panel_gflops() - 2.0).abs() < 1e-9);
+        let s = m.kernel_summary();
+        assert!(s.contains("isa=avx2 lanes=8"), "{s}");
+        assert!(s.contains("threads=4"), "{s}");
+        assert!(s.contains("panel_gflops=2.00"), "{s}");
+        // fallback note rides along like the dense kernel's
+        let f = RunMetrics {
+            panel_isa: "scalar".into(),
+            panel_lanes: 1,
+            panel_fallback: Some("DEMST_SIMD=off".into()),
+            ..Default::default()
+        };
+        let s = f.kernel_summary();
+        assert!(s.contains("isa=scalar lanes=1"), "{s}");
+        assert!(s.contains("fallback: DEMST_SIMD=off"), "{s}");
+        assert_eq!(RunMetrics::default().panel_gflops(), 0.0);
     }
 
     #[test]

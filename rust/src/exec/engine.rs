@@ -45,7 +45,7 @@
 //! Under [`execute_pooled_sharded`] the engine runs with **no dataset at
 //! all**: the plan comes from a shard manifest, every subset's vectors are
 //! resident on the workers that loaded them from local shard files
-//! (advertised in the v2 handshake, seeding the resident-set model), and
+//! (advertised in the versioned handshake, seeding the resident-set model), and
 //! scheduling is restricted to workers holding *both* subsets of a job
 //! ([`ExecPlan::affinity_for_holders`]). Phase 1 dispatches header-only
 //! `LocalAssign` frames; pair scatter ships at most cached local *trees*
@@ -65,6 +65,7 @@ use crate::coordinator::metrics::RunMetrics;
 use crate::data::Dataset;
 use crate::decomp::reduction::{reduce_trees_with, tree_merge, StreamReducer};
 use crate::decomp::{pair_count, DecompConfig, DecompOutput, PairJob};
+use crate::geometry::simd::{self, Isa};
 use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::mst::kruskal;
@@ -352,6 +353,7 @@ fn execute_pooled_inner(
     let leader_ingest = AtomicU64::new(0);
     let fleet = Fleet::new(n_workers, plan.n_jobs());
 
+    let panel_settings = cfg.panel_settings();
     let mut metrics = RunMetrics {
         worker_busy: vec![Duration::ZERO; n_workers],
         kernel: crate::runtime::exec_kernel_label(cfg),
@@ -364,6 +366,13 @@ fn execute_pooled_inner(
         sharded,
         ..Default::default()
     };
+    if cfg.pair_kernel == PairKernelChoice::BipartiteMerge {
+        // Leader-resolved panel path; remote workers report theirs over
+        // the wire and override this during the gather loop.
+        metrics.panel_isa = panel_settings.isa.label().to_string();
+        metrics.panel_lanes = panel_settings.isa.lanes() as u32;
+        metrics.panel_fallback = simd::panel_fallback_note(cfg.panel_simd);
+    }
 
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
     // through the same worker pool — at its anchor when affinity is on, so
@@ -372,7 +381,14 @@ fn execute_pooled_inner(
         PairKernelChoice::Dense => None,
         PairKernelChoice::BipartiteMerge => {
             let t = Instant::now();
-            let ctx = ds.map(|ds| BipartiteCtx::new(ds, cfg.metric));
+            let ctx = ds.map(|ds| {
+                BipartiteCtx::with_settings(
+                    ds,
+                    cfg.metric,
+                    panel_settings,
+                    crate::runtime::xla_panel_dir(cfg),
+                )
+            });
             let (cache, phase_busy) = build_cache_pooled(
                 ds,
                 d,
@@ -496,6 +512,10 @@ fn execute_pooled_inner(
                     jobs_stolen,
                     panel_hits,
                     panel_misses,
+                    panel_flops,
+                    panel_time,
+                    panel_threads,
+                    panel_isa,
                 } => {
                     metrics.dist_evals += dist_evals;
                     // += : the local-MST phase already deposited its share
@@ -503,6 +523,15 @@ fn execute_pooled_inner(
                     metrics.jobs_stolen += jobs_stolen;
                     metrics.panel_hits += panel_hits;
                     metrics.panel_misses += panel_misses;
+                    metrics.panel_flops += panel_flops;
+                    metrics.panel_time += panel_time;
+                    metrics.panel_threads_used = metrics.panel_threads_used.max(panel_threads);
+                    if let Some(isa) = Isa::from_wire_code(panel_isa) {
+                        // a worker that actually ran panels knows its own
+                        // ISA better than the leader's local detection
+                        metrics.panel_isa = isa.label().to_string();
+                        metrics.panel_lanes = isa.lanes() as u32;
+                    }
                     if cfg.reduce_tree {
                         metrics.jobs += jobs_run;
                     }
@@ -626,6 +655,10 @@ fn pooled_worker_local(
                         jobs_stolen: 0,
                         panel_hits: 0,
                         panel_misses: 0,
+                        panel_flops: 0,
+                        panel_time: Duration::ZERO,
+                        panel_threads: 0,
+                        panel_isa: 0,
                     },
                     Direction::Gather,
                 );
@@ -715,6 +748,10 @@ fn pooled_worker_local(
             jobs_stolen,
             panel_hits: fin.panel_hits,
             panel_misses: fin.panel_misses,
+            panel_flops: fin.panel_perf.flops,
+            panel_time: fin.panel_perf.time,
+            panel_threads: fin.panel_perf.threads,
+            panel_isa: fin.panel_perf.isa,
         },
         Direction::Gather,
     );
@@ -827,6 +864,10 @@ fn pooled_worker_remote(
             jobs_stolen: st.jobs_stolen,
             panel_hits: fin.panel_hits,
             panel_misses: fin.panel_misses,
+            panel_flops: fin.panel_perf.flops,
+            panel_time: fin.panel_perf.time,
+            panel_threads: fin.panel_perf.threads,
+            panel_isa: fin.panel_perf.isa,
         },
         Direction::Gather,
     );

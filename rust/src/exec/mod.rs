@@ -48,8 +48,8 @@ pub use engine::{
 pub use pair_kernel::{
     bipartite_filtered_prim, bipartite_filtered_prim_blocked, emit_tree, subset_mst,
     subset_mst_gathered, BipartiteCtx, BipartitePairSolver, DensePairSolver, KeyedLru,
-    LocalMstCache, PairSolver, PanelCache, Shipment, Solved, SolverFinal, SubsetPanel,
-    PANEL_CACHE_CAP,
+    LocalMstCache, PairSolver, PanelCache, PanelPerf, Shipment, Solved, SolverFinal,
+    SubsetPanel, PANEL_CACHE_CAP,
 };
 pub use plan::{AffinityPlan, ExecPlan};
 pub use scheduler::JobQueue;

@@ -34,7 +34,8 @@ use crate::data::Dataset;
 use crate::decomp::algorithm::{merge_sorted_ids, run_pair};
 use crate::decomp::PairJob;
 use crate::dense::DenseMst;
-use crate::geometry::blocked::{distance_block, DistanceBlock};
+use crate::geometry::blocked::{distance_block_with, DistanceBlock};
+use crate::geometry::simd::{self, PanelSettings};
 use crate::geometry::{CountingMetric, MetricKind};
 use crate::graph::Edge;
 use crate::util::fkey::edge_cmp;
@@ -75,11 +76,26 @@ pub struct SolverFinal {
     pub dist_evals: u64,
     pub panel_hits: u64,
     pub panel_misses: u64,
+    /// measured panel-kernel work (FLOPs / wall time / threads / ISA) —
+    /// zeros for solvers that never run a panel (the dense kernel)
+    pub panel_perf: PanelPerf,
     /// remote-measured kernel busy time, when the compute happened in
     /// another process (overrides the proxy's round-trip measurement)
     pub busy: Option<Duration>,
     /// remotely ⊕-folded worker tree (reduce mode on a remote solver)
     pub local_tree: Option<Vec<Edge>>,
+}
+
+/// Measured `panel_block` work, the witnesses behind the `kernel:` line and
+/// the `panel_*` run metrics: total FLOPs (2·m·n·d dot-form, 3·m·n·d
+/// Manhattan), wall time inside the panel kernel, the largest per-panel
+/// thread plan, and the dispatched ISA as its wire code (0 = no panel ran).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelPerf {
+    pub flops: u64,
+    pub time: Duration,
+    pub threads: u32,
+    pub isa: u8,
 }
 
 /// A solver for one pair job. `job.i == job.j` is the degenerate
@@ -111,6 +127,11 @@ pub trait PairSolver {
         (0, 0)
     }
 
+    /// Measured panel-kernel work; zeros for solvers without a panel path.
+    fn panel_perf(&self) -> PanelPerf {
+        PanelPerf::default()
+    }
+
     /// Drain-time stats. The remote proxy's override performs the shutdown
     /// rendezvous with its worker process.
     fn finish(&mut self) -> anyhow::Result<SolverFinal> {
@@ -119,6 +140,7 @@ pub trait PairSolver {
             dist_evals: self.dist_evals(),
             panel_hits,
             panel_misses,
+            panel_perf: self.panel_perf(),
             busy: None,
             local_tree: None,
         })
@@ -179,14 +201,35 @@ pub struct BipartiteCtx {
     pub aux: Vec<f32>,
     /// weights compare in squared form and need a `sqrt` at emission
     pub sqrt_at_emit: bool,
+    /// panel dispatch settings the block was built with (for thread-plan
+    /// and ISA witnesses; pure speed knobs — bit-identical by contract)
+    pub panel: PanelSettings,
+    /// when set, solvers try to route sqeuclid/euclid panels through the
+    /// AOT XLA pairwise artifact in this directory, falling back to the
+    /// SIMD path per call (PJRT handles are thread-local, so each solver
+    /// loads its own engine). Only honored in `backend-xla` builds.
+    pub xla_panels: Option<std::path::PathBuf>,
 }
 
 impl BipartiteCtx {
+    /// Environment-driven defaults ([`PanelSettings::detect`]), no XLA
+    /// panel routing — what tests and the serial reference path use.
     pub fn new(ds: &Dataset, kind: MetricKind) -> Self {
-        let block = distance_block(kind);
+        Self::with_settings(ds, kind, PanelSettings::detect(), None)
+    }
+
+    /// Explicit panel settings (the engine resolves them from `RunConfig`)
+    /// and optional XLA panel routing.
+    pub fn with_settings(
+        ds: &Dataset,
+        kind: MetricKind,
+        panel: PanelSettings,
+        xla_panels: Option<std::path::PathBuf>,
+    ) -> Self {
+        let block = distance_block_with(kind, panel);
         let aux = block.prepare(ds.as_slice(), ds.n, ds.d);
         let sqrt_at_emit = block.compare_form_is_squared();
-        Self { kind, block, aux, sqrt_at_emit }
+        Self { kind, block, aux, sqrt_at_emit, panel, xla_panels }
     }
 }
 
@@ -218,30 +261,43 @@ impl LocalMstCache {
 }
 
 /// One subset's packed operand for blocked `S_i × S_j` distance panels: the
-/// subset's rows gathered contiguously, plus the matching slice of the
-/// per-row auxiliary values (norms). Copies of the prepared full-matrix
-/// values, so panel arithmetic stays bit-identical to the row path.
+/// subset's rows gathered contiguously at a **lane-padded stride**
+/// ([`simd::padded_stride`], pad region zero, so the SIMD micro-kernels run
+/// whole-chunk loads), plus the matching slice of the per-row auxiliary
+/// values (norms). Copies of the prepared full-matrix values, so panel
+/// arithmetic stays bit-identical to the row path.
 pub struct SubsetPanel {
     pub data: Vec<f32>,
     pub aux: Vec<f32>,
     pub rows: usize,
+    /// floats per packed row (`≥ d`, a multiple of [`simd::LANES`])
+    pub stride: usize,
 }
 
 impl SubsetPanel {
-    fn build(ds: &Dataset, ctx: &BipartiteCtx, ids: &[u32]) -> Self {
+    pub fn build(ds: &Dataset, ctx: &BipartiteCtx, ids: &[u32]) -> Self {
         let d = ds.d;
         let src = ds.as_slice();
-        let mut data = Vec::with_capacity(ids.len() * d);
-        for &g in ids {
+        let stride = simd::padded_stride(d);
+        let mut data = vec![0.0f32; ids.len() * stride];
+        for (k, &g) in ids.iter().enumerate() {
             let g = g as usize;
-            data.extend_from_slice(&src[g * d..(g + 1) * d]);
+            data[k * stride..k * stride + d].copy_from_slice(&src[g * d..(g + 1) * d]);
         }
         let aux: Vec<f32> = if ctx.aux.is_empty() {
             Vec::new()
         } else {
             ids.iter().map(|&g| ctx.aux[g as usize]).collect()
         };
-        Self { data, aux, rows: ids.len() }
+        Self { data, aux, rows: ids.len(), stride }
+    }
+
+    /// Pack `n` already-contiguous rows (stride `d`) into a padded panel —
+    /// the remote worker's path, where the subset's vectors arrive as one
+    /// resident matrix rather than an id-gather.
+    pub fn from_rows(rows: &[f32], n: usize, d: usize, aux: &[f32]) -> Self {
+        let (data, stride) = simd::pad_rows(rows, n, d);
+        Self { data, aux: aux.to_vec(), rows: n, stride }
     }
 }
 
@@ -348,6 +404,12 @@ pub struct BipartitePairSolver<'a> {
     panels: PanelCache,
     /// reusable `|S_i| × |S_j|` distance-block buffer
     blk: Vec<f32>,
+    /// measured panel work (FLOPs, wall time, thread plan, ISA)
+    perf: PanelPerf,
+    /// per-solver PJRT engine for XLA panel routing (PJRT handles are not
+    /// `Send`, so the engine lives with the solver's thread)
+    #[cfg(feature = "backend-xla")]
+    xla: Option<crate::runtime::pairwise::XlaPairwise>,
 }
 
 impl<'a> BipartitePairSolver<'a> {
@@ -359,7 +421,38 @@ impl<'a> BipartitePairSolver<'a> {
             counter: CountingMetric::new(ctx.kind),
             panels: PanelCache::new(PANEL_CACHE_CAP),
             blk: Vec::new(),
+            perf: PanelPerf::default(),
+            #[cfg(feature = "backend-xla")]
+            xla: ctx.xla_panels.as_deref().and_then(|dir| {
+                crate::runtime::engine::Engine::load(dir)
+                    .ok()
+                    .map(crate::runtime::pairwise::XlaPairwise::new)
+            }),
         }
+    }
+}
+
+/// Route one sqeuclid/euclid bipartite block through the AOT XLA pairwise
+/// artifact. `false` means "not taken" (unsupported metric or a runtime
+/// error) — the caller falls back to the SIMD panel path, gracefully.
+#[cfg(feature = "backend-xla")]
+fn xla_panel_block(
+    xla: &crate::runtime::pairwise::XlaPairwise,
+    kind: MetricKind,
+    pi: &SubsetPanel,
+    pj: &SubsetPanel,
+    d: usize,
+    out: &mut [f32],
+) -> bool {
+    if !matches!(kind, MetricKind::SqEuclid | MetricKind::Euclid) {
+        return false;
+    }
+    match xla.bipartite_block(&pi.data, pi.rows, pi.stride, &pj.data, pj.rows, pj.stride, d) {
+        Ok(blk) => {
+            out.copy_from_slice(&blk);
+            true
+        }
+        Err(_) => false,
     }
 }
 
@@ -372,18 +465,34 @@ impl PairSolver for BipartitePairSolver<'_> {
         let si = &plan.parts[job.i as usize];
         let sj = &plan.parts[job.j as usize];
         let (pi, pj) = self.panels.pair(self.ds, self.ctx, job.i, si, job.j, sj);
-        self.blk.resize(si.len() * sj.len(), 0.0);
-        self.ctx.block.panel_block(
-            &pi.data,
-            &pi.aux,
-            si.len(),
-            &pj.data,
-            &pj.aux,
-            sj.len(),
-            self.ds.d,
-            &mut self.blk,
-        );
-        self.counter.add_external((si.len() * sj.len()) as u64);
+        let (m, n, d) = (si.len(), sj.len(), self.ds.d);
+        self.blk.resize(m * n, 0.0);
+        let panel_t = Instant::now();
+        #[allow(unused_mut)]
+        let mut routed_to_xla = false;
+        #[cfg(feature = "backend-xla")]
+        if let Some(xla) = &self.xla {
+            routed_to_xla = xla_panel_block(xla, self.ctx.kind, pi, pj, d, &mut self.blk);
+        }
+        if !routed_to_xla {
+            self.ctx.block.panel_block(
+                &pi.data,
+                &pi.aux,
+                m,
+                &pj.data,
+                &pj.aux,
+                n,
+                d,
+                pi.stride,
+                &mut self.blk,
+            );
+        }
+        self.perf.time += panel_t.elapsed();
+        self.perf.flops += simd::panel_flops(self.ctx.kind, m, n, d);
+        self.perf.threads =
+            self.perf.threads.max(simd::planned_threads(self.ctx.panel, m, n, d) as u32);
+        self.perf.isa = self.ctx.panel.isa.wire_code();
+        self.counter.add_external((m * n) as u64);
         let tree = bipartite_filtered_prim_blocked(
             si,
             sj,
@@ -400,6 +509,10 @@ impl PairSolver for BipartitePairSolver<'_> {
 
     fn panel_stats(&self) -> (u64, u64) {
         self.panels.stats()
+    }
+
+    fn panel_perf(&self) -> PanelPerf {
+        self.perf
     }
 }
 
@@ -985,7 +1098,15 @@ mod tests {
             let pj = SubsetPanel::build(&ds, &ctx, &sj);
             let mut tile = vec![0.0f32; si.len() * sj.len()];
             ctx.block.panel_block(
-                &pi.data, &pi.aux, si.len(), &pj.data, &pj.aux, sj.len(), ds.d, &mut tile,
+                &pi.data,
+                &pi.aux,
+                si.len(),
+                &pj.data,
+                &pj.aux,
+                sj.len(),
+                ds.d,
+                pi.stride,
+                &mut tile,
             );
             let panel_path = bipartite_filtered_prim_blocked(&si, &sj, &ti, &tj, &tile);
             assert_eq!(row_path, panel_path, "{kind:?}: trees must be bit-identical");
@@ -1011,10 +1132,11 @@ mod tests {
         // (1,3): 1 was evicted — both miss
         cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
         assert_eq!(cache.stats(), (3, 5));
-        // panels carry the right geometry
+        // panels carry the right geometry (rows padded to the lane multiple)
         let (p1, p3) = cache.pair(&ds, &ctx, 1, &subsets[1], 3, &subsets[3]);
         assert_eq!(p1.rows, 8);
-        assert_eq!(p3.data.len(), 8 * ds.d);
+        assert_eq!(p3.stride, crate::geometry::simd::padded_stride(ds.d));
+        assert_eq!(p3.data.len(), 8 * p3.stride);
         assert_eq!(p1.aux.len(), 8, "sq-euclid panels carry norms");
     }
 

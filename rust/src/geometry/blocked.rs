@@ -6,8 +6,15 @@
 //! the Gram/dot form with precomputed per-row norms; Manhattan uses a tiled
 //! direct loop. Consumers: the blocked dense-Prim hot path, the Borůvka
 //! cheapest-edge fallback, the kNN baseline, and the XLA cross-checks.
+//!
+//! All reductions run in the **canonical lane-split order** defined by
+//! [`super::simd`] (8 accumulators, virtual zero padding, fixed reduction
+//! tree), so the scalar `row` path, the scalar panel path, and every
+//! runtime-dispatched SIMD panel kernel produce bit-identical values. See
+//! the `geometry::simd` module docs for the order and the no-fused-ops rule.
 
 use super::metric::MetricKind;
+use super::simd::{self, PanelSettings};
 
 /// Squared L2 norm of each row of a row-major `(n, d)` matrix.
 pub fn self_norms(data: &[f32], n: usize, d: usize) -> Vec<f32> {
@@ -46,8 +53,8 @@ pub fn pairwise_block(
     // the first implementation used an ikj loop with a stride-d walk down
     // b's columns; that thrashed cache badly enough to run *slower than the
     // naive direct-difference loop* at d=128 (2.6 GFLOP/s). The ij loop with
-    // a 4-way unrolled dot over two contiguous rows vectorizes cleanly and
-    // keeps the b tile resident, ~3-4x faster.
+    // an unrolled dot over two contiguous rows vectorizes cleanly and keeps
+    // the b tile resident, ~3-4x faster.
     for i in 0..m {
         let arow = &a[i * d..(i + 1) * d];
         let nai = na[i];
@@ -60,46 +67,19 @@ pub fn pairwise_block(
     }
 }
 
-/// 4-way unrolled dot product of two equal-length contiguous slices.
+/// Unrolled dot product of two equal-length contiguous slices, in the
+/// canonical 8-lane-split accumulation order ([`simd::dot_canonical`]) that
+/// every SIMD panel kernel reproduces bit-for-bit.
 #[inline]
 pub fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
+    simd::dot_canonical(a, b)
 }
 
-/// 4-way unrolled Manhattan (L1) distance of two contiguous rows.
+/// Unrolled Manhattan (L1) distance of two contiguous rows, in the
+/// canonical 8-lane-split accumulation order ([`simd::l1_canonical`]).
 #[inline]
 pub fn manhattan_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += (a[j] - b[j]).abs();
-        s1 += (a[j + 1] - b[j + 1]).abs();
-        s2 += (a[j + 2] - b[j + 2]).abs();
-        s3 += (a[j + 3] - b[j + 3]).abs();
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for j in chunks * 4..n {
-        s += (a[j] - b[j]).abs();
-    }
-    s
+    simd::l1_canonical(a, b)
 }
 
 /// Convenience: full `(n, n)` self-distance matrix (squared Euclidean).
@@ -159,17 +139,23 @@ pub trait DistanceBlock: Send + Sync {
     }
 
     /// Dense `(m, n)` block between two *packed panels* — rows gathered
-    /// contiguously out of one prepared matrix, with `aux_a`/`aux_b` the
+    /// contiguously out of one prepared matrix at `stride` floats per row
+    /// (`stride ≥ d`; the pad region `d..stride` of every row must be
+    /// **zero** — see [`simd::pad_rows`]), with `aux_a`/`aux_b` the
     /// matching slices of that matrix's [`prepare`](Self::prepare) output.
     /// Written row-major into `out`.
     ///
-    /// Contract: each element must be **value-identical** to what
+    /// Contract: each element must be **bit-identical** to what
     /// [`row`](Self::row) computes for the same underlying pair (same
-    /// arithmetic, same operation order, same clamping), so kernels may mix
-    /// the row and panel paths without perturbing the strict `(w, u, v)`
-    /// edge order. The default implementation stacks the two panels into a
-    /// temporary matrix and reuses `row`; the concrete blocks override it
-    /// with fused loops that skip the copy.
+    /// arithmetic, same canonical accumulation order, same clamping), so
+    /// kernels may mix the row and panel paths without perturbing the
+    /// strict `(w, u, v)` edge order. The default implementation stacks the
+    /// two panels into a temporary matrix and reuses `row`; the concrete
+    /// blocks override it with the runtime-dispatched SIMD panel kernels
+    /// of [`simd`], which honor the same order for any stride that fits
+    /// whole lanes (`stride % simd::LANES == 0`, `stride ≥` the padded
+    /// width) and degrade to the canonical scalar loop otherwise.
+    #[allow(clippy::too_many_arguments)]
     fn panel_block(
         &self,
         a: &[f32],
@@ -179,14 +165,20 @@ pub trait DistanceBlock: Send + Sync {
         aux_b: &[f32],
         n: usize,
         d: usize,
+        stride: usize,
         out: &mut [f32],
     ) {
-        debug_assert_eq!(a.len(), m * d);
-        debug_assert_eq!(b.len(), n * d);
+        debug_assert!(stride >= d);
+        debug_assert_eq!(a.len(), m * stride);
+        debug_assert_eq!(b.len(), n * stride);
         debug_assert_eq!(out.len(), m * n);
         let mut data = Vec::with_capacity((m + n) * d);
-        data.extend_from_slice(a);
-        data.extend_from_slice(b);
+        for i in 0..m {
+            data.extend_from_slice(&a[i * stride..i * stride + d]);
+        }
+        for j in 0..n {
+            data.extend_from_slice(&b[j * stride..j * stride + d]);
+        }
         let mut aux = Vec::with_capacity(aux_a.len() + aux_b.len());
         aux.extend_from_slice(aux_a);
         aux.extend_from_slice(aux_b);
@@ -203,6 +195,15 @@ pub struct SqEuclidBlock {
     /// Report `Euclid` as the metric kind (weights get `sqrt` at edge
     /// emission by the kernels; `row` output stays squared).
     pub euclid: bool,
+    /// Panel-kernel dispatch (ISA + thread budget); speed-only — every
+    /// setting is bit-identical.
+    panel: PanelSettings,
+}
+
+impl SqEuclidBlock {
+    pub fn new(euclid: bool, panel: PanelSettings) -> Self {
+        Self { euclid, panel }
+    }
 }
 
 impl DistanceBlock for SqEuclidBlock {
@@ -233,6 +234,7 @@ impl DistanceBlock for SqEuclidBlock {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn panel_block(
         &self,
         a: &[f32],
@@ -242,18 +244,28 @@ impl DistanceBlock for SqEuclidBlock {
         aux_b: &[f32],
         n: usize,
         d: usize,
+        stride: usize,
         out: &mut [f32],
     ) {
-        // pairwise_block computes `na + nb - 2·dot` with the same clamp as
-        // `row`, so the panel path is value-identical per element.
-        pairwise_block(a, aux_a, m, b, aux_b, n, d, out);
+        // `na + nb - 2·dot` with the same clamp and the same canonical dot
+        // order as `row`, dispatched to the SIMD micro-kernels when the
+        // stride fits whole lanes — bit-identical per element either way.
+        simd::sqeuclid_panel(self.panel, a, aux_a, m, b, aux_b, n, d, stride, out);
     }
 }
 
 /// Gram/dot-form cosine distance with precomputed L2 norms:
 /// `1 − x·y / (‖x‖‖y‖)`; zero vectors are at distance 1 from everything
 /// (matching the scalar [`super::metric::cosine`] convention).
-pub struct CosineBlock;
+pub struct CosineBlock {
+    panel: PanelSettings,
+}
+
+impl CosineBlock {
+    pub fn new(panel: PanelSettings) -> Self {
+        Self { panel }
+    }
+}
 
 impl DistanceBlock for CosineBlock {
     fn kind(&self) -> MetricKind {
@@ -279,6 +291,7 @@ impl DistanceBlock for CosineBlock {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn panel_block(
         &self,
         a: &[f32],
@@ -288,28 +301,25 @@ impl DistanceBlock for CosineBlock {
         aux_b: &[f32],
         n: usize,
         d: usize,
+        stride: usize,
         out: &mut [f32],
     ) {
-        debug_assert_eq!(out.len(), m * n);
-        for i in 0..m {
-            let arow = &a[i * d..(i + 1) * d];
-            let ni = aux_a[i];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                let nj = aux_b[j];
-                *o = if ni == 0.0 || nj == 0.0 {
-                    1.0
-                } else {
-                    1.0 - dot_unrolled(arow, &b[j * d..(j + 1) * d]) / (ni * nj)
-                };
-            }
-        }
+        simd::cosine_panel(self.panel, a, aux_a, m, b, aux_b, n, d, stride, out);
     }
 }
 
 /// Tiled direct Manhattan (L1): no useful Gram form exists, so this is a
-/// cache-friendly unrolled direct loop.
-pub struct ManhattanBlock;
+/// cache-friendly unrolled direct loop (SIMD absolute-difference
+/// accumulation on the panel path).
+pub struct ManhattanBlock {
+    panel: PanelSettings,
+}
+
+impl ManhattanBlock {
+    pub fn new(panel: PanelSettings) -> Self {
+        Self { panel }
+    }
+}
 
 impl DistanceBlock for ManhattanBlock {
     fn kind(&self) -> MetricKind {
@@ -329,6 +339,7 @@ impl DistanceBlock for ManhattanBlock {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn panel_block(
         &self,
         a: &[f32],
@@ -338,26 +349,31 @@ impl DistanceBlock for ManhattanBlock {
         _aux_b: &[f32],
         n: usize,
         d: usize,
+        stride: usize,
         out: &mut [f32],
     ) {
-        debug_assert_eq!(out.len(), m * n);
-        for i in 0..m {
-            let arow = &a[i * d..(i + 1) * d];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = manhattan_unrolled(arow, &b[j * d..(j + 1) * d]);
-            }
-        }
+        simd::manhattan_panel(self.panel, a, m, b, n, d, stride, out);
     }
 }
 
-/// Factory: the blocked implementation for a metric kind.
+/// Factory: the blocked implementation for a metric kind, with
+/// environment-driven panel settings ([`PanelSettings::detect`] — hardware
+/// ISA unless `DEMST_SIMD=off`, all available cores unless
+/// `DEMST_PANEL_THREADS` caps them).
 pub fn distance_block(kind: MetricKind) -> Box<dyn DistanceBlock> {
+    distance_block_with(kind, PanelSettings::detect())
+}
+
+/// Factory with explicit panel settings (the engine resolves them from
+/// `RunConfig`; tests pin [`PanelSettings::scalar`] for the canonical
+/// reference path). Settings are speed-only — outputs are bit-identical
+/// across every ISA and thread count.
+pub fn distance_block_with(kind: MetricKind, panel: PanelSettings) -> Box<dyn DistanceBlock> {
     match kind {
-        MetricKind::SqEuclid => Box::new(SqEuclidBlock { euclid: false }),
-        MetricKind::Euclid => Box::new(SqEuclidBlock { euclid: true }),
-        MetricKind::Cosine => Box::new(CosineBlock),
-        MetricKind::Manhattan => Box::new(ManhattanBlock),
+        MetricKind::SqEuclid => Box::new(SqEuclidBlock::new(false, panel)),
+        MetricKind::Euclid => Box::new(SqEuclidBlock::new(true, panel)),
+        MetricKind::Cosine => Box::new(CosineBlock::new(panel)),
+        MetricKind::Manhattan => Box::new(ManhattanBlock::new(panel)),
     }
 }
 
@@ -459,7 +475,7 @@ mod tests {
     fn cosine_block_zero_vector_convention() {
         // row 0 is the zero vector; scalar convention says distance 1.
         let data = vec![0.0, 0.0, 1.0, 2.0, 3.0, -1.0];
-        let blk = CosineBlock;
+        let blk = CosineBlock::new(PanelSettings::scalar());
         let aux = blk.prepare(&data, 3, 2);
         let js = [0u32, 1, 2];
         let mut out = [0.0f32; 3];
@@ -490,6 +506,9 @@ mod tests {
 
     /// The panel path must be bit-identical to the row path — float data on
     /// purpose, so any drift in operation order or clamping fails loudly.
+    /// Runs the dispatched (possibly SIMD) settings over a lane-padded
+    /// panel *and* the tight `stride == d` layout (scalar degrade path),
+    /// plus a threaded plan — all must match the rows to the bit.
     #[test]
     fn panel_block_bit_identical_to_rows() {
         let mut rng = Pcg64::seeded(6);
@@ -503,30 +522,41 @@ mod tests {
             MetricKind::Cosine,
             MetricKind::Manhattan,
         ] {
-            let blk = distance_block(kind);
-            let aux = blk.prepare(&data, n, d);
-            // pack the two panels
-            let pack = |ids: &[u32]| -> (Vec<f32>, Vec<f32>) {
-                let mut p = Vec::with_capacity(ids.len() * d);
-                for &g in ids {
-                    p.extend_from_slice(&data[g as usize * d..(g as usize + 1) * d]);
+            for (settings, padded) in [
+                (PanelSettings::scalar(), false),
+                (PanelSettings::detect(), true),
+                (PanelSettings { threads: 4, ..PanelSettings::detect() }, true),
+            ] {
+                let blk = distance_block_with(kind, settings);
+                let aux = blk.prepare(&data, n, d);
+                let stride = if padded { simd::padded_stride(d) } else { d };
+                // pack the two panels at the chosen stride (pad region zero)
+                let pack = |ids: &[u32]| -> (Vec<f32>, Vec<f32>) {
+                    let mut p = vec![0.0f32; ids.len() * stride];
+                    for (k, &g) in ids.iter().enumerate() {
+                        p[k * stride..k * stride + d]
+                            .copy_from_slice(&data[g as usize * d..(g as usize + 1) * d]);
+                    }
+                    let a: Vec<f32> = if aux.is_empty() {
+                        Vec::new()
+                    } else {
+                        ids.iter().map(|&g| aux[g as usize]).collect()
+                    };
+                    (p, a)
+                };
+                let (pa, aa) = pack(&is);
+                let (pb, ab) = pack(&js);
+                let mut tile = vec![0.0f32; is.len() * js.len()];
+                blk.panel_block(&pa, &aa, is.len(), &pb, &ab, js.len(), d, stride, &mut tile);
+                let mut row = vec![0.0f32; js.len()];
+                for (k, &i) in is.iter().enumerate() {
+                    blk.row(&data, d, &aux, i as usize, &js, &mut row);
+                    assert_eq!(
+                        &tile[k * js.len()..(k + 1) * js.len()],
+                        row.as_slice(),
+                        "{kind:?} stride={stride} pivot {i}: panel path must be bit-identical"
+                    );
                 }
-                let a: Vec<f32> =
-                    if aux.is_empty() { Vec::new() } else { ids.iter().map(|&g| aux[g as usize]).collect() };
-                (p, a)
-            };
-            let (pa, aa) = pack(&is);
-            let (pb, ab) = pack(&js);
-            let mut tile = vec![0.0f32; is.len() * js.len()];
-            blk.panel_block(&pa, &aa, is.len(), &pb, &ab, js.len(), d, &mut tile);
-            let mut row = vec![0.0f32; js.len()];
-            for (k, &i) in is.iter().enumerate() {
-                blk.row(&data, d, &aux, i as usize, &js, &mut row);
-                assert_eq!(
-                    &tile[k * js.len()..(k + 1) * js.len()],
-                    row.as_slice(),
-                    "{kind:?} pivot {i}: panel path must be bit-identical"
-                );
             }
         }
     }

@@ -7,10 +7,17 @@
 //! [`DistanceBlock`] trait: a metric-generic blocked kernel family in the
 //! same Gram/dot form the L1 Pallas kernel computes (squared Euclidean and
 //! cosine via precomputed norms + dot products, Manhattan via a tiled direct
-//! loop), so every metric gets the cache-blocked hot path.
+//! loop), so every metric gets the cache-blocked hot path. The panel form of
+//! that path dispatches at runtime to the register-tiled SIMD micro-kernels
+//! in [`simd`] — bit-identical to the scalar reference by a shared canonical
+//! accumulation order.
 
 pub mod metric;
 pub mod blocked;
+pub mod simd;
 
-pub use blocked::{distance_block, pairwise_block, self_norms, DistanceBlock};
+pub use blocked::{
+    distance_block, distance_block_with, pairwise_block, self_norms, DistanceBlock,
+};
 pub use metric::{CountingMetric, Metric, MetricKind};
+pub use simd::{Isa, PanelSettings};

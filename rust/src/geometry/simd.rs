@@ -1,0 +1,825 @@
+//! Register-tiled SIMD panel kernels with runtime ISA dispatch and a
+//! **canonical reduction order** shared by every path.
+//!
+//! This module is the FLOP engine behind
+//! [`DistanceBlock::panel_block`](super::blocked::DistanceBlock::panel_block):
+//! the `S_i × S_j` bipartite blocks of the pair kernel are matmul-shaped
+//! panel products, and this layer computes them with AVX2 (x86_64) or NEON
+//! (aarch64) micro-kernels, an intra-job threaded row-band path, and a
+//! scalar fallback — all **bit-identical** to each other and to the
+//! [`row`](super::blocked::DistanceBlock::row) path.
+//!
+//! ## The canonical reduction order
+//!
+//! IEEE-754 addition is not associative, so a vectorized reduction that
+//! sums in a different order than the scalar code produces different bits,
+//! which would perturb the strict `(w, u, v)` edge order the whole engine
+//! is built on. Instead of tolerating drift, *every* path commits to one
+//! fixed accumulation order, defined by the widest kernel:
+//!
+//! 1. **Lane split.** A length-`d` reduction runs [`LANES`] (= 8)
+//!    independent accumulators; lane `l` sums terms `8c + l` in chunk
+//!    order `c = 0, 1, …`.
+//! 2. **Virtual zero padding.** When `d % 8 != 0` the final chunk is
+//!    processed as a full chunk over a zero-padded tail: lanes `< d % 8`
+//!    add their real term, lanes `≥ d % 8` add an explicit `+0.0` — the
+//!    exact contribution of the zero-padded pad region of a packed panel
+//!    (`0·0 = +0.0` for the dot form, `|0−0| = +0.0` for L1).
+//! 3. **Fixed reduction tree.** The 8 lane sums collapse as
+//!    `((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`.
+//!
+//! The scalar kernels ([`dot_canonical`], [`l1_canonical`]) implement this
+//! order directly, so "scalar" here *is* the canonical order — there is no
+//! separate legacy order to diverge from.
+//!
+//! ## The no-fused-ops rule
+//!
+//! A fused multiply-add rounds once where `mul` + `add` round twice, so a
+//! single FMA anywhere breaks bit-identity with the scalar path. The rule:
+//! **no fused operations on any path.**
+//!
+//! - AVX2 kernels use `_mm256_mul_ps` + `_mm256_add_ps`, never
+//!   `_mm256_fmadd_ps` (FMA is *detected* — it rides along with every
+//!   AVX2 part we care about — but never *issued*).
+//! - NEON kernels use `vmulq_f32` + `vaddq_f32`, never `vmlaq_f32`/
+//!   `vfmaq_f32` (which lower to fused `fmla`).
+//! - Scalar Rust is safe by language guarantee: rustc never contracts
+//!   `a * b + c` into an FMA, at any `-C target-cpu`/opt-level. The CI
+//!   `-C target-cpu=native` leg exists to catch this rule regressing.
+//!
+//! ## Threading
+//!
+//! [`PanelSettings::threads`] > 1 splits the output into contiguous row
+//! bands computed by `std::thread::scope` workers. Every output element is
+//! owned by exactly one band and each element's reduction order is fixed
+//! by the rules above, so the result is bit-identical for *any* thread
+//! count — [`planned_threads`] is a pure function of the panel shape used
+//! only to decide how much parallelism is worth spawning.
+
+use super::metric::MetricKind;
+
+/// Canonical accumulation width: f32 lanes of one AVX2 vector. NEON
+/// emulates the 8-lane split with two 4-lane registers; scalar code runs
+/// 8 independent accumulators.
+pub const LANES: usize = 8;
+
+/// Panel row stride that fits whole SIMD chunks: `d` rounded up to a
+/// multiple of [`LANES`]. The pad region `d..stride` of a packed panel
+/// row must be zero (see [`pad_rows`]).
+pub fn padded_stride(d: usize) -> usize {
+    d.div_ceil(LANES) * LANES
+}
+
+/// Pack `n` contiguous rows of `d` values into a zero-padded
+/// `(n, padded_stride(d))` panel. Returns the panel and its stride.
+pub fn pad_rows(data: &[f32], n: usize, d: usize) -> (Vec<f32>, usize) {
+    debug_assert_eq!(data.len(), n * d);
+    let stride = padded_stride(d);
+    let mut p = vec![0.0f32; n * stride];
+    for i in 0..n {
+        p[i * stride..i * stride + d].copy_from_slice(&data[i * d..(i + 1) * d]);
+    }
+    (p, stride)
+}
+
+/// Instruction set the panel kernels dispatch to at runtime.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Canonical scalar kernels (the reduction-order reference).
+    Scalar,
+    /// 8-wide AVX2 register-tiled kernels (x86_64; FMA detected but never
+    /// issued — see the no-fused-ops rule).
+    Avx2,
+    /// 4-wide NEON kernels emulating the 8-lane canonical split (aarch64).
+    Neon,
+}
+
+impl Isa {
+    pub fn label(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Hardware f32 vector width of this ISA's registers (the *canonical*
+    /// accumulation width is always [`LANES`]).
+    pub fn lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 8,
+            Isa::Neon => 4,
+        }
+    }
+
+    /// Stable small code for the wire (`WorkerDone.panel_isa`); 0 is
+    /// reserved for "no panel work ran".
+    pub fn wire_code(self) -> u8 {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Avx2 => 2,
+            Isa::Neon => 3,
+        }
+    }
+
+    pub fn from_wire_code(code: u8) -> Option<Isa> {
+        match code {
+            1 => Some(Isa::Scalar),
+            2 => Some(Isa::Avx2),
+            3 => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// True when `DEMST_SIMD` requests the forced-scalar path (`off`, `0`, or
+/// `scalar`) — the env-var escape hatch the tests and the CI scalar leg use.
+pub fn simd_disabled_by_env() -> bool {
+    matches!(
+        std::env::var("DEMST_SIMD").as_deref(),
+        Ok("off") | Ok("0") | Ok("scalar")
+    )
+}
+
+/// What the hardware supports, ignoring the env override.
+fn detect_isa_hw() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Require FMA alongside AVX2 (they ship together on every AVX2
+        // part this targets) even though fused ops are never issued: the
+        // pair is what "AVX2-class" means operationally.
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // Advanced SIMD is architecturally mandatory on AArch64.
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// Runtime ISA choice: hardware detection, unless `DEMST_SIMD=off` forces
+/// the canonical scalar path.
+pub fn detect_isa() -> Isa {
+    if simd_disabled_by_env() {
+        Isa::Scalar
+    } else {
+        detect_isa_hw()
+    }
+}
+
+/// Why the panel path is not running SIMD, if it is not (`None` = SIMD
+/// active). Pure function of config + environment + hardware, mirroring
+/// [`crate::runtime::kernel_fallback_note`].
+pub fn panel_fallback_note(panel_simd_enabled: bool) -> Option<String> {
+    if !panel_simd_enabled {
+        return Some("panel_simd=off in config forces the canonical scalar panel path".into());
+    }
+    if simd_disabled_by_env() {
+        return Some("DEMST_SIMD=off forces the canonical scalar panel path".into());
+    }
+    match detect_isa_hw() {
+        Isa::Scalar => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                Some("AVX2+FMA not detected on this x86_64 host; canonical scalar panel path".into())
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                Some("no SIMD panel kernel for this architecture; canonical scalar panel path".into())
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Per-run panel execution settings: the dispatched ISA and the intra-job
+/// thread budget. Carried by every [`super::blocked::DistanceBlock`]; pure
+/// speed knobs — **no setting changes a single output bit**.
+#[derive(Clone, Copy, Debug)]
+pub struct PanelSettings {
+    pub isa: Isa,
+    /// Max worker threads for one panel (≥ 1). The actual count per call
+    /// is [`planned_threads`], a pure function of the panel shape.
+    pub threads: usize,
+}
+
+impl PanelSettings {
+    /// Forced-scalar, single-threaded — the reduction-order reference.
+    pub fn scalar() -> Self {
+        Self { isa: Isa::Scalar, threads: 1 }
+    }
+
+    /// Environment-driven detection: hardware ISA (unless `DEMST_SIMD=off`)
+    /// and all available cores (unless `DEMST_PANEL_THREADS` caps them).
+    pub fn detect() -> Self {
+        let threads = std::env::var("DEMST_PANEL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| (1..=256).contains(&t))
+            .unwrap_or_else(default_threads);
+        Self { isa: detect_isa(), threads }
+    }
+
+    /// Resolve from config knobs: `panel_simd` gates dispatch (env
+    /// `DEMST_SIMD=off` still wins), `panel_threads = 0` means all
+    /// available cores.
+    pub fn from_config(panel_simd: bool, panel_threads: usize) -> Self {
+        let isa = if panel_simd { detect_isa() } else { Isa::Scalar };
+        let threads = if panel_threads == 0 { default_threads() } else { panel_threads.clamp(1, 256) };
+        Self { isa, threads }
+    }
+}
+
+/// Available cores at this process, clamped to the config bound (256).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(256)
+}
+
+/// FLOP model for one `(m, n, d)` panel: 2 FLOPs per dimension per element
+/// for the Gram/dot metrics (mul + add), 3 for Manhattan (sub, abs, add).
+pub fn panel_flops(kind: MetricKind, m: usize, n: usize, d: usize) -> u64 {
+    let per_dim: u64 = match kind {
+        MetricKind::SqEuclid | MetricKind::Euclid | MetricKind::Cosine => 2,
+        MetricKind::Manhattan => 3,
+    };
+    per_dim * (m as u64) * (n as u64) * (d as u64)
+}
+
+/// The canonical fixed reduction tree over the 8 lane sums.
+#[inline]
+pub fn reduce_lanes(s: &[f32; LANES]) -> f32 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+/// Canonical dot product: 8-lane split accumulation in chunk order, virtual
+/// zero padding for the tail, fixed reduction tree. This *defines* the
+/// reduction order every SIMD path must reproduce bit-for-bit.
+#[inline]
+pub fn dot_canonical(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let chunks = d / LANES;
+    let rem = d - chunks * LANES;
+    let mut acc = [0.0f32; LANES];
+    for (xa, xb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        let xa: &[f32; LANES] = xa.try_into().unwrap();
+        let xb: &[f32; LANES] = xb.try_into().unwrap();
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += xa[l] * xb[l];
+        }
+    }
+    if rem > 0 {
+        let j = chunks * LANES;
+        for (l, s) in acc.iter_mut().enumerate() {
+            // virtual zero padding: lanes past the remainder add the +0.0 a
+            // zero-padded panel's pad region contributes
+            *s += if l < rem { a[j + l] * b[j + l] } else { 0.0 };
+        }
+    }
+    reduce_lanes(&acc)
+}
+
+/// Canonical L1 accumulation: same lane split, padding, and reduction tree
+/// as [`dot_canonical`] with `|a−b|` terms (`|0−0| = +0.0` in the pad).
+#[inline]
+pub fn l1_canonical(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let chunks = d / LANES;
+    let rem = d - chunks * LANES;
+    let mut acc = [0.0f32; LANES];
+    for (xa, xb) in a.chunks_exact(LANES).zip(b.chunks_exact(LANES)) {
+        let xa: &[f32; LANES] = xa.try_into().unwrap();
+        let xb: &[f32; LANES] = xb.try_into().unwrap();
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += (xa[l] - xb[l]).abs();
+        }
+    }
+    if rem > 0 {
+        let j = chunks * LANES;
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += if l < rem { (a[j + l] - b[j + l]).abs() } else { 0.0 };
+        }
+    }
+    reduce_lanes(&acc)
+}
+
+/// The two accumulation forms the micro-kernels implement.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum PanelOp {
+    /// `Σ a·b` — Gram/dot form (sqeuclid, cosine).
+    Dot,
+    /// `Σ |a−b|` — Manhattan.
+    AbsDiff,
+}
+
+/// Threads actually used for one `(m, n, d)` panel under `settings`: pure
+/// in the shape, so runs are reproducible and the witness is meaningful.
+/// Small panels stay single-threaded (spawn cost would dominate).
+pub fn planned_threads(settings: PanelSettings, m: usize, n: usize, d: usize) -> usize {
+    /// Minimum per-thread share of the accumulation work (mul-add terms)
+    /// before another band is worth spawning.
+    const MIN_WORK_PER_THREAD: usize = 1 << 16;
+    if settings.threads <= 1 || m < 2 {
+        return 1;
+    }
+    let work = m * n * d.max(1);
+    settings.threads.min(m).min((work / MIN_WORK_PER_THREAD).max(1))
+}
+
+/// SIMD requires whole-chunk loads: the row stride must cover the padded
+/// width and stay lane-aligned, else the call degrades (bit-identically)
+/// to the canonical scalar kernels.
+fn effective_isa(isa: Isa, d: usize, stride: usize) -> Isa {
+    if stride >= padded_stride(d) && stride % LANES == 0 {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Scalar accumulation band: canonical kernels over the real `d` prefix of
+/// each row (stride-agnostic).
+fn accum_scalar(
+    op: PanelOp,
+    a: &[f32],
+    r0: usize,
+    rows: usize,
+    b: &[f32],
+    n: usize,
+    d: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    for ii in 0..rows {
+        let ar = &a[(r0 + ii) * stride..(r0 + ii) * stride + d];
+        for (j, o) in out[ii * n..(ii + 1) * n].iter_mut().enumerate() {
+            let br = &b[j * stride..j * stride + d];
+            *o = match op {
+                PanelOp::Dot => dot_canonical(ar, br),
+                PanelOp::AbsDiff => l1_canonical(ar, br),
+            };
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{reduce_lanes, PanelOp, LANES};
+    use std::arch::x86_64::*;
+
+    /// Register tile: MR×NR output accumulators live in ymm registers
+    /// (8 accumulators + 4 row vectors + 2 column vectors = 14 of 16).
+    const MR: usize = 4;
+    const NR: usize = 2;
+
+    /// AVX2 accumulation band. Per the no-fused-ops rule this issues only
+    /// `mul` then `add` (`vmulps` + `vaddps`) — never `vfmadd*` — so each
+    /// lane's partial sum rounds exactly like the canonical scalar lane.
+    ///
+    /// # Safety
+    /// AVX2 must be available; `a`/`b` must hold `(rows_total, stride)` /
+    /// `(n, stride)` panels with `stride` a multiple of [`LANES`] covering
+    /// the zero-padded width (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn accum_band(
+        op: PanelOp,
+        a: &[f32],
+        r0: usize,
+        rows: usize,
+        b: &[f32],
+        n: usize,
+        d: usize,
+        stride: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = d.div_ceil(LANES);
+        debug_assert!(chunks * LANES <= stride);
+        let sign = _mm256_set1_ps(-0.0);
+        let mut i = 0;
+        while i < rows {
+            let mi = MR.min(rows - i);
+            let mut j = 0;
+            while j < n {
+                let nj = NR.min(n - j);
+                let mut acc = [[_mm256_setzero_ps(); NR]; MR];
+                for c in 0..chunks {
+                    let off = c * LANES;
+                    let mut vb = [_mm256_setzero_ps(); NR];
+                    for (jj, v) in vb.iter_mut().enumerate().take(nj) {
+                        *v = _mm256_loadu_ps(b.as_ptr().add((j + jj) * stride + off));
+                    }
+                    for (ii, arow) in acc.iter_mut().enumerate().take(mi) {
+                        let va = _mm256_loadu_ps(a.as_ptr().add((r0 + i + ii) * stride + off));
+                        for (jj, s) in arow.iter_mut().enumerate().take(nj) {
+                            let p = match op {
+                                PanelOp::Dot => _mm256_mul_ps(va, vb[jj]),
+                                // |a−b| as sign-bit clear: bitwise-identical
+                                // to scalar `.abs()`
+                                PanelOp::AbsDiff => {
+                                    _mm256_andnot_ps(sign, _mm256_sub_ps(va, vb[jj]))
+                                }
+                            };
+                            *s = _mm256_add_ps(*s, p);
+                        }
+                    }
+                }
+                for (ii, arow) in acc.iter().enumerate().take(mi) {
+                    for (jj, s) in arow.iter().enumerate().take(nj) {
+                        let mut lanes = [0.0f32; LANES];
+                        _mm256_storeu_ps(lanes.as_mut_ptr(), *s);
+                        out[(i + ii) * n + (j + jj)] = reduce_lanes(&lanes);
+                    }
+                }
+                j += nj;
+            }
+            i += mi;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{reduce_lanes, PanelOp, LANES};
+    use std::arch::aarch64::*;
+
+    const MR: usize = 4;
+    const NR: usize = 2;
+
+    /// NEON accumulation band: each output owns a lo/hi pair of 4-lane
+    /// accumulators emulating the canonical 8-lane split. Per the
+    /// no-fused-ops rule this issues `vmulq_f32` + `vaddq_f32` (`fmul` +
+    /// `fadd`) — never `vmlaq_f32`/`vfmaq_f32`, which lower to fused
+    /// `fmla` and would round differently.
+    ///
+    /// # Safety
+    /// Same panel-layout contract as the AVX2 band (see dispatcher).
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn accum_band(
+        op: PanelOp,
+        a: &[f32],
+        r0: usize,
+        rows: usize,
+        b: &[f32],
+        n: usize,
+        d: usize,
+        stride: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = d.div_ceil(LANES);
+        debug_assert!(chunks * LANES <= stride);
+        let mut i = 0;
+        while i < rows {
+            let mi = MR.min(rows - i);
+            let mut j = 0;
+            while j < n {
+                let nj = NR.min(n - j);
+                let mut acc_lo = [[vdupq_n_f32(0.0); NR]; MR];
+                let mut acc_hi = [[vdupq_n_f32(0.0); NR]; MR];
+                for c in 0..chunks {
+                    let off = c * LANES;
+                    let mut vb_lo = [vdupq_n_f32(0.0); NR];
+                    let mut vb_hi = [vdupq_n_f32(0.0); NR];
+                    for jj in 0..nj {
+                        let p = b.as_ptr().add((j + jj) * stride + off);
+                        vb_lo[jj] = vld1q_f32(p);
+                        vb_hi[jj] = vld1q_f32(p.add(4));
+                    }
+                    for ii in 0..mi {
+                        let p = a.as_ptr().add((r0 + i + ii) * stride + off);
+                        let va_lo = vld1q_f32(p);
+                        let va_hi = vld1q_f32(p.add(4));
+                        for jj in 0..nj {
+                            let (plo, phi) = match op {
+                                PanelOp::Dot => {
+                                    (vmulq_f32(va_lo, vb_lo[jj]), vmulq_f32(va_hi, vb_hi[jj]))
+                                }
+                                PanelOp::AbsDiff => (
+                                    vabsq_f32(vsubq_f32(va_lo, vb_lo[jj])),
+                                    vabsq_f32(vsubq_f32(va_hi, vb_hi[jj])),
+                                ),
+                            };
+                            acc_lo[ii][jj] = vaddq_f32(acc_lo[ii][jj], plo);
+                            acc_hi[ii][jj] = vaddq_f32(acc_hi[ii][jj], phi);
+                        }
+                    }
+                }
+                for ii in 0..mi {
+                    for jj in 0..nj {
+                        let mut lanes = [0.0f32; LANES];
+                        vst1q_f32(lanes.as_mut_ptr(), acc_lo[ii][jj]);
+                        vst1q_f32(lanes.as_mut_ptr().add(4), acc_hi[ii][jj]);
+                        out[(i + ii) * n + (j + jj)] = reduce_lanes(&lanes);
+                    }
+                }
+                j += nj;
+            }
+            i += mi;
+        }
+    }
+}
+
+/// One accumulation band, dispatched to the effective ISA.
+#[allow(clippy::too_many_arguments)]
+fn accum_band(
+    isa: Isa,
+    op: PanelOp,
+    a: &[f32],
+    r0: usize,
+    rows: usize,
+    b: &[f32],
+    n: usize,
+    d: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(a.len() >= (r0 + rows) * stride);
+    debug_assert!(b.len() >= n * stride);
+    debug_assert_eq!(out.len(), rows * n);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::accum_band(op, a, r0, rows, b, n, d, stride, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::accum_band(op, a, r0, rows, b, n, d, stride, out) },
+        _ => accum_scalar(op, a, r0, rows, b, n, d, stride, out),
+    }
+}
+
+/// Split `out` into contiguous row bands and run `f(first_row, rows, band)`
+/// on [`planned_threads`] scoped threads (inline when the plan is 1 —
+/// no spawn cost on small panels). Band boundaries never change results:
+/// each output element is computed independently in the canonical order.
+fn run_bands(
+    settings: PanelSettings,
+    m: usize,
+    n: usize,
+    d: usize,
+    out: &mut [f32],
+    f: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    let t = planned_threads(settings, m, n, d);
+    if t <= 1 {
+        f(0, m, out);
+        return;
+    }
+    let band_rows = m.div_ceil(t);
+    std::thread::scope(|sc| {
+        let mut rest = out;
+        let mut r0 = 0;
+        while r0 < m {
+            let rows = band_rows.min(m - r0);
+            let (band, tail) = std::mem::take(&mut rest).split_at_mut(rows * n);
+            rest = tail;
+            let fr = &f;
+            sc.spawn(move || fr(r0, rows, band));
+            r0 += rows;
+        }
+    });
+}
+
+/// Squared-Euclidean `(m, n)` panel over packed `(·, stride)` panels with
+/// precomputed squared norms: `na[i] + nb[j] − 2·dot`, clamped at zero —
+/// element-for-element the `row` path's arithmetic, dot in the canonical
+/// order.
+#[allow(clippy::too_many_arguments)]
+pub fn sqeuclid_panel(
+    settings: PanelSettings,
+    a: &[f32],
+    na: &[f32],
+    m: usize,
+    b: &[f32],
+    nb: &[f32],
+    n: usize,
+    d: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(stride >= d);
+    debug_assert_eq!(a.len(), m * stride);
+    debug_assert_eq!(b.len(), n * stride);
+    debug_assert_eq!(na.len(), m);
+    debug_assert_eq!(nb.len(), n);
+    let isa = effective_isa(settings.isa, d, stride);
+    run_bands(settings, m, n, d, out, |r0, rows, band| {
+        accum_band(isa, PanelOp::Dot, a, r0, rows, b, n, d, stride, band);
+        for ii in 0..rows {
+            let nai = na[r0 + ii];
+            for (j, o) in band[ii * n..(ii + 1) * n].iter_mut().enumerate() {
+                let v = nai + nb[j] - 2.0 * *o;
+                *o = if v < 0.0 { 0.0 } else { v };
+            }
+        }
+    });
+}
+
+/// Cosine `(m, n)` panel (aux = L2 norms): `1 − dot/(‖a‖‖b‖)` with the
+/// zero-vector-at-distance-1 convention, dot in the canonical order.
+#[allow(clippy::too_many_arguments)]
+pub fn cosine_panel(
+    settings: PanelSettings,
+    a: &[f32],
+    na: &[f32],
+    m: usize,
+    b: &[f32],
+    nb: &[f32],
+    n: usize,
+    d: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(stride >= d);
+    debug_assert_eq!(a.len(), m * stride);
+    debug_assert_eq!(b.len(), n * stride);
+    let isa = effective_isa(settings.isa, d, stride);
+    run_bands(settings, m, n, d, out, |r0, rows, band| {
+        accum_band(isa, PanelOp::Dot, a, r0, rows, b, n, d, stride, band);
+        for ii in 0..rows {
+            let ni = na[r0 + ii];
+            for (j, o) in band[ii * n..(ii + 1) * n].iter_mut().enumerate() {
+                let nj = nb[j];
+                *o = if ni == 0.0 || nj == 0.0 { 1.0 } else { 1.0 - *o / (ni * nj) };
+            }
+        }
+    });
+}
+
+/// Manhattan `(m, n)` panel: canonical-order `Σ|a−b|`, no epilogue.
+pub fn manhattan_panel(
+    settings: PanelSettings,
+    a: &[f32],
+    m: usize,
+    b: &[f32],
+    n: usize,
+    d: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(stride >= d);
+    debug_assert_eq!(a.len(), m * stride);
+    debug_assert_eq!(b.len(), n * stride);
+    let isa = effective_isa(settings.isa, d, stride);
+    run_bands(settings, m, n, d, out, |r0, rows, band| {
+        accum_band(isa, PanelOp::AbsDiff, a, r0, rows, b, n, d, stride, band);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn floats(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 4.0 - 2.0).collect()
+    }
+
+    #[test]
+    fn padded_stride_rounds_to_lanes() {
+        assert_eq!(padded_stride(0), 0);
+        assert_eq!(padded_stride(1), 8);
+        assert_eq!(padded_stride(8), 8);
+        assert_eq!(padded_stride(9), 16);
+        assert_eq!(padded_stride(17), 24);
+    }
+
+    #[test]
+    fn dot_canonical_exact_on_integers() {
+        let mut rng = Pcg64::seeded(11);
+        for d in [1usize, 7, 8, 9, 19, 64] {
+            let a: Vec<f32> = (0..d).map(|_| rng.next_bounded(17) as f32 - 8.0).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.next_bounded(17) as f32 - 8.0).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert_eq!(dot_canonical(&a, &b), want, "d={d}");
+            let l1: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert_eq!(l1_canonical(&a, &b), l1, "d={d}");
+        }
+    }
+
+    /// The virtual-padding rule: the canonical kernel over the real `d`
+    /// prefix must equal itself over the explicitly zero-padded row — the
+    /// identity the SIMD panels rely on. Float data on purpose.
+    #[test]
+    fn canonical_matches_explicit_zero_padding() {
+        let mut rng = Pcg64::seeded(12);
+        for d in [1usize, 3, 7, 9, 11, 15, 19] {
+            let a = floats(&mut rng, d);
+            let b = floats(&mut rng, d);
+            let (pa, s) = pad_rows(&a, 1, d);
+            let (pb, _) = pad_rows(&b, 1, d);
+            assert_eq!(s % LANES, 0);
+            assert_eq!(
+                dot_canonical(&a, &b).to_bits(),
+                dot_canonical(&pa, &pb).to_bits(),
+                "dot d={d}"
+            );
+            assert_eq!(
+                l1_canonical(&a, &b).to_bits(),
+                l1_canonical(&pa, &pb).to_bits(),
+                "l1 d={d}"
+            );
+        }
+    }
+
+    /// Dispatched SIMD (when the host has any) and the threaded path must
+    /// be bit-identical to the forced-scalar single-thread reference.
+    #[test]
+    fn simd_and_threads_bit_identical_to_scalar() {
+        let mut rng = Pcg64::seeded(13);
+        let isa = detect_isa_hw();
+        for (m, n, d) in [(5usize, 9usize, 11usize), (8, 8, 16), (1, 3, 7), (13, 4, 33)] {
+            let (pa, stride) = pad_rows(&floats(&mut rng, m * d), m, d);
+            let (pb, _) = pad_rows(&floats(&mut rng, n * d), n, d);
+            let na: Vec<f32> = (0..m)
+                .map(|i| pa[i * stride..i * stride + d].iter().map(|x| x * x).sum())
+                .collect();
+            let nb: Vec<f32> = (0..n)
+                .map(|j| pb[j * stride..j * stride + d].iter().map(|x| x * x).sum())
+                .collect();
+            let mut reference = vec![0.0f32; m * n];
+            sqeuclid_panel(
+                PanelSettings::scalar(),
+                &pa,
+                &na,
+                m,
+                &pb,
+                &nb,
+                n,
+                d,
+                stride,
+                &mut reference,
+            );
+            for threads in [1usize, 2, 4] {
+                let s = PanelSettings { isa, threads };
+                let mut got = vec![0.0f32; m * n];
+                sqeuclid_panel(s, &pa, &na, m, &pb, &nb, n, d, stride, &mut got);
+                let same = reference
+                    .iter()
+                    .zip(&got)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "sqeuclid isa={isa:?} threads={threads} (m={m},n={n},d={d})");
+
+                let mut l1_ref = vec![0.0f32; m * n];
+                manhattan_panel(PanelSettings::scalar(), &pa, m, &pb, n, d, stride, &mut l1_ref);
+                let mut l1_got = vec![0.0f32; m * n];
+                manhattan_panel(s, &pa, m, &pb, n, d, stride, &mut l1_got);
+                let same = l1_ref.iter().zip(&l1_got).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "manhattan isa={isa:?} threads={threads} (m={m},n={n},d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_threads_is_shape_pure_and_bounded() {
+        let s = PanelSettings { isa: Isa::Scalar, threads: 8 };
+        // tiny panel: spawning is not worth it
+        assert_eq!(planned_threads(s, 4, 4, 8), 1);
+        // single row can't band
+        assert_eq!(planned_threads(s, 1, 10_000, 1024), 1);
+        // big panel: capped by the settings budget and by m
+        let t = planned_threads(s, 512, 512, 256);
+        assert!(t >= 2 && t <= 8, "t={t}");
+        assert_eq!(t, planned_threads(s, 512, 512, 256), "pure in the shape");
+        assert_eq!(planned_threads(PanelSettings::scalar(), 512, 512, 256), 1);
+    }
+
+    #[test]
+    fn isa_wire_codes_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_wire_code(isa.wire_code()), Some(isa));
+        }
+        assert_eq!(Isa::from_wire_code(0), None);
+        assert_eq!(Isa::from_wire_code(9), None);
+    }
+
+    #[test]
+    fn unpadded_stride_degrades_to_scalar() {
+        // stride == d with a lane remainder: dispatch must fall back, and
+        // the value must match the padded SIMD/scalar result bit-for-bit.
+        let mut rng = Pcg64::seeded(14);
+        let (m, n, d) = (3usize, 5usize, 11usize);
+        let a = floats(&mut rng, m * d);
+        let b = floats(&mut rng, n * d);
+        assert_eq!(effective_isa(Isa::Avx2, d, d), Isa::Scalar);
+        let mut tight = vec![0.0f32; m * n];
+        manhattan_panel(PanelSettings::detect(), &a, m, &b, n, d, d, &mut tight);
+        let (pa, stride) = pad_rows(&a, m, d);
+        let (pb, _) = pad_rows(&b, n, d);
+        let mut padded = vec![0.0f32; m * n];
+        manhattan_panel(PanelSettings::detect(), &pa, m, &pb, n, d, stride, &mut padded);
+        assert_eq!(
+            tight.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            padded.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

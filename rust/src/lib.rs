@@ -58,7 +58,7 @@
 //!   TOML-lite manifest (run shape, partition layout as compact id
 //!   ranges, per-shard digests, 64-bit fingerprint). `demst worker
 //!   --shard` loads its subsets from local disk and advertises them in
-//!   the v2 handshake; `demst run --shard` plans from the manifest alone
+//!   the versioned handshake; `demst run --shard` plans from the manifest alone
 //!   and schedules each pair job onto a worker holding **both** subsets
 //!   ([`exec::ExecPlan::affinity_for_holders`]) — so subset vectors never
 //!   pass through the leader (`RunMetrics::leader_ingest_bytes == 0` on a
@@ -71,7 +71,14 @@
 //!     blocked distance kernels ([`geometry::DistanceBlock`]) in the same
 //!     Gram/dot form the Pallas kernel uses — squared Euclidean and cosine
 //!     via precomputed norms, Manhattan via a tiled direct loop — feeding
-//!     the blocked dense Prim and the Borůvka cheapest-edge step;
+//!     the blocked dense Prim and the Borůvka cheapest-edge step. The
+//!     bipartite panel form dispatches at runtime to the register-tiled
+//!     SIMD micro-kernels in [`geometry::simd`] (AVX2+FMA-class x86, NEON
+//!     aarch64, canonical scalar fallback; `DEMST_SIMD=off` or
+//!     `panel_simd = false` forces scalar), optionally banded across
+//!     threads (`panel_threads`) — every path bit-identical to the scalar
+//!     reference by a shared fixed-order 8-lane accumulation, so SIMD
+//!     on/off never changes a tree;
 //!   - the **PJRT/XLA backend** (`--features backend-xla`): loads the HLO
 //!     artifacts through the PJRT CPU client (`xla` crate) and executes
 //!     them from the Rust hot path. Off by default so the standard build is

@@ -107,6 +107,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "spawn-workers", takes_value: false, help: "tcp: spawn the `demst worker` processes locally instead of awaiting external connects" },
         OptSpec { name: "shard", takes_value: true, help: "sharded run: plan from this `demst partition` manifest; workers hold the vectors" },
         OptSpec { name: "window", takes_value: true, help: "tcp: pair jobs in flight per worker link (default 2; 1 = strict rendezvous)" },
+        OptSpec { name: "no-panel-simd", takes_value: false, help: "force the canonical scalar panel kernels (same bits, no SIMD dispatch)" },
+        OptSpec { name: "panel-threads", takes_value: true, help: "threads per bipartite panel block, 1..=256 (default 0 = all cores)" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
         OptSpec { name: "stream-reduce", takes_value: false, help: "fold trees into a bounded running MSF at the leader" },
@@ -181,6 +183,12 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get_parse::<usize>("window")? {
         cfg.pipeline_window = v;
     }
+    if args.has_flag("no-panel-simd") {
+        cfg.panel_simd = false;
+    }
+    if let Some(v) = args.get_parse::<usize>("panel-threads")? {
+        cfg.panel_threads = v;
+    }
     if args.has_flag("no-affinity") {
         cfg.affinity = false;
     }
@@ -244,6 +252,10 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     };
     if let Some(note) = &out.metrics.kernel_fallback {
         println!("kernel fallback: {note}");
+    }
+    let kernel_line = out.metrics.kernel_summary();
+    if !kernel_line.is_empty() {
+        println!("kernel: {kernel_line}");
     }
     println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
     println!("metrics: {}", out.metrics.summary());

@@ -26,7 +26,7 @@ use crate::coordinator::messages::{Message, SubsetShip};
 use crate::data::Dataset;
 use crate::decomp::PairJob;
 use crate::exec::plan::ExecPlan;
-use crate::exec::{LocalMstCache, Shipment, Solved, SolverFinal};
+use crate::exec::{LocalMstCache, PanelPerf, Shipment, Solved, SolverFinal};
 use anyhow::{bail, Result};
 
 /// Driver for one leader↔worker link (frames strictly FIFO; the link's
@@ -129,11 +129,26 @@ impl<'a> RemoteLink<'a> {
         self.tcp.send_to(self.worker, &Message::Shutdown, Direction::Control)?;
         match self.tcp.recv_from(self.worker)? {
             Message::WorkerDone {
-                local_tree, dist_evals, busy, panel_hits, panel_misses, ..
+                local_tree,
+                dist_evals,
+                busy,
+                panel_hits,
+                panel_misses,
+                panel_flops,
+                panel_time,
+                panel_threads,
+                panel_isa,
+                ..
             } => Ok(SolverFinal {
                 dist_evals,
                 panel_hits,
                 panel_misses,
+                panel_perf: PanelPerf {
+                    flops: panel_flops,
+                    time: panel_time,
+                    threads: panel_threads,
+                    isa: panel_isa,
+                },
                 busy: Some(busy),
                 local_tree,
             }),

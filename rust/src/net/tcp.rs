@@ -35,7 +35,7 @@ struct Link {
 /// `pipeline_window` requests outstanding before their replies are read.
 pub struct TcpTransport {
     links: Vec<Mutex<Link>>,
-    /// shard ids advertised by each worker during the v2 handshake
+    /// shard ids advertised by each worker during the versioned handshake
     /// (empty on unsharded workers)
     advertised: Vec<Vec<u32>>,
     counters: Arc<NetCounters>,

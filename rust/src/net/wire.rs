@@ -25,11 +25,19 @@
 //! has exactly `|S_k| - 1` edges) — which is what lets the frame sizes equal
 //! the engine's modeled scatter charges byte-for-byte.
 //!
-//! ## Wire limits (v2)
+//! ## Wire limits (v3)
 //!
 //! `parts ≤ 65535`, `d ≤ 65535`, `workers ≤ 255` (per-job `Result` routing),
 //! durations saturate at 2⁴⁸−1 ns (~3.2 days per job). [`RunConfig`]
 //! validation rejects TCP configurations outside these bounds up front.
+//!
+//! ## v3 additions (panel-kernel witnesses)
+//!
+//! [`WorkerDone`](Message::WorkerDone)'s stats block grows from 40 to 64
+//! bytes: `panel_flops` (u64), `panel_time` (u64 nanos), `panel_threads`
+//! (u32), and `panel_isa` (u32 holding a [`crate::geometry::Isa`] wire
+//! code, 0 = no panels ran) — the SIMD kernel witnesses the leader folds
+//! into its run metrics.
 //!
 //! ## v2 additions (sharded residency + pipelined dispatch)
 //!
@@ -60,7 +68,7 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 2;
+pub const WIRE_VERSION: u16 = 3;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
@@ -81,7 +89,7 @@ const TAG_SHARD_ADVERTISE: u8 = 12;
 const TAG_LOCAL_ASSIGN: u8 = 13;
 
 const EDGE_BYTES: u64 = Edge::WIRE_BYTES as u64;
-const STATS_BYTES: u64 = 40;
+const STATS_BYTES: u64 = 64;
 const MAX_U48: u64 = (1 << 48) - 1;
 
 /// Bytes of one vectors section: global-id map + row-major f32 rows.
@@ -302,6 +310,10 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             jobs_stolen,
             panel_hits,
             panel_misses,
+            panel_flops,
+            panel_time,
+            panel_threads,
+            panel_isa,
         } => {
             let mut f = FrameBuf::new(TAG_WORKER_DONE, payload)?;
             f.set_u8(5, local_tree.is_some() as u8);
@@ -311,6 +323,9 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             f.push_u32s(&[*jobs_run, *jobs_stolen]);
             f.push_u64(*panel_hits);
             f.push_u64(*panel_misses);
+            f.push_u64(*panel_flops);
+            f.push_u64(u64::try_from(panel_time.as_nanos()).unwrap_or(u64::MAX));
+            f.push_u32s(&[*panel_threads, *panel_isa as u32]);
             if let Some(tree) = local_tree {
                 f.push_edges(tree);
             }
@@ -522,6 +537,11 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
             let jobs_stolen = r.u32()?;
             let panel_hits = r.u64()?;
             let panel_misses = r.u64()?;
+            let panel_flops = r.u64()?;
+            let panel_time = Duration::from_nanos(r.u64()?);
+            let panel_threads = r.u32()?;
+            let panel_isa = u8::try_from(r.u32()?)
+                .map_err(|_| anyhow!("WorkerDone panel_isa out of u8 range"))?;
             let local_tree = if has_tree {
                 Some(r.edges(derive_edges(tree_bytes, "WorkerDone tree")?)?)
             } else {
@@ -536,6 +556,10 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 jobs_stolen,
                 panel_hits,
                 panel_misses,
+                panel_flops,
+                panel_time,
+                panel_threads,
+                panel_isa,
             }
         }
         TAG_SHUTDOWN => Message::Shutdown,
@@ -868,6 +892,10 @@ mod tests {
             jobs_stolen: 2,
             panel_hits: 11,
             panel_misses: 3,
+            panel_flops: 1 << 40,
+            panel_time: Duration::from_nanos(987_654_321),
+            panel_threads: 8,
+            panel_isa: 2,
         };
         assert_eq!(roundtrip(&done, None), done);
         // None vs Some(vec![]) is preserved by the has-tree flag
@@ -880,6 +908,10 @@ mod tests {
             jobs_stolen: 0,
             panel_hits: 0,
             panel_misses: 0,
+            panel_flops: 0,
+            panel_time: Duration::ZERO,
+            panel_threads: 0,
+            panel_isa: 0,
         };
         assert_eq!(roundtrip(&bare, None), bare);
     }

@@ -40,9 +40,10 @@ use crate::decomp::reduction::tree_merge;
 use crate::decomp::PairJob;
 use crate::dense::DenseMst;
 use crate::exec::{
-    bipartite_filtered_prim_blocked, subset_mst_gathered, KeyedLru, PANEL_CACHE_CAP,
+    bipartite_filtered_prim_blocked, subset_mst_gathered, KeyedLru, PanelPerf, PANEL_CACHE_CAP,
 };
-use crate::geometry::blocked::{distance_block, DistanceBlock};
+use crate::geometry::blocked::{distance_block_with, DistanceBlock};
+use crate::geometry::simd::{self, PanelSettings};
 use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::shard::{Manifest, Shard};
@@ -99,13 +100,25 @@ impl Default for WorkerOptions {
 }
 
 /// One resident partition subset: rows packed in ascending-global-id order,
-/// the matching per-row aux values (norms), and — once known — the subset's
-/// local MST in compare-form weights.
+/// the matching per-row aux values (norms), a zero-padded copy of the rows
+/// at the SIMD panel stride, and — once known — the subset's local MST in
+/// compare-form weights.
 struct Slot {
     ids: Vec<u32>,
     points: Dataset,
     aux: Vec<f32>,
+    /// Rows repacked at `stride` (lane-multiple, zero pad) for the SIMD
+    /// panel path — the worker-side twin of the in-process `SubsetPanel`.
+    panel: Vec<f32>,
+    stride: usize,
     tree: Option<Vec<Edge>>,
+}
+
+impl Slot {
+    fn new(ids: Vec<u32>, points: Dataset, aux: Vec<f32>, tree: Option<Vec<Edge>>) -> Self {
+        let (panel, stride) = simd::pad_rows(points.as_slice(), points.n, points.d);
+        Self { ids, points, aux, panel, stride, tree }
+    }
 }
 
 /// Connect to a leader with retries (the leader may still be binding), then
@@ -230,7 +243,8 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     let kind = wire::metric_from_code(setup.metric)?;
     let pair_kernel = wire::pair_kernel_from_code(setup.pair_kernel)?;
     let kernel_choice = wire::kernel_from_code(setup.kernel)?;
-    let block = distance_block(kind);
+    let panel_settings = PanelSettings::detect();
+    let block = distance_block_with(kind, panel_settings);
     let sqrt_at_emit = block.compare_form_is_squared();
     let n = setup.n as usize;
     let ctx = WireCtx { d: setup.d as usize, part_sizes: setup.part_sizes.clone() };
@@ -255,7 +269,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
             shard_report.0 += 1;
             shard_report.1 += shard.local_payload_bytes();
             let aux = block.prepare(shard.points.as_slice(), shard.points.n, shard.points.d);
-            store[k] = Some(Slot { ids: shard.ids, points: shard.points, aux, tree: None });
+            store[k] = Some(Slot::new(shard.ids, shard.points, aux, None));
         }
     }
     // Built on first dense union solve; carries its own eval counter.
@@ -275,6 +289,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     let mut pair_evals = 0u64;
     let mut busy = Duration::ZERO;
     let mut folded: Option<Vec<Edge>> = None;
+    let mut panel_perf = PanelPerf::default();
 
     loop {
         let frame = wire::read_frame(&mut stream).context("reading job frame")?;
@@ -292,8 +307,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                 if k >= store.len() {
                     bail!("LocalJob for subset {k} outside the {}-part run", store.len());
                 }
-                store[k] =
-                    Some(Slot { ids: global_ids, points, aux, tree: Some(tree.clone()) });
+                store[k] = Some(Slot::new(global_ids, points, aux, Some(tree.clone())));
                 Message::LocalDone { part, edges: tree, compute }
             }
             Message::LocalAssign { part } => {
@@ -335,8 +349,11 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                         &store,
                         &job,
                         block.as_ref(),
+                        kind,
+                        panel_settings,
                         sqrt_at_emit,
                         &mut panel_lru,
+                        &mut panel_perf,
                     )?,
                     PairKernelChoice::Dense => {
                         let kernel = dense_kernel_mut(
@@ -412,6 +429,10 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                     jobs_stolen: 0,
                     panel_hits: panel_lru.hits,
                     panel_misses: panel_lru.misses,
+                    panel_flops: panel_perf.flops,
+                    panel_time: panel_perf.time,
+                    panel_threads: panel_perf.threads,
+                    panel_isa: panel_perf.isa,
                 };
                 let frame = wire::encode(&done)?;
                 // Best-effort: a leader that already gave up must not turn a
@@ -438,7 +459,7 @@ fn absorb(store: &mut [Option<Slot>], block: &dyn DistanceBlock, ship: crate::co
     match (ship.vectors, ship.tree) {
         (Some((ids, points)), tree) => {
             let aux = block.prepare(points.as_slice(), points.n, points.d);
-            store[k] = Some(Slot { ids, points, aux, tree });
+            store[k] = Some(Slot::new(ids, points, aux, tree));
         }
         (None, Some(tree)) => match &mut store[k] {
             Some(slot) => slot.tree = Some(tree),
@@ -459,13 +480,19 @@ fn resident<'a>(store: &'a [Option<Slot>], k: u32, what: &str) -> Result<&'a Slo
 /// The bipartite-merge pair kernel over resident subsets: one
 /// `|S_i| × |S_j|` panel product + filtered Prim, exactly the in-process
 /// [`crate::exec::BipartitePairSolver`] arithmetic. Returns the
-/// emission-form tree and the distance evaluations performed.
+/// emission-form tree and the distance evaluations performed; panel-kernel
+/// witnesses (flops, wall time, threads, ISA) accumulate into `perf` for
+/// the final `WorkerDone` frame.
+#[allow(clippy::too_many_arguments)]
 fn solve_bipartite(
     store: &[Option<Slot>],
     job: &PairJob,
     block: &dyn DistanceBlock,
+    kind: crate::geometry::MetricKind,
+    panel_settings: PanelSettings,
     sqrt_at_emit: bool,
     panel_lru: &mut KeyedLru<()>,
+    perf: &mut PanelPerf,
 ) -> Result<(Vec<Edge>, u64)> {
     if job.i == job.j {
         // Degenerate self-pair: the cached local MST is the pair tree.
@@ -486,19 +513,17 @@ fn solve_bipartite(
         _ => bail!("pair job ({}, {}): local MST missing on a resident subset", job.i, job.j),
     };
     let d = a.points.d;
-    let mut blk = vec![0.0f32; a.points.n * b.points.n];
-    block.panel_block(
-        a.points.as_slice(),
-        &a.aux,
-        a.points.n,
-        b.points.as_slice(),
-        &b.aux,
-        b.points.n,
-        d,
-        &mut blk,
-    );
+    let (m, n) = (a.points.n, b.points.n);
+    debug_assert_eq!(a.stride, b.stride, "pad_rows stride is a function of d alone");
+    let mut blk = vec![0.0f32; m * n];
+    let t = Instant::now();
+    block.panel_block(&a.panel, &a.aux, m, &b.panel, &b.aux, n, d, a.stride, &mut blk);
+    perf.time += t.elapsed();
+    perf.flops += simd::panel_flops(kind, m, n, d);
+    perf.threads = perf.threads.max(simd::planned_threads(panel_settings, m, n, d) as u32);
+    perf.isa = panel_settings.isa.wire_code();
     let tree = bipartite_filtered_prim_blocked(&a.ids, &b.ids, ti, tj, &blk);
-    Ok((emit(&tree, sqrt_at_emit), (a.points.n * b.points.n) as u64))
+    Ok((emit(&tree, sqrt_at_emit), (m * n) as u64))
 }
 
 /// The dense pair kernel over resident subsets: merge the two gathered

@@ -161,16 +161,35 @@ pub fn artifacts_available(artifacts_dir: &Path) -> bool {
 /// workers.
 pub fn kernel_fallback_note(cfg: &RunConfig) -> Option<String> {
     if cfg.pair_kernel == crate::config::PairKernelChoice::BipartiteMerge {
-        // The bipartite-merge pair kernel always runs the blocked Rust
-        // local/bipartite kernels; an explicit XLA request would otherwise
-        // be dropped silently.
+        // The bipartite-merge pair kernel runs the blocked Rust local
+        // kernels; an explicit XLA request routes its *panel blocks*
+        // through the AOT pairwise artifact when this build and filesystem
+        // can honor that, and must be reported when they cannot.
         if cfg.kernel == KernelChoice::BoruvkaXla {
-            return Some(
-                "pair_kernel bipartite-merge runs the blocked Rust kernels; the requested \
-                 boruvka-xla d-MST kernel is not used (select pair_kernel dense to execute \
-                 XLA artifacts)"
-                    .to_string(),
-            );
+            if !backend_xla_compiled() {
+                return Some(
+                    "pair_kernel bipartite-merge: routing panel blocks through the \
+                     boruvka-xla pairwise artifact needs --features backend-xla; panels \
+                     run the SIMD/scalar Rust kernels"
+                        .to_string(),
+                );
+            }
+            if !matches!(cfg.metric, MetricKind::SqEuclid | MetricKind::Euclid) {
+                return Some(format!(
+                    "pair_kernel bipartite-merge: the boruvka-xla pairwise artifact \
+                     computes (squared) Euclidean only; {} panels run the SIMD/scalar \
+                     Rust kernels",
+                    cfg.metric.name()
+                ));
+            }
+            if !artifacts_available(&cfg.artifacts_dir) {
+                return Some(format!(
+                    "pair_kernel bipartite-merge: no artifacts at {}; boruvka-xla panel \
+                     routing disabled, panels run the SIMD/scalar Rust kernels",
+                    cfg.artifacts_dir.display()
+                ));
+            }
+            return None; // panel blocks route through the XLA artifact
         }
         return None;
     }
@@ -183,6 +202,21 @@ pub fn kernel_fallback_note(cfg: &RunConfig) -> Option<String> {
     } else {
         None
     }
+}
+
+/// The artifact directory the bipartite pair kernel's panel blocks should
+/// route through — `Some` only when the config explicitly requests the XLA
+/// kernel under `pair_kernel bipartite-merge` AND this build compiled the
+/// feature AND the metric is (squared) Euclidean AND the artifact manifest
+/// is present. `None` means the SIMD/scalar panel path runs (with the
+/// reason, if any, in [`kernel_fallback_note`]).
+pub fn xla_panel_dir(cfg: &RunConfig) -> Option<std::path::PathBuf> {
+    (cfg.pair_kernel == crate::config::PairKernelChoice::BipartiteMerge
+        && cfg.kernel == KernelChoice::BoruvkaXla
+        && backend_xla_compiled()
+        && matches!(cfg.metric, MetricKind::SqEuclid | MetricKind::Euclid)
+        && artifacts_available(&cfg.artifacts_dir))
+    .then(|| cfg.artifacts_dir.clone())
 }
 
 /// The kernel name workers actually run for this config in this build.
@@ -306,9 +340,26 @@ mod tests {
         cfg.pair_kernel = crate::config::PairKernelChoice::BipartiteMerge;
         assert!(kernel_fallback_note(&cfg).is_none(), "rust kernels: nothing to report");
         cfg.kernel = KernelChoice::BoruvkaXla;
-        let note = kernel_fallback_note(&cfg).expect("explicit xla request must be flagged");
-        assert!(note.contains("bipartite-merge"), "{note}");
-        assert!(note.contains("boruvka-xla"), "{note}");
+        match kernel_fallback_note(&cfg) {
+            Some(note) => {
+                assert!(note.contains("bipartite-merge"), "{note}");
+                assert!(note.contains("boruvka-xla"), "{note}");
+                assert!(xla_panel_dir(&cfg).is_none(), "note and routing are exclusive");
+            }
+            None => {
+                // only possible when the build + filesystem can actually
+                // route panel blocks through the artifact
+                assert!(backend_xla_compiled() && artifacts_available(&cfg.artifacts_dir));
+                assert_eq!(xla_panel_dir(&cfg), Some(cfg.artifacts_dir.clone()));
+            }
+        }
+        // a non-Euclidean metric can never route through the artifact
+        cfg.metric = MetricKind::Manhattan;
+        assert!(xla_panel_dir(&cfg).is_none());
+        if backend_xla_compiled() {
+            let note = kernel_fallback_note(&cfg).expect("metric mismatch must be flagged");
+            assert!(note.contains("Euclidean"), "{note}");
+        }
     }
 
     #[test]

@@ -37,7 +37,8 @@ pub mod pairwise;
 
 pub use backend::{
     artifacts_available, backend_xla_compiled, build_dense_kernel, exec_kernel_label,
-    kernel_fallback_note, resolved_kernel_name, BackendKind, ComputeBackend, RustBackend,
+    kernel_fallback_note, resolved_kernel_name, xla_panel_dir, BackendKind, ComputeBackend,
+    RustBackend,
 };
 pub use manifest::{Artifact, Manifest};
 

@@ -51,4 +51,39 @@ impl XlaPairwise {
         }
         Ok(m)
     }
+
+    /// `(m, n)` squared-Euclidean **bipartite** block between two packed
+    /// panels (`d` real values per row at `stride_a`/`stride_b`): stacks
+    /// the `m + n` rows into one point set, runs the AOT self-matrix
+    /// kernel, and slices out the off-diagonal block. The bipartite hook
+    /// behind the pair kernel's panel path in `backend-xla` builds.
+    #[allow(clippy::too_many_arguments)]
+    pub fn bipartite_block(
+        &self,
+        a: &[f32],
+        m: usize,
+        stride_a: usize,
+        b: &[f32],
+        n: usize,
+        stride_b: usize,
+        d: usize,
+    ) -> Result<Vec<f32>> {
+        debug_assert!(a.len() >= m * stride_a && stride_a >= d);
+        debug_assert!(b.len() >= n * stride_b && stride_b >= d);
+        let mut pts = vec![0.0f32; (m + n) * d];
+        for i in 0..m {
+            pts[i * d..(i + 1) * d].copy_from_slice(&a[i * stride_a..i * stride_a + d]);
+        }
+        for j in 0..n {
+            pts[(m + j) * d..(m + j + 1) * d]
+                .copy_from_slice(&b[j * stride_b..j * stride_b + d]);
+        }
+        let full = self.matrix(&pts, m + n, d)?;
+        let w = m + n;
+        let mut blk = Vec::with_capacity(m * n);
+        for i in 0..m {
+            blk.extend_from_slice(&full[i * w + m..i * w + m + n]);
+        }
+        Ok(blk)
+    }
 }

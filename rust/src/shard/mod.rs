@@ -7,7 +7,7 @@
 //! per-shard digests, and a 64-bit fingerprint). Each `demst worker
 //! --shard <manifest> --shard-ids ...` process loads its shards from local
 //! disk at startup ([`load_worker_shards`]) and advertises the resident
-//! subset ids during the v2 handshake; the leader plans the run from the
+//! subset ids during the versioned handshake; the leader plans the run from the
 //! manifest alone ([`Manifest::layout`]), treats advertised subsets as
 //! already-held in its resident-set `Shipment` model, and restricts
 //! scheduling to workers that hold both subsets of a pair job — so subset

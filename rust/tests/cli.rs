@@ -201,6 +201,39 @@ fn run_bipartite_stream_reduce_end_to_end() {
     assert!(stdout.contains("panel_cache="), "{stdout}");
     assert!(stdout.contains("folds="), "{stdout}");
     assert!(stdout.contains("workers:"), "{stdout}");
+    // the SIMD panel path reports which ISA it dispatched to
+    assert!(stdout.contains("kernel: isa="), "{stdout}");
+    assert!(stdout.contains("lanes="), "{stdout}");
+}
+
+#[test]
+fn run_panel_simd_off_is_bit_identical_and_reported() {
+    let base = [
+        "run", "--data", "blobs", "--n", "90", "--d", "7", "--parts", "3",
+        "--pair-kernel", "bipartite",
+    ];
+    let simd = demst().args(base).output().unwrap();
+    assert!(simd.status.success(), "stderr: {}", String::from_utf8_lossy(&simd.stderr));
+    let scalar = demst().args(base).args(["--no-panel-simd", "--panel-threads", "1"]).output().unwrap();
+    assert!(scalar.status.success(), "stderr: {}", String::from_utf8_lossy(&scalar.stderr));
+    let (so, co) = (
+        String::from_utf8_lossy(&simd.stdout).to_string(),
+        String::from_utf8_lossy(&scalar.stdout).to_string(),
+    );
+    // forced-scalar path reports itself and why
+    assert!(co.contains("kernel: isa=scalar lanes=1"), "{co}");
+    assert!(co.contains("fallback:"), "{co}");
+    // same dataset, same tree weight to the printed digit — the bit-identity
+    // contract seen from the CLI
+    let weight = |s: &str| {
+        s.lines().find(|l| l.starts_with("mst:")).map(|l| l.to_string()).expect("mst line")
+    };
+    assert_eq!(weight(&so), weight(&co), "SIMD and scalar runs must agree exactly");
+    // panel_threads out of range fails validation with a clear error
+    let bad = demst().args(base).args(["--panel-threads", "257"]).output().unwrap();
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("1..=256"), "{err}");
 }
 
 #[test]

@@ -347,6 +347,72 @@ fn prop_affinity_scatter_never_exceeds_dense_model() {
 }
 
 #[test]
+fn prop_simd_panels_bit_identical_to_scalar() {
+    // The tentpole contract of the SIMD kernel layer: for every metric, the
+    // dispatched panel path (whatever ISA the host detects), the forced-
+    // scalar panel path, and the per-row reference produce THE SAME BITS —
+    // across remainder dimensions (d % 8 ≠ 0), panel sizes that straddle
+    // the register tile, and every thread fan-out. Anything else would
+    // change the strict (w, u, v) edge order downstream.
+    use demst::geometry::simd::{self, PanelSettings};
+    use demst::geometry::{distance_block_with, MetricKind};
+
+    // tile edges for the 8×(4×2) register tile, plus off-by-ones
+    const SIZES: [usize; 5] = [1, 3, 4, 5, 11];
+    const DIMS: [usize; 8] = [1, 7, 8, 9, 16, 17, 19, 33];
+    const THREADS: [usize; 3] = [1, 2, 4];
+
+    Runner::new("simd panel bit-identity", 0xD6, 30).run(|g| {
+        let d = DIMS[g.usize_in(0..DIMS.len())];
+        let m = SIZES[g.usize_in(0..SIZES.len())];
+        let n = SIZES[g.usize_in(0..SIZES.len())];
+        let a: Vec<f32> = g.vec_f32(-8.0, 8.0, m * d);
+        let b: Vec<f32> = g.vec_f32(-8.0, 8.0, n * d);
+        let (pa, stride) = simd::pad_rows(&a, m, d);
+        let (pb, _) = simd::pad_rows(&b, n, d);
+        for kind in [
+            MetricKind::SqEuclid,
+            MetricKind::Euclid,
+            MetricKind::Cosine,
+            MetricKind::Manhattan,
+        ] {
+            // row-path reference over the stacked (m + n, d) matrix
+            let reference = distance_block_with(kind, PanelSettings::scalar());
+            let mut stacked = a.clone();
+            stacked.extend_from_slice(&b);
+            let aux = reference.prepare(&stacked, m + n, d);
+            let js: Vec<u32> = (m as u32..(m + n) as u32).collect();
+            let mut rows = vec![0.0f32; m * n];
+            for i in 0..m {
+                reference.row(&stacked, d, &aux, i, &js, &mut rows[i * n..(i + 1) * n]);
+            }
+            // per-panel aux (row-local norms; empty for manhattan)
+            let aux_a = reference.prepare(&a, m, d);
+            let aux_b = reference.prepare(&b, n, d);
+            let mut scalar_out = vec![0.0f32; m * n];
+            reference.panel_block(&pa, &aux_a, m, &pb, &aux_b, n, d, stride, &mut scalar_out);
+            assert_eq!(
+                scalar_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                rows.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{kind:?} d={d} m={m} n={n}: scalar panel vs rows"
+            );
+            for threads in THREADS {
+                let settings = PanelSettings { threads, ..PanelSettings::detect() };
+                let blk = distance_block_with(kind, settings);
+                let mut out = vec![0.0f32; m * n];
+                blk.panel_block(&pa, &aux_a, m, &pb, &aux_b, n, d, stride, &mut out);
+                assert_eq!(
+                    out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    scalar_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{kind:?} d={d} m={m} n={n} threads={threads} isa={}: SIMD vs scalar",
+                    settings.isa.label()
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_wire_encoding_roundtrips_bit_identically() {
     // The net/wire codec is the single source of truth for Message sizes:
     // for every variant, `encode(m).len() == m.wire_bytes()` and
@@ -455,6 +521,10 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
                 jobs_stolen: g.rng().next_u64() as u32,
                 panel_hits: g.rng().next_u64(),
                 panel_misses: g.rng().next_u64(),
+                panel_flops: g.rng().next_u64(),
+                panel_time: Duration::from_nanos(g.rng().next_u64() >> 1),
+                panel_threads: g.rng().next_u64() as u32,
+                panel_isa: (g.rng().next_u64() % 4) as u8,
             },
             None,
         );

@@ -17,13 +17,15 @@ import sys
 # (rust/benches/e7_kernel.rs, rust/benches/e8_end_to_end.rs); a new section
 # should be added here in the same PR that starts recording it.
 REQUIRED_SECTIONS = {
-    "e7_kernel": {"cheapest_edge", "prim_dense"},
+    "e7_kernel": {"cheapest_edge", "prim_dense", "panel_simd"},
     "e8_end_to_end": {"pair_kernel", "stream_fold", "transport"},
 }
 # Rows that must exist *within* a section. The transport section must keep
 # both pipelined-dispatch ablation rows (window=1 rendezvous vs window=2
-# overlap) next to the simulated baseline.
+# overlap) next to the simulated baseline; the panel_simd section must keep
+# all three kernel providers (canonical scalar, SIMD dispatch, threaded).
 REQUIRED_PROVIDERS = {
+    "e7_kernel": {"panel_simd": {"panel-scalar", "panel-simd", "panel-simd-mt"}},
     "e8_end_to_end": {"transport": {"sim", "tcp-win1", "tcp-win2"}},
 }
 REQUIRED_TOP_KEYS = {"bench", "rows"}
