@@ -231,6 +231,84 @@ fn main() {
         })
         .collect();
 
+    // --------- reduction-topology ablation: where the partial MSFs ⊕-fold.
+    // Three loopback-TCP runs, 3 workers each, reduce mode. `leader` gathers
+    // every worker's folded partial over the leader link; `tree` and `ring`
+    // fold worker↔worker along the peer data plane so only the final
+    // ≤|V|-1-edge forest (plus bare 96-byte stats frames) reaches the
+    // leader — strictly fewer leader-link bytes, witnessed below.
+    use demst::config::ReduceTopology;
+    let mut reduction_rows: Vec<ReductionRow> = Vec::new();
+    let mut leader_link_baseline = 0u64;
+    for topology in [ReduceTopology::Leader, ReduceTopology::Tree, ReduceTopology::Ring] {
+        let mut rcfg = cfg.clone();
+        rcfg.reduce_tree = true;
+        rcfg.reduce_topology = topology;
+        rcfg.workers = 3;
+        rcfg.transport = TransportChoice::Tcp;
+        rcfg.listen = Some("127.0.0.1:0".into());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let endpoints: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    demst::net::worker::run(&addr.to_string(), std::time::Duration::from_secs(30))
+                })
+            })
+            .collect();
+        let run = demst::net::launch::serve(&ds, &rcfg, &listener).unwrap();
+        for h in endpoints {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(
+            demst::mst::normalize_tree(&exact),
+            demst::mst::normalize_tree(&run.mst),
+            "reduce topology {} must stay exact",
+            topology.name()
+        );
+        let leader_bytes =
+            run.metrics.scatter_bytes + run.metrics.gather_bytes + run.metrics.control_bytes;
+        if topology == ReduceTopology::Leader {
+            leader_link_baseline = leader_bytes;
+            assert_eq!(run.metrics.peer_bytes, 0, "leader topology uses no peer links");
+        } else {
+            assert!(
+                leader_bytes < leader_link_baseline,
+                "{} topology must move strictly fewer leader-link bytes ({} vs {})",
+                topology.name(),
+                leader_bytes,
+                leader_link_baseline
+            );
+            assert!(run.metrics.peer_bytes > 0, "{} folds travel peer links", topology.name());
+        }
+        reduction_rows.push(ReductionRow {
+            provider: topology.name(),
+            ms: run.metrics.wall.as_secs_f64() * 1e3,
+            leader_bytes,
+            gather_bytes: run.metrics.gather_bytes,
+            peer_bytes: run.metrics.peer_bytes,
+        });
+    }
+    let mut t5 = Table::new(
+        format!("E8e reduction topologies (n={n}, d={d}, |P|={parts}, workers=3, reduce mode)"),
+        &["topology", "wall ms", "leader bytes", "gather", "peer bytes", "vs leader"],
+    );
+    for r in &reduction_rows {
+        t5.push_row(&[
+            r.provider.to_string(),
+            format!("{:.1}", r.ms),
+            demst::util::human_bytes(r.leader_bytes),
+            demst::util::human_bytes(r.gather_bytes),
+            demst::util::human_bytes(r.peer_bytes),
+            if r.leader_bytes == leader_link_baseline && r.provider == "leader" {
+                "-".to_string()
+            } else {
+                format!("{:.2}x", leader_link_baseline as f64 / r.leader_bytes.max(1) as f64)
+            },
+        ]);
+    }
+    t5.print();
+
     // ------------- stream-reduce fold micro-bench: re-sort vs merge-join.
     // Folding the same |P|(|P|-1)/2 pair trees repeatedly; the baseline is
     // the pre-incremental reducer (a full Kruskal — i.e. a re-sort of
@@ -325,7 +403,10 @@ fn main() {
     ];
 
     let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e8.json".into());
-    match std::fs::write(&out_path, to_json(&rows, &stream_rows, &transport_json, n, d, parts, fast)) {
+    match std::fs::write(
+        &out_path,
+        to_json(&rows, &stream_rows, &transport_json, &reduction_rows, n, d, parts, fast),
+    ) {
         Ok(()) => println!("E8: wrote {out_path}"),
         Err(e) => eprintln!("E8: could not write {out_path}: {e}"),
     }
@@ -362,11 +443,22 @@ struct TransportRow {
     speedup: Option<f64>,
 }
 
+struct ReductionRow {
+    provider: &'static str,
+    ms: f64,
+    /// Every byte the leader link carried: scatter + gather + control.
+    leader_bytes: u64,
+    gather_bytes: u64,
+    /// Worker↔worker fold traffic (zero under the leader topology).
+    peer_bytes: u64,
+}
+
 /// Hand-rolled JSON (no serde in the offline vendor set).
 fn to_json(
     rows: &[JsonRow],
     stream_rows: &[StreamRow],
     transport_rows: &[TransportRow],
+    reduction_rows: &[ReductionRow],
     n: usize,
     d: usize,
     parts: usize,
@@ -407,6 +499,13 @@ fn to_json(
              \"scatter_bytes\": {}, \"gather_bytes\": {}, \"messages\": {}, \
              \"speedup_vs_sim\": {}}}",
             r.provider, r.ms, r.scatter_bytes, r.gather_bytes, r.messages, speedup,
+        ));
+    }
+    for r in reduction_rows {
+        row_strs.push(format!(
+            "    {{\"section\": \"reduction\", \"provider\": \"{}\", \"ms\": {:.4}, \
+             \"leader_bytes\": {}, \"gather_bytes\": {}, \"peer_bytes\": {}}}",
+            r.provider, r.ms, r.leader_bytes, r.gather_bytes, r.peer_bytes,
         ));
     }
     s.push_str(&row_strs.join(",\n"));

@@ -95,6 +95,43 @@ impl TransportChoice {
     }
 }
 
+/// Where the ⊕-reduction of per-worker partial MSFs happens.
+///
+/// Requires `reduce_tree` (worker-local folding) — under gather mode every
+/// pair tree already travels to the leader, so there is nothing for the
+/// fleet to fold among itself.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceTopology {
+    /// every worker's partial MSF travels to the leader, which folds them
+    /// all (the v3 behaviour and the default)
+    Leader,
+    /// workers fold pairwise along a deterministic binomial-tree schedule;
+    /// only the root worker's ≤ |V|−1-edge forest reaches the leader
+    Tree,
+    /// each worker folds into its next-higher-id alive neighbour in a
+    /// chain; only the highest-id worker's forest reaches the leader
+    Ring,
+}
+
+impl ReduceTopology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceTopology::Leader => "leader",
+            ReduceTopology::Tree => "tree",
+            ReduceTopology::Ring => "ring",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "leader" => Some(Self::Leader),
+            "tree" | "binomial" => Some(Self::Tree),
+            "ring" | "chain" => Some(Self::Ring),
+            _ => None,
+        }
+    }
+}
+
 /// Simulated network model parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetConfig {
@@ -161,6 +198,16 @@ pub struct RunConfig {
     pub seed: u64,
     /// gather (paper default) vs tree-reduction variant
     pub reduce_tree: bool,
+    /// where worker partial MSFs ⊕-fold: at the leader (default), or among
+    /// the workers along a binomial-tree or ring schedule so only the final
+    /// forest reaches the leader (requires `reduce_tree`)
+    pub reduce_topology: ReduceTopology,
+    /// peer-routed tree scatter: the building anchor of a subset forwards
+    /// its cached local MST directly to the worker that needs it, and the
+    /// leader ships a header-only routing flag instead of the payload.
+    /// `None` = on exactly for sharded runs (where the leader link should
+    /// carry no data bytes at all); see [`RunConfig::effective_peer_route`].
+    pub peer_route: Option<bool>,
     /// pair-job kernel: dense oracle vs cached-local-MST bipartite merge
     pub pair_kernel: PairKernelChoice,
     /// subset-affinity scheduling (default on): jobs route to the anchor
@@ -224,6 +271,8 @@ impl Default for RunConfig {
             workers: 0,
             seed: 42,
             reduce_tree: false,
+            reduce_topology: ReduceTopology::Leader,
+            peer_route: None,
             pair_kernel: PairKernelChoice::Dense,
             affinity: true,
             stream_reduce: false,
@@ -265,6 +314,14 @@ impl RunConfig {
         crate::geometry::PanelSettings::from_config(self.panel_simd, self.panel_threads)
     }
 
+    /// Whether this run routes cached-tree scatter over peer links. The
+    /// explicit `peer_route` setting wins; otherwise it defaults to **on
+    /// for sharded runs** (their whole point is a data-free leader link)
+    /// and off elsewhere.
+    pub fn effective_peer_route(&self) -> bool {
+        self.peer_route.unwrap_or(self.shard_manifest.is_some())
+    }
+
     /// Check invariants; call after all overrides are applied.
     pub fn validate(&self) -> Result<()> {
         if self.parts == 0 {
@@ -299,7 +356,7 @@ impl RunConfig {
                 bail!("transport tcp requires an explicit worker count (--workers N): a remote fleet cannot be auto-sized from local cores");
             }
             if self.workers > u8::MAX as usize {
-                bail!("transport tcp supports at most {} workers (wire v3 limit)", u8::MAX);
+                bail!("transport tcp supports at most {} workers (wire v4 limit)", u8::MAX);
             }
             // Shape-dependent checks run against the shape that will
             // actually execute: the CLI/config one here, or the manifest's
@@ -312,6 +369,12 @@ impl RunConfig {
         }
         if self.pipeline_window == 0 || self.pipeline_window > 64 {
             bail!("pipeline window must be in 1..=64 (got {})", self.pipeline_window);
+        }
+        if self.reduce_topology != ReduceTopology::Leader && !self.reduce_tree {
+            bail!(
+                "--reduce-topology {} requires --reduce-tree: under gather mode every pair tree already travels to the leader, so there are no worker partials to fold among the fleet",
+                self.reduce_topology.name()
+            );
         }
         if self.panel_threads > 256 {
             bail!(
@@ -358,10 +421,10 @@ impl RunConfig {
         // v3 wire limits (see net::wire): u16 subset indices / dimension,
         // u8 worker ids in per-job Result routing.
         if self.parts > u16::MAX as usize {
-            bail!("transport tcp supports at most {} parts (wire v3 limit)", u16::MAX);
+            bail!("transport tcp supports at most {} parts (wire v4 limit)", u16::MAX);
         }
         if self.data.d > u16::MAX as usize {
-            bail!("transport tcp supports at most d = {} (wire v3 limit)", u16::MAX);
+            bail!("transport tcp supports at most d = {} (wire v4 limit)", u16::MAX);
         }
         Ok(())
     }
@@ -395,6 +458,13 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         }
         ("", "stream_reduce") => {
             cfg.stream_reduce = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("", "reduce_topology") => {
+            cfg.reduce_topology = ReduceTopology::parse(need_str()?)
+                .ok_or_else(|| anyhow!("unknown reduce topology (leader|tree|ring)"))?
+        }
+        ("", "peer_route") => {
+            cfg.peer_route = Some(v.as_bool().ok_or_else(|| anyhow!("expected bool"))?)
         }
         ("", "pair_kernel") => {
             cfg.pair_kernel = PairKernelChoice::parse(need_str()?)
@@ -603,7 +673,7 @@ bandwidth = 1e9
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 300\nparts = 300",
         )
         .unwrap_err();
-        assert!(e.to_string().contains("wire v3"), "{e:#}");
+        assert!(e.to_string().contains("wire v4"), "{e:#}");
         // more workers than pair jobs would strand real processes
         let e = RunConfig::from_toml(
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 2",
@@ -680,6 +750,42 @@ bandwidth = 1e9
         )
         .unwrap_err();
         assert!(e.to_string().contains("spawn-workers"), "{e:#}");
+    }
+
+    #[test]
+    fn reduce_topology_and_peer_route_keys() {
+        let def = RunConfig::default();
+        assert_eq!(def.reduce_topology, ReduceTopology::Leader);
+        assert_eq!(def.peer_route, None);
+        assert!(!def.effective_peer_route(), "unsharded default: leader-shipped trees");
+        let cfg =
+            RunConfig::from_toml("reduce_tree = true\nreduce_topology = \"ring\"").unwrap();
+        assert_eq!(cfg.reduce_topology, ReduceTopology::Ring);
+        let cfg =
+            RunConfig::from_toml("reduce_tree = true\nreduce_topology = \"binomial\"").unwrap();
+        assert_eq!(cfg.reduce_topology, ReduceTopology::Tree);
+        // topologies need worker-local folding to have partials to fold
+        let e = RunConfig::from_toml("reduce_topology = \"tree\"").unwrap_err();
+        assert!(e.to_string().contains("--reduce-tree"), "{e:#}");
+        assert!(RunConfig::from_toml("reduce_topology = \"star\"").is_err());
+        // peer_route: explicit setting wins, None keys off shard_manifest
+        let cfg = RunConfig::from_toml("peer_route = true").unwrap();
+        assert_eq!(cfg.peer_route, Some(true));
+        assert!(cfg.effective_peer_route());
+        let cfg = RunConfig::from_toml(
+            "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nshard_manifest = \"m.toml\"",
+        )
+        .unwrap();
+        assert!(cfg.effective_peer_route(), "sharded runs peer-route by default");
+        let mut off = cfg.clone();
+        off.peer_route = Some(false);
+        assert!(!off.effective_peer_route());
+        for (s, want) in
+            [("leader", ReduceTopology::Leader), (" Ring ", ReduceTopology::Ring)]
+        {
+            assert_eq!(ReduceTopology::parse(s), Some(want), "{s:?}");
+        }
+        assert_eq!(ReduceTopology::parse("bogus"), None);
     }
 
     #[test]

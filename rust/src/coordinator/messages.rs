@@ -16,6 +16,22 @@ use std::time::Duration;
 /// Message header bytes (length prefix + tag + routing + length fields).
 pub const HEADER_BYTES: u64 = 16;
 
+/// Sentinel `to` in [`Message::FoldShip`]: the receiver is the reduction
+/// root — keep the folded forest and report it in `WorkerDone` instead of
+/// shipping it to a peer.
+pub const FOLD_KEEP: u16 = u16::MAX;
+
+/// One worker's peer-plane listener address, as observed by the leader:
+/// the IP the worker's leader connection arrived from, paired with the
+/// listener port the worker advertised in its [`crate::net::wire::Hello`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PeerAddr {
+    /// source IP of the worker's leader connection (v4 or v6)
+    pub ip: std::net::IpAddr,
+    /// the worker's advertised peer listener port (0 = no listener)
+    pub port: u16,
+}
+
 /// One subset's share of a pair-job scatter under the resident-set model:
 /// the vectors (with their global-id map) and/or the cached local MST,
 /// shipped only when the executing worker does not already hold them.
@@ -28,6 +44,11 @@ pub struct SubsetShip {
     /// the subset's cached local MST, compare-form weights
     /// (bipartite-merge kernel only); always `|S_k| - 1` edges
     pub tree: Option<Vec<Edge>>,
+    /// peer-routed tree: the section ships **zero** payload bytes and the
+    /// executing worker pulls the subset's cached local MST from its
+    /// building anchor over a peer link instead (mutually exclusive with
+    /// `tree`; the leader's `PeerBook` names the anchor)
+    pub routed: bool,
 }
 
 /// Leader ↔ worker messages.
@@ -58,6 +79,38 @@ pub enum Message {
     /// Worker → leader (reduce mode): job folded into the worker-local tree;
     /// nothing to gather yet. Lets the leader's rendezvous loop advance.
     Ack { job_id: u32 },
+    /// Worker → leader: a peer-routed tree fetch failed (dead or refusing
+    /// anchor), so the job was **not** executed — it must return to the
+    /// exactly-once lane and be re-planned with the tree shipped inline.
+    PairFail { job_id: u32 },
+    /// Worker → leader: reply to a [`Message::FoldShip`] directive — the
+    /// worker folded the expected peer partials (and shipped the result on,
+    /// unless it is the root). `ok = false` means a peer never delivered and
+    /// the worker keeps its partial for the leader-assisted fallback.
+    FoldDone { ok: bool },
+    /// Worker ↔ worker: opens a peer link (sent once per link by the
+    /// connecting side; carries the sender's worker id for logging and the
+    /// handshake magic for sanity).
+    PeerHello { from: u16 },
+    /// Worker → worker: pull one subset's cached local MST from its
+    /// building anchor (the routed half of a `PairAssign`).
+    TreeFetch { part: u32 },
+    /// Worker → worker: a tree payload on a peer link. `fold = false`: the
+    /// reply to a [`Message::TreeFetch`] (a subset's cached local MST, keyed
+    /// by `part`). `fold = true`: a ⊕-reduction hop — the sender's folded
+    /// partial MSF (`part` carries the sender's worker id), to be ⊕-merged
+    /// into the receiver's partial under a tree/ring topology.
+    TreeShip { part: u32, fold: bool, edges: Vec<Edge> },
+    /// Leader → worker (reduce topologies): fold directive. Wait for
+    /// `expect` peer partials, ⊕-fold them into your own, then ship the
+    /// result to worker `to` — or keep it for your `WorkerDone` when
+    /// `to == `[`FOLD_KEEP`].
+    FoldShip { to: u16, expect: u16 },
+    /// Leader → worker: the fleet's peer-plane routing table. `peers[w]` is
+    /// worker `w`'s listener address; `builders[k]` is the worker id that
+    /// built (anchors) subset `k`'s local MST, [`FOLD_KEEP`] when the
+    /// leader holds it (in-process build).
+    PeerBook { peers: Vec<PeerAddr>, builders: Vec<u16> },
     /// Worker → leader (final): locally ⊕-combined tree (reduce mode only)
     /// plus work/timing/locality stats.
     WorkerDone {
@@ -80,6 +133,10 @@ pub enum Message {
         panel_threads: u32,
         /// [`crate::geometry::Isa`] wire code of the panel path (0 = none)
         panel_isa: u8,
+        /// bytes this worker sent over peer links (tree ships + fold hops)
+        peer_tx_bytes: u64,
+        /// peer-plane frames this worker sent (fetch replies + fold ships)
+        peer_ships: u32,
     },
     /// Leader → worker: drain and report.
     Shutdown,
@@ -140,6 +197,8 @@ mod tests {
             panel_time: Duration::ZERO,
             panel_threads: 0,
             panel_isa: 0,
+            peer_tx_bytes: 0,
+            peer_ships: 0,
         };
         let b = Message::WorkerDone {
             worker: 0,
@@ -154,9 +213,11 @@ mod tests {
             panel_time: Duration::from_micros(500),
             panel_threads: 4,
             panel_isa: 2,
+            peer_tx_bytes: 4096,
+            peer_ships: 3,
         };
-        assert_eq!(a.wire_bytes(), 80, "header 16 + 64-byte stats block");
-        assert_eq!(b.wire_bytes(), 80 + 60);
+        assert_eq!(a.wire_bytes(), 96, "header 16 + 80-byte stats block");
+        assert_eq!(b.wire_bytes(), 96 + 60);
     }
 
     #[test]
@@ -192,7 +253,15 @@ mod tests {
             part: 1,
             vectors: Some(((0..10).collect(), Dataset::zeros(10, 4))),
             tree: Some(vec![Edge::new(0, 1, 1.0); 9]),
+            routed: false,
         };
+        // a peer-routed section charges nothing on the leader link
+        let routed = SubsetShip { part: 1, vectors: None, tree: None, routed: true };
+        let msg = Message::PairAssign {
+            job: PairJob { id: 0, i: 0, j: 1 },
+            ships: vec![routed],
+        };
+        assert_eq!(msg.wire_bytes(), 16);
         let msg = Message::PairAssign { job: PairJob { id: 0, i: 0, j: 1 }, ships: vec![ship] };
         assert_eq!(msg.wire_bytes(), 16 + (10 * 4 + 10 * 4 * 4) + 9 * 12);
     }

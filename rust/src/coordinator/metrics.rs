@@ -102,6 +102,24 @@ pub struct RunMetrics {
     pub panel_time: Duration,
     /// max threads a single panel call fanned out to across the fleet
     pub panel_threads_used: u32,
+    /// leader-link bytes that were *control*: frame headers, directives,
+    /// and gathered results — `scatter + gather + control − leader_data`
+    pub leader_control_bytes: u64,
+    /// leader-link bytes that were scatter-direction *data payload*
+    /// (vectors + inline trees beyond frame headers) — **0 by
+    /// construction on sharded peer-routed runs**, the leaderless
+    /// data-plane witness
+    pub leader_data_bytes: u64,
+    /// worker↔worker bytes that never crossed the leader: routed tree
+    /// fetches and ⊕-fold ships (worker-measured on TCP, modeled on the
+    /// simulated fabric — exactly one source is ever nonzero)
+    pub peer_bytes: u64,
+    /// trees shipped over peer links (`TreeShip` frames), fleet-wide
+    pub peer_ships: u32,
+    /// where the ⊕-reduction folded: "leader" | "tree" | "ring"
+    pub reduce_topology: String,
+    /// whether the peer data plane routed tree fetches this run
+    pub peer_route: bool,
 }
 
 impl RunMetrics {
@@ -198,6 +216,12 @@ impl RunMetrics {
         if self.sharded {
             s.push_str(" sharded");
         }
+        if matches!(self.reduce_topology.as_str(), "tree" | "ring") {
+            s.push_str(&format!(" topology={}", self.reduce_topology));
+        }
+        if self.peer_route {
+            s.push_str(" peer_route");
+        }
         if self.worker_failures > 0 {
             s.push_str(&format!(
                 " failures={} reassigned={}",
@@ -262,7 +286,26 @@ impl RunMetrics {
                 self.reduce_folds, self.reduce_fold_edges
             ));
         }
+        if self.data_plane_active() {
+            parts.push(format!(
+                "leader_control={} leader_data={} peer={}",
+                human_bytes(self.leader_control_bytes),
+                human_bytes(self.leader_data_bytes),
+                human_bytes(self.peer_bytes)
+            ));
+            if self.peer_ships > 0 {
+                parts.push(format!("peer_ships={}", self.peer_ships));
+            }
+        }
         parts.join(" ")
+    }
+
+    /// Whether the leaderless data plane did anything this run: peer
+    /// routing was on, a tree/ring reduction ran, or peer bytes moved.
+    pub fn data_plane_active(&self) -> bool {
+        self.peer_route
+            || self.peer_bytes > 0
+            || matches!(self.reduce_topology.as_str(), "tree" | "ring")
     }
 
     /// Aggregate panel-kernel throughput in GFLOP/s (0.0 when no panel
@@ -443,6 +486,36 @@ mod tests {
         assert!(s.contains("isa=scalar lanes=1"), "{s}");
         assert!(s.contains("fallback: DEMST_SIMD=off"), "{s}");
         assert_eq!(RunMetrics::default().panel_gflops(), 0.0);
+    }
+
+    #[test]
+    fn locality_summary_splits_the_data_plane() {
+        // inactive plane: the split is omitted entirely
+        let quiet = RunMetrics {
+            leader_control_bytes: 900,
+            leader_data_bytes: 100,
+            ..Default::default()
+        };
+        assert!(!quiet.data_plane_active());
+        assert!(!quiet.locality_summary().contains("leader_control"));
+        let m = RunMetrics {
+            reduce_topology: "ring".into(),
+            peer_route: true,
+            leader_control_bytes: 2048,
+            leader_data_bytes: 0,
+            peer_bytes: 4096,
+            peer_ships: 7,
+            ..Default::default()
+        };
+        assert!(m.data_plane_active());
+        let s = m.locality_summary();
+        assert!(s.contains("leader_control=2.00 KiB"), "{s}");
+        assert!(s.contains("leader_data=0 B"), "{s}");
+        assert!(s.contains("peer=4.00 KiB"), "{s}");
+        assert!(s.contains("peer_ships=7"), "{s}");
+        let top = m.summary();
+        assert!(top.contains("topology=ring"), "{top}");
+        assert!(top.contains("peer_route"), "{top}");
     }
 
     #[test]

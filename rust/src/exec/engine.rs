@@ -59,8 +59,8 @@ use super::pair_kernel::{
 };
 use super::plan::{AffinityPlan, ExecPlan};
 use super::scheduler::JobQueue;
-use crate::config::{PairKernelChoice, RunConfig};
-use crate::coordinator::messages::{job_wire_bytes, Message, HEADER_BYTES};
+use crate::config::{PairKernelChoice, ReduceTopology, RunConfig};
+use crate::coordinator::messages::{job_wire_bytes, Message, FOLD_KEEP, HEADER_BYTES};
 use crate::coordinator::metrics::RunMetrics;
 use crate::data::Dataset;
 use crate::decomp::reduction::{reduce_trees_with, tree_merge, StreamReducer};
@@ -70,8 +70,9 @@ use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::mst::kruskal;
 use crate::net::remote::RemoteLink;
-use crate::net::{Direction, TcpTransport, Transport};
-use std::collections::VecDeque;
+use crate::net::wire::PEER_ENTRY_BYTES;
+use crate::net::{Direction, NetCounters, TcpTransport, Transport};
+use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
@@ -178,6 +179,18 @@ struct Fleet {
     failures: AtomicU32,
     reassigned: AtomicU32,
     abort: AtomicBool,
+    /// tree/ring topologies: the job indices whose folded results currently
+    /// ride worker `w`'s partial MSF — its own acked jobs plus everything
+    /// inherited through ⊕-fold hops. A dead (or fold-failed) worker's bag
+    /// returns to the exactly-once lane wholesale.
+    fold_jobs: Vec<Mutex<Vec<usize>>>,
+    /// how many peer partials worker `w` must await before its own fold hop
+    /// (incremented when a lower worker's `FoldDone { ok: true }` targeted it)
+    fold_expect: Vec<AtomicU32>,
+    /// jobs re-run after a fold failure whose original runner had already
+    /// reported them in its `WorkerDone.jobs_run` — subtracted from
+    /// `RunMetrics::jobs` so the exactly-once audit stays exact
+    fold_rerun_credit: AtomicU32,
 }
 
 impl Fleet {
@@ -190,6 +203,9 @@ impl Fleet {
             failures: AtomicU32::new(0),
             reassigned: AtomicU32::new(0),
             abort: AtomicBool::new(false),
+            fold_jobs: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            fold_expect: (0..workers).map(|_| AtomicU32::new(0)).collect(),
+            fold_rerun_credit: AtomicU32::new(0),
         }
     }
 
@@ -201,6 +217,17 @@ impl Fleet {
 
     fn alive(&self) -> Vec<bool> {
         self.dead.iter().map(|d| !d.load(Ordering::SeqCst)).collect()
+    }
+
+    /// Workers that can still claim returned jobs: alive **and** not yet
+    /// through their shutdown rendezvous (a finished driver has exited its
+    /// claim loop for good, so it can never pick up a stranded job).
+    fn available(&self) -> Vec<bool> {
+        self.dead
+            .iter()
+            .zip(&self.finished)
+            .map(|(d, f)| !d.load(Ordering::SeqCst) && !f.load(Ordering::SeqCst))
+            .collect()
     }
 
     fn complete(&self) -> bool {
@@ -219,6 +246,168 @@ impl Fleet {
         self.dead[w].store(true, Ordering::SeqCst);
         self.failures.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// The run's byte witnesses, accumulated by every scatter site:
+/// `saved` is the resident-set model's savings vs the dense model,
+/// `ingest` the vector payload that passed *through the leader's memory*,
+/// and `data` every scatter-direction payload byte beyond frame headers
+/// (vectors **and** inline trees) — the quantity the peer data plane
+/// drives to zero on sharded routed runs
+/// (`RunMetrics::leader_data_bytes == 0`).
+#[derive(Default)]
+struct ByteWitness {
+    saved: AtomicU64,
+    ingest: AtomicU64,
+    data: AtomicU64,
+}
+
+/// The peer data plane's leader-side routing state, built after phase 1
+/// when `cfg.effective_peer_route()` is on and the bipartite kernel cached
+/// local trees: which worker anchors each subset, which subsets have been
+/// demoted to inline shipping after a failed fetch, and — on the simulated
+/// transport — the modeled peer-link set (a `PeerHello` is charged once
+/// per directed link, exactly like the real connection cache).
+struct RouteCtx<'a> {
+    /// subset `k`'s building anchor (always a worker on remote runs)
+    builders: Vec<u16>,
+    /// the advertised peer listener port per worker (0 = no listener,
+    /// never routable); all-1 placeholder on the simulated transport
+    ports: Vec<u16>,
+    /// subsets demoted to inline tree shipping (dead or refusing anchor)
+    no_route: Vec<AtomicBool>,
+    /// directed peer links already opened, for `PeerHello` accounting —
+    /// shared between the routed-fetch model and the fold model
+    links: Mutex<HashSet<(usize, usize)>>,
+    /// simulated transport: charge the modeled peer traffic to the
+    /// counters (a real transport measures it worker-side instead)
+    model: bool,
+    fleet: &'a Fleet,
+}
+
+impl RouteCtx<'_> {
+    /// Can subset `k`'s tree travel over the peer plane right now?
+    fn routable(&self, k: usize) -> bool {
+        let b = self.builders[k];
+        (b as usize) < self.ports.len()
+            && !self.no_route[k].load(Ordering::Relaxed)
+            && !self.fleet.dead[b as usize].load(Ordering::SeqCst)
+            && self.ports[b as usize] != 0
+    }
+
+    /// Model one peer transfer of `payload_bytes` riding a `TreeFetch` or
+    /// fold hop on the link `from → to`, charging the `PeerHello` opener
+    /// the first time the link is used. No-op on real transports (workers
+    /// count their actual peer traffic and report it in `WorkerDone`).
+    /// Peer bytes are charged without a message increment: the leader-link
+    /// message counter must stay transport-identical, and real peer frames
+    /// never cross the leader's counters.
+    fn model_peer_hop(&self, counters: &NetCounters, from: usize, to: usize, frame_bytes: u64) {
+        if !self.model {
+            return;
+        }
+        if self.links.lock().unwrap().insert((from, to)) {
+            counters.add_bytes(HEADER_BYTES, Direction::Peer); // PeerHello
+        }
+        counters.add_bytes(frame_bytes, Direction::Peer);
+    }
+}
+
+/// One worker's ⊕-fold ship target under `topology`, over the currently
+/// alive fleet: `Ring` ships to the next alive id, `Tree` follows a
+/// mirrored binomial schedule. Both root at the **highest** alive id —
+/// drivers settle in ascending id order, so the root is the last to fold
+/// and every partial has arrived by then. Ships always ascend worker ids.
+fn fold_target(topology: ReduceTopology, alive: &[bool], w: usize) -> u16 {
+    let ids: Vec<usize> =
+        alive.iter().enumerate().filter(|&(_, &a)| a).map(|(i, _)| i).collect();
+    let pos = ids.iter().position(|&i| i == w).expect("fold_target: self must be alive");
+    let m = ids.len();
+    match topology {
+        ReduceTopology::Leader => FOLD_KEEP,
+        ReduceTopology::Ring => {
+            if pos + 1 < m {
+                ids[pos + 1] as u16
+            } else {
+                FOLD_KEEP
+            }
+        }
+        ReduceTopology::Tree => {
+            // Mirror the classic binomial reduction so the root lands on
+            // the highest id: position q = (m-1) - pos counts down from the
+            // root, and q ships to q - lowbit(q).
+            let q = (m - 1) - pos;
+            if q == 0 {
+                FOLD_KEEP
+            } else {
+                let q_target = q - (q & q.wrapping_neg());
+                ids[(m - 1) - q_target] as u16
+            }
+        }
+    }
+}
+
+/// Simulated-transport model of a tree/ring reduction: walk the fold
+/// schedule over the workers' actual partials (ascending id, exactly the
+/// order the real drivers settle in), `tree_merge`-ing each shipped
+/// partial into its target and charging the modeled traffic — two 16-byte
+/// control frames per worker (`FoldShip` + `FoldDone`), one peer hop per
+/// ship (plus `PeerHello` per new link), and the root partial's edge
+/// payload as gather bytes riding the already-charged bare `WorkerDone`
+/// frame. Returns the root's folded MSF, which **is** the reduction output
+/// — the byte model and the answer come from the same folds.
+fn model_fold_topology(
+    n: usize,
+    topology: ReduceTopology,
+    n_workers: usize,
+    partials: Vec<(usize, Vec<Edge>)>,
+    net: &dyn Transport,
+    counters: &NetCounters,
+    route: Option<&RouteCtx<'_>>,
+) -> Vec<Edge> {
+    let mut trees: Vec<Vec<Edge>> = vec![Vec::new(); n_workers];
+    for (w, t) in partials {
+        trees[w] = t;
+    }
+    let alive = vec![true; n_workers];
+    let links: Mutex<HashSet<(usize, usize)>> = Mutex::new(HashSet::new());
+    let mut root = 0usize;
+    for w in 0..n_workers {
+        // FoldShip directive + FoldDone reply, leader-link control frames
+        net.charge(HEADER_BYTES, Direction::Control);
+        net.charge(HEADER_BYTES, Direction::Control);
+        let to = fold_target(topology, &alive, w);
+        if to == FOLD_KEEP {
+            root = w;
+            continue;
+        }
+        let to = to as usize;
+        // PeerHello once per directed link — against the routed-fetch
+        // link set when routing also ran, so a link the fetch phase
+        // already opened is not re-charged.
+        let fresh = match route {
+            Some(rc) => rc.links.lock().unwrap().insert((w, to)),
+            None => links.lock().unwrap().insert((w, to)),
+        };
+        if fresh {
+            counters.add_bytes(HEADER_BYTES, Direction::Peer);
+        }
+        let shipped = std::mem::take(&mut trees[w]);
+        counters
+            .add_bytes(HEADER_BYTES + shipped.len() as u64 * Edge::WIRE_BYTES as u64, Direction::Peer);
+        trees[to] = if trees[to].is_empty() {
+            shipped
+        } else if shipped.is_empty() {
+            std::mem::take(&mut trees[to])
+        } else {
+            tree_merge(n, &trees[to], &shipped)
+        };
+    }
+    let root_tree = std::mem::take(&mut trees[root]);
+    // The root's folded MSF rides its bare `WorkerDone` frame: payload
+    // bytes accrue to gather with no extra message.
+    counters.add_bytes(root_tree.len() as u64 * Edge::WIRE_BYTES as u64, Direction::Gather);
+    root_tree
 }
 
 /// The pooled engine over the simulated transport: worker threads claim
@@ -349,9 +538,13 @@ fn execute_pooled_inner(
             }
         }
     }
-    let scatter_saved = AtomicU64::new(0);
-    let leader_ingest = AtomicU64::new(0);
+    let witness = ByteWitness::default();
     let fleet = Fleet::new(n_workers, plan.n_jobs());
+    let topology = cfg.reduce_topology;
+    let topology_mode = cfg.reduce_tree && topology != ReduceTopology::Leader;
+    // Simulated transport: the fold schedule is modeled (and *computed*)
+    // leader-side after the gather loop, from the workers' actual partials.
+    let sim_topology = topology_mode && remote.is_none();
 
     let panel_settings = cfg.panel_settings();
     let mut metrics = RunMetrics {
@@ -377,6 +570,7 @@ fn execute_pooled_inner(
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
     // through the same worker pool — at its anchor when affinity is on, so
     // the anchor already holds the subset when the pair phase starts.
+    let mut builders: Vec<u16> = Vec::new();
     let bip: Option<(Option<BipartiteCtx>, LocalMstCache)> = match cfg.pair_kernel {
         PairKernelChoice::Dense => None,
         PairKernelChoice::BipartiteMerge => {
@@ -389,7 +583,7 @@ fn execute_pooled_inner(
                     crate::runtime::xla_panel_dir(cfg),
                 )
             });
-            let (cache, phase_busy) = build_cache_pooled(
+            let (cache, phase_busy, anchors) = build_cache_pooled(
                 ds,
                 d,
                 ctx.as_ref(),
@@ -402,8 +596,9 @@ fn execute_pooled_inner(
                 &residents,
                 remote,
                 &fleet,
-                &leader_ingest,
+                &witness,
             )?;
+            builders = anchors;
             for (w, b) in phase_busy.into_iter().enumerate() {
                 metrics.worker_busy[w] += b;
             }
@@ -411,6 +606,57 @@ fn execute_pooled_inner(
             Some((ctx, cache))
         }
     };
+
+    // The peer data plane: when routing is on (sharded default, or
+    // `--peer-route`) and phase 1 cached trees at worker anchors, pair
+    // scatter replaces inline tree sections with zero-payload routing
+    // directives and the executing worker pulls the tree from its anchor.
+    let route: Option<RouteCtx<'_>> = if cfg.effective_peer_route() && bip.is_some() {
+        let ports: Vec<u16> = match remote {
+            Some(tcp) => tcp.peer_addrs().iter().map(|a| a.port).collect(),
+            // simulated peers always "listen": the fetch is a byte model
+            None => vec![1; n_workers],
+        };
+        Some(RouteCtx {
+            builders: builders.clone(),
+            ports,
+            no_route: (0..p).map(|_| AtomicBool::new(false)).collect(),
+            links: Mutex::new(HashSet::new()),
+            model: remote.is_none(),
+            fleet: &fleet,
+        })
+    } else {
+        None
+    };
+
+    // Both halves of the leaderless data plane need the fleet's routing
+    // table on the workers: peers[w] for fold ships and routed fetches,
+    // builders[k] for the anchor of each cached tree.
+    if route.is_some() || topology_mode {
+        let book_builders =
+            if builders.len() == p { builders.clone() } else { vec![FOLD_KEEP; p] };
+        match remote {
+            Some(tcp) => {
+                let book =
+                    Message::PeerBook { peers: tcp.peer_addrs().to_vec(), builders: book_builders };
+                for w in 0..n_workers {
+                    if !fleet.dead[w].load(Ordering::SeqCst) {
+                        // a dead link surfaces on the driver's next frame
+                        let _ = tcp.send_to(w, &book, Direction::Control);
+                    }
+                }
+            }
+            None => {
+                // model the identical broadcast: header + one address entry
+                // per worker + one u16 builder id per subset, per link
+                let bytes =
+                    HEADER_BYTES + n_workers as u64 * PEER_ENTRY_BYTES + p as u64 * 2;
+                for _ in 0..n_workers {
+                    net.charge(bytes, Direction::Control);
+                }
+            }
+        }
+    }
 
     // Phase 2: pair jobs over the pool — per-worker affinity decks with
     // idle stealing (capability-confined claims on sharded runs), or the
@@ -424,6 +670,9 @@ fn execute_pooled_inner(
     let (tx_leader, rx_leader) = channel::<Message>();
     let mut union_edges: Vec<Edge> = Vec::new();
     let mut worker_trees: Vec<Vec<Edge>> = Vec::new();
+    // simulated tree/ring runs: partials gathered per worker, folded by the
+    // modeled schedule after the gather loop
+    let mut sim_partials: Vec<(usize, Vec<Edge>)> = Vec::new();
     let mut stream = if cfg.stream_reduce { Some(StreamReducer::new(n)) } else { None };
     let mut reduce_time = Duration::ZERO;
     let worker_errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
@@ -432,8 +681,8 @@ fn execute_pooled_inner(
         let plan_ref = &plan;
         let queue_ref = &queue;
         let bip_ref = bip.as_ref();
-        let saved_ref = &scatter_saved;
-        let ingest_ref = &leader_ingest;
+        let witness_ref = &witness;
+        let route_ref = route.as_ref();
         let errors_ref = &worker_errors;
         let fleet_ref = &fleet;
         let use_affinity = affinity.is_some();
@@ -455,8 +704,8 @@ fn execute_pooled_inner(
                             cache,
                             use_affinity,
                             resident,
-                            saved_ref,
-                            ingest_ref,
+                            witness_ref,
+                            route_ref,
                             fleet_ref,
                             errors_ref,
                             tx,
@@ -476,8 +725,9 @@ fn execute_pooled_inner(
                             bip_ref,
                             use_affinity,
                             resident,
-                            saved_ref,
-                            ingest_ref,
+                            witness_ref,
+                            route_ref,
+                            sim_topology,
                             errors_ref,
                             tx,
                         )
@@ -487,6 +737,10 @@ fn execute_pooled_inner(
         }
         drop(tx_leader); // leader keeps only rx
 
+        // Remote workers report the panel ISA they actually dispatched;
+        // collected here and summarized once the fleet has drained, so a
+        // late frame cannot leave a first-writer's label standing.
+        let mut fleet_isas: Vec<u8> = Vec::new();
         let mut done = 0usize;
         while done < n_workers {
             let msg = rx_leader.recv().expect("all workers hung up");
@@ -516,6 +770,8 @@ fn execute_pooled_inner(
                     panel_time,
                     panel_threads,
                     panel_isa,
+                    peer_tx_bytes,
+                    peer_ships,
                 } => {
                     metrics.dist_evals += dist_evals;
                     // += : the local-MST phase already deposited its share
@@ -526,28 +782,61 @@ fn execute_pooled_inner(
                     metrics.panel_flops += panel_flops;
                     metrics.panel_time += panel_time;
                     metrics.panel_threads_used = metrics.panel_threads_used.max(panel_threads);
-                    if let Some(isa) = Isa::from_wire_code(panel_isa) {
-                        // a worker that actually ran panels knows its own
-                        // ISA better than the leader's local detection
-                        metrics.panel_isa = isa.label().to_string();
-                        metrics.panel_lanes = isa.lanes() as u32;
+                    metrics.peer_bytes += peer_tx_bytes;
+                    metrics.peer_ships += peer_ships;
+                    if remote.is_some() && panel_isa != 0 {
+                        fleet_isas.push(panel_isa);
                     }
                     if cfg.reduce_tree {
                         metrics.jobs += jobs_run;
                     }
                     if let Some(t) = local_tree {
-                        metrics.union_edges += t.len();
-                        if let Some(r) = &mut stream {
-                            let t0 = Instant::now();
-                            r.push(&t);
-                            reduce_time += t0.elapsed();
+                        if sim_topology {
+                            sim_partials.push((worker, t));
                         } else {
-                            worker_trees.push(t);
+                            metrics.union_edges += t.len();
+                            if let Some(r) = &mut stream {
+                                let t0 = Instant::now();
+                                r.push(&t);
+                                reduce_time += t0.elapsed();
+                            } else {
+                                worker_trees.push(t);
+                            }
                         }
                     }
                     done += 1;
                 }
                 other => anyhow::bail!("leader received unexpected message {other:?}"),
+            }
+        }
+        if remote.is_some() {
+            // Pure-remote runs: the `kernel:` line must describe the fleet,
+            // not the leader's local ISA detection (the leader ran no
+            // panels). One ISA across the fleet replaces the leader's
+            // label; disagreeing fleets get an explicit mixed summary.
+            fleet_isas.sort_unstable();
+            fleet_isas.dedup();
+            let decoded: Vec<Isa> =
+                fleet_isas.iter().filter_map(|&c| Isa::from_wire_code(c)).collect();
+            match decoded.as_slice() {
+                [] => {} // no remote worker ran a panel
+                [one] => {
+                    metrics.panel_isa = one.label().to_string();
+                    metrics.panel_lanes = one.lanes() as u32;
+                    // the leader-local fallback note does not describe the
+                    // fleet that actually dispatched
+                    metrics.panel_fallback = None;
+                }
+                many => {
+                    let labels: Vec<&str> = many.iter().map(|i| i.label()).collect();
+                    metrics.panel_isa = format!("mixed[{}]", labels.join(","));
+                    metrics.panel_lanes =
+                        many.iter().map(|i| i.lanes() as u32).min().unwrap_or(0);
+                    metrics.panel_fallback = Some(
+                        "remote workers dispatched different panel ISAs; per-fleet split above"
+                            .to_string(),
+                    );
+                }
             }
         }
         Ok(())
@@ -559,6 +848,11 @@ fn execute_pooled_inner(
     }
     metrics.worker_failures = fleet.failures.load(Ordering::Relaxed);
     metrics.jobs_reassigned = fleet.reassigned.load(Ordering::Relaxed);
+    // Jobs re-run after a fold failure were already reported once by their
+    // original (settled) runner; the audit counts each job exactly once.
+    metrics.jobs = metrics
+        .jobs
+        .saturating_sub(fleet.fold_rerun_credit.load(Ordering::Relaxed));
     let expected_jobs = plan.n_jobs() as u32;
     if metrics.jobs != expected_jobs {
         anyhow::bail!(
@@ -570,6 +864,30 @@ fn execute_pooled_inner(
     // Streaming folds ran inside the gather loop; carve them out of the
     // pair phase so the three phases stay (approximately) additive.
     metrics.phase_pair = t_pairs.elapsed().saturating_sub(reduce_time);
+
+    // Simulated tree/ring reduction: fold the workers' partials along the
+    // modeled schedule. The result is the reduction output and its byte
+    // charges are the model — identical in shape to what the real drivers
+    // measure on a TCP run.
+    if sim_topology {
+        let root_tree = model_fold_topology(
+            n,
+            topology,
+            n_workers,
+            std::mem::take(&mut sim_partials),
+            net,
+            &counters,
+            route.as_ref(),
+        );
+        metrics.union_edges += root_tree.len();
+        if let Some(r) = &mut stream {
+            let t0 = Instant::now();
+            r.push(&root_tree);
+            reduce_time += t0.elapsed();
+        } else {
+            worker_trees.push(root_tree);
+        }
+    }
 
     // Final reduction. (Perf note inherited from the pre-exec leader:
     // deduplicating (u,v) pairs before the batch Kruskal was tried and
@@ -589,8 +907,9 @@ fn execute_pooled_inner(
     };
     metrics.final_mst = t_mst.elapsed();
     metrics.phase_reduce = reduce_time + metrics.final_mst;
-    metrics.scatter_saved_bytes = scatter_saved.load(Ordering::Relaxed);
-    metrics.leader_ingest_bytes = leader_ingest.load(Ordering::Relaxed);
+    metrics.scatter_saved_bytes = witness.saved.load(Ordering::Relaxed);
+    metrics.leader_ingest_bytes = witness.ingest.load(Ordering::Relaxed);
+    metrics.leader_data_bytes = witness.data.load(Ordering::Relaxed);
 
     metrics.pair_evals = metrics.dist_evals;
     if let Some((_, cache)) = &bip {
@@ -603,6 +922,29 @@ fn execute_pooled_inner(
     metrics.gather_bytes = g;
     metrics.control_bytes = c;
     metrics.messages = m;
+    // Leader-link split: every leader byte is either data-plane payload
+    // (vectors + inline trees beyond frame headers) or control (headers,
+    // directives, gathered results). Peer traffic never crosses the leader
+    // — measured worker-side on TCP (summed from `WorkerDone`), modeled
+    // into the peer counter on the simulated fabric.
+    metrics.leader_control_bytes = (s + g + c).saturating_sub(metrics.leader_data_bytes);
+    metrics.peer_bytes += counters.peer();
+    metrics.reduce_topology = cfg.reduce_topology.name().to_string();
+    metrics.peer_route = route.is_some();
+    // The leaderless-data-plane invariant: on a sharded routed run the
+    // leader never sources payload — vectors are worker-resident and every
+    // cached tree travels worker↔worker. Only a degraded route (a failed
+    // fetch demoting a subset to inline shipping) may break this.
+    if sharded {
+        if let Some(rc) = &route {
+            let demoted = rc.no_route.iter().any(|f| f.load(Ordering::Relaxed));
+            anyhow::ensure!(
+                demoted || metrics.leader_data_bytes == 0,
+                "sharded peer-routed run leaked {} payload bytes through the leader",
+                metrics.leader_data_bytes
+            );
+        }
+    }
     metrics.wall = t_start.elapsed();
 
     Ok(PooledRun { mst, metrics, workers: n_workers })
@@ -624,8 +966,9 @@ fn pooled_worker_local(
     bip: Option<&(Option<BipartiteCtx>, LocalMstCache)>,
     use_affinity: bool,
     resident: &Mutex<Vec<Held>>,
-    scatter_saved: &AtomicU64,
-    leader_ingest: &AtomicU64,
+    witness: &ByteWitness,
+    route: Option<&RouteCtx<'_>>,
+    bare_done: bool,
     errors: &Mutex<Vec<String>>,
     tx_leader: Sender<Message>,
 ) {
@@ -659,6 +1002,8 @@ fn pooled_worker_local(
                         panel_time: Duration::ZERO,
                         panel_threads: 0,
                         panel_isa: 0,
+                        peer_tx_bytes: 0,
+                        peer_ships: 0,
                     },
                     Direction::Gather,
                 );
@@ -681,8 +1026,9 @@ fn pooled_worker_local(
             use_affinity,
             resident,
             net,
-            scatter_saved,
-            leader_ingest,
+            witness,
+            route,
+            worker_id,
         );
         if stolen {
             jobs_stolen += 1;
@@ -737,24 +1083,31 @@ fn pooled_worker_local(
             SolverFinal::default()
         }
     };
-    let _ = net.send(
-        &tx_leader,
-        Message::WorkerDone {
-            worker: worker_id,
-            local_tree: fin.local_tree.or(local_tree),
-            dist_evals: fin.dist_evals,
-            busy: fin.busy.unwrap_or(busy),
-            jobs_run,
-            jobs_stolen,
-            panel_hits: fin.panel_hits,
-            panel_misses: fin.panel_misses,
-            panel_flops: fin.panel_perf.flops,
-            panel_time: fin.panel_perf.time,
-            panel_threads: fin.panel_perf.threads,
-            panel_isa: fin.panel_perf.isa,
-        },
-        Direction::Gather,
-    );
+    let done = Message::WorkerDone {
+        worker: worker_id,
+        local_tree: fin.local_tree.or(local_tree),
+        dist_evals: fin.dist_evals,
+        busy: fin.busy.unwrap_or(busy),
+        jobs_run,
+        jobs_stolen,
+        panel_hits: fin.panel_hits,
+        panel_misses: fin.panel_misses,
+        panel_flops: fin.panel_perf.flops,
+        panel_time: fin.panel_perf.time,
+        panel_threads: fin.panel_perf.threads,
+        panel_isa: fin.panel_perf.isa,
+        peer_tx_bytes: 0,
+        peer_ships: 0,
+    };
+    if bare_done {
+        // Tree/ring model: this partial ships over a *peer* hop, not the
+        // leader link — charge the frame as if it carried no tree (the
+        // root's folded payload is charged by the schedule model instead).
+        net.charge(HEADER_BYTES + crate::net::wire::STATS_BYTES, Direction::Gather);
+        let _ = tx_leader.send(done);
+    } else {
+        let _ = net.send(&tx_leader, done, Direction::Gather);
+    }
 }
 
 /// Mutable state of one remote link's drive loop, shared with the failure
@@ -768,6 +1121,9 @@ struct RemoteDrive {
     delivered: u32,
     jobs_stolen: u32,
     busy: Duration,
+    /// tree/ring topologies: this link's fold directive has been issued
+    /// (successful or degraded) — never fold twice
+    fold_done: bool,
     fin: Option<SolverFinal>,
 }
 
@@ -786,8 +1142,8 @@ fn pooled_worker_remote(
     cache: Option<&LocalMstCache>,
     use_affinity: bool,
     resident: &Mutex<Vec<Held>>,
-    scatter_saved: &AtomicU64,
-    leader_ingest: &AtomicU64,
+    witness: &ByteWitness,
+    route: Option<&RouteCtx<'_>>,
     fleet: &Fleet,
     errors: &Mutex<Vec<String>>,
     tx_leader: Sender<Message>,
@@ -798,6 +1154,7 @@ fn pooled_worker_remote(
         delivered: 0,
         jobs_stolen: 0,
         busy: Duration::ZERO,
+        fold_done: false,
         fin: None,
     };
     let outcome = if fleet.dead[worker_id].load(Ordering::SeqCst) {
@@ -818,8 +1175,8 @@ fn pooled_worker_remote(
             d,
             use_affinity,
             resident,
-            scatter_saved,
-            leader_ingest,
+            witness,
+            route,
             fleet,
             errors,
             &tx_leader,
@@ -834,14 +1191,24 @@ fn pooled_worker_remote(
         Err(e) => {
             // Everything claimed but not durably recorded goes back: the
             // in-flight window, plus (reduce mode) every job whose result
-            // lives only in the worker's never-gathered local fold. The
-            // dead flag is stored LAST — a peer that observes it must
+            // lives only in the worker's never-gathered local fold, plus
+            // any jobs this worker **inherited** through completed ⊕-fold
+            // hops — their results live in the partial that died with it.
+            // Re-running an inherited job is harmless (⊕ is idempotent),
+            // and the surviving fold chain absorbs the duplicate edges.
+            // The dead flag is stored LAST — a peer that observes it must
             // already be able to see the rolled-back done count and the
             // returned jobs, or it could disperse mid-failover.
             let refolded = st.acked.len();
             let mut lost: Vec<usize> = st.inflight.drain(..).collect();
             lost.append(&mut st.acked);
-            fleet.done_jobs.fetch_sub(refolded, Ordering::SeqCst);
+            let mut inherited: Vec<usize> =
+                fleet.fold_jobs[worker_id].lock().unwrap().drain(..).collect();
+            fleet.done_jobs.fetch_sub(refolded + inherited.len(), Ordering::SeqCst);
+            fleet
+                .fold_rerun_credit
+                .fetch_add(inherited.len() as u32, Ordering::Relaxed);
+            lost.append(&mut inherited);
             fleet.reassigned.fetch_add(lost.len() as u32, Ordering::Relaxed);
             queue.push_returned(&lost);
             queue.abandon_deck(worker_id);
@@ -868,6 +1235,8 @@ fn pooled_worker_remote(
             panel_time: fin.panel_perf.time,
             panel_threads: fin.panel_perf.threads,
             panel_isa: fin.panel_perf.isa,
+            peer_tx_bytes: fin.peer_tx_bytes,
+            peer_ships: fin.peer_ships,
         },
         Direction::Gather,
     );
@@ -887,21 +1256,23 @@ fn drive_remote_link(
     d: usize,
     use_affinity: bool,
     resident: &Mutex<Vec<Held>>,
-    scatter_saved: &AtomicU64,
-    leader_ingest: &AtomicU64,
+    witness: &ByteWitness,
+    route: Option<&RouteCtx<'_>>,
     fleet: &Fleet,
     errors: &Mutex<Vec<String>>,
     tx_leader: &Sender<Message>,
     st: &mut RemoteDrive,
 ) -> anyhow::Result<()> {
     let window = cfg.pipeline_window.max(1);
+    let topology_mode = cfg.reduce_tree && cfg.reduce_topology != ReduceTopology::Leader;
     loop {
         // Top up the in-flight window: send the next claimed job before
         // awaiting the previous reply — scatter overlaps remote compute.
         while st.inflight.len() < window {
             let Some((job_idx, stolen)) = queue.pop_for(worker_id) else { break };
             let job = &plan.jobs[job_idx];
-            let planned = plan_job_scatter(plan, job, d, cache, use_affinity, resident);
+            let planned =
+                plan_job_scatter(plan, job, d, cache, use_affinity, resident, route, worker_id);
             if stolen {
                 st.jobs_stolen += 1;
             }
@@ -912,7 +1283,7 @@ fn drive_remote_link(
             // Counters only after the frame left: a failed send returns
             // the job unaccounted, and the survivor's re-send is the one
             // (and only) transfer the witnesses record.
-            account_job_scatter(&planned, net, scatter_saved, leader_ingest);
+            account_job_scatter(&planned, net, witness, route, worker_id);
         }
         if st.inflight.is_empty() {
             if fleet.complete() || fleet.aborted() {
@@ -942,13 +1313,84 @@ fn drive_remote_link(
                     if !fleet.complete() {
                         continue;
                     }
+                    // Tree/ring topologies: before dispersing, drive this
+                    // worker's one ⊕-fold hop. Lower ids have all settled
+                    // (gate above), so every partial destined for this
+                    // worker is already in its inbox or on the wire.
+                    if topology_mode && !st.fold_done {
+                        st.fold_done = true;
+                        let target =
+                            fold_target(cfg.reduce_topology, &fleet.alive(), worker_id);
+                        let expect =
+                            fleet.fold_expect[worker_id].load(Ordering::SeqCst) as u16;
+                        let ok = link.fold(target, expect)?;
+                        if ok {
+                            // Job ownership follows the partial: everything
+                            // this worker folded (its own acks plus any
+                            // inherited bags) now lives in the shipped
+                            // partial at `target` — or stays here when this
+                            // worker is the schedule's root.
+                            let mut moved: Vec<usize> = st.acked.drain(..).collect();
+                            if target == FOLD_KEEP {
+                                fleet.fold_jobs[worker_id]
+                                    .lock()
+                                    .unwrap()
+                                    .append(&mut moved);
+                            } else {
+                                let mut bag: Vec<usize> = fleet.fold_jobs[worker_id]
+                                    .lock()
+                                    .unwrap()
+                                    .drain(..)
+                                    .collect();
+                                moved.append(&mut bag);
+                                fleet.fold_jobs[target as usize]
+                                    .lock()
+                                    .unwrap()
+                                    .append(&mut moved);
+                                fleet.fold_expect[target as usize]
+                                    .fetch_add(1, Ordering::SeqCst);
+                            }
+                        } else {
+                            // Degraded fold: a peer partial never arrived.
+                            // The worker kept its own partial (own acks
+                            // stay durable through its rendezvous), but the
+                            // inherited jobs' results lived only in the
+                            // missing partial — return them to the
+                            // exactly-once lane; ⊕'s idempotence makes the
+                            // duplicate re-runs harmless.
+                            let returned: Vec<usize> = fleet.fold_jobs[worker_id]
+                                .lock()
+                                .unwrap()
+                                .drain(..)
+                                .collect();
+                            if !returned.is_empty() {
+                                fleet
+                                    .done_jobs
+                                    .fetch_sub(returned.len(), Ordering::SeqCst);
+                                fleet
+                                    .reassigned
+                                    .fetch_add(returned.len() as u32, Ordering::Relaxed);
+                                fleet
+                                    .fold_rerun_credit
+                                    .fetch_add(returned.len() as u32, Ordering::Relaxed);
+                                queue.push_returned(&returned);
+                                eprintln!(
+                                    "leader: worker {worker_id} fold degraded (peer partial missing); returned {} inherited job(s) to the deck",
+                                    returned.len()
+                                );
+                                continue;
+                            }
+                        }
+                    }
                 }
                 break;
             }
             // Idle but the run is not done: a peer may yet fail and return
             // jobs this worker can run. Fail fast if returned work can no
-            // longer run anywhere.
-            if let Some(job_idx) = queue.stranded_job(&fleet.alive()) {
+            // longer run anywhere. A worker that already settled never
+            // claims again, so only *available* (alive and unfinished)
+            // workers count as capable here.
+            if let Some(job_idx) = queue.stranded_job(&fleet.available()) {
                 errors.lock().unwrap().push(format!(
                     "pair job {} lost: every worker capable of running it has failed",
                     plan.jobs[job_idx].id
@@ -962,7 +1404,29 @@ fn drive_remote_link(
         // Await the oldest in-flight reply (frames are FIFO per link).
         let front_idx = *st.inflight.front().expect("checked non-empty");
         let job = &plan.jobs[front_idx];
-        let solved = link.recv_pair_reply(job)?;
+        let solved = match link.recv_pair_reply(job)? {
+            Some(s) => s,
+            None => {
+                // PairFail: the routed tree fetch fell through (builder died
+                // between planning and fetch). The job never ran. Demote both
+                // parts to inline shipping and return the job to the deck.
+                st.inflight.pop_front();
+                if let Some(rc) = route {
+                    rc.no_route[job.i as usize].store(true, Ordering::Relaxed);
+                    if job.j != job.i {
+                        rc.no_route[job.j as usize].store(true, Ordering::Relaxed);
+                    }
+                }
+                {
+                    let mut res = resident.lock().unwrap();
+                    res[job.i as usize].tree = false;
+                    res[job.j as usize].tree = false;
+                }
+                fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                queue.push_returned(&[front_idx]);
+                continue;
+            }
+        };
         st.inflight.pop_front();
         st.delivered += 1;
         fleet.done_jobs.fetch_add(1, Ordering::SeqCst);
@@ -1004,10 +1468,18 @@ struct PlannedScatter {
     bytes: u64,
     dense_bytes: u64,
     vector_bytes: u64,
+    /// trees demoted from inline shipping to a peer-plane fetch:
+    /// `(building anchor, cached tree edge count)` per routed section
+    routed: Vec<(usize, u64)>,
 }
 
 /// Decide one claimed job's shipment under the configured byte model and
-/// mark the claimed sections held (no counters touched yet).
+/// mark the claimed sections held (no counters touched yet). With a
+/// [`RouteCtx`], any inline tree whose building anchor is routable is
+/// demoted to a zero-payload routed section — the executing worker pulls
+/// it over a peer link instead, and the leader's scatter bytes drop by the
+/// full tree payload (which `scatter_saved_bytes` then picks up, since the
+/// dense baseline is unchanged).
 fn plan_job_scatter(
     plan: &ExecPlan,
     job: &PairJob,
@@ -1015,38 +1487,83 @@ fn plan_job_scatter(
     cache: Option<&LocalMstCache>,
     use_affinity: bool,
     resident: &Mutex<Vec<Held>>,
+    route: Option<&RouteCtx<'_>>,
+    worker_id: usize,
 ) -> PlannedScatter {
     let full = dense_shipment(job, cache.is_some());
     let dense_bytes = shipment_bytes(plan, job, d, cache, &full);
-    let (bytes, ship) = if use_affinity {
+    let mut ship = if use_affinity {
         let mut res = resident.lock().unwrap();
-        let ship = residual_shipment(job, cache.is_some(), res.as_mut_slice());
-        (shipment_bytes(plan, job, d, cache, &ship), ship)
+        residual_shipment(job, cache.is_some(), res.as_mut_slice())
     } else {
-        (dense_bytes, full)
+        full
     };
+    let mut routed = Vec::new();
+    if let (Some(rc), Some(cache)) = (route, cache) {
+        let _ = worker_id; // the executor side of every routed link
+        if ship.tree_i && rc.routable(job.i as usize) {
+            ship.tree_i = false;
+            ship.route_i = true;
+            routed.push((
+                rc.builders[job.i as usize] as usize,
+                cache.trees[job.i as usize].len() as u64,
+            ));
+        }
+        if job.j != job.i && ship.tree_j && rc.routable(job.j as usize) {
+            ship.tree_j = false;
+            ship.route_j = true;
+            routed.push((
+                rc.builders[job.j as usize] as usize,
+                cache.trees[job.j as usize].len() as u64,
+            ));
+        }
+    }
+    // After demotion: routed sections carry zero payload, so `bytes`
+    // (and with it the scatter charge and `leader_data_bytes`) exclude
+    // the tree, while `dense_bytes` still includes it.
+    let bytes = shipment_bytes(plan, job, d, cache, &ship);
     let vector_bytes = ship_vector_bytes(plan, job, d, &ship);
-    PlannedScatter { ship, bytes, dense_bytes, vector_bytes }
+    PlannedScatter { ship, bytes, dense_bytes, vector_bytes, routed }
 }
 
 /// Account one planned scatter that actually traveled (or, in-process, is
 /// modeled as traveling): the transport charge, the bytes the resident-set
-/// model avoided vs the dense ship-everything model, and the
-/// vector-section bytes that passed through the leader
-/// (`leader_ingest_bytes` — zero on sharded runs by construction).
+/// model avoided vs the dense ship-everything model, the vector-section
+/// bytes that passed through the leader (`leader_ingest_bytes` — zero on
+/// sharded runs by construction), the payload bytes beyond the frame
+/// header (`leader_data_bytes`), and — on the simulated transport — the
+/// modeled peer traffic of each routed fetch (`TreeFetch` + `TreeShip`
+/// riding the executor→anchor link, `PeerHello` on first use; nothing for
+/// a self-fetch, which the worker serves from its own cache).
 fn account_job_scatter(
     planned: &PlannedScatter,
     net: &dyn Transport,
-    scatter_saved: &AtomicU64,
-    leader_ingest: &AtomicU64,
+    witness: &ByteWitness,
+    route: Option<&RouteCtx<'_>>,
+    worker_id: usize,
 ) {
     net.charge(planned.bytes, Direction::Scatter);
-    scatter_saved.fetch_add(planned.dense_bytes - planned.bytes, Ordering::Relaxed);
-    leader_ingest.fetch_add(planned.vector_bytes, Ordering::Relaxed);
+    witness
+        .saved
+        .fetch_add(planned.dense_bytes - planned.bytes, Ordering::Relaxed);
+    witness.ingest.fetch_add(planned.vector_bytes, Ordering::Relaxed);
+    witness
+        .data
+        .fetch_add(planned.bytes.saturating_sub(HEADER_BYTES), Ordering::Relaxed);
+    if let Some(rc) = route {
+        for &(builder, edges) in &planned.routed {
+            if builder == worker_id {
+                continue; // self-fetch: served from the worker's own cache
+            }
+            let ship_bytes = 2 * HEADER_BYTES + edges * Edge::WIRE_BYTES as u64;
+            rc.model_peer_hop(&net.counters(), worker_id, builder, ship_bytes);
+        }
+    }
 }
 
 /// Plan + account in one step — the in-process path, where the "transfer"
 /// is the model itself and cannot fail.
+#[allow(clippy::too_many_arguments)]
 fn charge_job_scatter(
     plan: &ExecPlan,
     job: &PairJob,
@@ -1055,11 +1572,13 @@ fn charge_job_scatter(
     use_affinity: bool,
     resident: &Mutex<Vec<Held>>,
     net: &dyn Transport,
-    scatter_saved: &AtomicU64,
-    leader_ingest: &AtomicU64,
+    witness: &ByteWitness,
+    route: Option<&RouteCtx<'_>>,
+    worker_id: usize,
 ) -> Shipment {
-    let planned = plan_job_scatter(plan, job, d, cache, use_affinity, resident);
-    account_job_scatter(&planned, net, scatter_saved, leader_ingest);
+    let planned =
+        plan_job_scatter(plan, job, d, cache, use_affinity, resident, route, worker_id);
+    account_job_scatter(&planned, net, witness, route, worker_id);
     planned.ship
 }
 
@@ -1076,7 +1595,13 @@ pub(crate) fn dense_shipment(job: &PairJob, has_cache: bool) -> Shipment {
             Shipment { vec_i: true, ..Default::default() }
         }
     } else {
-        Shipment { vec_i: true, vec_j: true, tree_i: has_cache, tree_j: has_cache }
+        Shipment {
+            vec_i: true,
+            vec_j: true,
+            tree_i: has_cache,
+            tree_j: has_cache,
+            ..Default::default()
+        }
     }
 }
 
@@ -1188,7 +1713,9 @@ fn subset_payload_bytes(plan: &ExecPlan, k: usize, d: usize) -> u64 {
 /// rebuild them. Also returns each pool worker's busy time so the engine
 /// can attribute this phase's compute to `RunMetrics::worker_busy` (remote
 /// compute is the worker-measured time from the `LocalDone` frame, not the
-/// round-trip).
+/// round-trip), plus each subset's **building anchor** — the worker whose
+/// tree cache holds it, which the peer data plane routes tree fetches to
+/// (`FOLD_KEEP` marks a subset built in-process, never routable).
 fn build_cache_pooled(
     ds: Option<&Dataset>,
     d: usize,
@@ -1202,8 +1729,8 @@ fn build_cache_pooled(
     residents: &[Mutex<Vec<Held>>],
     remote: Option<&TcpTransport>,
     fleet: &Fleet,
-    leader_ingest: &AtomicU64,
-) -> anyhow::Result<(LocalMstCache, Vec<Duration>)> {
+    witness: &ByteWitness,
+) -> anyhow::Result<(LocalMstCache, Vec<Duration>, Vec<u16>)> {
     let t = Instant::now();
     let p = plan.parts.len();
     let queue = match (affinity, holders) {
@@ -1219,6 +1746,9 @@ fn build_cache_pooled(
     };
     let counter = CountingMetric::new(cfg.metric);
     let slots: Vec<Mutex<Option<Vec<Edge>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    // Which worker's cache holds each subset's tree (last builder wins on
+    // elastic rebuilds — exactly the copy that is still alive).
+    let anchors: Vec<AtomicU32> = (0..p).map(|_| AtomicU32::new(u32::MAX)).collect();
     let built = AtomicUsize::new(0);
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let n_spawn = if remote.is_some() { n_workers } else { n_workers.min(p) };
@@ -1227,6 +1757,7 @@ fn build_cache_pooled(
         let queue_ref = &queue;
         let counter_ref = &counter;
         let slots_ref = &slots;
+        let anchors_ref = &anchors;
         let built_ref = &built;
         let errors_ref = &errors;
         for (w, busy_slot) in busy.iter().enumerate() {
@@ -1269,10 +1800,10 @@ fn build_cache_pooled(
                     // survivor's re-send is the transfer that counts.
                     let reply = tcp.send_to(w, &msg, Direction::Scatter).and_then(|_| {
                         if let Some(ds) = ds {
-                            leader_ingest.fetch_add(
-                                crate::net::wire::vectors_payload_bytes(ids.len(), ds.d),
-                                Ordering::Relaxed,
-                            );
+                            let payload =
+                                crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
+                            witness.ingest.fetch_add(payload, Ordering::Relaxed);
+                            witness.data.fetch_add(payload, Ordering::Relaxed);
                         }
                         tcp.recv_from(w)
                     });
@@ -1312,10 +1843,9 @@ fn build_cache_pooled(
                     // the modeled scatter of this subset's vectors (the
                     // in-process "transfer" is the model and cannot fail)
                     net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
-                    leader_ingest.fetch_add(
-                        crate::net::wire::vectors_payload_bytes(ids.len(), ds.d),
-                        Ordering::Relaxed,
-                    );
+                    let payload = crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
+                    witness.ingest.fetch_add(payload, Ordering::Relaxed);
+                    witness.data.fetch_add(payload, Ordering::Relaxed);
                     let t_job = Instant::now();
                     let tree = subset_mst(
                         ds.as_slice(),
@@ -1340,6 +1870,7 @@ fn build_cache_pooled(
                     res[k].tree = true;
                 }
                 *slots_ref[k].lock().unwrap() = Some(tree);
+                anchors_ref[k].store(w as u32, Ordering::Relaxed);
                 built_ref.fetch_add(1, Ordering::SeqCst);
             });
         }
@@ -1372,7 +1903,14 @@ fn build_cache_pooled(
         counter.evals()
     };
     let busy: Vec<Duration> = busy.into_iter().map(|b| b.into_inner().unwrap()).collect();
-    Ok((LocalMstCache { trees, evals, build_time: t.elapsed() }, busy))
+    let anchors: Vec<u16> = anchors
+        .into_iter()
+        .map(|a| {
+            let a = a.into_inner();
+            if a == u32::MAX { FOLD_KEEP } else { a as u16 }
+        })
+        .collect();
+    Ok((LocalMstCache { trees, evals, build_time: t.elapsed() }, busy, anchors))
 }
 
 #[cfg(test)]
@@ -1642,7 +2180,13 @@ mod tests {
         let s = residual_shipment(&job01, true, &mut held);
         assert_eq!(
             s,
-            Shipment { vec_i: true, vec_j: true, tree_i: true, tree_j: true }
+            Shipment {
+                vec_i: true,
+                vec_j: true,
+                tree_i: true,
+                tree_j: true,
+                ..Default::default()
+            }
         );
         let s = residual_shipment(&job12, true, &mut held);
         assert_eq!(
@@ -1659,5 +2203,142 @@ mod tests {
         // dense kernel on a sharded run ships nothing at all
         let mut held = vec![Held { vecs: true, tree: false }; 3];
         assert_eq!(residual_shipment(&job01, false, &mut held), Shipment::default());
+    }
+
+    /// Every ⊕-fold ship must ascend worker ids (drivers settle in id
+    /// order) and root at the highest alive id, for both schedules and
+    /// with dead workers dropped out.
+    #[test]
+    fn fold_target_schedules_ascend_and_root_at_highest() {
+        let alive = vec![true; 4];
+        for w in 0..4 {
+            assert_eq!(fold_target(ReduceTopology::Leader, &alive, w), FOLD_KEEP);
+        }
+        assert_eq!(fold_target(ReduceTopology::Ring, &alive, 0), 1);
+        assert_eq!(fold_target(ReduceTopology::Ring, &alive, 1), 2);
+        assert_eq!(fold_target(ReduceTopology::Ring, &alive, 2), 3);
+        assert_eq!(fold_target(ReduceTopology::Ring, &alive, 3), FOLD_KEEP);
+        // mirrored binomial over 4: 0→1, 1→3, 2→3, root 3
+        assert_eq!(fold_target(ReduceTopology::Tree, &alive, 0), 1);
+        assert_eq!(fold_target(ReduceTopology::Tree, &alive, 1), 3);
+        assert_eq!(fold_target(ReduceTopology::Tree, &alive, 2), 3);
+        assert_eq!(fold_target(ReduceTopology::Tree, &alive, 3), FOLD_KEEP);
+        // exhaustive invariants over fleet sizes and death masks
+        for m in 1usize..6 {
+            for mask in 0..(1u32 << m) {
+                let alive: Vec<bool> = (0..m).map(|w| mask & (1 << w) != 0).collect();
+                let ids: Vec<usize> = (0..m).filter(|&w| alive[w]).collect();
+                if ids.is_empty() {
+                    continue;
+                }
+                let root = *ids.last().unwrap();
+                let mut kept = 0;
+                for &w in &ids {
+                    for topo in [ReduceTopology::Tree, ReduceTopology::Ring] {
+                        let t = fold_target(topo, &alive, w);
+                        if w == root {
+                            assert_eq!(t, FOLD_KEEP, "{topo:?}: root must keep");
+                        }
+                        if t != FOLD_KEEP {
+                            assert!(
+                                (t as usize) > w && alive[t as usize],
+                                "{topo:?}: ships ascend to alive ids"
+                            );
+                        }
+                    }
+                    if fold_target(ReduceTopology::Tree, &alive, w) == FOLD_KEEP {
+                        kept += 1;
+                    }
+                }
+                assert_eq!(kept, 1, "tree schedule has exactly one root");
+            }
+        }
+    }
+
+    /// Tree and ring reductions must produce the leader topology's exact
+    /// tree while moving the per-worker partials onto the peer plane —
+    /// the leader's gather shrinks to bare stats frames plus one root MSF.
+    #[test]
+    fn sim_reduce_topologies_bit_identical_and_offload_gather() {
+        let ds = int_dataset(509, 80, 5);
+        for pair_kernel in [PairKernelChoice::Dense, PairKernelChoice::BipartiteMerge] {
+            let base = RunConfig {
+                parts: 5,
+                workers: 3,
+                kernel: KernelChoice::PrimDense,
+                pair_kernel,
+                reduce_tree: true,
+                ..Default::default()
+            };
+            let net = NetSim::new(base.net.clone());
+            let leader = execute_pooled(&ds, &base, &net).unwrap();
+            assert_eq!(leader.metrics.reduce_topology, "leader");
+            assert_eq!(leader.metrics.peer_bytes, 0);
+            for topology in [ReduceTopology::Tree, ReduceTopology::Ring] {
+                let cfg = RunConfig { reduce_topology: topology, ..base.clone() };
+                let net = NetSim::new(cfg.net.clone());
+                let out = execute_pooled(&ds, &cfg, &net).unwrap();
+                assert_eq!(
+                    normalize_tree(&leader.mst),
+                    normalize_tree(&out.mst),
+                    "{pair_kernel:?} {topology:?}: reduction topology changed the tree"
+                );
+                assert_eq!(out.metrics.jobs, leader.metrics.jobs);
+                assert_eq!(out.metrics.reduce_topology, topology.name());
+                assert!(
+                    out.metrics.peer_bytes > 0,
+                    "{pair_kernel:?} {topology:?}: fold ships must ride the peer plane"
+                );
+                assert!(
+                    out.metrics.gather_bytes < leader.metrics.gather_bytes,
+                    "{pair_kernel:?} {topology:?}: gather {} must shrink below leader {}",
+                    out.metrics.gather_bytes,
+                    leader.metrics.gather_bytes
+                );
+            }
+        }
+    }
+
+    /// Peer-routed tree scatter extends the resident-set reconciliation:
+    /// the leader's charges plus the model's recorded savings still equal
+    /// the dense ship-everything model, with the routed payload carried by
+    /// the peer counter instead.
+    #[test]
+    fn peer_routed_scatter_reconciles_with_dense_model() {
+        let ds = int_dataset(510, 80, 5);
+        let mut cfg = RunConfig {
+            parts: 5,
+            workers: 3,
+            kernel: KernelChoice::PrimDense,
+            pair_kernel: PairKernelChoice::BipartiteMerge,
+            ..Default::default()
+        };
+        cfg.affinity = false;
+        let net = NetSim::new(cfg.net.clone());
+        let dense = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert!(!dense.metrics.peer_route);
+        cfg.affinity = true;
+        cfg.peer_route = Some(true);
+        let net = NetSim::new(cfg.net.clone());
+        let routed = execute_pooled(&ds, &cfg, &net).unwrap();
+        assert_eq!(
+            normalize_tree(&dense.mst),
+            normalize_tree(&routed.mst),
+            "peer routing must not change the tree"
+        );
+        assert!(routed.metrics.peer_route);
+        assert_eq!(
+            routed.metrics.scatter_bytes + routed.metrics.scatter_saved_bytes,
+            dense.metrics.scatter_bytes,
+            "charged + saved == dense model must survive routing"
+        );
+        assert!(
+            routed.metrics.peer_bytes > 0,
+            "some cross-anchor tree must have traveled worker↔worker"
+        );
+        assert!(
+            routed.metrics.scatter_bytes < dense.metrics.scatter_bytes,
+            "routing must strictly shrink the leader's scatter"
+        );
     }
 }

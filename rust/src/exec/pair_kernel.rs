@@ -55,6 +55,12 @@ pub struct Shipment {
     pub vec_j: bool,
     pub tree_i: bool,
     pub tree_j: bool,
+    /// peer-route subset `i`'s tree: ship a zero-payload routed section and
+    /// let the worker pull the tree from its building anchor over a peer
+    /// link (mutually exclusive with `tree_i`)
+    pub route_i: bool,
+    /// peer-route subset `j`'s tree (mutually exclusive with `tree_j`)
+    pub route_j: bool,
 }
 
 /// One solved pair job. `compute` is the remotely measured kernel time when
@@ -84,6 +90,11 @@ pub struct SolverFinal {
     pub busy: Option<Duration>,
     /// remotely ⊕-folded worker tree (reduce mode on a remote solver)
     pub local_tree: Option<Vec<Edge>>,
+    /// bytes the remote worker sent over **peer** links (routed tree ships
+    /// + ⊕-fold hops) — zero for in-process solvers
+    pub peer_tx_bytes: u64,
+    /// peer-plane frames the remote worker sent
+    pub peer_ships: u32,
 }
 
 /// Measured `panel_block` work, the witnesses behind the `kernel:` line and

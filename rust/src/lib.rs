@@ -53,6 +53,18 @@
 //!   hands its undelivered jobs back to the deck and the surviving fleet
 //!   finishes the bit-identical tree) against `demst worker --connect`
 //!   processes ([`net::worker`]), bound/spawned/awaited by [`net::launch`].
+//!   On top rides the **leaderless data plane**: every worker binds a
+//!   worker↔worker listener (port advertised in the handshake, fleet
+//!   addresses broadcast as a `PeerBook`), cached local MSTs travel
+//!   builder→executor directly (`peer_route`: the leader sends a
+//!   header-only routing flag, `PeerHello`/`TreeFetch`/`TreeShip` move
+//!   the payload; `RunMetrics::{leader_control_bytes, leader_data_bytes,
+//!   peer_bytes}` split the witness), and `reduce_topology ∈ {leader,
+//!   tree, ring}` selects where partial MSFs ⊕-fold — at the leader, or
+//!   among the workers along a deterministic binomial-tree or ring
+//!   schedule so only the final ≤|V|−1-edge forest reaches the leader.
+//!   A peer that dies mid-fold degrades to leader-assisted recovery:
+//!   its folded-but-unshipped jobs return to the exactly-once lane.
 //! - **sharded residency ([`shard`])** — `demst partition` cuts a dataset
 //!   into per-subset binary shard files (checksummed, FNV-1a 64) plus a
 //!   TOML-lite manifest (run shape, partition layout as compact id

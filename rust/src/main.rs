@@ -111,6 +111,9 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "panel-threads", takes_value: true, help: "threads per bipartite panel block, 1..=256 (default 0 = all cores)" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
         OptSpec { name: "reduce-tree", takes_value: false, help: "use the O(|V|) tree-reduction gather" },
+        OptSpec { name: "reduce-topology", takes_value: true, help: "leader|tree|ring — where the ⊕-reduction folds (tree/ring imply --reduce-tree; workers fold among themselves and only the root's forest reaches the leader)" },
+        OptSpec { name: "peer-route", takes_value: false, help: "route cached-tree fetches worker↔worker instead of shipping them inline from the leader (default on sharded runs)" },
+        OptSpec { name: "no-peer-route", takes_value: false, help: "force inline tree shipping even on sharded runs" },
         OptSpec { name: "stream-reduce", takes_value: false, help: "fold trees into a bounded running MSF at the leader" },
         OptSpec { name: "simulate-net", takes_value: false, help: "sleep for modeled latency/bandwidth" },
         OptSpec { name: "verify", takes_value: false, help: "check result against SLINK oracle (O(n^2))" },
@@ -194,6 +197,23 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     }
     if args.has_flag("reduce-tree") {
         cfg.reduce_tree = true;
+    }
+    if let Some(v) = args.get("reduce-topology") {
+        cfg.reduce_topology = demst::config::ReduceTopology::parse(v)
+            .with_context(|| format!("unknown reduce topology {v:?} (leader|tree|ring)"))?;
+        if cfg.reduce_topology != demst::config::ReduceTopology::Leader {
+            // tree/ring fold worker-locally by definition
+            cfg.reduce_tree = true;
+        }
+    }
+    if args.has_flag("peer-route") {
+        cfg.peer_route = Some(true);
+    }
+    if args.has_flag("no-peer-route") {
+        if args.has_flag("peer-route") {
+            bail!("--peer-route and --no-peer-route are mutually exclusive");
+        }
+        cfg.peer_route = Some(false);
     }
     if args.has_flag("stream-reduce") {
         cfg.stream_reduce = true;
@@ -431,8 +451,17 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
     } else {
         String::new()
     };
+    let peer_note = if report.peer_tx_bytes > 0 || report.peer_ships > 0 {
+        format!(
+            ", peer tx {} ({} ships)",
+            human_bytes(report.peer_tx_bytes),
+            report.peer_ships
+        )
+    } else {
+        String::new()
+    };
     println!(
-        "worker {}: {} pair jobs + {} local-MST jobs, {} dist evals, rx {}, tx {}{}",
+        "worker {}: {} pair jobs + {} local-MST jobs, {} dist evals, rx {}, tx {}{}{}",
         report.worker_id,
         report.jobs,
         report.local_jobs,
@@ -440,6 +469,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         human_bytes(report.bytes_rx),
         human_bytes(report.bytes_tx),
         shard_note,
+        peer_note,
     );
     Ok(())
 }

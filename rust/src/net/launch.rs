@@ -38,7 +38,7 @@ pub const ACCEPT_DEADLINE: Duration = Duration::from_secs(60);
 pub fn run_leader(ds: &Dataset, cfg: &RunConfig) -> Result<PooledRun> {
     // Library callers reach this without the CLI's pre-flight check; the
     // tcp-specific invariants (listen set, explicit workers, parts >= 2,
-    // wire v3 limits) must still fail as one-liners, not mid-run.
+    // wire v4 limits) must still fail as one-liners, not mid-run.
     cfg.validate()?;
     let listen = cfg
         .listen

@@ -42,12 +42,15 @@ pub use sim::NetSim;
 pub use tcp::TcpTransport;
 
 /// Traffic direction, for the per-phase accounting the paper's cost model
-/// distinguishes (scatter of vectors vs gather of tree edges).
+/// distinguishes (scatter of vectors vs gather of tree edges). `Peer` is
+/// worker↔worker traffic that never crosses a leader link (routed tree
+/// ships and ⊕-fold hops).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
     Scatter,
     Gather,
     Control,
+    Peer,
 }
 
 /// Shared traffic counters.
@@ -56,16 +59,22 @@ pub struct NetCounters {
     pub scatter_bytes: AtomicU64,
     pub gather_bytes: AtomicU64,
     pub control_bytes: AtomicU64,
+    pub peer_bytes: AtomicU64,
     pub messages: AtomicU64,
 }
 
 impl NetCounters {
+    /// Leader-link bytes (scatter + gather + control). Peer bytes are kept
+    /// out on purpose: they are the traffic that *left* the leader.
     pub fn total_bytes(&self) -> u64 {
         self.scatter_bytes.load(Ordering::Relaxed)
             + self.gather_bytes.load(Ordering::Relaxed)
             + self.control_bytes.load(Ordering::Relaxed)
     }
 
+    /// Leader-link snapshot (scatter, gather, control, messages) — the
+    /// 4-tuple every reconciliation test pins. Peer traffic is read
+    /// separately via [`NetCounters::peer`].
     pub fn snapshot(&self) -> (u64, u64, u64, u64) {
         (
             self.scatter_bytes.load(Ordering::Relaxed),
@@ -75,15 +84,29 @@ impl NetCounters {
         )
     }
 
+    /// Worker↔worker bytes (not part of [`NetCounters::total_bytes`]).
+    pub fn peer(&self) -> u64 {
+        self.peer_bytes.load(Ordering::Relaxed)
+    }
+
     /// Add one message of `bytes` to the direction's counter.
     pub fn add(&self, bytes: u64, dir: Direction) {
+        self.add_bytes(bytes, dir);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `bytes` to the direction's counter **without** counting a
+    /// message — used when a modeled transfer's bytes accrue to a frame
+    /// that is already counted (e.g. the root worker's fold result riding
+    /// inside its `WorkerDone`).
+    pub fn add_bytes(&self, bytes: u64, dir: Direction) {
         let ctr = match dir {
             Direction::Scatter => &self.scatter_bytes,
             Direction::Gather => &self.gather_bytes,
             Direction::Control => &self.control_bytes,
+            Direction::Peer => &self.peer_bytes,
         };
         ctr.fetch_add(bytes, Ordering::Relaxed);
-        self.messages.fetch_add(1, Ordering::Relaxed);
     }
 }
 

@@ -55,15 +55,18 @@ impl<'a> RemoteLink<'a> {
     }
 
     /// Materialize the engine's shipment decision for one subset slot.
+    /// `routed` replaces an inline tree with a zero-payload routed section:
+    /// the worker pulls the tree from its building anchor over a peer link.
     fn ship_subset(
         &self,
         plan: &ExecPlan,
         part: u32,
         vectors: bool,
         tree: bool,
+        routed: bool,
     ) -> Result<SubsetShip> {
-        let ids = &plan.parts[part as usize];
         let vectors = if vectors {
+            let ids = &plan.parts[part as usize];
             let ds = match self.ds {
                 Some(ds) => ds,
                 None => bail!(
@@ -83,18 +86,18 @@ impl<'a> RemoteLink<'a> {
         } else {
             None
         };
-        Ok(SubsetShip { part, vectors, tree })
+        Ok(SubsetShip { part, vectors, tree, routed })
     }
 
     /// Put one pair job on the wire (does **not** wait for the reply —
     /// that is [`Self::recv_pair_reply`]'s job, window frames later).
     pub fn send_pair(&self, plan: &ExecPlan, job: &PairJob, ship: &Shipment) -> Result<()> {
         let mut ships = Vec::new();
-        if ship.vec_i || ship.tree_i {
-            ships.push(self.ship_subset(plan, job.i, ship.vec_i, ship.tree_i)?);
+        if ship.vec_i || ship.tree_i || ship.route_i {
+            ships.push(self.ship_subset(plan, job.i, ship.vec_i, ship.tree_i, ship.route_i)?);
         }
-        if job.j != job.i && (ship.vec_j || ship.tree_j) {
-            ships.push(self.ship_subset(plan, job.j, ship.vec_j, ship.tree_j)?);
+        if job.j != job.i && (ship.vec_j || ship.tree_j || ship.route_j) {
+            ships.push(self.ship_subset(plan, job.j, ship.vec_j, ship.tree_j, ship.route_j)?);
         }
         let msg = Message::PairAssign { job: *job, ships };
         self.tcp.send_to(self.worker, &msg, Direction::Scatter)?;
@@ -104,15 +107,19 @@ impl<'a> RemoteLink<'a> {
     /// Read the reply of the **oldest** outstanding pair job (`expect` —
     /// FIFO per link). Gather mode returns the pair tree; reduce mode
     /// returns an empty `Solved` once the worker's `Ack` confirms the fold.
-    pub fn recv_pair_reply(&self, expect: &PairJob) -> Result<Solved> {
+    /// `Ok(None)` means the worker's peer-routed tree fetch failed and the
+    /// job was **not** executed — the caller must return it to the
+    /// exactly-once lane and re-plan it with the tree shipped inline.
+    pub fn recv_pair_reply(&self, expect: &PairJob) -> Result<Option<Solved>> {
         match self.tcp.recv_from(self.worker)? {
             Message::Result { job_id, edges, compute, .. } if job_id == expect.id => {
-                Ok(Solved { edges, compute: Some(compute) })
+                Ok(Some(Solved { edges, compute: Some(compute) }))
             }
             Message::Ack { job_id } if self.reduce && job_id == expect.id => {
                 // folded into the worker-local tree; collected at finish()
-                Ok(Solved { edges: Vec::new(), compute: None })
+                Ok(Some(Solved { edges: Vec::new(), compute: None }))
             }
+            Message::PairFail { job_id } if job_id == expect.id => Ok(None),
             other => bail!(
                 "worker {} replied {:?} while pair job {} was the oldest in flight (reduce = {})",
                 self.worker,
@@ -120,6 +127,21 @@ impl<'a> RemoteLink<'a> {
                 expect.id,
                 self.reduce
             ),
+        }
+    }
+
+    /// Drive one ⊕-fold hop of a tree/ring reduction schedule: tell the
+    /// worker to wait for `expect` peer partials, fold them into its own,
+    /// and ship the result to worker `to` (or keep it, when
+    /// `to == FOLD_KEEP`). Returns the worker's `FoldDone.ok` — `false`
+    /// means a peer never delivered and the worker kept its partial for
+    /// the leader-assisted fallback. Must only be called with no pair jobs
+    /// in flight on this link.
+    pub fn fold(&self, to: u16, expect: u16) -> Result<bool> {
+        self.tcp.send_to(self.worker, &Message::FoldShip { to, expect }, Direction::Control)?;
+        match self.tcp.recv_from(self.worker)? {
+            Message::FoldDone { ok } => Ok(ok),
+            other => bail!("worker {} replied {other:?} to FoldShip", self.worker),
         }
     }
 
@@ -138,6 +160,8 @@ impl<'a> RemoteLink<'a> {
                 panel_time,
                 panel_threads,
                 panel_isa,
+                peer_tx_bytes,
+                peer_ships,
                 ..
             } => Ok(SolverFinal {
                 dist_evals,
@@ -151,6 +175,8 @@ impl<'a> RemoteLink<'a> {
                 },
                 busy: Some(busy),
                 local_tree,
+                peer_tx_bytes,
+                peer_ships,
             }),
             other => bail!("worker {} replied {other:?} to Shutdown", self.worker),
         }

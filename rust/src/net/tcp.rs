@@ -18,7 +18,7 @@
 
 use super::wire::{self, Setup};
 use super::{Direction, NetCounters, Transport};
-use crate::coordinator::messages::Message;
+use crate::coordinator::messages::{Message, PeerAddr};
 use anyhow::{bail, Context, Result};
 use std::net::{TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
@@ -38,6 +38,10 @@ pub struct TcpTransport {
     /// shard ids advertised by each worker during the versioned handshake
     /// (empty on unsharded workers)
     advertised: Vec<Vec<u32>>,
+    /// each worker's peer-plane listener address: the IP its leader
+    /// connection arrived from + the port its `Hello` advertised (port 0 =
+    /// no listener — the worker could not bind one)
+    peer_addrs: Vec<PeerAddr>,
     counters: Arc<NetCounters>,
 }
 
@@ -78,6 +82,7 @@ impl TcpTransport {
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let mut links = Vec::with_capacity(n);
         let mut advertised = Vec::with_capacity(n);
+        let mut peer_addrs = Vec::with_capacity(n);
         while links.len() < n {
             // Checked every iteration, not only when the queue is empty: a
             // stream of connecting-but-stalling peers (each burning its
@@ -93,9 +98,13 @@ impl TcpTransport {
                 Ok((stream, peer)) => {
                     let w = links.len();
                     match handshake_leader(&stream, w, setup, &counters) {
-                        Ok(shard_ids) => {
+                        Ok((shard_ids, peer_port)) => {
                             links.push(Mutex::new(Link { stream }));
                             advertised.push(shard_ids);
+                            // the observed source IP reaches the worker's
+                            // host from here; pair it with the advertised
+                            // listener port for the fleet's PeerBook
+                            peer_addrs.push(PeerAddr { ip: peer.ip(), port: peer_port });
                         }
                         Err(e) => {
                             eprintln!("leader: rejected connection from {peer}: {e:#}");
@@ -108,13 +117,19 @@ impl TcpTransport {
                 Err(e) => return Err(e).context("accepting worker connection"),
             }
         }
-        Ok(Self { links, advertised, counters })
+        Ok(Self { links, advertised, peer_addrs, counters })
     }
 
     /// Shard ids worker `w` advertised during the handshake (subsets it
     /// loaded from local shard files; empty for unsharded workers).
     pub fn advertised(&self, w: usize) -> &[u32] {
         &self.advertised[w]
+    }
+
+    /// The fleet's peer-plane listener addresses, indexed by worker id
+    /// (port 0 = that worker bound no listener).
+    pub fn peer_addrs(&self) -> &[PeerAddr] {
+        &self.peer_addrs
     }
 
     /// Send one message frame to worker `w`, counting its actual encoded
@@ -143,7 +158,9 @@ impl TcpTransport {
             Message::Result { .. } | Message::WorkerDone { .. } | Message::LocalDone { .. } => {
                 Direction::Gather
             }
-            Message::Ack { .. } => Direction::Control,
+            Message::Ack { .. } | Message::PairFail { .. } | Message::FoldDone { .. } => {
+                Direction::Control
+            }
             other => bail!("worker {w} sent an unexpected {other:?}"),
         };
         self.counters.add(frame.len() as u64, dir);
@@ -167,14 +184,14 @@ fn handshake_leader(
     worker_id: usize,
     setup: &Setup,
     counters: &NetCounters,
-) -> Result<Vec<u32>> {
+) -> Result<(Vec<u32>, u16)> {
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(Duration::from_secs(10)))
         .context("setting handshake timeout")?;
     let mut stream = stream;
     let hello_frame = wire::read_frame(&mut stream).context("reading Hello")?;
-    wire::decode_hello(&hello_frame)?;
+    let hello = wire::decode_hello(&hello_frame)?;
     counters.add(hello_frame.len() as u64, Direction::Control);
 
     let setup = Setup { worker_id: worker_id as u16, ..setup.clone() };
@@ -197,7 +214,7 @@ fn handshake_leader(
     counters.add(adv_frame.len() as u64, Direction::Control);
     // Job frames can take arbitrarily long to produce answers.
     stream.set_read_timeout(None).context("clearing handshake timeout")?;
-    Ok(adv.shard_ids)
+    Ok((adv.shard_ids, hello.peer_port))
 }
 
 #[cfg(test)]
@@ -227,8 +244,11 @@ mod tests {
     fn fake_worker(addr: std::net::SocketAddr) -> std::thread::JoinHandle<Message> {
         std::thread::spawn(move || {
             let mut s = ClientStream::connect(addr).unwrap();
-            wire::write_frame(&mut s, &wire::encode_hello(&Hello { version: WIRE_VERSION }))
-                .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 34567 }),
+            )
+            .unwrap();
             let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
             wire::write_frame(
                 &mut s,
@@ -262,6 +282,9 @@ mod tests {
                 .unwrap();
         assert_eq!(fab.len(), 1);
         assert_eq!(fab.advertised(0), &[1], "handshake captured the shard advertisement");
+        assert_eq!(fab.peer_addrs().len(), 1);
+        assert_eq!(fab.peer_addrs()[0].port, 34567, "Hello's peer port captured");
+        assert!(fab.peer_addrs()[0].ip.is_loopback(), "IP observed from the socket");
         let (_, _, c_after_handshake, m) = fab.counters().snapshot();
         assert!(c_after_handshake > 0, "handshake counted as control");
         assert_eq!(m, 4, "hello + setup + ack + shard advertise");

@@ -25,11 +25,33 @@
 //! has exactly `|S_k| - 1` edges) — which is what lets the frame sizes equal
 //! the engine's modeled scatter charges byte-for-byte.
 //!
-//! ## Wire limits (v3)
+//! ## Wire limits (v4)
 //!
 //! `parts ≤ 65535`, `d ≤ 65535`, `workers ≤ 255` (per-job `Result` routing),
 //! durations saturate at 2⁴⁸−1 ns (~3.2 days per job). [`RunConfig`]
 //! validation rejects TCP configurations outside these bounds up front.
+//!
+//! ## v4 additions (peer data plane + reduction topologies)
+//!
+//! - [`Hello`] carries the worker's **peer listener port**: every worker
+//!   binds a worker↔worker listener before connecting, and the leader pairs
+//!   the advertised port with the connection's source address to build the
+//!   fleet's [`PeerBook`](Message::PeerBook) (sent only when the peer data
+//!   plane is active, so default runs stay byte-identical to v3 traffic).
+//! - `PairAssign` gains **routed-tree flag bits** (bits 4/5): the section
+//!   ships *zero* payload bytes and the executing worker instead pulls the
+//!   subset's cached local MST from its building anchor over a peer link
+//!   (`PeerHello` once per link, then `TreeFetch` → `TreeShip`).
+//! - `TreeShip` doubles as the ⊕-reduction hop (`fold` kind bit): under
+//!   `reduce_topology ∈ {tree, ring}` the leader sends header-only
+//!   [`FoldShip`](Message::FoldShip) directives and workers fold partial
+//!   MSFs among themselves; only the root worker's `WorkerDone` carries a
+//!   tree. The `Ack` header gains a status byte (`ok` / `pair-fail` /
+//!   `fold-ok` / `fold-fail`) so a dead peer degrades to leader-assisted
+//!   recovery instead of wedging the run.
+//! - [`WorkerDone`](Message::WorkerDone)'s stats block grows from 64 to 80
+//!   bytes: `peer_tx_bytes` (u64) and `peer_ships` (u32) witness the peer
+//!   plane's actual traffic (plus 4 spare bytes).
 //!
 //! ## v3 additions (panel-kernel witnesses)
 //!
@@ -68,7 +90,7 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 3;
+pub const WIRE_VERSION: u16 = 4;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
@@ -87,9 +109,26 @@ const TAG_ACK: u8 = 10;
 const TAG_SETUP_ACK: u8 = 11;
 const TAG_SHARD_ADVERTISE: u8 = 12;
 const TAG_LOCAL_ASSIGN: u8 = 13;
+const TAG_PEER_HELLO: u8 = 14;
+const TAG_TREE_FETCH: u8 = 15;
+const TAG_TREE_SHIP: u8 = 16;
+const TAG_FOLD_SHIP: u8 = 17;
+const TAG_PEER_BOOK: u8 = 18;
+
+// `Ack`-tag status codes (header byte [5]); one reply frame shape covers
+// the whole pair/fold lane so the FIFO window credits stay uniform.
+const ACK_OK: u8 = 0;
+const ACK_PAIR_FAIL: u8 = 1;
+const ACK_FOLD_OK: u8 = 2;
+const ACK_FOLD_FAIL: u8 = 3;
 
 const EDGE_BYTES: u64 = Edge::WIRE_BYTES as u64;
-const STATS_BYTES: u64 = 64;
+/// v4 `WorkerDone` stats-block bytes (v3 was 64; +8 `peer_tx_bytes`,
+/// +4 `peer_ships`, +4 spare).
+pub const STATS_BYTES: u64 = 80;
+/// Bytes of one [`crate::coordinator::messages::PeerAddr`] entry in a
+/// `PeerBook` payload: family byte, pad, port, 16 address bytes.
+pub const PEER_ENTRY_BYTES: u64 = 20;
 const MAX_U48: u64 = (1 << 48) - 1;
 
 /// Bytes of one vectors section: global-id map + row-major f32 rows.
@@ -111,6 +150,8 @@ pub fn encoded_len(msg: &Message) -> u64 {
             Message::PairAssign { ships, .. } => ships
                 .iter()
                 .map(|s| {
+                    // a routed tree is flag bits only — the payload travels
+                    // worker↔worker as a `TreeShip`, never in this frame
                     s.vectors
                         .as_ref()
                         .map_or(0, |(ids, pts)| vectors_payload_bytes(ids.len(), pts.d))
@@ -119,11 +160,22 @@ pub fn encoded_len(msg: &Message) -> u64 {
                 .sum::<u64>(),
             Message::LocalDone { edges, .. } => edges.len() as u64 * EDGE_BYTES,
             Message::Result { edges, .. } => edges.len() as u64 * EDGE_BYTES,
+            Message::TreeShip { edges, .. } => edges.len() as u64 * EDGE_BYTES,
+            Message::PeerBook { peers, builders } => {
+                peers.len() as u64 * PEER_ENTRY_BYTES + builders.len() as u64 * 2
+            }
             Message::WorkerDone { local_tree, .. } => {
                 STATS_BYTES
                     + local_tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
             }
-            Message::Ack { .. } | Message::LocalAssign { .. } | Message::Shutdown => 0,
+            Message::Ack { .. }
+            | Message::PairFail { .. }
+            | Message::FoldDone { .. }
+            | Message::LocalAssign { .. }
+            | Message::PeerHello { .. }
+            | Message::TreeFetch { .. }
+            | Message::FoldShip { .. }
+            | Message::Shutdown => 0,
         }
 }
 
@@ -256,8 +308,11 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
                     })?;
                 at += slot + 1;
                 let bit = at - 1; // 0 = subset i, 1 = subset j
-                if ship.vectors.is_none() && ship.tree.is_none() {
+                if ship.vectors.is_none() && ship.tree.is_none() && !ship.routed {
                     bail!("PairAssign ship for subset {} is empty", ship.part);
+                }
+                if ship.routed && ship.tree.is_some() {
+                    bail!("PairAssign ship for subset {} both routes and carries its tree", ship.part);
                 }
                 if let Some((ids, pts)) = &ship.vectors {
                     flags |= 1 << bit;
@@ -267,6 +322,11 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
                 if let Some(tree) = &ship.tree {
                     flags |= 1 << (2 + bit);
                     f.push_edges(tree);
+                }
+                if ship.routed {
+                    // no payload: the worker pulls the tree from the
+                    // subset's building anchor over its peer link
+                    flags |= 1 << (4 + bit);
                 }
             }
             f.set_u8(5, flags);
@@ -293,12 +353,72 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
         }
         Message::Ack { job_id } => {
             let mut f = FrameBuf::new(TAG_ACK, payload)?;
+            f.set_u8(5, ACK_OK);
             f.set_u32(8, *job_id);
+            f
+        }
+        Message::PairFail { job_id } => {
+            let mut f = FrameBuf::new(TAG_ACK, payload)?;
+            f.set_u8(5, ACK_PAIR_FAIL);
+            f.set_u32(8, *job_id);
+            f
+        }
+        Message::FoldDone { ok } => {
+            let mut f = FrameBuf::new(TAG_ACK, payload)?;
+            f.set_u8(5, if *ok { ACK_FOLD_OK } else { ACK_FOLD_FAIL });
             f
         }
         Message::LocalAssign { part } => {
             let mut f = FrameBuf::new(TAG_LOCAL_ASSIGN, payload)?;
             f.set_u32(8, *part);
+            f
+        }
+        Message::PeerHello { from } => {
+            let mut f = FrameBuf::new(TAG_PEER_HELLO, payload)?;
+            f.set_u16(6, *from);
+            f.set_u32(8, MAGIC);
+            f
+        }
+        Message::TreeFetch { part } => {
+            let mut f = FrameBuf::new(TAG_TREE_FETCH, payload)?;
+            f.set_u32(8, *part);
+            f
+        }
+        Message::TreeShip { part, fold, edges } => {
+            let mut f = FrameBuf::new(TAG_TREE_SHIP, payload)?;
+            f.set_u8(5, *fold as u8);
+            f.set_u32(8, *part);
+            f.push_edges(edges);
+            f
+        }
+        Message::FoldShip { to, expect } => {
+            let mut f = FrameBuf::new(TAG_FOLD_SHIP, payload)?;
+            f.set_u16(6, *to);
+            f.set_u16(8, *expect);
+            f
+        }
+        Message::PeerBook { peers, builders } => {
+            let mut f = FrameBuf::new(TAG_PEER_BOOK, payload)?;
+            f.set_u16(6, need_u16(peers.len(), "peer-book worker count")?);
+            f.set_u16(8, need_u16(builders.len(), "peer-book builder count")?);
+            for p in peers {
+                let mut entry = [0u8; PEER_ENTRY_BYTES as usize];
+                entry[2..4].copy_from_slice(&p.port.to_le_bytes());
+                match p.ip {
+                    std::net::IpAddr::V4(v4) => {
+                        entry[0] = 4;
+                        entry[4..8].copy_from_slice(&v4.octets());
+                    }
+                    std::net::IpAddr::V6(v6) => {
+                        entry[0] = 6;
+                        entry[4..20].copy_from_slice(&v6.octets());
+                    }
+                }
+                f.buf.extend_from_slice(&entry);
+            }
+            for b in builders {
+                f.buf.extend_from_slice(&b.to_le_bytes());
+            }
             f
         }
         Message::WorkerDone {
@@ -314,6 +434,8 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             panel_time,
             panel_threads,
             panel_isa,
+            peer_tx_bytes,
+            peer_ships,
         } => {
             let mut f = FrameBuf::new(TAG_WORKER_DONE, payload)?;
             f.set_u8(5, local_tree.is_some() as u8);
@@ -326,6 +448,8 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             f.push_u64(*panel_flops);
             f.push_u64(u64::try_from(panel_time.as_nanos()).unwrap_or(u64::MAX));
             f.push_u32s(&[*panel_threads, *panel_isa as u32]);
+            f.push_u64(*peer_tx_bytes);
+            f.push_u32s(&[*peer_ships, 0]); // + 4 spare bytes
             if let Some(tree) = local_tree {
                 f.push_edges(tree);
             }
@@ -505,8 +629,12 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 } else {
                     None
                 };
-                if vectors.is_some() || tree.is_some() {
-                    ships.push(SubsetShip { part, vectors, tree });
+                let routed = flags & (1 << (4 + bit)) != 0;
+                if routed && tree.is_some() {
+                    bail!("PairAssign subset {part} both routed and tree-carrying");
+                }
+                if vectors.is_some() || tree.is_some() || routed {
+                    ships.push(SubsetShip { part, vectors, tree, routed });
                 }
             }
             r.done("PairAssign")?;
@@ -523,8 +651,54 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
             compute: r0.dur48_at(6),
             edges: r.edges(derive_edges(payload_len, "Result")?)?,
         },
-        TAG_ACK => Message::Ack { job_id: r0.u32_at(8) },
+        TAG_ACK => match r0.u8_at(5) {
+            ACK_OK => Message::Ack { job_id: r0.u32_at(8) },
+            ACK_PAIR_FAIL => Message::PairFail { job_id: r0.u32_at(8) },
+            ACK_FOLD_OK => Message::FoldDone { ok: true },
+            ACK_FOLD_FAIL => Message::FoldDone { ok: false },
+            other => bail!("unknown ack status {other}"),
+        },
         TAG_LOCAL_ASSIGN => Message::LocalAssign { part: r0.u32_at(8) },
+        TAG_PEER_HELLO => {
+            if r0.u32_at(8) != MAGIC {
+                bail!("peer-hello magic mismatch: peer is not a demst worker");
+            }
+            Message::PeerHello { from: r0.u16_at(6) }
+        }
+        TAG_TREE_FETCH => Message::TreeFetch { part: r0.u32_at(8) },
+        TAG_TREE_SHIP => Message::TreeShip {
+            part: r0.u32_at(8),
+            fold: r0.u8_at(5) & 1 != 0,
+            edges: r.edges(derive_edges(payload_len, "TreeShip")?)?,
+        },
+        TAG_FOLD_SHIP => Message::FoldShip { to: r0.u16_at(6), expect: r0.u16_at(8) },
+        TAG_PEER_BOOK => {
+            let n_peers = r0.u16_at(6) as usize;
+            let n_builders = r0.u16_at(8) as usize;
+            let mut peers = Vec::with_capacity(n_peers);
+            for _ in 0..n_peers {
+                let entry = r.take(PEER_ENTRY_BYTES as usize)?;
+                let port = u16::from_le_bytes(entry[2..4].try_into().unwrap());
+                let ip: std::net::IpAddr = match entry[0] {
+                    4 => {
+                        let o: [u8; 4] = entry[4..8].try_into().unwrap();
+                        std::net::Ipv4Addr::from(o).into()
+                    }
+                    6 => {
+                        let o: [u8; 16] = entry[4..20].try_into().unwrap();
+                        std::net::Ipv6Addr::from(o).into()
+                    }
+                    other => bail!("peer-book entry has unknown address family {other}"),
+                };
+                peers.push(crate::coordinator::messages::PeerAddr { ip, port });
+            }
+            let mut builders = Vec::with_capacity(n_builders);
+            for _ in 0..n_builders {
+                let raw = r.take(2)?;
+                builders.push(u16::from_le_bytes(raw.try_into().unwrap()));
+            }
+            Message::PeerBook { peers, builders }
+        }
         TAG_WORKER_DONE => {
             let has_tree = r0.u8_at(5) & 1 != 0;
             let worker = r0.u16_at(6) as usize;
@@ -542,6 +716,9 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
             let panel_threads = r.u32()?;
             let panel_isa = u8::try_from(r.u32()?)
                 .map_err(|_| anyhow!("WorkerDone panel_isa out of u8 range"))?;
+            let peer_tx_bytes = r.u64()?;
+            let peer_ships = r.u32()?;
+            let _spare = r.u32()?;
             let local_tree = if has_tree {
                 Some(r.edges(derive_edges(tree_bytes, "WorkerDone tree")?)?)
             } else {
@@ -560,6 +737,8 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 panel_time,
                 panel_threads,
                 panel_isa,
+                peer_tx_bytes,
+                peer_ships,
             }
         }
         TAG_SHUTDOWN => Message::Shutdown,
@@ -638,6 +817,10 @@ pub fn pair_kernel_from_code(code: u8) -> Result<PairKernelChoice> {
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hello {
     pub version: u16,
+    /// Port of the worker's peer (worker↔worker) listener, 0 when the
+    /// worker exposes none. The leader pairs this with the connection's
+    /// observed source address to assemble the fleet's `PeerBook`.
+    pub peer_port: u16,
 }
 
 /// Leader → worker: everything a remote rank needs to decode job frames and
@@ -674,6 +857,7 @@ pub fn encode_hello(h: &Hello) -> Vec<u8> {
     let mut f = FrameBuf::new(TAG_HELLO, 0).expect("fixed frame");
     f.set_u16(6, h.version);
     f.set_u32(8, MAGIC);
+    f.set_u16(12, h.peer_port);
     f.buf
 }
 
@@ -687,7 +871,7 @@ pub fn decode_hello(frame: &[u8]) -> Result<Hello> {
     if version != WIRE_VERSION {
         bail!("wire protocol version mismatch: peer v{version}, this build v{WIRE_VERSION}");
     }
-    Ok(Hello { version })
+    Ok(Hello { version, peer_port: r.u16_at(12) })
 }
 
 pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
@@ -847,11 +1031,13 @@ mod tests {
             part: 0,
             vectors: Some((vec![0, 4, 8], Dataset::new(3, 2, vec![1.0; 6]))),
             tree: Some(vec![Edge::new(0, 4, 1.5), Edge::new(4, 8, 0.25)]),
+            routed: false,
         };
         let ship_j = SubsetShip {
             part: 2,
             vectors: None,
             tree: Some(vec![Edge::new(1, 2, 0.5), Edge::new(2, 3, 1.0), Edge::new(3, 5, 2.0)]),
+            routed: false,
         };
         for ships in [vec![], vec![ship_i.clone()], vec![ship_j.clone()], vec![ship_i, ship_j]] {
             let msg = Message::PairAssign { job: PairJob { id: 4, i: 0, j: 2 }, ships };
@@ -868,6 +1054,7 @@ mod tests {
                 part: 0,
                 vectors: None,
                 tree: Some(vec![Edge::new(0, 1, 4.0)]),
+                routed: false,
             }],
         };
         assert_eq!(msg.wire_bytes(), 16 + 12);
@@ -896,7 +1083,10 @@ mod tests {
             panel_time: Duration::from_nanos(987_654_321),
             panel_threads: 8,
             panel_isa: 2,
+            peer_tx_bytes: 123_456,
+            peer_ships: 5,
         };
+        assert_eq!(done.wire_bytes(), HEADER_BYTES + STATS_BYTES, "stats block is 80 bytes");
         assert_eq!(roundtrip(&done, None), done);
         // None vs Some(vec![]) is preserved by the has-tree flag
         let bare = Message::WorkerDone {
@@ -912,6 +1102,8 @@ mod tests {
             panel_time: Duration::ZERO,
             panel_threads: 0,
             panel_isa: 0,
+            peer_tx_bytes: 0,
+            peer_ships: 0,
         };
         assert_eq!(roundtrip(&bare, None), bare);
     }
@@ -964,8 +1156,10 @@ mod tests {
 
     #[test]
     fn handshake_roundtrip_and_version_check() {
-        let hello = Hello { version: WIRE_VERSION };
+        let hello = Hello { version: WIRE_VERSION, peer_port: 40123 };
         assert_eq!(decode_hello(&encode_hello(&hello)).unwrap(), hello);
+        let no_peer = Hello { version: WIRE_VERSION, peer_port: 0 };
+        assert_eq!(decode_hello(&encode_hello(&no_peer)).unwrap(), no_peer);
         let mut wrong = encode_hello(&hello);
         wrong[6] = WIRE_VERSION as u8 + 1;
         assert!(decode_hello(&wrong).is_err(), "version mismatch rejected");
@@ -1048,4 +1242,112 @@ mod tests {
         let mut short = &buf[..buf.len() - 1];
         assert!(read_frame(&mut short).is_err());
     }
+
+    #[test]
+    fn routed_pair_assign_ships_zero_payload() {
+        let ctx = WireCtx { d: 2, part_sizes: vec![3, 2, 4] };
+        let msg = Message::PairAssign {
+            job: PairJob { id: 4, i: 0, j: 2 },
+            ships: vec![
+                SubsetShip { part: 0, vectors: None, tree: None, routed: true },
+                SubsetShip { part: 2, vectors: None, tree: None, routed: true },
+            ],
+        };
+        assert_eq!(msg.wire_bytes(), HEADER_BYTES, "routed sections are header-only");
+        assert_eq!(roundtrip(&msg, Some(&ctx)), msg);
+        // one section routed, the other carried inline
+        let mixed = Message::PairAssign {
+            job: PairJob { id: 5, i: 0, j: 2 },
+            ships: vec![
+                SubsetShip { part: 0, vectors: None, tree: None, routed: true },
+                SubsetShip {
+                    part: 2,
+                    vectors: None,
+                    tree: Some(vec![
+                        Edge::new(1, 2, 0.5),
+                        Edge::new(2, 3, 1.0),
+                        Edge::new(3, 5, 2.0),
+                    ]),
+                    routed: false,
+                },
+            ],
+        };
+        assert_eq!(mixed.wire_bytes(), HEADER_BYTES + 3 * EDGE_BYTES);
+        assert_eq!(roundtrip(&mixed, Some(&ctx)), mixed);
+        // routed + inline tree on the same section is a protocol error
+        let bad = Message::PairAssign {
+            job: PairJob { id: 6, i: 0, j: 0 },
+            ships: vec![SubsetShip {
+                part: 0,
+                vectors: None,
+                tree: Some(vec![Edge::new(0, 1, 1.0)]),
+                routed: true,
+            }],
+        };
+        assert!(encode(&bad).is_err());
+    }
+
+    #[test]
+    fn peer_plane_frames_roundtrip() {
+        use crate::coordinator::messages::FOLD_KEEP;
+        let hello = Message::PeerHello { from: 7 };
+        assert_eq!(hello.wire_bytes(), HEADER_BYTES, "PeerHello is header-only");
+        assert_eq!(roundtrip(&hello, None), hello);
+        let fetch = Message::TreeFetch { part: 300_000 };
+        assert_eq!(fetch.wire_bytes(), HEADER_BYTES);
+        assert_eq!(roundtrip(&fetch, None), fetch);
+        for fold in [false, true] {
+            let ship = Message::TreeShip {
+                part: 2,
+                fold,
+                edges: vec![Edge::new(0, 9, 1.25), Edge::new(9, 17, 0.5)],
+            };
+            assert_eq!(ship.wire_bytes(), HEADER_BYTES + 2 * EDGE_BYTES);
+            assert_eq!(roundtrip(&ship, None), ship);
+        }
+        // empty fold ship: a worker with no partial still participates
+        let empty = Message::TreeShip { part: 0, fold: true, edges: vec![] };
+        assert_eq!(empty.wire_bytes(), HEADER_BYTES);
+        assert_eq!(roundtrip(&empty, None), empty);
+        for to in [0u16, 3, FOLD_KEEP] {
+            let fs = Message::FoldShip { to, expect: 2 };
+            assert_eq!(fs.wire_bytes(), HEADER_BYTES, "FoldShip is header-only");
+            assert_eq!(roundtrip(&fs, None), fs);
+        }
+    }
+
+    #[test]
+    fn ack_status_family_roundtrips() {
+        let fail = Message::PairFail { job_id: 41 };
+        assert_eq!(fail.wire_bytes(), HEADER_BYTES);
+        assert_eq!(roundtrip(&fail, None), fail);
+        for ok in [false, true] {
+            let done = Message::FoldDone { ok };
+            assert_eq!(done.wire_bytes(), HEADER_BYTES);
+            assert_eq!(roundtrip(&done, None), done);
+        }
+        // the plain Ack still decodes as Ack (status 0)
+        assert_eq!(roundtrip(&Message::Ack { job_id: 9 }, None), Message::Ack { job_id: 9 });
+    }
+
+    #[test]
+    fn peer_book_roundtrip() {
+        use crate::coordinator::messages::PeerAddr;
+        use std::net::IpAddr;
+        let book = Message::PeerBook {
+            peers: vec![
+                PeerAddr { ip: IpAddr::V4([127, 0, 0, 1].into()), port: 40001 },
+                PeerAddr { ip: IpAddr::V6([0xfe80, 0, 0, 0, 0, 0, 0, 0x17].into()), port: 65535 },
+                PeerAddr { ip: IpAddr::V4([10, 1, 2, 3].into()), port: 0 },
+            ],
+            builders: vec![0, 2, 1, FOLD_KEEP_SENTINEL],
+        };
+        assert_eq!(book.wire_bytes(), HEADER_BYTES + 3 * PEER_ENTRY_BYTES + 4 * 2);
+        assert_eq!(roundtrip(&book, None), book);
+        let empty = Message::PeerBook { peers: vec![], builders: vec![] };
+        assert_eq!(empty.wire_bytes(), HEADER_BYTES);
+        assert_eq!(roundtrip(&empty, None), empty);
+    }
+
+    const FOLD_KEEP_SENTINEL: u16 = u16::MAX;
 }

@@ -20,9 +20,19 @@
 //! - `Job` — the paper-literal full-union scatter: solve the shipped union
 //!   with the dense kernel directly (kept for wire completeness; the
 //!   engine's proxies always use `PairAssign`);
+//! - `PeerBook` — store the fleet's peer routing table (listener addresses
+//!   + subset builders); no reply. A `PairAssign` section flagged *routed*
+//!   then pulls its cached tree from the building anchor over a
+//!   worker↔worker link (`PeerHello` once per link, `TreeFetch` →
+//!   `TreeShip`) instead of the leader link; a dead anchor degrades the job
+//!   to a `PairFail` reply and the leader re-plans it tree-inline;
+//! - `FoldShip` — ⊕-reduction directive (tree/ring topologies): wait for
+//!   the announced number of peer partial MSFs, fold them into the local
+//!   partial, ship the result to the named peer (or keep it, as the
+//!   reduction root), reply `FoldDone`;
 //! - `Shutdown` — reply the final `WorkerDone` (busy time, distance
-//!   evaluations, panel stats, and the folded tree in reduce mode) and
-//!   exit.
+//!   evaluations, panel stats, peer-plane traffic witnesses, and the folded
+//!   tree in reduce mode) and exit.
 //!
 //! Exactness: the worker never holds the full matrix, only gathered
 //! subsets — and every kernel it runs is bit-identical to the leader's
@@ -34,7 +44,7 @@
 
 use super::wire::{self, Hello, SetupAck, ShardAdvertise, WireCtx, WIRE_VERSION};
 use crate::config::{PairKernelChoice, RunConfig};
-use crate::coordinator::messages::Message;
+use crate::coordinator::messages::{Message, PeerAddr, SubsetShip, FOLD_KEEP};
 use crate::data::Dataset;
 use crate::decomp::reduction::tree_merge;
 use crate::decomp::PairJob;
@@ -48,8 +58,11 @@ use crate::geometry::CountingMetric;
 use crate::graph::Edge;
 use crate::shard::{Manifest, Shard};
 use anyhow::{anyhow, bail, Context, Result};
-use std::net::TcpStream;
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Chaos hook (failure-injection tests and `scripts/chaos_smoke.sh`): when
@@ -58,6 +71,217 @@ use std::time::{Duration, Instant};
 /// upon receiving its `(N+1)`-th pair job. Leaves one job dead in flight,
 /// which the leader must reassign.
 pub const CHAOS_EXIT_ENV: &str = "DEMST_CHAOS_EXIT_AFTER_JOBS";
+
+/// Chaos hook for the reduction topologies: when set (to anything), the
+/// worker exits abruptly upon receiving its `FoldShip` directive — mid-fold,
+/// after its pair jobs were acked but before its partial MSF shipped
+/// anywhere. The leader must return every job folded into the lost partial
+/// to the exactly-once lane.
+pub const CHAOS_EXIT_ON_FOLD_ENV: &str = "DEMST_CHAOS_EXIT_ON_FOLD";
+
+/// How long a fold directive waits for the expected peer partials before
+/// degrading to `FoldDone { ok: false }` (the worker then keeps everything
+/// that did arrive and reports it in its `WorkerDone` for the leader to
+/// fold — exactly-once either way, because ⊕ is idempotent).
+const FOLD_WAIT: Duration = Duration::from_secs(30);
+
+/// Peer-link connect timeout (a dead anchor should degrade to `PairFail`
+/// promptly, not hang the deck).
+const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// State shared between the worker's main loop and its peer-listener
+/// threads. The listener serves two frame kinds, both independent of the
+/// main loop (so a fetch never deadlocks two busy workers):
+/// `TreeFetch` → reply the subset's cached local MST from `trees`;
+/// `TreeShip { fold: true }` → push the partial into `inbox` and wake the
+/// main loop's fold wait.
+struct PeerState {
+    /// built local MSTs (compare-form weights), indexed by subset
+    trees: Mutex<Vec<Option<Vec<Edge>>>>,
+    /// ⊕-fold partials received from peers (emission-form)
+    inbox: Mutex<Vec<Vec<Edge>>>,
+    arrived: Condvar,
+    /// peer-plane bytes this worker put on peer sockets (either role)
+    tx_bytes: AtomicU64,
+    /// peer-plane payload frames sent (fetch replies + fold ships)
+    ships: AtomicU32,
+    shutdown: AtomicBool,
+}
+
+impl PeerState {
+    fn new(parts: usize) -> Self {
+        Self {
+            trees: Mutex::new(vec![None; parts]),
+            inbox: Mutex::new(Vec::new()),
+            arrived: Condvar::new(),
+            tx_bytes: AtomicU64::new(0),
+            ships: AtomicU32::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    fn publish(&self, part: usize, tree: &[Edge]) {
+        self.trees.lock().unwrap()[part] = Some(tree.to_vec());
+    }
+}
+
+/// Accept loop for the worker's peer listener: non-blocking accept polled
+/// against the shutdown flag, one handler thread per peer connection.
+/// Handler sockets stay blocking — they exit on EOF when the far worker
+/// drops its connection cache at shutdown.
+fn spawn_peer_server(listener: TcpListener, peer: Arc<PeerState>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        if listener.set_nonblocking(true).is_err() {
+            return;
+        }
+        while !peer.shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((conn, _)) => {
+                    let peer = Arc::clone(&peer);
+                    std::thread::spawn(move || {
+                        let _ = serve_peer_conn(conn, &peer);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(_) => break,
+            }
+        }
+    })
+}
+
+/// One accepted peer connection: `PeerHello` first, then fetches and fold
+/// ships until the peer hangs up.
+fn serve_peer_conn(mut conn: TcpStream, peer: &PeerState) -> Result<()> {
+    conn.set_nodelay(true).ok();
+    match wire::decode(&wire::read_frame(&mut conn)?, None)? {
+        Message::PeerHello { .. } => {}
+        other => bail!("peer link opened without PeerHello: {other:?}"),
+    }
+    loop {
+        let frame = match wire::read_frame(&mut conn) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // EOF / reset: peer is done with us
+        };
+        match wire::decode(&frame, None)? {
+            Message::TreeFetch { part } => {
+                let edges = peer
+                    .trees
+                    .lock()
+                    .unwrap()
+                    .get(part as usize)
+                    .and_then(|t| t.clone())
+                    // no tree: drop the link — the fetcher degrades the job
+                    // to PairFail and the leader re-plans it tree-inline
+                    .ok_or_else(|| anyhow!("peer fetch for unbuilt subset {part}"))?;
+                let reply = wire::encode(&Message::TreeShip { part, fold: false, edges })?;
+                wire::write_frame(&mut conn, &reply)?;
+                peer.tx_bytes.fetch_add(reply.len() as u64, Ordering::Relaxed);
+                peer.ships.fetch_add(1, Ordering::Relaxed);
+            }
+            Message::TreeShip { fold: true, edges, .. } => {
+                peer.inbox.lock().unwrap().push(edges);
+                peer.arrived.notify_all();
+            }
+            other => bail!("unexpected frame on peer link: {other:?}"),
+        }
+    }
+}
+
+/// The fetcher half of the peer data plane: connect to (or reuse) the
+/// builder's peer listener and pull one subset's cached local MST. The
+/// worker's own id short-circuits to the local registry. A failed link is
+/// evicted from the cache so the next routed job retries fresh.
+fn fetch_routed(
+    part: u32,
+    my_id: u16,
+    book: Option<&(Vec<PeerAddr>, Vec<u16>)>,
+    conns: &mut HashMap<u16, TcpStream>,
+    peer: &PeerState,
+) -> Result<Vec<Edge>> {
+    let (peers, builders) = book.ok_or_else(|| anyhow!("routed ship before PeerBook"))?;
+    let b = *builders
+        .get(part as usize)
+        .ok_or_else(|| anyhow!("routed subset {part} outside the builder table"))?;
+    if b == my_id {
+        return peer
+            .trees
+            .lock()
+            .unwrap()
+            .get(part as usize)
+            .and_then(|t| t.clone())
+            .ok_or_else(|| anyhow!("routed to own registry but subset {part} is unbuilt"));
+    }
+    if b == FOLD_KEEP {
+        bail!("subset {part} has no peer builder (leader-built)");
+    }
+    let fetched = (|| -> Result<Vec<Edge>> {
+        let conn = peer_conn(b, my_id, peers, conns, peer)?;
+        let fetch = wire::encode(&Message::TreeFetch { part })?;
+        wire::write_frame(conn, &fetch)?;
+        peer.tx_bytes.fetch_add(fetch.len() as u64, Ordering::Relaxed);
+        match wire::decode(&wire::read_frame(conn)?, None)? {
+            Message::TreeShip { part: p, fold: false, edges } if p == part => Ok(edges),
+            other => bail!("expected TreeShip({part}), got {other:?}"),
+        }
+    })();
+    if fetched.is_err() {
+        conns.remove(&b); // half-used link: never reuse it
+    }
+    fetched
+}
+
+/// Get (or open, with a `PeerHello`) the cached connection to worker `to`.
+fn peer_conn<'a>(
+    to: u16,
+    my_id: u16,
+    peers: &[PeerAddr],
+    conns: &'a mut HashMap<u16, TcpStream>,
+    peer: &PeerState,
+) -> Result<&'a mut TcpStream> {
+    if !conns.contains_key(&to) {
+        let addr = peers
+            .get(to as usize)
+            .ok_or_else(|| anyhow!("worker {to} outside the peer book"))?;
+        if addr.port == 0 {
+            bail!("worker {to} advertises no peer listener");
+        }
+        let mut conn =
+            TcpStream::connect_timeout(&SocketAddr::new(addr.ip, addr.port), PEER_CONNECT_TIMEOUT)
+                .with_context(|| format!("connecting peer link to worker {to}"))?;
+        conn.set_nodelay(true).ok();
+        let hello = wire::encode(&Message::PeerHello { from: my_id })?;
+        wire::write_frame(&mut conn, &hello).context("sending PeerHello")?;
+        peer.tx_bytes.fetch_add(hello.len() as u64, Ordering::Relaxed);
+        conns.insert(to, conn);
+    }
+    Ok(conns.get_mut(&to).expect("just inserted"))
+}
+
+/// Ship this worker's folded partial MSF to peer `to` (a ⊕-reduction hop).
+fn ship_fold(
+    to: u16,
+    my_id: u16,
+    edges: Vec<Edge>,
+    book: Option<&(Vec<PeerAddr>, Vec<u16>)>,
+    conns: &mut HashMap<u16, TcpStream>,
+    peer: &PeerState,
+) -> Result<()> {
+    let (peers, _) = book.ok_or_else(|| anyhow!("FoldShip before PeerBook"))?;
+    let shipped = (|| -> Result<()> {
+        let conn = peer_conn(to, my_id, peers, conns, peer)?;
+        let frame = wire::encode(&Message::TreeShip { part: my_id as u32, fold: true, edges })?;
+        wire::write_frame(conn, &frame).context("shipping fold partial")?;
+        peer.tx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        peer.ships.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    })();
+    if shipped.is_err() {
+        conns.remove(&to);
+    }
+    shipped
+}
 
 /// What one worker process did, for the `demst worker` exit report.
 #[derive(Clone, Debug, Default)]
@@ -75,6 +299,10 @@ pub struct WorkerReport {
     pub shards_loaded: u32,
     /// vector payload bytes those shards kept off the wire
     pub shard_local_bytes: u64,
+    /// bytes sent on worker↔worker peer links (tree ships + fold hops)
+    pub peer_tx_bytes: u64,
+    /// peer payload frames sent (fetch replies + fold ships)
+    pub peer_ships: u32,
 }
 
 /// How a worker process connects and what it serves.
@@ -194,13 +422,24 @@ pub fn serve(stream: TcpStream) -> Result<WorkerReport> {
 /// shard residency.
 pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result<WorkerReport> {
     stream.set_nodelay(true).ok();
+    // Bind the peer listener before Hello so its port can be advertised.
+    // Bind failure degrades gracefully: port 0 = "no peer plane here", and
+    // the leader falls back to shipping trees itself.
+    let peer_listener = TcpListener::bind("0.0.0.0:0").ok();
+    let peer_port = peer_listener
+        .as_ref()
+        .and_then(|l| l.local_addr().ok())
+        .map_or(0, |a| a.port());
     // Bound the handshake so connecting to a silent peer fails instead of
     // hanging; job frames afterwards may legitimately take arbitrarily long.
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
         .context("setting handshake timeout")?;
-    wire::write_frame(&mut stream, &wire::encode_hello(&Hello { version: WIRE_VERSION }))
-        .context("sending Hello")?;
+    wire::write_frame(
+        &mut stream,
+        &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port }),
+    )
+    .context("sending Hello")?;
     let setup_frame =
         wire::read_frame(&mut stream).context("reading Setup (is the peer a demst leader?)")?;
     let setup = wire::decode_setup(&setup_frame)?;
@@ -251,6 +490,14 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     let chaos_exit_after: Option<u32> = std::env::var(CHAOS_EXIT_ENV)
         .ok()
         .and_then(|v| v.trim().parse().ok());
+    let chaos_exit_on_fold = std::env::var(CHAOS_EXIT_ON_FOLD_ENV).is_ok();
+
+    // Peer data plane: listener threads share the built-tree registry and
+    // the fold inbox with this loop; the book and link cache stay here.
+    let peer = Arc::new(PeerState::new(setup.part_sizes.len()));
+    let peer_accept = peer_listener.map(|l| spawn_peer_server(l, Arc::clone(&peer)));
+    let mut peer_book: Option<(Vec<PeerAddr>, Vec<u16>)> = None;
+    let mut peer_conns: HashMap<u16, TcpStream> = HashMap::new();
 
     let mut store: Vec<Option<Slot>> = Vec::new();
     store.resize_with(setup.part_sizes.len(), || None);
@@ -308,6 +555,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                     bail!("LocalJob for subset {k} outside the {}-part run", store.len());
                 }
                 store[k] = Some(Slot::new(global_ids, points, aux, Some(tree.clone())));
+                peer.publish(k, &tree);
                 Message::LocalDone { part, edges: tree, compute }
             }
             Message::LocalAssign { part } => {
@@ -326,6 +574,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                 report.local_jobs += 1;
                 let k = part as usize;
                 store[k].as_mut().expect("resident checked").tree = Some(tree.clone());
+                peer.publish(k, &tree);
                 Message::LocalDone { part, edges: tree, compute }
             }
             Message::PairAssign { job, ships } => {
@@ -340,8 +589,54 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                         std::process::exit(113);
                     }
                 }
+                let mut fetch_failed = false;
                 for ship in ships {
-                    absorb(&mut store, block.as_ref(), ship)?;
+                    let SubsetShip { part, vectors, tree, routed } = ship;
+                    if vectors.is_some() || tree.is_some() {
+                        absorb(
+                            &mut store,
+                            block.as_ref(),
+                            SubsetShip { part, vectors, tree, routed: false },
+                        )?;
+                    }
+                    if routed {
+                        // Pull the tree from its building anchor instead of
+                        // the leader link (vectors, if any, rode inline above).
+                        match fetch_routed(
+                            part,
+                            setup.worker_id,
+                            peer_book.as_ref(),
+                            &mut peer_conns,
+                            &peer,
+                        ) {
+                            Ok(t) => absorb(
+                                &mut store,
+                                block.as_ref(),
+                                SubsetShip {
+                                    part,
+                                    vectors: None,
+                                    tree: Some(t),
+                                    routed: false,
+                                },
+                            )?,
+                            Err(e) => {
+                                eprintln!(
+                                    "worker {}: peer fetch for subset {part} failed: {e:#}",
+                                    setup.worker_id
+                                );
+                                fetch_failed = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if fetch_failed {
+                    // The job was NOT executed: hand it back to the leader's
+                    // exactly-once lane for a tree-inline re-plan.
+                    let frame = wire::encode(&Message::PairFail { job_id: job.id })?;
+                    wire::write_frame(&mut stream, &frame).context("sending PairFail")?;
+                    report.bytes_tx += frame.len() as u64;
+                    continue;
                 }
                 let t = Instant::now();
                 let (tree, evals) = match pair_kernel {
@@ -414,12 +709,76 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                     compute,
                 }
             }
+            Message::PeerBook { peers, builders } => {
+                // Routing table for the peer plane; no reply — FIFO order
+                // guarantees it lands before any routed PairAssign.
+                peer_book = Some((peers, builders));
+                continue;
+            }
+            Message::FoldShip { to, expect } => {
+                if chaos_exit_on_fold {
+                    // Chaos hook: die mid-fold — acked jobs are folded into
+                    // a partial that now exists nowhere. The leader must
+                    // return every one of them to the exactly-once lane.
+                    eprintln!(
+                        "worker {}: {CHAOS_EXIT_ON_FOLD_ENV} set — exiting mid-fold",
+                        setup.worker_id
+                    );
+                    std::process::exit(114);
+                }
+                // Wait for the expected peer partials (they were confirmed
+                // shipped before this directive was sent, so the wait is a
+                // delivery race, not a schedule dependency).
+                let deadline = Instant::now() + FOLD_WAIT;
+                let mut inbox = peer.inbox.lock().unwrap();
+                while (inbox.len() as u16) < expect && Instant::now() < deadline {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    let (guard, _) = peer.arrived.wait_timeout(inbox, left).unwrap();
+                    inbox = guard;
+                }
+                let got: Vec<Vec<Edge>> = inbox.drain(..).collect();
+                drop(inbox);
+                let mut ok = got.len() as u16 >= expect;
+                // Fold everything that DID arrive — those partials live only
+                // here now, and ⊕ is idempotent, so folding them in is
+                // always safe.
+                for partial in got {
+                    folded = Some(match folded.take() {
+                        None => partial,
+                        Some(prev) => tree_merge(n, &prev, &partial),
+                    });
+                }
+                if ok && to != FOLD_KEEP {
+                    let partial = folded.take().unwrap_or_default();
+                    match ship_fold(
+                        to,
+                        setup.worker_id,
+                        partial.clone(),
+                        peer_book.as_ref(),
+                        &mut peer_conns,
+                        &peer,
+                    ) {
+                        Ok(()) => {}
+                        Err(e) => {
+                            eprintln!(
+                                "worker {}: fold ship to worker {to} failed: {e:#}",
+                                setup.worker_id
+                            );
+                            folded = Some(partial); // keep it for WorkerDone
+                            ok = false;
+                        }
+                    }
+                }
+                Message::FoldDone { ok }
+            }
             Message::Shutdown => {
                 // Wire contract (mirrors the in-process WorkerDone):
                 // dist_evals covers the *pair phase* only — the leader
                 // accounts the local-MST cache build separately. The human
                 // exit report totals everything this process computed.
                 report.dist_evals = pair_evals + counter.evals();
+                report.peer_tx_bytes = peer.tx_bytes.load(Ordering::Relaxed);
+                report.peer_ships = peer.ships.load(Ordering::Relaxed);
                 let done = Message::WorkerDone {
                     worker: setup.worker_id as usize,
                     local_tree: folded.take(),
@@ -433,12 +792,19 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                     panel_time: panel_perf.time,
                     panel_threads: panel_perf.threads,
                     panel_isa: panel_perf.isa,
+                    peer_tx_bytes: report.peer_tx_bytes,
+                    peer_ships: report.peer_ships,
                 };
                 let frame = wire::encode(&done)?;
                 // Best-effort: a leader that already gave up must not turn a
                 // clean drain into a worker error.
                 if wire::write_frame(&mut stream, &frame).is_ok() {
                     report.bytes_tx += frame.len() as u64;
+                }
+                peer.shutdown.store(true, Ordering::Relaxed);
+                peer_conns.clear(); // closed links EOF the far handlers
+                if let Some(t) = peer_accept {
+                    let _ = t.join(); // bounded: the accept poll is 25 ms
                 }
                 return Ok(report);
             }

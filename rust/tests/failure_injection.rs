@@ -221,6 +221,80 @@ fn killed_worker_mid_run_completes_with_bit_identical_tree() {
     }
 }
 
+/// A worker killed **mid-ring-fold**: its pair jobs were acked and folded
+/// into a partial MSF that dies with the process, before shipping anywhere.
+/// The leader must roll every one of those jobs back into the exactly-once
+/// lane, the survivors re-run them (⊕ idempotence makes re-folding safe),
+/// and the final tree stays bit-identical — with `jobs_reassigned > 0`
+/// witnessing the recovery.
+#[test]
+fn killed_worker_mid_ring_fold_recovers_bit_identically() {
+    use demst::config::{KernelChoice, PairKernelChoice, ReduceTopology, TransportChoice};
+    use demst::coordinator::run_distributed;
+    use demst::data::generators::uniform;
+    use demst::mst::normalize_tree;
+    use demst::net::launch;
+    use demst::net::worker::CHAOS_EXIT_ON_FOLD_ENV;
+    use demst::util::prng::Pcg64;
+    use std::net::TcpListener;
+
+    let ds = uniform(130, 6, 1.0, Pcg64::seeded(9200));
+    let mut cfg = RunConfig {
+        parts: 6, // 15 pair jobs across 3 workers
+        workers: 3,
+        kernel: KernelChoice::PrimDense,
+        pair_kernel: PairKernelChoice::BipartiteMerge,
+        reduce_tree: true,
+        reduce_topology: ReduceTopology::Ring,
+        ..Default::default()
+    };
+    let sim = run_distributed(&ds, &cfg).unwrap();
+
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Connect the chaotic worker first: accept order assigns worker ids, and
+    // ring folds settle in ascending id order — killing worker 0 leaves the
+    // still-unsettled survivors to absorb the returned jobs. (A kill at the
+    // very last rendezvous has no fleet left to recover on by design.)
+    let mut chaotic = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr])
+        .env(CHAOS_EXIT_ON_FOLD_ENV, "1")
+        .spawn()
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(500));
+    let healthy: Vec<_> = (0..2)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+                .args(["worker", "--connect", &addr])
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+
+    let run = launch::serve(&ds, &cfg, &listener)
+        .unwrap_or_else(|e| panic!("mid-fold kill: run failed: {e:#}"));
+    assert_eq!(
+        normalize_tree(&sim.mst),
+        normalize_tree(&run.mst),
+        "tree must be bit-identical despite the mid-fold death"
+    );
+    assert_eq!(run.metrics.worker_failures, 1);
+    assert!(
+        run.metrics.jobs_reassigned > 0,
+        "the dead worker's folded-but-unshipped jobs must be reassigned"
+    );
+    assert_eq!(run.metrics.jobs, 15, "every job recorded exactly once");
+    assert_eq!(run.metrics.reduce_topology, "ring");
+
+    for mut child in healthy {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "survivor must exit 0: {status}");
+    }
+    assert_eq!(chaotic.wait().unwrap().code(), Some(114), "mid-fold chaos exit code");
+}
+
 #[test]
 fn truncated_npy_rejected() {
     let dir = tmpdir("npy");

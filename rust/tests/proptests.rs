@@ -474,13 +474,16 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
                     Dataset::new(size, d, g.vec_f32(-10.0, 10.0, size * d)),
                 )
             });
-            let tree = (g.bool_p(0.5) || vectors.is_none()).then(|| {
+            // a peer-routed section never carries its tree inline (wire
+            // invariant); an unrouted one must ship *something*
+            let routed = g.bool_p(0.3);
+            let tree = (!routed && (g.bool_p(0.5) || vectors.is_none())).then(|| {
                 (0..size.saturating_sub(1))
                     .map(|k| Edge::new(2 * k as u32, 2 * k as u32 + 1, g.f32_in(0.0, 9.0)))
                     .collect::<Vec<Edge>>()
             });
             if g.bool_p(0.75) {
-                ships.push(SubsetShip { part, vectors, tree });
+                ships.push(SubsetShip { part, vectors, tree, routed });
             }
         }
         check(
@@ -525,10 +528,49 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
                 panel_time: Duration::from_nanos(g.rng().next_u64() >> 1),
                 panel_threads: g.rng().next_u64() as u32,
                 panel_isa: (g.rng().next_u64() % 4) as u8,
+                peer_tx_bytes: g.rng().next_u64(),
+                peer_ships: g.rng().next_u64() as u32,
             },
             None,
         );
         check(&Message::Shutdown, None);
+
+        // v4 peer data plane + fold orchestration frames
+        use demst::coordinator::messages::PeerAddr;
+        check(&Message::PairFail { job_id: g.rng().next_u64() as u32 }, None);
+        check(&Message::FoldDone { ok: g.bool_p(0.5) }, None);
+        check(&Message::PeerHello { from: g.usize_in(0..65536) as u16 }, None);
+        check(&Message::TreeFetch { part: g.usize_in(0..parts) as u32 }, None);
+        check(
+            &Message::TreeShip {
+                part: g.usize_in(0..parts) as u32,
+                fold: g.bool_p(0.5),
+                edges: (0..g.usize_in(0..12))
+                    .map(|k| Edge::new(2 * k as u32, 2 * k as u32 + 1, g.f32_in(0.0, 40.0)))
+                    .collect(),
+            },
+            None,
+        );
+        check(
+            &Message::FoldShip {
+                to: g.usize_in(0..65536) as u16,
+                expect: g.usize_in(0..65536) as u16,
+            },
+            None,
+        );
+        let peers: Vec<PeerAddr> = (0..g.usize_in(0..6))
+            .map(|k| {
+                let ip = if g.bool_p(0.5) {
+                    std::net::IpAddr::from([127, 0, 0, 1 + k as u8])
+                } else {
+                    std::net::IpAddr::from([0, 0, 0, 0, 0, 0, 0, 1 + k as u16])
+                };
+                PeerAddr { ip, port: g.usize_in(1..65536) as u16 }
+            })
+            .collect();
+        let builders: Vec<u16> =
+            (0..parts).map(|_| g.usize_in(0..65536) as u16).collect();
+        check(&Message::PeerBook { peers, builders }, None);
     });
 }
 

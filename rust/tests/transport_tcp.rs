@@ -371,6 +371,52 @@ fn tcp_sharded_uncovered_assignment_fails_loudly() {
     }
 }
 
+/// The leaderless data plane end to end, on real sockets: a sharded run
+/// with three workers under `--reduce-topology tree` and `ring` must
+/// produce the bit-identical MST as the simulated fabric **and** as the
+/// default leader topology, while the leader link carries zero scatter
+/// payload bytes (`leader_data_bytes == 0`: cached trees travel
+/// worker↔worker, vectors never leave the shards) and the peer plane
+/// witnesses real traffic (`peer_bytes > 0`).
+#[test]
+fn tcp_sharded_reduce_topologies_bypass_the_leader_bit_identically() {
+    use demst::config::ReduceTopology;
+    let ds = float_dataset(908, 72, 5);
+    let (manifest, manifest_path) = write_shards("topology", &ds, 4);
+    let mut cfg = base_cfg(4, 3);
+    cfg.strategy = demst::decomp::PartitionStrategy::Block;
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    cfg.reduce_tree = true;
+    // worker 0 holds everything; 1 and 2 cover their pair neighborhoods
+    let assignments = [vec![0u32, 1, 2, 3], vec![2, 3], vec![0, 1]];
+    let leader_run = sharded_run(&cfg, &manifest, &manifest_path, &assignments);
+    let baseline = normalize_tree(&leader_run.mst);
+    for topology in [ReduceTopology::Tree, ReduceTopology::Ring] {
+        cfg.reduce_topology = topology;
+        let sim = run_distributed(&ds, &cfg).unwrap();
+        let run = sharded_run(&cfg, &manifest, &manifest_path, &assignments);
+        let tag = topology.name();
+        assert_eq!(
+            baseline,
+            normalize_tree(&run.mst),
+            "{tag}: fold topology must not change the tree"
+        );
+        assert_eq!(
+            normalize_tree(&sim.mst),
+            normalize_tree(&run.mst),
+            "{tag}: tcp tree must be bit-identical to sim"
+        );
+        assert_eq!(run.metrics.reduce_topology, tag);
+        assert_eq!(
+            run.metrics.leader_data_bytes, 0,
+            "{tag}: every payload byte must bypass the leader"
+        );
+        assert!(run.metrics.peer_bytes > 0, "{tag}: peer plane must carry traffic");
+        assert!(run.metrics.leader_control_bytes > 0, "{tag}: directives are control");
+        assert_eq!(run.metrics.worker_failures, 0, "{tag}");
+    }
+}
+
 /// Pipelined dispatch parity: window 1 (strict rendezvous) and window 2
 /// (the default overlap) must move exactly the same bytes and produce the
 /// bit-identical tree — the window changes *when* frames travel, never

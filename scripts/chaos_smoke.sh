@@ -1,14 +1,17 @@
 #!/usr/bin/env bash
-# Chaos smoke: elastic-worker failover on a real multi-process run.
+# Chaos smoke: elastic-worker failover on a real multi-process run, once
+# per ⊕-reduction topology (leader / tree / ring).
 #
 # One `demst run --transport tcp` leader plus two externally started
 # `demst worker` processes on 127.0.0.1. Worker 1 is rigged through the
 # DEMST_CHAOS_EXIT_AFTER_JOBS hook to die abruptly — no reply, no shutdown
 # handshake, sockets torn down by the OS, exactly like a SIGKILL — upon
-# receiving its pair job after the halfway mark. Asserts:
+# receiving its pair job after the halfway mark. Under `tree`/`ring` the
+# surviving fleet also re-routes the worker↔worker fold schedule around
+# the corpse. Asserts, for every topology:
 #   (a) the leader exits 0 (run completed on the surviving worker),
 #   (b) the MST CSV is byte-identical to a `--transport sim` run of the
-#       same seed (checksum printed),
+#       same seed (checksum printed) — and identical across topologies,
 #   (c) the leader reports the failover (reassigned jobs > 0).
 #
 # Run by `make chaos-smoke` / `make bench` and the CI chaos-smoke job.
@@ -27,43 +30,52 @@ if [ ! -x "$BIN" ]; then
     exit 2
 fi
 
-LOG="$OUT/demst_chaos_leader.log"
-: > "$LOG"
-"$BIN" run "${ARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
-    --out-mst "$OUT/demst_chaos_tcp.csv" > "$LOG" 2>&1 &
-LEADER=$!
-
-ADDR=""
-for _ in $(seq 1 150); do
-    ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
-    [ -n "$ADDR" ] && break
-    sleep 0.1
-done
-if [ -z "$ADDR" ]; then
-    echo "chaos-smoke: leader never reported its bound address" >&2
-    cat "$LOG" >&2
-    exit 1
-fi
-
-DEMST_CHAOS_EXIT_AFTER_JOBS=3 "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
-W1=$!
-"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
-W2=$!
-
-wait "$LEADER" || { echo "chaos-smoke: leader failed" >&2; cat "$LOG" >&2; exit 1; }
-# the chaos worker must have died nonzero; the survivor must exit 0
-if wait "$W1"; then
-    echo "chaos-smoke: chaos worker exited 0 — the failure was never injected" >&2
-    exit 1
-fi
-wait "$W2" || { echo "chaos-smoke: surviving worker failed" >&2; exit 1; }
-cat "$LOG"
-
-grep -q "reassigned" "$LOG" \
-    || { echo "chaos-smoke: leader log reports no reassignment" >&2; exit 1; }
-
 "$BIN" run "${ARGS[@]}" --out-mst "$OUT/demst_chaos_sim.csv" > /dev/null
 
-cmp "$OUT/demst_chaos_tcp.csv" "$OUT/demst_chaos_sim.csv" \
-    || { echo "chaos-smoke: post-failover MST differs from sim" >&2; exit 1; }
-sha256sum "$OUT/demst_chaos_tcp.csv" | awk '{print "chaos-smoke: OK, mst checksum " $1}'
+for TOPO in leader tree ring; do
+    TARGS=("${ARGS[@]}")
+    if [ "$TOPO" != "leader" ]; then
+        # tree/ring fold worker partials among the fleet (implies --reduce-tree)
+        TARGS+=(--reduce-topology "$TOPO")
+    fi
+
+    LOG="$OUT/demst_chaos_leader_$TOPO.log"
+    : > "$LOG"
+    "$BIN" run "${TARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+        --out-mst "$OUT/demst_chaos_tcp_$TOPO.csv" > "$LOG" 2>&1 &
+    LEADER=$!
+
+    ADDR=""
+    for _ in $(seq 1 150); do
+        ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
+        [ -n "$ADDR" ] && break
+        sleep 0.1
+    done
+    if [ -z "$ADDR" ]; then
+        echo "chaos-smoke[$TOPO]: leader never reported its bound address" >&2
+        cat "$LOG" >&2
+        exit 1
+    fi
+
+    DEMST_CHAOS_EXIT_AFTER_JOBS=3 "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+    W1=$!
+    "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+    W2=$!
+
+    wait "$LEADER" || { echo "chaos-smoke[$TOPO]: leader failed" >&2; cat "$LOG" >&2; exit 1; }
+    # the chaos worker must have died nonzero; the survivor must exit 0
+    if wait "$W1"; then
+        echo "chaos-smoke[$TOPO]: chaos worker exited 0 — the failure was never injected" >&2
+        exit 1
+    fi
+    wait "$W2" || { echo "chaos-smoke[$TOPO]: surviving worker failed" >&2; exit 1; }
+    cat "$LOG"
+
+    grep -q "reassigned" "$LOG" \
+        || { echo "chaos-smoke[$TOPO]: leader log reports no reassignment" >&2; exit 1; }
+
+    cmp "$OUT/demst_chaos_tcp_$TOPO.csv" "$OUT/demst_chaos_sim.csv" \
+        || { echo "chaos-smoke[$TOPO]: post-failover MST differs from sim" >&2; exit 1; }
+    sha256sum "$OUT/demst_chaos_tcp_$TOPO.csv" \
+        | awk -v t="$TOPO" '{print "chaos-smoke[" t "]: OK, mst checksum " $1}'
+done

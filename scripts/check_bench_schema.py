@@ -18,7 +18,7 @@ import sys
 # should be added here in the same PR that starts recording it.
 REQUIRED_SECTIONS = {
     "e7_kernel": {"cheapest_edge", "prim_dense", "panel_simd"},
-    "e8_end_to_end": {"pair_kernel", "stream_fold", "transport"},
+    "e8_end_to_end": {"pair_kernel", "stream_fold", "transport", "reduction"},
 }
 # Rows that must exist *within* a section. The transport section must keep
 # both pipelined-dispatch ablation rows (window=1 rendezvous vs window=2
@@ -26,7 +26,12 @@ REQUIRED_SECTIONS = {
 # all three kernel providers (canonical scalar, SIMD dispatch, threaded).
 REQUIRED_PROVIDERS = {
     "e7_kernel": {"panel_simd": {"panel-scalar", "panel-simd", "panel-simd-mt"}},
-    "e8_end_to_end": {"transport": {"sim", "tcp-win1", "tcp-win2"}},
+    "e8_end_to_end": {
+        "transport": {"sim", "tcp-win1", "tcp-win2"},
+        # the reduction-topology ablation must keep all three fold schedules
+        # (leader-gathered baseline vs worker<->worker binomial tree / ring)
+        "reduction": {"leader", "tree", "ring"},
+    },
 }
 REQUIRED_TOP_KEYS = {"bench", "rows"}
 
