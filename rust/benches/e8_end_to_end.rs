@@ -309,6 +309,126 @@ fn main() {
     }
     t5.print();
 
+    // --------- elasticity: failover and mid-run admission recovery cost.
+    // Three loopback-TCP runs against real `demst worker` subprocesses (the
+    // chaos hooks are per-process env vars, so in-thread endpoints won't
+    // do): a clean two-worker baseline; one worker killed abruptly mid-run
+    // (DEMST_CHAOS_EXIT_AFTER_JOBS); one worker stalled forever mid-run
+    // (DEMST_CHAOS_PLAN tx-stall) under a short liveness deadline, with a
+    // replacement admitted via Join/AdmitAck while the run is in flight.
+    // Recovery overhead is the wall ratio vs the clean leg; the tree is
+    // bit-identical in all three by the exactly-once return lane.
+    let worker_bin = env!("CARGO_BIN_EXE_demst");
+    let mut elastic_rows: Vec<ElasticRow> = Vec::new();
+    let mut clean_ms = 0.0f64;
+    for leg in ["clean", "failover", "admission"] {
+        let mut ecfg = cfg.clone();
+        ecfg.transport = TransportChoice::Tcp;
+        ecfg.listen = Some("127.0.0.1:0".into());
+        if leg == "admission" {
+            // short deadline so the stall is detected well inside the leg;
+            // still far above a single pair job's compute time
+            ecfg.net.liveness_timeout_ms = 1_200;
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let spawn_worker = |envs: &[(&str, &str)]| {
+            let mut c = std::process::Command::new(worker_bin);
+            c.args(["worker", "--connect", &addr]);
+            for (k, v) in envs {
+                c.env(k, v);
+            }
+            c.spawn().unwrap()
+        };
+        let mut rigged = match leg {
+            // dies on receiving its 4th pair job — no reply, no farewell
+            "failover" => Some(spawn_worker(&[("DEMST_CHAOS_EXIT_AFTER_JOBS", "3")])),
+            // tx: Hello(1) SetupAck(2) ShardAdvertise(3), 4 local trees
+            // (4-7), then pair replies — tx8 wedges the worker on its
+            // first pair reply; only the liveness deadline can see it
+            "admission" => Some(spawn_worker(&[("DEMST_CHAOS_PLAN", "tx8:stall")])),
+            _ => None,
+        };
+        let mut healthy = vec![spawn_worker(&[])];
+        if rigged.is_none() {
+            healthy.push(spawn_worker(&[]));
+        }
+        let late = (leg == "admission").then(|| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                // past the two startup accepts, inside the stalled link's
+                // deadline window — must be admitted mid-run
+                std::thread::sleep(std::time::Duration::from_millis(300));
+                std::process::Command::new(worker_bin)
+                    .args(["worker", "--connect", &addr])
+                    .spawn()
+                    .unwrap()
+            })
+        });
+        let run = demst::net::launch::serve(&ds, &ecfg, &listener).unwrap();
+        if let Some(t) = late {
+            let mut child = t.join().unwrap();
+            assert!(child.wait().unwrap().success(), "admitted worker must exit 0");
+        }
+        for mut child in healthy {
+            assert!(child.wait().unwrap().success(), "healthy worker must exit 0");
+        }
+        match leg {
+            "failover" => {
+                let status = rigged.take().unwrap().wait().unwrap();
+                assert_eq!(status.code(), Some(113), "chaos exit code");
+                assert!(run.metrics.worker_failures >= 1, "failover leg saw no failure");
+                assert!(run.metrics.jobs_reassigned > 0, "failover leg reassigned nothing");
+            }
+            "admission" => {
+                // the stall fault loops forever by design — reap it ourselves
+                let mut child = rigged.take().unwrap();
+                child.kill().unwrap();
+                child.wait().unwrap();
+                assert!(run.metrics.stalls_detected >= 1, "admission leg saw no stall");
+                assert!(run.metrics.workers_admitted >= 1, "late worker was not admitted");
+            }
+            _ => assert_eq!(run.metrics.worker_failures, 0, "clean leg must stay clean"),
+        }
+        assert_eq!(
+            demst::mst::normalize_tree(&exact),
+            demst::mst::normalize_tree(&run.mst),
+            "elasticity leg {leg} must stay exact"
+        );
+        let ms = run.metrics.wall.as_secs_f64() * 1e3;
+        let overhead = if leg == "clean" {
+            clean_ms = ms;
+            None
+        } else {
+            Some(ms / clean_ms.max(1e-9))
+        };
+        elastic_rows.push(ElasticRow {
+            provider: leg,
+            ms,
+            worker_failures: run.metrics.worker_failures,
+            stalls_detected: run.metrics.stalls_detected,
+            workers_admitted: run.metrics.workers_admitted,
+            jobs_reassigned: run.metrics.jobs_reassigned,
+            overhead,
+        });
+    }
+    let mut t6 = Table::new(
+        format!("E8f elasticity (n={n}, d={d}, |P|={parts}, workers=2, loopback tcp)"),
+        &["leg", "wall ms", "failures", "stalls", "admitted", "reassigned", "vs clean"],
+    );
+    for r in &elastic_rows {
+        t6.push_row(&[
+            r.provider.to_string(),
+            format!("{:.1}", r.ms),
+            r.worker_failures.to_string(),
+            r.stalls_detected.to_string(),
+            r.workers_admitted.to_string(),
+            r.jobs_reassigned.to_string(),
+            r.overhead.map_or("-".to_string(), |v| format!("{v:.2}x")),
+        ]);
+    }
+    t6.print();
+
     // ------------- stream-reduce fold micro-bench: re-sort vs merge-join.
     // Folding the same |P|(|P|-1)/2 pair trees repeatedly; the baseline is
     // the pre-incremental reducer (a full Kruskal — i.e. a re-sort of
@@ -405,7 +525,17 @@ fn main() {
     let out_path = std::env::var("DEMST_BENCH_OUT").unwrap_or_else(|_| "BENCH_e8.json".into());
     match std::fs::write(
         &out_path,
-        to_json(&rows, &stream_rows, &transport_json, &reduction_rows, n, d, parts, fast),
+        to_json(
+            &rows,
+            &stream_rows,
+            &transport_json,
+            &reduction_rows,
+            &elastic_rows,
+            n,
+            d,
+            parts,
+            fast,
+        ),
     ) {
         Ok(()) => println!("E8: wrote {out_path}"),
         Err(e) => eprintln!("E8: could not write {out_path}: {e}"),
@@ -453,12 +583,25 @@ struct ReductionRow {
     peer_bytes: u64,
 }
 
+struct ElasticRow {
+    provider: &'static str,
+    ms: f64,
+    worker_failures: u32,
+    stalls_detected: u32,
+    workers_admitted: u32,
+    jobs_reassigned: u32,
+    /// Wall ratio vs the clean two-worker leg (None for the clean leg).
+    overhead: Option<f64>,
+}
+
 /// Hand-rolled JSON (no serde in the offline vendor set).
+#[allow(clippy::too_many_arguments)]
 fn to_json(
     rows: &[JsonRow],
     stream_rows: &[StreamRow],
     transport_rows: &[TransportRow],
     reduction_rows: &[ReductionRow],
+    elastic_rows: &[ElasticRow],
     n: usize,
     d: usize,
     parts: usize,
@@ -506,6 +649,16 @@ fn to_json(
             "    {{\"section\": \"reduction\", \"provider\": \"{}\", \"ms\": {:.4}, \
              \"leader_bytes\": {}, \"gather_bytes\": {}, \"peer_bytes\": {}}}",
             r.provider, r.ms, r.leader_bytes, r.gather_bytes, r.peer_bytes,
+        ));
+    }
+    for r in elastic_rows {
+        let overhead = r.overhead.map_or("null".to_string(), |v| format!("{v:.4}"));
+        row_strs.push(format!(
+            "    {{\"section\": \"elasticity\", \"provider\": \"{}\", \"ms\": {:.4}, \
+             \"worker_failures\": {}, \"stalls_detected\": {}, \"workers_admitted\": {}, \
+             \"jobs_reassigned\": {}, \"overhead_vs_clean\": {}}}",
+            r.provider, r.ms, r.worker_failures, r.stalls_detected, r.workers_admitted,
+            r.jobs_reassigned, overhead,
         ));
     }
     s.push_str(&row_strs.join(",\n"));

@@ -132,7 +132,7 @@ impl ReduceTopology {
     }
 }
 
-/// Simulated network model parameters.
+/// Simulated network model parameters plus real-transport liveness knobs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NetConfig {
     /// charge latency/bandwidth sleep time (off = count bytes only)
@@ -141,12 +141,28 @@ pub struct NetConfig {
     pub latency_us: u64,
     /// link bandwidth, bytes/second
     pub bandwidth: f64,
+    /// tcp only: per-link read deadline, milliseconds. A link silent for
+    /// this long is declared stalled and demoted through the return lane;
+    /// the leader pulses header-only heartbeats every third of it so idle
+    /// links stay provably alive. Must exceed the worst-case single pair
+    /// job, since a computing worker sends nothing until its reply.
+    /// 0 disables liveness (no deadline, no heartbeats).
+    pub liveness_timeout_ms: u64,
+    /// tcp only: per-attempt timeout for worker↔worker peer dials,
+    /// milliseconds (tree fetch + fold links)
+    pub peer_connect_timeout_ms: u64,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         // 25 GbE-ish defaults when delay simulation is on
-        Self { simulate_delays: false, latency_us: 20, bandwidth: 3.0e9 }
+        Self {
+            simulate_delays: false,
+            latency_us: 20,
+            bandwidth: 3.0e9,
+            liveness_timeout_ms: 30_000,
+            peer_connect_timeout_ms: 5_000,
+        }
     }
 }
 
@@ -346,6 +362,15 @@ impl RunConfig {
         if self.net.bandwidth <= 0.0 {
             bail!("net.bandwidth must be positive");
         }
+        if self.net.liveness_timeout_ms > u64::from(u32::MAX) {
+            bail!(
+                "net.liveness_timeout_ms must fit the u32 wire field (max {} ms)",
+                u32::MAX
+            );
+        }
+        if self.net.peer_connect_timeout_ms == 0 {
+            bail!("net.peer_connect_timeout_ms must be positive");
+        }
         if self.transport == TransportChoice::Tcp {
             // Catch distributed-run misconfigurations up front with one-line
             // errors instead of panics, hangs, or silently auto-sized fleets.
@@ -356,7 +381,7 @@ impl RunConfig {
                 bail!("transport tcp requires an explicit worker count (--workers N): a remote fleet cannot be auto-sized from local cores");
             }
             if self.workers > u8::MAX as usize {
-                bail!("transport tcp supports at most {} workers (wire v4 limit)", u8::MAX);
+                bail!("transport tcp supports at most {} workers (wire v5 limit)", u8::MAX);
             }
             // Shape-dependent checks run against the shape that will
             // actually execute: the CLI/config one here, or the manifest's
@@ -421,10 +446,10 @@ impl RunConfig {
         // v3 wire limits (see net::wire): u16 subset indices / dimension,
         // u8 worker ids in per-job Result routing.
         if self.parts > u16::MAX as usize {
-            bail!("transport tcp supports at most {} parts (wire v4 limit)", u16::MAX);
+            bail!("transport tcp supports at most {} parts (wire v5 limit)", u16::MAX);
         }
         if self.data.d > u16::MAX as usize {
-            bail!("transport tcp supports at most d = {} (wire v4 limit)", u16::MAX);
+            bail!("transport tcp supports at most d = {} (wire v5 limit)", u16::MAX);
         }
         Ok(())
     }
@@ -516,6 +541,12 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         ("net", "latency_us") => cfg.net.latency_us = get_usize(v)? as u64,
         ("net", "bandwidth") => {
             cfg.net.bandwidth = v.as_float().ok_or_else(|| anyhow!("expected number"))?
+        }
+        ("net", "liveness_timeout_ms") => {
+            cfg.net.liveness_timeout_ms = get_usize(v)? as u64
+        }
+        ("net", "peer_connect_timeout_ms") => {
+            cfg.net.peer_connect_timeout_ms = get_usize(v)? as u64
         }
         _ => bail!("unknown config key"),
     }
@@ -673,7 +704,7 @@ bandwidth = 1e9
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 300\nparts = 300",
         )
         .unwrap_err();
-        assert!(e.to_string().contains("wire v4"), "{e:#}");
+        assert!(e.to_string().contains("wire v5"), "{e:#}");
         // more workers than pair jobs would strand real processes
         let e = RunConfig::from_toml(
             "transport = \"tcp\"\nlisten = \"127.0.0.1:0\"\nworkers = 2\nparts = 2",
@@ -786,6 +817,29 @@ bandwidth = 1e9
             assert_eq!(ReduceTopology::parse(s), Some(want), "{s:?}");
         }
         assert_eq!(ReduceTopology::parse("bogus"), None);
+    }
+
+    #[test]
+    fn liveness_keys_parse_and_validate_early() {
+        let def = RunConfig::default();
+        assert_eq!(def.net.liveness_timeout_ms, 30_000, "liveness defaults to 30 s");
+        assert_eq!(def.net.peer_connect_timeout_ms, 5_000, "peer dials default to 5 s");
+        let cfg = RunConfig::from_toml(
+            "[net]\nliveness_timeout_ms = 2000\npeer_connect_timeout_ms = 250",
+        )
+        .unwrap();
+        assert_eq!(cfg.net.liveness_timeout_ms, 2000);
+        assert_eq!(cfg.net.peer_connect_timeout_ms, 250);
+        // 0 disables liveness entirely (no deadlines, no heartbeats)
+        let off = RunConfig::from_toml("[net]\nliveness_timeout_ms = 0").unwrap();
+        assert_eq!(off.net.liveness_timeout_ms, 0);
+        // the wire carries liveness as u32 milliseconds
+        let e = RunConfig::from_toml("[net]\nliveness_timeout_ms = 5000000000").unwrap_err();
+        assert!(e.to_string().contains("u32 wire field"), "{e:#}");
+        // a zero dial timeout would make every peer connect fail instantly
+        let e = RunConfig::from_toml("[net]\npeer_connect_timeout_ms = 0").unwrap_err();
+        assert!(e.to_string().contains("peer_connect_timeout_ms"), "{e:#}");
+        assert!(RunConfig::from_toml("[net]\nliveness_timeout_ms = \"soon\"").is_err());
     }
 
     #[test]

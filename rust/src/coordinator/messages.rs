@@ -138,6 +138,11 @@ pub enum Message {
         /// peer-plane frames this worker sent (fetch replies + fold ships)
         peer_ships: u32,
     },
+    /// Either direction: header-only liveness keepalive. The leader
+    /// multiplexes it over idle links so a worker's read deadline only
+    /// trips when the link is truly dead or stalled; receivers skip it
+    /// (never acked, never counted as a window credit).
+    Heartbeat,
     /// Leader → worker: drain and report.
     Shutdown,
 }
@@ -240,6 +245,7 @@ mod tests {
         assert_eq!(done.wire_bytes(), 16 + 29 * 12);
         assert_eq!(Message::Ack { job_id: 7 }.wire_bytes(), 16);
         assert_eq!(Message::LocalAssign { part: 3 }.wire_bytes(), 16);
+        assert_eq!(Message::Heartbeat.wire_bytes(), 16, "keepalive is header-only");
         assert_eq!(Message::Shutdown.wire_bytes(), 16);
     }
 

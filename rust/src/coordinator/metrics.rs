@@ -120,6 +120,15 @@ pub struct RunMetrics {
     pub reduce_topology: String,
     /// whether the peer data plane routed tree fetches this run
     pub peer_route: bool,
+    /// links demoted because they blew the liveness deadline without dying
+    /// — a subset of `worker_failures` (stall ⊂ failure)
+    pub stalls_detected: u32,
+    /// header-only Heartbeat frames the leader pulsed over idle links
+    pub heartbeats_sent: u64,
+    /// workers admitted mid-run via the Join/AdmitAck handshake and
+    /// activated by the engine (late joins that never got a deck don't
+    /// count — they are farewelled with a Shutdown instead)
+    pub workers_admitted: u32,
 }
 
 impl RunMetrics {
@@ -227,6 +236,15 @@ impl RunMetrics {
                 " failures={} reassigned={}",
                 self.worker_failures, self.jobs_reassigned
             ));
+        }
+        if self.stalls_detected > 0 {
+            s.push_str(&format!(" stalls={}", self.stalls_detected));
+        }
+        if self.workers_admitted > 0 {
+            s.push_str(&format!(" admitted={}", self.workers_admitted));
+        }
+        if self.heartbeats_sent > 0 {
+            s.push_str(&format!(" heartbeats={}", self.heartbeats_sent));
         }
         if let Some(note) = &self.kernel_fallback {
             s.push_str(&format!(" (fallback: {note})"));
@@ -422,6 +440,27 @@ mod tests {
         let p = m.phase_summary();
         assert!(p.contains("local_mst="), "{p}");
         assert!(p.contains("1.20K evals"), "{p}");
+    }
+
+    #[test]
+    fn summary_reports_liveness_counters_only_when_nonzero() {
+        let quiet = RunMetrics::default().summary();
+        assert!(!quiet.contains("stalls="), "{quiet}");
+        assert!(!quiet.contains("admitted="), "{quiet}");
+        assert!(!quiet.contains("heartbeats="), "{quiet}");
+        let m = RunMetrics {
+            worker_failures: 2,
+            jobs_reassigned: 5,
+            stalls_detected: 1,
+            workers_admitted: 1,
+            heartbeats_sent: 12,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("failures=2 reassigned=5"), "{s}");
+        assert!(s.contains("stalls=1"), "{s}");
+        assert!(s.contains("admitted=1"), "{s}");
+        assert!(s.contains("heartbeats=12"), "{s}");
     }
 
     #[test]

@@ -74,9 +74,19 @@ use crate::net::wire::PEER_ENTRY_BYTES;
 use crate::net::{Direction, NetCounters, TcpTransport, Transport};
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Spare [`Fleet`] slots pre-allocated on remote runs for workers admitted
+/// mid-run (`Join`/`AdmitAck`): the per-worker vectors are shared immutably
+/// across the worker scope, so they must never reallocate — admissions
+/// beyond this many extra links stay connected but idle.
+const ADMIT_SPARE: usize = 4;
+
+/// How often the remote gather loop wakes to check the transport for
+/// newly admitted links when no frame is pending.
+const ADMIT_POLL: Duration = Duration::from_millis(25);
 
 /// Resolve the worker count: explicit, else one per pair job capped at the
 /// machine's parallelism.
@@ -178,6 +188,9 @@ struct Fleet {
     expected_jobs: usize,
     failures: AtomicU32,
     reassigned: AtomicU32,
+    /// failures whose error chain carried [`crate::net::STALL_MARK`] — the
+    /// link did not die, its peer went silent past the liveness deadline
+    stalls: AtomicU32,
     abort: AtomicBool,
     /// tree/ring topologies: the job indices whose folded results currently
     /// ride worker `w`'s partial MSF — its own acked jobs plus everything
@@ -194,17 +207,22 @@ struct Fleet {
 }
 
 impl Fleet {
-    fn new(workers: usize, expected_jobs: usize) -> Self {
+    /// `spares` extra slots sit past the initial `workers`, pre-marked
+    /// dead **and** finished: every elastic gate ignores them (no failure
+    /// is counted) until a mid-run admission flips both flags back off.
+    fn new(workers: usize, spares: usize, expected_jobs: usize) -> Self {
+        let slots = workers + spares;
         Self {
-            dead: (0..workers).map(|_| AtomicBool::new(false)).collect(),
-            finished: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            dead: (0..slots).map(|i| AtomicBool::new(i >= workers)).collect(),
+            finished: (0..slots).map(|i| AtomicBool::new(i >= workers)).collect(),
             done_jobs: AtomicUsize::new(0),
             expected_jobs,
             failures: AtomicU32::new(0),
             reassigned: AtomicU32::new(0),
+            stalls: AtomicU32::new(0),
             abort: AtomicBool::new(false),
-            fold_jobs: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
-            fold_expect: (0..workers).map(|_| AtomicU32::new(0)).collect(),
+            fold_jobs: (0..slots).map(|_| Mutex::new(Vec::new())).collect(),
+            fold_expect: (0..slots).map(|_| AtomicU32::new(0)).collect(),
             fold_rerun_credit: AtomicU32::new(0),
         }
     }
@@ -477,8 +495,11 @@ fn execute_pooled_inner(
     debug_assert!(!sharded || remote.is_some(), "sharded runs are remote by definition");
     let n_workers = resolve_workers(cfg);
     if let Some(tcp) = remote {
+        // `>=`: a replacement worker may have been admitted between the
+        // launch handshake and here — extra links activate in the gather
+        // loop, exactly like any other mid-run admission.
         anyhow::ensure!(
-            tcp.len() == n_workers,
+            tcp.len() >= n_workers,
             "transport holds {} worker links but the plan resolves to {n_workers} workers",
             tcp.len()
         );
@@ -494,7 +515,7 @@ fn execute_pooled_inner(
         let tcp = remote.expect("sharded implies remote");
         let mut holders = vec![vec![false; p]; n_workers];
         for (w, row) in holders.iter_mut().enumerate() {
-            for &k in tcp.advertised(w) {
+            for k in tcp.advertised(w) {
                 let k = k as usize;
                 anyhow::ensure!(
                     k < p,
@@ -528,8 +549,12 @@ fn execute_pooled_inner(
         } else {
             (cfg.affinity.then(|| plan.affinity(n_workers)), None)
         };
+    // Spare residency/fleet slots back the mid-run admission path: the
+    // vectors are shared by reference across the worker scope, so they are
+    // sized once for every link that could ever activate.
+    let spares = if remote.is_some() { ADMIT_SPARE } else { 0 };
     let residents: Vec<Mutex<Vec<Held>>> =
-        (0..n_workers).map(|_| Mutex::new(vec![Held::default(); p])).collect();
+        (0..n_workers + spares).map(|_| Mutex::new(vec![Held::default(); p])).collect();
     if let Some(h) = &holders {
         for (w, row) in h.iter().enumerate() {
             let mut res = residents[w].lock().unwrap();
@@ -539,7 +564,7 @@ fn execute_pooled_inner(
         }
     }
     let witness = ByteWitness::default();
-    let fleet = Fleet::new(n_workers, plan.n_jobs());
+    let fleet = Fleet::new(n_workers, spares, plan.n_jobs());
     let topology = cfg.reduce_topology;
     let topology_mode = cfg.reduce_tree && topology != ReduceTopology::Leader;
     // Simulated transport: the fold schedule is modeled (and *computed*)
@@ -631,14 +656,17 @@ fn execute_pooled_inner(
 
     // Both halves of the leaderless data plane need the fleet's routing
     // table on the workers: peers[w] for fold ships and routed fetches,
-    // builders[k] for the anchor of each cached tree.
+    // builders[k] for the anchor of each cached tree. (Kept around: a
+    // mid-run admission replays the book so folds can target the newcomer.)
+    let book_builders: Vec<u16> =
+        if builders.len() == p { builders.clone() } else { vec![FOLD_KEEP; p] };
     if route.is_some() || topology_mode {
-        let book_builders =
-            if builders.len() == p { builders.clone() } else { vec![FOLD_KEEP; p] };
         match remote {
             Some(tcp) => {
-                let book =
-                    Message::PeerBook { peers: tcp.peer_addrs().to_vec(), builders: book_builders };
+                let book = Message::PeerBook {
+                    peers: tcp.peer_addrs(),
+                    builders: book_builders.clone(),
+                };
                 for w in 0..n_workers {
                     if !fleet.dead[w].load(Ordering::SeqCst) {
                         // a dead link surfaces on the driver's next frame
@@ -686,7 +714,7 @@ fn execute_pooled_inner(
         let errors_ref = &worker_errors;
         let fleet_ref = &fleet;
         let use_affinity = affinity.is_some();
-        for (w, resident) in residents.iter().enumerate() {
+        for (w, resident) in residents.iter().enumerate().take(n_workers) {
             let tx = tx_leader.clone();
             match remote {
                 Some(tcp) => {
@@ -735,15 +763,117 @@ fn execute_pooled_inner(
                 }
             }
         }
-        drop(tx_leader); // leader keeps only rx
+        // Remote runs keep one sender for drivers spawned on mid-run
+        // admission; the channel then drains on the done count alone.
+        let tx_admit: Option<Sender<Message>> = remote.map(|_| tx_leader.clone());
+        drop(tx_leader); // leader keeps only rx (plus the admission spare)
 
         // Remote workers report the panel ISA they actually dispatched;
         // collected here and summarized once the fleet has drained, so a
         // late frame cannot leave a first-writer's label standing.
         let mut fleet_isas: Vec<u8> = Vec::new();
         let mut done = 0usize;
-        while done < n_workers {
-            let msg = rx_leader.recv().expect("all workers hung up");
+        let mut expected_done = n_workers;
+        // links already driven: everything below this index has a driver
+        let mut activated = n_workers;
+        while done < expected_done {
+            // Remote elastic runs poll: a newly admitted link must be
+            // activated even while every running driver is mid-job.
+            let msg = if remote.is_some() {
+                match rx_leader.recv_timeout(ADMIT_POLL) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        unreachable!("drivers outstanding but all senders hung up")
+                    }
+                }
+            } else {
+                Some(rx_leader.recv().expect("all workers hung up"))
+            };
+            // Activate links the admission thread appended since last look:
+            // give the newcomer a (rebalanced) deck, revive its fleet slot,
+            // replay the routing book, and spawn its driver. Admission is
+            // pure scheduling — the job set and ⊕-reduction are unchanged,
+            // so the final tree stays bit-identical.
+            if let Some(tcp) = remote {
+                while activated < tcp.len().min(fleet.dead.len()) {
+                    let w = activated;
+                    activated += 1;
+                    let caps_row: Option<Vec<bool>> = holders.as_ref().map(|_| {
+                        let mut held = vec![false; p];
+                        for k in tcp.advertised(w) {
+                            if (k as usize) < p {
+                                held[k as usize] = true;
+                            }
+                        }
+                        plan_ref
+                            .jobs
+                            .iter()
+                            .map(|job| held[job.i as usize] && held[job.j as usize])
+                            .collect()
+                    });
+                    if sharded {
+                        let mut res = residents[w].lock().unwrap();
+                        for k in tcp.advertised(w) {
+                            if (k as usize) < p {
+                                res[k as usize].vecs = true;
+                            }
+                        }
+                    }
+                    if use_affinity {
+                        let deck = queue_ref.admit_worker(caps_row);
+                        debug_assert_eq!(deck, w, "deck index must track link index");
+                    }
+                    if metrics.worker_busy.len() <= w {
+                        metrics.worker_busy.resize(w + 1, Duration::ZERO);
+                    }
+                    // Revive the spare slot. `dead` flips last: once a peer
+                    // can observe the worker alive, its deck and caps row
+                    // are already in place.
+                    fleet.fold_jobs[w].lock().unwrap().clear();
+                    fleet.fold_expect[w].store(0, Ordering::SeqCst);
+                    fleet.finished[w].store(false, Ordering::SeqCst);
+                    fleet.dead[w].store(false, Ordering::SeqCst);
+                    metrics.workers_admitted += 1;
+                    if route_ref.is_some() || topology_mode {
+                        let book = Message::PeerBook {
+                            peers: tcp.peer_addrs(),
+                            builders: book_builders.clone(),
+                        };
+                        for v in 0..tcp.len().min(fleet.dead.len()) {
+                            if !fleet.dead[v].load(Ordering::SeqCst) {
+                                let _ = tcp.send_to(v, &book, Direction::Control);
+                            }
+                        }
+                    }
+                    expected_done += 1;
+                    let tx = tx_admit.clone().expect("remote run holds the admission sender");
+                    let resident = &residents[w];
+                    let cache = bip_ref.map(|(_, c)| c);
+                    eprintln!("leader: worker {w} admitted mid-run; rebalancing onto it");
+                    scope.spawn(move || {
+                        pooled_worker_remote(
+                            w,
+                            ds,
+                            d,
+                            plan_ref,
+                            queue_ref,
+                            cfg,
+                            net,
+                            tcp,
+                            cache,
+                            use_affinity,
+                            resident,
+                            witness_ref,
+                            route_ref,
+                            fleet_ref,
+                            errors_ref,
+                            tx,
+                        )
+                    });
+                }
+            }
+            let Some(msg) = msg else { continue };
             match msg {
                 Message::Result { edges, compute, .. } => {
                     metrics.jobs += 1;
@@ -848,6 +978,7 @@ fn execute_pooled_inner(
     }
     metrics.worker_failures = fleet.failures.load(Ordering::Relaxed);
     metrics.jobs_reassigned = fleet.reassigned.load(Ordering::Relaxed);
+    metrics.stalls_detected = fleet.stalls.load(Ordering::Relaxed);
     // Jobs re-run after a fold failure were already reported once by their
     // original (settled) runner; the audit counts each job exactly once.
     metrics.jobs = metrics
@@ -1212,9 +1343,16 @@ fn pooled_worker_remote(
             fleet.reassigned.fetch_add(lost.len() as u32, Ordering::Relaxed);
             queue.push_returned(&lost);
             queue.abandon_deck(worker_id);
+            // A tripped liveness deadline is a *stall*, not a dead socket —
+            // counted separately, demoted identically.
+            let stalled = crate::net::is_stall(&e);
+            if stalled {
+                fleet.stalls.fetch_add(1, Ordering::Relaxed);
+            }
             fleet.fail_worker(worker_id);
             eprintln!(
-                "leader: worker {worker_id} link failed mid-run ({e:#}); returned {} job(s) to the deck",
+                "leader: worker {worker_id} link {} mid-run ({e:#}); returned {} job(s) to the deck",
+                if stalled { "stalled" } else { "failed" },
                 lost.len()
             );
             (st.delivered - refolded as u32, SolverFinal::default())
@@ -1830,9 +1968,14 @@ fn build_cache_pooled(
                             queue_ref.push_returned(&[k]);
                             queue_ref.abandon_deck(w);
                             fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                            let stalled = crate::net::is_stall(&e);
+                            if stalled {
+                                fleet.stalls.fetch_add(1, Ordering::Relaxed);
+                            }
                             fleet.fail_worker(w);
                             eprintln!(
-                                "leader: worker {w} link failed on subset {k} ({e:#}); returned it to the deck"
+                                "leader: worker {w} link {} on subset {k} ({e:#}); returned it to the deck",
+                                if stalled { "stalled" } else { "failed" }
                             );
                             return;
                         }

@@ -33,21 +33,33 @@
 //! most once per claim generation regardless of interleaving.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
-/// A shared, immutable set of job decks with atomic claim cursors, a
-/// mutex-guarded return lane, and optional capability masks.
+/// The growable deck table: decks, their claim cursors, and the optional
+/// capability masks, kept together so [`JobQueue::admit_worker`] can append
+/// a deck atomically with its capability row. Readers (claims) take the
+/// read lock — the cursors stay atomic, so concurrent claims remain
+/// exactly-once; only admission takes the write lock.
 #[derive(Debug)]
-pub struct JobQueue {
+struct Decks {
     decks: Vec<Vec<usize>>,
     cursors: Vec<AtomicUsize>,
+    /// `caps[w][job]` — whether worker `w` can run `job`. `None` = every
+    /// worker can run everything (and cross-deck stealing is allowed).
+    caps: Option<Vec<Vec<bool>>>,
+}
+
+/// A shared set of job decks with atomic claim cursors, a mutex-guarded
+/// return lane, optional capability masks — and mid-run growth: a worker
+/// admitted while the run is in flight gets a fresh deck carved from the
+/// return lane plus a bounded slice of the largest surviving deck.
+#[derive(Debug)]
+pub struct JobQueue {
+    inner: RwLock<Decks>,
     /// jobs returned after a worker failure, awaiting re-claim
     returned: Mutex<Vec<usize>>,
     /// cheap fast-path guard so `pop_for` skips the lock while empty
     has_returned: AtomicBool,
-    /// `caps[w][job]` — whether worker `w` can run `job`. `None` = every
-    /// worker can run everything (and cross-deck stealing is allowed).
-    caps: Option<Vec<Vec<bool>>>,
 }
 
 impl JobQueue {
@@ -82,20 +94,77 @@ impl JobQueue {
         assert!(!decks.is_empty(), "JobQueue needs at least one deck");
         let cursors = decks.iter().map(|_| AtomicUsize::new(0)).collect();
         Self {
-            decks,
-            cursors,
+            inner: RwLock::new(Decks { decks, cursors, caps }),
             returned: Mutex::new(Vec::new()),
             has_returned: AtomicBool::new(false),
-            caps,
         }
     }
 
-    /// Whether worker `w` may run `job` under the capability masks.
+    /// Whether worker `w` may run `job` under the capability masks. A
+    /// worker with no capability row yet (admission racing a lane check)
+    /// can run nothing.
     pub fn capable(&self, w: usize, job: usize) -> bool {
-        match &self.caps {
+        let inner = self.inner.read().unwrap();
+        match &inner.caps {
             None => true,
-            Some(c) => c[w][job],
+            Some(c) => c.get(w).is_some_and(|row| row[job]),
         }
+    }
+
+    /// Open a deck for a worker admitted mid-run and return its deck index
+    /// (== its worker id under the affinity layout). The new deck is a
+    /// **bounded rebalance**: half the unclaimed tail of the largest
+    /// surviving deck, filtered by the newcomer's capability row — plus
+    /// whatever it later claims from the return lane through the normal
+    /// [`Self::pop_for`] path. Taking the *tail* keeps the donor's
+    /// LPT-heavy head where it is, so the rebalance never un-anchors a job
+    /// a resident worker was about to claim cheaply. `caps_row` is required
+    /// exactly when the queue runs capped (sharded residency).
+    pub fn admit_worker(&self, caps_row: Option<Vec<bool>>) -> usize {
+        let mut guard = self.inner.write().unwrap();
+        let inner = &mut *guard;
+        let w = inner.decks.len();
+        if let Some(caps) = &mut inner.caps {
+            let jobs = caps.first().map_or(0, |row| row.len());
+            caps.push(caps_row.unwrap_or_else(|| vec![true; jobs]));
+        }
+        // donor = deck with the largest unclaimed region
+        let mut donor: Option<(usize, usize, usize)> = None; // (deck, start, unclaimed)
+        for v in 0..w {
+            let start = inner.cursors[v].load(Ordering::Relaxed).min(inner.decks[v].len());
+            let unclaimed = inner.decks[v].len() - start;
+            if unclaimed > donor.map_or(0, |(_, _, u)| u) {
+                donor = Some((v, start, unclaimed));
+            }
+        }
+        let mut deck = Vec::new();
+        if let Some((v, start, unclaimed)) = donor {
+            let budget = unclaimed / 2;
+            if budget > 0 {
+                let runnable = inner.caps.as_ref().map(|c| c[w].clone());
+                let tail: Vec<usize> = inner.decks[v].drain(start..).collect();
+                let mut keep = Vec::with_capacity(tail.len());
+                // walk the unclaimed region from its end (lightest jobs in
+                // LPT order) and move up to `budget` runnable jobs over
+                for &job in tail.iter().rev() {
+                    let ok = match &runnable {
+                        None => true,
+                        Some(row) => row.get(job).copied().unwrap_or(false),
+                    };
+                    if ok && deck.len() < budget {
+                        deck.push(job);
+                    } else {
+                        keep.push(job);
+                    }
+                }
+                keep.reverse();
+                deck.reverse(); // preserve LPT orientation in the new deck
+                inner.decks[v].extend(keep);
+            }
+        }
+        inner.decks.push(deck);
+        inner.cursors.push(AtomicUsize::new(0));
+        w
     }
 
     /// Claim the next unclaimed job index from the first deck (the shared-
@@ -112,13 +181,14 @@ impl JobQueue {
         if let Some(job) = self.pop_returned(worker) {
             return Some((job, false));
         }
-        let n = self.decks.len();
+        let inner = self.inner.read().unwrap();
+        let n = inner.decks.len();
         let home = worker % n;
-        let reach = if self.caps.is_some() { 1 } else { n };
+        let reach = if inner.caps.is_some() { 1 } else { n };
         for step in 0..reach {
             let v = (home + step) % n;
-            let k = self.cursors[v].fetch_add(1, Ordering::Relaxed);
-            if let Some(&job) = self.decks[v].get(k) {
+            let k = inner.cursors[v].fetch_add(1, Ordering::Relaxed);
+            if let Some(&job) = inner.decks[v].get(k) {
                 return Some((job, step != 0));
             }
         }
@@ -155,14 +225,16 @@ impl JobQueue {
     /// one can steal from its deck, and even with stealing the survivors
     /// would race a dead cursor).
     pub fn abandon_deck(&self, worker: usize) {
-        let n = self.decks.len();
-        let home = worker % n;
         let mut moved = Vec::new();
-        loop {
-            let k = self.cursors[home].fetch_add(1, Ordering::Relaxed);
-            match self.decks[home].get(k) {
-                Some(&job) => moved.push(job),
-                None => break,
+        {
+            let inner = self.inner.read().unwrap();
+            let home = worker % inner.decks.len();
+            loop {
+                let k = inner.cursors[home].fetch_add(1, Ordering::Relaxed);
+                match inner.decks[home].get(k) {
+                    Some(&job) => moved.push(job),
+                    None => break,
+                }
             }
         }
         self.push_returned(&moved);
@@ -183,7 +255,7 @@ impl JobQueue {
 
     /// Total jobs across all decks (claimed or not).
     pub fn len(&self) -> usize {
-        self.decks.iter().map(|d| d.len()).sum()
+        self.inner.read().unwrap().decks.iter().map(|d| d.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -332,6 +404,90 @@ mod tests {
         assert_eq!(got.len(), 400);
         let distinct: HashSet<usize> = got.iter().copied().collect();
         assert_eq!(distinct.len(), 400, "every job claimed exactly once under stealing");
+    }
+
+    #[test]
+    fn admit_worker_rebalances_half_the_largest_deck_tail() {
+        let q = JobQueue::with_decks(vec![vec![0, 1, 2, 3, 4, 5], vec![6]]);
+        assert_eq!(q.pop_for(0), Some((0, false)), "claimed before admission stays claimed");
+        // largest unclaimed region is deck 0's [1,2,3,4,5] → half = 2 off
+        // the tail, LPT orientation preserved
+        let w = q.admit_worker(None);
+        assert_eq!(w, 2, "next free deck index");
+        assert_eq!(q.pop_for(2), Some((4, false)));
+        assert_eq!(q.pop_for(2), Some((5, false)));
+        // the donor keeps its head in order
+        assert_eq!(q.pop_for(0), Some((1, false)));
+        assert_eq!(q.pop_for(0), Some((2, false)));
+        assert_eq!(q.pop_for(0), Some((3, false)));
+        // exactly-once across the rebalance: nothing left but deck 1's job
+        assert_eq!(q.pop_for(1), Some((6, false)));
+        for w in 0..3 {
+            assert!(q.pop_for(w).is_none(), "worker {w} sees a drained queue");
+        }
+    }
+
+    #[test]
+    fn admit_worker_respects_capability_masks() {
+        let caps = vec![vec![true; 4], vec![true; 4]];
+        let q = JobQueue::with_decks_capped(vec![vec![0, 1, 2, 3], vec![]], caps);
+        // the newcomer can only run jobs 1 and 3
+        let w = q.admit_worker(Some(vec![false, true, false, true]));
+        assert_eq!(w, 2);
+        // tail walk moves runnable jobs only (budget 2): job 3, then job 1
+        assert_eq!(q.pop_for(2), Some((1, false)));
+        assert_eq!(q.pop_for(2), Some((3, false)));
+        assert_eq!(q.pop_for(2), None, "capped: no stealing");
+        // unrunnable jobs stayed with the donor, in order
+        assert_eq!(q.pop_for(0), Some((0, false)));
+        assert_eq!(q.pop_for(0), Some((2, false)));
+        assert_eq!(q.pop_for(0), None);
+        // the admitted worker's capability row filters the return lane
+        q.push_returned(&[0, 1]);
+        assert_eq!(q.pop_for(2), Some((1, false)), "capable return reclaimed");
+        assert_eq!(q.pop_for(2), None, "job 0 is not runnable by the newcomer");
+        assert_eq!(q.pop_for(0), Some((0, false)));
+    }
+
+    #[test]
+    fn capable_guards_workers_without_a_row() {
+        let caps = vec![vec![true, true]];
+        let q = JobQueue::with_decks_capped(vec![vec![0, 1]], caps);
+        assert!(q.capable(0, 1));
+        assert!(!q.capable(5, 1), "no capability row yet → can run nothing");
+    }
+
+    #[test]
+    fn admission_races_concurrent_claims_exactly_once() {
+        let q = JobQueue::with_decks(vec![(0..300).collect(), (300..400).collect()]);
+        let claimed: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            let q = &q;
+            let claimed = &claimed;
+            for w in 0..2usize {
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    while let Some((j, _)) = q.pop_for(w) {
+                        local.push(j);
+                        std::thread::yield_now();
+                    }
+                    claimed.lock().unwrap().extend(local);
+                });
+            }
+            scope.spawn(move || {
+                std::thread::yield_now();
+                let w = q.admit_worker(None);
+                let mut local = Vec::new();
+                while let Some((j, _)) = q.pop_for(w) {
+                    local.push(j);
+                }
+                claimed.lock().unwrap().extend(local);
+            });
+        });
+        let got = claimed.into_inner().unwrap();
+        assert_eq!(got.len(), 400);
+        let distinct: HashSet<usize> = got.iter().copied().collect();
+        assert_eq!(distinct.len(), 400, "rebalance must never duplicate or drop a job");
     }
 
     #[test]

@@ -53,6 +53,18 @@
 //!   hands its undelivered jobs back to the deck and the surviving fleet
 //!   finishes the bit-identical tree) against `demst worker --connect`
 //!   processes ([`net::worker`]), bound/spawned/awaited by [`net::launch`].
+//!   A **liveness layer** keeps the fleet honest: the leader pulses
+//!   header-only `Heartbeat` frames over idle links and enforces a
+//!   per-link read deadline (`net.liveness_timeout_ms`), so a stalled
+//!   worker is demoted through the same exactly-once return lane as a
+//!   dead one; the listener stays open for the whole run and a late
+//!   `demst worker --connect` is **admitted mid-run** via a versioned
+//!   `Join`/`AdmitAck` handshake, given its own deck, and rebalanced onto
+//!   (pure scheduling — the tree stays bit-identical). Every failure
+//!   path is reproducibly injectable through the deterministic
+//!   [`net::chaos`] transport wrapper (`DEMST_CHAOS_PLAN` /
+//!   `DEMST_CHAOS_SEED`: delay, drop, truncate, garbage, stall, or exit
+//!   on frame N).
 //!   On top rides the **leaderless data plane**: every worker binds a
 //!   worker↔worker listener (port advertised in the handshake, fleet
 //!   addresses broadcast as a `PeerBook`), cached local MSTs travel

@@ -107,6 +107,7 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "spawn-workers", takes_value: false, help: "tcp: spawn the `demst worker` processes locally instead of awaiting external connects" },
         OptSpec { name: "shard", takes_value: true, help: "sharded run: plan from this `demst partition` manifest; workers hold the vectors" },
         OptSpec { name: "window", takes_value: true, help: "tcp: pair jobs in flight per worker link (default 2; 1 = strict rendezvous)" },
+        OptSpec { name: "liveness-timeout", takes_value: true, help: "tcp: per-link read deadline in seconds (default 30; 0 disables heartbeats + stall detection; must exceed the slowest single pair job)" },
         OptSpec { name: "no-panel-simd", takes_value: false, help: "force the canonical scalar panel kernels (same bits, no SIMD dispatch)" },
         OptSpec { name: "panel-threads", takes_value: true, help: "threads per bipartite panel block, 1..=256 (default 0 = all cores)" },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts dir (for --kernel boruvka-xla)" },
@@ -185,6 +186,12 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get_parse::<usize>("window")? {
         cfg.pipeline_window = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("liveness-timeout")? {
+        if !v.is_finite() || v < 0.0 {
+            bail!("--liveness-timeout must be a non-negative number of seconds");
+        }
+        cfg.net.liveness_timeout_ms = (v * 1000.0).round() as u64;
     }
     if args.has_flag("no-panel-simd") {
         cfg.panel_simd = false;
@@ -375,9 +382,20 @@ fn print_phases_and_workers(m: &RunMetrics) {
         println!("sharding: {sharding}");
     }
     if m.worker_failures > 0 {
+        let stall_note = if m.stalls_detected > 0 {
+            format!(" ({} by liveness stall)", m.stalls_detected)
+        } else {
+            String::new()
+        };
         println!(
-            "elastic: {} worker link(s) failed, {} job(s) reassigned to the surviving fleet",
+            "elastic: {} worker link(s) failed{stall_note}, {} job(s) reassigned to the surviving fleet",
             m.worker_failures, m.jobs_reassigned
+        );
+    }
+    if m.workers_admitted > 0 {
+        println!(
+            "elastic: {} worker(s) admitted mid-run via Join/AdmitAck and rebalanced onto",
+            m.workers_admitted
         );
     }
     if m.worker_busy.is_empty() {
@@ -409,6 +427,7 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
         OptSpec { name: "connect-timeout", takes_value: true, help: "keep retrying the connect for this many ms (default 10000)" },
         OptSpec { name: "connect-backoff-ms", takes_value: true, help: "initial retry backoff in ms, doubling up to 2 s (default 100)" },
         OptSpec { name: "retry-ms", takes_value: true, help: "deprecated alias of --connect-timeout" },
+        OptSpec { name: "peer-connect-timeout", takes_value: true, help: "per-attempt timeout for worker↔worker peer dials in ms (default 5000)" },
         OptSpec { name: "shard", takes_value: true, help: "load subsets from this shard manifest before connecting" },
         OptSpec { name: "shard-ids", takes_value: true, help: "which shards to load, e.g. 0,2-4 (default: all in the manifest)" },
     ];
@@ -436,9 +455,14 @@ fn cmd_worker(argv: &[String]) -> Result<()> {
             None
         }
     };
+    let peer_ms = args.get_or("peer-connect-timeout", 5_000u64)?;
+    if peer_ms == 0 {
+        bail!("--peer-connect-timeout must be positive (a zero dial window fails every peer fetch)");
+    }
     let opts = demst::net::worker::WorkerOptions {
         connect_timeout: std::time::Duration::from_millis(timeout_ms),
         connect_backoff: std::time::Duration::from_millis(args.get_or("connect-backoff-ms", 100u64)?),
+        peer_connect_timeout: std::time::Duration::from_millis(peer_ms),
         shards,
     };
     let report = demst::net::worker::run_with(addr, &opts)?;

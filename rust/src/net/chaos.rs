@@ -1,0 +1,381 @@
+//! Deterministic fault injection for the worker's leader link.
+//!
+//! The PR-5/7 chaos hooks (`DEMST_CHAOS_EXIT_AFTER_JOBS`,
+//! `DEMST_CHAOS_EXIT_ON_FOLD`) can only kill a worker outright. This module
+//! generalizes them into a **fault plan**: a comma-separated list of
+//! `<dir><frame>:<fault>[:<arg>]` entries in `DEMST_CHAOS_PLAN`, applied to
+//! the Nth frame (1-based, counted per direction from the first handshake
+//! frame) crossing the worker's leader link. Because the worker serves the
+//! link single-threadedly and frames are counted, every injection lands on
+//! the same frame of the same run every time — chaos tests are replayable
+//! bit-for-bit.
+//!
+//! ```text
+//! tx5:stall          block forever before sending tx frame 5 (no death —
+//!                    the leader's liveness deadline must catch it)
+//! rx3:stall          block forever instead of delivering rx frame 3
+//! tx7:delay:250      sleep 250 ms before sending tx frame 7
+//! tx4:drop           swallow tx frame 4 whole (framing stays intact)
+//! rx4:drop           read and discard rx frame 4, deliver the next one
+//! tx6:truncate:8     send only the first 8 bytes of tx frame 6, then cut
+//!                    the link (all later IO on it fails)
+//! tx2:garbage        XOR frame 2's payload with a `DEMST_CHAOS_SEED`ed
+//!                    keystream (framing length stays valid; the peer's
+//!                    decoder must error cleanly, never panic)
+//! tx6:exit:113       `std::process::exit(113)` instead of sending frame 6
+//! ```
+//!
+//! `DEMST_CHAOS_PEER_DENY=<n>` is a separate knob: the first `n` peer-tree
+//! fetches in this process fail before connecting, driving the `PairFail`
+//! demotion path (routed job → inline shipping → return lane) without any
+//! timing dependence.
+//!
+//! Everything here is env-gated and costs one branch per frame when unset;
+//! production runs never construct a plan.
+
+use crate::net::wire;
+use crate::util::prng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Env var holding the fault plan (see the module docs for the grammar).
+pub const PLAN_ENV: &str = "DEMST_CHAOS_PLAN";
+/// Env var seeding the `garbage` fault's XOR keystream (default 0xC4A05).
+pub const SEED_ENV: &str = "DEMST_CHAOS_SEED";
+/// Env var arming the peer-fetch denial counter.
+pub const PEER_DENY_ENV: &str = "DEMST_CHAOS_PEER_DENY";
+
+/// Frame direction, from the worker's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// worker → leader
+    Tx,
+    /// leader → worker
+    Rx,
+}
+
+/// One injectable fault.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// sleep this long, then proceed normally
+    Delay(Duration),
+    /// block forever (the process stays alive — only a liveness deadline
+    /// on the other end can detect this)
+    Stall,
+    /// swallow the frame whole; framing stays intact
+    Drop,
+    /// emit only the first N bytes, then kill the link for good
+    Truncate(usize),
+    /// XOR the payload bytes with a seeded keystream (length untouched)
+    Garbage,
+    /// `std::process::exit(code)` instead of touching the frame
+    Exit(i32),
+}
+
+/// A parsed `DEMST_CHAOS_PLAN`: which fault fires on which frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    entries: Vec<(Dir, u64, Fault)>,
+}
+
+impl FaultPlan {
+    /// Parse the `<dir><frame>:<fault>[:<arg>]` grammar. Errors name the
+    /// offending entry so a typo'd CI matrix leg fails loudly.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let mut fields = raw.split(':');
+            let head = fields.next().unwrap_or("");
+            let (dir, frame_str) = if let Some(n) = head.strip_prefix("tx") {
+                (Dir::Tx, n)
+            } else if let Some(n) = head.strip_prefix("rx") {
+                (Dir::Rx, n)
+            } else {
+                bail!("chaos plan entry {raw:?}: expected tx<N> or rx<N>");
+            };
+            let frame: u64 = frame_str
+                .parse()
+                .ok()
+                .filter(|&f| f >= 1)
+                .with_context(|| format!("chaos plan entry {raw:?}: frame must be >= 1"))?;
+            let kind = fields.next().unwrap_or("");
+            let arg = fields.next();
+            let fault = match (kind, arg) {
+                ("stall", None) => Fault::Stall,
+                ("drop", None) => Fault::Drop,
+                ("garbage", None) => Fault::Garbage,
+                ("delay", Some(ms)) => Fault::Delay(Duration::from_millis(
+                    ms.parse().with_context(|| format!("chaos plan entry {raw:?}: bad delay"))?,
+                )),
+                ("truncate", Some(n)) => Fault::Truncate(
+                    n.parse().with_context(|| format!("chaos plan entry {raw:?}: bad length"))?,
+                ),
+                ("exit", Some(code)) => Fault::Exit(
+                    code.parse().with_context(|| format!("chaos plan entry {raw:?}: bad code"))?,
+                ),
+                _ => bail!(
+                    "chaos plan entry {raw:?}: unknown fault (want stall|drop|garbage|delay:<ms>|truncate:<n>|exit:<code>)"
+                ),
+            };
+            if fields.next().is_some() {
+                bail!("chaos plan entry {raw:?}: trailing fields");
+            }
+            entries.push((dir, frame, fault));
+        }
+        Ok(Self { entries })
+    }
+
+    fn lookup(&self, dir: Dir, frame: u64) -> Option<Fault> {
+        self.entries.iter().find(|&&(d, f, _)| d == dir && f == frame).map(|&(_, _, f)| f)
+    }
+}
+
+/// Frame-counting fault injector for one link. Wraps the worker's
+/// leader-link frame IO: [`ChaosLink::read_frame`] / [`ChaosLink::write_frame`]
+/// count frames per direction and fire the plan's fault when a count
+/// matches. `None` from [`from_env`](ChaosLink::from_env) means no plan is
+/// set and the worker uses plain [`wire`] IO.
+#[derive(Debug)]
+pub struct ChaosLink {
+    plan: FaultPlan,
+    rng: Pcg64,
+    tx_frames: u64,
+    rx_frames: u64,
+    /// set after a truncate fault: the link is cut, all further IO errors
+    dead: bool,
+}
+
+impl ChaosLink {
+    /// Build from `DEMST_CHAOS_PLAN` (+ `DEMST_CHAOS_SEED`); `None` when
+    /// unset. A malformed plan is a hard error — a chaos run that silently
+    /// injects nothing would pass for the wrong reason.
+    pub fn from_env() -> Result<Option<Self>> {
+        let Ok(spec) = std::env::var(PLAN_ENV) else { return Ok(None) };
+        let plan = FaultPlan::parse(&spec)?;
+        let seed = std::env::var(SEED_ENV)
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .unwrap_or(0xC4A05);
+        Ok(Some(Self::new(plan, seed)))
+    }
+
+    pub fn new(plan: FaultPlan, seed: u64) -> Self {
+        Self { plan, rng: Pcg64::seeded(seed), tx_frames: 0, rx_frames: 0, dead: false }
+    }
+
+    /// Send one already-encoded frame, applying any fault planned for it.
+    pub fn write_frame(&mut self, w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
+        if self.dead {
+            return Err(cut_link());
+        }
+        self.tx_frames += 1;
+        match self.plan.lookup(Dir::Tx, self.tx_frames) {
+            None => wire::write_frame(w, frame),
+            Some(Fault::Delay(d)) => {
+                std::thread::sleep(d);
+                wire::write_frame(w, frame)
+            }
+            Some(Fault::Stall) => stall(),
+            Some(Fault::Drop) => Ok(()),
+            Some(Fault::Truncate(n)) => {
+                let n = n.min(frame.len());
+                w.write_all(&frame[..n])?;
+                w.flush()?;
+                self.dead = true;
+                Err(cut_link())
+            }
+            Some(Fault::Garbage) => {
+                let mut garbled = frame.to_vec();
+                self.garble(&mut garbled);
+                wire::write_frame(w, &garbled)
+            }
+            Some(Fault::Exit(code)) => std::process::exit(code),
+        }
+    }
+
+    /// Read one frame, applying any fault planned for it.
+    pub fn read_frame(&mut self, r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+        loop {
+            if self.dead {
+                return Err(cut_link());
+            }
+            self.rx_frames += 1;
+            let fault = self.plan.lookup(Dir::Rx, self.rx_frames);
+            if let Some(Fault::Exit(code)) = fault {
+                std::process::exit(code);
+            }
+            if let Some(Fault::Stall) = fault {
+                stall();
+            }
+            if let Some(Fault::Delay(d)) = fault {
+                std::thread::sleep(d);
+            }
+            let mut frame = wire::read_frame_io(r)?;
+            match fault {
+                Some(Fault::Drop) => continue, // discard, deliver the next frame
+                Some(Fault::Truncate(n)) => {
+                    frame.truncate(n);
+                    self.dead = true;
+                    return Ok(frame);
+                }
+                Some(Fault::Garbage) => {
+                    self.garble(&mut frame);
+                    return Ok(frame);
+                }
+                _ => return Ok(frame),
+            }
+        }
+    }
+
+    /// XOR the payload (everything after the 16-byte header) with the
+    /// seeded keystream. The length prefix and tag stay valid so the frame
+    /// still *frames* — the corruption must be caught by `decode`, which is
+    /// exactly the hardening the wire proptests pin.
+    fn garble(&mut self, frame: &mut [u8]) {
+        let start = (crate::coordinator::messages::HEADER_BYTES as usize).min(frame.len());
+        for b in &mut frame[start..] {
+            *b ^= (self.rng.next_u32() & 0xff) as u8;
+        }
+        if frame.len() == start && start > 5 {
+            // header-only frame: flip the per-tag fields instead (bytes
+            // 5.. — never the length prefix or tag, framing must survive)
+            for b in &mut frame[5..start] {
+                *b ^= (self.rng.next_u32() & 0xff) as u8;
+            }
+        }
+    }
+}
+
+fn stall() -> ! {
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cut_link() -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::BrokenPipe, "chaos: link cut by truncate fault")
+}
+
+/// True for the first `DEMST_CHAOS_PEER_DENY` calls in this process, then
+/// false forever (and always false when the env var is unset). The worker
+/// consults this before dialing a peer-tree fetch; a denial surfaces as the
+/// ordinary fetch-failure path: reply `PairFail`, let the leader demote the
+/// route and return the job to the exactly-once lane.
+pub fn peer_fetch_denied() -> bool {
+    static LEFT: OnceLock<AtomicI64> = OnceLock::new();
+    let left = LEFT.get_or_init(|| {
+        let n = std::env::var(PEER_DENY_ENV).ok().and_then(|s| s.parse::<i64>().ok()).unwrap_or(0);
+        AtomicI64::new(n)
+    });
+    left.fetch_sub(1, Ordering::Relaxed) > 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::Message;
+
+    #[test]
+    fn plan_parses_every_fault_kind() {
+        let plan =
+            FaultPlan::parse("tx5:stall, rx3:drop, tx7:delay:250, tx4:truncate:8, tx2:garbage, rx6:exit:113")
+                .unwrap();
+        assert_eq!(plan.lookup(Dir::Tx, 5), Some(Fault::Stall));
+        assert_eq!(plan.lookup(Dir::Rx, 3), Some(Fault::Drop));
+        assert_eq!(plan.lookup(Dir::Tx, 7), Some(Fault::Delay(Duration::from_millis(250))));
+        assert_eq!(plan.lookup(Dir::Tx, 4), Some(Fault::Truncate(8)));
+        assert_eq!(plan.lookup(Dir::Tx, 2), Some(Fault::Garbage));
+        assert_eq!(plan.lookup(Dir::Rx, 6), Some(Fault::Exit(113)));
+        assert_eq!(plan.lookup(Dir::Rx, 5), None, "tx plan must not fire on rx");
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn plan_rejects_malformed_entries() {
+        for bad in ["5:stall", "tx0:stall", "txfive:stall", "tx5:fry", "tx5:delay", "tx5:stall:9:9"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn drop_fault_swallows_exactly_the_planned_frame() {
+        let plan = FaultPlan::parse("tx2:drop").unwrap();
+        let mut link = ChaosLink::new(plan, 1);
+        let mut buf = Vec::new();
+        let frames: Vec<Vec<u8>> = (0..3)
+            .map(|id| wire::encode(&Message::Ack { job_id: id }).unwrap())
+            .collect();
+        for f in &frames {
+            link.write_frame(&mut buf, f).unwrap();
+        }
+        // frame 2 (job_id 1) vanished; framing of the rest is intact
+        let mut cursor = &buf[..];
+        assert_eq!(wire::read_frame(&mut cursor).unwrap(), frames[0]);
+        assert_eq!(wire::read_frame(&mut cursor).unwrap(), frames[2]);
+        assert!(cursor.is_empty());
+    }
+
+    #[test]
+    fn truncate_fault_cuts_the_link_for_good() {
+        let plan = FaultPlan::parse("tx1:truncate:8").unwrap();
+        let mut link = ChaosLink::new(plan, 1);
+        let mut buf = Vec::new();
+        let frame = wire::encode(&Message::Ack { job_id: 7 }).unwrap();
+        assert!(link.write_frame(&mut buf, &frame).is_err());
+        assert_eq!(buf.len(), 8, "only the truncated prefix went out");
+        // every later write fails too — the link is dead, like a real cut
+        assert!(link.write_frame(&mut buf, &frame).is_err());
+        assert_eq!(buf.len(), 8);
+    }
+
+    #[test]
+    fn garbage_fault_is_deterministic_and_caught_by_decode() {
+        let msg = Message::Result {
+            job_id: 9,
+            worker: 1,
+            edges: vec![crate::graph::Edge::new(0, 1, 1.0); 4],
+            compute: Duration::ZERO,
+        };
+        let frame = wire::encode(&msg).unwrap();
+        let garble_once = |seed| {
+            let mut link = ChaosLink::new(FaultPlan::parse("tx1:garbage").unwrap(), seed);
+            let mut buf = Vec::new();
+            link.write_frame(&mut buf, &frame).unwrap();
+            buf
+        };
+        let a = garble_once(42);
+        assert_eq!(a, garble_once(42), "same seed, same corruption");
+        assert_ne!(a, garble_once(43), "different seed, different corruption");
+        assert_ne!(a, frame, "payload actually corrupted");
+        assert_eq!(a.len(), frame.len(), "framing length untouched");
+        // the corrupted frame still reads as one frame, and decode must
+        // return a clean error or a (wrong) message — never panic
+        let mut cursor = &a[..];
+        let read = wire::read_frame(&mut cursor).unwrap();
+        let _ = wire::decode(&read, None);
+    }
+
+    #[test]
+    fn rx_drop_delivers_the_following_frame() {
+        let plan = FaultPlan::parse("rx1:drop").unwrap();
+        let mut link = ChaosLink::new(plan, 1);
+        let first = wire::encode(&Message::Ack { job_id: 1 }).unwrap();
+        let second = wire::encode(&Message::Ack { job_id: 2 }).unwrap();
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&first);
+        stream.extend_from_slice(&second);
+        let mut cursor = &stream[..];
+        assert_eq!(link.read_frame(&mut cursor).unwrap(), second);
+    }
+
+    #[test]
+    fn peer_deny_unset_is_always_false() {
+        // the env var is not set in the test process, so the counter arms
+        // at 0 and the hook must never fire
+        assert!(!peer_fetch_denied());
+        assert!(!peer_fetch_denied());
+    }
+}

@@ -11,6 +11,13 @@
 //! - [`serve`] — the library path over an already-bound listener (used by
 //!   tests and benches, whose workers are in-process threads driving
 //!   [`super::worker::serve`] over loopback connections).
+//!
+//! Both wrap the engine run in [`run_elastic`]'s two side-car threads:
+//! an **admission** thread that keeps accepting on the listener so a
+//! `demst worker --connect` arriving mid-run is handshaken
+//! (`Join`/`AdmitAck`) and appended for the engine to activate, and a
+//! **pulse** thread that heartbeats every idle link each `liveness/3` so
+//! worker-side read deadlines only trip on a genuinely stalled leader.
 
 use super::tcp::TcpTransport;
 use super::wire::{self, Setup, WIRE_VERSION};
@@ -26,6 +33,7 @@ use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 /// How long the leader waits for the full worker set to connect and
@@ -38,7 +46,7 @@ pub const ACCEPT_DEADLINE: Duration = Duration::from_secs(60);
 pub fn run_leader(ds: &Dataset, cfg: &RunConfig) -> Result<PooledRun> {
     // Library callers reach this without the CLI's pre-flight check; the
     // tcp-specific invariants (listen set, explicit workers, parts >= 2,
-    // wire v4 limits) must still fail as one-liners, not mid-run.
+    // wire v5 limits) must still fail as one-liners, not mid-run.
     cfg.validate()?;
     let listen = cfg
         .listen
@@ -102,7 +110,7 @@ pub fn serve(ds: &Dataset, cfg: &RunConfig, listener: &TcpListener) -> Result<Po
     let plan = ExecPlan::new(ds, cfg.parts, cfg.strategy, cfg.seed);
     let setup = make_setup(cfg, ds.n, ds.d, 0, &plan)?;
     let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
-    let run = execute_pooled_remote(ds, cfg, &tcp, plan);
+    let run = run_elastic(&tcp, listener, &setup, || execute_pooled_remote(ds, cfg, &tcp, plan));
     release_on_error(&tcp, run)
 }
 
@@ -131,8 +139,102 @@ pub fn serve_sharded(
     let plan = ExecPlan::from_layout(manifest.layout());
     let setup = make_setup(&cfg, manifest.n, manifest.d, manifest.fingerprint(), &plan)?;
     let tcp = TcpTransport::accept_workers(listener, n_workers, &setup, ACCEPT_DEADLINE)?;
-    let run = execute_pooled_sharded(&cfg, &tcp, plan, manifest.n, manifest.d);
+    let run = run_elastic(&tcp, listener, &setup, || {
+        execute_pooled_sharded(&cfg, &tcp, plan, manifest.n, manifest.d)
+    });
     release_on_error(&tcp, run)
+}
+
+/// Drive one engine run with its two liveness side-cars, stopped when the
+/// engine returns:
+///
+/// - **pulse** (only when liveness is enabled): every `liveness / 3`, one
+///   heartbeat round over every idle link ([`TcpTransport::pulse`]), so a
+///   worker waiting through a leader-quiet phase (another worker's phase-1
+///   build, a reduce-mode settle) never trips its read deadline. The
+///   interval sleeps *first*: short runs finish without a single heartbeat.
+/// - **admission**: keep accepting on `listener` and run the mid-run
+///   `Join`/`AdmitAck` handshake on every late connection; the engine's
+///   gather loop activates appended links. A link admitted too late to be
+///   activated is released with a best-effort `Shutdown`.
+fn run_elastic<F>(
+    tcp: &TcpTransport,
+    listener: &TcpListener,
+    setup: &Setup,
+    engine: F,
+) -> Result<PooledRun>
+where
+    F: FnOnce() -> Result<PooledRun>,
+{
+    let stop = AtomicBool::new(false);
+    let heartbeats = AtomicU64::new(0);
+    let n_start = tcp.len();
+    let mut run = std::thread::scope(|s| {
+        if let Some(liveness) = tcp.liveness() {
+            let interval = (liveness / 3).max(Duration::from_millis(10));
+            let stop = &stop;
+            let heartbeats = &heartbeats;
+            s.spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let mut waited = Duration::ZERO;
+                    while waited < interval && !stop.load(Ordering::SeqCst) {
+                        let step = Duration::from_millis(10).min(interval - waited);
+                        std::thread::sleep(step);
+                        waited += step;
+                    }
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    heartbeats.fetch_add(tcp.pulse(), Ordering::Relaxed);
+                }
+            });
+        }
+        {
+            let stop = &stop;
+            s.spawn(move || admission_loop(listener, tcp, setup, stop));
+        }
+        let out = engine();
+        // The side-cars poll their flags; scope join is bounded by one
+        // poll interval.
+        stop.store(true, Ordering::SeqCst);
+        out
+    })?;
+    run.metrics.heartbeats_sent = heartbeats.load(Ordering::Relaxed);
+    // Links admitted after the gather loop drained were never driven:
+    // release them so the late worker exits cleanly instead of timing out.
+    let driven = n_start + run.metrics.workers_admitted as usize;
+    for w in driven..tcp.len() {
+        let _ = tcp.send_to(w, &Message::Shutdown, Direction::Control);
+    }
+    Ok(run)
+}
+
+/// Accept loop for mid-run admissions, on the (nonblocking since the
+/// startup accept phase) listener. Admissions are serialized here, so the
+/// worker id [`TcpTransport::admit_worker`] assigns is final. A failed
+/// handshake (port scan, manifest mismatch hang-up, version skew) drops
+/// the connection and keeps serving.
+fn admission_loop(
+    listener: &TcpListener,
+    tcp: &TcpTransport,
+    setup: &Setup,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => match tcp.admit_worker(stream, peer.ip(), setup) {
+                Ok(w) => eprintln!("leader: admitted worker {w} mid-run from {peer}"),
+                Err(e) => eprintln!("leader: rejected mid-run connection from {peer}: {e:#}"),
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                eprintln!("leader: admission accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
 }
 
 fn make_setup(cfg: &RunConfig, n: usize, d: usize, manifest: u64, plan: &ExecPlan) -> Result<Setup> {
@@ -145,7 +247,10 @@ fn make_setup(cfg: &RunConfig, n: usize, d: usize, manifest: u64, plan: &ExecPla
         kernel: wire::kernel_code(&cfg.kernel),
         pair_kernel: wire::pair_kernel_code(cfg.pair_kernel),
         reduce_tree: cfg.reduce_tree,
+        mid_run: false, // admission re-stamps this per joining link
         manifest,
+        liveness_ms: u32::try_from(cfg.net.liveness_timeout_ms)
+            .context("liveness timeout exceeds the u32 wire limit (ms)")?,
         part_sizes: plan.parts.iter().map(|p| p.len() as u32).collect(),
         artifacts_dir: cfg.artifacts_dir.display().to_string(),
     })

@@ -24,8 +24,20 @@
 //! window per link, [`worker`] is the `demst worker` process loop on the
 //! other end (optionally serving subsets it loaded from local shard
 //! files), and [`launch`] binds, spawns, handshakes, and awaits the worker
-//! set around one engine run.
+//! set around one engine run — keeping the listener open afterwards so a
+//! replacement worker can be **admitted mid-run** (`Join`/`AdmitAck`).
+//!
+//! Liveness: post-handshake reads on every link (leader↔worker and
+//! worker↔worker) run under a configurable read deadline
+//! (`[net] liveness_timeout_ms`), with the leader heartbeating idle links
+//! so deadlines only trip on genuinely stalled peers; a tripped deadline
+//! is tagged with [`STALL_MARK`] and demoted through the same exactly-once
+//! return lane as a dead link. [`chaos`] is the deterministic
+//! fault-injection wrapper (seeded delays/drops/truncation/garbage on
+//! frame N) that makes every one of those failure paths reproducibly
+//! testable.
 
+pub mod chaos;
 pub mod launch;
 pub mod remote;
 pub mod sim;
@@ -40,6 +52,28 @@ use std::sync::Arc;
 
 pub use sim::NetSim;
 pub use tcp::TcpTransport;
+
+/// Marker substring tagged onto every error raised by a tripped liveness
+/// read deadline. The vendored `anyhow` carries string frames only (no
+/// downcasting), so stall classification is by marker: [`is_stall`] scans
+/// the error chain for this string. Keep it stable — metrics
+/// (`stalls_detected`) and tests key off it.
+pub const STALL_MARK: &str = "liveness timeout";
+
+/// True when `kind` is how this platform reports a socket read deadline
+/// expiring: Unix returns `WouldBlock` for `SO_RCVTIMEO`, Windows
+/// `TimedOut` — both mean "peer silent past the deadline", not "link dead".
+pub fn is_timeout_kind(kind: std::io::ErrorKind) -> bool {
+    matches!(kind, std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// True when `err` (anywhere in its chain) was raised by a tripped
+/// liveness deadline — a **stalled** peer, as opposed to a dead one. The
+/// engine counts these separately (`RunMetrics::stalls_detected`) but
+/// demotes both through the same exactly-once return lane.
+pub fn is_stall(err: &anyhow::Error) -> bool {
+    err.chain().any(|frame| frame.contains(STALL_MARK))
+}
 
 /// Traffic direction, for the per-phase accounting the paper's cost model
 /// distinguishes (scatter of vectors vs gather of tree edges). `Peer` is

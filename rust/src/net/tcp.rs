@@ -15,13 +15,28 @@
 //! The handshake itself is control-plane traffic the simulation does not
 //! model, so `control_bytes` differs between transports by design while
 //! scatter/gather match exactly.
+//!
+//! Liveness: when the run's `Setup` carries a nonzero `liveness_ms`, every
+//! link keeps that read deadline **after** the handshake too (instead of
+//! clearing it) — a worker silent past the deadline surfaces as an error
+//! tagged [`super::STALL_MARK`], which the engine demotes like a dead link
+//! but counts separately. The deadline therefore bounds the leader's wait
+//! for any single reply; configure it above the worst-case single-job
+//! compute time. Heartbeats over idle links (sent by the engine's pulse
+//! thread) keep the *worker-side* deadline from tripping while the leader
+//! is merely quiet.
+//!
+//! Admission: the transport's link table can **grow mid-run** —
+//! [`TcpTransport::admit_worker`] runs the versioned `Join`/`AdmitAck`
+//! handshake on a freshly accepted connection and appends the new link, so
+//! the engine can open a deck for it while the run is in flight.
 
 use super::wire::{self, Setup};
 use super::{Direction, NetCounters, Transport};
 use crate::coordinator::messages::{Message, PeerAddr};
 use anyhow::{bail, Context, Result};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// One accepted, handshaken leader↔worker link.
@@ -33,15 +48,20 @@ struct Link {
 /// Each link is driven by exactly one proxy thread (the engine's pooled
 /// worker for that rank); frames on a link are strictly FIFO, with up to
 /// `pipeline_window` requests outstanding before their replies are read.
+/// The table is append-only behind an `RwLock`: startup workers are
+/// accepted in bulk, mid-run admissions push new links while existing
+/// drivers keep running.
 pub struct TcpTransport {
-    links: Vec<Mutex<Link>>,
+    links: RwLock<Vec<Arc<Mutex<Link>>>>,
     /// shard ids advertised by each worker during the versioned handshake
     /// (empty on unsharded workers)
-    advertised: Vec<Vec<u32>>,
+    advertised: RwLock<Vec<Vec<u32>>>,
     /// each worker's peer-plane listener address: the IP its leader
     /// connection arrived from + the port its `Hello` advertised (port 0 =
     /// no listener — the worker could not bind one)
-    peer_addrs: Vec<PeerAddr>,
+    peer_addrs: RwLock<Vec<PeerAddr>>,
+    /// per-link read deadline (None = wait forever, pre-liveness behavior)
+    liveness: Option<Duration>,
     counters: Arc<NetCounters>,
 }
 
@@ -55,13 +75,28 @@ impl Transport for TcpTransport {
 }
 
 impl TcpTransport {
-    /// Number of worker links.
+    /// Number of worker links (including any admitted mid-run).
     pub fn len(&self) -> usize {
-        self.links.len()
+        self.links.read().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.links.is_empty()
+        self.len() == 0
+    }
+
+    /// The per-link read deadline this fabric was set up with (None =
+    /// liveness disabled). The engine derives its heartbeat interval from
+    /// this (`deadline / 3`).
+    pub fn liveness(&self) -> Option<Duration> {
+        self.liveness
+    }
+
+    fn link(&self, w: usize) -> Result<Arc<Mutex<Link>>> {
+        let links = self.links.read().unwrap();
+        match links.get(w) {
+            Some(link) => Ok(Arc::clone(link)),
+            None => bail!("no link for worker {w} ({} links)", links.len()),
+        }
     }
 
     /// Accept, verify, and set up `n` worker connections on `listener`.
@@ -78,6 +113,7 @@ impl TcpTransport {
         deadline: Duration,
     ) -> Result<Self> {
         let counters = Arc::new(NetCounters::default());
+        let liveness = liveness_of(setup);
         let t0 = Instant::now();
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let mut links = Vec::with_capacity(n);
@@ -97,9 +133,9 @@ impl TcpTransport {
             match listener.accept() {
                 Ok((stream, peer)) => {
                     let w = links.len();
-                    match handshake_leader(&stream, w, setup, &counters) {
+                    match handshake_leader(&stream, w, setup, liveness, &counters) {
                         Ok((shard_ids, peer_port)) => {
-                            links.push(Mutex::new(Link { stream }));
+                            links.push(Arc::new(Mutex::new(Link { stream })));
                             advertised.push(shard_ids);
                             // the observed source IP reaches the worker's
                             // host from here; pair it with the advertised
@@ -117,26 +153,94 @@ impl TcpTransport {
                 Err(e) => return Err(e).context("accepting worker connection"),
             }
         }
-        Ok(Self { links, advertised, peer_addrs, counters })
+        Ok(Self {
+            links: RwLock::new(links),
+            advertised: RwLock::new(advertised),
+            peer_addrs: RwLock::new(peer_addrs),
+            liveness,
+            counters,
+        })
+    }
+
+    /// Run the mid-run admission handshake on a freshly accepted connection
+    /// and append it to the link table: expect `Hello`, answer with the run
+    /// `Setup` stamped `mid_run` and the next free worker id, expect the
+    /// versioned `Join` + `ShardAdvertise`, confirm with `AdmitAck`. The
+    /// worker id is final once this returns — the caller (launch's
+    /// admission thread, which serializes admissions) hands it to the
+    /// engine to open a deck and spawn a link driver. The manifest check is
+    /// worker-side, exactly like startup: a worker whose shard manifest
+    /// does not match `setup.manifest` hangs up instead of sending `Join`.
+    pub fn admit_worker(
+        &self,
+        stream: TcpStream,
+        peer_ip: std::net::IpAddr,
+        setup: &Setup,
+    ) -> Result<usize> {
+        let w = self.links.read().unwrap().len();
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .context("setting admission handshake timeout")?;
+        let mut s = &stream;
+
+        let hello_frame = wire::read_frame_capped_io(&mut s, wire::MAX_HANDSHAKE_PAYLOAD)
+            .context("reading Hello")?;
+        let hello = wire::decode_hello(&hello_frame)?;
+        self.counters.add(hello_frame.len() as u64, Direction::Control);
+
+        let setup = Setup { worker_id: w as u16, mid_run: true, ..setup.clone() };
+        let setup_frame = wire::encode_setup(&setup)?;
+        wire::write_frame(&mut s, &setup_frame).context("sending mid-run Setup")?;
+        self.counters.add(setup_frame.len() as u64, Direction::Control);
+
+        let join_frame = wire::read_frame_capped_io(&mut s, wire::MAX_HANDSHAKE_PAYLOAD)
+            .context("reading Join")?;
+        let join = wire::decode_join(&join_frame)?;
+        if join.worker_id != w as u16 {
+            bail!("joining worker acked id {} but was assigned {w}", join.worker_id);
+        }
+        self.counters.add(join_frame.len() as u64, Direction::Control);
+
+        let adv_frame = wire::read_frame_capped_io(&mut s, wire::MAX_HANDSHAKE_PAYLOAD)
+            .context("reading ShardAdvertise")?;
+        let adv = wire::decode_shard_advertise(&adv_frame)?;
+        if adv.worker_id != w as u16 {
+            bail!("joining worker advertised as id {} but was assigned {w}", adv.worker_id);
+        }
+        self.counters.add(adv_frame.len() as u64, Direction::Control);
+
+        let ack_frame = wire::encode_admit_ack(&wire::AdmitAck { worker_id: w as u16 });
+        wire::write_frame(&mut s, &ack_frame).context("sending AdmitAck")?;
+        self.counters.add(ack_frame.len() as u64, Direction::Control);
+
+        stream.set_read_timeout(self.liveness).context("setting link read deadline")?;
+        // advertised/peer_addrs first so `advertised(w)` is valid the
+        // moment `len()` covers w
+        self.advertised.write().unwrap().push(adv.shard_ids);
+        self.peer_addrs.write().unwrap().push(PeerAddr { ip: peer_ip, port: hello.peer_port });
+        self.links.write().unwrap().push(Arc::new(Mutex::new(Link { stream })));
+        Ok(w)
     }
 
     /// Shard ids worker `w` advertised during the handshake (subsets it
     /// loaded from local shard files; empty for unsharded workers).
-    pub fn advertised(&self, w: usize) -> &[u32] {
-        &self.advertised[w]
+    pub fn advertised(&self, w: usize) -> Vec<u32> {
+        self.advertised.read().unwrap()[w].clone()
     }
 
     /// The fleet's peer-plane listener addresses, indexed by worker id
     /// (port 0 = that worker bound no listener).
-    pub fn peer_addrs(&self) -> &[PeerAddr] {
-        &self.peer_addrs
+    pub fn peer_addrs(&self) -> Vec<PeerAddr> {
+        self.peer_addrs.read().unwrap().clone()
     }
 
     /// Send one message frame to worker `w`, counting its actual encoded
     /// size under `dir`. Returns the frame length.
     pub fn send_to(&self, w: usize, msg: &Message, dir: Direction) -> Result<u64> {
         let frame = wire::encode(msg)?;
-        let mut link = self.links[w].lock().unwrap();
+        let link = self.link(w)?;
+        let mut link = link.lock().unwrap();
         wire::write_frame(&mut link.stream, &frame)
             .with_context(|| format!("sending to worker {w}"))?;
         self.counters.add(frame.len() as u64, dir);
@@ -145,26 +249,47 @@ impl TcpTransport {
 
     /// Receive one message frame from worker `w`, counting its actual size
     /// under the direction implied by its type (results/trees/stats =
-    /// gather, acks = control).
+    /// gather, acks = control). Heartbeats are counted as control and
+    /// skipped — they exist to keep deadlines from tripping, not to carry
+    /// state. A read deadline expiring here is reported as a stall
+    /// ([`super::STALL_MARK`]), distinct from a closed link.
     pub fn recv_from(&self, w: usize) -> Result<Message> {
-        let frame = {
-            let mut link = self.links[w].lock().unwrap();
-            wire::read_frame(&mut link.stream)
-                .with_context(|| format!("receiving from worker {w}"))?
-        };
-        let msg = wire::decode(&frame, None)
-            .with_context(|| format!("decoding frame from worker {w}"))?;
-        let dir = match &msg {
-            Message::Result { .. } | Message::WorkerDone { .. } | Message::LocalDone { .. } => {
-                Direction::Gather
-            }
-            Message::Ack { .. } | Message::PairFail { .. } | Message::FoldDone { .. } => {
-                Direction::Control
-            }
-            other => bail!("worker {w} sent an unexpected {other:?}"),
-        };
-        self.counters.add(frame.len() as u64, dir);
-        Ok(msg)
+        let link = self.link(w)?;
+        loop {
+            let frame = {
+                let mut link = link.lock().unwrap();
+                match wire::read_frame_io(&mut link.stream) {
+                    Ok(frame) => frame,
+                    Err(e) if super::is_timeout_kind(e.kind()) => {
+                        bail!(
+                            "worker {w} {}: no frame within the {:?} read deadline",
+                            super::STALL_MARK,
+                            self.liveness.unwrap_or_default()
+                        );
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| format!("receiving from worker {w}"));
+                    }
+                }
+            };
+            let msg = wire::decode(&frame, None)
+                .with_context(|| format!("decoding frame from worker {w}"))?;
+            let dir = match &msg {
+                Message::Result { .. } | Message::WorkerDone { .. } | Message::LocalDone { .. } => {
+                    Direction::Gather
+                }
+                Message::Heartbeat => {
+                    self.counters.add(frame.len() as u64, Direction::Control);
+                    continue;
+                }
+                Message::Ack { .. } | Message::PairFail { .. } | Message::FoldDone { .. } => {
+                    Direction::Control
+                }
+                other => bail!("worker {w} sent an unexpected {other:?}"),
+            };
+            self.counters.add(frame.len() as u64, dir);
+            return Ok(msg);
+        }
     }
 
     /// Blocking rendezvous: send `msg`, then read the worker's reply.
@@ -172,17 +297,51 @@ impl TcpTransport {
         self.send_to(w, msg, dir)?;
         self.recv_from(w)
     }
+
+    /// One heartbeat round over the whole link table: write a header-only
+    /// `Heartbeat` frame to every link whose mutex is immediately free. A
+    /// held mutex means the link is mid-exchange — its driver is writing,
+    /// or blocked awaiting a reply from a *computing* worker — and a
+    /// worker that is computing is not watching its read deadline, so
+    /// skipping it is safe and keeps the pulse from blocking behind slow
+    /// links. Send errors are ignored: a dead link surfaces on its own
+    /// driver's next frame. Returns the number of frames sent.
+    pub fn pulse(&self) -> u64 {
+        let frame = wire::encode(&Message::Heartbeat).expect("header-only frame encodes");
+        let links: Vec<Arc<Mutex<Link>>> =
+            self.links.read().unwrap().iter().map(Arc::clone).collect();
+        let mut sent = 0;
+        for link in links {
+            if let Ok(mut link) = link.try_lock() {
+                if wire::write_frame(&mut link.stream, &frame).is_ok() {
+                    self.counters.add(frame.len() as u64, Direction::Control);
+                    sent += 1;
+                }
+            }
+        }
+        sent
+    }
+}
+
+/// The per-link read deadline a run's `Setup` asks for (`liveness_ms == 0`
+/// disables it).
+fn liveness_of(setup: &Setup) -> Option<Duration> {
+    (setup.liveness_ms > 0).then(|| Duration::from_millis(u64::from(setup.liveness_ms)))
 }
 
 /// Leader side of the per-connection handshake: expect `Hello`, answer with
 /// the run `Setup` (stamped with this link's worker id), confirm the ack,
 /// then read the worker's `ShardAdvertise` (its locally loaded subset ids —
 /// empty for unsharded workers). Handshake frames are counted as control
-/// traffic. Returns the advertised shard ids.
+/// traffic and read under the tighter [`wire::MAX_HANDSHAKE_PAYLOAD`] cap —
+/// nothing pre-trust may declare a giant payload. Returns the advertised
+/// shard ids. On success the link's read deadline becomes `liveness`
+/// (None = wait forever).
 fn handshake_leader(
     stream: &TcpStream,
     worker_id: usize,
     setup: &Setup,
+    liveness: Option<Duration>,
     counters: &NetCounters,
 ) -> Result<(Vec<u32>, u16)> {
     stream.set_nodelay(true).ok();
@@ -190,7 +349,8 @@ fn handshake_leader(
         .set_read_timeout(Some(Duration::from_secs(10)))
         .context("setting handshake timeout")?;
     let mut stream = stream;
-    let hello_frame = wire::read_frame(&mut stream).context("reading Hello")?;
+    let hello_frame = wire::read_frame_capped_io(&mut stream, wire::MAX_HANDSHAKE_PAYLOAD)
+        .context("reading Hello")?;
     let hello = wire::decode_hello(&hello_frame)?;
     counters.add(hello_frame.len() as u64, Direction::Control);
 
@@ -199,21 +359,25 @@ fn handshake_leader(
     wire::write_frame(&mut stream, &setup_frame).context("sending Setup")?;
     counters.add(setup_frame.len() as u64, Direction::Control);
 
-    let ack_frame = wire::read_frame(&mut stream).context("reading SetupAck")?;
+    let ack_frame = wire::read_frame_capped_io(&mut stream, wire::MAX_HANDSHAKE_PAYLOAD)
+        .context("reading SetupAck")?;
     let ack = wire::decode_setup_ack(&ack_frame)?;
     if ack.worker_id != worker_id as u16 {
         bail!("worker acked id {} but was assigned {worker_id}", ack.worker_id);
     }
     counters.add(ack_frame.len() as u64, Direction::Control);
 
-    let adv_frame = wire::read_frame(&mut stream).context("reading ShardAdvertise")?;
+    let adv_frame = wire::read_frame_capped_io(&mut stream, wire::MAX_HANDSHAKE_PAYLOAD)
+        .context("reading ShardAdvertise")?;
     let adv = wire::decode_shard_advertise(&adv_frame)?;
     if adv.worker_id != worker_id as u16 {
         bail!("worker advertised as id {} but was assigned {worker_id}", adv.worker_id);
     }
     counters.add(adv_frame.len() as u64, Direction::Control);
-    // Job frames can take arbitrarily long to produce answers.
-    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    // Job frames can take arbitrarily long to produce answers; the liveness
+    // deadline (when enabled) bounds that wait — heartbeats keep it from
+    // tripping on merely idle links.
+    stream.set_read_timeout(liveness).context("setting link read deadline")?;
     Ok((adv.shard_ids, hello.peer_port))
 }
 
@@ -233,7 +397,9 @@ mod tests {
             kernel: 0,
             pair_kernel: 0,
             reduce_tree: false,
+            mid_run: false,
             manifest: 0,
+            liveness_ms: 0,
             part_sizes: vec![5, 5],
             artifacts_dir: String::new(),
         }
@@ -340,5 +506,204 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("0/2 workers"), "{err:#}");
+    }
+
+    /// A worker joining mid-run gets the next free id, its advertisement is
+    /// recorded, and the appended link carries frames like any other.
+    #[test]
+    fn admission_handshake_appends_a_usable_link() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = fake_worker(addr);
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
+                .unwrap();
+
+        let joiner = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 0 }),
+            )
+            .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            assert!(setup.mid_run, "admission Setup must be stamped mid_run");
+            wire::write_frame(
+                &mut s,
+                &wire::encode_join(&wire::Join {
+                    worker_id: setup.worker_id,
+                    version: WIRE_VERSION,
+                }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![0, 3],
+                })
+                .unwrap(),
+            )
+            .unwrap();
+            let ack =
+                wire::decode_admit_ack(&wire::read_frame(&mut s).unwrap()).unwrap();
+            assert_eq!(ack.worker_id, setup.worker_id);
+            // serve one rendezvous over the admitted link
+            let frame = wire::read_frame(&mut s).unwrap();
+            let msg = wire::decode(&frame, None).unwrap();
+            wire::write_frame(&mut s, &wire::encode(&Message::Ack { job_id: 7 }).unwrap())
+                .unwrap();
+            msg
+        });
+        // re-accept on the same (still nonblocking) listener
+        let stream = loop {
+            match listener.accept() {
+                Ok((stream, peer)) => break (stream, peer),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => panic!("accept: {e}"),
+            }
+        };
+        let w = fab.admit_worker(stream.0, stream.1.ip(), &test_setup()).unwrap();
+        assert_eq!(w, 1, "admitted worker takes the next free id");
+        assert_eq!(fab.len(), 2);
+        assert_eq!(fab.advertised(1), &[0, 3], "admission captured the advertisement");
+        assert_eq!(fab.peer_addrs()[1].port, 0, "joiner bound no peer listener");
+
+        let reply = fab.request(1, &Message::Shutdown, Direction::Control).unwrap();
+        assert_eq!(reply, Message::Ack { job_id: 7 });
+        assert_eq!(joiner.join().unwrap(), Message::Shutdown);
+        // the original worker is still reachable on link 0
+        let reply = fab.request(0, &Message::Shutdown, Direction::Control).unwrap();
+        assert_eq!(reply, Message::Ack { job_id: 42 });
+        worker.join().unwrap();
+    }
+
+    /// With liveness enabled, a worker that goes silent trips the read
+    /// deadline and the error is classified as a stall, not a dead link.
+    #[test]
+    fn silent_worker_is_reported_as_a_stall() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 0 }),
+            )
+            .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![],
+                })
+                .unwrap(),
+            )
+            .unwrap();
+            // stall: keep the socket open but never write another frame
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let setup = Setup { liveness_ms: 100, ..test_setup() };
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &setup, Duration::from_secs(10)).unwrap();
+        assert_eq!(fab.liveness(), Some(Duration::from_millis(100)));
+        let err = fab.recv_from(0).unwrap_err();
+        assert!(crate::net::is_stall(&err), "deadline trip must classify as stall: {err:#}");
+        worker.join().unwrap();
+    }
+
+    /// A pulse round writes one heartbeat per idle link; a link whose
+    /// mutex is held is skipped rather than waited on.
+    #[test]
+    fn pulse_heartbeats_idle_links_and_skips_held_ones() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 0 }),
+            )
+            .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![],
+                })
+                .unwrap(),
+            )
+            .unwrap();
+            // the pulse's heartbeat arrives as a plain frame
+            let frame = wire::read_frame(&mut s).unwrap();
+            wire::decode(&frame, None).unwrap()
+        });
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
+                .unwrap();
+        assert_eq!(fab.pulse(), 1, "one idle link, one heartbeat");
+        assert_eq!(worker.join().unwrap(), Message::Heartbeat);
+        // a held link mutex is skipped, not waited on
+        let held = fab.link(0).unwrap();
+        let _guard = held.lock().unwrap();
+        assert_eq!(fab.pulse(), 0, "busy link skipped");
+    }
+
+    /// Heartbeat frames are skipped (counted as control) — the next real
+    /// frame is what `recv_from` returns.
+    #[test]
+    fn heartbeats_are_transparent_to_recv() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 0 }),
+            )
+            .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![],
+                })
+                .unwrap(),
+            )
+            .unwrap();
+            wire::write_frame(&mut s, &wire::encode(&Message::Heartbeat).unwrap()).unwrap();
+            wire::write_frame(&mut s, &wire::encode(&Message::Heartbeat).unwrap()).unwrap();
+            wire::write_frame(&mut s, &wire::encode(&Message::Ack { job_id: 9 }).unwrap())
+                .unwrap();
+        });
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
+                .unwrap();
+        let (_, _, c_before, _) = fab.counters().snapshot();
+        let msg = fab.recv_from(0).unwrap();
+        assert_eq!(msg, Message::Ack { job_id: 9 }, "heartbeats skipped, ack delivered");
+        let (_, _, c_after, _) = fab.counters().snapshot();
+        assert_eq!(c_after, c_before + 16 + 16 + 16, "2 heartbeats + ack all counted control");
+        worker.join().unwrap();
     }
 }

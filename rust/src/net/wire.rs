@@ -25,11 +25,32 @@
 //! has exactly `|S_k| - 1` edges) — which is what lets the frame sizes equal
 //! the engine's modeled scatter charges byte-for-byte.
 //!
-//! ## Wire limits (v4)
+//! ## Wire limits (v5)
 //!
 //! `parts ≤ 65535`, `d ≤ 65535`, `workers ≤ 255` (per-job `Result` routing),
 //! durations saturate at 2⁴⁸−1 ns (~3.2 days per job). [`RunConfig`]
 //! validation rejects TCP configurations outside these bounds up front.
+//! Handshake frames are additionally capped at [`MAX_HANDSHAKE_PAYLOAD`]
+//! bytes, so a hostile or confused peer cannot make the handshake path
+//! allocate a gigabyte from a forged length field.
+//!
+//! ## v5 additions (liveness + mid-run admission)
+//!
+//! - [`Heartbeat`](Message::Heartbeat) is a header-only keepalive. The
+//!   leader multiplexes it over every **idle** link (default every
+//!   `liveness_timeout / 3`); both ends run their post-handshake reads
+//!   under a `liveness_timeout` read deadline instead of blocking forever,
+//!   so a hung-but-alive peer (half-open socket, stalled fetch) is
+//!   *detected* and demoted through the exactly-once return lane rather
+//!   than wedging the run. Heartbeats are never acked and carry no state —
+//!   receivers skip them.
+//! - [`Setup`] carries `liveness_ms` (the fleet-wide read deadline, 0 =
+//!   disabled) and a `mid_run` flag (header bit 1): a worker connecting to
+//!   an **already-running** leader gets `mid_run = true` and answers with
+//!   [`Join`] instead of [`SetupAck`], then advertises its shards exactly
+//!   like startup, and must not serve until the leader's [`AdmitAck`]
+//!   confirms the admission (the leader may still refuse a mis-sharded or
+//!   version-skewed joiner at this point).
 //!
 //! ## v4 additions (peer data plane + reduction topologies)
 //!
@@ -90,11 +111,17 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 4;
+pub const WIRE_VERSION: u16 = 5;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
 pub const MAX_PAYLOAD: u32 = 1 << 30;
+/// Tighter payload cap for handshake-phase frames (`Hello`/`Setup`/
+/// `SetupAck`/`Join`/`AdmitAck`/`ShardAdvertise`): the largest legitimate
+/// handshake frame is a `Setup` with 65535 part sizes plus an artifacts
+/// path — well under 1 MiB — so pre-handshake reads never trust a forged
+/// length field beyond this.
+pub const MAX_HANDSHAKE_PAYLOAD: u32 = 1 << 20;
 
 const TAG_HELLO: u8 = 1;
 const TAG_SETUP: u8 = 2;
@@ -114,6 +141,9 @@ const TAG_TREE_FETCH: u8 = 15;
 const TAG_TREE_SHIP: u8 = 16;
 const TAG_FOLD_SHIP: u8 = 17;
 const TAG_PEER_BOOK: u8 = 18;
+const TAG_HEARTBEAT: u8 = 19;
+const TAG_JOIN: u8 = 20;
+const TAG_ADMIT_ACK: u8 = 21;
 
 // `Ack`-tag status codes (header byte [5]); one reply frame shape covers
 // the whole pair/fold lane so the FIFO window credits stay uniform.
@@ -175,6 +205,7 @@ pub fn encoded_len(msg: &Message) -> u64 {
             | Message::PeerHello { .. }
             | Message::TreeFetch { .. }
             | Message::FoldShip { .. }
+            | Message::Heartbeat
             | Message::Shutdown => 0,
         }
 }
@@ -455,6 +486,7 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             }
             f
         }
+        Message::Heartbeat => FrameBuf::new(TAG_HEARTBEAT, payload)?,
         Message::Shutdown => FrameBuf::new(TAG_SHUTDOWN, payload)?,
     };
     debug_assert_eq!(f.buf.len() as u64, total, "encoder drifted from encoded_len");
@@ -741,6 +773,7 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 peer_ships,
             }
         }
+        TAG_HEARTBEAT => Message::Heartbeat,
         TAG_SHUTDOWN => Message::Shutdown,
         other => bail!("unknown frame tag {other}"),
     };
@@ -838,10 +871,18 @@ pub struct Setup {
     pub kernel: u8,
     pub pair_kernel: u8,
     pub reduce_tree: bool,
+    /// true when this worker is being admitted into an **already-running**
+    /// fleet: the worker must answer with [`Join`] (not [`SetupAck`]) and
+    /// wait for the leader's [`AdmitAck`] before serving
+    pub mid_run: bool,
     /// shard-manifest fingerprint of a sharded run, 0 when unsharded; a
     /// worker whose loaded manifest fingerprints differently must refuse
     /// the run (its shard files were cut from another partition)
     pub manifest: u64,
+    /// fleet-wide per-link read deadline in milliseconds (0 = no deadline);
+    /// also derives the worker's fold-inbox wait (`liveness / 2`) so fold
+    /// replies always beat the leader's own deadline
+    pub liveness_ms: u32,
     pub part_sizes: Vec<u32>,
     /// leader-side artifacts dir, UTF-8 (trailing variable-length section)
     pub artifacts_dir: String,
@@ -850,6 +891,24 @@ pub struct Setup {
 /// Worker → leader: handshake complete, ready for job frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SetupAck {
+    pub worker_id: u16,
+}
+
+/// Worker → leader reply to a `mid_run` [`Setup`]: the worker asks to be
+/// admitted into the running fleet. Versioned and magic-checked like
+/// [`Hello`] so an admission attempt from a skewed build fails loudly at
+/// the handshake instead of corrupting a run in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Join {
+    pub worker_id: u16,
+    pub version: u16,
+}
+
+/// Leader → worker: admission confirmed — the deck is open, job frames may
+/// follow. Sent only after the leader has validated the joiner's shard
+/// advertisement exactly like a startup handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmitAck {
     pub worker_id: u16,
 }
 
@@ -877,9 +936,9 @@ pub fn decode_hello(frame: &[u8]) -> Result<Hello> {
 pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     let parts = need_u16(s.part_sizes.len(), "partition count")?;
     let dir = s.artifacts_dir.as_bytes();
-    let payload = 16 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
+    let payload = 20 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
     let mut f = FrameBuf::new(TAG_SETUP, payload)?;
-    f.set_u8(5, s.reduce_tree as u8);
+    f.set_u8(5, s.reduce_tree as u8 | (s.mid_run as u8) << 1);
     f.set_u16(6, s.version);
     f.set_u16(8, s.worker_id);
     f.set_u16(10, s.d);
@@ -890,6 +949,7 @@ pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     f.buf.extend_from_slice(&[0u8; 3]);
     f.push_u32s(&[s.n]);
     f.push_u64(s.manifest);
+    f.push_u32s(&[s.liveness_ms]);
     f.push_u32s(&s.part_sizes);
     f.buf.extend_from_slice(dir);
     Ok(f.buf)
@@ -907,6 +967,7 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
     let kernel = r.take(4)?[0];
     let n = r.u32()?;
     let manifest = r.u64()?;
+    let liveness_ms = r.u32()?;
     let part_sizes = r.u32s(parts)?;
     let artifacts_dir = String::from_utf8(r.rest().to_vec())
         .map_err(|_| anyhow!("Setup artifacts_dir is not UTF-8"))?;
@@ -920,7 +981,9 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
         kernel,
         pair_kernel: r0.u8_at(15),
         reduce_tree: r0.u8_at(5) & 1 != 0,
+        mid_run: r0.u8_at(5) & 2 != 0,
         manifest,
+        liveness_ms,
         part_sizes,
         artifacts_dir,
     })
@@ -935,6 +998,38 @@ pub fn encode_setup_ack(a: &SetupAck) -> Vec<u8> {
 pub fn decode_setup_ack(frame: &[u8]) -> Result<SetupAck> {
     expect_tag(frame, TAG_SETUP_ACK, "SetupAck")?;
     Ok(SetupAck { worker_id: Reader::new(frame).u16_at(8) })
+}
+
+pub fn encode_join(j: &Join) -> Vec<u8> {
+    let mut f = FrameBuf::new(TAG_JOIN, 0).expect("fixed frame");
+    f.set_u16(6, j.version);
+    f.set_u32(8, MAGIC);
+    f.set_u16(12, j.worker_id);
+    f.buf
+}
+
+pub fn decode_join(frame: &[u8]) -> Result<Join> {
+    expect_tag(frame, TAG_JOIN, "Join")?;
+    let r = Reader::new(frame);
+    if r.u32_at(8) != MAGIC {
+        bail!("join magic mismatch: peer is not a demst worker");
+    }
+    let version = r.u16_at(6);
+    if version != WIRE_VERSION {
+        bail!("wire protocol version mismatch: joiner v{version}, this build v{WIRE_VERSION}");
+    }
+    Ok(Join { version, worker_id: r.u16_at(12) })
+}
+
+pub fn encode_admit_ack(a: &AdmitAck) -> Vec<u8> {
+    let mut f = FrameBuf::new(TAG_ADMIT_ACK, 0).expect("fixed frame");
+    f.set_u16(8, a.worker_id);
+    f.buf
+}
+
+pub fn decode_admit_ack(frame: &[u8]) -> Result<AdmitAck> {
+    expect_tag(frame, TAG_ADMIT_ACK, "AdmitAck")?;
+    Ok(AdmitAck { worker_id: Reader::new(frame).u16_at(8) })
 }
 
 /// Final handshake frame, worker → leader: the partition subset ids this
@@ -992,15 +1087,33 @@ pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> std::io::Result<()> {
 
 /// Read one complete frame (16-byte header + declared payload).
 pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    read_frame_io(r).context("reading frame")
+}
+
+/// [`read_frame`] with the raw [`std::io::Error`] preserved, so callers
+/// with a read deadline on the socket can tell a liveness timeout
+/// (`WouldBlock` / `TimedOut`) from a dead link. A forged length field maps
+/// to `InvalidData` before any allocation beyond the cap.
+pub fn read_frame_io(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    read_frame_capped_io(r, MAX_PAYLOAD)
+}
+
+/// [`read_frame_io`] with a tighter payload cap — handshake-phase reads use
+/// [`MAX_HANDSHAKE_PAYLOAD`] so an unauthenticated peer's forged length
+/// field can never drive a large allocation.
+pub fn read_frame_capped_io(r: &mut impl Read, cap: u32) -> std::io::Result<Vec<u8>> {
     let mut head = [0u8; HEADER_BYTES as usize];
-    r.read_exact(&mut head).context("reading frame header")?;
+    r.read_exact(&mut head)?;
     let payload_len = u32::from_le_bytes(head[0..4].try_into().unwrap());
-    if payload_len > MAX_PAYLOAD {
-        bail!("peer declared a {payload_len}-byte payload (limit {MAX_PAYLOAD}); refusing");
+    if payload_len > cap {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("peer declared a {payload_len}-byte payload (limit {cap}); refusing"),
+        ));
     }
     let mut frame = vec![0u8; HEADER_BYTES as usize + payload_len as usize];
     frame[..HEADER_BYTES as usize].copy_from_slice(&head);
-    r.read_exact(&mut frame[HEADER_BYTES as usize..]).context("reading frame payload")?;
+    r.read_exact(&mut frame[HEADER_BYTES as usize..])?;
     Ok(frame)
 }
 
@@ -1176,15 +1289,66 @@ mod tests {
             kernel: 1,
             pair_kernel: 1,
             reduce_tree: true,
+            mid_run: false,
             manifest: 0xfeed_beef_cafe_f00d,
+            liveness_ms: 30_000,
             part_sizes: vec![250, 250, 300, 200],
             artifacts_dir: "/opt/aot artifacts".into(),
         };
         assert_eq!(decode_setup(&encode_setup(&setup).unwrap()).unwrap(), setup);
         let bare = Setup { artifacts_dir: String::new(), manifest: 0, ..setup.clone() };
         assert_eq!(decode_setup(&encode_setup(&bare).unwrap()).unwrap(), bare);
+        // mid-run admission Setup: flag bit 1 rides next to reduce_tree
+        let admit = Setup { mid_run: true, reduce_tree: false, liveness_ms: 0, ..setup.clone() };
+        assert_eq!(decode_setup(&encode_setup(&admit).unwrap()).unwrap(), admit);
         let ack = SetupAck { worker_id: 3 };
         assert_eq!(decode_setup_ack(&encode_setup_ack(&ack)).unwrap(), ack);
+    }
+
+    #[test]
+    fn heartbeat_is_header_only_and_roundtrips() {
+        let hb = Message::Heartbeat;
+        assert_eq!(hb.wire_bytes(), HEADER_BYTES, "Heartbeat must stay header-only");
+        assert_eq!(roundtrip(&hb, None), hb);
+    }
+
+    #[test]
+    fn join_and_admit_ack_roundtrip_with_version_check() {
+        let join = Join { worker_id: 7, version: WIRE_VERSION };
+        let frame = encode_join(&join);
+        assert_eq!(frame.len() as u64, HEADER_BYTES, "Join is header-only");
+        assert_eq!(decode_join(&frame).unwrap(), join);
+        let mut skewed = encode_join(&join);
+        skewed[6] = WIRE_VERSION as u8 + 1;
+        assert!(decode_join(&skewed).is_err(), "version-skewed joiner rejected");
+        let mut not_demst = encode_join(&join);
+        not_demst[8] = 0;
+        assert!(decode_join(&not_demst).is_err(), "magic mismatch rejected");
+
+        let ack = AdmitAck { worker_id: 7 };
+        let frame = encode_admit_ack(&ack);
+        assert_eq!(frame.len() as u64, HEADER_BYTES, "AdmitAck is header-only");
+        assert_eq!(decode_admit_ack(&frame).unwrap(), ack);
+        // a non-admit frame is refused, not mis-parsed
+        let setup_ack = encode_setup_ack(&SetupAck { worker_id: 7 });
+        assert!(decode_admit_ack(&setup_ack).is_err());
+        assert!(decode_join(&setup_ack).is_err());
+    }
+
+    #[test]
+    fn capped_read_refuses_forged_handshake_lengths() {
+        // a forged 512 MiB length field must be refused by the handshake
+        // cap *before* any allocation, with a clean InvalidData error
+        let mut forged = vec![0u8; HEADER_BYTES as usize];
+        forged[0..4].copy_from_slice(&(512u32 << 20).to_le_bytes());
+        forged[4] = 1; // Hello tag
+        let mut cursor = &forged[..];
+        let err = read_frame_capped_io(&mut cursor, MAX_HANDSHAKE_PAYLOAD).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // the same frame passes the general cap (and then fails on EOF,
+        // not a panic or oversized allocation)
+        let mut cursor = &forged[..];
+        assert!(read_frame_io(&mut cursor).is_err());
     }
 
     #[test]

@@ -34,6 +34,26 @@
 //!   evaluations, panel stats, peer-plane traffic witnesses, and the folded
 //!   tree in reduce mode) and exit.
 //!
+//! Liveness: a `Setup` with nonzero `liveness_ms` arms a read deadline on
+//! the leader link (and on peer-fetch replies) — a leader silent past it
+//! (no job, no `Heartbeat`) is treated as stalled and the worker exits with
+//! a [`super::STALL_MARK`]-tagged error instead of hanging forever.
+//! `Heartbeat` frames are skipped. The fold wait derives from the same
+//! deadline (`liveness / 2`) so a fold degrade always resolves before the
+//! leader's own deadline trips.
+//!
+//! Admission: a `Setup` stamped `mid_run` means this worker is joining an
+//! already-running leader — it answers with the versioned `Join` (plus its
+//! `ShardAdvertise`) and waits for `AdmitAck` before serving; the manifest
+//! check is identical to startup.
+//!
+//! Chaos: when `DEMST_CHAOS_PLAN` is set, all leader-link frame IO runs
+//! through the deterministic [`super::chaos::ChaosLink`] wrapper
+//! (delay/stall/drop/truncate/garbage/exit on frame N), and
+//! `DEMST_CHAOS_PEER_DENY` makes the next N routed peer fetches fail — so
+//! every failure path above is reproducibly injectable. The legacy abrupt
+//! exits ([`CHAOS_EXIT_ENV`], [`CHAOS_EXIT_ON_FOLD_ENV`]) remain.
+//!
 //! Exactness: the worker never holds the full matrix, only gathered
 //! subsets — and every kernel it runs is bit-identical to the leader's
 //! in-process path over those rows ([`subset_mst_gathered`],
@@ -42,7 +62,8 @@
 //! distance arithmetic is independent of the surrounding rows and all
 //! tie-breaks compare global ids.
 
-use super::wire::{self, Hello, SetupAck, ShardAdvertise, WireCtx, WIRE_VERSION};
+use super::chaos::{self, ChaosLink};
+use super::wire::{self, Hello, Join, SetupAck, ShardAdvertise, WireCtx, WIRE_VERSION};
 use crate::config::{PairKernelChoice, RunConfig};
 use crate::coordinator::messages::{Message, PeerAddr, SubsetShip, FOLD_KEEP};
 use crate::data::Dataset;
@@ -82,12 +103,21 @@ pub const CHAOS_EXIT_ON_FOLD_ENV: &str = "DEMST_CHAOS_EXIT_ON_FOLD";
 /// How long a fold directive waits for the expected peer partials before
 /// degrading to `FoldDone { ok: false }` (the worker then keeps everything
 /// that did arrive and reports it in its `WorkerDone` for the leader to
-/// fold — exactly-once either way, because ⊕ is idempotent).
+/// fold — exactly-once either way, because ⊕ is idempotent). This is the
+/// fallback for liveness-disabled runs; with liveness on, the wait is
+/// `liveness / 2` so the degrade always lands before the leader's own
+/// read deadline would trip on the silent `FoldDone`.
 const FOLD_WAIT: Duration = Duration::from_secs(30);
 
-/// Peer-link connect timeout (a dead anchor should degrade to `PairFail`
-/// promptly, not hang the deck).
-const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Client-side peer-link settings (threaded from `WorkerOptions` + the
+/// handshake `Setup` into the fetch/ship paths).
+#[derive(Clone, Copy)]
+struct PeerCfg {
+    /// a dead anchor should degrade to `PairFail` promptly, not hang the deck
+    connect_timeout: Duration,
+    /// read deadline on fetch replies (None = wait forever)
+    read_deadline: Option<Duration>,
+}
 
 /// State shared between the worker's main loop and its peer-listener
 /// threads. The listener serves two frame kinds, both independent of the
@@ -152,17 +182,33 @@ fn spawn_peer_server(listener: TcpListener, peer: Arc<PeerState>) -> std::thread
 }
 
 /// One accepted peer connection: `PeerHello` first, then fetches and fold
-/// ships until the peer hangs up.
+/// ships until the peer hangs up. Reads are bounded (short deadline,
+/// re-armed against the shutdown flag) so a silent peer cannot strand this
+/// handler past the worker's own shutdown.
 fn serve_peer_conn(mut conn: TcpStream, peer: &PeerState) -> Result<()> {
     conn.set_nodelay(true).ok();
-    match wire::decode(&wire::read_frame(&mut conn)?, None)? {
+    conn.set_read_timeout(Some(Duration::from_millis(250))).ok();
+    let read_polled = |conn: &mut TcpStream, peer: &PeerState| -> std::io::Result<Vec<u8>> {
+        loop {
+            match wire::read_frame_io(conn) {
+                Err(e)
+                    if super::is_timeout_kind(e.kind())
+                        && !peer.shutdown.load(Ordering::Relaxed) =>
+                {
+                    continue;
+                }
+                other => return other,
+            }
+        }
+    };
+    match wire::decode(&read_polled(&mut conn, peer).context("reading PeerHello")?, None)? {
         Message::PeerHello { .. } => {}
         other => bail!("peer link opened without PeerHello: {other:?}"),
     }
     loop {
-        let frame = match wire::read_frame(&mut conn) {
+        let frame = match read_polled(&mut conn, peer) {
             Ok(f) => f,
-            Err(_) => return Ok(()), // EOF / reset: peer is done with us
+            Err(_) => return Ok(()), // EOF / reset / shutdown: peer is done with us
         };
         match wire::decode(&frame, None)? {
             Message::TreeFetch { part } => {
@@ -199,6 +245,7 @@ fn fetch_routed(
     book: Option<&(Vec<PeerAddr>, Vec<u16>)>,
     conns: &mut HashMap<u16, TcpStream>,
     peer: &PeerState,
+    cfg: PeerCfg,
 ) -> Result<Vec<Edge>> {
     let (peers, builders) = book.ok_or_else(|| anyhow!("routed ship before PeerBook"))?;
     let b = *builders
@@ -216,12 +263,23 @@ fn fetch_routed(
     if b == FOLD_KEEP {
         bail!("subset {part} has no peer builder (leader-built)");
     }
+    if chaos::peer_fetch_denied() {
+        bail!("chaos: peer fetch for subset {part} denied (DEMST_CHAOS_PEER_DENY)");
+    }
     let fetched = (|| -> Result<Vec<Edge>> {
-        let conn = peer_conn(b, my_id, peers, conns, peer)?;
+        let conn = peer_conn(b, my_id, peers, conns, peer, cfg)?;
         let fetch = wire::encode(&Message::TreeFetch { part })?;
         wire::write_frame(conn, &fetch)?;
         peer.tx_bytes.fetch_add(fetch.len() as u64, Ordering::Relaxed);
-        match wire::decode(&wire::read_frame(conn)?, None)? {
+        let reply = match wire::read_frame_io(conn) {
+            Ok(f) => f,
+            Err(e) if super::is_timeout_kind(e.kind()) => bail!(
+                "builder {b} {}: no TreeShip within the read deadline",
+                super::STALL_MARK
+            ),
+            Err(e) => return Err(e).context("reading TreeShip"),
+        };
+        match wire::decode(&reply, None)? {
             Message::TreeShip { part: p, fold: false, edges } if p == part => Ok(edges),
             other => bail!("expected TreeShip({part}), got {other:?}"),
         }
@@ -233,12 +291,15 @@ fn fetch_routed(
 }
 
 /// Get (or open, with a `PeerHello`) the cached connection to worker `to`.
+/// Fresh links take `cfg.read_deadline` so a fetch against a stalled
+/// builder degrades to `PairFail` instead of hanging the deck.
 fn peer_conn<'a>(
     to: u16,
     my_id: u16,
     peers: &[PeerAddr],
     conns: &'a mut HashMap<u16, TcpStream>,
     peer: &PeerState,
+    cfg: PeerCfg,
 ) -> Result<&'a mut TcpStream> {
     if !conns.contains_key(&to) {
         let addr = peers
@@ -247,10 +308,13 @@ fn peer_conn<'a>(
         if addr.port == 0 {
             bail!("worker {to} advertises no peer listener");
         }
-        let mut conn =
-            TcpStream::connect_timeout(&SocketAddr::new(addr.ip, addr.port), PEER_CONNECT_TIMEOUT)
-                .with_context(|| format!("connecting peer link to worker {to}"))?;
+        let mut conn = TcpStream::connect_timeout(
+            &SocketAddr::new(addr.ip, addr.port),
+            cfg.connect_timeout,
+        )
+        .with_context(|| format!("connecting peer link to worker {to}"))?;
         conn.set_nodelay(true).ok();
+        conn.set_read_timeout(cfg.read_deadline).ok();
         let hello = wire::encode(&Message::PeerHello { from: my_id })?;
         wire::write_frame(&mut conn, &hello).context("sending PeerHello")?;
         peer.tx_bytes.fetch_add(hello.len() as u64, Ordering::Relaxed);
@@ -267,10 +331,11 @@ fn ship_fold(
     book: Option<&(Vec<PeerAddr>, Vec<u16>)>,
     conns: &mut HashMap<u16, TcpStream>,
     peer: &PeerState,
+    cfg: PeerCfg,
 ) -> Result<()> {
     let (peers, _) = book.ok_or_else(|| anyhow!("FoldShip before PeerBook"))?;
     let shipped = (|| -> Result<()> {
-        let conn = peer_conn(to, my_id, peers, conns, peer)?;
+        let conn = peer_conn(to, my_id, peers, conns, peer, cfg)?;
         let frame = wire::encode(&Message::TreeShip { part: my_id as u32, fold: true, edges })?;
         wire::write_frame(conn, &frame).context("shipping fold partial")?;
         peer.tx_bytes.fetch_add(frame.len() as u64, Ordering::Relaxed);
@@ -311,8 +376,11 @@ pub struct WorkerOptions {
     /// keep retrying the connect for this long (leaders routinely bind
     /// after their workers start)
     pub connect_timeout: Duration,
-    /// initial retry backoff; doubles per attempt, capped at 2 s
+    /// initial retry backoff; doubles per attempt (±25% jitter), capped at 2 s
     pub connect_backoff: Duration,
+    /// peer-link (worker↔worker) connect timeout — a dead anchor should
+    /// degrade the routed job to `PairFail` promptly, not hang the deck
+    pub peer_connect_timeout: Duration,
     /// shard residency: manifest plus the subset ids to load locally
     pub shards: Option<(std::path::PathBuf, Vec<u32>)>,
 }
@@ -322,6 +390,7 @@ impl Default for WorkerOptions {
         Self {
             connect_timeout: Duration::from_secs(10),
             connect_backoff: Duration::from_millis(100),
+            peer_connect_timeout: Duration::from_secs(5),
             shards: None,
         }
     }
@@ -364,7 +433,7 @@ pub fn run_with(addr: &str, opts: &WorkerOptions) -> Result<WorkerReport> {
         None => None,
     };
     let stream = connect_with_retry(addr, opts.connect_timeout, opts.connect_backoff)?;
-    serve_with(stream, loaded)
+    serve_with(stream, loaded, opts)
 }
 
 /// A worker's locally loaded shard set, verified against its manifest.
@@ -392,10 +461,19 @@ pub fn load_shards(manifest_path: &Path, ids: &[u32]) -> Result<LoadedShards> {
 /// leader's bind, so a refused connection is retried until `window` lapses,
 /// with the sleep between attempts starting at `backoff` and doubling up to
 /// a 2 s cap (bounded backoff — cheap while racing a bind, polite while a
-/// leader restarts).
+/// leader restarts). Each sleep is jittered ±25% so a fleet of workers
+/// restarted together does not hammer the leader's accept queue in
+/// lockstep (anti-thundering-herd).
 pub fn connect_with_retry(addr: &str, window: Duration, backoff: Duration) -> Result<TcpStream> {
     const BACKOFF_CAP: Duration = Duration::from_secs(2);
     let t0 = Instant::now();
+    // Per-process jitter stream: pid ⊕ clock nanos, so simultaneously
+    // spawned workers still decorrelate.
+    let seed = u64::from(std::process::id())
+        ^ std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map_or(0, |d| u64::from(d.subsec_nanos()));
+    let mut rng = crate::util::prng::Pcg64::seeded(seed | 1);
     let mut pause = backoff.max(Duration::from_millis(1)).min(BACKOFF_CAP);
     loop {
         match TcpStream::connect(addr) {
@@ -406,7 +484,8 @@ pub fn connect_with_retry(addr: &str, window: Duration, backoff: Duration) -> Re
                         format!("could not connect to leader at {addr} within {window:?}")
                     });
                 }
-                std::thread::sleep(pause.min(window.saturating_sub(t0.elapsed())));
+                let jittered = pause.mul_f64(0.75 + 0.5 * f64::from(rng.next_f32()));
+                std::thread::sleep(jittered.min(window.saturating_sub(t0.elapsed())));
                 pause = (pause * 2).min(BACKOFF_CAP);
             }
         }
@@ -415,13 +494,49 @@ pub fn connect_with_retry(addr: &str, window: Duration, backoff: Duration) -> Re
 
 /// Serve one handshaken connection until `Shutdown` (unsharded).
 pub fn serve(stream: TcpStream) -> Result<WorkerReport> {
-    serve_with(stream, None)
+    serve_with(stream, None, &WorkerOptions::default())
+}
+
+/// Leader-link frame reads, optionally through the chaos wrapper, under an
+/// explicit payload cap (the handshake uses the tighter
+/// [`wire::MAX_HANDSHAKE_PAYLOAD`]).
+fn link_read_capped(
+    stream: &mut TcpStream,
+    chaos: &mut Option<ChaosLink>,
+    cap: u32,
+) -> std::io::Result<Vec<u8>> {
+    match chaos {
+        Some(c) => c.read_frame(stream),
+        None => wire::read_frame_capped_io(stream, cap),
+    }
+}
+
+fn link_read(stream: &mut TcpStream, chaos: &mut Option<ChaosLink>) -> std::io::Result<Vec<u8>> {
+    link_read_capped(stream, chaos, wire::MAX_PAYLOAD)
+}
+
+fn link_write(
+    stream: &mut TcpStream,
+    chaos: &mut Option<ChaosLink>,
+    frame: &[u8],
+) -> std::io::Result<()> {
+    match chaos {
+        Some(c) => c.write_frame(stream, frame),
+        None => wire::write_frame(stream, frame),
+    }
 }
 
 /// Serve one connection until `Shutdown`, optionally with pre-loaded
 /// shard residency.
-pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result<WorkerReport> {
+pub fn serve_with(
+    mut stream: TcpStream,
+    loaded: Option<LoadedShards>,
+    opts: &WorkerOptions,
+) -> Result<WorkerReport> {
     stream.set_nodelay(true).ok();
+    // Deterministic fault injection on every leader-link frame (tests and
+    // the chaos-smoke CI matrix); None in production.
+    let mut chaos_link = ChaosLink::from_env()?;
     // Bind the peer listener before Hello so its port can be advertised.
     // Bind failure degrades gracefully: port 0 = "no peer plane here", and
     // the leader falls back to shipping trees itself.
@@ -435,13 +550,15 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
         .context("setting handshake timeout")?;
-    wire::write_frame(
+    link_write(
         &mut stream,
+        &mut chaos_link,
         &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port }),
     )
     .context("sending Hello")?;
     let setup_frame =
-        wire::read_frame(&mut stream).context("reading Setup (is the peer a demst leader?)")?;
+        link_read_capped(&mut stream, &mut chaos_link, wire::MAX_HANDSHAKE_PAYLOAD)
+            .context("reading Setup (is the peer a demst leader?)")?;
     let setup = wire::decode_setup(&setup_frame)?;
     // Sharded-vs-unsharded agreement must fail HERE, before any job frame:
     // a worker whose shard files were cut from a different partition (or
@@ -460,24 +577,46 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
         ),
         _ => {}
     }
-    wire::write_frame(
-        &mut stream,
-        &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
-    )
-    .context("sending SetupAck")?;
     let shard_ids: Vec<u32> = match &loaded {
         Some(l) => l.shards.iter().map(|s| s.part).collect(),
         None => Vec::new(),
     };
-    wire::write_frame(
-        &mut stream,
-        &wire::encode_shard_advertise(&ShardAdvertise {
-            worker_id: setup.worker_id,
-            shard_ids,
-        })?,
-    )
-    .context("sending ShardAdvertise")?;
-    stream.set_read_timeout(None).context("clearing handshake timeout")?;
+    let advertise = wire::encode_shard_advertise(&ShardAdvertise {
+        worker_id: setup.worker_id,
+        shard_ids,
+    })?;
+    if setup.mid_run {
+        // Joining an already-running leader: versioned Join in place of the
+        // SetupAck, then wait for the AdmitAck before serving — the engine
+        // only opens a deck for us once the leader confirms the admission.
+        link_write(
+            &mut stream,
+            &mut chaos_link,
+            &wire::encode_join(&Join { worker_id: setup.worker_id, version: WIRE_VERSION }),
+        )
+        .context("sending Join")?;
+        link_write(&mut stream, &mut chaos_link, &advertise).context("sending ShardAdvertise")?;
+        let ack_frame = link_read_capped(&mut stream, &mut chaos_link, wire::MAX_HANDSHAKE_PAYLOAD)
+            .context("reading AdmitAck")?;
+        let ack = wire::decode_admit_ack(&ack_frame)?;
+        if ack.worker_id != setup.worker_id {
+            bail!("leader admitted id {} but assigned {}", ack.worker_id, setup.worker_id);
+        }
+    } else {
+        link_write(
+            &mut stream,
+            &mut chaos_link,
+            &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+        )
+        .context("sending SetupAck")?;
+        link_write(&mut stream, &mut chaos_link, &advertise).context("sending ShardAdvertise")?;
+    }
+    // From here on the deadline is the liveness timeout (None = disabled):
+    // the leader heartbeats idle links, so silence past it means a stalled
+    // or dead leader — better to exit loudly than hang forever.
+    let liveness =
+        (setup.liveness_ms > 0).then(|| Duration::from_millis(u64::from(setup.liveness_ms)));
+    stream.set_read_timeout(liveness).context("setting link read deadline")?;
 
     let kind = wire::metric_from_code(setup.metric)?;
     let pair_kernel = wire::pair_kernel_from_code(setup.pair_kernel)?;
@@ -498,6 +637,10 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     let peer_accept = peer_listener.map(|l| spawn_peer_server(l, Arc::clone(&peer)));
     let mut peer_book: Option<(Vec<PeerAddr>, Vec<u16>)> = None;
     let mut peer_conns: HashMap<u16, TcpStream> = HashMap::new();
+    let peer_cfg = PeerCfg { connect_timeout: opts.peer_connect_timeout, read_deadline: liveness };
+    // With liveness on, a fold degrade must land before the leader's own
+    // deadline trips on the silent FoldDone — so wait at most half of it.
+    let fold_wait = liveness.map_or(FOLD_WAIT, |t| (t / 2).max(Duration::from_millis(1)));
 
     let mut store: Vec<Option<Slot>> = Vec::new();
     store.resize_with(setup.part_sizes.len(), || None);
@@ -539,10 +682,20 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
     let mut panel_perf = PanelPerf::default();
 
     loop {
-        let frame = wire::read_frame(&mut stream).context("reading job frame")?;
+        let frame = match link_read(&mut stream, &mut chaos_link) {
+            Ok(f) => f,
+            Err(e) if super::is_timeout_kind(e.kind()) => bail!(
+                "worker {}: leader link {}: no frame within the read deadline",
+                setup.worker_id,
+                super::STALL_MARK
+            ),
+            Err(e) => return Err(e).context("reading job frame"),
+        };
         report.bytes_rx += frame.len() as u64;
         let msg = wire::decode(&frame, Some(&ctx))?;
         let reply = match msg {
+            // Keepalive from the leader: exists only to arm our deadline.
+            Message::Heartbeat => continue,
             Message::LocalJob { part, global_ids, points } => {
                 let t = Instant::now();
                 let aux = block.prepare(points.as_slice(), points.n, points.d);
@@ -608,6 +761,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                             peer_book.as_ref(),
                             &mut peer_conns,
                             &peer,
+                            peer_cfg,
                         ) {
                             Ok(t) => absorb(
                                 &mut store,
@@ -634,7 +788,8 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                     // The job was NOT executed: hand it back to the leader's
                     // exactly-once lane for a tree-inline re-plan.
                     let frame = wire::encode(&Message::PairFail { job_id: job.id })?;
-                    wire::write_frame(&mut stream, &frame).context("sending PairFail")?;
+                    link_write(&mut stream, &mut chaos_link, &frame)
+                        .context("sending PairFail")?;
                     report.bytes_tx += frame.len() as u64;
                     continue;
                 }
@@ -729,7 +884,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                 // Wait for the expected peer partials (they were confirmed
                 // shipped before this directive was sent, so the wait is a
                 // delivery race, not a schedule dependency).
-                let deadline = Instant::now() + FOLD_WAIT;
+                let deadline = Instant::now() + fold_wait;
                 let mut inbox = peer.inbox.lock().unwrap();
                 while (inbox.len() as u16) < expect && Instant::now() < deadline {
                     let left = deadline.saturating_duration_since(Instant::now());
@@ -757,6 +912,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                         peer_book.as_ref(),
                         &mut peer_conns,
                         &peer,
+                        peer_cfg,
                     ) {
                         Ok(()) => {}
                         Err(e) => {
@@ -798,7 +954,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
                 let frame = wire::encode(&done)?;
                 // Best-effort: a leader that already gave up must not turn a
                 // clean drain into a worker error.
-                if wire::write_frame(&mut stream, &frame).is_ok() {
+                if link_write(&mut stream, &mut chaos_link, &frame).is_ok() {
                     report.bytes_tx += frame.len() as u64;
                 }
                 peer.shutdown.store(true, Ordering::Relaxed);
@@ -811,7 +967,7 @@ pub fn serve_with(mut stream: TcpStream, loaded: Option<LoadedShards>) -> Result
             other => bail!("unexpected frame from leader: {other:?}"),
         };
         let frame = wire::encode(&reply)?;
-        wire::write_frame(&mut stream, &frame).context("sending reply")?;
+        link_write(&mut stream, &mut chaos_link, &frame).context("sending reply")?;
         report.bytes_tx += frame.len() as u64;
     }
 }
@@ -1019,7 +1175,9 @@ mod tests {
             kernel: 0,
             pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
             reduce_tree: false,
+            mid_run: false,
             manifest: 0,
+            liveness_ms: 0,
             part_sizes: part_sizes.clone(),
             artifacts_dir: String::new(),
         };
@@ -1124,6 +1282,8 @@ mod tests {
             kernel: 0,
             pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
             reduce_tree: false,
+            mid_run: false,
+            liveness_ms: 0,
             manifest: fingerprint,
             part_sizes: part_sizes.clone(),
             artifacts_dir: String::new(),
@@ -1208,6 +1368,8 @@ mod tests {
             kernel: 0,
             pair_kernel: 0,
             reduce_tree: false,
+            mid_run: false,
+            liveness_ms: 0,
             manifest: 0xdead_0000_0000_0001, // some other partition run
             part_sizes: vec![12, 12],
             artifacts_dir: String::new(),
@@ -1215,5 +1377,58 @@ mod tests {
         wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
         let err = worker.join().unwrap().unwrap_err().to_string();
         assert!(err.contains("manifest mismatch"), "{err}");
+    }
+
+    /// A worker handed a `mid_run` Setup answers with the versioned
+    /// `Join` + `ShardAdvertise`, waits for `AdmitAck`, skips heartbeats,
+    /// and then serves exactly like a startup worker.
+    #[test]
+    fn mid_run_worker_joins_and_ignores_heartbeats() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || run(&addr.to_string(), Duration::from_secs(5)));
+
+        let (mut s, _) = listener.accept().unwrap();
+        s.set_nodelay(true).ok();
+        wire::decode_hello(&wire::read_frame(&mut s).unwrap()).unwrap();
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: 3,
+            n: 8,
+            d: 2,
+            metric: 0,
+            kernel: 0,
+            pair_kernel: 0,
+            reduce_tree: false,
+            mid_run: true,
+            manifest: 0,
+            liveness_ms: 0,
+            part_sizes: vec![4, 4],
+            artifacts_dir: String::new(),
+        };
+        wire::write_frame(&mut s, &wire::encode_setup(&setup).unwrap()).unwrap();
+        let join = wire::decode_join(&wire::read_frame(&mut s).unwrap()).unwrap();
+        assert_eq!((join.worker_id, join.version), (3, WIRE_VERSION));
+        let adv = wire::decode_shard_advertise(&wire::read_frame(&mut s).unwrap()).unwrap();
+        assert_eq!(adv.worker_id, 3);
+        assert!(adv.shard_ids.is_empty());
+        wire::write_frame(
+            &mut s,
+            &wire::encode_admit_ack(&wire::AdmitAck { worker_id: 3 }),
+        )
+        .unwrap();
+
+        // heartbeats are transparent: the worker must still answer Shutdown
+        wire::write_frame(&mut s, &wire::encode(&Message::Heartbeat).unwrap()).unwrap();
+        wire::write_frame(&mut s, &wire::encode(&Message::Heartbeat).unwrap()).unwrap();
+        wire::write_frame(&mut s, &wire::encode(&Message::Shutdown).unwrap()).unwrap();
+        match wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap() {
+            Message::WorkerDone { worker, jobs_run, .. } => {
+                assert_eq!((worker, jobs_run), (3, 0));
+            }
+            other => panic!("expected WorkerDone, got {other:?}"),
+        }
+        let report = worker.join().unwrap().unwrap();
+        assert_eq!(report.worker_id, 3);
     }
 }

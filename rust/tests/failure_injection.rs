@@ -295,6 +295,156 @@ fn killed_worker_mid_ring_fold_recovers_bit_identically() {
     assert_eq!(chaotic.wait().unwrap().code(), Some(114), "mid-fold chaos exit code");
 }
 
+/// Tentpole acceptance: a worker that **stalls** mid-run — chaos `stall`
+/// fault, the process stays alive but never sends another frame, exactly
+/// like a wedged NFS mount or a half-open socket — is detected within
+/// `liveness_timeout` by the leader's per-link read deadline, its claimed
+/// jobs fail over through the exactly-once return lane, and a replacement
+/// `demst worker --connect` started *after* the run began is admitted via
+/// the versioned `Join`/`AdmitAck` handshake and rebalanced onto. The
+/// final tree must be bit-identical to the sim run: liveness + admission
+/// are pure scheduling.
+#[test]
+fn stalled_worker_detected_and_replacement_admitted_mid_run() {
+    use demst::config::{KernelChoice, TransportChoice};
+    use demst::coordinator::run_distributed;
+    use demst::data::generators::uniform;
+    use demst::mst::normalize_tree;
+    use demst::net::{chaos, launch};
+    use demst::util::prng::Pcg64;
+    use std::net::TcpListener;
+
+    let ds = uniform(120, 6, 1.0, Pcg64::seeded(9300));
+    let mut cfg = RunConfig {
+        parts: 6, // 15 pair jobs: plenty outstanding when the stall trips
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        ..Default::default()
+    };
+    let sim = run_distributed(&ds, &cfg).unwrap();
+
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    // Short deadline so detection is fast under test, but still orders of
+    // magnitude above a single n=120 pair job's compute time — the
+    // deadline must only ever trip on the genuinely stalled link.
+    cfg.net.liveness_timeout_ms = 1_500;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut healthy = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr])
+        .spawn()
+        .unwrap();
+    // Worker tx frames: Hello(1), SetupAck(2), ShardAdvertise(3), then one
+    // reply per job — tx6 wedges the worker just before its third reply,
+    // mid-run with claimed jobs in its pipeline window. Only the leader's
+    // deadline can see this: the socket stays open and the process alive.
+    let mut stalled = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr])
+        .env(chaos::PLAN_ENV, "tx6:stall")
+        .spawn()
+        .unwrap();
+    // Admit a replacement mid-run: by 800 ms the startup handshake (exactly
+    // two accepts) is long done, and the run is still in flight because the
+    // leader's 1.5 s deadline on the stalled link has not tripped yet.
+    let late_addr = addr.clone();
+    let replacement = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(800));
+        std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+            .args(["worker", "--connect", &late_addr])
+            .spawn()
+            .unwrap()
+    });
+
+    let run = launch::serve(&ds, &cfg, &listener)
+        .unwrap_or_else(|e| panic!("stall + admission: run failed: {e:#}"));
+    assert_eq!(
+        normalize_tree(&sim.mst),
+        normalize_tree(&run.mst),
+        "tree must be bit-identical despite the stall and the mid-run admission"
+    );
+    assert!(run.metrics.stalls_detected >= 1, "the liveness deadline must classify the stall");
+    assert!(run.metrics.worker_failures >= 1, "a stall is demoted like a failure");
+    assert!(run.metrics.workers_admitted >= 1, "the late worker must be admitted mid-run");
+    assert!(run.metrics.jobs_reassigned > 0, "the stalled worker's claimed jobs must fail over");
+    assert_eq!(run.metrics.jobs, 15, "every job recorded exactly once");
+    assert!(
+        run.metrics.heartbeats_sent >= 1,
+        "the ≥1.5 s stall window spans several 500 ms pulse ticks over idle links"
+    );
+
+    let mut replacement = replacement.join().unwrap();
+    assert!(replacement.wait().unwrap().success(), "admitted worker must exit 0");
+    assert!(healthy.wait().unwrap().success(), "survivor must exit 0");
+    // The stall fault loops forever by design — reap the process ourselves.
+    stalled.kill().unwrap();
+    stalled.wait().unwrap();
+}
+
+/// PR-7 `PairFail` demotion exercised in-process: with peer routing on, the
+/// executor's first cached-tree fetch is denied pre-dial
+/// (`DEMST_CHAOS_PEER_DENY`), standing in for a builder that died between
+/// planning and fetch. The worker must reply `PairFail` (the job never
+/// ran), the leader must demote both parts to inline shipping and return
+/// the job to the exactly-once lane — no worker is failed, and the re-plan
+/// keeps the tree bit-identical.
+#[test]
+fn denied_peer_fetch_demotes_to_inline_shipping_and_replays_the_job() {
+    use demst::config::{KernelChoice, PairKernelChoice, TransportChoice};
+    use demst::coordinator::run_distributed;
+    use demst::data::generators::uniform;
+    use demst::mst::normalize_tree;
+    use demst::net::{chaos, launch};
+    use demst::util::prng::Pcg64;
+    use std::net::TcpListener;
+
+    let ds = uniform(120, 6, 1.0, Pcg64::seeded(9400));
+    let mut cfg = RunConfig {
+        parts: 6,
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        pair_kernel: PairKernelChoice::BipartiteMerge,
+        peer_route: Some(true),
+        ..Default::default()
+    };
+    let sim = run_distributed(&ds, &cfg).unwrap();
+
+    cfg.transport = TransportChoice::Tcp;
+    cfg.listen = Some("127.0.0.1:0".into());
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut healthy = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr])
+        .spawn()
+        .unwrap();
+    // Each worker builds 3 of the 6 local trees, so its deck is mostly
+    // cross-builder pairs — the first routed fetch in this process is
+    // denied before the dial, as if the building anchor had just died.
+    let mut denied = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr])
+        .env(chaos::PEER_DENY_ENV, "1")
+        .spawn()
+        .unwrap();
+
+    let run = launch::serve(&ds, &cfg, &listener)
+        .unwrap_or_else(|e| panic!("peer-deny: run failed: {e:#}"));
+    assert_eq!(
+        normalize_tree(&sim.mst),
+        normalize_tree(&run.mst),
+        "tree must be bit-identical despite the demoted route"
+    );
+    assert_eq!(run.metrics.jobs, 15, "every job recorded exactly once");
+    assert!(
+        run.metrics.jobs_reassigned >= 1,
+        "the failed-fetch job must return to the lane for a tree-inline re-plan"
+    );
+    assert_eq!(run.metrics.worker_failures, 0, "a PairFail demotes the route, not the worker");
+    assert_eq!(run.metrics.stalls_detected, 0);
+
+    assert!(healthy.wait().unwrap().success(), "worker must exit 0");
+    assert!(denied.wait().unwrap().success(), "the denied worker continues and exits 0");
+}
+
 #[test]
 fn truncated_npy_rejected() {
     let dir = tmpdir("npy");

@@ -575,6 +575,112 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
 }
 
 #[test]
+fn prop_wire_decoders_survive_hostile_bytes() {
+    // Robustness contract of every frame decoder: arbitrary garbage and
+    // bit-flipped-but-plausible frames produce a clean `Err` (or a benign
+    // reinterpretation) — never a panic, never an allocation driven by an
+    // attacker-controlled length field. The leader runs these decoders
+    // against bytes from the open admission listener, so "malformed input
+    // is an error, not a crash" is a liveness property of the whole fleet.
+    use demst::coordinator::messages::Message;
+    use demst::net::wire::{
+        self, AdmitAck, Hello, Join, Setup, SetupAck, ShardAdvertise, WireCtx, WIRE_VERSION,
+    };
+
+    // every decoder the transport feeds raw frames into
+    fn poke_all(frame: &[u8], ctx: &WireCtx) {
+        let _ = wire::decode(frame, Some(ctx));
+        let _ = wire::decode(frame, None);
+        let _ = wire::decode_hello(frame);
+        let _ = wire::decode_setup(frame);
+        let _ = wire::decode_setup_ack(frame);
+        let _ = wire::decode_join(frame);
+        let _ = wire::decode_admit_ack(frame);
+        let _ = wire::decode_shard_advertise(frame);
+    }
+
+    Runner::new("wire hostile bytes", 0xB7, 80).run(|g| {
+        let parts = g.usize_in(2..5);
+        let ctx = WireCtx {
+            d: g.usize_in(1..6),
+            part_sizes: (0..parts).map(|_| g.usize_in(1..6) as u32).collect(),
+        };
+
+        // 1) pure garbage, every length from empty to past the header
+        let len = g.usize_in(0..64);
+        let garbage: Vec<u8> = (0..len).map(|_| g.rng().next_u64() as u8).collect();
+        poke_all(&garbage, &ctx);
+
+        // 2) a valid frame with one random bit flipped — tag, length
+        //    fields, and payload corruption all land here eventually
+        let job_id = g.rng().next_u64() as u32;
+        let edges: Vec<Edge> = (0..g.usize_in(0..6))
+            .map(|k| Edge::new(2 * k as u32, 2 * k as u32 + 1, g.f32_in(0.0, 9.0)))
+            .collect();
+        let setup = Setup {
+            version: WIRE_VERSION,
+            worker_id: g.usize_in(0..8) as u16,
+            n: g.usize_in(1..100) as u32,
+            d: ctx.d as u16,
+            metric: 0,
+            kernel: 0,
+            pair_kernel: 0,
+            reduce_tree: g.bool_p(0.5),
+            mid_run: g.bool_p(0.5),
+            manifest: g.rng().next_u64(),
+            liveness_ms: g.rng().next_u64() as u32,
+            part_sizes: ctx.part_sizes.clone(),
+            artifacts_dir: "artifacts".into(),
+        };
+        let frames: Vec<Vec<u8>> = vec![
+            wire::encode(&Message::Ack { job_id }).unwrap(),
+            wire::encode(&Message::Heartbeat).unwrap(),
+            wire::encode(&Message::Result {
+                job_id,
+                worker: 0,
+                edges: edges.clone(),
+                compute: std::time::Duration::from_micros(7),
+            })
+            .unwrap(),
+            wire::encode(&Message::TreeShip { part: 1, fold: false, edges }).unwrap(),
+            wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 9 }),
+            wire::encode_setup(&setup).unwrap(),
+            wire::encode_setup_ack(&SetupAck { worker_id: 3 }),
+            wire::encode_join(&Join { worker_id: 3, version: WIRE_VERSION }),
+            wire::encode_admit_ack(&AdmitAck { worker_id: 3 }),
+            wire::encode_shard_advertise(&ShardAdvertise {
+                worker_id: 3,
+                shard_ids: vec![0, 2],
+            })
+            .unwrap(),
+        ];
+        for frame in &frames {
+            let mut bent = frame.clone();
+            let bit = g.usize_in(0..bent.len() * 8);
+            bent[bit / 8] ^= 1 << (bit % 8);
+            poke_all(&bent, &ctx);
+            // truncation at any point must also fail cleanly
+            let cut = g.usize_in(0..frame.len());
+            poke_all(&frame[..cut], &ctx);
+        }
+
+        // 3) a forged length prefix must be rejected by the frame reader
+        //    BEFORE any allocation: cap-exceeding lengths are an error
+        let mut forged = wire::encode(&Message::Ack { job_id }).unwrap();
+        forged[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = wire::read_frame_io(&mut std::io::Cursor::new(&forged)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        // the handshake path is capped far tighter still
+        let cap = wire::read_frame_capped_io(
+            &mut std::io::Cursor::new(&forged),
+            wire::MAX_HANDSHAKE_PAYLOAD,
+        )
+        .unwrap_err();
+        assert_eq!(cap.kind(), std::io::ErrorKind::InvalidData, "{cap}");
+    });
+}
+
+#[test]
 fn prop_union_find_laws() {
     Runner::new("union-find", 0xA5, 50).run(|g| {
         let n = g.usize_in(1..200);

@@ -220,7 +220,7 @@ fn worker_connect_retry_times_out() {
     let opts = WorkerOptions {
         connect_timeout: Duration::from_millis(200),
         connect_backoff: Duration::from_secs(5),
-        shards: None,
+        ..Default::default()
     };
     let err = worker::run_with(&addr, &opts).unwrap_err();
     assert!(err.to_string().contains(&addr), "{err:#}");
@@ -415,6 +415,33 @@ fn tcp_sharded_reduce_topologies_bypass_the_leader_bit_identically() {
         assert!(run.metrics.leader_control_bytes > 0, "{tag}: directives are control");
         assert_eq!(run.metrics.worker_failures, 0, "{tag}");
     }
+}
+
+/// The liveness layer (short read deadlines + leader heartbeats) must be
+/// invisible to the data plane: a healthy run under a sub-second deadline
+/// produces the bit-identical tree, reconciles to the same dense byte
+/// model, and demotes nobody.
+#[test]
+fn tcp_liveness_heartbeats_do_not_perturb_the_run() {
+    let ds = float_dataset(909, 56, 5);
+    let mut cfg = base_cfg(4, 2);
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    let sim = run_distributed(&ds, &cfg).unwrap();
+    cfg.net.liveness_timeout_ms = 900; // leader pulses every 300 ms
+    let tcp = tcp_run(&ds, &cfg);
+    assert_eq!(
+        normalize_tree(&sim.mst),
+        normalize_tree(&tcp.mst),
+        "liveness must not change the tree"
+    );
+    // heartbeats are control-plane only: the scatter model still reconciles
+    assert_eq!(
+        sim.metrics.scatter_bytes + sim.metrics.scatter_saved_bytes,
+        tcp.metrics.scatter_bytes + tcp.metrics.scatter_saved_bytes,
+        "heartbeats must never carry data bytes"
+    );
+    assert_eq!(tcp.metrics.worker_failures, 0, "healthy links must not be demoted");
+    assert_eq!(tcp.metrics.stalls_detected, 0);
 }
 
 /// Pipelined dispatch parity: window 1 (strict rendezvous) and window 2

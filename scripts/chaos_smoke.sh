@@ -1,18 +1,23 @@
 #!/usr/bin/env bash
-# Chaos smoke: elastic-worker failover on a real multi-process run, once
-# per ⊕-reduction topology (leader / tree / ring).
+# Chaos smoke: the failure-path matrix on real multi-process runs —
+# every fault × every ⊕-reduction topology (leader / tree / ring):
 #
-# One `demst run --transport tcp` leader plus two externally started
-# `demst worker` processes on 127.0.0.1. Worker 1 is rigged through the
-# DEMST_CHAOS_EXIT_AFTER_JOBS hook to die abruptly — no reply, no shutdown
-# handshake, sockets torn down by the OS, exactly like a SIGKILL — upon
-# receiving its pair job after the halfway mark. Under `tree`/`ring` the
-# surviving fleet also re-routes the worker↔worker fold schedule around
-# the corpse. Asserts, for every topology:
-#   (a) the leader exits 0 (run completed on the surviving worker),
-#   (b) the MST CSV is byte-identical to a `--transport sim` run of the
-#       same seed (checksum printed) — and identical across topologies,
-#   (c) the leader reports the failover (reassigned jobs > 0).
+#   kill-mid-job       worker dies abruptly (SIGKILL-style, no farewell)
+#                      upon receiving a pair job past the halfway mark
+#                      (DEMST_CHAOS_EXIT_AFTER_JOBS)
+#   kill-mid-fold      worker dies at its FoldShip settle point — jobs
+#                      acked, partial MSF shipped nowhere (tree/ring only:
+#                      the leader topology has no fold directive)
+#   stall              worker wedges forever mid-run (DEMST_CHAOS_PLAN
+#                      tx-stall) — the process stays alive, only the
+#                      leader's liveness deadline can see it
+#   admit-replacement  same stall, plus a third `demst worker` started
+#                      after the run began: it must be admitted mid-run
+#                      (Join/AdmitAck) and the run must report it
+#
+# Every leg asserts (a) the leader exits 0, (b) the MST CSV is
+# byte-identical to a `--transport sim` run of the same seed (checksum
+# printed), (c) the leader log reports the expected recovery witness.
 #
 # Run by `make chaos-smoke` / `make bench` and the CI chaos-smoke job.
 set -euo pipefail
@@ -20,9 +25,8 @@ cd "$(dirname "$0")/.."
 
 BIN=${DEMST_BIN:-target/release/demst}
 OUT=${TMPDIR:-/tmp}
-# parts=6 -> 15 pair jobs across 2 workers (~7-8 each); the chaos worker
-# dies on receiving its 4th job, i.e. around 50% of its deck.
-ARGS=(--data blobs --n 180 --d 8 --clusters 4 --parts 6 --workers 2 --seed 13
+# parts=6 -> 15 pair jobs (~7-8 per worker on the 2-worker legs)
+ARGS=(--data blobs --n 180 --d 8 --clusters 4 --parts 6 --seed 13
       --pair-kernel bipartite)
 
 if [ ! -x "$BIN" ]; then
@@ -30,52 +34,128 @@ if [ ! -x "$BIN" ]; then
     exit 2
 fi
 
-"$BIN" run "${ARGS[@]}" --out-mst "$OUT/demst_chaos_sim.csv" > /dev/null
+"$BIN" run "${ARGS[@]}" --workers 2 --out-mst "$OUT/demst_chaos_sim.csv" > /dev/null
 
-for TOPO in leader tree ring; do
-    TARGS=("${ARGS[@]}")
+# run_leg <fault> <topology>
+run_leg() {
+    local FAULT=$1 TOPO=$2
+    local LEG="$FAULT/$TOPO"
+    local WORKERS=2
+    # Mid-fold death at the very last rendezvous has no fleet left to
+    # recover on by design — use 3 workers so survivors stay unsettled.
+    [ "$FAULT" = kill-mid-fold ] && WORKERS=3
+
+    local TARGS=("${ARGS[@]}" --workers "$WORKERS")
     if [ "$TOPO" != "leader" ]; then
         # tree/ring fold worker partials among the fleet (implies --reduce-tree)
         TARGS+=(--reduce-topology "$TOPO")
     fi
+    case "$FAULT" in
+        stall|admit-replacement)
+            # Short deadline so the stall is detected fast; still far above
+            # a single n=180 pair job's compute time.
+            TARGS+=(--liveness-timeout 2) ;;
+    esac
 
-    LOG="$OUT/demst_chaos_leader_$TOPO.log"
+    local LOG="$OUT/demst_chaos_leader_${FAULT}_${TOPO}.log"
+    local CSV="$OUT/demst_chaos_tcp_${FAULT}_${TOPO}.csv"
     : > "$LOG"
     "$BIN" run "${TARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
-        --out-mst "$OUT/demst_chaos_tcp_$TOPO.csv" > "$LOG" 2>&1 &
-    LEADER=$!
+        --out-mst "$CSV" > "$LOG" 2>&1 &
+    local LEADER=$!
 
-    ADDR=""
+    local ADDR=""
     for _ in $(seq 1 150); do
         ADDR=$(sed -n 's/.*listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
         [ -n "$ADDR" ] && break
         sleep 0.1
     done
     if [ -z "$ADDR" ]; then
-        echo "chaos-smoke[$TOPO]: leader never reported its bound address" >&2
+        echo "chaos-smoke[$LEG]: leader never reported its bound address" >&2
         cat "$LOG" >&2
         exit 1
     fi
 
-    DEMST_CHAOS_EXIT_AFTER_JOBS=3 "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
-    W1=$!
-    "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
-    W2=$!
-
-    wait "$LEADER" || { echo "chaos-smoke[$TOPO]: leader failed" >&2; cat "$LOG" >&2; exit 1; }
-    # the chaos worker must have died nonzero; the survivor must exit 0
-    if wait "$W1"; then
-        echo "chaos-smoke[$TOPO]: chaos worker exited 0 — the failure was never injected" >&2
-        exit 1
+    # Worker 1 carries the fault; the rest of the fleet is healthy.
+    local W1 EXPECT_W1=die WITNESS=reassigned
+    case "$FAULT" in
+        kill-mid-job)
+            DEMST_CHAOS_EXIT_AFTER_JOBS=3 "$BIN" worker --connect "$ADDR" \
+                --connect-timeout 15000 &
+            W1=$! ;;
+        kill-mid-fold)
+            # Chaotic worker first: accept order assigns ids and folds
+            # settle ascending — kill the first settler, not the last.
+            DEMST_CHAOS_EXIT_ON_FOLD=1 "$BIN" worker --connect "$ADDR" \
+                --connect-timeout 15000 &
+            W1=$!
+            sleep 0.5 ;;
+        stall|admit-replacement)
+            # tx frames: Hello(1) SetupAck(2) ShardAdvertise(3), 3 local
+            # trees (4-6), then pair replies — tx8 wedges the worker on
+            # its second pair reply, claimed jobs in flight.
+            DEMST_CHAOS_PLAN=tx8:stall "$BIN" worker --connect "$ADDR" \
+                --connect-timeout 15000 &
+            W1=$!
+            EXPECT_W1=wedged
+            WITNESS="liveness stall" ;;
+    esac
+    local HEALTHY=()
+    local i
+    for i in $(seq 2 "$WORKERS"); do
+        "$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+        HEALTHY+=($!)
+    done
+    if [ "$FAULT" = admit-replacement ]; then
+        WITNESS=admitted
+        # Late worker: by now the startup handshake has consumed exactly
+        # $WORKERS accepts, and the leader is still waiting out the
+        # stalled link's 2 s deadline — this one must be admitted.
+        ( sleep 1; "$BIN" worker --connect "$ADDR" --connect-timeout 15000 ) &
+        HEALTHY+=($!)
     fi
-    wait "$W2" || { echo "chaos-smoke[$TOPO]: surviving worker failed" >&2; exit 1; }
+
+    wait "$LEADER" || { echo "chaos-smoke[$LEG]: leader failed" >&2; cat "$LOG" >&2; exit 1; }
+    if [ "$EXPECT_W1" = die ]; then
+        # the chaos worker must have died nonzero
+        if wait "$W1"; then
+            echo "chaos-smoke[$LEG]: chaos worker exited 0 — the failure was never injected" >&2
+            exit 1
+        fi
+    else
+        # the stall fault loops forever by design: the process must still
+        # be alive after the run completed without it — then reap it.
+        if ! kill -0 "$W1" 2>/dev/null; then
+            echo "chaos-smoke[$LEG]: stalled worker is gone — the stall was never injected" >&2
+            exit 1
+        fi
+        kill -9 "$W1" 2>/dev/null || true
+        wait "$W1" 2>/dev/null || true
+    fi
+    local W
+    for W in "${HEALTHY[@]}"; do
+        wait "$W" || { echo "chaos-smoke[$LEG]: healthy worker failed" >&2; cat "$LOG" >&2; exit 1; }
+    done
     cat "$LOG"
 
-    grep -q "reassigned" "$LOG" \
-        || { echo "chaos-smoke[$TOPO]: leader log reports no reassignment" >&2; exit 1; }
+    grep -q "$WITNESS" "$LOG" \
+        || { echo "chaos-smoke[$LEG]: leader log lacks the '$WITNESS' witness" >&2; exit 1; }
 
-    cmp "$OUT/demst_chaos_tcp_$TOPO.csv" "$OUT/demst_chaos_sim.csv" \
-        || { echo "chaos-smoke[$TOPO]: post-failover MST differs from sim" >&2; exit 1; }
-    sha256sum "$OUT/demst_chaos_tcp_$TOPO.csv" \
-        | awk -v t="$TOPO" '{print "chaos-smoke[" t "]: OK, mst checksum " $1}'
+    cmp "$CSV" "$OUT/demst_chaos_sim.csv" \
+        || { echo "chaos-smoke[$LEG]: post-recovery MST differs from sim" >&2; exit 1; }
+    sha256sum "$CSV" \
+        | awk -v l="$LEG" '{print "chaos-smoke[" l "]: OK, mst checksum " $1}'
+}
+
+FAULTS=${DEMST_CHAOS_FAULTS:-kill-mid-job kill-mid-fold stall admit-replacement}
+for FAULT in $FAULTS; do
+    for TOPO in leader tree ring; do
+        if [ "$FAULT" = kill-mid-fold ] && [ "$TOPO" = leader ]; then
+            # not a silent skip: the leader topology has no FoldShip to die at
+            echo "chaos-smoke[kill-mid-fold/leader]: skipped (no fold directive in the gather topology)"
+            continue
+        fi
+        run_leg "$FAULT" "$TOPO"
+    done
 done
+echo "chaos-smoke: full fault x topology matrix passed"

@@ -18,7 +18,8 @@ import sys
 # should be added here in the same PR that starts recording it.
 REQUIRED_SECTIONS = {
     "e7_kernel": {"cheapest_edge", "prim_dense", "panel_simd"},
-    "e8_end_to_end": {"pair_kernel", "stream_fold", "transport", "reduction"},
+    "e8_end_to_end": {"pair_kernel", "stream_fold", "transport", "reduction",
+                      "elasticity"},
 }
 # Rows that must exist *within* a section. The transport section must keep
 # both pipelined-dispatch ablation rows (window=1 rendezvous vs window=2
@@ -31,6 +32,9 @@ REQUIRED_PROVIDERS = {
         # the reduction-topology ablation must keep all three fold schedules
         # (leader-gathered baseline vs worker<->worker binomial tree / ring)
         "reduction": {"leader", "tree", "ring"},
+        # the elasticity section must keep the clean baseline next to both
+        # recovery legs (abrupt kill failover, stall + mid-run admission)
+        "elasticity": {"clean", "failover", "admission"},
     },
 }
 REQUIRED_TOP_KEYS = {"bench", "rows"}
