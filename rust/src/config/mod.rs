@@ -5,7 +5,7 @@ pub mod toml_lite;
 pub mod run_config;
 
 pub use run_config::{
-    DataConfig, KernelChoice, NetConfig, PairKernelChoice, ReduceTopology, RunConfig,
+    DataConfig, KernelChoice, NetConfig, ObsConfig, PairKernelChoice, ReduceTopology, RunConfig,
     TransportChoice,
 };
 pub use toml_lite::{parse_toml, TomlValue};

@@ -166,6 +166,30 @@ impl Default for NetConfig {
     }
 }
 
+/// Observability knobs: span tracing, exporters, live progress. CLI
+/// equivalents: `--trace-out`, `--report-out`, `--quiet`; `DEMST_LOG`
+/// controls the stderr log level separately (an env concern, not config).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// record spans fleet-wide (workers ship theirs back on `WorkerDone`).
+    /// Forced on when `trace_out` is set; off by default so the job hot
+    /// path stays allocation-free.
+    pub trace: bool,
+    /// write the reassembled timeline as Chrome-trace/Perfetto JSON here
+    pub trace_out: Option<PathBuf>,
+    /// write the versioned machine-readable run report here
+    pub report_out: Option<PathBuf>,
+    /// leader-side live progress ticker (auto-disabled when stderr is not
+    /// a tty; `--quiet` forces it off)
+    pub progress: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self { trace: false, trace_out: None, report_out: None, progress: true }
+    }
+}
+
 /// Dataset source configuration.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DataConfig {
@@ -269,6 +293,8 @@ pub struct RunConfig {
     /// knob.
     pub panel_threads: usize,
     pub net: NetConfig,
+    /// observability: span tracing, trace/report exporters, live progress
+    pub obs: ObsConfig,
     /// artifacts dir for the XLA kernel
     pub artifacts_dir: PathBuf,
     /// verify the result against an independent oracle after the run
@@ -300,6 +326,7 @@ impl Default for RunConfig {
             panel_simd: true,
             panel_threads: 0,
             net: NetConfig::default(),
+            obs: ObsConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             verify: false,
         }
@@ -547,6 +574,15 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
         }
         ("net", "peer_connect_timeout_ms") => {
             cfg.net.peer_connect_timeout_ms = get_usize(v)? as u64
+        }
+        ("obs", "trace") => cfg.obs.trace = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?,
+        ("obs", "trace_out") => {
+            cfg.obs.trace_out = Some(PathBuf::from(need_str()?));
+            cfg.obs.trace = true; // an exporter without spans is useless
+        }
+        ("obs", "report_out") => cfg.obs.report_out = Some(PathBuf::from(need_str()?)),
+        ("obs", "progress") => {
+            cfg.obs.progress = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
         }
         _ => bail!("unknown config key"),
     }
@@ -840,6 +876,27 @@ bandwidth = 1e9
         let e = RunConfig::from_toml("[net]\npeer_connect_timeout_ms = 0").unwrap_err();
         assert!(e.to_string().contains("peer_connect_timeout_ms"), "{e:#}");
         assert!(RunConfig::from_toml("[net]\nliveness_timeout_ms = \"soon\"").is_err());
+    }
+
+    #[test]
+    fn obs_keys_parse_and_default_quiet() {
+        let def = RunConfig::default();
+        assert!(!def.obs.trace, "tracing is off by default (hot path stays allocation-free)");
+        assert!(def.obs.trace_out.is_none() && def.obs.report_out.is_none());
+        assert!(def.obs.progress, "progress ticker defaults on (tty-gated at print time)");
+        let cfg = RunConfig::from_toml(
+            "[obs]\ntrace_out = \"trace.json\"\nreport_out = \"run.json\"\nprogress = false",
+        )
+        .unwrap();
+        assert!(cfg.obs.trace, "trace_out implies span recording");
+        assert_eq!(cfg.obs.trace_out.as_deref(), Some(std::path::Path::new("trace.json")));
+        assert_eq!(cfg.obs.report_out.as_deref(), Some(std::path::Path::new("run.json")));
+        assert!(!cfg.obs.progress);
+        // trace can be enabled alone (spans land in RunMetrics, no file)
+        let rec = RunConfig::from_toml("[obs]\ntrace = true").unwrap();
+        assert!(rec.obs.trace && rec.obs.trace_out.is_none());
+        assert!(RunConfig::from_toml("[obs]\ntrace = 3").is_err());
+        assert!(RunConfig::from_toml("[obs]\nbogus = 1").is_err());
     }
 
     #[test]

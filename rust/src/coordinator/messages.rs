@@ -137,6 +137,16 @@ pub enum Message {
         peer_tx_bytes: u64,
         /// peer-plane frames this worker sent (fetch replies + fold ships)
         peer_ships: u32,
+        /// telemetry spans recorded during the run, shipped only when the
+        /// leader's [`crate::net::wire::Setup`] set the trace flag (empty
+        /// otherwise, so trace-off byte models stay exact)
+        spans: Vec<crate::obs::Span>,
+        /// the worker's [`crate::obs::now_ns`] at send time — the leader
+        /// re-bases shipped span timestamps onto its own clock with it
+        now_ns: u64,
+        /// chaos-transport faults this worker's link injected (0 outside
+        /// chaos runs)
+        chaos_faults: u32,
     },
     /// Either direction: header-only liveness keepalive. The leader
     /// multiplexes it over idle links so a worker's read deadline only
@@ -204,6 +214,9 @@ mod tests {
             panel_isa: 0,
             peer_tx_bytes: 0,
             peer_ships: 0,
+            spans: vec![],
+            now_ns: 0,
+            chaos_faults: 0,
         };
         let b = Message::WorkerDone {
             worker: 0,
@@ -220,9 +233,12 @@ mod tests {
             panel_isa: 2,
             peer_tx_bytes: 4096,
             peer_ships: 3,
+            spans: vec![crate::obs::Span::default(); 2],
+            now_ns: 12345,
+            chaos_faults: 1,
         };
-        assert_eq!(a.wire_bytes(), 96, "header 16 + 80-byte stats block");
-        assert_eq!(b.wire_bytes(), 96 + 60);
+        assert_eq!(a.wire_bytes(), 112, "header 16 + 96-byte stats block");
+        assert_eq!(b.wire_bytes(), 112 + 2 * 32 + 60, "spans ride between stats and tree");
     }
 
     #[test]

@@ -129,6 +129,15 @@ pub struct RunMetrics {
     /// activated by the engine (late joins that never got a deck don't
     /// count — they are farewelled with a Shutdown instead)
     pub workers_admitted: u32,
+    /// faults the deterministic chaos transport actually fired this run
+    /// (worker-counted, shipped back on `WorkerDone`) — 0 outside
+    /// chaos-smoke runs
+    pub chaos_faults_injected: u64,
+    /// the reassembled fleet-wide span timeline (empty unless the run
+    /// recorded with `[obs] trace`/`--trace-out`): worker spans arrive
+    /// piggybacked on `WorkerDone` and are re-based onto the leader's
+    /// clock; leader/in-process spans drain from the thread recorders
+    pub spans: Vec<crate::obs::Span>,
 }
 
 impl RunMetrics {
@@ -246,6 +255,9 @@ impl RunMetrics {
         if self.heartbeats_sent > 0 {
             s.push_str(&format!(" heartbeats={}", self.heartbeats_sent));
         }
+        if self.chaos_faults_injected > 0 {
+            s.push_str(&format!(" chaos_faults={}", self.chaos_faults_injected));
+        }
         if let Some(note) = &self.kernel_fallback {
             s.push_str(&format!(" (fallback: {note})"));
         }
@@ -358,6 +370,19 @@ impl RunMetrics {
         s
     }
 
+    /// Grow `worker_busy` to the *final* fleet size: the startup ranks
+    /// plus every worker admitted mid-run. Some paths (a worker admitted
+    /// after its deck drained, or admitted and immediately idle) never
+    /// touch the admitted rank's busy slot, so the per-worker report would
+    /// silently omit it — the roster printed by `demst run` must be the
+    /// fleet that finished the run, not the one that started it.
+    pub fn finalize_roster(&mut self, n_start: usize) {
+        let roster = n_start + self.workers_admitted as usize;
+        if self.worker_busy.len() < roster {
+            self.worker_busy.resize(roster, Duration::ZERO);
+        }
+    }
+
     /// Per-phase breakdown (local-MST / pair / reduce timing and eval
     /// split) — the measurement surface for the bipartite-merge kernel.
     pub fn phase_summary(&self) -> String {
@@ -461,6 +486,38 @@ mod tests {
         assert!(s.contains("stalls=1"), "{s}");
         assert!(s.contains("admitted=1"), "{s}");
         assert!(s.contains("heartbeats=12"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_chaos_faults_only_when_injected() {
+        assert!(!RunMetrics::default().summary().contains("chaos_faults="));
+        let m = RunMetrics { chaos_faults_injected: 3, ..Default::default() };
+        assert!(m.summary().contains("chaos_faults=3"), "{}", m.summary());
+    }
+
+    #[test]
+    fn finalize_roster_covers_workers_admitted_mid_run() {
+        // 2 startup ranks, 1 admitted mid-run that never logged busy time:
+        // the printed roster must still have 3 slots.
+        let mut m = RunMetrics {
+            worker_busy: vec![Duration::from_secs(1), Duration::from_secs(2)],
+            workers_admitted: 1,
+            ..Default::default()
+        };
+        m.finalize_roster(2);
+        assert_eq!(m.worker_busy.len(), 3);
+        assert_eq!(m.worker_busy[2], Duration::ZERO);
+        // Already-sized rosters (the admission path that did resize) are
+        // left alone — no truncation, no double-extend.
+        let mut sized = RunMetrics {
+            worker_busy: vec![Duration::from_secs(1); 4],
+            workers_admitted: 1,
+            ..Default::default()
+        };
+        sized.finalize_roster(3);
+        assert_eq!(sized.worker_busy.len(), 4);
+        sized.finalize_roster(2);
+        assert_eq!(sized.worker_busy.len(), 4, "never shrink a measured roster");
     }
 
     #[test]

@@ -592,6 +592,16 @@ fn execute_pooled_inner(
         metrics.panel_fallback = simd::panel_fallback_note(cfg.panel_simd);
     }
 
+    // Telemetry: arm the span recorder for the whole run. The leader
+    // thread holds the token; every pooled thread adopts it at spawn.
+    // Off (the default) costs each span site one relaxed atomic load and
+    // zero allocations, so the job hot path does not move.
+    let obs_run = cfg.obs.trace.then(crate::obs::begin_run);
+    // Leader-side gather log (job id, runner, compute, receive time):
+    // jobs whose runner dies before the shutdown rendezvous never ship a
+    // span block, so their Job spans are synthesized from this at the end.
+    let mut job_log: Vec<(u32, u16, u64, u64)> = Vec::new();
+
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
     // through the same worker pool — at its anchor when affinity is on, so
     // the anchor already holds the subset when the pair phase starts.
@@ -622,6 +632,7 @@ fn execute_pooled_inner(
                 remote,
                 &fleet,
                 &witness,
+                obs_run,
             )?;
             builders = anchors;
             for (w, b) in phase_busy.into_iter().enumerate() {
@@ -720,6 +731,9 @@ fn execute_pooled_inner(
                 Some(tcp) => {
                     let cache = bip_ref.map(|(_, c)| c);
                     scope.spawn(move || {
+                        if let Some(t) = obs_run {
+                            crate::obs::adopt(t);
+                        }
                         pooled_worker_remote(
                             w,
                             ds,
@@ -743,6 +757,9 @@ fn execute_pooled_inner(
                 None => {
                     let ds = ds.expect("in-process execution holds the dataset");
                     scope.spawn(move || {
+                        if let Some(t) = obs_run {
+                            crate::obs::adopt(t);
+                        }
                         pooled_worker_local(
                             w,
                             ds,
@@ -772,6 +789,9 @@ fn execute_pooled_inner(
         // collected here and summarized once the fleet has drained, so a
         // late frame cannot leave a first-writer's label standing.
         let mut fleet_isas: Vec<u8> = Vec::new();
+        // Live ticker: tty-gated inside, `--quiet` turns the config side
+        // off. One `\r` line, redrawn at most every 100 ms.
+        let mut progress = crate::obs::Progress::new(plan_ref.n_jobs(), cfg.obs.progress);
         let mut done = 0usize;
         let mut expected_done = n_workers;
         // links already driven: everything below this index has a driver
@@ -850,8 +870,20 @@ fn execute_pooled_inner(
                     let tx = tx_admit.clone().expect("remote run holds the admission sender");
                     let resident = &residents[w];
                     let cache = bip_ref.map(|(_, c)| c);
-                    eprintln!("leader: worker {w} admitted mid-run; rebalancing onto it");
+                    crate::obs::log!(
+                        info,
+                        "leader: worker {w} admitted mid-run; rebalancing onto it"
+                    );
+                    crate::obs::instant(
+                        crate::obs::SpanKind::Admit,
+                        crate::obs::trace::LEADER_TRACK,
+                        w as u32,
+                        w as u64,
+                    );
                     scope.spawn(move || {
+                        if let Some(t) = obs_run {
+                            crate::obs::adopt(t);
+                        }
                         pooled_worker_remote(
                             w,
                             ds,
@@ -873,9 +905,33 @@ fn execute_pooled_inner(
                     });
                 }
             }
+            if progress.active() {
+                let done_jobs = if remote.is_some() {
+                    fleet.done_jobs.load(Ordering::SeqCst)
+                } else {
+                    metrics.jobs as usize
+                };
+                progress.tick(
+                    done_jobs,
+                    counters.snapshot().1,
+                    fleet.stalls.load(Ordering::Relaxed),
+                    metrics.workers_admitted,
+                );
+            }
             let Some(msg) = msg else { continue };
             match msg {
-                Message::Result { edges, compute, .. } => {
+                Message::Result { job_id, worker, edges, compute } => {
+                    if remote.is_some() && obs_run.is_some() {
+                        // Evidence for span synthesis: if this job's runner
+                        // dies before its rendezvous, the span block never
+                        // arrives and this row becomes the job's timeline.
+                        job_log.push((
+                            job_id,
+                            worker as u16,
+                            compute.as_nanos() as u64,
+                            crate::obs::now_ns(),
+                        ));
+                    }
                     metrics.jobs += 1;
                     metrics.job_times.push(compute);
                     metrics.union_edges += edges.len();
@@ -902,7 +958,27 @@ fn execute_pooled_inner(
                     panel_isa,
                     peer_tx_bytes,
                     peer_ships,
+                    spans,
+                    now_ns,
+                    chaos_faults,
                 } => {
+                    metrics.chaos_faults_injected += u64::from(chaos_faults);
+                    if !spans.is_empty() {
+                        // Re-base the worker process's monotonic clock onto
+                        // the leader's: the worker stamped `now_ns` as it
+                        // sent, so receive-time minus that is the offset
+                        // (inflated by one-way latency — fine for a trace).
+                        let offset = if now_ns == 0 {
+                            0
+                        } else {
+                            i128::from(crate::obs::now_ns()) - i128::from(now_ns)
+                        };
+                        for mut s in spans {
+                            s.start_ns = (i128::from(s.start_ns) + offset).max(0) as u64;
+                            s.end_ns = (i128::from(s.end_ns) + offset).max(0) as u64;
+                            metrics.spans.push(s);
+                        }
+                    }
                     metrics.dist_evals += dist_evals;
                     // += : the local-MST phase already deposited its share
                     metrics.worker_busy[worker] += busy;
@@ -939,6 +1015,7 @@ fn execute_pooled_inner(
                 other => anyhow::bail!("leader received unexpected message {other:?}"),
             }
         }
+        progress.finish();
         if remote.is_some() {
             // Pure-remote runs: the `kernel:` line must describe the fleet,
             // not the leader's local ISA detection (the leader ran no
@@ -1076,6 +1153,38 @@ fn execute_pooled_inner(
             );
         }
     }
+    if let Some(token) = obs_run {
+        // Leader + in-process spans drain straight into the timeline (the
+        // shipped worker spans were re-based and collected in the gather
+        // loop above).
+        metrics.spans.extend(crate::obs::end_run(token));
+        // A runner that died before its shutdown rendezvous never shipped
+        // its span block; its delivered jobs still have gather-log rows, so
+        // synthesize their Job spans (arg = 0: the eval counts died with
+        // the worker) — the trace must cover every executed pair job.
+        let shipped: std::collections::HashSet<u32> = metrics
+            .spans
+            .iter()
+            .filter(|s| s.kind() == Some(crate::obs::SpanKind::Job))
+            .map(|s| s.id)
+            .collect();
+        for (job_id, worker, compute_ns, recv_ns) in job_log {
+            if !shipped.contains(&job_id) {
+                metrics.spans.push(crate::obs::Span {
+                    kind_code: crate::obs::SpanKind::Job.code(),
+                    worker,
+                    id: job_id,
+                    arg: 0,
+                    start_ns: recv_ns.saturating_sub(compute_ns),
+                    end_ns: recv_ns,
+                });
+            }
+        }
+    }
+    // The printed roster must be the fleet that finished the run: a worker
+    // admitted mid-run whose busy slot never got touched would otherwise be
+    // silently missing from the per-worker busy% lines.
+    metrics.finalize_roster(n_workers);
     metrics.wall = t_start.elapsed();
 
     Ok(PooledRun { mst, metrics, workers: n_workers })
@@ -1135,6 +1244,9 @@ fn pooled_worker_local(
                         panel_isa: 0,
                         peer_tx_bytes: 0,
                         peer_ships: 0,
+                        spans: Vec::new(),
+                        now_ns: 0,
+                        chaos_faults: 0,
                     },
                     Direction::Gather,
                 );
@@ -1164,6 +1276,8 @@ fn pooled_worker_local(
         if stolen {
             jobs_stolen += 1;
         }
+        let evals_before = solver.dist_evals();
+        let mut job_span = crate::obs::span(crate::obs::SpanKind::Job, worker_id as u16, job.id);
         let t = Instant::now();
         let solved = match solver.solve_shipped(plan, job, &ship) {
             Ok(s) => s,
@@ -1176,6 +1290,8 @@ fn pooled_worker_local(
             }
         };
         let compute = solved.compute.unwrap_or_else(|| t.elapsed());
+        job_span.set_arg(solver.dist_evals() - evals_before);
+        drop(job_span);
         busy += compute;
         jobs_run += 1;
         if local_reduce {
@@ -1229,6 +1345,11 @@ fn pooled_worker_local(
         panel_isa: fin.panel_perf.isa,
         peer_tx_bytes: 0,
         peer_ships: 0,
+        // In-process spans never ride the channel: the leader drains the
+        // shared recorder directly at run end (same process, same clock).
+        spans: Vec::new(),
+        now_ns: 0,
+        chaos_faults: 0,
     };
     if bare_done {
         // Tree/ring model: this partial ships over a *peer* hop, not the
@@ -1350,7 +1471,22 @@ fn pooled_worker_remote(
                 fleet.stalls.fetch_add(1, Ordering::Relaxed);
             }
             fleet.fail_worker(worker_id);
-            eprintln!(
+            if stalled {
+                crate::obs::instant(
+                    crate::obs::SpanKind::Stall,
+                    crate::obs::trace::LEADER_TRACK,
+                    worker_id as u32,
+                    0,
+                );
+            }
+            crate::obs::instant(
+                crate::obs::SpanKind::Failover,
+                crate::obs::trace::LEADER_TRACK,
+                worker_id as u32,
+                lost.len() as u64,
+            );
+            crate::obs::log!(
+                warn,
                 "leader: worker {worker_id} link {} mid-run ({e:#}); returned {} job(s) to the deck",
                 if stalled { "stalled" } else { "failed" },
                 lost.len()
@@ -1375,6 +1511,11 @@ fn pooled_worker_remote(
             panel_isa: fin.panel_perf.isa,
             peer_tx_bytes: fin.peer_tx_bytes,
             peer_ships: fin.peer_ships,
+            // The worker process's span block (and its send-time clock)
+            // rides through unchanged; the gather loop re-bases it.
+            spans: fin.spans,
+            now_ns: fin.now_ns,
+            chaos_faults: fin.chaos_faults,
         },
         Direction::Gather,
     );
@@ -1512,7 +1653,14 @@ fn drive_remote_link(
                                     .fold_rerun_credit
                                     .fetch_add(returned.len() as u32, Ordering::Relaxed);
                                 queue.push_returned(&returned);
-                                eprintln!(
+                                crate::obs::instant(
+                                    crate::obs::SpanKind::Failover,
+                                    crate::obs::trace::LEADER_TRACK,
+                                    worker_id as u32,
+                                    returned.len() as u64,
+                                );
+                                crate::obs::log!(
+                                    warn,
                                     "leader: worker {worker_id} fold degraded (peer partial missing); returned {} inherited job(s) to the deck",
                                     returned.len()
                                 );
@@ -1868,6 +2016,7 @@ fn build_cache_pooled(
     remote: Option<&TcpTransport>,
     fleet: &Fleet,
     witness: &ByteWitness,
+    obs_run: Option<crate::obs::RunToken>,
 ) -> anyhow::Result<(LocalMstCache, Vec<Duration>, Vec<u16>)> {
     let t = Instant::now();
     let p = plan.parts.len();
@@ -1900,121 +2049,144 @@ fn build_cache_pooled(
         let errors_ref = &errors;
         for (w, busy_slot) in busy.iter().enumerate() {
             let resident = &residents[w];
-            scope.spawn(move || loop {
-                let claimed = queue_ref.pop_for(w);
-                let Some((k, _stolen)) = claimed else {
-                    match remote {
-                        None => return, // in-process: a drained queue is final
-                        Some(_) => {
-                            if built_ref.load(Ordering::SeqCst) >= p || fleet.aborted() {
-                                return;
+            scope.spawn(move || {
+                if let Some(t) = obs_run {
+                    crate::obs::adopt(t);
+                }
+                loop {
+                    let claimed = queue_ref.pop_for(w);
+                    let Some((k, _stolen)) = claimed else {
+                        match remote {
+                            None => return, // in-process: a drained queue is final
+                            Some(_) => {
+                                if built_ref.load(Ordering::SeqCst) >= p || fleet.aborted() {
+                                    return;
+                                }
+                                if let Some(k) = queue_ref.stranded_job(&fleet.alive()) {
+                                    errors_ref.lock().unwrap().push(format!(
+                                        "subset {k}: every worker holding it has failed"
+                                    ));
+                                    fleet.abort.store(true, Ordering::SeqCst);
+                                    return;
+                                }
+                                std::thread::sleep(Duration::from_millis(1));
+                                continue;
                             }
-                            if let Some(k) = queue_ref.stranded_job(&fleet.alive()) {
-                                errors_ref.lock().unwrap().push(format!(
-                                    "subset {k}: every worker holding it has failed"
-                                ));
-                                fleet.abort.store(true, Ordering::SeqCst);
-                                return;
-                            }
-                            std::thread::sleep(Duration::from_millis(1));
-                            continue;
-                        }
-                    }
-                };
-                let ids = &plan.parts[k];
-                let sharded = ds.is_none();
-                let tree = if let Some(tcp) = remote {
-                    let msg = if sharded {
-                        Message::LocalAssign { part: k as u32 }
-                    } else {
-                        Message::LocalJob {
-                            part: k as u32,
-                            global_ids: ids.clone(),
-                            points: ds.expect("unsharded remote holds the dataset").gather(ids),
                         }
                     };
-                    // Ingest accounted only after the frame actually left:
-                    // a failed send returns the subset to the lane and the
-                    // survivor's re-send is the transfer that counts.
-                    let reply = tcp.send_to(w, &msg, Direction::Scatter).and_then(|_| {
-                        if let Some(ds) = ds {
-                            let payload =
-                                crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
-                            witness.ingest.fetch_add(payload, Ordering::Relaxed);
-                            witness.data.fetch_add(payload, Ordering::Relaxed);
-                        }
-                        tcp.recv_from(w)
-                    });
-                    match reply {
-                        Ok(Message::LocalDone { part, edges, compute })
-                            if part as usize == k =>
-                        {
-                            *busy_slot.lock().unwrap() += compute;
-                            edges
-                        }
-                        Ok(other) => {
-                            // recovery state first, dead flag last (see
-                            // Fleet::fail_worker)
-                            queue_ref.push_returned(&[k]);
-                            queue_ref.abandon_deck(w);
-                            fleet.reassigned.fetch_add(1, Ordering::Relaxed);
-                            fleet.fail_worker(w);
-                            eprintln!(
-                                "leader: worker {w} answered subset {k} with {other:?}; treating the link as failed"
-                            );
-                            return;
-                        }
-                        Err(e) => {
-                            queue_ref.push_returned(&[k]);
-                            queue_ref.abandon_deck(w);
-                            fleet.reassigned.fetch_add(1, Ordering::Relaxed);
-                            let stalled = crate::net::is_stall(&e);
-                            if stalled {
-                                fleet.stalls.fetch_add(1, Ordering::Relaxed);
+                    let ids = &plan.parts[k];
+                    let sharded = ds.is_none();
+                    let tree = if let Some(tcp) = remote {
+                        let msg = if sharded {
+                            Message::LocalAssign { part: k as u32 }
+                        } else {
+                            Message::LocalJob {
+                                part: k as u32,
+                                global_ids: ids.clone(),
+                                points: ds.expect("unsharded remote holds the dataset").gather(ids),
                             }
-                            fleet.fail_worker(w);
-                            eprintln!(
-                                "leader: worker {w} link {} on subset {k} ({e:#}); returned it to the deck",
-                                if stalled { "stalled" } else { "failed" }
-                            );
-                            return;
+                        };
+                        // Ingest accounted only after the frame actually left:
+                        // a failed send returns the subset to the lane and the
+                        // survivor's re-send is the transfer that counts.
+                        let reply = tcp.send_to(w, &msg, Direction::Scatter).and_then(|_| {
+                            if let Some(ds) = ds {
+                                let payload =
+                                    crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
+                                witness.ingest.fetch_add(payload, Ordering::Relaxed);
+                                witness.data.fetch_add(payload, Ordering::Relaxed);
+                            }
+                            tcp.recv_from(w)
+                        });
+                        match reply {
+                            Ok(Message::LocalDone { part, edges, compute })
+                                if part as usize == k =>
+                            {
+                                *busy_slot.lock().unwrap() += compute;
+                                edges
+                            }
+                            Ok(other) => {
+                                // recovery state first, dead flag last (see
+                                // Fleet::fail_worker)
+                                queue_ref.push_returned(&[k]);
+                                queue_ref.abandon_deck(w);
+                                fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                                fleet.fail_worker(w);
+                                crate::obs::log!(
+                                    error,
+                                    "leader: worker {w} answered subset {k} with {other:?}; treating the link as failed"
+                                );
+                                return;
+                            }
+                            Err(e) => {
+                                queue_ref.push_returned(&[k]);
+                                queue_ref.abandon_deck(w);
+                                fleet.reassigned.fetch_add(1, Ordering::Relaxed);
+                                let stalled = crate::net::is_stall(&e);
+                                if stalled {
+                                    fleet.stalls.fetch_add(1, Ordering::Relaxed);
+                                }
+                                fleet.fail_worker(w);
+                                if stalled {
+                                    crate::obs::instant(
+                                        crate::obs::SpanKind::Stall,
+                                        crate::obs::trace::LEADER_TRACK,
+                                        w as u32,
+                                        0,
+                                    );
+                                }
+                                crate::obs::log!(
+                                    warn,
+                                    "leader: worker {w} link {} on subset {k} ({e:#}); returned it to the deck",
+                                    if stalled { "stalled" } else { "failed" }
+                                );
+                                return;
+                            }
                         }
-                    }
-                } else {
-                    let ds = ds.expect("in-process phase 1 holds the dataset");
-                    let ctx = ctx.expect("in-process phase 1 carries the bipartite context");
-                    // the modeled scatter of this subset's vectors (the
-                    // in-process "transfer" is the model and cannot fail)
-                    net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
-                    let payload = crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
-                    witness.ingest.fetch_add(payload, Ordering::Relaxed);
-                    witness.data.fetch_add(payload, Ordering::Relaxed);
-                    let t_job = Instant::now();
-                    let tree = subset_mst(
-                        ds.as_slice(),
-                        ds.d,
-                        ctx.block.as_ref(),
-                        &ctx.aux,
-                        counter_ref,
-                        ids,
+                    } else {
+                        let ds = ds.expect("in-process phase 1 holds the dataset");
+                        let ctx = ctx.expect("in-process phase 1 carries the bipartite context");
+                        // the modeled scatter of this subset's vectors (the
+                        // in-process "transfer" is the model and cannot fail)
+                        net.charge(job_wire_bytes(ids.len(), ds.d), Direction::Scatter);
+                        let payload = crate::net::wire::vectors_payload_bytes(ids.len(), ds.d);
+                        witness.ingest.fetch_add(payload, Ordering::Relaxed);
+                        witness.data.fetch_add(payload, Ordering::Relaxed);
+                        let mut span =
+                            crate::obs::span(crate::obs::SpanKind::LocalMst, w as u16, k as u32);
+                        let t_job = Instant::now();
+                        let tree = subset_mst(
+                            ds.as_slice(),
+                            ds.d,
+                            ctx.block.as_ref(),
+                            &ctx.aux,
+                            counter_ref,
+                            ids,
+                        );
+                        *busy_slot.lock().unwrap() += t_job.elapsed();
+                        // Exact by partition shape (the shared counter can't
+                        // give a clean per-thread delta): Prim over m points
+                        // always evaluates C(m, 2) pairs.
+                        let m = ids.len() as u64;
+                        span.set_arg(m * m.saturating_sub(1) / 2);
+                        drop(span);
+                        tree
+                    };
+                    net.charge(
+                        HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
+                        Direction::Gather,
                     );
-                    *busy_slot.lock().unwrap() += t_job.elapsed();
-                    tree
-                };
-                net.charge(
-                    HEADER_BYTES + tree.len() as u64 * Edge::WIRE_BYTES as u64,
-                    Direction::Gather,
-                );
-                {
-                    // the claiming worker now holds the subset's vectors
-                    // (already true on sharded runs) and its cached tree
-                    let mut res = resident.lock().unwrap();
-                    res[k].vecs = true;
-                    res[k].tree = true;
+                    {
+                        // the claiming worker now holds the subset's vectors
+                        // (already true on sharded runs) and its cached tree
+                        let mut res = resident.lock().unwrap();
+                        res[k].vecs = true;
+                        res[k].tree = true;
+                    }
+                    *slots_ref[k].lock().unwrap() = Some(tree);
+                    anchors_ref[k].store(w as u32, Ordering::Relaxed);
+                    built_ref.fetch_add(1, Ordering::SeqCst);
                 }
-                *slots_ref[k].lock().unwrap() = Some(tree);
-                anchors_ref[k].store(w as u32, Ordering::Relaxed);
-                built_ref.fetch_add(1, Ordering::SeqCst);
             });
         }
     });

@@ -95,6 +95,14 @@ pub struct SolverFinal {
     pub peer_tx_bytes: u64,
     /// peer-plane frames the remote worker sent
     pub peer_ships: u32,
+    /// telemetry spans the remote worker shipped back (tracing runs only;
+    /// in-process solvers record straight into the leader's buffers)
+    pub spans: Vec<crate::obs::Span>,
+    /// the remote worker's [`crate::obs::now_ns`] at `WorkerDone` send
+    /// time, for re-basing its span timestamps onto the leader's clock
+    pub now_ns: u64,
+    /// chaos-transport faults the remote worker's link injected
+    pub chaos_faults: u32,
 }
 
 /// Measured `panel_block` work, the witnesses behind the `kernel:` line and
@@ -152,8 +160,7 @@ pub trait PairSolver {
             panel_hits,
             panel_misses,
             panel_perf: self.panel_perf(),
-            busy: None,
-            local_tree: None,
+            ..SolverFinal::default()
         })
     }
 }

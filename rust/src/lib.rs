@@ -77,6 +77,17 @@
 //!   schedule so only the final ≤|V|−1-edge forest reaches the leader.
 //!   A peer that dies mid-fold degrades to leader-assisted recovery:
 //!   its folded-but-unshipped jobs return to the exactly-once lane.
+//! - **observability ([`obs`])** — the flight recorder: per-thread span
+//!   buffers (`job`/`local_mst`/`panel`/`fold`/`peer_fetch`/`handshake`
+//!   intervals, `stall`/`admit`/`chaos`/`failover` instants) behind a
+//!   run-token enable that costs one atomic load when off; workers ship
+//!   their spans back piggybacked on `WorkerDone` (wire v6) and the
+//!   leader re-bases them onto its clock, so `--trace-out` exports one
+//!   fleet-wide Chrome-trace/Perfetto timeline and `--report-out` a
+//!   versioned JSON run report (full `RunMetrics` + per-worker breakdown
+//!   + config fingerprint). A `DEMST_LOG`-leveled `obs::log!` macro
+//!   carries the diagnostics and a tty-gated live progress ticker shows
+//!   jobs/bytes/stalls/admissions mid-run.
 //! - **sharded residency ([`shard`])** — `demst partition` cuts a dataset
 //!   into per-subset binary shard files (checksummed, FNV-1a 64) plus a
 //!   TOML-lite manifest (run shape, partition layout as compact id
@@ -142,6 +153,7 @@ pub mod slink;
 pub mod exec;
 pub mod decomp;
 pub mod net;
+pub mod obs;
 pub mod shard;
 pub mod coordinator;
 pub mod runtime;

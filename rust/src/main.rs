@@ -122,6 +122,9 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "min-cluster-size", takes_value: true, help: "HDBSCAN-style stability extraction with this min size" },
         OptSpec { name: "out-mst", takes_value: true, help: "write MST edges as CSV" },
         OptSpec { name: "out-labels", takes_value: true, help: "write flat cluster labels as CSV (needs --k)" },
+        OptSpec { name: "trace-out", takes_value: true, help: "record spans fleet-wide and write a Chrome-trace/Perfetto JSON timeline here" },
+        OptSpec { name: "report-out", takes_value: true, help: "write the versioned machine-readable run report (full metrics JSON) here" },
+        OptSpec { name: "quiet", takes_value: false, help: "suppress the live progress ticker" },
     ]
 }
 
@@ -231,6 +234,16 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if args.has_flag("verify") {
         cfg.verify = true;
     }
+    if let Some(v) = args.get("trace-out") {
+        cfg.obs.trace_out = Some(v.into());
+        cfg.obs.trace = true; // an exporter without spans is useless
+    }
+    if let Some(v) = args.get("report-out") {
+        cfg.obs.report_out = Some(v.into());
+    }
+    if args.has_flag("quiet") {
+        cfg.obs.progress = false;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -287,6 +300,16 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
     println!("metrics: {}", out.metrics.summary());
     print_phases_and_workers(&out.metrics);
+    if let Some(path) = &cfg.obs.trace_out {
+        demst::obs::trace::write_chrome_trace(path, &out.metrics)
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        println!("trace written to {} ({} spans)", path.display(), out.metrics.spans.len());
+    }
+    if let Some(path) = &cfg.obs.report_out {
+        demst::obs::report::write_run_report(path, &cfg, &out.metrics)
+            .with_context(|| format!("writing run report to {}", path.display()))?;
+        println!("report written to {}", path.display());
+    }
 
     if cfg.verify {
         let ds = ds.as_ref().expect("verify rejected on sharded runs above");

@@ -146,6 +146,9 @@ pub struct ChaosLink {
     rx_frames: u64,
     /// set after a truncate fault: the link is cut, all further IO errors
     dead: bool,
+    /// faults actually fired on this link (reported in `WorkerDone` and
+    /// summed into `RunMetrics::chaos_faults_injected`)
+    fired: u64,
 }
 
 impl ChaosLink {
@@ -163,7 +166,29 @@ impl ChaosLink {
     }
 
     pub fn new(plan: FaultPlan, seed: u64) -> Self {
-        Self { plan, rng: Pcg64::seeded(seed), tx_frames: 0, rx_frames: 0, dead: false }
+        Self { plan, rng: Pcg64::seeded(seed), tx_frames: 0, rx_frames: 0, dead: false, fired: 0 }
+    }
+
+    /// Faults this link has actually fired so far.
+    pub fn faults_fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Witness one firing: count it, log it, and drop a telemetry instant.
+    /// Called *before* the fault executes, because `stall` and `exit` never
+    /// return. The span's worker id is rewritten once the worker learns its
+    /// rank (chaos can fire during the handshake, before `Setup` arrives).
+    fn fire(&mut self, dir: Dir, frame: u64, fault: Fault) {
+        self.fired += 1;
+        crate::obs::log!(
+            warn,
+            "chaos: firing {fault:?} on {} frame {frame}",
+            match dir {
+                Dir::Tx => "tx",
+                Dir::Rx => "rx",
+            }
+        );
+        crate::obs::instant(crate::obs::SpanKind::Chaos, 0, self.fired as u32, frame);
     }
 
     /// Send one already-encoded frame, applying any fault planned for it.
@@ -172,7 +197,11 @@ impl ChaosLink {
             return Err(cut_link());
         }
         self.tx_frames += 1;
-        match self.plan.lookup(Dir::Tx, self.tx_frames) {
+        let fault = self.plan.lookup(Dir::Tx, self.tx_frames);
+        if let Some(f) = fault {
+            self.fire(Dir::Tx, self.tx_frames, f);
+        }
+        match fault {
             None => wire::write_frame(w, frame),
             Some(Fault::Delay(d)) => {
                 std::thread::sleep(d);
@@ -204,6 +233,9 @@ impl ChaosLink {
             }
             self.rx_frames += 1;
             let fault = self.plan.lookup(Dir::Rx, self.rx_frames);
+            if let Some(f) = fault {
+                self.fire(Dir::Rx, self.rx_frames, f);
+            }
             if let Some(Fault::Exit(code)) = fault {
                 std::process::exit(code);
             }
@@ -316,6 +348,7 @@ mod tests {
         assert_eq!(wire::read_frame(&mut cursor).unwrap(), frames[0]);
         assert_eq!(wire::read_frame(&mut cursor).unwrap(), frames[2]);
         assert!(cursor.is_empty());
+        assert_eq!(link.faults_fired(), 1, "exactly the planned fault counted");
     }
 
     #[test]
@@ -329,6 +362,7 @@ mod tests {
         // every later write fails too — the link is dead, like a real cut
         assert!(link.write_frame(&mut buf, &frame).is_err());
         assert_eq!(buf.len(), 8);
+        assert_eq!(link.faults_fired(), 1, "dead-link errors are not new faults");
     }
 
     #[test]

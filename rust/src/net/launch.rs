@@ -223,14 +223,17 @@ fn admission_loop(
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => match tcp.admit_worker(stream, peer.ip(), setup) {
-                Ok(w) => eprintln!("leader: admitted worker {w} mid-run from {peer}"),
-                Err(e) => eprintln!("leader: rejected mid-run connection from {peer}: {e:#}"),
+                Ok(w) => crate::obs::log!(info, "leader: admitted worker {w} mid-run from {peer}"),
+                Err(e) => crate::obs::log!(
+                    warn,
+                    "leader: rejected mid-run connection from {peer}: {e:#}"
+                ),
             },
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(25));
             }
             Err(e) => {
-                eprintln!("leader: admission accept failed: {e}");
+                crate::obs::log!(warn, "leader: admission accept failed: {e}");
                 std::thread::sleep(Duration::from_millis(100));
             }
         }
@@ -248,6 +251,7 @@ fn make_setup(cfg: &RunConfig, n: usize, d: usize, manifest: u64, plan: &ExecPla
         pair_kernel: wire::pair_kernel_code(cfg.pair_kernel),
         reduce_tree: cfg.reduce_tree,
         mid_run: false, // admission re-stamps this per joining link
+        trace: cfg.obs.trace,
         manifest,
         liveness_ms: u32::try_from(cfg.net.liveness_timeout_ms)
             .context("liveness timeout exceeds the u32 wire limit (ms)")?,

@@ -162,6 +162,9 @@ impl<'a> RemoteLink<'a> {
                 panel_isa,
                 peer_tx_bytes,
                 peer_ships,
+                spans,
+                now_ns,
+                chaos_faults,
                 ..
             } => Ok(SolverFinal {
                 dist_evals,
@@ -177,6 +180,9 @@ impl<'a> RemoteLink<'a> {
                 local_tree,
                 peer_tx_bytes,
                 peer_ships,
+                spans,
+                now_ns,
+                chaos_faults,
             }),
             other => bail!("worker {} replied {other:?} to Shutdown", self.worker),
         }

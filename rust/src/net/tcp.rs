@@ -143,7 +143,10 @@ impl TcpTransport {
                             peer_addrs.push(PeerAddr { ip: peer.ip(), port: peer_port });
                         }
                         Err(e) => {
-                            eprintln!("leader: rejected connection from {peer}: {e:#}");
+                            crate::obs::log!(
+                                warn,
+                                "leader: rejected connection from {peer}: {e:#}"
+                            );
                         }
                     }
                 }
@@ -398,6 +401,7 @@ mod tests {
             pair_kernel: 0,
             reduce_tree: false,
             mid_run: false,
+            trace: false,
             manifest: 0,
             liveness_ms: 0,
             part_sizes: vec![5, 5],

@@ -111,7 +111,7 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 5;
+pub const WIRE_VERSION: u16 = 6;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
@@ -153,9 +153,12 @@ const ACK_FOLD_OK: u8 = 2;
 const ACK_FOLD_FAIL: u8 = 3;
 
 const EDGE_BYTES: u64 = Edge::WIRE_BYTES as u64;
-/// v4 `WorkerDone` stats-block bytes (v3 was 64; +8 `peer_tx_bytes`,
-/// +4 `peer_ships`, +4 spare).
-pub const STATS_BYTES: u64 = 80;
+/// v6 `WorkerDone` stats-block bytes (v4/v5 was 80; +4 `span_count`
+/// replacing the spare word, +8 `now_ns`, +4 `chaos_faults`, +4 spare).
+pub const STATS_BYTES: u64 = 96;
+/// Bytes of one telemetry span record in a `WorkerDone` payload: kind,
+/// pad, worker, id, arg, start_ns, end_ns.
+pub const SPAN_BYTES: u64 = 32;
 /// Bytes of one [`crate::coordinator::messages::PeerAddr`] entry in a
 /// `PeerBook` payload: family byte, pad, port, 16 address bytes.
 pub const PEER_ENTRY_BYTES: u64 = 20;
@@ -194,8 +197,9 @@ pub fn encoded_len(msg: &Message) -> u64 {
             Message::PeerBook { peers, builders } => {
                 peers.len() as u64 * PEER_ENTRY_BYTES + builders.len() as u64 * 2
             }
-            Message::WorkerDone { local_tree, .. } => {
+            Message::WorkerDone { local_tree, spans, .. } => {
                 STATS_BYTES
+                    + spans.len() as u64 * SPAN_BYTES
                     + local_tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
             }
             Message::Ack { .. }
@@ -467,7 +471,12 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             panel_isa,
             peer_tx_bytes,
             peer_ships,
+            spans,
+            now_ns,
+            chaos_faults,
         } => {
+            let span_count = u32::try_from(spans.len())
+                .map_err(|_| anyhow!("WorkerDone span count exceeds u32"))?;
             let mut f = FrameBuf::new(TAG_WORKER_DONE, payload)?;
             f.set_u8(5, local_tree.is_some() as u8);
             f.set_u16(6, need_u16(*worker, "worker id")?);
@@ -480,7 +489,18 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             f.push_u64(u64::try_from(panel_time.as_nanos()).unwrap_or(u64::MAX));
             f.push_u32s(&[*panel_threads, *panel_isa as u32]);
             f.push_u64(*peer_tx_bytes);
-            f.push_u32s(&[*peer_ships, 0]); // + 4 spare bytes
+            f.push_u32s(&[*peer_ships, span_count]);
+            f.push_u64(*now_ns);
+            f.push_u32s(&[*chaos_faults, 0]); // + 4 spare bytes
+            for s in spans {
+                f.buf.push(s.kind_code);
+                f.buf.push(0); // pad
+                f.buf.extend_from_slice(&s.worker.to_le_bytes());
+                f.buf.extend_from_slice(&s.id.to_le_bytes());
+                f.push_u64(s.arg);
+                f.push_u64(s.start_ns);
+                f.push_u64(s.end_ns);
+            }
             if let Some(tree) = local_tree {
                 f.push_edges(tree);
             }
@@ -734,9 +754,6 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
         TAG_WORKER_DONE => {
             let has_tree = r0.u8_at(5) & 1 != 0;
             let worker = r0.u16_at(6) as usize;
-            let tree_bytes = payload_len
-                .checked_sub(STATS_BYTES as usize)
-                .ok_or_else(|| anyhow!("WorkerDone payload {payload_len} < stats block"))?;
             let dist_evals = r.u64()?;
             let busy = Duration::from_nanos(r.u64()?);
             let jobs_run = r.u32()?;
@@ -750,7 +767,32 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 .map_err(|_| anyhow!("WorkerDone panel_isa out of u8 range"))?;
             let peer_tx_bytes = r.u64()?;
             let peer_ships = r.u32()?;
+            let span_count = r.u32()? as usize;
+            let now_ns = r.u64()?;
+            let chaos_faults = r.u32()?;
             let _spare = r.u32()?;
+            // Bound the span block against the declared payload *before*
+            // allocating anything sized by the (possibly hostile) count.
+            let tree_bytes = payload_len
+                .checked_sub(STATS_BYTES as usize)
+                .and_then(|rest| {
+                    span_count.checked_mul(SPAN_BYTES as usize).and_then(|b| rest.checked_sub(b))
+                })
+                .ok_or_else(|| {
+                    anyhow!("WorkerDone payload {payload_len} < stats block + {span_count} spans")
+                })?;
+            let mut spans = Vec::with_capacity(span_count);
+            for _ in 0..span_count {
+                let rec = r.take(SPAN_BYTES as usize)?;
+                spans.push(crate::obs::Span {
+                    kind_code: rec[0],
+                    worker: u16::from_le_bytes(rec[2..4].try_into().unwrap()),
+                    id: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                    arg: u64::from_le_bytes(rec[8..16].try_into().unwrap()),
+                    start_ns: u64::from_le_bytes(rec[16..24].try_into().unwrap()),
+                    end_ns: u64::from_le_bytes(rec[24..32].try_into().unwrap()),
+                });
+            }
             let local_tree = if has_tree {
                 Some(r.edges(derive_edges(tree_bytes, "WorkerDone tree")?)?)
             } else {
@@ -771,6 +813,9 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 panel_isa,
                 peer_tx_bytes,
                 peer_ships,
+                spans,
+                now_ns,
+                chaos_faults,
             }
         }
         TAG_HEARTBEAT => Message::Heartbeat,
@@ -875,6 +920,10 @@ pub struct Setup {
     /// fleet: the worker must answer with [`Join`] (not [`SetupAck`]) and
     /// wait for the leader's [`AdmitAck`] before serving
     pub mid_run: bool,
+    /// true when the leader wants telemetry spans recorded and shipped
+    /// back in the final `WorkerDone`; off keeps the worker's job hot
+    /// path allocation-free and the byte model span-free
+    pub trace: bool,
     /// shard-manifest fingerprint of a sharded run, 0 when unsharded; a
     /// worker whose loaded manifest fingerprints differently must refuse
     /// the run (its shard files were cut from another partition)
@@ -938,7 +987,7 @@ pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     let dir = s.artifacts_dir.as_bytes();
     let payload = 20 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
     let mut f = FrameBuf::new(TAG_SETUP, payload)?;
-    f.set_u8(5, s.reduce_tree as u8 | (s.mid_run as u8) << 1);
+    f.set_u8(5, s.reduce_tree as u8 | (s.mid_run as u8) << 1 | (s.trace as u8) << 2);
     f.set_u16(6, s.version);
     f.set_u16(8, s.worker_id);
     f.set_u16(10, s.d);
@@ -982,6 +1031,7 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
         pair_kernel: r0.u8_at(15),
         reduce_tree: r0.u8_at(5) & 1 != 0,
         mid_run: r0.u8_at(5) & 2 != 0,
+        trace: r0.u8_at(5) & 4 != 0,
         manifest,
         liveness_ms,
         part_sizes,
@@ -1198,8 +1248,11 @@ mod tests {
             panel_isa: 2,
             peer_tx_bytes: 123_456,
             peer_ships: 5,
+            spans: vec![],
+            now_ns: 0xdead_beef_0000_0001,
+            chaos_faults: 3,
         };
-        assert_eq!(done.wire_bytes(), HEADER_BYTES + STATS_BYTES, "stats block is 80 bytes");
+        assert_eq!(done.wire_bytes(), HEADER_BYTES + STATS_BYTES, "stats block is 96 bytes");
         assert_eq!(roundtrip(&done, None), done);
         // None vs Some(vec![]) is preserved by the has-tree flag
         let bare = Message::WorkerDone {
@@ -1217,8 +1270,67 @@ mod tests {
             panel_isa: 0,
             peer_tx_bytes: 0,
             peer_ships: 0,
+            spans: vec![],
+            now_ns: 0,
+            chaos_faults: 0,
         };
         assert_eq!(roundtrip(&bare, None), bare);
+    }
+
+    #[test]
+    fn worker_done_span_block_roundtrips_bit_identically() {
+        use crate::obs::{Span, SpanKind};
+        let spans = vec![
+            Span {
+                kind_code: SpanKind::Job.code(),
+                worker: 2,
+                id: 41,
+                arg: 12_345,
+                start_ns: 1_000_000,
+                end_ns: 1_500_000,
+            },
+            Span {
+                kind_code: SpanKind::Chaos.code(),
+                worker: 2,
+                id: 0,
+                arg: 17,
+                start_ns: 2_000_000,
+                end_ns: 2_000_000,
+            },
+            // a kind code this build doesn't know must survive the wire
+            Span { kind_code: 250, worker: 2, id: 9, arg: u64::MAX, start_ns: 3, end_ns: 4 },
+        ];
+        let done = Message::WorkerDone {
+            worker: 2,
+            local_tree: Some(vec![Edge::new(0, 1, 0.5), Edge::new(1, 2, 1.5)]),
+            dist_evals: 99,
+            busy: Duration::from_millis(5),
+            jobs_run: 3,
+            jobs_stolen: 0,
+            panel_hits: 1,
+            panel_misses: 1,
+            panel_flops: 64,
+            panel_time: Duration::from_micros(10),
+            panel_threads: 1,
+            panel_isa: 0,
+            peer_tx_bytes: 0,
+            peer_ships: 0,
+            spans: spans.clone(),
+            now_ns: 7_777_777,
+            chaos_faults: 1,
+        };
+        assert_eq!(
+            done.wire_bytes(),
+            HEADER_BYTES + STATS_BYTES + 3 * SPAN_BYTES + 2 * EDGE_BYTES,
+            "span block rides between stats and tree"
+        );
+        assert_eq!(roundtrip(&done, None), done);
+        // a forged span count larger than the payload is refused before
+        // any count-sized allocation
+        let mut frame = encode(&done).unwrap();
+        let count_at = HEADER_BYTES as usize + 76; // peer_ships u32, then span_count
+        frame[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame, None).is_err(), "hostile span count rejected");
     }
 
     #[test]
@@ -1290,6 +1402,7 @@ mod tests {
             pair_kernel: 1,
             reduce_tree: true,
             mid_run: false,
+            trace: true,
             manifest: 0xfeed_beef_cafe_f00d,
             liveness_ms: 30_000,
             part_sizes: vec![250, 250, 300, 200],

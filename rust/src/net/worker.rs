@@ -534,6 +534,10 @@ pub fn serve_with(
     opts: &WorkerOptions,
 ) -> Result<WorkerReport> {
     stream.set_nodelay(true).ok();
+    // Clocked before the handshake so the eventual Handshake span covers
+    // connect-to-serve even though recording only arms once the leader's
+    // Setup says whether this run traces.
+    let t_handshake = crate::obs::now_ns();
     // Deterministic fault injection on every leader-link frame (tests and
     // the chaos-smoke CI matrix); None in production.
     let mut chaos_link = ChaosLink::from_env()?;
@@ -618,6 +622,19 @@ pub fn serve_with(
         (setup.liveness_ms > 0).then(|| Duration::from_millis(u64::from(setup.liveness_ms)));
     stream.set_read_timeout(liveness).context("setting link read deadline")?;
 
+    // Telemetry: the leader's Setup decides whether spans are recorded and
+    // shipped back in the final WorkerDone. Without the token every span
+    // call below is one relaxed atomic load and no allocation.
+    let obs_run = setup.trace.then(crate::obs::begin_run);
+    crate::obs::record(
+        crate::obs::SpanKind::Handshake,
+        setup.worker_id,
+        u32::from(setup.worker_id),
+        0,
+        t_handshake,
+        crate::obs::now_ns(),
+    );
+
     let kind = wire::metric_from_code(setup.metric)?;
     let pair_kernel = wire::pair_kernel_from_code(setup.pair_kernel)?;
     let kernel_choice = wire::kernel_from_code(setup.kernel)?;
@@ -697,11 +714,16 @@ pub fn serve_with(
             // Keepalive from the leader: exists only to arm our deadline.
             Message::Heartbeat => continue,
             Message::LocalJob { part, global_ids, points } => {
+                let evals_before = counter.evals();
+                let mut span =
+                    crate::obs::span(crate::obs::SpanKind::LocalMst, setup.worker_id, part);
                 let t = Instant::now();
                 let aux = block.prepare(points.as_slice(), points.n, points.d);
                 let tree =
                     subset_mst_gathered(&points, block.as_ref(), &aux, &counter, &global_ids);
                 let compute = t.elapsed();
+                span.set_arg(counter.evals() - evals_before);
+                drop(span);
                 report.local_jobs += 1;
                 let k = part as usize;
                 if k >= store.len() {
@@ -715,6 +737,9 @@ pub fn serve_with(
                 // Sharded phase 1: the subset is already resident from a
                 // local shard file — only the tree needs computing.
                 let slot = resident(&store, part, "LocalAssign")?;
+                let evals_before = counter.evals();
+                let mut span =
+                    crate::obs::span(crate::obs::SpanKind::LocalMst, setup.worker_id, part);
                 let t = Instant::now();
                 let tree = subset_mst_gathered(
                     &slot.points,
@@ -724,6 +749,8 @@ pub fn serve_with(
                     &slot.ids,
                 );
                 let compute = t.elapsed();
+                span.set_arg(counter.evals() - evals_before);
+                drop(span);
                 report.local_jobs += 1;
                 let k = part as usize;
                 store[k].as_mut().expect("resident checked").tree = Some(tree.clone());
@@ -735,7 +762,8 @@ pub fn serve_with(
                     if report.jobs >= limit {
                         // Chaos hook: die like a SIGKILL — no reply, no
                         // shutdown handshake, socket torn down by the OS.
-                        eprintln!(
+                        crate::obs::log!(
+                            warn,
                             "worker {}: {CHAOS_EXIT_ENV}={limit} reached — exiting abruptly",
                             setup.worker_id
                         );
@@ -755,6 +783,11 @@ pub fn serve_with(
                     if routed {
                         // Pull the tree from its building anchor instead of
                         // the leader link (vectors, if any, rode inline above).
+                        let mut fetch_span = crate::obs::span(
+                            crate::obs::SpanKind::PeerFetch,
+                            setup.worker_id,
+                            part,
+                        );
                         match fetch_routed(
                             part,
                             setup.worker_id,
@@ -763,18 +796,26 @@ pub fn serve_with(
                             &peer,
                             peer_cfg,
                         ) {
-                            Ok(t) => absorb(
-                                &mut store,
-                                block.as_ref(),
-                                SubsetShip {
-                                    part,
-                                    vectors: None,
-                                    tree: Some(t),
-                                    routed: false,
-                                },
-                            )?,
+                            Ok(t) => {
+                                // arg = the TreeShip reply's wire bytes
+                                fetch_span.set_arg(
+                                    crate::coordinator::messages::HEADER_BYTES
+                                        + (t.len() * Edge::WIRE_BYTES) as u64,
+                                );
+                                absorb(
+                                    &mut store,
+                                    block.as_ref(),
+                                    SubsetShip {
+                                        part,
+                                        vectors: None,
+                                        tree: Some(t),
+                                        routed: false,
+                                    },
+                                )?
+                            }
                             Err(e) => {
-                                eprintln!(
+                                crate::obs::log!(
+                                    warn,
                                     "worker {}: peer fetch for subset {part} failed: {e:#}",
                                     setup.worker_id
                                 );
@@ -793,6 +834,8 @@ pub fn serve_with(
                     report.bytes_tx += frame.len() as u64;
                     continue;
                 }
+                let mut job_span =
+                    crate::obs::span(crate::obs::SpanKind::Job, setup.worker_id, job.id);
                 let t = Instant::now();
                 let (tree, evals) = match pair_kernel {
                     PairKernelChoice::BipartiteMerge => solve_bipartite(
@@ -815,6 +858,8 @@ pub fn serve_with(
                         solve_dense_union(&store, &job, ctx.d, kernel)?
                     }
                 };
+                job_span.set_arg(evals);
+                drop(job_span);
                 pair_evals += evals;
                 report.jobs += 1;
                 if setup.reduce_tree {
@@ -844,11 +889,16 @@ pub fn serve_with(
                     kind,
                     &setup.artifacts_dir,
                 )?;
+                let mut job_span =
+                    crate::obs::span(crate::obs::SpanKind::Job, setup.worker_id, job.id);
                 let before = kernel.dist_evals();
                 let t = Instant::now();
                 let local = kernel.mst(&points);
                 let compute = t.elapsed();
-                pair_evals += kernel.dist_evals() - before;
+                let evals = kernel.dist_evals() - before;
+                job_span.set_arg(evals);
+                drop(job_span);
+                pair_evals += evals;
                 busy += compute;
                 report.jobs += 1;
                 let edges = local
@@ -875,12 +925,18 @@ pub fn serve_with(
                     // Chaos hook: die mid-fold — acked jobs are folded into
                     // a partial that now exists nowhere. The leader must
                     // return every one of them to the exactly-once lane.
-                    eprintln!(
+                    crate::obs::log!(
+                        warn,
                         "worker {}: {CHAOS_EXIT_ON_FOLD_ENV} set — exiting mid-fold",
                         setup.worker_id
                     );
                     std::process::exit(114);
                 }
+                let mut fold_span = crate::obs::span(
+                    crate::obs::SpanKind::Fold,
+                    setup.worker_id,
+                    u32::from(expect),
+                );
                 // Wait for the expected peer partials (they were confirmed
                 // shipped before this directive was sent, so the wait is a
                 // delivery race, not a schedule dependency).
@@ -893,6 +949,7 @@ pub fn serve_with(
                 }
                 let got: Vec<Vec<Edge>> = inbox.drain(..).collect();
                 drop(inbox);
+                fold_span.set_arg(got.iter().map(|p| p.len() as u64).sum());
                 let mut ok = got.len() as u16 >= expect;
                 // Fold everything that DID arrive — those partials live only
                 // here now, and ⊕ is idempotent, so folding them in is
@@ -916,7 +973,8 @@ pub fn serve_with(
                     ) {
                         Ok(()) => {}
                         Err(e) => {
-                            eprintln!(
+                            crate::obs::log!(
+                                warn,
                                 "worker {}: fold ship to worker {to} failed: {e:#}",
                                 setup.worker_id
                             );
@@ -935,6 +993,23 @@ pub fn serve_with(
                 report.dist_evals = pair_evals + counter.evals();
                 report.peer_tx_bytes = peer.tx_bytes.load(Ordering::Relaxed);
                 report.peer_ships = peer.ships.load(Ordering::Relaxed);
+                // Drain the recording (if the Setup armed one) and ship the
+                // spans piggybacked on WorkerDone. Chaos-fault spans were
+                // recorded before this process learned its rank; stamp the
+                // final rank onto every span so leader tracks stay coherent.
+                let (spans, now_ns) = match obs_run {
+                    Some(token) => {
+                        let mut spans = crate::obs::end_run(token);
+                        for s in &mut spans {
+                            s.worker = setup.worker_id;
+                        }
+                        (spans, crate::obs::now_ns())
+                    }
+                    None => (Vec::new(), 0),
+                };
+                let chaos_faults = chaos_link
+                    .as_ref()
+                    .map_or(0, |c| c.faults_fired().min(u64::from(u32::MAX)) as u32);
                 let done = Message::WorkerDone {
                     worker: setup.worker_id as usize,
                     local_tree: folded.take(),
@@ -950,6 +1025,9 @@ pub fn serve_with(
                     panel_isa: panel_perf.isa,
                     peer_tx_bytes: report.peer_tx_bytes,
                     peer_ships: report.peer_ships,
+                    spans,
+                    now_ns,
+                    chaos_faults,
                 };
                 let frame = wire::encode(&done)?;
                 // Best-effort: a leader that already gave up must not turn a
@@ -1176,6 +1254,7 @@ mod tests {
             pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
             reduce_tree: false,
             mid_run: false,
+            trace: false,
             manifest: 0,
             liveness_ms: 0,
             part_sizes: part_sizes.clone(),
@@ -1283,6 +1362,7 @@ mod tests {
             pair_kernel: wire::pair_kernel_code(crate::config::PairKernelChoice::BipartiteMerge),
             reduce_tree: false,
             mid_run: false,
+            trace: false,
             liveness_ms: 0,
             manifest: fingerprint,
             part_sizes: part_sizes.clone(),
@@ -1369,6 +1449,7 @@ mod tests {
             pair_kernel: 0,
             reduce_tree: false,
             mid_run: false,
+            trace: false,
             liveness_ms: 0,
             manifest: 0xdead_0000_0000_0001, // some other partition run
             part_sizes: vec![12, 12],
@@ -1401,6 +1482,7 @@ mod tests {
             pair_kernel: 0,
             reduce_tree: false,
             mid_run: true,
+            trace: false,
             manifest: 0,
             liveness_ms: 0,
             part_sizes: vec![4, 4],

@@ -1,0 +1,68 @@
+//! Hand-rolled JSON fragments for the exporters — the offline vendor set
+//! has no serde, and the two documents we emit (Chrome trace, run report)
+//! are flat enough that string assembly plus correct escaping is all the
+//! machinery needed. Same spirit as the `to_json` writer in the e7 bench.
+
+/// RFC 8259 string escaping, quotes included.
+pub fn string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite floats render with Rust's shortest-roundtrip formatting (always
+/// valid JSON); NaN/inf — which JSON cannot represent — become `null`.
+pub fn num(v: f64) -> String {
+    if v.is_finite() {
+        // `{}` on f64 never emits exponents for the magnitudes we record,
+        // but "1e300"-style output is still legal JSON, so pass through.
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// `"key": value` pair, for assembling objects.
+pub fn field(key: &str, value: &str) -> String {
+    format!("{}: {}", string(key), value)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_escape_quotes_backslashes_and_control_chars() {
+        assert_eq!(string("plain"), "\"plain\"");
+        assert_eq!(string("a\"b"), "\"a\\\"b\"");
+        assert_eq!(string("a\\b"), "\"a\\\\b\"");
+        assert_eq!(string("a\nb\tc"), "\"a\\nb\\tc\"");
+        assert_eq!(string("\u{1}"), "\"\\u0001\"");
+        assert_eq!(string("héllo"), "\"héllo\"");
+    }
+
+    #[test]
+    fn numbers_are_json_safe() {
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(0.0), "0");
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn fields_compose() {
+        assert_eq!(field("jobs", "12"), "\"jobs\": 12");
+    }
+}

@@ -1,0 +1,249 @@
+//! obs — zero-dependency structured run telemetry: spans, logs, exporters.
+//!
+//! The flight recorder for a distributed run. Every interesting interval
+//! (pair job, local MST, panel product, ⊕-fold, peer fetch, handshake) and
+//! every interesting instant (stall demotion, mid-run admission, injected
+//! chaos fault, failover) becomes a [`Span`]: a fixed 32-byte record with
+//! IDs that survive the wire. Workers record spans into per-thread buffers
+//! and ship them back piggybacked on `WorkerDone` (wire v6), so the leader
+//! reassembles a *fleet-wide* timeline without a second collection channel.
+//!
+//! Pieces:
+//! - [`recorder`] — per-thread span buffers behind a run-token scheme:
+//!   recording is off by default and costs one relaxed atomic load when
+//!   disabled (zero allocations on the job hot path, so e7/e8 don't move);
+//! - [`trace`] — Chrome-trace / Perfetto JSON exporter
+//!   (`demst run --trace-out trace.json`): one track per worker, duration
+//!   events for jobs/folds/fetches, instant events for faults;
+//! - [`report`] — versioned machine-readable run report
+//!   (`--report-out run.json`): full `RunMetrics` + per-worker breakdown +
+//!   config fingerprint, validated in CI by `scripts/check_run_report.py`;
+//! - [`progress`] — leader-side live ticker (jobs done/total, bytes,
+//!   stalls, admissions; auto-off when stderr is not a tty or `--quiet`);
+//! - [`json`] — the tiny hand-rolled JSON string/number helpers (no serde
+//!   in the offline vendor set);
+//! - the [`log!`](crate::obs_log) macro — `DEMST_LOG`-leveled stderr
+//!   logging replacing the ad-hoc `eprintln!` diagnostics.
+
+pub mod json;
+pub mod progress;
+pub mod recorder;
+pub mod report;
+pub mod trace;
+
+pub use progress::Progress;
+pub use recorder::{
+    adopt, begin_run, drain, end_run, instant, now_ns, record, recording, span, RunToken,
+    SpanGuard,
+};
+
+/// What a [`Span`] measures. Codes are wire-stable (wire v6): renumbering
+/// is a wire break, so new kinds append.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// One bipartite pair job (`arg` = distance evals).
+    Job = 1,
+    /// One subset's local MST build (`arg` = distance evals).
+    LocalMst = 2,
+    /// One panel-product block (`arg` = FLOPs).
+    Panel = 3,
+    /// One ⊕-fold of two partial forests (`arg` = edges folded).
+    Fold = 4,
+    /// One worker↔worker cached-tree fetch (`arg` = bytes received).
+    PeerFetch = 5,
+    /// Connect → Hello/Setup handshake on a worker link.
+    Handshake = 6,
+    /// Instant: a link demoted by the liveness deadline.
+    Stall = 7,
+    /// Instant: a worker admitted mid-run (`arg` = worker id).
+    Admit = 8,
+    /// Instant: an injected chaos fault fired (`arg` = frame number).
+    Chaos = 9,
+    /// Instant: a dead link's jobs returned to the deck (`arg` = jobs).
+    Failover = 10,
+}
+
+impl SpanKind {
+    pub fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(code: u8) -> Option<SpanKind> {
+        Some(match code {
+            1 => SpanKind::Job,
+            2 => SpanKind::LocalMst,
+            3 => SpanKind::Panel,
+            4 => SpanKind::Fold,
+            5 => SpanKind::PeerFetch,
+            6 => SpanKind::Handshake,
+            7 => SpanKind::Stall,
+            8 => SpanKind::Admit,
+            9 => SpanKind::Chaos,
+            10 => SpanKind::Failover,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Job => "job",
+            SpanKind::LocalMst => "local_mst",
+            SpanKind::Panel => "panel",
+            SpanKind::Fold => "fold",
+            SpanKind::PeerFetch => "peer_fetch",
+            SpanKind::Handshake => "handshake",
+            SpanKind::Stall => "stall",
+            SpanKind::Admit => "admit",
+            SpanKind::Chaos => "chaos",
+            SpanKind::Failover => "failover",
+        }
+    }
+
+    /// Instant kinds have `start_ns == end_ns` and export as Chrome-trace
+    /// `ph:"i"` events rather than duration slices.
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Stall | SpanKind::Admit | SpanKind::Chaos | SpanKind::Failover
+        )
+    }
+}
+
+/// One timestamped interval (or instant, when `start_ns == end_ns`).
+/// Exactly [`crate::net::wire::SPAN_BYTES`] = 32 bytes on the wire:
+/// kind u8 · pad u8 · worker u16 · id u32 · arg u64 · start u64 · end u64.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub kind_code: u8,
+    /// Track the span belongs to (worker rank; leader uses its own rank 0
+    /// tracks only for fold/reduce work it does itself).
+    pub worker: u16,
+    /// Kind-scoped id: job id for `Job`, subset for `LocalMst`, peer for
+    /// `PeerFetch`, worker for `Admit`/`Stall`/`Failover`.
+    pub id: u32,
+    /// Kind-scoped payload (see [`SpanKind`] docs).
+    pub arg: u64,
+    /// Nanoseconds since the recording process's epoch (re-based onto the
+    /// leader's clock when shipped over the wire).
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Span {
+    pub fn kind(&self) -> Option<SpanKind> {
+        SpanKind::from_code(self.kind_code)
+    }
+}
+
+/// Severity for [`log!`](crate::obs_log). `DEMST_LOG` picks the maximum
+/// printed level: `off|error|warn|info|debug|trace` (default `info`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// 0 = off; otherwise the highest `Level` that prints. Parsed from
+/// `DEMST_LOG` once per process.
+fn max_level() -> u8 {
+    use std::sync::OnceLock;
+    static MAX: OnceLock<u8> = OnceLock::new();
+    *MAX.get_or_init(|| {
+        match std::env::var("DEMST_LOG").ok().as_deref() {
+            Some("off") | Some("0") | Some("none") => 0,
+            Some("error") => Level::Error as u8,
+            Some("warn") | Some("warning") => Level::Warn as u8,
+            Some("info") => Level::Info as u8,
+            Some("debug") => Level::Debug as u8,
+            Some("trace") => Level::Trace as u8,
+            // Unknown values fall back to the default rather than erroring:
+            // logging must never take a run down.
+            _ => Level::Info as u8,
+        }
+    })
+}
+
+pub fn level_enabled(level: Level) -> bool {
+    (level as u8) <= max_level()
+}
+
+/// Sink for [`log!`](crate::obs_log). Formatting is deferred: when the
+/// level is filtered out nothing is rendered.
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if level_enabled(level) {
+        eprintln!("[demst {}] {args}", level.name());
+    }
+}
+
+/// `obs::log!(warn, "fmt", args...)` — leveled stderr logging.
+///
+/// The first token is a literal level ident (`error|warn|info|debug|trace`);
+/// the rest is `format!` syntax. Filtered levels cost one memoized load and
+/// never format.
+#[macro_export]
+macro_rules! obs_log {
+    (error, $($t:tt)*) => { $crate::obs::emit($crate::obs::Level::Error, format_args!($($t)*)) };
+    (warn,  $($t:tt)*) => { $crate::obs::emit($crate::obs::Level::Warn,  format_args!($($t)*)) };
+    (info,  $($t:tt)*) => { $crate::obs::emit($crate::obs::Level::Info,  format_args!($($t)*)) };
+    (debug, $($t:tt)*) => { $crate::obs::emit($crate::obs::Level::Debug, format_args!($($t)*)) };
+    (trace, $($t:tt)*) => { $crate::obs::emit($crate::obs::Level::Trace, format_args!($($t)*)) };
+}
+pub use crate::obs_log as log;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kind_codes_roundtrip_and_stay_stable() {
+        for code in 1u8..=10 {
+            let k = SpanKind::from_code(code).expect("codes 1..=10 are assigned");
+            assert_eq!(k.code(), code);
+            assert!(!k.name().is_empty());
+        }
+        assert_eq!(SpanKind::from_code(0), None);
+        assert_eq!(SpanKind::from_code(11), None);
+        // Wire-stable pins: renumbering these is a wire break.
+        assert_eq!(SpanKind::Job.code(), 1);
+        assert_eq!(SpanKind::Fold.code(), 4);
+        assert_eq!(SpanKind::Failover.code(), 10);
+    }
+
+    #[test]
+    fn instant_kinds_are_exactly_the_point_events() {
+        let instants: Vec<_> =
+            (1u8..=10).filter_map(SpanKind::from_code).filter(|k| k.is_instant()).collect();
+        assert_eq!(
+            instants,
+            vec![SpanKind::Stall, SpanKind::Admit, SpanKind::Chaos, SpanKind::Failover]
+        );
+    }
+
+    #[test]
+    fn log_macro_compiles_at_every_level() {
+        // Smoke the macro plumbing; output goes to stderr and is not captured.
+        crate::obs::log!(trace, "trace {}", 1);
+        crate::obs::log!(debug, "debug {}", 2);
+        crate::obs::log!(info, "info {}", 3);
+        crate::obs::log!(warn, "warn {}", 4);
+        crate::obs::log!(error, "error {}", 5);
+        assert!(level_enabled(Level::Error) || max_level() == 0);
+    }
+}

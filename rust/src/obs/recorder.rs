@@ -1,0 +1,291 @@
+//! Per-thread span recording behind a run-token scheme.
+//!
+//! Design constraints, in order:
+//! 1. **Free when off.** With no active run, [`span`]/[`instant`] cost one
+//!    relaxed atomic load and allocate nothing — the pair-job hot path must
+//!    not move the e7/e8 numbers.
+//! 2. **Concurrent-test safe.** `cargo test` runs many engines in parallel
+//!    in one process. A global on/off flag would bleed spans across tests,
+//!    so every run gets a [`RunToken`]; threads opt in with [`adopt`]; each
+//!    buffered span is tagged with its run id; [`drain`] filters by token.
+//! 3. **Lock-free-ish.** Each thread appends to its own pre-reserved buffer
+//!    behind an uncontended mutex (taken only by the owning thread until
+//!    the drain at run end), registered once in a global list.
+//!
+//! Timestamps come from one process-wide monotonic epoch ([`now_ns`]);
+//! cross-process alignment happens at the leader when worker spans arrive
+//! on the wire carrying the worker's send-time clock.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::{Span, SpanKind};
+
+/// Number of runs currently recording. Recording is attempted only when
+/// nonzero — the single branch paid on the disabled hot path.
+static ACTIVE_RUNS: AtomicU64 = AtomicU64::new(0);
+/// Run ids start at 1; 0 means "this thread belongs to no run".
+static NEXT_RUN: AtomicU64 = AtomicU64::new(1);
+
+/// Handle for one recording session. Copyable so it can be captured by the
+/// worker-thread closures of a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunToken(u64);
+
+type SharedBuf = Arc<Mutex<Vec<(u64, Span)>>>;
+
+fn registry() -> &'static Mutex<Vec<SharedBuf>> {
+    static REGISTRY: OnceLock<Mutex<Vec<SharedBuf>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic nanoseconds since this process's first clock read. Safe to
+/// call whether or not recording is active.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+struct ThreadState {
+    run: u64,
+    buf: Option<SharedBuf>,
+}
+
+thread_local! {
+    static TLS: RefCell<ThreadState> = const { RefCell::new(ThreadState { run: 0, buf: None }) };
+}
+
+/// Start a recording session. Threads that should contribute spans call
+/// [`adopt`] with the returned token (the calling thread is adopted
+/// automatically). Balance with [`end_run`].
+pub fn begin_run() -> RunToken {
+    let token = RunToken(NEXT_RUN.fetch_add(1, Ordering::Relaxed));
+    ACTIVE_RUNS.fetch_add(1, Ordering::Relaxed);
+    adopt(token);
+    token
+}
+
+/// Attach the current thread to a run: spans it records from here on are
+/// tagged with (and drained by) this token.
+pub fn adopt(token: RunToken) {
+    TLS.with(|t| t.borrow_mut().run = token.0);
+}
+
+/// True when this thread's spans would actually be kept — use to skip
+/// span-argument bookkeeping (e.g. eval-counter deltas) when tracing is off.
+pub fn recording() -> bool {
+    if ACTIVE_RUNS.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    TLS.with(|t| t.borrow().run != 0)
+}
+
+fn push(span: Span) {
+    TLS.with(|t| {
+        let mut t = t.borrow_mut();
+        let run = t.run;
+        if run == 0 {
+            return;
+        }
+        let buf = t
+            .buf
+            .get_or_insert_with(|| {
+                // First span on this thread: allocate + register once.
+                let b: SharedBuf = Arc::new(Mutex::new(Vec::with_capacity(1024)));
+                registry().lock().unwrap().push(Arc::clone(&b));
+                b
+            })
+            .clone();
+        buf.lock().unwrap().push((run, span));
+    });
+}
+
+/// Record a completed interval with explicit timestamps — for spans whose
+/// start predates the run (e.g. a worker's handshake, clocked before the
+/// leader's `Setup` said whether to trace) or reconstructed at the leader
+/// for a worker that died without shipping its buffer.
+pub fn record(kind: SpanKind, worker: u16, id: u32, arg: u64, start_ns: u64, end_ns: u64) {
+    if !recording() {
+        return;
+    }
+    push(Span { kind_code: kind.code(), worker, id, arg, start_ns, end_ns });
+}
+
+/// Record a point event (start == end).
+pub fn instant(kind: SpanKind, worker: u16, id: u32, arg: u64) {
+    if !recording() {
+        return;
+    }
+    let t = now_ns();
+    push(Span { kind_code: kind.code(), worker, id, arg, start_ns: t, end_ns: t });
+}
+
+/// Open an interval; the span is recorded when the guard drops. Disabled
+/// recording makes this a stack-only no-op (no clock read, no allocation).
+pub fn span(kind: SpanKind, worker: u16, id: u32) -> SpanGuard {
+    let armed = recording();
+    SpanGuard {
+        kind,
+        worker,
+        id,
+        arg: 0,
+        start_ns: if armed { now_ns() } else { 0 },
+        armed,
+    }
+}
+
+/// RAII interval recorder returned by [`span`].
+pub struct SpanGuard {
+    kind: SpanKind,
+    worker: u16,
+    id: u32,
+    arg: u64,
+    start_ns: u64,
+    armed: bool,
+}
+
+impl SpanGuard {
+    /// Attach the kind-scoped payload (evals, FLOPs, bytes, …).
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            push(Span {
+                kind_code: self.kind.code(),
+                worker: self.worker,
+                id: self.id,
+                arg: self.arg,
+                start_ns: self.start_ns,
+                end_ns: now_ns(),
+            });
+        }
+    }
+}
+
+/// Remove and return every span recorded under `token`, across all threads
+/// that adopted it, in per-thread recording order.
+pub fn drain(token: RunToken) -> Vec<Span> {
+    let bufs: Vec<SharedBuf> = registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for buf in bufs {
+        let mut b = buf.lock().unwrap();
+        b.retain(|(run, s)| {
+            if *run == token.0 {
+                out.push(*s);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    out
+}
+
+/// Finish a session: drain its spans and drop the process-wide enable if
+/// this was the last active run.
+pub fn end_run(token: RunToken) -> Vec<Span> {
+    let spans = drain(token);
+    ACTIVE_RUNS.fetch_sub(1, Ordering::Relaxed);
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recording_is_a_no_op() {
+        // No run on this thread: guards and instants must record nothing.
+        TLS.with(|t| t.borrow_mut().run = 0);
+        {
+            let mut g = span(SpanKind::Job, 0, 7);
+            g.set_arg(99);
+            assert!(!g.armed());
+        }
+        instant(SpanKind::Stall, 0, 1, 0);
+        let token = begin_run();
+        // Nothing recorded before begin_run is attributed to this token.
+        assert!(end_run(token).is_empty());
+    }
+
+    #[test]
+    fn spans_are_tagged_and_drained_per_run() {
+        let token = begin_run();
+        {
+            let mut g = span(SpanKind::Job, 3, 11);
+            g.set_arg(42);
+        }
+        instant(SpanKind::Admit, 0, 5, 5);
+        let spans = end_run(token);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind(), Some(SpanKind::Job));
+        assert_eq!(spans[0].worker, 3);
+        assert_eq!(spans[0].id, 11);
+        assert_eq!(spans[0].arg, 42);
+        assert!(spans[0].end_ns >= spans[0].start_ns);
+        assert_eq!(spans[1].kind(), Some(SpanKind::Admit));
+        assert_eq!(spans[1].start_ns, spans[1].end_ns);
+        // A second drain finds nothing: the buffers were emptied.
+        assert!(drain(token).is_empty());
+    }
+
+    #[test]
+    fn concurrent_runs_do_not_bleed_spans() {
+        let token_a = begin_run();
+        let token_b_holder = std::thread::spawn(|| {
+            let token_b = begin_run();
+            instant(SpanKind::Chaos, 1, 100, 0);
+            token_b
+        })
+        .join()
+        .unwrap();
+        instant(SpanKind::Fold, 0, 200, 0);
+        let a = end_run(token_a);
+        let b = end_run(token_b_holder);
+        assert_eq!(a.len(), 1, "run A sees only its own span");
+        assert_eq!(a[0].id, 200);
+        assert_eq!(b.len(), 1, "run B sees only its own span");
+        assert_eq!(b[0].id, 100);
+    }
+
+    #[test]
+    fn spawned_threads_contribute_after_adopt() {
+        let token = begin_run();
+        let handles: Vec<_> = (0..4u16)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    adopt(token);
+                    for j in 0..8u32 {
+                        let _g = span(SpanKind::Job, w, u32::from(w) * 8 + j);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let spans = end_run(token);
+        assert_eq!(spans.len(), 32);
+        // Per-thread recording order is preserved: each worker's ids ascend.
+        for w in 0..4u16 {
+            let ids: Vec<u32> = spans.iter().filter(|s| s.worker == w).map(|s| s.id).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            assert_eq!(ids, sorted);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Versioned machine-readable run report (`demst run --report-out`).
+//!
+//! Serializes the full [`RunMetrics`], the per-worker breakdown, a span
+//! digest, and a config fingerprint as one JSON document, so experiment
+//! harnesses consume a run programmatically instead of scraping the
+//! printed summary lines. `scripts/check_run_report.py` validates the
+//! schema and the reconciliation invariants (e.g.
+//! `dist_evals == local_mst_evals + pair_evals`) in CI.
+
+use std::io::Write;
+use std::path::Path;
+
+use super::{json, SpanKind};
+use crate::config::RunConfig;
+use crate::coordinator::RunMetrics;
+
+/// Bump on any field rename/removal; additions are compatible.
+pub const REPORT_VERSION: u32 = 1;
+
+/// FNV-1a over the config's debug representation: a stable-within-a-build
+/// identity for "same knobs" comparisons across runs, mirroring the shard
+/// manifest's fingerprint idiom.
+pub fn config_fingerprint(cfg: &RunConfig) -> u64 {
+    let repr = format!("{cfg:?}");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in repr.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn span_digest(m: &RunMetrics) -> String {
+    let mut by_kind: Vec<(SpanKind, u64)> = Vec::new();
+    let mut job_evals: u64 = 0;
+    let mut local_mst_evals: u64 = 0;
+    for s in &m.spans {
+        let Some(kind) = s.kind() else { continue };
+        match by_kind.iter_mut().find(|(k, _)| *k == kind) {
+            Some((_, n)) => *n += 1,
+            None => by_kind.push((kind, 1)),
+        }
+        match kind {
+            SpanKind::Job => job_evals += s.arg,
+            SpanKind::LocalMst => local_mst_evals += s.arg,
+            _ => {}
+        }
+    }
+    by_kind.sort_by_key(|(k, _)| k.code());
+    let kinds = by_kind
+        .iter()
+        .map(|(k, n)| json::field(k.name(), &n.to_string()))
+        .collect::<Vec<_>>()
+        .join(", ");
+    format!(
+        "{{{}, {}, {}, {}}}",
+        json::field("total", &m.spans.len().to_string()),
+        json::field("by_kind", &format!("{{{kinds}}}")),
+        json::field("job_evals", &job_evals.to_string()),
+        json::field("local_mst_evals", &local_mst_evals.to_string()),
+    )
+}
+
+/// Render the report document.
+pub fn render_run_report(cfg: &RunConfig, m: &RunMetrics) -> String {
+    let config = [
+        json::field("fingerprint", &json::string(&format!("{:#018x}", config_fingerprint(cfg)))),
+        json::field("name", &json::string(&cfg.name)),
+        json::field("parts", &cfg.parts.to_string()),
+        json::field("workers", &cfg.workers.to_string()),
+        json::field("seed", &cfg.seed.to_string()),
+        json::field("kernel", &json::string(cfg.kernel.name())),
+        json::field("pair_kernel", &json::string(cfg.pair_kernel.name())),
+        json::field("transport", &json::string(cfg.transport.name())),
+        json::field("reduce_topology", &json::string(cfg.reduce_topology.name())),
+        json::field("pipeline_window", &cfg.pipeline_window.to_string()),
+    ]
+    .join(", ");
+
+    let metrics = [
+        json::field("wall_s", &json::num(m.wall.as_secs_f64())),
+        json::field("jobs", &m.jobs.to_string()),
+        json::field("dist_evals", &m.dist_evals.to_string()),
+        json::field("local_mst_evals", &m.local_mst_evals.to_string()),
+        json::field("pair_evals", &m.pair_evals.to_string()),
+        json::field("scatter_bytes", &m.scatter_bytes.to_string()),
+        json::field("gather_bytes", &m.gather_bytes.to_string()),
+        json::field("control_bytes", &m.control_bytes.to_string()),
+        json::field("messages", &m.messages.to_string()),
+        json::field("union_edges", &m.union_edges.to_string()),
+        json::field("jobs_stolen", &m.jobs_stolen.to_string()),
+        json::field("scatter_saved_bytes", &m.scatter_saved_bytes.to_string()),
+        json::field("panel_hits", &m.panel_hits.to_string()),
+        json::field("panel_misses", &m.panel_misses.to_string()),
+        json::field("panel_flops", &m.panel_flops.to_string()),
+        json::field("panel_time_s", &json::num(m.panel_time.as_secs_f64())),
+        json::field("panel_isa", &json::string(&m.panel_isa)),
+        json::field("panel_lanes", &m.panel_lanes.to_string()),
+        json::field("panel_threads_used", &m.panel_threads_used.to_string()),
+        json::field("reduce_folds", &m.reduce_folds.to_string()),
+        json::field("reduce_fold_edges", &m.reduce_fold_edges.to_string()),
+        json::field("pipeline_window", &m.pipeline_window.to_string()),
+        json::field("sharded", if m.sharded { "true" } else { "false" }),
+        json::field("leader_ingest_bytes", &m.leader_ingest_bytes.to_string()),
+        json::field("shard_local_bytes", &m.shard_local_bytes.to_string()),
+        json::field("leader_control_bytes", &m.leader_control_bytes.to_string()),
+        json::field("leader_data_bytes", &m.leader_data_bytes.to_string()),
+        json::field("peer_bytes", &m.peer_bytes.to_string()),
+        json::field("peer_ships", &m.peer_ships.to_string()),
+        json::field("worker_failures", &m.worker_failures.to_string()),
+        json::field("jobs_reassigned", &m.jobs_reassigned.to_string()),
+        json::field("stalls_detected", &m.stalls_detected.to_string()),
+        json::field("heartbeats_sent", &m.heartbeats_sent.to_string()),
+        json::field("workers_admitted", &m.workers_admitted.to_string()),
+        json::field("chaos_faults_injected", &m.chaos_faults_injected.to_string()),
+        json::field("kernel", &json::string(&m.kernel)),
+        json::field("pair_kernel", &json::string(&m.pair_kernel)),
+        json::field("transport", &json::string(&m.transport)),
+        json::field("reduce_topology", &json::string(&m.reduce_topology)),
+        json::field("peer_route", if m.peer_route { "true" } else { "false" }),
+        json::field("stream_reduce", if m.stream_reduce { "true" } else { "false" }),
+        json::field("busy_efficiency", &json::num(m.busy_efficiency())),
+        json::field("imbalance", &json::num(m.imbalance())),
+        json::field("phase_local_mst_s", &json::num(m.phase_local_mst.as_secs_f64())),
+        json::field("phase_pair_s", &json::num(m.phase_pair.as_secs_f64())),
+        json::field("phase_reduce_s", &json::num(m.phase_reduce.as_secs_f64())),
+    ]
+    .join(",\n    ");
+
+    let workers = m
+        .worker_busy
+        .iter()
+        .enumerate()
+        .map(|(w, b)| {
+            format!(
+                "{{{}, {}}}",
+                json::field("worker", &w.to_string()),
+                json::field("busy_s", &json::num(b.as_secs_f64()))
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ");
+
+    format!(
+        "{{\n  {},\n  {},\n  {},\n  {},\n  {},\n  {}\n}}\n",
+        json::field("report_version", &REPORT_VERSION.to_string()),
+        json::field("tool", &json::string("demst")),
+        json::field("config", &format!("{{{config}}}")),
+        json::field("metrics", &format!("{{\n    {metrics}\n  }}")),
+        json::field("workers", &format!("[{workers}]")),
+        json::field("spans", &span_digest(m)),
+    )
+}
+
+pub fn write_run_report(path: &Path, cfg: &RunConfig, m: &RunMetrics) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render_run_report(cfg, m).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Span;
+    use std::time::Duration;
+
+    #[test]
+    fn fingerprint_is_stable_and_knob_sensitive() {
+        let a = RunConfig::default();
+        let mut b = RunConfig::default();
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        b.parts = 9;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&b));
+    }
+
+    #[test]
+    fn report_carries_version_metrics_workers_and_span_digest() {
+        let cfg = RunConfig::default();
+        let m = RunMetrics {
+            jobs: 6,
+            dist_evals: 100,
+            local_mst_evals: 40,
+            pair_evals: 60,
+            worker_busy: vec![Duration::from_millis(250), Duration::from_millis(750)],
+            spans: vec![
+                Span {
+                    kind_code: SpanKind::Job.code(),
+                    worker: 0,
+                    id: 1,
+                    arg: 35,
+                    start_ns: 0,
+                    end_ns: 10,
+                },
+                Span {
+                    kind_code: SpanKind::Job.code(),
+                    worker: 1,
+                    id: 2,
+                    arg: 25,
+                    start_ns: 0,
+                    end_ns: 10,
+                },
+                Span {
+                    kind_code: SpanKind::LocalMst.code(),
+                    worker: 0,
+                    id: 0,
+                    arg: 40,
+                    start_ns: 0,
+                    end_ns: 5,
+                },
+            ],
+            ..Default::default()
+        };
+        let doc = render_run_report(&cfg, &m);
+        assert!(doc.contains("\"report_version\": 1"), "{doc}");
+        assert!(doc.contains("\"fingerprint\": \"0x"), "{doc}");
+        assert!(doc.contains("\"jobs\": 6"), "{doc}");
+        assert!(doc.contains("\"dist_evals\": 100"), "{doc}");
+        assert!(doc.contains("\"local_mst_evals\": 40"), "{doc}");
+        assert!(doc.contains("\"pair_evals\": 60"), "{doc}");
+        assert!(doc.contains("\"busy_s\": 0.25"), "{doc}");
+        assert!(doc.contains("\"busy_s\": 0.75"), "{doc}");
+        // span digest reconciles with the metrics by construction here
+        assert!(doc.contains("\"total\": 3"), "{doc}");
+        assert!(doc.contains("\"job\": 2"), "{doc}");
+        assert!(doc.contains("\"local_mst\": 1"), "{doc}");
+        assert!(doc.contains("\"job_evals\": 60"), "{doc}");
+        assert!(doc.contains("\"local_mst_evals\": 40"), "{doc}");
+    }
+
+    #[test]
+    fn report_without_spans_has_an_empty_digest() {
+        let doc = render_run_report(&RunConfig::default(), &RunMetrics::default());
+        assert!(doc.contains("\"total\": 0"), "{doc}");
+        assert!(doc.contains("\"by_kind\": {}"), "{doc}");
+    }
+}

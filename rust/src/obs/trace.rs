@@ -1,0 +1,141 @@
+//! Chrome-trace / Perfetto JSON exporter (`demst run --trace-out`).
+//!
+//! Emits the JSON Array Format that `chrome://tracing`, Perfetto UI, and
+//! `speedscope` all ingest: one named track per worker (plus one for the
+//! leader's own fold/reduce work), a `ph:"X"` duration slice per recorded
+//! interval span, and a `ph:"i"` instant per point event (stall, admit,
+//! chaos fault, failover). Timestamps are microseconds on the leader's
+//! clock — worker spans were already re-based when they came off the wire.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::Path;
+
+use super::{json, Span};
+use crate::coordinator::RunMetrics;
+
+/// Track id the leader records its own spans under. Worker ranks are
+/// u8-sized on the wire, so the top of the u16 range can never collide.
+pub const LEADER_TRACK: u16 = u16::MAX;
+
+fn track_name(worker: u16) -> String {
+    if worker == LEADER_TRACK {
+        "leader".to_string()
+    } else {
+        format!("worker {worker}")
+    }
+}
+
+fn event(span: &Span) -> String {
+    let name = span.kind().map_or("unknown", |k| k.name());
+    let ts = json::num(span.start_ns as f64 / 1000.0);
+    let args = format!(
+        "{{{}, {}}}",
+        json::field("id", &span.id.to_string()),
+        json::field("arg", &span.arg.to_string())
+    );
+    let instant = span.kind().is_none_or(|k| k.is_instant());
+    if instant {
+        format!(
+            "{{{}, \"ph\": \"i\", \"s\": \"t\", \"ts\": {ts}, \"pid\": 0, \"tid\": {}, \"cat\": \"demst\", \"args\": {args}}}",
+            json::field("name", &json::string(name)),
+            span.worker
+        )
+    } else {
+        let dur = json::num(span.end_ns.saturating_sub(span.start_ns) as f64 / 1000.0);
+        format!(
+            "{{{}, \"ph\": \"X\", \"ts\": {ts}, \"dur\": {dur}, \"pid\": 0, \"tid\": {}, \"cat\": \"demst\", \"args\": {args}}}",
+            json::field("name", &json::string(name)),
+            span.worker
+        )
+    }
+}
+
+/// Render the full trace document from the run's reassembled spans.
+pub fn render_chrome_trace(metrics: &RunMetrics) -> String {
+    let tracks: BTreeSet<u16> = metrics.spans.iter().map(|s| s.worker).collect();
+    let mut events: Vec<String> = Vec::with_capacity(metrics.spans.len() + tracks.len());
+    for &t in &tracks {
+        events.push(format!(
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 0, \"tid\": {t}, \"args\": {{{}}}}}",
+            json::field("name", &json::string(&track_name(t)))
+        ));
+    }
+    for span in &metrics.spans {
+        events.push(event(span));
+    }
+    let mut out = String::from("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+pub fn write_chrome_trace(path: &Path, metrics: &RunMetrics) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(render_chrome_trace(metrics).as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SpanKind;
+
+    fn metrics_with(spans: Vec<Span>) -> RunMetrics {
+        RunMetrics { spans, ..Default::default() }
+    }
+
+    #[test]
+    fn duration_and_instant_events_render_with_tracks() {
+        let m = metrics_with(vec![
+            Span {
+                kind_code: SpanKind::Job.code(),
+                worker: 1,
+                id: 7,
+                arg: 1234,
+                start_ns: 2_000,
+                end_ns: 5_500,
+            },
+            Span {
+                kind_code: SpanKind::Admit.code(),
+                worker: LEADER_TRACK,
+                id: 2,
+                arg: 2,
+                start_ns: 9_000,
+                end_ns: 9_000,
+            },
+        ]);
+        let doc = render_chrome_trace(&m);
+        assert!(doc.contains("\"traceEvents\""), "{doc}");
+        assert!(doc.contains("\"name\": \"job\""), "{doc}");
+        assert!(doc.contains("\"ph\": \"X\""), "{doc}");
+        assert!(doc.contains("\"ts\": 2, \"dur\": 3.5"), "µs with fraction: {doc}");
+        assert!(doc.contains("\"name\": \"admit\""), "{doc}");
+        assert!(doc.contains("\"ph\": \"i\""), "{doc}");
+        assert!(doc.contains("\"worker 1\""), "{doc}");
+        assert!(doc.contains("\"leader\""), "{doc}");
+        assert!(doc.contains("\"id\": 7"), "{doc}");
+        assert!(doc.contains("\"arg\": 1234"), "{doc}");
+    }
+
+    #[test]
+    fn empty_timeline_is_still_a_valid_document() {
+        let doc = render_chrome_trace(&RunMetrics::default());
+        assert!(doc.starts_with('{') && doc.trim_end().ends_with('}'));
+        assert!(doc.contains("\"traceEvents\": [\n\n]"), "{doc}");
+    }
+
+    #[test]
+    fn unknown_kind_codes_degrade_to_instants_not_panics() {
+        // A newer worker could ship a kind this leader doesn't know.
+        let m = metrics_with(vec![Span {
+            kind_code: 200,
+            worker: 0,
+            id: 1,
+            arg: 0,
+            start_ns: 10,
+            end_ns: 20,
+        }]);
+        let doc = render_chrome_trace(&m);
+        assert!(doc.contains("\"unknown\""), "{doc}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Observability reconciliation: the span timeline, the Chrome-trace
+//! export, and the run report must agree **exactly** with `RunMetrics` —
+//! the telemetry is an account of the run, not an approximation of it.
+//!
+//! Two layers:
+//! - an in-process traced run where every eval is attributable: span counts
+//!   and per-span eval args must sum to the metric counters bit-exactly;
+//! - the acceptance scenario: a *sharded tcp* run with a worker killed
+//!   mid-run — the reassembled timeline must still contain a job span for
+//!   every executed pair job (the dead worker's are synthesized at the
+//!   leader from result receipt times) plus the failover instant, and the
+//!   trace document must stay valid Chrome-trace JSON.
+
+use demst::config::{KernelChoice, PairKernelChoice, RunConfig, TransportChoice};
+use demst::coordinator::run_distributed;
+use demst::data::Dataset;
+use demst::geometry::MetricKind;
+use demst::net::launch;
+use demst::net::worker::CHAOS_EXIT_ENV;
+use demst::obs::report::render_run_report;
+use demst::obs::trace::render_chrome_trace;
+use demst::obs::{Span, SpanKind};
+use demst::util::prng::Pcg64;
+use std::collections::HashSet;
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+fn float_dataset(seed: u64, n: usize, d: usize) -> Dataset {
+    let mut rng = Pcg64::seeded(seed);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+    Dataset::new(n, d, data)
+}
+
+fn spans_of(spans: &[Span], kind: SpanKind) -> Vec<&Span> {
+    spans.iter().filter(|s| s.kind() == Some(kind)).collect()
+}
+
+/// In-process traced run: every span arg is an exact per-thread eval delta
+/// (bipartite pair solvers own their counters; Prim over m points evaluates
+/// exactly C(m,2)), so the timeline must reconcile with the counters to the
+/// last eval: Σ job args == pair_evals, Σ local_mst args == local_mst_evals,
+/// and their sum is dist_evals.
+#[test]
+fn traced_run_spans_reconcile_exactly_with_metrics() {
+    let ds = float_dataset(9500, 140, 8);
+    let parts = 5usize; // 10 pair jobs
+    let mut cfg = RunConfig {
+        parts,
+        workers: 3,
+        kernel: KernelChoice::PrimDense,
+        pair_kernel: PairKernelChoice::BipartiteMerge,
+        ..Default::default()
+    };
+    cfg.obs.trace = true;
+    let out = run_distributed(&ds, &cfg).unwrap();
+    let m = &out.metrics;
+    assert!(!m.spans.is_empty(), "tracing on must record spans");
+
+    let jobs = spans_of(&m.spans, SpanKind::Job);
+    assert_eq!(jobs.len(), m.jobs as usize, "one job span per executed pair job");
+    let job_ids: HashSet<u32> = jobs.iter().map(|s| s.id).collect();
+    assert_eq!(job_ids.len(), jobs.len(), "job span ids are unique");
+    let job_evals: u64 = jobs.iter().map(|s| s.arg).sum();
+    assert_eq!(job_evals, m.pair_evals, "job span args sum to pair_evals");
+
+    let locals = spans_of(&m.spans, SpanKind::LocalMst);
+    assert_eq!(locals.len(), parts, "one local_mst span per subset");
+    let local_evals: u64 = locals.iter().map(|s| s.arg).sum();
+    assert_eq!(local_evals, m.local_mst_evals, "local_mst span args sum to local_mst_evals");
+    assert_eq!(job_evals + local_evals, m.dist_evals, "spans account for every distance eval");
+
+    for s in &m.spans {
+        assert!(s.end_ns >= s.start_ns, "spans are forward in time: {s:?}");
+    }
+    // satellite (b): the printed per-worker roster derives from the final
+    // fleet — with no admissions that is exactly the starting worker count
+    assert_eq!(m.worker_busy.len(), cfg.workers, "per-worker roster covers the fleet");
+
+    // --report-out document carries the same numbers verbatim
+    let report = render_run_report(&cfg, m);
+    for needle in [
+        format!("\"jobs\": {}", m.jobs),
+        format!("\"dist_evals\": {}", m.dist_evals),
+        format!("\"pair_evals\": {}", m.pair_evals),
+        format!("\"job_evals\": {}", m.pair_evals),
+        format!("\"local_mst_evals\": {}", m.local_mst_evals),
+        format!("\"total\": {}", m.spans.len()),
+        format!("\"job\": {}", m.jobs),
+        format!("\"local_mst\": {parts}"),
+    ] {
+        assert!(report.contains(&needle), "report lacks {needle}:\n{report}");
+    }
+
+    // --trace-out document: one duration event per span, one named track
+    // per contributing worker
+    let trace = render_chrome_trace(m);
+    assert_eq!(
+        trace.matches("\"name\": \"job\"").count(),
+        jobs.len(),
+        "one trace event per job span"
+    );
+    assert_eq!(
+        trace.matches("\"name\": \"local_mst\"").count(),
+        parts,
+        "one trace event per local_mst span"
+    );
+    let tracks: HashSet<u16> = m.spans.iter().map(|s| s.worker).collect();
+    assert_eq!(
+        trace.matches("\"thread_name\"").count(),
+        tracks.len(),
+        "one named track per contributing thread"
+    );
+}
+
+/// With tracing off (the default), the recorder must stay disarmed on the
+/// job hot path and the run must carry zero spans.
+#[test]
+fn untraced_run_records_nothing() {
+    let ds = float_dataset(9501, 80, 6);
+    let cfg = RunConfig {
+        parts: 4,
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        pair_kernel: PairKernelChoice::BipartiteMerge,
+        ..Default::default()
+    };
+    let out = run_distributed(&ds, &cfg).unwrap();
+    assert!(out.metrics.spans.is_empty(), "no tracing, no spans");
+    assert!(!demst::obs::recording(), "recorder stays disarmed after an untraced run");
+}
+
+/// Acceptance scenario: a sharded tcp run with a worker killed mid-run.
+/// The dead worker never ships its span buffer, yet the reassembled
+/// timeline must contain a job span for **every** executed pair job (the
+/// leader synthesizes the missing ones from its job-receipt log), plus the
+/// failover instant for the death — and the exported trace stays a valid
+/// Chrome-trace document with one event per job.
+#[test]
+fn sharded_tcp_run_with_killed_worker_covers_every_job_span() {
+    let ds = float_dataset(9502, 150, 6);
+    let parts = 6usize; // 15 pair jobs: plenty left when the chaos worker dies
+    let dir = std::env::temp_dir().join("demst_obs_shards");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (manifest, manifest_path): (demst::shard::Manifest, PathBuf) =
+        demst::shard::write_dataset_shards(
+            &dir,
+            "obs_kill",
+            &ds,
+            parts,
+            demst::decomp::PartitionStrategy::Block,
+            0,
+            MetricKind::SqEuclid,
+        )
+        .unwrap();
+
+    let mut cfg = RunConfig {
+        parts,
+        workers: 2,
+        kernel: KernelChoice::PrimDense,
+        pair_kernel: PairKernelChoice::BipartiteMerge,
+        strategy: demst::decomp::PartitionStrategy::Block,
+        transport: TransportChoice::Tcp,
+        listen: Some("127.0.0.1:0".into()),
+        shard_manifest: Some(manifest_path.clone()),
+        // inline tree shipping: replanned jobs must not depend on fetching
+        // cached trees from the worker that just died
+        peer_route: Some(false),
+        ..Default::default()
+    };
+    cfg.obs.trace = true;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let manifest_arg = manifest_path.to_str().unwrap().to_string();
+    // Both workers hold every shard, so the survivor can absorb any
+    // reassigned job. Worker 1 is rigged to die after its second pair job.
+    let mut healthy = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr, "--shard", &manifest_arg])
+        .spawn()
+        .unwrap();
+    let mut chaotic = std::process::Command::new(env!("CARGO_BIN_EXE_demst"))
+        .args(["worker", "--connect", &addr, "--shard", &manifest_arg])
+        .env(CHAOS_EXIT_ENV, "2")
+        .spawn()
+        .unwrap();
+
+    let run = launch::serve_sharded(&manifest, &cfg, &listener)
+        .unwrap_or_else(|e| panic!("sharded kill run failed: {e:#}"));
+    let m = &run.metrics;
+    assert_eq!(m.worker_failures, 1, "the chaos worker must be seen to die");
+    assert!(m.jobs_reassigned > 0, "its claimed jobs must fail over");
+    assert_eq!(m.jobs, 15, "every job recorded exactly once");
+    assert!(m.sharded);
+
+    let job_ids: HashSet<u32> = m
+        .spans
+        .iter()
+        .filter(|s| s.kind() == Some(SpanKind::Job))
+        .map(|s| s.id)
+        .collect();
+    assert_eq!(
+        job_ids.len(),
+        m.jobs as usize,
+        "a job span survives for every executed pair job, dead worker included"
+    );
+    assert!(
+        m.spans.iter().any(|s| s.kind() == Some(SpanKind::Failover)),
+        "the death must appear as a failover instant"
+    );
+    assert!(
+        m.spans.iter().any(|s| s.kind() == Some(SpanKind::Handshake)),
+        "the survivor's handshake span made it back"
+    );
+
+    let trace = render_chrome_trace(m);
+    assert!(trace.starts_with('{') && trace.trim_end().ends_with('}'));
+    assert!(trace.contains("\"displayTimeUnit\""));
+    assert!(trace.contains("\"name\": \"failover\""), "failover instant exported");
+    assert_eq!(
+        trace.matches("\"name\": \"job\"").count(),
+        m.jobs as usize,
+        "trace carries one job event per executed pair job"
+    );
+
+    let report = render_run_report(&cfg, m);
+    assert!(report.contains("\"worker_failures\": 1"), "{report}");
+    assert!(report.contains(&format!("\"jobs\": {}", m.jobs)), "{report}");
+
+    assert!(healthy.wait().unwrap().success(), "survivor must exit 0");
+    assert_eq!(chaotic.wait().unwrap().code(), Some(113), "chaos exit code");
+}

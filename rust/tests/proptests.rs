@@ -530,6 +530,21 @@ fn prop_wire_encoding_roundtrips_bit_identically() {
                 panel_isa: (g.rng().next_u64() % 4) as u8,
                 peer_tx_bytes: g.rng().next_u64(),
                 peer_ships: g.rng().next_u64() as u32,
+                // wire v6: span block between the stats block and the tree —
+                // random kinds (known and unknown codes pass through opaque),
+                // random payloads, bit-identical after the roundtrip
+                spans: (0..g.usize_in(0..20))
+                    .map(|_| demst::obs::Span {
+                        kind_code: (g.rng().next_u64() % 256) as u8,
+                        worker: g.usize_in(0..65536) as u16,
+                        id: g.rng().next_u64() as u32,
+                        arg: g.rng().next_u64(),
+                        start_ns: g.rng().next_u64(),
+                        end_ns: g.rng().next_u64(),
+                    })
+                    .collect(),
+                now_ns: g.rng().next_u64(),
+                chaos_faults: g.rng().next_u64() as u32,
             },
             None,
         );
@@ -627,6 +642,7 @@ fn prop_wire_decoders_survive_hostile_bytes() {
             pair_kernel: 0,
             reduce_tree: g.bool_p(0.5),
             mid_run: g.bool_p(0.5),
+            trace: g.bool_p(0.5),
             manifest: g.rng().next_u64(),
             liveness_ms: g.rng().next_u64() as u32,
             part_sizes: ctx.part_sizes.clone(),
@@ -862,6 +878,90 @@ fn prop_knn_weight_dominates_exact() {
             assert!(w >= exact - 1e-3, "knn={w} < exact={exact}");
         } else {
             assert!(r.forest.len() < n - 1);
+        }
+    });
+}
+
+#[test]
+fn prop_recorded_spans_are_well_formed_per_thread() {
+    // Recorder laws under random workloads: every guard-recorded interval
+    // is monotonic (end >= start), intervals opened strictly inside another
+    // on the same thread are properly nested (RAII guards cannot cross),
+    // per-thread recording order preserves start-time order, and instants
+    // are points. These are the invariants the Chrome-trace exporter leans
+    // on to draw non-overlapping slices per track.
+    use demst::obs::{self, SpanKind};
+
+    Runner::new("span recorder laws", 0xC4, 12).run(|g| {
+        let token = obs::begin_run();
+        let threads = g.usize_in(1..4);
+        let per_thread: Vec<usize> = (0..threads).map(|_| g.usize_in(1..12)).collect();
+        let nest: Vec<bool> = (0..threads).map(|_| g.bool_p(0.5)).collect();
+        std::thread::scope(|s| {
+            for (w, (&jobs, &nested)) in per_thread.iter().zip(&nest).enumerate() {
+                s.spawn(move || {
+                    obs::adopt(token);
+                    for j in 0..jobs {
+                        let mut outer =
+                            obs::span(SpanKind::Job, w as u16, (w * 100 + j) as u32);
+                        outer.set_arg(j as u64);
+                        if nested {
+                            // a panel span strictly inside its job span
+                            let _inner =
+                                obs::span(SpanKind::Panel, w as u16, (w * 100 + j) as u32);
+                        }
+                        if j % 3 == 0 {
+                            obs::instant(SpanKind::Chaos, w as u16, j as u32, 0);
+                        }
+                    }
+                });
+            }
+        });
+        let spans = obs::end_run(token);
+        let expected: usize = per_thread
+            .iter()
+            .zip(&nest)
+            .map(|(&jobs, &nested)| {
+                jobs * (1 + usize::from(nested)) + jobs.div_ceil(3)
+            })
+            .sum();
+        assert_eq!(spans.len(), expected, "every span recorded exactly once");
+        for s in &spans {
+            assert!(s.end_ns >= s.start_ns, "spans are monotonic");
+            if s.kind().is_some_and(|k| k.is_instant()) {
+                assert_eq!(s.start_ns, s.end_ns, "instants are points");
+            }
+        }
+        for w in 0..threads as u16 {
+            // Per-thread recording order: drop order means inner (Panel)
+            // precedes outer (Job) in the buffer, but *within a kind* the
+            // start times must ascend — the thread ran its jobs in order.
+            for kind in [SpanKind::Job, SpanKind::Panel] {
+                let starts: Vec<u64> = spans
+                    .iter()
+                    .filter(|s| s.worker == w && s.kind() == Some(kind))
+                    .map(|s| s.start_ns)
+                    .collect();
+                assert!(
+                    starts.windows(2).all(|p| p[0] <= p[1]),
+                    "thread {w} {kind:?} spans start in order: {starts:?}"
+                );
+            }
+            // Proper nesting: each job's panel span lies inside its job span.
+            for s in spans.iter().filter(|s| s.worker == w) {
+                if s.kind() == Some(SpanKind::Panel) {
+                    let outer = spans
+                        .iter()
+                        .find(|o| {
+                            o.worker == w && o.id == s.id && o.kind() == Some(SpanKind::Job)
+                        })
+                        .expect("every panel span has its enclosing job span");
+                    assert!(
+                        outer.start_ns <= s.start_ns && s.end_ns <= outer.end_ns,
+                        "RAII guards nest properly"
+                    );
+                }
+            }
         }
     });
 }

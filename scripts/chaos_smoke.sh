@@ -59,8 +59,11 @@ run_leg() {
 
     local LOG="$OUT/demst_chaos_leader_${FAULT}_${TOPO}.log"
     local CSV="$OUT/demst_chaos_tcp_${FAULT}_${TOPO}.csv"
+    local TRACE="$OUT/demst_chaos_trace_${FAULT}_${TOPO}.json"
+    local REPORT="$OUT/demst_chaos_run_${FAULT}_${TOPO}.json"
     : > "$LOG"
     "$BIN" run "${TARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+        --trace-out "$TRACE" --report-out "$REPORT" \
         --out-mst "$CSV" > "$LOG" 2>&1 &
     local LEADER=$!
 
@@ -140,6 +143,11 @@ run_leg() {
 
     grep -q "$WITNESS" "$LOG" \
         || { echo "chaos-smoke[$LEG]: leader log lacks the '$WITNESS' witness" >&2; exit 1; }
+
+    # the run's telemetry must survive the fault: valid trace JSON, a job
+    # span for every executed pair job, and a stall/failover/admit instant
+    python3 scripts/check_run_report.py "$REPORT" --trace "$TRACE" --chaos \
+        || { echo "chaos-smoke[$LEG]: run report / trace validation failed" >&2; exit 1; }
 
     cmp "$CSV" "$OUT/demst_chaos_sim.csv" \
         || { echo "chaos-smoke[$LEG]: post-recovery MST differs from sim" >&2; exit 1; }

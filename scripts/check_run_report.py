@@ -1,0 +1,161 @@
+#!/usr/bin/env python3
+"""Run-report guard: validate a ``demst run --report-out`` JSON document.
+
+Run by the CI tcp-smoke / chaos-smoke jobs (and ``make`` smoke targets)
+against the freshly written report. It fails loudly when the report stops
+being machine-readable or its numbers stop reconciling — e.g. a refactor
+dropping a metrics field, the span digest drifting from the counters, or
+the per-worker roster losing a mid-run-admitted worker.
+
+Checks:
+- schema: versioned top level, config fingerprint, required metric keys,
+  per-worker roster sized ``config.workers + workers_admitted``;
+- accounting: ``dist_evals == local_mst_evals + pair_evals`` exactly;
+- span digest (when tracing was on): one job span per executed pair job;
+  span eval sums reconcile with the counters — exactly on clean runs,
+  as a lower bound under ``--chaos`` (a killed worker's spans are
+  synthesized at the leader with zero eval args);
+- ``--trace TRACE.json``: the Chrome-trace export parses as JSON, carries
+  one ``job`` duration event per pair job, and (under ``--chaos``) the
+  failure shows up as a ``stall``/``failover`` instant.
+
+Usage: check_run_report.py RUN.json [--trace TRACE.json] [--chaos]
+"""
+
+import json
+import sys
+
+REQUIRED_TOP_KEYS = {"report_version", "tool", "config", "metrics", "workers",
+                     "spans"}
+REQUIRED_METRIC_KEYS = {
+    "wall_s", "jobs", "dist_evals", "local_mst_evals", "pair_evals",
+    "scatter_bytes", "gather_bytes", "control_bytes", "messages",
+    "union_edges", "jobs_stolen", "panel_hits", "panel_misses",
+    "panel_flops", "reduce_folds", "reduce_fold_edges", "peer_bytes",
+    "peer_ships", "worker_failures", "jobs_reassigned", "stalls_detected",
+    "heartbeats_sent", "workers_admitted", "chaos_faults_injected",
+    "busy_efficiency", "imbalance",
+}
+
+
+def check_report(path, chaos):
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return None, [f"{path}: unreadable ({e})"]
+    missing = REQUIRED_TOP_KEYS - doc.keys()
+    if missing:
+        return None, [f"{path}: missing top-level keys {sorted(missing)}"]
+    if doc["report_version"] != 1:
+        errors.append(f"{path}: report_version {doc['report_version']!r} != 1")
+    if doc["tool"] != "demst":
+        errors.append(f"{path}: tool {doc['tool']!r} != 'demst'")
+
+    config = doc["config"]
+    fp = config.get("fingerprint", "")
+    if not (isinstance(fp, str) and fp.startswith("0x") and len(fp) == 18):
+        errors.append(f"{path}: config.fingerprint {fp!r} is not an 0x-prefixed u64")
+
+    metrics = doc["metrics"]
+    lost = REQUIRED_METRIC_KEYS - metrics.keys()
+    if lost:
+        errors.append(f"{path}: metrics keys disappeared: {sorted(lost)}")
+        return doc, errors
+
+    if metrics["dist_evals"] != metrics["local_mst_evals"] + metrics["pair_evals"]:
+        errors.append(
+            f"{path}: eval decomposition broken: dist_evals "
+            f"{metrics['dist_evals']} != local_mst {metrics['local_mst_evals']}"
+            f" + pair {metrics['pair_evals']}")
+
+    # satellite: the roster must cover the *final* fleet — starting workers
+    # plus every mid-run admission
+    expect_roster = config.get("workers", 0) + metrics["workers_admitted"]
+    if len(doc["workers"]) != expect_roster:
+        errors.append(
+            f"{path}: per-worker roster has {len(doc['workers'])} rows, "
+            f"expected {expect_roster} (workers + workers_admitted)")
+
+    spans = doc["spans"]
+    if spans.get("total", 0) > 0:
+        by_kind = spans.get("by_kind", {})
+        if by_kind.get("job", 0) != metrics["jobs"]:
+            errors.append(
+                f"{path}: {by_kind.get('job', 0)} job spans for "
+                f"{metrics['jobs']} executed jobs")
+        job_evals = spans.get("job_evals", 0)
+        if chaos:
+            # a killed worker's job spans are synthesized with arg 0
+            if job_evals > metrics["pair_evals"]:
+                errors.append(
+                    f"{path}: job span evals {job_evals} exceed pair_evals "
+                    f"{metrics['pair_evals']}")
+        elif job_evals != metrics["pair_evals"]:
+            errors.append(
+                f"{path}: job span evals {job_evals} != pair_evals "
+                f"{metrics['pair_evals']}")
+    return doc, errors
+
+
+def check_trace(path, report, chaos):
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: not valid Chrome-trace JSON ({e})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents"]
+    for ev in events:
+        if not {"name", "ph", "pid", "tid"} <= ev.keys():
+            errors.append(f"{path}: malformed event {ev!r}")
+            break
+    jobs = [e for e in events if e.get("name") == "job" and e.get("ph") == "X"]
+    expect = report["metrics"]["jobs"] if report else None
+    if expect is not None and len(jobs) != expect:
+        errors.append(f"{path}: {len(jobs)} job slices for {expect} executed jobs")
+    if not any(e.get("ph") == "M" and e.get("name") == "thread_name"
+               for e in events):
+        errors.append(f"{path}: no named tracks (thread_name metadata)")
+    if chaos and not any(e.get("name") in ("stall", "failover", "admit")
+                         and e.get("ph") == "i" for e in events):
+        errors.append(f"{path}: chaos run but no stall/failover/admit instant")
+    return errors
+
+
+def main(argv):
+    if not argv:
+        print("usage: check_run_report.py RUN.json [--trace TRACE.json] "
+              "[--chaos]", file=sys.stderr)
+        return 2
+    chaos = "--chaos" in argv
+    argv = [a for a in argv if a != "--chaos"]
+    trace_path = None
+    if "--trace" in argv:
+        i = argv.index("--trace")
+        try:
+            trace_path = argv[i + 1]
+        except IndexError:
+            print("--trace requires a path", file=sys.stderr)
+            return 2
+        del argv[i:i + 2]
+    if len(argv) != 1:
+        print("exactly one RUN.json expected", file=sys.stderr)
+        return 2
+
+    report, errors = check_report(argv[0], chaos)
+    if trace_path:
+        errors.extend(check_trace(trace_path, report, chaos))
+    for err in errors:
+        print(f"REPORT ERROR: {err}", file=sys.stderr)
+    if not errors:
+        checked = argv[0] if not trace_path else f"{argv[0]} + {trace_path}"
+        print(f"run report OK: {checked}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -23,6 +23,8 @@ fi
 LOG="$OUT/demst_smoke_leader.log"
 : > "$LOG"
 "$BIN" run "${ARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+    --trace-out "$OUT/demst_smoke_trace.json" \
+    --report-out "$OUT/demst_smoke_run.json" \
     --out-mst "$OUT/demst_smoke_tcp.csv" > "$LOG" 2>&1 &
 LEADER=$!
 
@@ -52,4 +54,10 @@ cat "$LOG"
 
 cmp "$OUT/demst_smoke_tcp.csv" "$OUT/demst_smoke_sim.csv" \
     || { echo "tcp-smoke: tcp and sim MSTs differ" >&2; exit 1; }
+
+# the observability exports must validate and reconcile with the counters
+python3 scripts/check_run_report.py "$OUT/demst_smoke_run.json" \
+    --trace "$OUT/demst_smoke_trace.json" \
+    || { echo "tcp-smoke: run report / trace validation failed" >&2; exit 1; }
+
 sha256sum "$OUT/demst_smoke_tcp.csv" | awk '{print "tcp-smoke: OK, mst checksum " $1}'
