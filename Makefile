@@ -1,7 +1,7 @@
 # Convenience targets. The Rust build needs no artifacts; `make artifacts`
 # requires a python environment with jax (the AOT layer is optional).
 
-.PHONY: build test artifacts artifacts-quick bench bench-fast tcp-smoke chaos-smoke fmt
+.PHONY: build test artifacts artifacts-quick bench bench-fast tcp-smoke chaos-smoke metrics-smoke fmt
 
 build:
 	cargo build --release
@@ -38,6 +38,12 @@ tcp-smoke: build
 # exit 0, a sim-identical MST checksum, and a reported reassignment.
 chaos-smoke: build
 	./scripts/chaos_smoke.sh
+
+# Fleet-metrics smoke: scrape the leader's live /metrics mid-run, validate
+# the exposition + report histograms, and exercise the `report diff`
+# regression gates (including an injected regression that must trip them).
+metrics-smoke: build
+	./scripts/metrics_smoke.sh
 
 # Quick benchmark sweep (reduced shapes/samples); e7 writes BENCH_e7.json.
 bench-fast:

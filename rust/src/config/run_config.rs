@@ -166,9 +166,10 @@ impl Default for NetConfig {
     }
 }
 
-/// Observability knobs: span tracing, exporters, live progress. CLI
-/// equivalents: `--trace-out`, `--report-out`, `--quiet`; `DEMST_LOG`
-/// controls the stderr log level separately (an env concern, not config).
+/// Observability knobs: span tracing, exporters, metrics, live progress.
+/// CLI equivalents: `--trace-out`, `--report-out`, `--metrics-listen`,
+/// `--quiet`; `DEMST_LOG` controls the stderr log level separately (an env
+/// concern, not config).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ObsConfig {
     /// record spans fleet-wide (workers ship theirs back on `WorkerDone`).
@@ -179,6 +180,16 @@ pub struct ObsConfig {
     pub trace_out: Option<PathBuf>,
     /// write the versioned machine-readable run report here
     pub report_out: Option<PathBuf>,
+    /// record fleet metrics (counters/gauges/histograms): workers ship
+    /// snapshot blocks on `WorkerDone` and periodic `MetricsPush` frames.
+    /// Off by default so default byte models stay exact; implied by
+    /// `metrics_listen` and `report_out`.
+    pub metrics: bool,
+    /// serve Prometheus text exposition on this address (e.g.
+    /// `127.0.0.1:9399`) for the run's duration; implies `metrics`
+    pub metrics_listen: Option<String>,
+    /// minimum milliseconds between two `MetricsPush` frames per worker
+    pub metrics_push_ms: u64,
     /// leader-side live progress ticker (auto-disabled when stderr is not
     /// a tty; `--quiet` forces it off)
     pub progress: bool,
@@ -186,7 +197,23 @@ pub struct ObsConfig {
 
 impl Default for ObsConfig {
     fn default() -> Self {
-        Self { trace: false, trace_out: None, report_out: None, progress: true }
+        Self {
+            trace: false,
+            trace_out: None,
+            report_out: None,
+            metrics: false,
+            metrics_listen: None,
+            metrics_push_ms: 1_000,
+            progress: true,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Metrics are armed when asked for directly or implied by a consumer
+    /// (the exposition endpoint, the run report's histograms section).
+    pub fn metrics_armed(&self) -> bool {
+        self.metrics || self.metrics_listen.is_some() || self.report_out.is_some()
     }
 }
 
@@ -395,6 +422,12 @@ impl RunConfig {
                 u32::MAX
             );
         }
+        if self.obs.metrics_push_ms > u64::from(u32::MAX) {
+            bail!(
+                "obs.metrics_push_ms must fit the u32 wire field (max {} ms)",
+                u32::MAX
+            );
+        }
         if self.net.peer_connect_timeout_ms == 0 {
             bail!("net.peer_connect_timeout_ms must be positive");
         }
@@ -581,6 +614,11 @@ fn apply_kv(cfg: &mut RunConfig, section: &str, key: &str, v: &TomlValue) -> Res
             cfg.obs.trace = true; // an exporter without spans is useless
         }
         ("obs", "report_out") => cfg.obs.report_out = Some(PathBuf::from(need_str()?)),
+        ("obs", "metrics") => {
+            cfg.obs.metrics = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
+        }
+        ("obs", "metrics_listen") => cfg.obs.metrics_listen = Some(need_str()?.to_string()),
+        ("obs", "metrics_push_ms") => cfg.obs.metrics_push_ms = get_usize(v)? as u64,
         ("obs", "progress") => {
             cfg.obs.progress = v.as_bool().ok_or_else(|| anyhow!("expected bool"))?
         }
@@ -897,6 +935,29 @@ bandwidth = 1e9
         assert!(rec.obs.trace && rec.obs.trace_out.is_none());
         assert!(RunConfig::from_toml("[obs]\ntrace = 3").is_err());
         assert!(RunConfig::from_toml("[obs]\nbogus = 1").is_err());
+    }
+
+    #[test]
+    fn metrics_keys_parse_and_arm_correctly() {
+        let def = RunConfig::default();
+        assert!(!def.obs.metrics && def.obs.metrics_listen.is_none());
+        assert_eq!(def.obs.metrics_push_ms, 1_000, "push cadence defaults to 1 s");
+        assert!(!def.obs.metrics_armed(), "metrics off by default keeps byte models exact");
+        let cfg = RunConfig::from_toml(
+            "[obs]\nmetrics_listen = \"127.0.0.1:9399\"\nmetrics_push_ms = 250",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.metrics_listen.as_deref(), Some("127.0.0.1:9399"));
+        assert_eq!(cfg.obs.metrics_push_ms, 250);
+        assert!(cfg.obs.metrics_armed(), "an exposition endpoint implies metrics");
+        let rep = RunConfig::from_toml("[obs]\nreport_out = \"run.json\"").unwrap();
+        assert!(rep.obs.metrics_armed(), "the report's histograms section implies metrics");
+        let on = RunConfig::from_toml("[obs]\nmetrics = true").unwrap();
+        assert!(on.obs.metrics_armed());
+        // the wire carries the push cadence as u32 milliseconds
+        let e = RunConfig::from_toml("[obs]\nmetrics_push_ms = 5000000000").unwrap_err();
+        assert!(e.to_string().contains("u32 wire field"), "{e:#}");
+        assert!(RunConfig::from_toml("[obs]\nmetrics = 3").is_err());
     }
 
     #[test]

@@ -147,7 +147,18 @@ pub enum Message {
         /// chaos-transport faults this worker's link injected (0 outside
         /// chaos runs)
         chaos_faults: u32,
+        /// final cumulative metrics snapshot, shipped only when the
+        /// leader's [`crate::net::wire::Setup`] set the metrics flag
+        /// (`None` otherwise, so metrics-off byte models stay exact)
+        metrics: Option<crate::obs::metrics::Snapshot>,
     },
+    /// Worker → leader: a periodic *cumulative* metrics snapshot for the
+    /// leader's live fleet view (the `/metrics` exposition). Sent only when
+    /// the [`crate::net::wire::Setup`] metrics flag armed it, rate-limited
+    /// to the setup's push cadence; the leader absorbs it like a heartbeat
+    /// — never acked, never a window credit — and latest-wins replaces the
+    /// worker's previous snapshot.
+    MetricsPush { worker: u16, snap: crate::obs::metrics::Snapshot },
     /// Either direction: header-only liveness keepalive. The leader
     /// multiplexes it over idle links so a worker's read deadline only
     /// trips when the link is truly dead or stalled; receivers skip it
@@ -217,6 +228,7 @@ mod tests {
             spans: vec![],
             now_ns: 0,
             chaos_faults: 0,
+            metrics: None,
         };
         let b = Message::WorkerDone {
             worker: 0,
@@ -236,9 +248,38 @@ mod tests {
             spans: vec![crate::obs::Span::default(); 2],
             now_ns: 12345,
             chaos_faults: 1,
+            metrics: None,
         };
         assert_eq!(a.wire_bytes(), 112, "header 16 + 96-byte stats block");
         assert_eq!(b.wire_bytes(), 112 + 2 * 32 + 60, "spans ride between stats and tree");
+    }
+
+    #[test]
+    fn done_metrics_block_charges_its_exact_encoded_size() {
+        let snap = crate::obs::metrics::Snapshot::default();
+        let with = Message::WorkerDone {
+            worker: 0,
+            local_tree: None,
+            dist_evals: 0,
+            busy: Duration::ZERO,
+            jobs_run: 0,
+            jobs_stolen: 0,
+            panel_hits: 0,
+            panel_misses: 0,
+            panel_flops: 0,
+            panel_time: Duration::ZERO,
+            panel_threads: 0,
+            panel_isa: 0,
+            peer_tx_bytes: 0,
+            peer_ships: 0,
+            spans: vec![],
+            now_ns: 0,
+            chaos_faults: 0,
+            metrics: Some(snap.clone()),
+        };
+        assert_eq!(with.wire_bytes(), 112 + snap.wire_bytes(), "metrics ride after the spans");
+        let push = Message::MetricsPush { worker: 3, snap: snap.clone() };
+        assert_eq!(push.wire_bytes(), 16 + snap.wire_bytes());
     }
 
     #[test]

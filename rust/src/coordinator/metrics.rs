@@ -138,6 +138,13 @@ pub struct RunMetrics {
     /// piggybacked on `WorkerDone` and are re-based onto the leader's
     /// clock; leader/in-process spans drain from the thread recorders
     pub spans: Vec<crate::obs::Span>,
+    /// the fleet-merged metrics snapshot at run end (counters, gauges, and
+    /// mergeable histograms): the leader's own registry ⊕ every worker's
+    /// final `WorkerDone` block. Always present after a pooled run —
+    /// recording is unconditional; only wire shipping is config-gated
+    pub fleet_metrics: Option<crate::obs::metrics::Snapshot>,
+    /// how many remote workers shipped at least one metrics snapshot
+    pub metrics_workers_reporting: u32,
 }
 
 impl RunMetrics {

@@ -75,7 +75,7 @@ use crate::net::{Direction, NetCounters, TcpTransport, Transport};
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Spare [`Fleet`] slots pre-allocated on remote runs for workers admitted
@@ -602,6 +602,27 @@ fn execute_pooled_inner(
     // span block, so their Job spans are synthesized from this at the end.
     let mut job_log: Vec<(u32, u16, u64, u64)> = Vec::new();
 
+    // Fleet metrics hub — per run, never process-global, so parallel
+    // in-process runs (the test binary) cannot cross-contaminate. Leader
+    // threads record straight into `hub.local`; remote workers' cumulative
+    // snapshots arrive over the wire (periodic `MetricsPush` absorbed by
+    // the transport, plus the final block on `WorkerDone`). Recording is
+    // always on — the armed config only gates wire shipping and exposition.
+    let hub = Arc::new(crate::obs::metrics::MetricsHub::new());
+    if let Some(tcp) = remote {
+        tcp.set_metrics_sink(Arc::clone(&hub));
+    }
+    let metrics_server = match &cfg.obs.metrics_listen {
+        Some(listen) => {
+            let srv = crate::obs::expose::MetricsServer::start(listen, Arc::clone(&hub))?;
+            // `http://` + `/metrics` spelled out so the line is curl-able
+            // as printed (scripts/metrics_smoke.sh scrapes mid-run).
+            crate::obs::log!(info, "metrics: listening on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+
     // Phase 1 (bipartite-merge only): every partition's local MST, once,
     // through the same worker pool — at its anchor when affinity is on, so
     // the anchor already holds the subset when the pair phase starts.
@@ -633,6 +654,7 @@ fn execute_pooled_inner(
                 &fleet,
                 &witness,
                 obs_run,
+                &hub.local,
             )?;
             builders = anchors;
             for (w, b) in phase_busy.into_iter().enumerate() {
@@ -724,6 +746,7 @@ fn execute_pooled_inner(
         let route_ref = route.as_ref();
         let errors_ref = &worker_errors;
         let fleet_ref = &fleet;
+        let hub_ref = &hub;
         let use_affinity = affinity.is_some();
         for (w, resident) in residents.iter().enumerate().take(n_workers) {
             let tx = tx_leader.clone();
@@ -774,6 +797,7 @@ fn execute_pooled_inner(
                             route_ref,
                             sim_topology,
                             errors_ref,
+                            &hub_ref.local,
                             tx,
                         )
                     });
@@ -905,6 +929,19 @@ fn execute_pooled_inner(
                     });
                 }
             }
+            {
+                // Live queue depth for the exposition endpoint: jobs not
+                // yet durably gathered (relaxed store, one per message).
+                let done_jobs = if remote.is_some() {
+                    fleet.done_jobs.load(Ordering::SeqCst)
+                } else {
+                    metrics.jobs as usize
+                };
+                hub.local.gauge_set(
+                    crate::obs::metrics::Gauge::QueueDepth,
+                    plan_ref.n_jobs().saturating_sub(done_jobs) as i64,
+                );
+            }
             if progress.active() {
                 let done_jobs = if remote.is_some() {
                     fleet.done_jobs.load(Ordering::SeqCst)
@@ -961,7 +998,13 @@ fn execute_pooled_inner(
                     spans,
                     now_ns,
                     chaos_faults,
+                    metrics: worker_metrics,
                 } => {
+                    if let Some(snap) = worker_metrics {
+                        // Final cumulative snapshot — replaces any periodic
+                        // push this worker made (latest-wins by design).
+                        hub.absorb(worker as u16, snap);
+                    }
                     metrics.chaos_faults_injected += u64::from(chaos_faults);
                     if !spans.is_empty() {
                         // Re-base the worker process's monotonic clock onto
@@ -1115,6 +1158,13 @@ fn execute_pooled_inner(
     };
     metrics.final_mst = t_mst.elapsed();
     metrics.phase_reduce = reduce_time + metrics.final_mst;
+    // The leader's final reduction is a fold like any other for the
+    // fleet-wide fold-latency histogram.
+    hub.local.observe(
+        crate::obs::metrics::Hist::Fold,
+        u64::try_from(metrics.final_mst.as_nanos()).unwrap_or(u64::MAX),
+    );
+    hub.local.gauge_set(crate::obs::metrics::Gauge::QueueDepth, 0);
     metrics.scatter_saved_bytes = witness.saved.load(Ordering::Relaxed);
     metrics.leader_ingest_bytes = witness.ingest.load(Ordering::Relaxed);
     metrics.leader_data_bytes = witness.data.load(Ordering::Relaxed);
@@ -1186,6 +1236,13 @@ fn execute_pooled_inner(
     // silently missing from the per-worker busy% lines.
     metrics.finalize_roster(n_workers);
     metrics.wall = t_start.elapsed();
+    // One last merge so the report/summary see the final state, then stop
+    // the exposition listener (it served live merges throughout the run).
+    metrics.fleet_metrics = Some(hub.merged());
+    metrics.metrics_workers_reporting = hub.workers_reporting() as u32;
+    if let Some(srv) = metrics_server {
+        srv.stop();
+    }
 
     Ok(PooledRun { mst, metrics, workers: n_workers })
 }
@@ -1210,6 +1267,7 @@ fn pooled_worker_local(
     route: Option<&RouteCtx<'_>>,
     bare_done: bool,
     errors: &Mutex<Vec<String>>,
+    reg: &crate::obs::metrics::Registry,
     tx_leader: Sender<Message>,
 ) {
     let cache = bip.map(|(_, c)| c);
@@ -1247,6 +1305,7 @@ fn pooled_worker_local(
                         spans: Vec::new(),
                         now_ns: 0,
                         chaos_faults: 0,
+                        metrics: None,
                     },
                     Direction::Gather,
                 );
@@ -1275,6 +1334,7 @@ fn pooled_worker_local(
         );
         if stolen {
             jobs_stolen += 1;
+            reg.add(crate::obs::metrics::Ctr::JobsStolen, 1);
         }
         let evals_before = solver.dist_evals();
         let mut job_span = crate::obs::span(crate::obs::SpanKind::Job, worker_id as u16, job.id);
@@ -1290,8 +1350,11 @@ fn pooled_worker_local(
             }
         };
         let compute = solved.compute.unwrap_or_else(|| t.elapsed());
-        job_span.set_arg(solver.dist_evals() - evals_before);
+        let evals = solver.dist_evals() - evals_before;
+        job_span.set_arg(evals);
         drop(job_span);
+        reg.observe_job(u64::try_from(compute.as_nanos()).unwrap_or(u64::MAX), job.i, job.j);
+        reg.add(crate::obs::metrics::Ctr::DistEvals, evals);
         busy += compute;
         jobs_run += 1;
         if local_reduce {
@@ -1300,7 +1363,12 @@ fn pooled_worker_local(
                 None => solved.edges,
                 Some(prev) => tree_merge(ds.n, &prev, &solved.edges),
             });
-            busy += t2.elapsed();
+            let fold_dt = t2.elapsed();
+            reg.observe(
+                crate::obs::metrics::Hist::Fold,
+                u64::try_from(fold_dt.as_nanos()).unwrap_or(u64::MAX),
+            );
+            busy += fold_dt;
         } else if net
             .send(
                 &tx_leader,
@@ -1350,6 +1418,11 @@ fn pooled_worker_local(
         spans: Vec::new(),
         now_ns: 0,
         chaos_faults: 0,
+        // In-process metrics never ride the channel either: this thread
+        // recorded straight into the run hub's local registry, and a None
+        // block keeps the simulated byte model identical to an unarmed
+        // TCP frame.
+        metrics: None,
     };
     if bare_done {
         // Tree/ring model: this partial ships over a *peer* hop, not the
@@ -1516,6 +1589,7 @@ fn pooled_worker_remote(
             spans: fin.spans,
             now_ns: fin.now_ns,
             chaos_faults: fin.chaos_faults,
+            metrics: fin.metrics,
         },
         Direction::Gather,
     );
@@ -2017,6 +2091,7 @@ fn build_cache_pooled(
     fleet: &Fleet,
     witness: &ByteWitness,
     obs_run: Option<crate::obs::RunToken>,
+    reg: &crate::obs::metrics::Registry,
 ) -> anyhow::Result<(LocalMstCache, Vec<Duration>, Vec<u16>)> {
     let t = Instant::now();
     let p = plan.parts.len();
@@ -2163,13 +2238,23 @@ fn build_cache_pooled(
                             counter_ref,
                             ids,
                         );
-                        *busy_slot.lock().unwrap() += t_job.elapsed();
+                        let dt = t_job.elapsed();
+                        *busy_slot.lock().unwrap() += dt;
                         // Exact by partition shape (the shared counter can't
                         // give a clean per-thread delta): Prim over m points
                         // always evaluates C(m, 2) pairs.
                         let m = ids.len() as u64;
-                        span.set_arg(m * m.saturating_sub(1) / 2);
+                        let evals = m * m.saturating_sub(1) / 2;
+                        span.set_arg(evals);
                         drop(span);
+                        // In-process only: on remote runs the worker's own
+                        // registry recorded this build, and its snapshot
+                        // reaches the hub over the wire.
+                        reg.observe(
+                            crate::obs::metrics::Hist::LocalMst,
+                            u64::try_from(dt.as_nanos()).unwrap_or(u64::MAX),
+                        );
+                        reg.add(crate::obs::metrics::Ctr::DistEvals, evals);
                         tree
                     };
                     net.charge(

@@ -103,6 +103,9 @@ pub struct SolverFinal {
     pub now_ns: u64,
     /// chaos-transport faults the remote worker's link injected
     pub chaos_faults: u32,
+    /// the remote worker's final cumulative metrics snapshot (metrics-armed
+    /// runs only; in-process solvers record straight into the run's hub)
+    pub metrics: Option<crate::obs::metrics::Snapshot>,
 }
 
 /// Measured `panel_block` work, the witnesses behind the `kernel:` line and

@@ -87,7 +87,17 @@
 //!   versioned JSON run report (full `RunMetrics` + per-worker breakdown
 //!   + config fingerprint). A `DEMST_LOG`-leveled `obs::log!` macro
 //!   carries the diagnostics and a tty-gated live progress ticker shows
-//!   jobs/bytes/stalls/admissions mid-run.
+//!   jobs/bytes/stalls/admissions mid-run. Alongside the spans rides the
+//!   **fleet metrics plane** ([`obs::metrics`]): relaxed-atomic counters,
+//!   gauges, and log-linear-bucket histograms with an associative
+//!   bucket-wise merge, recorded at the same instrumentation points;
+//!   workers ship compact binary snapshots piggybacked on `WorkerDone`
+//!   and periodic `MetricsPush` frames (wire v7), the leader's
+//!   `MetricsHub` merges them fleet-wide, [`obs::expose`] serves the
+//!   merged registry as live Prometheus text exposition
+//!   (`--metrics-listen`, scrapeable mid-run), the run report gains a
+//!   `histograms` section, and `demst report diff` turns two reports
+//!   into a thresholded cross-run regression gate.
 //! - **sharded residency ([`shard`])** — `demst partition` cuts a dataset
 //!   into per-subset binary shard files (checksummed, FNV-1a 64) plus a
 //!   TOML-lite manifest (run shape, partition layout as compact id

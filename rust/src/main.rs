@@ -60,6 +60,7 @@ fn real_main(argv: &[String]) -> Result<()> {
         "dendrogram" => cmd_dendrogram(rest),
         "gen" => cmd_gen(rest),
         "info" => cmd_info(rest),
+        "report" => cmd_report(rest),
         "selftest" => cmd_selftest(rest),
         "help" | "--help" | "-h" => {
             print_help();
@@ -73,7 +74,7 @@ fn print_help() {
     println!(
         "demst — distributed Euclidean-MST / single-linkage dendrograms via distance decomposition
 
-USAGE: demst <run|worker|dendrogram|gen|info|selftest|help> [options]
+USAGE: demst <run|worker|dendrogram|gen|info|report|selftest|help> [options]
 
 run         distributed EMST (+ dendrogram) on a generated, .npy, or sharded dataset
 worker      remote worker process: connect to a `run --transport tcp` leader
@@ -81,6 +82,8 @@ partition   split a dataset into per-subset shard files + a TOML manifest
 dendrogram  decomposed MST -> dendrogram; write merge heights and cluster labels as CSV
 gen         write a synthetic dataset to .npy
 info        list AOT artifacts and check they compile
+report      compare run reports: `report diff <baseline.json> <candidate.json>` exits
+            non-zero when a tracked metric regresses beyond its threshold
 selftest    quick correctness check across kernels
 "
     );
@@ -124,6 +127,8 @@ fn run_specs() -> Vec<OptSpec> {
         OptSpec { name: "out-labels", takes_value: true, help: "write flat cluster labels as CSV (needs --k)" },
         OptSpec { name: "trace-out", takes_value: true, help: "record spans fleet-wide and write a Chrome-trace/Perfetto JSON timeline here" },
         OptSpec { name: "report-out", takes_value: true, help: "write the versioned machine-readable run report (full metrics JSON) here" },
+        OptSpec { name: "metrics-listen", takes_value: true, help: "serve live fleet-merged Prometheus text exposition on this address (e.g. 127.0.0.1:9399; port 0 = auto), scrapeable mid-run at /metrics" },
+        OptSpec { name: "metrics-push-ms", takes_value: true, help: "cadence of the workers' periodic metrics pushes in ms (default 1000; 0 = final WorkerDone snapshot only)" },
         OptSpec { name: "quiet", takes_value: false, help: "suppress the live progress ticker" },
     ]
 }
@@ -241,6 +246,12 @@ fn build_run_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("report-out") {
         cfg.obs.report_out = Some(v.into());
     }
+    if let Some(v) = args.get("metrics-listen") {
+        cfg.obs.metrics_listen = Some(v.to_string());
+    }
+    if let Some(v) = args.get_parse::<u64>("metrics-push-ms")? {
+        cfg.obs.metrics_push_ms = v;
+    }
     if args.has_flag("quiet") {
         cfg.obs.progress = false;
     }
@@ -299,6 +310,7 @@ fn cmd_run(argv: &[String]) -> Result<()> {
     }
     println!("mst: {} edges, total weight {:.6}", out.mst.len(), demst::mst::total_weight(&out.mst));
     println!("metrics: {}", out.metrics.summary());
+    print_latency_line(&out.metrics);
     print_phases_and_workers(&out.metrics);
     if let Some(path) = &cfg.obs.trace_out {
         demst::obs::trace::write_chrome_trace(path, &out.metrics)
@@ -361,6 +373,113 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         write_mst_csv(path, &out.mst)?;
     }
     Ok(())
+}
+
+fn report_specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "max-wall-regress", takes_value: true, help: "allowed wall-clock regression in percent (default 25)" },
+        OptSpec { name: "max-dist-evals-regress", takes_value: true, help: "allowed distance-evaluation regression in percent (default 1)" },
+        OptSpec { name: "max-bytes-regress", takes_value: true, help: "allowed scatter+gather+control byte regression in percent (default 1)" },
+        OptSpec { name: "max-p99-job-regress", takes_value: true, help: "allowed p99 pair-job latency regression in percent (default 50)" },
+    ]
+}
+
+/// `demst report diff <baseline.json> <candidate.json>`: the cross-run
+/// regression gate. Prints the full comparison table, then fails (exit 1)
+/// if any tracked quantity regressed beyond its allowance — so CI can
+/// pin a committed baseline report against every candidate run.
+fn cmd_report(argv: &[String]) -> Result<()> {
+    use demst::obs::report::{diff_reports, DiffThresholds};
+    let args = parse_args(argv, &report_specs())?;
+    let [action, base_path, cand_path] = args.positional.as_slice() else {
+        bail!(
+            "usage: demst report diff <baseline.json> <candidate.json>\n{}",
+            demst::cli::usage(&report_specs())
+        );
+    };
+    if action != "diff" {
+        bail!("unknown report action {action:?} (only `diff` exists)");
+    }
+    let read = |path: &str| -> Result<demst::obs::json::Value> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading run report {path:?}"))?;
+        demst::obs::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing run report {path:?}: {e}"))
+    };
+    let baseline = read(base_path)?;
+    let candidate = read(cand_path)?;
+
+    let mut th = DiffThresholds::default();
+    if let Some(v) = args.get_parse::<f64>("max-wall-regress")? {
+        th.wall_pct = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("max-dist-evals-regress")? {
+        th.dist_evals_pct = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("max-bytes-regress")? {
+        th.bytes_pct = v;
+    }
+    if let Some(v) = args.get_parse::<f64>("max-p99-job-regress")? {
+        th.p99_job_pct = v;
+    }
+
+    let rows = diff_reports(&baseline, &candidate, &th).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "{:<20} {:>14} {:>14} {:>10} {:>8}  verdict",
+        "metric", "baseline", "candidate", "delta", "limit"
+    );
+    for r in &rows {
+        println!(
+            "{:<20} {:>14.6} {:>14.6} {:>+9.2}% {:>7.0}%  {}",
+            r.name,
+            r.baseline,
+            r.candidate,
+            r.delta_pct(),
+            r.limit_pct,
+            if r.regressed() { "REGRESSED" } else { "ok" }
+        );
+    }
+    let bad: Vec<&str> = rows.iter().filter(|r| r.regressed()).map(|r| r.name).collect();
+    if !bad.is_empty() {
+        bail!("regression beyond threshold in: {}", bad.join(", "));
+    }
+    println!("report diff: ok ({} metrics within thresholds)", rows.len());
+    Ok(())
+}
+
+/// The run summary's `latency:` line, sourced from the fleet-merged
+/// pair-job latency histogram: p50/p95/p99 (bucket-bound estimates,
+/// ≤ 12.5% relative error) plus the slowest job's (i, j) identity. Omitted
+/// when no pair job was recorded (e.g. a run whose remote workers never
+/// shipped metrics).
+fn print_latency_line(metrics: &RunMetrics) {
+    let Some(fleet) = &metrics.fleet_metrics else { return };
+    let h = fleet.hist(demst::obs::metrics::Hist::JobLatency);
+    if h.count == 0 {
+        return;
+    }
+    let q = |q: f64| fmt_ns(h.quantile(q).unwrap_or(0));
+    let slowest = match fleet.slowest {
+        Some(s) => format!(" | slowest job ({}, {}) {}", s.i, s.j, fmt_ns(s.ns)),
+        None => String::new(),
+    };
+    println!(
+        "latency: pair-job p50 {} p95 {} p99 {} over {} jobs{slowest}",
+        q(0.50),
+        q(0.95),
+        q(0.99),
+        h.count,
+    );
+}
+
+/// Human nanoseconds: picks ns/µs/ms/s to keep 3 significant-ish digits.
+fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=999 => format!("{ns}ns"),
+        1_000..=999_999 => format!("{:.1}µs", ns as f64 / 1e3),
+        1_000_000..=999_999_999 => format!("{:.1}ms", ns as f64 / 1e6),
+        _ => format!("{:.2}s", ns as f64 / 1e9),
+    }
 }
 
 /// Check the computed MSF's total weight against the independent `O(n²)`

@@ -252,9 +252,12 @@ fn make_setup(cfg: &RunConfig, n: usize, d: usize, manifest: u64, plan: &ExecPla
         reduce_tree: cfg.reduce_tree,
         mid_run: false, // admission re-stamps this per joining link
         trace: cfg.obs.trace,
+        metrics: cfg.obs.metrics_armed(),
         manifest,
         liveness_ms: u32::try_from(cfg.net.liveness_timeout_ms)
             .context("liveness timeout exceeds the u32 wire limit (ms)")?,
+        metrics_push_ms: u32::try_from(cfg.obs.metrics_push_ms)
+            .context("metrics push cadence exceeds the u32 wire limit (ms)")?,
         part_sizes: plan.parts.iter().map(|p| p.len() as u32).collect(),
         artifacts_dir: cfg.artifacts_dir.display().to_string(),
     })

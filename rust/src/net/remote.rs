@@ -165,6 +165,7 @@ impl<'a> RemoteLink<'a> {
                 spans,
                 now_ns,
                 chaos_faults,
+                metrics,
                 ..
             } => Ok(SolverFinal {
                 dist_evals,
@@ -183,6 +184,7 @@ impl<'a> RemoteLink<'a> {
                 spans,
                 now_ns,
                 chaos_faults,
+                metrics,
             }),
             other => bail!("worker {} replied {other:?} to Shutdown", self.worker),
         }

@@ -63,6 +63,10 @@ pub struct TcpTransport {
     /// per-link read deadline (None = wait forever, pre-liveness behavior)
     liveness: Option<Duration>,
     counters: Arc<NetCounters>,
+    /// where `MetricsPush` snapshots absorbed off any link land (set by the
+    /// engine once its per-run hub exists; None = pushes are counted and
+    /// dropped)
+    metrics_sink: RwLock<Option<Arc<crate::obs::metrics::MetricsHub>>>,
 }
 
 impl Transport for TcpTransport {
@@ -162,7 +166,15 @@ impl TcpTransport {
             peer_addrs: RwLock::new(peer_addrs),
             liveness,
             counters,
+            metrics_sink: RwLock::new(None),
         })
+    }
+
+    /// Point absorbed `MetricsPush` frames at the run's fleet hub. Until
+    /// this is called pushes are byte-counted and dropped, which is correct
+    /// for runs that never arm metrics.
+    pub fn set_metrics_sink(&self, hub: Arc<crate::obs::metrics::MetricsHub>) {
+        *self.metrics_sink.write().unwrap() = Some(hub);
     }
 
     /// Run the mid-run admission handshake on a freshly accepted connection
@@ -285,6 +297,16 @@ impl TcpTransport {
                     self.counters.add(frame.len() as u64, Direction::Control);
                     continue;
                 }
+                // Unsolicited like heartbeats: absorb and keep waiting for
+                // the reply the driver is actually blocked on. Consumes no
+                // pipeline-window credit.
+                Message::MetricsPush { worker, snap } => {
+                    self.counters.add(frame.len() as u64, Direction::Control);
+                    if let Some(hub) = self.metrics_sink.read().unwrap().as_ref() {
+                        hub.absorb(*worker, snap.clone());
+                    }
+                    continue;
+                }
                 Message::Ack { .. } | Message::PairFail { .. } | Message::FoldDone { .. } => {
                     Direction::Control
                 }
@@ -402,8 +424,10 @@ mod tests {
             reduce_tree: false,
             mid_run: false,
             trace: false,
+            metrics: false,
             manifest: 0,
             liveness_ms: 0,
+            metrics_push_ms: 0,
             part_sizes: vec![5, 5],
             artifacts_dir: String::new(),
         }
@@ -471,6 +495,57 @@ mod tests {
         // charge() must not touch real-transport counters
         fab.charge(1_000_000, Direction::Scatter);
         assert_eq!(fab.counters().snapshot().0, 0);
+    }
+
+    /// An unsolicited `MetricsPush` between request and reply is absorbed
+    /// into the sink (control bytes, no window credit) and `recv_from`
+    /// still returns the reply the driver was blocked on.
+    #[test]
+    fn metrics_push_is_absorbed_and_does_not_satisfy_recv() {
+        use crate::obs::metrics::{Ctr, MetricsHub, Registry};
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let mut s = ClientStream::connect(addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_hello(&Hello { version: WIRE_VERSION, peer_port: 0 }),
+            )
+            .unwrap();
+            let setup = wire::decode_setup(&wire::read_frame(&mut s).unwrap()).unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_setup_ack(&SetupAck { worker_id: setup.worker_id }),
+            )
+            .unwrap();
+            wire::write_frame(
+                &mut s,
+                &wire::encode_shard_advertise(&wire::ShardAdvertise {
+                    worker_id: setup.worker_id,
+                    shard_ids: vec![],
+                })
+                .unwrap(),
+            )
+            .unwrap();
+            let _req = wire::read_frame(&mut s).unwrap();
+            let reg = Registry::new();
+            reg.add(Ctr::DistEvals, 77);
+            let push = Message::MetricsPush { worker: 0, snap: reg.snapshot() };
+            wire::write_frame(&mut s, &wire::encode(&push).unwrap()).unwrap();
+            wire::write_frame(&mut s, &wire::encode(&Message::Ack { job_id: 7 }).unwrap())
+                .unwrap();
+        });
+        let fab =
+            TcpTransport::accept_workers(&listener, 1, &test_setup(), Duration::from_secs(10))
+                .unwrap();
+        let hub = Arc::new(MetricsHub::new());
+        fab.set_metrics_sink(Arc::clone(&hub));
+        let reply = fab.request(0, &Message::Shutdown, Direction::Control).unwrap();
+        assert_eq!(reply, Message::Ack { job_id: 7 }, "push did not satisfy the rendezvous");
+        worker.join().unwrap();
+        assert_eq!(hub.workers_reporting(), 1);
+        assert_eq!(hub.merged().counter(Ctr::DistEvals), 77);
     }
 
     /// A stray connection speaking garbage must be rejected without

@@ -34,6 +34,20 @@
 //! bytes, so a hostile or confused peer cannot make the handshake path
 //! allocate a gigabyte from a forged length field.
 //!
+//! ## v7 additions (fleet metrics plane)
+//!
+//! - [`WorkerDone`](Message::WorkerDone)'s spare stats word becomes
+//!   `metrics_bytes`: when the [`Setup`] metrics flag (bit 3) armed the
+//!   run, a compact [`crate::obs::metrics::Snapshot`] block (counters,
+//!   gauges, occupied histogram buckets) rides between the span block and
+//!   the tree. Metrics-off runs ship 0 bytes there, so default byte models
+//!   are unchanged.
+//! - [`MetricsPush`](Message::MetricsPush) (tag 22) carries a periodic
+//!   *cumulative* snapshot for the leader's live `/metrics` exposition.
+//!   Like `Heartbeat` it is never acked and never a window credit.
+//! - [`Setup`] gains the metrics flag and `metrics_push_ms` (the push
+//!   cadence), growing its fixed body from 20 to 24 bytes.
+//!
 //! ## v5 additions (liveness + mid-run admission)
 //!
 //! - [`Heartbeat`](Message::Heartbeat) is a header-only keepalive. The
@@ -111,7 +125,7 @@ use std::io::{Read, Write};
 use std::time::Duration;
 
 /// Protocol version, checked during the handshake.
-pub const WIRE_VERSION: u16 = 6;
+pub const WIRE_VERSION: u16 = 7;
 /// Handshake magic ("DMST").
 pub const MAGIC: u32 = 0x444D_5354;
 /// Refuse to allocate frames beyond this payload size (corrupt peer guard).
@@ -144,6 +158,7 @@ const TAG_PEER_BOOK: u8 = 18;
 const TAG_HEARTBEAT: u8 = 19;
 const TAG_JOIN: u8 = 20;
 const TAG_ADMIT_ACK: u8 = 21;
+const TAG_METRICS_PUSH: u8 = 22;
 
 // `Ack`-tag status codes (header byte [5]); one reply frame shape covers
 // the whole pair/fold lane so the FIFO window credits stay uniform.
@@ -197,11 +212,13 @@ pub fn encoded_len(msg: &Message) -> u64 {
             Message::PeerBook { peers, builders } => {
                 peers.len() as u64 * PEER_ENTRY_BYTES + builders.len() as u64 * 2
             }
-            Message::WorkerDone { local_tree, spans, .. } => {
+            Message::WorkerDone { local_tree, spans, metrics, .. } => {
                 STATS_BYTES
                     + spans.len() as u64 * SPAN_BYTES
+                    + metrics.as_ref().map_or(0, |m| m.wire_bytes())
                     + local_tree.as_ref().map_or(0, |t| t.len() as u64 * EDGE_BYTES)
             }
+            Message::MetricsPush { snap, .. } => snap.wire_bytes(),
             Message::Ack { .. }
             | Message::PairFail { .. }
             | Message::FoldDone { .. }
@@ -474,9 +491,13 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             spans,
             now_ns,
             chaos_faults,
+            metrics,
         } => {
             let span_count = u32::try_from(spans.len())
                 .map_err(|_| anyhow!("WorkerDone span count exceeds u32"))?;
+            let metrics_block = metrics.as_ref().map(|m| m.encode());
+            let metrics_bytes = u32::try_from(metrics_block.as_ref().map_or(0, |b| b.len()))
+                .map_err(|_| anyhow!("WorkerDone metrics block exceeds u32"))?;
             let mut f = FrameBuf::new(TAG_WORKER_DONE, payload)?;
             f.set_u8(5, local_tree.is_some() as u8);
             f.set_u16(6, need_u16(*worker, "worker id")?);
@@ -491,7 +512,7 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
             f.push_u64(*peer_tx_bytes);
             f.push_u32s(&[*peer_ships, span_count]);
             f.push_u64(*now_ns);
-            f.push_u32s(&[*chaos_faults, 0]); // + 4 spare bytes
+            f.push_u32s(&[*chaos_faults, metrics_bytes]);
             for s in spans {
                 f.buf.push(s.kind_code);
                 f.buf.push(0); // pad
@@ -501,9 +522,18 @@ pub fn encode(msg: &Message) -> Result<Vec<u8>> {
                 f.push_u64(s.start_ns);
                 f.push_u64(s.end_ns);
             }
+            if let Some(block) = &metrics_block {
+                f.buf.extend_from_slice(block);
+            }
             if let Some(tree) = local_tree {
                 f.push_edges(tree);
             }
+            f
+        }
+        Message::MetricsPush { worker, snap } => {
+            let mut f = FrameBuf::new(TAG_METRICS_PUSH, payload)?;
+            f.set_u16(6, *worker);
+            f.buf.extend_from_slice(&snap.encode());
             f
         }
         Message::Heartbeat => FrameBuf::new(TAG_HEARTBEAT, payload)?,
@@ -770,16 +800,21 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
             let span_count = r.u32()? as usize;
             let now_ns = r.u64()?;
             let chaos_faults = r.u32()?;
-            let _spare = r.u32()?;
-            // Bound the span block against the declared payload *before*
-            // allocating anything sized by the (possibly hostile) count.
+            let metrics_bytes = r.u32()? as usize;
+            // Bound the span + metrics blocks against the declared payload
+            // *before* allocating anything sized by the (possibly hostile)
+            // counts.
             let tree_bytes = payload_len
                 .checked_sub(STATS_BYTES as usize)
                 .and_then(|rest| {
                     span_count.checked_mul(SPAN_BYTES as usize).and_then(|b| rest.checked_sub(b))
                 })
+                .and_then(|rest| rest.checked_sub(metrics_bytes))
                 .ok_or_else(|| {
-                    anyhow!("WorkerDone payload {payload_len} < stats block + {span_count} spans")
+                    anyhow!(
+                        "WorkerDone payload {payload_len} < stats block + {span_count} spans \
+                         + {metrics_bytes} metrics bytes"
+                    )
                 })?;
             let mut spans = Vec::with_capacity(span_count);
             for _ in 0..span_count {
@@ -793,6 +828,11 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                     end_ns: u64::from_le_bytes(rec[24..32].try_into().unwrap()),
                 });
             }
+            let metrics = if metrics_bytes > 0 {
+                Some(crate::obs::metrics::Snapshot::decode(r.take(metrics_bytes)?)?)
+            } else {
+                None
+            };
             let local_tree = if has_tree {
                 Some(r.edges(derive_edges(tree_bytes, "WorkerDone tree")?)?)
             } else {
@@ -816,8 +856,13 @@ pub fn decode(frame: &[u8], ctx: Option<&WireCtx>) -> Result<Message> {
                 spans,
                 now_ns,
                 chaos_faults,
+                metrics,
             }
         }
+        TAG_METRICS_PUSH => Message::MetricsPush {
+            worker: r0.u16_at(6),
+            snap: crate::obs::metrics::Snapshot::decode(r.rest())?,
+        },
         TAG_HEARTBEAT => Message::Heartbeat,
         TAG_SHUTDOWN => Message::Shutdown,
         other => bail!("unknown frame tag {other}"),
@@ -924,6 +969,11 @@ pub struct Setup {
     /// back in the final `WorkerDone`; off keeps the worker's job hot
     /// path allocation-free and the byte model span-free
     pub trace: bool,
+    /// true when the leader wants metrics recorded: the worker ships a
+    /// snapshot block in its final `WorkerDone` and periodic
+    /// [`MetricsPush`](Message::MetricsPush) frames at the push cadence;
+    /// off ships zero metrics bytes, so metrics-off byte models are exact
+    pub metrics: bool,
     /// shard-manifest fingerprint of a sharded run, 0 when unsharded; a
     /// worker whose loaded manifest fingerprints differently must refuse
     /// the run (its shard files were cut from another partition)
@@ -932,6 +982,9 @@ pub struct Setup {
     /// also derives the worker's fold-inbox wait (`liveness / 2`) so fold
     /// replies always beat the leader's own deadline
     pub liveness_ms: u32,
+    /// minimum milliseconds between two `MetricsPush` frames from this
+    /// worker (ignored unless `metrics` is set)
+    pub metrics_push_ms: u32,
     pub part_sizes: Vec<u32>,
     /// leader-side artifacts dir, UTF-8 (trailing variable-length section)
     pub artifacts_dir: String,
@@ -985,9 +1038,15 @@ pub fn decode_hello(frame: &[u8]) -> Result<Hello> {
 pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     let parts = need_u16(s.part_sizes.len(), "partition count")?;
     let dir = s.artifacts_dir.as_bytes();
-    let payload = 20 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
+    let payload = 24 + 4 * s.part_sizes.len() as u64 + dir.len() as u64;
     let mut f = FrameBuf::new(TAG_SETUP, payload)?;
-    f.set_u8(5, s.reduce_tree as u8 | (s.mid_run as u8) << 1 | (s.trace as u8) << 2);
+    f.set_u8(
+        5,
+        s.reduce_tree as u8
+            | (s.mid_run as u8) << 1
+            | (s.trace as u8) << 2
+            | (s.metrics as u8) << 3,
+    );
     f.set_u16(6, s.version);
     f.set_u16(8, s.worker_id);
     f.set_u16(10, s.d);
@@ -998,7 +1057,7 @@ pub fn encode_setup(s: &Setup) -> Result<Vec<u8>> {
     f.buf.extend_from_slice(&[0u8; 3]);
     f.push_u32s(&[s.n]);
     f.push_u64(s.manifest);
-    f.push_u32s(&[s.liveness_ms]);
+    f.push_u32s(&[s.liveness_ms, s.metrics_push_ms]);
     f.push_u32s(&s.part_sizes);
     f.buf.extend_from_slice(dir);
     Ok(f.buf)
@@ -1017,6 +1076,7 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
     let n = r.u32()?;
     let manifest = r.u64()?;
     let liveness_ms = r.u32()?;
+    let metrics_push_ms = r.u32()?;
     let part_sizes = r.u32s(parts)?;
     let artifacts_dir = String::from_utf8(r.rest().to_vec())
         .map_err(|_| anyhow!("Setup artifacts_dir is not UTF-8"))?;
@@ -1032,8 +1092,10 @@ pub fn decode_setup(frame: &[u8]) -> Result<Setup> {
         reduce_tree: r0.u8_at(5) & 1 != 0,
         mid_run: r0.u8_at(5) & 2 != 0,
         trace: r0.u8_at(5) & 4 != 0,
+        metrics: r0.u8_at(5) & 8 != 0,
         manifest,
         liveness_ms,
+        metrics_push_ms,
         part_sizes,
         artifacts_dir,
     })
@@ -1251,6 +1313,7 @@ mod tests {
             spans: vec![],
             now_ns: 0xdead_beef_0000_0001,
             chaos_faults: 3,
+            metrics: None,
         };
         assert_eq!(done.wire_bytes(), HEADER_BYTES + STATS_BYTES, "stats block is 96 bytes");
         assert_eq!(roundtrip(&done, None), done);
@@ -1273,8 +1336,55 @@ mod tests {
             spans: vec![],
             now_ns: 0,
             chaos_faults: 0,
+            metrics: None,
         };
         assert_eq!(roundtrip(&bare, None), bare);
+    }
+
+    #[test]
+    fn worker_done_metrics_block_roundtrips_and_rejects_forgery() {
+        use crate::obs::metrics::{Ctr, Hist, Registry};
+        let reg = Registry::new();
+        reg.observe_job(1_234_567, 2, 5);
+        reg.observe(Hist::Fold, 999);
+        reg.add(Ctr::DistEvals, 42);
+        let snap = reg.snapshot();
+        let done = Message::WorkerDone {
+            worker: 1,
+            local_tree: Some(vec![Edge::new(0, 1, 0.5)]),
+            dist_evals: 42,
+            busy: Duration::from_millis(1),
+            jobs_run: 1,
+            jobs_stolen: 0,
+            panel_hits: 0,
+            panel_misses: 0,
+            panel_flops: 0,
+            panel_time: Duration::ZERO,
+            panel_threads: 0,
+            panel_isa: 0,
+            peer_tx_bytes: 0,
+            peer_ships: 0,
+            spans: vec![crate::obs::Span::default()],
+            now_ns: 5,
+            chaos_faults: 0,
+            metrics: Some(snap.clone()),
+        };
+        assert_eq!(
+            done.wire_bytes(),
+            HEADER_BYTES + STATS_BYTES + SPAN_BYTES + snap.wire_bytes() + EDGE_BYTES,
+            "metrics block rides between spans and tree"
+        );
+        assert_eq!(roundtrip(&done, None), done);
+        // a forged metrics length larger than the payload is refused before
+        // the tree parse can misalign
+        let mut frame = encode(&done).unwrap();
+        let metrics_at = HEADER_BYTES as usize + 92; // chaos_faults u32, then metrics_bytes
+        frame[metrics_at..metrics_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame, None).is_err(), "hostile metrics length rejected");
+        // the push frame carries the same snapshot standalone
+        let push = Message::MetricsPush { worker: 9, snap: snap.clone() };
+        assert_eq!(push.wire_bytes(), HEADER_BYTES + snap.wire_bytes());
+        assert_eq!(roundtrip(&push, None), push);
     }
 
     #[test]
@@ -1318,6 +1428,7 @@ mod tests {
             spans: spans.clone(),
             now_ns: 7_777_777,
             chaos_faults: 1,
+            metrics: None,
         };
         assert_eq!(
             done.wire_bytes(),
@@ -1403,8 +1514,10 @@ mod tests {
             reduce_tree: true,
             mid_run: false,
             trace: true,
+            metrics: true,
             manifest: 0xfeed_beef_cafe_f00d,
             liveness_ms: 30_000,
+            metrics_push_ms: 500,
             part_sizes: vec![250, 250, 300, 200],
             artifacts_dir: "/opt/aot artifacts".into(),
         };
@@ -1414,6 +1527,9 @@ mod tests {
         // mid-run admission Setup: flag bit 1 rides next to reduce_tree
         let admit = Setup { mid_run: true, reduce_tree: false, liveness_ms: 0, ..setup.clone() };
         assert_eq!(decode_setup(&encode_setup(&admit).unwrap()).unwrap(), admit);
+        // metrics off clears flag bit 3 and leaves the cadence inert
+        let quiet = Setup { metrics: false, metrics_push_ms: 0, ..setup.clone() };
+        assert_eq!(decode_setup(&encode_setup(&quiet).unwrap()).unwrap(), quiet);
         let ack = SetupAck { worker_id: 3 };
         assert_eq!(decode_setup_ack(&encode_setup_ack(&ack)).unwrap(), ack);
     }

@@ -526,6 +526,48 @@ fn link_write(
     }
 }
 
+/// Saturating `Duration` → nanoseconds for histogram observations.
+fn ns_of(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Fold the peer-plane tx bytes accrued since the last snapshot into the
+/// registry, then take the cumulative snapshot. Every shipped snapshot
+/// (periodic push or final `WorkerDone`) goes through here so the peer
+/// counter never double-counts.
+fn metrics_snapshot(
+    reg: &crate::obs::metrics::Registry,
+    peer: &PeerState,
+    peer_tx_seen: &mut u64,
+) -> crate::obs::metrics::Snapshot {
+    let tx = peer.tx_bytes.load(Ordering::Relaxed);
+    reg.add(crate::obs::metrics::Ctr::PeerTxBytes, tx.saturating_sub(*peer_tx_seen));
+    *peer_tx_seen = tx;
+    reg.snapshot()
+}
+
+/// Write one unsolicited `MetricsPush` frame with the current cumulative
+/// snapshot. Best-effort: a push must never take a healthy link down — the
+/// link's real traffic surfaces write errors with proper context.
+#[allow(clippy::too_many_arguments)]
+fn push_metrics(
+    stream: &mut TcpStream,
+    chaos: &mut Option<ChaosLink>,
+    reg: &crate::obs::metrics::Registry,
+    peer: &PeerState,
+    peer_tx_seen: &mut u64,
+    worker_id: u16,
+    report: &mut WorkerReport,
+) {
+    let snap = metrics_snapshot(reg, peer, peer_tx_seen);
+    let msg = Message::MetricsPush { worker: worker_id, snap };
+    if let Ok(frame) = wire::encode(&msg) {
+        if link_write(stream, chaos, &frame).is_ok() {
+            report.bytes_tx += frame.len() as u64;
+        }
+    }
+}
+
 /// Serve one connection until `Shutdown`, optionally with pre-loaded
 /// shard residency.
 pub fn serve_with(
@@ -634,6 +676,18 @@ pub fn serve_with(
         t_handshake,
         crate::obs::now_ns(),
     );
+    // Metrics: recording is always on (relaxed atomics, no allocation on
+    // the hot path); *shipping* is what the Setup metrics flag gates. When
+    // armed, cumulative snapshots ride the final WorkerDone plus periodic
+    // unsolicited MetricsPush frames, rate-limited to the push cadence.
+    use crate::obs::metrics::{Ctr, Hist, Registry};
+    let reg = Registry::new();
+    let push_every = (setup.metrics && setup.metrics_push_ms > 0)
+        .then(|| Duration::from_millis(u64::from(setup.metrics_push_ms)));
+    let mut last_push = Instant::now();
+    // Peer-plane tx bytes accrue in the listener threads; the delta since
+    // the last snapshot is folded into the registry before each ship.
+    let mut peer_tx_seen = 0u64;
 
     let kind = wire::metric_from_code(setup.metric)?;
     let pair_kernel = wire::pair_kernel_from_code(setup.pair_kernel)?;
@@ -709,10 +763,27 @@ pub fn serve_with(
             Err(e) => return Err(e).context("reading job frame"),
         };
         report.bytes_rx += frame.len() as u64;
+        reg.add(Ctr::LinkRxBytes, frame.len() as u64);
         let msg = wire::decode(&frame, Some(&ctx))?;
         let reply = match msg {
-            // Keepalive from the leader: exists only to arm our deadline.
-            Message::Heartbeat => continue,
+            // Keepalive from the leader: exists only to arm our deadline —
+            // and, when metrics are armed, the carrier wave for periodic
+            // pushes: an idle worker still reports at heartbeat cadence.
+            Message::Heartbeat => {
+                if push_every.is_some_and(|every| last_push.elapsed() >= every) {
+                    last_push = Instant::now();
+                    push_metrics(
+                        &mut stream,
+                        &mut chaos_link,
+                        &reg,
+                        &peer,
+                        &mut peer_tx_seen,
+                        setup.worker_id,
+                        &mut report,
+                    );
+                }
+                continue;
+            }
             Message::LocalJob { part, global_ids, points } => {
                 let evals_before = counter.evals();
                 let mut span =
@@ -722,8 +793,11 @@ pub fn serve_with(
                 let tree =
                     subset_mst_gathered(&points, block.as_ref(), &aux, &counter, &global_ids);
                 let compute = t.elapsed();
-                span.set_arg(counter.evals() - evals_before);
+                let evals = counter.evals() - evals_before;
+                span.set_arg(evals);
                 drop(span);
+                reg.observe(Hist::LocalMst, ns_of(compute));
+                reg.add(Ctr::DistEvals, evals);
                 report.local_jobs += 1;
                 let k = part as usize;
                 if k >= store.len() {
@@ -749,8 +823,11 @@ pub fn serve_with(
                     &slot.ids,
                 );
                 let compute = t.elapsed();
-                span.set_arg(counter.evals() - evals_before);
+                let evals = counter.evals() - evals_before;
+                span.set_arg(evals);
                 drop(span);
+                reg.observe(Hist::LocalMst, ns_of(compute));
+                reg.add(Ctr::DistEvals, evals);
                 report.local_jobs += 1;
                 let k = part as usize;
                 store[k].as_mut().expect("resident checked").tree = Some(tree.clone());
@@ -788,6 +865,7 @@ pub fn serve_with(
                             setup.worker_id,
                             part,
                         );
+                        let t_fetch = Instant::now();
                         match fetch_routed(
                             part,
                             setup.worker_id,
@@ -798,10 +876,11 @@ pub fn serve_with(
                         ) {
                             Ok(t) => {
                                 // arg = the TreeShip reply's wire bytes
-                                fetch_span.set_arg(
-                                    crate::coordinator::messages::HEADER_BYTES
-                                        + (t.len() * Edge::WIRE_BYTES) as u64,
-                                );
+                                let rx_bytes = crate::coordinator::messages::HEADER_BYTES
+                                    + (t.len() * Edge::WIRE_BYTES) as u64;
+                                fetch_span.set_arg(rx_bytes);
+                                reg.observe(Hist::PeerFetch, ns_of(t_fetch.elapsed()));
+                                reg.add(Ctr::PeerRxBytes, rx_bytes);
                                 absorb(
                                     &mut store,
                                     block.as_ref(),
@@ -832,10 +911,13 @@ pub fn serve_with(
                     link_write(&mut stream, &mut chaos_link, &frame)
                         .context("sending PairFail")?;
                     report.bytes_tx += frame.len() as u64;
+                    reg.add(Ctr::LinkTxBytes, frame.len() as u64);
                     continue;
                 }
                 let mut job_span =
                     crate::obs::span(crate::obs::SpanKind::Job, setup.worker_id, job.id);
+                let (panel_flops_before, panel_time_before) =
+                    (panel_perf.flops, panel_perf.time);
                 let t = Instant::now();
                 let (tree, evals) = match pair_kernel {
                     PairKernelChoice::BipartiteMerge => solve_bipartite(
@@ -858,20 +940,28 @@ pub fn serve_with(
                         solve_dense_union(&store, &job, ctx.d, kernel)?
                     }
                 };
+                let compute = t.elapsed();
                 job_span.set_arg(evals);
                 drop(job_span);
+                reg.observe_job(ns_of(compute), job.i, job.j);
+                reg.add(Ctr::DistEvals, evals);
+                // Per-job panel throughput in milli-GFLOP/s (= flops/ns
+                // × 1000); the kernel only moves these on the panel path.
+                let dflops = panel_perf.flops - panel_flops_before;
+                let dns = ns_of(panel_perf.time - panel_time_before);
+                if dflops > 0 && dns > 0 {
+                    reg.observe(Hist::PanelGflops, dflops.saturating_mul(1_000) / dns);
+                }
                 pair_evals += evals;
                 report.jobs += 1;
+                busy += compute;
                 if setup.reduce_tree {
                     folded = Some(match folded.take() {
                         None => tree,
                         Some(prev) => tree_merge(n, &prev, &tree),
                     });
-                    busy += t.elapsed();
                     Message::Ack { job_id: job.id }
                 } else {
-                    let compute = t.elapsed();
-                    busy += compute;
                     Message::Result {
                         job_id: job.id,
                         worker: setup.worker_id as usize,
@@ -898,6 +988,8 @@ pub fn serve_with(
                 let evals = kernel.dist_evals() - before;
                 job_span.set_arg(evals);
                 drop(job_span);
+                reg.observe_job(ns_of(compute), job.i, job.j);
+                reg.add(Ctr::DistEvals, evals);
                 pair_evals += evals;
                 busy += compute;
                 report.jobs += 1;
@@ -937,6 +1029,7 @@ pub fn serve_with(
                     setup.worker_id,
                     u32::from(expect),
                 );
+                let t_fold = Instant::now();
                 // Wait for the expected peer partials (they were confirmed
                 // shipped before this directive was sent, so the wait is a
                 // delivery race, not a schedule dependency).
@@ -983,6 +1076,7 @@ pub fn serve_with(
                         }
                     }
                 }
+                reg.observe(Hist::Fold, ns_of(t_fold.elapsed()));
                 Message::FoldDone { ok }
             }
             Message::Shutdown => {
@@ -1010,6 +1104,9 @@ pub fn serve_with(
                 let chaos_faults = chaos_link
                     .as_ref()
                     .map_or(0, |c| c.faults_fired().min(u64::from(u32::MAX)) as u32);
+                let metrics = setup
+                    .metrics
+                    .then(|| metrics_snapshot(&reg, &peer, &mut peer_tx_seen));
                 let done = Message::WorkerDone {
                     worker: setup.worker_id as usize,
                     local_tree: folded.take(),
@@ -1028,6 +1125,7 @@ pub fn serve_with(
                     spans,
                     now_ns,
                     chaos_faults,
+                    metrics,
                 };
                 let frame = wire::encode(&done)?;
                 // Best-effort: a leader that already gave up must not turn a
@@ -1044,9 +1142,26 @@ pub fn serve_with(
             }
             other => bail!("unexpected frame from leader: {other:?}"),
         };
+        // Piggyback a rate-limited MetricsPush ahead of the reply: drivers
+        // blocked in recv absorb it and keep waiting for the reply proper,
+        // so a busy run reports at job cadence even when the leader's
+        // heartbeat pulse can't grab this link's mutex.
+        if push_every.is_some_and(|every| last_push.elapsed() >= every) {
+            last_push = Instant::now();
+            push_metrics(
+                &mut stream,
+                &mut chaos_link,
+                &reg,
+                &peer,
+                &mut peer_tx_seen,
+                setup.worker_id,
+                &mut report,
+            );
+        }
         let frame = wire::encode(&reply)?;
         link_write(&mut stream, &mut chaos_link, &frame).context("sending reply")?;
         report.bytes_tx += frame.len() as u64;
+        reg.add(Ctr::LinkTxBytes, frame.len() as u64);
     }
 }
 
@@ -1255,8 +1370,12 @@ mod tests {
             reduce_tree: false,
             mid_run: false,
             trace: false,
+            // armed: the final WorkerDone must carry a metrics snapshot
+            // (push cadence 0 = no periodic frames, final-only)
+            metrics: true,
             manifest: 0,
             liveness_ms: 0,
+            metrics_push_ms: 0,
             part_sizes: part_sizes.clone(),
             artifacts_dir: String::new(),
         };
@@ -1298,11 +1417,21 @@ mod tests {
             };
         wire::write_frame(&mut s, &wire::encode(&Message::Shutdown).unwrap()).unwrap();
         match wire::decode(&wire::read_frame(&mut s).unwrap(), None).unwrap() {
-            Message::WorkerDone { dist_evals, .. } => {
+            Message::WorkerDone { dist_evals, metrics, .. } => {
                 // pair phase only — the local-MST builds are accounted by
                 // the leader's cache, exactly like the in-process path
                 let expect = (plan.parts[0].len() * plan.parts[1].len()) as u64;
                 assert_eq!(dist_evals, expect, "exactly one bipartite block");
+                let snap = metrics.expect("armed setup ships a final snapshot");
+                use crate::obs::metrics::{Ctr, Hist};
+                assert_eq!(snap.counter(Ctr::JobsCompleted), 1);
+                assert_eq!(snap.hist(Hist::JobLatency).count, 1);
+                assert_eq!(snap.hist(Hist::LocalMst).count, 2, "two local builds");
+                assert!(
+                    snap.counter(Ctr::DistEvals) >= expect,
+                    "registry counts pair + local evals"
+                );
+                assert_eq!(snap.slowest.map(|s| (s.i, s.j)), Some((0, 1)));
             }
             other => panic!("expected WorkerDone, got {other:?}"),
         }
@@ -1363,7 +1492,9 @@ mod tests {
             reduce_tree: false,
             mid_run: false,
             trace: false,
+            metrics: false,
             liveness_ms: 0,
+            metrics_push_ms: 0,
             manifest: fingerprint,
             part_sizes: part_sizes.clone(),
             artifacts_dir: String::new(),
@@ -1450,7 +1581,9 @@ mod tests {
             reduce_tree: false,
             mid_run: false,
             trace: false,
+            metrics: false,
             liveness_ms: 0,
+            metrics_push_ms: 0,
             manifest: 0xdead_0000_0000_0001, // some other partition run
             part_sizes: vec![12, 12],
             artifacts_dir: String::new(),
@@ -1483,8 +1616,10 @@ mod tests {
             reduce_tree: false,
             mid_run: true,
             trace: false,
+            metrics: false,
             manifest: 0,
             liveness_ms: 0,
+            metrics_push_ms: 0,
             part_sizes: vec![4, 4],
             artifacts_dir: String::new(),
         };

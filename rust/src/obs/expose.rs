@@ -1,0 +1,232 @@
+//! Prometheus text exposition (format 0.0.4, hand-rolled — the offline
+//! vendor set has no HTTP or metrics crates) over a tiny blocking HTTP
+//! listener.
+//!
+//! The listener polls a non-blocking accept loop so `stop()` takes effect
+//! within one poll interval; each request gets the fleet-merged snapshot
+//! rendered fresh, so a mid-run scrape sees live worker pushes. This is
+//! the per-request metrics surface `demst serve` will mount.
+
+use super::metrics::{bucket_bounds, Ctr, Gauge, Hist, MetricsHub, Snapshot};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const POLL: Duration = Duration::from_millis(25);
+
+/// Render a merged snapshot as Prometheus text format 0.0.4.
+///
+/// Histograms ship their occupied buckets as cumulative `_bucket{le=...}`
+/// series plus the mandatory `+Inf` bucket, `_sum`, and `_count`; recorded
+/// nanoseconds scale to seconds (and milli-GFLOP/s to GFLOP/s) so the `le`
+/// bounds are in base units.
+pub fn render(snap: &Snapshot, workers_reporting: usize) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("# HELP demst_fleet_workers Remote workers that have pushed metrics\n");
+    out.push_str("# TYPE demst_fleet_workers gauge\n");
+    out.push_str(&format!("demst_fleet_workers {workers_reporting}\n"));
+    for c in Ctr::ALL {
+        out.push_str(&format!("# HELP demst_{} {}\n", c.name(), c.help()));
+        out.push_str(&format!("# TYPE demst_{} counter\n", c.name()));
+        out.push_str(&format!("demst_{} {}\n", c.name(), snap.counter(c)));
+    }
+    for g in Gauge::ALL {
+        out.push_str(&format!("# HELP demst_{} {}\n", g.name(), g.help()));
+        out.push_str(&format!("# TYPE demst_{} gauge\n", g.name()));
+        out.push_str(&format!("demst_{} {}\n", g.name(), snap.gauge(g)));
+    }
+    for h in Hist::ALL {
+        let hs = snap.hist(h);
+        let scale = h.unit_scale();
+        out.push_str(&format!("# HELP demst_{} {}\n", h.name(), h.help()));
+        out.push_str(&format!("# TYPE demst_{} histogram\n", h.name()));
+        let mut cum = 0u64;
+        for (idx, &c) in hs.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let (_, hi) = bucket_bounds(idx);
+            out.push_str(&format!(
+                "demst_{}_bucket{{le=\"{}\"}} {cum}\n",
+                h.name(),
+                num(hi as f64 / scale)
+            ));
+        }
+        out.push_str(&format!("demst_{}_bucket{{le=\"+Inf\"}} {}\n", h.name(), hs.count));
+        out.push_str(&format!("demst_{}_sum {}\n", h.name(), num(hs.sum as f64 / scale)));
+        out.push_str(&format!("demst_{}_count {}\n", h.name(), hs.count));
+    }
+    if let Some(slow) = snap.slowest {
+        out.push_str("# HELP demst_slowest_job_seconds Latency of the slowest pair job\n");
+        out.push_str("# TYPE demst_slowest_job_seconds gauge\n");
+        out.push_str(&format!(
+            "demst_slowest_job_seconds{{i=\"{}\",j=\"{}\"}} {}\n",
+            slow.i,
+            slow.j,
+            num(slow.ns as f64 / 1e9)
+        ));
+    }
+    out
+}
+
+/// Prometheus floats: plain decimal, no exponent for the magnitudes we
+/// emit; integral values still print a fraction-free form.
+fn num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Handle to a running exposition listener; dropping or calling
+/// [`MetricsServer::stop`] shuts the accept loop down.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `listen` (e.g. `127.0.0.1:9399`, port 0 for ephemeral) and
+    /// serve `GET /metrics` from `hub.merged()` until stopped.
+    pub fn start(listen: &str, hub: Arc<MetricsHub>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding metrics listener on {listen}"))?;
+        let addr = listener.local_addr().context("metrics listener local addr")?;
+        listener.set_nonblocking(true).context("metrics listener nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("demst-metrics".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let body = render(&hub.merged(), hub.workers_reporting());
+                            let _ = respond(stream, &body);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL);
+                        }
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                }
+            })
+            .context("spawning metrics listener thread")?;
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address — the real port when started with port 0.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Minimal HTTP/1.1: drain the request head, answer every path with the
+/// exposition body (a scraper that asks for `/` gets metrics too — there
+/// is nothing else to serve).
+fn respond(mut stream: TcpStream, body: &str) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_millis(500)))?;
+    let mut head = [0u8; 1024];
+    let mut got = 0;
+    while got < head.len() {
+        match stream.read(&mut head[got..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                got += n;
+                if head[..got].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout or reset: answer anyway, then close
+        }
+    }
+    let resp = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn render_emits_valid_exposition_lines() {
+        let r = Registry::new();
+        r.observe_job(2_000_000_000, 3, 7); // 2s
+        r.add(Ctr::DistEvals, 50);
+        let text = render(&r.snapshot(), 2);
+        assert!(text.contains("demst_fleet_workers 2"));
+        assert!(text.contains("# TYPE demst_jobs_completed_total counter"));
+        assert!(text.contains("demst_dist_evals_total 50"));
+        assert!(text.contains("# TYPE demst_job_latency_seconds histogram"));
+        assert!(text.contains("demst_job_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("demst_job_latency_seconds_sum 2\n"));
+        assert!(text.contains("demst_job_latency_seconds_count 1"));
+        assert!(text.contains("demst_slowest_job_seconds{i=\"3\",j=\"7\"} 2"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(parts.next().is_some(), "malformed line: {line}");
+            assert!(value.parse::<f64>().is_ok(), "non-numeric value in: {line}");
+        }
+    }
+
+    #[test]
+    fn listener_serves_merged_hub_and_stops() {
+        let hub = Arc::new(MetricsHub::new());
+        hub.local.observe_job(1_000, 0, 1);
+        let remote = Registry::new();
+        remote.observe_job(9_000, 1, 2);
+        hub.absorb(7, remote.snapshot());
+        let srv = MetricsServer::start("127.0.0.1:0", Arc::clone(&hub)).unwrap();
+        let addr = srv.addr();
+        let resp = scrape(addr);
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("demst_job_latency_seconds_count 2"), "fleet-merged count");
+        assert!(resp.contains("demst_fleet_workers 1"));
+        srv.stop();
+        // a fresh connect after stop fails once the listener is gone
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(TcpStream::connect(addr).is_err(), "listener still accepting after stop");
+    }
+}

@@ -1,0 +1,697 @@
+//! Fleet-mergeable metrics: relaxed-atomic counters, gauges, and
+//! log-linear-bucket histograms.
+//!
+//! The histogram bucket layout is a compile-time constant shared by every
+//! worker, so per-worker histograms merge associatively and commutatively by
+//! bucket-wise add: count and sum are *exactly* preserved under any merge
+//! tree (sums wrap mod 2^64, like every other u64 tally on the wire), and
+//! quantile estimates carry at most one bucket of error. Values `0..8` get
+//! an exact bucket each; from 8 up, each power-of-two decade splits into
+//! `SUBS = 8` sub-buckets, bounding the relative bucket width at 12.5%
+//! across the full u64 range in `N_BUCKETS = 496` buckets.
+//!
+//! Everything here is `std`-only: atomics for the hot path, a compact
+//! little-endian binary codec for shipping snapshots inside `WorkerDone`
+//! and `MetricsPush` frames (wire v7), and a [`MetricsHub`] that keeps the
+//! leader's fleet-wide view — the substrate `obs::expose` renders as
+//! Prometheus text.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// log2 of the number of sub-buckets per power-of-two decade.
+pub const SUB_BITS: u32 = 3;
+/// Sub-buckets per decade: relative bucket width is `1 / SUBS` = 12.5%.
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Exact buckets for 0..8, then 61 decades (exponents 3..=63) of 8.
+pub const N_BUCKETS: usize = SUBS + (64 - SUB_BITS as usize) * SUBS;
+
+/// Bucket index for a recorded value. Total order: larger values never map
+/// to a smaller index.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // 3..=63
+    let sub = ((v >> (e - SUB_BITS)) - SUBS as u64) as usize; // 0..8
+    SUBS + (e - SUB_BITS) as usize * SUBS + sub
+}
+
+/// Half-open value range `[lo, hi)` covered by bucket `idx`. The last
+/// bucket's upper bound saturates at `u64::MAX` (it covers the top of the
+/// u64 range).
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    debug_assert!(idx < N_BUCKETS);
+    if idx < SUBS {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let g = (idx - SUBS) / SUBS; // decade: exponent - SUB_BITS
+    let s = ((idx - SUBS) % SUBS) as u64;
+    let lo = (SUBS as u64 + s) << g;
+    (lo, lo.saturating_add(1u64 << g))
+}
+
+/// Counter identities. Fixed order: the wire codec and the exposition both
+/// index by discriminant.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Ctr {
+    JobsCompleted,
+    JobsStolen,
+    DistEvals,
+    LinkTxBytes,
+    LinkRxBytes,
+    PeerTxBytes,
+    PeerRxBytes,
+}
+
+impl Ctr {
+    pub const ALL: [Ctr; 7] = [
+        Ctr::JobsCompleted,
+        Ctr::JobsStolen,
+        Ctr::DistEvals,
+        Ctr::LinkTxBytes,
+        Ctr::LinkRxBytes,
+        Ctr::PeerTxBytes,
+        Ctr::PeerRxBytes,
+    ];
+
+    /// Metric name suffix (the exposition prepends `demst_`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Ctr::JobsCompleted => "jobs_completed_total",
+            Ctr::JobsStolen => "jobs_stolen_total",
+            Ctr::DistEvals => "dist_evals_total",
+            Ctr::LinkTxBytes => "link_tx_bytes_total",
+            Ctr::LinkRxBytes => "link_rx_bytes_total",
+            Ctr::PeerTxBytes => "peer_tx_bytes_total",
+            Ctr::PeerRxBytes => "peer_rx_bytes_total",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Ctr::JobsCompleted => "Pair jobs completed",
+            Ctr::JobsStolen => "Pair jobs run off their affinity deck",
+            Ctr::DistEvals => "Distance evaluations performed",
+            Ctr::LinkTxBytes => "Bytes written on the leader link",
+            Ctr::LinkRxBytes => "Bytes read on the leader link",
+            Ctr::PeerTxBytes => "Bytes shipped on worker-to-worker links",
+            Ctr::PeerRxBytes => "Bytes received on worker-to-worker links",
+        }
+    }
+}
+
+/// Gauge identities. Gauges merge by summation (fleet total).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Gauge {
+    QueueDepth,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 1] = [Gauge::QueueDepth];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "queue_depth",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Gauge::QueueDepth => "Pair jobs waiting in the leader queue",
+        }
+    }
+}
+
+/// Histogram identities, instrumented at the PR-9 span points.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Hist {
+    /// Pair-job wall latency, nanoseconds.
+    JobLatency,
+    /// Local-MST build latency, nanoseconds.
+    LocalMst,
+    /// ⊕-fold latency, nanoseconds.
+    Fold,
+    /// Peer tree-fetch latency, nanoseconds.
+    PeerFetch,
+    /// Panel kernel throughput per job, milli-GFLOP/s (GFLOP/s × 1000).
+    PanelGflops,
+}
+
+impl Hist {
+    pub const ALL: [Hist; 5] =
+        [Hist::JobLatency, Hist::LocalMst, Hist::Fold, Hist::PeerFetch, Hist::PanelGflops];
+
+    /// Metric name suffix, already carrying the exposition unit.
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::JobLatency => "job_latency_seconds",
+            Hist::LocalMst => "local_mst_seconds",
+            Hist::Fold => "fold_seconds",
+            Hist::PeerFetch => "peer_fetch_seconds",
+            Hist::PanelGflops => "panel_gflops",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Hist::JobLatency => "Pair-job wall latency",
+            Hist::LocalMst => "Local MST build latency",
+            Hist::Fold => "Tree fold latency",
+            Hist::PeerFetch => "Peer tree-fetch latency",
+            Hist::PanelGflops => "Panel kernel throughput per job",
+        }
+    }
+
+    /// Recorded-unit per exposition-unit: ns per second, milli-GFLOP/s per
+    /// GFLOP/s. Divide recorded values by this for exposition.
+    pub fn unit_scale(self) -> f64 {
+        match self {
+            Hist::PanelGflops => 1e3,
+            _ => 1e9,
+        }
+    }
+}
+
+const N_CTRS: usize = Ctr::ALL.len();
+const N_GAUGES: usize = Gauge::ALL.len();
+const N_HISTS: usize = Hist::ALL.len();
+
+/// The slowest pair job seen so far: merge keeps the max by latency.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SlowJob {
+    pub ns: u64,
+    pub i: u32,
+    pub j: u32,
+}
+
+struct AtomHist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl AtomHist {
+    fn new() -> Self {
+        AtomHist {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn record(&self, v: u64) {
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.min.fetch_min(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+    }
+
+    fn snapshot(&self) -> HistSnap {
+        HistSnap {
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+            min: self.min.load(Relaxed),
+            max: self.max.load(Relaxed),
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram. `min` is `u64::MAX` while empty so
+/// that merge is `min(a, b)` with no special case.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct HistSnap {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// Dense bucket occupancy, length `N_BUCKETS` (the codec ships only the
+    /// occupied ones).
+    pub buckets: Vec<u64>,
+}
+
+impl Default for HistSnap {
+    fn default() -> Self {
+        HistSnap { count: 0, sum: 0, min: u64::MAX, max: 0, buckets: vec![0; N_BUCKETS] }
+    }
+}
+
+impl HistSnap {
+    /// Bucket-wise add: associative and commutative, exact on count/sum.
+    pub fn merge(&mut self, other: &HistSnap) {
+        self.count = self.count.wrapping_add(other.count);
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a = a.wrapping_add(*b);
+        }
+    }
+
+    /// Quantile estimate for `q ∈ [0, 1]`: the midpoint of the bucket
+    /// holding the rank-`⌈q·count⌉` value, clamped into that bucket and
+    /// into the observed `[min, max]`. Always lies within the bucket's
+    /// bounds, so the error is at most the bucket width (≤ 12.5% relative).
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= target {
+                let (lo, hi) = bucket_bounds(idx);
+                let mid = lo + (hi - lo) / 2;
+                let cap = hi.saturating_sub(1).max(lo);
+                return Some(mid.clamp(lo, cap).clamp(self.min.min(cap), self.max.max(lo)));
+            }
+        }
+        Some(self.max) // unreachable when buckets are consistent with count
+    }
+
+    fn occupied(&self) -> usize {
+        self.buckets.iter().filter(|&&c| c != 0).count()
+    }
+}
+
+/// Point-in-time copy of a whole registry: what ships on the wire and what
+/// the leader merges fleet-wide.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Snapshot {
+    pub counters: [u64; N_CTRS],
+    pub gauges: [i64; N_GAUGES],
+    pub slowest: Option<SlowJob>,
+    /// One per `Hist::ALL`, in order.
+    pub hists: Vec<HistSnap>,
+}
+
+impl Default for Snapshot {
+    fn default() -> Self {
+        Snapshot {
+            counters: [0; N_CTRS],
+            gauges: [0; N_GAUGES],
+            slowest: None,
+            hists: vec![HistSnap::default(); N_HISTS],
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> i64 {
+        self.gauges[g as usize]
+    }
+
+    pub fn hist(&self, h: Hist) -> &HistSnap {
+        &self.hists[h as usize]
+    }
+
+    /// Fleet merge: counters and gauges add, histograms add bucket-wise,
+    /// slowest-job keeps the max by latency.
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a = a.wrapping_add(*b);
+        }
+        for (a, b) in self.gauges.iter_mut().zip(&other.gauges) {
+            *a = a.wrapping_add(*b);
+        }
+        if other.slowest.is_some_and(|o| self.slowest.is_none_or(|s| o.ns > s.ns)) {
+            self.slowest = other.slowest;
+        }
+        for (a, b) in self.hists.iter_mut().zip(&other.hists) {
+            a.merge(b);
+        }
+    }
+
+    /// Encoded size in bytes — the single source of truth for the byte
+    /// model, mirroring `wire::encoded_len`.
+    pub fn wire_bytes(&self) -> u64 {
+        let hist_bytes: u64 =
+            self.hists.iter().map(|h| 34 + 10 * h.occupied() as u64).sum();
+        4 + 8 * N_CTRS as u64 + 8 * N_GAUGES as u64 + 16 + hist_bytes
+    }
+
+    /// Compact little-endian codec: a 4-byte shape header (so a version-
+    /// skewed block fails loudly), dense counters/gauges, the slowest-job
+    /// triple, then per histogram `count/sum/min/max`, an occupied-bucket
+    /// count, and `(index u16, count u64)` pairs in ascending index order.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() as usize);
+        out.extend_from_slice(&[N_CTRS as u8, N_GAUGES as u8, N_HISTS as u8, 0]);
+        for c in &self.counters {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        for g in &self.gauges {
+            out.extend_from_slice(&g.to_le_bytes());
+        }
+        let slow = self.slowest.unwrap_or(SlowJob { ns: 0, i: 0, j: 0 });
+        out.extend_from_slice(&slow.ns.to_le_bytes());
+        out.extend_from_slice(&slow.i.to_le_bytes());
+        out.extend_from_slice(&slow.j.to_le_bytes());
+        for h in &self.hists {
+            out.extend_from_slice(&h.count.to_le_bytes());
+            out.extend_from_slice(&h.sum.to_le_bytes());
+            out.extend_from_slice(&h.min.to_le_bytes());
+            out.extend_from_slice(&h.max.to_le_bytes());
+            out.extend_from_slice(&(h.occupied() as u16).to_le_bytes());
+            for (idx, &c) in h.buckets.iter().enumerate() {
+                if c != 0 {
+                    out.extend_from_slice(&(idx as u16).to_le_bytes());
+                    out.extend_from_slice(&c.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(out.len() as u64, self.wire_bytes());
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Snapshot> {
+        let mut r = Cursor { buf, at: 0 };
+        let shape = [r.u8()?, r.u8()?, r.u8()?, r.u8()?];
+        if shape != [N_CTRS as u8, N_GAUGES as u8, N_HISTS as u8, 0] {
+            bail!("metrics block shape {shape:?} does not match this build");
+        }
+        let mut snap = Snapshot::default();
+        for c in snap.counters.iter_mut() {
+            *c = r.u64()?;
+        }
+        for g in snap.gauges.iter_mut() {
+            *g = r.u64()? as i64;
+        }
+        let (ns, i, j) = (r.u64()?, r.u32()?, r.u32()?);
+        snap.slowest = (ns != 0).then_some(SlowJob { ns, i, j });
+        for h in snap.hists.iter_mut() {
+            h.count = r.u64()?;
+            h.sum = r.u64()?;
+            h.min = r.u64()?;
+            h.max = r.u64()?;
+            let nz = r.u16()? as usize;
+            if nz > N_BUCKETS {
+                bail!("metrics block claims {nz} occupied buckets (max {N_BUCKETS})");
+            }
+            let mut prev: Option<usize> = None;
+            for _ in 0..nz {
+                let idx = r.u16()? as usize;
+                if idx >= N_BUCKETS {
+                    bail!("metrics bucket index {idx} out of range");
+                }
+                if prev.is_some_and(|p| idx <= p) {
+                    bail!("metrics bucket indices must be strictly ascending");
+                }
+                prev = Some(idx);
+                h.buckets[idx] = r.u64()?;
+            }
+        }
+        if r.at != buf.len() {
+            bail!("metrics block has {} trailing bytes", buf.len() - r.at);
+        }
+        Ok(snap)
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.buf.len() - self.at < n {
+            bail!("metrics block truncated at byte {}", self.at);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// One process's live metrics. Recording is lock-free (relaxed atomics)
+/// except the slowest-job tracker, which takes a short mutex only on the
+/// job-completion path.
+pub struct Registry {
+    counters: [AtomicU64; N_CTRS],
+    gauges: [AtomicI64; N_GAUGES],
+    hists: [AtomHist; N_HISTS],
+    slowest: Mutex<Option<SlowJob>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicI64::new(0)),
+            hists: std::array::from_fn(|_| AtomHist::new()),
+            slowest: Mutex::new(None),
+        }
+    }
+
+    pub fn add(&self, c: Ctr, delta: u64) {
+        self.counters[c as usize].fetch_add(delta, Relaxed);
+    }
+
+    pub fn gauge_set(&self, g: Gauge, v: i64) {
+        self.gauges[g as usize].store(v, Relaxed);
+    }
+
+    pub fn gauge_add(&self, g: Gauge, delta: i64) {
+        self.gauges[g as usize].fetch_add(delta, Relaxed);
+    }
+
+    pub fn observe(&self, h: Hist, v: u64) {
+        self.hists[h as usize].record(v);
+    }
+
+    /// Record one completed pair job: latency histogram, completion
+    /// counter, and the slowest-job tracker in one call.
+    pub fn observe_job(&self, ns: u64, i: u32, j: u32) {
+        self.observe(Hist::JobLatency, ns);
+        self.add(Ctr::JobsCompleted, 1);
+        let mut slow = self.slowest.lock().unwrap();
+        if slow.is_none_or(|s| ns > s.ns) {
+            *slow = Some(SlowJob { ns, i, j });
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: std::array::from_fn(|i| self.counters[i].load(Relaxed)),
+            gauges: std::array::from_fn(|i| self.gauges[i].load(Relaxed)),
+            slowest: *self.slowest.lock().unwrap(),
+            hists: self.hists.iter().map(|h| h.snapshot()).collect(),
+        }
+    }
+}
+
+/// The leader's fleet-wide view: its own registry plus the latest snapshot
+/// pushed by each remote worker (pushes are cumulative, so latest-wins
+/// replacement is the correct merge input). Created per run — never a
+/// process global, so parallel in-process runs can't cross-contaminate.
+#[derive(Default)]
+pub struct MetricsHub {
+    pub local: Registry,
+    workers: Mutex<HashMap<u16, Snapshot>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub::default()
+    }
+
+    /// Install `snap` as worker `id`'s latest cumulative snapshot.
+    pub fn absorb(&self, id: u16, snap: Snapshot) {
+        self.workers.lock().unwrap().insert(id, snap);
+    }
+
+    /// Number of remote workers that have pushed at least once.
+    pub fn workers_reporting(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Fleet-wide merged view: leader-local registry ⊕ every worker's
+    /// latest snapshot.
+    pub fn merged(&self) -> Snapshot {
+        let mut out = self.local.snapshot();
+        for snap in self.workers.lock().unwrap().values() {
+            out.merge(snap);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_total_and_tight() {
+        // Every probe value lands in a bucket whose bounds contain it, and
+        // the index is monotone in the value.
+        let probes: Vec<u64> = (0..200)
+            .chain([255, 256, 257, 1023, 1024, 4095, 1 << 20, (1 << 40) + 17, u64::MAX / 2])
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        let mut last_idx = 0;
+        for &v in &probes {
+            let idx = bucket_index(v);
+            assert!(idx < N_BUCKETS, "{v} -> {idx}");
+            assert!(idx >= last_idx, "index must be monotone at {v}");
+            last_idx = idx;
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v, "{v} below bucket {idx} [{lo},{hi})");
+            assert!(v < hi || hi == u64::MAX, "{v} above bucket {idx} [{lo},{hi})");
+            // relative width bound: (hi - lo) / lo <= 1/8 for lo >= 8
+            if lo >= 8 && hi != u64::MAX {
+                assert!(hi - lo <= lo / 8, "bucket {idx} wider than 12.5%");
+            }
+        }
+        // the top bucket is the last one
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn merge_preserves_count_and_sum_exactly() {
+        let a = Registry::new();
+        let b = Registry::new();
+        for v in [0u64, 1, 7, 8, 9, 100, 12_345, 1 << 33] {
+            a.observe(Hist::JobLatency, v);
+            b.observe(Hist::JobLatency, v * 3 + 1);
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let mut ab = sa.clone();
+        ab.merge(&sb);
+        let mut ba = sb.clone();
+        ba.merge(&sa);
+        assert_eq!(ab, ba, "merge is commutative");
+        let h = ab.hist(Hist::JobLatency);
+        assert_eq!(h.count, 16);
+        let want: u64 = [0u64, 1, 7, 8, 9, 100, 12_345, 1 << 33]
+            .iter()
+            .map(|v| v + v * 3 + 1)
+            .sum();
+        assert_eq!(h.sum, want);
+        assert_eq!(h.min, 0);
+        assert_eq!(h.max, (1u64 << 33) * 3 + 1);
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count, "buckets account for every sample");
+    }
+
+    #[test]
+    fn quantiles_stay_within_bucket_and_range() {
+        let r = Registry::new();
+        let vals: Vec<u64> = (1..=1000).map(|i| i * 37).collect();
+        for &v in &vals {
+            r.observe(Hist::Fold, v);
+        }
+        let h = r.snapshot().hist(Hist::Fold).clone();
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let est = h.quantile(q).unwrap();
+            assert!(est >= h.min && est <= h.max, "q={q} est {est} outside [min,max]");
+            // the estimate is inside *some* bucket that brackets the true
+            // rank value within one bucket
+            let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+            let truth = vals[rank - 1];
+            let (lo, hi) = bucket_bounds(bucket_index(truth));
+            assert!(est >= lo && est < hi, "q={q}: est {est} not in truth bucket [{lo},{hi})");
+        }
+        assert!(HistSnap::default().quantile(0.5).is_none(), "empty histogram has no quantile");
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrips_and_pins_size() {
+        let r = Registry::new();
+        r.add(Ctr::DistEvals, 12_345);
+        r.add(Ctr::LinkTxBytes, 999);
+        r.gauge_set(Gauge::QueueDepth, -3);
+        r.observe_job(5_000_000, 4, 9);
+        r.observe_job(1_000_000, 0, 1);
+        r.observe(Hist::PeerFetch, 42);
+        let snap = r.snapshot();
+        let buf = snap.encode();
+        assert_eq!(buf.len() as u64, snap.wire_bytes(), "encode length == wire_bytes");
+        assert_eq!(Snapshot::decode(&buf).unwrap(), snap);
+        assert_eq!(snap.slowest, Some(SlowJob { ns: 5_000_000, i: 4, j: 9 }));
+        // empty snapshot: fixed-size header + per-hist fixed blocks only
+        let empty = Snapshot::default();
+        assert_eq!(
+            empty.wire_bytes(),
+            4 + 8 * 7 + 8 * 1 + 16 + 5 * 34,
+            "empty snapshot size is pinned"
+        );
+        assert_eq!(Snapshot::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_blocks() {
+        let snap = {
+            let r = Registry::new();
+            r.observe(Hist::JobLatency, 17);
+            r.snapshot()
+        };
+        let good = snap.encode();
+        assert!(Snapshot::decode(&good[..good.len() - 1]).is_err(), "truncated");
+        let mut shape = good.clone();
+        shape[2] = 99;
+        assert!(Snapshot::decode(&shape).is_err(), "shape mismatch");
+        let mut extra = good.clone();
+        extra.push(0);
+        assert!(Snapshot::decode(&extra).is_err(), "trailing bytes");
+        // a forged huge occupied-bucket count is refused before allocation
+        let hist_at = 4 + 8 * 7 + 8 + 16; // first hist block
+        let mut forged = good;
+        forged[hist_at + 32..hist_at + 34].copy_from_slice(&u16::MAX.to_le_bytes());
+        assert!(Snapshot::decode(&forged).is_err(), "hostile bucket count rejected");
+    }
+
+    #[test]
+    fn hub_merges_fleet_wide_with_latest_wins_pushes() {
+        let hub = MetricsHub::new();
+        hub.local.observe_job(10, 0, 1);
+        let mk = |jobs: u64, ns: u64| {
+            let r = Registry::new();
+            for k in 0..jobs {
+                r.observe_job(ns + k, 2, 3);
+            }
+            r.snapshot()
+        };
+        hub.absorb(1, mk(2, 100));
+        hub.absorb(1, mk(3, 100)); // cumulative re-push replaces
+        hub.absorb(2, mk(1, 999));
+        let fleet = hub.merged();
+        assert_eq!(fleet.counter(Ctr::JobsCompleted), 1 + 3 + 1);
+        assert_eq!(fleet.hist(Hist::JobLatency).count, 5);
+        assert_eq!(fleet.slowest.unwrap().ns, 999);
+        assert_eq!(hub.workers_reporting(), 2);
+    }
+}

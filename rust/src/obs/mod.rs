@@ -18,14 +18,23 @@
 //! - [`report`] — versioned machine-readable run report
 //!   (`--report-out run.json`): full `RunMetrics` + per-worker breakdown +
 //!   config fingerprint, validated in CI by `scripts/check_run_report.py`;
+//! - [`metrics`] — fleet-mergeable counters/gauges/log-linear histograms
+//!   (wire v7: compact snapshots ride `WorkerDone` and periodic
+//!   `MetricsPush` frames; the leader's [`metrics::MetricsHub`] merges
+//!   them fleet-wide);
+//! - [`expose`] — hand-rolled Prometheus text exposition (format 0.0.4)
+//!   on a tiny HTTP listener (`--metrics-listen`), scrapeable mid-run;
 //! - [`progress`] — leader-side live ticker (jobs done/total, bytes,
 //!   stalls, admissions; auto-off when stderr is not a tty or `--quiet`);
-//! - [`json`] — the tiny hand-rolled JSON string/number helpers (no serde
-//!   in the offline vendor set);
+//! - [`json`] — the tiny hand-rolled JSON helpers: string/number writers
+//!   plus the minimal parser `report diff` reads run reports back with
+//!   (no serde in the offline vendor set);
 //! - the [`log!`](crate::obs_log) macro — `DEMST_LOG`-leveled stderr
 //!   logging replacing the ad-hoc `eprintln!` diagnostics.
 
+pub mod expose;
 pub mod json;
+pub mod metrics;
 pub mod progress;
 pub mod recorder;
 pub mod report;
@@ -185,10 +194,16 @@ pub fn level_enabled(level: Level) -> bool {
 }
 
 /// Sink for [`log!`](crate::obs_log). Formatting is deferred: when the
-/// level is filtered out nothing is rendered.
+/// level is filtered out nothing is rendered. Holds the stderr lock across
+/// clearing a live progress-ticker line and writing the log line, so the
+/// `\r` ticker and log output never clobber each other; the ticker
+/// repaints on its next tick.
 pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
     if level_enabled(level) {
-        eprintln!("[demst {}] {args}", level.name());
+        use std::io::Write;
+        let mut err = std::io::stderr().lock();
+        progress::clear_for_log(&mut err);
+        let _ = writeln!(err, "[demst {}] {args}", level.name());
     }
 }
 

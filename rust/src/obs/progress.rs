@@ -7,15 +7,33 @@
 //! `--quiet`; when silent, `tick` is a single bool check.
 
 use std::io::{IsTerminal, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 const REDRAW_EVERY: Duration = Duration::from_millis(100);
+
+/// A ticker line is currently painted on the terminal. Process-global so
+/// [`crate::obs::emit`] can clear it before a log line lands — otherwise
+/// the `\r` line and the log write clobber each other.
+static LIVE: AtomicBool = AtomicBool::new(false);
+/// A log line wiped the ticker; the next `tick` repaints immediately
+/// instead of waiting out the redraw throttle.
+static DIRTY: AtomicBool = AtomicBool::new(false);
+
+/// Clear a live ticker line under the caller's stderr lock, so the log
+/// line about to be written starts on a clean row, and schedule an
+/// immediate repaint. No-op (and no bytes written) when no line is up.
+pub(crate) fn clear_for_log(err: &mut impl Write) {
+    if LIVE.swap(false, Ordering::Relaxed) {
+        let _ = write!(err, "\r{:<70}\r", "");
+        DIRTY.store(true, Ordering::Relaxed);
+    }
+}
 
 pub struct Progress {
     active: bool,
     total: usize,
     last_draw: Option<Instant>,
-    drew_anything: bool,
 }
 
 impl Progress {
@@ -26,7 +44,6 @@ impl Progress {
             active: enabled && std::io::stderr().is_terminal(),
             total,
             last_draw: None,
-            drew_anything: false,
         }
     }
 
@@ -34,19 +51,21 @@ impl Progress {
         self.active
     }
 
-    /// Redraw at most every 100 ms.
+    /// Redraw at most every 100 ms — except right after a log line wiped
+    /// the ticker, which repaints on the next tick unconditionally.
     pub fn tick(&mut self, done: usize, bytes: u64, stalls: u32, admitted: u32) {
         if !self.active {
             return;
         }
         let now = Instant::now();
-        if let Some(last) = self.last_draw {
-            if now.duration_since(last) < REDRAW_EVERY {
-                return;
+        if !DIRTY.swap(false, Ordering::Relaxed) {
+            if let Some(last) = self.last_draw {
+                if now.duration_since(last) < REDRAW_EVERY {
+                    return;
+                }
             }
         }
         self.last_draw = Some(now);
-        self.drew_anything = true;
         let mut line = format!(
             "\r  jobs {done}/{} | gathered {}",
             self.total,
@@ -62,11 +81,12 @@ impl Progress {
         let mut err = std::io::stderr().lock();
         let _ = write!(err, "{line:<70}");
         let _ = err.flush();
+        LIVE.store(true, Ordering::Relaxed);
     }
 
     /// Clear the ticker line so the final report starts on a clean row.
     pub fn finish(&mut self) {
-        if self.active && self.drew_anything {
+        if self.active && LIVE.swap(false, Ordering::Relaxed) {
             let mut err = std::io::stderr().lock();
             let _ = write!(err, "\r{:<70}\r", "");
             let _ = err.flush();
@@ -100,5 +120,23 @@ mod tests {
         // ticker off regardless of the config side.
         let p = Progress::new(10, true);
         assert!(!p.active() || std::io::stderr().is_terminal());
+    }
+
+    #[test]
+    fn log_clear_wipes_live_line_and_schedules_repaint() {
+        // No live line: nothing written, nothing scheduled.
+        let mut sink = Vec::new();
+        LIVE.store(false, Ordering::Relaxed);
+        DIRTY.store(false, Ordering::Relaxed);
+        clear_for_log(&mut sink);
+        assert!(sink.is_empty(), "no clear bytes without a live ticker line");
+        assert!(!DIRTY.load(Ordering::Relaxed));
+        // Live line: clear sequence written, immediate repaint scheduled.
+        LIVE.store(true, Ordering::Relaxed);
+        clear_for_log(&mut sink);
+        assert!(sink.starts_with(b"\r"), "clear starts with carriage return");
+        assert!(sink.ends_with(b"\r"), "cursor parked at column 0 for the log line");
+        assert!(!LIVE.load(Ordering::Relaxed), "line no longer on screen");
+        assert!(DIRTY.swap(false, Ordering::Relaxed), "repaint scheduled");
     }
 }

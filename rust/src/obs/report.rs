@@ -61,6 +61,58 @@ fn span_digest(m: &RunMetrics) -> String {
     )
 }
 
+/// The fleet-merged histogram section: per histogram, exact count/sum and
+/// bucket-bound quantile estimates, plus the occupied buckets themselves
+/// so downstream tooling can re-derive any quantile. All values are scaled
+/// to the unit the histogram's name declares (seconds, GFLOP/s); `{}` when
+/// the run was not metrics-armed.
+fn histograms_digest(m: &RunMetrics) -> String {
+    use crate::obs::metrics::{bucket_bounds, Hist};
+    let Some(fleet) = &m.fleet_metrics else {
+        return "{}".to_string();
+    };
+    let mut out = Vec::new();
+    for h in Hist::ALL {
+        let snap = fleet.hist(h);
+        let scale = h.unit_scale();
+        let q = |p: f64| json::num(snap.quantile(p).map_or(0.0, |v| v as f64 / scale));
+        let buckets = snap
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| **n > 0)
+            .map(|(idx, n)| {
+                let (lo, hi) = bucket_bounds(idx);
+                format!(
+                    "{{{}, {}, {}}}",
+                    json::field("lo", &json::num(lo as f64 / scale)),
+                    json::field("hi", &json::num(hi as f64 / scale)),
+                    json::field("count", &n.to_string()),
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", ");
+        let min = if snap.count == 0 { 0.0 } else { snap.min as f64 / scale };
+        let body = [
+            json::field("count", &snap.count.to_string()),
+            json::field("sum", &json::num(snap.sum as f64 / scale)),
+            json::field("min", &json::num(min)),
+            json::field("max", &json::num(snap.max as f64 / scale)),
+            json::field("p50", &q(0.50)),
+            json::field("p90", &q(0.90)),
+            json::field("p99", &q(0.99)),
+            json::field("buckets", &format!("[{buckets}]")),
+        ]
+        .join(", ");
+        out.push(json::field(h.name(), &format!("{{{body}}}")));
+    }
+    out.push(json::field(
+        "workers_reporting",
+        &m.metrics_workers_reporting.to_string(),
+    ));
+    format!("{{\n    {}\n  }}", out.join(",\n    "))
+}
+
 /// Render the report document.
 pub fn render_run_report(cfg: &RunConfig, m: &RunMetrics) -> String {
     let config = [
@@ -142,12 +194,13 @@ pub fn render_run_report(cfg: &RunConfig, m: &RunMetrics) -> String {
         .join(", ");
 
     format!(
-        "{{\n  {},\n  {},\n  {},\n  {},\n  {},\n  {}\n}}\n",
+        "{{\n  {},\n  {},\n  {},\n  {},\n  {},\n  {},\n  {}\n}}\n",
         json::field("report_version", &REPORT_VERSION.to_string()),
         json::field("tool", &json::string("demst")),
         json::field("config", &format!("{{{config}}}")),
         json::field("metrics", &format!("{{\n    {metrics}\n  }}")),
         json::field("workers", &format!("[{workers}]")),
+        json::field("histograms", &histograms_digest(m)),
         json::field("spans", &span_digest(m)),
     )
 }
@@ -155,6 +208,112 @@ pub fn render_run_report(cfg: &RunConfig, m: &RunMetrics) -> String {
 pub fn write_run_report(path: &Path, cfg: &RunConfig, m: &RunMetrics) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
     f.write_all(render_run_report(cfg, m).as_bytes())
+}
+
+// ---------------------------------------------------------------------------
+// Cross-run regression diffing (`demst report diff`)
+// ---------------------------------------------------------------------------
+
+/// Allowed relative regression per tracked quantity, in percent
+/// (candidate may exceed baseline by at most this much). Defaults are
+/// deliberately loose on wall/latency — CI machines are noisy — and tight
+/// on the deterministic quantities (distance evaluations, wire bytes),
+/// which should not move at all without an intentional change.
+#[derive(Clone, Copy, Debug)]
+pub struct DiffThresholds {
+    pub wall_pct: f64,
+    pub dist_evals_pct: f64,
+    pub bytes_pct: f64,
+    pub p99_job_pct: f64,
+}
+
+impl Default for DiffThresholds {
+    fn default() -> Self {
+        Self { wall_pct: 25.0, dist_evals_pct: 1.0, bytes_pct: 1.0, p99_job_pct: 50.0 }
+    }
+}
+
+/// One compared quantity: baseline vs candidate with its allowance.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub name: &'static str,
+    pub baseline: f64,
+    pub candidate: f64,
+    pub limit_pct: f64,
+}
+
+impl DiffRow {
+    /// Relative change in percent; a zero baseline regresses to +∞ the
+    /// moment the candidate is nonzero (there is no sane ratio to allow).
+    pub fn delta_pct(&self) -> f64 {
+        if self.baseline > 0.0 {
+            (self.candidate - self.baseline) / self.baseline * 100.0
+        } else if self.candidate > self.baseline {
+            f64::INFINITY
+        } else {
+            0.0
+        }
+    }
+
+    pub fn regressed(&self) -> bool {
+        self.delta_pct() > self.limit_pct
+    }
+}
+
+fn metric_f64(doc: &json::Value, path: &str) -> Result<f64, String> {
+    doc.path(path)
+        .and_then(json::Value::as_f64)
+        .ok_or_else(|| format!("report is missing numeric field {path:?}"))
+}
+
+/// Compare two parsed run reports. Every row is returned — regressed or
+/// not — so callers can print the full table; the p99 job-latency row is
+/// only present when **both** runs recorded pair-job latency (older
+/// baselines and non-metrics-armed runs have none).
+pub fn diff_reports(
+    baseline: &json::Value,
+    candidate: &json::Value,
+    th: &DiffThresholds,
+) -> Result<Vec<DiffRow>, String> {
+    let bytes_of = |doc: &json::Value| -> Result<f64, String> {
+        Ok(metric_f64(doc, "metrics.scatter_bytes")?
+            + metric_f64(doc, "metrics.gather_bytes")?
+            + metric_f64(doc, "metrics.control_bytes")?)
+    };
+    let mut rows = vec![
+        DiffRow {
+            name: "wall_s",
+            baseline: metric_f64(baseline, "metrics.wall_s")?,
+            candidate: metric_f64(candidate, "metrics.wall_s")?,
+            limit_pct: th.wall_pct,
+        },
+        DiffRow {
+            name: "dist_evals",
+            baseline: metric_f64(baseline, "metrics.dist_evals")?,
+            candidate: metric_f64(candidate, "metrics.dist_evals")?,
+            limit_pct: th.dist_evals_pct,
+        },
+        DiffRow {
+            name: "wire_bytes",
+            baseline: bytes_of(baseline)?,
+            candidate: bytes_of(candidate)?,
+            limit_pct: th.bytes_pct,
+        },
+    ];
+    let p99 = "histograms.job_latency_seconds.p99";
+    let count = "histograms.job_latency_seconds.count";
+    let has_latency = |doc: &json::Value| {
+        doc.path(count).and_then(json::Value::as_f64).is_some_and(|c| c > 0.0)
+    };
+    if has_latency(baseline) && has_latency(candidate) {
+        rows.push(DiffRow {
+            name: "p99_job_latency_s",
+            baseline: metric_f64(baseline, p99)?,
+            candidate: metric_f64(candidate, p99)?,
+            limit_pct: th.p99_job_pct,
+        });
+    }
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -231,5 +390,114 @@ mod tests {
         let doc = render_run_report(&RunConfig::default(), &RunMetrics::default());
         assert!(doc.contains("\"total\": 0"), "{doc}");
         assert!(doc.contains("\"by_kind\": {}"), "{doc}");
+        // not metrics-armed ⇒ no fleet snapshot ⇒ empty histogram section
+        assert!(doc.contains("\"histograms\": {}"), "{doc}");
+    }
+
+    #[test]
+    fn report_parses_with_own_parser_and_carries_histograms() {
+        use crate::obs::json::Value;
+        use crate::obs::metrics::{Hist, Registry};
+        let reg = Registry::new();
+        reg.observe_job(1_500_000, 3, 7); // 1.5 ms
+        reg.observe_job(2_500_000, 0, 1); // 2.5 ms
+        reg.observe(Hist::Fold, 10_000);
+        let m = RunMetrics {
+            jobs: 2,
+            fleet_metrics: Some(reg.snapshot()),
+            metrics_workers_reporting: 1,
+            ..Default::default()
+        };
+        let doc = render_run_report(&RunConfig::default(), &m);
+        let v = json::parse(&doc).expect("the report must parse with our own reader");
+        let jl = v.path("histograms.job_latency_seconds").expect("job latency section");
+        assert_eq!(jl.get("count").and_then(Value::as_f64), Some(2.0));
+        // sum is exact: 4 ms in seconds
+        assert_eq!(jl.get("sum").and_then(Value::as_f64), Some(0.004));
+        let p99 = jl.get("p99").and_then(Value::as_f64).unwrap();
+        assert!(p99 > 0.002 && p99 < 0.003, "p99 {p99} should bracket the 2.5ms sample");
+        let buckets = jl.get("buckets").and_then(Value::as_arr).unwrap();
+        let total: f64 =
+            buckets.iter().map(|b| b.get("count").and_then(Value::as_f64).unwrap()).sum();
+        assert_eq!(total, 2.0, "occupied buckets must account for every sample");
+        assert_eq!(
+            v.path("histograms.fold_seconds.count").and_then(Value::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            v.path("histograms.workers_reporting").and_then(Value::as_f64),
+            Some(1.0)
+        );
+    }
+
+    fn rendered(m: &RunMetrics) -> json::Value {
+        json::parse(&render_run_report(&RunConfig::default(), m)).unwrap()
+    }
+
+    #[test]
+    fn diff_flags_only_regressions_beyond_their_threshold() {
+        use crate::obs::metrics::Registry;
+        let base_reg = Registry::new();
+        base_reg.observe_job(1_000_000, 0, 1);
+        let mut base = RunMetrics {
+            wall: Duration::from_millis(100),
+            dist_evals: 1_000,
+            scatter_bytes: 500,
+            gather_bytes: 400,
+            control_bytes: 100,
+            fleet_metrics: Some(base_reg.snapshot()),
+            ..Default::default()
+        };
+        let baseline = rendered(&base);
+
+        // identical run: nothing regresses
+        let rows =
+            diff_reports(&baseline, &baseline, &DiffThresholds::default()).unwrap();
+        assert_eq!(rows.len(), 4, "wall, evals, bytes, p99");
+        assert!(rows.iter().all(|r| !r.regressed()), "{rows:?}");
+
+        // wall doubles (over the 25% allowance), bytes creep 0.5% (under 1%)
+        base.wall = Duration::from_millis(200);
+        base.scatter_bytes = 505;
+        let candidate = rendered(&base);
+        let rows =
+            diff_reports(&baseline, &candidate, &DiffThresholds::default()).unwrap();
+        let by_name = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert!(by_name("wall_s").regressed());
+        assert!((by_name("wall_s").delta_pct() - 100.0).abs() < 1e-9);
+        assert!(!by_name("wire_bytes").regressed());
+        assert!(!by_name("dist_evals").regressed());
+
+        // improvements never flag
+        let rows =
+            diff_reports(&candidate, &baseline, &DiffThresholds::default()).unwrap();
+        assert!(rows.iter().all(|r| !r.regressed()), "{rows:?}");
+    }
+
+    #[test]
+    fn diff_omits_latency_row_when_a_side_recorded_no_jobs() {
+        let base = RunMetrics {
+            wall: Duration::from_millis(100),
+            dist_evals: 10,
+            ..Default::default()
+        };
+        let doc = rendered(&base);
+        let rows = diff_reports(&doc, &doc, &DiffThresholds::default()).unwrap();
+        assert_eq!(rows.len(), 3, "no fleet snapshot ⇒ no p99 row: {rows:?}");
+    }
+
+    #[test]
+    fn diff_zero_baseline_regresses_on_any_growth() {
+        let row = DiffRow { name: "x", baseline: 0.0, candidate: 1.0, limit_pct: 50.0 };
+        assert!(row.regressed());
+        let row = DiffRow { name: "x", baseline: 0.0, candidate: 0.0, limit_pct: 50.0 };
+        assert!(!row.regressed());
+    }
+
+    #[test]
+    fn diff_errors_on_a_non_report_document() {
+        let junk = json::parse("{\"hello\": 1}").unwrap();
+        let good = rendered(&RunMetrics::default());
+        assert!(diff_reports(&junk, &good, &DiffThresholds::default()).is_err());
     }
 }

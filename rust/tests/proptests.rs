@@ -965,3 +965,138 @@ fn prop_recorded_spans_are_well_formed_per_thread() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Fleet metrics plane: the histogram algebra the leader's fleet merge rests
+// on. Mergeability is the whole design — any worker's snapshot must be
+// absorbable in any order, any grouping, without changing the answer.
+// ---------------------------------------------------------------------------
+
+/// u64 spread across all magnitudes (0, small, huge) so every bucket
+/// regime — the linear low range and the log-linear tail — gets exercised.
+fn wide_u64(g: &mut Gen) -> u64 {
+    let shift = g.rng().next_bounded(64) as u32;
+    g.rng().next_u64() >> shift
+}
+
+fn hist_of(values: &[u64]) -> demst::obs::metrics::HistSnap {
+    use demst::obs::metrics::{Hist, Registry};
+    let reg = Registry::new();
+    for &v in values {
+        reg.observe(Hist::JobLatency, v);
+    }
+    reg.snapshot().hist(Hist::JobLatency).clone()
+}
+
+#[test]
+fn prop_histogram_merge_is_associative_and_commutative() {
+    use demst::obs::metrics::HistSnap;
+    Runner::new("hist merge laws", 0xC1, 40).run(|g| {
+        let mut parts: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..3 {
+            let len = g.usize_in(0..40);
+            parts.push((0..len).map(|_| wide_u64(g)).collect());
+        }
+        let (a, b, c) = (hist_of(&parts[0]), hist_of(&parts[1]), hist_of(&parts[2]));
+        // the empty histogram is the identity
+        let mut e = HistSnap::default();
+        e.merge(&a);
+        assert_eq!(e, a);
+        // commutative
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+        // associative
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+    });
+}
+
+#[test]
+fn prop_histogram_any_merge_tree_equals_one_registry() {
+    Runner::new("hist merge tree", 0xC2, 30).run(|g| {
+        let n = g.usize_in(1..120);
+        let values: Vec<u64> = (0..n).map(|_| wide_u64(g)).collect();
+        // deal the observations to k "workers", then fold their snapshots
+        // in a random binary-tree order — the fleet merge, shuffled
+        let k = g.usize_in(1..8);
+        let mut shards: Vec<Vec<u64>> = vec![Vec::new(); k];
+        for &v in &values {
+            let s = g.usize_in(0..k);
+            shards[s].push(v);
+        }
+        let mut snaps: Vec<_> = shards.iter().map(|s| hist_of(s)).collect();
+        while snaps.len() > 1 {
+            let picked = snaps.swap_remove(g.usize_in(0..snaps.len()));
+            let j = g.usize_in(0..snaps.len());
+            snaps[j].merge(&picked);
+        }
+        let whole = hist_of(&values);
+        assert_eq!(snaps[0], whole, "merge tree must reproduce the single-registry histogram");
+        assert_eq!(snaps[0].count, n as u64);
+        assert_eq!(snaps[0].sum, values.iter().fold(0u64, |acc, &v| acc.wrapping_add(v)));
+        assert_eq!(snaps[0].min, *values.iter().min().unwrap());
+        assert_eq!(snaps[0].max, *values.iter().max().unwrap());
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_stay_within_their_bucket_bounds() {
+    use demst::obs::metrics::{bucket_bounds, bucket_index};
+    Runner::new("hist quantile bounds", 0xC3, 40).run(|g| {
+        let n = g.usize_in(1..200);
+        let mut values: Vec<u64> = (0..n).map(|_| wide_u64(g)).collect();
+        let snap = hist_of(&values);
+        values.sort_unstable();
+        let mut prev = 0u64;
+        for step in 0..=10 {
+            let q = f64::from(step) / 10.0;
+            let r = snap.quantile(q).expect("non-empty histogram always answers");
+            // the exact order statistic the estimate stands in for
+            let target = ((q * n as f64).ceil() as u64).clamp(1, n as u64);
+            let t = values[(target - 1) as usize];
+            let (lo, hi) = bucket_bounds(bucket_index(t));
+            assert!(
+                r >= lo && r <= hi,
+                "q={q}: estimate {r} outside bucket [{lo}, {hi}) of true quantile {t}"
+            );
+            assert!(r >= snap.min && r <= snap.max, "estimate clamps into observed range");
+            assert!(r >= prev, "quantiles are monotone in q: {r} < {prev}");
+            prev = r;
+        }
+        assert_eq!(demst::obs::metrics::HistSnap::default().quantile(0.5), None);
+    });
+}
+
+#[test]
+fn prop_snapshot_merge_is_associative() {
+    use demst::obs::metrics::{Ctr, Gauge, Registry, Snapshot};
+    Runner::new("snapshot merge assoc", 0xC4, 25).run(|g| {
+        let mut snaps: Vec<Snapshot> = Vec::new();
+        for _ in 0..3 {
+            let reg = Registry::new();
+            for _ in 0..g.usize_in(0..20) {
+                let (ns, i, j) = (wide_u64(g), g.rng().next_u32(), g.rng().next_u32());
+                reg.observe_job(ns, i, j);
+            }
+            reg.add(Ctr::DistEvals, g.rng().next_bounded(1_000_000));
+            reg.gauge_set(Gauge::QueueDepth, g.rng().next_bounded(100) as i64);
+            snaps.push(reg.snapshot());
+        }
+        let mut left = snaps[0].clone();
+        left.merge(&snaps[1]);
+        left.merge(&snaps[2]);
+        let mut bc = snaps[1].clone();
+        bc.merge(&snaps[2]);
+        let mut right = snaps[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+    });
+}

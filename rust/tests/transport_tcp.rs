@@ -481,3 +481,54 @@ fn tcp_pipeline_window_does_not_change_bytes_or_tree() {
     assert_eq!(sim.metrics.scatter_bytes, runs[0].metrics.scatter_bytes);
     assert_eq!(sim.metrics.gather_bytes, runs[0].metrics.gather_bytes);
 }
+
+/// Fleet metrics parity: the leader-merged histograms and counters a
+/// metrics-armed tcp run assembles from its workers' shipped snapshots
+/// must agree with what the in-process run records directly — same job
+/// count in the latency histogram, same local-MST build count, and the
+/// same deterministic distance-evaluation total (the wire is a transport,
+/// not a different instrument).
+#[test]
+fn tcp_fleet_merged_metrics_match_in_process_recording() {
+    use demst::obs::metrics::{Ctr, Hist};
+    let ds = float_dataset(910, 60, 6);
+    let mut cfg = base_cfg(4, 2);
+    cfg.pair_kernel = PairKernelChoice::BipartiteMerge;
+    cfg.obs.metrics = true;
+    let sim = run_distributed(&ds, &cfg).unwrap();
+    let tcp = tcp_run(&ds, &cfg);
+    assert_eq!(normalize_tree(&sim.mst), normalize_tree(&tcp.mst));
+
+    let simf = sim.metrics.fleet_metrics.as_ref().expect("armed sim run carries a snapshot");
+    let tcpf = tcp.metrics.fleet_metrics.as_ref().expect("armed tcp run carries a snapshot");
+
+    // every pair job shows up exactly once in the latency histogram,
+    // whichever side of the wire executed it
+    let jobs = sim.metrics.jobs as u64;
+    assert_eq!(tcp.metrics.jobs as u64, jobs);
+    assert_eq!(simf.counter(Ctr::JobsCompleted), jobs);
+    assert_eq!(tcpf.counter(Ctr::JobsCompleted), jobs);
+    assert_eq!(simf.hist(Hist::JobLatency).count, jobs);
+    assert_eq!(tcpf.hist(Hist::JobLatency).count, jobs);
+    assert!(simf.slowest.is_some() && tcpf.slowest.is_some());
+
+    // one local-MST build per partition on both transports
+    assert_eq!(simf.hist(Hist::LocalMst).count, cfg.parts as u64);
+    assert_eq!(tcpf.hist(Hist::LocalMst).count, cfg.parts as u64);
+
+    // the deterministic counter: remote workers count the same distance
+    // evaluations the in-process solvers do, and both reconcile with the
+    // run-level total
+    assert_eq!(simf.counter(Ctr::DistEvals), sim.metrics.dist_evals);
+    assert_eq!(tcpf.counter(Ctr::DistEvals), tcp.metrics.dist_evals);
+    assert_eq!(simf.counter(Ctr::DistEvals), tcpf.counter(Ctr::DistEvals));
+
+    // both remote workers shipped a final snapshot; the in-process run has
+    // no remote fleet to report
+    assert_eq!(tcp.metrics.metrics_workers_reporting, 2);
+    assert_eq!(sim.metrics.metrics_workers_reporting, 0);
+
+    // the real wire moved real bytes — the link counters witnessed them
+    assert!(tcpf.counter(Ctr::LinkRxBytes) > 0, "workers count received frames");
+    assert!(tcpf.counter(Ctr::LinkTxBytes) > 0, "workers count sent frames");
+}

@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Exposition guard: validate a scrape of ``demst run --metrics-listen``.
+
+Run by the CI metrics-smoke job against text curl'ed from the leader's
+``/metrics`` endpoint *mid-run*. It fails loudly when the hand-rolled
+Prometheus text format 0.0.4 rendering goes wrong — a malformed sample
+line, a histogram whose bucket series stops being cumulative, a missing
+``+Inf`` bucket, or a family losing its ``# HELP``/``# TYPE`` header.
+
+Checks:
+- every non-comment line parses as ``name[{labels}] value`` with the
+  ``demst_`` prefix and a numeric value;
+- every ``# TYPE`` family also has a ``# HELP`` line;
+- histogram families: ``le`` bounds strictly ascend, bucket counts are
+  cumulative (non-decreasing), the series ends with ``le="+Inf"`` whose
+  value equals ``_count``, and ``_sum`` is present;
+- the fleet-merged pair-job latency histogram family is present;
+  ``--min-job-count N`` additionally requires its ``_count`` >= N (how the
+  smoke loop detects that a mid-run scrape has seen real pair jobs).
+
+Usage: check_metrics_exposition.py SCRAPE.txt [--min-job-count N]
+"""
+
+import re
+import sys
+
+SAMPLE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?P<labels>\{[^}]*\})? (?P<value>\S+)$')
+
+REQUIRED_FAMILIES = {
+    "demst_fleet_workers",
+    "demst_jobs_completed_total",
+    "demst_dist_evals_total",
+    "demst_job_latency_seconds",
+}
+
+
+def parse(text):
+    """Return (helps, types, samples, errors)."""
+    helps, types, samples, errors = set(), {}, [], []
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split()
+            if len(parts) < 4:
+                errors.append(f"line {ln}: HELP without text: {line!r}")
+            if len(parts) >= 3:
+                helps.add(parts[2])
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                errors.append(f"line {ln}: malformed TYPE: {line!r}")
+                continue
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE.match(line)
+        if not m:
+            errors.append(f"line {ln}: malformed sample: {line!r}")
+            continue
+        name = m.group("name")
+        if not name.startswith("demst_"):
+            errors.append(f"line {ln}: {name} lacks the demst_ prefix")
+        labels = {}
+        if m.group("labels"):
+            for part in m.group("labels")[1:-1].split(","):
+                if not part:
+                    continue
+                k, _, v = part.partition("=")
+                labels[k] = v.strip('"')
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            errors.append(f"line {ln}: non-numeric value {m.group('value')!r}")
+            continue
+        samples.append((name, labels, value))
+    return helps, types, samples, errors
+
+
+def check_histogram(fam, samples, errors):
+    buckets = [(l.get("le"), v) for n, l, v in samples if n == f"{fam}_bucket"]
+    counts = [v for n, _, v in samples if n == f"{fam}_count"]
+    sums = [v for n, _, v in samples if n == f"{fam}_sum"]
+    if len(counts) != 1 or len(sums) != 1:
+        errors.append(f"{fam}: expected exactly one _count and one _sum")
+        return
+    if not buckets or buckets[-1][0] != "+Inf":
+        errors.append(f'{fam}: bucket series must end with le="+Inf"')
+        return
+    vals = [v for _, v in buckets]
+    if any(vals[i] > vals[i + 1] for i in range(len(vals) - 1)):
+        errors.append(f"{fam}: bucket counts are not cumulative: {vals}")
+    if vals[-1] != counts[0]:
+        errors.append(f"{fam}: +Inf bucket {vals[-1]} != _count {counts[0]}")
+    try:
+        les = [float(le) for le, _ in buckets[:-1]]
+    except (TypeError, ValueError):
+        errors.append(f"{fam}: non-numeric le bound in {buckets[:-1]}")
+        return
+    if any(les[i] >= les[i + 1] for i in range(len(les) - 1)):
+        errors.append(f"{fam}: le bounds must strictly ascend: {les}")
+
+
+def main(argv):
+    min_jobs = 0
+    if "--min-job-count" in argv:
+        i = argv.index("--min-job-count")
+        try:
+            min_jobs = int(argv[i + 1])
+        except (IndexError, ValueError):
+            print("--min-job-count requires an integer", file=sys.stderr)
+            return 2
+        del argv[i:i + 2]
+    if len(argv) != 1:
+        print("usage: check_metrics_exposition.py SCRAPE.txt "
+              "[--min-job-count N]", file=sys.stderr)
+        return 2
+
+    try:
+        with open(argv[0]) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"EXPOSITION ERROR: {argv[0]}: unreadable ({e})", file=sys.stderr)
+        return 1
+
+    helps, types, samples, errors = parse(text)
+    for fam in sorted(types):
+        if fam not in helps:
+            errors.append(f"{fam}: TYPE without HELP")
+        if types[fam] == "histogram":
+            check_histogram(fam, samples, errors)
+    missing = REQUIRED_FAMILIES - types.keys()
+    if missing:
+        errors.append(f"required families missing: {sorted(missing)}")
+
+    job_counts = [v for n, _, v in samples
+                  if n == "demst_job_latency_seconds_count"]
+    if min_jobs and (not job_counts or job_counts[0] < min_jobs):
+        got = job_counts[0] if job_counts else "absent"
+        errors.append(f"pair-job latency count {got} < required {min_jobs}")
+
+    for err in errors:
+        print(f"EXPOSITION ERROR: {err}", file=sys.stderr)
+    if not errors:
+        jobs = int(job_counts[0]) if job_counts else 0
+        print(f"exposition OK: {argv[0]} ({len(samples)} samples, "
+              f"{jobs} pair jobs in the latency histogram)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

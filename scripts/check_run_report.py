@@ -15,6 +15,11 @@ Checks:
   span eval sums reconcile with the counters — exactly on clean runs,
   as a lower bound under ``--chaos`` (a killed worker's spans are
   synthesized at the leader with zero eval args);
+- histograms (when the run was metrics-armed): per histogram, the occupied
+  bucket counts sum to ``count``; on clean runs the fleet-merged pair-job
+  latency histogram counts every executed job exactly (skipped under
+  ``--chaos``: a killed worker's final snapshot never ships, while a job
+  it had already pushed metrics for is recounted by the survivor);
 - ``--trace TRACE.json``: the Chrome-trace export parses as JSON, carries
   one ``job`` duration event per pair job, and (under ``--chaos``) the
   failure shows up as a ``stall``/``failover`` instant.
@@ -26,7 +31,7 @@ import json
 import sys
 
 REQUIRED_TOP_KEYS = {"report_version", "tool", "config", "metrics", "workers",
-                     "spans"}
+                     "histograms", "spans"}
 REQUIRED_METRIC_KEYS = {
     "wall_s", "jobs", "dist_evals", "local_mst_evals", "pair_evals",
     "scatter_bytes", "gather_bytes", "control_bytes", "messages",
@@ -77,6 +82,26 @@ def check_report(path, chaos):
         errors.append(
             f"{path}: per-worker roster has {len(doc['workers'])} rows, "
             f"expected {expect_roster} (workers + workers_admitted)")
+
+    hists = doc["histograms"]
+    for fam, h in hists.items():
+        if not isinstance(h, dict) or "buckets" not in h:
+            continue  # scalar annotations like workers_reporting
+        occupied = sum(b.get("count", 0) for b in h["buckets"])
+        if occupied != h.get("count"):
+            errors.append(
+                f"{path}: histogram {fam}: occupied buckets sum to "
+                f"{occupied}, count says {h.get('count')}")
+    latency = hists.get("job_latency_seconds")
+    if isinstance(latency, dict) and not chaos:
+        # exact only on clean runs: under chaos a killed worker's final
+        # snapshot never ships (undercount) while a reassigned job it had
+        # already pushed metrics for is recounted by the survivor
+        got = latency.get("count", 0)
+        if got != metrics["jobs"]:
+            errors.append(
+                f"{path}: latency histogram counts {got} jobs, expected "
+                f"exactly {metrics['jobs']}")
 
     spans = doc["spans"]
     if spans.get("total", 0) > 0:

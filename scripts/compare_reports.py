@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Cross-run regression diff over two ``demst run --report-out`` documents.
+
+The Python mirror of ``demst report diff`` — same tracked quantities, same
+default thresholds — for harnesses that gate on reports without a demst
+binary at hand (e.g. comparing artifacts downloaded from two CI runs).
+Exits non-zero when the candidate regresses beyond a threshold, so it can
+sit directly in a CI job.
+
+Tracked quantities (threshold = allowed relative regression, percent):
+- ``wall_s``             (--max-wall-regress,       default 25; noisy on CI)
+- ``dist_evals``         (--max-dist-evals-regress, default  1; deterministic)
+- ``wire_bytes``         (--max-bytes-regress,      default  1; deterministic;
+                          scatter + gather + control)
+- ``p99 job latency``    (--max-p99-job-regress,    default 50; only when both
+                          runs carry a pair-job latency histogram)
+
+Usage: compare_reports.py BASELINE.json CANDIDATE.json [--max-*-regress PCT]
+"""
+
+import argparse
+import json
+import sys
+
+
+def get(doc, path):
+    cur = doc
+    for key in path.split("."):
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur
+
+
+def wire_bytes(doc):
+    parts = [get(doc, f"metrics.{k}")
+             for k in ("scatter_bytes", "gather_bytes", "control_bytes")]
+    if any(p is None for p in parts):
+        return None
+    return sum(parts)
+
+
+def delta_pct(base, cand):
+    if base > 0:
+        return (cand - base) / base * 100.0
+    return float("inf") if cand > base else 0.0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="diff two demst run reports; exit 1 on regression")
+    ap.add_argument("baseline")
+    ap.add_argument("candidate")
+    ap.add_argument("--max-wall-regress", type=float, default=25.0)
+    ap.add_argument("--max-dist-evals-regress", type=float, default=1.0)
+    ap.add_argument("--max-bytes-regress", type=float, default=1.0)
+    ap.add_argument("--max-p99-job-regress", type=float, default=50.0)
+    args = ap.parse_args()
+
+    docs = []
+    for path in (args.baseline, args.candidate):
+        try:
+            with open(path) as f:
+                docs.append(json.load(f))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"DIFF ERROR: {path}: unreadable ({e})", file=sys.stderr)
+            return 2
+    base, cand = docs
+
+    rows = [
+        ("wall_s", get(base, "metrics.wall_s"), get(cand, "metrics.wall_s"),
+         args.max_wall_regress),
+        ("dist_evals", get(base, "metrics.dist_evals"),
+         get(cand, "metrics.dist_evals"), args.max_dist_evals_regress),
+        ("wire_bytes", wire_bytes(base), wire_bytes(cand),
+         args.max_bytes_regress),
+    ]
+    lat = "histograms.job_latency_seconds"
+    if (get(base, f"{lat}.count") or 0) > 0 and (get(cand, f"{lat}.count") or 0) > 0:
+        rows.append(("p99_job_latency_s", get(base, f"{lat}.p99"),
+                     get(cand, f"{lat}.p99"), args.max_p99_job_regress))
+
+    failed, broken = [], []
+    print(f"{'metric':<20} {'baseline':>14} {'candidate':>14} "
+          f"{'delta':>10} {'limit':>8}  verdict")
+    for name, b, c, limit in rows:
+        if b is None or c is None:
+            broken.append(name)
+            print(f"{name:<20} {'?':>14} {'?':>14} {'?':>10} "
+                  f"{limit:>7.0f}%  MISSING")
+            continue
+        d = delta_pct(b, c)
+        verdict = "REGRESSED" if d > limit else "ok"
+        if d > limit:
+            failed.append(name)
+        print(f"{name:<20} {b:>14.6f} {c:>14.6f} {d:>+9.2f}% "
+              f"{limit:>7.0f}%  {verdict}")
+
+    if broken:
+        print(f"DIFF ERROR: missing numeric fields for: {', '.join(broken)}",
+              file=sys.stderr)
+        return 2
+    if failed:
+        print(f"DIFF ERROR: regression beyond threshold in: "
+              f"{', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"report diff OK: {len(rows)} metrics within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,136 @@
+#!/usr/bin/env bash
+# Fleet-metrics smoke: a `demst run --transport tcp --metrics-listen` leader
+# plus two externally started `demst worker` processes, sized so the run
+# takes a few seconds — long enough to scrape the leader's live /metrics
+# endpoint MID-RUN with curl. Asserts:
+#   (a) every mid-run scrape is valid Prometheus text (format 0.0.4) and
+#       eventually shows the fleet-merged pair-job latency histogram filling
+#       with real worker-pushed observations;
+#   (b) the final --report-out document validates, histograms included;
+#   (c) the cross-run regression gates agree: `demst report diff` and
+#       scripts/compare_reports.py both pass a self-diff, both pass a
+#       baseline-vs-rerun diff of two identical sim runs, and both exit
+#       non-zero on an injected 2x wall-clock regression.
+# Run by the CI metrics-smoke job.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${DEMST_BIN:-target/release/demst}
+OUT=${TMPDIR:-/tmp}
+# big enough that the pair phase alone spans many scrape intervals
+ARGS=(--data blobs --n 30000 --d 32 --clusters 8 --parts 8 --workers 2
+      --seed 11 --pair-kernel bipartite)
+
+if [ ! -x "$BIN" ]; then
+    echo "metrics-smoke: $BIN not built (run: cargo build --release)" >&2
+    exit 2
+fi
+
+LOG="$OUT/demst_metrics_leader.log"
+: > "$LOG"
+"$BIN" run "${ARGS[@]}" --transport tcp --listen 127.0.0.1:0 \
+    --metrics-listen 127.0.0.1:0 --metrics-push-ms 50 \
+    --report-out "$OUT/demst_metrics_run.json" > "$LOG" 2>&1 &
+LEADER=$!
+
+ADDR=""
+for _ in $(seq 1 300); do
+    ADDR=$(sed -n 's/.*leader: listening on \([0-9.]*:[0-9]*\).*/\1/p' "$LOG" | head -n 1)
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "metrics-smoke: leader never reported its bound address" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+
+"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+W1=$!
+"$BIN" worker --connect "$ADDR" --connect-timeout 15000 &
+W2=$!
+
+# the exposition listener starts once the fleet is assembled
+MADDR=""
+for _ in $(seq 1 300); do
+    MADDR=$(sed -n 's!.*metrics: listening on http://\([0-9.]*:[0-9]*\)/metrics.*!\1!p' "$LOG" | head -n 1)
+    [ -n "$MADDR" ] && break
+    sleep 0.1
+done
+if [ -z "$MADDR" ]; then
+    echo "metrics-smoke: leader never announced its /metrics endpoint" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+
+# scrape mid-run until the latency histogram has counted at least one pair
+# job shipped up from a worker (every successful scrape must validate)
+SCRAPE="$OUT/demst_metrics_scrape.txt"
+LIVE=""
+for _ in $(seq 1 600); do
+    if curl -fsS --max-time 2 "http://$MADDR/metrics" -o "$SCRAPE" 2>/dev/null; then
+        python3 scripts/check_metrics_exposition.py "$SCRAPE" > /dev/null \
+            || { echo "metrics-smoke: invalid exposition text mid-run" >&2
+                 python3 scripts/check_metrics_exposition.py "$SCRAPE" || true
+                 cat "$SCRAPE" >&2; exit 1; }
+        if python3 scripts/check_metrics_exposition.py "$SCRAPE" \
+                --min-job-count 1 > /dev/null 2>&1; then
+            LIVE=yes
+            break
+        fi
+    fi
+    sleep 0.05
+done
+if [ -z "$LIVE" ]; then
+    echo "metrics-smoke: never scraped a non-empty pair-job latency histogram mid-run" >&2
+    cat "$LOG" >&2
+    exit 1
+fi
+python3 scripts/check_metrics_exposition.py "$SCRAPE" --min-job-count 1
+
+wait "$LEADER" || { echo "metrics-smoke: leader failed" >&2; cat "$LOG" >&2; exit 1; }
+wait "$W1" || { echo "metrics-smoke: worker 1 failed" >&2; exit 1; }
+wait "$W2" || { echo "metrics-smoke: worker 2 failed" >&2; exit 1; }
+grep -E "^(latency|metrics):" "$LOG" || true
+
+# the final report must reconcile, histogram section included
+python3 scripts/check_run_report.py "$OUT/demst_metrics_run.json" \
+    || { echo "metrics-smoke: run report validation failed" >&2; exit 1; }
+
+# --- cross-run regression gates ---------------------------------------------
+# two identical (smaller, sim-transport) runs: deterministic metrics are
+# equal by construction, wall gets CI slack
+GATE_ARGS=(--data blobs --n 2000 --d 16 --clusters 4 --parts 4 --workers 2
+           --seed 23 --pair-kernel bipartite)
+"$BIN" run "${GATE_ARGS[@]}" --report-out "$OUT/demst_metrics_base.json" > /dev/null
+"$BIN" run "${GATE_ARGS[@]}" --report-out "$OUT/demst_metrics_cand.json" > /dev/null
+
+"$BIN" report diff "$OUT/demst_metrics_run.json" "$OUT/demst_metrics_run.json" \
+    || { echo "metrics-smoke: self-diff must pass" >&2; exit 1; }
+"$BIN" report diff --max-wall-regress 400 --max-p99-job-regress 10000 \
+    "$OUT/demst_metrics_base.json" "$OUT/demst_metrics_cand.json" \
+    || { echo "metrics-smoke: identical-config rerun regressed deterministic metrics" >&2; exit 1; }
+python3 scripts/compare_reports.py --max-wall-regress 400 --max-p99-job-regress 10000 \
+    "$OUT/demst_metrics_base.json" "$OUT/demst_metrics_cand.json" \
+    || { echo "metrics-smoke: compare_reports.py disagrees with demst report diff" >&2; exit 1; }
+
+# inject a 2x wall regression; both gates must trip (exit non-zero)
+python3 - "$OUT/demst_metrics_base.json" "$OUT/demst_metrics_regressed.json" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+doc["metrics"]["wall_s"] *= 2.0
+with open(sys.argv[2], "w") as f:
+    json.dump(doc, f)
+EOF
+if "$BIN" report diff "$OUT/demst_metrics_base.json" "$OUT/demst_metrics_regressed.json" > /dev/null 2>&1; then
+    echo "metrics-smoke: demst report diff missed an injected 2x wall regression" >&2
+    exit 1
+fi
+if python3 scripts/compare_reports.py "$OUT/demst_metrics_base.json" \
+        "$OUT/demst_metrics_regressed.json" > /dev/null 2>&1; then
+    echo "metrics-smoke: compare_reports.py missed an injected 2x wall regression" >&2
+    exit 1
+fi
+
+echo "metrics-smoke: OK (live scrape validated, report reconciled, regression gates trip)"
